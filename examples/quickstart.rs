@@ -1,0 +1,59 @@
+//! Quickstart: load a compiled chronos-like forecaster, apply token
+//! merging, and compare throughput against the unmerged model.
+//!
+//! Run after `make artifacts`:
+//!     cargo run --release --offline --example quickstart
+
+use anyhow::Result;
+use tomers::data;
+use tomers::runtime::Engine;
+use tomers::tensor::Tensor;
+use tomers::util::bench;
+
+fn main() -> Result<()> {
+    // 1. The engine compiles HLO-text artifacts on the PJRT CPU client.
+    let engine = Engine::new("artifacts")?;
+    println!("platform: {}", engine.platform());
+
+    // 2. Two variants of the *same* trained model (same weights file):
+    //    r=0 (no merging) and r=128 (aggressive local merging).
+    let baseline = engine.load_with_weights("chronos_s__r0")?;
+    let merged = engine.load_with_weights("chronos_s__r128")?;
+    println!(
+        "token schedule without merging: {:?}",
+        baseline.manifest.enc_tokens().unwrap()
+    );
+    println!(
+        "token schedule with merging:    {:?}",
+        merged.manifest.enc_tokens().unwrap()
+    );
+
+    // 3. A synthetic ETTh1-like context batch (batch size from the manifest).
+    let b = baseline.manifest.batch();
+    let m = baseline.manifest.inputs[0].shape[1];
+    let series = data::generate(data::profile("etth1").unwrap(), m + 64, 7);
+    let mut xs = Vec::with_capacity(b * m);
+    for i in 0..b {
+        let col = series.column(i % series.n_vars);
+        xs.extend_from_slice(&col[..m]);
+    }
+    let x = Tensor::from_f32(&[b, m], xs)?;
+
+    // 4. Forecast with both and time them.
+    let out = merged.execute(&[x.clone()])?;
+    println!("merged forecast logits: {:?}", out[0].shape());
+
+    let (t_base, _) = bench(2, 5, || {
+        baseline.execute(&[x.clone()]).unwrap();
+    });
+    let (t_merge, _) = bench(2, 5, || {
+        merged.execute(&[x.clone()]).unwrap();
+    });
+    println!(
+        "baseline {:.1} ms/batch | merged {:.1} ms/batch | accel {:.2}x",
+        t_base * 1e3,
+        t_merge * 1e3,
+        t_base / t_merge
+    );
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Serving example: the Layer-3 coordinator routing a mixed workload
+//! through merge-rate variants chosen by the spectral-entropy policy —
+//! the serving-system realisation of the paper's dynamic merging (§5.5).
+//!
+//!     cargo run --release --offline --example serve_chronos [n_requests]
+
+use std::time::Duration;
+
+use anyhow::Result;
+use tomers::coordinator::{self, policy::Variant, ForecastRequest, MergePolicy, ServerConfig};
+use tomers::data;
+use tomers::util::Rng;
+
+fn main() -> Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(120);
+
+    // Variants from least to most aggressive merging; the policy maps
+    // low-entropy (clean) inputs to r=0 and high-entropy (noisy) inputs to
+    // r=128 — noisy series tolerate (and often benefit from) merging
+    // (paper table 4).
+    let policy = MergePolicy::uniform(
+        vec![
+            Variant { name: "chronos_s__r0".into(), r: 0 },
+            Variant { name: "chronos_s__r32".into(), r: 32 },
+            Variant { name: "chronos_s__r128".into(), r: 128 },
+        ],
+        3.0,
+        7.5,
+    );
+    let handle = coordinator::server::serve(ServerConfig {
+        artifact_dir: "artifacts".into(),
+        policy,
+        max_wait: Duration::from_millis(20),
+        max_queue: 4096,
+    })?;
+    let client = handle.client();
+
+    println!("submitting {n} requests (alternating clean/noisy series) ...");
+    let mut rng = Rng::new(2024);
+    let pending: Vec<_> = (0..n as u64)
+        .map(|id| {
+            let profile = if id % 2 == 0 { "weather" } else { "ettm1" };
+            let series = data::generate(data::profile(profile).unwrap(), 512, rng.next_u64());
+            client.submit(ForecastRequest { id, context: series.column(0) }).unwrap()
+        })
+        .collect();
+
+    let mut by_variant = std::collections::BTreeMap::new();
+    for rx in pending {
+        let resp = rx.recv()?;
+        *by_variant.entry(resp.variant).or_insert(0usize) += 1;
+    }
+    println!("routing decisions:");
+    for (variant, count) in by_variant {
+        println!("  {variant}: {count}");
+    }
+    println!("{}", client.metrics_report()?);
+    handle.shutdown()?;
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! The §6.2 analysis as a tool: compute the spectral statistics that
+//! predict token-merging benefit (spectral entropy, THD) for every
+//! synthetic dataset, and show the merge-policy decisions they drive —
+//! all without touching a model (the paper's point: the predictors need
+//! no downstream evaluation).
+//!
+//!     cargo run --release --offline --example spectral_planner
+
+use anyhow::Result;
+use tomers::coordinator::{policy::Variant, MergePolicy};
+use tomers::data;
+use tomers::merging::{similarity_complexity, speedup_bound};
+use tomers::signal;
+
+fn main() -> Result<()> {
+    println!("dataset predictors (paper table 4):");
+    println!("{:<12} {:>10} {:>8}   expected merging outcome", "dataset", "entropy", "THD");
+    let policy = MergePolicy::uniform(
+        vec![
+            Variant { name: "r0".into(), r: 0 },
+            Variant { name: "r32".into(), r: 32 },
+            Variant { name: "r128".into(), r: 128 },
+        ],
+        3.0,
+        7.5,
+    );
+    for profile in data::PROFILES {
+        let series = data::generate(profile, 4096, 2024);
+        let (entropy, thd) = data::dataset_stats(&series, 1024);
+        let decision = policy.decide(&series.column(0)[..1024]);
+        let outcome = if decision.variant.r >= 128 {
+            "quality gain expected (noisy: merging = adaptive low-pass)"
+        } else if decision.variant.r > 0 {
+            "neutral-to-positive"
+        } else {
+            "merge conservatively (clean signal)"
+        };
+        println!(
+            "{:<12} {:>10.2} {:>8.1}   r={} — {}",
+            profile.name, entropy, thd, decision.variant.r, outcome
+        );
+    }
+
+    println!("\nlocal-merging complexity (eq. 2), t = 16000 tokens:");
+    println!("{:>8} {:>16} {:>10}", "k", "similarity ops", "vs k=1");
+    let base = similarity_complexity(16_000, 1);
+    for k in [1usize, 8, 64, 512, 8000] {
+        let c = similarity_complexity(16_000, k);
+        println!("{:>8} {:>16} {:>9.0}x", k, c, c as f64 / base as f64);
+    }
+
+    println!("\nmerging speed-up upper bound (appendix B.1):");
+    for l in [2u32, 4, 6, 8, 10] {
+        println!("  L = {:>2}: <= {:.2}x", l, speedup_bound(l));
+    }
+
+    println!("\nGaussian filtering vs merging (fig. 6 intuition):");
+    let noisy = data::generate(data::profile("ettm1").unwrap(), 1024, 5);
+    let col = noisy.column(0);
+    for sigma in [0.0, 1.0, 2.0, 4.0] {
+        let f = signal::gaussian_filter(&col, sigma);
+        println!(
+            "  sigma {:>3}: spectral entropy {:.2}",
+            sigma,
+            signal::spectral_entropy(&f)
+        );
+    }
+    Ok(())
+}

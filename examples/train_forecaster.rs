@@ -1,0 +1,77 @@
+//! End-to-end driver (DESIGN.md deliverable): train a time series
+//! transformer from scratch with the Rust training loop driving the AOT
+//! train-step artifact, log the loss curve, then serve the trained model
+//! with token merging and report the accuracy/throughput trade-off.
+//!
+//!     cargo run --release --offline --example train_forecaster [steps]
+//!
+//! This exercises every layer: L1 similarity kernels (inside the compiled
+//! graphs), the L2 model + merging + Adam graph, and the L3 loop,
+//! evaluation and selection logic.
+
+use anyhow::Result;
+use tomers::bench::forecast_suite::{dataset, eval_forecast};
+use tomers::data::Split;
+use tomers::eval::{self, OperatingPoint};
+use tomers::runtime::{Engine, WeightStore};
+use tomers::train;
+use tomers::util::Rng;
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+    let engine = Engine::new("artifacts")?;
+    let identity = "fc_transformer_L4";
+    let ds_name = "etth1";
+
+    // ---- train -------------------------------------------------------------
+    let mut model = engine.load(&format!("{identity}__train"))?;
+    let init = WeightStore::load(&std::path::Path::new("artifacts")
+        .join(format!("{identity}.weights.bin")))?;
+    model.bind_weights(&init)?;
+    let batch = model.manifest.batch();
+    let train_ds = dataset(ds_name, 6000, 192, 96, Split::Train, 2024);
+    let mut rng = Rng::new(42);
+    println!("training {identity} on synthetic {ds_name} for {steps} steps ...");
+    let mut curve = Vec::new();
+    let report = train::train_loop(
+        &mut model,
+        &init,
+        steps,
+        |_| {
+            let idx: Vec<usize> = (0..batch).map(|_| rng.below(train_ds.len())).collect();
+            train_ds.batch(&idx)
+        },
+        |step, loss| {
+            if step % 20 == 0 {
+                println!("  step {step:>4}  train mse {loss:.4}");
+                curve.push((step, loss));
+            }
+            true
+        },
+    )?;
+    println!(
+        "trained {} steps in {:.1}s ({:.0} ms/step)",
+        report.steps,
+        report.seconds,
+        1e3 * report.seconds / report.steps as f64
+    );
+
+    // ---- evaluate every merge variant ---------------------------------------
+    let test = dataset(ds_name, 6000, 192, 96, Split::Test, 2024);
+    let mut points = Vec::new();
+    for tag in ["r0", "r16", "r32"] {
+        let mut variant = engine.load(&format!("{identity}__{tag}"))?;
+        variant.bind_weights(&report.final_weights)?;
+        let (mse, thr) = eval_forecast(&variant, &test, 48)?;
+        println!("  {tag:<4} test mse {mse:.4}  throughput {thr:.1} windows/s");
+        points.push(OperatingPoint { name: tag.into(), mse, throughput: thr });
+    }
+    let sel = eval::select_fastest_within(&points[0], &points[1..], 0.01);
+    println!(
+        "paper §5.1 selection: {} -> {:.2}x acceleration at {:+.1}% MSE",
+        sel.name,
+        sel.accel(&points[0]),
+        sel.mse_delta_pct(&points[0]),
+    );
+    Ok(())
+}

@@ -1,0 +1,545 @@
+"""AOT pipeline: lower every model variant to HLO text + manifest + weights.
+
+``make artifacts`` runs this once; Rust is self-contained afterwards.
+
+Interchange is HLO **text** (never ``.serialize()``): jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Registry layout: each *identity* (model family + size) owns one seeded
+weights file shared by all of its merge variants — merging accelerates an
+already-trained model (§5.1), so every ``r`` variant of an identity must
+bind the same weights.  Each *variant* is one HLO artifact + manifest.
+
+Kernel backend per artifact (DESIGN.md §6): performance-benchmarked
+variants lower the XLA-fused reference path (bit-identical math, verified
+against the Pallas kernels by pytest); ``*_pallas`` variants lower the
+interpret-mode Pallas kernels to prove the L1 path round-trips through the
+Rust PJRT runtime.  Interpret-mode overheads on CPU would otherwise
+swamp wall-clock comparisons; real-TPU Pallas performance is estimated
+analytically in DESIGN.md §6.
+
+Usage:
+  python -m compile.aot --out-dir ../artifacts [--only REGEX] [--force]
+                        [--full] [--list] [--jobs N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+import re
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import formats, merging, train
+from .kernels import dispatch
+from .models import chronos as Ch
+from .models import decoder_only as Do
+from .models import hyena as Hy
+from .models import mamba as Ma
+from .models import patchtst as Pt
+from .models import transformer as T
+
+# ---------------------------------------------------------------------------
+# Lowering
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    # return_tuple=False: PJRT then splits the root into one buffer per
+    # output, which is what lets the Rust training loop keep params /
+    # optimiser state device-resident across steps (EXPERIMENTS.md §Perf).
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    text = comp.as_hlo_text()
+    # Compatibility shim for xla_extension 0.5.1's HLO text parser: modern
+    # jax emits `topk(..., k=N, largest=true)` but 0.5.1 only accepts the
+    # `k` attribute (its TopK was largest-only, so semantics are identical).
+    return text.replace(", largest=true", "")
+
+
+def _seed(identity: str) -> int:
+    return int.from_bytes(hashlib.sha256(identity.encode()).digest()[:4], "little")
+
+
+@dataclasses.dataclass
+class Artifact:
+    name: str                 # artifact file stem
+    identity: str             # weights-file stem (shared across variants)
+    family: str               # forecast | chronos | chronos_dyn | hyena | ...
+    backend: str              # "jnp" (fused) | "pallas"
+    build: "callable"         # () -> (fn, params, inputs[(name, spec)], config, meta)
+    core: bool = True         # lowered by default (--full adds the rest)
+
+
+# ---------------------------------------------------------------------------
+# Builders (each returns fn(params, *inputs), params, inputs, config, meta)
+
+
+def _forecast(cfg: T.ForecastConfig, identity, batch):
+    def build():
+        params = T.init_params(jax.random.PRNGKey(_seed(identity)), cfg)
+        fn = lambda p, x: T.forward_batch(p, x, cfg)
+        inputs = [("x", jax.ShapeDtypeStruct((batch, cfg.m, cfg.n_vars), jnp.float32))]
+        meta = {
+            "enc_tokens": T.enc_token_counts(cfg),
+            "dec_tokens": T.dec_token_counts(cfg),
+            "batch": batch,
+        }
+        return fn, params, inputs, dataclasses.asdict(cfg), meta
+    return build
+
+
+def _forecast_train(cfg: T.ForecastConfig, identity, batch, lr):
+    def build():
+        params = T.init_params(jax.random.PRNGKey(_seed(identity)), cfg)
+        base_step = train.make_forecast_train_step(T.forward_batch, cfg, lr=lr)
+        step = train.make_chunked(base_step, TRAIN_CHUNK)
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        inputs = [
+            ("m", zeros), ("v", zeros),
+            ("step", jax.ShapeDtypeStruct((), jnp.float32)),
+            ("x", jax.ShapeDtypeStruct((TRAIN_CHUNK, batch, cfg.m, cfg.n_vars), jnp.float32)),
+            ("y", jax.ShapeDtypeStruct((TRAIN_CHUNK, batch, cfg.p, cfg.n_vars), jnp.float32)),
+        ]
+        return step, params, inputs, dataclasses.asdict(cfg), {"batch": batch, "lr": lr, "chunk": TRAIN_CHUNK}
+    return build
+
+
+def _chronos(cfg: Ch.ChronosConfig, identity, batch):
+    def build():
+        params = Ch.init_params(jax.random.PRNGKey(_seed(identity)), cfg)
+        fn = lambda p, x: Ch.forward_batch(p, x, cfg)
+        inputs = [("x", jax.ShapeDtypeStruct((batch, cfg.m), jnp.float32))]
+        meta = {
+            "enc_tokens": merging.merge_schedule(
+                cfg.m, r=cfg.r_enc, num_layers=cfg.enc_layers, q=cfg.q_min),
+            "dec_tokens": merging.merge_schedule(
+                cfg.p, r=cfg.r_dec, num_layers=cfg.dec_layers, q=cfg.q_min),
+            "batch": batch,
+        }
+        return fn, params, inputs, dataclasses.asdict(cfg), meta
+    return build
+
+
+def _chronos_dyn(cfg: Ch.ChronosConfig, identity, batch):
+    def build():
+        params = Ch.init_params(jax.random.PRNGKey(_seed(identity)), cfg)
+        fn = lambda p, x, th: Ch.forward_dynamic_batch(p, x, th, cfg)
+        inputs = [
+            ("x", jax.ShapeDtypeStruct((batch, cfg.m), jnp.float32)),
+            ("threshold", jax.ShapeDtypeStruct((), jnp.float32)),
+        ]
+        return fn, params, inputs, dataclasses.asdict(cfg), {"batch": batch}
+    return build
+
+
+def _chronos_train(cfg: Ch.ChronosConfig, identity, batch, lr):
+    def build():
+        params = Ch.init_params(jax.random.PRNGKey(_seed(identity)), cfg)
+        base_step = train.make_chronos_train_step(Ch.forward_batch, Ch.tokenize, cfg, lr=lr)
+        step = train.make_chunked(base_step, TRAIN_CHUNK)
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        inputs = [
+            ("m", zeros), ("v", zeros),
+            ("step", jax.ShapeDtypeStruct((), jnp.float32)),
+            ("x", jax.ShapeDtypeStruct((TRAIN_CHUNK, batch, cfg.m), jnp.float32)),
+            ("y", jax.ShapeDtypeStruct((TRAIN_CHUNK, batch, cfg.p), jnp.float32)),
+        ]
+        return step, params, inputs, dataclasses.asdict(cfg), {"batch": batch, "lr": lr, "chunk": TRAIN_CHUNK}
+    return build
+
+
+def _classify(mod, cfg, identity, batch):
+    def build():
+        params = mod.init_params(jax.random.PRNGKey(_seed(identity)), cfg)
+        fn = lambda p, x: mod.forward_batch(p, x, cfg)
+        inputs = [("ids", jax.ShapeDtypeStruct((batch, cfg.m), jnp.int32))]
+        meta = {
+            "tokens": merging.merge_schedule(
+                cfg.m, r=cfg.r, num_layers=cfg.layers, q=cfg.q_min),
+            "batch": batch,
+        }
+        return fn, params, inputs, dataclasses.asdict(cfg), meta
+    return build
+
+
+def _classify_train(mod, cfg, identity, batch, lr):
+    def build():
+        params = mod.init_params(jax.random.PRNGKey(_seed(identity)), cfg)
+        base_step = train.make_classify_train_step(mod.forward_batch, cfg, lr=lr)
+        step = train.make_chunked(base_step, TRAIN_CHUNK)
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        inputs = [
+            ("m", zeros), ("v", zeros),
+            ("step", jax.ShapeDtypeStruct((), jnp.float32)),
+            ("x", jax.ShapeDtypeStruct((TRAIN_CHUNK, batch, cfg.m), jnp.int32)),
+            ("y", jax.ShapeDtypeStruct((TRAIN_CHUNK, batch,), jnp.int32)),
+        ]
+        return step, params, inputs, dataclasses.asdict(cfg), {"batch": batch, "lr": lr, "chunk": TRAIN_CHUNK}
+    return build
+
+
+def _patchtst(cfg: Pt.PatchTSTConfig, identity, batch):
+    def build():
+        params = Pt.init_params(jax.random.PRNGKey(_seed(identity)), cfg)
+        fn = lambda p, x: Pt.forward_batch(p, x, cfg)
+        inputs = [("x", jax.ShapeDtypeStruct((batch, cfg.m, cfg.n_vars), jnp.float32))]
+        return fn, params, inputs, dataclasses.asdict(cfg), {"batch": batch}
+    return build
+
+
+def _patchtst_train(cfg: Pt.PatchTSTConfig, identity, batch, lr):
+    def build():
+        params = Pt.init_params(jax.random.PRNGKey(_seed(identity)), cfg)
+        base_step = train.make_forecast_train_step(Pt.forward_batch, cfg, lr=lr)
+        step = train.make_chunked(base_step, TRAIN_CHUNK)
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        inputs = [
+            ("m", zeros), ("v", zeros),
+            ("step", jax.ShapeDtypeStruct((), jnp.float32)),
+            ("x", jax.ShapeDtypeStruct((TRAIN_CHUNK, batch, cfg.m, cfg.n_vars), jnp.float32)),
+            ("y", jax.ShapeDtypeStruct((TRAIN_CHUNK, batch, cfg.p, cfg.n_vars), jnp.float32)),
+        ]
+        return step, params, inputs, dataclasses.asdict(cfg), {"batch": batch, "lr": lr, "chunk": TRAIN_CHUNK}
+    return build
+
+
+
+
+def _deconly(cfg, identity, batch):
+    def build():
+        params = Do.init_params(jax.random.PRNGKey(_seed(identity)), cfg)
+        fn = lambda p, x: Do.forward_batch(p, x, cfg)
+        inputs = [("x", jax.ShapeDtypeStruct((batch, cfg.m), jnp.float32))]
+        meta = {"tokens": Do.token_counts(cfg), "batch": batch}
+        return fn, params, inputs, dataclasses.asdict(cfg), meta
+    return build
+
+
+def _deconly_train(cfg, identity, batch, lr):
+    def build():
+        params = Do.init_params(jax.random.PRNGKey(_seed(identity)), cfg)
+        base_step = train.make_forecast_train_step(Do.forward_batch, cfg, lr=lr)
+        step = train.make_chunked(base_step, TRAIN_CHUNK)
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        inputs = [
+            ("m", zeros), ("v", zeros),
+            ("step", jax.ShapeDtypeStruct((), jnp.float32)),
+            ("x", jax.ShapeDtypeStruct((TRAIN_CHUNK, batch, cfg.m), jnp.float32)),
+            ("y", jax.ShapeDtypeStruct((TRAIN_CHUNK, batch, cfg.p), jnp.float32)),
+        ]
+        return step, params, inputs, dataclasses.asdict(cfg), {"batch": batch, "lr": lr, "chunk": TRAIN_CHUNK}
+    return build
+
+
+# ---------------------------------------------------------------------------
+# Registry
+
+ARCHS = ["transformer", "informer", "autoformer", "fedformer", "nonstationary"]
+TRAIN_CHUNK = 4  # optimiser steps scanned per execution (see train.make_chunked)
+FORECAST_BATCH = 8
+GENOMIC_BATCH = 4
+
+
+def registry():
+    arts: list[Artifact] = []
+
+    # ---- Table 1 suite: 5 archs x L x merge variants --------------------
+    for arch in ARCHS:
+        for L, core in [(2, True), (4, True), (6, False)]:
+            identity = f"fc_{arch}_L{L}"
+            for tag, r_enc, r_dec in [("r0", 0, 0), ("r16", 16, 48),
+                                      ("r32", 32, 48)]:
+                cfg = T.ForecastConfig(arch=arch, enc_layers=L,
+                                       r_enc=r_enc, r_dec=r_dec)
+                arts.append(Artifact(f"{identity}__{tag}", identity, "forecast",
+                                     "jnp", _forecast(cfg, identity, FORECAST_BATCH),
+                                     core=core))
+            cfg0 = T.ForecastConfig(arch=arch, enc_layers=L)
+            arts.append(Artifact(f"{identity}__train", identity, "forecast_train",
+                                 "jnp", _forecast_train(cfg0, identity,
+                                                        FORECAST_BATCH, 1e-3),
+                                 core=core))
+    # table 5: layer-1 token-representation probes
+    for arch in ARCHS:
+        identity = f"fc_{arch}_L2"
+        cfgp = T.ForecastConfig(arch=arch, enc_layers=2, probe="tokens")
+        arts.append(Artifact(f"{identity}__r0_probe", identity, "forecast",
+                             "jnp", _forecast(cfgp, identity, FORECAST_BATCH)))
+    # fig. 2: training *with* merging
+    for arch in ["autoformer", "nonstationary"]:
+        identity = f"fc_{arch}_L2"
+        cfgm = T.ForecastConfig(arch=arch, enc_layers=2, r_enc=16, r_dec=48)
+        arts.append(Artifact(f"{identity}__trainmerge", identity,
+                             "forecast_train", "jnp",
+                             _forecast_train(cfgm, identity, FORECAST_BATCH, 1e-3)))
+
+    # ---- Chronos suite ----------------------------------------------------
+    for size, scfg in Ch.SIZES.items():
+        identity = f"chronos_{size}"
+        for r in [0, 32, 64, 128]:
+            cfg = Ch.ChronosConfig(r_enc=r, r_dec=16 if r else 0, **scfg)
+            arts.append(Artifact(f"{identity}__r{r}", identity, "chronos", "jnp",
+                                 _chronos(cfg, identity, FORECAST_BATCH)))
+        cfg0 = Ch.ChronosConfig(**scfg)
+        arts.append(Artifact(f"{identity}__train", identity, "chronos_train",
+                             "jnp", _chronos_train(cfg0, identity,
+                                                   FORECAST_BATCH, 1e-3)))
+
+    s = Ch.SIZES["s"]
+    sid = "chronos_s"
+    # fig. 15: similarity metric ablation
+    for metric in ["l1", "l2"]:
+        cfg = Ch.ChronosConfig(r_enc=64, r_dec=16, metric=metric, **s)
+        arts.append(Artifact(f"{sid}__r64_{metric}", sid, "chronos", "jnp",
+                             _chronos(cfg, sid, FORECAST_BATCH), core=False))
+    # fig. 16: pruning baseline
+    cfg = Ch.ChronosConfig(r_enc=64, r_dec=0, prune=True, **s)
+    arts.append(Artifact(f"{sid}__r64_prune", sid, "chronos", "jnp",
+                         _chronos(cfg, sid, FORECAST_BATCH)))
+    # table 5 / fig 19 probes
+    cfg = Ch.ChronosConfig(probe="tokens", **s)
+    arts.append(Artifact(f"{sid}__r0_probe", sid, "chronos", "jnp",
+                         _chronos(cfg, sid, FORECAST_BATCH)))
+    cfg = Ch.ChronosConfig(probe="tokens", use_pos_embed=False, **s)
+    arts.append(Artifact(f"{sid}__r0_probe_nope", sid, "chronos", "jnp",
+                         _chronos(cfg, sid, FORECAST_BATCH), core=False))
+    # fig. 8 merge trace
+    cfg = Ch.ChronosConfig(r_enc=64, r_dec=0, probe="trace", **s)
+    arts.append(Artifact(f"{sid}__r64_trace", sid, "chronos", "jnp",
+                         _chronos(cfg, sid, FORECAST_BATCH), core=False))
+    # fig. 4 dynamic merging (threshold is a runtime input)
+    for b in [1, 10]:
+        cfg = Ch.ChronosConfig(**s)
+        arts.append(Artifact(f"{sid}__dyn_b{b}", sid, "chronos_dyn", "jnp",
+                             _chronos_dyn(cfg, sid, b)))
+    # fig. 7 / 20: input-length variants (weights are m-independent)
+    for m in [128, 256, 1024]:
+        for r in [0, m // 8]:
+            cfg = Ch.ChronosConfig(m=m, r_enc=r, r_dec=16 if r else 0, **s)
+            arts.append(Artifact(f"{sid}__m{m}_r{r}", sid, "chronos", "jnp",
+                                 _chronos(cfg, sid, FORECAST_BATCH), core=False))
+    # L1 Pallas round-trip proof artifacts
+    cfg = Ch.ChronosConfig(r_enc=64, r_dec=16, **s)
+    arts.append(Artifact(f"{sid}__r64_pallas", sid, "chronos", "pallas",
+                         _chronos(cfg, sid, 2)))
+
+    # ---- locality-constraint ablation: k sweep at fixed r ------------------
+    for k in [1, 4, 16, 64]:
+        cfg = Ch.ChronosConfig(r_enc=64, r_dec=16, k_enc=k, **s)
+        arts.append(Artifact(f"{sid}__r64_k{k}", sid, "chronos", "jnp",
+                             _chronos(cfg, sid, FORECAST_BATCH)))
+
+    # ---- decoder-only forecaster (causal merging showcase) -----------------
+    did = "deconly_L4"
+    for r in [0, 4, 8]:
+        cfg = Do.DecoderOnlyConfig(r=r)
+        arts.append(Artifact(f"{did}__r{r}", did, "deconly", "jnp",
+                             _deconly(cfg, did, FORECAST_BATCH)))
+    cfg0 = Do.DecoderOnlyConfig()
+    arts.append(Artifact(f"{did}__train", did, "deconly_train", "jnp",
+                         _deconly_train(cfg0, did, FORECAST_BATCH, 1e-3)))
+
+    # ---- State-space suite (table 3) --------------------------------------
+    hid, mid = "hyena_L4", "mamba_L4"
+    for r, k_name, k in [(0, "", 1), (64, "_k1", 1), (128, "_k1", 1),
+                         (64, "_kglobal", 10**6), (128, "_kglobal", 10**6)]:
+        tag = f"r{r}{k_name}" if r else "r0"
+        hcfg = Hy.HyenaConfig(r=r, k=k)
+        mcfg = Ma.MambaConfig(r=r, k=k)
+        arts.append(Artifact(f"{hid}__{tag}", hid, "hyena", "jnp",
+                             _classify(Hy, hcfg, hid, GENOMIC_BATCH)))
+        arts.append(Artifact(f"{mid}__{tag}", mid, "mamba", "jnp",
+                             _classify(Ma, mcfg, mid, GENOMIC_BATCH)))
+        if r == 0:
+            arts.append(Artifact(f"{hid}__train", hid, "classify_train", "jnp",
+                                 _classify_train(Hy, hcfg, hid, GENOMIC_BATCH, 1e-3)))
+            arts.append(Artifact(f"{mid}__train", mid, "classify_train", "jnp",
+                                 _classify_train(Ma, mcfg, mid, GENOMIC_BATCH, 1e-3)))
+    # Pallas round-trip for the SSM scan kernel
+    mcfg = Ma.MambaConfig(r=64, k=1, m=256, layers=2)
+    arts.append(Artifact("mamba_L2s__r64_pallas", "mamba_L2s", "mamba", "pallas",
+                         _classify(Ma, mcfg, "mamba_L2s", 2)))
+
+    # ---- PatchTST (table 8) ------------------------------------------------
+    pid = "patchtst_L2"
+    for r in [0, 4, 8]:
+        cfg = Pt.PatchTSTConfig(r=r)
+        arts.append(Artifact(f"{pid}__r{r}", pid, "patchtst", "jnp",
+                             _patchtst(cfg, pid, FORECAST_BATCH)))
+    cfg = Pt.PatchTSTConfig()
+    arts.append(Artifact(f"{pid}__train", pid, "patchtst_train", "jnp",
+                         _patchtst_train(cfg, pid, FORECAST_BATCH, 1e-3)))
+
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# Golden outputs: for a subset of artifacts, evaluate the jitted function in
+# Python on a fixed seeded input and persist (inputs, outputs) so the Rust
+# integration tests can verify the full HLO round-trip numerically.
+
+GOLDEN = [
+    "fc_transformer_L2__r16",
+    "fc_autoformer_L2__r0",
+    "chronos_s__r64",
+    "chronos_s__r64_pallas",
+    "mamba_L2s__r64_pallas",
+    "hyena_L4__r64_k1",
+    "patchtst_L2__r4",
+]
+
+
+def write_golden(art: Artifact, out_dir: str):
+    import numpy as np
+
+    with dispatch.backend(art.backend):
+        fn, params, inputs, _, _ = art.build()
+        rng = np.random.default_rng(_seed(art.name))
+        concrete = []
+        for _, spec in inputs:
+            assert isinstance(spec, jax.ShapeDtypeStruct)
+            if spec.dtype == jnp.int32:
+                concrete.append(rng.integers(0, 5, spec.shape).astype(np.int32))
+            else:
+                concrete.append(rng.standard_normal(spec.shape).astype(np.float32))
+        outs = jax.tree_util.tree_leaves(jax.jit(fn)(params, *concrete))
+    tree = {}
+    for i, c in enumerate(concrete):
+        tree[f"in{i}"] = c
+    for i, o in enumerate(outs):
+        arr = np.asarray(o)
+        if arr.dtype not in (np.float32, np.int32):
+            arr = arr.astype(np.float32)
+        tree[f"out{i}"] = arr
+    formats.write_weights(os.path.join(out_dir, f"{art.name}.golden.bin"), tree)
+
+
+# ---------------------------------------------------------------------------
+# Driver
+
+
+def lower_artifact(art: Artifact, out_dir: str, force: bool) -> str:
+    hlo_path = os.path.join(out_dir, f"{art.name}.hlo.txt")
+    man_path = os.path.join(out_dir, f"{art.name}.json")
+    w_path = os.path.join(out_dir, f"{art.identity}.weights.bin")
+    if not force and os.path.exists(hlo_path) and os.path.exists(man_path) \
+            and os.path.exists(w_path):
+        return "skip"
+    with dispatch.backend(art.backend):
+        fn, params, inputs, config, meta = art.build()
+        if not os.path.exists(w_path) or force:
+            formats.write_weights(w_path, params)
+        specs = []
+        named_inputs = []
+        for name, spec in inputs:
+            if isinstance(spec, jax.ShapeDtypeStruct):
+                specs.append(spec)
+                named_inputs.append((name, spec))
+            else:  # a pytree (optimizer state mirroring params)
+                tree_spec = jax.tree.map(
+                    lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), spec)
+                specs.append(tree_spec)
+                named_inputs.extend(
+                    (f"{name}/{n}", jax.ShapeDtypeStruct(tuple(a.shape), a.dtype))
+                    for n, a in formats.flatten_named(spec))
+        # keep_unused: the manifest lists every flattened param; XLA must not
+        # drop ones a particular variant happens not to touch.
+        lowered = jax.jit(fn, keep_unused=True).lower(params, *specs)
+        out_shape = jax.eval_shape(fn, params, *specs)
+        outputs = [(f"out{i}", s) for i, s in
+                   enumerate(jax.tree_util.tree_leaves(out_shape))]
+        text = to_hlo_text(lowered)
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    meta = dict(meta)
+    meta["backend"] = art.backend
+    formats.write_manifest(man_path, name=art.name, family=art.family,
+                           config=config, params_tree=params,
+                           inputs=named_inputs, outputs=outputs, meta=meta)
+    return "ok"
+
+
+def _worker(args):
+    # Closures are not picklable under spawn: workers rebuild the registry
+    # and look the artifact up by name.
+    name, out_dir, force = args
+    try:
+        art = next(a for a in registry() if a.name == name)
+        status = lower_artifact(art, out_dir, force)
+        if name in GOLDEN:
+            golden_path = os.path.join(out_dir, f"{name}.golden.bin")
+            if force or not os.path.exists(golden_path):
+                write_golden(art, out_dir)
+                status = "ok"
+        return name, status, ""
+    except Exception as e:  # pragma: no cover - surfaced to the console
+        return name, "FAIL", f"{type(e).__name__}: {e}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--full", action="store_true",
+                    help="also lower non-core (ablation) artifacts")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--jobs", type=int, default=max(2, (os.cpu_count() or 4) // 2))
+    args = ap.parse_args()
+
+    arts = registry()
+    if not args.full:
+        arts = [a for a in arts if a.core]
+    if args.only:
+        rx = re.compile(args.only)
+        arts = [a for a in arts if rx.search(a.name)]
+    if args.list:
+        for a in arts:
+            print(f"{a.name:40s} {a.family:16s} backend={a.backend}")
+        return
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    results = []
+    todo = [(a.name, args.out_dir, args.force) for a in arts]
+    if args.jobs > 1:
+        import multiprocessing as mp
+        ctx = mp.get_context("spawn")
+        with ctx.Pool(args.jobs) as pool:
+            for name, status, err in pool.imap_unordered(_worker, todo):
+                print(f"[{status:4s}] {name} {err}", flush=True)
+                results.append((name, status))
+    else:
+        for item in todo:
+            name, status, err = _worker(item)
+            print(f"[{status:4s}] {name} {err}", flush=True)
+            results.append((name, status))
+
+    index = {
+        "artifacts": [
+            {"name": a.name, "identity": a.identity, "family": a.family,
+             "backend": a.backend}
+            for a in arts
+        ]
+    }
+    with open(os.path.join(args.out_dir, "index.json"), "w") as f:
+        json.dump(index, f, indent=1, sort_keys=True)
+
+    failed = [n for n, s in results if s == "FAIL"]
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+    print(f"{len(results)} artifacts up to date in {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""On-disk interchange formats shared with the Rust runtime.
+
+* **weights.bin** ("safetensors-lite"): ``u64 LE header length | JSON
+  header | raw tensor data``.  Header maps tensor name -> {dtype, shape,
+  data_offsets: [start, end]} with offsets relative to the data section.
+  Rust mirrors this in ``rust/src/runtime/weights.rs``.
+
+* **manifest.json** (one per HLO artifact): the exact flattened HLO
+  parameter order — params first (tree-flatten order of the nested dict,
+  names joined with '/'), then data inputs — plus output specs and
+  experiment metadata (token counts per layer etc.).  The Rust runtime
+  validates shapes against it and binds weights by name.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+
+import jax
+import numpy as np
+
+DTYPES = {"float32": "f32", "int32": "i32"}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def flatten_named(tree):
+    """[(name, array)] in exactly the order jax.jit flattens arguments."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(_path_str(path), np.asarray(leaf)) for path, leaf in leaves]
+
+
+def write_weights(path, tree):
+    named = flatten_named(tree)
+    header, offset = {}, 0
+    blobs = []
+    for name, arr in named:
+        # note: ascontiguousarray would promote 0-d scalars to (1,)
+        arr = np.asarray(arr, order="C")
+        blob = arr.tobytes()
+        header[name] = {
+            "dtype": DTYPES[str(arr.dtype)],
+            "shape": list(arr.shape),
+            "data_offsets": [offset, offset + len(blob)],
+        }
+        blobs.append(blob)
+        offset += len(blob)
+    hjson = json.dumps(header, sort_keys=True).encode()
+    with open(path, "wb") as f:
+        f.write(struct.pack("<Q", len(hjson)))
+        f.write(hjson)
+        for b in blobs:
+            f.write(b)
+
+
+def read_weights(path):
+    with open(path, "rb") as f:
+        (hlen,) = struct.unpack("<Q", f.read(8))
+        header = json.loads(f.read(hlen))
+        data = f.read()
+    out = {}
+    for name, spec in header.items():
+        s, e = spec["data_offsets"]
+        dt = {"f32": np.float32, "i32": np.int32}[spec["dtype"]]
+        out[name] = np.frombuffer(data[s:e], dtype=dt).reshape(spec["shape"])
+    return out
+
+
+def tensor_spec(name, arr_or_spec):
+    shape = list(arr_or_spec.shape)
+    dtype = DTYPES.get(str(arr_or_spec.dtype), str(arr_or_spec.dtype))
+    return {"name": name, "shape": shape, "dtype": dtype}
+
+
+def write_manifest(path, *, name, family, config, params_tree, inputs, outputs,
+                   meta=None):
+    manifest = {
+        "name": name,
+        "family": family,
+        "config": config,
+        "params": [tensor_spec(n, a) for n, a in flatten_named(params_tree)],
+        "inputs": [tensor_spec(n, s) for n, s in inputs],
+        "outputs": [tensor_spec(n, s) for n, s in outputs],
+        "meta": meta or {},
+    }
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)

@@ -1,0 +1,71 @@
+"""Layer-1 Pallas fused attention kernel.
+
+The transformer hot loop: one kernel invocation computes
+``softmax(Q K^T * scale + size_bias + mask) V`` for one head and one
+row-block of queries.  ``size_bias`` implements ToMe *proportional
+attention* (Bolya et al. 2023): after merging, each token carries a size
+``s`` and attends with an additive ``log s`` bias on the key axis so a
+merged token counts as the ``s`` originals it represents.
+
+TPU adaptation (DESIGN.md §6): queries are tiled over the grid
+(flash-attention row blocking) while K/V for the head stay resident —
+sequence lengths in this domain (<= 1024 tokens after the tokenizer) fit
+comfortably in VMEM, so the numerically-streamed softmax of true flash
+attention is unnecessary; a row-blocked stable softmax is the better
+structure.  ``interpret=True`` for CPU PJRT execution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 32
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, *, scale):
+    q = q_ref[0].astype(jnp.float32)              # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)              # (t, dh)
+    v = v_ref[0].astype(jnp.float32)              # (t, dh)
+    bias = bias_ref[...].astype(jnp.float32)      # (bq, t) additive
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale + bias
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    w = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jax.lax.dot_general(
+        w, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def fused_attention(q, k, v, bias, *, block=DEFAULT_BLOCK):
+    """Multi-head attention with an additive bias.
+
+    q, k, v: ``(h, t, dh)``; bias: ``(t, t)`` broadcast over heads
+    (causal mask and/or proportional-attention ``log size`` already folded
+    in by the caller).  Returns ``(h, t, dh)`` float32.
+    """
+    h, t, dh = q.shape
+    assert k.shape == (h, t, dh) and v.shape == (h, t, dh)
+    assert bias.shape == (t, t)
+    bq = block if t % block == 0 else t
+    grid = (h, t // bq)
+    scale = 1.0 / float(dh) ** 0.5
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda hh, i: (hh, i, 0)),
+            pl.BlockSpec((1, t, dh), lambda hh, i: (hh, 0, 0)),
+            pl.BlockSpec((1, t, dh), lambda hh, i: (hh, 0, 0)),
+            pl.BlockSpec((bq, t), lambda hh, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda hh, i: (hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, t, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v, bias)

@@ -1,0 +1,69 @@
+"""Kernel backend dispatch: Pallas (inference artifacts) vs jnp reference.
+
+``pallas_call`` has no reverse-mode autodiff (even in interpret mode), so
+training-step graphs are lowered with the pure-jnp reference path — which
+pytest verifies bit-for-bit against the Pallas kernels — while inference
+artifacts use the Pallas kernels.  ``aot.py`` flips the backend around each
+lowering; models only ever import from this module.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+from . import attention as _attention
+from . import local_merge as _local_merge
+from . import ref as _ref
+from . import ssm as _ssm
+
+_BACKEND = "pallas"
+
+
+def set_backend(name: str):
+    global _BACKEND
+    assert name in ("pallas", "jnp"), name
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+@contextmanager
+def backend(name: str):
+    prev = _BACKEND
+    set_backend(name)
+    try:
+        yield
+    finally:
+        set_backend(prev)
+
+
+def fused_attention(q, k, v, bias):
+    if _BACKEND == "pallas":
+        return _attention.fused_attention(q, k, v, bias)
+    return _ref.attention_ref(q, k, v, mask=bias)
+
+
+def banded_similarity(a, b, *, k):
+    if _BACKEND == "pallas":
+        return _local_merge.banded_similarity(a, b, k=k)
+    return _ref.banded_similarity_ref(a, b, k=k)
+
+
+def full_similarity(a, b):
+    if _BACKEND == "pallas":
+        return _local_merge.full_similarity(a, b)
+    return _ref.full_similarity_ref(a, b)
+
+
+def similarity(a, b, *, k):
+    if k >= a.shape[0]:
+        return full_similarity(a, b)
+    return banded_similarity(a, b, k=k)
+
+
+def selective_scan(x, dt, a, b, c, d):
+    if _BACKEND == "pallas":
+        return _ssm.selective_scan(x, dt, a, b, c, d)
+    return _ref.ssm_scan_ref(x, dt, a, b, c, d)

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (the pytest correctness signal).
+
+Each function mirrors one kernel in this package with the most direct
+possible jnp formulation — no tiling, no windows, no loops — so a mismatch
+always points at the kernel, never at the oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def l2_normalize(x, eps=1e-8):
+    return x * jax.lax.rsqrt(jnp.sum(x * x, axis=-1, keepdims=True) + eps)
+
+
+def banded_similarity_ref(a, b, *, k):
+    """Oracle for ``local_merge.banded_similarity``.
+
+    Builds the full (t2, t2) cosine matrix and gathers the band
+    ``|i - j| < k`` into the rectangular (t2, 2k-1) layout.
+    """
+    t2 = a.shape[0]
+    s = l2_normalize(a.astype(jnp.float32)) @ l2_normalize(b.astype(jnp.float32)).T
+    i = jnp.arange(t2)[:, None]
+    p = jnp.arange(2 * k - 1)[None, :]
+    j = i + p - (k - 1)
+    valid = (j >= 0) & (j < t2)
+    return jnp.where(valid, s[i, jnp.clip(j, 0, t2 - 1)], NEG_INF)
+
+
+def full_similarity_ref(a, b):
+    """Oracle for ``local_merge.full_similarity``."""
+    return l2_normalize(a.astype(jnp.float32)) @ l2_normalize(b.astype(jnp.float32)).T
+
+
+def attention_ref(q, k, v, *, mask=None, size_bias=None, scale=None):
+    """Oracle for ``attention.fused_attention``.
+
+    q,k,v: (h, t, dh).  mask: (t, t) additive or None.  size_bias: (t,)
+    log-token-size bias for ToMe proportional attention or None.
+    """
+    dh = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(jnp.float32(dh))
+    logits = jnp.einsum("htd,hsd->hts", q, k).astype(jnp.float32) * scale
+    if size_bias is not None:
+        logits = logits + size_bias[None, None, :]
+    if mask is not None:
+        logits = logits + mask[None, :, :]
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hts,hsd->htd", w, v.astype(jnp.float32))
+
+
+def ssm_scan_ref(x, dt, a, b, c, d):
+    """Oracle for ``ssm.selective_scan`` (Mamba-style S6 recurrence).
+
+    x:  (t, dch)  input sequence
+    dt: (t, dch)  positive step sizes (already softplus'ed)
+    a:  (dch, n)  state matrix (negative real)
+    b:  (t, n)    input->state projection (input dependent)
+    c:  (t, n)    state->output projection (input dependent)
+    d:  (dch,)    skip connection
+    Returns y: (t, dch).
+    """
+    da = jnp.exp(dt[:, :, None] * a[None, :, :])            # (t, dch, n)
+    dbx = dt[:, :, None] * b[:, None, :] * x[:, :, None]    # (t, dch, n)
+
+    def step(h, inp):
+        da_t, dbx_t, c_t = inp
+        h = da_t * h + dbx_t
+        y = jnp.sum(h * c_t[None, :], axis=-1)              # (dch,)
+        return h, y
+
+    dch, n = a.shape
+    h0 = jnp.zeros((dch, n), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (da, dbx, c))
+    return ys + x * d[None, :]

@@ -1,0 +1,75 @@
+"""Layer-1 Pallas selective-scan kernel (Mamba-style S6 recurrence).
+
+Computes, per channel ``c`` and state dim ``n``::
+
+    h_t = exp(dt_t A) * h_{t-1} + dt_t B_t x_t
+    y_t = <h_t, C_t> + D x_t
+
+The grid tiles the channel axis; within a tile the recurrence runs as a
+``lax.scan`` over time (sequential in t — exactly the structure Mamba's
+hardware-aware kernel parallelises over channels while scanning time).
+
+TPU adaptation (DESIGN.md §6): Mamba's CUDA kernel keeps ``h`` in SRAM and
+fuses the discretisation; here the channel-block of ``h`` lives in VMEM
+(``block * n`` floats) and the discretisation (``exp(dt A)``, ``dt B x``)
+is fused into the scan body.  ``interpret=True`` for CPU PJRT.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 16
+
+
+def _scan_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)    # (t, bc)
+    dt = dt_ref[...].astype(jnp.float32)  # (t, bc)
+    a = a_ref[...].astype(jnp.float32)    # (bc, n)
+    b = b_ref[...].astype(jnp.float32)    # (t, n)
+    c = c_ref[...].astype(jnp.float32)    # (t, n)
+    d = d_ref[...].astype(jnp.float32)    # (bc,)
+
+    da = jnp.exp(dt[:, :, None] * a[None, :, :])          # (t, bc, n)
+    dbx = dt[:, :, None] * b[:, None, :] * x[:, :, None]  # (t, bc, n)
+
+    def step(h, inp):
+        da_t, dbx_t, c_t = inp
+        h = da_t * h + dbx_t
+        return h, jnp.sum(h * c_t[None, :], axis=-1)
+
+    h0 = jnp.zeros(a.shape, jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (da, dbx, c))          # ys: (t, bc)
+    o_ref[...] = ys + x * d[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def selective_scan(x, dt, a, b, c, d, *, block=DEFAULT_BLOCK):
+    """Selective state-space scan.
+
+    x, dt: ``(t, dch)``;  a: ``(dch, n)``;  b, c: ``(t, n)``;  d: ``(dch,)``.
+    Returns y ``(t, dch)`` float32.  Matches ``ref.ssm_scan_ref``.
+    """
+    t, dch = x.shape
+    n = a.shape[1]
+    bc = block if dch % block == 0 else dch
+    grid = (dch // bc,)
+    return pl.pallas_call(
+        _scan_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, bc), lambda i: (0, i)),
+            pl.BlockSpec((t, bc), lambda i: (0, i)),
+            pl.BlockSpec((bc, n), lambda i: (i, 0)),
+            pl.BlockSpec((t, n), lambda i: (0, 0)),
+            pl.BlockSpec((t, n), lambda i: (0, 0)),
+            pl.BlockSpec((bc,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((t, bc), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((t, dch), jnp.float32),
+        interpret=True,
+    )(x, dt, a, b, c, d)

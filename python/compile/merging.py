@@ -1,0 +1,271 @@
+"""Layer-2 token merging ops (paper §3) — static-shape, AOT-compatible.
+
+Implements, on top of the L1 Pallas similarity kernels:
+
+* ``merge_fixed_r``  — global / local(k) bipartite soft matching with a
+  fixed merge count ``r`` (static output shape ``t - r``), order- and
+  causality-preserving, with ToMe token-size tracking.
+* ``merge_causal``   — the ``k = 1`` special case used in decoders.
+* ``prune_fixed_r``  — the pruning baseline of appendix E.2 (drop instead
+  of average).
+* ``unmerge``        — clone-to-neighbours reconstruction (paper §3
+  "Causal token merging for decoders"): a gather by the slot map.
+* ``dynamic_mask_merge`` — threshold-based dynamic merging (§5.5) realised
+  as an in-place masked average so shapes stay static; emits the effective
+  token count for the FLOPs model (fig. 4).
+
+Conventions: tokens ``x`` are ``(t, d)``; ``sizes`` ``(t,)`` counts how
+many original tokens each current token represents.  Subsets A/B are the
+even/odd positions (alternation, §3).  When ``t`` is odd the most recent
+token is excluded from merging (§3, Markov argument).
+
+The merged representation of a pair lands at the *later* of the two source
+positions, so with ``k = 1`` information only ever flows forward in time —
+this is what makes the scheme causal and decoder-safe.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dispatch as local_merge
+
+NEG_INF = -1e9
+
+
+
+def rank_desc(x):
+    """Descending rank (0 = largest) along the last axis, computed by
+    comparison counting instead of ``argsort``: the sort primitive's
+    transpose emits batched gathers under ``vmap``+``grad`` that the
+    xla_extension 0.5.1 converter rejects.  Ties break by position
+    (earlier index ranks higher), so ``rank < r`` selects exactly r."""
+    xi = x[..., :, None]
+    xj = x[..., None, :]
+    i = jnp.arange(x.shape[-1])[:, None]
+    j = jnp.arange(x.shape[-1])[None, :]
+    greater = (xj > xi) | ((xj == xi) & (j < i))
+    return jnp.sum(greater.astype(jnp.int32), axis=-1)
+
+def topk_desc(x, k):
+    """Sort-based descending top-k along the last axis.
+
+    ``jax.lax.top_k`` lowers to a ``topk`` HLO instruction whose text form
+    xla_extension 0.5.1 cannot parse; ``argsort`` lowers to plain ``sort``
+    which round-trips fine.  Semantics match ``lax.top_k`` (values, indices).
+    """
+    idx = jnp.argsort(-x, axis=-1)[..., :k]
+    return jnp.take_along_axis(x, idx, axis=-1), idx
+
+
+
+class MergeResult(NamedTuple):
+    """Output of a merge step.
+
+    x:       (t - r, d) merged tokens, original temporal order preserved.
+    sizes:   (t - r,)  token sizes (for proportional attention / averaging).
+    slot_map:(t,)      original position -> output slot; ``unmerge`` gathers
+                       through it, and chaining slot_maps across layers
+                       yields the merge trace of fig. 8.
+    """
+
+    x: jnp.ndarray
+    sizes: jnp.ndarray
+    slot_map: jnp.ndarray
+
+
+def _banded_similarity_metric(a, b, *, k, metric):
+    """(t2, 2k-1) banded similarity under the requested metric.
+
+    ``cos`` dispatches to the L1 Pallas kernel; ``l1``/``l2`` (appendix
+    E.1 ablation) use negative distances computed densely in jnp — they
+    are ablation-only and never on a hot path.
+    """
+    if metric == "cos":
+        return local_merge.similarity(a, b, k=k) if k >= a.shape[0] else \
+            local_merge.banded_similarity(a, b, k=k)
+    t2 = a.shape[0]
+    diff = a[:, None, :] - b[None, :, :]
+    if metric == "l1":
+        s = -jnp.sum(jnp.abs(diff), axis=-1)
+    elif metric == "l2":
+        s = -jnp.sqrt(jnp.sum(diff * diff, axis=-1) + 1e-12)
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    i = jnp.arange(t2)[:, None]
+    p = jnp.arange(2 * k - 1)[None, :]
+    j = i + p - (k - 1)
+    valid = (j >= 0) & (j < t2)
+    return jnp.where(valid, s[i, jnp.clip(j, 0, t2 - 1)], NEG_INF)
+
+
+def _match(x, *, k, metric):
+    """Bipartite soft matching on the A/B split.
+
+    Returns (node_max, best_j) over the ``t2`` A-tokens: the best match
+    score and the matched B index for every A token.
+    """
+    te = x.shape[0] - (x.shape[0] % 2)
+    a = x[0:te:2]
+    b = x[1:te:2]
+    t2 = te // 2
+    k = min(k, t2)
+    if k >= t2:
+        s = local_merge.full_similarity(a, b) if metric == "cos" else \
+            _banded_similarity_metric(a, b, k=t2, metric=metric)
+        if s.shape[1] == 2 * t2 - 1:  # banded layout at k == t2
+            best_p = jnp.argmax(s, axis=-1)
+            node_max = jnp.max(s, axis=-1)
+            best_j = jnp.arange(t2) + best_p - (t2 - 1)
+            return node_max, best_j
+        best_j = jnp.argmax(s, axis=-1)
+        node_max = jnp.max(s, axis=-1)
+        return node_max, best_j
+    s = _banded_similarity_metric(a, b, k=k, metric=metric)
+    best_p = jnp.argmax(s, axis=-1)
+    node_max = jnp.max(s, axis=-1)
+    best_j = jnp.arange(t2) + best_p - (k - 1)
+    return node_max, jnp.clip(best_j, 0, t2 - 1)
+
+
+def merge_fixed_r(x, sizes, *, r, k, metric="cos"):
+    """Merge the ``r`` most similar A-tokens into their matched B-tokens.
+
+    Order-preserving, size-weighted averaging, static output length
+    ``t - r``.  ``k`` is the locality constraint of eq. 1 (``k >= t//2``
+    gives the global pool).
+    """
+    t, _ = x.shape
+    if r <= 0:
+        return MergeResult(x, sizes, jnp.arange(t))
+    te = t - (t % 2)
+    t2 = te // 2
+    assert 0 < r <= t2, f"r={r} out of range for t={t}"
+
+    node_max, best_j = _match(x, k=k, metric=metric)
+    # Top-r A tokens by best-match score are merged away.  The mask comes
+    # from a rank computation (argsort of argsort) rather than an index
+    # scatter: scatters acquire batching dims under vmap+grad that the
+    # xla_extension 0.5.1 converter rejects, and rank < r selects exactly
+    # r tokens even under ties.
+    merged_mask_a = rank_desc(node_max) < r
+
+    pos = jnp.arange(t)
+    is_a = (pos % 2 == 0) & (pos < te)
+    a_idx = pos // 2
+    merged = is_a & merged_mask_a[jnp.clip(a_idx, 0, t2 - 1)]
+
+    kept = ~merged
+    # Output slot of every kept token, in temporal order.
+    slot_of_kept = jnp.cumsum(kept.astype(jnp.int32)) - 1
+    # Destination of a merged A token: the slot of its matched B token
+    # (original position 2*best_j + 1).
+    partner_pos = 2 * best_j + 1
+    partner_slot = slot_of_kept[partner_pos]                    # (t2,)
+    slot_map = jnp.where(
+        merged, partner_slot[jnp.clip(a_idx, 0, t2 - 1)], slot_of_kept
+    )
+
+    w = sizes.astype(jnp.float32)
+    num = jax.ops.segment_sum(x * w[:, None], slot_map, num_segments=t - r)
+    den = jax.ops.segment_sum(w, slot_map, num_segments=t - r)
+    out = num / den[:, None]
+    return MergeResult(out, den, slot_map)
+
+
+def merge_causal(x, sizes, *, r, metric="cos"):
+    """Causal merging for decoders: the ``k = 1`` special case (§3)."""
+    return merge_fixed_r(x, sizes, r=r, k=1, metric=metric)
+
+
+def prune_fixed_r(x, sizes, *, r, k, metric="cos"):
+    """Pruning baseline (appendix E.2): drop the ``r`` most redundant
+    A-tokens instead of averaging them into their match."""
+    t, _ = x.shape
+    if r <= 0:
+        return MergeResult(x, sizes, jnp.arange(t))
+    te = t - (t % 2)
+    t2 = te // 2
+    node_max, best_j = _match(x, k=k, metric=metric)
+    pruned_mask_a = rank_desc(node_max) < r
+    pos = jnp.arange(t)
+    is_a = (pos % 2 == 0) & (pos < te)
+    a_idx = pos // 2
+    pruned = is_a & pruned_mask_a[jnp.clip(a_idx, 0, t2 - 1)]
+    kept = ~pruned
+    slot_of_kept = jnp.cumsum(kept.astype(jnp.int32)) - 1
+    partner_slot = slot_of_kept[2 * best_j + 1]
+    slot_map = jnp.where(pruned, partner_slot[jnp.clip(a_idx, 0, t2 - 1)],
+                         slot_of_kept)
+    # Gather (not average): kept tokens pass through unchanged.
+    order = jnp.argsort(jnp.where(kept, slot_of_kept, t))
+    out = x[order[: t - r]]
+    out_sizes = sizes[order[: t - r]]
+    return MergeResult(out, out_sizes, slot_map)
+
+
+def unmerge(y, slot_map):
+    """Clone-to-neighbours unmerge (§3): reconstruct the pre-merge length
+    by gathering each original position's slot.  Composes across layers by
+    chaining slot maps outermost-first."""
+    return y[slot_map]
+
+
+def compose_slot_maps(maps):
+    """Chain per-layer slot maps into original-position -> final-slot
+    (the merge trace of fig. 8).  ``maps`` is ordered layer 1 .. L."""
+    acc = maps[0]
+    for m in maps[1:]:
+        acc = m[acc]
+    return acc
+
+
+def dynamic_mask_merge(x, *, threshold, k=1, metric="cos"):
+    """Dynamic merging (§5.5) with static shapes.
+
+    Pairs whose similarity exceeds ``threshold`` are replaced in place by
+    their average (merge followed by immediate clone-unmerge), and the
+    effective token count ``t - merged`` is returned for the FLOPs model.
+    Quality matches true dynamic merging; the compute saving is accounted
+    analytically (DESIGN.md §3, fig. 4 reports FLOPs for the same reason
+    the paper does: "substantial execution overhead in time measurements").
+    """
+    t, _ = x.shape
+    te = t - (t % 2)
+    t2 = te // 2
+    node_max, best_j = _match(x, k=k, metric=metric)
+    do_merge = node_max > threshold                          # (t2,)
+    a = x[0:te:2]
+    merged_val = jax.ops.segment_sum(
+        jnp.where(do_merge[:, None], a, 0.0), best_j, num_segments=t2
+    )
+    merged_cnt = jax.ops.segment_sum(
+        do_merge.astype(jnp.float32), best_j, num_segments=t2
+    )
+    b = x[1:te:2]
+    new_b = (b + merged_val) / (1.0 + merged_cnt)[:, None]
+    # A tokens that merged take their destination's value (clone-unmerge);
+    # everything else passes through.
+    new_a = jnp.where(do_merge[:, None], new_b[best_j], a)
+    out = x.at[0:te:2].set(new_a).at[1:te:2].set(new_b)
+    effective = t - jnp.sum(do_merge.astype(jnp.int32))
+    return out, effective
+
+
+def merge_schedule(t, *, r, num_layers, q=2):
+    """Static per-layer token counts for a fixed-``r`` schedule.
+
+    Applies ``r`` merges per layer while at least ``q`` tokens remain
+    (§3: ``q`` = minimum number of remaining tokens some architectures
+    need).  Returns ``[t_1, ..., t_{L+1}]`` with ``t_1 = t``.
+    """
+    counts = [t]
+    cur = t
+    for _ in range(num_layers):
+        step = min(r, (cur - (cur % 2)) // 2, max(0, cur - q))
+        cur -= max(0, step)
+        counts.append(cur)
+    return counts

@@ -1,0 +1,16 @@
+"""Layer-2 facade: re-exports the model zoo (see ``models/``).
+
+Kept for the canonical scaffold layout; the actual model definitions live
+in ``compile/models/`` (transformer variants, chronos, hyena, mamba,
+patchtst) and the merging ops in ``compile/merging.py``.
+"""
+
+from .merging import (  # noqa: F401
+    dynamic_mask_merge,
+    merge_causal,
+    merge_fixed_r,
+    merge_schedule,
+    prune_fixed_r,
+    unmerge,
+)
+from .models import chronos, hyena, mamba, patchtst, transformer  # noqa: F401

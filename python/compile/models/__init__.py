@@ -1,0 +1,1 @@
+"""Layer-2 JAX model zoo (build-time only; lowered to HLO by aot.py)."""

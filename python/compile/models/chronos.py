@@ -1,0 +1,206 @@
+"""Chronos-like univariate quantized-vocabulary forecaster (§5.3 suite).
+
+The Chronos signature (Ansari et al. 2024) is its tokenizer: mean-scale the
+context, clip, quantize into a fixed uniform vocabulary, and model token
+ids with an encoder–decoder transformer.  We reproduce that design at
+tractable scale (DESIGN.md §7): sizes S/M/L instead of tiny…large, and a
+teacher-forced p-step decoder head instead of autoregressive sampling (the
+merging mechanics — encoder global-pool merging + decoder causal merging +
+unmerge — are identical).
+
+Forward: context (m,) float -> (logits (p, vocab), scale ()).  Rust
+dequantizes argmax ids through the bin centres * scale (eval/serving), and
+cross-entropy trains against quantized targets.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .. import merging
+from . import common as C
+
+
+@dataclass(frozen=True)
+class ChronosConfig:
+    m: int = 512              # context length (paper default)
+    p: int = 64               # prediction horizon (paper default)
+    vocab: int = 256
+    clip: float = 15.0        # scaled-value clipping range
+    d: int = 64
+    heads: int = 4
+    enc_layers: int = 4
+    dec_layers: int = 1
+    mlp_hidden: int = 128
+    r_enc: int = 0
+    k_enc: int = 0            # 0 => global pool
+    r_dec: int = 0
+    q_min: int = 8
+    metric: str = "cos"
+    prune: bool = False
+    use_pos_embed: bool = True
+    probe: str = "none"       # none | tokens | trace
+
+
+SIZES = {
+    "s": dict(d=64, heads=4, enc_layers=2, mlp_hidden=128),
+    "m": dict(d=96, heads=6, enc_layers=4, mlp_hidden=192),
+    "l": dict(d=128, heads=8, enc_layers=6, mlp_hidden=256),
+}
+
+
+def tokenize(x, cfg: ChronosConfig):
+    """Mean-scaling + uniform-bin quantization (the Chronos tokenizer)."""
+    scale = jnp.mean(jnp.abs(x)) + 1e-6
+    xs = jnp.clip(x / scale, -cfg.clip, cfg.clip)
+    ids = jnp.round((xs + cfg.clip) / (2 * cfg.clip) * (cfg.vocab - 1))
+    return ids.astype(jnp.int32), scale
+
+
+def bin_centers(cfg: ChronosConfig):
+    return (jnp.arange(cfg.vocab) / (cfg.vocab - 1)) * 2 * cfg.clip - cfg.clip
+
+
+def init_params(key, cfg: ChronosConfig):
+    ks = iter(jax.random.split(key, 8 + 4 * (cfg.enc_layers + cfg.dec_layers)))
+    p = {
+        "embed": C.embedding_init(next(ks), cfg.vocab, cfg.d),
+        "dec_query": jax.random.normal(next(ks), (cfg.p, cfg.d), jnp.float32) * 0.02,
+        "head": C.dense_init(next(ks), cfg.d, cfg.vocab),
+        "enc": [],
+        "dec": [],
+    }
+    for _ in range(cfg.enc_layers):
+        p["enc"].append(
+            {
+                "attn": C.mha_init(next(ks), cfg.d, cfg.heads),
+                "ln1": C.layernorm_init(cfg.d),
+                "ln2": C.layernorm_init(cfg.d),
+                "mlp": C.mlp_init(next(ks), cfg.d, cfg.mlp_hidden),
+            }
+        )
+    for _ in range(cfg.dec_layers):
+        p["dec"].append(
+            {
+                "self_attn": C.mha_init(next(ks), cfg.d, cfg.heads),
+                "cross_attn": C.mha_init(next(ks), cfg.d, cfg.heads),
+                "ln1": C.layernorm_init(cfg.d),
+                "ln2": C.layernorm_init(cfg.d),
+                "ln3": C.layernorm_init(cfg.d),
+                "mlp": C.mlp_init(next(ks), cfg.d, cfg.mlp_hidden),
+            }
+        )
+    return C.strip_static(p)
+
+
+def forward(params, x, cfg: ChronosConfig):
+    """x: (m,) float context -> (logits (p, vocab), scale)."""
+    ids, scale = tokenize(x, cfg)
+    h = params["embed"]["e"][ids]
+    if cfg.use_pos_embed:
+        h = h + C.sinusoidal_pe(cfg.m, cfg.d)
+    sizes = jnp.ones((cfg.m,), jnp.float32)
+    counts = merging.merge_schedule(cfg.m, r=cfg.r_enc, num_layers=cfg.enc_layers,
+                                    q=cfg.q_min)
+    probes = {}
+    enc_maps = []
+    op = merging.prune_fixed_r if cfg.prune else merging.merge_fixed_r
+    for li, lp in enumerate(params["enc"]):
+        t_l = h.shape[0]
+        bias = C.size_bias(sizes, t_l)
+        h = h + C.mha(lp["attn"], C.layernorm(lp["ln1"], h),
+                      C.layernorm(lp["ln1"], h), heads=cfg.heads, bias=bias)
+        if li == 0 and cfg.probe == "tokens":
+            probes["tokens_l1"] = h
+        r_l = counts[li] - counts[li + 1]
+        if r_l > 0:
+            k_l = cfg.k_enc if cfg.k_enc > 0 else max(1, h.shape[0] // 2)
+            res = op(h, sizes, r=r_l, k=k_l, metric=cfg.metric)
+            h, sizes = res.x, res.sizes
+            enc_maps.append(res.slot_map)
+        else:
+            enc_maps.append(jnp.arange(h.shape[0]))
+        h = h + C.mlp(lp["mlp"], C.layernorm(lp["ln2"], h))
+    enc_out, enc_sizes = h, sizes
+
+    g = params["dec_query"] + C.sinusoidal_pe(cfg.p, cfg.d)
+    dsizes = jnp.ones((cfg.p,), jnp.float32)
+    dcounts = merging.merge_schedule(cfg.p, r=cfg.r_dec, num_layers=cfg.dec_layers,
+                                     q=cfg.q_min)
+    dec_maps = []
+    for li, lp in enumerate(params["dec"]):
+        t_l = g.shape[0]
+        bias = C.causal_mask(t_l) + C.size_bias(dsizes, t_l)
+        g = g + C.mha(lp["self_attn"], C.layernorm(lp["ln1"], g),
+                      C.layernorm(lp["ln1"], g), heads=cfg.heads, bias=bias)
+        r_l = dcounts[li] - dcounts[li + 1]
+        if r_l > 0:
+            res = merging.merge_causal(g, dsizes, r=r_l, metric=cfg.metric)
+            g, dsizes = res.x, res.sizes
+            dec_maps.append(res.slot_map)
+        cbias = C.size_bias(enc_sizes, g.shape[0])
+        g = g + C.mha(lp["cross_attn"], C.layernorm(lp["ln2"], g), enc_out,
+                      heads=cfg.heads, bias=cbias)
+        g = g + C.mlp(lp["mlp"], C.layernorm(lp["ln3"], g))
+    if dec_maps:
+        g = merging.unmerge(g, merging.compose_slot_maps(dec_maps))
+    logits = C.dense(params["head"], g)
+
+    if cfg.probe == "tokens":
+        return logits, scale, probes["tokens_l1"]
+    if cfg.probe == "trace":
+        return logits, scale, merging.compose_slot_maps(enc_maps)
+    return logits, scale
+
+
+def forward_batch(params, xb, cfg: ChronosConfig):
+    return jax.vmap(lambda x: forward(params, x, cfg))(xb)
+
+
+def forward_dynamic(params, x, threshold, cfg: ChronosConfig):
+    """Dynamic token merging (§5.5): the merge decision is made *inside*
+    the graph from a cosine-similarity ``threshold`` passed as a runtime
+    input, so one artifact serves every threshold.  Shapes stay static via
+    the masked-merge formulation (DESIGN.md §3); the summed effective token
+    count drives the FLOPs model (fig. 4)."""
+    ids, scale = tokenize(x, cfg)
+    h = params["embed"]["e"][ids]
+    if cfg.use_pos_embed:
+        h = h + C.sinusoidal_pe(cfg.m, cfg.d)
+    sizes = jnp.ones((cfg.m,), jnp.float32)
+    eff_total = jnp.zeros((), jnp.int32)
+    for lp in params["enc"]:
+        bias = C.size_bias(sizes, h.shape[0])
+        h = h + C.mha(lp["attn"], C.layernorm(lp["ln1"], h),
+                      C.layernorm(lp["ln1"], h), heads=cfg.heads, bias=bias)
+        h, eff = merging.dynamic_mask_merge(h, threshold=threshold, k=1,
+                                            metric=cfg.metric)
+        eff_total = eff_total + eff
+        h = h + C.mlp(lp["mlp"], C.layernorm(lp["ln2"], h))
+    enc_out, enc_sizes = h, sizes
+
+    g = params["dec_query"] + C.sinusoidal_pe(cfg.p, cfg.d)
+    dsizes = jnp.ones((cfg.p,), jnp.float32)
+    for lp in params["dec"]:
+        bias = C.causal_mask(g.shape[0]) + C.size_bias(dsizes, g.shape[0])
+        g = g + C.mha(lp["self_attn"], C.layernorm(lp["ln1"], g),
+                      C.layernorm(lp["ln1"], g), heads=cfg.heads, bias=bias)
+        cbias = C.size_bias(enc_sizes, g.shape[0])
+        g = g + C.mha(lp["cross_attn"], C.layernorm(lp["ln2"], g), enc_out,
+                      heads=cfg.heads, bias=cbias)
+        g = g + C.mlp(lp["mlp"], C.layernorm(lp["ln3"], g))
+    logits = C.dense(params["head"], g)
+    return logits, scale, eff_total
+
+
+def forward_dynamic_batch(params, xb, threshold, cfg: ChronosConfig):
+    return jax.vmap(lambda x: forward_dynamic(params, x, threshold, cfg))(xb)
+
+
+def dequantize(logits, scale, cfg: ChronosConfig):
+    """Greedy decode to values — mirrored in Rust eval; kept here for tests."""
+    ids = jnp.argmax(logits, -1)
+    return bin_centers(cfg)[ids] * scale

@@ -1,0 +1,155 @@
+"""Shared Layer-2 building blocks: initialisers, layers, attention wiring.
+
+Every model is a pure function ``f(params, *inputs)`` over a nested dict of
+arrays so that weights are **runtime inputs** of the lowered HLO — Rust owns
+the weights (init / train / serve); Python never runs after ``make
+artifacts``.
+
+Attention dispatches to the L1 Pallas ``fused_attention`` kernel and
+implements ToMe *proportional attention*: tokens carry sizes and keys get an
+additive ``log size`` bias so a merged token attends like the originals it
+represents (Bolya et al. 2023, adopted by the paper).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import dispatch as attn_kernel
+
+# ---------------------------------------------------------------------------
+# Initialisation
+
+
+def dense_init(key, d_in, d_out):
+    wk, _ = jax.random.split(key)
+    scale = math.sqrt(2.0 / (d_in + d_out))
+    return {
+        "w": jax.random.normal(wk, (d_in, d_out), jnp.float32) * scale,
+        "b": jnp.zeros((d_out,), jnp.float32),
+    }
+
+
+def layernorm_init(d):
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def embedding_init(key, vocab, d):
+    return {"e": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def mha_init(key, d, heads):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, d),
+        "wk": dense_init(ks[1], d, d),
+        "wv": dense_init(ks[2], d, d),
+        "wo": dense_init(ks[3], d, d),
+        "heads": heads,  # static; stripped before lowering
+    }
+
+
+def mlp_init(key, d, hidden):
+    k1, k2 = jax.random.split(key)
+    return {"fc1": dense_init(k1, d, hidden), "fc2": dense_init(k2, hidden, d)}
+
+
+def strip_static(params):
+    """Remove non-array static entries (e.g. ``heads``) before lowering."""
+    if isinstance(params, dict):
+        return {
+            k: strip_static(v)
+            for k, v in params.items()
+            if not isinstance(v, (int, float, str, bool))
+        }
+    if isinstance(params, (list, tuple)):
+        return type(params)(strip_static(v) for v in params)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layers
+
+
+def dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def layernorm(p, x, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+
+
+def mlp(p, x):
+    return dense(p["fc2"], jax.nn.gelu(dense(p["fc1"], x)))
+
+
+def split_heads(x, heads):
+    t, d = x.shape
+    return x.reshape(t, heads, d // heads).transpose(1, 0, 2)  # (h, t, dh)
+
+
+def join_heads(x):
+    h, t, dh = x.shape
+    return x.transpose(1, 0, 2).reshape(t, h * dh)
+
+
+def causal_mask(t):
+    return jnp.where(jnp.tril(jnp.ones((t, t), bool)), 0.0, -1e9).astype(jnp.float32)
+
+
+def size_bias(sizes, tq):
+    """Proportional-attention additive bias, broadcast to (tq, tk)."""
+    return jnp.broadcast_to(jnp.log(sizes)[None, :], (tq, sizes.shape[0]))
+
+
+def mha(p, xq, xkv, *, heads, bias):
+    """Multi-head attention via the Pallas kernel.
+
+    xq: (tq, d), xkv: (tk, d), bias: (tq, tk) additive (mask + log-sizes).
+    The kernel requires tq == tk blocks; for cross attention with tq != tk
+    we fall back to the jnp formulation (identical math, checked by ref).
+    """
+    q = split_heads(dense(p["wq"], xq), heads)
+    k = split_heads(dense(p["wk"], xkv), heads)
+    v = split_heads(dense(p["wv"], xkv), heads)
+    tq, tk = xq.shape[0], xkv.shape[0]
+    if tq == tk:
+        o = attn_kernel.fused_attention(q, k, v, bias)
+    else:
+        dh = q.shape[-1]
+        logits = jnp.einsum("htd,hsd->hts", q, k) / math.sqrt(dh) + bias[None]
+        o = jnp.einsum("hts,hsd->htd", jax.nn.softmax(logits, -1), v)
+    return dense(p["wo"], join_heads(o))
+
+
+def sinusoidal_pe(t, d):
+    pos = jnp.arange(t)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    angle = pos / jnp.power(10000.0, 2.0 * i / d)
+    pe = jnp.zeros((t, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+def moving_avg(x, win):
+    """Series-decomposition trend extractor (Autoformer/FEDformer):
+    edge-replicated moving average along the token axis."""
+    t = x.shape[0]
+    pad_l = (win - 1) // 2
+    pad_r = win - 1 - pad_l
+    xp = jnp.concatenate(
+        [jnp.repeat(x[:1], pad_l, 0), x, jnp.repeat(x[-1:], pad_r, 0)], 0
+    )
+    cs = jnp.cumsum(jnp.concatenate([jnp.zeros_like(xp[:1]), xp], 0), 0)
+    return (cs[win:] - cs[:-win]) / win
+
+
+def series_decomp(x, win=25):
+    trend = moving_avg(x, win)
+    return x - trend, trend

@@ -1,0 +1,94 @@
+"""Decoder-only forecaster (TimesFM/Das et al. 2023 style) with causal
+token merging — the architecture class the paper's causal-merging claim
+(§3 "the first viable token merging scheme for transformer decoders")
+exists for.
+
+Patch-tokenized univariate context -> stack of causal decoder blocks with
+**causal merging (k=1) between self-attention and MLP in every block** ->
+unmerge -> per-position multi-patch forecast head.  The final context token
+predicts the horizon.  Every token's receptive field stays strictly causal
+through merging (merged pairs land at the later source position).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .. import merging
+from . import common as C
+
+
+@dataclass(frozen=True)
+class DecoderOnlyConfig:
+    m: int = 512              # context length
+    p: int = 64               # horizon
+    patch_len: int = 16       # input patch (token) size
+    d: int = 64
+    heads: int = 4
+    layers: int = 4
+    mlp_hidden: int = 128
+    r: int = 0                # causal merges per block (k = 1 always)
+    q_min: int = 4
+    metric: str = "cos"
+
+    @property
+    def n_tokens(self):
+        assert self.m % self.patch_len == 0
+        return self.m // self.patch_len
+
+
+def token_counts(cfg: DecoderOnlyConfig):
+    return merging.merge_schedule(cfg.n_tokens, r=cfg.r, num_layers=cfg.layers,
+                                  q=cfg.q_min)
+
+
+def init_params(key, cfg: DecoderOnlyConfig):
+    ks = iter(jax.random.split(key, 4 + 4 * cfg.layers))
+    p = {
+        "embed": C.dense_init(next(ks), cfg.patch_len, cfg.d),
+        "head": C.dense_init(next(ks), cfg.d, cfg.p),
+        "blocks": [],
+    }
+    for _ in range(cfg.layers):
+        p["blocks"].append(
+            {
+                "attn": C.mha_init(next(ks), cfg.d, cfg.heads),
+                "ln1": C.layernorm_init(cfg.d),
+                "ln2": C.layernorm_init(cfg.d),
+                "mlp": C.mlp_init(next(ks), cfg.d, cfg.mlp_hidden),
+            }
+        )
+    return C.strip_static(p)
+
+
+def forward(params, x, cfg: DecoderOnlyConfig):
+    """x: (m,) univariate context -> forecast (p,).
+
+    Mean-scaled like Chronos so weights transfer across amplitudes.
+    """
+    scale = jnp.mean(jnp.abs(x)) + 1e-6
+    xs = (x / scale).reshape(cfg.n_tokens, cfg.patch_len)
+    h = C.dense(params["embed"], xs) + C.sinusoidal_pe(cfg.n_tokens, cfg.d)
+    sizes = jnp.ones((cfg.n_tokens,), jnp.float32)
+    counts = token_counts(cfg)
+    for li, bp in enumerate(params["blocks"]):
+        t_l = h.shape[0]
+        bias = C.causal_mask(t_l) + C.size_bias(sizes, t_l)
+        h = h + C.mha(bp["attn"], C.layernorm(bp["ln1"], h),
+                      C.layernorm(bp["ln1"], h), heads=cfg.heads, bias=bias)
+        r_l = counts[li] - counts[li + 1]
+        if r_l > 0:
+            res = merging.merge_causal(h, sizes, r=r_l, metric=cfg.metric)
+            h, sizes = res.x, res.sizes
+        h = h + C.mlp(bp["mlp"], C.layernorm(bp["ln2"], h))
+    # the most recent token predicts the horizon (it is never merged away:
+    # B-tokens survive, and the final position is a B-token or the excluded
+    # odd leftover)
+    return C.dense(params["head"], h[-1]) * scale
+
+
+def forward_batch(params, xb, cfg: DecoderOnlyConfig):
+    return jax.vmap(lambda x: forward(params, x, cfg))(xb)

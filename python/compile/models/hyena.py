@@ -1,0 +1,123 @@
+"""Hyena state-space classifier for the genomic experiment (§5.4, table 3).
+
+Order-2 Hyena operator (Poli et al. 2023): input projections split the
+embedded sequence into (v, x1, x2) streams; implicit long convolutions with
+filters generated from positional features by a small FFN under an
+exponential decay window; data-controlled gating between stages::
+
+    z = v;  z = x1 * fftconv(z, h1);  z = x2 * fftconv(z, h2)
+
+Token merging is applied **after the Hyena operator** of each block with
+``k = 1`` (§4: "we merge tokens after the Hyena or Mamba operator and
+choose k = 1 to not introduce an operation with quadratic complexity").
+Global merging (``k = t/2``) is also exposed for the table-3 comparison.
+Classification: mean-pool (size-weighted) -> linear head.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .. import merging
+from . import common as C
+
+
+@dataclass(frozen=True)
+class HyenaConfig:
+    vocab: int = 5            # A C G T N
+    m: int = 1024             # sequence length (paper: 16000; DESIGN.md §7)
+    n_classes: int = 2
+    d: int = 64
+    order: int = 2
+    filter_d: int = 32        # filter-FFN hidden width
+    layers: int = 4
+    r: int = 0                # merges per block
+    k: int = 1                # 1 = local/causal, >= t/2 = global
+    q_min: int = 16
+    metric: str = "cos"
+
+
+def init_params(key, cfg: HyenaConfig):
+    ks = iter(jax.random.split(key, 4 + 6 * cfg.layers))
+    p = {
+        "embed": C.embedding_init(next(ks), cfg.vocab, cfg.d),
+        "head": C.dense_init(next(ks), cfg.d, cfg.n_classes),
+        "blocks": [],
+    }
+    for _ in range(cfg.layers):
+        p["blocks"].append(
+            {
+                "in_proj": C.dense_init(next(ks), cfg.d, (cfg.order + 1) * cfg.d),
+                "filter_fc1": C.dense_init(next(ks), 3, cfg.filter_d),
+                "filter_fc2": C.dense_init(next(ks), cfg.filter_d, cfg.order * cfg.d),
+                "decay": jnp.linspace(1.0, 4.0, cfg.order * cfg.d, dtype=jnp.float32),
+                "out_proj": C.dense_init(next(ks), cfg.d, cfg.d),
+                "ln": C.layernorm_init(cfg.d),
+                "ln2": C.layernorm_init(cfg.d),
+                "mlp": C.mlp_init(next(ks), cfg.d, 2 * cfg.d),
+            }
+        )
+    return C.strip_static(p)
+
+
+def _filters(bp, t, cfg: HyenaConfig):
+    """Implicit filters h: (order, t, d) from positional features."""
+    pos = jnp.arange(t, dtype=jnp.float32) / t
+    feat = jnp.stack([pos, jnp.sin(2 * jnp.pi * pos), jnp.cos(2 * jnp.pi * pos)], -1)
+    h = C.dense(bp["filter_fc2"], jnp.sin(C.dense(bp["filter_fc1"], feat)))
+    h = h.reshape(t, cfg.order, cfg.d).transpose(1, 0, 2)      # (order, t, d)
+    window = jnp.exp(-bp["decay"].reshape(cfg.order, 1, cfg.d)
+                     * pos[None, :, None])
+    return h * window
+
+
+def fftconv(z, h):
+    """Causal depthwise long convolution via FFT: (t, d) x (t, d) -> (t, d).
+
+    Padded to the next power of two: merged layers have non-pow2 lengths
+    (e.g. 960) and XLA's Bluestein fallback for those is several times
+    slower — pow2 padding keeps the FFT on the fast path regardless of the
+    merge schedule (EXPERIMENTS.md §Perf).
+    """
+    t = z.shape[0]
+    n = 1 << (2 * t - 1).bit_length()
+    fz = jnp.fft.rfft(z, n=n, axis=0)
+    fh = jnp.fft.rfft(h, n=n, axis=0)
+    return jnp.fft.irfft(fz * fh, n=n, axis=0)[:t]
+
+
+def hyena_operator(bp, x, cfg: HyenaConfig):
+    t = x.shape[0]
+    streams = C.dense(bp["in_proj"], x).reshape(t, cfg.order + 1, cfg.d)
+    v = streams[:, 0]
+    h = _filters(bp, t, cfg)
+    z = v
+    for o in range(cfg.order):
+        gate = jax.nn.silu(streams[:, o + 1])
+        z = gate * fftconv(z, h[o])
+    return C.dense(bp["out_proj"], z)
+
+
+def forward(params, ids, cfg: HyenaConfig):
+    """ids: (m,) int32 nucleotides -> logits (n_classes,)."""
+    h = params["embed"]["e"][ids]
+    sizes = jnp.ones((cfg.m,), jnp.float32)
+    counts = merging.merge_schedule(cfg.m, r=cfg.r, num_layers=cfg.layers,
+                                    q=cfg.q_min)
+    for li, bp in enumerate(params["blocks"]):
+        h = h + hyena_operator(bp, C.layernorm(bp["ln"], h), cfg)
+        r_l = counts[li] - counts[li + 1]
+        if r_l > 0:
+            k_l = cfg.k if cfg.k > 0 else max(1, h.shape[0] // 2)
+            res = merging.merge_fixed_r(h, sizes, r=r_l, k=k_l, metric=cfg.metric)
+            h, sizes = res.x, res.sizes
+        h = h + C.mlp(bp["mlp"], C.layernorm(bp["ln2"], h))
+    pooled = jnp.sum(h * sizes[:, None], 0) / jnp.sum(sizes)
+    return C.dense(params["head"], pooled)
+
+
+def forward_batch(params, idsb, cfg: HyenaConfig):
+    return jax.vmap(lambda i: forward(params, i, cfg))(idsb)

@@ -1,0 +1,110 @@
+"""Mamba state-space classifier for the genomic experiment (§5.4, table 3).
+
+Mamba block (Gu & Dao 2023): in-projection to (x, z) streams; short causal
+depthwise conv + SiLU on x; selective SSM with input-dependent (dt, B, C)
+through the Layer-1 Pallas ``selective_scan`` kernel; gated by SiLU(z);
+out-projection.  Token merging after the operator, ``k = 1`` (§4) with the
+global pool exposed for table 3.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .. import merging
+from ..kernels import dispatch as ssm_kernel
+from . import common as C
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    vocab: int = 5
+    m: int = 1024
+    n_classes: int = 2
+    d: int = 64
+    d_inner: int = 128        # expansion factor 2
+    d_state: int = 8
+    d_conv: int = 4
+    layers: int = 4
+    r: int = 0
+    k: int = 1
+    q_min: int = 16
+    metric: str = "cos"
+
+
+def init_params(key, cfg: MambaConfig):
+    ks = iter(jax.random.split(key, 4 + 8 * cfg.layers))
+    p = {
+        "embed": C.embedding_init(next(ks), cfg.vocab, cfg.d),
+        "head": C.dense_init(next(ks), cfg.d, cfg.n_classes),
+        "blocks": [],
+    }
+    for _ in range(cfg.layers):
+        di, n = cfg.d_inner, cfg.d_state
+        p["blocks"].append(
+            {
+                "in_proj": C.dense_init(next(ks), cfg.d, 2 * di),
+                "conv_w": jax.random.normal(next(ks), (cfg.d_conv, di), jnp.float32)
+                * 0.2,
+                "conv_b": jnp.zeros((di,), jnp.float32),
+                "x_proj": C.dense_init(next(ks), di, 2 * n + 1),
+                "dt_proj": C.dense_init(next(ks), 1, di),
+                # A initialised to -[1..n] per channel (S4D-real)
+                "a_log": jnp.log(
+                    jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+                ),
+                "dcoef": jnp.ones((di,), jnp.float32),
+                "out_proj": C.dense_init(next(ks), di, cfg.d),
+                "ln": C.layernorm_init(cfg.d),
+            }
+        )
+    return C.strip_static(p)
+
+
+def _causal_depthwise_conv(x, w, b):
+    """x (t, di), w (kw, di) -> causal depthwise conv (t, di)."""
+    kw = w.shape[0]
+    xp = jnp.concatenate([jnp.zeros((kw - 1, x.shape[1]), x.dtype), x], 0)
+    out = jnp.zeros_like(x)
+    for i in range(kw):
+        out = out + xp[i : i + x.shape[0]] * w[i]
+    return out + b
+
+
+def mamba_operator(bp, x, cfg: MambaConfig):
+    t = x.shape[0]
+    xz = C.dense(bp["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)                       # (t, di) each
+    xi = jax.nn.silu(_causal_depthwise_conv(xi, bp["conv_w"], bp["conv_b"]))
+    n = cfg.d_state
+    proj = C.dense(bp["x_proj"], xi)                        # (t, 2n+1)
+    b, c, dt_in = proj[:, :n], proj[:, n : 2 * n], proj[:, 2 * n :]
+    dt = jax.nn.softplus(C.dense(bp["dt_proj"], dt_in))     # (t, di)
+    a = -jnp.exp(bp["a_log"])                               # (di, n)
+    y = ssm_kernel.selective_scan(xi, dt, a, b, c, bp["dcoef"])
+    y = y * jax.nn.silu(z)
+    return C.dense(bp["out_proj"], y)
+
+
+def forward(params, ids, cfg: MambaConfig):
+    """ids: (m,) int32 -> logits (n_classes,)."""
+    h = params["embed"]["e"][ids]
+    sizes = jnp.ones((cfg.m,), jnp.float32)
+    counts = merging.merge_schedule(cfg.m, r=cfg.r, num_layers=cfg.layers,
+                                    q=cfg.q_min)
+    for li, bp in enumerate(params["blocks"]):
+        h = h + mamba_operator(bp, C.layernorm(bp["ln"], h), cfg)
+        r_l = counts[li] - counts[li + 1]
+        if r_l > 0:
+            k_l = cfg.k if cfg.k > 0 else max(1, h.shape[0] // 2)
+            res = merging.merge_fixed_r(h, sizes, r=r_l, k=k_l, metric=cfg.metric)
+            h, sizes = res.x, res.sizes
+    pooled = jnp.sum(h * sizes[:, None], 0) / jnp.sum(sizes)
+    return C.dense(params["head"], pooled)
+
+
+def forward_batch(params, idsb, cfg: MambaConfig):
+    return jax.vmap(lambda i: forward(params, i, cfg))(idsb)

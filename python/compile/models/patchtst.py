@@ -1,0 +1,106 @@
+"""PatchTST forecaster (appendix E.3, table 8): patch tokenization.
+
+Channel-independent: each variate's series (m,) is split into overlapping
+patches which are embedded as tokens (Nie et al. 2023); a shared vanilla
+encoder with token merging processes the ~24-token sequence; a flatten +
+linear head predicts the horizon.  Demonstrates that local merging works on
+top of the patch token type (paper: "the tokenization method is of minor
+importance for token merging").
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .. import merging
+from . import common as C
+
+
+@dataclass(frozen=True)
+class PatchTSTConfig:
+    n_vars: int = 7
+    m: int = 192
+    p: int = 96
+    patch_len: int = 16
+    stride: int = 8
+    d: int = 64
+    heads: int = 8
+    layers: int = 2
+    mlp_hidden: int = 128
+    r: int = 0                # merges per layer
+    k: int = 0                # 0 => global pool
+    q_min: int = 4
+    metric: str = "cos"
+
+    @property
+    def n_patches(self):
+        return (self.m - self.patch_len) // self.stride + 1
+
+
+def init_params(key, cfg: PatchTSTConfig):
+    ks = iter(jax.random.split(key, 4 + 4 * cfg.layers))
+    p = {
+        "embed": C.dense_init(next(ks), cfg.patch_len, cfg.d),
+        "head": C.dense_init(next(ks), cfg.n_patches * cfg.d, cfg.p),
+        "enc": [],
+    }
+    for _ in range(cfg.layers):
+        p["enc"].append(
+            {
+                "attn": C.mha_init(next(ks), cfg.d, cfg.heads),
+                "ln1": C.layernorm_init(cfg.d),
+                "ln2": C.layernorm_init(cfg.d),
+                "mlp": C.mlp_init(next(ks), cfg.d, cfg.mlp_hidden),
+            }
+        )
+    return C.strip_static(p)
+
+
+def _patch(series, cfg: PatchTSTConfig):
+    idx = jnp.arange(cfg.n_patches)[:, None] * cfg.stride + jnp.arange(cfg.patch_len)
+    return series[idx]                                       # (n_patches, patch_len)
+
+
+def _encode_channel(params, series, cfg: PatchTSTConfig):
+    h = C.dense(params["embed"], _patch(series, cfg))
+    h = h + C.sinusoidal_pe(cfg.n_patches, cfg.d)
+    sizes = jnp.ones((cfg.n_patches,), jnp.float32)
+    counts = merging.merge_schedule(cfg.n_patches, r=cfg.r, num_layers=cfg.layers,
+                                    q=cfg.q_min)
+    slot_maps = []
+    for li, lp in enumerate(params["enc"]):
+        t_l = h.shape[0]
+        bias = C.size_bias(sizes, t_l)
+        h = h + C.mha(lp["attn"], C.layernorm(lp["ln1"], h),
+                      C.layernorm(lp["ln1"], h), heads=cfg.heads, bias=bias)
+        r_l = counts[li] - counts[li + 1]
+        if r_l > 0:
+            k_l = cfg.k if cfg.k > 0 else max(1, h.shape[0] // 2)
+            res = merging.merge_fixed_r(h, sizes, r=r_l, k=k_l, metric=cfg.metric)
+            h, sizes = res.x, res.sizes
+            slot_maps.append(res.slot_map)
+        h = h + C.mlp(lp["mlp"], C.layernorm(lp["ln2"], h))
+    # Unmerge to the full patch count so the flatten head is size-stable.
+    if slot_maps:
+        h = merging.unmerge(h, merging.compose_slot_maps(slot_maps))
+    return h.reshape(-1)
+
+
+def forward(params, x, cfg: PatchTSTConfig):
+    """x: (m, n_vars) -> (p, n_vars), channel-independent shared weights.
+
+    Per-instance normalization (RevIN-style) as in PatchTST.
+    """
+    mu = jnp.mean(x, 0, keepdims=True)
+    sigma = jnp.std(x, 0, keepdims=True) + 1e-5
+    xs = ((x - mu) / sigma).T                                # (n_vars, m)
+    flat = jax.vmap(lambda s: _encode_channel(params, s, cfg))(xs)
+    y = jax.vmap(lambda f: C.dense(params["head"], f))(flat) # (n_vars, p)
+    return y.T * sigma + mu
+
+
+def forward_batch(params, xb, cfg: PatchTSTConfig):
+    return jax.vmap(lambda x: forward(params, x, cfg))(xb)

@@ -1,0 +1,241 @@
+"""Encoder–decoder time series forecaster with token merging (table 1 suite).
+
+One parametric model covers the five table-1 architectures through the
+attention flavour + decomposition wiring in ``variants.py``:
+
+    arch in {transformer, informer, autoformer, fedformer, nonstationary}
+
+Token merging placement follows §4 "Applying local merging" exactly:
+
+* encoder: local merging with a **global pool** (k = t_l/2) between
+  self-attention and the MLP of every layer;
+* decoder: **causal** merging (k = 1) between self-attention and
+  cross-attention, with a final unmerge (clone-to-neighbours) so the
+  projection head sees the full horizon;
+* auxiliary per-token tensors (the non-stationary ``delta``) are merged
+  with the same correspondences (§C "Applying token merging").
+
+Shapes are fully static: the per-layer token counts come from
+``merging.merge_schedule`` so each (arch, L, r) pair is one AOT artifact.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import jax
+import jax.numpy as jnp
+
+from .. import merging
+from . import common as C
+from . import variants as V
+
+
+@dataclass(frozen=True)
+class ForecastConfig:
+    arch: str = "transformer"
+    n_vars: int = 7
+    m: int = 192              # input length (paper table 6)
+    p: int = 96               # prediction horizon
+    label_len: int = 48
+    d: int = 64
+    heads: int = 8
+    enc_layers: int = 2
+    dec_layers: int = 1
+    mlp_hidden: int = 128
+    # token merging
+    r_enc: int = 0            # merges per encoder layer
+    k_enc: int = 0            # 0 => global pool (k = t_l / 2)
+    r_dec: int = 0            # merges per decoder layer (causal, k = 1)
+    q_min: int = 4            # minimum remaining tokens (§3)
+    metric: str = "cos"
+    prune: bool = False       # appendix E.2 baseline: prune instead of merge
+    use_pos_embed: bool = True  # appendix E.6 ablation
+    probe: str = "none"       # none | tokens (layer-1 reps) | trace (slot maps)
+
+    @property
+    def dec_len(self):
+        return self.label_len + self.p
+
+
+def enc_token_counts(cfg: ForecastConfig):
+    return merging.merge_schedule(
+        cfg.m, r=cfg.r_enc, num_layers=cfg.enc_layers, q=cfg.q_min
+    )
+
+
+def dec_token_counts(cfg: ForecastConfig):
+    return merging.merge_schedule(
+        cfg.dec_len, r=cfg.r_dec, num_layers=cfg.dec_layers, q=cfg.q_min
+    )
+
+
+# ---------------------------------------------------------------------------
+# Init
+
+
+def init_params(key, cfg: ForecastConfig):
+    ks = iter(jax.random.split(key, 16 + 8 * (cfg.enc_layers + cfg.dec_layers)))
+    p = {
+        "embed_enc": C.dense_init(next(ks), cfg.n_vars, cfg.d),
+        "embed_dec": C.dense_init(next(ks), cfg.n_vars, cfg.d),
+        "head": C.dense_init(next(ks), cfg.d, cfg.n_vars),
+        "enc": [],
+        "dec": [],
+    }
+    for _ in range(cfg.enc_layers):
+        p["enc"].append(
+            {
+                "attn": V.attention_init(next(ks), cfg.d, cfg.heads, arch=cfg.arch),
+                "ln1": C.layernorm_init(cfg.d),
+                "ln2": C.layernorm_init(cfg.d),
+                "mlp": C.mlp_init(next(ks), cfg.d, cfg.mlp_hidden),
+            }
+        )
+    for _ in range(cfg.dec_layers):
+        p["dec"].append(
+            {
+                "self_attn": V.attention_init(next(ks), cfg.d, cfg.heads, arch=cfg.arch),
+                "cross_attn": C.mha_init(next(ks), cfg.d, cfg.heads),
+                "ln1": C.layernorm_init(cfg.d),
+                "ln2": C.layernorm_init(cfg.d),
+                "ln3": C.layernorm_init(cfg.d),
+                "mlp": C.mlp_init(next(ks), cfg.d, cfg.mlp_hidden),
+            }
+        )
+    if cfg.arch == "nonstationary":
+        p["tau_mlp"] = C.dense_init(next(ks), 2 * cfg.n_vars, 1)
+        p["delta_mlp"] = C.dense_init(next(ks), cfg.n_vars, 1)
+    if cfg.arch in V.DECOMPOSED:
+        p["trend_head"] = C.dense_init(next(ks), cfg.n_vars, cfg.n_vars)
+    return C.strip_static(p)
+
+
+# ---------------------------------------------------------------------------
+# Merging helpers
+
+
+def _merge_step(x, sizes, aux, *, r, k, cfg):
+    """Merge tokens + auxiliary per-token tensors with shared
+    correspondences.  Returns (x, sizes, aux, slot_map)."""
+    if r <= 0:
+        return x, sizes, aux, jnp.arange(x.shape[0])
+    op = merging.prune_fixed_r if cfg.prune else merging.merge_fixed_r
+    res = op(x, sizes, r=r, k=k, metric=cfg.metric)
+    new_aux = {}
+    t_new = res.x.shape[0]
+    w = sizes
+    den = jax.ops.segment_sum(w, res.slot_map, num_segments=t_new)
+    for name, v in aux.items():
+        num = jax.ops.segment_sum(v * w, res.slot_map, num_segments=t_new)
+        new_aux[name] = num / den
+    return res.x, res.sizes, new_aux, res.slot_map
+
+
+def _attend(p, cfg, xq, xkv, *, bias, tau=None, delta=None):
+    if cfg.arch == "nonstationary" and tau is not None:
+        return V.destationary_attention(
+            p, xq, xkv, heads=cfg.heads, bias=bias, tau=tau, delta=delta
+        )
+    return V.ATTENTION[cfg.arch](p, xq, xkv, heads=cfg.heads, bias=bias)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+
+
+def forward(params, x, cfg: ForecastConfig):
+    """x: (m, n_vars) -> forecast (p, n_vars) [+ probes]."""
+    m, n = x.shape
+    assert (m, n) == (cfg.m, cfg.n_vars)
+
+    # --- non-stationary stationarization -----------------------------------
+    tau = delta_raw = None
+    if cfg.arch == "nonstationary":
+        mu = jnp.mean(x, 0, keepdims=True)
+        sigma = jnp.std(x, 0, keepdims=True) + 1e-5
+        x = (x - mu) / sigma
+        stats = jnp.concatenate([mu[0], sigma[0]])
+        tau = jnp.exp(C.dense(params["tau_mlp"], stats))[0]
+        # per-token delta from the raw-ish tokens (merged alongside below)
+        delta_raw = C.dense(params["delta_mlp"], x)[:, 0]      # (m,)
+
+    # --- encoder ------------------------------------------------------------
+    h = C.dense(params["embed_enc"], x)
+    if cfg.use_pos_embed:
+        h = h + C.sinusoidal_pe(cfg.m, cfg.d)
+    sizes = jnp.ones((cfg.m,), jnp.float32)
+    aux = {} if delta_raw is None else {"delta": delta_raw}
+    counts = enc_token_counts(cfg)
+    probes = {}
+    enc_maps = []
+    for li, lp in enumerate(params["enc"]):
+        t_l = h.shape[0]
+        bias = C.size_bias(sizes, t_l)
+        d_l = aux.get("delta")
+        ha = _attend(lp["attn"], cfg, C.layernorm(lp["ln1"], h), C.layernorm(lp["ln1"], h),
+                     bias=bias, tau=tau, delta=d_l)
+        h = h + ha
+        if cfg.arch in V.DECOMPOSED:
+            h, _ = C.series_decomp(h)
+        if li == 0 and cfg.probe == "tokens":
+            probes["tokens_l1"] = h
+        r_l = counts[li] - counts[li + 1]
+        k_l = cfg.k_enc if cfg.k_enc > 0 else max(1, h.shape[0] // 2)
+        h, sizes, aux, smap = _merge_step(h, sizes, aux, r=r_l, k=k_l, cfg=cfg)
+        enc_maps.append(smap)
+        h = h + C.mlp(lp["mlp"], C.layernorm(lp["ln2"], h))
+        if cfg.arch in V.DECOMPOSED:
+            h, _ = C.series_decomp(h)
+    enc_out, enc_sizes = h, sizes
+
+    # --- decoder ------------------------------------------------------------
+    x_dec = jnp.concatenate(
+        [x[cfg.m - cfg.label_len:], jnp.zeros((cfg.p, n), x.dtype)], 0
+    )
+    g = C.dense(params["embed_dec"], x_dec)
+    if cfg.use_pos_embed:
+        g = g + C.sinusoidal_pe(cfg.dec_len, cfg.d)
+    dsizes = jnp.ones((cfg.dec_len,), jnp.float32)
+    dcounts = dec_token_counts(cfg)
+    dec_maps = []
+    trend_acc = jnp.zeros((cfg.dec_len, n), jnp.float32)
+    for li, lp in enumerate(params["dec"]):
+        t_l = g.shape[0]
+        bias = C.causal_mask(t_l) + C.size_bias(dsizes, t_l)
+        ga = C.mha(lp["self_attn"], C.layernorm(lp["ln1"], g),
+                   C.layernorm(lp["ln1"], g), heads=cfg.heads, bias=bias)
+        g = g + ga
+        r_l = dcounts[li] - dcounts[li + 1]
+        g, dsizes, _, smap = _merge_step(g, dsizes, {}, r=r_l, k=1, cfg=cfg)
+        dec_maps.append(smap)
+        cbias = C.size_bias(enc_sizes, g.shape[0])
+        g = g + C.mha(lp["cross_attn"], C.layernorm(lp["ln2"], g), enc_out,
+                      heads=cfg.heads, bias=cbias)
+        g = g + C.mlp(lp["mlp"], C.layernorm(lp["ln3"], g))
+        if cfg.arch in V.DECOMPOSED:
+            g, tr = C.series_decomp(g)
+            trend_acc = trend_acc + merging.unmerge(
+                C.dense(params["head"], tr), merging.compose_slot_maps(dec_maps)
+            )
+
+    # --- unmerge + head ------------------------------------------------------
+    if dec_maps:
+        g = merging.unmerge(g, merging.compose_slot_maps(dec_maps))
+    y = C.dense(params["head"], g)
+    if cfg.arch in V.DECOMPOSED:
+        y = y + trend_acc
+    y = y[-cfg.p:]
+    if cfg.arch == "nonstationary":
+        y = y * sigma + mu
+
+    if cfg.probe == "tokens":
+        return y, probes["tokens_l1"]
+    if cfg.probe == "trace":
+        return y, merging.compose_slot_maps(enc_maps)
+    return y
+
+
+def forward_batch(params, xb, cfg: ForecastConfig):
+    """(batch, m, n) -> (batch, p, n) — the AOT entrypoint."""
+    return jax.vmap(lambda x: forward(params, x, cfg))(xb)

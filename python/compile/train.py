@@ -1,0 +1,119 @@
+"""Training-step graphs (fwd + bwd + Adam), lowered so Rust drives training.
+
+Each model family gets a ``train_step(params, m, v, step, batch...) ->
+(params', m', v', loss)`` pure function.  The optimiser is Adam
+(Kingma & Ba 2015 — paper table 6) implemented inline so the whole update
+is one HLO module; Rust feeds the flattened state back in every step.
+
+Training *with* token merging (§5.2) is the same graph with a merging
+config on the model — merging is differentiable (segment-sum averaging),
+so gradients flow through merged tokens.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_update(params, grads, m, v, step, *, lr=1e-3, b1=0.9, b2=0.999,
+                eps=1e-8, decay=0.97, decay_every=100.0):
+    """One Adam step with exponential LR decay (gamma=0.97, table 6)."""
+    step = step + 1.0
+    lr_t = lr * decay ** (step / decay_every)
+    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g, v, grads)
+    mhat = jax.tree.map(lambda mm: mm / (1 - b1**step), m)
+    vhat = jax.tree.map(lambda vv: vv / (1 - b2**step), v)
+    params = jax.tree.map(
+        lambda p, mh, vh: p - lr_t * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return params, m, v
+
+
+def mse_loss(pred, target):
+    return jnp.mean((pred - target) ** 2)
+
+
+def ce_loss(logits, ids):
+    logp = jax.nn.log_softmax(logits, -1)
+    return -jnp.mean(jnp.take_along_axis(logp, ids[..., None], -1))
+
+
+def make_forecast_train_step(forward_batch, cfg, *, lr=1e-3):
+    """Forecaster train step: batch (x (b,m,n), y (b,p,n)) -> MSE."""
+
+    def loss_fn(params, xb, yb):
+        return mse_loss(forward_batch(params, xb, cfg), yb)
+
+    def train_step(params, m, v, step, xb, yb):
+        loss, grads = jax.value_and_grad(loss_fn)(params, xb, yb)
+        params, m, v = adam_update(params, grads, m, v, step, lr=lr)
+        return params, m, v, loss
+
+    return train_step
+
+
+def make_chronos_train_step(forward_batch, tokenize, cfg, *, lr=1e-3):
+    """Chronos train step: context (b, m) + target values (b, p); the
+    target is quantized with the *context* scale inside the graph
+    (the Chronos recipe) and trained with cross-entropy."""
+    from .models import chronos as Ch
+
+    def loss_fn(params, xb, yb):
+        out = forward_batch(params, xb, cfg)
+        logits = out[0]
+
+        def quant(x, y):
+            _, scale = tokenize(x, cfg)
+            ys = jnp.clip(y / scale, -cfg.clip, cfg.clip)
+            ids = jnp.round((ys + cfg.clip) / (2 * cfg.clip) * (cfg.vocab - 1))
+            return ids.astype(jnp.int32)
+
+        ids = jax.vmap(quant)(xb, yb)
+        return ce_loss(logits, ids)
+
+    def train_step(params, m, v, step, xb, yb):
+        loss, grads = jax.value_and_grad(loss_fn)(params, xb, yb)
+        params, m, v = adam_update(params, grads, m, v, step, lr=lr)
+        return params, m, v, loss
+
+    return train_step
+
+
+def make_classify_train_step(forward_batch, cfg, *, lr=1e-3):
+    """Genomic classifier train step: ids (b, m) int32, labels (b,) int32."""
+
+    def loss_fn(params, xb, yb):
+        return ce_loss(forward_batch(params, xb, cfg), yb)
+
+    def train_step(params, m, v, step, xb, yb):
+        loss, grads = jax.value_and_grad(loss_fn)(params, xb, yb)
+        params, m, v = adam_update(params, grads, m, v, step, lr=lr)
+        return params, m, v, loss
+
+    return train_step
+
+
+def make_chunked(step_fn, chunk):
+    """Scan ``chunk`` optimiser steps inside one graph.
+
+    PJRT 0.5.1 hands back the root tuple as a single buffer, forcing a full
+    host round-trip of the parameters per execution; scanning K steps per
+    execution amortises that mandatory transfer K-fold (EXPERIMENTS.md
+    §Perf).  Batches arrive stacked: xs (K, b, ...), ys (K, b, ...);
+    returns (params, m, v, losses (K,)).
+    """
+
+    def chunk_step(params, m, v, step0, xs, ys):
+        def body(carry, xy):
+            params, m, v, s = carry
+            x, y = xy
+            params, m, v, loss = step_fn(params, m, v, s, x, y)
+            return (params, m, v, s + 1.0), loss
+
+        (params, m, v, _), losses = jax.lax.scan(
+            body, (params, m, v, step0), (xs, ys))
+        return params, m, v, losses
+
+    return chunk_step

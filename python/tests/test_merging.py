@@ -1,0 +1,133 @@
+"""L2 merging-op invariants (mirror of the Rust property suite, so the two
+implementations are pinned to the same semantics)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import merging
+
+settings.register_profile("merging", max_examples=20, deadline=None)
+settings.load_profile("merging")
+
+
+def rand(seed, *shape):
+    return np.random.default_rng(seed).standard_normal(shape).astype(np.float32)
+
+
+@given(
+    t=st.integers(6, 64),
+    d=st.integers(1, 16),
+    frac=st.floats(0.1, 1.0),
+    k=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_merge_mass_conservation(t, d, frac, k, seed):
+    t2 = (t - t % 2) // 2
+    r = max(1, int(frac * t2))
+    k = min(k, t2)
+    x = jnp.asarray(rand(seed, t, d))
+    sizes = jnp.ones((t,))
+    res = merging.merge_fixed_r(x, sizes, r=r, k=k)
+    assert res.x.shape == (t - r, d)
+    np.testing.assert_allclose(float(res.sizes.sum()), t, rtol=1e-5)
+    got = np.asarray(res.x * res.sizes[:, None]).sum(0)
+    np.testing.assert_allclose(got, np.asarray(x).sum(0), atol=1e-3)
+
+
+@given(t=st.integers(6, 48), d=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_causal_k1_adjacency(t, d, seed):
+    t2 = (t - t % 2) // 2
+    r = max(1, t2 // 2)
+    x = jnp.asarray(rand(seed, t, d))
+    res = merging.merge_causal(x, jnp.ones((t,)), r=r)
+    sm = np.asarray(res.slot_map)
+    for s in range(t - r):
+        srcs = np.where(sm == s)[0]
+        assert srcs.max() - srcs.min() <= 1, f"slot {s} spans {srcs}"
+
+
+def test_merge_prefers_most_similar():
+    # two identical token pairs + dissimilar fillers: r=2 must merge the
+    # identical ones
+    d = 4
+    base = rand(0, 8, d) * 5
+    x = base.copy()
+    x[1] = x[0]          # pair (0, 1) identical (A0 with B0)
+    x[3] = x[2]          # pair (2, 3) identical (A1 with B1)
+    res = merging.merge_fixed_r(jnp.asarray(x), jnp.ones((8,)), r=2, k=1)
+    sm = np.asarray(res.slot_map)
+    assert sm[0] == sm[1]
+    assert sm[2] == sm[3]
+
+
+def test_prune_keeps_original_rows():
+    x = rand(1, 20, 6)
+    res = merging.prune_fixed_r(jnp.asarray(x), jnp.ones((20,)), r=5, k=3)
+    rows = {tuple(np.round(r, 5)) for r in x}
+    for row in np.asarray(res.x):
+        assert tuple(np.round(row, 5)) in rows
+
+
+def test_unmerge_and_compose():
+    x = rand(2, 24, 4)
+    s1 = merging.merge_fixed_r(jnp.asarray(x), jnp.ones((24,)), r=4, k=2)
+    s2 = merging.merge_fixed_r(s1.x, s1.sizes, r=4, k=2)
+    composed = merging.compose_slot_maps([s1.slot_map, s2.slot_map])
+    assert composed.shape == (24,)
+    um = merging.unmerge(s2.x, composed)
+    assert um.shape == (24, 4)
+    # every reconstructed row equals the merged token its position maps to
+    for p in range(24):
+        np.testing.assert_array_equal(np.asarray(um[p]),
+                                      np.asarray(s2.x[int(composed[p])]))
+
+
+@given(th=st.floats(-1.0, 1.0), seed=st.integers(0, 2**31 - 1))
+def test_dynamic_effective_count_bounds(th, seed):
+    x = jnp.asarray(rand(seed, 32, 8))
+    out, eff = merging.dynamic_mask_merge(x, threshold=th, k=1)
+    assert out.shape == x.shape
+    assert 16 <= int(eff) <= 32
+
+
+def test_dynamic_extremes():
+    x = jnp.asarray(rand(3, 16, 4))
+    out, eff = merging.dynamic_mask_merge(x, threshold=2.0, k=1)
+    assert int(eff) == 16
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x))
+    _, eff = merging.dynamic_mask_merge(x, threshold=-2.0, k=1)
+    assert int(eff) == 8
+
+
+def test_metrics_give_valid_merges():
+    x = jnp.asarray(rand(4, 24, 8))
+    for metric in ["cos", "l1", "l2"]:
+        res = merging.merge_fixed_r(x, jnp.ones((24,)), r=4, k=3, metric=metric)
+        assert res.x.shape == (20, 8)
+        assert np.isfinite(np.asarray(res.x)).all()
+
+
+def test_rank_desc_exact_selection():
+    x = jnp.asarray(np.array([3.0, 1.0, 3.0, 2.0], np.float32))
+    rank = np.asarray(merging.rank_desc(x))
+    # ties broken by position: first 3.0 ranks 0, second ranks 1
+    assert list(rank) == [0, 3, 1, 2]
+
+
+def test_odd_length_excludes_most_recent():
+    # t odd: the last token must always map to its own slot (never merged)
+    x = rand(5, 21, 4)
+    res = merging.merge_fixed_r(jnp.asarray(x), jnp.ones((21,)), r=5, k=10)
+    sm = np.asarray(res.slot_map)
+    assert (sm == sm[-1]).sum() == 1
+    np.testing.assert_allclose(np.asarray(res.x[sm[-1]]), x[-1], atol=1e-6)
+
+
+def test_merge_schedule_matches_rust_reference():
+    # pinned vector also asserted on the Rust side
+    assert merging.merge_schedule(96, r=16, num_layers=4, q=4) == [96, 80, 64, 48, 32]
+    assert merging.merge_schedule(10, r=100, num_layers=4, q=4)[-1] == 4
+    s = merging.merge_schedule(513, r=64, num_layers=3, q=8)
+    assert s[0] == 513 and all(a >= b for a, b in zip(s, s[1:]))

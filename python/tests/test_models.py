@@ -1,0 +1,169 @@
+"""L2 model zoo: shapes, merging placement, causality, training dynamics."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import train as Tr
+from compile.kernels import dispatch
+from compile.models import chronos as Ch
+from compile.models import hyena as Hy
+from compile.models import mamba as Ma
+from compile.models import patchtst as Pt
+from compile.models import transformer as T
+
+RNG = np.random.default_rng(0)
+
+
+def fc_cfg(**kw):
+    base = dict(arch="transformer", enc_layers=2, m=96, p=48, label_len=24, n_vars=7)
+    base.update(kw)
+    return T.ForecastConfig(**base)
+
+
+@pytest.mark.parametrize("arch", ["transformer", "informer", "autoformer",
+                                  "fedformer", "nonstationary"])
+@pytest.mark.parametrize("r", [0, 16])
+def test_forecaster_shapes(arch, r):
+    cfg = fc_cfg(arch=arch, r_enc=r, r_dec=16 if r else 0)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(RNG.standard_normal((cfg.m, cfg.n_vars)), jnp.float32)
+    y = T.forward(params, x, cfg)
+    assert y.shape == (cfg.p, cfg.n_vars)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_forecaster_merging_reduces_tokens():
+    cfg = fc_cfg(r_enc=16)
+    counts = T.enc_token_counts(cfg)
+    assert counts == [96, 80, 64]
+    cfg = fc_cfg(r_dec=24)
+    assert T.dec_token_counts(cfg) == [72, 48]
+
+
+def test_probe_outputs():
+    cfg = fc_cfg(probe="tokens")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(RNG.standard_normal((cfg.m, cfg.n_vars)), jnp.float32)
+    y, tokens = T.forward(params, x, cfg)
+    assert y.shape == (cfg.p, cfg.n_vars)
+    assert tokens.shape == (cfg.m, cfg.d)
+
+
+def test_trace_probe_is_valid_slot_map():
+    cfg = fc_cfg(r_enc=16, probe="trace")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(RNG.standard_normal((cfg.m, cfg.n_vars)), jnp.float32)
+    _, trace = T.forward(params, x, cfg)
+    assert trace.shape == (cfg.m,)
+    final = T.enc_token_counts(cfg)[-1]
+    assert int(trace.max()) < final
+    assert int(trace.min()) >= 0
+
+
+def test_chronos_tokenizer_roundtrip():
+    cfg = Ch.ChronosConfig(m=64, vocab=128)
+    x = jnp.asarray(RNG.standard_normal((64,)) * 3, jnp.float32)
+    ids, scale = Ch.tokenize(x, cfg)
+    assert ids.shape == (64,)
+    assert int(ids.min()) >= 0 and int(ids.max()) < cfg.vocab
+    centers = Ch.bin_centers(cfg)
+    recon = centers[ids] * scale
+    # quantization error bounded by half a bin width * scale
+    bin_w = 2 * cfg.clip / (cfg.vocab - 1)
+    assert float(jnp.abs(recon - x).max()) <= bin_w * float(scale) * 0.51 + 1e-5
+
+
+def test_chronos_merging_shapes():
+    cfg = Ch.ChronosConfig(m=128, p=32, enc_layers=2, r_enc=32, r_dec=8, vocab=64)
+    params = Ch.init_params(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(RNG.standard_normal((cfg.m,)), jnp.float32)
+    logits, scale = Ch.forward(params, x, cfg)
+    assert logits.shape == (cfg.p, cfg.vocab)
+    assert float(scale) > 0
+
+
+def test_chronos_dynamic_effective_tokens():
+    cfg = Ch.ChronosConfig(m=128, p=32, enc_layers=2, vocab=64)
+    params = Ch.init_params(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(RNG.standard_normal((cfg.m,)), jnp.float32)
+    _, _, eff_hi = Ch.forward_dynamic(params, x, jnp.float32(2.0), cfg)
+    _, _, eff_lo = Ch.forward_dynamic(params, x, jnp.float32(-2.0), cfg)
+    assert int(eff_hi) == cfg.m * cfg.enc_layers
+    assert int(eff_lo) < int(eff_hi)
+
+
+@pytest.mark.parametrize("mod,cfg", [
+    (Hy, Hy.HyenaConfig(m=256, layers=2, r=32, k=1)),
+    (Ma, Ma.MambaConfig(m=256, layers=2, r=32, k=1, d_inner=64)),
+])
+def test_ssm_classifier_shapes(mod, cfg):
+    params = mod.init_params(jax.random.PRNGKey(0), cfg)
+    ids = jnp.asarray(RNG.integers(0, 5, (cfg.m,)), jnp.int32)
+    logits = mod.forward(params, ids, cfg)
+    assert logits.shape == (cfg.n_classes,)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_patchtst_channel_independence():
+    cfg = Pt.PatchTSTConfig(m=192, p=96, r=4)
+    params = Pt.init_params(jax.random.PRNGKey(0), cfg)
+    x = np.asarray(RNG.standard_normal((192, 7)), np.float32)
+    y1 = Pt.forward(params, jnp.asarray(x), cfg)
+    # perturbing channel 3 must not change channel 0's forecast
+    x2 = x.copy()
+    x2[:, 3] += 10.0
+    y2 = Pt.forward(params, jnp.asarray(x2), cfg)
+    np.testing.assert_allclose(np.asarray(y1[:, 0]), np.asarray(y2[:, 0]), atol=1e-5)
+    assert not np.allclose(np.asarray(y1[:, 3]), np.asarray(y2[:, 3]))
+
+
+def test_decoder_merging_preserves_output_length():
+    # unmerge must restore the full horizon regardless of r_dec
+    for r_dec in [0, 8, 24]:
+        cfg = fc_cfg(r_dec=r_dec)
+        params = T.init_params(jax.random.PRNGKey(1), cfg)
+        x = jnp.asarray(RNG.standard_normal((cfg.m, cfg.n_vars)), jnp.float32)
+        y = T.forward(params, x, cfg)
+        assert y.shape == (cfg.p, cfg.n_vars)
+
+
+def test_train_step_reduces_loss_all_families():
+    with dispatch.backend("jnp"):
+        # forecaster
+        cfg = fc_cfg(r_enc=8, r_dec=8)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        step = jax.jit(Tr.make_forecast_train_step(T.forward_batch, cfg, lr=3e-3))
+        xb = jnp.asarray(RNG.standard_normal((4, cfg.m, 7)), jnp.float32)
+        yb = jnp.asarray(RNG.standard_normal((4, cfg.p, 7)), jnp.float32) * 0.1
+        m = jax.tree.map(jnp.zeros_like, params)
+        v = jax.tree.map(jnp.zeros_like, params)
+        losses = []
+        for i in range(8):
+            params, m, v, loss = step(params, m, v, float(i), xb, yb)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.8, losses
+
+
+def test_merging_during_training_is_differentiable():
+    with dispatch.backend("jnp"):
+        cfg = fc_cfg(r_enc=16, r_dec=16)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        x = jnp.asarray(RNG.standard_normal((2, cfg.m, 7)), jnp.float32)
+        y = jnp.asarray(RNG.standard_normal((2, cfg.p, 7)), jnp.float32)
+        g = jax.grad(lambda p: Tr.mse_loss(T.forward_batch(p, x, cfg), y))(params)
+        flat = jax.tree_util.tree_leaves(g)
+        assert all(bool(jnp.isfinite(l).all()) for l in flat)
+        # at least one gradient is non-zero
+        assert any(float(jnp.abs(l).max()) > 0 for l in flat)
+
+
+def test_config_dataclasses_are_hashable_and_serializable():
+    for cfg in [fc_cfg(), Ch.ChronosConfig(), Hy.HyenaConfig(), Ma.MambaConfig(),
+                Pt.PatchTSTConfig()]:
+        d = dataclasses.asdict(cfg)
+        assert isinstance(d, dict) and d
+        hash(cfg)  # frozen dataclasses must hash (used as jit static args)

@@ -1,0 +1,147 @@
+"""Architecture-defining mechanisms of the table-1 variants + decoder-only.
+
+Each test pins the *behaviour that makes the architecture what it is*:
+ProbSparse sparsity, auto-correlation period detection, frequency-domain
+mixing, stationarization, causal decoder-only merging.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.models import common as C
+from compile.models import decoder_only as Do
+from compile.models import variants as V
+
+RNG = np.random.default_rng(0)
+
+
+def mk_attn(arch, d=32, heads=4, seed=0):
+    return V.attention_init(jax.random.PRNGKey(seed), d, heads, arch=arch)
+
+
+def test_probsparse_lazy_queries_emit_mean_value():
+    """Informer: non-active queries output mean(V) — different active sets
+    give identical outputs on lazy positions."""
+    d, heads, t = 32, 4, 64
+    p = mk_attn("informer")
+    x = jnp.asarray(RNG.standard_normal((t, d)), jnp.float32)
+    bias = jnp.zeros((t, t))
+    out = V.probsparse_attention(p, x, x, heads=heads, bias=bias)
+    full = V.vanilla_attention(p, x, x, heads=heads, bias=bias)
+    # ProbSparse must differ from full attention (some queries are lazy)
+    assert not np.allclose(np.asarray(out), np.asarray(full), atol=1e-4)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_autocorrelation_detects_period():
+    """Autoformer: for a periodic token sequence the top delay weight mass
+    concentrates on multiples of the period."""
+    d, heads, t, period = 16, 2, 64, 16
+    p = mk_attn("autoformer", d=d, heads=heads)
+    # token features repeat with the period exactly
+    base = RNG.standard_normal((period, d)).astype(np.float32)
+    x = jnp.asarray(np.tile(base, (t // period, 1)))
+    q = C.split_heads(C.dense(p["wq"], x), heads)
+    k = C.split_heads(C.dense(p["wk"], x), heads)
+    fq = jnp.fft.rfft(q, axis=1)
+    fk = jnp.fft.rfft(k, axis=1)
+    r = jnp.mean(jnp.fft.irfft(fq * jnp.conj(fk), n=t, axis=1), axis=-1)
+    r = np.asarray(r)  # (h, t) correlation per delay
+    # q and k use different projections, so the absolute peak offset is
+    # arbitrary — but with period-16 tokens the correlation itself must be
+    # 16-periodic: the top-4 delays are congruent mod the period.
+    for h in range(heads):
+        top4 = np.argsort(-r[h])[:4]
+        assert len({int(tau) % period for tau in top4}) == 1, f"head {h}: {top4}"
+
+
+def test_frequency_attention_bandlimits():
+    """FEDformer: output spectrum is supported only on the retained modes."""
+    d, heads, t = 16, 2, 64
+    p = mk_attn("fedformer", d=d, heads=heads)
+    x = jnp.asarray(RNG.standard_normal((t, d)), jnp.float32)
+    out = V.frequency_attention(p, x, x, heads=heads, bias=jnp.zeros((t, t)), modes=4)
+    # undo the output projection to inspect the mixed signal's spectrum
+    w = np.asarray(p["wo"]["w"])
+    y = (np.asarray(out) - np.asarray(p["wo"]["b"])) @ np.linalg.pinv(w)
+    spec = np.abs(np.fft.rfft(y, axis=0)).sum(-1)
+    kept = np.sort(np.argsort(spec)[-4:])
+    # beyond the 4 retained modes, energy ~ 0
+    others = np.delete(spec, kept)
+    assert others.max() < 1e-3 * max(spec.max(), 1e-9), (kept, others.max())
+
+
+def test_destationary_attention_uses_tau_delta():
+    d, heads, t = 32, 4, 48
+    p = mk_attn("nonstationary")
+    x = jnp.asarray(RNG.standard_normal((t, d)), jnp.float32)
+    bias = jnp.zeros((t, t))
+    out1 = V.destationary_attention(p, x, x, heads=heads, bias=bias,
+                                    tau=jnp.float32(1.0), delta=jnp.zeros((t,)))
+    out2 = V.destationary_attention(p, x, x, heads=heads, bias=bias,
+                                    tau=jnp.float32(3.0), delta=jnp.ones((t,)))
+    base = V.vanilla_attention(p, x, x, heads=heads, bias=bias)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(base), atol=1e-5)
+    assert not np.allclose(np.asarray(out1), np.asarray(out2), atol=1e-4)
+
+
+def test_decomposition_splits_trend():
+    t = np.linspace(0, 4, 128, dtype=np.float32)
+    x = jnp.asarray((t * 2.0 + np.sin(2 * np.pi * 8 * t)).reshape(-1, 1))
+    seasonal, trend = C.series_decomp(x, win=25)
+    # trend carries the slope, seasonal is ~zero-mean
+    assert abs(float(seasonal.mean())) < 0.1
+    assert float(trend[-1, 0] - trend[0, 0]) > 5.0
+
+
+def test_deconly_forward_and_merging():
+    cfg = Do.DecoderOnlyConfig(m=256, p=32, layers=2, r=2)
+    params = Do.init_params(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(RNG.standard_normal((cfg.m,)), jnp.float32)
+    y = Do.forward(params, x, cfg)
+    assert y.shape == (cfg.p,)
+    assert Do.token_counts(cfg) == [16, 14, 12]
+
+
+def test_deconly_causality_under_merging():
+    """Perturbing the earliest patch may change the forecast, but the
+    forecast from a context whose *future* patches are identical must be
+    identical when only pre-context values differ -> check merging does not
+    leak future info: perturbing the LAST patch must change the output
+    (it is the prediction token), while outputs are deterministic."""
+    cfg = Do.DecoderOnlyConfig(m=256, p=32, layers=2, r=2)
+    params = Do.init_params(jax.random.PRNGKey(1), cfg)
+    x = RNG.standard_normal((cfg.m,)).astype(np.float32)
+    y1 = np.asarray(Do.forward(params, jnp.asarray(x), cfg))
+    y2 = np.asarray(Do.forward(params, jnp.asarray(x), cfg))
+    np.testing.assert_array_equal(y1, y2)
+    x_pert = x.copy()
+    x_pert[-1] += 5.0
+    y3 = np.asarray(Do.forward(params, jnp.asarray(x_pert), cfg))
+    assert not np.allclose(y1, y3)
+
+
+def test_deconly_scale_equivariance():
+    """Mean-scaling makes the forecaster amplitude-equivariant."""
+    cfg = Do.DecoderOnlyConfig(m=256, p=32, layers=2, r=0)
+    params = Do.init_params(jax.random.PRNGKey(2), cfg)
+    x = RNG.standard_normal((cfg.m,)).astype(np.float32)
+    y1 = np.asarray(Do.forward(params, jnp.asarray(x), cfg))
+    y2 = np.asarray(Do.forward(params, jnp.asarray(x * 10.0), cfg))
+    np.testing.assert_allclose(y2, y1 * 10.0, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("arch", ["informer", "autoformer", "fedformer"])
+def test_variant_attention_is_finite_under_merged_sizes(arch):
+    """Every flavour must accept proportional-attention biases from merged
+    tokens (log sizes)."""
+    d, heads, t = 32, 4, 40
+    p = mk_attn(arch)
+    x = jnp.asarray(RNG.standard_normal((t, d)), jnp.float32)
+    sizes = jnp.asarray(RNG.integers(1, 6, (t,)), jnp.float32)
+    bias = C.size_bias(sizes, t)
+    out = V.ATTENTION[arch](p, x, x, heads=heads, bias=bias)
+    assert out.shape == (t, d)
+    assert np.isfinite(np.asarray(out)).all()

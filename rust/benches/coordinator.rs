@@ -1,0 +1,82 @@
+//! Coordinator benchmarks: batcher + policy hot paths and the served
+//! throughput of the full stack (policy -> batch -> PJRT -> dequantize).
+
+use std::time::Duration;
+
+use tomers::coordinator::{
+    self, policy::Variant, BatcherConfig, DynamicBatcher, ForecastRequest, MergePolicy,
+    ServerConfig,
+};
+use tomers::data;
+use tomers::util::{bench, Rng};
+
+fn main() {
+    println!("== bench: coordinator ==");
+
+    // policy decision cost (spectral entropy on one 512-context)
+    let policy = MergePolicy::uniform(
+        vec![
+            Variant { name: "chronos_s__r0".into(), r: 0 },
+            Variant { name: "chronos_s__r32".into(), r: 32 },
+            Variant { name: "chronos_s__r128".into(), r: 128 },
+        ],
+        3.0,
+        7.5,
+    );
+    let series = data::generate(data::profile("ettm1").unwrap(), 512, 7).column(0);
+    let (mean, std) = bench(10, 100, || {
+        let _ = policy.decide(&series);
+    });
+    println!("policy.decide(512)          {:>10.1}us {:>8.1}us", mean * 1e6, std * 1e6);
+
+    // batcher push/drain throughput
+    let (mean, _) = bench(3, 20, || {
+        let mut b: DynamicBatcher<u64> = DynamicBatcher::new(BatcherConfig {
+            capacity: 8,
+            max_wait: Duration::from_millis(1000),
+            max_queue: 100_000,
+        });
+        for i in 0..10_000u64 {
+            let _ = b.push(i);
+            if b.ready(std::time::Instant::now()) {
+                let _ = b.drain_batch();
+            }
+        }
+        while !b.is_empty() {
+            let _ = b.drain_batch();
+        }
+    });
+    println!("batcher 10k push+drain      {:>10.2}ms", mean * 1e3);
+
+    // full serving stack throughput (needs artifacts)
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("chronos_s__r0.hlo.txt").exists() {
+        println!("serving bench: SKIP (run `make artifacts`)");
+        return;
+    }
+    let handle = coordinator::server::serve(ServerConfig {
+        artifact_dir: dir,
+        policy,
+        max_wait: Duration::from_millis(10),
+        max_queue: 8192,
+    })
+    .expect("server");
+    let client = handle.client();
+    let mut rng = Rng::new(11);
+    let n = 160;
+    let t0 = std::time::Instant::now();
+    let pending: Vec<_> = (0..n as u64)
+        .map(|id| {
+            let profile = if id % 2 == 0 { "weather" } else { "ettm1" };
+            let s = data::generate(data::profile(profile).unwrap(), 512, rng.next_u64());
+            client.submit(ForecastRequest { id, context: s.column(0) }).unwrap()
+        })
+        .collect();
+    for rx in pending {
+        let _ = rx.recv();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("served {n} requests in {:.2}s ({:.1} req/s)", dt, n as f64 / dt);
+    println!("{}", client.metrics_report().unwrap());
+    handle.shutdown().unwrap();
+}

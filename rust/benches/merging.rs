@@ -1,0 +1,43 @@
+//! Microbenchmarks for the Rust merging reference: the eq. 2 complexity
+//! crossover (local k=1 linear vs global quadratic) measured in wall-clock,
+//! matching the paper's §5.4 overhead observation (local merging adds ~14%
+//! per Hyena block, global ~68%).
+//!
+//! Offline build: hand-rolled harness (no criterion crate available);
+//! run with `cargo bench --offline`.
+
+use tomers::merging::{merge_fixed_r, similarity_complexity};
+use tomers::util::{bench, Rng};
+
+fn main() {
+    println!("== bench: merging (eq. 2 complexity in wall-clock) ==");
+    println!(
+        "{:<26} {:>12} {:>12} {:>14}",
+        "case", "mean", "std", "sim-ops(eq.2)"
+    );
+    let mut rng = Rng::new(1);
+    let d = 64;
+    for &t in &[512usize, 2048, 8192, 16000] {
+        let tokens: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+        let sizes = vec![1.0f32; t];
+        let r = t / 4;
+        for &(label, k) in &[("local k=1", 1usize), ("band k=16", 16), ("global", t / 2)] {
+            // global merging at t=16000 is the quadratic case the paper
+            // calls out as unusable for long sequences — keep iters low.
+            let iters = if k > 1000 { 3 } else { 10 };
+            let (mean, std) = bench(1, iters, || {
+                let _ = merge_fixed_r(&tokens, &sizes, t, d, r, k);
+            });
+            println!(
+                "t={:<6} {:<16} {:>10.3}ms {:>10.3}ms {:>14}",
+                t,
+                label,
+                mean * 1e3,
+                std * 1e3,
+                similarity_complexity(t, k)
+            );
+        }
+    }
+    println!("\nexpected shape: local stays ~linear in t; global grows ~t^2 —");
+    println!("the gap is the paper's motivation for local merging in SSMs.");
+}

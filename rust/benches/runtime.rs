@@ -1,0 +1,79 @@
+//! End-to-end execution benchmarks over the compiled artifacts — the
+//! numbers behind every "Accel." column in the paper tables.  One row per
+//! (model family, merge variant): wall-clock per batch, derived
+//! throughput, and the acceleration against that family's r0 baseline.
+//!
+//! Requires `make artifacts`.  Gracefully skips missing variants.
+
+use tomers::runtime::Engine;
+use tomers::tensor::Tensor;
+use tomers::util::{bench, Rng};
+
+fn main() {
+    let Ok(engine) = Engine::new("artifacts") else {
+        eprintln!("SKIP: PJRT engine unavailable");
+        return;
+    };
+    if engine.available().map(|a| a.is_empty()).unwrap_or(true) {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    }
+    println!("== bench: end-to-end artifact execution ==");
+    println!(
+        "{:<28} {:>12} {:>14} {:>8}",
+        "artifact", "ms/batch", "samples/s", "accel"
+    );
+    let mut rng = Rng::new(3);
+
+    let families: &[(&str, &[&str])] = &[
+        ("fc_transformer_L2", &["r0", "r16", "r32"]),
+        ("fc_transformer_L4", &["r0", "r16", "r32"]),
+        ("fc_nonstationary_L4", &["r0", "r32"]),
+        ("chronos_s", &["r0", "r32", "r64", "r128"]),
+        ("chronos_m", &["r0", "r128"]),
+        ("chronos_l", &["r0", "r128"]),
+        ("hyena_L4", &["r0", "r128_k1", "r128_kglobal"]),
+        ("mamba_L4", &["r0", "r128_k1", "r128_kglobal"]),
+        ("patchtst_L2", &["r0", "r8"]),
+    ];
+    for (identity, tags) in families {
+        let mut base: Option<f64> = None;
+        for tag in *tags {
+            let name = format!("{identity}__{tag}");
+            let Ok(model) = engine.load_with_weights(&name) else {
+                println!("{name:<28} (missing)");
+                continue;
+            };
+            let spec = &model.manifest.inputs[0];
+            let input = if spec.dtype == "i32" {
+                Tensor::from_i32(
+                    &spec.shape,
+                    (0..spec.elements()).map(|_| rng.below(5) as i32).collect(),
+                )
+                .unwrap()
+            } else {
+                Tensor::from_f32(
+                    &spec.shape,
+                    (0..spec.elements()).map(|_| rng.normal() as f32).collect(),
+                )
+                .unwrap()
+            };
+            let (mean, _) = bench(2, 6, || {
+                model.execute(&[input.clone()]).unwrap();
+            });
+            let b = model.manifest.batch() as f64;
+            let accel = base.map(|t0: f64| t0 / mean).unwrap_or(1.0);
+            if base.is_none() {
+                base = Some(mean);
+            }
+            println!(
+                "{:<28} {:>10.2}ms {:>12.1}/s {:>7.2}x",
+                name,
+                mean * 1e3,
+                b / mean,
+                accel
+            );
+        }
+    }
+    println!("\nexpected shape (paper table 1/B.1): accel grows with depth L and r.");
+}

@@ -1,0 +1,58 @@
+//! Microbenchmarks for the signal substrate used on the serving hot path:
+//! the merge-policy planner calls `spectral_entropy` per request, so its
+//! cost must stay well below one model execution (~10ms+).
+
+use tomers::signal::{autocorrelation, gaussian_filter, power_spectrum, spectral_entropy, thd};
+use tomers::util::{bench, Rng};
+
+fn main() {
+    println!("== bench: signal substrate ==");
+    println!("{:<28} {:>12} {:>12}", "case", "mean", "std");
+    let mut rng = Rng::new(2);
+    for &n in &[512usize, 1000, 4096, 16000] {
+        let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let cases: Vec<(&str, Box<dyn Fn()>)> = vec![
+            ("power_spectrum", Box::new({
+                let x = x.clone();
+                move || {
+                    let _ = power_spectrum(&x);
+                }
+            })),
+            ("spectral_entropy", Box::new({
+                let x = x.clone();
+                move || {
+                    let _ = spectral_entropy(&x);
+                }
+            })),
+            ("thd(8)", Box::new({
+                let x = x.clone();
+                move || {
+                    let _ = thd(&x, 8);
+                }
+            })),
+            ("gaussian(sigma=2)", Box::new({
+                let x = x.clone();
+                move || {
+                    let _ = gaussian_filter(&x, 2.0);
+                }
+            })),
+            ("autocorr(64)", Box::new({
+                let x = x.clone();
+                move || {
+                    let _ = autocorrelation(&x, 64);
+                }
+            })),
+        ];
+        for (label, f) in cases {
+            let (mean, std) = bench(2, 10, || f());
+            println!(
+                "n={:<6} {:<20} {:>10.3}ms {:>10.3}ms",
+                n,
+                label,
+                mean * 1e3,
+                std * 1e3
+            );
+        }
+    }
+    println!("\nplanner budget: spectral_entropy at n=512 must be << 1ms.");
+}

@@ -1,0 +1,167 @@
+//! Ablation benches DESIGN.md calls out beyond the paper's own figures:
+//!
+//! * `ablation_k` — the locality constraint sweep: accel + MSE vs
+//!   k ∈ {1, 4, 16, 64, global} at fixed r (the paper's central design
+//!   parameter, eq. 1/2; §C fixes k=t/2 for encoders and k=1 for SSMs —
+//!   this sweep shows the whole trade-off curve).
+//! * `deconly` — causal merging in a decoder-only forecaster (the
+//!   architecture class the §3 causality claim targets).
+//! * `ablation_bound` — measured acceleration vs the analytic B.1 bound
+//!   across model depths.
+
+use anyhow::Result;
+
+use super::chronos_suite::{eval_chronos, train_mixture};
+use super::forecast_suite::dataset;
+use super::BenchCtx;
+use crate::data::Split;
+use crate::json::Json;
+use crate::merging::speedup_bound;
+use crate::runtime::{Engine, WeightStore};
+use crate::train;
+use crate::util::Rng;
+
+/// Locality-constraint sweep at fixed r = 64 on chronos-s.
+pub fn ablation_k(ctx: &BenchCtx) -> Result<()> {
+    let engine = Engine::new(&ctx.artifact_dir)?;
+    let ws = train_mixture(ctx, &engine, "s", ctx.train_steps(400))?;
+    let test = dataset("etth1", 6000, 512, 64, Split::Test, ctx.seed);
+    let n_eval = ctx.eval_windows(32);
+    let mut rows = Vec::new();
+    println!("{:>8} {:>8} {:>10} {:>16}", "k", "MSE", "thr/s", "sim-ops (eq.2)");
+    let mut cases = vec![
+        ("1".to_string(), "chronos_s__r64_k1".to_string(), 1usize),
+        ("4".to_string(), "chronos_s__r64_k4".to_string(), 4),
+        ("16".to_string(), "chronos_s__r64_k16".to_string(), 16),
+        ("64".to_string(), "chronos_s__r64_k64".to_string(), 64),
+        ("global".to_string(), "chronos_s__r64".to_string(), 256),
+    ];
+    cases.insert(0, ("none".to_string(), "chronos_s__r0".to_string(), 0));
+    for (label, name, k) in cases {
+        let Ok(mut model) = engine.load(&name) else {
+            println!("{label:>8} (artifact {name} missing — run aot)");
+            continue;
+        };
+        model.bind_weights(&ws)?;
+        let (mse, thr) = eval_chronos(&model, &test, n_eval)?;
+        let ops = if k == 0 { 0 } else { crate::merging::similarity_complexity(512, k) };
+        println!("{:>8} {:>8.3} {:>10.1} {:>16}", label, mse, thr, ops);
+        rows.push(Json::obj(vec![
+            ("k", Json::str(label)),
+            ("mse", Json::num(mse)),
+            ("throughput", Json::num(thr)),
+            ("sim_ops", Json::num(ops as f64)),
+        ]));
+    }
+    ctx.save_report("ablation_k", &Json::arr(rows))
+}
+
+/// Decoder-only forecaster with causal merging.
+pub fn deconly(ctx: &BenchCtx) -> Result<()> {
+    let engine = Engine::new(&ctx.artifact_dir)?;
+    let identity = "deconly_L4";
+    let cache = ctx.trained_weights_path(identity, "etth1");
+    let ws = if cache.exists() {
+        WeightStore::load(&cache)?
+    } else {
+        let mut model = engine.load(&format!("{identity}__train"))?;
+        let init =
+            WeightStore::load(&ctx.artifact_dir.join(format!("{identity}.weights.bin")))?;
+        model.bind_weights(&init)?;
+        let batch = model.manifest.batch();
+        let ds = dataset("etth1", 6000, 512, 64, Split::Train, ctx.seed);
+        let mut rng = Rng::new(ctx.seed ^ 0xDEC);
+        let report = train::train_loop(
+            &mut model,
+            &init,
+            ctx.train_steps(300),
+            |_| {
+                let idx: Vec<usize> = (0..batch).map(|_| rng.below(ds.len())).collect();
+                ds.batch_univariate(&idx)
+            },
+            |step, loss| {
+                if step % 50 == 0 {
+                    println!("  [deconly/etth1] step {step} mse {loss:.4}");
+                }
+                true
+            },
+        )?;
+        report.final_weights.save(&cache)?;
+        report.final_weights
+    };
+    let test = dataset("etth1", 6000, 512, 64, Split::Test, ctx.seed);
+    let n_eval = ctx.eval_windows(32);
+    let mut rows = Vec::new();
+    println!("{:>6} {:>8} {:>10}", "r", "MSE", "thr/s");
+    let mut base_thr = None;
+    for tag in ["r0", "r4", "r8"] {
+        let Ok(mut model) = engine.load(&format!("{identity}__{tag}")) else {
+            println!("{tag:>6} (artifact missing — run aot)");
+            continue;
+        };
+        model.bind_weights(&ws)?;
+        // decoder-only outputs plain values: reuse the forecast evaluator
+        // with univariate batches
+        let batch = model.manifest.batch();
+        let stride = (test.len() / n_eval.max(1)).max(1);
+        let (mut mse_sum, mut count, mut secs) = (0.0, 0usize, 0.0);
+        let mut idx = 0usize;
+        while count < n_eval && (idx + batch) * stride <= test.len() {
+            let indices: Vec<usize> =
+                (0..batch).map(|b| (idx + b) * stride % test.len()).collect();
+            let (x, y) = test.batch_univariate(&indices);
+            let t0 = std::time::Instant::now();
+            let out = model.execute(&[x])?;
+            secs += t0.elapsed().as_secs_f64();
+            mse_sum += crate::eval::mse(&out[0], &y)? * batch as f64;
+            count += batch;
+            idx += batch;
+        }
+        let (mse, thr) = (mse_sum / count as f64, count as f64 / secs);
+        base_thr.get_or_insert(thr);
+        println!("{:>6} {:>8.3} {:>10.1} ({:.2}x)", tag, mse, thr,
+                 thr / base_thr.unwrap());
+        rows.push(Json::obj(vec![
+            ("r", Json::str(tag)),
+            ("mse", Json::num(mse)),
+            ("throughput", Json::num(thr)),
+        ]));
+    }
+    ctx.save_report("deconly", &Json::arr(rows))
+}
+
+/// Measured acceleration vs the analytic appendix-B.1 bound per depth.
+pub fn ablation_bound(ctx: &BenchCtx) -> Result<()> {
+    let engine = Engine::new(&ctx.artifact_dir)?;
+    let mut rows = Vec::new();
+    println!("{:>10} {:>8} {:>12} {:>12}", "model", "L", "accel(r128)", "B.1 bound");
+    for (size, l) in [("s", 2usize), ("m", 4), ("l", 6)] {
+        let identity = format!("chronos_{size}");
+        let ws_path = ctx.artifact_dir.join(format!("{identity}.weights.bin"));
+        let ws = WeightStore::load(&ws_path)?;
+        let mut time_of = |tag: &str| -> Result<f64> {
+            let mut model = engine.load(&format!("{identity}__{tag}"))?;
+            model.bind_weights(&ws)?;
+            let spec = &model.manifest.inputs[0];
+            let mut rng = Rng::new(1);
+            let x = crate::tensor::Tensor::from_f32(
+                &spec.shape,
+                (0..spec.elements()).map(|_| rng.normal() as f32).collect(),
+            )?;
+            let (mean, _) = crate::util::bench(1, 4, || {
+                model.execute(&[x.clone()]).unwrap();
+            });
+            Ok(mean)
+        };
+        let accel = time_of("r0")? / time_of("r128")?;
+        let bound = speedup_bound(l as u32);
+        println!("{:>10} {:>8} {:>11.2}x {:>11.2}x", identity, l, accel, bound);
+        rows.push(Json::obj(vec![
+            ("model", Json::str(identity.clone())),
+            ("layers", Json::num(l as f64)),
+            ("accel", Json::num(accel)),
+            ("bound", Json::num(bound)),
+        ]));
+    }
+    ctx.save_report("ablation_bound", &Json::arr(rows))
+}

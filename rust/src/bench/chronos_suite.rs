@@ -1,0 +1,395 @@
+//! Chronos-family experiments (§5.3, §5.5, §6): the foundation-model suite.
+//!
+//! The chronos-like models are trained **once** on a mixed corpus of all
+//! five synthetic datasets (the foundation-model recipe) and then
+//! evaluated zero-shot per dataset — matching the paper's setting where
+//! merging is applied to a pretrained Chronos without fine-tuning.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::forecast_suite::dataset;
+use super::BenchCtx;
+use crate::cost;
+use crate::data::{self, Split};
+use crate::eval::{self, OperatingPoint};
+use crate::json::Json;
+use crate::runtime::{Engine, Model, WeightStore};
+use crate::signal;
+use crate::tensor::Tensor;
+use crate::train;
+use crate::util::Rng;
+
+pub const DATASETS: &[&str] = &["etth1", "ettm1", "weather", "electricity", "traffic"];
+pub const SIZES: &[&str] = &["s", "m", "l"];
+const M: usize = 512;
+const P: usize = 64;
+
+/// Train a chronos size on the mixed corpus (or load the cache).
+pub fn train_mixture(ctx: &BenchCtx, engine: &Engine, size: &str, steps: usize) -> Result<WeightStore> {
+    let identity = format!("chronos_{size}");
+    let cache = ctx.trained_weights_path(&identity, "mixture");
+    if cache.exists() {
+        return WeightStore::load(&cache);
+    }
+    let mut model = engine
+        .load(&format!("{identity}__train"))
+        .with_context(|| format!("train artifact for {identity}"))?;
+    let init = WeightStore::load(&ctx.artifact_dir.join(format!("{identity}.weights.bin")))?;
+    model.bind_weights(&init)?;
+    let batch = model.manifest.batch();
+    let sets: Vec<_> = DATASETS
+        .iter()
+        .map(|n| dataset(n, 6000, M, P, Split::Train, ctx.seed))
+        .collect();
+    let mut rng = Rng::new(ctx.seed ^ 0xC40);
+    let report = train::train_loop(
+        &mut model,
+        &init,
+        steps,
+        |_| {
+            let ds = &sets[rng.below(sets.len())];
+            let idx: Vec<usize> = (0..batch).map(|_| rng.below(ds.len())).collect();
+            ds.batch_univariate(&idx)
+        },
+        |step, loss| {
+            if step % 50 == 0 {
+                println!("  [chronos_{size}/mixture] step {step} ce {loss:.4}");
+            }
+            true
+        },
+    )?;
+    println!("  [chronos_{size}] trained {} steps in {:.1}s", report.steps, report.seconds);
+    report.final_weights.save(&cache)?;
+    Ok(report.final_weights)
+}
+
+/// Evaluate a chronos artifact on a dataset: (MSE of dequantized forecast,
+/// throughput).  Forecast values are compared in the standardized space.
+pub fn eval_chronos(model: &Model, ds: &data::WindowDataset, n_windows: usize) -> Result<(f64, f64)> {
+    let batch = model.manifest.batch();
+    let vocab = model.manifest.config_usize("vocab").unwrap();
+    let clip = model.manifest.config.get("clip").and_then(|c| c.as_f64().ok()).unwrap_or(15.0);
+    let m = model.manifest.inputs[0].shape[1];
+    anyhow::ensure!(ds.m == m, "dataset m {} != artifact m {}", ds.m, m);
+    let stride = (ds.len() / n_windows.max(1)).max(1);
+    let (mut mse_sum, mut count, mut elapsed) = (0.0, 0usize, 0.0);
+    let mut idx = 0usize;
+    while count < n_windows && (idx + batch) * stride <= ds.len() {
+        let indices: Vec<usize> = (0..batch).map(|b| (idx + b) * stride % ds.len()).collect();
+        let (x, y) = ds.batch_univariate(&indices);
+        let t0 = Instant::now();
+        let out = model.execute(&[x])?;
+        elapsed += t0.elapsed().as_secs_f64();
+        let pred = eval::chronos_dequantize(&out[0], &out[1], vocab, clip)?;
+        mse_sum += eval::mse(&pred, &y)? * batch as f64;
+        count += batch;
+        idx += batch;
+    }
+    anyhow::ensure!(count > 0, "no eval windows");
+    Ok((mse_sum / count as f64, count as f64 / elapsed))
+}
+
+/// Table 2 (+ figs. 3, 10–14): best-MSE and fastest selections per dataset.
+pub fn table2(ctx: &BenchCtx) -> Result<()> {
+    let engine = Engine::new(&ctx.artifact_dir)?;
+    let steps = ctx.train_steps(400);
+    let n_eval = ctx.eval_windows(64);
+    let mut weights = Vec::new();
+    for size in SIZES {
+        weights.push(train_mixture(ctx, &engine, size, steps)?);
+    }
+    let mut rows = Vec::new();
+    println!("{:<12} {:>8} | {:>8} {:>8} | {:>8} {:>8}", "dataset", "MSE",
+             "bestAcc", "bestd%", "fastAcc", "fastd%");
+    for ds_name in DATASETS {
+        let test = dataset(ds_name, 6000, M, P, Split::Test, ctx.seed);
+        let mut points = Vec::new();
+        for (size, ws) in SIZES.iter().zip(&weights) {
+            for r in [0usize, 32, 64, 128] {
+                let name = format!("chronos_{size}__r{r}");
+                let mut model = engine.load(&name)?;
+                model.bind_weights(ws)?;
+                let (mse, thr) = eval_chronos(&model, &test, n_eval)?;
+                points.push((size.to_string(), r, OperatingPoint { name, mse, throughput: thr }));
+            }
+        }
+        // reference: best *unmerged* model (paper: "choose the best model
+        // without token merging as reference")
+        let reference = points
+            .iter()
+            .filter(|(_, r, _)| *r == 0)
+            .map(|(_, _, p)| p.clone())
+            .min_by(|a, b| a.mse.partial_cmp(&b.mse).unwrap())
+            .unwrap();
+        let merged: Vec<OperatingPoint> =
+            points.iter().filter(|(_, r, _)| *r > 0).map(|(_, _, p)| p.clone()).collect();
+        let best = eval::select_best_mse(&reference, &merged);
+        let fastest = eval::select_fastest_rel(&reference, &merged, 0.03);
+        println!(
+            "{:<12} {:>8.3} | {:>7.2}x {:>+7.1}% | {:>7.2}x {:>+7.1}%",
+            ds_name, reference.mse,
+            best.accel(&reference), best.mse_delta_pct(&reference),
+            fastest.accel(&reference), fastest.mse_delta_pct(&reference),
+        );
+        rows.push(Json::obj(vec![
+            ("dataset", Json::str(*ds_name)),
+            ("mse_ref", Json::num(reference.mse)),
+            ("reference", Json::str(reference.name.clone())),
+            ("best_accel", Json::num(best.accel(&reference))),
+            ("best_mse_delta_pct", Json::num(best.mse_delta_pct(&reference))),
+            ("best_name", Json::str(best.name.clone())),
+            ("fastest_accel", Json::num(fastest.accel(&reference))),
+            ("fastest_mse_delta_pct", Json::num(fastest.mse_delta_pct(&reference))),
+            ("fastest_name", Json::str(fastest.name.clone())),
+            ("points", Json::arr(points.iter().map(|(s, r, p)| Json::obj(vec![
+                ("size", Json::str(s.clone())),
+                ("r", Json::num(*r as f64)),
+                ("mse", Json::num(p.mse)),
+                ("throughput", Json::num(p.throughput)),
+            ])).collect())),
+        ]));
+    }
+    ctx.save_report("table2", &Json::arr(rows))
+}
+
+/// Fig. 4: dynamic (threshold) merging vs fixed r — FLOPs vs MSE.
+pub fn fig4_dynamic(ctx: &BenchCtx) -> Result<()> {
+    let engine = Engine::new(&ctx.artifact_dir)?;
+    let ws = train_mixture(ctx, &engine, "s", ctx.train_steps(400))?;
+    let test = dataset("etth1", 6000, M, P, Split::Test, ctx.seed);
+    let n_eval = ctx.eval_windows(32);
+    let mut rows = Vec::new();
+
+    // manifest config for the FLOPs model
+    let probe = engine.load("chronos_s__r0")?;
+    let d = probe.manifest.config_usize("d").unwrap();
+    let hidden = probe.manifest.config_usize("mlp_hidden").unwrap();
+    let layers = probe.manifest.config_usize("enc_layers").unwrap();
+
+    println!("{:<12} {:>10} {:>12} {:>8}", "mode", "param", "GFLOPs/req", "MSE");
+    // dynamic: one artifact, threshold swept at runtime (batch sizes 1, 10)
+    for b in [1usize, 10] {
+        let name = format!("chronos_s__dyn_b{b}");
+        let mut model = engine.load(&name)?;
+        model.bind_weights(&ws)?;
+        let vocab = model.manifest.config_usize("vocab").unwrap();
+        for th in [0.5, 0.7, 0.8, 0.9, 0.95, 0.99] {
+            let (mut mse_sum, mut count) = (0.0, 0usize);
+            let mut eff_sum = 0.0f64;
+            let stride = (test.len() / n_eval.max(1)).max(1);
+            let mut idx = 0;
+            while count < n_eval && (idx + b) * stride <= test.len() {
+                let indices: Vec<usize> = (0..b).map(|i| (idx + i) * stride).collect();
+                let (x, y) = test.batch_univariate(&indices);
+                let out = model.execute(&[x, Tensor::scalar_f32(th as f32)])?;
+                let pred = eval::chronos_dequantize(&out[0], &out[1], vocab, 15.0)?;
+                mse_sum += eval::mse(&pred, &y)? * b as f64;
+                // out[2]: per-element effective token count summed over layers
+                let eff = out[2].i32s()?;
+                eff_sum += eff.iter().map(|&e| e as f64).sum::<f64>() / eff.len() as f64;
+                count += b;
+                idx += b;
+            }
+            let mean_eff = eff_sum / (count as f64 / b as f64);
+            // translate the summed effective counts into a per-layer schedule
+            let per_layer = mean_eff / layers as f64;
+            let tokens: Vec<usize> = std::iter::once(M)
+                .chain((0..layers).map(|_| per_layer as usize))
+                .collect();
+            let flops = cost::encoder_flops(cost::Arch::Vanilla, &tokens, d, hidden, false);
+            let mse = mse_sum / count as f64;
+            println!("{:<12} {:>10.2} {:>12.3} {:>8.3}", format!("dyn(b={b})"), th,
+                     flops as f64 / 1e9, mse);
+            rows.push(Json::obj(vec![
+                ("mode", Json::str(format!("dynamic_b{b}"))),
+                ("threshold", Json::num(th)),
+                ("gflops", Json::num(flops as f64 / 1e9)),
+                ("mse", Json::num(mse)),
+            ]));
+        }
+    }
+    // fixed r for comparison
+    for r in [0usize, 32, 64, 128] {
+        let name = format!("chronos_s__r{r}");
+        let mut model = engine.load(&name)?;
+        model.bind_weights(&ws)?;
+        let (mse, _) = eval_chronos(&model, &test, n_eval)?;
+        let tokens = model.manifest.enc_tokens().unwrap();
+        let flops = cost::encoder_flops(cost::Arch::Vanilla, &tokens, d, hidden, true);
+        println!("{:<12} {:>10} {:>12.3} {:>8.3}", "fixed", r, flops as f64 / 1e9, mse);
+        rows.push(Json::obj(vec![
+            ("mode", Json::str("fixed")),
+            ("r", Json::num(r as f64)),
+            ("gflops", Json::num(flops as f64 / 1e9)),
+            ("mse", Json::num(mse)),
+        ]));
+    }
+    ctx.save_report("fig4", &Json::arr(rows))
+}
+
+/// Fig. 6 / 17: Gaussian low-pass filtering vs token merging.
+pub fn fig6_gaussian(ctx: &BenchCtx) -> Result<()> {
+    let engine = Engine::new(&ctx.artifact_dir)?;
+    let ws = train_mixture(ctx, &engine, "s", ctx.train_steps(400))?;
+    let n_eval = ctx.eval_windows(32);
+    let mut rows = Vec::new();
+    println!("{:<12} {:<16} {:>8}", "dataset", "setting", "MSE");
+    let sets = if ctx.quick { vec!["etth1"] } else { vec!["etth1", "electricity"] };
+    for ds_name in sets {
+        let test = dataset(ds_name, 6000, M, P, Split::Test, ctx.seed);
+        // (a) Gaussian-filtered input, no merging
+        let mut model0 = engine.load("chronos_s__r0")?;
+        model0.bind_weights(&ws)?;
+        for sigma in [0.0, 1.0, 2.0, 4.0] {
+            let (mse, _) = eval_chronos_filtered(&model0, &test, n_eval, sigma)?;
+            println!("{:<12} {:<16} {:>8.3}", ds_name, format!("gauss s={sigma}"), mse);
+            rows.push(Json::obj(vec![
+                ("dataset", Json::str(ds_name)),
+                ("setting", Json::str(format!("gauss_{sigma}"))),
+                ("mse", Json::num(mse)),
+            ]));
+        }
+        // (b) token merging
+        for r in [32usize, 64, 128] {
+            let mut model = engine.load(&format!("chronos_s__r{r}"))?;
+            model.bind_weights(&ws)?;
+            let (mse, _) = eval_chronos(&model, &test, n_eval)?;
+            println!("{:<12} {:<16} {:>8.3}", ds_name, format!("merge r={r}"), mse);
+            rows.push(Json::obj(vec![
+                ("dataset", Json::str(ds_name)),
+                ("setting", Json::str(format!("merge_{r}"))),
+                ("mse", Json::num(mse)),
+            ]));
+        }
+        // (c) both combined (paper: "together leads to the best results")
+        let mut model = engine.load("chronos_s__r64")?;
+        model.bind_weights(&ws)?;
+        let (mse, _) = eval_chronos_filtered(&model, &test, n_eval, 2.0)?;
+        println!("{:<12} {:<16} {:>8.3}", ds_name, "gauss2+merge64", mse);
+        rows.push(Json::obj(vec![
+            ("dataset", Json::str(ds_name)),
+            ("setting", Json::str("gauss2_merge64")),
+            ("mse", Json::num(mse)),
+        ]));
+    }
+    ctx.save_report("fig6", &Json::arr(rows))
+}
+
+fn eval_chronos_filtered(
+    model: &Model,
+    ds: &data::WindowDataset,
+    n_windows: usize,
+    sigma: f64,
+) -> Result<(f64, f64)> {
+    let batch = model.manifest.batch();
+    let vocab = model.manifest.config_usize("vocab").unwrap();
+    let m = model.manifest.inputs[0].shape[1];
+    let stride = (ds.len() / n_windows.max(1)).max(1);
+    let (mut mse_sum, mut count, mut elapsed) = (0.0, 0usize, 0.0);
+    let mut idx = 0usize;
+    while count < n_windows && (idx + batch) * stride <= ds.len() {
+        let indices: Vec<usize> = (0..batch).map(|b| (idx + b) * stride % ds.len()).collect();
+        let (x, y) = ds.batch_univariate(&indices);
+        // low-pass filter each context row
+        let mut data = x.f32s()?.to_vec();
+        for b in 0..batch {
+            let row = signal::gaussian_filter(&data[b * m..(b + 1) * m], sigma);
+            data[b * m..(b + 1) * m].copy_from_slice(&row);
+        }
+        let xf = Tensor::from_f32(&[batch, m], data)?;
+        let t0 = Instant::now();
+        let out = model.execute(&[xf])?;
+        elapsed += t0.elapsed().as_secs_f64();
+        let pred = eval::chronos_dequantize(&out[0], &out[1], vocab, 15.0)?;
+        mse_sum += eval::mse(&pred, &y)? * batch as f64;
+        count += batch;
+        idx += batch;
+    }
+    Ok((mse_sum / count as f64, count as f64 / elapsed))
+}
+
+/// Fig. 7 / 20: input-length dependence.
+pub fn fig7_input_length(ctx: &BenchCtx) -> Result<()> {
+    let engine = Engine::new(&ctx.artifact_dir)?;
+    let ws = train_mixture(ctx, &engine, "s", ctx.train_steps(400))?;
+    let n_eval = ctx.eval_windows(32);
+    let mut rows = Vec::new();
+    println!("{:>6} {:>6} {:>8} {:>10}", "m", "r", "MSE", "thr/s");
+    for (m, rs) in [(128usize, [0usize, 16]), (256, [0, 32]), (512, [0, 64]), (1024, [0, 128])] {
+        for r in rs {
+            let name = if m == 512 {
+                format!("chronos_s__r{r}")
+            } else {
+                format!("chronos_s__m{m}_r{r}")
+            };
+            let Ok(mut model) = engine.load(&name) else {
+                println!("{:>6} {:>6}   (artifact {name} missing — run aot --full)", m, r);
+                continue;
+            };
+            model.bind_weights(&ws)?;
+            let test = dataset("etth1", 8000, m, P, Split::Test, ctx.seed);
+            let (mse, thr) = eval_chronos(&model, &test, n_eval)?;
+            println!("{:>6} {:>6} {:>8.3} {:>10.1}", m, r, mse, thr);
+            rows.push(Json::obj(vec![
+                ("m", Json::num(m as f64)),
+                ("r", Json::num(r as f64)),
+                ("mse", Json::num(mse)),
+                ("throughput", Json::num(thr)),
+            ]));
+        }
+    }
+    ctx.save_report("fig7", &Json::arr(rows))
+}
+
+/// Fig. 15: similarity-metric ablation (cosine vs L1 vs L2).
+pub fn fig15_metrics(ctx: &BenchCtx) -> Result<()> {
+    let engine = Engine::new(&ctx.artifact_dir)?;
+    let ws = train_mixture(ctx, &engine, "s", ctx.train_steps(400))?;
+    let test = dataset("etth1", 6000, M, P, Split::Test, ctx.seed);
+    let n_eval = ctx.eval_windows(32);
+    let mut rows = Vec::new();
+    println!("{:<8} {:>8} {:>10}", "metric", "MSE", "thr/s");
+    for (label, name) in [
+        ("cos", "chronos_s__r64".to_string()),
+        ("l1", "chronos_s__r64_l1".to_string()),
+        ("l2", "chronos_s__r64_l2".to_string()),
+    ] {
+        let Ok(mut model) = engine.load(&name) else {
+            println!("{label:<8} (artifact missing — run aot --full)");
+            continue;
+        };
+        model.bind_weights(&ws)?;
+        let (mse, thr) = eval_chronos(&model, &test, n_eval)?;
+        println!("{:<8} {:>8.3} {:>10.1}", label, mse, thr);
+        rows.push(Json::obj(vec![
+            ("metric", Json::str(label)),
+            ("mse", Json::num(mse)),
+            ("throughput", Json::num(thr)),
+        ]));
+    }
+    ctx.save_report("fig15", &Json::arr(rows))
+}
+
+/// Fig. 16: merging vs pruning.
+pub fn fig16_pruning(ctx: &BenchCtx) -> Result<()> {
+    let engine = Engine::new(&ctx.artifact_dir)?;
+    let ws = train_mixture(ctx, &engine, "s", ctx.train_steps(400))?;
+    let test = dataset("etth1", 6000, M, P, Split::Test, ctx.seed);
+    let n_eval = ctx.eval_windows(32);
+    let mut rows = Vec::new();
+    println!("{:<8} {:>8}", "mode", "MSE");
+    for (label, name) in [
+        ("none", "chronos_s__r0"),
+        ("merge", "chronos_s__r64"),
+        ("prune", "chronos_s__r64_prune"),
+    ] {
+        let mut model = engine.load(name)?;
+        model.bind_weights(&ws)?;
+        let (mse, _) = eval_chronos(&model, &test, n_eval)?;
+        println!("{:<8} {:>8.3}", label, mse);
+        rows.push(Json::obj(vec![("mode", Json::str(label)), ("mse", Json::num(mse))]));
+    }
+    ctx.save_report("fig16", &Json::arr(rows))
+}

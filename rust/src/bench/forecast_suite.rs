@@ -1,0 +1,330 @@
+//! Table-1 family experiments: the five time series transformers.
+//!
+//! * `table1` — local merging on pretrained models (paper table 1): per
+//!   (arch, depth, dataset), train the r0 model, then evaluate every merge
+//!   variant and apply the paper's §5.1 selection rule (fastest within
+//!   +0.01 val MSE; fall back to no merging).
+//! * `fig2` — training *with* merging.
+//! * `fig5_constant_mse` — the constant-MSE outcome on the vanilla
+//!   transformer.
+//! * `table8_patchtst` — merging over patch tokens.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::BenchCtx;
+use crate::data::{self, Split, WindowDataset};
+use crate::eval::{self, OperatingPoint};
+use crate::json::Json;
+use crate::runtime::{Engine, Model, WeightStore};
+use crate::tensor::Tensor;
+use crate::train;
+use crate::util::Rng;
+
+pub const ARCHS: &[&str] = &["transformer", "informer", "autoformer", "fedformer", "nonstationary"];
+
+/// Build the standardized window dataset for a named synthetic profile.
+pub fn dataset(name: &str, len: usize, m: usize, p: usize, split: Split, seed: u64) -> WindowDataset {
+    let prof = data::profile(name).unwrap_or_else(|| panic!("unknown dataset {name}"));
+    // the model suite is compiled for 7 variates; wider datasets expose a
+    // 7-variate view (see Series::take_vars)
+    let series = data::generate(prof, len, seed).take_vars(7);
+    let scaler = data::Scaler::fit(&series, Split::Train);
+    WindowDataset::new(scaler.transform(&series), m, p, split)
+}
+
+/// Train via the `__train` artifact or load the cached trained weights.
+pub fn train_or_load(
+    ctx: &BenchCtx,
+    engine: &Engine,
+    identity: &str,
+    train_artifact: &str,
+    ds_name: &str,
+    steps: usize,
+    univariate: bool,
+) -> Result<WeightStore> {
+    let cache = ctx.trained_weights_path(identity, ds_name);
+    if cache.exists() {
+        return WeightStore::load(&cache);
+    }
+    let mut model = engine
+        .load(train_artifact)
+        .with_context(|| format!("loading train artifact {train_artifact}"))?;
+    let init = WeightStore::load(&ctx.artifact_dir.join(format!("{identity}.weights.bin")))?;
+    model.bind_weights(&init)?;
+    let batch = model.manifest.batch();
+    let cfg_m = model.manifest.config_usize("m").unwrap();
+    let cfg_p = model.manifest.config_usize("p").unwrap();
+    let ds = dataset(ds_name, 6000, cfg_m, cfg_p, Split::Train, ctx.seed);
+    let mut rng = Rng::new(ctx.seed ^ 0xBA7C);
+    let mut es = train::EarlyStop::new(steps / 4);
+    let report = train::train_loop(
+        &mut model,
+        &init,
+        steps,
+        |_| {
+            let idx: Vec<usize> = (0..batch).map(|_| rng.below(ds.len())).collect();
+            if univariate {
+                ds.batch_univariate(&idx)
+            } else {
+                ds.batch(&idx)
+            }
+        },
+        |step, loss| {
+            if step % 50 == 0 {
+                println!("  [{identity}/{ds_name}] step {step} loss {loss:.4}");
+            }
+            es.keep_going(loss)
+        },
+    )?;
+    println!(
+        "  [{identity}/{ds_name}] trained {} steps in {:.1}s (final loss {:.4})",
+        report.steps,
+        report.seconds,
+        report.losses.last().copied().unwrap_or(f64::NAN)
+    );
+    report.final_weights.save(&cache)?;
+    Ok(report.final_weights)
+}
+
+/// Evaluate a forecast artifact over `n_windows` eval windows: (MSE,
+/// throughput samples/s).
+pub fn eval_forecast(
+    model: &Model,
+    ds: &WindowDataset,
+    n_windows: usize,
+) -> Result<(f64, f64)> {
+    let batch = model.manifest.batch();
+    let stride = (ds.len() / n_windows.max(1)).max(1);
+    let mut mse_sum = 0.0;
+    let mut count = 0usize;
+    let mut elapsed = 0.0;
+    let mut idx = 0usize;
+    while idx + batch <= ds.len() / stride && count < n_windows {
+        let indices: Vec<usize> = (0..batch).map(|b| (idx + b) * stride % ds.len()).collect();
+        let (x, y) = ds.batch(&indices);
+        let t0 = Instant::now();
+        let out = model.execute(&[x])?;
+        elapsed += t0.elapsed().as_secs_f64();
+        mse_sum += eval::mse(&out[0], &y)? * batch as f64;
+        count += batch;
+        idx += batch;
+    }
+    anyhow::ensure!(count > 0, "no eval windows");
+    Ok((mse_sum / count as f64, count as f64 / elapsed))
+}
+
+fn datasets_for(ctx: &BenchCtx) -> Vec<&'static str> {
+    if ctx.quick {
+        vec!["etth1", "electricity"]
+    } else {
+        vec!["etth1", "ettm1", "weather", "electricity", "traffic"]
+    }
+}
+
+fn depths_for(ctx: &BenchCtx) -> Vec<usize> {
+    if ctx.quick { vec![2] } else { vec![2, 4] }
+}
+
+/// Paper table 1.
+pub fn table1(ctx: &BenchCtx) -> Result<()> {
+    let engine = Engine::new(&ctx.artifact_dir)?;
+    let steps = ctx.train_steps(300);
+    let n_eval = ctx.eval_windows(64);
+    let mut rows = Vec::new();
+    println!("{:<12} {:>2} {:<14} {:>8} {:>8} {:>8}  selected", "dataset", "L", "arch", "MSE", "Accel", "MSEd%");
+    for ds_name in datasets_for(ctx) {
+        for &l in &depths_for(ctx) {
+            for &arch in ARCHS {
+                let identity = format!("fc_{arch}_L{l}");
+                let ws = train_or_load(
+                    ctx, &engine, &identity, &format!("{identity}__train"),
+                    ds_name, steps, false,
+                )?;
+                let val = dataset(ds_name, 6000, 192, 96, Split::Val, ctx.seed);
+                let test = dataset(ds_name, 6000, 192, 96, Split::Test, ctx.seed);
+                let mut val_pts = Vec::new();
+                let mut test_pts = Vec::new();
+                for tag in ["r0", "r16", "r32"] {
+                    let name = format!("{identity}__{tag}");
+                    let mut model = engine.load(&name)?;
+                    model.bind_weights(&ws)?;
+                    let (vm, vt) = eval_forecast(&model, &val, n_eval)?;
+                    let (tm, tt) = eval_forecast(&model, &test, n_eval)?;
+                    val_pts.push(OperatingPoint { name: tag.into(), mse: vm, throughput: vt });
+                    test_pts.push(OperatingPoint { name: tag.into(), mse: tm, throughput: tt });
+                }
+                // §5.1 rule on the validation set, report on test
+                let chosen = eval::select_fastest_within(&val_pts[0], &val_pts[1..], 0.01);
+                let test_ref = &test_pts[0];
+                let test_sel = test_pts.iter().find(|p| p.name == chosen.name).unwrap();
+                println!(
+                    "{:<12} {:>2} {:<14} {:>8.3} {:>7.2}x {:>+7.1}%  {}",
+                    ds_name, l, arch, test_ref.mse,
+                    test_sel.accel(test_ref),
+                    test_sel.mse_delta_pct(test_ref),
+                    chosen.name,
+                );
+                rows.push(Json::obj(vec![
+                    ("dataset", Json::str(ds_name)),
+                    ("layers", Json::num(l as f64)),
+                    ("arch", Json::str(arch)),
+                    ("mse_ref", Json::num(test_ref.mse)),
+                    ("accel", Json::num(test_sel.accel(test_ref))),
+                    ("mse_delta_pct", Json::num(test_sel.mse_delta_pct(test_ref))),
+                    ("selected", Json::str(chosen.name.clone())),
+                ]));
+            }
+        }
+    }
+    ctx.save_report("table1", &Json::arr(rows))
+}
+
+/// Fig. 2: training with token merging vs merging only at inference.
+pub fn fig2(ctx: &BenchCtx) -> Result<()> {
+    let engine = Engine::new(&ctx.artifact_dir)?;
+    let steps = ctx.train_steps(300);
+    let n_eval = ctx.eval_windows(48);
+    let ds_name = "traffic";
+    let mut rows = Vec::new();
+    println!("{:<14} {:<12} {:>8} {:>8}", "arch", "trained", "MSE", "Accel");
+    for arch in ["autoformer", "nonstationary"] {
+        let identity = format!("fc_{arch}_L2");
+        let test = dataset(ds_name, 6000, 192, 96, Split::Test, ctx.seed);
+        // (a) plain training, merging at inference
+        let ws_plain = train_or_load(ctx, &engine, &identity, &format!("{identity}__train"),
+                                     ds_name, steps, false)?;
+        // (b) training WITH merging (the __trainmerge artifact has r_train>0)
+        let cache = ctx.trained_weights_path(&identity, &format!("{ds_name}-merge"));
+        let ws_merge = if cache.exists() {
+            WeightStore::load(&cache)?
+        } else {
+            let ws = train_with_artifact(ctx, &engine, &identity,
+                                         &format!("{identity}__trainmerge"), ds_name, steps)?;
+            ws.save(&cache)?;
+            ws
+        };
+        let mut report = |label: &str, ws: &WeightStore| -> Result<()> {
+            let mut points = Vec::new();
+            for tag in ["r0", "r16", "r32"] {
+                let mut model = engine.load(&format!("{identity}__{tag}"))?;
+                model.bind_weights(ws)?;
+                let (mse, thr) = eval_forecast(&model, &test, n_eval)?;
+                points.push(OperatingPoint { name: tag.into(), mse, throughput: thr });
+            }
+            for p in &points {
+                println!("{:<14} {:<12} {:>8.3} {:>7.2}x ({})", arch, label, p.mse,
+                         p.accel(&points[0]), p.name);
+                rows.push(Json::obj(vec![
+                    ("arch", Json::str(arch)),
+                    ("trained", Json::str(label)),
+                    ("variant", Json::str(p.name.clone())),
+                    ("mse", Json::num(p.mse)),
+                    ("accel", Json::num(p.accel(&points[0]))),
+                ]));
+            }
+            Ok(())
+        };
+        report("plain", &ws_plain)?;
+        report("with-merge", &ws_merge)?;
+    }
+    ctx.save_report("fig2", &Json::arr(rows))
+}
+
+fn train_with_artifact(
+    ctx: &BenchCtx,
+    engine: &Engine,
+    identity: &str,
+    artifact: &str,
+    ds_name: &str,
+    steps: usize,
+) -> Result<WeightStore> {
+    let mut model = engine.load(artifact)?;
+    let init = WeightStore::load(&ctx.artifact_dir.join(format!("{identity}.weights.bin")))?;
+    model.bind_weights(&init)?;
+    let batch = model.manifest.batch();
+    let ds = dataset(ds_name, 6000, 192, 96, Split::Train, ctx.seed);
+    let mut rng = Rng::new(ctx.seed ^ 0x71A1);
+    let report = train::train_loop(
+        &mut model, &init, steps,
+        |_| {
+            let idx: Vec<usize> = (0..batch).map(|_| rng.below(ds.len())).collect();
+            ds.batch(&idx)
+        },
+        |step, loss| {
+            if step % 50 == 0 {
+                println!("  [{artifact}/{ds_name}] step {step} loss {loss:.4}");
+            }
+            true
+        },
+    )?;
+    Ok(report.final_weights)
+}
+
+/// Fig. 5: merge-rate sweep on the vanilla transformer — the constant-MSE
+/// outcome.
+pub fn fig5_constant_mse(ctx: &BenchCtx) -> Result<()> {
+    let engine = Engine::new(&ctx.artifact_dir)?;
+    let steps = ctx.train_steps(300);
+    let n_eval = ctx.eval_windows(48);
+    let identity = "fc_transformer_L2";
+    let ws = train_or_load(ctx, &engine, identity, "fc_transformer_L2__train",
+                           "etth1", steps, false)?;
+    let test = dataset("etth1", 6000, 192, 96, Split::Test, ctx.seed);
+    let mut rows = Vec::new();
+    println!("{:>6} {:>8} {:>10}", "r", "MSE", "thr/s");
+    for tag in ["r0", "r16", "r32"] {
+        let mut model = engine.load(&format!("{identity}__{tag}"))?;
+        model.bind_weights(&ws)?;
+        let (mse, thr) = eval_forecast(&model, &test, n_eval)?;
+        println!("{:>6} {:>8.3} {:>10.1}", tag, mse, thr);
+        rows.push(Json::obj(vec![
+            ("r", Json::str(tag)),
+            ("mse", Json::num(mse)),
+            ("throughput", Json::num(thr)),
+        ]));
+    }
+    ctx.save_report("fig5", &Json::arr(rows))
+}
+
+/// Table 8: PatchTST with merging over patch tokens.
+pub fn table8_patchtst(ctx: &BenchCtx) -> Result<()> {
+    let engine = Engine::new(&ctx.artifact_dir)?;
+    let steps = ctx.train_steps(300);
+    let n_eval = ctx.eval_windows(48);
+    let identity = "patchtst_L2";
+    let mut rows = Vec::new();
+    println!("{:<12} {:>8} {:>8} {:>8}", "dataset", "MSE", "Accel", "MSEd%");
+    for ds_name in datasets_for(ctx).into_iter().take(3) {
+        let ws = train_or_load(ctx, &engine, identity, "patchtst_L2__train",
+                               ds_name, steps, false)?;
+        let test = dataset(ds_name, 6000, 192, 96, Split::Test, ctx.seed);
+        let mut points = Vec::new();
+        for tag in ["r0", "r4", "r8"] {
+            let mut model = engine.load(&format!("{identity}__{tag}"))?;
+            model.bind_weights(&ws)?;
+            let (mse, thr) = eval_forecast(&model, &test, n_eval)?;
+            points.push(OperatingPoint { name: tag.into(), mse, throughput: thr });
+        }
+        let sel = eval::select_fastest_within(&points[0], &points[1..], 0.01);
+        println!("{:<12} {:>8.3} {:>7.2}x {:>+7.1}%", ds_name, points[0].mse,
+                 sel.accel(&points[0]), sel.mse_delta_pct(&points[0]));
+        rows.push(Json::obj(vec![
+            ("dataset", Json::str(ds_name)),
+            ("mse_ref", Json::num(points[0].mse)),
+            ("accel", Json::num(sel.accel(&points[0]))),
+            ("mse_delta_pct", Json::num(sel.mse_delta_pct(&points[0]))),
+        ]));
+    }
+    ctx.save_report("table8", &Json::arr(rows))
+}
+
+/// Tensor helper shared by the chronos suite.
+pub fn slice_batch(x: &Tensor, rows: usize) -> Result<Tensor> {
+    let shape = x.shape();
+    let inner: usize = shape[1..].iter().product();
+    let mut s = vec![rows];
+    s.extend_from_slice(&shape[1..]);
+    Tensor::from_f32(&s, x.f32s()?[..rows * inner].to_vec())
+}

@@ -1,0 +1,101 @@
+//! Benchmark harness: one runner per paper table/figure (DESIGN.md §5).
+//!
+//! Each runner trains (or loads cached trained weights), evaluates every
+//! merge variant on the synthetic counterpart of the paper's dataset, and
+//! prints the same rows/series the paper reports.  Absolute numbers differ
+//! (CPU PJRT vs A6000 — DESIGN.md §6); the *shape* — who wins, the
+//! monotonicities, the crossovers — is the reproduction target.
+//!
+//! Results are also appended as JSON under `reports/` for EXPERIMENTS.md.
+
+pub mod ablations;
+pub mod chronos_suite;
+pub mod forecast_suite;
+pub mod ssm_suite;
+pub mod studies;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::json::Json;
+
+/// Shared context for all experiment runners.
+pub struct BenchCtx {
+    pub artifact_dir: PathBuf,
+    pub report_dir: PathBuf,
+    /// quick mode: fewer train steps / eval windows (CI-friendly)
+    pub quick: bool,
+    pub seed: u64,
+}
+
+impl BenchCtx {
+    pub fn new(artifact_dir: impl Into<PathBuf>, quick: bool) -> Result<BenchCtx> {
+        let artifact_dir = artifact_dir.into();
+        let report_dir = artifact_dir
+            .parent()
+            .unwrap_or(Path::new("."))
+            .join("reports");
+        std::fs::create_dir_all(&report_dir)?;
+        Ok(BenchCtx { artifact_dir, report_dir, quick, seed: 2024 })
+    }
+
+    pub fn train_steps(&self, full: usize) -> usize {
+        if self.quick { (full / 10).max(20) } else { full }
+    }
+
+    pub fn eval_windows(&self, full: usize) -> usize {
+        if self.quick { (full / 8).max(8) } else { full }
+    }
+
+    pub fn save_report(&self, name: &str, value: &Json) -> Result<()> {
+        let path = self.report_dir.join(format!("{name}.json"));
+        std::fs::write(&path, value.to_string_pretty())?;
+        println!("report -> {}", path.display());
+        Ok(())
+    }
+
+    /// Cached trained weights live next to the artifacts.
+    pub fn trained_weights_path(&self, identity: &str, dataset: &str) -> PathBuf {
+        self.artifact_dir.join(format!("{identity}.{dataset}.trained.bin"))
+    }
+}
+
+/// Dispatch an experiment by its paper id.
+pub fn run(ctx: &BenchCtx, which: &str) -> Result<()> {
+    match which {
+        "table1" => forecast_suite::table1(ctx),
+        "fig2" => forecast_suite::fig2(ctx),
+        "table2" | "fig3" => chronos_suite::table2(ctx),
+        "fig4" => chronos_suite::fig4_dynamic(ctx),
+        "fig5" => forecast_suite::fig5_constant_mse(ctx),
+        "fig6" | "fig17" => chronos_suite::fig6_gaussian(ctx),
+        "table4" => studies::table4_dataset_properties(ctx),
+        "table5" => studies::table5_model_properties(ctx),
+        "fig7" | "fig20" => chronos_suite::fig7_input_length(ctx),
+        "fig8" => studies::fig8_merge_trace(ctx),
+        "fig9" => studies::fig9_subsample(ctx),
+        "fig15" => chronos_suite::fig15_metrics(ctx),
+        "fig16" => chronos_suite::fig16_pruning(ctx),
+        "fig19" => studies::fig19_redundancy(ctx),
+        "table3" => ssm_suite::table3(ctx),
+        "table8" => forecast_suite::table8_patchtst(ctx),
+        "ablation_k" => ablations::ablation_k(ctx),
+        "deconly" => ablations::deconly(ctx),
+        "ablation_bound" => ablations::ablation_bound(ctx),
+        "all" => {
+            for exp in [
+                "table1", "fig2", "table2", "fig4", "fig5", "fig6", "table4",
+                "table5", "fig7", "fig8", "fig9", "fig15", "fig16", "fig19",
+                "table3", "table8", "ablation_k", "deconly", "ablation_bound",
+            ] {
+                println!("\n================ {exp} ================");
+                if let Err(e) = run(ctx, exp) {
+                    eprintln!("{exp} FAILED: {e:#}");
+                }
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown experiment {other:?}; see DESIGN.md §5"),
+    }
+}

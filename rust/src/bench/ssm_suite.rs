@@ -1,0 +1,120 @@
+//! State-space experiments (§5.4, table 3): Hyena and Mamba on genomic
+//! classification, local (k=1) vs global (k=t/2) merging.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::BenchCtx;
+use crate::data::genomic;
+use crate::eval;
+use crate::json::Json;
+use crate::runtime::{Engine, Model, WeightStore};
+use crate::tensor::Tensor;
+use crate::train;
+use crate::util::Rng;
+
+fn train_classifier(ctx: &BenchCtx, engine: &Engine, identity: &str, steps: usize) -> Result<WeightStore> {
+    let cache = ctx.trained_weights_path(identity, "genomic");
+    if cache.exists() {
+        return WeightStore::load(&cache);
+    }
+    let mut model = engine.load(&format!("{identity}__train"))?;
+    let init = WeightStore::load(&ctx.artifact_dir.join(format!("{identity}.weights.bin")))?;
+    model.bind_weights(&init)?;
+    let batch = model.manifest.batch();
+    let m = model.manifest.config_usize("m").unwrap();
+    let mut rng = Rng::new(ctx.seed ^ 0x6E0);
+    let report = train::train_loop(
+        &mut model,
+        &init,
+        steps,
+        |_| {
+            let (ids, labels) = genomic::batch(batch, m, &mut rng);
+            (
+                Tensor::from_i32(&[batch, m], ids).unwrap(),
+                Tensor::from_i32(&[batch], labels).unwrap(),
+            )
+        },
+        |step, loss| {
+            if step % 50 == 0 {
+                println!("  [{identity}/genomic] step {step} ce {loss:.4}");
+            }
+            true
+        },
+    )?;
+    println!("  [{identity}] trained {} steps in {:.1}s", report.steps, report.seconds);
+    report.final_weights.save(&cache)?;
+    Ok(report.final_weights)
+}
+
+fn eval_classifier(model: &Model, n_batches: usize, seed: u64) -> Result<(f64, f64)> {
+    let batch = model.manifest.batch();
+    let m = model.manifest.config_usize("m").unwrap();
+    let mut rng = Rng::new(seed ^ 0xE7A1); // held-out stream
+    let (mut correct, mut total, mut elapsed) = (0.0, 0usize, 0.0);
+    for _ in 0..n_batches {
+        let (ids, labels) = genomic::batch(batch, m, &mut rng);
+        let x = Tensor::from_i32(&[batch, m], ids)?;
+        let t0 = Instant::now();
+        let out = model.execute(&[x])?;
+        elapsed += t0.elapsed().as_secs_f64();
+        correct += eval::accuracy(&out[0], &labels)? * batch as f64;
+        total += batch;
+    }
+    Ok((correct / total as f64, total as f64 / elapsed))
+}
+
+/// Table 3: local vs global merging on Hyena and Mamba.
+pub fn table3(ctx: &BenchCtx) -> Result<()> {
+    let engine = Engine::new(&ctx.artifact_dir)?;
+    let steps = ctx.train_steps(300);
+    let n_batches = ctx.eval_windows(16);
+    let mut rows = Vec::new();
+    println!("{:<8} {:<22} {:>8} {:>10}", "model", "merging", "Accel", "Accuracy");
+    for identity in ["hyena_L4", "mamba_L4"] {
+        let ws = train_classifier(ctx, &engine, identity, steps)?;
+        let mut results = Vec::new();
+        for tag in ["r0", "r64_k1", "r128_k1", "r64_kglobal", "r128_kglobal"] {
+            let name = format!("{identity}__{tag}");
+            let mut model = engine.load(&name)?;
+            model.bind_weights(&ws)?;
+            let (acc, thr) = eval_classifier(&model, n_batches, ctx.seed)?;
+            results.push((tag.to_string(), acc, thr));
+        }
+        let base_thr = results[0].2;
+        // paper rows: no merging / local fastest / local best / global
+        // fastest / global best
+        let pick = |filter: &str, best_quality: bool| -> &(String, f64, f64) {
+            results
+                .iter()
+                .skip(1)
+                .filter(|(t, _, _)| t.contains(filter))
+                .max_by(|a, b| {
+                    if best_quality {
+                        a.1.partial_cmp(&b.1).unwrap()
+                    } else {
+                        a.2.partial_cmp(&b.2).unwrap()
+                    }
+                })
+                .unwrap()
+        };
+        let mut emit = |label: &str, row: &(String, f64, f64)| {
+            println!("{:<8} {:<22} {:>7.2}x {:>9.1}%", identity, label,
+                     row.2 / base_thr, row.1 * 100.0);
+            rows.push(Json::obj(vec![
+                ("model", Json::str(identity)),
+                ("merging", Json::str(label)),
+                ("variant", Json::str(row.0.clone())),
+                ("accel", Json::num(row.2 / base_thr)),
+                ("accuracy", Json::num(row.1)),
+            ]));
+        };
+        emit("no merging", &results[0]);
+        emit("local fastest", pick("k1", false));
+        emit("local best", pick("k1", true));
+        emit("global fastest", pick("kglobal", false));
+        emit("global best", pick("kglobal", true));
+    }
+    ctx.save_report("table3", &Json::arr(rows))
+}

@@ -1,0 +1,228 @@
+//! Analysis experiments of §6 and the appendix: dataset/model predictors,
+//! merge traces, subsample validation, redundancy.
+
+use anyhow::Result;
+
+use super::chronos_suite::{eval_chronos, train_mixture};
+use super::forecast_suite::{dataset, train_or_load, ARCHS};
+use super::BenchCtx;
+use crate::data::{self, Split};
+use crate::json::Json;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+/// Table 4: quality improvement vs spectral entropy / THD per dataset.
+pub fn table4_dataset_properties(ctx: &BenchCtx) -> Result<()> {
+    // dataset statistics from the signal substrate
+    let mut rows = Vec::new();
+    println!("{:<12} {:>10} {:>8} {:>10}", "dataset", "MSEd%", "entropy", "THD");
+    // MSE deltas come from the table2 report when available
+    let t2 = std::fs::read_to_string(ctx.report_dir.join("table2.json"))
+        .ok()
+        .and_then(|s| Json::parse(&s).ok());
+    for prof in data::PROFILES {
+        let series = data::generate(prof, 4096, ctx.seed);
+        let (entropy, thd) = data::dataset_stats(&series, 1024);
+        let msed = t2
+            .as_ref()
+            .and_then(|v| {
+                v.as_arr().ok()?.iter().find(|row| {
+                    row.get("dataset").and_then(|d| d.as_str().ok()) == Some(prof.name)
+                })
+            })
+            .and_then(|row| row.get("best_mse_delta_pct").and_then(|x| x.as_f64().ok()));
+        match msed {
+            Some(d) => println!("{:<12} {:>+9.1}% {:>8.2} {:>10.2}", prof.name, d, entropy, thd),
+            None => println!("{:<12} {:>10} {:>8.2} {:>10.2}", prof.name, "(run table2)", entropy, thd),
+        }
+        rows.push(Json::obj(vec![
+            ("dataset", Json::str(prof.name)),
+            ("mse_delta_pct", msed.map(Json::num).unwrap_or(Json::Null)),
+            ("spectral_entropy", Json::num(entropy)),
+            ("thd", Json::num(thd)),
+        ]));
+    }
+    ctx.save_report("table4", &Json::arr(rows))
+}
+
+/// Mean pairwise cosine similarity over the token axis of a (b, t, d)
+/// probe tensor (paper table 5's statistic).
+pub fn mean_token_similarity(tokens: &Tensor) -> Result<f64> {
+    let shape = tokens.shape();
+    anyhow::ensure!(shape.len() == 3, "probe shape {:?}", shape);
+    let (b, t, d) = (shape[0], shape[1], shape[2]);
+    let data = tokens.f32s()?;
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    let stride = (t / 32).max(1); // sample pairs for O(t) cost
+    for bi in 0..b {
+        for i in (0..t).step_by(stride) {
+            for j in ((i + stride)..t).step_by(stride) {
+                let a = &data[(bi * t + i) * d..(bi * t + i + 1) * d];
+                let c = &data[(bi * t + j) * d..(bi * t + j + 1) * d];
+                let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+                for k in 0..d {
+                    dot += a[k] as f64 * c[k] as f64;
+                    na += (a[k] as f64).powi(2);
+                    nb += (c[k] as f64).powi(2);
+                }
+                acc += dot / (na.sqrt() * nb.sqrt() + 1e-12);
+                n += 1;
+            }
+        }
+    }
+    Ok(acc / n as f64)
+}
+
+/// Table 5: MSE degradation vs post-layer-1 token similarity per model.
+pub fn table5_model_properties(ctx: &BenchCtx) -> Result<()> {
+    let engine = Engine::new(&ctx.artifact_dir)?;
+    let steps = ctx.train_steps(300);
+    let ds_name = "etth1";
+    let t1 = std::fs::read_to_string(ctx.report_dir.join("table1.json"))
+        .ok()
+        .and_then(|s| Json::parse(&s).ok());
+    let mut rows = Vec::new();
+    println!("{:<16} {:>10} {:>12}", "model", "MSEd%", "token-sim");
+    for &arch in ARCHS {
+        let identity = format!("fc_{arch}_L2");
+        let name = format!("{identity}__r0_probe");
+        let Ok(mut model) = engine.load(&name) else {
+            println!("{arch:<16} (probe artifact missing — run aot --full)");
+            continue;
+        };
+        let ws = train_or_load(ctx, &engine, &identity, &format!("{identity}__train"),
+                               ds_name, steps, false)?;
+        model.bind_weights(&ws)?;
+        let test = dataset(ds_name, 6000, 192, 96, Split::Test, ctx.seed);
+        let idx: Vec<usize> = (0..model.manifest.batch()).collect();
+        let (x, _) = test.batch(&idx);
+        let out = model.execute(&[x])?;
+        // probe output: out0 = forecast, out1 = layer-1 tokens
+        let sim = mean_token_similarity(&out[1])?;
+        let msed = t1
+            .as_ref()
+            .and_then(|v| {
+                v.as_arr().ok()?.iter().find(|row| {
+                    row.get("arch").and_then(|a| a.as_str().ok()) == Some(arch)
+                        && row.get("dataset").and_then(|d| d.as_str().ok()) == Some(ds_name)
+                        && row.get("layers").and_then(|l| l.as_usize().ok()) == Some(2)
+                })
+            })
+            .and_then(|row| row.get("mse_delta_pct").and_then(|x| x.as_f64().ok()));
+        match msed {
+            Some(d) => println!("{:<16} {:>+9.1}% {:>12.3}", arch, d, sim),
+            None => println!("{:<16} {:>10} {:>12.3}", arch, "(run table1)", sim),
+        }
+        rows.push(Json::obj(vec![
+            ("model", Json::str(arch)),
+            ("mse_delta_pct", msed.map(Json::num).unwrap_or(Json::Null)),
+            ("token_similarity", Json::num(sim)),
+        ]));
+    }
+    ctx.save_report("table5", &Json::arr(rows))
+}
+
+/// Fig. 8: trace which source positions merge together.
+pub fn fig8_merge_trace(ctx: &BenchCtx) -> Result<()> {
+    let engine = Engine::new(&ctx.artifact_dir)?;
+    let ws = train_mixture(ctx, &engine, "s", ctx.train_steps(400))?;
+    let Ok(mut model) = engine.load("chronos_s__r64_trace") else {
+        println!("(trace artifact missing — run aot --full)");
+        return Ok(());
+    };
+    model.bind_weights(&ws)?;
+    let test = dataset("etth1", 6000, 512, 64, Split::Test, ctx.seed);
+    let idx: Vec<usize> = (0..model.manifest.batch()).collect();
+    let (x, _) = test.batch_univariate(&idx);
+    let out = model.execute(&[x])?;
+    // out2: composed slot map (b, m) — original position -> final slot
+    let slot_map = out[2].i32s()?;
+    let m = model.manifest.config_usize("m").unwrap();
+    // report the 3 largest merge groups of sample 0 (paper shows top 3)
+    let sm = &slot_map[..m];
+    let mut counts = std::collections::BTreeMap::new();
+    for &s in sm {
+        *counts.entry(s).or_insert(0usize) += 1;
+    }
+    let mut groups: Vec<(i32, usize)> = counts.into_iter().collect();
+    groups.sort_by_key(|&(_, c)| std::cmp::Reverse(c));
+    let mut rows = Vec::new();
+    println!("top merge groups (slot: #sources, span):");
+    for &(slot, count) in groups.iter().take(3) {
+        let members: Vec<usize> = (0..m).filter(|&p| sm[p] == slot).collect();
+        let span = members.last().unwrap() - members.first().unwrap();
+        println!("  slot {slot}: {count} tokens, positions {}..{} (span {span})",
+                 members.first().unwrap(), members.last().unwrap());
+        rows.push(Json::obj(vec![
+            ("slot", Json::num(slot as f64)),
+            ("count", Json::num(count as f64)),
+            ("span", Json::num(span as f64)),
+        ]));
+    }
+    ctx.save_report("fig8", &Json::arr(rows))
+}
+
+/// Fig. 9: subsampled vs full test set.
+pub fn fig9_subsample(ctx: &BenchCtx) -> Result<()> {
+    let engine = Engine::new(&ctx.artifact_dir)?;
+    let ws = train_mixture(ctx, &engine, "s", ctx.train_steps(400))?;
+    let test = dataset("etth1", 8000, 512, 64, Split::Test, ctx.seed);
+    let mut rows = Vec::new();
+    println!("{:<8} {:>12} {:>12}", "r", "MSE(sub)", "MSE(full)");
+    for r in [0usize, 64] {
+        let mut model = engine.load(&format!("chronos_s__r{r}"))?;
+        model.bind_weights(&ws)?;
+        let (sub, _) = eval_chronos(&model, &test, ctx.eval_windows(16))?;
+        let (full, _) = eval_chronos(&model, &test, ctx.eval_windows(128))?;
+        println!("{:<8} {:>12.3} {:>12.3}", r, sub, full);
+        rows.push(Json::obj(vec![
+            ("r", Json::num(r as f64)),
+            ("mse_subsampled", Json::num(sub)),
+            ("mse_full", Json::num(full)),
+        ]));
+    }
+    ctx.save_report("fig9", &Json::arr(rows))
+}
+
+/// Fig. 19: redundant-token fraction vs similarity threshold, with and
+/// without positional embedding, from layer-1 probe tokens.
+pub fn fig19_redundancy(ctx: &BenchCtx) -> Result<()> {
+    let engine = Engine::new(&ctx.artifact_dir)?;
+    let ws = train_mixture(ctx, &engine, "s", ctx.train_steps(400))?;
+    let test = dataset("etth1", 6000, 512, 64, Split::Test, ctx.seed);
+    let mut rows = Vec::new();
+    println!("{:<10} {:>6} {:>10}", "pos-embed", "thresh", "mergeable");
+    for (label, name) in [("with", "chronos_s__r0_probe"), ("without", "chronos_s__r0_probe_nope")] {
+        let Ok(mut model) = engine.load(name) else {
+            println!("{label:<10} (artifact missing — run aot --full)");
+            continue;
+        };
+        model.bind_weights(&ws)?;
+        let idx: Vec<usize> = (0..model.manifest.batch()).collect();
+        let (x, _) = test.batch_univariate(&idx);
+        let out = model.execute(&[x])?;
+        let tokens = &out[2]; // (b, m, d) layer-1 reps
+        let shape = tokens.shape().to_vec();
+        let (b, t, d) = (shape[0], shape[1], shape[2]);
+        let data = tokens.f32s()?;
+        for th in [0.5, 0.7, 0.8, 0.9, 0.95, 0.99] {
+            let mut mergeable = 0usize;
+            let mut total = 0usize;
+            for bi in 0..b {
+                let rows_slice = &data[bi * t * d..(bi + 1) * t * d];
+                let (scores, _) = crate::merging::match_tokens(rows_slice, t, d, 1);
+                mergeable += scores.iter().filter(|&&s| s > th).count();
+                total += scores.len();
+            }
+            let frac = mergeable as f64 / total as f64;
+            println!("{:<10} {:>6.2} {:>9.1}%", label, th, frac * 100.0);
+            rows.push(Json::obj(vec![
+                ("pos_embed", Json::str(label)),
+                ("threshold", Json::num(th)),
+                ("mergeable_frac", Json::num(frac)),
+            ]));
+        }
+    }
+    ctx.save_report("fig19", &Json::arr(rows))
+}

@@ -1,0 +1,161 @@
+//! JSON config system for the serving launcher and experiment runner.
+//!
+//! A deployment is described by one JSON file (variants, policy
+//! thresholds, batching, workload) so the serving system is launchable
+//! without recompiling — the "real config system + launcher" shape of a
+//! deployable framework.
+//!
+//! ```json
+//! {
+//!   "artifact_dir": "artifacts",
+//!   "policy": {
+//!     "variants": [{"name": "chronos_s__r0", "r": 0},
+//!                   {"name": "chronos_s__r128", "r": 128}],
+//!     "entropy_lo": 3.0,
+//!     "entropy_hi": 7.5
+//!   },
+//!   "batching": {"max_wait_ms": 20, "max_queue": 4096}
+//! }
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::policy::{MergePolicy, Variant};
+use crate::coordinator::ServerConfig;
+use crate::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ServeFileConfig {
+    pub artifact_dir: PathBuf,
+    pub policy: MergePolicy,
+    pub max_wait: Duration,
+    pub max_queue: usize,
+}
+
+impl ServeFileConfig {
+    pub fn load(path: &Path) -> Result<ServeFileConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing config {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<ServeFileConfig> {
+        let v = Json::parse(text)?;
+        let artifact_dir = PathBuf::from(
+            v.get("artifact_dir").and_then(|d| d.as_str().ok()).unwrap_or("artifacts"),
+        );
+
+        let pol = v.req("policy")?;
+        let mut variants = Vec::new();
+        for item in pol.req("variants")?.as_arr()? {
+            variants.push(Variant {
+                name: item.req("name")?.as_str()?.to_string(),
+                r: item.req("r")?.as_usize()?,
+            });
+        }
+        ensure!(!variants.is_empty(), "policy.variants must not be empty");
+        ensure!(
+            variants.windows(2).all(|w| w[0].r <= w[1].r),
+            "policy.variants must be ordered by increasing r"
+        );
+        let lo = pol.get("entropy_lo").and_then(|x| x.as_f64().ok()).unwrap_or(3.0);
+        let hi = pol.get("entropy_hi").and_then(|x| x.as_f64().ok()).unwrap_or(7.5);
+        ensure!(lo < hi, "entropy_lo must be < entropy_hi");
+        let policy = MergePolicy::uniform(variants, lo, hi);
+
+        let batching = v.get("batching");
+        let max_wait_ms = batching
+            .and_then(|b| b.get("max_wait_ms"))
+            .and_then(|x| x.as_f64().ok())
+            .unwrap_or(20.0);
+        let max_queue = batching
+            .and_then(|b| b.get("max_queue"))
+            .and_then(|x| x.as_usize().ok())
+            .unwrap_or(4096);
+        ensure!(max_wait_ms >= 0.0 && max_queue > 0, "invalid batching config");
+
+        Ok(ServeFileConfig {
+            artifact_dir,
+            policy,
+            max_wait: Duration::from_micros((max_wait_ms * 1000.0) as u64),
+            max_queue,
+        })
+    }
+
+    pub fn into_server_config(self) -> ServerConfig {
+        ServerConfig {
+            artifact_dir: self.artifact_dir,
+            policy: self.policy,
+            max_wait: self.max_wait,
+            max_queue: self.max_queue,
+        }
+    }
+
+    /// The default config written by `tomers serve --write-config`.
+    pub fn example() -> &'static str {
+        r#"{
+ "artifact_dir": "artifacts",
+ "policy": {
+  "variants": [
+   {"name": "chronos_s__r0", "r": 0},
+   {"name": "chronos_s__r32", "r": 32},
+   {"name": "chronos_s__r128", "r": 128}
+  ],
+  "entropy_lo": 3.0,
+  "entropy_hi": 7.5
+ },
+ "batching": {"max_wait_ms": 20, "max_queue": 4096}
+}
+"#
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_example() {
+        let cfg = ServeFileConfig::parse(ServeFileConfig::example()).unwrap();
+        assert_eq!(cfg.policy.variants.len(), 3);
+        assert_eq!(cfg.policy.variants[2].r, 128);
+        assert_eq!(cfg.max_wait, Duration::from_millis(20));
+        assert_eq!(cfg.max_queue, 4096);
+        assert_eq!(cfg.artifact_dir, PathBuf::from("artifacts"));
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let cfg = ServeFileConfig::parse(
+            r#"{"policy": {"variants": [{"name": "x__r0", "r": 0}]}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.max_queue, 4096);
+        assert_eq!(cfg.policy.variants.len(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(ServeFileConfig::parse(r#"{"policy": {"variants": []}}"#).is_err());
+        assert!(ServeFileConfig::parse(
+            r#"{"policy": {"variants": [{"name": "a", "r": 9}, {"name": "b", "r": 1}]}}"#
+        )
+        .is_err());
+        assert!(ServeFileConfig::parse(
+            r#"{"policy": {"variants": [{"name": "a", "r": 0}],
+                "entropy_lo": 9.0, "entropy_hi": 1.0}}"#
+        )
+        .is_err());
+        assert!(ServeFileConfig::parse("not json").is_err());
+    }
+
+    #[test]
+    fn roundtrips_into_server_config() {
+        let cfg = ServeFileConfig::parse(ServeFileConfig::example()).unwrap();
+        let sc = cfg.into_server_config();
+        assert_eq!(sc.max_queue, 4096);
+    }
+}

@@ -1,0 +1,163 @@
+//! Dynamic batcher: groups per-variant request queues into execution
+//! batches under a max-batch-size / max-wait policy with backpressure.
+//!
+//! Requests routed to the same artifact variant accumulate until either
+//! the artifact's batch capacity is reached or the oldest request has
+//! waited `max_wait`; short batches are padded (by repeating the last
+//! element) to the artifact's static batch size and the padding is
+//! discarded on the way out.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// static batch capacity of the compiled artifact
+    pub capacity: usize,
+    /// flush a partial batch once its oldest member waited this long
+    pub max_wait: Duration,
+    /// reject enqueues beyond this depth (backpressure)
+    pub max_queue: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            capacity: 8,
+            max_wait: Duration::from_millis(20),
+            max_queue: 1024,
+        }
+    }
+}
+
+struct Pending<T> {
+    item: T,
+    enqueued: Instant,
+}
+
+/// One variant's queue.  Generic over the request payload so unit tests
+/// don't need real requests.
+pub struct DynamicBatcher<T> {
+    config: BatcherConfig,
+    queue: VecDeque<Pending<T>>,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(config: BatcherConfig) -> Self {
+        DynamicBatcher { config, queue: VecDeque::new() }
+    }
+
+    /// Enqueue a request; `Err` signals backpressure (queue full).
+    pub fn push(&mut self, item: T) -> Result<(), T> {
+        if self.queue.len() >= self.config.max_queue {
+            return Err(item);
+        }
+        self.queue.push_back(Pending { item, enqueued: Instant::now() });
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Whether a batch should be flushed now.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.config.capacity {
+            return true;
+        }
+        match self.queue.front() {
+            Some(p) => now.duration_since(p.enqueued) >= self.config.max_wait,
+            None => false,
+        }
+    }
+
+    /// Time until the oldest request hits max_wait (for the server's poll
+    /// timeout); `None` when the queue is empty.
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|p| {
+            self.config
+                .max_wait
+                .checked_sub(now.duration_since(p.enqueued))
+                .unwrap_or(Duration::ZERO)
+        })
+    }
+
+    /// Pop up to `capacity` requests as one batch.
+    pub fn drain_batch(&mut self) -> Vec<T> {
+        let n = self.queue.len().min(self.config.capacity);
+        self.queue.drain(..n).map(|p| p.item).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(capacity: usize, wait_ms: u64, max_queue: usize) -> BatcherConfig {
+        BatcherConfig {
+            capacity,
+            max_wait: Duration::from_millis(wait_ms),
+            max_queue,
+        }
+    }
+
+    #[test]
+    fn flushes_on_capacity() {
+        let mut b = DynamicBatcher::new(cfg(4, 1000, 100));
+        for i in 0..3 {
+            b.push(i).unwrap();
+        }
+        assert!(!b.ready(Instant::now()));
+        b.push(3).unwrap();
+        assert!(b.ready(Instant::now()));
+        assert_eq!(b.drain_batch(), vec![0, 1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b = DynamicBatcher::new(cfg(8, 5, 100));
+        b.push(1).unwrap();
+        assert!(!b.ready(Instant::now()));
+        std::thread::sleep(Duration::from_millis(7));
+        assert!(b.ready(Instant::now()));
+        assert_eq!(b.drain_batch(), vec![1]);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let mut b = DynamicBatcher::new(cfg(2, 10, 3));
+        for i in 0..3 {
+            b.push(i).unwrap();
+        }
+        assert_eq!(b.push(99), Err(99));
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn drain_respects_capacity() {
+        let mut b = DynamicBatcher::new(cfg(2, 10, 10));
+        for i in 0..5 {
+            b.push(i).unwrap();
+        }
+        assert_eq!(b.drain_batch(), vec![0, 1]);
+        assert_eq!(b.drain_batch(), vec![2, 3]);
+        assert_eq!(b.drain_batch(), vec![4]);
+    }
+
+    #[test]
+    fn deadline_decreases_over_time() {
+        let mut b = DynamicBatcher::new(cfg(8, 50, 10));
+        b.push(1).unwrap();
+        let now = Instant::now();
+        let d1 = b.next_deadline(now).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        let d2 = b.next_deadline(Instant::now()).unwrap();
+        assert!(d2 <= d1);
+        assert!(b.next_deadline(now) <= Some(Duration::from_millis(50)));
+    }
+}

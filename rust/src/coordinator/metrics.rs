@@ -1,0 +1,114 @@
+//! Serving metrics: latency distribution, throughput, batch occupancy,
+//! per-variant routing counts.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::util::percentile;
+
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    latencies: Vec<f64>,
+    batch_sizes: Vec<usize>,
+    per_variant: BTreeMap<String, usize>,
+    rejected: usize,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            started: Instant::now(),
+            latencies: Vec::new(),
+            batch_sizes: Vec::new(),
+            per_variant: BTreeMap::new(),
+            rejected: 0,
+        }
+    }
+
+    pub fn record_batch(&mut self, variant: &str, batch: usize, latencies: &[f64]) {
+        self.batch_sizes.push(batch);
+        self.latencies.extend_from_slice(latencies);
+        *self.per_variant.entry(variant.to_string()).or_insert(0) += latencies.len();
+    }
+
+    pub fn record_rejected(&mut self) {
+        self.rejected += 1;
+    }
+
+    pub fn served(&self) -> usize {
+        self.latencies.len()
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.rejected
+    }
+
+    pub fn throughput(&self) -> f64 {
+        self.served() as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn latency_percentiles(&self) -> (f64, f64, f64) {
+        let mut l = self.latencies.clone();
+        (
+            percentile(&mut l, 50.0),
+            percentile(&mut l, 95.0),
+            percentile(&mut l, 99.0),
+        )
+    }
+
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            return 0.0;
+        }
+        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+    }
+
+    pub fn per_variant(&self) -> &BTreeMap<String, usize> {
+        &self.per_variant
+    }
+
+    pub fn report(&self) -> String {
+        let (p50, p95, p99) = self.latency_percentiles();
+        let mut s = format!(
+            "served={} rejected={} throughput={:.1}/s p50={:.1}ms p95={:.1}ms p99={:.1}ms occupancy={:.2}\n",
+            self.served(),
+            self.rejected,
+            self.throughput(),
+            p50 * 1e3,
+            p95 * 1e3,
+            p99 * 1e3,
+            self.mean_batch_occupancy(),
+        );
+        for (v, n) in &self.per_variant {
+            s.push_str(&format!("  {v}: {n}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let mut m = Metrics::new();
+        m.record_batch("v1", 4, &[0.010, 0.012, 0.011, 0.013]);
+        m.record_batch("v2", 2, &[0.020, 0.022]);
+        m.record_rejected();
+        assert_eq!(m.served(), 6);
+        assert_eq!(m.rejected(), 1);
+        assert_eq!(m.per_variant()["v1"], 4);
+        assert!((m.mean_batch_occupancy() - 3.0).abs() < 1e-12);
+        let (p50, p95, p99) = m.latency_percentiles();
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!(m.report().contains("v2: 2"));
+    }
+}

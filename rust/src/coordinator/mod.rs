@@ -1,0 +1,46 @@
+//! Layer-3 coordinator: the serving system around the compiled artifacts.
+//!
+//! The paper accelerates *inference of already-trained models*; the natural
+//! systems shape is a forecast-serving coordinator (DESIGN.md §2):
+//!
+//! * `policy`  — merge-policy planner: picks the merge-rate variant per
+//!   request from cheap input statistics (spectral entropy / adjacent
+//!   token similarity), i.e. the serving-level realisation of §5.5
+//!   dynamic merging.
+//! * `batcher` — dynamic batcher: groups requests per variant under a
+//!   max-batch / max-wait policy and pads to the artifact batch size.
+//! * `server`  — executor thread owning the PJRT engine (PJRT handles are
+//!   not `Send`, so all device work lives on one thread — the same
+//!   topology as a single-accelerator serving process) plus the client
+//!   handle and request plumbing.
+//! * `metrics` — latency/throughput accounting for the benchmark harness.
+
+pub mod batcher;
+pub mod metrics;
+pub mod policy;
+pub mod server;
+
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use metrics::Metrics;
+pub use policy::{MergePolicy, PolicyDecision};
+pub use server::{Client, ServerConfig, ServerHandle};
+
+/// A forecast request: univariate context, horizon fixed by the artifact.
+#[derive(Clone, Debug)]
+pub struct ForecastRequest {
+    pub id: u64,
+    pub context: Vec<f32>,
+}
+
+/// A served forecast.
+#[derive(Clone, Debug)]
+pub struct ForecastResponse {
+    pub id: u64,
+    pub forecast: Vec<f32>,
+    /// artifact variant that served this request
+    pub variant: String,
+    /// end-to-end latency (seconds) from enqueue to response
+    pub latency: f64,
+    /// batch size this request was served in
+    pub batch_size: usize,
+}

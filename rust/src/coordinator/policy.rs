@@ -1,0 +1,113 @@
+//! Merge-policy planner: serving-level dynamic merging.
+//!
+//! The paper shows (§6.2, table 4) that spectral entropy of the input
+//! predicts how much merging a series tolerates: high-entropy/noisy series
+//! gain quality from aggressive merging (adaptive low-pass filtering),
+//! low-entropy series should be merged conservatively.  The planner turns
+//! that observation into a routing rule: per request, compute the
+//! statistic and select the compiled merge-rate variant — a static-shape
+//! realisation of §5.5 per-batch dynamic merging (DESIGN.md §3b).
+
+use crate::signal;
+
+/// A selectable artifact variant: merge rate + artifact name suffix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Variant {
+    pub name: String,
+    pub r: usize,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct PolicyDecision {
+    pub variant: Variant,
+    pub entropy: f64,
+}
+
+/// Entropy-threshold policy over an ordered set of variants.
+#[derive(Clone, Debug)]
+pub struct MergePolicy {
+    /// variants ordered by increasing r (first = no merging)
+    pub variants: Vec<Variant>,
+    /// entropy thresholds between consecutive variants (len = variants-1)
+    pub thresholds: Vec<f64>,
+}
+
+impl MergePolicy {
+    /// Policy with uniform thresholds over [lo, hi] entropy bits.
+    pub fn uniform(variants: Vec<Variant>, lo: f64, hi: f64) -> MergePolicy {
+        let n = variants.len();
+        let thresholds = (1..n)
+            .map(|i| lo + (hi - lo) * i as f64 / n as f64)
+            .collect();
+        MergePolicy { variants, thresholds }
+    }
+
+    /// Fixed policy: always the same variant (for ablations/benchmarks).
+    pub fn fixed(variant: Variant) -> MergePolicy {
+        MergePolicy { variants: vec![variant], thresholds: vec![] }
+    }
+
+    /// Decide the variant for a request context.
+    pub fn decide(&self, context: &[f32]) -> PolicyDecision {
+        let entropy = signal::spectral_entropy(context);
+        let mut idx = 0;
+        for (i, &th) in self.thresholds.iter().enumerate() {
+            if entropy >= th {
+                idx = i + 1;
+            }
+        }
+        PolicyDecision { variant: self.variants[idx].clone(), entropy }
+    }
+
+    pub fn variant_names(&self) -> Vec<String> {
+        self.variants.iter().map(|v| v.name.clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn variants() -> Vec<Variant> {
+        vec![
+            Variant { name: "chronos_s__r0".into(), r: 0 },
+            Variant { name: "chronos_s__r32".into(), r: 32 },
+            Variant { name: "chronos_s__r128".into(), r: 128 },
+        ]
+    }
+
+    #[test]
+    fn low_entropy_input_gets_conservative_merging() {
+        let policy = MergePolicy::uniform(variants(), 2.0, 7.0);
+        // pure sine: very low spectral entropy
+        let clean: Vec<f32> = (0..512)
+            .map(|i| (2.0 * std::f64::consts::PI * 8.0 * i as f64 / 512.0).sin() as f32)
+            .collect();
+        let d = policy.decide(&clean);
+        assert_eq!(d.variant.r, 0, "entropy={}", d.entropy);
+    }
+
+    #[test]
+    fn high_entropy_input_gets_aggressive_merging() {
+        let policy = MergePolicy::uniform(variants(), 2.0, 7.0);
+        let mut rng = Rng::new(5);
+        let noisy: Vec<f32> = (0..512).map(|_| rng.normal() as f32).collect();
+        let d = policy.decide(&noisy);
+        assert_eq!(d.variant.r, 128, "entropy={}", d.entropy);
+    }
+
+    #[test]
+    fn fixed_policy_ignores_input() {
+        let policy = MergePolicy::fixed(Variant { name: "x".into(), r: 64 });
+        let d = policy.decide(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(d.variant.r, 64);
+    }
+
+    #[test]
+    fn thresholds_partition_monotonically() {
+        let policy = MergePolicy::uniform(variants(), 0.0, 9.0);
+        assert_eq!(policy.thresholds.len(), 2);
+        assert!(policy.thresholds[0] < policy.thresholds[1]);
+    }
+}

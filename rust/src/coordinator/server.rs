@@ -1,0 +1,225 @@
+//! Serving loop: an executor thread owning the PJRT engine and the loaded
+//! merge-rate variants, fed by a request channel.
+//!
+//! PJRT handles are not `Send`, so the engine, executables and weight
+//! buffers all live on the executor thread — the standard topology for a
+//! single-accelerator serving process.  Clients hold a cheap cloneable
+//! handle; each request carries its own response channel.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::metrics::Metrics;
+use super::policy::MergePolicy;
+use super::{ForecastRequest, ForecastResponse};
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub artifact_dir: std::path::PathBuf,
+    pub policy: MergePolicy,
+    pub max_wait: Duration,
+    pub max_queue: usize,
+}
+
+enum Msg {
+    Request(ForecastRequest, Instant, mpsc::Sender<ForecastResponse>),
+    Report(mpsc::Sender<String>),
+    Shutdown,
+}
+
+/// Client handle: submit forecasts to the executor thread.
+#[derive(Clone)]
+pub struct Client {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl Client {
+    /// Blocking forecast call.
+    pub fn forecast(&self, request: ForecastRequest) -> Result<ForecastResponse> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Request(request, Instant::now(), rtx))
+            .map_err(|_| anyhow!("server stopped"))?;
+        rrx.recv().map_err(|_| anyhow!("request dropped (backpressure or shutdown)"))
+    }
+
+    /// Fire-and-forget submit; the response arrives on the returned channel.
+    pub fn submit(&self, request: ForecastRequest) -> Result<mpsc::Receiver<ForecastResponse>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Request(request, Instant::now(), rtx))
+            .map_err(|_| anyhow!("server stopped"))?;
+        Ok(rrx)
+    }
+
+    pub fn metrics_report(&self) -> Result<String> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send(Msg::Report(rtx)).map_err(|_| anyhow!("server stopped"))?;
+        rrx.recv().map_err(|_| anyhow!("server stopped"))
+    }
+}
+
+pub struct ServerHandle {
+    tx: mpsc::Sender<Msg>,
+    join: Option<thread::JoinHandle<Result<()>>>,
+}
+
+impl ServerHandle {
+    pub fn client(&self) -> Client {
+        Client { tx: self.tx.clone() }
+    }
+
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Msg::Shutdown);
+        match self.join.take() {
+            Some(j) => j.join().map_err(|_| anyhow!("server thread panicked"))?,
+            None => Ok(()),
+        }
+    }
+}
+
+type PendingReq = (ForecastRequest, Instant, mpsc::Sender<ForecastResponse>);
+
+/// Spawn the serving thread.  Loads every variant named by the policy and
+/// binds its weights before accepting requests.
+pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
+    let (tx, rx) = mpsc::channel::<Msg>();
+    let cfg = config.clone();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+    let join = thread::spawn(move || -> Result<()> {
+        let engine = match Engine::new(&cfg.artifact_dir) {
+            Ok(e) => e,
+            Err(e) => {
+                let _ = ready_tx.send(Err(anyhow!("engine: {e}")));
+                return Err(e);
+            }
+        };
+        let mut models = BTreeMap::new();
+        let mut queues: BTreeMap<String, DynamicBatcher<PendingReq>> = BTreeMap::new();
+        for name in cfg.policy.variant_names() {
+            match engine.load_with_weights(&name) {
+                Ok(m) => {
+                    let capacity = m.manifest.batch();
+                    models.insert(name.clone(), m);
+                    queues.insert(
+                        name.clone(),
+                        DynamicBatcher::new(BatcherConfig {
+                            capacity,
+                            max_wait: cfg.max_wait,
+                            max_queue: cfg.max_queue,
+                        }),
+                    );
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(anyhow!("loading {name}: {e}")));
+                    return Err(e);
+                }
+            }
+        }
+        let _ = ready_tx.send(Ok(()));
+        let mut metrics = Metrics::new();
+
+        loop {
+            // Poll with a timeout tight enough to honour flush deadlines.
+            let now = Instant::now();
+            let timeout = queues
+                .values()
+                .filter_map(|q| q.next_deadline(now))
+                .min()
+                .unwrap_or(Duration::from_millis(50));
+            match rx.recv_timeout(timeout) {
+                Ok(Msg::Request(req, t0, rtx)) => {
+                    let decision = cfg.policy.decide(&req.context);
+                    let q = queues
+                        .get_mut(&decision.variant.name)
+                        .expect("policy names a loaded variant");
+                    if q.push((req, t0, rtx)).is_err() {
+                        metrics.record_rejected();
+                        // dropping rtx signals rejection to the client
+                    }
+                }
+                Ok(Msg::Report(rtx)) => {
+                    let _ = rtx.send(metrics.report());
+                }
+                Ok(Msg::Shutdown) => break,
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+            // Flush every ready queue.
+            let now = Instant::now();
+            for (name, q) in queues.iter_mut() {
+                while q.ready(now) {
+                    let batch = q.drain_batch();
+                    let model = &models[name];
+                    if let Err(e) = run_batch(model, name, batch, &mut metrics) {
+                        eprintln!("batch execution failed on {name}: {e}");
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+    ready_rx
+        .recv()
+        .map_err(|_| anyhow!("server thread died during startup"))??;
+    Ok(ServerHandle { tx, join: Some(join) })
+}
+
+fn run_batch(
+    model: &crate::runtime::Model,
+    variant: &str,
+    batch: Vec<PendingReq>,
+    metrics: &mut Metrics,
+) -> Result<()> {
+    let capacity = model.manifest.batch();
+    let m = model.manifest.inputs[0].shape[1];
+    let n = batch.len();
+    anyhow::ensure!(n > 0 && n <= capacity, "bad batch size {n}");
+    // Pad short batches by repeating the last context (discarded below).
+    let mut xs = Vec::with_capacity(capacity * m);
+    for (req, _, _) in &batch {
+        anyhow::ensure!(req.context.len() == m, "context length {} != {m}", req.context.len());
+        xs.extend_from_slice(&req.context);
+    }
+    for _ in n..capacity {
+        let last = &batch[n - 1].0.context;
+        xs.extend_from_slice(last);
+    }
+    let x = Tensor::from_f32(&[capacity, m], xs)?;
+    let outputs = model.execute(&[x])?;
+    // chronos family: out0 = logits (b, p, vocab), out1 = scales (b,)
+    let vocab = model.manifest.config_usize("vocab").unwrap_or(0);
+    let forecasts = if vocab > 0 {
+        let clip = model
+            .manifest
+            .config
+            .get("clip")
+            .and_then(|c| c.as_f64().ok())
+            .unwrap_or(15.0);
+        crate::eval::chronos_dequantize(&outputs[0], &outputs[1], vocab, clip)?
+    } else {
+        outputs[0].clone()
+    };
+    let mut latencies = Vec::with_capacity(n);
+    for (i, (req, t0, rtx)) in batch.into_iter().enumerate() {
+        let latency = t0.elapsed().as_secs_f64();
+        latencies.push(latency);
+        let row = forecasts.row_f32(i)?.to_vec();
+        let _ = rtx.send(ForecastResponse {
+            id: req.id,
+            forecast: row,
+            variant: variant.to_string(),
+            latency,
+            batch_size: n,
+        });
+    }
+    metrics.record_batch(variant, n, &latencies);
+    Ok(())
+}

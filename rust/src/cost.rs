@@ -1,0 +1,218 @@
+//! FLOPs cost model (the paper's thop-equivalent, used for fig. 4 and the
+//! hardware-independent acceleration numbers).
+//!
+//! Counts multiply-accumulates as 2 FLOPs.  The per-layer token counts come
+//! from the merge schedule in each artifact's manifest, so the model prices
+//! exactly the computation the compiled variant performs — including the
+//! merging overhead itself (eq. 2 similarity cost + the averaging pass).
+
+/// Architecture flavour of a transformer layer (matches `models/variants.py`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arch {
+    Vanilla,
+    Informer,
+    Autoformer,
+    Fedformer,
+    Nonstationary,
+}
+
+impl Arch {
+    pub fn parse(s: &str) -> Option<Arch> {
+        Some(match s {
+            "transformer" => Arch::Vanilla,
+            "informer" => Arch::Informer,
+            "autoformer" => Arch::Autoformer,
+            "fedformer" => Arch::Fedformer,
+            "nonstationary" => Arch::Nonstationary,
+            _ => return None,
+        })
+    }
+}
+
+/// Dense layer: x (t, din) @ w (din, dout).
+pub fn dense_flops(t: usize, din: usize, dout: usize) -> u64 {
+    2 * t as u64 * din as u64 * dout as u64
+}
+
+/// Attention-mechanism FLOPs for one layer at `t` query tokens / `tk` key
+/// tokens, model width `d` (QKV/out projections + the mechanism itself).
+pub fn attention_flops(arch: Arch, t: usize, tk: usize, d: usize) -> u64 {
+    let proj = dense_flops(t, d, d) + 2 * dense_flops(tk, d, d) + dense_flops(t, d, d);
+    let mech = match arch {
+        // full QK^T + AV
+        Arch::Vanilla | Arch::Nonstationary => 2 * (2 * t as u64 * tk as u64 * d as u64),
+        // ProbSparse: u = 5 ln t active queries attend
+        Arch::Informer => {
+            let u = ((5.0 * (t.max(2) as f64).ln()).ceil() as u64).min(t as u64);
+            // scoring pass (all queries vs keys) + full attention for u queries
+            2 * t as u64 * tk as u64 * d as u64 + 2 * u * tk as u64 * d as u64
+        }
+        // autocorrelation: 3 FFTs of length t over d channels (~ 5 t log t
+        // real-FLOPs each) + top-c roll/aggregate
+        Arch::Autoformer => {
+            let fft = (5.0 * t as f64 * (t.max(2) as f64).log2()) as u64 * d as u64;
+            let c = (2.0 * (t.max(2) as f64).ln()).ceil() as u64;
+            3 * fft + 2 * c * t as u64 * d as u64
+        }
+        // frequency-enhanced: FFT + mode mixing + iFFT
+        Arch::Fedformer => {
+            let fft = (5.0 * t as f64 * (t.max(2) as f64).log2()) as u64 * d as u64;
+            let modes = 16u64.min(t as u64 / 2 + 1);
+            2 * fft + 6 * modes * d as u64
+        }
+    };
+    proj + mech
+}
+
+/// GELU MLP: d -> hidden -> d.
+pub fn mlp_flops(t: usize, d: usize, hidden: usize) -> u64 {
+    dense_flops(t, d, hidden) + dense_flops(t, hidden, d)
+}
+
+/// Token-merging overhead at one layer: banded similarity (eq. 2) of
+/// d-dim dot products + the averaging pass.
+pub fn merge_flops(t: usize, k: usize, d: usize) -> u64 {
+    let sims = crate::merging::similarity_complexity(t, k) as u64;
+    sims * 2 * d as u64 + t as u64 * d as u64
+}
+
+/// Whole encoder stack given the per-layer token counts from the manifest
+/// (`tokens[l]` tokens enter layer `l`; `tokens[l+1]` leave its merge).
+pub fn encoder_flops(arch: Arch, tokens: &[usize], d: usize, hidden: usize, k_global: bool) -> u64 {
+    let mut total = 0u64;
+    for l in 0..tokens.len() - 1 {
+        let t = tokens[l];
+        let t_out = tokens[l + 1];
+        total += attention_flops(arch, t, t, d);
+        if t_out < t {
+            let k = if k_global { t / 2 } else { 1 };
+            total += merge_flops(t, k, d);
+        }
+        total += mlp_flops(t_out, d, hidden);
+    }
+    total
+}
+
+/// Decoder stack: causal self-attention (+ causal merge) + cross-attention
+/// to `enc_t` tokens + MLP.
+pub fn decoder_flops(tokens: &[usize], enc_t: usize, d: usize, hidden: usize) -> u64 {
+    let mut total = 0u64;
+    for l in 0..tokens.len() - 1 {
+        let t = tokens[l];
+        let t_out = tokens[l + 1];
+        total += attention_flops(Arch::Vanilla, t, t, d);
+        if t_out < t {
+            total += merge_flops(t, 1, d);
+        }
+        total += attention_flops(Arch::Vanilla, t_out, enc_t, d);
+        total += mlp_flops(t_out, d, hidden);
+    }
+    total
+}
+
+/// Hyena block: in/out projections + `order` FFT convs + gating.
+pub fn hyena_flops(t: usize, d: usize, order: usize) -> u64 {
+    let proj = dense_flops(t, d, (order + 1) * d) + dense_flops(t, d, d);
+    let n = 2 * t;
+    let fftconv = (5.0 * n as f64 * (n.max(2) as f64).log2()) as u64 * d as u64 * 3;
+    proj + order as u64 * (fftconv + 2 * t as u64 * d as u64)
+}
+
+/// Mamba block: projections + depthwise conv + selective scan.
+pub fn mamba_flops(t: usize, d: usize, d_inner: usize, d_state: usize, d_conv: usize) -> u64 {
+    let proj = dense_flops(t, d, 2 * d_inner)
+        + dense_flops(t, d_inner, 2 * d_state + 1)
+        + dense_flops(t, 1, d_inner)
+        + dense_flops(t, d_inner, d);
+    let conv = 2 * t as u64 * d_inner as u64 * d_conv as u64;
+    // scan: per step per channel per state: exp, 2 mul-add, dot with C
+    let scan = 8 * t as u64 * d_inner as u64 * d_state as u64;
+    proj + conv + scan
+}
+
+/// State-space classifier stack.
+pub fn ssm_stack_flops(
+    mamba: bool,
+    tokens: &[usize],
+    d: usize,
+    d_inner: usize,
+    d_state: usize,
+    k: usize,
+) -> u64 {
+    let mut total = 0u64;
+    for l in 0..tokens.len() - 1 {
+        let t = tokens[l];
+        total += if mamba {
+            mamba_flops(t, d, d_inner, d_state, 4)
+        } else {
+            hyena_flops(t, d, 2)
+        };
+        if tokens[l + 1] < t {
+            total += merge_flops(t, k, d);
+        }
+        if !mamba {
+            total += mlp_flops(tokens[l + 1], d, 2 * d);
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_counts_macs_twice() {
+        assert_eq!(dense_flops(10, 4, 8), 2 * 10 * 4 * 8);
+    }
+
+    #[test]
+    fn merging_reduces_encoder_flops() {
+        let full = encoder_flops(Arch::Vanilla, &[192, 192, 192], 64, 128, true);
+        let merged = encoder_flops(Arch::Vanilla, &[192, 160, 128], 64, 128, true);
+        assert!(merged < full);
+    }
+
+    #[test]
+    fn halving_schedule_approaches_bound() {
+        // With aggressive halving the FLOPs ratio should approach (but not
+        // exceed) the B.1 bound for attention-dominated models.
+        let l = 6usize;
+        let t0 = 1024usize;
+        let full: Vec<usize> = vec![t0; l + 1];
+        let mut halved = vec![t0];
+        for _ in 0..l {
+            halved.push((halved.last().unwrap() / 2).max(2));
+        }
+        // widen d so attention dominates the MLP
+        let f_full = encoder_flops(Arch::Vanilla, &full, 8, 8, true);
+        let f_half = encoder_flops(Arch::Vanilla, &halved, 8, 8, true);
+        let ratio = f_full as f64 / f_half as f64;
+        let bound = crate::merging::speedup_bound(l as u32);
+        assert!(ratio > 1.5, "ratio {ratio}");
+        assert!(ratio <= bound * 1.45, "ratio {ratio} vs bound {bound}");
+    }
+
+    #[test]
+    fn informer_cheaper_than_vanilla_at_long_t() {
+        let t = 4096;
+        assert!(
+            attention_flops(Arch::Informer, t, t, 64) < attention_flops(Arch::Vanilla, t, t, 64)
+        );
+    }
+
+    #[test]
+    fn merge_overhead_linear_vs_quadratic() {
+        let lin = merge_flops(16_000, 1, 64);
+        let quad = merge_flops(16_000, 8_000, 64);
+        // paper §5.4: local merging adds ~14% per block, global ~68%
+        assert!(quad > 100 * lin);
+    }
+
+    #[test]
+    fn ssm_flops_monotone_in_tokens() {
+        let a = ssm_stack_flops(true, &[1024, 896, 768, 640, 512], 64, 128, 8, 1);
+        let b = ssm_stack_flops(true, &[1024, 1024, 1024, 1024, 1024], 64, 128, 8, 1);
+        assert!(a < b);
+    }
+}

@@ -1,0 +1,134 @@
+//! Genomic sequence substrate for the state-space experiments (§5.4).
+//!
+//! Substitution (DESIGN.md §7): the paper classifies the *Dummy Mouse
+//! Enhancers Ensembl* dataset (long nucleotide sequences, binary label).
+//! We generate the same task shape: class 1 sequences contain planted
+//! enhancer-like motifs (with point mutations) at random positions in a
+//! GC-biased background; class 0 is background only.  The signal is sparse
+//! and positional — exactly the regime where token merging must preserve
+//! local information to keep accuracy.
+
+use crate::util::Rng;
+
+/// Nucleotide vocabulary: A=0 C=1 G=2 T=3 N=4 (matches the Python side).
+pub const VOCAB: usize = 5;
+
+/// Enhancer-like core motifs (real TF binding cores: TATA, CAAT, GC-box,
+/// E-box, AP-1).
+const MOTIFS: &[&str] = &["TATAAA", "CCAAT", "GGGCGG", "CACGTG", "TGACTCA"];
+
+fn base_id(c: u8) -> i32 {
+    match c {
+        b'A' => 0,
+        b'C' => 1,
+        b'G' => 2,
+        b'T' => 3,
+        _ => 4,
+    }
+}
+
+/// One labelled example: `ids` of length `len`, label in {0, 1}.
+pub struct Example {
+    pub ids: Vec<i32>,
+    pub label: i32,
+}
+
+/// Generate a single example.  Positive examples carry 3–6 motif instances
+/// with a 10% per-base mutation rate.
+pub fn example(len: usize, label: i32, rng: &mut Rng) -> Example {
+    // GC-biased background (~42% GC like mouse genome)
+    let mut ids: Vec<i32> = (0..len)
+        .map(|_| {
+            let u = rng.uniform();
+            if u < 0.29 {
+                0 // A
+            } else if u < 0.50 {
+                1 // C
+            } else if u < 0.71 {
+                2 // G
+            } else {
+                3 // T
+            }
+        })
+        .collect();
+    if label == 1 {
+        let n_motifs = 3 + rng.below(4);
+        for _ in 0..n_motifs {
+            let motif = MOTIFS[rng.below(MOTIFS.len())].as_bytes();
+            if len <= motif.len() {
+                continue;
+            }
+            let pos = rng.below(len - motif.len());
+            for (i, &c) in motif.iter().enumerate() {
+                if rng.uniform() < 0.10 {
+                    continue; // point mutation: keep background base
+                }
+                ids[pos + i] = base_id(c);
+            }
+        }
+    }
+    Example { ids, label }
+}
+
+/// A balanced batch: (ids (b, len) flattened, labels (b,)).
+pub fn batch(b: usize, len: usize, rng: &mut Rng) -> (Vec<i32>, Vec<i32>) {
+    let mut ids = Vec::with_capacity(b * len);
+    let mut labels = Vec::with_capacity(b);
+    for i in 0..b {
+        let label = (i % 2) as i32;
+        let ex = example(len, label, rng);
+        ids.extend_from_slice(&ex.ids);
+        labels.push(ex.label);
+    }
+    (ids, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_in_vocab() {
+        let mut rng = Rng::new(1);
+        let ex = example(512, 1, &mut rng);
+        assert_eq!(ex.ids.len(), 512);
+        assert!(ex.ids.iter().all(|&i| (0..VOCAB as i32).contains(&i)));
+    }
+
+    #[test]
+    fn positive_class_contains_motifs() {
+        // Count exact motif hits: positives should have far more than
+        // background chance across many examples.
+        let hits = |ids: &[i32], motif: &str| -> usize {
+            let m: Vec<i32> = motif.bytes().map(base_id).collect();
+            ids.windows(m.len()).filter(|w| *w == m.as_slice()).count()
+        };
+        let mut rng = Rng::new(2);
+        let (mut pos, mut neg) = (0usize, 0usize);
+        for _ in 0..40 {
+            let ep = example(1024, 1, &mut rng);
+            let en = example(1024, 0, &mut rng);
+            for m in MOTIFS {
+                pos += hits(&ep.ids, m);
+                neg += hits(&en.ids, m);
+            }
+        }
+        assert!(pos > neg + 40, "pos={pos} neg={neg}");
+    }
+
+    #[test]
+    fn batches_are_balanced() {
+        let mut rng = Rng::new(3);
+        let (ids, labels) = batch(8, 128, &mut rng);
+        assert_eq!(ids.len(), 8 * 128);
+        assert_eq!(labels.iter().filter(|&&l| l == 1).count(), 4);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = batch(4, 64, &mut Rng::new(9));
+        let b = batch(4, 64, &mut Rng::new(9));
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+    }
+}

@@ -1,0 +1,202 @@
+//! Evaluation: forecasting/classification metrics, Chronos dequantization,
+//! and the paper's Pareto selection rules.
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+
+/// Mean squared error over two equal-shaped f32 tensors.
+pub fn mse(pred: &Tensor, target: &Tensor) -> Result<f64> {
+    let (p, t) = (pred.f32s()?, target.f32s()?);
+    anyhow::ensure!(p.len() == t.len(), "mse: length mismatch");
+    Ok(p.iter().zip(t).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>() / p.len() as f64)
+}
+
+/// Mean absolute error.
+pub fn mae(pred: &Tensor, target: &Tensor) -> Result<f64> {
+    let (p, t) = (pred.f32s()?, target.f32s()?);
+    anyhow::ensure!(p.len() == t.len(), "mae: length mismatch");
+    Ok(p.iter().zip(t).map(|(a, b)| (a - b).abs() as f64).sum::<f64>() / p.len() as f64)
+}
+
+/// Classification accuracy from logits (b, n_classes) vs labels (b,).
+pub fn accuracy(logits: &Tensor, labels: &[i32]) -> Result<f64> {
+    let shape = logits.shape();
+    anyhow::ensure!(shape.len() == 2 && shape[0] == labels.len(), "accuracy shapes");
+    let n_classes = shape[1];
+    let data = logits.f32s()?;
+    let mut correct = 0usize;
+    for (i, &label) in labels.iter().enumerate() {
+        let row = &data[i * n_classes..(i + 1) * n_classes];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred == label as usize {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / labels.len() as f64)
+}
+
+/// Dequantize Chronos logits (b, p, vocab) + scales (b,) to values (b, p)
+/// via greedy argmax through the uniform bin centres (mirror of
+/// `models/chronos.py::dequantize`).
+pub fn chronos_dequantize(logits: &Tensor, scales: &Tensor, vocab: usize, clip: f64) -> Result<Tensor> {
+    let shape = logits.shape().to_vec();
+    anyhow::ensure!(shape.len() == 3 && shape[2] == vocab, "logits shape {:?}", shape);
+    let (b, p) = (shape[0], shape[1]);
+    let data = logits.f32s()?;
+    let sc = scales.f32s()?;
+    let mut out = Vec::with_capacity(b * p);
+    for i in 0..b {
+        for j in 0..p {
+            let row = &data[(i * p + j) * vocab..(i * p + j + 1) * vocab];
+            let id = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            let center = (id as f64 / (vocab - 1) as f64) * 2.0 * clip - clip;
+            out.push((center * sc[i] as f64) as f32);
+        }
+    }
+    Tensor::from_f32(&[b, p], out)
+}
+
+/// One evaluated operating point of a (model, merge-config) pair.
+#[derive(Clone, Debug)]
+pub struct OperatingPoint {
+    pub name: String,
+    pub mse: f64,
+    /// throughput relative to some fixed workload (samples/s)
+    pub throughput: f64,
+}
+
+impl OperatingPoint {
+    pub fn accel(&self, reference: &OperatingPoint) -> f64 {
+        self.throughput / reference.throughput
+    }
+    pub fn mse_delta_pct(&self, reference: &OperatingPoint) -> f64 {
+        100.0 * (self.mse - reference.mse) / reference.mse
+    }
+}
+
+/// §5.1 selection: the *fastest* merging trial whose validation MSE is
+/// within `mse_budget` (absolute, paper: 0.01) of the no-merging reference;
+/// falls back to the reference when none qualifies ("we report results
+/// without token merging" — paper).
+pub fn select_fastest_within<'a>(
+    reference: &'a OperatingPoint,
+    candidates: &'a [OperatingPoint],
+    mse_budget: f64,
+) -> &'a OperatingPoint {
+    candidates
+        .iter()
+        .filter(|c| c.mse <= reference.mse + mse_budget)
+        .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
+        .filter(|c| c.throughput > reference.throughput)
+        .unwrap_or(reference)
+}
+
+/// Table 2 "best" objective: the candidate with the lowest MSE.
+pub fn select_best_mse<'a>(
+    reference: &'a OperatingPoint,
+    candidates: &'a [OperatingPoint],
+) -> &'a OperatingPoint {
+    candidates
+        .iter()
+        .chain(std::iter::once(reference))
+        .min_by(|a, b| a.mse.partial_cmp(&b.mse).unwrap())
+        .unwrap()
+}
+
+/// Table 2 "fastest" objective: fastest candidate with MSE within
+/// `rel_budget` (paper: 3%) of the reference.
+pub fn select_fastest_rel<'a>(
+    reference: &'a OperatingPoint,
+    candidates: &'a [OperatingPoint],
+    rel_budget: f64,
+) -> &'a OperatingPoint {
+    candidates
+        .iter()
+        .filter(|c| c.mse <= reference.mse * (1.0 + rel_budget))
+        .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
+        .unwrap_or(reference)
+}
+
+/// Pareto front (min MSE, max throughput) of a candidate set.
+pub fn pareto_front(points: &[OperatingPoint]) -> Vec<&OperatingPoint> {
+    let mut front: Vec<&OperatingPoint> = Vec::new();
+    for p in points {
+        let dominated = points.iter().any(|q| {
+            (q.mse < p.mse && q.throughput >= p.throughput)
+                || (q.mse <= p.mse && q.throughput > p.throughput)
+        });
+        if !dominated {
+            front.push(p);
+        }
+    }
+    front.sort_by(|a, b| a.mse.partial_cmp(&b.mse).unwrap());
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op(name: &str, mse: f64, thr: f64) -> OperatingPoint {
+        OperatingPoint { name: name.into(), mse, throughput: thr }
+    }
+
+    #[test]
+    fn mse_mae_basic() {
+        let a = Tensor::from_f32(&[4], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::from_f32(&[4], vec![1., 2., 3., 6.]).unwrap();
+        assert!((mse(&a, &b).unwrap() - 1.0).abs() < 1e-12);
+        assert!((mae(&a, &b).unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_counts_argmax() {
+        let logits =
+            Tensor::from_f32(&[2, 2], vec![0.9, 0.1, 0.2, 0.8]).unwrap();
+        assert_eq!(accuracy(&logits, &[0, 1]).unwrap(), 1.0);
+        assert_eq!(accuracy(&logits, &[1, 1]).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn dequantize_inverts_bins() {
+        // vocab 3, clip 1: centres -1, 0, 1
+        let logits = Tensor::from_f32(&[1, 2, 3], vec![9., 0., 0., 0., 0., 9.]).unwrap();
+        let scales = Tensor::from_f32(&[1], vec![2.0]).unwrap();
+        let v = chronos_dequantize(&logits, &scales, 3, 1.0).unwrap();
+        assert_eq!(v.f32s().unwrap(), &[-2.0, 2.0]);
+    }
+
+    #[test]
+    fn selection_rules_match_paper() {
+        let reference = op("r0", 0.40, 100.0);
+        let cands = vec![op("r16", 0.405, 180.0), op("r32", 0.42, 260.0), op("r64", 0.52, 400.0)];
+        // fastest within +0.01 absolute: r16 qualifies, r32 (+0.02) does not
+        assert_eq!(select_fastest_within(&reference, &cands, 0.01).name, "r16");
+        // best MSE: reference itself here
+        assert_eq!(select_best_mse(&reference, &cands).name, "r0");
+        // fastest within +3% relative: 0.40*1.03 = 0.412 -> r16
+        assert_eq!(select_fastest_rel(&reference, &cands, 0.03).name, "r16");
+        // no qualifying candidate -> reference
+        assert_eq!(select_fastest_within(&reference, &cands[2..], 0.01).name, "r0");
+    }
+
+    #[test]
+    fn pareto_front_filters_dominated() {
+        let pts = vec![op("a", 0.4, 100.0), op("b", 0.38, 150.0), op("c", 0.5, 120.0)];
+        let front = pareto_front(&pts);
+        // b dominates a and c entirely
+        assert_eq!(front.len(), 1);
+        assert_eq!(front[0].name, "b");
+    }
+}

@@ -1,0 +1,25 @@
+//! `tomers` — token merging for time series transformers & state-space
+//! models: a Rust serving/training coordinator over AOT-compiled JAX +
+//! Pallas artifacts (PJRT).  Reproduction of Götz et al., ICML 2025.
+//!
+//! Layer map (DESIGN.md):
+//! * L3 (this crate): coordinator (router/batcher/merge-policy), runtime
+//!   (PJRT engine), training driver, evaluation, benchmark harness, and
+//!   the substrates (signal processing, synthetic datasets, cost model,
+//!   Rust merging reference).
+//! * L2/L1 live in `python/compile/` and arrive here as HLO-text
+//!   artifacts + manifests + weights (`make artifacts`).
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod data;
+pub mod eval;
+pub mod json;
+pub mod merging;
+pub mod runtime;
+pub mod signal;
+pub mod tensor;
+pub mod train;
+pub mod util;

@@ -1,0 +1,235 @@
+//! `tomers` CLI — the Layer-3 entrypoint.
+//!
+//! Subcommands:
+//!   artifacts                     list compiled artifacts + manifests
+//!   train    <identity> <dataset> train a model via its __train artifact
+//!   eval     <artifact> <dataset> evaluate one artifact
+//!   serve    [--requests N]       run the forecast-serving demo workload
+//!   bench    <experiment>         regenerate a paper table/figure (or `all`)
+//!
+//! Offline build: argument parsing is hand-rolled (no clap in the vendored
+//! dependency set).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use tomers::bench::{self, BenchCtx};
+use tomers::coordinator::{self, policy::Variant, MergePolicy, ServerConfig};
+use tomers::data::Split;
+use tomers::runtime::{Engine, WeightStore};
+use tomers::util::Rng;
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::BTreeMap::new();
+        let mut it = std::env::args().skip(1).peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let value = if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    it.next().unwrap()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(name.to_string(), value);
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+const USAGE: &str = "\
+tomers — token merging for time series (ICML 2025 reproduction)
+
+USAGE:
+  tomers artifacts [--dir artifacts]
+  tomers train <identity> <dataset> [--steps N] [--dir artifacts]
+  tomers eval <artifact> <dataset> [--windows N] [--dir artifacts]
+  tomers serve [--requests N] [--config serve.json] [--write-config serve.json]
+  tomers bench <table1|fig2|table2|table3|table4|table5|table8|fig4|fig5|fig6|fig7|fig8|fig9|fig15|fig16|fig19|ablation_k|deconly|ablation_bound|all> [--quick] [--dir artifacts]
+
+Datasets: etth1 ettm1 weather electricity traffic (synthetic, DESIGN.md §7)
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse();
+    let dir = PathBuf::from(args.flag("dir").unwrap_or("artifacts"));
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("artifacts") => cmd_artifacts(&dir),
+        Some("train") => {
+            let identity = args.positional.get(1).context("missing <identity>")?.clone();
+            let ds = args.positional.get(2).context("missing <dataset>")?.clone();
+            let steps: usize = args.flag("steps").unwrap_or("300").parse()?;
+            cmd_train(&dir, &identity, &ds, steps)
+        }
+        Some("eval") => {
+            let artifact = args.positional.get(1).context("missing <artifact>")?.clone();
+            let ds = args.positional.get(2).context("missing <dataset>")?.clone();
+            let windows: usize = args.flag("windows").unwrap_or("64").parse()?;
+            cmd_eval(&dir, &artifact, &ds, windows)
+        }
+        Some("serve") => {
+            if args.has("write-config") {
+                let path = args.flag("write-config").unwrap_or("serve.json");
+                std::fs::write(path, tomers::config::ServeFileConfig::example())?;
+                println!("wrote example config -> {path}");
+                return Ok(());
+            }
+            let requests: usize = args.flag("requests").unwrap_or("200").parse()?;
+            if let Some(cfg_path) = args.flag("config") {
+                let cfg = tomers::config::ServeFileConfig::load(std::path::Path::new(cfg_path))?;
+                return cmd_serve_config(cfg.into_server_config(), requests);
+            }
+            cmd_serve(&dir, requests)
+        }
+        Some("bench") => {
+            let which = args.positional.get(1).context("missing experiment id")?.clone();
+            let ctx = BenchCtx::new(&dir, args.has("quick"))?;
+            bench::run(&ctx, &which)
+        }
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_artifacts(dir: &PathBuf) -> Result<()> {
+    let engine = Engine::new(dir)?;
+    println!("platform: {}", engine.platform());
+    for name in engine.available()? {
+        let manifest = tomers::runtime::Manifest::load(&dir.join(format!("{name}.json")))?;
+        println!(
+            "{:<34} {:<16} params={:<4} in={:?} out={:?}",
+            name,
+            manifest.family,
+            manifest.params.len(),
+            manifest.inputs.iter().map(|s| format!("{:?}", s.shape)).collect::<Vec<_>>(),
+            manifest.outputs.iter().map(|s| format!("{:?}", s.shape)).collect::<Vec<_>>(),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(dir: &PathBuf, identity: &str, ds: &str, steps: usize) -> Result<()> {
+    let ctx = BenchCtx::new(dir, false)?;
+    let engine = Engine::new(dir)?;
+    let univariate = identity.starts_with("chronos");
+    let ws = bench::forecast_suite::train_or_load(
+        &ctx, &engine, identity, &format!("{identity}__train"), ds, steps, univariate,
+    )?;
+    let out = ctx.trained_weights_path(identity, ds);
+    ws.save(&out)?;
+    println!("trained weights -> {}", out.display());
+    Ok(())
+}
+
+fn cmd_eval(dir: &PathBuf, artifact: &str, ds_name: &str, windows: usize) -> Result<()> {
+    let ctx = BenchCtx::new(dir, false)?;
+    let engine = Engine::new(dir)?;
+    let identity = artifact.split("__").next().unwrap_or(artifact);
+    let mut model = engine.load(artifact)?;
+    // prefer trained weights when present
+    let trained = ctx.trained_weights_path(identity, ds_name);
+    let mixture = ctx.trained_weights_path(identity, "mixture");
+    let ws = if trained.exists() {
+        WeightStore::load(&trained)?
+    } else if mixture.exists() {
+        WeightStore::load(&mixture)?
+    } else {
+        WeightStore::load(&dir.join(format!("{identity}.weights.bin")))?
+    };
+    model.bind_weights(&ws)?;
+    let m = model.manifest.config_usize("m").unwrap_or(192);
+    let p = model.manifest.config_usize("p").unwrap_or(96);
+    let test = bench::forecast_suite::dataset(ds_name, 6000, m, p, Split::Test, 2024);
+    let (mse, thr) = if model.manifest.family.starts_with("chronos") {
+        bench::chronos_suite::eval_chronos(&model, &test, windows)?
+    } else {
+        bench::forecast_suite::eval_forecast(&model, &test, windows)?
+    };
+    println!("{artifact} on {ds_name}: MSE={mse:.4} throughput={thr:.1}/s");
+    Ok(())
+}
+
+fn cmd_serve_config(config: ServerConfig, requests: usize) -> Result<()> {
+    let handle = coordinator::server::serve(config)?;
+    let client = handle.client();
+    println!("serving {requests} mixed-workload requests (config file) ...");
+    let mut rng = Rng::new(7);
+    let mut pending = Vec::new();
+    for id in 0..requests as u64 {
+        let prof_name = if id % 2 == 0 { "weather" } else { "ettm1" };
+        let prof = tomers::data::profile(prof_name).unwrap();
+        let series = tomers::data::generate(prof, 512, rng.next_u64());
+        pending.push(client.submit(coordinator::ForecastRequest { id, context: series.column(0) })?);
+    }
+    for rx in pending {
+        let _ = rx.recv();
+    }
+    println!("{}", client.metrics_report()?);
+    handle.shutdown()?;
+    Ok(())
+}
+
+fn cmd_serve(dir: &PathBuf, requests: usize) -> Result<()> {
+    // entropy-driven merge-policy over the chronos_s variants
+    let variants = vec![
+        Variant { name: "chronos_s__r0".into(), r: 0 },
+        Variant { name: "chronos_s__r32".into(), r: 32 },
+        Variant { name: "chronos_s__r128".into(), r: 128 },
+    ];
+    let policy = MergePolicy::uniform(variants, 3.0, 7.5);
+    let handle = coordinator::server::serve(ServerConfig {
+        artifact_dir: dir.clone(),
+        policy,
+        max_wait: Duration::from_millis(25),
+        max_queue: 4096,
+    })?;
+    let client = handle.client();
+    println!("serving {requests} mixed-workload requests ...");
+    let mut rng = Rng::new(7);
+    let mut pending = Vec::new();
+    for id in 0..requests as u64 {
+        // mixed workload: alternate clean and noisy series
+        let prof_name = if id % 2 == 0 { "weather" } else { "ettm1" };
+        let prof = tomers::data::profile(prof_name).unwrap();
+        let series = tomers::data::generate(prof, 512, rng.next_u64());
+        let context = series.column(0);
+        pending.push(client.submit(coordinator::ForecastRequest { id, context })?);
+    }
+    let mut ok = 0usize;
+    for rx in pending {
+        if rx.recv().is_ok() {
+            ok += 1;
+        }
+    }
+    println!("completed {ok}/{requests}");
+    println!("{}", client.metrics_report()?);
+    handle.shutdown()?;
+    Ok(())
+}

@@ -1,0 +1,322 @@
+//! Rust reference implementation of the paper's token merging (§3).
+//!
+//! Mirrors the Layer-2 JAX semantics exactly (same A/B split, banded
+//! matching, top-r selection, size-weighted averaging, order preservation,
+//! slot maps) so that:
+//!
+//! * the coordinator's merge-policy planner can reason about schedules
+//!   without touching the runtime,
+//! * property tests can check invariants over millions of random cases
+//!   cheaply, and
+//! * integration tests can cross-validate the HLO artifacts' probes.
+//!
+//! Also hosts the analytic complexity model of eq. 2 and the speed-up
+//! bound of appendix B.1.
+
+/// Result of one merge step over `t` tokens of dim `d`.
+#[derive(Clone, Debug)]
+pub struct MergeResult {
+    /// (t - r) * d merged tokens, temporal order preserved.
+    pub tokens: Vec<f32>,
+    /// token sizes (number of originals each token represents)
+    pub sizes: Vec<f32>,
+    /// original position -> output slot (length t)
+    pub slot_map: Vec<usize>,
+}
+
+/// Cosine similarity between two d-vectors.
+fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for i in 0..a.len() {
+        dot += a[i] as f64 * b[i] as f64;
+        na += (a[i] as f64).powi(2);
+        nb += (b[i] as f64).powi(2);
+    }
+    dot / (na.sqrt() * nb.sqrt() + 1e-8)
+}
+
+/// Bipartite soft matching under locality constraint `k` (paper eq. 1).
+///
+/// Tokens at even positions form subset A, odd positions subset B; for each
+/// A-token the best B-match within the band `|i - j| < k` is found.
+/// Returns (best_score, best_j) per A-token.
+pub fn match_tokens(tokens: &[f32], t: usize, d: usize, k: usize) -> (Vec<f64>, Vec<usize>) {
+    let te = t - (t % 2);
+    let t2 = te / 2;
+    let k = k.clamp(1, t2.max(1));
+    let mut scores = vec![f64::NEG_INFINITY; t2];
+    let mut best = vec![0usize; t2];
+    for i in 0..t2 {
+        let a = &tokens[(2 * i) * d..(2 * i + 1) * d];
+        let lo = i.saturating_sub(k - 1);
+        let hi = (i + k - 1).min(t2 - 1);
+        for j in lo..=hi {
+            let b = &tokens[(2 * j + 1) * d..(2 * j + 2) * d];
+            let s = cosine(a, b);
+            if s > scores[i] {
+                scores[i] = s;
+                best[i] = j;
+            }
+        }
+    }
+    (scores, best)
+}
+
+/// Merge the `r` most similar A-tokens into their matched B-tokens
+/// (size-weighted average, order-preserving) — the Rust twin of
+/// `python/compile/merging.py::merge_fixed_r`.
+pub fn merge_fixed_r(tokens: &[f32], sizes: &[f32], t: usize, d: usize, r: usize, k: usize) -> MergeResult {
+    assert_eq!(tokens.len(), t * d);
+    assert_eq!(sizes.len(), t);
+    let te = t - (t % 2);
+    let t2 = te / 2;
+    let r = r.min(t2);
+    if r == 0 {
+        return MergeResult {
+            tokens: tokens.to_vec(),
+            sizes: sizes.to_vec(),
+            slot_map: (0..t).collect(),
+        };
+    }
+    let (scores, best) = match_tokens(tokens, t, d, k);
+    // top-r A tokens by score
+    let mut order: Vec<usize> = (0..t2).collect();
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    let mut merged = vec![false; t2];
+    for &i in order.iter().take(r) {
+        merged[i] = true;
+    }
+    // output slots for kept tokens, in temporal order
+    let mut slot_map = vec![0usize; t];
+    let mut slot = 0usize;
+    let mut kept_slot = vec![usize::MAX; t];
+    for p in 0..t {
+        let is_merged_a = p % 2 == 0 && p < te && merged[p / 2];
+        if !is_merged_a {
+            kept_slot[p] = slot;
+            slot_map[p] = slot;
+            slot += 1;
+        }
+    }
+    debug_assert_eq!(slot, t - r);
+    for i in 0..t2 {
+        if merged[i] {
+            let partner = 2 * best[i] + 1;
+            slot_map[2 * i] = kept_slot[partner];
+        }
+    }
+    // size-weighted scatter-average
+    let out_t = t - r;
+    let mut num = vec![0.0f64; out_t * d];
+    let mut den = vec![0.0f64; out_t];
+    for p in 0..t {
+        let s = slot_map[p];
+        let w = sizes[p] as f64;
+        den[s] += w;
+        for j in 0..d {
+            num[s * d + j] += tokens[p * d + j] as f64 * w;
+        }
+    }
+    let mut out = vec![0.0f32; out_t * d];
+    for s in 0..out_t {
+        for j in 0..d {
+            out[s * d + j] = (num[s * d + j] / den[s]) as f32;
+        }
+    }
+    MergeResult {
+        tokens: out,
+        sizes: den.iter().map(|&x| x as f32).collect(),
+        slot_map,
+    }
+}
+
+/// Clone-to-neighbours unmerge: gather rows through the slot map.
+pub fn unmerge(tokens: &[f32], d: usize, slot_map: &[usize]) -> Vec<f32> {
+    let mut out = vec![0.0f32; slot_map.len() * d];
+    for (p, &s) in slot_map.iter().enumerate() {
+        out[p * d..(p + 1) * d].copy_from_slice(&tokens[s * d..(s + 1) * d]);
+    }
+    out
+}
+
+/// Dynamic merging (§5.5): merge pairs whose similarity exceeds the
+/// threshold; returns (tokens', sizes', effective_token_count).
+pub fn merge_dynamic(tokens: &[f32], sizes: &[f32], t: usize, d: usize, k: usize, threshold: f64) -> (MergeResult, usize) {
+    let te = t - (t % 2);
+    let t2 = te / 2;
+    let (scores, _) = match_tokens(tokens, t, d, k);
+    let r = scores.iter().filter(|&&s| s > threshold).count().min(t2);
+    let res = merge_fixed_r(tokens, sizes, t, d, r, k);
+    let eff = t - r;
+    (res, eff)
+}
+
+// ---------------------------------------------------------------------------
+// Analytic models
+
+/// Similarity-computation complexity of local merging (paper eq. 2):
+/// `t/2 + (k-1)(t-k)` pairwise scores; global merging (`k = t/2`) costs
+/// `t^2/4`.
+pub fn similarity_complexity(t: usize, k: usize) -> usize {
+    let t2 = t / 2;
+    let k = k.clamp(1, t2.max(1));
+    if k >= t2 {
+        t2 * t2
+    } else {
+        t2 + (k - 1) * (t - k)
+    }
+}
+
+/// Upper bound on transformer speed-up from merging half the tokens per
+/// layer (appendix B.1): `3 L 4^{L-1} / (4^L - 1)`.
+pub fn speedup_bound(layers: u32) -> f64 {
+    let l = layers as f64;
+    3.0 * l * 4f64.powi(layers as i32 - 1) / (4f64.powi(layers as i32) - 1.0)
+}
+
+/// Static merge schedule (same rule as the Python side): token counts per
+/// layer for fixed `r`, floor `q`.
+pub fn merge_schedule(t: usize, r: usize, num_layers: usize, q: usize) -> Vec<usize> {
+    let mut counts = vec![t];
+    let mut cur = t;
+    for _ in 0..num_layers {
+        let even = cur - (cur % 2);
+        let step = r.min(even / 2).min(cur.saturating_sub(q));
+        cur -= step;
+        counts.push(cur);
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_tokens(rng: &mut Rng, t: usize, d: usize) -> Vec<f32> {
+        (0..t * d).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn merge_shapes_and_mass() {
+        let mut rng = Rng::new(1);
+        for &(t, d, r, k) in &[(24usize, 8usize, 4usize, 1usize), (24, 8, 8, 3), (25, 4, 6, 12)] {
+            let tokens = rand_tokens(&mut rng, t, d);
+            let sizes = vec![1.0f32; t];
+            let res = merge_fixed_r(&tokens, &sizes, t, d, r, k);
+            assert_eq!(res.tokens.len(), (t - r) * d);
+            assert_eq!(res.sizes.len(), t - r);
+            let total: f32 = res.sizes.iter().sum();
+            assert!((total - t as f32).abs() < 1e-3);
+            // weighted token sum preserved
+            for j in 0..d {
+                let before: f64 = (0..t).map(|p| tokens[p * d + j] as f64).sum();
+                let after: f64 = (0..t - r)
+                    .map(|s| res.tokens[s * d + j] as f64 * res.sizes[s] as f64)
+                    .sum();
+                assert!((before - after).abs() < 1e-3, "axis {j}: {before} vs {after}");
+            }
+        }
+    }
+
+    #[test]
+    fn causal_k1_merges_adjacent_only() {
+        let mut rng = Rng::new(2);
+        let (t, d) = (32, 4);
+        let tokens = rand_tokens(&mut rng, t, d);
+        let res = merge_fixed_r(&tokens, &vec![1.0; t], t, d, 8, 1);
+        for s in 0..t - 8 {
+            let sources: Vec<usize> =
+                (0..t).filter(|&p| res.slot_map[p] == s).collect();
+            let span = sources.iter().max().unwrap() - sources.iter().min().unwrap();
+            assert!(span <= 1, "slot {s} merged non-adjacent positions {sources:?}");
+        }
+    }
+
+    #[test]
+    fn identical_tokens_merge_losslessly() {
+        let (t, d) = (16, 4);
+        let tokens: Vec<f32> = (0..t * d).map(|i| ((i % d) + 1) as f32).collect();
+        let res = merge_fixed_r(&tokens, &vec![1.0; t], t, d, 8, 8);
+        for s in 0..t - 8 {
+            for j in 0..d {
+                assert!((res.tokens[s * d + j] - (j + 1) as f32).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn unmerge_restores_length() {
+        let mut rng = Rng::new(3);
+        let (t, d) = (20, 6);
+        let tokens = rand_tokens(&mut rng, t, d);
+        let res = merge_fixed_r(&tokens, &vec![1.0; t], t, d, 5, 2);
+        let um = unmerge(&res.tokens, d, &res.slot_map);
+        assert_eq!(um.len(), t * d);
+        // kept tokens whose slot holds only them are bit-identical
+        for p in 0..t {
+            let s = res.slot_map[p];
+            if res.sizes[s] == 1.0 {
+                assert_eq!(&um[p * d..(p + 1) * d], &tokens[p * d..(p + 1) * d]);
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_threshold_extremes() {
+        let mut rng = Rng::new(4);
+        let (t, d) = (16, 4);
+        let tokens = rand_tokens(&mut rng, t, d);
+        let (res, eff) = merge_dynamic(&tokens, &vec![1.0; t], t, d, 1, 1.1);
+        assert_eq!(eff, t);
+        assert_eq!(res.tokens, tokens);
+        let (_, eff) = merge_dynamic(&tokens, &vec![1.0; t], t, d, 1, -1.1);
+        assert_eq!(eff, t - t / 2);
+    }
+
+    #[test]
+    fn complexity_matches_eq2() {
+        // k = 1 -> t/2 (linear); k = t/2 -> t^2/4 (quadratic)
+        assert_eq!(similarity_complexity(192, 1), 96);
+        assert_eq!(similarity_complexity(192, 96), 96 * 96);
+        // eq. 2 formula spot check: t=100, k=5 -> 50 + 4*95 = 430
+        assert_eq!(similarity_complexity(100, 5), 430);
+        // monotone in k
+        let mut prev = 0;
+        for k in 1..=96 {
+            let c = similarity_complexity(192, k);
+            assert!(c >= prev);
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn speedup_bound_values() {
+        // B.1: L=1 -> 1.0; grows with L; asymptote 3L/4 slope
+        assert!((speedup_bound(1) - 1.0).abs() < 1e-9);
+        assert!(speedup_bound(2) > 1.5 && speedup_bound(2) < 2.0);
+        assert!(speedup_bound(10) > 7.0);
+        for l in 1..12 {
+            assert!(speedup_bound(l + 1) > speedup_bound(l));
+        }
+    }
+
+    #[test]
+    fn schedule_respects_floor() {
+        let s = merge_schedule(96, 16, 4, 4);
+        assert_eq!(s, vec![96, 80, 64, 48, 32]);
+        let s = merge_schedule(10, 100, 4, 4);
+        assert_eq!(*s.last().unwrap(), 4);
+    }
+
+    #[test]
+    fn matching_respects_band() {
+        let mut rng = Rng::new(5);
+        let (t, d, k) = (40, 4, 3);
+        let tokens = rand_tokens(&mut rng, t, d);
+        let (_, best) = match_tokens(&tokens, t, d, k);
+        for (i, &j) in best.iter().enumerate() {
+            assert!((i as isize - j as isize).unsigned_abs() < k);
+        }
+    }
+}

@@ -1,0 +1,301 @@
+//! PJRT execution engine: loads HLO-text artifacts, binds weights, runs.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin).  One `Engine` owns the
+//! client; each `Model` owns a compiled executable plus its weights
+//! pre-staged as device buffers, so the request hot path does exactly one
+//! host->device transfer per *input* batch and none for weights.
+//!
+//! Interchange is HLO text (`HloModuleProto::from_text_file`) — see
+//! `python/compile/aot.py` for why serialized protos are rejected.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use xla::{ElementType, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::Manifest;
+use super::weights::WeightStore;
+use crate::tensor::Tensor;
+
+pub struct Engine {
+    client: PjRtClient,
+    dir: PathBuf,
+}
+
+impl Engine {
+    /// CPU PJRT engine over an artifact directory.
+    pub fn new(artifact_dir: impl Into<PathBuf>) -> Result<Engine> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Engine { client: client.clone(), dir: artifact_dir.into() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Names of all artifacts present in the directory.
+    pub fn available(&self) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let path = entry?.path();
+            if let Some(name) = path.file_name().and_then(|n| n.to_str()) {
+                if let Some(stem) = name.strip_suffix(".hlo.txt") {
+                    names.push(stem.to_string());
+                }
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+
+    /// Load + compile one artifact (no weights bound yet).
+    pub fn load(&self, name: &str) -> Result<Model> {
+        let manifest = Manifest::load(&self.dir.join(format!("{name}.json")))?;
+        let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        Ok(Model { manifest, exe, client: self.client.clone(), weight_bufs: Vec::new() })
+    }
+
+    /// Load an artifact and bind its identity's weights file from the
+    /// artifact directory (`<identity>.weights.bin`).
+    pub fn load_with_weights(&self, name: &str) -> Result<Model> {
+        let mut model = self.load(name)?;
+        let identity = name.split("__").next().unwrap_or(name);
+        let ws = WeightStore::load(&self.dir.join(format!("{identity}.weights.bin")))?;
+        model.bind_weights(&ws)?;
+        Ok(model)
+    }
+
+    pub fn tensor_to_buffer(&self, t: &Tensor) -> Result<PjRtBuffer> {
+        let buf = match t {
+            Tensor::F32 { shape, data } => {
+                self.client.buffer_from_host_buffer::<f32>(data, shape, None)
+            }
+            Tensor::I32 { shape, data } => {
+                self.client.buffer_from_host_buffer::<i32>(data, shape, None)
+            }
+        };
+        buf.map_err(|e| anyhow!("host->device transfer: {e:?}"))
+    }
+}
+
+pub struct Model {
+    pub manifest: Manifest,
+    exe: PjRtLoadedExecutable,
+    client: PjRtClient,
+    weight_bufs: Vec<PjRtBuffer>,
+}
+
+impl Model {
+    /// Stage weights on device in manifest parameter order, validating
+    /// every shape against the manifest.
+    pub fn bind_weights(&mut self, ws: &WeightStore) -> Result<()> {
+        let mut bufs = Vec::with_capacity(self.manifest.params.len());
+        for spec in &self.manifest.params {
+            let t = ws
+                .get(&spec.name)
+                .with_context(|| format!("binding weights for {}", self.manifest.name))?;
+            ensure!(
+                t.shape() == spec.shape.as_slice(),
+                "weight {} shape {:?} != manifest {:?}",
+                spec.name,
+                t.shape(),
+                spec.shape
+            );
+            let buf = match t {
+                Tensor::F32 { shape, data } => {
+                    self.client.buffer_from_host_buffer::<f32>(data, shape, None)
+                }
+                Tensor::I32 { shape, data } => {
+                    self.client.buffer_from_host_buffer::<i32>(data, shape, None)
+                }
+            }
+            .map_err(|e| anyhow!("staging weight {}: {e:?}", spec.name))?;
+            bufs.push(buf);
+        }
+        self.weight_bufs = bufs;
+        Ok(())
+    }
+
+    pub fn has_weights(&self) -> bool {
+        !self.weight_bufs.is_empty() || self.manifest.params.is_empty()
+    }
+
+    /// Execute with data inputs in manifest input order; returns output
+    /// tensors in manifest output order.
+    pub fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        ensure!(self.has_weights(), "{}: weights not bound", self.manifest.name);
+        ensure!(
+            inputs.len() == self.manifest.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.manifest.name,
+            self.manifest.inputs.len(),
+            inputs.len()
+        );
+        for (t, spec) in inputs.iter().zip(&self.manifest.inputs) {
+            ensure!(
+                t.shape() == spec.shape.as_slice() && t.dtype() == spec.dtype,
+                "{}: input {} got {:?}/{} want {:?}/{}",
+                self.manifest.name,
+                spec.name,
+                t.shape(),
+                t.dtype(),
+                spec.shape,
+                spec.dtype
+            );
+        }
+        let mut input_bufs = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            let buf = match t {
+                Tensor::F32 { shape, data } => {
+                    self.client.buffer_from_host_buffer::<f32>(data, shape, None)
+                }
+                Tensor::I32 { shape, data } => {
+                    self.client.buffer_from_host_buffer::<i32>(data, shape, None)
+                }
+            }
+            .map_err(|e| anyhow!("input transfer: {e:?}"))?;
+            input_bufs.push(buf);
+        }
+        let mut args: Vec<&PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.extend(input_bufs.iter());
+
+        let results = self
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.manifest.name))?;
+        ensure!(!results.is_empty() && !results[0].is_empty(), "empty execution result");
+
+        let mut outputs = Vec::new();
+        if results[0].len() == 1 {
+            // single tuple buffer (return_tuple=True lowering)
+            let lit = results[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+            let parts = untuple(lit)?;
+            for part in parts {
+                outputs.push(literal_to_tensor(&part)?);
+            }
+        } else {
+            for buf in &results[0] {
+                let lit = buf.to_literal_sync().map_err(|e| anyhow!("fetch: {e:?}"))?;
+                outputs.push(literal_to_tensor(&lit)?);
+            }
+        }
+        ensure!(
+            outputs.len() == self.manifest.outputs.len(),
+            "{}: got {} outputs, manifest says {}",
+            self.manifest.name,
+            outputs.len(),
+            self.manifest.outputs.len()
+        );
+        Ok(outputs)
+    }
+
+    /// Buffer-level execute for device-resident pipelines (the training
+    /// hot path): takes borrowed device buffers in full argument order
+    /// (params first, then data inputs) and returns the raw output
+    /// buffers without any host transfer.  Requires the artifact to have
+    /// been lowered with untupled outputs (aot.py does this) so PJRT
+    /// splits the root tuple into one buffer per output.
+    pub fn execute_buffers(&self, args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>> {
+        let results = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.manifest.name))?;
+        ensure!(!results.is_empty(), "empty execution result");
+        Ok(results.into_iter().next().unwrap())
+    }
+
+    /// Stage a host tensor as a device buffer on this model's client.
+    pub fn stage(&self, t: &Tensor) -> Result<PjRtBuffer> {
+        let buf = match t {
+            Tensor::F32 { shape, data } => {
+                self.client.buffer_from_host_buffer::<f32>(data, shape, None)
+            }
+            Tensor::I32 { shape, data } => {
+                self.client.buffer_from_host_buffer::<i32>(data, shape, None)
+            }
+        };
+        buf.map_err(|e| anyhow!("host->device transfer: {e:?}"))
+    }
+
+    /// Fetch one device buffer back to a host tensor.
+    pub fn fetch(&self, buf: &PjRtBuffer) -> Result<Tensor> {
+        let lit = buf.to_literal_sync().map_err(|e| anyhow!("fetch: {e:?}"))?;
+        literal_to_tensor(&lit)
+    }
+
+    /// The staged weight buffers (manifest param order).
+    pub fn weight_buffers(&self) -> &[PjRtBuffer] {
+        &self.weight_bufs
+    }
+
+    /// Read current weights back as a store keyed by manifest param names
+    /// (used after training to persist updated parameters).
+    pub fn weights_to_store(&self) -> Result<WeightStore> {
+        let mut ws = WeightStore::default();
+        for (spec, buf) in self.manifest.params.iter().zip(&self.weight_bufs) {
+            let lit = buf.to_literal_sync().map_err(|e| anyhow!("fetch weight: {e:?}"))?;
+            ws.insert(spec.name.clone(), literal_to_tensor(&lit)?);
+        }
+        Ok(ws)
+    }
+
+    /// Replace the staged weights from tensors in manifest param order
+    /// (the training loop's update path).
+    pub fn set_weights_ordered(&mut self, tensors: &[Tensor]) -> Result<()> {
+        ensure!(tensors.len() == self.manifest.params.len(), "weight count mismatch");
+        let mut bufs = Vec::with_capacity(tensors.len());
+        for (t, spec) in tensors.iter().zip(&self.manifest.params) {
+            ensure!(t.shape() == spec.shape.as_slice(), "weight {} shape", spec.name);
+            let buf = match t {
+                Tensor::F32 { shape, data } => {
+                    self.client.buffer_from_host_buffer::<f32>(data, shape, None)
+                }
+                Tensor::I32 { shape, data } => {
+                    self.client.buffer_from_host_buffer::<i32>(data, shape, None)
+                }
+            }
+            .map_err(|e| anyhow!("staging weight: {e:?}"))?;
+            bufs.push(buf);
+        }
+        self.weight_bufs = bufs;
+        Ok(())
+    }
+}
+
+fn untuple(lit: Literal) -> Result<Vec<Literal>> {
+    let shape = lit.shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+    if shape.is_tuple() {
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+    } else {
+        Ok(vec![lit])
+    }
+}
+
+pub fn literal_to_tensor(lit: &Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("array shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        ElementType::F32 => {
+            let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
+            Tensor::from_f32(&dims, data)
+        }
+        ElementType::S32 => {
+            let data = lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))?;
+            Tensor::from_i32(&dims, data)
+        }
+        other => bail!("unsupported output element type {other:?}"),
+    }
+}

@@ -1,0 +1,124 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.  One JSON per HLO artifact listing the exact flattened
+//! parameter order (params first, then data inputs), output specs, the
+//! model config, and experiment metadata (token counts per layer, batch).
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn parse(v: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: v.req("name")?.as_str()?.to_string(),
+            shape: v.req("shape")?.usize_list()?,
+            dtype: v.req("dtype")?.as_str()?.to_string(),
+        })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub family: String,
+    pub params: Vec<TensorSpec>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub config: Json,
+    pub meta: Json,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing manifest {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.req(key)?.as_arr()?.iter().map(TensorSpec::parse).collect()
+        };
+        let m = Manifest {
+            name: v.req("name")?.as_str()?.to_string(),
+            family: v.req("family")?.as_str()?.to_string(),
+            params: specs("params")?,
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            config: v.req("config")?.clone(),
+            meta: v.req("meta")?.clone(),
+        };
+        ensure!(!m.outputs.is_empty(), "manifest has no outputs");
+        Ok(m)
+    }
+
+    /// Batch size baked into the artifact (from meta).
+    pub fn batch(&self) -> usize {
+        self.meta.get("batch").and_then(|b| b.as_usize().ok()).unwrap_or(1)
+    }
+
+    /// Per-layer encoder token counts (merge schedule), if present.
+    pub fn enc_tokens(&self) -> Option<Vec<usize>> {
+        self.meta
+            .get("enc_tokens")
+            .or_else(|| self.meta.get("tokens"))
+            .and_then(|t| t.usize_list().ok())
+    }
+
+    pub fn config_usize(&self, key: &str) -> Option<usize> {
+        self.config.get(key).and_then(|v| v.as_usize().ok())
+    }
+
+    pub fn config_str(&self, key: &str) -> Option<&str> {
+        self.config.get(key).and_then(|v| v.as_str().ok())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "fc_transformer_L2__r16", "family": "forecast",
+      "config": {"arch": "transformer", "m": 192, "p": 96, "r_enc": 16},
+      "params": [{"name": "enc/0/attn/wq/w", "shape": [64, 64], "dtype": "f32"}],
+      "inputs": [{"name": "x", "shape": [8, 192, 7], "dtype": "f32"}],
+      "outputs": [{"name": "out0", "shape": [8, 96, 7], "dtype": "f32"}],
+      "meta": {"batch": 8, "enc_tokens": [192, 176, 160]}
+    }"#;
+
+    #[test]
+    fn parses_fields() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "fc_transformer_L2__r16");
+        assert_eq!(m.params[0].elements(), 64 * 64);
+        assert_eq!(m.inputs[0].shape, vec![8, 192, 7]);
+        assert_eq!(m.batch(), 8);
+        assert_eq!(m.enc_tokens().unwrap(), vec![192, 176, 160]);
+        assert_eq!(m.config_usize("m"), Some(192));
+        assert_eq!(m.config_str("arch"), Some("transformer"));
+    }
+
+    #[test]
+    fn rejects_missing_outputs() {
+        let bad = SAMPLE.replace(
+            r#""outputs": [{"name": "out0", "shape": [8, 96, 7], "dtype": "f32"}]"#,
+            r#""outputs": []"#,
+        );
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

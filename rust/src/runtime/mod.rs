@@ -1,0 +1,14 @@
+//! Runtime layer: PJRT engine, artifact manifests, weight store.
+//!
+//! `Engine` (engine.rs) compiles HLO-text artifacts produced by
+//! `python/compile/aot.py` on the PJRT CPU client and executes them with
+//! weights staged as device buffers.  `Manifest` (manifest.rs) is the
+//! Python<->Rust contract; `WeightStore` (weights.rs) the weight format.
+
+pub mod engine;
+pub mod manifest;
+pub mod weights;
+
+pub use engine::{Engine, Model};
+pub use manifest::{Manifest, TensorSpec};
+pub use weights::WeightStore;

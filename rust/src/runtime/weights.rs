@@ -1,0 +1,136 @@
+//! Safetensors-lite weight store (mirror of `python/compile/formats.py`).
+//!
+//! Layout: `u64 LE header-length | JSON header | raw data`.  The header
+//! maps tensor name -> {dtype, shape, data_offsets}.  Names use the
+//! tree-flatten path convention (`enc/0/attn/wq/w`) so they bind 1:1 to
+//! manifest param entries.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::json::Json;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug, Default)]
+pub struct WeightStore {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl WeightStore {
+    pub fn load(path: &Path) -> Result<WeightStore> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening weights {}", path.display()))?;
+        let mut len_buf = [0u8; 8];
+        f.read_exact(&mut len_buf)?;
+        let hlen = u64::from_le_bytes(len_buf) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = Json::parse(std::str::from_utf8(&hbuf)?)?;
+        let mut data = Vec::new();
+        f.read_to_end(&mut data)?;
+
+        let mut tensors = BTreeMap::new();
+        for (name, spec) in header.as_obj()? {
+            let shape = spec.req("shape")?.usize_list()?;
+            let offs = spec.req("data_offsets")?.usize_list()?;
+            ensure!(offs.len() == 2 && offs[1] <= data.len(), "bad offsets for {name}");
+            let bytes = &data[offs[0]..offs[1]];
+            let t = match spec.req("dtype")?.as_str()? {
+                "f32" => {
+                    ensure!(bytes.len() % 4 == 0, "misaligned f32 data for {name}");
+                    let vals: Vec<f32> = bytes
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    Tensor::from_f32(&shape, vals)?
+                }
+                "i32" => {
+                    let vals: Vec<i32> = bytes
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    Tensor::from_i32(&shape, vals)?
+                }
+                other => bail!("unsupported dtype {other} for {name}"),
+            };
+            tensors.insert(name.clone(), t);
+        }
+        Ok(WeightStore { tensors })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut header = BTreeMap::new();
+        let mut blobs: Vec<&[u8]> = Vec::new();
+        let mut raw: Vec<Vec<u8>> = Vec::new();
+        let mut offset = 0usize;
+        for (name, t) in &self.tensors {
+            let bytes: Vec<u8> = match t {
+                Tensor::F32 { data, .. } => {
+                    data.iter().flat_map(|v| v.to_le_bytes()).collect()
+                }
+                Tensor::I32 { data, .. } => {
+                    data.iter().flat_map(|v| v.to_le_bytes()).collect()
+                }
+            };
+            header.insert(
+                name.clone(),
+                Json::obj(vec![
+                    ("dtype", Json::str(t.dtype())),
+                    ("shape", Json::arr(t.shape().iter().map(|&d| Json::num(d as f64)).collect())),
+                    (
+                        "data_offsets",
+                        Json::arr(vec![Json::num(offset as f64), Json::num((offset + bytes.len()) as f64)]),
+                    ),
+                ]),
+            );
+            offset += bytes.len();
+            raw.push(bytes);
+        }
+        for b in &raw {
+            blobs.push(b);
+        }
+        let hjson = Json::Obj(header).to_string();
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating weights {}", path.display()))?;
+        f.write_all(&(hjson.len() as u64).to_le_bytes())?;
+        f.write_all(hjson.as_bytes())?;
+        for b in blobs {
+            f.write_all(b)?;
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("weight {name:?} not found"))
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        self.tensors.insert(name.into(), t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("tomers_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let mut ws = WeightStore::default();
+        ws.insert("a/w", Tensor::from_f32(&[2, 2], vec![1.0, -2.5, 3.25, 0.0]).unwrap());
+        ws.insert("b/ids", Tensor::from_i32(&[3], vec![7, -9, 11]).unwrap());
+        ws.save(&path).unwrap();
+        let rt = WeightStore::load(&path).unwrap();
+        assert_eq!(rt.tensors.len(), 2);
+        assert_eq!(rt.get("a/w").unwrap(), ws.get("a/w").unwrap());
+        assert_eq!(rt.get("b/ids").unwrap(), ws.get("b/ids").unwrap());
+        assert!(rt.get("missing").is_err());
+    }
+}

@@ -1,0 +1,356 @@
+//! Signal-processing substrate (paper §6.2 predictors + fig. 6 baseline).
+//!
+//! Provides the dataset statistics the paper uses to *predict* token-merging
+//! benefit — **spectral entropy** and **total harmonic distortion** — plus
+//! the Gaussian low-pass filter of the fig. 6 comparison and an FFT /
+//! autocorrelation toolbox used by the data generators and the merge-policy
+//! planner.  Implemented from scratch (radix-2 iterative FFT with Bluestein
+//! fallback for non-power-of-two lengths).
+
+use std::f64::consts::PI;
+
+/// Complex number (minimal — only what the FFT needs).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl C64 {
+    pub fn new(re: f64, im: f64) -> Self {
+        Self { re, im }
+    }
+    pub fn mul(self, o: C64) -> C64 {
+        C64::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
+    }
+    pub fn add(self, o: C64) -> C64 {
+        C64::new(self.re + o.re, self.im + o.im)
+    }
+    pub fn sub(self, o: C64) -> C64 {
+        C64::new(self.re - o.re, self.im - o.im)
+    }
+    pub fn conj(self) -> C64 {
+        C64::new(self.re, -self.im)
+    }
+    pub fn norm_sq(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+    pub fn scale(self, s: f64) -> C64 {
+        C64::new(self.re * s, self.im * s)
+    }
+    fn cis(theta: f64) -> C64 {
+        C64::new(theta.cos(), theta.sin())
+    }
+}
+
+/// In-place radix-2 Cooley–Tukey FFT; `inverse` applies 1/n scaling.
+/// Panics if `x.len()` is not a power of two (callers use `fft` below).
+fn fft_pow2(x: &mut [C64], inverse: bool) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "fft_pow2 needs power-of-two length");
+    // bit reversal permutation
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            x.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * PI / len as f64;
+        let wl = C64::cis(ang);
+        for chunk in x.chunks_mut(len) {
+            let mut w = C64::new(1.0, 0.0);
+            let half = len / 2;
+            for i in 0..half {
+                let u = chunk[i];
+                let v = chunk[i + half].mul(w);
+                chunk[i] = u.add(v);
+                chunk[i + half] = u.sub(v);
+                w = w.mul(wl);
+            }
+        }
+        len <<= 1;
+    }
+    if inverse {
+        let inv = 1.0 / n as f64;
+        for v in x.iter_mut() {
+            *v = v.scale(inv);
+        }
+    }
+}
+
+/// FFT of arbitrary length (Bluestein's algorithm for non-power-of-two).
+pub fn fft(input: &[C64], inverse: bool) -> Vec<C64> {
+    let n = input.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if n.is_power_of_two() {
+        let mut x = input.to_vec();
+        fft_pow2(&mut x, inverse);
+        return x;
+    }
+    // Bluestein: express DFT as a convolution of length >= 2n-1.
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let m = (2 * n - 1).next_power_of_two();
+    let mut a = vec![C64::default(); m];
+    let mut b = vec![C64::default(); m];
+    let mut chirp = vec![C64::default(); n];
+    for k in 0..n {
+        // k^2 mod 2n avoids precision loss for large k
+        let e = (k * k) % (2 * n);
+        chirp[k] = C64::cis(sign * PI * e as f64 / n as f64);
+        a[k] = input[k].mul(chirp[k]);
+        b[k] = chirp[k].conj();
+        if k > 0 {
+            b[m - k] = chirp[k].conj();
+        }
+    }
+    fft_pow2(&mut a, false);
+    fft_pow2(&mut b, false);
+    for i in 0..m {
+        a[i] = a[i].mul(b[i]);
+    }
+    fft_pow2(&mut a, true);
+    let mut out = vec![C64::default(); n];
+    for k in 0..n {
+        out[k] = a[k].mul(chirp[k]);
+        if inverse {
+            out[k] = out[k].scale(1.0 / n as f64);
+        }
+    }
+    out
+}
+
+/// Real-input FFT magnitude-squared spectrum (one-sided, n/2+1 bins).
+pub fn power_spectrum(x: &[f32]) -> Vec<f64> {
+    let n = x.len();
+    let cx: Vec<C64> = x.iter().map(|&v| C64::new(v as f64, 0.0)).collect();
+    let f = fft(&cx, false);
+    (0..n / 2 + 1).map(|i| f[i].norm_sq() / n as f64).collect()
+}
+
+/// Spectral entropy in bits (paper table 4): Shannon entropy of the
+/// normalized one-sided power spectrum, DC excluded.
+pub fn spectral_entropy(x: &[f32]) -> f64 {
+    let ps = power_spectrum(x);
+    let body = &ps[1..]; // exclude DC: the paper's statistic concerns structure
+    let total: f64 = body.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    -body
+        .iter()
+        .filter(|&&p| p > 0.0)
+        .map(|&p| {
+            let q = p / total;
+            q * q.log2()
+        })
+        .sum::<f64>()
+}
+
+/// Total harmonic distortion in percent (paper table 4): ratio of the
+/// energy in harmonics 2..=n_harmonics of the strongest component to the
+/// fundamental's energy.
+pub fn thd(x: &[f32], n_harmonics: usize) -> f64 {
+    let ps = power_spectrum(x);
+    if ps.len() < 3 {
+        return 0.0;
+    }
+    // fundamental = strongest non-DC bin
+    let (f0, p0) = ps
+        .iter()
+        .enumerate()
+        .skip(1)
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, &p)| (i, p))
+        .unwrap();
+    if p0 <= 0.0 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for k in 2..=n_harmonics {
+        let bin = f0 * k;
+        if bin < ps.len() {
+            h += ps[bin];
+        }
+    }
+    100.0 * (h / p0).sqrt()
+}
+
+/// Gaussian low-pass filter (fig. 6 baseline), edge-replicated.
+pub fn gaussian_filter(x: &[f32], sigma: f64) -> Vec<f32> {
+    if sigma <= 0.0 {
+        return x.to_vec();
+    }
+    let radius = (3.0 * sigma).ceil() as isize;
+    let mut kernel = Vec::with_capacity((2 * radius + 1) as usize);
+    let mut sum = 0.0;
+    for i in -radius..=radius {
+        let w = (-(i as f64).powi(2) / (2.0 * sigma * sigma)).exp();
+        kernel.push(w);
+        sum += w;
+    }
+    for w in kernel.iter_mut() {
+        *w /= sum;
+    }
+    let n = x.len() as isize;
+    (0..n)
+        .map(|i| {
+            let mut acc = 0.0;
+            for (j, w) in kernel.iter().enumerate() {
+                let idx = (i + j as isize - radius).clamp(0, n - 1);
+                acc += w * x[idx as usize] as f64;
+            }
+            acc as f32
+        })
+        .collect()
+}
+
+/// Biased autocorrelation at lags 0..max_lag (inclusive).
+pub fn autocorrelation(x: &[f32], max_lag: usize) -> Vec<f64> {
+    let n = x.len();
+    let mean = x.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+    let var: f64 = x.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>();
+    (0..=max_lag.min(n.saturating_sub(1)))
+        .map(|lag| {
+            if var <= 0.0 {
+                return 0.0;
+            }
+            let mut acc = 0.0;
+            for i in 0..n - lag {
+                acc += (x[i] as f64 - mean) * (x[i + lag] as f64 - mean);
+            }
+            acc / var
+        })
+        .collect()
+}
+
+/// Mean pairwise cosine similarity of consecutive rows of a (t, d) matrix —
+/// the planner's cheap redundancy statistic (appendix E.6 fig. 19).
+pub fn adjacent_cosine_similarity(rows: &[f32], t: usize, d: usize) -> f64 {
+    if t < 2 {
+        return 1.0;
+    }
+    let mut acc = 0.0;
+    for i in 0..t - 1 {
+        let a = &rows[i * d..(i + 1) * d];
+        let b = &rows[(i + 1) * d..(i + 2) * d];
+        let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+        for j in 0..d {
+            dot += a[j] as f64 * b[j] as f64;
+            na += (a[j] as f64).powi(2);
+            nb += (b[j] as f64).powi(2);
+        }
+        acc += dot / (na.sqrt() * nb.sqrt() + 1e-12);
+    }
+    acc / (t - 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sine(n: usize, cycles: f64, amp: f64) -> Vec<f32> {
+        (0..n)
+            .map(|i| (amp * (2.0 * PI * cycles * i as f64 / n as f64).sin()) as f32)
+            .collect()
+    }
+
+    #[test]
+    fn fft_roundtrip_pow2() {
+        let x: Vec<C64> = (0..64).map(|i| C64::new(i as f64, -(i as f64) / 3.0)).collect();
+        let y = fft(&fft(&x, false), true);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a.re - b.re).abs() < 1e-9 && (a.im - b.im).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fft_roundtrip_bluestein() {
+        let x: Vec<C64> = (0..100).map(|i| C64::new((i as f64).sin(), 0.0)).collect();
+        let y = fft(&fft(&x, false), true);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a.re - b.re).abs() < 1e-8, "{} vs {}", a.re, b.re);
+        }
+    }
+
+    #[test]
+    fn fft_matches_naive_dft() {
+        let x: Vec<C64> = (0..24).map(|i| C64::new((i as f64 * 0.7).cos(), 0.3 * i as f64)).collect();
+        let fast = fft(&x, false);
+        for k in 0..24 {
+            let mut acc = C64::default();
+            for (j, v) in x.iter().enumerate() {
+                acc = acc.add(v.mul(C64::cis(-2.0 * PI * (k * j) as f64 / 24.0)));
+            }
+            assert!((acc.re - fast[k].re).abs() < 1e-8);
+            assert!((acc.im - fast[k].im).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn spectrum_peaks_at_sine_frequency() {
+        let x = sine(256, 8.0, 1.0);
+        let ps = power_spectrum(&x);
+        let peak = ps.iter().enumerate().skip(1).max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        assert_eq!(peak, 8);
+    }
+
+    #[test]
+    fn entropy_orders_noise_above_sine() {
+        let clean = sine(512, 4.0, 1.0);
+        let mut rng = crate::util::Rng::new(3);
+        let noisy: Vec<f32> = (0..512).map(|_| rng.normal() as f32).collect();
+        assert!(spectral_entropy(&noisy) > spectral_entropy(&clean) + 2.0);
+    }
+
+    #[test]
+    fn thd_detects_harmonics() {
+        let n = 512;
+        let clean = sine(n, 4.0, 1.0);
+        let distorted: Vec<f32> = (0..n)
+            .map(|i| {
+                let t = 2.0 * PI * 4.0 * i as f64 / n as f64;
+                (t.sin() + 0.4 * (2.0 * t).sin() + 0.3 * (3.0 * t).sin()) as f32
+            })
+            .collect();
+        assert!(thd(&distorted, 8) > thd(&clean, 8) + 20.0);
+    }
+
+    #[test]
+    fn gaussian_reduces_noise_energy() {
+        let mut rng = crate::util::Rng::new(9);
+        let x: Vec<f32> = (0..256).map(|_| rng.normal() as f32).collect();
+        let y = gaussian_filter(&x, 2.0);
+        let e = |v: &[f32]| v.iter().map(|&a| (a as f64).powi(2)).sum::<f64>();
+        assert!(e(&y) < 0.5 * e(&x));
+        assert_eq!(gaussian_filter(&x, 0.0), x);
+    }
+
+    #[test]
+    fn autocorr_periodic_signal() {
+        let x = sine(256, 8.0, 1.0); // period 32
+        let ac = autocorrelation(&x, 64);
+        assert!((ac[0] - 1.0).abs() < 1e-9);
+        // biased estimator scales by (n - lag)/n: 224/256 = 0.875
+        assert!(ac[32] > 0.85, "ac[32]={}", ac[32]);
+        assert!(ac[16] < -0.85, "ac[16]={}", ac[16]);
+    }
+
+    #[test]
+    fn adjacent_similarity_bounds() {
+        let rows = vec![1.0f32, 0.0, 1.0, 0.0, 1.0, 0.0];
+        assert!((adjacent_cosine_similarity(&rows, 3, 2) - 1.0).abs() < 1e-9);
+        let anti = vec![1.0f32, 0.0, -1.0, 0.0];
+        assert!((adjacent_cosine_similarity(&anti, 2, 2) + 1.0).abs() < 1e-9);
+    }
+}

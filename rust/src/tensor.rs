@@ -1,0 +1,187 @@
+//! Host tensor type shared by the runtime, data generators and metrics.
+//!
+//! Two dtypes are enough for the whole system (f32 activations/weights,
+//! i32 token ids / labels / slot maps); conversions to/from `xla::Literal`
+//! live in `runtime::engine`.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn zeros_f32(shape: &[usize]) -> Tensor {
+        Tensor::F32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        if shape.iter().product::<usize>() != data.len() {
+            bail!("shape {:?} does not match data len {}", shape, data.len());
+        }
+        Ok(Tensor::F32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Result<Tensor> {
+        if shape.iter().product::<usize>() != data.len() {
+            bail!("shape {:?} does not match data len {}", shape, data.len());
+        }
+        Ok(Tensor::I32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn scalar_f32(x: f32) -> Tensor {
+        Tensor::F32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Tensor::F32 { .. } => "f32",
+            Tensor::I32 { .. } => "i32",
+        }
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor, got {}", self.dtype()),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor, got {}", self.dtype()),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor, got {}", self.dtype()),
+        }
+    }
+
+    /// Row `i` of a rank>=1 tensor as a flat slice (outermost axis index).
+    pub fn row_f32(&self, i: usize) -> Result<&[f32]> {
+        let shape = self.shape();
+        if shape.is_empty() {
+            bail!("scalar has no rows");
+        }
+        let row = self.len() / shape[0];
+        Ok(&self.f32s()?[i * row..(i + 1) * row])
+    }
+
+    /// Reshape in place (same element count).
+    pub fn reshape(&mut self, shape: &[usize]) -> Result<()> {
+        if shape.iter().product::<usize>() != self.len() {
+            bail!("reshape {:?} -> {:?} mismatch", self.shape(), shape);
+        }
+        match self {
+            Tensor::F32 { shape: s, .. } | Tensor::I32 { shape: s, .. } => {
+                *s = shape.to_vec()
+            }
+        }
+        Ok(())
+    }
+
+    /// Stack rank-R tensors along a new outermost axis.
+    pub fn stack(rows: &[Tensor]) -> Result<Tensor> {
+        if rows.is_empty() {
+            bail!("cannot stack zero tensors");
+        }
+        let inner = rows[0].shape().to_vec();
+        let mut shape = vec![rows.len()];
+        shape.extend_from_slice(&inner);
+        match &rows[0] {
+            Tensor::F32 { .. } => {
+                let mut data = Vec::with_capacity(shape.iter().product());
+                for r in rows {
+                    if r.shape() != inner.as_slice() {
+                        bail!("ragged stack: {:?} vs {:?}", r.shape(), inner);
+                    }
+                    data.extend_from_slice(r.f32s()?);
+                }
+                Tensor::from_f32(&shape, data)
+            }
+            Tensor::I32 { .. } => {
+                let mut data = Vec::with_capacity(shape.iter().product());
+                for r in rows {
+                    if r.shape() != inner.as_slice() {
+                        bail!("ragged stack: {:?} vs {:?}", r.shape(), inner);
+                    }
+                    data.extend_from_slice(r.i32s()?);
+                }
+                Tensor::from_i32(&shape, data)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_access() {
+        let t = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.row_f32(1).unwrap(), &[4., 5., 6.]);
+        assert_eq!(t.dtype(), "f32");
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::from_f32(&[2, 2], vec![1.0]).is_err());
+        assert!(Tensor::from_i32(&[3], vec![1, 2]).is_err());
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let mut t = Tensor::zeros_f32(&[4, 2]);
+        t.reshape(&[2, 4]).unwrap();
+        assert_eq!(t.shape(), &[2, 4]);
+        assert!(t.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn stack_builds_batch() {
+        let a = Tensor::from_f32(&[2], vec![1., 2.]).unwrap();
+        let b = Tensor::from_f32(&[2], vec![3., 4.]).unwrap();
+        let s = Tensor::stack(&[a, b]).unwrap();
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.f32s().unwrap(), &[1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn stack_rejects_ragged() {
+        let a = Tensor::zeros_f32(&[2]);
+        let b = Tensor::zeros_f32(&[3]);
+        assert!(Tensor::stack(&[a, b]).is_err());
+    }
+
+    #[test]
+    fn dtype_guards() {
+        let t = Tensor::from_i32(&[2], vec![1, 2]).unwrap();
+        assert!(t.f32s().is_err());
+        assert!(t.i32s().is_ok());
+    }
+}

@@ -1,0 +1,175 @@
+//! Training driver: Rust runs the loop, the AOT `*_train` artifact runs
+//! the fused fwd+bwd+Adam update.
+//!
+//! Artifact contract (manifest order):
+//!   inputs  = [params..., m..., v..., step, x, y]
+//!   outputs = [params'..., m'..., v'..., loss]
+//! where for *chunked* artifacts (meta.chunk = K > 1) the data inputs are
+//! stacked `x (K, b, ...)`, `y (K, b, ...)` and the loss output is `(K,)`:
+//! the graph scans K optimiser steps per execution (EXPERIMENTS.md §Perf —
+//! PJRT 0.5.1 returns root tuples as a single buffer, so device-resident
+//! state is impossible; chunking amortises the mandatory host round-trip
+//! over K steps instead).
+
+use anyhow::{ensure, Result};
+
+use crate::runtime::{Model, WeightStore};
+use crate::tensor::Tensor;
+
+pub struct TrainReport {
+    pub losses: Vec<f64>,
+    pub steps: usize,
+    pub final_weights: WeightStore,
+    pub seconds: f64,
+}
+
+/// Run up to `steps` optimiser steps, pulling batches from
+/// `next_batch(step)`.  `on_log(step, loss)` returning `false` stops early
+/// (at chunk granularity for chunked artifacts).
+pub fn train_loop(
+    model: &mut Model,
+    init: &WeightStore,
+    steps: usize,
+    mut next_batch: impl FnMut(usize) -> (Tensor, Tensor),
+    mut on_log: impl FnMut(usize, f64) -> bool,
+) -> Result<TrainReport> {
+    let n_params = model.manifest.params.len();
+    ensure!(
+        model.manifest.inputs.len() == 2 * n_params + 3,
+        "not a train artifact: {} inputs for {} params",
+        model.manifest.inputs.len(),
+        n_params
+    );
+    ensure!(
+        model.manifest.outputs.len() == 3 * n_params + 1,
+        "not a train artifact: wrong output arity"
+    );
+    let chunk = model
+        .manifest
+        .meta
+        .get("chunk")
+        .and_then(|c| c.as_usize().ok())
+        .unwrap_or(1)
+        .max(1);
+
+    // Host-side state in manifest param order.
+    let mut params: Vec<Tensor> = model
+        .manifest
+        .params
+        .iter()
+        .map(|spec| init.get(&spec.name).cloned())
+        .collect::<Result<_>>()?;
+    let mut m_state: Vec<Tensor> = model
+        .manifest
+        .params
+        .iter()
+        .map(|spec| Tensor::zeros_f32(&spec.shape))
+        .collect();
+    let mut v_state = m_state.clone();
+
+    let t0 = std::time::Instant::now();
+    let mut losses = Vec::with_capacity(steps);
+    let mut done = 0usize;
+    'outer: while done < steps {
+        // Assemble one (possibly chunked) execution.
+        let (x, y) = if chunk == 1 {
+            next_batch(done)
+        } else {
+            let mut xs = Vec::with_capacity(chunk);
+            let mut ys = Vec::with_capacity(chunk);
+            for k in 0..chunk {
+                let (x, y) = next_batch(done + k);
+                xs.push(x);
+                ys.push(y);
+            }
+            (Tensor::stack(&xs)?, Tensor::stack(&ys)?)
+        };
+        model.set_weights_ordered(&params)?;
+        let mut inputs = Vec::with_capacity(2 * n_params + 3);
+        inputs.extend(m_state.iter().cloned());
+        inputs.extend(v_state.iter().cloned());
+        inputs.push(Tensor::scalar_f32(done as f32));
+        inputs.push(x);
+        inputs.push(y);
+        let outs = model.execute(&inputs)?;
+        params = outs[..n_params].to_vec();
+        m_state = outs[n_params..2 * n_params].to_vec();
+        v_state = outs[2 * n_params..3 * n_params].to_vec();
+        let loss_out = outs[3 * n_params].f32s()?;
+        // chunked artifacts quantize the step count up to a chunk multiple:
+        // every loss in the chunk was computed, so all are recorded.
+        let mut stop = false;
+        for &loss in loss_out.iter().take(chunk) {
+            losses.push(loss as f64);
+            done += 1;
+            if !on_log(done - 1, loss as f64) {
+                stop = true;
+            }
+        }
+        if stop || done >= steps {
+            break 'outer;
+        }
+    }
+
+    let mut final_weights = WeightStore::default();
+    for (spec, t) in model.manifest.params.iter().zip(&params) {
+        final_weights.insert(spec.name.clone(), t.clone());
+    }
+    // Leave the trained weights bound for immediate evaluation.
+    model.set_weights_ordered(&params)?;
+    Ok(TrainReport { losses, steps: done, final_weights, seconds: t0.elapsed().as_secs_f64() })
+}
+
+/// Simple early-stopping helper (patience on a smoothed loss).
+pub struct EarlyStop {
+    best: f64,
+    since_best: usize,
+    patience: usize,
+}
+
+impl EarlyStop {
+    pub fn new(patience: usize) -> EarlyStop {
+        EarlyStop { best: f64::INFINITY, since_best: 0, patience }
+    }
+
+    /// Feed a metric; returns `false` when patience is exhausted.
+    pub fn keep_going(&mut self, metric: f64) -> bool {
+        if metric < self.best - 1e-9 {
+            self.best = metric;
+            self.since_best = 0;
+        } else {
+            self.since_best += 1;
+        }
+        self.since_best <= self.patience
+    }
+
+    pub fn best(&self) -> f64 {
+        self.best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn early_stop_triggers_after_patience() {
+        let mut es = EarlyStop::new(2);
+        assert!(es.keep_going(1.0));
+        assert!(es.keep_going(0.9));
+        assert!(es.keep_going(0.95)); // 1 since best
+        assert!(es.keep_going(0.94)); // 2 since best
+        assert!(!es.keep_going(0.96)); // 3 -> stop
+        assert_eq!(es.best(), 0.9);
+    }
+
+    #[test]
+    fn early_stop_resets_on_improvement() {
+        let mut es = EarlyStop::new(1);
+        assert!(es.keep_going(1.0));
+        assert!(es.keep_going(1.1));
+        assert!(es.keep_going(0.5)); // improvement resets
+        assert!(es.keep_going(0.6));
+        assert!(!es.keep_going(0.7));
+    }
+}

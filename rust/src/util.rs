@@ -1,0 +1,177 @@
+//! Small self-contained utilities: deterministic PRNG, stats, timing.
+//!
+//! The build is fully offline (vendored deps only), so randomness and
+//! benchmark statistics are hand-rolled here instead of pulling `rand` /
+//! `criterion`.
+
+use std::time::Instant;
+
+/// SplitMix64 PRNG — deterministic, seedable, good enough for synthetic
+/// data generation and property-test case generation.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+    /// cached second Box–Muller sample
+    spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.wrapping_add(0x9E3779B97F4A7C15), spare: None }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.uniform() * n as f64) as usize % n.max(1)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        let (u1, u2) = (self.uniform().max(1e-12), self.uniform());
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.spare = Some(r * s);
+        r * c
+    }
+
+    /// Fork a child RNG (stable under reordering of sibling forks).
+    pub fn fork(&self, stream: u64) -> Rng {
+        Rng::new(self.state ^ stream.wrapping_mul(0xA24BAED4963EE407))
+    }
+}
+
+/// Running summary statistics.
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    pub n: usize,
+    pub sum: f64,
+    pub sum_sq: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Self { n: 0, sum: 0.0, sum_sq: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.sum_sq += x * x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.sum / self.n as f64 }
+    }
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        ((self.sum_sq / self.n as f64 - m * m).max(0.0)).sqrt()
+    }
+}
+
+/// Percentile of a sample set (nearest-rank).
+pub fn percentile(samples: &mut [f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (samples.len() - 1) as f64).round() as usize;
+    samples[idx.min(samples.len() - 1)]
+}
+
+/// Time a closure `iters` times after `warmup` runs; returns per-iteration
+/// wall-clock seconds (mean, std).  The poor man's criterion used by the
+/// bench targets (offline build: no criterion crate available).
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut st = Stats::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        st.push(t0.elapsed().as_secs_f64());
+    }
+    (st.mean(), st.std())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_uniform_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn rng_normal_moments() {
+        let mut r = Rng::new(11);
+        let mut st = Stats::new();
+        for _ in 0..50_000 {
+            st.push(r.normal());
+        }
+        assert!(st.mean().abs() < 0.03, "mean {}", st.mean());
+        assert!((st.std() - 1.0).abs() < 0.03, "std {}", st.std());
+    }
+
+    #[test]
+    fn fork_streams_differ() {
+        let r = Rng::new(1);
+        let (mut a, mut b) = (r.fork(1), r.fork(2));
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn stats_basic() {
+        let mut s = Stats::new();
+        for x in [1.0, 2.0, 3.0] {
+            s.push(x);
+        }
+        assert_eq!(s.mean(), 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let mut v: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        // nearest-rank on 100 samples: p50 -> index round(0.5*99) = 50 -> 51
+        assert_eq!(percentile(&mut v, 50.0), 51.0);
+        assert_eq!(percentile(&mut v, 100.0), 100.0);
+        assert_eq!(percentile(&mut v, 0.0), 1.0);
+    }
+}

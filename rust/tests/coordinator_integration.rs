@@ -1,0 +1,118 @@
+//! Integration tests for the serving coordinator over real artifacts:
+//! policy routing + dynamic batching + PJRT execution end to end.
+//! Skipped (with a message) when artifacts are missing.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use tomers::coordinator::{self, policy::Variant, ForecastRequest, MergePolicy, ServerConfig};
+use tomers::data;
+use tomers::util::Rng;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("chronos_s__r0.hlo.txt").exists().then_some(dir)
+}
+
+fn server(dir: PathBuf) -> coordinator::ServerHandle {
+    let variants = vec![
+        Variant { name: "chronos_s__r0".into(), r: 0 },
+        Variant { name: "chronos_s__r128".into(), r: 128 },
+    ];
+    coordinator::server::serve(ServerConfig {
+        artifact_dir: dir,
+        policy: MergePolicy::uniform(variants, 3.0, 7.5),
+        max_wait: Duration::from_millis(10),
+        max_queue: 256,
+    })
+    .expect("server start")
+}
+
+fn context(profile: &str, seed: u64) -> Vec<f32> {
+    let prof = data::profile(profile).unwrap();
+    data::generate(prof, 512, seed).column(0)
+}
+
+#[test]
+fn serves_forecasts_end_to_end() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let handle = server(dir);
+    let client = handle.client();
+    let resp = client
+        .forecast(ForecastRequest { id: 1, context: context("etth1", 3) })
+        .expect("forecast");
+    assert_eq!(resp.id, 1);
+    assert_eq!(resp.forecast.len(), 64); // horizon p = 64
+    assert!(resp.forecast.iter().all(|v| v.is_finite()));
+    assert!(resp.latency > 0.0);
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn policy_routes_by_entropy() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let handle = server(dir);
+    let client = handle.client();
+    // low-entropy (clean periodic weather-like) -> r0; noisy ettm1 -> r128
+    let clean = client
+        .forecast(ForecastRequest { id: 1, context: context("weather", 5) })
+        .unwrap();
+    let noisy = client
+        .forecast(ForecastRequest { id: 2, context: context("ettm1", 5) })
+        .unwrap();
+    assert_eq!(clean.variant, "chronos_s__r0", "clean routed to {}", clean.variant);
+    assert_eq!(noisy.variant, "chronos_s__r128", "noisy routed to {}", noisy.variant);
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn batches_concurrent_requests() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let handle = server(dir);
+    let client = handle.client();
+    let mut rng = Rng::new(9);
+    // submit a burst; the batcher should group them (artifact batch = 8)
+    let receivers: Vec<_> = (0..16)
+        .map(|id| {
+            client
+                .submit(ForecastRequest { id, context: context("ettm1", rng.next_u64()) })
+                .unwrap()
+        })
+        .collect();
+    let mut max_batch = 0usize;
+    for rx in receivers {
+        let resp = rx.recv().expect("response");
+        max_batch = max_batch.max(resp.batch_size);
+    }
+    assert!(max_batch > 1, "burst was never batched (max batch {max_batch})");
+    let report = client.metrics_report().unwrap();
+    assert!(report.contains("served=16"), "report: {report}");
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn metrics_report_counts_variants() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let handle = server(dir);
+    let client = handle.client();
+    for id in 0..4 {
+        client
+            .forecast(ForecastRequest { id, context: context("weather", id) })
+            .unwrap();
+    }
+    let report = client.metrics_report().unwrap();
+    assert!(report.contains("chronos_s__r0"), "report: {report}");
+    handle.shutdown().unwrap();
+}

@@ -1,0 +1,226 @@
+//! Property-based tests of the token-merging invariants (offline build:
+//! hand-rolled case generation over the seeded `util::Rng` instead of
+//! proptest; several hundred random cases per property).
+
+use tomers::merging::{
+    match_tokens, merge_dynamic, merge_fixed_r, merge_schedule, similarity_complexity,
+    speedup_bound, unmerge,
+};
+use tomers::util::Rng;
+
+fn rand_tokens(rng: &mut Rng, t: usize, d: usize) -> Vec<f32> {
+    (0..t * d).map(|_| rng.normal() as f32).collect()
+}
+
+fn rand_sizes(rng: &mut Rng, t: usize) -> Vec<f32> {
+    (0..t).map(|_| 1.0 + rng.below(4) as f32).collect()
+}
+
+/// Property: output shape is exactly t-r, sizes sum is conserved, and the
+/// size-weighted token sum is conserved (merging is a convex combination).
+#[test]
+fn prop_mass_conservation() {
+    let mut rng = Rng::new(0xA11CE);
+    for case in 0..300 {
+        let t = 6 + rng.below(60);
+        let d = 1 + rng.below(16);
+        let t2 = (t - t % 2) / 2;
+        let r = rng.below(t2) + 1;
+        let k = 1 + rng.below(t2);
+        let tokens = rand_tokens(&mut rng, t, d);
+        let sizes = rand_sizes(&mut rng, t);
+        let res = merge_fixed_r(&tokens, &sizes, t, d, r, k);
+        assert_eq!(res.tokens.len(), (t - r) * d, "case {case}");
+        let total: f64 = sizes.iter().map(|&s| s as f64).sum();
+        let after: f64 = res.sizes.iter().map(|&s| s as f64).sum();
+        assert!((total - after).abs() < 1e-3 * total, "case {case}");
+        for j in 0..d {
+            let before: f64 = (0..t).map(|p| tokens[p * d + j] as f64 * sizes[p] as f64).sum();
+            let got: f64 = (0..t - r)
+                .map(|s| res.tokens[s * d + j] as f64 * res.sizes[s] as f64)
+                .sum();
+            assert!(
+                (before - got).abs() < 1e-2 * before.abs().max(1.0),
+                "case {case} axis {j}: {before} vs {got}"
+            );
+        }
+    }
+}
+
+/// Property: slot_map is surjective onto 0..t-r and the kept (odd/B)
+/// tokens appear in increasing slot order (order preservation).
+#[test]
+fn prop_slot_map_structure() {
+    let mut rng = Rng::new(0xB0B);
+    for _ in 0..300 {
+        let t = 6 + rng.below(40);
+        let d = 1 + rng.below(8);
+        let t2 = (t - t % 2) / 2;
+        let r = rng.below(t2) + 1;
+        let k = 1 + rng.below(t2);
+        let tokens = rand_tokens(&mut rng, t, d);
+        let res = merge_fixed_r(&tokens, &vec![1.0; t], t, d, r, k);
+        let mut seen = vec![false; t - r];
+        for &s in &res.slot_map {
+            assert!(s < t - r, "slot out of range");
+            seen[s] = true;
+        }
+        assert!(seen.into_iter().all(|x| x), "slot_map not surjective");
+        // B tokens (odd positions) are never merged away: strictly increasing
+        let mut prev = None;
+        for p in (1..t).step_by(2) {
+            let s = res.slot_map[p];
+            if let Some(q) = prev {
+                assert!(s > q, "B-token slots not increasing at {p}");
+            }
+            prev = Some(s);
+        }
+    }
+}
+
+/// Property: causality for k = 1 — every merge group spans at most two
+/// adjacent original positions, so information never moves backward.
+#[test]
+fn prop_causal_k1_adjacency() {
+    let mut rng = Rng::new(0xCA5);
+    for _ in 0..300 {
+        let t = 6 + rng.below(50);
+        let d = 1 + rng.below(8);
+        let t2 = (t - t % 2) / 2;
+        let r = rng.below(t2) + 1;
+        let tokens = rand_tokens(&mut rng, t, d);
+        let res = merge_fixed_r(&tokens, &vec![1.0; t], t, d, r, 1);
+        for s in 0..t - r {
+            let members: Vec<usize> =
+                (0..t).filter(|&p| res.slot_map[p] == s).collect();
+            let span = members.last().unwrap() - members.first().unwrap();
+            assert!(span <= 1, "k=1 group spans {span} > 1: {members:?}");
+        }
+    }
+}
+
+/// Property: merging a constant token set reproduces the constant,
+/// regardless of r and k (identical tokens merge losslessly).
+#[test]
+fn prop_constant_tokens_unchanged() {
+    let mut rng = Rng::new(0xC0115);
+    for _ in 0..100 {
+        let t = 8 + rng.below(30);
+        let d = 1 + rng.below(8);
+        let t2 = (t - t % 2) / 2;
+        let r = rng.below(t2) + 1;
+        let k = 1 + rng.below(t2);
+        let value: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let tokens: Vec<f32> = (0..t).flat_map(|_| value.clone()).collect();
+        let res = merge_fixed_r(&tokens, &vec![1.0; t], t, d, r, k);
+        for s in 0..t - r {
+            for j in 0..d {
+                assert!((res.tokens[s * d + j] - value[j]).abs() < 1e-5);
+            }
+        }
+    }
+}
+
+/// Property: unmerge returns length-t rows, and rows of singleton slots
+/// are bit-identical to their input.
+#[test]
+fn prop_unmerge_roundtrip() {
+    let mut rng = Rng::new(0xD1CE);
+    for _ in 0..200 {
+        let t = 6 + rng.below(40);
+        let d = 1 + rng.below(8);
+        let t2 = (t - t % 2) / 2;
+        let r = rng.below(t2) + 1;
+        let tokens = rand_tokens(&mut rng, t, d);
+        let res = merge_fixed_r(&tokens, &vec![1.0; t], t, d, r, 2 + rng.below(8));
+        let um = unmerge(&res.tokens, d, &res.slot_map);
+        assert_eq!(um.len(), t * d);
+        for p in 0..t {
+            let s = res.slot_map[p];
+            if (res.sizes[s] - 1.0).abs() < 1e-6 {
+                assert_eq!(&um[p * d..(p + 1) * d], &tokens[p * d..(p + 1) * d]);
+            }
+        }
+    }
+}
+
+/// Property: dynamic merging is monotone in threshold — a higher threshold
+/// never merges more tokens (effective count never decreases).
+#[test]
+fn prop_dynamic_monotone_in_threshold() {
+    let mut rng = Rng::new(0xD110);
+    for _ in 0..100 {
+        let t = 8 + rng.below(40);
+        let d = 2 + rng.below(8);
+        let tokens = rand_tokens(&mut rng, t, d);
+        let sizes = vec![1.0; t];
+        let mut prev_eff = 0usize;
+        for th in [-1.1, 0.0, 0.5, 0.9, 1.1] {
+            let (_, eff) = merge_dynamic(&tokens, &sizes, t, d, 1, th);
+            assert!(eff >= prev_eff, "threshold {th}: eff {eff} < {prev_eff}");
+            prev_eff = eff;
+        }
+    }
+}
+
+/// Property: eq. 2 complexity is exact at the extremes and monotone in k;
+/// the B.1 bound is monotone in depth.
+#[test]
+fn prop_complexity_and_bound() {
+    let mut rng = Rng::new(0xE42);
+    for _ in 0..200 {
+        let t = 2 * (2 + rng.below(512));
+        let t2 = t / 2;
+        assert_eq!(similarity_complexity(t, 1), t2);
+        assert_eq!(similarity_complexity(t, t2), t2 * t2);
+        let k1 = 1 + rng.below(t2);
+        let k2 = (k1 + 1 + rng.below(t2)).min(t2);
+        assert!(similarity_complexity(t, k1) <= similarity_complexity(t, k2));
+    }
+    for l in 1..14u32 {
+        assert!(speedup_bound(l + 1) > speedup_bound(l));
+        assert!(speedup_bound(l) <= 3.0 * l as f64 / 4.0 + 1.0);
+    }
+}
+
+/// Property: matching respects the band for arbitrary k and returns
+/// cosine values in [-1, 1].
+#[test]
+fn prop_match_band() {
+    let mut rng = Rng::new(0xF00D);
+    for _ in 0..200 {
+        let t = 6 + rng.below(60);
+        let d = 1 + rng.below(8);
+        let t2 = (t - t % 2) / 2;
+        let k = 1 + rng.below(t2);
+        let tokens = rand_tokens(&mut rng, t, d);
+        let (scores, best) = match_tokens(&tokens, t, d, k);
+        for (i, (&s, &j)) in scores.iter().zip(&best).enumerate() {
+            assert!((i as isize - j as isize).unsigned_abs() < k);
+            assert!((-1.01..=1.01).contains(&s), "cosine out of range: {s}");
+        }
+    }
+}
+
+/// Property: the schedule never drops below q (unless it started there),
+/// never merges more than half the even tokens per layer, and is monotone
+/// non-increasing.
+#[test]
+fn prop_schedule_bounds() {
+    let mut rng = Rng::new(0x5CED);
+    for _ in 0..300 {
+        let t = 4 + rng.below(1000);
+        let r = rng.below(600);
+        let q = 2 + rng.below(16);
+        let layers = 1 + rng.below(10);
+        let s = merge_schedule(t, r, layers, q);
+        assert_eq!(s.len(), layers + 1);
+        assert_eq!(s[0], t);
+        for w in s.windows(2) {
+            assert!(w[1] <= w[0]);
+            assert!(w[0] - w[1] <= r);
+            assert!(w[1] >= q.min(w[0]));
+            assert!(w[0] - w[1] <= (w[0] - w[0] % 2) / 2);
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Integration tests: HLO artifact -> PJRT compile -> execute, verified
+//! numerically against Python golden outputs (written by `aot.py`).
+//!
+//! These tests require `make artifacts` to have produced the artifact
+//! directory; they are skipped (with a message) when it is absent so
+//! `cargo test` stays green on a fresh checkout.
+
+use std::path::PathBuf;
+
+use tomers::runtime::{Engine, WeightStore};
+use tomers::tensor::Tensor;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let has_any = dir.read_dir().map(|mut d| d.next().is_some()).unwrap_or(false);
+    has_any.then_some(dir)
+}
+
+/// Load golden (inputs, outputs) recorded by aot.py for `name`.
+fn golden(dir: &PathBuf, name: &str) -> Option<(Vec<Tensor>, Vec<Tensor>)> {
+    let path = dir.join(format!("{name}.golden.bin"));
+    let ws = WeightStore::load(&path).ok()?;
+    let mut ins = Vec::new();
+    let mut outs = Vec::new();
+    for i in 0.. {
+        match ws.get(&format!("in{i}")) {
+            Ok(t) => ins.push(t.clone()),
+            Err(_) => break,
+        }
+    }
+    for i in 0.. {
+        match ws.get(&format!("out{i}")) {
+            Ok(t) => outs.push(t.clone()),
+            Err(_) => break,
+        }
+    }
+    Some((ins, outs))
+}
+
+fn max_abs_diff(a: &Tensor, b: &Tensor) -> f64 {
+    match (a, b) {
+        (Tensor::F32 { data: x, .. }, Tensor::F32 { data: y, .. }) => x
+            .iter()
+            .zip(y)
+            .map(|(p, q)| (p - q).abs() as f64)
+            .fold(0.0, f64::max),
+        (Tensor::I32 { data: x, .. }, Tensor::I32 { data: y, .. }) => x
+            .iter()
+            .zip(y)
+            .map(|(p, q)| (p - q).abs() as f64)
+            .fold(0.0, f64::max),
+        _ => f64::INFINITY,
+    }
+}
+
+fn roundtrip(name: &str, tol: f64) {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("SKIP {name}: no artifacts dir (run `make artifacts`)");
+        return;
+    };
+    let Some((ins, want)) = golden(&dir, name) else {
+        eprintln!("SKIP {name}: no golden file");
+        return;
+    };
+    let engine = Engine::new(&dir).expect("pjrt engine");
+    let model = engine.load_with_weights(name).expect("load artifact");
+    let got = model.execute(&ins).expect("execute");
+    assert_eq!(got.len(), want.len(), "{name}: output arity");
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.shape(), w.shape(), "{name}: out{i} shape");
+        let d = max_abs_diff(g, w);
+        assert!(d < tol, "{name}: out{i} max|diff| = {d} > {tol}");
+    }
+    println!("{name}: OK ({} outputs)", got.len());
+}
+
+#[test]
+fn forecast_transformer_with_merging_matches_python() {
+    roundtrip("fc_transformer_L2__r16", 2e-4);
+}
+
+#[test]
+fn forecast_autoformer_no_merging_matches_python() {
+    roundtrip("fc_autoformer_L2__r0", 5e-3); // FFT autocorrelation: XLA-version FFT precision
+}
+
+#[test]
+fn chronos_with_merging_matches_python() {
+    roundtrip("chronos_s__r64", 5e-3); // logits: argmax-stable tolerance
+}
+
+#[test]
+fn chronos_pallas_kernels_roundtrip() {
+    // The interpret-mode Pallas kernel path compiled into HLO and executed
+    // by the Rust PJRT runtime — proves L1 -> L3 composition.
+    roundtrip("chronos_s__r64_pallas", 5e-3);
+}
+
+#[test]
+fn mamba_pallas_scan_roundtrip() {
+    roundtrip("mamba_L2s__r64_pallas", 1e-3);
+}
+
+#[test]
+fn hyena_local_merging_matches_python() {
+    roundtrip("hyena_L4__r64_k1", 1e-2); // long FFT convs: XLA-version FFT precision
+}
+
+#[test]
+fn patchtst_matches_python() {
+    roundtrip("patchtst_L2__r4", 2e-4);
+}
+
+#[test]
+fn manifest_shape_validation_rejects_bad_input() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    let Ok(model) = engine.load_with_weights("fc_transformer_L2__r16") else {
+        return;
+    };
+    let bad = Tensor::zeros_f32(&[1, 2, 3]);
+    assert!(model.execute(&[bad]).is_err());
+    assert!(model.execute(&[]).is_err());
+}
+
+#[test]
+fn engine_lists_artifacts() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    let names = engine.available().unwrap();
+    assert!(names.iter().any(|n| n.starts_with("chronos")));
+}
