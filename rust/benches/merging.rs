@@ -1,43 +1,149 @@
-//! Microbenchmarks for the Rust merging reference: the eq. 2 complexity
-//! crossover (local k=1 linear vs global quadratic) measured in wall-clock,
-//! matching the paper's §5.4 overhead observation (local merging adds ~14%
-//! per Hyena block, global ~68%).
+//! Merging kernel benchmarks: legacy scalar reference vs the optimized
+//! zero-allocation kernel vs the thread-scoped batched path, plus the
+//! eq. 2 local/global complexity crossover the paper's §5.4 overhead
+//! numbers come from.
 //!
 //! Offline build: hand-rolled harness (no criterion crate available);
-//! run with `cargo bench --offline`.
+//! run with `cargo bench --offline --bench merging`.
+//!
+//! Writes a machine-readable `BENCH_merging.json` (schema documented in
+//! `src/merging/mod.rs`) so the kernel's perf trajectory accumulates
+//! across PRs; `scripts/verify.sh` gates on the acceptance case
+//! `t=8192 d=64 k=16` keeping `speedup_batched >= 3` (the single-thread
+//! `speedup_optimized` is printed for trend-watching, not gated).
+//!
+//! Env knobs:
+//! * `TOMERS_BENCH_QUICK=1` — few iterations, acceptance case only
+//!   (the CI smoke used by scripts/verify.sh)
+//! * `TOMERS_BENCH_OUT=path` — where to write the JSON (default
+//!   `BENCH_merging.json` in the package root)
 
-use tomers::merging::{merge_fixed_r, similarity_complexity};
+use tomers::json::Json;
+use tomers::merging::{reference, similarity_complexity, BatchMerger, MergeResult, MergeScratch};
+use tomers::merging::kernel::merge_fixed_r_scratch;
 use tomers::util::{bench, Rng};
 
+struct Case {
+    t: usize,
+    d: usize,
+    k: usize,
+    batch: usize,
+    iters: usize,
+}
+
 fn main() {
-    println!("== bench: merging (eq. 2 complexity in wall-clock) ==");
+    let quick = std::env::var("TOMERS_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let out_path =
+        std::env::var("TOMERS_BENCH_OUT").unwrap_or_else(|_| "BENCH_merging.json".to_string());
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    // The acceptance case (t=8192, d=64, k=16) is always present.
+    let cases: Vec<Case> = if quick {
+        vec![Case { t: 8192, d: 64, k: 16, batch: 4, iters: 3 }]
+    } else {
+        vec![
+            Case { t: 512, d: 64, k: 1, batch: 8, iters: 20 },
+            Case { t: 2048, d: 64, k: 16, batch: 8, iters: 10 },
+            Case { t: 8192, d: 64, k: 16, batch: 8, iters: 5 },
+            Case { t: 8192, d: 64, k: 1, batch: 8, iters: 5 },
+            Case { t: 16000, d: 64, k: 16, batch: 4, iters: 3 },
+        ]
+    };
+
+    println!("== bench: merging (legacy scalar vs optimized vs batched; {threads} threads) ==");
     println!(
-        "{:<26} {:>12} {:>12} {:>14}",
-        "case", "mean", "std", "sim-ops(eq.2)"
+        "{:<22} {:>12} {:>12} {:>12} {:>8} {:>8} {:>14}",
+        "case", "legacy", "optimized", "batched", "x-opt", "x-batch", "sim-ops(eq.2)"
     );
+
     let mut rng = Rng::new(1);
-    let d = 64;
-    for &t in &[512usize, 2048, 8192, 16000] {
-        let tokens: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
-        let sizes = vec![1.0f32; t];
+    let mut rows: Vec<Json> = Vec::new();
+
+    for case in &cases {
+        let (t, d, k, b) = (case.t, case.d, case.k, case.batch);
         let r = t / 4;
-        for &(label, k) in &[("local k=1", 1usize), ("band k=16", 16), ("global", t / 2)] {
-            // global merging at t=16000 is the quadratic case the paper
-            // calls out as unusable for long sequences — keep iters low.
-            let iters = if k > 1000 { 3 } else { 10 };
-            let (mean, std) = bench(1, iters, || {
-                let _ = merge_fixed_r(&tokens, &sizes, t, d, r, k);
-            });
-            println!(
-                "t={:<6} {:<16} {:>10.3}ms {:>10.3}ms {:>14}",
-                t,
-                label,
-                mean * 1e3,
-                std * 1e3,
-                similarity_complexity(t, k)
-            );
-        }
+        let tokens: Vec<f32> = (0..b * t * d).map(|_| rng.normal() as f32).collect();
+        let sizes = vec![1.0f32; b * t];
+
+        // legacy scalar path over the whole batch
+        let (legacy_s, _) = bench(1, case.iters, || {
+            for i in 0..b {
+                let _ = reference::merge_fixed_r_reference(
+                    &tokens[i * t * d..(i + 1) * t * d],
+                    &sizes[i * t..(i + 1) * t],
+                    t,
+                    d,
+                    r,
+                    k,
+                );
+            }
+        });
+
+        // optimized kernel, warm scratch, single thread
+        let mut scratch = MergeScratch::with_capacity(t, d);
+        let mut out = MergeResult::default();
+        let (opt_s, _) = bench(1, case.iters, || {
+            for i in 0..b {
+                merge_fixed_r_scratch(
+                    &tokens[i * t * d..(i + 1) * t * d],
+                    &sizes[i * t..(i + 1) * t],
+                    t,
+                    d,
+                    r,
+                    k,
+                    &mut scratch,
+                    &mut out,
+                );
+            }
+        });
+
+        // batched path: thread::scope across the batch, warm per-worker scratch
+        let mut merger = BatchMerger::with_default_parallelism();
+        let mut outs: Vec<MergeResult> = Vec::new();
+        let (batch_s, _) = bench(1, case.iters, || {
+            merger.merge_batch_into(&tokens, &sizes, b, t, d, r, k, &mut outs);
+        });
+
+        let x_opt = legacy_s / opt_s.max(1e-12);
+        let x_batch = legacy_s / batch_s.max(1e-12);
+        println!(
+            "t={:<6} k={:<4} b={:<3} {:>10.3}ms {:>10.3}ms {:>10.3}ms {:>7.2}x {:>7.2}x {:>14}",
+            t,
+            k,
+            b,
+            legacy_s * 1e3,
+            opt_s * 1e3,
+            batch_s * 1e3,
+            x_opt,
+            x_batch,
+            similarity_complexity(t, k)
+        );
+
+        rows.push(Json::obj(vec![
+            ("t", Json::num(t as f64)),
+            ("d", Json::num(d as f64)),
+            ("k", Json::num(k as f64)),
+            ("r", Json::num(r as f64)),
+            ("batch", Json::num(b as f64)),
+            ("legacy_ms", Json::num(legacy_s * 1e3)),
+            ("optimized_ms", Json::num(opt_s * 1e3)),
+            ("batched_ms", Json::num(batch_s * 1e3)),
+            ("speedup_optimized", Json::num(x_opt)),
+            ("speedup_batched", Json::num(x_batch)),
+        ]));
     }
-    println!("\nexpected shape: local stays ~linear in t; global grows ~t^2 —");
-    println!("the gap is the paper's motivation for local merging in SSMs.");
+
+    let report = Json::obj(vec![
+        ("schema_version", Json::num(1.0)),
+        ("bench", Json::str("merging")),
+        ("quick", Json::Bool(quick)),
+        ("threads", Json::num(threads as f64)),
+        ("cases", Json::arr(rows)),
+    ]);
+    match std::fs::write(&out_path, report.to_string_pretty()) {
+        Ok(()) => println!("\nperf record -> {out_path}"),
+        Err(e) => eprintln!("\nWARN: could not write {out_path}: {e}"),
+    }
+    println!("expected shape: optimized >= 3x legacy on the banded cases; batched");
+    println!("scales further with cores. local k=1 stays ~linear in t, global ~t^2.");
 }

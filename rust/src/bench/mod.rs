@@ -8,10 +8,15 @@
 //!
 //! Results are also appended as JSON under `reports/` for EXPERIMENTS.md.
 
+#[cfg(feature = "pjrt")]
 pub mod ablations;
+#[cfg(feature = "pjrt")]
 pub mod chronos_suite;
+#[cfg(feature = "pjrt")]
 pub mod forecast_suite;
+#[cfg(feature = "pjrt")]
 pub mod ssm_suite;
+#[cfg(feature = "pjrt")]
 pub mod studies;
 
 use std::path::{Path, PathBuf};
@@ -62,6 +67,17 @@ impl BenchCtx {
 }
 
 /// Dispatch an experiment by its paper id.
+#[cfg(not(feature = "pjrt"))]
+pub fn run(_ctx: &BenchCtx, which: &str) -> Result<()> {
+    anyhow::bail!(
+        "experiment {which:?} executes compiled artifacts, but this binary was \
+         built without the `pjrt` feature; rebuild with `cargo build --features pjrt` \
+         (the kernel microbenches still run: `cargo bench --bench merging`)"
+    )
+}
+
+/// Dispatch an experiment by its paper id.
+#[cfg(feature = "pjrt")]
 pub fn run(ctx: &BenchCtx, which: &str) -> Result<()> {
     match which {
         "table1" => forecast_suite::table1(ctx),

@@ -206,16 +206,22 @@ pub fn fig19_redundancy(ctx: &BenchCtx) -> Result<()> {
         let shape = tokens.shape().to_vec();
         let (b, t, d) = (shape[0], shape[1], shape[2]);
         let data = tokens.f32s()?;
-        for th in [0.5, 0.7, 0.8, 0.9, 0.95, 0.99] {
-            let mut mergeable = 0usize;
-            let mut total = 0usize;
-            for bi in 0..b {
-                let rows_slice = &data[bi * t * d..(bi + 1) * t * d];
-                let (scores, _) = crate::merging::match_tokens(rows_slice, t, d, 1);
-                mergeable += scores.iter().filter(|&&s| s > th).count();
-                total += scores.len();
+        // one scratch-backed match per sequence, counted against every
+        // threshold (the match is threshold-independent)
+        let thresholds = [0.5, 0.7, 0.8, 0.9, 0.95, 0.99];
+        let mut mergeable = [0usize; 6];
+        let mut total = 0usize;
+        let mut scratch = crate::merging::MergeScratch::new();
+        for bi in 0..b {
+            let rows_slice = &data[bi * t * d..(bi + 1) * t * d];
+            crate::merging::match_tokens_scratch(rows_slice, t, d, 1, &mut scratch);
+            total += scratch.scores().len();
+            for (ti, &th) in thresholds.iter().enumerate() {
+                mergeable[ti] += scratch.scores().iter().filter(|&&s| s > th).count();
             }
-            let frac = mergeable as f64 / total as f64;
+        }
+        for (ti, &th) in thresholds.iter().enumerate() {
+            let frac = mergeable[ti] as f64 / total as f64;
             println!("{:<10} {:>6.2} {:>9.1}%", label, th, frac * 100.0);
             rows.push(Json::obj(vec![
                 ("pos_embed", Json::str(label)),

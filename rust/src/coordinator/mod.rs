@@ -18,12 +18,24 @@
 pub mod batcher;
 pub mod metrics;
 pub mod policy;
+#[cfg(feature = "pjrt")]
 pub mod server;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use metrics::Metrics;
-pub use policy::{MergePolicy, PolicyDecision};
-pub use server::{Client, ServerConfig, ServerHandle};
+pub use policy::{EntropyCache, MergePolicy, PolicyDecision};
+#[cfg(feature = "pjrt")]
+pub use server::{Client, ServerHandle};
+
+/// Serving configuration (lives here rather than in `server` so the config
+/// system parses/validates it in builds without the `pjrt` feature).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub artifact_dir: std::path::PathBuf,
+    pub policy: MergePolicy,
+    pub max_wait: std::time::Duration,
+    pub max_queue: usize,
+}
 
 /// A forecast request: univariate context, horizon fixed by the artifact.
 #[derive(Clone, Debug)]

@@ -8,6 +8,8 @@
 //! statistic and select the compiled merge-rate variant — a static-shape
 //! realisation of §5.5 per-batch dynamic merging (DESIGN.md §3b).
 
+use std::collections::{HashMap, VecDeque};
+
 use crate::signal;
 
 /// A selectable artifact variant: merge rate + artifact name suffix.
@@ -47,9 +49,21 @@ impl MergePolicy {
         MergePolicy { variants: vec![variant], thresholds: vec![] }
     }
 
-    /// Decide the variant for a request context.
+    /// Decide the variant for a request context (uncached: one full-length
+    /// FFT per call — see [`MergePolicy::decide_cached`] for the serving
+    /// hot path).
     pub fn decide(&self, context: &[f32]) -> PolicyDecision {
-        let entropy = signal::spectral_entropy(context);
+        self.decision_for(signal::spectral_entropy(context))
+    }
+
+    /// Decide using a memoized, bounded-prefix entropy (the executor-thread
+    /// hot path).  Identical thresholds; the only difference is where the
+    /// entropy number comes from.
+    pub fn decide_cached(&self, cache: &mut EntropyCache, context: &[f32]) -> PolicyDecision {
+        self.decision_for(cache.entropy(context))
+    }
+
+    fn decision_for(&self, entropy: f64) -> PolicyDecision {
         let mut idx = 0;
         for (i, &th) in self.thresholds.iter().enumerate() {
             if entropy >= th {
@@ -61,6 +75,134 @@ impl MergePolicy {
 
     pub fn variant_names(&self) -> Vec<String> {
         self.variants.iter().map(|v| v.name.clone()).collect()
+    }
+}
+
+/// FNV-1a over the raw f32 bit patterns — cheap, deterministic, and exact
+/// (no float tolerance: a cache hit means the bytes were identical).
+pub fn hash_context(context: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &x in context {
+        for b in x.to_bits().to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// Memoized spectral-entropy provider for the merge-policy planner.
+///
+/// The serving executor thread runs one `decide` per incoming request, so
+/// the statistic must stay far below one model execution.  Two cost
+/// levers (`cargo bench --bench policy` measures both):
+///
+/// * **bounded prefix** — entropy is computed over at most `prefix_cap`
+///   leading samples, so the FFT cost is flat in the request length.  For
+///   contexts no longer than the cap this is *exactly*
+///   [`MergePolicy::decide`]; longer contexts read a lower absolute
+///   entropy than full-length analysis would (spectral entropy grows with
+///   window size, ceiling `log2(n/2)` bits), so the cap must be sized to
+///   the policy's top threshold — use [`EntropyCache::for_policy`], which
+///   does that arithmetic, rather than guessing a cap.
+/// * **memoization** — entropy is cached by FNV-1a hash of the prefix
+///   bytes with FIFO eviction, so replayed/retried contexts cost one hash.
+#[derive(Clone, Debug)]
+pub struct EntropyCache {
+    capacity: usize,
+    prefix_cap: usize,
+    map: HashMap<u64, f64>,
+    fifo: VecDeque<u64>,
+    hits: u64,
+    misses: u64,
+}
+
+impl EntropyCache {
+    /// `capacity` cached entries (0 disables memoization), entropy over at
+    /// most `prefix_cap` leading samples.
+    pub fn new(capacity: usize, prefix_cap: usize) -> EntropyCache {
+        EntropyCache {
+            capacity,
+            prefix_cap: prefix_cap.max(1),
+            map: HashMap::new(),
+            fifo: VecDeque::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// A cache whose prefix cap is sized so the achievable entropy range
+    /// (`~log2(prefix/2)` bits for a one-sided spectrum) comfortably
+    /// clears the policy's highest threshold — otherwise the most
+    /// aggressive variants would be unreachable no matter how noisy the
+    /// input.  Floor 512, ceiling 16384 samples; a top threshold above
+    /// ~12.5 bits cannot be honored within the ceiling (the prefix FFT
+    /// would no longer be cheap), so that misconfiguration is reported
+    /// loudly instead of silently routing around the top variant.
+    pub fn for_policy(capacity: usize, policy: &MergePolicy) -> EntropyCache {
+        let top = policy.thresholds.iter().cloned().fold(0.0f64, f64::max);
+        // need log2(prefix/2) > top, with ~1.5 bits of headroom
+        let need = (top + 1.5).exp2().ceil() as usize * 2;
+        let cap = need.clamp(512, 16384);
+        if need > cap {
+            eprintln!(
+                "WARN: policy top entropy threshold {top:.1} bits needs a {need}-sample \
+                 prefix, capped at {cap} (max achievable ~{:.1} bits) — the most \
+                 aggressive variant may be unreachable; lower the threshold",
+                (cap as f64 / 2.0).log2()
+            );
+        }
+        EntropyCache::new(capacity, cap)
+    }
+
+    /// The slice actually analyzed: the first `min(len, prefix_cap)`
+    /// samples.  No power-of-two truncation — `signal::fft` handles
+    /// arbitrary lengths (Bluestein), and using the full available window
+    /// keeps `decide_cached` identical to `decide` for short contexts and
+    /// free of routing discontinuities at power-of-two boundaries.
+    fn prefix<'a>(&self, context: &'a [f32]) -> &'a [f32] {
+        &context[..context.len().min(self.prefix_cap)]
+    }
+
+    /// Memoized bounded-prefix spectral entropy.
+    pub fn entropy(&mut self, context: &[f32]) -> f64 {
+        let prefix = self.prefix(context);
+        if prefix.is_empty() {
+            return 0.0;
+        }
+        if self.capacity == 0 {
+            return signal::spectral_entropy(prefix);
+        }
+        let key = hash_context(prefix);
+        if let Some(&e) = self.map.get(&key) {
+            self.hits += 1;
+            return e;
+        }
+        let e = signal::spectral_entropy(prefix);
+        self.misses += 1;
+        if self.map.len() >= self.capacity {
+            if let Some(old) = self.fifo.pop_front() {
+                self.map.remove(&old);
+            }
+        }
+        self.map.insert(key, e);
+        self.fifo.push_back(key);
+        e
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
     }
 }
 
@@ -109,5 +251,87 @@ mod tests {
         let policy = MergePolicy::uniform(variants(), 0.0, 9.0);
         assert_eq!(policy.thresholds.len(), 2);
         assert!(policy.thresholds[0] < policy.thresholds[1]);
+    }
+
+    #[test]
+    fn cached_decide_matches_uncached_within_prefix_cap() {
+        let policy = MergePolicy::uniform(variants(), 2.0, 7.0);
+        let mut cache = EntropyCache::new(64, 512);
+        let mut rng = Rng::new(17);
+        // any length <= the cap analyzes the identical slice, including
+        // awkward non-power-of-two lengths (Bluestein FFT path)
+        for n in [512usize, 500, 511, 257, 96] {
+            let ctx: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let a = policy.decide(&ctx);
+            let b = policy.decide_cached(&mut cache, &ctx);
+            assert_eq!(a, b, "n={n}");
+        }
+    }
+
+    #[test]
+    fn for_policy_sizes_prefix_to_top_threshold() {
+        // uniform(3.0, 7.5) over 3 variants puts thresholds at 4.5 and
+        // 6.0 bits; log2(512/2) = 8 already clears 6.0, so the floor holds
+        let policy = MergePolicy::uniform(variants(), 3.0, 7.5);
+        let cache = EntropyCache::for_policy(16, &policy);
+        assert_eq!(cache.prefix_cap, 512);
+        assert!((cache.prefix_cap as f64 / 2.0).log2() > policy.thresholds[1]);
+        // a policy whose top threshold is ~9.7 bits gets a bigger window
+        let hot = MergePolicy::uniform(variants(), 3.0, 13.0);
+        let big = EntropyCache::for_policy(16, &hot);
+        assert!(big.prefix_cap > 512, "prefix {}", big.prefix_cap);
+        assert!((big.prefix_cap as f64 / 2.0).log2() > hot.thresholds[1]);
+        // single-variant policy (no thresholds) falls back to the floor
+        let fixed = MergePolicy::fixed(Variant { name: "x".into(), r: 0 });
+        assert_eq!(EntropyCache::for_policy(16, &fixed).prefix_cap, 512);
+    }
+
+    #[test]
+    fn cache_hits_on_repeated_contexts() {
+        let policy = MergePolicy::uniform(variants(), 2.0, 7.0);
+        let mut cache = EntropyCache::new(64, 512);
+        let mut rng = Rng::new(18);
+        let ctx: Vec<f32> = (0..512).map(|_| rng.normal() as f32).collect();
+        let first = policy.decide_cached(&mut cache, &ctx);
+        assert_eq!(cache.misses(), 1);
+        for _ in 0..5 {
+            let again = policy.decide_cached(&mut cache, &ctx);
+            assert_eq!(again, first);
+        }
+        assert_eq!(cache.hits(), 5);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn cache_evicts_fifo_beyond_capacity() {
+        let mut cache = EntropyCache::new(2, 512);
+        let mut rng = Rng::new(19);
+        for _ in 0..5 {
+            let ctx: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+            let _ = cache.entropy(&ctx);
+        }
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.misses(), 5);
+    }
+
+    #[test]
+    fn prefix_caps_long_contexts() {
+        let mut cache = EntropyCache::new(4, 512);
+        let mut rng = Rng::new(20);
+        let ctx: Vec<f32> = (0..700).map(|_| rng.normal() as f32).collect();
+        // 700 samples capped to the 512 prefix: same slice, cache hit
+        let e_700 = cache.entropy(&ctx);
+        let e_512 = cache.entropy(&ctx[..512]);
+        assert_eq!(e_700, e_512);
+        assert_eq!(cache.hits(), 1);
+        // empty context is a safe no-op, not a panic
+        assert_eq!(cache.entropy(&[]), 0.0);
+        // ordering is preserved on awkward (non-power-of-two) lengths:
+        // noise still reads higher than a sine
+        let clean: Vec<f32> = (0..500)
+            .map(|i| (2.0 * std::f64::consts::PI * 8.0 * i as f64 / 500.0).sin() as f32)
+            .collect();
+        let noisy: Vec<f32> = (0..500).map(|_| rng.normal() as f32).collect();
+        assert!(cache.entropy(&noisy) > cache.entropy(&clean) + 2.0);
     }
 }

@@ -15,18 +15,10 @@ use anyhow::{anyhow, Result};
 
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::metrics::Metrics;
-use super::policy::MergePolicy;
-use super::{ForecastRequest, ForecastResponse};
+use super::policy::EntropyCache;
+use super::{ForecastRequest, ForecastResponse, ServerConfig};
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
-
-#[derive(Clone, Debug)]
-pub struct ServerConfig {
-    pub artifact_dir: std::path::PathBuf,
-    pub policy: MergePolicy,
-    pub max_wait: Duration,
-    pub max_queue: usize,
-}
 
 enum Msg {
     Request(ForecastRequest, Instant, mpsc::Sender<ForecastResponse>),
@@ -125,6 +117,13 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
         }
         let _ = ready_tx.send(Ok(()));
         let mut metrics = Metrics::new();
+        // Routing statistic cache: the full-context FFT per request is the
+        // hottest non-model cost on the executor thread.  Entropy is
+        // computed on a bounded prefix (sized to the policy's top
+        // threshold so every variant stays reachable) and memoized by
+        // context hash, so repeated/replayed contexts route for the cost
+        // of one hash.
+        let mut entropy_cache = EntropyCache::for_policy(4096, &cfg.policy);
 
         loop {
             // Poll with a timeout tight enough to honour flush deadlines.
@@ -136,7 +135,7 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
                 .unwrap_or(Duration::from_millis(50));
             match rx.recv_timeout(timeout) {
                 Ok(Msg::Request(req, t0, rtx)) => {
-                    let decision = cfg.policy.decide(&req.context);
+                    let decision = cfg.policy.decide_cached(&mut entropy_cache, &req.context);
                     let q = queues
                         .get_mut(&decision.variant.name)
                         .expect("policy names a loaded variant");

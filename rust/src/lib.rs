@@ -21,5 +21,6 @@ pub mod merging;
 pub mod runtime;
 pub mod signal;
 pub mod tensor;
+#[cfg(feature = "pjrt")]
 pub mod train;
 pub mod util;

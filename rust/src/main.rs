@@ -11,14 +11,20 @@
 //! dependency set).
 
 use std::path::PathBuf;
+#[cfg(feature = "pjrt")]
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use tomers::bench::{self, BenchCtx};
-use tomers::coordinator::{self, policy::Variant, MergePolicy, ServerConfig};
+#[cfg(feature = "pjrt")]
+use tomers::coordinator::{self, policy::Variant, MergePolicy};
+use tomers::coordinator::ServerConfig;
+#[cfg(feature = "pjrt")]
 use tomers::data::Split;
+#[cfg(feature = "pjrt")]
 use tomers::runtime::{Engine, WeightStore};
+#[cfg(feature = "pjrt")]
 use tomers::util::Rng;
 
 struct Args {
@@ -118,6 +124,37 @@ fn run() -> Result<()> {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+const NO_PJRT: &str = "this subcommand executes compiled artifacts, but the binary was built \
+without the `pjrt` feature; rebuild with `cargo build --features pjrt` (and a real PJRT \
+binding in rust/vendor/xla — see the header of rust/vendor/xla/src/lib.rs)";
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_artifacts(_dir: &PathBuf) -> Result<()> {
+    anyhow::bail!(NO_PJRT)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_dir: &PathBuf, _identity: &str, _ds: &str, _steps: usize) -> Result<()> {
+    anyhow::bail!(NO_PJRT)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_eval(_dir: &PathBuf, _artifact: &str, _ds: &str, _windows: usize) -> Result<()> {
+    anyhow::bail!(NO_PJRT)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_dir: &PathBuf, _requests: usize) -> Result<()> {
+    anyhow::bail!(NO_PJRT)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve_config(_config: ServerConfig, _requests: usize) -> Result<()> {
+    anyhow::bail!(NO_PJRT)
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_artifacts(dir: &PathBuf) -> Result<()> {
     let engine = Engine::new(dir)?;
     println!("platform: {}", engine.platform());
@@ -135,6 +172,7 @@ fn cmd_artifacts(dir: &PathBuf) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_train(dir: &PathBuf, identity: &str, ds: &str, steps: usize) -> Result<()> {
     let ctx = BenchCtx::new(dir, false)?;
     let engine = Engine::new(dir)?;
@@ -148,6 +186,7 @@ fn cmd_train(dir: &PathBuf, identity: &str, ds: &str, steps: usize) -> Result<()
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_eval(dir: &PathBuf, artifact: &str, ds_name: &str, windows: usize) -> Result<()> {
     let ctx = BenchCtx::new(dir, false)?;
     let engine = Engine::new(dir)?;
@@ -176,6 +215,7 @@ fn cmd_eval(dir: &PathBuf, artifact: &str, ds_name: &str, windows: usize) -> Res
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_serve_config(config: ServerConfig, requests: usize) -> Result<()> {
     let handle = coordinator::server::serve(config)?;
     let client = handle.client();
@@ -196,6 +236,7 @@ fn cmd_serve_config(config: ServerConfig, requests: usize) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_serve(dir: &PathBuf, requests: usize) -> Result<()> {
     // entropy-driven merge-policy over the chronos_s variants
     let variants = vec![

@@ -1,0 +1,77 @@
+//! Analytic models: eq. 2 similarity complexity, the appendix B.1 speed-up
+//! bound, and the static per-layer merge schedule shared with the Python
+//! side.
+
+/// Similarity-computation complexity of local merging (paper eq. 2):
+/// `t/2 + (k-1)(t-k)` pairwise scores; global merging (`k = t/2`) costs
+/// `t^2/4`.
+pub fn similarity_complexity(t: usize, k: usize) -> usize {
+    let t2 = t / 2;
+    let k = k.clamp(1, t2.max(1));
+    if k >= t2 {
+        t2 * t2
+    } else {
+        t2 + (k - 1) * (t - k)
+    }
+}
+
+/// Upper bound on transformer speed-up from merging half the tokens per
+/// layer (appendix B.1): `3 L 4^{L-1} / (4^L - 1)`.
+pub fn speedup_bound(layers: u32) -> f64 {
+    let l = layers as f64;
+    3.0 * l * 4f64.powi(layers as i32 - 1) / (4f64.powi(layers as i32) - 1.0)
+}
+
+/// Static merge schedule (same rule as the Python side): token counts per
+/// layer for fixed `r`, floor `q`.
+pub fn merge_schedule(t: usize, r: usize, num_layers: usize, q: usize) -> Vec<usize> {
+    let mut counts = vec![t];
+    let mut cur = t;
+    for _ in 0..num_layers {
+        let even = cur - (cur % 2);
+        let step = r.min(even / 2).min(cur.saturating_sub(q));
+        cur -= step;
+        counts.push(cur);
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complexity_matches_eq2() {
+        // k = 1 -> t/2 (linear); k = t/2 -> t^2/4 (quadratic)
+        assert_eq!(similarity_complexity(192, 1), 96);
+        assert_eq!(similarity_complexity(192, 96), 96 * 96);
+        // eq. 2 formula spot check: t=100, k=5 -> 50 + 4*95 = 430
+        assert_eq!(similarity_complexity(100, 5), 430);
+        // monotone in k
+        let mut prev = 0;
+        for k in 1..=96 {
+            let c = similarity_complexity(192, k);
+            assert!(c >= prev);
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn speedup_bound_values() {
+        // B.1: L=1 -> 1.0; grows with L; asymptote 3L/4 slope
+        assert!((speedup_bound(1) - 1.0).abs() < 1e-9);
+        assert!(speedup_bound(2) > 1.5 && speedup_bound(2) < 2.0);
+        assert!(speedup_bound(10) > 7.0);
+        for l in 1..12 {
+            assert!(speedup_bound(l + 1) > speedup_bound(l));
+        }
+    }
+
+    #[test]
+    fn schedule_respects_floor() {
+        let s = merge_schedule(96, 16, 4, 4);
+        assert_eq!(s, vec![96, 80, 64, 48, 32]);
+        let s = merge_schedule(10, 100, 4, 4);
+        assert_eq!(*s.last().unwrap(), 4);
+    }
+}

@@ -1,0 +1,173 @@
+//! Batched merging over a `(b, t, d)` slab.
+//!
+//! [`BatchMerger`] owns one [`MergeScratch`] per worker and fans the batch
+//! out across `std::thread::scope` threads; each worker runs the
+//! zero-allocation kernel over a contiguous chunk of sequences.  Warm, a
+//! merge of the whole slab performs no heap allocations beyond what the
+//! caller-provided `MergeResult` out-slots already hold.
+
+use super::kernel;
+use super::scratch::MergeScratch;
+use super::MergeResult;
+
+/// Reusable batched merge executor: `workers` scratch arenas, one per
+/// thread.  Construct once, call [`BatchMerger::merge_batch_into`] per
+/// slab.
+pub struct BatchMerger {
+    workers: usize,
+    scratches: Vec<MergeScratch>,
+}
+
+impl BatchMerger {
+    /// A merger with a fixed worker count (clamped to at least 1).
+    pub fn new(workers: usize) -> BatchMerger {
+        let workers = workers.max(1);
+        BatchMerger { workers, scratches: (0..workers).map(|_| MergeScratch::new()).collect() }
+    }
+
+    /// A merger sized to the machine (`available_parallelism`).
+    pub fn with_default_parallelism() -> BatchMerger {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        BatchMerger::new(n)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Merge a `(b, t, d)` slab of tokens (row-major, sequence-contiguous)
+    /// with per-sequence sizes `(b, t)`, writing one [`MergeResult`] per
+    /// sequence into `outs` (resized to `b`).
+    pub fn merge_batch_into(
+        &mut self,
+        tokens: &[f32],
+        sizes: &[f32],
+        b: usize,
+        t: usize,
+        d: usize,
+        r: usize,
+        k: usize,
+        outs: &mut Vec<MergeResult>,
+    ) {
+        assert_eq!(tokens.len(), b * t * d, "token slab shape mismatch");
+        assert_eq!(sizes.len(), b * t, "sizes slab shape mismatch");
+        outs.resize_with(b, MergeResult::default);
+        if b == 0 {
+            return;
+        }
+        // Contiguous chunk per worker; the last chunk may be short.
+        let chunk = (b + self.workers - 1) / self.workers;
+        if self.workers == 1 || b == 1 {
+            let scratch = &mut self.scratches[0];
+            for (i, out) in outs.iter_mut().enumerate() {
+                kernel::merge_fixed_r_scratch(
+                    &tokens[i * t * d..(i + 1) * t * d],
+                    &sizes[i * t..(i + 1) * t],
+                    t,
+                    d,
+                    r,
+                    k,
+                    scratch,
+                    out,
+                );
+            }
+            return;
+        }
+        std::thread::scope(|scope| {
+            let mut scratch_iter = self.scratches.iter_mut();
+            for (out_chunk, (tok_chunk, size_chunk)) in outs
+                .chunks_mut(chunk)
+                .zip(tokens.chunks(chunk * t * d).zip(sizes.chunks(chunk * t)))
+            {
+                let scratch = scratch_iter.next().expect("one scratch per chunk");
+                scope.spawn(move || {
+                    for (i, out) in out_chunk.iter_mut().enumerate() {
+                        kernel::merge_fixed_r_scratch(
+                            &tok_chunk[i * t * d..(i + 1) * t * d],
+                            &size_chunk[i * t..(i + 1) * t],
+                            t,
+                            d,
+                            r,
+                            k,
+                            scratch,
+                            out,
+                        );
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// One-shot batched merge: allocates a [`BatchMerger`] sized to the
+/// machine and returns per-sequence results.  Hot paths should hold a
+/// `BatchMerger` and call [`BatchMerger::merge_batch_into`] instead.
+pub fn merge_batch(
+    tokens: &[f32],
+    sizes: &[f32],
+    b: usize,
+    t: usize,
+    d: usize,
+    r: usize,
+    k: usize,
+) -> Vec<MergeResult> {
+    let mut merger = BatchMerger::with_default_parallelism();
+    let mut outs = Vec::new();
+    merger.merge_batch_into(tokens, sizes, b, t, d, r, k, &mut outs);
+    outs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::merging::merge_fixed_r;
+    use crate::util::Rng;
+
+    #[test]
+    fn batch_matches_single_sequence_path() {
+        let mut rng = Rng::new(21);
+        let (b, t, d, r, k) = (7usize, 30usize, 5usize, 8usize, 3usize);
+        let tokens: Vec<f32> = (0..b * t * d).map(|_| rng.normal() as f32).collect();
+        let sizes: Vec<f32> = (0..b * t).map(|_| 1.0 + rng.below(3) as f32).collect();
+        for workers in [1usize, 2, 4, 16] {
+            let mut merger = BatchMerger::new(workers);
+            let mut outs = Vec::new();
+            merger.merge_batch_into(&tokens, &sizes, b, t, d, r, k, &mut outs);
+            assert_eq!(outs.len(), b);
+            for i in 0..b {
+                let single = merge_fixed_r(
+                    &tokens[i * t * d..(i + 1) * t * d],
+                    &sizes[i * t..(i + 1) * t],
+                    t,
+                    d,
+                    r,
+                    k,
+                );
+                assert_eq!(outs[i].slot_map, single.slot_map, "workers={workers} seq={i}");
+                assert_eq!(outs[i].tokens, single.tokens);
+                assert_eq!(outs[i].sizes, single.sizes);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let mut merger = BatchMerger::new(4);
+        let mut outs = vec![MergeResult::default(); 3];
+        merger.merge_batch_into(&[], &[], 0, 8, 4, 2, 1, &mut outs);
+        assert!(outs.is_empty());
+    }
+
+    #[test]
+    fn convenience_entry_point() {
+        let mut rng = Rng::new(22);
+        let (b, t, d) = (3usize, 12usize, 4usize);
+        let tokens: Vec<f32> = (0..b * t * d).map(|_| rng.normal() as f32).collect();
+        let sizes = vec![1.0f32; b * t];
+        let outs = merge_batch(&tokens, &sizes, b, t, d, 3, 2);
+        assert_eq!(outs.len(), b);
+        for out in &outs {
+            assert_eq!(out.tokens.len(), (t - 3) * d);
+        }
+    }
+}

@@ -1,0 +1,313 @@
+//! The optimized single-sequence merge kernel.
+//!
+//! Semantics are identical to [`super::reference`] (the legacy scalar
+//! implementation); the differential test suite
+//! (`tests/merging_differential.rs`) proves tokens/sizes/slot_map
+//! equivalence over randomized cases.  What changed:
+//!
+//! * **Precomputed norms** — the reference recomputes `|a|` and `|b|`
+//!   inside every banded pair, i.e. O(k) times per token.  Here every
+//!   token's L2 norm is computed once, so each pair costs a single dot.
+//! * **Chunked accumulation** — the dot runs over four independent f64
+//!   accumulators, breaking the serial dependency chain so the compiler
+//!   can autovectorize (the reference's single-accumulator loop cannot).
+//! * **O(t) top-r selection** — `select_nth_unstable_by` with a total
+//!   order (score desc, index asc) replaces the full O(t log t) sort.
+//!   The total order is NaN-safe by construction (the legacy
+//!   `partial_cmp().unwrap()` was a latent, never-reachable panic — see
+//!   `reference.rs`) and makes the selected *set* identical to the
+//!   reference's stable descending sort, tie-for-tie.
+//! * **Zero allocations** — every intermediate lives in a caller-provided
+//!   [`MergeScratch`]; outputs land in a reusable [`MergeResult`].
+
+use super::scratch::MergeScratch;
+use super::MergeResult;
+
+/// Dot product of two f32 rows, accumulated in f64 over four independent
+/// lanes (autovectorizable) plus a scalar tail.
+#[inline]
+fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] as f64 * b[i] as f64;
+        s1 += a[i + 1] as f64 * b[i + 1] as f64;
+        s2 += a[i + 2] as f64 * b[i + 2] as f64;
+        s3 += a[i + 3] as f64 * b[i + 3] as f64;
+    }
+    let mut tail = 0.0f64;
+    for i in chunks * 4..n {
+        tail += a[i] as f64 * b[i] as f64;
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// Sum of squares of an f32 row, accumulated in f64 in index order (bitwise
+/// identical to the reference's norm accumulation).
+#[inline]
+fn sumsq_f64(a: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for &v in a {
+        let x = v as f64;
+        acc += x * x;
+    }
+    acc
+}
+
+/// Bipartite soft matching under locality constraint `k` (paper eq. 1)
+/// into `scratch.scores` / `scratch.best` — zero allocations when warm.
+///
+/// Identical contract to [`super::match_tokens`]: tokens at even positions
+/// form subset A, odd positions subset B; for each A-token the best
+/// B-match within the band `|i - j| < k` is found.
+pub fn match_tokens_scratch(tokens: &[f32], t: usize, d: usize, k: usize, scratch: &mut MergeScratch) {
+    assert!(tokens.len() >= t * d, "tokens slab too short: {} < {}", tokens.len(), t * d);
+    let te = t - (t % 2);
+    let t2 = te / 2;
+    let k = k.clamp(1, t2.max(1));
+
+    scratch.norms.clear();
+    scratch.norms.resize(te, 0.0);
+    for p in 0..te {
+        scratch.norms[p] = sumsq_f64(&tokens[p * d..(p + 1) * d]).sqrt();
+    }
+
+    scratch.scores.clear();
+    scratch.scores.resize(t2, f64::NEG_INFINITY);
+    scratch.best.clear();
+    scratch.best.resize(t2, 0);
+
+    for i in 0..t2 {
+        let a = &tokens[(2 * i) * d..(2 * i + 1) * d];
+        let na = scratch.norms[2 * i];
+        let lo = i.saturating_sub(k - 1);
+        let hi = (i + k - 1).min(t2 - 1);
+        let mut best_score = f64::NEG_INFINITY;
+        let mut best_j = 0usize;
+        for j in lo..=hi {
+            let b = &tokens[(2 * j + 1) * d..(2 * j + 2) * d];
+            let s = dot_f64(a, b) / (na * scratch.norms[2 * j + 1] + 1e-8);
+            if s > best_score {
+                best_score = s;
+                best_j = j;
+            }
+        }
+        scratch.scores[i] = best_score;
+        scratch.best[i] = best_j;
+    }
+}
+
+/// Merge the `r` most similar A-tokens into their matched B-tokens, using
+/// the match already present in `scratch` (from [`match_tokens_scratch`]).
+/// Requires `1 <= r <= t2`.
+fn merge_given_match(
+    tokens: &[f32],
+    sizes: &[f32],
+    t: usize,
+    d: usize,
+    r: usize,
+    scratch: &mut MergeScratch,
+    out: &mut MergeResult,
+) {
+    let te = t - (t % 2);
+    let t2 = te / 2;
+    debug_assert!(r >= 1 && r <= t2);
+
+    // Split-borrow the scratch fields so `order` can be selected against
+    // `scores` without aliasing.
+    let MergeScratch { scores, best, order, merged, kept_slot, num, den, .. } = scratch;
+
+    // Top-r A-tokens under the total order (score desc, index asc): the
+    // same set a stable descending sort by score selects, found in O(t2).
+    order.clear();
+    order.extend(0..t2);
+    if r < t2 {
+        order.select_nth_unstable_by(r - 1, |&x, &y| {
+            scores[y].total_cmp(&scores[x]).then_with(|| x.cmp(&y))
+        });
+    }
+    merged.clear();
+    merged.resize(t2, false);
+    for &i in order[..r].iter() {
+        merged[i] = true;
+    }
+
+    // Output slots for kept tokens, in temporal order.
+    out.slot_map.clear();
+    out.slot_map.resize(t, 0);
+    kept_slot.clear();
+    kept_slot.resize(t, usize::MAX);
+    let mut slot = 0usize;
+    for p in 0..t {
+        let is_merged_a = p % 2 == 0 && p < te && merged[p / 2];
+        if !is_merged_a {
+            kept_slot[p] = slot;
+            out.slot_map[p] = slot;
+            slot += 1;
+        }
+    }
+    debug_assert_eq!(slot, t - r);
+    for i in 0..t2 {
+        if merged[i] {
+            let partner = 2 * best[i] + 1;
+            out.slot_map[2 * i] = kept_slot[partner];
+        }
+    }
+
+    // Size-weighted scatter-average, accumulated in f64 in original
+    // position order (bitwise identical to the reference).
+    let out_t = t - r;
+    num.clear();
+    num.resize(out_t * d, 0.0);
+    den.clear();
+    den.resize(out_t, 0.0);
+    for p in 0..t {
+        let s = out.slot_map[p];
+        let w = sizes[p] as f64;
+        den[s] += w;
+        let row = &tokens[p * d..(p + 1) * d];
+        let acc = &mut num[s * d..(s + 1) * d];
+        for j in 0..d {
+            acc[j] += row[j] as f64 * w;
+        }
+    }
+    out.tokens.clear();
+    out.tokens.resize(out_t * d, 0.0);
+    for s in 0..out_t {
+        // (num / den) exactly as the reference computes it — divide, don't
+        // multiply by a reciprocal, to stay bitwise identical.
+        let row = &mut out.tokens[s * d..(s + 1) * d];
+        let nrow = &num[s * d..(s + 1) * d];
+        for j in 0..d {
+            row[j] = (nrow[j] / den[s]) as f32;
+        }
+    }
+    out.sizes.clear();
+    out.sizes.extend(den.iter().map(|&x| x as f32));
+}
+
+/// Copy-through "merge" for `r == 0`: output mirrors the input.
+fn passthrough(tokens: &[f32], sizes: &[f32], t: usize, out: &mut MergeResult) {
+    out.tokens.clear();
+    out.tokens.extend_from_slice(tokens);
+    out.sizes.clear();
+    out.sizes.extend_from_slice(sizes);
+    out.slot_map.clear();
+    out.slot_map.extend(0..t);
+}
+
+/// Zero-allocation twin of [`super::merge_fixed_r`]: match + top-r merge
+/// into `out`, with every intermediate in `scratch`.
+pub fn merge_fixed_r_scratch(
+    tokens: &[f32],
+    sizes: &[f32],
+    t: usize,
+    d: usize,
+    r: usize,
+    k: usize,
+    scratch: &mut MergeScratch,
+    out: &mut MergeResult,
+) {
+    assert_eq!(tokens.len(), t * d);
+    assert_eq!(sizes.len(), t);
+    let te = t - (t % 2);
+    let t2 = te / 2;
+    let r = r.min(t2);
+    if r == 0 {
+        passthrough(tokens, sizes, t, out);
+        return;
+    }
+    match_tokens_scratch(tokens, t, d, k, scratch);
+    merge_given_match(tokens, sizes, t, d, r, scratch, out);
+}
+
+/// Zero-allocation twin of [`super::merge_dynamic`] (§5.5): merge every
+/// pair whose similarity exceeds `threshold`; returns the effective token
+/// count `t - r`.  Unlike the layered wrapper, the match is computed once
+/// and shared between the threshold count and the merge itself.
+pub fn merge_dynamic_scratch(
+    tokens: &[f32],
+    sizes: &[f32],
+    t: usize,
+    d: usize,
+    k: usize,
+    threshold: f64,
+    scratch: &mut MergeScratch,
+    out: &mut MergeResult,
+) -> usize {
+    assert_eq!(tokens.len(), t * d);
+    assert_eq!(sizes.len(), t);
+    let te = t - (t % 2);
+    let t2 = te / 2;
+    match_tokens_scratch(tokens, t, d, k, scratch);
+    let r = scratch.scores.iter().filter(|&&s| s > threshold).count().min(t2);
+    if r == 0 {
+        passthrough(tokens, sizes, t, out);
+        return t;
+    }
+    merge_given_match(tokens, sizes, t, d, r, scratch, out);
+    t - r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::merging::reference;
+    use crate::util::Rng;
+
+    #[test]
+    fn dot_matches_serial() {
+        let mut rng = Rng::new(11);
+        for n in [0usize, 1, 3, 4, 7, 64, 129] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let serial: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            assert!((dot_f64(&a, &b) - serial).abs() < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn matches_reference_on_smoke_cases(){
+        let mut rng = Rng::new(12);
+        let mut scratch = MergeScratch::new();
+        let mut out = crate::merging::MergeResult::default();
+        for &(t, d, r, k) in &[
+            (16usize, 4usize, 4usize, 2usize),
+            (17, 3, 5, 8),
+            (6, 1, 3, 3),
+            (32, 8, 16, 16),
+            (9, 2, 0, 1),
+        ] {
+            let tokens: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+            let sizes: Vec<f32> = (0..t).map(|_| 1.0 + rng.below(4) as f32).collect();
+            merge_fixed_r_scratch(&tokens, &sizes, t, d, r, k, &mut scratch, &mut out);
+            let refr = reference::merge_fixed_r_reference(&tokens, &sizes, t, d, r, k);
+            assert_eq!(out.slot_map, refr.slot_map, "t={t} d={d} r={r} k={k}");
+            for (a, b) in out.tokens.iter().zip(&refr.tokens) {
+                assert!((a - b).abs() <= 1e-5, "t={t} d={d} r={r} k={k}");
+            }
+            for (a, b) in out.sizes.iter().zip(&refr.sizes) {
+                assert!((a - b).abs() <= 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_shares_match_with_layered_path() {
+        let mut rng = Rng::new(13);
+        let (t, d, k) = (40usize, 6usize, 4usize);
+        let tokens: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+        let sizes = vec![1.0f32; t];
+        let mut scratch = MergeScratch::new();
+        let mut out = crate::merging::MergeResult::default();
+        for th in [-1.1, 0.0, 0.5, 1.1] {
+            let eff = merge_dynamic_scratch(&tokens, &sizes, t, d, k, th, &mut scratch, &mut out);
+            let (refr, ref_eff) = reference::merge_dynamic_reference(&tokens, &sizes, t, d, k, th);
+            assert_eq!(eff, ref_eff, "threshold {th}");
+            assert_eq!(out.slot_map, refr.slot_map);
+        }
+    }
+}

@@ -1,0 +1,300 @@
+//! Token merging (paper §3): batched, zero-allocation Rust kernels.
+//!
+//! Mirrors the Layer-2 JAX semantics exactly (same A/B split, banded
+//! matching, top-r selection, size-weighted averaging, order preservation,
+//! slot maps) so that the coordinator's merge-policy planner, the property
+//! tests and the artifact cross-validation probes all agree on one
+//! definition of "merge".
+//!
+//! # Module layout
+//!
+//! * [`kernel`]    — the optimized single-sequence kernel.  Per-token norms
+//!   are precomputed once (one dot per banded pair instead of recomputing
+//!   `|a|` O(k) times), the cosine dot runs as a 4-lane chunked f64
+//!   accumulation the compiler can autovectorize, and top-r selection uses
+//!   `select_nth_unstable` (O(t)) instead of a full sort (O(t log t)).
+//!   All entry points take a [`MergeScratch`] and an out-param, so steady
+//!   state does **zero heap allocations per call**.
+//! * [`scratch`]   — [`MergeScratch`], the reusable arena backing the
+//!   kernel (norms, scores, match indices, slot workspace, f64 scatter
+//!   accumulators).  Grow-only: buffers are `clear()`+`resize()`d, never
+//!   reallocated once warm.
+//! * [`batch`]     — [`BatchMerger`] / [`merge_batch`]: one merge over a
+//!   `(b, t, d)` slab, parallelized across the batch with
+//!   `std::thread::scope`, one scratch per worker.
+//! * [`pipeline`]  — [`MergePipeline`]: runs a whole per-layer schedule
+//!   (`merge_schedule`) in one call, reusing scratch across layers and
+//!   composing per-layer slot maps so a single gather unmerges the final
+//!   tokens back to input positions.
+//! * [`reference`] — the legacy scalar implementation, kept verbatim as
+//!   the differential-test oracle and the bench baseline.
+//! * [`analytic`]  — eq. 2 complexity model, the B.1 speed-up bound and
+//!   the static merge schedule.
+//!
+//! The original single-shot API (`match_tokens`, `merge_fixed_r`,
+//! `unmerge`, `merge_dynamic`) survives below as thin wrappers over the
+//! optimized kernel, so Layer-2 JAX parity semantics and all existing
+//! callers/tests are untouched.
+//!
+//! # `BENCH_merging.json` schema
+//!
+//! `cargo bench --bench merging` writes a machine-readable perf record so
+//! the kernel's trajectory accumulates across PRs (see `scripts/verify.sh`
+//! for the regression gate).  Schema (`schema_version` 1):
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "bench": "merging",
+//!   "quick": false,
+//!   "threads": 8,
+//!   "cases": [
+//!     {
+//!       "t": 8192, "d": 64, "k": 16, "r": 2048, "batch": 8,
+//!       "legacy_ms": 0.0,       // reference scalar path, per batch
+//!       "optimized_ms": 0.0,    // warm-scratch kernel, single thread
+//!       "batched_ms": 0.0,      // BatchMerger across the batch
+//!       "speedup_optimized": 0.0,  // legacy_ms / optimized_ms
+//!       "speedup_batched": 0.0     // legacy_ms / batched_ms
+//!     }
+//!   ]
+//! }
+//! ```
+
+pub mod analytic;
+pub mod batch;
+pub mod kernel;
+pub mod pipeline;
+pub mod reference;
+pub mod scratch;
+
+pub use analytic::{merge_schedule, similarity_complexity, speedup_bound};
+pub use batch::{merge_batch, BatchMerger};
+pub use kernel::{match_tokens_scratch, merge_dynamic_scratch, merge_fixed_r_scratch};
+pub use pipeline::{MergePipeline, PipelineResult};
+pub use scratch::MergeScratch;
+
+/// Result of one merge step over `t` tokens of dim `d`.
+///
+/// Also usable as a reusable out-param for the zero-allocation kernel
+/// entry points: the buffers are `clear()`+`resize()`d in place.
+#[derive(Clone, Debug, Default)]
+pub struct MergeResult {
+    /// (t - r) * d merged tokens, temporal order preserved.
+    pub tokens: Vec<f32>,
+    /// token sizes (number of originals each token represents)
+    pub sizes: Vec<f32>,
+    /// original position -> output slot (length t)
+    pub slot_map: Vec<usize>,
+}
+
+/// Bipartite soft matching under locality constraint `k` (paper eq. 1).
+///
+/// Tokens at even positions form subset A, odd positions subset B; for each
+/// A-token the best B-match within the band `|i - j| < k` is found.
+/// Returns (best_score, best_j) per A-token.
+///
+/// Thin wrapper over [`kernel::match_tokens_scratch`]; allocates a fresh
+/// scratch per call.  Hot paths should hold a [`MergeScratch`] instead.
+pub fn match_tokens(tokens: &[f32], t: usize, d: usize, k: usize) -> (Vec<f64>, Vec<usize>) {
+    let mut scratch = MergeScratch::new();
+    kernel::match_tokens_scratch(tokens, t, d, k, &mut scratch);
+    scratch.into_match()
+}
+
+/// Merge the `r` most similar A-tokens into their matched B-tokens
+/// (size-weighted average, order-preserving) — the Rust twin of
+/// `python/compile/merging.py::merge_fixed_r`.
+///
+/// Thin wrapper over [`kernel::merge_fixed_r_scratch`]; allocates a fresh
+/// scratch per call.  Hot paths should hold a [`MergeScratch`] instead.
+pub fn merge_fixed_r(
+    tokens: &[f32],
+    sizes: &[f32],
+    t: usize,
+    d: usize,
+    r: usize,
+    k: usize,
+) -> MergeResult {
+    let mut scratch = MergeScratch::new();
+    let mut out = MergeResult::default();
+    kernel::merge_fixed_r_scratch(tokens, sizes, t, d, r, k, &mut scratch, &mut out);
+    out
+}
+
+/// Clone-to-neighbours unmerge: gather rows through the slot map.
+pub fn unmerge(tokens: &[f32], d: usize, slot_map: &[usize]) -> Vec<f32> {
+    let mut out = vec![0.0f32; slot_map.len() * d];
+    unmerge_into(tokens, d, slot_map, &mut out);
+    out
+}
+
+/// Zero-allocation unmerge into a caller-provided buffer
+/// (`out.len() == slot_map.len() * d`).
+pub fn unmerge_into(tokens: &[f32], d: usize, slot_map: &[usize], out: &mut [f32]) {
+    assert_eq!(out.len(), slot_map.len() * d);
+    for (p, &s) in slot_map.iter().enumerate() {
+        out[p * d..(p + 1) * d].copy_from_slice(&tokens[s * d..(s + 1) * d]);
+    }
+}
+
+/// Dynamic merging (§5.5): merge pairs whose similarity exceeds the
+/// threshold; returns (tokens', sizes', effective_token_count).
+///
+/// Thin wrapper over [`kernel::merge_dynamic_scratch`].
+pub fn merge_dynamic(
+    tokens: &[f32],
+    sizes: &[f32],
+    t: usize,
+    d: usize,
+    k: usize,
+    threshold: f64,
+) -> (MergeResult, usize) {
+    let mut scratch = MergeScratch::new();
+    let mut out = MergeResult::default();
+    let eff = kernel::merge_dynamic_scratch(tokens, sizes, t, d, k, threshold, &mut scratch, &mut out);
+    (out, eff)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_tokens(rng: &mut Rng, t: usize, d: usize) -> Vec<f32> {
+        (0..t * d).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn merge_shapes_and_mass() {
+        let mut rng = Rng::new(1);
+        for &(t, d, r, k) in &[(24usize, 8usize, 4usize, 1usize), (24, 8, 8, 3), (25, 4, 6, 12)] {
+            let tokens = rand_tokens(&mut rng, t, d);
+            let sizes = vec![1.0f32; t];
+            let res = merge_fixed_r(&tokens, &sizes, t, d, r, k);
+            assert_eq!(res.tokens.len(), (t - r) * d);
+            assert_eq!(res.sizes.len(), t - r);
+            let total: f32 = res.sizes.iter().sum();
+            assert!((total - t as f32).abs() < 1e-3);
+            // weighted token sum preserved
+            for j in 0..d {
+                let before: f64 = (0..t).map(|p| tokens[p * d + j] as f64).sum();
+                let after: f64 = (0..t - r)
+                    .map(|s| res.tokens[s * d + j] as f64 * res.sizes[s] as f64)
+                    .sum();
+                assert!((before - after).abs() < 1e-3, "axis {j}: {before} vs {after}");
+            }
+        }
+    }
+
+    #[test]
+    fn causal_k1_merges_adjacent_only() {
+        let mut rng = Rng::new(2);
+        let (t, d) = (32, 4);
+        let tokens = rand_tokens(&mut rng, t, d);
+        let res = merge_fixed_r(&tokens, &vec![1.0; t], t, d, 8, 1);
+        for s in 0..t - 8 {
+            let sources: Vec<usize> =
+                (0..t).filter(|&p| res.slot_map[p] == s).collect();
+            let span = sources.iter().max().unwrap() - sources.iter().min().unwrap();
+            assert!(span <= 1, "slot {s} merged non-adjacent positions {sources:?}");
+        }
+    }
+
+    #[test]
+    fn identical_tokens_merge_losslessly() {
+        let (t, d) = (16, 4);
+        let tokens: Vec<f32> = (0..t * d).map(|i| ((i % d) + 1) as f32).collect();
+        let res = merge_fixed_r(&tokens, &vec![1.0; t], t, d, 8, 8);
+        for s in 0..t - 8 {
+            for j in 0..d {
+                assert!((res.tokens[s * d + j] - (j + 1) as f32).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn unmerge_restores_length() {
+        let mut rng = Rng::new(3);
+        let (t, d) = (20, 6);
+        let tokens = rand_tokens(&mut rng, t, d);
+        let res = merge_fixed_r(&tokens, &vec![1.0; t], t, d, 5, 2);
+        let um = unmerge(&res.tokens, d, &res.slot_map);
+        assert_eq!(um.len(), t * d);
+        // kept tokens whose slot holds only them are bit-identical
+        for p in 0..t {
+            let s = res.slot_map[p];
+            if res.sizes[s] == 1.0 {
+                assert_eq!(&um[p * d..(p + 1) * d], &tokens[p * d..(p + 1) * d]);
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_threshold_extremes() {
+        let mut rng = Rng::new(4);
+        let (t, d) = (16, 4);
+        let tokens = rand_tokens(&mut rng, t, d);
+        let (res, eff) = merge_dynamic(&tokens, &vec![1.0; t], t, d, 1, 1.1);
+        assert_eq!(eff, t);
+        assert_eq!(res.tokens, tokens);
+        let (_, eff) = merge_dynamic(&tokens, &vec![1.0; t], t, d, 1, -1.1);
+        assert_eq!(eff, t - t / 2);
+    }
+
+    #[test]
+    fn matching_respects_band() {
+        let mut rng = Rng::new(5);
+        let (t, d, k) = (40, 4, 3);
+        let tokens = rand_tokens(&mut rng, t, d);
+        let (_, best) = match_tokens(&tokens, t, d, k);
+        for (i, &j) in best.iter().enumerate() {
+            assert!((i as isize - j as isize).unsigned_abs() < k);
+        }
+    }
+
+    /// Regression (NaN hardening): top-r selection used
+    /// `partial_cmp().unwrap()`, a latent panic that NaN scores would
+    /// trigger — though NaN could never actually reach `scores`, since
+    /// `if s > scores[i]` rejects NaN (see `reference.rs` header).  Both
+    /// paths now use a total order; this pins down that NaN-containing
+    /// tokens merge without panicking and shape invariants hold, so a
+    /// future matching-loop refactor can't re-arm the hazard unnoticed.
+    #[test]
+    fn nan_tokens_do_not_panic() {
+        let mut rng = Rng::new(6);
+        let (t, d, r, k) = (24usize, 4usize, 6usize, 3usize);
+        let mut tokens = rand_tokens(&mut rng, t, d);
+        tokens[5] = f32::NAN;
+        tokens[40] = f32::NAN;
+        tokens[41] = f32::NAN;
+        let sizes = vec![1.0f32; t];
+        let res = merge_fixed_r(&tokens, &sizes, t, d, r, k);
+        assert_eq!(res.tokens.len(), (t - r) * d);
+        assert_eq!(res.sizes.len(), t - r);
+        assert_eq!(res.slot_map.len(), t);
+        assert!(res.slot_map.iter().all(|&s| s < t - r));
+        // the legacy reference path must tolerate NaN too
+        let refr = reference::merge_fixed_r_reference(&tokens, &sizes, t, d, r, k);
+        assert_eq!(refr.tokens.len(), (t - r) * d);
+        let (_, eff) = merge_dynamic(&tokens, &sizes, t, d, k, 0.5);
+        assert!(eff <= t);
+    }
+
+    /// Scratch reuse across heterogeneous shapes must not leak state.
+    #[test]
+    fn scratch_reuse_is_stateless() {
+        let mut rng = Rng::new(7);
+        let mut scratch = MergeScratch::new();
+        let mut out = MergeResult::default();
+        for &(t, d, r, k) in &[(40usize, 8usize, 10usize, 4usize), (9, 3, 2, 1), (64, 16, 30, 32), (11, 5, 0, 2)] {
+            let tokens = rand_tokens(&mut rng, t, d);
+            let sizes: Vec<f32> = (0..t).map(|_| 1.0 + rng.below(3) as f32).collect();
+            kernel::merge_fixed_r_scratch(&tokens, &sizes, t, d, r, k, &mut scratch, &mut out);
+            let fresh = merge_fixed_r(&tokens, &sizes, t, d, r, k);
+            assert_eq!(out.tokens, fresh.tokens, "t={t} d={d} r={r} k={k}");
+            assert_eq!(out.sizes, fresh.sizes);
+            assert_eq!(out.slot_map, fresh.slot_map);
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! [`MergePipeline`]: run a whole per-layer merge schedule in one call.
+//!
+//! The coordinator's planner and the bench suites reason about *schedules*
+//! — "merge r tokens per layer for L layers, floor q" — not single merge
+//! steps.  Running a schedule through the single-shot API allocates fresh
+//! intermediates per layer and leaves the caller to compose slot maps by
+//! hand.  The pipeline instead:
+//!
+//! * reuses one [`MergeScratch`] and two ping-pong [`MergeResult`] buffers
+//!   across all layers (zero steady-state allocations until the final
+//!   result copy-out), and
+//! * composes the per-layer slot maps into a single
+//!   `original position -> final slot` gather, so unmerging the final
+//!   tokens back to input positions is **one** gather instead of L.
+
+use super::analytic::merge_schedule;
+use super::kernel;
+use super::scratch::MergeScratch;
+use super::{unmerge, MergeResult};
+
+/// Output of a pipeline run.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineResult {
+    /// final merged tokens, `token_counts.last() * d`
+    pub tokens: Vec<f32>,
+    /// final token sizes
+    pub sizes: Vec<f32>,
+    /// composed map: original position (length t) -> final output slot
+    pub slot_map: Vec<usize>,
+    /// token count before layer 0 and after each layer (length layers + 1)
+    pub token_counts: Vec<usize>,
+}
+
+impl PipelineResult {
+    /// One-shot unmerge through the composed slot map: returns `(t, d)`
+    /// rows, each original position receiving its merged representative.
+    pub fn unmerge(&self, d: usize) -> Vec<f32> {
+        unmerge(&self.tokens, d, &self.slot_map)
+    }
+}
+
+/// Reusable multi-layer merge executor.  Construct once per worker, call
+/// [`MergePipeline::run`] (fixed r + floor, the `merge_schedule` rule) or
+/// [`MergePipeline::run_schedule`] (explicit per-layer r) per sequence.
+#[derive(Default)]
+pub struct MergePipeline {
+    scratch: MergeScratch,
+    cur: MergeResult,
+    next: MergeResult,
+    composed: Vec<usize>,
+}
+
+impl MergePipeline {
+    pub fn new() -> MergePipeline {
+        MergePipeline::default()
+    }
+
+    /// Run the static schedule `merge_schedule(t, r, num_layers, q)` —
+    /// merge up to `r` tokens per layer, never dropping below `q` tokens.
+    pub fn run(
+        &mut self,
+        tokens: &[f32],
+        sizes: &[f32],
+        t: usize,
+        d: usize,
+        k: usize,
+        r: usize,
+        num_layers: usize,
+        q: usize,
+    ) -> PipelineResult {
+        let counts = merge_schedule(t, r, num_layers, q);
+        let rs: Vec<usize> = counts.windows(2).map(|w| w[0] - w[1]).collect();
+        self.run_schedule(tokens, sizes, t, d, k, &rs)
+    }
+
+    /// Run an explicit per-layer schedule: `rs[l]` tokens are merged at
+    /// layer `l` (clamped per layer to the feasible maximum, like the
+    /// single-shot API).
+    pub fn run_schedule(
+        &mut self,
+        tokens: &[f32],
+        sizes: &[f32],
+        t: usize,
+        d: usize,
+        k: usize,
+        rs: &[usize],
+    ) -> PipelineResult {
+        assert_eq!(tokens.len(), t * d);
+        assert_eq!(sizes.len(), t);
+        let MergePipeline { scratch, cur, next, composed } = self;
+
+        cur.tokens.clear();
+        cur.tokens.extend_from_slice(tokens);
+        cur.sizes.clear();
+        cur.sizes.extend_from_slice(sizes);
+
+        composed.clear();
+        composed.extend(0..t);
+        let mut token_counts = Vec::with_capacity(rs.len() + 1);
+        let mut cur_t = t;
+        token_counts.push(cur_t);
+
+        for &r_l in rs {
+            kernel::merge_fixed_r_scratch(
+                &cur.tokens,
+                &cur.sizes,
+                cur_t,
+                d,
+                r_l,
+                k,
+                scratch,
+                next,
+            );
+            // Compose: original -> (slot in cur) -> (slot in next).
+            for slot in composed.iter_mut() {
+                *slot = next.slot_map[*slot];
+            }
+            cur_t = next.sizes.len();
+            token_counts.push(cur_t);
+            std::mem::swap(cur, next);
+        }
+
+        PipelineResult {
+            tokens: cur.tokens.clone(),
+            sizes: cur.sizes.clone(),
+            slot_map: composed.clone(),
+            token_counts,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::merging::{merge_fixed_r, merge_schedule, unmerge};
+    use crate::util::Rng;
+
+    fn rand_tokens(rng: &mut Rng, t: usize, d: usize) -> Vec<f32> {
+        (0..t * d).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn pipeline_matches_sequential_single_shots() {
+        let mut rng = Rng::new(31);
+        let (t, d, k, r, layers, q) = (48usize, 6usize, 3usize, 8usize, 4usize, 4usize);
+        let tokens = rand_tokens(&mut rng, t, d);
+        let sizes: Vec<f32> = (0..t).map(|_| 1.0 + rng.below(2) as f32).collect();
+
+        let mut pipe = MergePipeline::new();
+        let res = pipe.run(&tokens, &sizes, t, d, k, r, layers, q);
+
+        // sequential reference composition
+        let counts = merge_schedule(t, r, layers, q);
+        let mut cur_tokens = tokens.clone();
+        let mut cur_sizes = sizes.clone();
+        let mut cur_t = t;
+        let mut composed: Vec<usize> = (0..t).collect();
+        for w in counts.windows(2) {
+            let step = w[0] - w[1];
+            let m = merge_fixed_r(&cur_tokens, &cur_sizes, cur_t, d, step, k);
+            for slot in composed.iter_mut() {
+                *slot = m.slot_map[*slot];
+            }
+            cur_tokens = m.tokens;
+            cur_sizes = m.sizes;
+            cur_t = w[1];
+        }
+        assert_eq!(res.token_counts, counts);
+        assert_eq!(res.slot_map, composed);
+        assert_eq!(res.tokens, cur_tokens);
+        assert_eq!(res.sizes, cur_sizes);
+    }
+
+    #[test]
+    fn composed_unmerge_equals_layerwise_unmerge() {
+        let mut rng = Rng::new(32);
+        let (t, d, k) = (40usize, 4usize, 2usize);
+        let tokens = rand_tokens(&mut rng, t, d);
+        let sizes = vec![1.0f32; t];
+        let rs = [6usize, 6, 4];
+
+        // layerwise: keep each layer's slot_map, then gather back up
+        let mut cur_tokens = tokens.clone();
+        let mut cur_sizes = sizes.clone();
+        let mut cur_t = t;
+        let mut maps = Vec::new();
+        for &r_l in &rs {
+            let m = merge_fixed_r(&cur_tokens, &cur_sizes, cur_t, d, r_l, k);
+            cur_t -= r_l;
+            maps.push(m.slot_map.clone());
+            cur_tokens = m.tokens;
+            cur_sizes = m.sizes;
+        }
+        let mut up = cur_tokens.clone();
+        for map in maps.iter().rev() {
+            up = unmerge(&up, d, map);
+        }
+
+        let mut pipe = MergePipeline::new();
+        let res = pipe.run_schedule(&tokens, &sizes, t, d, k, &rs);
+        assert_eq!(res.unmerge(d), up);
+    }
+
+    #[test]
+    fn pipeline_reuse_across_inputs() {
+        let mut rng = Rng::new(33);
+        let mut pipe = MergePipeline::new();
+        for &(t, d) in &[(30usize, 4usize), (17, 3), (64, 8)] {
+            let tokens = rand_tokens(&mut rng, t, d);
+            let sizes = vec![1.0f32; t];
+            let res = pipe.run(&tokens, &sizes, t, d, 2, 5, 3, 4);
+            let mut fresh = MergePipeline::new();
+            let res2 = fresh.run(&tokens, &sizes, t, d, 2, 5, 3, 4);
+            assert_eq!(res.tokens, res2.tokens, "t={t} d={d}");
+            assert_eq!(res.slot_map, res2.slot_map);
+            assert_eq!(res.token_counts, res2.token_counts);
+        }
+    }
+
+    #[test]
+    fn schedule_floor_limits_depth() {
+        let mut rng = Rng::new(34);
+        let (t, d) = (20usize, 3usize);
+        let tokens = rand_tokens(&mut rng, t, d);
+        let sizes = vec![1.0f32; t];
+        let mut pipe = MergePipeline::new();
+        let res = pipe.run(&tokens, &sizes, t, d, 1, 100, 6, 4);
+        assert_eq!(*res.token_counts.last().unwrap(), 4);
+        assert_eq!(res.sizes.len(), 4);
+        assert_eq!(res.tokens.len(), 4 * d);
+        // every original position maps to a live final slot
+        assert!(res.slot_map.iter().all(|&s| s < 4));
+        let total: f64 = res.sizes.iter().map(|&s| s as f64).sum();
+        assert!((total - t as f64).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,151 @@
+//! The legacy scalar merge implementation, kept verbatim as the
+//! differential-test oracle and the bench baseline.
+//!
+//! This is the allocation-heavy single-sequence code the optimized
+//! [`super::kernel`] replaced on the hot path: cosine recomputes both norms
+//! per banded pair, top-r selection is a full stable sort, and every call
+//! allocates its intermediates.  Do not "optimize" this module — its value
+//! is being the simplest possible statement of the paper's §3 semantics.
+//!
+//! One hardening change relative to the original: top-r selection orders
+//! by `f64::total_cmp` instead of `partial_cmp().unwrap()`.  The unwrap
+//! was a latent hazard, not a live bug — NaN can never actually enter
+//! `scores`, because the matching update `if s > scores[i]` is false for
+//! NaN, so every score stays `-inf` or finite.  `total_cmp` removes the
+//! panic path outright so no future refactor of the matching loop can
+//! re-arm it (see `nan_tokens_do_not_panic` in `mod.rs`).
+
+use super::MergeResult;
+
+/// Cosine similarity between two d-vectors.
+fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for i in 0..a.len() {
+        dot += a[i] as f64 * b[i] as f64;
+        na += (a[i] as f64).powi(2);
+        nb += (b[i] as f64).powi(2);
+    }
+    dot / (na.sqrt() * nb.sqrt() + 1e-8)
+}
+
+/// Reference bipartite soft matching (paper eq. 1): per A-token, the best
+/// B-match within the band `|i - j| < k`.
+pub fn match_tokens_reference(
+    tokens: &[f32],
+    t: usize,
+    d: usize,
+    k: usize,
+) -> (Vec<f64>, Vec<usize>) {
+    let te = t - (t % 2);
+    let t2 = te / 2;
+    let k = k.clamp(1, t2.max(1));
+    let mut scores = vec![f64::NEG_INFINITY; t2];
+    let mut best = vec![0usize; t2];
+    for i in 0..t2 {
+        let a = &tokens[(2 * i) * d..(2 * i + 1) * d];
+        let lo = i.saturating_sub(k - 1);
+        let hi = (i + k - 1).min(t2 - 1);
+        for j in lo..=hi {
+            let b = &tokens[(2 * j + 1) * d..(2 * j + 2) * d];
+            let s = cosine(a, b);
+            if s > scores[i] {
+                scores[i] = s;
+                best[i] = j;
+            }
+        }
+    }
+    (scores, best)
+}
+
+/// Reference fixed-r merge: stable descending sort for top-r, fresh
+/// allocations throughout.
+pub fn merge_fixed_r_reference(
+    tokens: &[f32],
+    sizes: &[f32],
+    t: usize,
+    d: usize,
+    r: usize,
+    k: usize,
+) -> MergeResult {
+    assert_eq!(tokens.len(), t * d);
+    assert_eq!(sizes.len(), t);
+    let te = t - (t % 2);
+    let t2 = te / 2;
+    let r = r.min(t2);
+    if r == 0 {
+        return MergeResult {
+            tokens: tokens.to_vec(),
+            sizes: sizes.to_vec(),
+            slot_map: (0..t).collect(),
+        };
+    }
+    let (scores, best) = match_tokens_reference(tokens, t, d, k);
+    // top-r A tokens by score (total order: NaN-safe, unlike the original
+    // partial_cmp().unwrap())
+    let mut order: Vec<usize> = (0..t2).collect();
+    order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
+    let mut merged = vec![false; t2];
+    for &i in order.iter().take(r) {
+        merged[i] = true;
+    }
+    // output slots for kept tokens, in temporal order
+    let mut slot_map = vec![0usize; t];
+    let mut slot = 0usize;
+    let mut kept_slot = vec![usize::MAX; t];
+    for p in 0..t {
+        let is_merged_a = p % 2 == 0 && p < te && merged[p / 2];
+        if !is_merged_a {
+            kept_slot[p] = slot;
+            slot_map[p] = slot;
+            slot += 1;
+        }
+    }
+    debug_assert_eq!(slot, t - r);
+    for i in 0..t2 {
+        if merged[i] {
+            let partner = 2 * best[i] + 1;
+            slot_map[2 * i] = kept_slot[partner];
+        }
+    }
+    // size-weighted scatter-average
+    let out_t = t - r;
+    let mut num = vec![0.0f64; out_t * d];
+    let mut den = vec![0.0f64; out_t];
+    for p in 0..t {
+        let s = slot_map[p];
+        let w = sizes[p] as f64;
+        den[s] += w;
+        for j in 0..d {
+            num[s * d + j] += tokens[p * d + j] as f64 * w;
+        }
+    }
+    let mut out = vec![0.0f32; out_t * d];
+    for s in 0..out_t {
+        for j in 0..d {
+            out[s * d + j] = (num[s * d + j] / den[s]) as f32;
+        }
+    }
+    MergeResult {
+        tokens: out,
+        sizes: den.iter().map(|&x| x as f32).collect(),
+        slot_map,
+    }
+}
+
+/// Reference dynamic merging (§5.5).
+pub fn merge_dynamic_reference(
+    tokens: &[f32],
+    sizes: &[f32],
+    t: usize,
+    d: usize,
+    k: usize,
+    threshold: f64,
+) -> (MergeResult, usize) {
+    let te = t - (t % 2);
+    let t2 = te / 2;
+    let (scores, _) = match_tokens_reference(tokens, t, d, k);
+    let r = scores.iter().filter(|&&s| s > threshold).count().min(t2);
+    let res = merge_fixed_r_reference(tokens, sizes, t, d, r, k);
+    let eff = t - r;
+    (res, eff)
+}

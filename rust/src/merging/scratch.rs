@@ -1,0 +1,68 @@
+//! [`MergeScratch`]: the reusable arena behind the optimized merge kernel.
+//!
+//! All intermediate buffers the kernel needs — per-token norms, per-pair
+//! best scores/indices, the top-r selection workspace, slot bookkeeping and
+//! the f64 scatter accumulators — live here.  Buffers are grow-only:
+//! `clear()` + `resize()` keeps capacity, so after the first call at a
+//! given `(t, d)` the kernel performs **zero heap allocations per call**.
+
+/// Reusable workspace for [`crate::merging::kernel`].  Construct once per
+/// worker/thread and pass to every kernel call.
+#[derive(Clone, Debug, Default)]
+pub struct MergeScratch {
+    /// per-token L2 norm, length `te` (even prefix of t)
+    pub(crate) norms: Vec<f64>,
+    /// per-A-token best similarity, length `t2`
+    pub(crate) scores: Vec<f64>,
+    /// per-A-token best B index, length `t2`
+    pub(crate) best: Vec<usize>,
+    /// top-r selection workspace, length `t2`
+    pub(crate) order: Vec<usize>,
+    /// per-A-token merged flag, length `t2`
+    pub(crate) merged: Vec<bool>,
+    /// original position -> kept slot (usize::MAX for merged), length `t`
+    pub(crate) kept_slot: Vec<usize>,
+    /// f64 scatter numerator, length `out_t * d`
+    pub(crate) num: Vec<f64>,
+    /// f64 scatter denominator (summed sizes), length `out_t`
+    pub(crate) den: Vec<f64>,
+}
+
+impl MergeScratch {
+    pub fn new() -> MergeScratch {
+        MergeScratch::default()
+    }
+
+    /// Pre-size every buffer for a `(t, d)` problem so even the first call
+    /// is allocation-free.
+    pub fn with_capacity(t: usize, d: usize) -> MergeScratch {
+        let t2 = t / 2;
+        MergeScratch {
+            norms: Vec::with_capacity(t),
+            scores: Vec::with_capacity(t2),
+            best: Vec::with_capacity(t2),
+            order: Vec::with_capacity(t2),
+            merged: Vec::with_capacity(t2),
+            kept_slot: Vec::with_capacity(t),
+            num: Vec::with_capacity(t * d),
+            den: Vec::with_capacity(t),
+        }
+    }
+
+    /// Best-match scores of the last [`crate::merging::kernel::match_tokens_scratch`]
+    /// call (one entry per A-token).
+    pub fn scores(&self) -> &[f64] {
+        &self.scores
+    }
+
+    /// Best-match B indices of the last matching call.
+    pub fn best(&self) -> &[usize] {
+        &self.best
+    }
+
+    /// Consume the scratch, returning the (scores, best) match buffers —
+    /// the allocating wrapper API uses this to avoid a copy.
+    pub fn into_match(self) -> (Vec<f64>, Vec<usize>) {
+        (self.scores, self.best)
+    }
+}

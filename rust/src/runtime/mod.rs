@@ -5,10 +5,12 @@
 //! weights staged as device buffers.  `Manifest` (manifest.rs) is the
 //! Python<->Rust contract; `WeightStore` (weights.rs) the weight format.
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
 pub mod weights;
 
+#[cfg(feature = "pjrt")]
 pub use engine::{Engine, Model};
 pub use manifest::{Manifest, TensorSpec};
 pub use weights::WeightStore;

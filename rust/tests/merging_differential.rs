@@ -1,0 +1,246 @@
+//! Differential tests: the optimized zero-allocation kernel
+//! (`merging::kernel`, reached through the public wrappers) must be
+//! semantically identical to the legacy scalar reference
+//! (`merging::reference`) — tokens and sizes within 1e-5, slot maps
+//! exactly equal — across ~10k randomized `(t, d, r, k)` cases, including
+//! odd `t`, `r = 0`, `k >= t/2` (global matching) and size-weighted
+//! inputs.  Plus NaN regression, batch/pipeline consistency and the causal
+//! `k = 1` adjacency invariant on the optimized path.
+
+use tomers::merging::kernel::{merge_dynamic_scratch, merge_fixed_r_scratch};
+use tomers::merging::reference::{
+    match_tokens_reference, merge_dynamic_reference, merge_fixed_r_reference,
+};
+use tomers::merging::{
+    match_tokens, merge_batch, MergePipeline, MergeResult, MergeScratch,
+};
+use tomers::util::Rng;
+
+fn rand_tokens(rng: &mut Rng, t: usize, d: usize) -> Vec<f32> {
+    (0..t * d).map(|_| rng.normal() as f32).collect()
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str, case: usize) {
+    assert_eq!(a.len(), b.len(), "{what} length, case {case}");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol,
+            "{what}[{i}] diverged in case {case}: {x} vs {y}"
+        );
+    }
+}
+
+/// The headline differential property: ~10k randomized cases, optimized
+/// kernel (warm shared scratch) vs legacy reference.
+#[test]
+fn differential_optimized_equals_reference() {
+    let mut rng = Rng::new(0xD1FF);
+    let mut scratch = MergeScratch::new();
+    let mut out = MergeResult::default();
+    for case in 0..10_000 {
+        // mix odd/even t, include tiny and mid sizes
+        let t = 2 + rng.below(62);
+        let d = 1 + rng.below(16);
+        let t2 = (t - t % 2) / 2;
+        // r sweeps the full feasible range, with r = 0 and r = t2 included;
+        // every 8th case forces r = 0, every 9th forces r = t2
+        let r = if case % 8 == 0 {
+            0
+        } else if case % 9 == 0 {
+            t2
+        } else {
+            rng.below(t2 + 1)
+        };
+        // k includes 1, the band interior, and k >= t/2 (global)
+        let k = if case % 5 == 0 { t2.max(1) + rng.below(4) } else { 1 + rng.below(t2.max(1)) };
+        let tokens = rand_tokens(&mut rng, t, d);
+        // half the cases size-weighted, half unit sizes
+        let sizes: Vec<f32> = if case % 2 == 0 {
+            vec![1.0; t]
+        } else {
+            (0..t).map(|_| 1.0 + rng.below(4) as f32).collect()
+        };
+
+        merge_fixed_r_scratch(&tokens, &sizes, t, d, r, k, &mut scratch, &mut out);
+        let refr = merge_fixed_r_reference(&tokens, &sizes, t, d, r, k);
+
+        assert_eq!(
+            out.slot_map, refr.slot_map,
+            "slot_map diverged in case {case} (t={t} d={d} r={r} k={k})"
+        );
+        assert_close(&out.tokens, &refr.tokens, 1e-5, "tokens", case);
+        assert_close(&out.sizes, &refr.sizes, 1e-5, "sizes", case);
+    }
+}
+
+/// Matching itself: same best indices and scores (to fp reassociation).
+#[test]
+fn differential_matching_equals_reference() {
+    let mut rng = Rng::new(0xA7C4);
+    for case in 0..2_000 {
+        let t = 2 + rng.below(80);
+        let d = 1 + rng.below(12);
+        let t2 = (t - t % 2) / 2;
+        let k = 1 + rng.below(t2.max(1) + 2);
+        let tokens = rand_tokens(&mut rng, t, d);
+        let (scores, best) = match_tokens(&tokens, t, d, k);
+        let (ref_scores, ref_best) = match_tokens_reference(&tokens, t, d, k);
+        assert_eq!(best, ref_best, "best diverged in case {case} (t={t} d={d} k={k})");
+        for (i, (s, rs)) in scores.iter().zip(&ref_scores).enumerate() {
+            assert!(
+                (s - rs).abs() <= 1e-9,
+                "score[{i}] diverged in case {case}: {s} vs {rs}"
+            );
+        }
+    }
+}
+
+/// Dynamic merging: same effective token count and slot map for a sweep of
+/// thresholds.
+#[test]
+fn differential_dynamic_equals_reference() {
+    let mut rng = Rng::new(0xD14A);
+    let mut scratch = MergeScratch::new();
+    let mut out = MergeResult::default();
+    for case in 0..1_000 {
+        let t = 4 + rng.below(40);
+        let d = 1 + rng.below(8);
+        let t2 = (t - t % 2) / 2;
+        let k = 1 + rng.below(t2.max(1));
+        let tokens = rand_tokens(&mut rng, t, d);
+        let sizes: Vec<f32> = (0..t).map(|_| 1.0 + rng.below(3) as f32).collect();
+        for th in [-1.1, -0.5, 0.0, 0.3, 0.7, 0.95, 1.1] {
+            let eff = merge_dynamic_scratch(&tokens, &sizes, t, d, k, th, &mut scratch, &mut out);
+            let (refr, ref_eff) = merge_dynamic_reference(&tokens, &sizes, t, d, k, th);
+            assert_eq!(eff, ref_eff, "eff diverged in case {case} th={th}");
+            assert_eq!(out.slot_map, refr.slot_map, "slot_map diverged in case {case} th={th}");
+            assert_close(&out.tokens, &refr.tokens, 1e-5, "tokens", case);
+        }
+    }
+}
+
+/// NaN hardening: the legacy top-r sort used `partial_cmp().unwrap()`, a
+/// latent panic (NaN never actually reached `scores` — the matching
+/// update rejects it — but nothing pinned that down).  Both paths now use
+/// a total order and must survive NaN-containing tokens with intact
+/// shape invariants.
+#[test]
+fn differential_nan_inputs_no_panic() {
+    let mut rng = Rng::new(0x4A4);
+    let mut scratch = MergeScratch::new();
+    let mut out = MergeResult::default();
+    for case in 0..200 {
+        let t = 6 + rng.below(30);
+        let d = 1 + rng.below(6);
+        let t2 = (t - t % 2) / 2;
+        let r = 1 + rng.below(t2);
+        let k = 1 + rng.below(t2);
+        let mut tokens = rand_tokens(&mut rng, t, d);
+        // poison a few entries (sometimes whole rows)
+        for _ in 0..1 + rng.below(4) {
+            tokens[rng.below(t * d)] = f32::NAN;
+        }
+        let sizes = vec![1.0f32; t];
+        merge_fixed_r_scratch(&tokens, &sizes, t, d, r, k, &mut scratch, &mut out);
+        let refr = merge_fixed_r_reference(&tokens, &sizes, t, d, r, k);
+        for res in [(&out.slot_map, out.sizes.len()), (&refr.slot_map, refr.sizes.len())] {
+            let (slot_map, n_out) = res;
+            assert_eq!(n_out, t - r, "case {case}");
+            assert_eq!(slot_map.len(), t);
+            assert!(slot_map.iter().all(|&s| s < t - r), "case {case}");
+        }
+    }
+}
+
+/// The causal `k = 1` adjacency invariant holds on the optimized kernel:
+/// every merge group spans at most two adjacent original positions.
+#[test]
+fn optimized_causal_k1_adjacency() {
+    let mut rng = Rng::new(0xCA51);
+    let mut scratch = MergeScratch::new();
+    let mut out = MergeResult::default();
+    for case in 0..500 {
+        let t = 6 + rng.below(50);
+        let d = 1 + rng.below(8);
+        let t2 = (t - t % 2) / 2;
+        let r = rng.below(t2) + 1;
+        let tokens = rand_tokens(&mut rng, t, d);
+        let sizes = vec![1.0f32; t];
+        merge_fixed_r_scratch(&tokens, &sizes, t, d, r, 1, &mut scratch, &mut out);
+        for s in 0..t - r {
+            let members: Vec<usize> = (0..t).filter(|&p| out.slot_map[p] == s).collect();
+            let span = members.last().unwrap() - members.first().unwrap();
+            assert!(span <= 1, "case {case}: k=1 group spans {span} > 1: {members:?}");
+        }
+    }
+}
+
+/// The batched entry point agrees with the reference per sequence.
+#[test]
+fn differential_batch_equals_reference() {
+    let mut rng = Rng::new(0xBA7C);
+    for case in 0..100 {
+        let b = 1 + rng.below(9);
+        let t = 4 + rng.below(40);
+        let d = 1 + rng.below(8);
+        let t2 = (t - t % 2) / 2;
+        let r = rng.below(t2 + 1);
+        let k = 1 + rng.below(t2.max(1));
+        let tokens = rand_tokens(&mut rng, b * t, d);
+        let sizes: Vec<f32> = (0..b * t).map(|_| 1.0 + rng.below(2) as f32).collect();
+        let outs = merge_batch(&tokens, &sizes, b, t, d, r, k);
+        assert_eq!(outs.len(), b);
+        for i in 0..b {
+            let refr = merge_fixed_r_reference(
+                &tokens[i * t * d..(i + 1) * t * d],
+                &sizes[i * t..(i + 1) * t],
+                t,
+                d,
+                r,
+                k,
+            );
+            assert_eq!(outs[i].slot_map, refr.slot_map, "case {case} seq {i}");
+            assert_close(&outs[i].tokens, &refr.tokens, 1e-5, "tokens", case);
+            assert_close(&outs[i].sizes, &refr.sizes, 1e-5, "sizes", case);
+        }
+    }
+}
+
+/// The pipeline agrees with repeated single-shot reference merges plus
+/// hand-composed slot maps.
+#[test]
+fn differential_pipeline_equals_layered_reference() {
+    let mut rng = Rng::new(0x919E);
+    let mut pipe = MergePipeline::new();
+    for case in 0..200 {
+        let t = 8 + rng.below(56);
+        let d = 1 + rng.below(8);
+        let k = 1 + rng.below(8);
+        let layers = 1 + rng.below(5);
+        let r = 1 + rng.below(8);
+        let q = 2 + rng.below(6);
+        let tokens = rand_tokens(&mut rng, t, d);
+        let sizes: Vec<f32> = (0..t).map(|_| 1.0 + rng.below(2) as f32).collect();
+
+        let res = pipe.run(&tokens, &sizes, t, d, k, r, layers, q);
+
+        let counts = tomers::merging::merge_schedule(t, r, layers, q);
+        let mut cur_tokens = tokens.clone();
+        let mut cur_sizes = sizes.clone();
+        let mut composed: Vec<usize> = (0..t).collect();
+        let mut cur_t = t;
+        for w in counts.windows(2) {
+            let m = merge_fixed_r_reference(&cur_tokens, &cur_sizes, cur_t, d, w[0] - w[1], k);
+            for slot in composed.iter_mut() {
+                *slot = m.slot_map[*slot];
+            }
+            cur_tokens = m.tokens;
+            cur_sizes = m.sizes;
+            cur_t = w[1];
+        }
+        assert_eq!(res.token_counts, counts, "case {case}");
+        assert_eq!(res.slot_map, composed, "case {case}");
+        assert_close(&res.tokens, &cur_tokens, 1e-4, "tokens", case);
+        assert_close(&res.sizes, &cur_sizes, 1e-4, "sizes", case);
+    }
+}

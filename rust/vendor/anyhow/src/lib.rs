@@ -1,0 +1,158 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! The build is fully offline (no crates.io access), so the error-handling
+//! surface the crate actually uses is reimplemented here: `Error`,
+//! `Result<T>`, the `anyhow!` / `bail!` / `ensure!` macros and the
+//! `Context` extension trait for `Result` and `Option`.  Errors carry a
+//! pre-rendered message chain (context frames prepended, sources appended),
+//! which is all the callers ever format (`{e}`, `{e:#}`, `{e:?}`).
+//!
+//! Not implemented (unused by this repo): downcasting, backtraces,
+//! `Error::chain`, custom error types via `#[derive(Error)]`.
+
+use std::fmt;
+
+/// A rendered error: the full message chain as one string.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Prepend a context frame, anyhow-style (`context: cause`).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Any std error converts into `Error`, with its source chain flattened into
+// the message (this is what powers `?` on io/parse/utf8 errors).  `Error`
+// itself deliberately does not implement `std::error::Error`, so this
+// blanket impl cannot conflict with the identity `From<Error>`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut source = e.source();
+        while let Some(s) = source {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            source = s.source();
+        }
+        Error { msg }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context extension for `Result` and `Option`, mirroring anyhow's.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string (inline captures work because the
+/// literal arm forwards to `format!`) or from any displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] if the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/path/3141").context("reading config")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_and_context() {
+        let e = fails_io().unwrap_err();
+        assert!(e.to_string().starts_with("reading config: "), "{e}");
+    }
+
+    #[test]
+    fn macros_format() {
+        let x = 7;
+        assert_eq!(anyhow!("x = {x}").to_string(), "x = 7");
+        assert_eq!(anyhow!("x = {}", x + 1).to_string(), "x = 8");
+        fn b() -> Result<()> {
+            bail!("boom {}", 2)
+        }
+        assert_eq!(b().unwrap_err().to_string(), "boom 2");
+        fn e(v: usize) -> Result<usize> {
+            ensure!(v < 10, "too big: {v}");
+            Ok(v)
+        }
+        assert_eq!(e(3).unwrap(), 3);
+        assert_eq!(e(30).unwrap_err().to_string(), "too big: 30");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<usize> = None;
+        let e = v.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+    }
+}

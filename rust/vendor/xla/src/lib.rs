@@ -1,0 +1,144 @@
+//! API-compatible stub of the `xla` PJRT binding used by `tomers::runtime`.
+//!
+//! The build environment is fully offline, so the real PJRT binding (which
+//! needs a libxla build) cannot be fetched.  This stub provides the exact
+//! type/method surface `runtime::engine` compiles against; every entry
+//! point fails at *runtime* with a clear message, so `cargo build
+//! --features pjrt` and `cargo test --features pjrt` link fine and the
+//! engine-dependent paths report "PJRT unavailable" instead of breaking the
+//! build.
+//!
+//! To run against real hardware, replace this directory with the actual
+//! binding (same package name) or patch it in `rust/Cargo.toml`:
+//!
+//! ```toml
+//! [dependencies]
+//! xla = { git = "https://github.com/LaurentMazare/xla-rs", optional = true }
+//! ```
+
+use std::path::Path;
+
+/// Stub error: a plain message, `Debug`-formatted by the engine.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+fn unavailable<T>(what: &str) -> Result<T, Error> {
+    Err(Error(format!(
+        "{what}: xla stub build — replace rust/vendor/xla with a real PJRT binding"
+    )))
+}
+
+/// Element types the engine dispatches on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    U8,
+    F64,
+    Pred,
+}
+
+/// Marker for host buffer element types accepted by PJRT transfers.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+impl NativeType for u8 {}
+impl NativeType for f64 {}
+
+#[derive(Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _shape: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto, Error> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct Shape;
+
+impl Shape {
+    pub fn is_tuple(&self) -> bool {
+        false
+    }
+}
+
+pub struct ArrayShape;
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &[]
+    }
+
+    pub fn ty(&self) -> ElementType {
+        ElementType::F32
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn shape(&self) -> Result<Shape, Error> {
+        unavailable("Literal::shape")
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        unavailable("Literal::array_shape")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        unavailable("Literal::to_vec")
+    }
+}

@@ -1,0 +1,64 @@
+#!/usr/bin/env bash
+# Tier-1 verification + merging-kernel perf smoke.
+#
+# Runs:
+#   1. cargo build --release          (offline, default features)
+#   2. cargo test  -q                 (unit + property + differential tests)
+#   3. cargo bench --bench merging    (quick mode: acceptance case only)
+#   4. asserts BENCH_merging.json reports speedup_batched >= MIN_SPEEDUP
+#      on the t=8192 d=64 k=16 case (the acceptance criterion is the
+#      batched warm-scratch path), so kernel perf regressions fail loudly.
+#      The single-thread speedup is printed for trend-watching.
+#
+# Usage: scripts/verify.sh [--no-bench]
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+MIN_SPEEDUP="${MIN_SPEEDUP:-3.0}"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ERROR: cargo not found on PATH — install a Rust toolchain (>= 1.70)." >&2
+    echo "The build is fully offline: all dependencies are vendored under rust/vendor/." >&2
+    exit 1
+fi
+
+echo "== tier-1: cargo build --release =="
+cargo build --release --offline
+
+echo "== tier-1: cargo test -q =="
+cargo test -q --offline
+
+if [[ "${1:-}" == "--no-bench" ]]; then
+    echo "OK (bench smoke skipped)"
+    exit 0
+fi
+
+echo "== perf smoke: merging bench (quick) =="
+TOMERS_BENCH_QUICK=1 cargo bench --offline --bench merging
+
+if [[ ! -f BENCH_merging.json ]]; then
+    echo "ERROR: bench did not write BENCH_merging.json" >&2
+    exit 1
+fi
+
+if command -v python3 >/dev/null 2>&1; then
+    python3 - "$MIN_SPEEDUP" <<'EOF'
+import json, sys
+min_speedup = float(sys.argv[1])
+report = json.load(open("BENCH_merging.json"))
+cases = [c for c in report["cases"] if c["t"] == 8192 and c["d"] == 64 and c["k"] == 16]
+if not cases:
+    sys.exit("ERROR: acceptance case t=8192 d=64 k=16 missing from BENCH_merging.json")
+batched = min(c["speedup_batched"] for c in cases)
+single = min(c["speedup_optimized"] for c in cases)
+print(f"acceptance case: speedup_batched={batched:.2f}x (gated) speedup_optimized={single:.2f}x (trend)")
+if batched < min_speedup:
+    sys.exit(f"ERROR: batched kernel speedup regressed below {min_speedup}x")
+print("OK: merging kernel speedup gate passed")
+EOF
+else
+    echo "WARN: python3 unavailable — skipping the numeric speedup gate" >&2
+fi
+
+echo "verify: all green"
