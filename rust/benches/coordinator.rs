@@ -1,16 +1,178 @@
-//! Coordinator benchmarks: batcher + policy hot paths and the served
-//! throughput of the full stack (policy -> batch -> PJRT -> dequantize).
+//! Coordinator benchmarks: batcher + policy hot paths, the staged
+//! merge-while-execute pipeline vs the PR 1 serial loop, and (with the
+//! `pjrt` feature + artifacts) the served throughput of the full stack.
+//!
+//! The staged-pipeline section drives the *real* serving machinery
+//! (`coordinator::pipeline::run_stages`: prep thread, double-buffered
+//! slabs, pool-backed premerge) with a synthetic device stage — a
+//! deterministic arithmetic spin standing in for `model.execute` — so the
+//! host-merge/device-execute overlap is measurable in the default offline
+//! build.  The serial baseline runs the identical prep + execute work on
+//! one thread.  Writes `BENCH_serving.json`:
+//!
+//! ```json
+//! {
+//!   "schema_version": 1, "bench": "serving", "quick": false,
+//!   "pool_workers": 2, "capacity": 8, "m": 512, "ctx_len": 2048,
+//!   "rows": [
+//!     { "ratio": 1.0,          // target exec:prep cost ratio
+//!       "reps": 80,            // spin reps realizing it
+//!       "prep_ms": 0.0, "exec_ms": 0.0,     // measured single-shot costs
+//!       "requests": 320, "serial_s": 0.0, "staged_s": 0.0,
+//!       "serial_rps": 0.0, "staged_rps": 0.0,
+//!       "overlap_gain": 0.0 }  // staged_rps / serial_rps - 1
+//!   ]
+//! }
+//! ```
+//!
+//! Acceptance (scripts/verify.sh): the balanced row (`ratio == 1`) must
+//! show `staged_rps > serial_rps` — if overlapping prep with execution is
+//! not faster than alternating them, the pipeline is broken.
 
-use std::time::Duration;
+#![allow(unknown_lints)]
+#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
+use tomers::coordinator::pipeline::{self, Pending, PrepJob, VariantMeta};
 use tomers::coordinator::{
-    self, policy::Variant, BatcherConfig, DynamicBatcher, ForecastRequest, MergePolicy,
-    ServerConfig,
+    policy::Variant, BatcherConfig, DynamicBatcher, ForecastRequest, ForecastResponse,
+    HostMergeConfig, MergePolicy, Metrics,
 };
 use tomers::data;
+use tomers::json::Json;
+use tomers::runtime::WorkerPool;
 use tomers::util::{bench, Rng};
 
+const VARIANT: &str = "sim__r0";
+const HORIZON: usize = 64;
+
+/// Deterministic stand-in for `model.execute`: `reps` passes of a
+/// multiply-accumulate over the slab.
+fn device_work(slab: &[f32], reps: usize) -> f32 {
+    let mut acc = 0.0f32;
+    for rep in 0..reps {
+        let scale = 1.0 + (rep % 7) as f32 * 1e-3;
+        let mut s = 0.0f32;
+        for (i, &v) in slab.iter().enumerate() {
+            s += v * (((i & 63) as f32) * 1e-2 + scale);
+        }
+        acc += s;
+    }
+    std::hint::black_box(acc)
+}
+
+/// `n_batches` full batches of premerge-length contexts, plus the response
+/// receivers to drain afterwards.
+fn make_jobs(
+    n_batches: usize,
+    capacity: usize,
+    ctx_len: usize,
+    seed: u64,
+) -> (Vec<PrepJob>, Vec<mpsc::Receiver<ForecastResponse>>) {
+    let mut rng = Rng::new(seed);
+    let mut jobs = Vec::with_capacity(n_batches);
+    let mut receivers = Vec::with_capacity(n_batches * capacity);
+    let mut id = 0u64;
+    for _ in 0..n_batches {
+        let mut batch: Vec<Pending> = Vec::with_capacity(capacity);
+        for _ in 0..capacity {
+            let profile = if id % 2 == 0 { "weather" } else { "ettm1" };
+            let series = data::generate(data::profile(profile).unwrap(), ctx_len, rng.next_u64());
+            let (rtx, rrx) = mpsc::channel();
+            batch.push((
+                ForecastRequest { id, context: series.column(0) },
+                Instant::now(),
+                rtx,
+            ));
+            receivers.push(rrx);
+            id += 1;
+        }
+        jobs.push(PrepJob { variant: VARIANT.to_string(), batch });
+    }
+    (jobs, receivers)
+}
+
+fn forecast_rows(rows: usize) -> Vec<Vec<f32>> {
+    (0..rows).map(|_| vec![0.0f32; HORIZON]).collect()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn staged_vs_serial(
+    pool: &'static WorkerPool,
+    meta: &VariantMeta,
+    merge_cfg: &HostMergeConfig,
+    ctx_len: usize,
+    n_batches: usize,
+    reps: usize,
+    seed: u64,
+) -> (f64, f64) {
+    let metas: BTreeMap<String, VariantMeta> =
+        [(VARIANT.to_string(), meta.clone())].into_iter().collect();
+
+    // -- serial baseline: prep and execute alternate on one thread, with
+    // the same pool-backed premerge parallelism production uses ----------
+    let (jobs, receivers) = make_jobs(n_batches, meta.capacity, ctx_len, seed);
+    let mut hp = pipeline::HostPrep::new(pool.workers(), merge_cfg.clone());
+    let mut slab = Vec::new();
+    let t0 = Instant::now();
+    for job in jobs {
+        hp.prep_into(pool, &job.batch, meta, &mut slab).expect("serial prep");
+        device_work(&slab, reps);
+        let rows = forecast_rows(job.batch.len());
+        for ((req, tq, rtx), forecast) in job.batch.into_iter().zip(rows) {
+            let _ = rtx.send(ForecastResponse {
+                id: req.id,
+                forecast,
+                variant: VARIANT.to_string(),
+                latency: tq.elapsed().as_secs_f64(),
+                batch_size: meta.capacity,
+            });
+        }
+    }
+    let serial_s = t0.elapsed().as_secs_f64();
+    let served = receivers.iter().filter(|rx| rx.recv().is_ok()).count();
+    assert_eq!(served, n_batches * meta.capacity, "serial run dropped requests");
+
+    // -- staged: identical work through run_stages (prep overlaps exec) --
+    let (jobs, receivers) = make_jobs(n_batches, meta.capacity, ctx_len, seed);
+    let (jobs_tx, jobs_rx) = mpsc::sync_channel::<PrepJob>(2);
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let t0 = Instant::now();
+    let feeder = std::thread::spawn(move || {
+        for job in jobs {
+            if jobs_tx.send(job).is_err() {
+                return;
+            }
+        }
+    });
+    pipeline::run_stages(
+        jobs_rx,
+        metas,
+        merge_cfg.clone(),
+        pool.workers(), // prep parallelism as the real server configures it
+        pool,
+        Arc::clone(&metrics),
+        |ready| {
+            device_work(&ready.slab, reps);
+            Ok(forecast_rows(ready.rows))
+        },
+    )
+    .expect("staged run");
+    let staged_s = t0.elapsed().as_secs_f64();
+    feeder.join().expect("feeder");
+    let served = receivers.iter().filter(|rx| rx.recv().is_ok()).count();
+    assert_eq!(served, n_batches * meta.capacity, "staged run dropped requests");
+
+    (serial_s, staged_s)
+}
+
 fn main() {
+    let quick = std::env::var("TOMERS_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let out_path = std::env::var("TOMERS_BENCH_SERVING_OUT")
+        .unwrap_or_else(|_| "BENCH_serving.json".to_string());
     println!("== bench: coordinator ==");
 
     // policy decision cost (spectral entropy on one 512-context)
@@ -48,10 +210,92 @@ fn main() {
     });
     println!("batcher 10k push+drain      {:>10.2}ms", mean * 1e3);
 
-    // full serving stack throughput (needs artifacts)
+    // -- staged pipeline vs serial loop (synthetic device) ---------------
+    let pool = WorkerPool::global();
+    let meta = VariantMeta { capacity: 8, m: 512 };
+    let merge_cfg = HostMergeConfig { enabled: true, k: 8 };
+    let ctx_len = 2048; // premerged 2048 -> 1024 -> 512 on the pool
+    let n_batches = if quick { 8 } else { 40 };
+
+    // Calibrate the synthetic device against the measured prep cost
+    // (pool-parallel premerge, exactly as the measured runs do it).
+    let (cal_jobs, _cal_rx) = make_jobs(1, meta.capacity, ctx_len, 99);
+    let mut hp = pipeline::HostPrep::new(pool.workers(), merge_cfg.clone());
+    let mut slab = Vec::new();
+    let (prep_s, _) = bench(2, if quick { 5 } else { 15 }, || {
+        hp.prep_into(pool, &cal_jobs[0].batch, &meta, &mut slab).expect("cal prep");
+    });
+    let (one_rep_s, _) = bench(2, if quick { 5 } else { 15 }, || {
+        device_work(&slab, 1);
+    });
+    println!(
+        "prep(8x{ctx_len}->512)        {:>10.2}ms   device rep {:>8.1}us",
+        prep_s * 1e3,
+        one_rep_s * 1e6
+    );
+
+    let ratios: &[f64] = if quick { &[1.0] } else { &[1.0, 4.0] };
+    let mut rows = Vec::new();
+    for &ratio in ratios {
+        let reps = ((prep_s * ratio / one_rep_s.max(1e-9)).round() as usize).max(1);
+        let (serial_s, staged_s) =
+            staged_vs_serial(pool, &meta, &merge_cfg, ctx_len, n_batches, reps, 17);
+        let requests = (n_batches * meta.capacity) as f64;
+        let serial_rps = requests / serial_s.max(1e-9);
+        let staged_rps = requests / staged_s.max(1e-9);
+        let gain = staged_rps / serial_rps.max(1e-9) - 1.0;
+        println!(
+            "serving ratio={ratio:<4} reps={reps:<5} serial {serial_rps:>8.1} req/s   staged \
+             {staged_rps:>8.1} req/s   overlap {:+.1}%",
+            gain * 100.0
+        );
+        rows.push(Json::obj(vec![
+            ("ratio", Json::num(ratio)),
+            ("reps", Json::num(reps as f64)),
+            ("prep_ms", Json::num(prep_s * 1e3)),
+            ("exec_ms", Json::num(one_rep_s * reps as f64 * 1e3)),
+            ("requests", Json::num(requests)),
+            ("serial_s", Json::num(serial_s)),
+            ("staged_s", Json::num(staged_s)),
+            ("serial_rps", Json::num(serial_rps)),
+            ("staged_rps", Json::num(staged_rps)),
+            ("overlap_gain", Json::num(gain)),
+        ]));
+    }
+    let report = Json::obj(vec![
+        ("schema_version", Json::num(1.0)),
+        ("bench", Json::str("serving")),
+        ("quick", Json::Bool(quick)),
+        ("pool_workers", Json::num(pool.workers() as f64)),
+        ("capacity", Json::num(meta.capacity as f64)),
+        ("m", Json::num(meta.m as f64)),
+        ("ctx_len", Json::num(ctx_len as f64)),
+        ("rows", Json::arr(rows)),
+    ]);
+    match std::fs::write(&out_path, report.to_string_pretty()) {
+        Ok(()) => println!("serving record -> {out_path}"),
+        Err(e) => eprintln!("WARN: could not write {out_path}: {e}"),
+    }
+    println!("expected shape: staged > serial at ratio 1 (full overlap headroom);");
+    println!("the gain shrinks as the device dominates (ratio 4).");
+
+    // -- full serving stack throughput (needs pjrt + artifacts) ----------
+    #[cfg(feature = "pjrt")]
+    real_stack(policy);
+    #[cfg(not(feature = "pjrt"))]
+    {
+        let _ = policy;
+        println!("real serving stack: SKIP (built without the pjrt feature)");
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn real_stack(policy: MergePolicy) {
+    use tomers::coordinator::{self, ServerConfig};
+
     let dir = std::path::PathBuf::from("artifacts");
     if !dir.join("chronos_s__r0.hlo.txt").exists() {
-        println!("serving bench: SKIP (run `make artifacts`)");
+        println!("real serving stack: SKIP (run `make artifacts`)");
         return;
     }
     let handle = coordinator::server::serve(ServerConfig {
@@ -59,6 +303,8 @@ fn main() {
         policy,
         max_wait: Duration::from_millis(10),
         max_queue: 8192,
+        merge_workers: 0,
+        host_merge: HostMergeConfig::default(),
     })
     .expect("server");
     let client = handle.client();

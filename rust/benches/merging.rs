@@ -1,27 +1,32 @@
 //! Merging kernel benchmarks: legacy scalar reference vs the optimized
-//! zero-allocation kernel vs the thread-scoped batched path, plus the
-//! eq. 2 local/global complexity crossover the paper's §5.4 overhead
-//! numbers come from.
+//! zero-allocation kernel vs the batched path — with the batched path
+//! measured twice: on the persistent [`WorkerPool`] (the production path)
+//! and through the PR 1 `thread::scope` fan-out (the baseline the pool
+//! must beat or match, since it does strictly less work per call).
 //!
 //! Offline build: hand-rolled harness (no criterion crate available);
 //! run with `cargo bench --offline --bench merging`.
 //!
-//! Writes a machine-readable `BENCH_merging.json` (schema documented in
-//! `src/merging/mod.rs`) so the kernel's perf trajectory accumulates
+//! Writes a machine-readable `BENCH_merging.json` (schema v2, documented
+//! in `src/merging/mod.rs`) so the kernel's perf trajectory accumulates
 //! across PRs; `scripts/verify.sh` gates on the acceptance case
-//! `t=8192 d=64 k=16` keeping `speedup_batched >= 3` (the single-thread
-//! `speedup_optimized` is printed for trend-watching, not gated).
+//! `t=8192 d=64 k=16` keeping `speedup_batched >= 3` (now the pool-backed
+//! number) and on `post_warmup_spawns == 0` — the pool's entire point is
+//! that steady state spawns no threads.
 //!
 //! Env knobs:
-//! * `TOMERS_BENCH_QUICK=1` — few iterations, acceptance case only
+//! * `TOMERS_BENCH_QUICK=1` — few iterations, acceptance cases only
 //!   (the CI smoke used by scripts/verify.sh)
 //! * `TOMERS_BENCH_OUT=path` — where to write the JSON (default
 //!   `BENCH_merging.json` in the package root)
 
+#![allow(unknown_lints)]
+#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
 use tomers::json::Json;
-use tomers::merging::{reference, similarity_complexity, BatchMerger, MergeResult, MergeScratch};
 use tomers::merging::kernel::merge_fixed_r_scratch;
-use tomers::util::{bench, Rng};
+use tomers::merging::{reference, similarity_complexity, BatchMerger, MergeResult, MergeScratch};
+use tomers::runtime::WorkerPool;
+use tomers::util::{bench, bench_samples, percentile, Rng};
 
 struct Case {
     t: usize,
@@ -36,28 +41,43 @@ fn main() {
     let out_path =
         std::env::var("TOMERS_BENCH_OUT").unwrap_or_else(|_| "BENCH_merging.json".to_string());
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let pool = WorkerPool::global();
 
-    // The acceptance case (t=8192, d=64, k=16) is always present.
+    // The verify.sh acceptance case (t=8192, d=64, k=16, b=4) and the
+    // pool-vs-scope acceptance case (same shape, b=32) are always present.
     let cases: Vec<Case> = if quick {
-        vec![Case { t: 8192, d: 64, k: 16, batch: 4, iters: 3 }]
+        vec![
+            Case { t: 8192, d: 64, k: 16, batch: 4, iters: 3 },
+            // more samples: the pool-vs-scope p50 gate needs a stable median
+            Case { t: 8192, d: 64, k: 16, batch: 32, iters: 7 },
+        ]
     } else {
         vec![
             Case { t: 512, d: 64, k: 1, batch: 8, iters: 20 },
             Case { t: 2048, d: 64, k: 16, batch: 8, iters: 10 },
             Case { t: 8192, d: 64, k: 16, batch: 8, iters: 5 },
+            Case { t: 8192, d: 64, k: 16, batch: 32, iters: 5 },
             Case { t: 8192, d: 64, k: 1, batch: 8, iters: 5 },
             Case { t: 16000, d: 64, k: 16, batch: 4, iters: 3 },
         ]
     };
 
-    println!("== bench: merging (legacy scalar vs optimized vs batched; {threads} threads) ==");
     println!(
-        "{:<22} {:>12} {:>12} {:>12} {:>8} {:>8} {:>14}",
-        "case", "legacy", "optimized", "batched", "x-opt", "x-batch", "sim-ops(eq.2)"
+        "== bench: merging (legacy vs optimized vs batched pool/scope; {threads} threads, \
+         pool={} workers) ==",
+        pool.workers()
+    );
+    println!(
+        "{:<22} {:>11} {:>11} {:>11} {:>11} {:>7} {:>7} {:>13}",
+        "case", "legacy", "optimized", "pool", "scope", "x-opt", "x-pool", "sim-ops(eq.2)"
     );
 
     let mut rng = Rng::new(1);
     let mut rows: Vec<Json> = Vec::new();
+
+    // Warm the pool once, then require zero spawns across all timed work.
+    pool.run((0..pool.workers()).map(|_| || {}).collect::<Vec<_>>());
+    let spawns_before = pool.spawned_threads();
 
     for case in &cases {
         let (t, d, k, b) = (case.t, case.d, case.k, case.batch);
@@ -97,25 +117,35 @@ fn main() {
             }
         });
 
-        // batched path: thread::scope across the batch, warm per-worker scratch
+        // batched on the persistent pool (production path)
         let mut merger = BatchMerger::with_default_parallelism();
         let mut outs: Vec<MergeResult> = Vec::new();
-        let (batch_s, _) = bench(1, case.iters, || {
-            merger.merge_batch_into(&tokens, &sizes, b, t, d, r, k, &mut outs);
+        let mut pool_samples = bench_samples(1, case.iters, || {
+            merger.merge_batch_into(pool, &tokens, &sizes, b, t, d, r, k, &mut outs);
         });
+        let pool_s = pool_samples.iter().sum::<f64>() / pool_samples.len() as f64;
+        let pool_p50 = percentile(&mut pool_samples, 50.0);
+
+        // batched through the PR 1 thread::scope fan-out (baseline)
+        let mut scope_samples = bench_samples(1, case.iters, || {
+            merger.merge_batch_into_scoped(&tokens, &sizes, b, t, d, r, k, &mut outs);
+        });
+        let scope_s = scope_samples.iter().sum::<f64>() / scope_samples.len() as f64;
+        let scope_p50 = percentile(&mut scope_samples, 50.0);
 
         let x_opt = legacy_s / opt_s.max(1e-12);
-        let x_batch = legacy_s / batch_s.max(1e-12);
+        let x_pool = legacy_s / pool_s.max(1e-12);
         println!(
-            "t={:<6} k={:<4} b={:<3} {:>10.3}ms {:>10.3}ms {:>10.3}ms {:>7.2}x {:>7.2}x {:>14}",
+            "t={:<6} k={:<4} b={:<3} {:>9.3}ms {:>9.3}ms {:>9.3}ms {:>9.3}ms {:>6.2}x {:>6.2}x {:>13}",
             t,
             k,
             b,
             legacy_s * 1e3,
             opt_s * 1e3,
-            batch_s * 1e3,
+            pool_s * 1e3,
+            scope_s * 1e3,
             x_opt,
-            x_batch,
+            x_pool,
             similarity_complexity(t, k)
         );
 
@@ -127,23 +157,38 @@ fn main() {
             ("batch", Json::num(b as f64)),
             ("legacy_ms", Json::num(legacy_s * 1e3)),
             ("optimized_ms", Json::num(opt_s * 1e3)),
-            ("batched_ms", Json::num(batch_s * 1e3)),
+            ("batched_ms", Json::num(pool_s * 1e3)),
+            ("batched_p50_ms", Json::num(pool_p50 * 1e3)),
+            ("batched_scope_ms", Json::num(scope_s * 1e3)),
+            ("batched_scope_p50_ms", Json::num(scope_p50 * 1e3)),
             ("speedup_optimized", Json::num(x_opt)),
-            ("speedup_batched", Json::num(x_batch)),
+            ("speedup_batched", Json::num(x_pool)),
         ]));
     }
 
+    let post_warmup_spawns = pool.spawned_threads() - spawns_before;
+    println!(
+        "\npool: workers={} post-warmup spawns={} steals={} tasks={}",
+        pool.workers(),
+        post_warmup_spawns,
+        pool.steals(),
+        pool.tasks_executed()
+    );
+
     let report = Json::obj(vec![
-        ("schema_version", Json::num(1.0)),
+        ("schema_version", Json::num(2.0)),
         ("bench", Json::str("merging")),
         ("quick", Json::Bool(quick)),
         ("threads", Json::num(threads as f64)),
+        ("pool_workers", Json::num(pool.workers() as f64)),
+        ("post_warmup_spawns", Json::num(post_warmup_spawns as f64)),
+        ("pool_steals", Json::num(pool.steals() as f64)),
         ("cases", Json::arr(rows)),
     ]);
     match std::fs::write(&out_path, report.to_string_pretty()) {
         Ok(()) => println!("\nperf record -> {out_path}"),
         Err(e) => eprintln!("\nWARN: could not write {out_path}: {e}"),
     }
-    println!("expected shape: optimized >= 3x legacy on the banded cases; batched");
-    println!("scales further with cores. local k=1 stays ~linear in t, global ~t^2.");
+    println!("expected shape: optimized >= 3x legacy on the banded cases; pool p50 <=");
+    println!("scope p50 at b=32 (no per-call spawns); local k=1 ~linear in t, global ~t^2.");
 }

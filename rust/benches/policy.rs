@@ -5,6 +5,8 @@
 //! Compares the legacy uncached full-context decide against the
 //! bounded-prefix + memoized `decide_cached` path the server now uses.
 
+#![allow(unknown_lints)]
+#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
 use tomers::coordinator::policy::Variant;
 use tomers::coordinator::{EntropyCache, MergePolicy};
 use tomers::util::{bench, Rng};

@@ -14,7 +14,9 @@
 //!     "entropy_lo": 3.0,
 //!     "entropy_hi": 7.5
 //!   },
-//!   "batching": {"max_wait_ms": 20, "max_queue": 4096}
+//!   "batching": {"max_wait_ms": 20, "max_queue": 4096},
+//!   "merge_workers": 0,
+//!   "host_merge": {"enabled": true, "k": 8}
 //! }
 //! ```
 
@@ -24,7 +26,7 @@ use std::time::Duration;
 use anyhow::{ensure, Context, Result};
 
 use crate::coordinator::policy::{MergePolicy, Variant};
-use crate::coordinator::ServerConfig;
+use crate::coordinator::{HostMergeConfig, ServerConfig};
 use crate::json::Json;
 
 #[derive(Clone, Debug)]
@@ -33,6 +35,9 @@ pub struct ServeFileConfig {
     pub policy: MergePolicy,
     pub max_wait: Duration,
     pub max_queue: usize,
+    /// worker count for the process-wide host-merge pool (0 = machine default)
+    pub merge_workers: usize,
+    pub host_merge: HostMergeConfig,
 }
 
 impl ServeFileConfig {
@@ -77,11 +82,30 @@ impl ServeFileConfig {
             .unwrap_or(4096);
         ensure!(max_wait_ms >= 0.0 && max_queue > 0, "invalid batching config");
 
+        let merge_workers = v
+            .get("merge_workers")
+            .and_then(|x| x.as_usize().ok())
+            .unwrap_or(0);
+        let hm = v.get("host_merge");
+        let host_merge = HostMergeConfig {
+            enabled: hm
+                .and_then(|h| h.get("enabled"))
+                .and_then(|x| x.as_bool().ok())
+                .unwrap_or(HostMergeConfig::default().enabled),
+            k: hm
+                .and_then(|h| h.get("k"))
+                .and_then(|x| x.as_usize().ok())
+                .unwrap_or(HostMergeConfig::default().k),
+        };
+        ensure!(host_merge.k >= 1, "host_merge.k must be >= 1");
+
         Ok(ServeFileConfig {
             artifact_dir,
             policy,
             max_wait: Duration::from_micros((max_wait_ms * 1000.0) as u64),
             max_queue,
+            merge_workers,
+            host_merge,
         })
     }
 
@@ -91,6 +115,8 @@ impl ServeFileConfig {
             policy: self.policy,
             max_wait: self.max_wait,
             max_queue: self.max_queue,
+            merge_workers: self.merge_workers,
+            host_merge: self.host_merge,
         }
     }
 
@@ -107,7 +133,9 @@ impl ServeFileConfig {
   "entropy_lo": 3.0,
   "entropy_hi": 7.5
  },
- "batching": {"max_wait_ms": 20, "max_queue": 4096}
+ "batching": {"max_wait_ms": 20, "max_queue": 4096},
+ "merge_workers": 0,
+ "host_merge": {"enabled": true, "k": 8}
 }
 "#
     }
@@ -125,6 +153,9 @@ mod tests {
         assert_eq!(cfg.max_wait, Duration::from_millis(20));
         assert_eq!(cfg.max_queue, 4096);
         assert_eq!(cfg.artifact_dir, PathBuf::from("artifacts"));
+        assert_eq!(cfg.merge_workers, 0);
+        assert!(cfg.host_merge.enabled);
+        assert_eq!(cfg.host_merge.k, 8);
     }
 
     #[test]
@@ -135,6 +166,26 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.max_queue, 4096);
         assert_eq!(cfg.policy.variants.len(), 1);
+        assert_eq!(cfg.merge_workers, 0);
+        assert!(cfg.host_merge.enabled, "host premerge defaults on");
+    }
+
+    #[test]
+    fn parses_serving_overrides() {
+        let cfg = ServeFileConfig::parse(
+            r#"{"policy": {"variants": [{"name": "x__r0", "r": 0}]},
+                "merge_workers": 6,
+                "host_merge": {"enabled": false, "k": 3}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.merge_workers, 6);
+        assert!(!cfg.host_merge.enabled);
+        assert_eq!(cfg.host_merge.k, 3);
+        assert!(ServeFileConfig::parse(
+            r#"{"policy": {"variants": [{"name": "x__r0", "r": 0}]},
+                "host_merge": {"k": 0}}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! element) to the artifact's static batch size and the padding is
 //! discarded on the way out.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
 
 #[derive(Clone, Debug)]
@@ -75,6 +75,12 @@ impl<T> DynamicBatcher<T> {
         }
     }
 
+    /// Enqueue time of the oldest pending request (`None` when empty) —
+    /// the key [`drain_ready`] orders flushes by.
+    pub fn oldest(&self) -> Option<Instant> {
+        self.queue.front().map(|p| p.enqueued)
+    }
+
     /// Time until the oldest request hits max_wait (for the server's poll
     /// timeout); `None` when the queue is empty.
     pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
@@ -90,6 +96,38 @@ impl<T> DynamicBatcher<T> {
     pub fn drain_batch(&mut self) -> Vec<T> {
         let n = self.queue.len().min(self.config.capacity);
         self.queue.drain(..n).map(|p| p.item).collect()
+    }
+}
+
+/// Flush every ready queue of a multi-variant queue set, **in deadline
+/// order**: among the queues that are ready, the one whose oldest pending
+/// request enqueued earliest is drained first, then readiness is
+/// re-evaluated.
+///
+/// The serving loop previously iterated the map in key order and drained
+/// each queue to exhaustion (`for (name, q) in queues { while q.ready() ..
+/// }`), so a hot early-named variant could starve later queues past their
+/// `max_wait` deadline indefinitely.  Oldest-first interleaving bounds
+/// every variant's flush delay by the work of the batches genuinely ahead
+/// of it.
+pub fn drain_ready<K: Ord + Clone, T>(
+    queues: &mut BTreeMap<K, DynamicBatcher<T>>,
+    now: Instant,
+) -> Vec<(K, Vec<T>)> {
+    let mut flushed = Vec::new();
+    loop {
+        let next: Option<K> = queues
+            .iter()
+            .filter(|(_, q)| q.ready(now))
+            .min_by_key(|(_, q)| q.oldest().expect("ready queue has a front"))
+            .map(|(k, _)| k.clone());
+        match next {
+            Some(k) => {
+                let batch = queues.get_mut(&k).expect("key from iteration").drain_batch();
+                flushed.push((k, batch));
+            }
+            None => return flushed,
+        }
     }
 }
 
@@ -147,6 +185,53 @@ mod tests {
         assert_eq!(b.drain_batch(), vec![0, 1]);
         assert_eq!(b.drain_batch(), vec![2, 3]);
         assert_eq!(b.drain_batch(), vec![4]);
+    }
+
+    #[test]
+    fn drain_ready_prefers_oldest_pending() {
+        // "b" receives its (single) request first, then "a" fills to
+        // capacity; with max_wait 0 both are ready, and the old fixed-order
+        // loop would flush "a" first.  Deadline order must flush "b" first.
+        let mut queues: BTreeMap<&str, DynamicBatcher<u32>> = BTreeMap::new();
+        queues.insert("a", DynamicBatcher::new(cfg(2, 0, 100)));
+        queues.insert("b", DynamicBatcher::new(cfg(2, 0, 100)));
+        queues.get_mut("b").unwrap().push(99).unwrap();
+        std::thread::sleep(Duration::from_millis(3));
+        queues.get_mut("a").unwrap().push(1).unwrap();
+        queues.get_mut("a").unwrap().push(2).unwrap();
+        let flushed = drain_ready(&mut queues, Instant::now());
+        assert_eq!(flushed.len(), 2);
+        assert_eq!(flushed[0], ("b", vec![99]));
+        assert_eq!(flushed[1], ("a", vec![1, 2]));
+        assert!(queues.values().all(|q| q.is_empty()));
+    }
+
+    #[test]
+    fn drain_ready_interleaves_hot_queue_with_starved_one() {
+        // Regression for the flush-starvation bug: "a" (early in key
+        // order) holds many full batches; "z" has one older-than-deadline
+        // request.  "z" must not wait for all of "a"'s backlog.
+        let mut queues: BTreeMap<&str, DynamicBatcher<u32>> = BTreeMap::new();
+        queues.insert("a", DynamicBatcher::new(cfg(2, 0, 100)));
+        queues.insert("z", DynamicBatcher::new(cfg(8, 0, 100)));
+        queues.get_mut("z").unwrap().push(7).unwrap();
+        std::thread::sleep(Duration::from_millis(3));
+        for i in 0..6 {
+            queues.get_mut("a").unwrap().push(i).unwrap();
+        }
+        let flushed = drain_ready(&mut queues, Instant::now());
+        assert_eq!(flushed[0].0, "z", "starved queue must flush first");
+        assert_eq!(flushed.len(), 4); // z once + a three times (capacity 2)
+        assert!(flushed[1..].iter().all(|(k, _)| *k == "a"));
+    }
+
+    #[test]
+    fn drain_ready_leaves_unready_queues_alone() {
+        let mut queues: BTreeMap<&str, DynamicBatcher<u32>> = BTreeMap::new();
+        queues.insert("a", DynamicBatcher::new(cfg(4, 10_000, 100)));
+        queues.get_mut("a").unwrap().push(1).unwrap();
+        assert!(drain_ready(&mut queues, Instant::now()).is_empty());
+        assert_eq!(queues["a"].len(), 1);
     }
 
     #[test]

@@ -1,28 +1,41 @@
-//! Layer-3 coordinator: the serving system around the compiled artifacts.
+//! Layer-3 coordinator: the staged serving system around the compiled
+//! artifacts.
 //!
-//! The paper accelerates *inference of already-trained models*; the natural
-//! systems shape is a forecast-serving coordinator (DESIGN.md §2):
+//! The paper accelerates *inference of already-trained models*; the
+//! systems shape is a forecast-serving coordinator whose host-side work is
+//! overlapped with device execution (the "merge-while-execute" pipeline):
 //!
-//! * `policy`  — merge-policy planner: picks the merge-rate variant per
-//!   request from cheap input statistics (spectral entropy / adjacent
-//!   token similarity), i.e. the serving-level realisation of §5.5
+//! * `policy`   — merge-policy planner: picks the merge-rate variant per
+//!   request from cheap input statistics (spectral entropy via the
+//!   memoized `EntropyCache`), i.e. the serving-level realisation of §5.5
 //!   dynamic merging.
-//! * `batcher` — dynamic batcher: groups requests per variant under a
-//!   max-batch / max-wait policy and pads to the artifact batch size.
-//! * `server`  — executor thread owning the PJRT engine (PJRT handles are
-//!   not `Send`, so all device work lives on one thread — the same
-//!   topology as a single-accelerator serving process) plus the client
-//!   handle and request plumbing.
-//! * `metrics` — latency/throughput accounting for the benchmark harness.
+//! * `batcher`  — dynamic batcher: groups requests per (variant, context
+//!   length) under a max-batch / max-wait policy (length-uniform batches
+//!   share one premerge schedule).  `drain_ready` flushes a multi-queue
+//!   set in **deadline order** (oldest pending request first), so a hot
+//!   queue can no longer starve the others past their `max_wait`.
+//! * `pipeline` — the staged core (PJRT-free, so benches and tests can
+//!   drive it with a synthetic device): a prep stage that pads input
+//!   slabs and **premerges over-length contexts on the shared
+//!   `WorkerPool`**, double-buffered against the execute stage so batch
+//!   N+1's host work overlaps batch N's `model.execute`.
+//! * `server`   — the three serving threads (`pjrt` feature): an intake
+//!   thread (routing + batching, owns the client channel), the prep
+//!   thread, and the execute thread owning the PJRT engine (PJRT handles
+//!   are not `Send`, so all device work stays on one thread) — wired
+//!   together by `pipeline::run_stages`.
+//! * `metrics`  — latency/throughput accounting shared across the stages.
 
 pub mod batcher;
 pub mod metrics;
+pub mod pipeline;
 pub mod policy;
 #[cfg(feature = "pjrt")]
 pub mod server;
 
-pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use batcher::{drain_ready, BatcherConfig, DynamicBatcher};
 pub use metrics::Metrics;
+pub use pipeline::{HostMergeConfig, HostPrep, PrepJob, ReadyBatch, VariantMeta};
 pub use policy::{EntropyCache, MergePolicy, PolicyDecision};
 #[cfg(feature = "pjrt")]
 pub use server::{Client, ServerHandle};
@@ -35,6 +48,12 @@ pub struct ServerConfig {
     pub policy: MergePolicy,
     pub max_wait: std::time::Duration,
     pub max_queue: usize,
+    /// worker count for the process-wide `WorkerPool` (0 = machine
+    /// default); applied on first use of the pool, so set it before
+    /// anything else touches `WorkerPool::global`
+    pub merge_workers: usize,
+    /// host-side premerge of over-length contexts in the prep stage
+    pub host_merge: HostMergeConfig,
 }
 
 /// A forecast request: univariate context, horizon fixed by the artifact.

@@ -1,0 +1,343 @@
+//! Staged serving pipeline: host prep/merge overlapped with device
+//! execution ("merge-while-execute").
+//!
+//! The PR 1 server ran route -> batch -> pad -> execute strictly serially
+//! on one thread, so every millisecond of host-side work (slab padding,
+//! token premerging) was a millisecond the accelerator sat idle.  This
+//! module is the PJRT-free core of the staged replacement:
+//!
+//! ```text
+//!  intake (server.rs)      prep stage (this module)       execute stage
+//!  route + batch  ──jobs──► fill/premerge slab on the ──► model.execute +
+//!  (deadline order)         WorkerPool                ▲   respond
+//!                              ▲      │ ready (depth 1)│
+//!                              └──────┴── slab recycle ┘
+//!                                   (2 slabs in flight)
+//! ```
+//!
+//! * [`HostPrep`] builds the padded `(capacity, m)` input slab for one
+//!   batch.  Contexts longer than the artifact's `m` are **premerged** on
+//!   the shared [`WorkerPool`] (a [`BatchPipeline`] schedule down to `m`
+//!   tokens, paper §3 semantics) — the serving-level use of the paper's
+//!   compression: arbitrary-length requests meet a fixed-shape artifact.
+//! * [`run_stages`] wires prep and execute together with a depth-1 ready
+//!   channel and **two recycled slab buffers**, so batch N+1's padding and
+//!   merging runs on the prep thread/pool while batch N executes on the
+//!   device thread.  Steady state allocates nothing per batch beyond the
+//!   response rows.
+//!
+//! The execute side is a closure, not a PJRT type: the real server
+//! (`server.rs`, `pjrt` feature) passes `model.execute`, while
+//! `benches/coordinator.rs` and `tests/coordinator_pipeline.rs` drive the
+//! identical machinery with a synthetic device in the default offline
+//! build — which is how the overlap gain in `BENCH_serving.json` is
+//! measured without hardware.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{sync_channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use super::metrics::Metrics;
+use super::{ForecastRequest, ForecastResponse};
+use crate::merging::BatchPipeline;
+use crate::runtime::pool::WorkerPool;
+use crate::util::lock_ignore_poison as lock;
+
+/// A routed request waiting for execution: request, enqueue time, response
+/// channel.
+pub type Pending = (ForecastRequest, Instant, Sender<ForecastResponse>);
+
+/// What the execute stage needs to know about one loaded variant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VariantMeta {
+    /// static batch capacity of the compiled artifact
+    pub capacity: usize,
+    /// context length the artifact was compiled for
+    pub m: usize,
+}
+
+/// Host-side premerge policy for over-length contexts.
+#[derive(Clone, Debug)]
+pub struct HostMergeConfig {
+    /// merge contexts longer than the artifact's `m` down to `m` tokens
+    /// (disabled: such requests are rejected, PR 1 behaviour)
+    pub enabled: bool,
+    /// locality constraint k of the premerge (paper eq. 1)
+    pub k: usize,
+}
+
+impl Default for HostMergeConfig {
+    fn default() -> HostMergeConfig {
+        HostMergeConfig { enabled: true, k: 8 }
+    }
+}
+
+/// One batch flushed by the intake stage, addressed to a variant.
+pub struct PrepJob {
+    pub variant: String,
+    pub batch: Vec<Pending>,
+}
+
+/// A prepped batch: padded input slab plus the requests it answers.
+pub struct ReadyBatch {
+    pub variant: String,
+    pub batch: Vec<Pending>,
+    /// `(capacity, m)` row-major input slab (padding rows repeat the last
+    /// real row, PR 1 convention)
+    pub slab: Vec<f32>,
+    /// real rows (the rest of the slab is padding)
+    pub rows: usize,
+    /// rows that went through host premerge
+    pub premerged: usize,
+}
+
+/// Number of input slabs in flight between prep and execute — two buffers
+/// double-buffer the pipeline: one filling, one executing.
+pub const SLAB_BUFFERS: usize = 2;
+
+/// Per-layer premerge schedule from `len` tokens down to `target`
+/// (each layer merges at most half of the even prefix, so several layers
+/// may be needed for deep compression).
+pub fn premerge_schedule(len: usize, target: usize) -> Vec<usize> {
+    let mut rs = Vec::new();
+    let mut cur = len;
+    while cur > target {
+        let feasible = (cur - cur % 2) / 2;
+        let r = feasible.min(cur - target);
+        if r == 0 {
+            break; // cur == 1 > target == 0 cannot happen for target >= 1
+        }
+        rs.push(r);
+        cur -= r;
+    }
+    rs
+}
+
+/// The prep stage's reusable state: premerge pipelines (one per pool
+/// worker slot) plus grow-only gather buffers, so steady-state prep of a
+/// batch allocates nothing.
+pub struct HostPrep {
+    pipes: BatchPipeline,
+    merge: HostMergeConfig,
+    ctx: Vec<f32>,
+    ones: Vec<f32>,
+    outs: Vec<crate::merging::PipelineResult>,
+}
+
+impl HostPrep {
+    pub fn new(slots: usize, merge: HostMergeConfig) -> HostPrep {
+        HostPrep {
+            pipes: BatchPipeline::new(slots),
+            merge,
+            ctx: Vec::new(),
+            ones: Vec::new(),
+            outs: Vec::new(),
+        }
+    }
+
+    /// Fill `slab` with the padded `(capacity, m)` input for `batch`,
+    /// premerging over-length contexts on `pool`.  Returns the number of
+    /// premerged rows.  On error the slab contents are unspecified but the
+    /// buffer is intact (the caller recycles it).
+    pub fn prep_into(
+        &mut self,
+        pool: &WorkerPool,
+        batch: &[Pending],
+        meta: &VariantMeta,
+        slab: &mut Vec<f32>,
+    ) -> Result<usize> {
+        let n = batch.len();
+        let (capacity, m) = (meta.capacity, meta.m);
+        ensure!(n > 0 && n <= capacity, "bad batch size {n} (capacity {capacity})");
+        let len = batch[0].0.context.len();
+        for (req, _, _) in batch {
+            ensure!(
+                req.context.len() == len,
+                "ragged batch: context {} vs {len}",
+                req.context.len()
+            );
+        }
+        slab.clear();
+        slab.reserve(capacity * m);
+        let premerged = if len == m {
+            for (req, _, _) in batch {
+                slab.extend_from_slice(&req.context);
+            }
+            0
+        } else if len > m && self.merge.enabled {
+            let rs = premerge_schedule(len, m);
+            let HostPrep { pipes, merge, ctx, ones, outs } = self;
+            ctx.clear();
+            for (req, _, _) in batch {
+                ctx.extend_from_slice(&req.context);
+            }
+            ones.clear();
+            ones.resize(n * len, 1.0);
+            pipes.run_schedule_into(pool, ctx, ones, n, len, 1, merge.k, &rs, outs);
+            for out in outs.iter().take(n) {
+                ensure!(
+                    out.sizes.len() == m,
+                    "premerge produced {} tokens, wanted {m}",
+                    out.sizes.len()
+                );
+                slab.extend_from_slice(&out.tokens);
+            }
+            n
+        } else {
+            bail!(
+                "context length {len} != artifact m={m}{}",
+                if len > m { " (host premerge disabled)" } else { "" }
+            );
+        };
+        // Pad short batches by repeating the last real row (discarded on
+        // the way out).
+        for _ in n..capacity {
+            slab.extend_from_within((n - 1) * m..n * m);
+        }
+        debug_assert_eq!(slab.len(), capacity * m);
+        Ok(premerged)
+    }
+}
+
+/// Run the prep + execute stages until the job channel closes.
+///
+/// * `jobs` — batches from the intake stage (routing + deadline-ordered
+///   dynamic batching).
+/// * `execute` — the device stage, running **on the calling thread** (PJRT
+///   handles are not `Send`): takes a prepped batch (mutably, so it may
+///   temporarily move the slab out — e.g. into a host tensor — as long as
+///   it leaves *a* buffer behind for recycling), returns one forecast row
+///   per real request.
+///
+/// A prep failure or execute failure drops that batch (clients observe a
+/// closed response channel, as before) and the pipeline keeps serving.
+/// Metrics are recorded **before** the responses go out, so a client that
+/// drains its responses and immediately asks for a report sees this batch.
+pub fn run_stages<X>(
+    jobs: Receiver<PrepJob>,
+    metas: BTreeMap<String, VariantMeta>,
+    merge_cfg: HostMergeConfig,
+    prep_slots: usize,
+    pool: &'static WorkerPool,
+    metrics: Arc<Mutex<Metrics>>,
+    mut execute: X,
+) -> Result<()>
+where
+    X: FnMut(&mut ReadyBatch) -> Result<Vec<Vec<f32>>>,
+{
+    let (ready_tx, ready_rx) = sync_channel::<ReadyBatch>(1);
+    let (slab_tx, slab_rx) = std::sync::mpsc::channel::<Vec<f32>>();
+    for _ in 0..SLAB_BUFFERS {
+        let _ = slab_tx.send(Vec::new());
+    }
+    let prep_slab_tx = slab_tx.clone();
+    let prep = thread::Builder::new()
+        .name("tomers-prep".into())
+        .spawn(move || {
+            let mut hp = HostPrep::new(prep_slots, merge_cfg);
+            while let Ok(job) = jobs.recv() {
+                let meta = match metas.get(&job.variant) {
+                    Some(meta) => meta,
+                    None => {
+                        eprintln!("prep: unknown variant {} — dropping batch", job.variant);
+                        continue;
+                    }
+                };
+                let mut slab = match slab_rx.recv() {
+                    Ok(s) => s,
+                    Err(_) => return, // execute stage gone
+                };
+                match hp.prep_into(pool, &job.batch, meta, &mut slab) {
+                    Ok(premerged) => {
+                        let rows = job.batch.len();
+                        let ready = ReadyBatch {
+                            variant: job.variant,
+                            batch: job.batch,
+                            slab,
+                            rows,
+                            premerged,
+                        };
+                        if ready_tx.send(ready).is_err() {
+                            return;
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("prep failed on {}: {e:#}", job.variant);
+                        let _ = prep_slab_tx.send(slab);
+                        // dropping job.batch closes the response channels
+                    }
+                }
+            }
+        })
+        .map_err(|e| anyhow!("spawning prep thread: {e}"))?;
+
+    for mut ready in ready_rx.iter() {
+        let result = execute(&mut ready);
+        let ReadyBatch { variant, batch, slab, rows, .. } = ready;
+        match result {
+            Ok(forecasts) if forecasts.len() >= rows => {
+                // latencies measured (and recorded) before the sends, so a
+                // report requested right after the last response includes
+                // this batch
+                let latencies: Vec<f64> =
+                    batch.iter().map(|(_, t0, _)| t0.elapsed().as_secs_f64()).collect();
+                lock(&metrics).record_batch(&variant, rows, &latencies);
+                for (((req, _, rtx), forecast), latency) in
+                    batch.into_iter().zip(forecasts).zip(latencies)
+                {
+                    let _ = rtx.send(ForecastResponse {
+                        id: req.id,
+                        forecast,
+                        variant: variant.clone(),
+                        latency,
+                        batch_size: rows,
+                    });
+                }
+            }
+            Ok(forecasts) => {
+                eprintln!(
+                    "execute on {variant} returned {} rows for {rows} requests — dropping batch",
+                    forecasts.len()
+                );
+            }
+            Err(e) => {
+                eprintln!("batch execution failed on {variant}: {e:#}");
+            }
+        }
+        let _ = slab_tx.send(slab);
+    }
+    drop(slab_tx);
+    prep.join().map_err(|_| anyhow!("prep thread panicked"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn premerge_schedule_reaches_target() {
+        assert_eq!(premerge_schedule(768, 512), vec![256]);
+        assert_eq!(premerge_schedule(2048, 512), vec![1024, 512]);
+        assert_eq!(premerge_schedule(512, 512), Vec::<usize>::new());
+        // odd lengths: feasible merges bounded by the even prefix
+        let rs = premerge_schedule(1001, 100);
+        let mut cur = 1001usize;
+        for &r in &rs {
+            assert!(r <= (cur - cur % 2) / 2);
+            cur -= r;
+        }
+        assert_eq!(cur, 100);
+    }
+
+    #[test]
+    fn default_host_merge_is_enabled() {
+        let cfg = HostMergeConfig::default();
+        assert!(cfg.enabled);
+        assert!(cfg.k >= 1);
+    }
+}

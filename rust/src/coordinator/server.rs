@@ -1,24 +1,44 @@
-//! Serving loop: an executor thread owning the PJRT engine and the loaded
-//! merge-rate variants, fed by a request channel.
+//! Serving front-end: intake thread + staged prep/execute pipeline.
 //!
-//! PJRT handles are not `Send`, so the engine, executables and weight
-//! buffers all live on the executor thread — the standard topology for a
-//! single-accelerator serving process.  Clients hold a cheap cloneable
-//! handle; each request carries its own response channel.
+//! Three threads serve a process (see `pipeline` for the stage core):
+//!
+//! * **intake** — owns the client channel, routes each request through the
+//!   merge policy, batches per variant, and flushes ready batches **in
+//!   deadline order** (`batcher::drain_ready`) into the prep stage.  A
+//!   bounded job channel pushes back on intake when the device falls
+//!   behind.
+//! * **prep** — spawned by `pipeline::run_stages`: pads the input slab and
+//!   premerges over-length contexts on the shared `WorkerPool` while the
+//!   previous batch executes (double-buffered slabs).
+//! * **execute** — owns the PJRT engine, executables and weight buffers
+//!   (PJRT handles are not `Send`, so all device work lives on this one
+//!   thread — the standard topology for a single-accelerator serving
+//!   process), runs `model.execute`, dequantizes and responds.
+//!
+//! Clients hold a cheap cloneable handle; each request carries its own
+//! response channel.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::batcher::{self, BatcherConfig, DynamicBatcher};
 use super::metrics::Metrics;
+use super::pipeline::{self, Pending, PrepJob, ReadyBatch, VariantMeta};
 use super::policy::EntropyCache;
 use super::{ForecastRequest, ForecastResponse, ServerConfig};
+use crate::runtime::pool::WorkerPool;
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
+use crate::util::lock_ignore_poison;
+
+/// Depth of the intake -> prep job channel: enough to keep prep busy, small
+/// enough that backpressure reaches the batcher quickly.
+const PREP_QUEUE_DEPTH: usize = 2;
 
 enum Msg {
     Request(ForecastRequest, Instant, mpsc::Sender<ForecastResponse>),
@@ -26,7 +46,7 @@ enum Msg {
     Shutdown,
 }
 
-/// Client handle: submit forecasts to the executor thread.
+/// Client handle: submit forecasts to the serving threads.
 #[derive(Clone)]
 pub struct Client {
     tx: mpsc::Sender<Msg>,
@@ -77,122 +97,191 @@ impl ServerHandle {
     }
 }
 
-type PendingReq = (ForecastRequest, Instant, mpsc::Sender<ForecastResponse>);
-
-/// Spawn the serving thread.  Loads every variant named by the policy and
-/// binds its weights before accepting requests.
+/// Spawn the serving threads.  The execute thread loads every variant
+/// named by the policy and binds its weights before intake accepts
+/// requests.
 pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
+    // The pool is process-wide; size it here if the config asks and the
+    // pool does not exist yet.
+    if config.merge_workers > 0 {
+        WorkerPool::init_global(config.merge_workers);
+    }
+    let pool = WorkerPool::global();
+    if config.merge_workers > 0 && pool.workers() != config.merge_workers {
+        eprintln!(
+            "WARN: merge_workers={} requested but the process pool already runs {} workers",
+            config.merge_workers,
+            pool.workers()
+        );
+    }
+
     let (tx, rx) = mpsc::channel::<Msg>();
-    let cfg = config.clone();
-    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-    let join = thread::spawn(move || -> Result<()> {
-        let engine = match Engine::new(&cfg.artifact_dir) {
-            Ok(e) => e,
-            Err(e) => {
-                let _ = ready_tx.send(Err(anyhow!("engine: {e}")));
-                return Err(e);
-            }
-        };
-        let mut models = BTreeMap::new();
-        let mut queues: BTreeMap<String, DynamicBatcher<PendingReq>> = BTreeMap::new();
-        for name in cfg.policy.variant_names() {
-            match engine.load_with_weights(&name) {
-                Ok(m) => {
-                    let capacity = m.manifest.batch();
-                    models.insert(name.clone(), m);
-                    queues.insert(
-                        name.clone(),
-                        DynamicBatcher::new(BatcherConfig {
-                            capacity,
-                            max_wait: cfg.max_wait,
-                            max_queue: cfg.max_queue,
-                        }),
-                    );
-                }
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let (jobs_tx, jobs_rx) = mpsc::sync_channel::<PrepJob>(PREP_QUEUE_DEPTH);
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<BTreeMap<String, VariantMeta>>>();
+
+    // Execute thread: owns the engine; prep is spawned inside run_stages.
+    let exec_cfg = config.clone();
+    let exec_metrics = Arc::clone(&metrics);
+    let exec = thread::Builder::new()
+        .name("tomers-exec".into())
+        .spawn(move || -> Result<()> {
+            let engine = match Engine::new(&exec_cfg.artifact_dir) {
+                Ok(e) => e,
                 Err(e) => {
-                    let _ = ready_tx.send(Err(anyhow!("loading {name}: {e}")));
+                    let _ = ready_tx.send(Err(anyhow!("engine: {e}")));
                     return Err(e);
                 }
+            };
+            let mut models = BTreeMap::new();
+            let mut metas = BTreeMap::new();
+            for name in exec_cfg.policy.variant_names() {
+                match engine.load_with_weights(&name) {
+                    Ok(m) => {
+                        let meta = VariantMeta {
+                            capacity: m.manifest.batch(),
+                            m: m.manifest.inputs[0].shape[1],
+                        };
+                        metas.insert(name.clone(), meta);
+                        models.insert(name, m);
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(anyhow!("loading {name}: {e}")));
+                        return Err(e);
+                    }
+                }
             }
-        }
-        let _ = ready_tx.send(Ok(()));
-        let mut metrics = Metrics::new();
-        // Routing statistic cache: the full-context FFT per request is the
-        // hottest non-model cost on the executor thread.  Entropy is
-        // computed on a bounded prefix (sized to the policy's top
-        // threshold so every variant stays reachable) and memoized by
-        // context hash, so repeated/replayed contexts route for the cost
-        // of one hash.
-        let mut entropy_cache = EntropyCache::for_policy(4096, &cfg.policy);
+            let _ = ready_tx.send(Ok(metas.clone()));
+            pipeline::run_stages(
+                jobs_rx,
+                metas,
+                exec_cfg.host_merge.clone(),
+                pool.workers(),
+                pool,
+                exec_metrics,
+                |ready| execute_ready(&models, ready),
+            )
+        })
+        .map_err(|e| anyhow!("spawning execute thread: {e}"))?;
 
-        loop {
-            // Poll with a timeout tight enough to honour flush deadlines.
-            let now = Instant::now();
-            let timeout = queues
-                .values()
-                .filter_map(|q| q.next_deadline(now))
-                .min()
-                .unwrap_or(Duration::from_millis(50));
-            match rx.recv_timeout(timeout) {
-                Ok(Msg::Request(req, t0, rtx)) => {
-                    let decision = cfg.policy.decide_cached(&mut entropy_cache, &req.context);
-                    let q = queues
-                        .get_mut(&decision.variant.name)
-                        .expect("policy names a loaded variant");
-                    if q.push((req, t0, rtx)).is_err() {
-                        metrics.record_rejected();
-                        // dropping rtx signals rejection to the client
-                    }
-                }
-                Ok(Msg::Report(rtx)) => {
-                    let _ = rtx.send(metrics.report());
-                }
-                Ok(Msg::Shutdown) => break,
-                Err(mpsc::RecvTimeoutError::Timeout) => {}
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-            }
-            // Flush every ready queue.
-            let now = Instant::now();
-            for (name, q) in queues.iter_mut() {
-                while q.ready(now) {
-                    let batch = q.drain_batch();
-                    let model = &models[name];
-                    if let Err(e) = run_batch(model, name, batch, &mut metrics) {
-                        eprintln!("batch execution failed on {name}: {e}");
-                    }
-                }
-            }
-        }
-        Ok(())
-    });
-    ready_rx
+    let metas = ready_rx
         .recv()
-        .map_err(|_| anyhow!("server thread died during startup"))??;
+        .map_err(|_| anyhow!("execute thread died during startup"))??;
+
+    // Intake thread: routing + deadline-ordered batching.
+    let cfg = config;
+    let intake_metrics = metrics;
+    let join = thread::Builder::new()
+        .name("tomers-intake".into())
+        .spawn(move || -> Result<()> {
+            // Queues are keyed by (variant, context length): prep requires
+            // a batch to be length-uniform (one premerge schedule per
+            // batch), so mixing lengths in one queue would reject whole
+            // batches as ragged.  Queues appear lazily as lengths show up
+            // and are evicted once drained, so the map stays bounded by the
+            // lengths currently pending; `total_pending` keeps max_queue a
+            // *global* bound (per-queue limits alone would multiply it by
+            // the number of distinct lengths).
+            let mut queues: BTreeMap<(String, usize), DynamicBatcher<Pending>> = BTreeMap::new();
+            let mut total_pending = 0usize;
+            // Routing statistic cache: the full-context FFT per request is
+            // the hottest non-model cost on the intake thread.  Entropy is
+            // computed on a bounded prefix and memoized by context hash
+            // (see policy.rs).
+            let mut entropy_cache = EntropyCache::for_policy(4096, &cfg.policy);
+            'serve: loop {
+                // Poll with a timeout tight enough to honour flush deadlines.
+                let now = Instant::now();
+                let timeout = queues
+                    .values()
+                    .filter_map(|q| q.next_deadline(now))
+                    .min()
+                    .unwrap_or(Duration::from_millis(50));
+                match rx.recv_timeout(timeout) {
+                    Ok(Msg::Request(req, t0, rtx)) => {
+                        let decision = cfg.policy.decide_cached(&mut entropy_cache, &req.context);
+                        let name = decision.variant.name;
+                        let capacity = metas
+                            .get(&name)
+                            .map(|meta| meta.capacity)
+                            .expect("policy names a loaded variant");
+                        if total_pending >= cfg.max_queue {
+                            lock_ignore_poison(&intake_metrics).record_rejected();
+                            // dropping rtx signals rejection to the client
+                        } else {
+                            let q = queues
+                                .entry((name, req.context.len()))
+                                .or_insert_with(|| {
+                                    DynamicBatcher::new(BatcherConfig {
+                                        capacity,
+                                        max_wait: cfg.max_wait,
+                                        max_queue: cfg.max_queue,
+                                    })
+                                });
+                            match q.push((req, t0, rtx)) {
+                                Ok(()) => total_pending += 1,
+                                Err(_) => {
+                                    lock_ignore_poison(&intake_metrics).record_rejected();
+                                }
+                            }
+                        }
+                    }
+                    Ok(Msg::Report(rtx)) => {
+                        let _ = rtx.send(lock_ignore_poison(&intake_metrics).report());
+                    }
+                    Ok(Msg::Shutdown) => break,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+                // Flush ready queues, oldest pending request first, into
+                // the prep stage (blocking send = backpressure).
+                let now = Instant::now();
+                for ((variant, _len), batch) in batcher::drain_ready(&mut queues, now) {
+                    total_pending -= batch.len();
+                    if jobs_tx.send(PrepJob { variant, batch }).is_err() {
+                        // stages stopped (execute error) — surface it below
+                        break 'serve;
+                    }
+                }
+                // drop drained-empty queues so the map (and the poll scan)
+                // stays bounded by the lengths actually in flight
+                queues.retain(|_, q| !q.is_empty());
+            }
+            drop(jobs_tx); // unwinds prep + execute
+            match exec.join() {
+                Ok(r) => r,
+                Err(_) => Err(anyhow!("execute thread panicked")),
+            }
+        })
+        .map_err(|e| anyhow!("spawning intake thread: {e}"))?;
     Ok(ServerHandle { tx, join: Some(join) })
 }
 
-fn run_batch(
-    model: &crate::runtime::Model,
-    variant: &str,
-    batch: Vec<PendingReq>,
-    metrics: &mut Metrics,
-) -> Result<()> {
+/// The device stage: execute one prepped batch and return a forecast row
+/// per real request.  The slab is moved into the host tensor and reclaimed
+/// afterwards (no per-batch copy — the recycled buffer round-trips through
+/// the tensor).
+fn execute_ready(
+    models: &BTreeMap<String, crate::runtime::Model>,
+    ready: &mut ReadyBatch,
+) -> Result<Vec<Vec<f32>>> {
+    let model = models
+        .get(&ready.variant)
+        .ok_or_else(|| anyhow!("no model for variant {}", ready.variant))?;
     let capacity = model.manifest.batch();
     let m = model.manifest.inputs[0].shape[1];
-    let n = batch.len();
-    anyhow::ensure!(n > 0 && n <= capacity, "bad batch size {n}");
-    // Pad short batches by repeating the last context (discarded below).
-    let mut xs = Vec::with_capacity(capacity * m);
-    for (req, _, _) in &batch {
-        anyhow::ensure!(req.context.len() == m, "context length {} != {m}", req.context.len());
-        xs.extend_from_slice(&req.context);
+    anyhow::ensure!(
+        ready.slab.len() == capacity * m,
+        "slab {} != ({capacity}, {m})",
+        ready.slab.len()
+    );
+    let x = Tensor::from_f32(&[capacity, m], std::mem::take(&mut ready.slab))?;
+    let result = model.execute(std::slice::from_ref(&x));
+    // reclaim the buffer for the recycle channel, whatever execute did
+    if let Tensor::F32 { data, .. } = x {
+        ready.slab = data;
     }
-    for _ in n..capacity {
-        let last = &batch[n - 1].0.context;
-        xs.extend_from_slice(last);
-    }
-    let x = Tensor::from_f32(&[capacity, m], xs)?;
-    let outputs = model.execute(&[x])?;
+    let outputs = result?;
     // chronos family: out0 = logits (b, p, vocab), out1 = scales (b,)
     let vocab = model.manifest.config_usize("vocab").unwrap_or(0);
     let forecasts = if vocab > 0 {
@@ -206,19 +295,5 @@ fn run_batch(
     } else {
         outputs[0].clone()
     };
-    let mut latencies = Vec::with_capacity(n);
-    for (i, (req, t0, rtx)) in batch.into_iter().enumerate() {
-        let latency = t0.elapsed().as_secs_f64();
-        latencies.push(latency);
-        let row = forecasts.row_f32(i)?.to_vec();
-        let _ = rtx.send(ForecastResponse {
-            id: req.id,
-            forecast: row,
-            variant: variant.to_string(),
-            latency,
-            batch_size: n,
-        });
-    }
-    metrics.record_batch(variant, n, &latencies);
-    Ok(())
+    (0..ready.rows).map(|i| Ok(forecasts.row_f32(i)?.to_vec())).collect()
 }

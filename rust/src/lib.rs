@@ -10,6 +10,14 @@
 //! * L2/L1 live in `python/compile/` and arrive here as HLO-text
 //!   artifacts + manifests + weights (`make artifacts`).
 
+// Lint posture for `cargo clippy -- -D warnings` (scripts/verify.sh):
+// index-loop style is deliberate in the kernels (mirrors the math and the
+// Python reference), and the merge entry points take the paper's full
+// parameter tuple.  `unknown_lints` first so older clippy versions do not
+// trip over newer lint names.
+#![allow(unknown_lints)]
+#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
+
 pub mod bench;
 pub mod config;
 pub mod coordinator;

@@ -10,6 +10,8 @@
 //! Offline build: argument parsing is hand-rolled (no clap in the vendored
 //! dependency set).
 
+#![allow(unknown_lints)]
+#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
 use std::path::PathBuf;
 #[cfg(feature = "pjrt")]
 use std::time::Duration;
@@ -68,7 +70,7 @@ USAGE:
   tomers artifacts [--dir artifacts]
   tomers train <identity> <dataset> [--steps N] [--dir artifacts]
   tomers eval <artifact> <dataset> [--windows N] [--dir artifacts]
-  tomers serve [--requests N] [--config serve.json] [--write-config serve.json]
+  tomers serve [--requests N] [--merge-workers N] [--config serve.json] [--write-config serve.json]
   tomers bench <table1|fig2|table2|table3|table4|table5|table8|fig4|fig5|fig6|fig7|fig8|fig9|fig15|fig16|fig19|ablation_k|deconly|ablation_bound|all> [--quick] [--dir artifacts]
 
 Datasets: etth1 ettm1 weather electricity traffic (synthetic, DESIGN.md §7)
@@ -106,11 +108,16 @@ fn run() -> Result<()> {
                 return Ok(());
             }
             let requests: usize = args.flag("requests").unwrap_or("200").parse()?;
+            // size the process-wide worker pool before anything touches it
+            let merge_workers: usize = args.flag("merge-workers").unwrap_or("0").parse()?;
             if let Some(cfg_path) = args.flag("config") {
-                let cfg = tomers::config::ServeFileConfig::load(std::path::Path::new(cfg_path))?;
+                let mut cfg = tomers::config::ServeFileConfig::load(std::path::Path::new(cfg_path))?;
+                if merge_workers > 0 {
+                    cfg.merge_workers = merge_workers; // CLI overrides the file
+                }
                 return cmd_serve_config(cfg.into_server_config(), requests);
             }
-            cmd_serve(&dir, requests)
+            cmd_serve(&dir, requests, merge_workers)
         }
         Some("bench") => {
             let which = args.positional.get(1).context("missing experiment id")?.clone();
@@ -145,7 +152,7 @@ fn cmd_eval(_dir: &PathBuf, _artifact: &str, _ds: &str, _windows: usize) -> Resu
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn cmd_serve(_dir: &PathBuf, _requests: usize) -> Result<()> {
+fn cmd_serve(_dir: &PathBuf, _requests: usize, _merge_workers: usize) -> Result<()> {
     anyhow::bail!(NO_PJRT)
 }
 
@@ -237,7 +244,7 @@ fn cmd_serve_config(config: ServerConfig, requests: usize) -> Result<()> {
 }
 
 #[cfg(feature = "pjrt")]
-fn cmd_serve(dir: &PathBuf, requests: usize) -> Result<()> {
+fn cmd_serve(dir: &PathBuf, requests: usize, merge_workers: usize) -> Result<()> {
     // entropy-driven merge-policy over the chronos_s variants
     let variants = vec![
         Variant { name: "chronos_s__r0".into(), r: 0 },
@@ -250,6 +257,8 @@ fn cmd_serve(dir: &PathBuf, requests: usize) -> Result<()> {
         policy,
         max_wait: Duration::from_millis(25),
         max_queue: 4096,
+        merge_workers,
+        host_merge: tomers::coordinator::HostMergeConfig::default(),
     })?;
     let client = handle.client();
     println!("serving {requests} mixed-workload requests ...");

@@ -20,12 +20,15 @@
 //!   accumulators).  Grow-only: buffers are `clear()`+`resize()`d, never
 //!   reallocated once warm.
 //! * [`batch`]     — [`BatchMerger`] / [`merge_batch`]: one merge over a
-//!   `(b, t, d)` slab, parallelized across the batch with
-//!   `std::thread::scope`, one scratch per worker.
+//!   `(b, t, d)` slab, parallelized across the batch on the shared
+//!   persistent [`crate::runtime::pool::WorkerPool`] (no per-call thread
+//!   spawns), one scratch per slot; an [`Accum::F32`] banded-dot variant
+//!   for throughput-bound callers.
 //! * [`pipeline`]  — [`MergePipeline`]: runs a whole per-layer schedule
 //!   (`merge_schedule`) in one call, reusing scratch across layers and
 //!   composing per-layer slot maps so a single gather unmerges the final
-//!   tokens back to input positions.
+//!   tokens back to input positions.  [`BatchPipeline`] is its batched,
+//!   pool-backed form (the serving prep stage's premerge engine).
 //! * [`reference`] — the legacy scalar implementation, kept verbatim as
 //!   the differential-test oracle and the bench baseline.
 //! * [`analytic`]  — eq. 2 complexity model, the B.1 speed-up bound and
@@ -40,22 +43,29 @@
 //!
 //! `cargo bench --bench merging` writes a machine-readable perf record so
 //! the kernel's trajectory accumulates across PRs (see `scripts/verify.sh`
-//! for the regression gate).  Schema (`schema_version` 1):
+//! for the regression gate).  Schema (`schema_version` 2 — v2 added the
+//! pool-vs-scope comparison and the pool spawn/steal counters):
 //!
 //! ```json
 //! {
-//!   "schema_version": 1,
+//!   "schema_version": 2,
 //!   "bench": "merging",
 //!   "quick": false,
 //!   "threads": 8,
+//!   "pool_workers": 8,
+//!   "post_warmup_spawns": 0,   // thread spawns during the timed runs (must be 0)
+//!   "pool_steals": 0,          // lifetime steal count after the run
 //!   "cases": [
 //!     {
 //!       "t": 8192, "d": 64, "k": 16, "r": 2048, "batch": 8,
-//!       "legacy_ms": 0.0,       // reference scalar path, per batch
-//!       "optimized_ms": 0.0,    // warm-scratch kernel, single thread
-//!       "batched_ms": 0.0,      // BatchMerger across the batch
+//!       "legacy_ms": 0.0,          // reference scalar path, per batch
+//!       "optimized_ms": 0.0,       // warm-scratch kernel, single thread
+//!       "batched_ms": 0.0,         // BatchMerger on the WorkerPool (mean)
+//!       "batched_p50_ms": 0.0,     //   .. median
+//!       "batched_scope_ms": 0.0,   // PR 1 thread::scope baseline (mean)
+//!       "batched_scope_p50_ms": 0.0, //   .. median
 //!       "speedup_optimized": 0.0,  // legacy_ms / optimized_ms
-//!       "speedup_batched": 0.0     // legacy_ms / batched_ms
+//!       "speedup_batched": 0.0     // legacy_ms / batched_ms (pool path)
 //!     }
 //!   ]
 //! }
@@ -70,8 +80,8 @@ pub mod scratch;
 
 pub use analytic::{merge_schedule, similarity_complexity, speedup_bound};
 pub use batch::{merge_batch, BatchMerger};
-pub use kernel::{match_tokens_scratch, merge_dynamic_scratch, merge_fixed_r_scratch};
-pub use pipeline::{MergePipeline, PipelineResult};
+pub use kernel::{match_tokens_scratch, merge_dynamic_scratch, merge_fixed_r_scratch, Accum};
+pub use pipeline::{BatchPipeline, MergePipeline, PipelineResult};
 pub use scratch::MergeScratch;
 
 /// Result of one merge step over `t` tokens of dim `d`.

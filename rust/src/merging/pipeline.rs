@@ -12,11 +12,18 @@
 //! * composes the per-layer slot maps into a single
 //!   `original position -> final slot` gather, so unmerging the final
 //!   tokens back to input positions is **one** gather instead of L.
+//!
+//! [`BatchPipeline`] lifts this to a `(b, t, d)` slab on the shared
+//! [`WorkerPool`]: one persistent [`MergePipeline`] per slot, contiguous
+//! sequence chunks as pool tasks — the serving prep stage uses it to
+//! premerge over-length contexts while the previous batch executes on the
+//! device.
 
 use super::analytic::merge_schedule;
 use super::kernel;
 use super::scratch::MergeScratch;
 use super::{unmerge, MergeResult};
+use crate::runtime::pool::WorkerPool;
 
 /// Output of a pipeline run.
 #[derive(Clone, Debug, Default)]
@@ -129,6 +136,60 @@ impl MergePipeline {
     }
 }
 
+/// Batched multi-layer merge executor on the shared [`WorkerPool`]: one
+/// [`MergePipeline`] per slot, so scratch stays warm across calls and the
+/// chunks parallelize without allocation or thread spawns.
+pub struct BatchPipeline {
+    slots: Vec<MergePipeline>,
+}
+
+impl BatchPipeline {
+    /// A batch pipeline with `slots` concurrent chunk slots (clamped to at
+    /// least 1).
+    pub fn new(slots: usize) -> BatchPipeline {
+        BatchPipeline { slots: (0..slots.max(1)).map(|_| MergePipeline::new()).collect() }
+    }
+
+    /// Sized to the machine (`available_parallelism`).
+    pub fn with_default_parallelism() -> BatchPipeline {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        BatchPipeline::new(n)
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Run the explicit per-layer schedule `rs` over every sequence of a
+    /// `(b, t, d)` slab (row-major, sequence-contiguous; per-sequence
+    /// sizes `(b, t)`), writing one [`PipelineResult`] per sequence into
+    /// `outs` (resized to `b`).  Single-slot (or single-sequence) runs
+    /// stay inline on the caller.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_schedule_into(
+        &mut self,
+        pool: &WorkerPool,
+        tokens: &[f32],
+        sizes: &[f32],
+        b: usize,
+        t: usize,
+        d: usize,
+        k: usize,
+        rs: &[usize],
+        outs: &mut Vec<PipelineResult>,
+    ) {
+        assert_eq!(tokens.len(), b * t * d, "token slab shape mismatch");
+        assert_eq!(sizes.len(), b * t, "sizes slab shape mismatch");
+        outs.resize_with(b, PipelineResult::default);
+        if b == 0 {
+            return;
+        }
+        super::batch::run_chunked(pool, &mut self.slots, tokens, sizes, b, t, d, outs, |pipe, tok, sz, out| {
+            *out = pipe.run_schedule(tok, sz, t, d, k, rs);
+        });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -214,6 +275,36 @@ mod tests {
             assert_eq!(res.tokens, res2.tokens, "t={t} d={d}");
             assert_eq!(res.slot_map, res2.slot_map);
             assert_eq!(res.token_counts, res2.token_counts);
+        }
+    }
+
+    #[test]
+    fn batch_pipeline_matches_per_sequence_runs() {
+        let mut rng = Rng::new(35);
+        let pool = WorkerPool::new(3);
+        let (b, t, d, k) = (6usize, 36usize, 4usize, 3usize);
+        let rs = [8usize, 6, 4];
+        let tokens = rand_tokens(&mut rng, b * t, d);
+        let sizes: Vec<f32> = (0..b * t).map(|_| 1.0 + rng.below(2) as f32).collect();
+        for slots in [1usize, 2, 5] {
+            let mut bp = BatchPipeline::new(slots);
+            let mut outs = Vec::new();
+            bp.run_schedule_into(&pool, &tokens, &sizes, b, t, d, k, &rs, &mut outs);
+            assert_eq!(outs.len(), b);
+            let mut single = MergePipeline::new();
+            for i in 0..b {
+                let want = single.run_schedule(
+                    &tokens[i * t * d..(i + 1) * t * d],
+                    &sizes[i * t..(i + 1) * t],
+                    t,
+                    d,
+                    k,
+                    &rs,
+                );
+                assert_eq!(outs[i].tokens, want.tokens, "slots={slots} seq={i}");
+                assert_eq!(outs[i].slot_map, want.slot_map);
+                assert_eq!(outs[i].token_counts, want.token_counts);
+            }
         }
     }
 

@@ -1,16 +1,21 @@
-//! Runtime layer: PJRT engine, artifact manifests, weight store.
+//! Runtime layer: PJRT engine, artifact manifests, weight store, and the
+//! shared host-side worker pool.
 //!
 //! `Engine` (engine.rs) compiles HLO-text artifacts produced by
 //! `python/compile/aot.py` on the PJRT CPU client and executes them with
 //! weights staged as device buffers.  `Manifest` (manifest.rs) is the
 //! Python<->Rust contract; `WeightStore` (weights.rs) the weight format.
+//! `WorkerPool` (pool.rs) is the persistent work-stealing pool every
+//! host-side parallel stage (batched merging, serving prep) runs on.
 
 #[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
+pub mod pool;
 pub mod weights;
 
 #[cfg(feature = "pjrt")]
 pub use engine::{Engine, Model};
 pub use manifest::{Manifest, TensorSpec};
+pub use pool::WorkerPool;
 pub use weights::WeightStore;

@@ -1,0 +1,458 @@
+//! [`WorkerPool`]: the shared work-stealing runtime behind every host-side
+//! parallel stage (batched merging, the serving prep stage, benches).
+//!
+//! PR 1 parallelized `merge_batch` with a per-call `std::thread::scope`
+//! fan-out: every merge paid a full thread spawn + join per worker, which
+//! is both latency (~50-100us per spawn) and noise under serving load.
+//! This pool spawns its threads **once** and reuses them forever:
+//!
+//! * **persistent workers** — `workers` threads spawned at construction,
+//!   parked on a condvar when idle.  [`WorkerPool::spawned_threads`]
+//!   counts lifetime spawns so benches/tests can assert the steady state
+//!   performs **zero** thread spawns (the pool's whole point).
+//! * **per-worker deques with stealing** — tasks are pushed round-robin
+//!   onto one deque per worker; a worker pops its own deque from the
+//!   front and steals from the back of its siblings when empty
+//!   ([`WorkerPool::steals`] counts those).  Independent chunky tasks
+//!   (the merge workload) therefore balance themselves without a central
+//!   queue bottleneck.
+//! * **scoped `run`** — [`WorkerPool::run`] accepts non-`'static` closures
+//!   (borrowing slabs/scratches from the caller's stack, exactly like
+//!   `thread::scope`) and blocks until every task completed.  The caller
+//!   *helps*: it executes its own batch's still-queued tasks instead of
+//!   sleeping, so `run` makes progress even when all workers are busy
+//!   with other batches (concurrent `run`s from several threads are
+//!   fine — the serving prep stage and ad-hoc callers share one pool).
+//! * **panic propagation without poisoning** — a panicking task is caught
+//!   on the worker, the first payload is re-thrown from `run` on the
+//!   calling thread, and the pool (workers, queues, counters, other
+//!   tasks of the same batch) keeps working: a bad batch cannot wedge
+//!   the serving process.
+//!
+//! One process-wide pool is available via [`WorkerPool::global`] (sized by
+//! [`WorkerPool::init_global`] before first use — the CLI's
+//! `--merge-workers` flag — or `available_parallelism` by default); the
+//! merging layer's convenience entry points and the serving executor use
+//! it so the whole process shares one set of threads.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+
+use crate::util::lock_ignore_poison as lock;
+
+/// Type-erased view of one `run` call's task set: `execute(i)` runs task
+/// `i` exactly once and returns `true` when it was the batch's last task.
+trait TaskSource: Sync {
+    fn execute(&self, index: usize) -> bool;
+}
+
+/// One `run` call's tasks plus its completion/panic state.  Lives on the
+/// calling thread's stack; workers reach it through an erased pointer
+/// that `run` guarantees outlives every queued task (it blocks until
+/// `remaining` hits zero, and `remaining` is the last field a worker
+/// touches).
+struct Batch<F> {
+    tasks: Vec<Mutex<Option<F>>>,
+    remaining: AtomicUsize,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+}
+
+impl<F: FnOnce() + Send> TaskSource for Batch<F> {
+    fn execute(&self, index: usize) -> bool {
+        let task = lock(&self.tasks[index]).take();
+        if let Some(f) = task {
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(f)) {
+                let mut slot = lock(&self.panic);
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+        }
+        // AcqRel: publishes the task's writes to the caller that observes 0.
+        self.remaining.fetch_sub(1, Ordering::AcqRel) == 1
+    }
+}
+
+/// A queued task: erased batch pointer + task index.
+///
+/// SAFETY: the pointer is only dereferenced while the owning `run` call is
+/// still blocked (see `Batch`), so sending it across threads is sound.
+struct TaskRef {
+    source: *const (dyn TaskSource + 'static),
+    index: usize,
+}
+
+unsafe impl Send for TaskRef {}
+
+struct Shared {
+    /// one deque per worker; `run` distributes round-robin
+    queues: Vec<Mutex<VecDeque<TaskRef>>>,
+    /// queued-but-not-yet-popped tasks (drives worker wakeup)
+    pending: AtomicUsize,
+    shutdown: AtomicBool,
+    /// workers park here when every deque is empty
+    sleep_mx: Mutex<()>,
+    sleep_cv: Condvar,
+    /// `run` callers park here until their batch completes
+    done_mx: Mutex<()>,
+    done_cv: Condvar,
+    spawned: AtomicU64,
+    steals: AtomicU64,
+    executed: AtomicU64,
+}
+
+fn find_task(shared: &Shared, me: usize) -> Option<TaskRef> {
+    let w = shared.queues.len();
+    for off in 0..w {
+        let qi = (me + off) % w;
+        let task = {
+            let mut q = lock(&shared.queues[qi]);
+            // own deque from the front (submission order), steals from the
+            // back (the classic work-stealing split).
+            if off == 0 {
+                q.pop_front()
+            } else {
+                q.pop_back()
+            }
+        };
+        if let Some(task) = task {
+            shared.pending.fetch_sub(1, Ordering::SeqCst);
+            if off != 0 {
+                shared.steals.fetch_add(1, Ordering::Relaxed);
+            }
+            return Some(task);
+        }
+    }
+    None
+}
+
+fn worker_loop(shared: Arc<Shared>, me: usize) {
+    loop {
+        if let Some(task) = find_task(&shared, me) {
+            // SAFETY: the batch outlives the task (see `Batch`).
+            let done = unsafe { (*task.source).execute(task.index) };
+            shared.executed.fetch_add(1, Ordering::Relaxed);
+            if done {
+                // Lock + notify so a caller between its `remaining` check
+                // and `wait` cannot miss the wakeup.
+                let _g = lock(&shared.done_mx);
+                shared.done_cv.notify_all();
+            }
+            continue;
+        }
+        let mut g = lock(&shared.sleep_mx);
+        loop {
+            if shared.pending.load(Ordering::SeqCst) > 0 {
+                break; // drain before honoring shutdown
+            }
+            if shared.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            g = shared.sleep_cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// Persistent work-stealing thread pool.  See the module docs.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<thread::JoinHandle<()>>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// A pool with `workers` persistent threads (clamped to at least 1).
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            queues: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            pending: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            sleep_mx: Mutex::new(()),
+            sleep_cv: Condvar::new(),
+            done_mx: Mutex::new(()),
+            done_cv: Condvar::new(),
+            spawned: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            executed: AtomicU64::new(0),
+        });
+        let handles = (0..workers)
+            .map(|w| {
+                let sh = Arc::clone(&shared);
+                shared.spawned.fetch_add(1, Ordering::SeqCst);
+                thread::Builder::new()
+                    .name(format!("tomers-pool-{w}"))
+                    .spawn(move || worker_loop(sh, w))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles, workers }
+    }
+
+    /// A pool sized to the machine (`available_parallelism`).
+    pub fn with_default_parallelism() -> WorkerPool {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        WorkerPool::new(n)
+    }
+
+    /// The process-wide shared pool, created on first use (machine-sized
+    /// unless [`WorkerPool::init_global`] ran first).
+    pub fn global() -> &'static WorkerPool {
+        GLOBAL_POOL.get_or_init(WorkerPool::with_default_parallelism)
+    }
+
+    /// Size the process-wide pool before anything uses it.  Returns `false`
+    /// (and changes nothing) if the global pool already exists — worker
+    /// count is a process-startup decision, not a reconfigurable knob.
+    pub fn init_global(workers: usize) -> bool {
+        if GLOBAL_POOL.get().is_some() {
+            return false;
+        }
+        GLOBAL_POOL.set(WorkerPool::new(workers)).is_ok()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Lifetime thread spawns.  Equals [`WorkerPool::workers`] forever —
+    /// the zero-spawns-after-warmup invariant benches and tests assert.
+    pub fn spawned_threads(&self) -> u64 {
+        self.shared.spawned.load(Ordering::SeqCst)
+    }
+
+    /// Tasks taken from a sibling's deque (lifetime).
+    pub fn steals(&self) -> u64 {
+        self.shared.steals.load(Ordering::Relaxed)
+    }
+
+    /// Tasks executed (lifetime), including caller-helped ones.
+    pub fn tasks_executed(&self) -> u64 {
+        self.shared.executed.load(Ordering::Relaxed)
+    }
+
+    /// Run a set of independent tasks to completion, `thread::scope`-style:
+    /// the closures may borrow from the caller's stack, and `run` returns
+    /// only after every task finished.  If any task panicked, the first
+    /// payload is re-thrown here (after all tasks completed), and the pool
+    /// remains fully usable.
+    ///
+    /// A single task runs inline on the caller — no queueing, no
+    /// synchronization — so the degenerate case costs nothing.
+    pub fn run<'scope, F>(&self, tasks: Vec<F>)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        if n == 1 {
+            let mut tasks = tasks;
+            (tasks.pop().expect("n == 1"))();
+            return;
+        }
+        let batch = Batch {
+            tasks: tasks.into_iter().map(|f| Mutex::new(Some(f))).collect(),
+            remaining: AtomicUsize::new(n),
+            panic: Mutex::new(None),
+        };
+        let erased: *const (dyn TaskSource + 'scope) = &batch;
+        // SAFETY: lifetime erasure only.  Every queued TaskRef is consumed
+        // before `batch.remaining` reaches zero, and this function does not
+        // return (nor unwind — nothing below panics) until it does, so no
+        // dereference can outlive `batch` or the `'scope` borrows inside.
+        let erased: *const (dyn TaskSource + 'static) =
+            unsafe { std::mem::transmute(erased) };
+        // Count BEFORE pushing: an awake worker popping a just-pushed task
+        // must never fetch_sub below zero (usize wrap would make parked
+        // workers busy-spin on `pending > 0`).  The transient over-count
+        // only costs a failed scan.
+        self.shared.pending.fetch_add(n, Ordering::SeqCst);
+        for (i, q) in (0..n).map(|i| (i, i % self.workers)) {
+            lock(&self.shared.queues[q]).push_back(TaskRef { source: erased, index: i });
+        }
+        {
+            let _g = lock(&self.shared.sleep_mx);
+            self.shared.sleep_cv.notify_all();
+        }
+        // Help: run our own still-queued tasks instead of blocking.
+        while let Some(task) = self.pop_own(erased) {
+            // SAFETY: `batch` is alive (we are inside `run`).
+            unsafe { (*task.source).execute(task.index) };
+            self.shared.executed.fetch_add(1, Ordering::Relaxed);
+        }
+        // Wait for tasks already claimed by workers.
+        {
+            let mut g = lock(&self.shared.done_mx);
+            while batch.remaining.load(Ordering::Acquire) != 0 {
+                g = self.shared.done_cv.wait(g).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+        if let Some(payload) = lock(&batch.panic).take() {
+            resume_unwind(payload);
+        }
+    }
+
+    /// Pop a queued task belonging to `source` (the caller-help path; other
+    /// batches' tasks are left for the workers).
+    fn pop_own(&self, source: *const (dyn TaskSource + 'static)) -> Option<TaskRef> {
+        for q in &self.shared.queues {
+            let task = {
+                let mut q = lock(q);
+                q.iter()
+                    .position(|t| std::ptr::eq(t.source as *const (), source as *const ()))
+                    .and_then(|pos| q.remove(pos))
+            };
+            if let Some(task) = task {
+                self.shared.pending.fetch_sub(1, Ordering::SeqCst);
+                return Some(task);
+            }
+        }
+        None
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        {
+            let _g = lock(&self.shared.sleep_mx);
+            self.shared.sleep_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+static GLOBAL_POOL: OnceLock<WorkerPool> = OnceLock::new();
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_all_tasks_with_stack_borrows() {
+        let pool = WorkerPool::new(3);
+        let mut data = vec![0u64; 64];
+        let tasks: Vec<_> = data
+            .chunks_mut(7)
+            .enumerate()
+            .map(|(c, chunk)| {
+                move || {
+                    for (i, v) in chunk.iter_mut().enumerate() {
+                        *v = (c * 100 + i) as u64;
+                    }
+                }
+            })
+            .collect();
+        pool.run(tasks);
+        for (p, &v) in data.iter().enumerate() {
+            assert_eq!(v, ((p / 7) * 100 + p % 7) as u64, "slot {p}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_task_fast_paths() {
+        let pool = WorkerPool::new(2);
+        pool.run(Vec::<fn()>::new());
+        let hit = AtomicUsize::new(0);
+        pool.run(vec![|| {
+            hit.fetch_add(1, Ordering::SeqCst);
+        }]);
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn panic_propagates_and_poisons_nothing() {
+        let pool = WorkerPool::new(2);
+        let done = AtomicUsize::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() + Send>> = vec![
+                Box::new(|| {
+                    done.fetch_add(1, Ordering::SeqCst);
+                }),
+                Box::new(|| panic!("task boom")),
+                Box::new(|| {
+                    done.fetch_add(1, Ordering::SeqCst);
+                }),
+            ];
+            pool.run(tasks);
+        }));
+        assert!(result.is_err(), "panic must reach the caller");
+        // sibling tasks of the panicking batch still ran
+        assert_eq!(done.load(Ordering::SeqCst), 2);
+        // and the pool is not poisoned: later batches run normally
+        let after = AtomicUsize::new(0);
+        pool.run(
+            (0..16)
+                .map(|_| {
+                    || {
+                        after.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+                .collect::<Vec<_>>(),
+        );
+        assert_eq!(after.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn zero_thread_spawns_after_warmup() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.spawned_threads(), 4);
+        for round in 0..50 {
+            let count = AtomicUsize::new(0);
+            pool.run(
+                (0..9)
+                    .map(|_| {
+                        || {
+                            count.fetch_add(1, Ordering::SeqCst);
+                        }
+                    })
+                    .collect::<Vec<_>>(),
+            );
+            assert_eq!(count.load(Ordering::SeqCst), 9, "round {round}");
+            assert_eq!(pool.spawned_threads(), 4, "round {round}: pool spawned a thread");
+        }
+        assert!(pool.tasks_executed() >= 450);
+    }
+
+    #[test]
+    fn concurrent_runs_share_the_pool() {
+        let pool = WorkerPool::new(2);
+        let total = AtomicUsize::new(0);
+        thread::scope(|s| {
+            for _ in 0..3 {
+                s.spawn(|| {
+                    for _ in 0..10 {
+                        pool.run(
+                            (0..8)
+                                .map(|_| {
+                                    || {
+                                        total.fetch_add(1, Ordering::SeqCst);
+                                    }
+                                })
+                                .collect::<Vec<_>>(),
+                        );
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 3 * 10 * 8);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_stable() {
+        let a = WorkerPool::global() as *const WorkerPool;
+        let b = WorkerPool::global() as *const WorkerPool;
+        assert_eq!(a, b);
+        // init after first use is rejected
+        assert!(!WorkerPool::init_global(1));
+        assert!(WorkerPool::global().workers() >= 1);
+    }
+}

@@ -4,7 +4,16 @@
 //! benchmark statistics are hand-rolled here instead of pulling `rand` /
 //! `criterion`.
 
+use std::sync::{Mutex, MutexGuard};
 use std::time::Instant;
+
+/// Lock that shrugs off poisoning: used by the pool and the serving
+/// stages, where a panicking task is caught and reported but must never
+/// wedge the shared state behind a poisoned mutex.
+#[inline]
+pub fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// SplitMix64 PRNG — deterministic, seedable, good enough for synthetic
 /// data generation and property-test case generation.
@@ -103,16 +112,27 @@ pub fn percentile(samples: &mut [f64], p: f64) -> f64 {
 /// wall-clock seconds (mean, std).  The poor man's criterion used by the
 /// bench targets (offline build: no criterion crate available).
 pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64) {
+    let samples = bench_samples(warmup, iters, &mut f);
+    let mut st = Stats::new();
+    for s in samples {
+        st.push(s);
+    }
+    (st.mean(), st.std())
+}
+
+/// Like [`bench`] but returns the raw per-iteration samples (seconds), for
+/// percentile reporting (`percentile`).
+pub fn bench_samples<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
     for _ in 0..warmup {
         f();
     }
-    let mut st = Stats::new();
-    for _ in 0..iters {
-        let t0 = Instant::now();
-        f();
-        st.push(t0.elapsed().as_secs_f64());
-    }
-    (st.mean(), st.std())
+    (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
 }
 
 #[cfg(test)]

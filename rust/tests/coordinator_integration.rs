@@ -2,6 +2,8 @@
 //! policy routing + dynamic batching + PJRT execution end to end.
 //! Skipped (with a message) when artifacts are missing.
 
+#![allow(unknown_lints)]
+#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
 use std::path::PathBuf;
 use std::time::Duration;
 
@@ -24,6 +26,8 @@ fn server(dir: PathBuf) -> coordinator::ServerHandle {
         policy: MergePolicy::uniform(variants, 3.0, 7.5),
         max_wait: Duration::from_millis(10),
         max_queue: 256,
+        merge_workers: 0,
+        host_merge: tomers::coordinator::HostMergeConfig::default(),
     })
     .expect("server start")
 }

@@ -1,0 +1,184 @@
+//! Integration tests for the staged serving pipeline core — PJRT-free:
+//! the execute stage is a closure, so prep (padding + pool-backed
+//! premerge), double-buffered slab recycling, response plumbing and error
+//! isolation are all testable in the default offline build.
+
+#![allow(unknown_lints)]
+#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use tomers::coordinator::pipeline::{
+    premerge_schedule, HostPrep, Pending, PrepJob, VariantMeta,
+};
+use tomers::coordinator::{pipeline, ForecastRequest, HostMergeConfig, Metrics};
+use tomers::merging::MergePipeline;
+use tomers::runtime::WorkerPool;
+use tomers::util::Rng;
+
+fn request(id: u64, context: Vec<f32>) -> (Pending, mpsc::Receiver<tomers::coordinator::ForecastResponse>) {
+    let (rtx, rrx) = mpsc::channel();
+    ((ForecastRequest { id, context }, Instant::now(), rtx), rrx)
+}
+
+fn meta(capacity: usize, m: usize) -> VariantMeta {
+    VariantMeta { capacity, m }
+}
+
+#[test]
+fn prep_pads_exact_length_contexts() {
+    let pool = WorkerPool::global();
+    let mut hp = HostPrep::new(2, HostMergeConfig::default());
+    let meta = meta(4, 16);
+    let mut rng = Rng::new(41);
+    let mut batch = Vec::new();
+    let mut ctxs = Vec::new();
+    for id in 0..2u64 {
+        let ctx: Vec<f32> = (0..16).map(|_| rng.normal() as f32).collect();
+        ctxs.push(ctx.clone());
+        let (p, _rx) = request(id, ctx);
+        batch.push(p);
+    }
+    let mut slab = Vec::new();
+    let premerged = hp.prep_into(pool, &batch, &meta, &mut slab).expect("prep");
+    assert_eq!(premerged, 0);
+    assert_eq!(slab.len(), 4 * 16);
+    assert_eq!(&slab[0..16], ctxs[0].as_slice());
+    assert_eq!(&slab[16..32], ctxs[1].as_slice());
+    // padding repeats the last real row
+    assert_eq!(&slab[32..48], ctxs[1].as_slice());
+    assert_eq!(&slab[48..64], ctxs[1].as_slice());
+}
+
+#[test]
+fn prep_premerges_long_contexts_to_reference_semantics() {
+    let pool = WorkerPool::global();
+    let k = 4;
+    let mut hp = HostPrep::new(3, HostMergeConfig { enabled: true, k });
+    let (len, m) = (96usize, 24usize);
+    let meta = meta(3, m);
+    let mut rng = Rng::new(42);
+    let mut batch = Vec::new();
+    let mut ctxs = Vec::new();
+    for id in 0..3u64 {
+        let ctx: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+        ctxs.push(ctx.clone());
+        let (p, _rx) = request(id, ctx);
+        batch.push(p);
+    }
+    let mut slab = Vec::new();
+    let premerged = hp.prep_into(pool, &batch, &meta, &mut slab).expect("prep");
+    assert_eq!(premerged, 3);
+    assert_eq!(slab.len(), 3 * m);
+    // each row must equal the single-sequence MergePipeline result (which
+    // the differential suite ties to merging::reference)
+    let rs = premerge_schedule(len, m);
+    let mut pipe = MergePipeline::new();
+    for (i, ctx) in ctxs.iter().enumerate() {
+        let want = pipe.run_schedule(ctx, &vec![1.0; len], len, 1, k, &rs);
+        assert_eq!(want.sizes.len(), m);
+        assert_eq!(&slab[i * m..(i + 1) * m], want.tokens.as_slice(), "row {i}");
+    }
+}
+
+#[test]
+fn prep_rejects_ragged_and_overlong_when_disabled() {
+    let pool = WorkerPool::global();
+    let meta = meta(4, 16);
+    let mut slab = Vec::new();
+
+    let mut hp = HostPrep::new(1, HostMergeConfig { enabled: false, k: 4 });
+    let (a, _ra) = request(0, vec![0.5; 32]);
+    assert!(hp.prep_into(pool, &[a], &meta, &mut slab).is_err(), "premerge disabled");
+
+    let mut hp = HostPrep::new(1, HostMergeConfig::default());
+    let (a, _ra) = request(0, vec![0.5; 16]);
+    let (b, _rb) = request(1, vec![0.5; 18]);
+    assert!(hp.prep_into(pool, &[a, b], &meta, &mut slab).is_err(), "ragged batch");
+
+    let (a, _ra) = request(0, vec![0.5; 8]);
+    assert!(hp.prep_into(pool, &[a], &meta, &mut slab).is_err(), "short context");
+}
+
+/// End-to-end through `run_stages` with a synthetic device: responses
+/// arrive with the right ids/rows, premerged slabs reach the executor,
+/// and a failing batch poisons nothing.
+#[test]
+fn staged_pipeline_serves_and_isolates_failures() {
+    let pool = WorkerPool::global();
+    let (capacity, m, len) = (2usize, 12usize, 48usize);
+    let metas: BTreeMap<String, VariantMeta> =
+        [("v".to_string(), meta(capacity, m))].into_iter().collect();
+    let mut rng = Rng::new(43);
+
+    let (jobs_tx, jobs_rx) = mpsc::sync_channel::<PrepJob>(2);
+    let mut receivers = Vec::new();
+    let mut feed = Vec::new();
+    for b in 0..5u64 {
+        let mut batch = Vec::new();
+        for i in 0..capacity as u64 {
+            let ctx: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+            let (p, rx) = request(b * 10 + i, ctx);
+            batch.push(p);
+            receivers.push((b, b * 10 + i, rx));
+        }
+        feed.push(PrepJob { variant: "v".to_string(), batch });
+    }
+    // one batch routed to an unknown variant: dropped by prep, not fatal
+    let (p, rx_lost) = request(999, (0..len).map(|_| 0.25f32).collect());
+    feed.insert(2, PrepJob { variant: "nope".to_string(), batch: vec![p] });
+
+    let feeder = std::thread::spawn(move || {
+        for job in feed {
+            jobs_tx.send(job).expect("feed");
+        }
+    });
+
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let executed = Arc::new(Mutex::new(Vec::<usize>::new()));
+    let exec_log = Arc::clone(&executed);
+    let fail_batch = 1u64; // fail the batch whose first id is 10
+    pipeline::run_stages(
+        jobs_rx,
+        metas,
+        HostMergeConfig { enabled: true, k: 3 },
+        1,
+        pool,
+        Arc::clone(&metrics),
+        move |ready| {
+            assert_eq!(ready.slab.len(), capacity * m, "slab shape");
+            assert_eq!(ready.premerged, ready.rows, "all contexts premerged");
+            exec_log.lock().unwrap().push(ready.rows);
+            if ready.batch[0].0.id == fail_batch * 10 {
+                anyhow::bail!("synthetic device fault");
+            }
+            Ok((0..ready.rows).map(|i| vec![i as f32; 7]).collect())
+        },
+    )
+    .expect("run_stages");
+    feeder.join().unwrap();
+
+    // the failed batch's clients see a dropped channel; everyone else is
+    // answered with their row
+    let mut ok = 0;
+    for (b, id, rx) in receivers {
+        match rx.recv() {
+            Ok(resp) => {
+                assert_ne!(b, fail_batch, "failed batch must not answer");
+                assert_eq!(resp.id, id);
+                assert_eq!(resp.forecast.len(), 7);
+                assert_eq!(resp.variant, "v");
+                assert_eq!(resp.batch_size, capacity);
+                ok += 1;
+            }
+            Err(_) => assert_eq!(b, fail_batch, "only the failed batch may drop"),
+        }
+    }
+    assert_eq!(ok, 4 * capacity);
+    assert!(rx_lost.recv().is_err(), "unknown-variant batch must be dropped");
+    assert_eq!(executed.lock().unwrap().len(), 5, "all known-variant batches reached the device");
+    let m = metrics.lock().unwrap();
+    assert_eq!(m.served(), 4 * capacity);
+}

@@ -7,13 +7,19 @@
 //! inputs.  Plus NaN regression, batch/pipeline consistency and the causal
 //! `k = 1` adjacency invariant on the optimized path.
 
-use tomers::merging::kernel::{merge_dynamic_scratch, merge_fixed_r_scratch};
+#![allow(unknown_lints)]
+#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
+use tomers::merging::kernel::{
+    match_tokens_scratch_accum, merge_dynamic_scratch, merge_fixed_r_scratch,
+    merge_fixed_r_scratch_accum,
+};
 use tomers::merging::reference::{
     match_tokens_reference, merge_dynamic_reference, merge_fixed_r_reference,
 };
 use tomers::merging::{
-    match_tokens, merge_batch, MergePipeline, MergeResult, MergeScratch,
+    match_tokens, merge_batch, Accum, BatchPipeline, MergePipeline, MergeResult, MergeScratch,
 };
+use tomers::runtime::WorkerPool;
 use tomers::util::Rng;
 
 fn rand_tokens(rng: &mut Rng, t: usize, d: usize) -> Vec<f32> {
@@ -202,6 +208,154 @@ fn differential_batch_equals_reference() {
             assert_eq!(outs[i].slot_map, refr.slot_map, "case {case} seq {i}");
             assert_close(&outs[i].tokens, &refr.tokens, 1e-5, "tokens", case);
             assert_close(&outs[i].sizes, &refr.sizes, 1e-5, "sizes", case);
+        }
+    }
+}
+
+/// The f32-accumulation banded dot stays within its documented tolerance
+/// of the f64 scores (see `Accum` in kernel.rs: 1e-5 for standardized
+/// inputs at d <= 64, measured headroom ~50x).
+#[test]
+fn differential_f32_accum_scores_within_tolerance() {
+    let mut rng = Rng::new(0xF32);
+    let mut s64 = MergeScratch::new();
+    let mut s32 = MergeScratch::new();
+    for case in 0..1_000 {
+        let t = 4 + rng.below(60);
+        let d = 1 + rng.below(64);
+        let t2 = (t - t % 2) / 2;
+        let k = 1 + rng.below(t2.max(1));
+        let tokens = rand_tokens(&mut rng, t, d);
+        match_tokens_scratch_accum(&tokens, t, d, k, &mut s64, Accum::F64);
+        match_tokens_scratch_accum(&tokens, t, d, k, &mut s32, Accum::F32);
+        for (i, (a, b)) in s64.scores().iter().zip(s32.scores()).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-5,
+                "score[{i}] case {case} (t={t} d={d} k={k}): {a} vs {b}"
+            );
+        }
+    }
+}
+
+/// When every selection the matcher makes has a clear f64 margin (no
+/// near-ties, neither in the per-token partner choice nor in the top-r
+/// cut), the f32 path must merge the exact same pairs and produce the
+/// same outputs.  Near-tie cases are skipped: there the f32 path may
+/// legitimately pick the other member of the tie.
+#[test]
+fn differential_f32_accum_merge_matches_on_clear_margins() {
+    /// All banded candidate scores per A-token, f64 cosine (the margin
+    /// oracle — mirrors the kernel's matching loop).
+    fn banded_scores(tokens: &[f32], t: usize, d: usize, k: usize) -> Vec<Vec<f64>> {
+        let t2 = (t - t % 2) / 2;
+        let k = k.clamp(1, t2.max(1));
+        (0..t2)
+            .map(|i| {
+                let a = &tokens[(2 * i) * d..(2 * i + 1) * d];
+                let lo = i.saturating_sub(k - 1);
+                let hi = (i + k - 1).min(t2 - 1);
+                (lo..=hi)
+                    .map(|j| {
+                        let b = &tokens[(2 * j + 1) * d..(2 * j + 2) * d];
+                        let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+                        for x in 0..d {
+                            dot += a[x] as f64 * b[x] as f64;
+                            na += (a[x] as f64).powi(2);
+                            nb += (b[x] as f64).powi(2);
+                        }
+                        dot / (na.sqrt() * nb.sqrt() + 1e-8)
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    const MARGIN: f64 = 1e-3; // 100x the documented 1e-5 score tolerance
+    let mut rng = Rng::new(0xF33);
+    let mut scratch = MergeScratch::new();
+    let mut out64 = MergeResult::default();
+    let mut out32 = MergeResult::default();
+    let mut checked = 0usize;
+    for _case in 0..800 {
+        let t = 6 + rng.below(50);
+        let d = 4 + rng.below(32);
+        let t2 = (t - t % 2) / 2;
+        let r = 1 + rng.below(t2);
+        let k = 1 + rng.below(t2);
+        let tokens = rand_tokens(&mut rng, t, d);
+        let sizes = vec![1.0f32; t];
+
+        let cand = banded_scores(&tokens, t, d, k);
+        // partner-choice margins: best vs second-best within each band
+        let partner_clear = cand.iter().all(|c| {
+            let mut s = c.clone();
+            s.sort_by(|a, b| b.total_cmp(a));
+            s.len() < 2 || s[0] - s[1] > MARGIN
+        });
+        // top-r margin: r-th selected best-score vs best rejected one
+        let mut best: Vec<f64> = cand
+            .iter()
+            .map(|c| c.iter().cloned().fold(f64::NEG_INFINITY, f64::max))
+            .collect();
+        best.sort_by(|a, b| b.total_cmp(a));
+        let cut_clear = r >= t2 || best[r - 1] - best[r] > MARGIN;
+        if !partner_clear || !cut_clear {
+            continue;
+        }
+
+        merge_fixed_r_scratch_accum(&tokens, &sizes, t, d, r, k, &mut scratch, &mut out64, Accum::F64);
+        merge_fixed_r_scratch_accum(&tokens, &sizes, t, d, r, k, &mut scratch, &mut out32, Accum::F32);
+        assert_eq!(out64.slot_map, out32.slot_map, "t={t} d={d} r={r} k={k}");
+        assert_close(&out64.tokens, &out32.tokens, 1e-4, "tokens", checked);
+        assert_close(&out64.sizes, &out32.sizes, 1e-4, "sizes", checked);
+        checked += 1;
+    }
+    assert!(checked > 300, "too many skipped cases ({checked} checked)");
+}
+
+/// `BatchPipeline` on the worker pool agrees with repeated single-shot
+/// *reference* merges plus hand-composed slot maps, per sequence — the
+/// pool-backed pipeline is tied to the same oracle as everything else.
+#[test]
+fn differential_batch_pipeline_on_pool_equals_reference() {
+    let mut rng = Rng::new(0x9001);
+    let pool = WorkerPool::new(3);
+    let mut bp = BatchPipeline::new(4);
+    for case in 0..60 {
+        let b = 1 + rng.below(7);
+        let t = 10 + rng.below(40);
+        let d = 1 + rng.below(6);
+        let k = 1 + rng.below(6);
+        let layers = 1 + rng.below(4);
+        let rs: Vec<usize> = (0..layers).map(|_| 1 + rng.below(4)).collect();
+        let tokens = rand_tokens(&mut rng, b * t, d);
+        let sizes: Vec<f32> = (0..b * t).map(|_| 1.0 + rng.below(2) as f32).collect();
+
+        let mut outs = Vec::new();
+        bp.run_schedule_into(&pool, &tokens, &sizes, b, t, d, k, &rs, &mut outs);
+        assert_eq!(outs.len(), b);
+
+        for i in 0..b {
+            let seq_tokens = &tokens[i * t * d..(i + 1) * t * d];
+            let seq_sizes = &sizes[i * t..(i + 1) * t];
+            let mut cur_tokens = seq_tokens.to_vec();
+            let mut cur_sizes = seq_sizes.to_vec();
+            let mut composed: Vec<usize> = (0..t).collect();
+            let mut cur_t = t;
+            for &r_l in &rs {
+                let step = r_l.min((cur_t - cur_t % 2) / 2);
+                let m = merge_fixed_r_reference(&cur_tokens, &cur_sizes, cur_t, d, step, k);
+                for slot in composed.iter_mut() {
+                    *slot = m.slot_map[*slot];
+                }
+                cur_tokens = m.tokens;
+                cur_sizes = m.sizes;
+                cur_t -= step;
+            }
+            assert_eq!(outs[i].slot_map, composed, "case {case} seq {i}");
+            assert_close(&outs[i].tokens, &cur_tokens, 1e-4, "tokens", case);
+            assert_close(&outs[i].sizes, &cur_sizes, 1e-4, "sizes", case);
+            assert_eq!(*outs[i].token_counts.last().unwrap(), cur_t);
         }
     }
 }

@@ -2,6 +2,8 @@
 //! hand-rolled case generation over the seeded `util::Rng` instead of
 //! proptest; several hundred random cases per property).
 
+#![allow(unknown_lints)]
+#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
 use tomers::merging::{
     match_tokens, merge_dynamic, merge_fixed_r, merge_schedule, similarity_complexity,
     speedup_bound, unmerge,

@@ -1,0 +1,108 @@
+//! Integration tests for the worker pool under its real workload: the
+//! batched merge path must be spawn-free after warmup, panic-safe, and
+//! correct under stealing/concurrency.  (Pool-internal unit tests live in
+//! `src/runtime/pool.rs`; the differential tie to `merging::reference` is
+//! in `tests/merging_differential.rs`.)
+
+#![allow(unknown_lints)]
+#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use tomers::merging::{merge_fixed_r, BatchMerger, MergeResult};
+use tomers::runtime::WorkerPool;
+use tomers::util::Rng;
+
+#[test]
+fn merge_batches_spawn_no_threads_after_warmup() {
+    let pool = WorkerPool::new(3);
+    assert_eq!(pool.spawned_threads(), 3);
+    let mut rng = Rng::new(71);
+    let (b, t, d, r, k) = (8usize, 64usize, 8usize, 16usize, 4usize);
+    let tokens: Vec<f32> = (0..b * t * d).map(|_| rng.normal() as f32).collect();
+    let sizes = vec![1.0f32; b * t];
+    let mut merger = BatchMerger::new(3);
+    let mut outs: Vec<MergeResult> = Vec::new();
+    // warmup + 30 steady-state batches: the spawn counter must not move
+    for round in 0..31 {
+        merger.merge_batch_into(&pool, &tokens, &sizes, b, t, d, r, k, &mut outs);
+        assert_eq!(pool.spawned_threads(), 3, "round {round} spawned a thread");
+    }
+    // stealing/help bookkeeping adds up: 31 rounds x 3 chunk tasks
+    assert_eq!(pool.tasks_executed(), 31 * 3);
+    // and the results are still the single-sequence kernel's
+    for i in 0..b {
+        let single = merge_fixed_r(
+            &tokens[i * t * d..(i + 1) * t * d],
+            &sizes[i * t..(i + 1) * t],
+            t,
+            d,
+            r,
+            k,
+        );
+        assert_eq!(outs[i].tokens, single.tokens, "seq {i}");
+        assert_eq!(outs[i].slot_map, single.slot_map);
+    }
+}
+
+#[test]
+fn panicking_batch_does_not_wedge_later_merges() {
+    let pool = WorkerPool::new(2);
+    // a task batch that panics...
+    let err = catch_unwind(AssertUnwindSafe(|| {
+        let tasks: Vec<Box<dyn FnOnce() + Send>> =
+            vec![Box::new(|| {}), Box::new(|| panic!("boom")), Box::new(|| {})];
+        pool.run(tasks);
+    }));
+    assert!(err.is_err());
+    // ...must leave the pool fully serviceable for real merge work
+    let mut rng = Rng::new(72);
+    let (b, t, d) = (6usize, 40usize, 4usize);
+    let tokens: Vec<f32> = (0..b * t * d).map(|_| rng.normal() as f32).collect();
+    let sizes = vec![1.0f32; b * t];
+    let mut merger = BatchMerger::new(2);
+    let mut outs = Vec::new();
+    merger.merge_batch_into(&pool, &tokens, &sizes, b, t, d, 10, 3, &mut outs);
+    assert_eq!(outs.len(), b);
+    for out in &outs {
+        assert_eq!(out.tokens.len(), (t - 10) * d);
+    }
+    assert_eq!(pool.spawned_threads(), 2);
+}
+
+#[test]
+fn many_concurrent_mergers_share_one_pool() {
+    let pool = WorkerPool::new(2);
+    let done = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for seed in 0..4u64 {
+            let done = &done;
+            let pool = &pool;
+            s.spawn(move || {
+                let mut rng = Rng::new(100 + seed);
+                let (b, t, d, r, k) = (5usize, 30usize, 5usize, 7usize, 3usize);
+                let tokens: Vec<f32> = (0..b * t * d).map(|_| rng.normal() as f32).collect();
+                let sizes = vec![1.0f32; b * t];
+                let mut merger = BatchMerger::new(4);
+                let mut outs = Vec::new();
+                for _ in 0..10 {
+                    merger.merge_batch_into(pool, &tokens, &sizes, b, t, d, r, k, &mut outs);
+                    for i in 0..b {
+                        let single = merge_fixed_r(
+                            &tokens[i * t * d..(i + 1) * t * d],
+                            &sizes[i * t..(i + 1) * t],
+                            t,
+                            d,
+                            r,
+                            k,
+                        );
+                        assert_eq!(outs[i].tokens, single.tokens);
+                    }
+                }
+                done.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+    });
+    assert_eq!(done.load(Ordering::SeqCst), 4);
+    assert_eq!(pool.spawned_threads(), 2, "concurrency must not spawn threads");
+}

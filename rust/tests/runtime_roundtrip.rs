@@ -5,6 +5,8 @@
 //! directory; they are skipped (with a message) when it is absent so
 //! `cargo test` stays green on a fresh checkout.
 
+#![allow(unknown_lints)]
+#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
 use std::path::PathBuf;
 
 use tomers::runtime::{Engine, WeightStore};
