@@ -20,9 +20,9 @@ fn main() -> Result<()> {
     // (paper table 4).
     let policy = MergePolicy::uniform(
         vec![
-            Variant { name: "chronos_s__r0".into(), r: 0 },
-            Variant { name: "chronos_s__r32".into(), r: 32 },
-            Variant { name: "chronos_s__r128".into(), r: 128 },
+            Variant::fixed("chronos_s__r0", 0),
+            Variant::fixed("chronos_s__r32", 32),
+            Variant::fixed("chronos_s__r128", 128),
         ],
         3.0,
         7.5,
@@ -32,6 +32,8 @@ fn main() -> Result<()> {
         policy,
         max_wait: Duration::from_millis(20),
         max_queue: 4096,
+        merge_workers: 0,
+        merge: coordinator::default_host_merge(),
     })?;
     let client = handle.client();
 

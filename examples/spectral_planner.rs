@@ -17,9 +17,9 @@ fn main() -> Result<()> {
     println!("{:<12} {:>10} {:>8}   expected merging outcome", "dataset", "entropy", "THD");
     let policy = MergePolicy::uniform(
         vec![
-            Variant { name: "r0".into(), r: 0 },
-            Variant { name: "r32".into(), r: 32 },
-            Variant { name: "r128".into(), r: 128 },
+            Variant::fixed("r0", 0),
+            Variant::fixed("r32", 32),
+            Variant::fixed("r128", 128),
         ],
         3.0,
         7.5,
@@ -28,16 +28,16 @@ fn main() -> Result<()> {
         let series = data::generate(profile, 4096, 2024);
         let (entropy, thd) = data::dataset_stats(&series, 1024);
         let decision = policy.decide(&series.column(0)[..1024]);
-        let outcome = if decision.variant.r >= 128 {
+        let outcome = if decision.variant.r() >= 128 {
             "quality gain expected (noisy: merging = adaptive low-pass)"
-        } else if decision.variant.r > 0 {
+        } else if decision.variant.r() > 0 {
             "neutral-to-positive"
         } else {
             "merge conservatively (clean signal)"
         };
         println!(
             "{:<12} {:>10.2} {:>8.1}   r={} — {}",
-            profile.name, entropy, thd, decision.variant.r, outcome
+            profile.name, entropy, thd, decision.variant.r(), outcome
         );
     }
 

@@ -30,7 +30,7 @@
 //! not faster than alternating them, the pipeline is broken.
 
 #![allow(unknown_lints)]
-#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
 use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -39,10 +39,11 @@ use std::time::{Duration, Instant};
 use tomers::coordinator::pipeline::{self, Pending, PrepJob, VariantMeta};
 use tomers::coordinator::{
     policy::Variant, BatcherConfig, DynamicBatcher, ForecastRequest, ForecastResponse,
-    HostMergeConfig, MergePolicy, Metrics,
+    MergePolicy, Metrics,
 };
 use tomers::data;
 use tomers::json::Json;
+use tomers::merging::MergeSpec;
 use tomers::runtime::WorkerPool;
 use tomers::util::{bench, Rng};
 
@@ -99,11 +100,10 @@ fn forecast_rows(rows: usize) -> Vec<Vec<f32>> {
     (0..rows).map(|_| vec![0.0f32; HORIZON]).collect()
 }
 
-#[allow(clippy::too_many_arguments)]
 fn staged_vs_serial(
     pool: &'static WorkerPool,
     meta: &VariantMeta,
-    merge_cfg: &HostMergeConfig,
+    merge_cfg: &MergeSpec,
     ctx_len: usize,
     n_batches: usize,
     reps: usize,
@@ -178,9 +178,9 @@ fn main() {
     // policy decision cost (spectral entropy on one 512-context)
     let policy = MergePolicy::uniform(
         vec![
-            Variant { name: "chronos_s__r0".into(), r: 0 },
-            Variant { name: "chronos_s__r32".into(), r: 32 },
-            Variant { name: "chronos_s__r128".into(), r: 128 },
+            Variant::fixed("chronos_s__r0", 0),
+            Variant::fixed("chronos_s__r32", 32),
+            Variant::fixed("chronos_s__r128", 128),
         ],
         3.0,
         7.5,
@@ -213,7 +213,7 @@ fn main() {
     // -- staged pipeline vs serial loop (synthetic device) ---------------
     let pool = WorkerPool::global();
     let meta = VariantMeta { capacity: 8, m: 512 };
-    let merge_cfg = HostMergeConfig { enabled: true, k: 8 };
+    let merge_cfg = MergeSpec::fixed_r(Vec::new(), 8); // schedule derived per shape
     let ctx_len = 2048; // premerged 2048 -> 1024 -> 512 on the pool
     let n_batches = if quick { 8 } else { 40 };
 
@@ -304,7 +304,7 @@ fn real_stack(policy: MergePolicy) {
         max_wait: Duration::from_millis(10),
         max_queue: 8192,
         merge_workers: 0,
-        host_merge: HostMergeConfig::default(),
+        merge: tomers::coordinator::default_host_merge(),
     })
     .expect("server");
     let client = handle.client();

@@ -1,17 +1,18 @@
 //! Merging kernel benchmarks: legacy scalar reference vs the optimized
-//! zero-allocation kernel vs the batched path — with the batched path
-//! measured twice: on the persistent [`WorkerPool`] (the production path)
-//! and through the PR 1 `thread::scope` fan-out (the baseline the pool
-//! must beat or match, since it does strictly less work per call).
+//! zero-allocation kernel vs the batched [`MergePlan`] path — with the
+//! plan measured twice: on the persistent [`WorkerPool`] (the production
+//! path, `run_batch_into`) and through the PR 1 `thread::scope` fan-out
+//! (`run_batch_into_scoped`, the baseline the pool must beat or match,
+//! since it does strictly less work per call).
 //!
 //! Offline build: hand-rolled harness (no criterion crate available);
 //! run with `cargo bench --offline --bench merging`.
 //!
-//! Writes a machine-readable `BENCH_merging.json` (schema v2, documented
+//! Writes a machine-readable `BENCH_merging.json` (schema v3, documented
 //! in `src/merging/mod.rs`) so the kernel's perf trajectory accumulates
 //! across PRs; `scripts/verify.sh` gates on the acceptance case
-//! `t=8192 d=64 k=16` keeping `speedup_batched >= 3` (now the pool-backed
-//! number) and on `post_warmup_spawns == 0` — the pool's entire point is
+//! `t=8192 d=64 k=16` keeping `speedup_batched >= 3` (the pool-backed
+//! plan) and on `post_warmup_spawns == 0` — the pool's entire point is
 //! that steady state spawns no threads.
 //!
 //! Env knobs:
@@ -21,10 +22,12 @@
 //!   `BENCH_merging.json` in the package root)
 
 #![allow(unknown_lints)]
-#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
 use tomers::json::Json;
 use tomers::merging::kernel::merge_fixed_r_scratch;
-use tomers::merging::{reference, similarity_complexity, BatchMerger, MergeResult, MergeScratch};
+use tomers::merging::{
+    reference, MergeResult, MergeScratch, MergeSpec, PipelineResult,
+};
 use tomers::runtime::WorkerPool;
 use tomers::util::{bench, bench_samples, percentile, Rng};
 
@@ -63,7 +66,7 @@ fn main() {
     };
 
     println!(
-        "== bench: merging (legacy vs optimized vs batched pool/scope; {threads} threads, \
+        "== bench: merging (legacy vs optimized vs MergePlan pool/scope; {threads} threads, \
          pool={} workers) ==",
         pool.workers()
     );
@@ -82,6 +85,7 @@ fn main() {
     for case in &cases {
         let (t, d, k, b) = (case.t, case.d, case.k, case.batch);
         let r = t / 4;
+        let spec = MergeSpec::single(r, k);
         let tokens: Vec<f32> = (0..b * t * d).map(|_| rng.normal() as f32).collect();
         let sizes = vec![1.0f32; b * t];
 
@@ -99,7 +103,8 @@ fn main() {
             }
         });
 
-        // optimized kernel, warm scratch, single thread
+        // optimized kernel, warm scratch, single thread (the plan's inner
+        // loop, measured without the batching layer)
         let mut scratch = MergeScratch::with_capacity(t, d);
         let mut out = MergeResult::default();
         let (opt_s, _) = bench(1, case.iters, || {
@@ -117,18 +122,21 @@ fn main() {
             }
         });
 
-        // batched on the persistent pool (production path)
-        let mut merger = BatchMerger::with_default_parallelism();
-        let mut outs: Vec<MergeResult> = Vec::new();
+        // compiled plan, batched on the persistent pool (production path)
+        let mut plan = spec
+            .compile(t, d)
+            .expect("bench spec compiles")
+            .with_default_parallelism();
+        let mut outs: Vec<PipelineResult> = Vec::new();
         let mut pool_samples = bench_samples(1, case.iters, || {
-            merger.merge_batch_into(pool, &tokens, &sizes, b, t, d, r, k, &mut outs);
+            plan.run_batch_into(pool, &tokens, &sizes, b, &mut outs);
         });
         let pool_s = pool_samples.iter().sum::<f64>() / pool_samples.len() as f64;
         let pool_p50 = percentile(&mut pool_samples, 50.0);
 
-        // batched through the PR 1 thread::scope fan-out (baseline)
+        // the same plan through the PR 1 thread::scope fan-out (baseline)
         let mut scope_samples = bench_samples(1, case.iters, || {
-            merger.merge_batch_into_scoped(&tokens, &sizes, b, t, d, r, k, &mut outs);
+            plan.run_batch_into_scoped(&tokens, &sizes, b, &mut outs);
         });
         let scope_s = scope_samples.iter().sum::<f64>() / scope_samples.len() as f64;
         let scope_p50 = percentile(&mut scope_samples, 50.0);
@@ -146,7 +154,7 @@ fn main() {
             scope_s * 1e3,
             x_opt,
             x_pool,
-            similarity_complexity(t, k)
+            spec.similarity_cost(t)
         );
 
         rows.push(Json::obj(vec![
@@ -176,7 +184,7 @@ fn main() {
     );
 
     let report = Json::obj(vec![
-        ("schema_version", Json::num(2.0)),
+        ("schema_version", Json::num(3.0)),
         ("bench", Json::str("merging")),
         ("quick", Json::Bool(quick)),
         ("threads", Json::num(threads as f64)),

@@ -6,7 +6,7 @@
 //! bounded-prefix + memoized `decide_cached` path the server now uses.
 
 #![allow(unknown_lints)]
-#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
 use tomers::coordinator::policy::Variant;
 use tomers::coordinator::{EntropyCache, MergePolicy};
 use tomers::util::{bench, Rng};
@@ -15,9 +15,9 @@ fn main() {
     println!("== bench: merge-policy routing decision ==");
     let policy = MergePolicy::uniform(
         vec![
-            Variant { name: "chronos_s__r0".into(), r: 0 },
-            Variant { name: "chronos_s__r32".into(), r: 32 },
-            Variant { name: "chronos_s__r128".into(), r: 128 },
+            Variant::fixed("chronos_s__r0", 0),
+            Variant::fixed("chronos_s__r32", 32),
+            Variant::fixed("chronos_s__r128", 128),
         ],
         3.0,
         7.5,

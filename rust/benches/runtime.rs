@@ -6,7 +6,7 @@
 //! Requires `make artifacts`.  Gracefully skips missing variants.
 
 #![allow(unknown_lints)]
-#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
 use tomers::runtime::Engine;
 use tomers::tensor::Tensor;
 use tomers::util::{bench, Rng};

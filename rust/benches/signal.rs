@@ -3,7 +3,7 @@
 //! cost must stay well below one model execution (~10ms+).
 
 #![allow(unknown_lints)]
-#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
 use tomers::signal::{autocorrelation, gaussian_filter, power_spectrum, spectral_entropy, thd};
 use tomers::util::{bench, Rng};
 

@@ -107,12 +107,22 @@ pub fn table2(ctx: &BenchCtx) -> Result<()> {
         let test = dataset(ds_name, 6000, M, P, Split::Test, ctx.seed);
         let mut points = Vec::new();
         for (size, ws) in SIZES.iter().zip(&weights) {
-            for r in [0usize, 32, 64, 128] {
-                let name = format!("chronos_{size}__r{r}");
+            let identity = format!("chronos_{size}");
+            for spec in [
+                crate::merging::MergeSpec::off(),
+                crate::merging::MergeSpec::single(32, crate::merging::MergeSpec::DEFAULT_K),
+                crate::merging::MergeSpec::single(64, crate::merging::MergeSpec::DEFAULT_K),
+                crate::merging::MergeSpec::single(128, crate::merging::MergeSpec::DEFAULT_K),
+            ] {
+                let name = format!("{identity}__r{}", spec.total_r());
                 let mut model = engine.load(&name)?;
                 model.bind_weights(ws)?;
                 let (mse, thr) = eval_chronos(&model, &test, n_eval)?;
-                points.push((size.to_string(), r, OperatingPoint { name, mse, throughput: thr }));
+                points.push((
+                    size.to_string(),
+                    spec.total_r(),
+                    OperatingPoint::for_spec(&identity, &spec, mse, thr),
+                ));
             }
         }
         // reference: best *unmerged* model (paper: "choose the best model

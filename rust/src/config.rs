@@ -1,9 +1,9 @@
 //! JSON config system for the serving launcher and experiment runner.
 //!
 //! A deployment is described by one JSON file (variants, policy
-//! thresholds, batching, workload) so the serving system is launchable
-//! without recompiling — the "real config system + launcher" shape of a
-//! deployable framework.
+//! thresholds, batching, the serving [`MergeSpec`]) so the serving system
+//! is launchable without recompiling — the "real config system +
+//! launcher" shape of a deployable framework.
 //!
 //! ```json
 //! {
@@ -16,18 +16,35 @@
 //!   },
 //!   "batching": {"max_wait_ms": 20, "max_queue": 4096},
 //!   "merge_workers": 0,
-//!   "host_merge": {"enabled": true, "k": 8}
+//!   "merge": {"mode": "fixed", "k": 8}
 //! }
 //! ```
+//!
+//! The top-level `merge` block is the host-premerge [`MergeSpec`]
+//! (`{"mode": "off"}` disables premerging; the schedule is derived per
+//! request shape, so it takes only `mode`/`k`/`accum`/`causal`).  Each
+//! variant entry takes either the shorthand `"r"` (a single fixed-`r`
+//! step at the default locality) or a full `"merge"` block, so variants
+//! can differ in mode and `k`, not just `r`.  `merge` keys per mode:
+//! `"off"` takes only `mode`; `"fixed"` adds `k`, `r` or `schedule`
+//! (per-layer `r` array), `accum` (`"f64" | "f32"`), `causal`;
+//! `"dynamic"` adds `k`, `threshold`, `accum`, `causal`.
+//!
+//! **Unknown keys are rejected at every level** with an error naming the
+//! key and the accepted set — a typo like `"entropy_low"` fails loudly
+//! instead of silently falling back to the default, and a key another
+//! mode would read (a `threshold` under `"fixed"`) is an error, not a
+//! no-op.
 
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::policy::{MergePolicy, Variant};
-use crate::coordinator::{HostMergeConfig, ServerConfig};
+use crate::coordinator::ServerConfig;
 use crate::json::Json;
+use crate::merging::{Accum, MergeMode, MergeSpec};
 
 #[derive(Clone, Debug)]
 pub struct ServeFileConfig {
@@ -37,7 +54,81 @@ pub struct ServeFileConfig {
     pub max_queue: usize,
     /// worker count for the process-wide host-merge pool (0 = machine default)
     pub merge_workers: usize,
-    pub host_merge: HostMergeConfig,
+    /// host-premerge spec for over-length contexts
+    pub merge: MergeSpec,
+}
+
+/// Error unless `v` is a JSON object whose every key is in `allowed`
+/// (a non-object here would otherwise make every lookup silently fall
+/// back to its default).  `path` names the enclosing block in the error.
+fn reject_unknown_keys(v: &Json, path: &str, allowed: &[&str]) -> Result<()> {
+    let Json::Obj(map) = v else {
+        bail!("{path} must be a JSON object — accepted keys: {allowed:?}");
+    };
+    for key in map.keys() {
+        ensure!(
+            allowed.contains(&key.as_str()),
+            "unknown key {key:?} in {path} — accepted keys: {allowed:?}"
+        );
+    }
+    Ok(())
+}
+
+/// Parse a `merge` JSON block into a validated [`MergeSpec`].
+///
+/// The accepted key set depends on `mode`, so a key another mode would
+/// read is rejected instead of silently ignored (e.g. a `threshold`
+/// under `"mode": "fixed"` is an error, not a no-op).
+pub fn merge_spec_from_json(v: &Json, path: &str) -> Result<MergeSpec> {
+    let mode = v.get("mode").map(|m| m.as_str()).transpose()?.unwrap_or("fixed");
+    let allowed: &[&str] = match mode {
+        "off" => &["mode"],
+        "fixed" => &["mode", "k", "r", "schedule", "accum", "causal"],
+        "dynamic" => &["mode", "k", "threshold", "accum", "causal"],
+        other => bail!("{path}: unknown merge mode {other:?} (off | fixed | dynamic)"),
+    };
+    reject_unknown_keys(v, path, allowed)?;
+    let k = match v.get("k") {
+        Some(x) => x.as_usize()?,
+        None => MergeSpec::DEFAULT_K,
+    };
+    let mut spec = match mode {
+        "off" => MergeSpec::off(),
+        "fixed" => {
+            let schedule = match (v.get("schedule"), v.get("r")) {
+                (Some(_), Some(_)) => {
+                    bail!("{path}: give either \"r\" or \"schedule\", not both")
+                }
+                (Some(s), None) => s.usize_list()?,
+                (None, Some(r)) => vec![r.as_usize()?],
+                // no r/schedule: the serving template (depth derived per shape)
+                (None, None) => Vec::new(),
+            };
+            MergeSpec::fixed_r(schedule, k)
+        }
+        "dynamic" => {
+            let threshold = v
+                .get("threshold")
+                .context("merge mode \"dynamic\" requires \"threshold\"")?
+                .as_f64()?;
+            MergeSpec::dynamic(threshold, k)
+        }
+        _ => unreachable!("mode validated by the allowed-key match above"),
+    };
+    if let Some(a) = v.get("accum") {
+        spec.accum = match a.as_str()? {
+            "f64" => Accum::F64,
+            "f32" => Accum::F32,
+            other => bail!("{path}: unknown accum {other:?} (f64 | f32)"),
+        };
+    }
+    if let Some(c) = v.get("causal") {
+        if c.as_bool()? {
+            spec = spec.with_causal();
+        }
+    }
+    spec.validate().with_context(|| format!("invalid {path}"))?;
+    Ok(spec)
 }
 
 impl ServeFileConfig {
@@ -49,55 +140,104 @@ impl ServeFileConfig {
 
     pub fn parse(text: &str) -> Result<ServeFileConfig> {
         let v = Json::parse(text)?;
+        reject_unknown_keys(
+            &v,
+            "the config root",
+            &["artifact_dir", "policy", "batching", "merge_workers", "merge"],
+        )?;
         let artifact_dir = PathBuf::from(
             v.get("artifact_dir").and_then(|d| d.as_str().ok()).unwrap_or("artifacts"),
         );
 
         let pol = v.req("policy")?;
+        reject_unknown_keys(pol, "\"policy\"", &["variants", "entropy_lo", "entropy_hi"])?;
         let mut variants = Vec::new();
-        for item in pol.req("variants")?.as_arr()? {
-            variants.push(Variant {
-                name: item.req("name")?.as_str()?.to_string(),
-                r: item.req("r")?.as_usize()?,
-            });
+        for (i, item) in pol.req("variants")?.as_arr()?.iter().enumerate() {
+            let path = format!("\"policy.variants[{i}]\"");
+            reject_unknown_keys(item, &path, &["name", "r", "merge"])?;
+            let name = item.req("name")?.as_str()?.to_string();
+            let variant = match (item.get("merge"), item.get("r")) {
+                (Some(m), None) => {
+                    let spec = merge_spec_from_json(m, &format!("{path}.merge"))?;
+                    // the schedule-free fixed template is a serving-level
+                    // concept; a variant describes a concrete artifact, so
+                    // a fixed block here must say how much it merges
+                    if let MergeMode::FixedR { schedule } = &spec.mode {
+                        ensure!(
+                            !schedule.is_empty(),
+                            "{path}.merge: mode \"fixed\" needs \"r\" or \"schedule\" \
+                             (the schedule-free template is only valid in the \
+                             top-level serving \"merge\" block)"
+                        );
+                    }
+                    Variant::new(name, spec)
+                }
+                (None, Some(r)) => Variant::fixed(name, r.as_usize()?),
+                (Some(_), Some(_)) => {
+                    bail!("{path}: give either \"r\" or \"merge\", not both")
+                }
+                (None, None) => bail!("{path}: needs \"r\" or a \"merge\" block"),
+            };
+            variants.push(variant);
         }
         ensure!(!variants.is_empty(), "policy.variants must not be empty");
+        // The entropy thresholds map list position to aggressiveness, so
+        // fixed-r variants must come in increasing r; dynamic variants are
+        // exempt (their effective r is data-dependent) and ordered by hand.
+        let fixed_rs: Vec<usize> = variants
+            .iter()
+            .filter(|v| !matches!(v.spec.mode, MergeMode::Dynamic { .. }))
+            .map(|v| v.r())
+            .collect();
         ensure!(
-            variants.windows(2).all(|w| w[0].r <= w[1].r),
-            "policy.variants must be ordered by increasing r"
+            fixed_rs.windows(2).all(|w| w[0] <= w[1]),
+            "policy.variants must be ordered by increasing merge rate r"
         );
-        let lo = pol.get("entropy_lo").and_then(|x| x.as_f64().ok()).unwrap_or(3.0);
-        let hi = pol.get("entropy_hi").and_then(|x| x.as_f64().ok()).unwrap_or(7.5);
+        let lo = pol.get("entropy_lo").map(|x| x.as_f64()).transpose()?.unwrap_or(3.0);
+        let hi = pol.get("entropy_hi").map(|x| x.as_f64()).transpose()?.unwrap_or(7.5);
         ensure!(lo < hi, "entropy_lo must be < entropy_hi");
         let policy = MergePolicy::uniform(variants, lo, hi);
 
         let batching = v.get("batching");
+        if let Some(b) = batching {
+            reject_unknown_keys(b, "\"batching\"", &["max_wait_ms", "max_queue"])?;
+        }
         let max_wait_ms = batching
             .and_then(|b| b.get("max_wait_ms"))
-            .and_then(|x| x.as_f64().ok())
+            .map(|x| x.as_f64())
+            .transpose()?
             .unwrap_or(20.0);
         let max_queue = batching
             .and_then(|b| b.get("max_queue"))
-            .and_then(|x| x.as_usize().ok())
+            .map(|x| x.as_usize())
+            .transpose()?
             .unwrap_or(4096);
         ensure!(max_wait_ms >= 0.0 && max_queue > 0, "invalid batching config");
 
         let merge_workers = v
             .get("merge_workers")
-            .and_then(|x| x.as_usize().ok())
+            .map(|x| x.as_usize())
+            .transpose()?
             .unwrap_or(0);
-        let hm = v.get("host_merge");
-        let host_merge = HostMergeConfig {
-            enabled: hm
-                .and_then(|h| h.get("enabled"))
-                .and_then(|x| x.as_bool().ok())
-                .unwrap_or(HostMergeConfig::default().enabled),
-            k: hm
-                .and_then(|h| h.get("k"))
-                .and_then(|x| x.as_usize().ok())
-                .unwrap_or(HostMergeConfig::default().k),
+        let merge = match v.get("merge") {
+            Some(m) => merge_spec_from_json(m, "\"merge\"")?,
+            None => crate::coordinator::default_host_merge(),
         };
-        ensure!(host_merge.k >= 1, "host_merge.k must be >= 1");
+        // The host premerge derives its schedule per (context length,
+        // artifact m) at serve time; an explicit r/schedule or a dynamic
+        // threshold here would be silently discarded, so reject it.
+        match &merge.mode {
+            MergeMode::Off => {}
+            MergeMode::FixedR { schedule } => ensure!(
+                schedule.is_empty(),
+                "\"merge\": the host premerge schedule is derived per request shape — \
+                 drop \"r\"/\"schedule\" (give only mode/k/accum/causal)"
+            ),
+            MergeMode::Dynamic { .. } => bail!(
+                "\"merge\": host premerge must hit the artifact's exact context length, \
+                 so mode \"dynamic\" is not supported here — use \"off\" or \"fixed\""
+            ),
+        }
 
         Ok(ServeFileConfig {
             artifact_dir,
@@ -105,7 +245,7 @@ impl ServeFileConfig {
             max_wait: Duration::from_micros((max_wait_ms * 1000.0) as u64),
             max_queue,
             merge_workers,
-            host_merge,
+            merge,
         })
     }
 
@@ -116,7 +256,7 @@ impl ServeFileConfig {
             max_wait: self.max_wait,
             max_queue: self.max_queue,
             merge_workers: self.merge_workers,
-            host_merge: self.host_merge,
+            merge: self.merge,
         }
     }
 
@@ -128,14 +268,14 @@ impl ServeFileConfig {
   "variants": [
    {"name": "chronos_s__r0", "r": 0},
    {"name": "chronos_s__r32", "r": 32},
-   {"name": "chronos_s__r128", "r": 128}
+   {"name": "chronos_s__r128", "merge": {"mode": "fixed", "r": 128, "k": 16}}
   ],
   "entropy_lo": 3.0,
   "entropy_hi": 7.5
  },
  "batching": {"max_wait_ms": 20, "max_queue": 4096},
  "merge_workers": 0,
- "host_merge": {"enabled": true, "k": 8}
+ "merge": {"mode": "fixed", "k": 8}
 }
 "#
     }
@@ -149,13 +289,15 @@ mod tests {
     fn parses_example() {
         let cfg = ServeFileConfig::parse(ServeFileConfig::example()).unwrap();
         assert_eq!(cfg.policy.variants.len(), 3);
-        assert_eq!(cfg.policy.variants[2].r, 128);
+        assert_eq!(cfg.policy.variants[2].r(), 128);
+        assert_eq!(cfg.policy.variants[2].spec.k, 16);
+        assert!(cfg.policy.variants[0].spec.is_off());
         assert_eq!(cfg.max_wait, Duration::from_millis(20));
         assert_eq!(cfg.max_queue, 4096);
         assert_eq!(cfg.artifact_dir, PathBuf::from("artifacts"));
         assert_eq!(cfg.merge_workers, 0);
-        assert!(cfg.host_merge.enabled);
-        assert_eq!(cfg.host_merge.k, 8);
+        assert!(!cfg.merge.is_off());
+        assert_eq!(cfg.merge.k, 8);
     }
 
     #[test]
@@ -167,7 +309,8 @@ mod tests {
         assert_eq!(cfg.max_queue, 4096);
         assert_eq!(cfg.policy.variants.len(), 1);
         assert_eq!(cfg.merge_workers, 0);
-        assert!(cfg.host_merge.enabled, "host premerge defaults on");
+        assert!(!cfg.merge.is_off(), "host premerge defaults on");
+        assert_eq!(cfg.merge.k, MergeSpec::DEFAULT_K);
     }
 
     #[test]
@@ -175,17 +318,155 @@ mod tests {
         let cfg = ServeFileConfig::parse(
             r#"{"policy": {"variants": [{"name": "x__r0", "r": 0}]},
                 "merge_workers": 6,
-                "host_merge": {"enabled": false, "k": 3}}"#,
+                "merge": {"mode": "off"}}"#,
         )
         .unwrap();
         assert_eq!(cfg.merge_workers, 6);
-        assert!(!cfg.host_merge.enabled);
-        assert_eq!(cfg.host_merge.k, 3);
+        assert!(cfg.merge.is_off());
+        let cfg = ServeFileConfig::parse(
+            r#"{"policy": {"variants": [{"name": "x__r0", "r": 0}]},
+                "merge": {"mode": "fixed", "k": 3, "accum": "f32"}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.merge.k, 3);
+        assert_eq!(cfg.merge.accum, Accum::F32);
+        // spec validation runs at parse time: k = 0 is rejected here, not
+        // by a kernel assert at serve time
         assert!(ServeFileConfig::parse(
             r#"{"policy": {"variants": [{"name": "x__r0", "r": 0}]},
-                "host_merge": {"k": 0}}"#
+                "merge": {"k": 0}}"#
         )
         .is_err());
+        assert!(ServeFileConfig::parse(
+            r#"{"policy": {"variants": [{"name": "x__r0", "r": 0}]},
+                "merge": {"mode": "dynamic", "threshold": -0.5}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn parses_per_variant_specs() {
+        let cfg = ServeFileConfig::parse(
+            r#"{"policy": {"variants": [
+                  {"name": "a", "r": 0},
+                  {"name": "b", "merge": {"mode": "fixed", "schedule": [16, 8], "k": 2, "causal": false}},
+                  {"name": "c", "merge": {"mode": "dynamic", "threshold": 0.9, "k": 4}}
+               ]}}"#,
+        )
+        .unwrap();
+        let b = &cfg.policy.variants[1];
+        assert_eq!(b.r(), 24);
+        assert_eq!(b.spec.k, 2);
+        assert!(matches!(&b.spec.mode, MergeMode::FixedR { schedule } if schedule == &vec![16, 8]));
+        assert!(matches!(cfg.policy.variants[2].spec.mode, MergeMode::Dynamic { .. }));
+        // "r" and "merge" together are ambiguous
+        assert!(ServeFileConfig::parse(
+            r#"{"policy": {"variants": [{"name": "a", "r": 8, "merge": {"mode": "off"}}]}}"#
+        )
+        .is_err());
+        // fixed-r ordering is still enforced among the non-dynamic variants
+        assert!(ServeFileConfig::parse(
+            r#"{"policy": {"variants": [
+                  {"name": "a", "r": 32},
+                  {"name": "c", "merge": {"mode": "dynamic", "threshold": 0.9}},
+                  {"name": "b", "r": 8}
+               ]}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_mode_inapplicable_keys_and_serving_schedules() {
+        // a threshold under mode "fixed" would be silently dead — reject it
+        let err = ServeFileConfig::parse(
+            r#"{"policy": {"variants": [
+                  {"name": "a", "merge": {"mode": "fixed", "threshold": 0.9}}]}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("threshold"), "{err}");
+        // r/schedule under "dynamic", and k under "off", likewise
+        assert!(ServeFileConfig::parse(
+            r#"{"policy": {"variants": [
+                  {"name": "a", "merge": {"mode": "dynamic", "threshold": 0.9, "r": 8}}]}}"#,
+        )
+        .is_err());
+        assert!(ServeFileConfig::parse(
+            r#"{"policy": {"variants": [{"name": "a", "merge": {"mode": "off", "k": 4}}]}}"#,
+        )
+        .is_err());
+        // the serving-level merge block derives its schedule per shape:
+        // an explicit r/schedule or a dynamic mode is rejected, not ignored
+        let err = ServeFileConfig::parse(
+            r#"{"policy": {"variants": [{"name": "a", "r": 0}]},
+                "merge": {"mode": "fixed", "r": 128}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("derived per request shape"), "{err}");
+        assert!(ServeFileConfig::parse(
+            r#"{"policy": {"variants": [{"name": "a", "r": 0}]},
+                "merge": {"mode": "dynamic", "threshold": 0.9}}"#,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_non_object_blocks_and_schedule_free_variants() {
+        // "merge": "off" (string, not an object) must not silently parse
+        // as the enabled default template
+        let err = ServeFileConfig::parse(
+            r#"{"policy": {"variants": [{"name": "a", "r": 0}]}, "merge": "off"}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("must be a JSON object"), "{err}");
+        // non-object batching likewise
+        assert!(ServeFileConfig::parse(
+            r#"{"policy": {"variants": [{"name": "a", "r": 0}]}, "batching": 5}"#
+        )
+        .is_err());
+        // a variant-level fixed block must say how much it merges — the
+        // schedule-free template would silently read as r = 0
+        let err = ServeFileConfig::parse(
+            r#"{"policy": {"variants": [
+                  {"name": "x__r64", "merge": {"mode": "fixed", "k": 8}}]}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("needs \"r\" or \"schedule\""), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_keys_at_every_level() {
+        // root-level typo (the old name of the merge block)
+        let err = ServeFileConfig::parse(
+            r#"{"policy": {"variants": [{"name": "a", "r": 0}]}, "host_merge": {"k": 8}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("host_merge"), "{err}");
+        assert!(err.to_string().contains("merge"), "{err}");
+        // policy-level typo: entropy_low would silently default before
+        let err = ServeFileConfig::parse(
+            r#"{"policy": {"variants": [{"name": "a", "r": 0}], "entropy_low": 1.0}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("entropy_low"), "{err}");
+        assert!(err.to_string().contains("entropy_lo"), "{err}");
+        // variant-level typo
+        assert!(ServeFileConfig::parse(
+            r#"{"policy": {"variants": [{"name": "a", "r": 0, "rate": 3}]}}"#
+        )
+        .is_err());
+        // batching-level typo
+        assert!(ServeFileConfig::parse(
+            r#"{"policy": {"variants": [{"name": "a", "r": 0}]},
+                "batching": {"max_wait": 20}}"#
+        )
+        .is_err());
+        // merge-block typo
+        let err = ServeFileConfig::parse(
+            r#"{"policy": {"variants": [{"name": "a", "r": 0}]},
+                "merge": {"mode": "fixed", "locality": 8}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("locality"), "{err}");
     }
 
     #[test]
@@ -200,6 +481,13 @@ mod tests {
                 "entropy_lo": 9.0, "entropy_hi": 1.0}}"#
         )
         .is_err());
+        // a variant without any merge description
+        assert!(ServeFileConfig::parse(r#"{"policy": {"variants": [{"name": "a"}]}}"#).is_err());
+        // typed fields reject wrong JSON types instead of defaulting
+        assert!(ServeFileConfig::parse(
+            r#"{"policy": {"variants": [{"name": "a", "r": 0}], "entropy_lo": "low"}}"#
+        )
+        .is_err());
         assert!(ServeFileConfig::parse("not json").is_err());
     }
 
@@ -208,5 +496,6 @@ mod tests {
         let cfg = ServeFileConfig::parse(ServeFileConfig::example()).unwrap();
         let sc = cfg.into_server_config();
         assert_eq!(sc.max_queue, 4096);
+        assert!(!sc.merge.is_off());
     }
 }

@@ -35,10 +35,12 @@ pub mod server;
 
 pub use batcher::{drain_ready, BatcherConfig, DynamicBatcher};
 pub use metrics::Metrics;
-pub use pipeline::{HostMergeConfig, HostPrep, PrepJob, ReadyBatch, VariantMeta};
-pub use policy::{EntropyCache, MergePolicy, PolicyDecision};
+pub use pipeline::{default_host_merge, HostPrep, PrepJob, ReadyBatch, VariantMeta};
+pub use policy::{EntropyCache, MergePolicy, PolicyDecision, Variant};
 #[cfg(feature = "pjrt")]
 pub use server::{Client, ServerHandle};
+
+use crate::merging::MergeSpec;
 
 /// Serving configuration (lives here rather than in `server` so the config
 /// system parses/validates it in builds without the `pjrt` feature).
@@ -53,7 +55,9 @@ pub struct ServerConfig {
     /// anything else touches `WorkerPool::global`
     pub merge_workers: usize,
     /// host-side premerge of over-length contexts in the prep stage
-    pub host_merge: HostMergeConfig,
+    /// ([`MergeSpec::off`] rejects them instead; see
+    /// [`pipeline::default_host_merge`])
+    pub merge: MergeSpec,
 }
 
 /// A forecast request: univariate context, horizon fixed by the artifact.

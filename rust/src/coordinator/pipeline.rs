@@ -17,9 +17,13 @@
 //!
 //! * [`HostPrep`] builds the padded `(capacity, m)` input slab for one
 //!   batch.  Contexts longer than the artifact's `m` are **premerged** on
-//!   the shared [`WorkerPool`] (a [`BatchPipeline`] schedule down to `m`
-//!   tokens, paper §3 semantics) — the serving-level use of the paper's
-//!   compression: arbitrary-length requests meet a fixed-shape artifact.
+//!   the shared [`WorkerPool`]: the serving [`MergeSpec`] is derived per
+//!   batch shape ([`MergeSpec::premerge_to`]), compiled once per
+//!   `(len, m)` into a cached [`crate::merging::MergePlan`], and run over
+//!   the batch — the serving-level use of the paper's compression:
+//!   arbitrary-length requests meet a fixed-shape artifact.  A spec with
+//!   [`MergeMode::Off`](crate::merging::MergeMode::Off) disables
+//!   premerging (over-length requests are rejected, PR 1 behaviour).
 //! * [`run_stages`] wires prep and execute together with a depth-1 ready
 //!   channel and **two recycled slab buffers**, so batch N+1's padding and
 //!   merging runs on the prep thread/pool while batch N executes on the
@@ -43,7 +47,7 @@ use anyhow::{anyhow, bail, ensure, Result};
 
 use super::metrics::Metrics;
 use super::{ForecastRequest, ForecastResponse};
-use crate::merging::BatchPipeline;
+use crate::merging::{MergeMode, MergePlan, MergeSpec, PipelineResult};
 use crate::runtime::pool::WorkerPool;
 use crate::util::lock_ignore_poison as lock;
 
@@ -60,20 +64,11 @@ pub struct VariantMeta {
     pub m: usize,
 }
 
-/// Host-side premerge policy for over-length contexts.
-#[derive(Clone, Debug)]
-pub struct HostMergeConfig {
-    /// merge contexts longer than the artifact's `m` down to `m` tokens
-    /// (disabled: such requests are rejected, PR 1 behaviour)
-    pub enabled: bool,
-    /// locality constraint k of the premerge (paper eq. 1)
-    pub k: usize,
-}
-
-impl Default for HostMergeConfig {
-    fn default() -> HostMergeConfig {
-        HostMergeConfig { enabled: true, k: 8 }
-    }
+/// The default host-premerge spec: enabled, schedule derived per batch
+/// shape, locality [`MergeSpec::DEFAULT_K`].  Use [`MergeSpec::off`] to
+/// disable premerging instead.
+pub fn default_host_merge() -> MergeSpec {
+    MergeSpec::fixed_r(Vec::new(), MergeSpec::DEFAULT_K)
 }
 
 /// One batch flushed by the intake stage, addressed to a variant.
@@ -99,44 +94,44 @@ pub struct ReadyBatch {
 /// double-buffer the pipeline: one filling, one executing.
 pub const SLAB_BUFFERS: usize = 2;
 
-/// Per-layer premerge schedule from `len` tokens down to `target`
-/// (each layer merges at most half of the even prefix, so several layers
-/// may be needed for deep compression).
-pub fn premerge_schedule(len: usize, target: usize) -> Vec<usize> {
-    let mut rs = Vec::new();
-    let mut cur = len;
-    while cur > target {
-        let feasible = (cur - cur % 2) / 2;
-        let r = feasible.min(cur - target);
-        if r == 0 {
-            break; // cur == 1 > target == 0 cannot happen for target >= 1
-        }
-        rs.push(r);
-        cur -= r;
-    }
-    rs
-}
+/// Compiled premerge plans cached per `(len, m)`; bounded so a client
+/// spraying distinct context lengths cannot grow scratch memory without
+/// limit (each plan owns per-slot arenas sized to its `len`).
+const PLAN_CACHE_CAP: usize = 16;
 
-/// The prep stage's reusable state: premerge pipelines (one per pool
-/// worker slot) plus grow-only gather buffers, so steady-state prep of a
-/// batch allocates nothing.
+/// The prep stage's reusable state: the serving merge spec, compiled
+/// premerge plans cached per `(context length, artifact m)` (one slot per
+/// pool worker, so scratch stays warm), plus grow-only gather buffers —
+/// steady-state prep of a batch allocates nothing.
 pub struct HostPrep {
-    pipes: BatchPipeline,
-    merge: HostMergeConfig,
+    merge: MergeSpec,
+    slots: usize,
+    plans: BTreeMap<(usize, usize), MergePlan>,
+    /// insertion order of `plans` keys (FIFO eviction, like
+    /// [`super::policy::EntropyCache`]): a hot shape is not evicted just
+    /// because its key sorts first
+    plan_fifo: std::collections::VecDeque<(usize, usize)>,
     ctx: Vec<f32>,
     ones: Vec<f32>,
-    outs: Vec<crate::merging::PipelineResult>,
+    outs: Vec<PipelineResult>,
 }
 
 impl HostPrep {
-    pub fn new(slots: usize, merge: HostMergeConfig) -> HostPrep {
+    pub fn new(slots: usize, merge: MergeSpec) -> HostPrep {
         HostPrep {
-            pipes: BatchPipeline::new(slots),
             merge,
+            slots: slots.max(1),
+            plans: BTreeMap::new(),
+            plan_fifo: std::collections::VecDeque::new(),
             ctx: Vec::new(),
             ones: Vec::new(),
             outs: Vec::new(),
         }
+    }
+
+    /// The serving merge spec this prep stage premerges with.
+    pub fn merge_spec(&self) -> &MergeSpec {
+        &self.merge
     }
 
     /// Fill `slab` with the padded `(capacity, m)` input for `batch`,
@@ -168,16 +163,32 @@ impl HostPrep {
                 slab.extend_from_slice(&req.context);
             }
             0
-        } else if len > m && self.merge.enabled {
-            let rs = premerge_schedule(len, m);
-            let HostPrep { pipes, merge, ctx, ones, outs } = self;
+        } else if len > m && !self.merge.is_off() {
+            let HostPrep { merge, slots, plans, plan_fifo, ctx, ones, outs } = self;
+            if plans.len() >= PLAN_CACHE_CAP && !plans.contains_key(&(len, m)) {
+                // evict the oldest entry, not the whole cache: a rotation
+                // through cap+1 recurring shapes must not recompile every
+                // plan, and a hot shape must not be evicted by key order
+                if let Some(old) = plan_fifo.pop_front() {
+                    plans.remove(&old);
+                }
+            }
+            let plan = match plans.entry((len, m)) {
+                std::collections::btree_map::Entry::Occupied(e) => e.into_mut(),
+                std::collections::btree_map::Entry::Vacant(e) => {
+                    let compiled =
+                        merge.premerge_to(len, m)?.compile(len, 1)?.with_slots(*slots);
+                    plan_fifo.push_back((len, m));
+                    e.insert(compiled)
+                }
+            };
             ctx.clear();
             for (req, _, _) in batch {
                 ctx.extend_from_slice(&req.context);
             }
             ones.clear();
             ones.resize(n * len, 1.0);
-            pipes.run_schedule_into(pool, ctx, ones, n, len, 1, merge.k, &rs, outs);
+            plan.run_batch_into(pool, ctx, ones, n, outs);
             for out in outs.iter().take(n) {
                 ensure!(
                     out.sizes.len() == m,
@@ -207,6 +218,8 @@ impl HostPrep {
 ///
 /// * `jobs` — batches from the intake stage (routing + deadline-ordered
 ///   dynamic batching).
+/// * `merge` — the serving [`MergeSpec`] for host premerge of over-length
+///   contexts ([`MergeSpec::off`] rejects them instead).
 /// * `execute` — the device stage, running **on the calling thread** (PJRT
 ///   handles are not `Send`): takes a prepped batch (mutably, so it may
 ///   temporarily move the slab out — e.g. into a host tensor — as long as
@@ -220,7 +233,7 @@ impl HostPrep {
 pub fn run_stages<X>(
     jobs: Receiver<PrepJob>,
     metas: BTreeMap<String, VariantMeta>,
-    merge_cfg: HostMergeConfig,
+    merge: MergeSpec,
     prep_slots: usize,
     pool: &'static WorkerPool,
     metrics: Arc<Mutex<Metrics>>,
@@ -229,6 +242,20 @@ pub fn run_stages<X>(
 where
     X: FnMut(&mut ReadyBatch) -> Result<Vec<Vec<f32>>>,
 {
+    merge.validate()?;
+    // The prep stage derives the premerge schedule per (context length,
+    // artifact m); a spec carrying its own schedule or threshold would be
+    // silently discarded, so only Off and the schedule-free fixed template
+    // are meaningful here.
+    ensure!(
+        match &merge.mode {
+            MergeMode::Off => true,
+            MergeMode::FixedR { schedule } => schedule.is_empty(),
+            MergeMode::Dynamic { .. } => false,
+        },
+        "serving merge spec must be Off or a schedule-free FixedR template \
+         (the premerge schedule is derived per request shape)"
+    );
     let (ready_tx, ready_rx) = sync_channel::<ReadyBatch>(1);
     let (slab_tx, slab_rx) = std::sync::mpsc::channel::<Vec<f32>>();
     for _ in 0..SLAB_BUFFERS {
@@ -238,7 +265,7 @@ where
     let prep = thread::Builder::new()
         .name("tomers-prep".into())
         .spawn(move || {
-            let mut hp = HostPrep::new(prep_slots, merge_cfg);
+            let mut hp = HostPrep::new(prep_slots, merge);
             while let Ok(job) = jobs.recv() {
                 let meta = match metas.get(&job.variant) {
                     Some(meta) => meta,
@@ -320,24 +347,30 @@ mod tests {
     use super::*;
 
     #[test]
-    fn premerge_schedule_reaches_target() {
-        assert_eq!(premerge_schedule(768, 512), vec![256]);
-        assert_eq!(premerge_schedule(2048, 512), vec![1024, 512]);
-        assert_eq!(premerge_schedule(512, 512), Vec::<usize>::new());
-        // odd lengths: feasible merges bounded by the even prefix
-        let rs = premerge_schedule(1001, 100);
-        let mut cur = 1001usize;
-        for &r in &rs {
-            assert!(r <= (cur - cur % 2) / 2);
-            cur -= r;
-        }
-        assert_eq!(cur, 100);
+    fn default_host_merge_is_enabled() {
+        let spec = default_host_merge();
+        assert!(!spec.is_off());
+        assert!(spec.k >= 1);
+        assert!(spec.validate().is_ok());
+        // template derives a concrete, compilable premerge spec
+        let derived = spec.premerge_to(2048, 512).unwrap();
+        assert!(derived.compile(2048, 1).is_ok());
     }
 
     #[test]
-    fn default_host_merge_is_enabled() {
-        let cfg = HostMergeConfig::default();
-        assert!(cfg.enabled);
-        assert!(cfg.k >= 1);
+    fn plan_cache_stays_bounded() {
+        let pool = WorkerPool::new(2);
+        let mut hp = HostPrep::new(2, default_host_merge());
+        let meta = VariantMeta { capacity: 1, m: 8 };
+        let mut slab = Vec::new();
+        for len in 0..PLAN_CACHE_CAP + 5 {
+            let ctx: Vec<f32> = (0..16 + 2 * len).map(|i| i as f32 * 0.25).collect();
+            let (rtx, _rrx) = std::sync::mpsc::channel();
+            let req = ForecastRequest { id: len as u64, context: ctx };
+            let batch = vec![(req, Instant::now(), rtx)];
+            hp.prep_into(&pool, &batch, &meta, &mut slab).expect("prep");
+            assert_eq!(slab.len(), meta.capacity * meta.m);
+            assert!(hp.plans.len() <= PLAN_CACHE_CAP, "cache grew past the cap");
+        }
     }
 }

@@ -10,13 +10,42 @@
 
 use std::collections::{HashMap, VecDeque};
 
+use crate::merging::MergeSpec;
 use crate::signal;
 
-/// A selectable artifact variant: merge rate + artifact name suffix.
+/// A selectable artifact variant: the artifact name plus the typed
+/// [`MergeSpec`] realized inside it.  Variants can differ in any spec
+/// dimension — merge rate, mode, locality `k` — not just `r`; the policy
+/// only requires them to be ordered by aggressiveness
+/// ([`Variant::r`]).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Variant {
     pub name: String,
-    pub r: usize,
+    pub spec: MergeSpec,
+}
+
+impl Variant {
+    pub fn new(name: impl Into<String>, spec: MergeSpec) -> Variant {
+        Variant { name: name.into(), spec }
+    }
+
+    /// The conventional serving variant: a single fixed-`r` merge step at
+    /// the default locality ([`MergeSpec::DEFAULT_K`]); `r == 0` means no
+    /// merging.
+    pub fn fixed(name: impl Into<String>, r: usize) -> Variant {
+        let spec = if r == 0 {
+            MergeSpec::off()
+        } else {
+            MergeSpec::single(r, MergeSpec::DEFAULT_K)
+        };
+        Variant::new(name, spec)
+    }
+
+    /// Total merged pairs of the variant's spec (the aggressiveness
+    /// ordering key; 0 for off/dynamic variants).
+    pub fn r(&self) -> usize {
+        self.spec.total_r()
+    }
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -213,9 +242,9 @@ mod tests {
 
     fn variants() -> Vec<Variant> {
         vec![
-            Variant { name: "chronos_s__r0".into(), r: 0 },
-            Variant { name: "chronos_s__r32".into(), r: 32 },
-            Variant { name: "chronos_s__r128".into(), r: 128 },
+            Variant::fixed("chronos_s__r0", 0),
+            Variant::fixed("chronos_s__r32", 32),
+            Variant::fixed("chronos_s__r128", 128),
         ]
     }
 
@@ -227,7 +256,8 @@ mod tests {
             .map(|i| (2.0 * std::f64::consts::PI * 8.0 * i as f64 / 512.0).sin() as f32)
             .collect();
         let d = policy.decide(&clean);
-        assert_eq!(d.variant.r, 0, "entropy={}", d.entropy);
+        assert_eq!(d.variant.r(), 0, "entropy={}", d.entropy);
+        assert!(d.variant.spec.is_off());
     }
 
     #[test]
@@ -236,14 +266,37 @@ mod tests {
         let mut rng = Rng::new(5);
         let noisy: Vec<f32> = (0..512).map(|_| rng.normal() as f32).collect();
         let d = policy.decide(&noisy);
-        assert_eq!(d.variant.r, 128, "entropy={}", d.entropy);
+        assert_eq!(d.variant.r(), 128, "entropy={}", d.entropy);
     }
 
     #[test]
     fn fixed_policy_ignores_input() {
-        let policy = MergePolicy::fixed(Variant { name: "x".into(), r: 64 });
+        let policy = MergePolicy::fixed(Variant::fixed("x", 64));
         let d = policy.decide(&[1.0, 2.0, 3.0, 4.0]);
-        assert_eq!(d.variant.r, 64);
+        assert_eq!(d.variant.r(), 64);
+    }
+
+    #[test]
+    fn variants_can_differ_in_mode_and_k() {
+        use crate::merging::MergeSpec;
+        // a mixed-mode variant set: off / tight-k fixed / dynamic
+        let policy = MergePolicy::uniform(
+            vec![
+                Variant::fixed("x__r0", 0),
+                Variant::new("x__r32k1", MergeSpec::single(32, 1).with_causal()),
+                Variant::new("x__dyn", MergeSpec::dynamic(0.9, 16)),
+            ],
+            2.0,
+            7.0,
+        );
+        for v in &policy.variants {
+            assert!(v.spec.validate().is_ok(), "{}", v.name);
+        }
+        assert_eq!(policy.variants[1].spec.k, 1);
+        assert!(matches!(
+            policy.variants[2].spec.mode,
+            crate::merging::MergeMode::Dynamic { .. }
+        ));
     }
 
     #[test]
@@ -282,7 +335,7 @@ mod tests {
         assert!(big.prefix_cap > 512, "prefix {}", big.prefix_cap);
         assert!((big.prefix_cap as f64 / 2.0).log2() > hot.thresholds[1]);
         // single-variant policy (no thresholds) falls back to the floor
-        let fixed = MergePolicy::fixed(Variant { name: "x".into(), r: 0 });
+        let fixed = MergePolicy::fixed(Variant::fixed("x", 0));
         assert_eq!(EntropyCache::for_policy(16, &fixed).prefix_cap, 512);
     }
 

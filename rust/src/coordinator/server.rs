@@ -155,7 +155,7 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
             pipeline::run_stages(
                 jobs_rx,
                 metas,
-                exec_cfg.host_merge.clone(),
+                exec_cfg.merge.clone(),
                 pool.workers(),
                 pool,
                 exec_metrics,

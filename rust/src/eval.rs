@@ -67,7 +67,11 @@ pub fn chronos_dequantize(logits: &Tensor, scales: &Tensor, vocab: usize, clip: 
     Tensor::from_f32(&[b, p], out)
 }
 
-/// One evaluated operating point of a (model, merge-config) pair.
+/// One evaluated operating point of a (model, merge-config) pair.  The
+/// merge side of the pair is a [`crate::merging::MergeSpec`] realized in
+/// the artifact; [`OperatingPoint::for_spec`] derives the conventional
+/// `name__r<N>` label from one so the bench suites and the serving
+/// config name variants identically.
 #[derive(Clone, Debug)]
 pub struct OperatingPoint {
     pub name: String,
@@ -77,6 +81,18 @@ pub struct OperatingPoint {
 }
 
 impl OperatingPoint {
+    /// Label an operating point after the spec its artifact realizes
+    /// (`<identity>__r<total_r>`, the convention the serving policy's
+    /// variant names and the artifact filenames follow).
+    pub fn for_spec(
+        identity: &str,
+        spec: &crate::merging::MergeSpec,
+        mse: f64,
+        throughput: f64,
+    ) -> OperatingPoint {
+        OperatingPoint { name: format!("{identity}__r{}", spec.total_r()), mse, throughput }
+    }
+
     pub fn accel(&self, reference: &OperatingPoint) -> f64 {
         self.throughput / reference.throughput
     }
@@ -175,6 +191,15 @@ mod tests {
         let scales = Tensor::from_f32(&[1], vec![2.0]).unwrap();
         let v = chronos_dequantize(&logits, &scales, 3, 1.0).unwrap();
         assert_eq!(v.f32s().unwrap(), &[-2.0, 2.0]);
+    }
+
+    #[test]
+    fn for_spec_labels_follow_the_artifact_convention() {
+        use crate::merging::MergeSpec;
+        let p = OperatingPoint::for_spec("chronos_s", &MergeSpec::single(64, 8), 0.4, 120.0);
+        assert_eq!(p.name, "chronos_s__r64");
+        let p = OperatingPoint::for_spec("fc_tf_L2", &MergeSpec::off(), 0.4, 120.0);
+        assert_eq!(p.name, "fc_tf_L2__r0");
     }
 
     #[test]

@@ -2,9 +2,11 @@
 //! models: a Rust serving/training coordinator over AOT-compiled JAX +
 //! Pallas artifacts (PJRT).  Reproduction of Götz et al., ICML 2025.
 //!
-//! Layer map (DESIGN.md):
-//! * L3 (this crate): coordinator (router/batcher/merge-policy), runtime
-//!   (PJRT engine), training driver, evaluation, benchmark harness, and
+//! Layer map (DESIGN.md §1):
+//! * L3 (this crate): the typed merge API (`merging::MergeSpec` ->
+//!   `merging::MergePlan`, DESIGN.md §2) over zero-allocation kernels,
+//!   coordinator (router/batcher/merge-policy), runtime (PJRT engine +
+//!   worker pool), training driver, evaluation, benchmark harness, and
 //!   the substrates (signal processing, synthetic datasets, cost model,
 //!   Rust merging reference).
 //! * L2/L1 live in `python/compile/` and arrive here as HLO-text
@@ -12,11 +14,14 @@
 
 // Lint posture for `cargo clippy -- -D warnings` (scripts/verify.sh):
 // index-loop style is deliberate in the kernels (mirrors the math and the
-// Python reference), and the merge entry points take the paper's full
-// parameter tuple.  `unknown_lints` first so older clippy versions do not
-// trip over newer lint names.
+// Python reference).  `unknown_lints` first so older clippy versions do
+// not trip over newer lint names.  The historical crate-wide
+// `too_many_arguments` allow is gone: merge configuration is a typed
+// `MergeSpec`/`MergePlan` (merging::spec), and the only remaining wide
+// signatures are the kernel innermost layer, each with a scoped,
+// justified allow.
 #![allow(unknown_lints)]
-#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
 
 pub mod bench;
 pub mod config;

@@ -11,12 +11,12 @@
 //! dependency set).
 
 #![allow(unknown_lints)]
-#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
 use std::path::PathBuf;
 #[cfg(feature = "pjrt")]
 use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use tomers::bench::{self, BenchCtx};
 #[cfg(feature = "pjrt")]
@@ -24,6 +24,7 @@ use tomers::coordinator::{self, policy::Variant, MergePolicy};
 use tomers::coordinator::ServerConfig;
 #[cfg(feature = "pjrt")]
 use tomers::data::Split;
+use tomers::merging::MergeSpec;
 #[cfg(feature = "pjrt")]
 use tomers::runtime::{Engine, WeightStore};
 #[cfg(feature = "pjrt")]
@@ -70,7 +71,8 @@ USAGE:
   tomers artifacts [--dir artifacts]
   tomers train <identity> <dataset> [--steps N] [--dir artifacts]
   tomers eval <artifact> <dataset> [--windows N] [--dir artifacts]
-  tomers serve [--requests N] [--merge-workers N] [--config serve.json] [--write-config serve.json]
+  tomers serve [--requests N] [--merge-workers N] [--merge-mode off|fixed]
+               [--merge-k N] [--config serve.json] [--write-config serve.json]
   tomers bench <table1|fig2|table2|table3|table4|table5|table8|fig4|fig5|fig6|fig7|fig8|fig9|fig15|fig16|fig19|ablation_k|deconly|ablation_bound|all> [--quick] [--dir artifacts]
 
 Datasets: etth1 ettm1 weather electricity traffic (synthetic, DESIGN.md §7)
@@ -110,14 +112,20 @@ fn run() -> Result<()> {
             let requests: usize = args.flag("requests").unwrap_or("200").parse()?;
             // size the process-wide worker pool before anything touches it
             let merge_workers: usize = args.flag("merge-workers").unwrap_or("0").parse()?;
+            let merge_flags = host_merge_from_flags(&args)?;
             if let Some(cfg_path) = args.flag("config") {
-                let mut cfg = tomers::config::ServeFileConfig::load(std::path::Path::new(cfg_path))?;
+                let mut cfg =
+                    tomers::config::ServeFileConfig::load(std::path::Path::new(cfg_path))?;
                 if merge_workers > 0 {
                     cfg.merge_workers = merge_workers; // CLI overrides the file
                 }
+                if let Some(spec) = merge_flags {
+                    cfg.merge = spec; // CLI merge flags override the file too
+                }
                 return cmd_serve_config(cfg.into_server_config(), requests);
             }
-            cmd_serve(&dir, requests, merge_workers)
+            let merge = merge_flags.unwrap_or_else(tomers::coordinator::default_host_merge);
+            cmd_serve(&dir, requests, merge_workers, merge)
         }
         Some("bench") => {
             let which = args.positional.get(1).context("missing experiment id")?.clone();
@@ -129,6 +137,40 @@ fn run() -> Result<()> {
             Ok(())
         }
     }
+}
+
+/// Build the host-premerge [`MergeSpec`] from `--merge-mode` and
+/// `--merge-k`; `None` when no merge flag was given (caller falls back
+/// to the config file or the default).  Only `off` and the schedule-free
+/// `fixed` template are meaningful for serving (the premerge schedule is
+/// derived per request shape), so a bad flag fails here, before any
+/// serving thread starts.
+fn host_merge_from_flags(args: &Args) -> Result<Option<MergeSpec>> {
+    let mode = args.flag("merge-mode");
+    let k_flag = args.flag("merge-k");
+    if mode.is_none() && k_flag.is_none() {
+        return Ok(None);
+    }
+    let k: usize = match k_flag {
+        Some(s) => s.parse().context("--merge-k")?,
+        None => MergeSpec::DEFAULT_K,
+    };
+    let spec = match mode.unwrap_or("fixed") {
+        "off" => {
+            // mirror the config parser: a key the chosen mode would never
+            // read is an error, not a silent no-op
+            ensure!(k_flag.is_none(), "--merge-k has no effect with --merge-mode off");
+            MergeSpec::off()
+        }
+        "fixed" => MergeSpec::fixed_r(Vec::new(), k),
+        other => bail!(
+            "unknown --merge-mode {other:?} — host premerge supports off | fixed \
+             (the schedule is derived per request shape; dynamic-threshold merging \
+             is a per-variant config-file setting)"
+        ),
+    };
+    spec.validate()?;
+    Ok(Some(spec))
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -152,7 +194,12 @@ fn cmd_eval(_dir: &PathBuf, _artifact: &str, _ds: &str, _windows: usize) -> Resu
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn cmd_serve(_dir: &PathBuf, _requests: usize, _merge_workers: usize) -> Result<()> {
+fn cmd_serve(
+    _dir: &PathBuf,
+    _requests: usize,
+    _merge_workers: usize,
+    _merge: MergeSpec,
+) -> Result<()> {
     anyhow::bail!(NO_PJRT)
 }
 
@@ -244,12 +291,12 @@ fn cmd_serve_config(config: ServerConfig, requests: usize) -> Result<()> {
 }
 
 #[cfg(feature = "pjrt")]
-fn cmd_serve(dir: &PathBuf, requests: usize, merge_workers: usize) -> Result<()> {
+fn cmd_serve(dir: &PathBuf, requests: usize, merge_workers: usize, merge: MergeSpec) -> Result<()> {
     // entropy-driven merge-policy over the chronos_s variants
     let variants = vec![
-        Variant { name: "chronos_s__r0".into(), r: 0 },
-        Variant { name: "chronos_s__r32".into(), r: 32 },
-        Variant { name: "chronos_s__r128".into(), r: 128 },
+        Variant::fixed("chronos_s__r0", 0),
+        Variant::fixed("chronos_s__r32", 32),
+        Variant::fixed("chronos_s__r128", 128),
     ];
     let policy = MergePolicy::uniform(variants, 3.0, 7.5);
     let handle = coordinator::server::serve(ServerConfig {
@@ -258,7 +305,7 @@ fn cmd_serve(dir: &PathBuf, requests: usize, merge_workers: usize) -> Result<()>
         max_wait: Duration::from_millis(25),
         max_queue: 4096,
         merge_workers,
-        host_merge: tomers::coordinator::HostMergeConfig::default(),
+        merge,
     })?;
     let client = handle.client();
     println!("serving {requests} mixed-workload requests ...");

@@ -1,36 +1,25 @@
-//! Batched merging over a `(b, t, d)` slab, on the shared [`WorkerPool`].
+//! Shared chunked fan-out for batched merge work on the [`WorkerPool`].
 //!
-//! [`BatchMerger`] owns one [`MergeScratch`] per worker *slot* and splits
-//! the batch into contiguous chunks, one pool task per slot.  The pool's
-//! persistent threads execute (and steal) the chunks; because every chunk
-//! carries its own scratch, it does not matter which thread runs which
-//! chunk.  Warm, a merge of the whole slab performs **no heap allocations
-//! and no thread spawns**: the allocation-free property comes from the
-//! scratches, the spawn-free property from the pool (its
-//! `spawned_threads` counter pins this down in `tests/runtime_pool.rs`).
-//!
-//! PR 1's implementation fanned out a fresh `std::thread::scope` per call;
-//! that path survives verbatim as [`BatchMerger::merge_batch_into_scoped`]
-//! so `benches/merging.rs` can keep printing the pool-vs-scope comparison
-//! (the pool must never lose to it), but no production caller uses it.
-//!
-//! Accumulation precision: [`BatchMerger::with_accum`] selects the
-//! [`Accum::F32`] banded-dot variant for throughput-bound callers; the
-//! default ([`BatchMerger::new`]) stays bitwise identical to the
-//! reference.  See [`Accum`] for the accuracy contract.
+//! PR 1–2 exposed batching through `BatchMerger` / `BatchPipeline`, each
+//! with its own positional-tuple entry point; both are gone — batched
+//! execution is [`crate::merging::MergePlan::run_batch_into`], and this
+//! module keeps only the underlying splitter it shares with the
+//! `thread::scope` bench baseline.  The guarantees are unchanged: one
+//! slot (scratch arena) per contiguous chunk, so it does not matter which
+//! pool thread runs which chunk, and a warm batch performs **no heap
+//! allocations and no thread spawns** (the pool's `spawned_threads`
+//! counter pins this down in `tests/runtime_pool.rs`).
 
-use super::kernel::{self, Accum};
-use super::scratch::MergeScratch;
-use super::MergeResult;
 use crate::runtime::pool::WorkerPool;
 
-/// Shared chunked fan-out for batched-by-sequence merge work: splits a
-/// `(b, t, d)` slab into one contiguous chunk per slot and runs
+/// Split a `(b, t, d)` slab into one contiguous chunk per slot and run
 /// `f(slot_state, seq_tokens, seq_sizes, out)` per sequence — inline when
-/// there is a single slot (or sequence), as pool tasks otherwise.  Both
-/// [`BatchMerger::merge_batch_into`] and
-/// [`crate::merging::BatchPipeline::run_schedule_into`] are this helper
-/// plus a per-sequence kernel call.
+/// there is a single slot (or sequence), as pool tasks otherwise.
+// too_many_arguments: crate-internal splitter under the kernel-layer
+// exception — it threads the raw slab shape between MergePlan and the
+// pool, and bundling (b, t, d) into a struct here would just be a second
+// MergePlan.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn run_chunked<S: Send, T: Send, F>(
     pool: &WorkerPool,
     slots: &mut [S],
@@ -63,270 +52,11 @@ pub(crate) fn run_chunked<S: Send, T: Send, F>(
         .map(|((out_chunk, (tok_chunk, size_chunk)), slot)| {
             move || {
                 for (i, out) in out_chunk.iter_mut().enumerate() {
-                    f(slot, &tok_chunk[i * t * d..(i + 1) * t * d], &size_chunk[i * t..(i + 1) * t], out);
+                    let tok = &tok_chunk[i * t * d..(i + 1) * t * d];
+                    f(slot, tok, &size_chunk[i * t..(i + 1) * t], out);
                 }
             }
         })
         .collect();
     pool.run(tasks);
-}
-
-/// Reusable batched merge executor: `slots` scratch arenas, one per
-/// concurrent chunk.  Construct once, call
-/// [`BatchMerger::merge_batch_into`] per slab.
-pub struct BatchMerger {
-    scratches: Vec<MergeScratch>,
-    accum: Accum,
-}
-
-impl BatchMerger {
-    /// A merger with a fixed slot count (clamped to at least 1), f64
-    /// accumulation.
-    pub fn new(slots: usize) -> BatchMerger {
-        BatchMerger::with_accum(slots, Accum::F64)
-    }
-
-    /// A merger with an explicit accumulation precision for the banded dot.
-    pub fn with_accum(slots: usize, accum: Accum) -> BatchMerger {
-        let slots = slots.max(1);
-        BatchMerger {
-            scratches: (0..slots).map(|_| MergeScratch::new()).collect(),
-            accum,
-        }
-    }
-
-    /// A merger sized to the machine (`available_parallelism`).
-    pub fn with_default_parallelism() -> BatchMerger {
-        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        BatchMerger::new(n)
-    }
-
-    /// Number of scratch slots (the maximum chunk parallelism).
-    pub fn workers(&self) -> usize {
-        self.scratches.len()
-    }
-
-    pub fn accum(&self) -> Accum {
-        self.accum
-    }
-
-    /// Merge a `(b, t, d)` slab of tokens (row-major, sequence-contiguous)
-    /// with per-sequence sizes `(b, t)`, writing one [`MergeResult`] per
-    /// sequence into `outs` (resized to `b`).  Chunks run as tasks on
-    /// `pool`; a single-slot merger (or a single-sequence batch) runs
-    /// inline on the caller.
-    #[allow(clippy::too_many_arguments)]
-    pub fn merge_batch_into(
-        &mut self,
-        pool: &WorkerPool,
-        tokens: &[f32],
-        sizes: &[f32],
-        b: usize,
-        t: usize,
-        d: usize,
-        r: usize,
-        k: usize,
-        outs: &mut Vec<MergeResult>,
-    ) {
-        assert_eq!(tokens.len(), b * t * d, "token slab shape mismatch");
-        assert_eq!(sizes.len(), b * t, "sizes slab shape mismatch");
-        outs.resize_with(b, MergeResult::default);
-        if b == 0 {
-            return;
-        }
-        let accum = self.accum;
-        run_chunked(
-            pool,
-            &mut self.scratches,
-            tokens,
-            sizes,
-            b,
-            t,
-            d,
-            outs,
-            |scratch, tok, sz, out| {
-                kernel::merge_fixed_r_scratch_accum(tok, sz, t, d, r, k, scratch, out, accum);
-            },
-        );
-    }
-
-    /// The PR 1 `std::thread::scope` fan-out, kept verbatim as the bench
-    /// baseline (`benches/merging.rs` compares it against the pool path).
-    /// Spawns `workers()` fresh threads **per call** — do not use on hot
-    /// paths.
-    #[allow(clippy::too_many_arguments)]
-    pub fn merge_batch_into_scoped(
-        &mut self,
-        tokens: &[f32],
-        sizes: &[f32],
-        b: usize,
-        t: usize,
-        d: usize,
-        r: usize,
-        k: usize,
-        outs: &mut Vec<MergeResult>,
-    ) {
-        assert_eq!(tokens.len(), b * t * d, "token slab shape mismatch");
-        assert_eq!(sizes.len(), b * t, "sizes slab shape mismatch");
-        outs.resize_with(b, MergeResult::default);
-        if b == 0 {
-            return;
-        }
-        let slots = self.scratches.len();
-        let accum = self.accum;
-        let chunk = (b + slots - 1) / slots;
-        if slots == 1 || b == 1 {
-            let scratch = &mut self.scratches[0];
-            for (i, out) in outs.iter_mut().enumerate() {
-                kernel::merge_fixed_r_scratch_accum(
-                    &tokens[i * t * d..(i + 1) * t * d],
-                    &sizes[i * t..(i + 1) * t],
-                    t,
-                    d,
-                    r,
-                    k,
-                    scratch,
-                    out,
-                    accum,
-                );
-            }
-            return;
-        }
-        std::thread::scope(|scope| {
-            let mut scratch_iter = self.scratches.iter_mut();
-            for (out_chunk, (tok_chunk, size_chunk)) in outs
-                .chunks_mut(chunk)
-                .zip(tokens.chunks(chunk * t * d).zip(sizes.chunks(chunk * t)))
-            {
-                let scratch = scratch_iter.next().expect("one scratch per chunk");
-                scope.spawn(move || {
-                    for (i, out) in out_chunk.iter_mut().enumerate() {
-                        kernel::merge_fixed_r_scratch_accum(
-                            &tok_chunk[i * t * d..(i + 1) * t * d],
-                            &size_chunk[i * t..(i + 1) * t],
-                            t,
-                            d,
-                            r,
-                            k,
-                            scratch,
-                            out,
-                            accum,
-                        );
-                    }
-                });
-            }
-        });
-    }
-}
-
-/// One-shot batched merge on the process-wide pool: allocates a
-/// [`BatchMerger`] sized to the machine and returns per-sequence results.
-/// Hot paths should hold a `BatchMerger` and call
-/// [`BatchMerger::merge_batch_into`] instead.
-pub fn merge_batch(
-    tokens: &[f32],
-    sizes: &[f32],
-    b: usize,
-    t: usize,
-    d: usize,
-    r: usize,
-    k: usize,
-) -> Vec<MergeResult> {
-    let mut merger = BatchMerger::with_default_parallelism();
-    let mut outs = Vec::new();
-    merger.merge_batch_into(WorkerPool::global(), tokens, sizes, b, t, d, r, k, &mut outs);
-    outs
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::merging::merge_fixed_r;
-    use crate::util::Rng;
-
-    #[test]
-    fn batch_matches_single_sequence_path() {
-        let mut rng = Rng::new(21);
-        let pool = WorkerPool::new(3);
-        let (b, t, d, r, k) = (7usize, 30usize, 5usize, 8usize, 3usize);
-        let tokens: Vec<f32> = (0..b * t * d).map(|_| rng.normal() as f32).collect();
-        let sizes: Vec<f32> = (0..b * t).map(|_| 1.0 + rng.below(3) as f32).collect();
-        for slots in [1usize, 2, 4, 16] {
-            let mut merger = BatchMerger::new(slots);
-            let mut outs = Vec::new();
-            merger.merge_batch_into(&pool, &tokens, &sizes, b, t, d, r, k, &mut outs);
-            assert_eq!(outs.len(), b);
-            for i in 0..b {
-                let single = merge_fixed_r(
-                    &tokens[i * t * d..(i + 1) * t * d],
-                    &sizes[i * t..(i + 1) * t],
-                    t,
-                    d,
-                    r,
-                    k,
-                );
-                assert_eq!(outs[i].slot_map, single.slot_map, "slots={slots} seq={i}");
-                assert_eq!(outs[i].tokens, single.tokens);
-                assert_eq!(outs[i].sizes, single.sizes);
-            }
-        }
-    }
-
-    #[test]
-    fn pool_path_equals_scoped_baseline() {
-        let mut rng = Rng::new(23);
-        let pool = WorkerPool::new(4);
-        let (b, t, d, r, k) = (9usize, 26usize, 4usize, 6usize, 5usize);
-        let tokens: Vec<f32> = (0..b * t * d).map(|_| rng.normal() as f32).collect();
-        let sizes = vec![1.0f32; b * t];
-        let mut merger = BatchMerger::new(4);
-        let (mut on_pool, mut scoped) = (Vec::new(), Vec::new());
-        merger.merge_batch_into(&pool, &tokens, &sizes, b, t, d, r, k, &mut on_pool);
-        merger.merge_batch_into_scoped(&tokens, &sizes, b, t, d, r, k, &mut scoped);
-        for i in 0..b {
-            assert_eq!(on_pool[i].slot_map, scoped[i].slot_map, "seq {i}");
-            assert_eq!(on_pool[i].tokens, scoped[i].tokens);
-            assert_eq!(on_pool[i].sizes, scoped[i].sizes);
-        }
-    }
-
-    #[test]
-    fn f32_accum_batch_holds_invariants() {
-        let mut rng = Rng::new(24);
-        let pool = WorkerPool::new(2);
-        let (b, t, d, r, k) = (5usize, 24usize, 8usize, 6usize, 4usize);
-        let tokens: Vec<f32> = (0..b * t * d).map(|_| rng.normal() as f32).collect();
-        let sizes = vec![1.0f32; b * t];
-        let mut merger = BatchMerger::with_accum(3, Accum::F32);
-        assert_eq!(merger.accum(), Accum::F32);
-        let mut outs = Vec::new();
-        merger.merge_batch_into(&pool, &tokens, &sizes, b, t, d, r, k, &mut outs);
-        for out in &outs {
-            assert_eq!(out.tokens.len(), (t - r) * d);
-            let total: f32 = out.sizes.iter().sum();
-            assert!((total - t as f32).abs() < 1e-3);
-        }
-    }
-
-    #[test]
-    fn empty_batch_is_fine() {
-        let pool = WorkerPool::new(2);
-        let mut merger = BatchMerger::new(4);
-        let mut outs = vec![MergeResult::default(); 3];
-        merger.merge_batch_into(&pool, &[], &[], 0, 8, 4, 2, 1, &mut outs);
-        assert!(outs.is_empty());
-    }
-
-    #[test]
-    fn convenience_entry_point() {
-        let mut rng = Rng::new(22);
-        let (b, t, d) = (3usize, 12usize, 4usize);
-        let tokens: Vec<f32> = (0..b * t * d).map(|_| rng.normal() as f32).collect();
-        let sizes = vec![1.0f32; b * t];
-        let outs = merge_batch(&tokens, &sizes, b, t, d, 3, 2);
-        assert_eq!(outs.len(), b);
-        for out in &outs {
-            assert_eq!(out.tokens.len(), (t - 3) * d);
-        }
-    }
 }

@@ -280,6 +280,10 @@ fn passthrough(tokens: &[f32], sizes: &[f32], t: usize, out: &mut MergeResult) {
 
 /// Zero-allocation twin of [`super::merge_fixed_r`]: match + top-r merge
 /// into `out`, with every intermediate in `scratch`.
+// too_many_arguments: the kernel layer is the one deliberate exception to
+// the MergeSpec/MergePlan API — it takes the paper's full positional
+// tuple so the innermost loop stays free of struct indirection; every
+// non-kernel caller goes through a compiled plan instead.
 #[allow(clippy::too_many_arguments)]
 pub fn merge_fixed_r_scratch(
     tokens: &[f32],
@@ -296,6 +300,7 @@ pub fn merge_fixed_r_scratch(
 
 /// [`merge_fixed_r_scratch`] with an explicit accumulation precision for
 /// the matching stage (the scatter-average stays f64 — see [`Accum`]).
+// too_many_arguments: kernel-layer exception, see merge_fixed_r_scratch.
 #[allow(clippy::too_many_arguments)]
 pub fn merge_fixed_r_scratch_accum(
     tokens: &[f32],
@@ -325,6 +330,7 @@ pub fn merge_fixed_r_scratch_accum(
 /// pair whose similarity exceeds `threshold`; returns the effective token
 /// count `t - r`.  Unlike the layered wrapper, the match is computed once
 /// and shared between the threshold count and the merge itself.
+// too_many_arguments: kernel-layer exception, see merge_fixed_r_scratch.
 #[allow(clippy::too_many_arguments)]
 pub fn merge_dynamic_scratch(
     tokens: &[f32],
@@ -336,11 +342,30 @@ pub fn merge_dynamic_scratch(
     scratch: &mut MergeScratch,
     out: &mut MergeResult,
 ) -> usize {
+    merge_dynamic_scratch_accum(tokens, sizes, t, d, k, threshold, scratch, out, Accum::F64)
+}
+
+/// [`merge_dynamic_scratch`] with an explicit accumulation precision for
+/// the matching stage (see [`Accum`]) — completing the mode × precision
+/// matrix the plan layer dispatches over.
+// too_many_arguments: kernel-layer exception, see merge_fixed_r_scratch.
+#[allow(clippy::too_many_arguments)]
+pub fn merge_dynamic_scratch_accum(
+    tokens: &[f32],
+    sizes: &[f32],
+    t: usize,
+    d: usize,
+    k: usize,
+    threshold: f64,
+    scratch: &mut MergeScratch,
+    out: &mut MergeResult,
+    accum: Accum,
+) -> usize {
     assert_eq!(tokens.len(), t * d);
     assert_eq!(sizes.len(), t);
     let te = t - (t % 2);
     let t2 = te / 2;
-    match_tokens_scratch(tokens, t, d, k, scratch);
+    match_tokens_scratch_accum(tokens, t, d, k, scratch, accum);
     let r = scratch.scores.iter().filter(|&&s| s > threshold).count().min(t2);
     if r == 0 {
         passthrough(tokens, sizes, t, out);

@@ -1,4 +1,5 @@
-//! Token merging (paper §3): batched, zero-allocation Rust kernels.
+//! Token merging (paper §3): one typed API over batched, zero-allocation
+//! Rust kernels.
 //!
 //! Mirrors the Layer-2 JAX semantics exactly (same A/B split, banded
 //! matching, top-r selection, size-weighted averaging, order preservation,
@@ -6,49 +7,72 @@
 //! tests and the artifact cross-validation probes all agree on one
 //! definition of "merge".
 //!
+//! # The API (DESIGN.md §2)
+//!
+//! All merging is described by a [`MergeSpec`] — mode
+//! ([`MergeMode::FixedR`] schedule / [`MergeMode::Dynamic`] threshold /
+//! [`MergeMode::Off`]), locality `k`, accumulation precision
+//! ([`Accum`]), causal flag — validated in one place and compiled
+//! against a `(t, d)` shape into a [`MergePlan`], the only execution
+//! entry point:
+//!
+//! ```no_run
+//! use tomers::merging::MergeSpec;
+//! # fn main() -> anyhow::Result<()> {
+//! # let (tokens, sizes) = (vec![0.0f32; 192 * 64], vec![1.0f32; 192]);
+//! let mut plan = MergeSpec::single(48, 16).compile(192, 64)?;
+//! let merged = plan.run(&tokens, &sizes);
+//! assert_eq!(merged.sizes.len(), 192 - 48);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Batched slabs go through [`MergePlan::run_batch_into`] on the shared
+//! [`crate::runtime::pool::WorkerPool`].  The pre-PR 3 positional-tuple
+//! entry points (`merge_fixed_r(tokens, sizes, t, d, r, k)`-style)
+//! survive below as deprecated wrappers for exactly one purpose: the
+//! differential suite pins the plan path bit-for-bit against them and
+//! against [`reference`].
+//!
 //! # Module layout
 //!
+//! * [`spec`]      — [`MergeSpec`] / [`MergeMode`]: validation,
+//!   [`MergeSpec::premerge_to`] derivation, compilation.
+//! * [`pipeline`]  — [`MergePlan`]: plan-driven dispatch over the kernel
+//!   (single-sequence, pool-batched, and the `thread::scope` bench
+//!   baseline), slot-map composition, [`PipelineResult`].
 //! * [`kernel`]    — the optimized single-sequence kernel.  Per-token norms
 //!   are precomputed once (one dot per banded pair instead of recomputing
 //!   `|a|` O(k) times), the cosine dot runs as a 4-lane chunked f64
 //!   accumulation the compiler can autovectorize, and top-r selection uses
 //!   `select_nth_unstable` (O(t)) instead of a full sort (O(t log t)).
 //!   All entry points take a [`MergeScratch`] and an out-param, so steady
-//!   state does **zero heap allocations per call**.
+//!   state does **zero heap allocations per call**.  This is the one
+//!   layer that keeps the paper's full positional tuple (scoped
+//!   `too_many_arguments` allows; the crate-wide allow is gone).
 //! * [`scratch`]   — [`MergeScratch`], the reusable arena backing the
 //!   kernel (norms, scores, match indices, slot workspace, f64 scatter
 //!   accumulators).  Grow-only: buffers are `clear()`+`resize()`d, never
 //!   reallocated once warm.
-//! * [`batch`]     — [`BatchMerger`] / [`merge_batch`]: one merge over a
-//!   `(b, t, d)` slab, parallelized across the batch on the shared
-//!   persistent [`crate::runtime::pool::WorkerPool`] (no per-call thread
-//!   spawns), one scratch per slot; an [`Accum::F32`] banded-dot variant
-//!   for throughput-bound callers.
-//! * [`pipeline`]  — [`MergePipeline`]: runs a whole per-layer schedule
-//!   (`merge_schedule`) in one call, reusing scratch across layers and
-//!   composing per-layer slot maps so a single gather unmerges the final
-//!   tokens back to input positions.  [`BatchPipeline`] is its batched,
-//!   pool-backed form (the serving prep stage's premerge engine).
+//! * `batch`       — the crate-internal chunked fan-out shared by the
+//!   plan's pool and scope paths (one scratch slot per chunk, no spawns).
 //! * [`reference`] — the legacy scalar implementation, kept verbatim as
 //!   the differential-test oracle and the bench baseline.
 //! * [`analytic`]  — eq. 2 complexity model, the B.1 speed-up bound and
-//!   the static merge schedule.
-//!
-//! The original single-shot API (`match_tokens`, `merge_fixed_r`,
-//! `unmerge`, `merge_dynamic`) survives below as thin wrappers over the
-//! optimized kernel, so Layer-2 JAX parity semantics and all existing
-//! callers/tests are untouched.
+//!   the static merge schedule (`MergeSpec::layered_for` is its typed
+//!   front).
 //!
 //! # `BENCH_merging.json` schema
 //!
 //! `cargo bench --bench merging` writes a machine-readable perf record so
 //! the kernel's trajectory accumulates across PRs (see `scripts/verify.sh`
-//! for the regression gate).  Schema (`schema_version` 2 — v2 added the
+//! for the regression gate).  Schema (`schema_version` 3 — v3 switched the
+//! batched rows to the `MergePlan` entry points; v2 added the
 //! pool-vs-scope comparison and the pool spawn/steal counters):
 //!
 //! ```json
 //! {
-//!   "schema_version": 2,
+//!   "schema_version": 3,
 //!   "bench": "merging",
 //!   "quick": false,
 //!   "threads": 8,
@@ -60,9 +84,9 @@
 //!       "t": 8192, "d": 64, "k": 16, "r": 2048, "batch": 8,
 //!       "legacy_ms": 0.0,          // reference scalar path, per batch
 //!       "optimized_ms": 0.0,       // warm-scratch kernel, single thread
-//!       "batched_ms": 0.0,         // BatchMerger on the WorkerPool (mean)
+//!       "batched_ms": 0.0,         // MergePlan::run_batch_into on the pool (mean)
 //!       "batched_p50_ms": 0.0,     //   .. median
-//!       "batched_scope_ms": 0.0,   // PR 1 thread::scope baseline (mean)
+//!       "batched_scope_ms": 0.0,   // MergePlan::run_batch_into_scoped baseline (mean)
 //!       "batched_scope_p50_ms": 0.0, //   .. median
 //!       "speedup_optimized": 0.0,  // legacy_ms / optimized_ms
 //!       "speedup_batched": 0.0     // legacy_ms / batched_ms (pool path)
@@ -72,17 +96,20 @@
 //! ```
 
 pub mod analytic;
-pub mod batch;
+pub(crate) mod batch;
 pub mod kernel;
 pub mod pipeline;
 pub mod reference;
 pub mod scratch;
+pub mod spec;
 
 pub use analytic::{merge_schedule, similarity_complexity, speedup_bound};
-pub use batch::{merge_batch, BatchMerger};
-pub use kernel::{match_tokens_scratch, merge_dynamic_scratch, merge_fixed_r_scratch, Accum};
-pub use pipeline::{BatchPipeline, MergePipeline, PipelineResult};
+pub use kernel::{
+    match_tokens_scratch, merge_dynamic_scratch, merge_fixed_r_scratch, Accum,
+};
+pub use pipeline::{MergePlan, PipelineResult};
 pub use scratch::MergeScratch;
+pub use spec::{MergeMode, MergeSpec};
 
 /// Result of one merge step over `t` tokens of dim `d`.
 ///
@@ -103,9 +130,10 @@ pub struct MergeResult {
 /// Tokens at even positions form subset A, odd positions subset B; for each
 /// A-token the best B-match within the band `|i - j| < k` is found.
 /// Returns (best_score, best_j) per A-token.
-///
-/// Thin wrapper over [`kernel::match_tokens_scratch`]; allocates a fresh
-/// scratch per call.  Hot paths should hold a [`MergeScratch`] instead.
+#[deprecated(
+    since = "0.3.0",
+    note = "hold a MergeScratch and call kernel::match_tokens_scratch (zero-allocation)"
+)]
 pub fn match_tokens(tokens: &[f32], t: usize, d: usize, k: usize) -> (Vec<f64>, Vec<usize>) {
     let mut scratch = MergeScratch::new();
     kernel::match_tokens_scratch(tokens, t, d, k, &mut scratch);
@@ -116,8 +144,10 @@ pub fn match_tokens(tokens: &[f32], t: usize, d: usize, k: usize) -> (Vec<f64>, 
 /// (size-weighted average, order-preserving) — the Rust twin of
 /// `python/compile/merging.py::merge_fixed_r`.
 ///
-/// Thin wrapper over [`kernel::merge_fixed_r_scratch`]; allocates a fresh
-/// scratch per call.  Hot paths should hold a [`MergeScratch`] instead.
+/// One-shot wrapper over a single-layer [`MergePlan`]; keeps the legacy
+/// lenient contract (`r` clamped to the feasible maximum, `k` clamped to
+/// at least 1) that [`MergeSpec`] validation deliberately rejects.
+#[deprecated(since = "0.3.0", note = "build a MergeSpec and compile a MergePlan")]
 pub fn merge_fixed_r(
     tokens: &[f32],
     sizes: &[f32],
@@ -126,10 +156,15 @@ pub fn merge_fixed_r(
     r: usize,
     k: usize,
 ) -> MergeResult {
-    let mut scratch = MergeScratch::new();
-    let mut out = MergeResult::default();
-    kernel::merge_fixed_r_scratch(tokens, sizes, t, d, r, k, &mut scratch, &mut out);
-    out
+    let t2 = (t - t % 2) / 2;
+    let r = r.min(t2);
+    if t == 0 || d == 0 {
+        return MergeResult::default();
+    }
+    let spec = if r == 0 { MergeSpec::off() } else { MergeSpec::single(r, k.max(1)) };
+    let mut plan = spec.compile(t, d).expect("clamped legacy parameters always compile");
+    let res = plan.run(tokens, sizes);
+    MergeResult { tokens: res.tokens, sizes: res.sizes, slot_map: res.slot_map }
 }
 
 /// Clone-to-neighbours unmerge: gather rows through the slot map.
@@ -151,7 +186,12 @@ pub fn unmerge_into(tokens: &[f32], d: usize, slot_map: &[usize], out: &mut [f32
 /// Dynamic merging (§5.5): merge pairs whose similarity exceeds the
 /// threshold; returns (tokens', sizes', effective_token_count).
 ///
-/// Thin wrapper over [`kernel::merge_dynamic_scratch`].
+/// Calls the kernel directly rather than a plan because the legacy
+/// contract accepts *any* threshold (a negative one means "merge every
+/// feasible pair"), which [`MergeSpec::validate`] deliberately rejects;
+/// the differential suite pins the plan path against this wrapper on the
+/// valid range.
+#[deprecated(since = "0.3.0", note = "build a MergeSpec::dynamic and compile a MergePlan")]
 pub fn merge_dynamic(
     tokens: &[f32],
     sizes: &[f32],
@@ -162,10 +202,47 @@ pub fn merge_dynamic(
 ) -> (MergeResult, usize) {
     let mut scratch = MergeScratch::new();
     let mut out = MergeResult::default();
-    let eff = kernel::merge_dynamic_scratch(tokens, sizes, t, d, k, threshold, &mut scratch, &mut out);
+    let eff =
+        kernel::merge_dynamic_scratch(tokens, sizes, t, d, k, threshold, &mut scratch, &mut out);
     (out, eff)
 }
 
+/// One-shot batched merge on the process-wide pool: a machine-sized
+/// single-layer [`MergePlan`] per call.
+#[deprecated(
+    since = "0.3.0",
+    note = "compile a MergePlan once and call run_batch_into per slab"
+)]
+pub fn merge_batch(
+    tokens: &[f32],
+    sizes: &[f32],
+    b: usize,
+    t: usize,
+    d: usize,
+    r: usize,
+    k: usize,
+) -> Vec<MergeResult> {
+    let t2 = (t - t % 2) / 2;
+    let r = r.min(t2);
+    if t == 0 || d == 0 {
+        return vec![MergeResult::default(); b];
+    }
+    let spec = if r == 0 { MergeSpec::off() } else { MergeSpec::single(r, k.max(1)) };
+    let mut plan = spec
+        .compile(t, d)
+        .expect("clamped legacy parameters always compile")
+        .with_default_parallelism();
+    let mut outs = Vec::new();
+    plan.run_batch_into(crate::runtime::pool::WorkerPool::global(), tokens, sizes, b, &mut outs);
+    outs
+        .into_iter()
+        .map(|res| MergeResult { tokens: res.tokens, sizes: res.sizes, slot_map: res.slot_map })
+        .collect()
+}
+
+// The tests below intentionally exercise the deprecated one-shot wrappers:
+// they are the legacy-semantics pins the differential suite builds on.
+#[allow(deprecated)]
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -202,7 +279,10 @@ mod tests {
         let mut rng = Rng::new(2);
         let (t, d) = (32, 4);
         let tokens = rand_tokens(&mut rng, t, d);
-        let res = merge_fixed_r(&tokens, &vec![1.0; t], t, d, 8, 1);
+        // the causal spec compiles (k == 1) and behaves like the k=1 wrapper
+        let mut plan = MergeSpec::single(8, 1).with_causal().compile(t, d).unwrap();
+        let res = plan.run(&tokens, &vec![1.0; t]);
+        assert_eq!(res.slot_map, merge_fixed_r(&tokens, &vec![1.0; t], t, d, 8, 1).slot_map);
         for s in 0..t - 8 {
             let sources: Vec<usize> =
                 (0..t).filter(|&p| res.slot_map[p] == s).collect();
@@ -248,6 +328,8 @@ mod tests {
         let (res, eff) = merge_dynamic(&tokens, &vec![1.0; t], t, d, 1, 1.1);
         assert_eq!(eff, t);
         assert_eq!(res.tokens, tokens);
+        // the legacy wrapper still accepts the out-of-spec negative
+        // threshold ("merge everything") the typed API rejects
         let (_, eff) = merge_dynamic(&tokens, &vec![1.0; t], t, d, 1, -1.1);
         assert_eq!(eff, t - t / 2);
     }

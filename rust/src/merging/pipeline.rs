@@ -1,31 +1,36 @@
-//! [`MergePipeline`]: run a whole per-layer merge schedule in one call.
+//! [`MergePlan`]: plan-driven merge execution.
 //!
-//! The coordinator's planner and the bench suites reason about *schedules*
-//! — "merge r tokens per layer for L layers, floor q" — not single merge
-//! steps.  Running a schedule through the single-shot API allocates fresh
-//! intermediates per layer and leaves the caller to compose slot maps by
-//! hand.  The pipeline instead:
+//! A plan is a [`MergeSpec`](super::MergeSpec) compiled against a concrete
+//! `(t, d)` shape: per-layer token counts are precomputed and validated,
+//! and every intermediate (kernel scratch, ping-pong layer buffers) lives
+//! in plan-owned slots, so steady-state execution performs **zero heap
+//! allocations and zero thread spawns** — the same guarantees PR 1–2
+//! established for the raw kernel, now behind one typed entry point.
 //!
-//! * reuses one [`MergeScratch`] and two ping-pong [`MergeResult`] buffers
-//!   across all layers (zero steady-state allocations until the final
-//!   result copy-out), and
-//! * composes the per-layer slot maps into a single
-//!   `original position -> final slot` gather, so unmerging the final
-//!   tokens back to input positions is **one** gather instead of L.
+//! * [`MergePlan::run`] / [`MergePlan::run_into`] — one sequence.  Multi-
+//!   layer schedules reuse one scratch and two ping-pong buffers across
+//!   layers and compose the per-layer slot maps into a single
+//!   `original position -> final slot` gather (unmerge is **one** gather
+//!   instead of one per layer).
+//! * [`MergePlan::run_batch_into`] — a `(b, t, d)` slab on the shared
+//!   [`WorkerPool`]: one slot per contiguous sequence chunk (see
+//!   [`MergePlan::with_slots`]), chunks run as pool tasks.  This replaces
+//!   the PR 1–2 `BatchMerger::merge_batch_into` /
+//!   `BatchPipeline::run_schedule_into` function matrix.
+//! * [`MergePlan::run_batch_into_scoped`] — the PR 1 `std::thread::scope`
+//!   fan-out, kept **only** as the bench baseline (`benches/merging.rs`
+//!   gates pool <= scope); it spawns threads per call.
 //!
-//! [`BatchPipeline`] lifts this to a `(b, t, d)` slab on the shared
-//! [`WorkerPool`]: one persistent [`MergePipeline`] per slot, contiguous
-//! sequence chunks as pool tasks — the serving prep stage uses it to
-//! premerge over-length contexts while the previous batch executes on the
-//! device.
+//! Dynamic mode (§5.5) runs as a single data-dependent layer; the
+//! realized output length lands in [`PipelineResult::token_counts`].
 
-use super::analytic::merge_schedule;
 use super::kernel;
 use super::scratch::MergeScratch;
+use super::spec::{MergeMode, MergeSpec};
 use super::{unmerge, MergeResult};
 use crate::runtime::pool::WorkerPool;
 
-/// Output of a pipeline run.
+/// Output of one plan (or legacy pipeline) run.
 #[derive(Clone, Debug, Default)]
 pub struct PipelineResult {
     /// final merged tokens, `token_counts.last() * d`
@@ -34,7 +39,8 @@ pub struct PipelineResult {
     pub sizes: Vec<f32>,
     /// composed map: original position (length t) -> final output slot
     pub slot_map: Vec<usize>,
-    /// token count before layer 0 and after each layer (length layers + 1)
+    /// token count before layer 0 and after each layer; for dynamic mode
+    /// the realized (data-dependent) count is the last entry
     pub token_counts: Vec<usize>,
 }
 
@@ -46,146 +52,305 @@ impl PipelineResult {
     }
 }
 
-/// Reusable multi-layer merge executor.  Construct once per worker, call
-/// [`MergePipeline::run`] (fixed r + floor, the `merge_schedule` rule) or
-/// [`MergePipeline::run_schedule`] (explicit per-layer r) per sequence.
+/// Per-chunk execution state: kernel scratch plus two ping-pong layer
+/// buffers.  Grow-only, like everything the kernel touches.
 #[derive(Default)]
-pub struct MergePipeline {
+struct PlanSlot {
     scratch: MergeScratch,
     cur: MergeResult,
     next: MergeResult,
-    composed: Vec<usize>,
 }
 
-impl MergePipeline {
-    pub fn new() -> MergePipeline {
-        MergePipeline::default()
-    }
+/// The shape-and-schedule view shared by every slot of one plan run
+/// (split off `MergePlan` so slots can borrow it while being iterated
+/// mutably).
+struct PlanView<'a> {
+    spec: &'a MergeSpec,
+    rs: &'a [usize],
+    counts: &'a [usize],
+    t: usize,
+    d: usize,
+}
 
-    /// Run the static schedule `merge_schedule(t, r, num_layers, q)` —
-    /// merge up to `r` tokens per layer, never dropping below `q` tokens.
-    pub fn run(
+impl PlanSlot {
+    /// Run the plan over one `(t, d)` sequence into `out` (buffers are
+    /// cleared and refilled in place — no allocations when warm).
+    fn run_into(
         &mut self,
+        view: &PlanView,
         tokens: &[f32],
         sizes: &[f32],
-        t: usize,
-        d: usize,
-        k: usize,
-        r: usize,
-        num_layers: usize,
-        q: usize,
-    ) -> PipelineResult {
-        let counts = merge_schedule(t, r, num_layers, q);
-        let rs: Vec<usize> = counts.windows(2).map(|w| w[0] - w[1]).collect();
-        self.run_schedule(tokens, sizes, t, d, k, &rs)
-    }
+        out: &mut PipelineResult,
+    ) {
+        let (t, d) = (view.t, view.d);
+        debug_assert_eq!(tokens.len(), t * d);
+        debug_assert_eq!(sizes.len(), t);
 
-    /// Run an explicit per-layer schedule: `rs[l]` tokens are merged at
-    /// layer `l` (clamped per layer to the feasible maximum, like the
-    /// single-shot API).
-    pub fn run_schedule(
-        &mut self,
-        tokens: &[f32],
-        sizes: &[f32],
-        t: usize,
-        d: usize,
-        k: usize,
-        rs: &[usize],
-    ) -> PipelineResult {
-        assert_eq!(tokens.len(), t * d);
-        assert_eq!(sizes.len(), t);
-        let MergePipeline { scratch, cur, next, composed } = self;
+        out.slot_map.clear();
+        out.slot_map.extend(0..t);
+        out.token_counts.clear();
 
-        cur.tokens.clear();
-        cur.tokens.extend_from_slice(tokens);
-        cur.sizes.clear();
-        cur.sizes.extend_from_slice(sizes);
-
-        composed.clear();
-        composed.extend(0..t);
-        let mut token_counts = Vec::with_capacity(rs.len() + 1);
-        let mut cur_t = t;
-        token_counts.push(cur_t);
-
-        for &r_l in rs {
-            kernel::merge_fixed_r_scratch(
-                &cur.tokens,
-                &cur.sizes,
-                cur_t,
-                d,
-                r_l,
-                k,
-                scratch,
-                next,
-            );
-            // Compose: original -> (slot in cur) -> (slot in next).
-            for slot in composed.iter_mut() {
-                *slot = next.slot_map[*slot];
+        match &view.spec.mode {
+            MergeMode::Off => {
+                out.tokens.clear();
+                out.tokens.extend_from_slice(tokens);
+                out.sizes.clear();
+                out.sizes.extend_from_slice(sizes);
+                out.token_counts.push(t);
             }
-            cur_t = next.sizes.len();
-            token_counts.push(cur_t);
-            std::mem::swap(cur, next);
-        }
-
-        PipelineResult {
-            tokens: cur.tokens.clone(),
-            sizes: cur.sizes.clone(),
-            slot_map: composed.clone(),
-            token_counts,
+            MergeMode::Dynamic { threshold } => {
+                let eff = kernel::merge_dynamic_scratch_accum(
+                    tokens,
+                    sizes,
+                    t,
+                    d,
+                    view.spec.k,
+                    *threshold,
+                    &mut self.scratch,
+                    &mut self.next,
+                    view.spec.accum,
+                );
+                for slot in out.slot_map.iter_mut() {
+                    *slot = self.next.slot_map[*slot];
+                }
+                out.tokens.clear();
+                out.tokens.extend_from_slice(&self.next.tokens);
+                out.sizes.clear();
+                out.sizes.extend_from_slice(&self.next.sizes);
+                out.token_counts.push(t);
+                out.token_counts.push(eff);
+            }
+            MergeMode::FixedR { .. } => {
+                out.token_counts.extend_from_slice(view.counts);
+                if view.rs.is_empty() {
+                    out.tokens.clear();
+                    out.tokens.extend_from_slice(tokens);
+                    out.sizes.clear();
+                    out.sizes.extend_from_slice(sizes);
+                    return;
+                }
+                let PlanSlot { scratch, cur, next } = self;
+                cur.tokens.clear();
+                cur.tokens.extend_from_slice(tokens);
+                cur.sizes.clear();
+                cur.sizes.extend_from_slice(sizes);
+                let mut cur_t = t;
+                for &r_l in view.rs {
+                    kernel::merge_fixed_r_scratch_accum(
+                        &cur.tokens,
+                        &cur.sizes,
+                        cur_t,
+                        d,
+                        r_l,
+                        view.spec.k,
+                        scratch,
+                        next,
+                        view.spec.accum,
+                    );
+                    // Compose: original -> (slot in cur) -> (slot in next).
+                    for slot in out.slot_map.iter_mut() {
+                        *slot = next.slot_map[*slot];
+                    }
+                    cur_t = next.sizes.len();
+                    std::mem::swap(cur, next);
+                }
+                debug_assert_eq!(cur_t, *view.counts.last().unwrap());
+                out.tokens.clear();
+                out.tokens.extend_from_slice(&cur.tokens);
+                out.sizes.clear();
+                out.sizes.extend_from_slice(&cur.sizes);
+            }
         }
     }
 }
 
-/// Batched multi-layer merge executor on the shared [`WorkerPool`]: one
-/// [`MergePipeline`] per slot, so scratch stays warm across calls and the
-/// chunks parallelize without allocation or thread spawns.
-pub struct BatchPipeline {
-    slots: Vec<MergePipeline>,
+/// A compiled, reusable merge executor — see [`MergeSpec::compile`] and
+/// the module docs for the lifecycle.
+pub struct MergePlan {
+    spec: MergeSpec,
+    t: usize,
+    d: usize,
+    /// token counts before layer 0 and after each fixed layer
+    counts: Vec<usize>,
+    /// per-layer r derived from `counts` (empty for Off/Dynamic)
+    rs: Vec<usize>,
+    slots: Vec<PlanSlot>,
 }
 
-impl BatchPipeline {
-    /// A batch pipeline with `slots` concurrent chunk slots (clamped to at
-    /// least 1).
-    pub fn new(slots: usize) -> BatchPipeline {
-        BatchPipeline { slots: (0..slots.max(1)).map(|_| MergePipeline::new()).collect() }
+impl MergePlan {
+    /// Called by [`MergeSpec::compile`] with an already-validated spec and
+    /// feasibility-checked counts.
+    pub(crate) fn new(spec: MergeSpec, t: usize, d: usize, counts: Vec<usize>) -> MergePlan {
+        let rs = match spec.mode {
+            MergeMode::FixedR { .. } => counts.windows(2).map(|w| w[0] - w[1]).collect(),
+            _ => Vec::new(),
+        };
+        MergePlan { spec, t, d, counts, rs, slots: vec![PlanSlot::default()] }
     }
 
-    /// Sized to the machine (`available_parallelism`).
-    pub fn with_default_parallelism() -> BatchPipeline {
-        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        BatchPipeline::new(n)
+    /// The spec this plan was compiled from.
+    pub fn spec(&self) -> &MergeSpec {
+        &self.spec
     }
 
+    /// Sequence length the plan is compiled for.
+    pub fn t(&self) -> usize {
+        self.t
+    }
+
+    /// Token dimensionality the plan is compiled for.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Token counts before layer 0 and after each fixed layer (length
+    /// `layers + 1`; just `[t]` for Off/Dynamic, whose realized count is
+    /// only known per run).
+    pub fn layer_counts(&self) -> &[usize] {
+        &self.counts
+    }
+
+    /// Final token count for Off/FixedR plans; for Dynamic plans this is
+    /// the upper bound `t` (the realized count is data-dependent).
+    pub fn out_tokens(&self) -> usize {
+        *self.counts.last().unwrap()
+    }
+
+    /// Number of scratch slots (the maximum batch-chunk parallelism).
     pub fn slots(&self) -> usize {
         self.slots.len()
     }
 
-    /// Run the explicit per-layer schedule `rs` over every sequence of a
-    /// `(b, t, d)` slab (row-major, sequence-contiguous; per-sequence
-    /// sizes `(b, t)`), writing one [`PipelineResult`] per sequence into
-    /// `outs` (resized to `b`).  Single-slot (or single-sequence) runs
-    /// stay inline on the caller.
-    #[allow(clippy::too_many_arguments)]
-    pub fn run_schedule_into(
+    /// Resize to `n` scratch slots (clamped to at least 1) for batched
+    /// execution; one chunk of the batch runs per slot.
+    pub fn with_slots(mut self, n: usize) -> MergePlan {
+        self.slots.resize_with(n.max(1), PlanSlot::default);
+        self
+    }
+
+    /// A plan sized to the machine (`available_parallelism` slots).
+    pub fn with_default_parallelism(self) -> MergePlan {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        self.with_slots(n)
+    }
+
+    /// Run over one `(t, d)` sequence, allocating the result.  Hot paths
+    /// should reuse a buffer via [`MergePlan::run_into`].
+    pub fn run(&mut self, tokens: &[f32], sizes: &[f32]) -> PipelineResult {
+        let mut out = PipelineResult::default();
+        self.run_into(tokens, sizes, &mut out);
+        out
+    }
+
+    /// Zero-allocation single-sequence run into a reusable `out`.
+    pub fn run_into(&mut self, tokens: &[f32], sizes: &[f32], out: &mut PipelineResult) {
+        assert_eq!(tokens.len(), self.t * self.d, "token slab shape mismatch");
+        assert_eq!(sizes.len(), self.t, "sizes shape mismatch");
+        let view = PlanView {
+            spec: &self.spec,
+            rs: self.rs.as_slice(),
+            counts: self.counts.as_slice(),
+            t: self.t,
+            d: self.d,
+        };
+        self.slots[0].run_into(&view, tokens, sizes, out);
+    }
+
+    /// Run over every sequence of a `(b, t, d)` slab (row-major,
+    /// sequence-contiguous; per-sequence sizes `(b, t)`), writing one
+    /// [`PipelineResult`] per sequence into `outs` (resized to `b`).
+    /// Contiguous chunks run as tasks on `pool`, one per slot; a
+    /// single-slot plan (or a single-sequence batch) runs inline on the
+    /// caller.
+    pub fn run_batch_into(
         &mut self,
         pool: &WorkerPool,
         tokens: &[f32],
         sizes: &[f32],
         b: usize,
-        t: usize,
-        d: usize,
-        k: usize,
-        rs: &[usize],
         outs: &mut Vec<PipelineResult>,
     ) {
-        assert_eq!(tokens.len(), b * t * d, "token slab shape mismatch");
-        assert_eq!(sizes.len(), b * t, "sizes slab shape mismatch");
+        assert_eq!(tokens.len(), b * self.t * self.d, "token slab shape mismatch");
+        assert_eq!(sizes.len(), b * self.t, "sizes slab shape mismatch");
         outs.resize_with(b, PipelineResult::default);
         if b == 0 {
             return;
         }
-        super::batch::run_chunked(pool, &mut self.slots, tokens, sizes, b, t, d, outs, |pipe, tok, sz, out| {
-            *out = pipe.run_schedule(tok, sz, t, d, k, rs);
+        let view = PlanView {
+            spec: &self.spec,
+            rs: self.rs.as_slice(),
+            counts: self.counts.as_slice(),
+            t: self.t,
+            d: self.d,
+        };
+        super::batch::run_chunked(
+            pool,
+            &mut self.slots,
+            tokens,
+            sizes,
+            b,
+            view.t,
+            view.d,
+            outs,
+            |slot, tok, sz, out| slot.run_into(&view, tok, sz, out),
+        );
+    }
+
+    /// The PR 1 `std::thread::scope` fan-out, kept verbatim as the bench
+    /// baseline (`benches/merging.rs` gates the pool path against it).
+    /// Spawns `slots()` fresh threads **per call** — do not use outside
+    /// benches.
+    pub fn run_batch_into_scoped(
+        &mut self,
+        tokens: &[f32],
+        sizes: &[f32],
+        b: usize,
+        outs: &mut Vec<PipelineResult>,
+    ) {
+        assert_eq!(tokens.len(), b * self.t * self.d, "token slab shape mismatch");
+        assert_eq!(sizes.len(), b * self.t, "sizes slab shape mismatch");
+        outs.resize_with(b, PipelineResult::default);
+        if b == 0 {
+            return;
+        }
+        let view = PlanView {
+            spec: &self.spec,
+            rs: self.rs.as_slice(),
+            counts: self.counts.as_slice(),
+            t: self.t,
+            d: self.d,
+        };
+        let (t, d) = (view.t, view.d);
+        let slots = &mut self.slots;
+        let n_slots = slots.len();
+        let chunk = (b + n_slots - 1) / n_slots;
+        if n_slots == 1 || b == 1 {
+            let slot = &mut slots[0];
+            for (i, out) in outs.iter_mut().enumerate() {
+                let tok = &tokens[i * t * d..(i + 1) * t * d];
+                slot.run_into(&view, tok, &sizes[i * t..(i + 1) * t], out);
+            }
+            return;
+        }
+        let view = &view;
+        std::thread::scope(|scope| {
+            let mut slot_iter = slots.iter_mut();
+            for (out_chunk, (tok_chunk, size_chunk)) in outs
+                .chunks_mut(chunk)
+                .zip(tokens.chunks(chunk * t * d).zip(sizes.chunks(chunk * t)))
+            {
+                let slot = slot_iter.next().expect("one slot per chunk");
+                scope.spawn(move || {
+                    for (i, out) in out_chunk.iter_mut().enumerate() {
+                        slot.run_into(
+                            view,
+                            &tok_chunk[i * t * d..(i + 1) * t * d],
+                            &size_chunk[i * t..(i + 1) * t],
+                            out,
+                        );
+                    }
+                });
+            }
         });
     }
 }
@@ -193,7 +358,8 @@ impl BatchPipeline {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::merging::{merge_fixed_r, merge_schedule, unmerge};
+    use crate::merging::reference::merge_fixed_r_reference;
+    use crate::merging::{merge_schedule, MergeSpec};
     use crate::util::Rng;
 
     fn rand_tokens(rng: &mut Rng, t: usize, d: usize) -> Vec<f32> {
@@ -201,14 +367,14 @@ mod tests {
     }
 
     #[test]
-    fn pipeline_matches_sequential_single_shots() {
+    fn plan_matches_sequential_single_shots() {
         let mut rng = Rng::new(31);
         let (t, d, k, r, layers, q) = (48usize, 6usize, 3usize, 8usize, 4usize, 4usize);
         let tokens = rand_tokens(&mut rng, t, d);
         let sizes: Vec<f32> = (0..t).map(|_| 1.0 + rng.below(2) as f32).collect();
 
-        let mut pipe = MergePipeline::new();
-        let res = pipe.run(&tokens, &sizes, t, d, k, r, layers, q);
+        let mut plan = MergeSpec::layered_for(t, r, layers, q, k).compile(t, d).unwrap();
+        let res = plan.run(&tokens, &sizes);
 
         // sequential reference composition
         let counts = merge_schedule(t, r, layers, q);
@@ -218,7 +384,10 @@ mod tests {
         let mut composed: Vec<usize> = (0..t).collect();
         for w in counts.windows(2) {
             let step = w[0] - w[1];
-            let m = merge_fixed_r(&cur_tokens, &cur_sizes, cur_t, d, step, k);
+            if step == 0 {
+                continue;
+            }
+            let m = merge_fixed_r_reference(&cur_tokens, &cur_sizes, cur_t, d, step, k);
             for slot in composed.iter_mut() {
                 *slot = m.slot_map[*slot];
             }
@@ -226,10 +395,12 @@ mod tests {
             cur_sizes = m.sizes;
             cur_t = w[1];
         }
-        assert_eq!(res.token_counts, counts);
+        assert_eq!(*res.token_counts.last().unwrap(), *counts.last().unwrap());
         assert_eq!(res.slot_map, composed);
-        assert_eq!(res.tokens, cur_tokens);
-        assert_eq!(res.sizes, cur_sizes);
+        for (a, b) in res.tokens.iter().zip(&cur_tokens) {
+            assert!((a - b).abs() <= 1e-5);
+        }
+        assert_eq!(res.sizes.len(), cur_sizes.len());
     }
 
     #[test]
@@ -246,7 +417,7 @@ mod tests {
         let mut cur_t = t;
         let mut maps = Vec::new();
         for &r_l in &rs {
-            let m = merge_fixed_r(&cur_tokens, &cur_sizes, cur_t, d, r_l, k);
+            let m = merge_fixed_r_reference(&cur_tokens, &cur_sizes, cur_t, d, r_l, k);
             cur_t -= r_l;
             maps.push(m.slot_map.clone());
             cur_tokens = m.tokens;
@@ -257,49 +428,48 @@ mod tests {
             up = unmerge(&up, d, map);
         }
 
-        let mut pipe = MergePipeline::new();
-        let res = pipe.run_schedule(&tokens, &sizes, t, d, k, &rs);
+        let mut plan = MergeSpec::fixed_r(rs.to_vec(), k).compile(t, d).unwrap();
+        let res = plan.run(&tokens, &sizes);
         assert_eq!(res.unmerge(d), up);
     }
 
     #[test]
-    fn pipeline_reuse_across_inputs() {
+    fn plan_reuse_across_inputs_is_stateless() {
         let mut rng = Rng::new(33);
-        let mut pipe = MergePipeline::new();
-        for &(t, d) in &[(30usize, 4usize), (17, 3), (64, 8)] {
+        let (t, d) = (30usize, 4usize);
+        let spec = MergeSpec::fixed_r(vec![5, 5, 4], 2);
+        let mut plan = spec.compile(t, d).unwrap();
+        let mut out = PipelineResult::default();
+        for _ in 0..3 {
             let tokens = rand_tokens(&mut rng, t, d);
             let sizes = vec![1.0f32; t];
-            let res = pipe.run(&tokens, &sizes, t, d, 2, 5, 3, 4);
-            let mut fresh = MergePipeline::new();
-            let res2 = fresh.run(&tokens, &sizes, t, d, 2, 5, 3, 4);
-            assert_eq!(res.tokens, res2.tokens, "t={t} d={d}");
-            assert_eq!(res.slot_map, res2.slot_map);
-            assert_eq!(res.token_counts, res2.token_counts);
+            plan.run_into(&tokens, &sizes, &mut out);
+            let fresh = spec.compile(t, d).unwrap().run(&tokens, &sizes);
+            assert_eq!(out.tokens, fresh.tokens);
+            assert_eq!(out.slot_map, fresh.slot_map);
+            assert_eq!(out.token_counts, fresh.token_counts);
         }
     }
 
     #[test]
-    fn batch_pipeline_matches_per_sequence_runs() {
+    fn batch_plan_matches_per_sequence_runs() {
         let mut rng = Rng::new(35);
         let pool = WorkerPool::new(3);
         let (b, t, d, k) = (6usize, 36usize, 4usize, 3usize);
-        let rs = [8usize, 6, 4];
+        let spec = MergeSpec::fixed_r(vec![8, 6, 4], k);
         let tokens = rand_tokens(&mut rng, b * t, d);
         let sizes: Vec<f32> = (0..b * t).map(|_| 1.0 + rng.below(2) as f32).collect();
         for slots in [1usize, 2, 5] {
-            let mut bp = BatchPipeline::new(slots);
+            let mut plan = spec.compile(t, d).unwrap().with_slots(slots);
+            assert_eq!(plan.slots(), slots);
             let mut outs = Vec::new();
-            bp.run_schedule_into(&pool, &tokens, &sizes, b, t, d, k, &rs, &mut outs);
+            plan.run_batch_into(&pool, &tokens, &sizes, b, &mut outs);
             assert_eq!(outs.len(), b);
-            let mut single = MergePipeline::new();
+            let mut single = spec.compile(t, d).unwrap();
             for i in 0..b {
-                let want = single.run_schedule(
+                let want = single.run(
                     &tokens[i * t * d..(i + 1) * t * d],
                     &sizes[i * t..(i + 1) * t],
-                    t,
-                    d,
-                    k,
-                    &rs,
                 );
                 assert_eq!(outs[i].tokens, want.tokens, "slots={slots} seq={i}");
                 assert_eq!(outs[i].slot_map, want.slot_map);
@@ -309,13 +479,75 @@ mod tests {
     }
 
     #[test]
+    fn pool_path_equals_scoped_baseline() {
+        let mut rng = Rng::new(36);
+        let pool = WorkerPool::new(4);
+        let (b, t, d) = (9usize, 26usize, 4usize);
+        let tokens = rand_tokens(&mut rng, b * t, d);
+        let sizes = vec![1.0f32; b * t];
+        let mut plan = MergeSpec::single(6, 5).compile(t, d).unwrap().with_slots(4);
+        let (mut on_pool, mut scoped) = (Vec::new(), Vec::new());
+        plan.run_batch_into(&pool, &tokens, &sizes, b, &mut on_pool);
+        plan.run_batch_into_scoped(&tokens, &sizes, b, &mut scoped);
+        for i in 0..b {
+            assert_eq!(on_pool[i].slot_map, scoped[i].slot_map, "seq {i}");
+            assert_eq!(on_pool[i].tokens, scoped[i].tokens);
+            assert_eq!(on_pool[i].sizes, scoped[i].sizes);
+        }
+    }
+
+    #[test]
+    fn off_and_identity_plans_pass_through() {
+        let mut rng = Rng::new(37);
+        let (t, d) = (17usize, 3usize);
+        let tokens = rand_tokens(&mut rng, t, d);
+        let sizes: Vec<f32> = (0..t).map(|_| 1.0 + rng.below(2) as f32).collect();
+        for spec in [MergeSpec::off(), MergeSpec::fixed_r(Vec::new(), 4)] {
+            let mut plan = spec.compile(t, d).unwrap();
+            let res = plan.run(&tokens, &sizes);
+            assert_eq!(res.tokens, tokens);
+            assert_eq!(res.sizes, sizes);
+            assert_eq!(res.slot_map, (0..t).collect::<Vec<_>>());
+            assert_eq!(*res.token_counts.last().unwrap(), t);
+        }
+    }
+
+    #[test]
+    fn dynamic_plan_reports_realized_count() {
+        let mut rng = Rng::new(38);
+        let (t, d) = (16usize, 4usize);
+        let tokens = rand_tokens(&mut rng, t, d);
+        let sizes = vec![1.0f32; t];
+        // threshold above any cosine: nothing merges
+        let mut plan = MergeSpec::dynamic(1.1, 1).compile(t, d).unwrap();
+        let res = plan.run(&tokens, &sizes);
+        assert_eq!(res.token_counts, vec![t, t]);
+        assert_eq!(res.tokens, tokens);
+        // threshold 0 on identical tokens: every pair merges
+        let constant: Vec<f32> = (0..t * d).map(|i| ((i % d) + 1) as f32).collect();
+        let mut plan = MergeSpec::dynamic(0.0, 1).compile(t, d).unwrap();
+        let res = plan.run(&constant, &sizes);
+        assert_eq!(*res.token_counts.last().unwrap(), t - t / 2);
+        assert_eq!(res.sizes.len(), t - t / 2);
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let pool = WorkerPool::new(2);
+        let mut plan = MergeSpec::single(2, 1).compile(8, 4).unwrap().with_slots(4);
+        let mut outs = vec![PipelineResult::default(); 3];
+        plan.run_batch_into(&pool, &[], &[], 0, &mut outs);
+        assert!(outs.is_empty());
+    }
+
+    #[test]
     fn schedule_floor_limits_depth() {
         let mut rng = Rng::new(34);
         let (t, d) = (20usize, 3usize);
         let tokens = rand_tokens(&mut rng, t, d);
         let sizes = vec![1.0f32; t];
-        let mut pipe = MergePipeline::new();
-        let res = pipe.run(&tokens, &sizes, t, d, 1, 100, 6, 4);
+        let mut plan = MergeSpec::layered_for(t, 100, 6, 4, 1).compile(t, d).unwrap();
+        let res = plan.run(&tokens, &sizes);
         assert_eq!(*res.token_counts.last().unwrap(), 4);
         assert_eq!(res.sizes.len(), 4);
         assert_eq!(res.tokens.len(), 4 * d);

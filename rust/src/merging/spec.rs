@@ -1,0 +1,351 @@
+//! [`MergeSpec`]: the one typed description of a merge configuration.
+//!
+//! The paper defines a single family of algorithms — local bipartite
+//! merging with a neighborhood `k`, a per-layer `r` schedule, a
+//! dynamic-threshold variant (§5.5) and a causal restriction — and this
+//! type is its value-object form.  A spec is **validated once**
+//! ([`MergeSpec::validate`]) and **compiled** against a concrete shape
+//! ([`MergeSpec::compile`]) into a reusable [`MergePlan`], which owns the
+//! precomputed per-layer token counts and the scratch state and is the
+//! only execution entry point (`MergePlan::run*` in
+//! [`super::pipeline`]).
+//!
+//! Lifecycle (DESIGN.md §2):
+//!
+//! ```text
+//! MergeSpec { mode, k, accum, causal }      declarative, serializable
+//!     │  validate()                          k >= 1, causal => k == 1,
+//!     │                                      schedule entries >= 1,
+//!     │                                      threshold finite and >= 0
+//!     ▼  compile(t, d)                       schedule feasible at every
+//! MergePlan { counts, slots[scratch] }       layer, final count >= 1
+//!     │  run / run_into / run_batch_into     zero allocations when warm
+//!     ▼
+//! PipelineResult { tokens, sizes, slot_map, token_counts }
+//! ```
+//!
+//! Errors that previously surfaced as kernel asserts (or silent nonsense:
+//! an infeasible `r` silently clamped, `k = 0` silently bumped to 1, a
+//! NaN threshold merging nothing) are rejected here with messages naming
+//! the offending field.
+
+use anyhow::{bail, ensure, Result};
+
+use super::analytic::{merge_schedule, similarity_complexity};
+use super::kernel::Accum;
+use super::pipeline::MergePlan;
+
+/// What to merge: nothing, a fixed per-layer schedule, or every pair over
+/// a similarity threshold (paper §5.5).
+#[derive(Clone, Debug, PartialEq)]
+pub enum MergeMode {
+    /// No merging.  Compiled plans are exact passthroughs; the serving
+    /// layer reads `Off` as "host premerge disabled".
+    Off,
+    /// Merge exactly `schedule[l]` token pairs at layer `l` (paper §3).
+    /// An empty schedule is a valid identity — the serving config uses it
+    /// as the "enabled, derive the depth per shape" template (see
+    /// [`MergeSpec::premerge_to`]).
+    FixedR { schedule: Vec<usize> },
+    /// One layer of dynamic merging: merge every banded pair whose cosine
+    /// similarity exceeds `threshold` (paper §5.5).  The output length is
+    /// data-dependent; [`super::PipelineResult::token_counts`] reports it.
+    Dynamic { threshold: f64 },
+}
+
+/// A validated-once, run-many description of a merge configuration.
+///
+/// Construct with [`MergeSpec::off`] / [`MergeSpec::single`] /
+/// [`MergeSpec::fixed_r`] / [`MergeSpec::layered_for`] /
+/// [`MergeSpec::dynamic`], refine with the `with_*` builders, then
+/// [`MergeSpec::compile`] against a `(t, d)` shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MergeSpec {
+    /// merge mode (fixed schedule / dynamic threshold / off)
+    pub mode: MergeMode,
+    /// locality constraint of the bipartite matching (paper eq. 1):
+    /// candidates within `|i - j| < k`; must be >= 1
+    pub k: usize,
+    /// accumulation precision of the banded dot (see [`Accum`])
+    pub accum: Accum,
+    /// causal restriction: only adjacent-pair merges are allowed, so
+    /// information never moves backward in time — requires `k == 1`
+    pub causal: bool,
+}
+
+impl MergeSpec {
+    /// Default locality constraint used by the serving layer when a config
+    /// names only `r` (matches the paper's serving experiments).
+    pub const DEFAULT_K: usize = 8;
+
+    /// No merging (`k` is irrelevant but kept valid).
+    pub fn off() -> MergeSpec {
+        MergeSpec { mode: MergeMode::Off, k: 1, accum: Accum::F64, causal: false }
+    }
+
+    /// One merge step of `r` pairs with locality `k`.
+    pub fn single(r: usize, k: usize) -> MergeSpec {
+        MergeSpec::fixed_r(vec![r], k)
+    }
+
+    /// A fixed per-layer schedule with locality `k`.
+    pub fn fixed_r(schedule: Vec<usize>, k: usize) -> MergeSpec {
+        MergeSpec { mode: MergeMode::FixedR { schedule }, k, accum: Accum::F64, causal: false }
+    }
+
+    /// The paper's static rule (`merge_schedule`): up to `r` pairs per
+    /// layer for `layers` layers, never dropping below `floor` tokens —
+    /// resolved against the input length `t` it will run at.
+    pub fn layered_for(t: usize, r: usize, layers: usize, floor: usize, k: usize) -> MergeSpec {
+        let counts = merge_schedule(t, r, layers, floor);
+        let schedule = counts.windows(2).map(|w| w[0] - w[1]).filter(|&r_l| r_l > 0).collect();
+        MergeSpec::fixed_r(schedule, k)
+    }
+
+    /// One layer of dynamic-threshold merging (§5.5).
+    pub fn dynamic(threshold: f64, k: usize) -> MergeSpec {
+        MergeSpec { mode: MergeMode::Dynamic { threshold }, k, accum: Accum::F64, causal: false }
+    }
+
+    /// Select the accumulation precision of the banded dot.
+    pub fn with_accum(mut self, accum: Accum) -> MergeSpec {
+        self.accum = accum;
+        self
+    }
+
+    /// Mark the spec causal (validation then requires `k == 1`).
+    pub fn with_causal(mut self) -> MergeSpec {
+        self.causal = true;
+        self
+    }
+
+    /// True when the spec performs no merging at all.
+    pub fn is_off(&self) -> bool {
+        matches!(self.mode, MergeMode::Off)
+    }
+
+    /// Total merged pairs over all layers (0 for `Off`; the *maximum*
+    /// for `Dynamic`, which is data-dependent, is unknown — returns 0).
+    pub fn total_r(&self) -> usize {
+        match &self.mode {
+            MergeMode::FixedR { schedule } => schedule.iter().sum(),
+            _ => 0,
+        }
+    }
+
+    /// Number of merge layers this spec executes.
+    pub fn layers(&self) -> usize {
+        match &self.mode {
+            MergeMode::Off => 0,
+            MergeMode::FixedR { schedule } => schedule.len(),
+            MergeMode::Dynamic { .. } => 1,
+        }
+    }
+
+    /// Eq. 2 similarity-computation cost of one merge step at length `t`
+    /// under this spec's locality constraint.
+    pub fn similarity_cost(&self, t: usize) -> usize {
+        similarity_complexity(t, self.k)
+    }
+
+    /// Shape-independent validation; [`MergeSpec::compile`] calls this
+    /// and additionally checks the schedule against the concrete shape.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.k >= 1, "merge spec: locality k must be >= 1, got 0");
+        if self.causal {
+            ensure!(
+                self.k == 1,
+                "merge spec: causal merging requires k == 1 (adjacent pairs only), got k = {}",
+                self.k
+            );
+        }
+        match &self.mode {
+            MergeMode::Off => {}
+            MergeMode::FixedR { schedule } => {
+                for (l, &r_l) in schedule.iter().enumerate() {
+                    ensure!(
+                        r_l >= 1,
+                        "merge spec: schedule[{l}] is 0 — drop the layer (or use mode Off)"
+                    );
+                }
+            }
+            MergeMode::Dynamic { threshold } => {
+                ensure!(
+                    !threshold.is_nan(),
+                    "merge spec: dynamic threshold is NaN"
+                );
+                ensure!(
+                    *threshold >= 0.0,
+                    "merge spec: dynamic threshold must be >= 0 (cosine similarity), got {threshold}"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Derive the concrete premerge spec that takes a `len`-token context
+    /// down to exactly `target` tokens, keeping this spec's `k`, `accum`
+    /// and `causal` and **replacing the schedule** (each layer can merge
+    /// at most half of the even prefix, so deep compression takes several
+    /// layers) — `self` is the fixed-mode template, usually with an empty
+    /// schedule.  A dynamic spec is rejected rather than silently
+    /// converted: its data-dependent output cannot land on an exact
+    /// target.  Replaces the old free-standing `premerge_schedule` +
+    /// loose-tuple plumbing.
+    pub fn premerge_to(&self, len: usize, target: usize) -> Result<MergeSpec> {
+        ensure!(!self.is_off(), "premerge requested but the merge spec is Off");
+        ensure!(
+            !matches!(self.mode, MergeMode::Dynamic { .. }),
+            "premerge must land on an exact token target, which a dynamic-threshold \
+             spec cannot guarantee — use a fixed-mode template"
+        );
+        ensure!(target >= 1, "premerge target must be >= 1");
+        ensure!(
+            len >= target,
+            "context length {len} is shorter than the premerge target {target}"
+        );
+        let mut schedule = Vec::new();
+        let mut cur = len;
+        while cur > target {
+            let feasible = (cur - cur % 2) / 2;
+            let r = feasible.min(cur - target);
+            if r == 0 {
+                bail!("cannot premerge {len} -> {target}: stalled at {cur} tokens");
+            }
+            schedule.push(r);
+            cur -= r;
+        }
+        Ok(MergeSpec {
+            mode: MergeMode::FixedR { schedule },
+            k: self.k,
+            accum: self.accum,
+            causal: self.causal,
+        })
+    }
+
+    /// Compile against a concrete `(t, d)` shape: validates the spec,
+    /// checks every schedule layer is feasible (`r_l` no larger than half
+    /// the even prefix at that layer — this is where `r >= t` and
+    /// schedule/shape mismatches are rejected instead of silently
+    /// clamped), precomputes the per-layer token counts and allocates one
+    /// scratch slot.  Add slots for batched execution with
+    /// [`MergePlan::with_slots`].
+    pub fn compile(&self, t: usize, d: usize) -> Result<MergePlan> {
+        self.validate()?;
+        ensure!(t >= 1, "merge plan: t must be >= 1");
+        ensure!(d >= 1, "merge plan: d must be >= 1");
+        let counts = match &self.mode {
+            MergeMode::Off | MergeMode::Dynamic { .. } => vec![t],
+            MergeMode::FixedR { schedule } => {
+                let mut counts = Vec::with_capacity(schedule.len() + 1);
+                let mut cur = t;
+                counts.push(cur);
+                for (l, &r_l) in schedule.iter().enumerate() {
+                    let feasible = (cur - cur % 2) / 2;
+                    ensure!(
+                        r_l <= feasible,
+                        "merge plan: schedule[{l}] = {r_l} infeasible at {cur} tokens \
+                         (at most {feasible} pairs can merge; input t = {t})"
+                    );
+                    cur -= r_l;
+                    counts.push(cur);
+                }
+                counts
+            }
+        };
+        Ok(MergePlan::new(self.clone(), t, d, counts))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_accepts_the_paper_family() {
+        assert!(MergeSpec::off().validate().is_ok());
+        assert!(MergeSpec::single(16, 8).validate().is_ok());
+        assert!(MergeSpec::fixed_r(vec![8, 4, 2], 1).with_causal().validate().is_ok());
+        assert!(MergeSpec::dynamic(0.85, 16).validate().is_ok());
+        // threshold above 1 = "never merge": legal, useful for sweeps
+        assert!(MergeSpec::dynamic(1.1, 2).validate().is_ok());
+        // empty schedule is the serving template (identity until derived)
+        assert!(MergeSpec::fixed_r(Vec::new(), 8).validate().is_ok());
+    }
+
+    #[test]
+    fn layered_for_matches_static_rule() {
+        let spec = MergeSpec::layered_for(96, 16, 4, 4, 8);
+        match &spec.mode {
+            MergeMode::FixedR { schedule } => assert_eq!(schedule, &vec![16, 16, 16, 16]),
+            m => panic!("unexpected mode {m:?}"),
+        }
+        assert_eq!(spec.total_r(), 64);
+        // floor-limited tail layers drop out instead of appearing as 0
+        let spec = MergeSpec::layered_for(10, 100, 4, 4, 8);
+        assert_eq!(spec.total_r(), 6);
+        assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn premerge_to_reaches_target() {
+        let tmpl = MergeSpec::fixed_r(Vec::new(), 8);
+        let get = |len: usize, target: usize| -> Vec<usize> {
+            match tmpl.premerge_to(len, target).unwrap().mode {
+                MergeMode::FixedR { schedule } => schedule,
+                m => panic!("unexpected mode {m:?}"),
+            }
+        };
+        assert_eq!(get(768, 512), vec![256]);
+        assert_eq!(get(2048, 512), vec![1024, 512]);
+        assert_eq!(get(512, 512), Vec::<usize>::new());
+        // odd lengths: feasible merges bounded by the even prefix
+        let rs = get(1001, 100);
+        let mut cur = 1001usize;
+        for &r in &rs {
+            assert!(r <= (cur - cur % 2) / 2);
+            cur -= r;
+        }
+        assert_eq!(cur, 100);
+        // derived specs keep k/accum/causal and always compile
+        let causal = MergeSpec::fixed_r(Vec::new(), 1).with_causal();
+        let derived = causal.premerge_to(96, 24).unwrap();
+        assert!(derived.causal && derived.k == 1);
+        assert!(derived.compile(96, 1).is_ok());
+    }
+
+    #[test]
+    fn premerge_to_rejects_bad_requests() {
+        let tmpl = MergeSpec::fixed_r(Vec::new(), 8);
+        assert!(MergeSpec::off().premerge_to(100, 10).is_err());
+        assert!(tmpl.premerge_to(100, 0).is_err());
+        assert!(tmpl.premerge_to(10, 100).is_err());
+        // a dynamic spec cannot promise an exact target — rejected, never
+        // silently converted to fixed
+        assert!(MergeSpec::dynamic(0.9, 8).premerge_to(100, 10).is_err());
+    }
+
+    #[test]
+    fn compile_precomputes_layer_counts() {
+        let plan = MergeSpec::fixed_r(vec![16, 16, 8], 4).compile(96, 8).unwrap();
+        assert_eq!(plan.layer_counts(), &[96, 80, 64, 56]);
+        assert_eq!(plan.out_tokens(), 56);
+        let plan = MergeSpec::off().compile(40, 2).unwrap();
+        assert_eq!(plan.layer_counts(), &[40]);
+        let plan = MergeSpec::dynamic(0.9, 2).compile(40, 2).unwrap();
+        assert_eq!(plan.layer_counts(), &[40]);
+    }
+
+    #[test]
+    fn compile_rejects_infeasible_schedules() {
+        // r >= t (one layer cannot merge more than half the even prefix)
+        assert!(MergeSpec::single(32, 4).compile(32, 4).is_err());
+        assert!(MergeSpec::single(17, 4).compile(32, 4).is_err());
+        assert!(MergeSpec::single(16, 4).compile(32, 4).is_ok());
+        // feasible per layer but the tail layer overruns
+        assert!(MergeSpec::fixed_r(vec![16, 8, 8], 4).compile(32, 4).is_err());
+        // zero-size shapes
+        assert!(MergeSpec::off().compile(0, 4).is_err());
+        assert!(MergeSpec::off().compile(4, 0).is_err());
+    }
+}

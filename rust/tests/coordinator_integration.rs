@@ -3,7 +3,7 @@
 //! Skipped (with a message) when artifacts are missing.
 
 #![allow(unknown_lints)]
-#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
 use std::path::PathBuf;
 use std::time::Duration;
 
@@ -18,8 +18,8 @@ fn artifact_dir() -> Option<PathBuf> {
 
 fn server(dir: PathBuf) -> coordinator::ServerHandle {
     let variants = vec![
-        Variant { name: "chronos_s__r0".into(), r: 0 },
-        Variant { name: "chronos_s__r128".into(), r: 128 },
+        Variant::fixed("chronos_s__r0", 0),
+        Variant::fixed("chronos_s__r128", 128),
     ];
     coordinator::server::serve(ServerConfig {
         artifact_dir: dir,
@@ -27,7 +27,7 @@ fn server(dir: PathBuf) -> coordinator::ServerHandle {
         max_wait: Duration::from_millis(10),
         max_queue: 256,
         merge_workers: 0,
-        host_merge: tomers::coordinator::HostMergeConfig::default(),
+        merge: tomers::coordinator::default_host_merge(),
     })
     .expect("server start")
 }

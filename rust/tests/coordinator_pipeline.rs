@@ -1,20 +1,19 @@
 //! Integration tests for the staged serving pipeline core — PJRT-free:
 //! the execute stage is a closure, so prep (padding + pool-backed
-//! premerge), double-buffered slab recycling, response plumbing and error
-//! isolation are all testable in the default offline build.
+//! premerge driven by the serving `MergeSpec`), double-buffered slab
+//! recycling, response plumbing and error isolation are all testable in
+//! the default offline build.
 
 #![allow(unknown_lints)]
-#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
 use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use tomers::coordinator::pipeline::{
-    premerge_schedule, HostPrep, Pending, PrepJob, VariantMeta,
-};
-use tomers::coordinator::{pipeline, ForecastRequest, HostMergeConfig, Metrics};
-use tomers::merging::MergePipeline;
+use tomers::coordinator::pipeline::{default_host_merge, HostPrep, Pending, PrepJob, VariantMeta};
+use tomers::coordinator::{pipeline, ForecastRequest, Metrics};
+use tomers::merging::MergeSpec;
 use tomers::runtime::WorkerPool;
 use tomers::util::Rng;
 
@@ -30,7 +29,7 @@ fn meta(capacity: usize, m: usize) -> VariantMeta {
 #[test]
 fn prep_pads_exact_length_contexts() {
     let pool = WorkerPool::global();
-    let mut hp = HostPrep::new(2, HostMergeConfig::default());
+    let mut hp = HostPrep::new(2, default_host_merge());
     let meta = meta(4, 16);
     let mut rng = Rng::new(41);
     let mut batch = Vec::new();
@@ -56,7 +55,8 @@ fn prep_pads_exact_length_contexts() {
 fn prep_premerges_long_contexts_to_reference_semantics() {
     let pool = WorkerPool::global();
     let k = 4;
-    let mut hp = HostPrep::new(3, HostMergeConfig { enabled: true, k });
+    let spec = MergeSpec::fixed_r(Vec::new(), k);
+    let mut hp = HostPrep::new(3, spec.clone());
     let (len, m) = (96usize, 24usize);
     let meta = meta(3, m);
     let mut rng = Rng::new(42);
@@ -72,12 +72,11 @@ fn prep_premerges_long_contexts_to_reference_semantics() {
     let premerged = hp.prep_into(pool, &batch, &meta, &mut slab).expect("prep");
     assert_eq!(premerged, 3);
     assert_eq!(slab.len(), 3 * m);
-    // each row must equal the single-sequence MergePipeline result (which
-    // the differential suite ties to merging::reference)
-    let rs = premerge_schedule(len, m);
-    let mut pipe = MergePipeline::new();
+    // each row must equal the single-sequence plan of the derived premerge
+    // spec (which the differential suite ties to merging::reference)
+    let mut plan = spec.premerge_to(len, m).unwrap().compile(len, 1).unwrap();
     for (i, ctx) in ctxs.iter().enumerate() {
-        let want = pipe.run_schedule(ctx, &vec![1.0; len], len, 1, k, &rs);
+        let want = plan.run(ctx, &vec![1.0; len]);
         assert_eq!(want.sizes.len(), m);
         assert_eq!(&slab[i * m..(i + 1) * m], want.tokens.as_slice(), "row {i}");
     }
@@ -89,11 +88,12 @@ fn prep_rejects_ragged_and_overlong_when_disabled() {
     let meta = meta(4, 16);
     let mut slab = Vec::new();
 
-    let mut hp = HostPrep::new(1, HostMergeConfig { enabled: false, k: 4 });
+    // MergeSpec::off disables premerging: over-length contexts bounce
+    let mut hp = HostPrep::new(1, MergeSpec::off());
     let (a, _ra) = request(0, vec![0.5; 32]);
     assert!(hp.prep_into(pool, &[a], &meta, &mut slab).is_err(), "premerge disabled");
 
-    let mut hp = HostPrep::new(1, HostMergeConfig::default());
+    let mut hp = HostPrep::new(1, default_host_merge());
     let (a, _ra) = request(0, vec![0.5; 16]);
     let (b, _rb) = request(1, vec![0.5; 18]);
     assert!(hp.prep_into(pool, &[a, b], &meta, &mut slab).is_err(), "ragged batch");
@@ -143,7 +143,7 @@ fn staged_pipeline_serves_and_isolates_failures() {
     pipeline::run_stages(
         jobs_rx,
         metas,
-        HostMergeConfig { enabled: true, k: 3 },
+        MergeSpec::fixed_r(Vec::new(), 3),
         1,
         pool,
         Arc::clone(&metrics),
@@ -181,4 +181,31 @@ fn staged_pipeline_serves_and_isolates_failures() {
     assert_eq!(executed.lock().unwrap().len(), 5, "all known-variant batches reached the device");
     let m = metrics.lock().unwrap();
     assert_eq!(m.served(), 4 * capacity);
+}
+
+/// An invalid serving spec fails `run_stages` up front instead of
+/// surfacing as a kernel assert deep in the prep thread — and a spec
+/// whose schedule/threshold the prep stage would silently discard is
+/// rejected the same way.
+#[test]
+fn run_stages_rejects_invalid_spec() {
+    let pool = WorkerPool::global();
+    for (bad, needle) in [
+        (MergeSpec { k: 0, ..MergeSpec::off() }, "k must be >= 1"),
+        (MergeSpec::single(16, 4), "derived per request shape"),
+        (MergeSpec::dynamic(0.9, 4), "derived per request shape"),
+    ] {
+        let (_jobs_tx, jobs_rx) = mpsc::sync_channel::<PrepJob>(1);
+        let err = pipeline::run_stages(
+            jobs_rx,
+            BTreeMap::new(),
+            bad,
+            1,
+            pool,
+            Arc::new(Mutex::new(Metrics::new())),
+            |_ready| Ok(Vec::new()),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains(needle), "{err}");
+    }
 }

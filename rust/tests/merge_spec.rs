@@ -1,0 +1,109 @@
+//! The `MergeSpec` rejection table: every class of invalid configuration
+//! must fail loudly at `validate()`/`compile()` time with an error naming
+//! the offending field — these used to surface as kernel asserts deep in
+//! a worker thread, or worse, as silently-clamped nonsense.  Plus the
+//! validate-once/run-many lifecycle invariants the serving stack relies
+//! on.
+
+#![allow(unknown_lints)]
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
+use tomers::merging::{MergeMode, MergeSpec};
+
+/// The table itself: (broken spec, substring its error must contain).
+#[test]
+fn rejection_table() {
+    let cases: Vec<(MergeSpec, &str)> = vec![
+        // k == 0 in every mode
+        (MergeSpec { k: 0, ..MergeSpec::off() }, "k must be >= 1"),
+        (MergeSpec::single(4, 0), "k must be >= 1"),
+        (MergeSpec::dynamic(0.5, 0), "k must be >= 1"),
+        // causal requires adjacent-pair matching
+        (MergeSpec::single(4, 2).with_causal(), "causal merging requires k == 1"),
+        (MergeSpec::dynamic(0.5, 8).with_causal(), "causal merging requires k == 1"),
+        // schedule entries of zero (a "non-decreasing" token schedule)
+        (MergeSpec::fixed_r(vec![4, 0, 2], 2), "schedule[1]"),
+        (MergeSpec::fixed_r(vec![0], 2), "schedule[0]"),
+        // NaN / negative dynamic thresholds
+        (MergeSpec::dynamic(f64::NAN, 2), "threshold is NaN"),
+        (MergeSpec::dynamic(-0.25, 2), "threshold must be >= 0"),
+    ];
+    for (i, (spec, needle)) in cases.iter().enumerate() {
+        let err = spec.validate().expect_err(&format!("case {i} must fail: {spec:?}"));
+        assert!(
+            err.to_string().contains(needle),
+            "case {i}: error {err:?} does not mention {needle:?}"
+        );
+        // compile re-runs validation, so the same spec can't sneak into a plan
+        assert!(spec.compile(64, 4).is_err(), "case {i} compiled");
+    }
+}
+
+/// Shape-level rejections: feasibility of the schedule against `(t, d)`.
+#[test]
+fn compile_rejection_table() {
+    let cases: Vec<(MergeSpec, usize, usize, &str)> = vec![
+        // r >= t: a single layer can merge at most half the even prefix
+        (MergeSpec::single(32, 4), 32, 4, "infeasible"),
+        (MergeSpec::single(40, 4), 32, 4, "infeasible"),
+        (MergeSpec::single(17, 4), 32, 4, "infeasible"),
+        // cumulative overrun in a deep schedule
+        (MergeSpec::fixed_r(vec![16, 8, 8], 4), 32, 4, "schedule[2]"),
+        // degenerate shapes
+        (MergeSpec::off(), 0, 4, "t must be >= 1"),
+        (MergeSpec::off(), 4, 0, "d must be >= 1"),
+    ];
+    for (i, (spec, t, d, needle)) in cases.iter().enumerate() {
+        let err = spec.compile(*t, *d).expect_err(&format!("case {i} must fail"));
+        assert!(
+            err.to_string().contains(needle),
+            "case {i}: error {err:?} does not mention {needle:?}"
+        );
+    }
+    // the boundary case is legal: exactly half the even prefix
+    assert!(MergeSpec::single(16, 4).compile(32, 4).is_ok());
+    assert!(MergeSpec::single(16, 4).compile(33, 4).is_ok());
+}
+
+/// Lifecycle: one validated spec compiles into independent plans; an
+/// `Off`/identity plan is an exact passthrough; accessors expose the
+/// compiled schedule.
+#[test]
+fn lifecycle_and_accessors() {
+    let spec = MergeSpec::fixed_r(vec![8, 4], 3);
+    assert_eq!(spec.layers(), 2);
+    assert_eq!(spec.total_r(), 12);
+    assert!(!spec.is_off());
+    let plan = spec.compile(32, 2).unwrap();
+    assert_eq!(plan.t(), 32);
+    assert_eq!(plan.d(), 2);
+    assert_eq!(plan.layer_counts(), &[32, 24, 20]);
+    assert_eq!(plan.out_tokens(), 20);
+    assert_eq!(plan.spec(), &spec);
+    assert_eq!(plan.slots(), 1);
+    assert_eq!(plan.with_slots(5).slots(), 5);
+
+    // the same spec compiles against other shapes independently
+    assert_eq!(spec.compile(64, 8).unwrap().layer_counts(), &[64, 56, 52]);
+
+    assert_eq!(MergeSpec::off().layers(), 0);
+    assert_eq!(MergeSpec::dynamic(0.9, 2).layers(), 1);
+}
+
+/// `premerge_to` keeps the template's k/accum/causal and derives a
+/// schedule whose compiled plan lands exactly on the target.
+#[test]
+fn premerge_derivation_hits_target() {
+    let tmpl = MergeSpec::fixed_r(Vec::new(), 6);
+    for (len, target) in [(768usize, 512usize), (2048, 512), (513, 512), (1001, 100), (512, 512)] {
+        let spec = tmpl.premerge_to(len, target).unwrap();
+        assert_eq!(spec.k, 6);
+        let plan = spec.compile(len, 1).unwrap();
+        assert_eq!(plan.out_tokens(), target, "{len} -> {target}");
+        match &spec.mode {
+            MergeMode::FixedR { schedule } => {
+                assert_eq!(schedule.iter().sum::<usize>(), len - target)
+            }
+            m => panic!("unexpected mode {m:?}"),
+        }
+    }
+}

@@ -1,23 +1,27 @@
-//! Differential tests: the optimized zero-allocation kernel
-//! (`merging::kernel`, reached through the public wrappers) must be
-//! semantically identical to the legacy scalar reference
-//! (`merging::reference`) — tokens and sizes within 1e-5, slot maps
-//! exactly equal — across ~10k randomized `(t, d, r, k)` cases, including
-//! odd `t`, `r = 0`, `k >= t/2` (global matching) and size-weighted
-//! inputs.  Plus NaN regression, batch/pipeline consistency and the causal
-//! `k = 1` adjacency invariant on the optimized path.
+//! Differential tests: the plan-driven API (`MergeSpec` -> `MergePlan`)
+//! and the optimized zero-allocation kernel must be semantically identical
+//! to the legacy scalar reference (`merging::reference`) — tokens and
+//! sizes within 1e-5, slot maps exactly equal — across ~10k randomized
+//! `(t, d, r, k)` cases, including odd `t`, `r = 0`, `k >= t/2` (global
+//! matching) and size-weighted inputs.  The deprecated one-shot wrappers
+//! are exercised on purpose (hence the file-wide `allow(deprecated)`):
+//! the acceptance criterion is plan ≡ legacy entry points ≡ reference,
+//! bit-for-bit on slot maps.  Plus NaN regression, batch/plan consistency
+//! and the causal `k = 1` adjacency invariant on the optimized path.
 
 #![allow(unknown_lints)]
-#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
+#![allow(deprecated)]
 use tomers::merging::kernel::{
-    match_tokens_scratch_accum, merge_dynamic_scratch, merge_fixed_r_scratch,
-    merge_fixed_r_scratch_accum,
+    match_tokens_scratch_accum, merge_dynamic_scratch, merge_dynamic_scratch_accum,
+    merge_fixed_r_scratch, merge_fixed_r_scratch_accum,
 };
 use tomers::merging::reference::{
     match_tokens_reference, merge_dynamic_reference, merge_fixed_r_reference,
 };
 use tomers::merging::{
-    match_tokens, merge_batch, Accum, BatchPipeline, MergePipeline, MergeResult, MergeScratch,
+    match_tokens, merge_batch, merge_dynamic, merge_fixed_r, Accum, MergeResult, MergeScratch,
+    MergeSpec,
 };
 use tomers::runtime::WorkerPool;
 use tomers::util::Rng;
@@ -79,6 +83,70 @@ fn differential_optimized_equals_reference() {
     }
 }
 
+/// The acceptance differential: a compiled `MergePlan` must bit-match the
+/// legacy one-shot entry point AND the reference oracle — same slot maps,
+/// tokens/sizes within fp tolerance — on randomized single-step cases.
+/// Plan-based execution is the only production path after the redesign,
+/// so this is the test that proves the migration changed no semantics.
+#[test]
+fn differential_plan_equals_legacy_and_reference() {
+    let mut rng = Rng::new(0x9A51);
+    for case in 0..2_000 {
+        let t = 2 + rng.below(60);
+        let d = 1 + rng.below(12);
+        let t2 = (t - t % 2) / 2;
+        let r = if case % 7 == 0 { 0 } else { rng.below(t2 + 1) };
+        let k = 1 + rng.below(t2.max(1) + 2);
+        let tokens = rand_tokens(&mut rng, t, d);
+        let sizes: Vec<f32> = (0..t).map(|_| 1.0 + rng.below(3) as f32).collect();
+
+        let spec = if r == 0 { MergeSpec::off() } else { MergeSpec::single(r, k) };
+        let mut plan = spec.compile(t, d).expect("plan compiles");
+        let planned = plan.run(&tokens, &sizes);
+        let legacy = merge_fixed_r(&tokens, &sizes, t, d, r, k);
+        let refr = merge_fixed_r_reference(&tokens, &sizes, t, d, r, k);
+
+        // plan == legacy wrapper: bitwise (identical kernel underneath)
+        assert_eq!(planned.slot_map, legacy.slot_map, "case {case} (t={t} d={d} r={r} k={k})");
+        assert_eq!(planned.tokens, legacy.tokens, "case {case}");
+        assert_eq!(planned.sizes, legacy.sizes, "case {case}");
+        // plan == reference oracle: slot maps exact, values within fp tol
+        assert_eq!(planned.slot_map, refr.slot_map, "case {case}");
+        assert_close(&planned.tokens, &refr.tokens, 1e-5, "tokens", case);
+        assert_close(&planned.sizes, &refr.sizes, 1e-5, "sizes", case);
+        assert_eq!(*planned.token_counts.last().unwrap(), t - r, "case {case}");
+    }
+}
+
+/// Dynamic plans against the legacy wrapper and the reference, over the
+/// spec-valid threshold range (the wrapper additionally accepts negative
+/// thresholds; those stay covered by `differential_dynamic_equals_reference`).
+#[test]
+fn differential_dynamic_plan_equals_legacy_and_reference() {
+    let mut rng = Rng::new(0x9A52);
+    for case in 0..500 {
+        let t = 4 + rng.below(40);
+        let d = 1 + rng.below(8);
+        let t2 = (t - t % 2) / 2;
+        let k = 1 + rng.below(t2.max(1));
+        let tokens = rand_tokens(&mut rng, t, d);
+        let sizes: Vec<f32> = (0..t).map(|_| 1.0 + rng.below(3) as f32).collect();
+        for th in [0.0, 0.3, 0.7, 0.95, 1.1] {
+            let mut plan = MergeSpec::dynamic(th, k).compile(t, d).expect("dynamic plan");
+            let planned = plan.run(&tokens, &sizes);
+            let (legacy, leg_eff) = merge_dynamic(&tokens, &sizes, t, d, k, th);
+            let (refr, ref_eff) = merge_dynamic_reference(&tokens, &sizes, t, d, k, th);
+            let eff = *planned.token_counts.last().unwrap();
+            assert_eq!(eff, leg_eff, "case {case} th={th}");
+            assert_eq!(eff, ref_eff, "case {case} th={th}");
+            assert_eq!(planned.slot_map, legacy.slot_map, "case {case} th={th}");
+            assert_eq!(planned.tokens, legacy.tokens);
+            assert_eq!(planned.slot_map, refr.slot_map);
+            assert_close(&planned.tokens, &refr.tokens, 1e-5, "tokens", case);
+        }
+    }
+}
+
 /// Matching itself: same best indices and scores (to fp reassociation).
 #[test]
 fn differential_matching_equals_reference() {
@@ -102,7 +170,8 @@ fn differential_matching_equals_reference() {
 }
 
 /// Dynamic merging: same effective token count and slot map for a sweep of
-/// thresholds.
+/// thresholds — including the negative "merge everything" range only the
+/// kernel/legacy surface accepts.
 #[test]
 fn differential_dynamic_equals_reference() {
     let mut rng = Rng::new(0xD14A);
@@ -155,16 +224,17 @@ fn differential_nan_inputs_no_panic() {
             assert_eq!(slot_map.len(), t);
             assert!(slot_map.iter().all(|&s| s < t - r), "case {case}");
         }
+        // the plan path inherits the hardening
+        let planned = MergeSpec::single(r, k).compile(t, d).expect("plan").run(&tokens, &sizes);
+        assert_eq!(planned.slot_map, out.slot_map, "case {case}");
     }
 }
 
-/// The causal `k = 1` adjacency invariant holds on the optimized kernel:
-/// every merge group spans at most two adjacent original positions.
+/// The causal `k = 1` adjacency invariant holds on the plan path: every
+/// merge group spans at most two adjacent original positions.
 #[test]
-fn optimized_causal_k1_adjacency() {
+fn causal_plan_k1_adjacency() {
     let mut rng = Rng::new(0xCA51);
-    let mut scratch = MergeScratch::new();
-    let mut out = MergeResult::default();
     for case in 0..500 {
         let t = 6 + rng.below(50);
         let d = 1 + rng.below(8);
@@ -172,19 +242,22 @@ fn optimized_causal_k1_adjacency() {
         let r = rng.below(t2) + 1;
         let tokens = rand_tokens(&mut rng, t, d);
         let sizes = vec![1.0f32; t];
-        merge_fixed_r_scratch(&tokens, &sizes, t, d, r, 1, &mut scratch, &mut out);
+        let mut plan = MergeSpec::single(r, 1).with_causal().compile(t, d).expect("causal plan");
+        let res = plan.run(&tokens, &sizes);
         for s in 0..t - r {
-            let members: Vec<usize> = (0..t).filter(|&p| out.slot_map[p] == s).collect();
+            let members: Vec<usize> = (0..t).filter(|&p| res.slot_map[p] == s).collect();
             let span = members.last().unwrap() - members.first().unwrap();
             assert!(span <= 1, "case {case}: k=1 group spans {span} > 1: {members:?}");
         }
     }
 }
 
-/// The batched entry point agrees with the reference per sequence.
+/// The batched plan path and the deprecated one-shot `merge_batch` agree
+/// with the reference per sequence.
 #[test]
 fn differential_batch_equals_reference() {
     let mut rng = Rng::new(0xBA7C);
+    let pool = WorkerPool::new(3);
     for case in 0..100 {
         let b = 1 + rng.below(9);
         let t = 4 + rng.below(40);
@@ -196,6 +269,10 @@ fn differential_batch_equals_reference() {
         let sizes: Vec<f32> = (0..b * t).map(|_| 1.0 + rng.below(2) as f32).collect();
         let outs = merge_batch(&tokens, &sizes, b, t, d, r, k);
         assert_eq!(outs.len(), b);
+        let spec = if r == 0 { MergeSpec::off() } else { MergeSpec::single(r, k) };
+        let mut plan = spec.compile(t, d).expect("plan").with_slots(4);
+        let mut plan_outs = Vec::new();
+        plan.run_batch_into(&pool, &tokens, &sizes, b, &mut plan_outs);
         for i in 0..b {
             let refr = merge_fixed_r_reference(
                 &tokens[i * t * d..(i + 1) * t * d],
@@ -208,6 +285,10 @@ fn differential_batch_equals_reference() {
             assert_eq!(outs[i].slot_map, refr.slot_map, "case {case} seq {i}");
             assert_close(&outs[i].tokens, &refr.tokens, 1e-5, "tokens", case);
             assert_close(&outs[i].sizes, &refr.sizes, 1e-5, "sizes", case);
+            // the pool-batched plan is bitwise the one-shot wrapper
+            assert_eq!(plan_outs[i].slot_map, outs[i].slot_map, "case {case} seq {i}");
+            assert_eq!(plan_outs[i].tokens, outs[i].tokens);
+            assert_eq!(plan_outs[i].sizes, outs[i].sizes);
         }
     }
 }
@@ -234,6 +315,43 @@ fn differential_f32_accum_scores_within_tolerance() {
                 "score[{i}] case {case} (t={t} d={d} k={k}): {a} vs {b}"
             );
         }
+    }
+}
+
+/// A plan built with `with_accum(Accum::F32)` runs the f32 matching stage
+/// in every mode: identical to the f32 kernel call, fixed and dynamic.
+#[test]
+fn differential_f32_plan_matches_f32_kernel() {
+    let mut rng = Rng::new(0xF34);
+    let mut scratch = MergeScratch::new();
+    let mut out = MergeResult::default();
+    for case in 0..300 {
+        let t = 4 + rng.below(40);
+        let d = 1 + rng.below(16);
+        let t2 = (t - t % 2) / 2;
+        let r = 1 + rng.below(t2.max(1));
+        let k = 1 + rng.below(t2.max(1));
+        let tokens = rand_tokens(&mut rng, t, d);
+        let sizes = vec![1.0f32; t];
+
+        let mut plan =
+            MergeSpec::single(r, k).with_accum(Accum::F32).compile(t, d).expect("f32 plan");
+        let planned = plan.run(&tokens, &sizes);
+        merge_fixed_r_scratch_accum(
+            &tokens, &sizes, t, d, r, k, &mut scratch, &mut out, Accum::F32,
+        );
+        assert_eq!(planned.slot_map, out.slot_map, "case {case} (t={t} d={d} r={r} k={k})");
+        assert_eq!(planned.tokens, out.tokens);
+
+        let th = 0.5;
+        let mut dplan =
+            MergeSpec::dynamic(th, k).with_accum(Accum::F32).compile(t, d).expect("f32 dyn plan");
+        let dplanned = dplan.run(&tokens, &sizes);
+        let eff = merge_dynamic_scratch_accum(
+            &tokens, &sizes, t, d, k, th, &mut scratch, &mut out, Accum::F32,
+        );
+        assert_eq!(*dplanned.token_counts.last().unwrap(), eff, "case {case}");
+        assert_eq!(dplanned.slot_map, out.slot_map);
     }
 }
 
@@ -303,8 +421,12 @@ fn differential_f32_accum_merge_matches_on_clear_margins() {
             continue;
         }
 
-        merge_fixed_r_scratch_accum(&tokens, &sizes, t, d, r, k, &mut scratch, &mut out64, Accum::F64);
-        merge_fixed_r_scratch_accum(&tokens, &sizes, t, d, r, k, &mut scratch, &mut out32, Accum::F32);
+        merge_fixed_r_scratch_accum(
+            &tokens, &sizes, t, d, r, k, &mut scratch, &mut out64, Accum::F64,
+        );
+        merge_fixed_r_scratch_accum(
+            &tokens, &sizes, t, d, r, k, &mut scratch, &mut out32, Accum::F32,
+        );
         assert_eq!(out64.slot_map, out32.slot_map, "t={t} d={d} r={r} k={k}");
         assert_close(&out64.tokens, &out32.tokens, 1e-4, "tokens", checked);
         assert_close(&out64.sizes, &out32.sizes, 1e-4, "sizes", checked);
@@ -313,26 +435,38 @@ fn differential_f32_accum_merge_matches_on_clear_margins() {
     assert!(checked > 300, "too many skipped cases ({checked} checked)");
 }
 
-/// `BatchPipeline` on the worker pool agrees with repeated single-shot
-/// *reference* merges plus hand-composed slot maps, per sequence — the
-/// pool-backed pipeline is tied to the same oracle as everything else.
+/// Batched multi-layer plans on the worker pool agree with repeated
+/// single-shot *reference* merges plus hand-composed slot maps, per
+/// sequence — the pool-backed plan is tied to the same oracle as
+/// everything else.
 #[test]
-fn differential_batch_pipeline_on_pool_equals_reference() {
+fn differential_batch_plan_on_pool_equals_reference() {
     let mut rng = Rng::new(0x9001);
     let pool = WorkerPool::new(3);
-    let mut bp = BatchPipeline::new(4);
     for case in 0..60 {
         let b = 1 + rng.below(7);
         let t = 10 + rng.below(40);
         let d = 1 + rng.below(6);
         let k = 1 + rng.below(6);
         let layers = 1 + rng.below(4);
-        let rs: Vec<usize> = (0..layers).map(|_| 1 + rng.below(4)).collect();
+        // feasible-by-construction schedule: each layer merges at most a
+        // quarter of the tokens alive at that depth
+        let mut rs: Vec<usize> = Vec::new();
+        {
+            let mut cur = t;
+            for _ in 0..layers {
+                let feasible = (cur - cur % 2) / 2;
+                let r_l = 1 + rng.below(feasible.min(4));
+                rs.push(r_l);
+                cur -= r_l;
+            }
+        }
         let tokens = rand_tokens(&mut rng, b * t, d);
         let sizes: Vec<f32> = (0..b * t).map(|_| 1.0 + rng.below(2) as f32).collect();
 
+        let mut plan = MergeSpec::fixed_r(rs.clone(), k).compile(t, d).expect("plan").with_slots(4);
         let mut outs = Vec::new();
-        bp.run_schedule_into(&pool, &tokens, &sizes, b, t, d, k, &rs, &mut outs);
+        plan.run_batch_into(&pool, &tokens, &sizes, b, &mut outs);
         assert_eq!(outs.len(), b);
 
         for i in 0..b {
@@ -343,14 +477,13 @@ fn differential_batch_pipeline_on_pool_equals_reference() {
             let mut composed: Vec<usize> = (0..t).collect();
             let mut cur_t = t;
             for &r_l in &rs {
-                let step = r_l.min((cur_t - cur_t % 2) / 2);
-                let m = merge_fixed_r_reference(&cur_tokens, &cur_sizes, cur_t, d, step, k);
+                let m = merge_fixed_r_reference(&cur_tokens, &cur_sizes, cur_t, d, r_l, k);
                 for slot in composed.iter_mut() {
                     *slot = m.slot_map[*slot];
                 }
                 cur_tokens = m.tokens;
                 cur_sizes = m.sizes;
-                cur_t -= step;
+                cur_t -= r_l;
             }
             assert_eq!(outs[i].slot_map, composed, "case {case} seq {i}");
             assert_close(&outs[i].tokens, &cur_tokens, 1e-4, "tokens", case);
@@ -360,12 +493,12 @@ fn differential_batch_pipeline_on_pool_equals_reference() {
     }
 }
 
-/// The pipeline agrees with repeated single-shot reference merges plus
-/// hand-composed slot maps.
+/// A multi-layer plan (the paper's static rule via `layered_for`) agrees
+/// with repeated single-shot reference merges plus hand-composed slot
+/// maps.
 #[test]
-fn differential_pipeline_equals_layered_reference() {
+fn differential_layered_plan_equals_layered_reference() {
     let mut rng = Rng::new(0x919E);
-    let mut pipe = MergePipeline::new();
     for case in 0..200 {
         let t = 8 + rng.below(56);
         let d = 1 + rng.below(8);
@@ -376,7 +509,8 @@ fn differential_pipeline_equals_layered_reference() {
         let tokens = rand_tokens(&mut rng, t, d);
         let sizes: Vec<f32> = (0..t).map(|_| 1.0 + rng.below(2) as f32).collect();
 
-        let res = pipe.run(&tokens, &sizes, t, d, k, r, layers, q);
+        let mut plan = MergeSpec::layered_for(t, r, layers, q, k).compile(t, d).expect("plan");
+        let res = plan.run(&tokens, &sizes);
 
         let counts = tomers::merging::merge_schedule(t, r, layers, q);
         let mut cur_tokens = tokens.clone();
@@ -384,6 +518,9 @@ fn differential_pipeline_equals_layered_reference() {
         let mut composed: Vec<usize> = (0..t).collect();
         let mut cur_t = t;
         for w in counts.windows(2) {
+            if w[0] == w[1] {
+                continue; // floor-limited layer: dropped from the spec
+            }
             let m = merge_fixed_r_reference(&cur_tokens, &cur_sizes, cur_t, d, w[0] - w[1], k);
             for slot in composed.iter_mut() {
                 *slot = m.slot_map[*slot];
@@ -392,7 +529,7 @@ fn differential_pipeline_equals_layered_reference() {
             cur_sizes = m.sizes;
             cur_t = w[1];
         }
-        assert_eq!(res.token_counts, counts, "case {case}");
+        assert_eq!(*res.token_counts.last().unwrap(), *counts.last().unwrap(), "case {case}");
         assert_eq!(res.slot_map, composed, "case {case}");
         assert_close(&res.tokens, &cur_tokens, 1e-4, "tokens", case);
         assert_close(&res.sizes, &cur_sizes, 1e-4, "sizes", case);

@@ -1,12 +1,13 @@
-//! Property-based tests of the token-merging invariants (offline build:
+//! Property-based tests of the token-merging invariants, exercised
+//! through the typed `MergeSpec` -> `MergePlan` API (offline build:
 //! hand-rolled case generation over the seeded `util::Rng` instead of
 //! proptest; several hundred random cases per property).
 
 #![allow(unknown_lints)]
-#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
 use tomers::merging::{
-    match_tokens, merge_dynamic, merge_fixed_r, merge_schedule, similarity_complexity,
-    speedup_bound, unmerge,
+    merge_schedule, similarity_complexity, speedup_bound, unmerge, MergeScratch, MergeSpec,
+    PipelineResult,
 };
 use tomers::util::Rng;
 
@@ -16,6 +17,21 @@ fn rand_tokens(rng: &mut Rng, t: usize, d: usize) -> Vec<f32> {
 
 fn rand_sizes(rng: &mut Rng, t: usize) -> Vec<f32> {
     (0..t).map(|_| 1.0 + rng.below(4) as f32).collect()
+}
+
+/// One plan-driven merge step (the properties' workhorse).
+fn merge_once(
+    tokens: &[f32],
+    sizes: &[f32],
+    t: usize,
+    d: usize,
+    r: usize,
+    k: usize,
+) -> PipelineResult {
+    MergeSpec::single(r, k)
+        .compile(t, d)
+        .expect("property case compiles")
+        .run(tokens, sizes)
 }
 
 /// Property: output shape is exactly t-r, sizes sum is conserved, and the
@@ -31,7 +47,7 @@ fn prop_mass_conservation() {
         let k = 1 + rng.below(t2);
         let tokens = rand_tokens(&mut rng, t, d);
         let sizes = rand_sizes(&mut rng, t);
-        let res = merge_fixed_r(&tokens, &sizes, t, d, r, k);
+        let res = merge_once(&tokens, &sizes, t, d, r, k);
         assert_eq!(res.tokens.len(), (t - r) * d, "case {case}");
         let total: f64 = sizes.iter().map(|&s| s as f64).sum();
         let after: f64 = res.sizes.iter().map(|&s| s as f64).sum();
@@ -61,7 +77,7 @@ fn prop_slot_map_structure() {
         let r = rng.below(t2) + 1;
         let k = 1 + rng.below(t2);
         let tokens = rand_tokens(&mut rng, t, d);
-        let res = merge_fixed_r(&tokens, &vec![1.0; t], t, d, r, k);
+        let res = merge_once(&tokens, &vec![1.0; t], t, d, r, k);
         let mut seen = vec![false; t - r];
         for &s in &res.slot_map {
             assert!(s < t - r, "slot out of range");
@@ -82,6 +98,7 @@ fn prop_slot_map_structure() {
 
 /// Property: causality for k = 1 — every merge group spans at most two
 /// adjacent original positions, so information never moves backward.
+/// Exercised through the causal spec (which validation pins to k = 1).
 #[test]
 fn prop_causal_k1_adjacency() {
     let mut rng = Rng::new(0xCA5);
@@ -91,7 +108,11 @@ fn prop_causal_k1_adjacency() {
         let t2 = (t - t % 2) / 2;
         let r = rng.below(t2) + 1;
         let tokens = rand_tokens(&mut rng, t, d);
-        let res = merge_fixed_r(&tokens, &vec![1.0; t], t, d, r, 1);
+        let res = MergeSpec::single(r, 1)
+            .with_causal()
+            .compile(t, d)
+            .expect("causal plan")
+            .run(&tokens, &vec![1.0; t]);
         for s in 0..t - r {
             let members: Vec<usize> =
                 (0..t).filter(|&p| res.slot_map[p] == s).collect();
@@ -114,7 +135,7 @@ fn prop_constant_tokens_unchanged() {
         let k = 1 + rng.below(t2);
         let value: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
         let tokens: Vec<f32> = (0..t).flat_map(|_| value.clone()).collect();
-        let res = merge_fixed_r(&tokens, &vec![1.0; t], t, d, r, k);
+        let res = merge_once(&tokens, &vec![1.0; t], t, d, r, k);
         for s in 0..t - r {
             for j in 0..d {
                 assert!((res.tokens[s * d + j] - value[j]).abs() < 1e-5);
@@ -124,7 +145,8 @@ fn prop_constant_tokens_unchanged() {
 }
 
 /// Property: unmerge returns length-t rows, and rows of singleton slots
-/// are bit-identical to their input.
+/// are bit-identical to their input — both through the free gather and
+/// the plan result's own `unmerge`.
 #[test]
 fn prop_unmerge_roundtrip() {
     let mut rng = Rng::new(0xD1CE);
@@ -134,8 +156,9 @@ fn prop_unmerge_roundtrip() {
         let t2 = (t - t % 2) / 2;
         let r = rng.below(t2) + 1;
         let tokens = rand_tokens(&mut rng, t, d);
-        let res = merge_fixed_r(&tokens, &vec![1.0; t], t, d, r, 2 + rng.below(8));
+        let res = merge_once(&tokens, &vec![1.0; t], t, d, r, 2 + rng.below(8));
         let um = unmerge(&res.tokens, d, &res.slot_map);
+        assert_eq!(um, res.unmerge(d));
         assert_eq!(um.len(), t * d);
         for p in 0..t {
             let s = res.slot_map[p];
@@ -147,7 +170,8 @@ fn prop_unmerge_roundtrip() {
 }
 
 /// Property: dynamic merging is monotone in threshold — a higher threshold
-/// never merges more tokens (effective count never decreases).
+/// never merges more tokens (effective count never decreases) — over the
+/// spec-valid threshold range.
 #[test]
 fn prop_dynamic_monotone_in_threshold() {
     let mut rng = Rng::new(0xD110);
@@ -157,15 +181,21 @@ fn prop_dynamic_monotone_in_threshold() {
         let tokens = rand_tokens(&mut rng, t, d);
         let sizes = vec![1.0; t];
         let mut prev_eff = 0usize;
-        for th in [-1.1, 0.0, 0.5, 0.9, 1.1] {
-            let (_, eff) = merge_dynamic(&tokens, &sizes, t, d, 1, th);
+        for th in [0.0, 0.3, 0.5, 0.9, 1.1] {
+            let res = MergeSpec::dynamic(th, 1)
+                .compile(t, d)
+                .expect("dynamic plan")
+                .run(&tokens, &sizes);
+            let eff = *res.token_counts.last().unwrap();
+            assert_eq!(eff, res.sizes.len());
             assert!(eff >= prev_eff, "threshold {th}: eff {eff} < {prev_eff}");
             prev_eff = eff;
         }
     }
 }
 
-/// Property: eq. 2 complexity is exact at the extremes and monotone in k;
+/// Property: eq. 2 complexity is exact at the extremes and monotone in k
+/// (both as the free formula and through `MergeSpec::similarity_cost`);
 /// the B.1 bound is monotone in depth.
 #[test]
 fn prop_complexity_and_bound() {
@@ -178,6 +208,7 @@ fn prop_complexity_and_bound() {
         let k1 = 1 + rng.below(t2);
         let k2 = (k1 + 1 + rng.below(t2)).min(t2);
         assert!(similarity_complexity(t, k1) <= similarity_complexity(t, k2));
+        assert_eq!(MergeSpec::single(1, k1).similarity_cost(t), similarity_complexity(t, k1));
     }
     for l in 1..14u32 {
         assert!(speedup_bound(l + 1) > speedup_bound(l));
@@ -186,18 +217,19 @@ fn prop_complexity_and_bound() {
 }
 
 /// Property: matching respects the band for arbitrary k and returns
-/// cosine values in [-1, 1].
+/// cosine values in [-1, 1] (through the zero-allocation kernel surface).
 #[test]
 fn prop_match_band() {
     let mut rng = Rng::new(0xF00D);
+    let mut scratch = MergeScratch::new();
     for _ in 0..200 {
         let t = 6 + rng.below(60);
         let d = 1 + rng.below(8);
         let t2 = (t - t % 2) / 2;
         let k = 1 + rng.below(t2);
         let tokens = rand_tokens(&mut rng, t, d);
-        let (scores, best) = match_tokens(&tokens, t, d, k);
-        for (i, (&s, &j)) in scores.iter().zip(&best).enumerate() {
+        tomers::merging::match_tokens_scratch(&tokens, t, d, k, &mut scratch);
+        for (i, (&s, &j)) in scratch.scores().iter().zip(scratch.best()).enumerate() {
             assert!((i as isize - j as isize).unsigned_abs() < k);
             assert!((-1.01..=1.01).contains(&s), "cosine out of range: {s}");
         }
@@ -206,7 +238,7 @@ fn prop_match_band() {
 
 /// Property: the schedule never drops below q (unless it started there),
 /// never merges more than half the even tokens per layer, and is monotone
-/// non-increasing.
+/// non-increasing — and the spec built from it always compiles.
 #[test]
 fn prop_schedule_bounds() {
     let mut rng = Rng::new(0x5CED);
@@ -224,5 +256,8 @@ fn prop_schedule_bounds() {
             assert!(w[1] >= q.min(w[0]));
             assert!(w[0] - w[1] <= (w[0] - w[0] % 2) / 2);
         }
+        let spec = MergeSpec::layered_for(t, r, layers, q, 4);
+        let plan = spec.compile(t, 1).expect("layered spec compiles");
+        assert_eq!(*plan.layer_counts().last().unwrap(), *s.last().unwrap());
     }
 }

@@ -1,15 +1,15 @@
 //! Integration tests for the worker pool under its real workload: the
-//! batched merge path must be spawn-free after warmup, panic-safe, and
-//! correct under stealing/concurrency.  (Pool-internal unit tests live in
-//! `src/runtime/pool.rs`; the differential tie to `merging::reference` is
-//! in `tests/merging_differential.rs`.)
+//! batched [`MergePlan`] path must be spawn-free after warmup, panic-safe,
+//! and correct under stealing/concurrency.  (Pool-internal unit tests live
+//! in `src/runtime/pool.rs`; the differential tie to `merging::reference`
+//! is in `tests/merging_differential.rs`.)
 
 #![allow(unknown_lints)]
-#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use tomers::merging::{merge_fixed_r, BatchMerger, MergeResult};
+use tomers::merging::{MergeSpec, PipelineResult};
 use tomers::runtime::WorkerPool;
 use tomers::util::Rng;
 
@@ -21,27 +21,25 @@ fn merge_batches_spawn_no_threads_after_warmup() {
     let (b, t, d, r, k) = (8usize, 64usize, 8usize, 16usize, 4usize);
     let tokens: Vec<f32> = (0..b * t * d).map(|_| rng.normal() as f32).collect();
     let sizes = vec![1.0f32; b * t];
-    let mut merger = BatchMerger::new(3);
-    let mut outs: Vec<MergeResult> = Vec::new();
+    let spec = MergeSpec::single(r, k);
+    let mut plan = spec.compile(t, d).expect("plan").with_slots(3);
+    let mut outs: Vec<PipelineResult> = Vec::new();
     // warmup + 30 steady-state batches: the spawn counter must not move
     for round in 0..31 {
-        merger.merge_batch_into(&pool, &tokens, &sizes, b, t, d, r, k, &mut outs);
+        plan.run_batch_into(&pool, &tokens, &sizes, b, &mut outs);
         assert_eq!(pool.spawned_threads(), 3, "round {round} spawned a thread");
     }
     // stealing/help bookkeeping adds up: 31 rounds x 3 chunk tasks
     assert_eq!(pool.tasks_executed(), 31 * 3);
-    // and the results are still the single-sequence kernel's
+    // and the results are still the single-sequence plan's
+    let mut single = spec.compile(t, d).expect("plan");
     for i in 0..b {
-        let single = merge_fixed_r(
+        let want = single.run(
             &tokens[i * t * d..(i + 1) * t * d],
             &sizes[i * t..(i + 1) * t],
-            t,
-            d,
-            r,
-            k,
         );
-        assert_eq!(outs[i].tokens, single.tokens, "seq {i}");
-        assert_eq!(outs[i].slot_map, single.slot_map);
+        assert_eq!(outs[i].tokens, want.tokens, "seq {i}");
+        assert_eq!(outs[i].slot_map, want.slot_map);
     }
 }
 
@@ -60,9 +58,9 @@ fn panicking_batch_does_not_wedge_later_merges() {
     let (b, t, d) = (6usize, 40usize, 4usize);
     let tokens: Vec<f32> = (0..b * t * d).map(|_| rng.normal() as f32).collect();
     let sizes = vec![1.0f32; b * t];
-    let mut merger = BatchMerger::new(2);
+    let mut plan = MergeSpec::single(10, 3).compile(t, d).expect("plan").with_slots(2);
     let mut outs = Vec::new();
-    merger.merge_batch_into(&pool, &tokens, &sizes, b, t, d, 10, 3, &mut outs);
+    plan.run_batch_into(&pool, &tokens, &sizes, b, &mut outs);
     assert_eq!(outs.len(), b);
     for out in &outs {
         assert_eq!(out.tokens.len(), (t - 10) * d);
@@ -71,7 +69,7 @@ fn panicking_batch_does_not_wedge_later_merges() {
 }
 
 #[test]
-fn many_concurrent_mergers_share_one_pool() {
+fn many_concurrent_plans_share_one_pool() {
     let pool = WorkerPool::new(2);
     let done = AtomicUsize::new(0);
     std::thread::scope(|s| {
@@ -83,20 +81,18 @@ fn many_concurrent_mergers_share_one_pool() {
                 let (b, t, d, r, k) = (5usize, 30usize, 5usize, 7usize, 3usize);
                 let tokens: Vec<f32> = (0..b * t * d).map(|_| rng.normal() as f32).collect();
                 let sizes = vec![1.0f32; b * t];
-                let mut merger = BatchMerger::new(4);
+                let spec = MergeSpec::single(r, k);
+                let mut plan = spec.compile(t, d).expect("plan").with_slots(4);
+                let mut single = spec.compile(t, d).expect("plan");
                 let mut outs = Vec::new();
                 for _ in 0..10 {
-                    merger.merge_batch_into(pool, &tokens, &sizes, b, t, d, r, k, &mut outs);
+                    plan.run_batch_into(pool, &tokens, &sizes, b, &mut outs);
                     for i in 0..b {
-                        let single = merge_fixed_r(
+                        let want = single.run(
                             &tokens[i * t * d..(i + 1) * t * d],
                             &sizes[i * t..(i + 1) * t],
-                            t,
-                            d,
-                            r,
-                            k,
                         );
-                        assert_eq!(outs[i].tokens, single.tokens);
+                        assert_eq!(outs[i].tokens, want.tokens);
                     }
                 }
                 done.fetch_add(1, Ordering::SeqCst);

@@ -6,7 +6,7 @@
 //! `cargo test` stays green on a fresh checkout.
 
 #![allow(unknown_lints)]
-#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
 use std::path::PathBuf;
 
 use tomers::runtime::{Engine, WeightStore};

@@ -2,7 +2,7 @@
 //! artifact and the loss decreases.  Skipped when artifacts are missing.
 
 #![allow(unknown_lints)]
-#![allow(clippy::too_many_arguments, clippy::needless_range_loop, clippy::manual_div_ceil)]
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
 use std::path::PathBuf;
 
 use tomers::bench::forecast_suite::dataset;

@@ -6,12 +6,14 @@
 #   2. cargo clippy -- -D warnings    (lint gate; skip: TOMERS_SKIP_LINT=1)
 #   3. cargo build --release          (offline, default features)
 #   4. cargo check --features pjrt    (the stubbed PJRT surface must keep compiling)
-#   5. cargo test  -q                 (unit + property + differential + pool tests)
-#   6. cargo bench --bench merging    (quick mode: acceptance cases only)
+#   5. cargo doc --no-deps            (rustdoc warnings are errors: the public
+#                                      MergeSpec/MergePlan API stays documented)
+#   6. cargo test  -q                 (unit + property + differential + pool tests)
+#   7. cargo bench --bench merging    (quick mode: acceptance cases only)
 #      asserts BENCH_merging.json reports speedup_batched >= MIN_SPEEDUP on
 #      the t=8192 d=64 k=16 case (pool-backed batched path), zero
 #      post-warmup thread spawns, and pool p50 <= thread::scope p50 at b=32.
-#   7. cargo bench --bench coordinator (quick) -> BENCH_serving.json;
+#   8. cargo bench --bench coordinator (quick) -> BENCH_serving.json;
 #      asserts staged (merge-while-execute) throughput beats the serial
 #      loop on the balanced row.
 #
@@ -49,6 +51,9 @@ cargo build --release --offline
 
 echo "== feature gate: cargo check --features pjrt =="
 cargo check --offline --features pjrt
+
+echo "== docs gate: cargo doc --no-deps (rustdoc warnings as errors) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --offline --no-deps --quiet
 
 echo "== tier-1: cargo test -q =="
 cargo test -q --offline
