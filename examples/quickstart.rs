@@ -6,11 +6,26 @@
 
 use anyhow::Result;
 use tomers::data;
+use tomers::merging::MergeSpec;
 use tomers::runtime::Engine;
 use tomers::tensor::Tensor;
 use tomers::util::bench;
 
 fn main() -> Result<()> {
+    // 0. Host-side merging is one typed API: describe with a MergeSpec,
+    //    compile once per shape, run many (DESIGN.md §2).  This is the
+    //    same machinery the serving prep stage uses to premerge
+    //    over-length contexts down to an artifact's context length.
+    let spec = MergeSpec::fixed_r(Vec::new(), MergeSpec::DEFAULT_K); // serving template
+    let mut plan = spec.premerge_to(768, 192)?.compile(768, 1)?;
+    let long_context: Vec<f32> = (0..768).map(|i| (i as f32 * 0.02).sin()).collect();
+    let premerged = plan.run(&long_context, &vec![1.0; 768]);
+    println!(
+        "host premerge: 768 raw -> {} tokens (per-layer token counts {:?})",
+        premerged.sizes.len(),
+        premerged.token_counts
+    );
+
     // 1. The engine compiles HLO-text artifacts on the PJRT CPU client.
     let engine = Engine::new("artifacts")?;
     println!("platform: {}", engine.platform());

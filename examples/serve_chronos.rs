@@ -34,6 +34,7 @@ fn main() -> Result<()> {
         max_queue: 4096,
         merge_workers: 0,
         merge: coordinator::default_host_merge(),
+        streaming: None,
     })?;
     let client = handle.client();
 

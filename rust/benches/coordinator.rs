@@ -305,6 +305,7 @@ fn real_stack(policy: MergePolicy) {
         max_queue: 8192,
         merge_workers: 0,
         merge: tomers::coordinator::default_host_merge(),
+        streaming: None,
     })
     .expect("server");
     let client = handle.client();

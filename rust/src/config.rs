@@ -30,6 +30,12 @@
 //! (per-layer `r` array), `accum` (`"f64" | "f32"`), `causal`;
 //! `"dynamic"` adds `k`, `threshold`, `accum`, `causal`.
 //!
+//! The optional `"streaming"` block configures the streaming decode
+//! subsystem (DESIGN.md §9): session-table capacity and TTL, the raw
+//! ring / merged-retention bounds, the decode-readiness threshold and
+//! the entropy → causal-merge-threshold ladder
+//! (`streaming::StreamPolicy`).  Omit the block for batch-only serving.
+//!
 //! **Unknown keys are rejected at every level** with an error naming the
 //! key and the accepted set — a typo like `"entropy_low"` fails loudly
 //! instead of silently falling back to the default, and a key another
@@ -45,6 +51,7 @@ use crate::coordinator::policy::{MergePolicy, Variant};
 use crate::coordinator::ServerConfig;
 use crate::json::Json;
 use crate::merging::{Accum, MergeMode, MergeSpec};
+use crate::streaming::{StreamPolicy, StreamingConfig};
 
 #[derive(Clone, Debug)]
 pub struct ServeFileConfig {
@@ -56,6 +63,8 @@ pub struct ServeFileConfig {
     pub merge_workers: usize,
     /// host-premerge spec for over-length contexts
     pub merge: MergeSpec,
+    /// streaming decode subsystem (`None` = batch-only serving)
+    pub streaming: Option<StreamingConfig>,
 }
 
 /// Error unless `v` is a JSON object whose every key is in `allowed`
@@ -131,6 +140,117 @@ pub fn merge_spec_from_json(v: &Json, path: &str) -> Result<MergeSpec> {
     Ok(spec)
 }
 
+/// Serialize a [`MergeSpec`] to the same JSON dialect
+/// [`merge_spec_from_json`] parses — the canonical artifact-manifest form
+/// (`runtime::Manifest::merge_spec`).  Only keys the spec's mode accepts
+/// are emitted, so the round trip survives the parser's mode-dependent
+/// unknown-key rejection.
+pub fn merge_spec_to_json(spec: &MergeSpec) -> Json {
+    match &spec.mode {
+        MergeMode::Off => Json::obj(vec![("mode", Json::str("off"))]),
+        MergeMode::FixedR { schedule } => {
+            let mut pairs = vec![
+                ("mode", Json::str("fixed")),
+                ("k", Json::num(spec.k as f64)),
+                (
+                    "schedule",
+                    Json::arr(schedule.iter().map(|&r| Json::num(r as f64)).collect()),
+                ),
+            ];
+            if spec.accum == Accum::F32 {
+                pairs.push(("accum", Json::str("f32")));
+            }
+            if spec.causal {
+                pairs.push(("causal", Json::Bool(true)));
+            }
+            Json::obj(pairs)
+        }
+        MergeMode::Dynamic { threshold } => {
+            let mut pairs = vec![
+                ("mode", Json::str("dynamic")),
+                ("k", Json::num(spec.k as f64)),
+                ("threshold", Json::num(*threshold)),
+            ];
+            if spec.accum == Accum::F32 {
+                pairs.push(("accum", Json::str("f32")));
+            }
+            if spec.causal {
+                pairs.push(("causal", Json::Bool(true)));
+            }
+            Json::obj(pairs)
+        }
+    }
+}
+
+/// Parse a `"streaming"` JSON block into a validated [`StreamingConfig`]
+/// — same unknown-key-rejection discipline as the `"merge"` block.
+pub fn streaming_from_json(v: &Json, path: &str) -> Result<StreamingConfig> {
+    reject_unknown_keys(
+        v,
+        path,
+        &[
+            "max_sessions",
+            "session_ttl_ms",
+            "reprobe_every",
+            "raw_window",
+            "max_merged",
+            "min_new",
+            "policy",
+        ],
+    )?;
+    let defaults = StreamingConfig::default();
+    let get_usize = |key: &str, dflt: usize| -> Result<usize> {
+        Ok(v.get(key).map(|x| x.as_usize()).transpose()?.unwrap_or(dflt))
+    };
+    let ttl_ms = v
+        .get("session_ttl_ms")
+        .map(|x| x.as_f64())
+        .transpose()?
+        .unwrap_or(defaults.session_ttl.as_secs_f64() * 1e3);
+    ensure!(
+        ttl_ms.is_finite() && ttl_ms > 0.0,
+        "{path}: session_ttl_ms must be a positive number"
+    );
+    let policy = match v.get("policy") {
+        Some(p) => {
+            reject_unknown_keys(
+                p,
+                &format!("{path}.policy"),
+                &["entropy_lo", "entropy_hi", "thresholds"],
+            )?;
+            let d = StreamPolicy::default();
+            StreamPolicy {
+                entropy_lo: p
+                    .get("entropy_lo")
+                    .map(|x| x.as_f64())
+                    .transpose()?
+                    .unwrap_or(d.entropy_lo),
+                entropy_hi: p
+                    .get("entropy_hi")
+                    .map(|x| x.as_f64())
+                    .transpose()?
+                    .unwrap_or(d.entropy_hi),
+                thresholds: match p.get("thresholds") {
+                    Some(t) => t.as_arr()?.iter().map(|x| x.as_f64()).collect::<Result<_>>()?,
+                    None => d.thresholds,
+                },
+            }
+        }
+        None => defaults.policy.clone(),
+    };
+    let cfg = StreamingConfig {
+        max_sessions: get_usize("max_sessions", defaults.max_sessions)?,
+        session_ttl: Duration::from_micros((ttl_ms * 1000.0) as u64),
+        reprobe_every: get_usize("reprobe_every", defaults.reprobe_every)?,
+        raw_window: get_usize("raw_window", defaults.raw_window)?,
+        max_merged: get_usize("max_merged", defaults.max_merged)?,
+        min_new: get_usize("min_new", defaults.min_new)?,
+        policy,
+    };
+    cfg.validate().with_context(|| format!("invalid {path}"))?;
+    Ok(cfg)
+}
+
 impl ServeFileConfig {
     pub fn load(path: &Path) -> Result<ServeFileConfig> {
         let text = std::fs::read_to_string(path)
@@ -143,7 +263,7 @@ impl ServeFileConfig {
         reject_unknown_keys(
             &v,
             "the config root",
-            &["artifact_dir", "policy", "batching", "merge_workers", "merge"],
+            &["artifact_dir", "policy", "batching", "merge_workers", "merge", "streaming"],
         )?;
         let artifact_dir = PathBuf::from(
             v.get("artifact_dir").and_then(|d| d.as_str().ok()).unwrap_or("artifacts"),
@@ -239,6 +359,11 @@ impl ServeFileConfig {
             ),
         }
 
+        let streaming = v
+            .get("streaming")
+            .map(|s| streaming_from_json(s, "\"streaming\""))
+            .transpose()?;
+
         Ok(ServeFileConfig {
             artifact_dir,
             policy,
@@ -246,6 +371,7 @@ impl ServeFileConfig {
             max_queue,
             merge_workers,
             merge,
+            streaming,
         })
     }
 
@@ -257,6 +383,7 @@ impl ServeFileConfig {
             max_queue: self.max_queue,
             merge_workers: self.merge_workers,
             merge: self.merge,
+            streaming: self.streaming,
         }
     }
 
@@ -275,7 +402,16 @@ impl ServeFileConfig {
  },
  "batching": {"max_wait_ms": 20, "max_queue": 4096},
  "merge_workers": 0,
- "merge": {"mode": "fixed", "k": 8}
+ "merge": {"mode": "fixed", "k": 8},
+ "streaming": {
+  "max_sessions": 1024,
+  "session_ttl_ms": 60000,
+  "reprobe_every": 256,
+  "raw_window": 1024,
+  "max_merged": 4096,
+  "min_new": 16,
+  "policy": {"entropy_lo": 3.0, "entropy_hi": 7.5, "thresholds": [1.1, 0.95, 0.8]}
+ }
 }
 "#
     }
@@ -298,6 +434,10 @@ mod tests {
         assert_eq!(cfg.merge_workers, 0);
         assert!(!cfg.merge.is_off());
         assert_eq!(cfg.merge.k, 8);
+        let streaming = cfg.streaming.expect("example carries a streaming block");
+        assert_eq!(streaming.max_sessions, 1024);
+        assert_eq!(streaming.min_new, 16);
+        assert_eq!(streaming.policy.thresholds, vec![1.1, 0.95, 0.8]);
     }
 
     #[test]
@@ -311,6 +451,81 @@ mod tests {
         assert_eq!(cfg.merge_workers, 0);
         assert!(!cfg.merge.is_off(), "host premerge defaults on");
         assert_eq!(cfg.merge.k, MergeSpec::DEFAULT_K);
+        assert!(cfg.streaming.is_none(), "streaming is opt-in");
+    }
+
+    #[test]
+    fn parses_streaming_block() {
+        // partial block: named keys override, the rest default
+        let cfg = ServeFileConfig::parse(
+            r#"{"policy": {"variants": [{"name": "a", "r": 0}]},
+                "streaming": {"max_sessions": 32, "min_new": 8,
+                              "policy": {"thresholds": [1.2, 0.7]}}}"#,
+        )
+        .unwrap();
+        let s = cfg.streaming.unwrap();
+        assert_eq!(s.max_sessions, 32);
+        assert_eq!(s.min_new, 8);
+        assert_eq!(s.raw_window, StreamingConfig::default().raw_window);
+        assert_eq!(s.policy.thresholds, vec![1.2, 0.7]);
+        assert_eq!(s.policy.entropy_lo, 3.0);
+        s.validate().unwrap();
+        // empty block = all defaults
+        let cfg = ServeFileConfig::parse(
+            r#"{"policy": {"variants": [{"name": "a", "r": 0}]}, "streaming": {}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.streaming.unwrap(), StreamingConfig::default());
+    }
+
+    #[test]
+    fn rejects_bad_streaming_blocks() {
+        let base = |block: &str| {
+            format!(
+                r#"{{"policy": {{"variants": [{{"name": "a", "r": 0}}]}}, "streaming": {}}}"#,
+                block
+            )
+        };
+        // unknown key, with the accepted set named
+        let err = ServeFileConfig::parse(&base(r#"{"max_session": 8}"#)).unwrap_err();
+        assert!(err.to_string().contains("max_session"), "{err}");
+        assert!(err.to_string().contains("max_sessions"), "{err}");
+        // unknown policy key
+        assert!(ServeFileConfig::parse(&base(r#"{"policy": {"threshold": [0.9]}}"#)).is_err());
+        // non-object block
+        assert!(ServeFileConfig::parse(&base(r#""on""#)).is_err());
+        // validation failures surface at parse time, naming the field
+        assert!(ServeFileConfig::parse(&base(r#"{"max_sessions": 0}"#)).is_err());
+        assert!(ServeFileConfig::parse(&base(r#"{"session_ttl_ms": 0}"#)).is_err());
+        assert!(ServeFileConfig::parse(&base(r#"{"raw_window": 1}"#)).is_err());
+        // an increasing threshold ladder merges less at higher entropy
+        let err =
+            ServeFileConfig::parse(&base(r#"{"policy": {"thresholds": [0.7, 0.9]}}"#)).unwrap_err();
+        assert!(err.to_string().contains("non-increasing"), "{err}");
+        // wrong-typed values error instead of defaulting
+        assert!(ServeFileConfig::parse(&base(r#"{"max_sessions": "many"}"#)).is_err());
+    }
+
+    #[test]
+    fn merge_spec_json_round_trips() {
+        let specs = vec![
+            MergeSpec::off(),
+            MergeSpec::single(128, 16),
+            MergeSpec::fixed_r(vec![16, 8, 4], 2).with_accum(Accum::F32),
+            MergeSpec::fixed_r(vec![8], 1).with_causal(),
+            MergeSpec::fixed_r(Vec::new(), 8),
+            MergeSpec::dynamic(0.85, 4),
+            MergeSpec::dynamic(0.0, 1).with_causal().with_accum(Accum::F32),
+        ];
+        for spec in specs {
+            let json = merge_spec_to_json(&spec);
+            // the emitted form survives the strict parser (unknown-key
+            // rejection included) and round-trips exactly
+            let text = json.to_string();
+            let back =
+                merge_spec_from_json(&Json::parse(&text).unwrap(), "\"round-trip\"").unwrap();
+            assert_eq!(back, spec, "{text}");
+        }
     }
 
     #[test]

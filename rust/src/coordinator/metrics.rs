@@ -1,9 +1,10 @@
 //! Serving metrics: latency distribution, throughput, batch occupancy,
-//! per-variant routing counts.
+//! per-variant routing counts, and session-level streaming counters.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+use crate::streaming::StreamStats;
 use crate::util::percentile;
 
 #[derive(Debug)]
@@ -13,6 +14,12 @@ pub struct Metrics {
     batch_sizes: Vec<usize>,
     per_variant: BTreeMap<String, usize>,
     rejected: usize,
+    /// decode steps executed by the streaming scheduler
+    decode_steps: usize,
+    /// real session rows across all decode steps
+    decode_rows: usize,
+    /// latest session-table snapshot: (active sessions, manager counters)
+    stream: Option<(usize, StreamStats)>,
 }
 
 impl Default for Metrics {
@@ -29,7 +36,37 @@ impl Metrics {
             batch_sizes: Vec::new(),
             per_variant: BTreeMap::new(),
             rejected: 0,
+            decode_steps: 0,
+            decode_rows: 0,
+            stream: None,
         }
+    }
+
+    /// One streaming decode step served `rows` sessions.
+    pub fn record_decode_step(&mut self, rows: usize) {
+        self.decode_steps += 1;
+        self.decode_rows += rows;
+    }
+
+    /// Latest session-table snapshot from the `SessionManager`.
+    pub fn set_stream(&mut self, active: usize, stats: StreamStats) {
+        self.stream = Some((active, stats));
+    }
+
+    pub fn decode_steps(&self) -> usize {
+        self.decode_steps
+    }
+
+    pub fn decode_rows(&self) -> usize {
+        self.decode_rows
+    }
+
+    /// Mean sessions per decode step (streaming batch occupancy).
+    pub fn decode_occupancy(&self) -> f64 {
+        if self.decode_steps == 0 {
+            return 0.0;
+        }
+        self.decode_rows as f64 / self.decode_steps as f64
     }
 
     pub fn record_batch(&mut self, variant: &str, batch: usize, latencies: &[f64]) {
@@ -89,6 +126,27 @@ impl Metrics {
         for (v, n) in &self.per_variant {
             s.push_str(&format!("  {v}: {n}\n"));
         }
+        if self.decode_steps > 0 || self.stream.is_some() {
+            s.push_str(&format!(
+                "streaming: decode_steps={} rows={} occupancy={:.2}\n",
+                self.decode_steps,
+                self.decode_rows,
+                self.decode_occupancy(),
+            ));
+            if let Some((active, st)) = &self.stream {
+                s.push_str(&format!(
+                    "  sessions: active={} admitted={} evicted_lru={} evicted_ttl={} \
+                     reroutes={} probes={} points={}\n",
+                    active,
+                    st.admitted,
+                    st.evicted_capacity,
+                    st.evicted_ttl,
+                    st.reroutes,
+                    st.probes,
+                    st.appended_points,
+                ));
+            }
+        }
         s
     }
 }
@@ -110,5 +168,21 @@ mod tests {
         let (p50, p95, p99) = m.latency_percentiles();
         assert!(p50 <= p95 && p95 <= p99);
         assert!(m.report().contains("v2: 2"));
+    }
+
+    #[test]
+    fn streaming_section_appears_once_recorded() {
+        let mut m = Metrics::new();
+        assert!(!m.report().contains("streaming:"));
+        m.record_decode_step(3);
+        m.record_decode_step(1);
+        assert_eq!(m.decode_steps(), 2);
+        assert_eq!(m.decode_rows(), 4);
+        assert!((m.decode_occupancy() - 2.0).abs() < 1e-12);
+        m.set_stream(7, StreamStats { admitted: 9, reroutes: 1, ..StreamStats::default() });
+        let report = m.report();
+        assert!(report.contains("decode_steps=2"));
+        assert!(report.contains("active=7"));
+        assert!(report.contains("admitted=9"));
     }
 }

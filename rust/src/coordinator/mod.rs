@@ -24,7 +24,14 @@
 //!   thread, and the execute thread owning the PJRT engine (PJRT handles
 //!   are not `Send`, so all device work stays on one thread) — wired
 //!   together by `pipeline::run_stages`.
-//! * `metrics`  — latency/throughput accounting shared across the stages.
+//! * `stream`   — the streaming decode scheduler (DESIGN.md §9): drives
+//!   the session-managed incremental-merge subsystem
+//!   (`crate::streaming`), continuously batching decode-ready sessions
+//!   into a staged prep/execute pipeline of the same shape as
+//!   `pipeline::run_stages` — PJRT-free and generic over the device
+//!   closure, like the batch core.
+//! * `metrics`  — latency/throughput accounting shared across the stages,
+//!   including session-level streaming counters.
 
 pub mod batcher;
 pub mod metrics;
@@ -32,6 +39,7 @@ pub mod pipeline;
 pub mod policy;
 #[cfg(feature = "pjrt")]
 pub mod server;
+pub mod stream;
 
 pub use batcher::{drain_ready, BatcherConfig, DynamicBatcher};
 pub use metrics::Metrics;
@@ -39,8 +47,10 @@ pub use pipeline::{default_host_merge, HostPrep, PrepJob, ReadyBatch, VariantMet
 pub use policy::{EntropyCache, MergePolicy, PolicyDecision, Variant};
 #[cfg(feature = "pjrt")]
 pub use server::{Client, ServerHandle};
+pub use stream::{run_stream_stages, DecodeStep, StreamEvent, StreamScheduler};
 
 use crate::merging::MergeSpec;
+use crate::streaming::StreamingConfig;
 
 /// Serving configuration (lives here rather than in `server` so the config
 /// system parses/validates it in builds without the `pjrt` feature).
@@ -58,6 +68,10 @@ pub struct ServerConfig {
     /// ([`MergeSpec::off`] rejects them instead; see
     /// [`pipeline::default_host_merge`])
     pub merge: MergeSpec,
+    /// streaming decode subsystem (session-managed continuous batching,
+    /// DESIGN.md §9); `None` = batch-only serving.  `tomers stream` and
+    /// [`stream::run_stream_stages`] consume this block.
+    pub streaming: Option<StreamingConfig>,
 }
 
 /// A forecast request: univariate context, horizon fixed by the artifact.

@@ -367,6 +367,52 @@ mod tests {
         assert_eq!(cache.misses(), 5);
     }
 
+    /// Streaming reuse: a session's context grows by appends but its
+    /// *head* is stable, and the cache analyzes the bounded leading
+    /// prefix — so once the stream outgrows the cap, every further
+    /// `decide_cached` is one hash + one memo hit, never an FFT.
+    #[test]
+    fn growing_prefix_hits_the_bounded_memo() {
+        let policy = MergePolicy::uniform(variants(), 2.0, 7.0);
+        let mut cache = EntropyCache::new(64, 256);
+        let mut rng = Rng::new(21);
+        let mut stream: Vec<f32> = (0..256).map(|_| rng.normal() as f32).collect();
+        let first = policy.decide_cached(&mut cache, &stream);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 0);
+        // 10 appends, each growing the stream past the prefix cap: the
+        // analyzed slice is bytewise identical every time
+        for _ in 0..10 {
+            stream.extend((0..32).map(|_| rng.normal() as f32));
+            let again = policy.decide_cached(&mut cache, &stream);
+            assert_eq!(again, first, "a stable head must route stably");
+        }
+        assert_eq!(cache.hits(), 10, "every post-growth decision must be a memo hit");
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    /// Eviction at capacity is a cost lever, never a semantics lever:
+    /// decisions after arbitrary churn equal the uncached policy.
+    #[test]
+    fn eviction_at_capacity_does_not_change_decisions() {
+        let policy = MergePolicy::uniform(variants(), 2.0, 7.0);
+        let mut cache = EntropyCache::new(2, 256);
+        let mut rng = Rng::new(22);
+        let streams: Vec<Vec<f32>> =
+            (0..5).map(|_| (0..200).map(|_| rng.normal() as f32).collect()).collect();
+        // two interleaved passes: capacity 2 against 5 streams guarantees
+        // every entry is evicted and recomputed at least once
+        for _ in 0..2 {
+            for ctx in &streams {
+                let cached = policy.decide_cached(&mut cache, ctx);
+                assert_eq!(cached, policy.decide(ctx), "eviction changed a decision");
+            }
+        }
+        assert_eq!(cache.len(), 2, "cache stayed at capacity");
+        assert_eq!(cache.misses(), 10, "full churn: every lookup recomputed");
+    }
+
     #[test]
     fn prefix_caps_long_contexts() {
         let mut cache = EntropyCache::new(4, 512);

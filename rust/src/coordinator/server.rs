@@ -101,6 +101,16 @@ impl ServerHandle {
 /// named by the policy and binds its weights before intake accepts
 /// requests.
 pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
+    // The batch server does not drive stream sessions yet (the streaming
+    // scheduler is wired via `tomers stream` / `run_stream_stages`); say
+    // so loudly rather than letting a configured block silently do
+    // nothing.
+    if config.streaming.is_some() {
+        eprintln!(
+            "WARN: the \"streaming\" config block is not yet wired into `tomers serve` — \
+             it only takes effect under `tomers stream` (see DESIGN.md §9)"
+        );
+    }
     // The pool is process-wide; size it here if the config asks and the
     // pool does not exist yet.
     if config.merge_workers > 0 {

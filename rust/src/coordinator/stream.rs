@@ -1,0 +1,485 @@
+//! Streaming decode scheduler: continuous batching of ready sessions
+//! into the staged serving pipeline (DESIGN.md §9).
+//!
+//! The batch path (`pipeline::run_stages`) overlaps host prep with device
+//! execution for one-shot requests.  This module is its streaming twin:
+//!
+//! ```text
+//!  append events      stream-prep thread (this module)     execute stage
+//!  (clients)  ──────► SessionManager: O(n) incremental ──► model.execute +
+//!                     merge per append; decode steps   ▲   deliver rolling
+//!                     batch ready sessions FIFO-fair,  │   forecasts
+//!                     slab filled on the WorkerPool    │
+//!                        ▲      │ ready (depth 1)      │
+//!                        └──────┴──── slab recycle ────┘
+//!                             (2 slab pairs in flight)
+//! ```
+//!
+//! * Appends are absorbed continuously; each costs O(points) against the
+//!   session's incremental causal merge state — never a recompute.
+//! * A **decode step** batches up to `capacity` ready sessions (FIFO by
+//!   oldest unserved data, so a hot session cannot starve a quiet one),
+//!   assembles the `(capacity, m)` merged-context slab **in parallel on
+//!   the shared [`WorkerPool`]** (one task per row), and hands it to the
+//!   execute closure through a depth-1 channel with recycled buffers —
+//!   the same double-buffered merge-while-execute shape as the batch
+//!   pipeline, so slab assembly for step N+1 overlaps step N's device
+//!   time.
+//! * Sessions at different fill levels share a batch: short sessions are
+//!   edge-padded in the value slab and carry **size 0** in the parallel
+//!   size slab ([`DecodeStep::sizes`]), the size-array form the merge
+//!   kernels already speak, so a size-aware artifact can mask padding.
+//!
+//! Like `pipeline::run_stages`, everything here is PJRT-free and generic
+//! over the device closure: `tomers stream`, the streaming bench and the
+//! tests drive the identical machinery with a synthetic device.
+
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::metrics::Metrics;
+use super::pipeline::VariantMeta;
+use crate::runtime::pool::WorkerPool;
+use crate::streaming::{SessionManager, StreamingConfig};
+use crate::util::lock_ignore_poison as lock;
+
+/// One client-side event of a stream intake.
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// Observations for a session (admitted on first sight — the
+    /// admission probe derives its merge spec from these points).
+    Append { session: u64, points: Vec<f32> },
+}
+
+/// One assembled decode step: `rows` ready sessions sharing a
+/// `(capacity, m)` slab.
+pub struct DecodeStep {
+    /// session ids, one per real row
+    pub sessions: Vec<u64>,
+    /// `(capacity, m)` merged-context values; short batches repeat the
+    /// last real row (the batch pipeline's padding convention)
+    pub slab: Vec<f32>,
+    /// `(capacity, m)` token sizes; 0 marks padding (both within-row
+    /// front padding and whole padding rows)
+    pub sizes: Vec<f32>,
+    /// real rows
+    pub rows: usize,
+    /// per-row real-token fill (diagnostics: batch share of sessions
+    /// still shorter than m)
+    pub fills: Vec<usize>,
+}
+
+/// Number of slab pairs in flight between the stream-prep thread and the
+/// execute stage (mirrors `pipeline::SLAB_BUFFERS`).
+pub const STREAM_SLAB_BUFFERS: usize = 2;
+
+/// How long the prep thread blocks for one event before re-checking
+/// deadlines/readiness.
+const EVENT_POLL: Duration = Duration::from_millis(2);
+
+/// Partial-batch flush deadline: a ready session waits at most this long
+/// for the batch to fill before a short decode step is emitted anyway.
+/// Without it, sustained sub-capacity traffic would defer partial
+/// batches forever — the same flush-starvation class the batch intake
+/// fixed with deadline-ordered `drain_ready` (matches its default
+/// `max_wait` of 20ms).
+const DECODE_MAX_WAIT: Duration = Duration::from_millis(20);
+
+/// Builds decode steps from a [`SessionManager`] — separable from the
+/// threaded loop so tests and benches can drive single steps
+/// deterministically.
+pub struct StreamScheduler {
+    meta: VariantMeta,
+    manager: SessionManager,
+    ready: Vec<u64>,
+}
+
+impl StreamScheduler {
+    pub fn new(meta: VariantMeta, cfg: StreamingConfig) -> Result<StreamScheduler> {
+        Ok(StreamScheduler { meta, manager: SessionManager::new(cfg)?, ready: Vec::new() })
+    }
+
+    pub fn manager(&self) -> &SessionManager {
+        &self.manager
+    }
+
+    pub fn manager_mut(&mut self) -> &mut SessionManager {
+        &mut self.manager
+    }
+
+    /// Apply one intake event (admit-on-first-sight append).
+    pub fn apply(&mut self, event: StreamEvent, now: Instant) -> Result<()> {
+        match event {
+            StreamEvent::Append { session, points } => {
+                self.manager.append(session, &points, now)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of decode-ready sessions right now (count only — the
+    /// FIFO ordering work happens once, inside [`Self::step_into`]).
+    pub fn ready_len(&self) -> usize {
+        self.manager.ready_count()
+    }
+
+    /// Assemble the next decode step into recycled buffers: up to
+    /// `capacity` ready sessions FIFO-fair, slab rows filled in parallel
+    /// on `pool`, sessions marked served.  Returns the real row count
+    /// (0 = nothing ready; `step` untouched beyond its buffers).
+    pub fn step_into(&mut self, pool: &WorkerPool, now: Instant, step: &mut DecodeStep) -> usize {
+        let (capacity, m) = (self.meta.capacity, self.meta.m);
+        self.manager.take_ready(capacity, &mut self.ready);
+        let rows = self.ready.len();
+        if rows == 0 {
+            return 0;
+        }
+        step.sessions.clear();
+        step.sessions.extend_from_slice(&self.ready);
+        step.rows = rows;
+        step.slab.clear();
+        step.slab.resize(capacity * m, 0.0);
+        step.sizes.clear();
+        step.sizes.resize(capacity * m, 0.0);
+        step.fills.clear();
+        step.fills.resize(rows, 0);
+        {
+            let mgr = &self.manager;
+            let tasks: Vec<_> = step
+                .sessions
+                .iter()
+                .zip(step.slab.chunks_mut(m))
+                .zip(step.sizes.chunks_mut(m))
+                .zip(step.fills.iter_mut())
+                .map(|(((&id, row), size_row), fill)| {
+                    move || {
+                        *fill = mgr.context_fill(id, row, size_row);
+                    }
+                })
+                .collect();
+            pool.run(tasks);
+        }
+        // pad short batches by repeating the last real row (values only —
+        // padding rows keep size 0)
+        for p in rows..capacity {
+            step.slab.copy_within((rows - 1) * m..rows * m, p * m);
+        }
+        self.manager.mark_decoded(&step.sessions, now);
+        rows
+    }
+}
+
+/// Run the streaming intake + decode stages until the event channel
+/// closes, mirroring [`super::pipeline::run_stages`]'s topology: a prep thread
+/// owns the sessions and assembles steps, the **calling thread** runs
+/// `execute` (PJRT handles are not `Send`) and delivers each session's
+/// rolling forecast through `deliver`.
+///
+/// Decode cadence: a step is emitted as soon as `capacity` sessions are
+/// ready, or — once the intake has drained every pending event — for
+/// whatever is ready (partial batches flush rather than wait for load).
+/// A failed execute drops that step's window (the affected sessions keep
+/// accumulating and reappear on the next step) and the pipeline keeps
+/// serving.  On channel close, remaining ready sessions are flushed
+/// before shutdown.
+pub fn run_stream_stages<X, S>(
+    events: Receiver<StreamEvent>,
+    meta: VariantMeta,
+    cfg: StreamingConfig,
+    pool: &'static WorkerPool,
+    metrics: Arc<Mutex<Metrics>>,
+    mut execute: X,
+    mut deliver: S,
+) -> Result<()>
+where
+    X: FnMut(&mut DecodeStep) -> Result<Vec<Vec<f32>>>,
+    S: FnMut(u64, Vec<f32>),
+{
+    let mut scheduler = StreamScheduler::new(meta.clone(), cfg)?;
+    let (ready_tx, ready_rx) = sync_channel::<DecodeStep>(1);
+    let (slab_tx, slab_rx) = std::sync::mpsc::channel::<DecodeStep>();
+    for _ in 0..STREAM_SLAB_BUFFERS {
+        let _ = slab_tx.send(DecodeStep {
+            sessions: Vec::new(),
+            slab: Vec::new(),
+            sizes: Vec::new(),
+            rows: 0,
+            fills: Vec::new(),
+        });
+    }
+    let prep_metrics = Arc::clone(&metrics);
+    let prep_slab_tx = slab_tx.clone();
+    let prep = thread::Builder::new()
+        .name("tomers-stream-prep".into())
+        .spawn(move || {
+            let mut open = true;
+            while open {
+                // absorb events: block briefly for the first, drain the rest
+                let mut drained = match events.recv_timeout(EVENT_POLL) {
+                    Ok(ev) => {
+                        if let Err(e) = scheduler.apply(ev, Instant::now()) {
+                            eprintln!("stream intake: {e:#}");
+                        }
+                        true
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => false,
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                        open = false;
+                        false
+                    }
+                };
+                while let Ok(ev) = events.try_recv() {
+                    drained = true;
+                    if let Err(e) = scheduler.apply(ev, Instant::now()) {
+                        eprintln!("stream intake: {e:#}");
+                    }
+                }
+                scheduler.manager_mut().evict_expired(Instant::now());
+                // emit: full batches always; partial batches once the
+                // intake is idle (nothing drained), the oldest ready
+                // session is past the flush deadline, or on shutdown
+                loop {
+                    let now = Instant::now();
+                    let ready = scheduler.ready_len();
+                    if ready == 0 {
+                        break;
+                    }
+                    if drained && ready < meta.capacity && open {
+                        let overdue = scheduler
+                            .manager()
+                            .oldest_ready_at()
+                            .is_some_and(|t| now.duration_since(t) >= DECODE_MAX_WAIT);
+                        if !overdue {
+                            break;
+                        }
+                    }
+                    let mut step = match slab_rx.recv() {
+                        Ok(s) => s,
+                        Err(_) => return, // execute stage gone
+                    };
+                    let rows = scheduler.step_into(pool, now, &mut step);
+                    if rows == 0 {
+                        let _ = prep_slab_tx.send(step);
+                        break;
+                    }
+                    {
+                        let mut mx = lock(&prep_metrics);
+                        mx.record_decode_step(rows);
+                        mx.set_stream(scheduler.manager().len(), scheduler.manager().stats());
+                    }
+                    if ready_tx.send(step).is_err() {
+                        return;
+                    }
+                }
+            }
+        })
+        .map_err(|e| anyhow!("spawning stream-prep thread: {e}"))?;
+
+    for mut step in ready_rx.iter() {
+        match execute(&mut step) {
+            Ok(forecasts) if forecasts.len() >= step.rows => {
+                for (id, forecast) in step.sessions.iter().zip(forecasts) {
+                    deliver(*id, forecast);
+                }
+            }
+            Ok(forecasts) => {
+                eprintln!(
+                    "stream execute returned {} rows for {} sessions — dropping step",
+                    forecasts.len(),
+                    step.rows
+                );
+            }
+            Err(e) => {
+                eprintln!("stream decode step failed: {e:#}");
+            }
+        }
+        let _ = slab_tx.send(step);
+    }
+    drop(slab_tx);
+    prep.join().map_err(|_| anyhow!("stream-prep thread panicked"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::streaming::StreamPolicy;
+    use crate::util::Rng;
+
+    fn test_cfg() -> StreamingConfig {
+        StreamingConfig {
+            max_sessions: 16,
+            session_ttl: Duration::from_secs(3600),
+            reprobe_every: 10_000,
+            raw_window: 64,
+            max_merged: 256,
+            min_new: 4,
+            policy: StreamPolicy::default(),
+        }
+    }
+
+    #[test]
+    fn step_batches_ready_sessions_and_pads() {
+        let pool = WorkerPool::new(2);
+        let meta = VariantMeta { capacity: 4, m: 8 };
+        let mut sched = StreamScheduler::new(meta, test_cfg()).unwrap();
+        let now = Instant::now();
+        let mut rng = Rng::new(3);
+        // two ready sessions (>= min_new points), one not ready
+        for id in [1u64, 2] {
+            let pts: Vec<f32> = (0..6).map(|_| rng.normal() as f32).collect();
+            sched.apply(StreamEvent::Append { session: id, points: pts }, now).unwrap();
+        }
+        sched.apply(StreamEvent::Append { session: 3, points: vec![1.0] }, now).unwrap();
+        let mut step = DecodeStep {
+            sessions: Vec::new(),
+            slab: Vec::new(),
+            sizes: Vec::new(),
+            rows: 0,
+            fills: Vec::new(),
+        };
+        let rows = sched.step_into(&pool, now, &mut step);
+        assert_eq!(rows, 2);
+        assert_eq!(step.sessions, vec![1, 2]);
+        assert_eq!(step.slab.len(), 4 * 8);
+        assert_eq!(step.sizes.len(), 4 * 8);
+        // padding rows repeat the last real row's values but carry size 0
+        assert_eq!(step.slab[2 * 8..3 * 8], step.slab[8..16]);
+        assert!(step.sizes[2 * 8..].iter().all(|&s| s == 0.0));
+        // within-row: 6 points (threshold may have merged some) fill < m,
+        // sizes nonzero exactly on the fill
+        for r in 0..rows {
+            let fill = step.fills[r];
+            assert!(fill > 0 && fill <= 8);
+            let sz = &step.sizes[r * 8..(r + 1) * 8];
+            assert!(sz[..8 - fill].iter().all(|&s| s == 0.0));
+            assert!(sz[8 - fill..].iter().all(|&s| s > 0.0));
+        }
+        // the step marked sessions served: nothing ready now
+        assert_eq!(sched.ready_len(), 0);
+    }
+
+    #[test]
+    fn stages_deliver_rolling_forecasts() {
+        let pool = WorkerPool::global();
+        let meta = VariantMeta { capacity: 2, m: 16 };
+        let (tx, rx) = std::sync::mpsc::channel();
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let mut rng = Rng::new(9);
+        for round in 0..3 {
+            for id in 0..5u64 {
+                let pts: Vec<f32> = (0..4 + (round as usize % 2))
+                    .map(|_| rng.normal() as f32)
+                    .collect();
+                tx.send(StreamEvent::Append { session: id, points: pts }).unwrap();
+            }
+        }
+        drop(tx);
+        let delivered = Arc::new(Mutex::new(Vec::<(u64, usize)>::new()));
+        let sink = Arc::clone(&delivered);
+        run_stream_stages(
+            rx,
+            meta,
+            test_cfg(),
+            pool,
+            Arc::clone(&metrics),
+            |step| {
+                assert_eq!(step.slab.len(), 2 * 16);
+                Ok(vec![vec![0.5f32; 4]; step.rows])
+            },
+            move |id, forecast| lock(&sink).push((id, forecast.len())),
+        )
+        .unwrap();
+        let got = lock(&delivered);
+        // every session appended >= min_new points, so each was decoded
+        // at least once before shutdown flushed the ready set
+        for id in 0..5u64 {
+            assert!(got.iter().any(|&(s, _)| s == id), "session {id} never decoded");
+        }
+        assert!(got.iter().all(|&(_, n)| n == 4));
+        let mx = lock(&metrics);
+        assert!(mx.decode_steps() >= 3, "5 sessions / capacity 2 needs >= 3 steps");
+        assert_eq!(mx.decode_rows(), got.len());
+    }
+
+    /// Regression (flush starvation): with sustained sub-capacity
+    /// traffic, `drained` is true on almost every poll iteration, and
+    /// before the decode deadline existed partial batches deferred
+    /// forever — ready sessions got no forecasts until shutdown.  The
+    /// deadline must produce decode steps *while* events keep arriving.
+    #[test]
+    fn partial_batches_flush_under_sustained_traffic() {
+        let pool = WorkerPool::global();
+        let meta = VariantMeta { capacity: 64, m: 8 };
+        let (tx, rx) = std::sync::mpsc::channel();
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let cfg = StreamingConfig { min_new: 1, ..test_cfg() };
+        let feeder = std::thread::spawn(move || {
+            // ~150ms of continuous 2-session traffic (never fills 64)
+            for _ in 0..75 {
+                for id in 0..2u64 {
+                    let ev = StreamEvent::Append { session: id, points: vec![1.0, 2.0] };
+                    if tx.send(ev).is_err() {
+                        return;
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        });
+        let delivered = Arc::new(Mutex::new(0usize));
+        let sink = Arc::clone(&delivered);
+        run_stream_stages(
+            rx,
+            meta,
+            cfg,
+            pool,
+            Arc::clone(&metrics),
+            |step| Ok(vec![Vec::new(); step.rows]),
+            move |_, _| *lock(&sink) += 1,
+        )
+        .unwrap();
+        feeder.join().unwrap();
+        let steps = lock(&metrics).decode_steps();
+        // without the deadline only the shutdown flush decodes (~1 step);
+        // 150ms of traffic against a 20ms deadline must yield several
+        assert!(steps >= 3, "only {steps} decode steps under sustained traffic");
+        assert!(*lock(&delivered) >= steps, "every step must deliver");
+    }
+
+    #[test]
+    fn failed_execute_keeps_serving() {
+        let pool = WorkerPool::global();
+        let meta = VariantMeta { capacity: 8, m: 8 };
+        let (tx, rx) = std::sync::mpsc::channel();
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        for id in 0..4u64 {
+            tx.send(StreamEvent::Append { session: id, points: vec![1.0; 6] }).unwrap();
+        }
+        drop(tx);
+        let mut calls = 0;
+        let delivered = Arc::new(Mutex::new(0usize));
+        let sink = Arc::clone(&delivered);
+        run_stream_stages(
+            rx,
+            meta,
+            test_cfg(),
+            pool,
+            metrics,
+            move |step| {
+                calls += 1;
+                if calls == 1 {
+                    anyhow::bail!("synthetic device fault");
+                }
+                Ok(vec![Vec::new(); step.rows])
+            },
+            move |_, _| *lock(&sink) += 1,
+        )
+        .unwrap();
+        // the faulted step's sessions lost that window but the pipeline
+        // finished cleanly (no hang, no panic)
+    }
+}

@@ -5,7 +5,9 @@
 //! Layer map (DESIGN.md §1):
 //! * L3 (this crate): the typed merge API (`merging::MergeSpec` ->
 //!   `merging::MergePlan`, DESIGN.md §2) over zero-allocation kernels,
-//!   coordinator (router/batcher/merge-policy), runtime (PJRT engine +
+//!   coordinator (router/batcher/merge-policy, streaming decode
+//!   scheduler), the streaming session subsystem
+//!   (`streaming::SessionManager`, DESIGN.md §9), runtime (PJRT engine +
 //!   worker pool), training driver, evaluation, benchmark harness, and
 //!   the substrates (signal processing, synthetic datasets, cost model,
 //!   Rust merging reference).
@@ -33,6 +35,7 @@ pub mod json;
 pub mod merging;
 pub mod runtime;
 pub mod signal;
+pub mod streaming;
 pub mod tensor;
 #[cfg(feature = "pjrt")]
 pub mod train;

@@ -5,6 +5,9 @@
 //!   train    <identity> <dataset> train a model via its __train artifact
 //!   eval     <artifact> <dataset> evaluate one artifact
 //!   serve    [--requests N]       run the forecast-serving demo workload
+//!   stream   [--sessions N]       run the streaming-decode demo workload
+//!                                 (session-managed incremental merging;
+//!                                 PJRT-free — synthetic device stage)
 //!   bench    <experiment>         regenerate a paper table/figure (or `all`)
 //!
 //! Offline build: argument parsing is hand-rolled (no clap in the vendored
@@ -73,6 +76,8 @@ USAGE:
   tomers eval <artifact> <dataset> [--windows N] [--dir artifacts]
   tomers serve [--requests N] [--merge-workers N] [--merge-mode off|fixed]
                [--merge-k N] [--config serve.json] [--write-config serve.json]
+  tomers stream [--sessions N] [--rounds N] [--points N] [--batch N] [--m N]
+                [--merge-workers N] [--config serve.json]
   tomers bench <table1|fig2|table2|table3|table4|table5|table8|fig4|fig5|fig6|fig7|fig8|fig9|fig15|fig16|fig19|ablation_k|deconly|ablation_bound|all> [--quick] [--dir artifacts]
 
 Datasets: etth1 ettm1 weather electricity traffic (synthetic, DESIGN.md §7)
@@ -127,6 +132,7 @@ fn run() -> Result<()> {
             let merge = merge_flags.unwrap_or_else(tomers::coordinator::default_host_merge);
             cmd_serve(&dir, requests, merge_workers, merge)
         }
+        Some("stream") => cmd_stream(&args),
         Some("bench") => {
             let which = args.positional.get(1).context("missing experiment id")?.clone();
             let ctx = BenchCtx::new(&dir, args.has("quick"))?;
@@ -171,6 +177,100 @@ fn host_merge_from_flags(args: &Args) -> Result<Option<MergeSpec>> {
     };
     spec.validate()?;
     Ok(Some(spec))
+}
+
+/// The streaming-decode demo workload: session-managed continuous
+/// batching over the incremental causal merge state (DESIGN.md §9).
+/// Deliberately PJRT-free — the decode steps run against a synthetic
+/// device stage, so the subsystem is exercisable in the default offline
+/// build; the staged machinery (`coordinator::run_stream_stages`) is the
+/// same one a real device closure would drive.
+fn cmd_stream(args: &Args) -> Result<()> {
+    use std::sync::{Arc, Mutex};
+    use std::time::Instant;
+    use tomers::coordinator::{run_stream_stages, Metrics, StreamEvent, VariantMeta};
+    use tomers::streaming::StreamingConfig;
+    use tomers::util::lock_ignore_poison as lock;
+
+    let sessions: usize = args.flag("sessions").unwrap_or("32").parse()?;
+    let rounds: usize = args.flag("rounds").unwrap_or("40").parse()?;
+    let points: usize = args.flag("points").unwrap_or("8").parse()?;
+    let capacity: usize = args.flag("batch").unwrap_or("8").parse()?;
+    let m: usize = args.flag("m").unwrap_or("256").parse()?;
+    ensure!(
+        sessions >= 1 && rounds >= 1 && points >= 1 && capacity >= 1 && m >= 1,
+        "--sessions/--rounds/--points/--batch/--m must all be >= 1"
+    );
+    let merge_workers: usize = args.flag("merge-workers").unwrap_or("0").parse()?;
+    if merge_workers > 0 {
+        tomers::runtime::WorkerPool::init_global(merge_workers);
+    }
+    let cfg = match args.flag("config") {
+        Some(path) => tomers::config::ServeFileConfig::load(std::path::Path::new(path))?
+            .streaming
+            .unwrap_or_default(),
+        None => StreamingConfig::default(),
+    };
+    let horizon = 16usize;
+
+    // Mixed workload, half clean half noisy, streamed as append events:
+    // sine sessions should probe into the conservative bands, noise
+    // sessions into the aggressive ones (visible in the reroute/probe
+    // counters and each session's merge compression).
+    let (tx, rx) = std::sync::mpsc::channel();
+    let mut rng = tomers::util::Rng::new(17);
+    for round in 0..rounds {
+        for s in 0..sessions as u64 {
+            let mut pts = Vec::with_capacity(points);
+            for i in 0..points {
+                let t = (round * points + i) as f64;
+                if s % 2 == 0 {
+                    pts.push((2.0 * std::f64::consts::PI * t / 64.0).sin() as f32);
+                } else {
+                    pts.push(rng.normal() as f32);
+                }
+            }
+            tx.send(StreamEvent::Append { session: s, points: pts })
+                .expect("unbounded channel");
+        }
+    }
+    drop(tx);
+
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let delivered = Arc::new(Mutex::new(0u64));
+    let sink = Arc::clone(&delivered);
+    let total_points = (sessions * rounds * points) as f64;
+    println!(
+        "streaming {sessions} sessions x {rounds} rounds x {points} points \
+         (batch {capacity}, m {m}, synthetic device) ..."
+    );
+    let t0 = Instant::now();
+    run_stream_stages(
+        rx,
+        VariantMeta { capacity, m },
+        cfg,
+        tomers::runtime::WorkerPool::global(),
+        Arc::clone(&metrics),
+        move |step| {
+            // synthetic device: one pass over the slab, "forecast" = the
+            // session's most recent merged token repeated over the horizon
+            let mut spin = 0.0f32;
+            for &v in step.slab.iter() {
+                spin += v * 1e-3;
+            }
+            std::hint::black_box(spin);
+            Ok((0..step.rows).map(|r| vec![step.slab[(r + 1) * m - 1]; horizon]).collect())
+        },
+        move |_session, _forecast| *lock(&sink) += 1,
+    )?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "streamed {total_points:.0} points in {dt:.2}s ({:.0} points/s), {} rolling forecasts",
+        total_points / dt.max(1e-9),
+        lock(&delivered),
+    );
+    println!("{}", lock(&metrics).report());
+    Ok(())
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -306,6 +406,7 @@ fn cmd_serve(dir: &PathBuf, requests: usize, merge_workers: usize, merge: MergeS
         max_queue: 4096,
         merge_workers,
         merge,
+        streaming: None,
     })?;
     let client = handle.client();
     println!("serving {requests} mixed-workload requests ...");

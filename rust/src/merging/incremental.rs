@@ -1,0 +1,411 @@
+//! [`IncrementalMerge`]: O(n·d) incremental *causal* merging for
+//! streaming decode (the serving-side realisation of the paper's claim
+//! that local merging, being causal, is usable in decoders).
+//!
+//! # Why causal merging is incrementally computable
+//!
+//! Under the causal restriction (`k == 1`, adjacent pairs only) every
+//! A-token at even position `2i` has exactly one match candidate: its
+//! right neighbour at `2i + 1`.  The pair's cosine score therefore
+//! depends on those two tokens **only**, and a dynamic-threshold
+//! decision (`score > threshold`, paper §5.5) is pair-local: appending
+//! observations can never change a decision already made.  This is what
+//! makes the merged representation maintainable as a running state —
+//! append `n` new points, pay O(n·d), and the state equals a full
+//! recompute over the entire history.
+//!
+//! The fixed-`r` mode is deliberately **rejected** here: its top-`r`
+//! selection is global (a newly appended, highly similar pair can push a
+//! previously merged pair out of the budget), so a fixed-`r` causal plan
+//! cannot be updated incrementally — it must be recomputed.  The
+//! constructor enforces `Off | Dynamic`-with-`causal`.
+//!
+//! # Exactness contract
+//!
+//! The state is **bit-for-bit identical** to running the full-sequence
+//! causal [`MergePlan`](super::MergePlan) (same spec, compiled at the
+//! current raw length) over the whole history, for either
+//! [`Accum`](super::kernel::Accum) variant, because every float op is
+//! shared with the batch kernel:
+//!
+//! * scores come from [`kernel::token_norm`] + [`kernel::pair_score`] —
+//!   the very functions the matching stage calls;
+//! * a merged pair is accumulated exactly like the kernel's
+//!   size-weighted scatter: `num[j] = a[j]·wa + b[j]·wb` in f64 in
+//!   position order, `den = wa + wb`, output `(num / den) as f32` —
+//!   the IEEE-754 op sequence is identical, so so are the bits;
+//! * a kept token passes through verbatim, which equals the kernel's
+//!   scatter `(x·w / w) as f32` exactly: `x·w` is exact in f64 (24-bit
+//!   by 24-bit significands) and correctly-rounded division by `w`
+//!   returns the representable true quotient `x`.
+//!
+//! `tests/streaming_differential.rs` pins incremental ≡ plan (bitwise)
+//! ≡ `merging::reference` oracle (bitwise at `d == 1`, where the
+//! kernel's chunked dot degenerates to the reference's serial loop)
+//! across randomized append schedules.
+//!
+//! One documented divergence: NaN tokens.  The kernel's dynamic path
+//! counts finite above-threshold scores but *selects* under
+//! `f64::total_cmp`, where positive NaN sorts above `+inf`; the
+//! incremental path keeps a NaN-scored pair unmerged.  Finite inputs —
+//! the only inputs with defined merge semantics — agree everywhere.
+//!
+//! # Front trimming (bounded sessions)
+//!
+//! [`IncrementalMerge::trim_front`] drops the oldest merged tokens to
+//! bound memory for long-lived sessions.  Because pair decisions are
+//! local, trimming whole output tokens off the front leaves the retained
+//! state equal to the corresponding *suffix* of the full recompute; the
+//! exactness contract then applies to that suffix.
+
+use anyhow::{ensure, Result};
+
+use super::kernel;
+use super::spec::{MergeMode, MergeSpec};
+
+/// Running causal-merge state over an append-only token stream.
+/// Construct via [`IncrementalMerge::new`] or
+/// [`MergePlan::incremental`](super::MergePlan::incremental).
+#[derive(Clone, Debug)]
+pub struct IncrementalMerge {
+    /// `Dynamic { threshold }` with `causal` (or `Off`): validated at
+    /// construction, never changed.
+    spec: MergeSpec,
+    d: usize,
+    /// decided output tokens (merged pairs and kept singles), row-major
+    tokens: Vec<f32>,
+    /// one size per decided output token
+    sizes: Vec<f32>,
+    /// pending A-token (`d` values) awaiting its right neighbour; empty
+    /// when the raw length is even
+    tail: Vec<f32>,
+    tail_size: f32,
+    /// precomputed [`kernel::token_norm`] of the tail (undefined when no
+    /// tail is pending)
+    tail_norm: f64,
+    /// total raw tokens appended (the `t` a full recompute would see)
+    raw_len: usize,
+    /// pairs merged so far (`r` of the equivalent full-sequence run)
+    merged_pairs: usize,
+    /// decided output tokens dropped off the front by [`Self::trim_front`]
+    trimmed: usize,
+}
+
+impl IncrementalMerge {
+    /// A fresh state for `spec` over `d`-dimensional tokens.  `spec` must
+    /// be `Off` or causal `Dynamic` (see the module docs for why fixed-`r`
+    /// is rejected).
+    pub fn new(spec: MergeSpec, d: usize) -> Result<IncrementalMerge> {
+        spec.validate()?;
+        ensure!(d >= 1, "incremental merge: d must be >= 1");
+        match &spec.mode {
+            MergeMode::Off => {}
+            MergeMode::Dynamic { .. } => ensure!(
+                spec.causal,
+                "incremental merge requires a causal spec (k == 1, adjacent pairs \
+                 only) — non-causal matching lets information flow backward, which \
+                 an append-only state cannot represent"
+            ),
+            MergeMode::FixedR { .. } => anyhow::bail!(
+                "incremental merge supports Off or causal Dynamic specs only: a \
+                 fixed-r schedule selects its pairs globally (top-r), so appends \
+                 can reassign the budget and the state cannot be maintained in \
+                 O(n·d) — recompute a MergePlan instead"
+            ),
+        }
+        Ok(IncrementalMerge {
+            spec,
+            d,
+            tokens: Vec::new(),
+            sizes: Vec::new(),
+            tail: Vec::new(),
+            tail_size: 1.0,
+            tail_norm: 0.0,
+            raw_len: 0,
+            merged_pairs: 0,
+            trimmed: 0,
+        })
+    }
+
+    /// The spec this state was built from.
+    pub fn spec(&self) -> &MergeSpec {
+        &self.spec
+    }
+
+    /// Token dimensionality.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Total raw tokens appended so far.
+    pub fn raw_len(&self) -> usize {
+        self.raw_len
+    }
+
+    /// Pairs merged so far — the `r` of the equivalent full-sequence
+    /// causal run.
+    pub fn merged_pairs(&self) -> usize {
+        self.merged_pairs
+    }
+
+    /// Output tokens currently held (decided prefix + pending tail),
+    /// after any front trimming.
+    pub fn len(&self) -> usize {
+        self.tokens.len() / self.d + usize::from(!self.tail.is_empty())
+    }
+
+    /// True when nothing has been appended (or everything was trimmed).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Output tokens dropped off the front by [`Self::trim_front`].
+    pub fn trimmed(&self) -> usize {
+        self.trimmed
+    }
+
+    /// Append `n` unit-size observations (`points.len() == n * d`).
+    pub fn append(&mut self, points: &[f32]) {
+        assert_eq!(points.len() % self.d, 0, "points not a whole number of tokens");
+        for row in points.chunks_exact(self.d) {
+            self.push_token(row, 1.0);
+        }
+    }
+
+    /// Append one token row with an explicit size (`size > 0`; raw
+    /// observations are size 1).
+    pub fn push_token(&mut self, row: &[f32], size: f32) {
+        assert_eq!(row.len(), self.d, "token row length != d");
+        debug_assert!(size > 0.0, "token sizes must be positive");
+        let merging = match &self.spec.mode {
+            MergeMode::Dynamic { threshold } => Some(*threshold),
+            _ => None,
+        };
+        let Some(threshold) = merging else {
+            // Off: verbatim passthrough, exactly like the plan's Off arm.
+            self.tokens.extend_from_slice(row);
+            self.sizes.push(size);
+            self.raw_len += 1;
+            return;
+        };
+        if self.raw_len % 2 == 0 {
+            // A-token: hold as the pending tail, norm precomputed once.
+            self.tail.clear();
+            self.tail.extend_from_slice(row);
+            self.tail_size = size;
+            self.tail_norm = kernel::token_norm(row, self.spec.accum);
+        } else {
+            // B-token: the pair (tail, row) is complete — decide it with
+            // the batch kernel's own score function.
+            let nb = kernel::token_norm(row, self.spec.accum);
+            let s = kernel::pair_score(&self.tail, row, self.tail_norm, nb, self.spec.accum);
+            if s > threshold {
+                // Size-weighted merge, op-for-op the kernel's scatter:
+                // f64 accumulation in position order, divide (never a
+                // reciprocal), narrow once.
+                let (wa, wb) = (self.tail_size as f64, size as f64);
+                let den = wa + wb;
+                for j in 0..self.d {
+                    let num = self.tail[j] as f64 * wa + row[j] as f64 * wb;
+                    self.tokens.push((num / den) as f32);
+                }
+                self.sizes.push(den as f32);
+                self.merged_pairs += 1;
+            } else {
+                // Both kept: verbatim, bit-equal to the kernel's
+                // (x·w / w) scatter (see the module docs).
+                self.tokens.extend_from_slice(&self.tail);
+                self.sizes.push(self.tail_size);
+                self.tokens.extend_from_slice(row);
+                self.sizes.push(size);
+            }
+            self.tail.clear();
+        }
+        self.raw_len += 1;
+    }
+
+    /// Materialize the current merged representation (decided prefix plus
+    /// the pending tail) into reusable buffers — what a full-sequence
+    /// causal [`MergePlan`](super::MergePlan) run over the whole history
+    /// would output (minus any trimmed front).
+    pub fn snapshot_into(&self, tokens: &mut Vec<f32>, sizes: &mut Vec<f32>) {
+        tokens.clear();
+        tokens.extend_from_slice(&self.tokens);
+        sizes.clear();
+        sizes.extend_from_slice(&self.sizes);
+        if !self.tail.is_empty() {
+            tokens.extend_from_slice(&self.tail);
+            sizes.push(self.tail_size);
+        }
+    }
+
+    /// Copy the **last** `m = row.len()` output token values (d == 1
+    /// streaming form) right-aligned into `row`/`size_row` (equal-length
+    /// slices, so a batch slab's disjoint chunks can be filled in
+    /// parallel).  When fewer than `m` tokens exist, the front is padded
+    /// by repeating the oldest available value — the slab-padding
+    /// convention of `coordinator::pipeline::HostPrep` — with padding
+    /// sizes set to 0 so a size-aware consumer can mask them out.
+    /// Returns the number of real (unpadded) tokens.
+    pub fn context_tail_into(&self, row: &mut [f32], size_row: &mut [f32]) -> usize {
+        assert_eq!(self.d, 1, "context_tail_into is the univariate serving form");
+        let m = row.len();
+        assert_eq!(size_row.len(), m, "row and size_row must have equal length");
+        row.fill(0.0);
+        size_row.fill(0.0);
+        let have = self.len();
+        let take = have.min(m);
+        if take == 0 {
+            return 0;
+        }
+        // gather the last `take` (value, size) pairs, tail included
+        let decided = self.sizes.len();
+        let from_tail = usize::from(!self.tail.is_empty()).min(take);
+        let from_decided = take - from_tail;
+        let start = decided - from_decided;
+        for (i, p) in (start..decided).enumerate() {
+            row[m - take + i] = self.tokens[p];
+            size_row[m - take + i] = self.sizes[p];
+        }
+        if from_tail == 1 {
+            row[m - 1] = self.tail[0];
+            size_row[m - 1] = self.tail_size;
+        }
+        // edge-replicate the oldest real value across the front padding
+        let edge = row[m - take];
+        for v in row.iter_mut().take(m - take) {
+            *v = edge;
+        }
+        take
+    }
+
+    /// Drop decided output tokens off the front until at most
+    /// `max_tokens` remain (the pending tail counts; it is never
+    /// dropped).  Returns how many were dropped.  See the module docs for
+    /// the suffix-equivalence this preserves.
+    pub fn trim_front(&mut self, max_tokens: usize) -> usize {
+        let max_tokens = max_tokens.max(1);
+        let have = self.len();
+        if have <= max_tokens {
+            return 0;
+        }
+        let drop = (have - max_tokens).min(self.sizes.len());
+        self.tokens.drain(..drop * self.d);
+        self.sizes.drain(..drop);
+        self.trimmed += drop;
+        drop
+    }
+
+    /// Reset to an empty state (same spec/d), keeping buffer capacity.
+    pub fn clear(&mut self) {
+        self.tokens.clear();
+        self.sizes.clear();
+        self.tail.clear();
+        self.raw_len = 0;
+        self.merged_pairs = 0;
+        self.trimmed = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::merging::MergeSpec;
+    use crate::util::Rng;
+
+    fn causal_dynamic(th: f64) -> MergeSpec {
+        MergeSpec::dynamic(th, 1).with_causal()
+    }
+
+    #[test]
+    fn rejects_non_incremental_specs() {
+        assert!(IncrementalMerge::new(MergeSpec::off(), 4).is_ok());
+        assert!(IncrementalMerge::new(causal_dynamic(0.9), 1).is_ok());
+        // non-causal dynamic, fixed-r, and d = 0 are all rejected
+        assert!(IncrementalMerge::new(MergeSpec::dynamic(0.9, 1), 1).is_err());
+        assert!(IncrementalMerge::new(MergeSpec::single(4, 1).with_causal(), 1).is_err());
+        assert!(IncrementalMerge::new(causal_dynamic(0.9), 0).is_err());
+        // invalid specs fail validation before the mode check
+        assert!(IncrementalMerge::new(MergeSpec::dynamic(f64::NAN, 1).with_causal(), 1).is_err());
+    }
+
+    #[test]
+    fn matches_full_plan_bitwise() {
+        let mut rng = Rng::new(41);
+        let d = 3;
+        let spec = causal_dynamic(0.2);
+        let mut inc = IncrementalMerge::new(spec.clone(), d).unwrap();
+        let mut history: Vec<f32> = Vec::new();
+        let (mut snap_t, mut snap_s) = (Vec::new(), Vec::new());
+        for step in 0..40 {
+            let n = 1 + rng.below(5);
+            let points: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+            history.extend_from_slice(&points);
+            inc.append(&points);
+            let t = history.len() / d;
+            let full = spec.compile(t, d).unwrap().run(&history, &vec![1.0; t]);
+            inc.snapshot_into(&mut snap_t, &mut snap_s);
+            assert_eq!(snap_t, full.tokens, "step {step} t={t}");
+            assert_eq!(snap_s, full.sizes, "step {step}");
+            assert_eq!(inc.raw_len(), t);
+            assert_eq!(t - inc.merged_pairs(), *full.token_counts.last().unwrap());
+        }
+    }
+
+    #[test]
+    fn off_spec_is_identity() {
+        let mut inc = IncrementalMerge::new(MergeSpec::off(), 2).unwrap();
+        let pts = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        inc.append(&pts);
+        let (mut t, mut s) = (Vec::new(), Vec::new());
+        inc.snapshot_into(&mut t, &mut s);
+        assert_eq!(t, pts.to_vec());
+        assert_eq!(s, vec![1.0; 3]);
+        assert_eq!(inc.merged_pairs(), 0);
+    }
+
+    #[test]
+    fn context_tail_pads_and_right_aligns() {
+        let mut inc = IncrementalMerge::new(causal_dynamic(1.5), 1).unwrap();
+        inc.append(&[10.0, 20.0, 30.0]);
+        let (mut row, mut sz) = (vec![0.0f32; 5], vec![0.0f32; 5]);
+        // fewer tokens than m: edge-replicated front, sizes 0 on padding
+        let fill = inc.context_tail_into(&mut row, &mut sz);
+        assert_eq!(fill, 3);
+        assert_eq!(row, vec![10.0, 10.0, 10.0, 20.0, 30.0]);
+        assert_eq!(sz, vec![0.0, 0.0, 1.0, 1.0, 1.0]);
+        // more tokens than m: the most recent m, tail included
+        let (mut row, mut sz) = (vec![0.0f32; 2], vec![0.0f32; 2]);
+        let fill = inc.context_tail_into(&mut row, &mut sz);
+        assert_eq!(fill, 2);
+        assert_eq!(row, vec![20.0, 30.0]);
+        // empty state: zeros, fill 0
+        let empty = IncrementalMerge::new(MergeSpec::off(), 1).unwrap();
+        let (mut row, mut sz) = (vec![9.0f32; 3], vec![9.0f32; 3]);
+        assert_eq!(empty.context_tail_into(&mut row, &mut sz), 0);
+        assert_eq!(row, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn trim_front_keeps_suffix_equal() {
+        let mut rng = Rng::new(43);
+        let spec = causal_dynamic(0.0);
+        let mut inc = IncrementalMerge::new(spec.clone(), 1).unwrap();
+        let mut history = Vec::new();
+        for _ in 0..30 {
+            let pts: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
+            history.extend_from_slice(&pts);
+            inc.append(&pts);
+            inc.trim_front(8);
+            assert!(inc.len() <= 8);
+        }
+        let t = history.len();
+        let full = spec.compile(t, 1).unwrap().run(&history, &vec![1.0; t]);
+        let (mut snap_t, mut snap_s) = (Vec::new(), Vec::new());
+        inc.snapshot_into(&mut snap_t, &mut snap_s);
+        let total = inc.trimmed() + snap_s.len();
+        assert_eq!(total, full.sizes.len(), "trim must only drop, not distort");
+        assert_eq!(snap_t.as_slice(), &full.tokens[inc.trimmed()..]);
+        assert_eq!(snap_s.as_slice(), &full.sizes[inc.trimmed()..]);
+    }
+}

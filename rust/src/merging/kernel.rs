@@ -114,6 +114,32 @@ fn sumsq_f32(a: &[f32]) -> f64 {
     acc as f64
 }
 
+/// L2 norm of one token row under the given accumulation precision —
+/// exactly the per-token norm [`match_tokens_scratch_accum`] precomputes,
+/// down to the rounding of every intermediate.  Exposed so the streaming
+/// incremental path (`merging::incremental`) stays bit-for-bit equal to
+/// the batch kernel.
+#[inline]
+pub fn token_norm(row: &[f32], accum: Accum) -> f64 {
+    match accum {
+        Accum::F64 => sumsq_f64(row).sqrt(),
+        Accum::F32 => sumsq_f32(row).sqrt(),
+    }
+}
+
+/// Banded cosine score of one (A, B) pair given the tokens' precomputed
+/// [`token_norm`]s — exactly the score the matching stage computes
+/// (including the `1e-8` denominator guard).  See [`token_norm`] for why
+/// this is public.
+#[inline]
+pub fn pair_score(a: &[f32], b: &[f32], na: f64, nb: f64, accum: Accum) -> f64 {
+    let dot = match accum {
+        Accum::F64 => dot_f64(a, b),
+        Accum::F32 => dot_f32(a, b),
+    };
+    dot / (na * nb + 1e-8)
+}
+
 /// Bipartite soft matching under locality constraint `k` (paper eq. 1)
 /// into `scratch.scores` / `scratch.best` — zero allocations when warm.
 ///
@@ -142,11 +168,7 @@ pub fn match_tokens_scratch_accum(
     scratch.norms.clear();
     scratch.norms.resize(te, 0.0);
     for p in 0..te {
-        let row = &tokens[p * d..(p + 1) * d];
-        scratch.norms[p] = match accum {
-            Accum::F64 => sumsq_f64(row).sqrt(),
-            Accum::F32 => sumsq_f32(row).sqrt(),
-        };
+        scratch.norms[p] = token_norm(&tokens[p * d..(p + 1) * d], accum);
     }
 
     scratch.scores.clear();
@@ -163,12 +185,8 @@ pub fn match_tokens_scratch_accum(
         let mut best_j = 0usize;
         for j in lo..=hi {
             let b = &tokens[(2 * j + 1) * d..(2 * j + 2) * d];
-            // predictable per-case branch; the dot dominates
-            let dot = match accum {
-                Accum::F64 => dot_f64(a, b),
-                Accum::F32 => dot_f32(a, b),
-            };
-            let s = dot / (na * scratch.norms[2 * j + 1] + 1e-8);
+            // predictable per-case branch inside pair_score; the dot dominates
+            let s = pair_score(a, b, na, scratch.norms[2 * j + 1], accum);
             if s > best_score {
                 best_score = s;
                 best_j = j;

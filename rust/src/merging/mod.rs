@@ -56,6 +56,9 @@
 //!   reallocated once warm.
 //! * `batch`       — the crate-internal chunked fan-out shared by the
 //!   plan's pool and scope paths (one scratch slot per chunk, no spawns).
+//! * [`incremental`] — [`IncrementalMerge`], the O(n·d) append-path twin
+//!   of a causal plan for streaming decode (bit-for-bit equal to a full
+//!   recompute; entry point [`MergePlan::incremental`]).
 //! * [`reference`] — the legacy scalar implementation, kept verbatim as
 //!   the differential-test oracle and the bench baseline.
 //! * [`analytic`]  — eq. 2 complexity model, the B.1 speed-up bound and
@@ -97,6 +100,7 @@
 
 pub mod analytic;
 pub(crate) mod batch;
+pub mod incremental;
 pub mod kernel;
 pub mod pipeline;
 pub mod reference;
@@ -104,6 +108,7 @@ pub mod scratch;
 pub mod spec;
 
 pub use analytic::{merge_schedule, similarity_complexity, speedup_bound};
+pub use incremental::IncrementalMerge;
 pub use kernel::{
     match_tokens_scratch, merge_dynamic_scratch, merge_fixed_r_scratch, Accum,
 };

@@ -234,6 +234,16 @@ impl MergePlan {
         self.with_slots(n)
     }
 
+    /// An incremental append-path twin of this plan for streaming decode:
+    /// a fresh [`IncrementalMerge`](super::IncrementalMerge) over the same
+    /// spec and `d`, whose state after appending a history equals running
+    /// this spec's full-sequence plan over it bit-for-bit.  Errs unless
+    /// the spec is `Off` or causal `Dynamic` (see
+    /// `merging::incremental` for why fixed-`r` cannot be incremental).
+    pub fn incremental(&self) -> anyhow::Result<super::IncrementalMerge> {
+        super::IncrementalMerge::new(self.spec.clone(), self.d)
+    }
+
     /// Run over one `(t, d)` sequence, allocating the result.  Hot paths
     /// should reuse a buffer via [`MergePlan::run_into`].
     pub fn run(&mut self, tokens: &[f32], sizes: &[f32]) -> PipelineResult {

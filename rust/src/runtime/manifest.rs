@@ -8,6 +8,7 @@ use std::path::Path;
 use anyhow::{ensure, Context, Result};
 
 use crate::json::Json;
+use crate::merging::MergeSpec;
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorSpec {
@@ -39,6 +40,13 @@ pub struct Manifest {
     pub outputs: Vec<TensorSpec>,
     pub config: Json,
     pub meta: Json,
+    /// The typed [`MergeSpec`] realized inside the artifact (optional —
+    /// older manifests predate it).  Serialized in the same JSON dialect
+    /// as the serving config's `merge` blocks
+    /// ([`crate::config::merge_spec_to_json`]), with the same
+    /// unknown-key rejection, so `Variant.spec` can be read from the
+    /// artifact instead of declared by hand.
+    pub merge_spec: Option<MergeSpec>,
 }
 
 impl Manifest {
@@ -53,6 +61,10 @@ impl Manifest {
         let specs = |key: &str| -> Result<Vec<TensorSpec>> {
             v.req(key)?.as_arr()?.iter().map(TensorSpec::parse).collect()
         };
+        let merge_spec = v
+            .get("merge_spec")
+            .map(|s| crate::config::merge_spec_from_json(s, "manifest \"merge_spec\""))
+            .transpose()?;
         let m = Manifest {
             name: v.req("name")?.as_str()?.to_string(),
             family: v.req("family")?.as_str()?.to_string(),
@@ -61,6 +73,7 @@ impl Manifest {
             outputs: specs("outputs")?,
             config: v.req("config")?.clone(),
             meta: v.req("meta")?.clone(),
+            merge_spec,
         };
         ensure!(!m.outputs.is_empty(), "manifest has no outputs");
         Ok(m)
@@ -111,6 +124,57 @@ mod tests {
         assert_eq!(m.enc_tokens().unwrap(), vec![192, 176, 160]);
         assert_eq!(m.config_usize("m"), Some(192));
         assert_eq!(m.config_str("arch"), Some("transformer"));
+        assert!(m.merge_spec.is_none(), "merge_spec is optional for older manifests");
+    }
+
+    /// A manifest carrying a `merge_spec` block: parsed through the same
+    /// strict parser as the serving config, and round-trippable through
+    /// `config::merge_spec_to_json` without loss.
+    #[test]
+    fn merge_spec_round_trips_through_manifest_json() {
+        use crate::merging::{Accum, MergeSpec};
+        let specs = vec![
+            MergeSpec::off(),
+            MergeSpec::single(16, 8),
+            MergeSpec::fixed_r(vec![8, 8], 2).with_accum(Accum::F32),
+            MergeSpec::dynamic(0.9, 1).with_causal(),
+        ];
+        for spec in specs {
+            let block = crate::config::merge_spec_to_json(&spec).to_string();
+            let text = SAMPLE.replacen(
+                "\"meta\":",
+                &format!("\"merge_spec\": {block}, \"meta\":"),
+                1,
+            );
+            let m = Manifest::parse(&text).unwrap_or_else(|e| panic!("{block}: {e:#}"));
+            assert_eq!(m.merge_spec, Some(spec), "{block}");
+        }
+    }
+
+    #[test]
+    fn merge_spec_rejects_unknown_and_invalid_keys() {
+        // unknown key inside the block, named in the error
+        let bad = SAMPLE.replacen(
+            "\"meta\":",
+            "\"merge_spec\": {\"mode\": \"fixed\", \"rate\": 16}, \"meta\":",
+            1,
+        );
+        let err = Manifest::parse(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("rate"), "{err:#}");
+        // a key the mode would never read is an error too
+        let bad = SAMPLE.replacen(
+            "\"meta\":",
+            "\"merge_spec\": {\"mode\": \"off\", \"k\": 4}, \"meta\":",
+            1,
+        );
+        assert!(Manifest::parse(&bad).is_err());
+        // invalid specs (k = 0) are rejected at parse time
+        let bad = SAMPLE.replacen(
+            "\"meta\":",
+            "\"merge_spec\": {\"mode\": \"fixed\", \"r\": 4, \"k\": 0}, \"meta\":",
+            1,
+        );
+        assert!(Manifest::parse(&bad).is_err());
     }
 
     #[test]

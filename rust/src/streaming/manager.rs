@@ -1,0 +1,384 @@
+//! [`SessionManager`]: the bounded session table.
+//!
+//! * **Admission** — a new session's merge spec is derived from the
+//!   spectral predictors (paper §6.2, table 4): entropy of the initial
+//!   context, measured through the serving layer's bounded-prefix
+//!   memoized [`EntropyCache`], mapped through the
+//!   [`StreamPolicy`](super::StreamPolicy) ladder.  The memo pays off
+//!   on replayed admission contexts (retries, reconnects); *re-probes*
+//!   analyze a sliding window whose bytes change between probes, so
+//!   they bypass the cache entirely (a lookup would always miss while
+//!   its insertion evicts the reusable admission memos) and pay one
+//!   direct bounded-prefix FFT — amortized to negligible by the
+//!   `reprobe_every` cadence, which is the actual cost control there.
+//! * **Bounded capacity** — admitting past `max_sessions` evicts the
+//!   least-recently-touched session (monotonic touch sequence, no clock
+//!   reads on the hot path); idle sessions past `session_ttl` are evicted
+//!   by [`SessionManager::evict_expired`].  Under churn the table and the
+//!   per-session rings are the only state, so memory stays bounded by
+//!   `max_sessions * (raw_window + max_merged)` floats (asserted in
+//!   `tests/streaming_sessions.rs`).
+//! * **Re-probing** — every `reprobe_every` appended points a session's
+//!   retained raw window is re-probed; a changed spec re-routes the
+//!   session (its merged history is rebuilt from the window, counting a
+//!   regime change).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use super::session::StreamSession;
+use super::StreamingConfig;
+use crate::coordinator::policy::EntropyCache;
+
+/// Counters the manager accumulates; snapshot into the serving metrics
+/// via [`SessionManager::stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StreamStats {
+    pub admitted: u64,
+    pub evicted_capacity: u64,
+    pub evicted_ttl: u64,
+    pub reroutes: u64,
+    pub probes: u64,
+    pub appended_points: u64,
+}
+
+/// Outcome of one [`SessionManager::append`] call.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AppendOutcome {
+    /// a re-probe ran on this append
+    pub probed: bool,
+    /// the probe changed the session's merge spec (regime change)
+    pub rerouted: bool,
+}
+
+/// Bounded table of live [`StreamSession`]s.  See the module docs.
+pub struct SessionManager {
+    cfg: StreamingConfig,
+    sessions: HashMap<u64, StreamSession>,
+    /// admission-context memo only — re-probes go around it (see
+    /// [`SessionManager::append`]), so reconnect/retry memos are not
+    /// evicted by sliding-window churn
+    entropy: EntropyCache,
+    /// leading samples a probe analyzes (flat FFT cost; shared between
+    /// the admission cache and the direct re-probe path)
+    probe_prefix: usize,
+    /// monotonic touch sequence (LRU order + FIFO decode fairness)
+    seq: u64,
+    stats: StreamStats,
+    /// reusable probe/replay buffer
+    scratch: Vec<f32>,
+}
+
+impl SessionManager {
+    pub fn new(cfg: StreamingConfig) -> Result<SessionManager> {
+        cfg.validate()?;
+        // Bounded-prefix cap: flat probe cost however long the admission
+        // context is.  Floor 256 so the achievable entropy (~log2(n/2)
+        // bits) clears the default ladder's top band even when the raw
+        // window is configured tiny; ceiling keeps the probe FFT cheap.
+        let prefix_cap = cfg.raw_window.clamp(256, 16384);
+        let capacity = cfg.max_sessions.min(4096);
+        Ok(SessionManager {
+            cfg,
+            sessions: HashMap::new(),
+            entropy: EntropyCache::new(capacity, prefix_cap),
+            probe_prefix: prefix_cap,
+            seq: 0,
+            stats: StreamStats::default(),
+            scratch: Vec::new(),
+        })
+    }
+
+    pub fn config(&self) -> &StreamingConfig {
+        &self.cfg
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    pub fn stats(&self) -> StreamStats {
+        self.stats
+    }
+
+    pub fn session(&self, id: u64) -> Option<&StreamSession> {
+        self.sessions.get(&id)
+    }
+
+    fn next_seq(&mut self) -> u64 {
+        self.seq += 1;
+        self.seq
+    }
+
+    /// Admit a new session: probe the initial context, derive its merge
+    /// spec, evict (TTL first, then LRU) if the table is full, then
+    /// append the initial points.  Errs on a duplicate id.
+    pub fn admit(&mut self, id: u64, initial: &[f32], now: Instant) -> Result<()> {
+        ensure!(!self.sessions.contains_key(&id), "session {id} already admitted");
+        self.evict_expired(now);
+        while self.sessions.len() >= self.cfg.max_sessions {
+            let lru = self
+                .sessions
+                .values()
+                .min_by_key(|s| s.touch_seq)
+                .map(|s| s.id)
+                .expect("non-empty table");
+            self.sessions.remove(&lru);
+            self.stats.evicted_capacity += 1;
+        }
+        let entropy = self.entropy.entropy(initial);
+        self.stats.probes += 1;
+        let spec = self.cfg.policy.spec_for(entropy);
+        let mut session = StreamSession::new(id, spec, self.cfg.raw_window, now)?;
+        let seq = self.next_seq();
+        if !initial.is_empty() {
+            session.append(initial, self.cfg.max_merged, now, seq);
+            self.stats.appended_points += initial.len() as u64;
+        } else {
+            session.touch_seq = seq;
+        }
+        session.probe_done();
+        self.sessions.insert(id, session);
+        self.stats.admitted += 1;
+        Ok(())
+    }
+
+    /// Append observations to a session (admitting it first if unknown —
+    /// the streaming intake path).  Re-probes every
+    /// [`StreamingConfig::reprobe_every`] points and re-routes on a
+    /// regime change.
+    pub fn append(&mut self, id: u64, points: &[f32], now: Instant) -> Result<AppendOutcome> {
+        if !self.sessions.contains_key(&id) {
+            self.admit(id, points, now)?;
+            return Ok(AppendOutcome::default());
+        }
+        let seq = self.next_seq();
+        let SessionManager { cfg, sessions, probe_prefix, stats, scratch, .. } = self;
+        let session = sessions.get_mut(&id).expect("checked above");
+        session.append(points, cfg.max_merged, now, seq);
+        stats.appended_points += points.len() as u64;
+        let mut outcome = AppendOutcome::default();
+        if session.since_probe() >= cfg.reprobe_every {
+            outcome.probed = true;
+            stats.probes += 1;
+            session.raw_window_into(scratch);
+            // Direct bounded-prefix entropy, NOT the cache: a sliding
+            // window's bytes differ from every previous probe, so a
+            // cache lookup would always miss while its insertion evicts
+            // the reusable admission memos.  Cost is one prefix FFT per
+            // `reprobe_every` points — the cadence is the cost control.
+            let prefix = &scratch[..scratch.len().min(*probe_prefix)];
+            let e = crate::signal::spectral_entropy(prefix);
+            let spec = cfg.policy.spec_for(e);
+            if &spec != session.spec() {
+                session.reroute(spec, cfg.max_merged, scratch)?;
+                stats.reroutes += 1;
+                outcome.rerouted = true;
+            }
+            session.probe_done();
+        }
+        Ok(outcome)
+    }
+
+    /// Evict sessions idle past the TTL; returns how many went.
+    pub fn evict_expired(&mut self, now: Instant) -> usize {
+        let ttl = self.cfg.session_ttl;
+        let before = self.sessions.len();
+        self.sessions.retain(|_, s| now.duration_since(s.last_touch) < ttl);
+        let evicted = before - self.sessions.len();
+        self.stats.evicted_ttl += evicted as u64;
+        evicted
+    }
+
+    /// Number of decode-ready sessions (count only — no allocation or
+    /// ordering; the scheduler polls this every few milliseconds).
+    pub fn ready_count(&self) -> usize {
+        let min_new = self.cfg.min_new;
+        self.sessions.values().filter(|s| s.is_ready(min_new)).count()
+    }
+
+    /// Wall-clock arrival of the oldest unserved point across all ready
+    /// sessions — the scheduler's partial-batch flush deadline.  `None`
+    /// when nothing is ready.
+    pub fn oldest_ready_at(&self) -> Option<Instant> {
+        let min_new = self.cfg.min_new;
+        self.sessions
+            .values()
+            .filter(|s| s.is_ready(min_new))
+            .filter_map(|s| s.ready_at())
+            .min()
+    }
+
+    /// Collect up to `max` decode-ready sessions, FIFO by the sequence at
+    /// which each first accumulated unserved points — a hot session
+    /// cannot starve one that has been waiting longer.
+    pub fn take_ready(&self, max: usize, out: &mut Vec<u64>) {
+        out.clear();
+        let min_new = self.cfg.min_new;
+        let mut ready: Vec<(u64, u64)> = self
+            .sessions
+            .values()
+            .filter(|s| s.is_ready(min_new))
+            .map(|s| (s.ready_since().expect("ready implies a since-seq"), s.id))
+            .collect();
+        ready.sort_unstable();
+        out.extend(ready.into_iter().take(max).map(|(_, id)| id));
+    }
+
+    /// Assemble one decode row for a session (delegates to
+    /// [`StreamSession::context_into`]).  An unknown id — impossible when
+    /// the id came from [`SessionManager::take_ready`] under the same
+    /// borrow — zeroes the row and reports fill 0, so a pool-parallel
+    /// slab fill never panics mid-batch.
+    pub fn context_fill(&self, id: u64, row: &mut [f32], size_row: &mut [f32]) -> usize {
+        match self.sessions.get(&id) {
+            Some(s) => s.context_into(row, size_row),
+            None => {
+                row.fill(0.0);
+                size_row.fill(0.0);
+                0
+            }
+        }
+    }
+
+    /// Mark sessions served by a completed decode step.
+    pub fn mark_decoded(&mut self, ids: &[u64], now: Instant) {
+        let seq = self.next_seq();
+        for id in ids {
+            if let Some(s) = self.sessions.get_mut(id) {
+                s.mark_decoded(now, seq);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::time::Duration;
+
+    fn cfg(max_sessions: usize) -> StreamingConfig {
+        StreamingConfig {
+            max_sessions,
+            session_ttl: Duration::from_secs(3600),
+            reprobe_every: 64,
+            raw_window: 128,
+            max_merged: 256,
+            min_new: 4,
+            ..StreamingConfig::default()
+        }
+    }
+
+    fn noise(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn admission_derives_spec_from_entropy() {
+        let mut m = SessionManager::new(cfg(8)).unwrap();
+        let now = Instant::now();
+        // clean sine: low entropy -> conservative band (off by default)
+        let sine: Vec<f32> = (0..128)
+            .map(|i| (2.0 * std::f64::consts::PI * 4.0 * i as f64 / 128.0).sin() as f32)
+            .collect();
+        m.admit(1, &sine, now).unwrap();
+        assert!(m.session(1).unwrap().spec().is_off());
+        // noise: high entropy -> aggressive causal dynamic
+        let mut rng = Rng::new(5);
+        m.admit(2, &noise(&mut rng, 128), now).unwrap();
+        let spec = m.session(2).unwrap().spec().clone();
+        assert!(!spec.is_off());
+        assert!(spec.causal && spec.k == 1);
+        assert!(m.admit(1, &sine, now).is_err(), "duplicate admission");
+    }
+
+    #[test]
+    fn capacity_evicts_lru() {
+        let mut m = SessionManager::new(cfg(3)).unwrap();
+        let now = Instant::now();
+        let mut rng = Rng::new(7);
+        for id in 0..3 {
+            m.admit(id, &noise(&mut rng, 32), now).unwrap();
+        }
+        // touch 0 so 1 becomes the LRU
+        m.append(0, &[1.0], now).unwrap();
+        m.admit(99, &noise(&mut rng, 32), now).unwrap();
+        assert_eq!(m.len(), 3);
+        assert!(m.session(1).is_none(), "LRU session must be the one evicted");
+        assert!(m.session(0).is_some() && m.session(99).is_some());
+        assert_eq!(m.stats().evicted_capacity, 1);
+    }
+
+    #[test]
+    fn ttl_evicts_idle_sessions() {
+        let mut m = SessionManager::new(StreamingConfig {
+            session_ttl: Duration::from_millis(5),
+            ..cfg(8)
+        })
+        .unwrap();
+        let t0 = Instant::now();
+        let mut rng = Rng::new(9);
+        m.admit(1, &noise(&mut rng, 16), t0).unwrap();
+        assert_eq!(m.evict_expired(t0), 0);
+        assert_eq!(m.evict_expired(t0 + Duration::from_millis(10)), 1);
+        assert!(m.is_empty());
+        assert_eq!(m.stats().evicted_ttl, 1);
+    }
+
+    #[test]
+    fn reprobe_reroutes_on_regime_change() {
+        let mut m = SessionManager::new(StreamingConfig {
+            reprobe_every: 64,
+            raw_window: 128,
+            ..cfg(4)
+        })
+        .unwrap();
+        let now = Instant::now();
+        let mut rng = Rng::new(11);
+        // admitted on noise: aggressive merging
+        m.admit(1, &noise(&mut rng, 128), now).unwrap();
+        assert!(!m.session(1).unwrap().spec().is_off());
+        // regime change: feed a pure sine until the window is clean
+        let sine: Vec<f32> = (0..64)
+            .map(|i| (2.0 * std::f64::consts::PI * 2.0 * i as f64 / 64.0).sin() as f32)
+            .collect();
+        let mut rerouted = false;
+        for _ in 0..4 {
+            rerouted |= m.append(1, &sine, now).unwrap().rerouted;
+        }
+        assert!(rerouted, "a clean window must re-route the session");
+        assert!(m.session(1).unwrap().spec().is_off());
+        assert!(m.stats().reroutes >= 1);
+        // the rebuilt state covers the retained window only
+        assert!(m.session(1).unwrap().merge().raw_len() <= 128);
+    }
+
+    #[test]
+    fn take_ready_is_fifo_fair() {
+        let mut m = SessionManager::new(cfg(8)).unwrap();
+        let now = Instant::now();
+        let mut rng = Rng::new(13);
+        for id in [10, 20, 30] {
+            m.admit(id, &noise(&mut rng, 8), now).unwrap();
+        }
+        // all ready (admission appended 8 >= min_new 4); FIFO = admission order
+        let mut ids = Vec::new();
+        m.take_ready(2, &mut ids);
+        assert_eq!(ids, vec![10, 20]);
+        m.mark_decoded(&ids, now);
+        m.take_ready(8, &mut ids);
+        assert_eq!(ids, vec![30]);
+        // 30 decoded; now 10 appends again and becomes the only ready one
+        m.mark_decoded(&[30], now);
+        m.append(10, &noise(&mut rng, 4), now).unwrap();
+        m.take_ready(8, &mut ids);
+        assert_eq!(ids, vec![10]);
+    }
+}

@@ -1,0 +1,99 @@
+//! Streaming decode subsystem: long-lived per-user sessions with
+//! incremental causal merging (DESIGN.md §9).
+//!
+//! The batch serving path (`coordinator/`) answers one-shot requests over
+//! fully materialized contexts.  Forecasting-as-a-service traffic is not
+//! one-shot: a session appends observations forever and asks for rolling
+//! predictions.  Recomputing the merged context per request costs O(t·d)
+//! per append; this subsystem keeps the paper's *causal* merged
+//! representation as running state instead, so appending `n` points costs
+//! O(n·d) ([`crate::merging::IncrementalMerge`], bit-for-bit equal to a
+//! full recompute).
+//!
+//! * [`session`]  — [`StreamSession`]: a bounded ring of recent raw
+//!   observations plus the incremental merge state, decode-readiness
+//!   bookkeeping and context-row assembly.
+//! * [`manager`]  — [`SessionManager`]: bounded session table with
+//!   LRU/TTL eviction; derives each session's
+//!   [`MergeSpec`](crate::merging::MergeSpec) from the spectral
+//!   predictors at admission and re-probes every
+//!   [`StreamingConfig::reprobe_every`] appends, re-routing the session
+//!   when the regime changes.
+//! * [`probe`]    — [`StreamPolicy`]: the spectral-entropy → causal merge
+//!   threshold ladder (the streaming analogue of
+//!   [`crate::coordinator::MergePolicy`]'s variant routing).
+//!
+//! The decode-step scheduler that continuously batches ready sessions
+//! into the staged serving pipeline lives in `coordinator::stream` (it
+//! needs the pool/metrics/pipeline machinery); this module stays
+//! dependency-light so the session substrate is testable alone.
+
+pub mod manager;
+pub mod probe;
+pub mod session;
+
+pub use manager::{SessionManager, StreamStats};
+pub use probe::StreamPolicy;
+pub use session::StreamSession;
+
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+
+/// Configuration of the streaming subsystem (the `"streaming"` block of
+/// the serving config — see `config.rs` for the JSON form and
+/// `ServeFileConfig::example()`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamingConfig {
+    /// session-table capacity; admitting past it evicts the
+    /// least-recently-touched session
+    pub max_sessions: usize,
+    /// sessions idle longer than this are evicted
+    pub session_ttl: Duration,
+    /// appended points between spectral re-probes of a session (regime
+    /// detection)
+    pub reprobe_every: usize,
+    /// raw observations retained per session (ring buffer capacity);
+    /// also the window a re-probe analyzes and a re-route replays
+    pub raw_window: usize,
+    /// merged tokens retained per session (front-trimmed beyond this)
+    pub max_merged: usize,
+    /// new points a session must accumulate to become decode-ready
+    pub min_new: usize,
+    /// entropy → merge-threshold ladder
+    pub policy: StreamPolicy,
+}
+
+impl Default for StreamingConfig {
+    fn default() -> StreamingConfig {
+        StreamingConfig {
+            max_sessions: 1024,
+            session_ttl: Duration::from_secs(60),
+            reprobe_every: 256,
+            raw_window: 1024,
+            max_merged: 4096,
+            min_new: 16,
+            policy: StreamPolicy::default(),
+        }
+    }
+}
+
+impl StreamingConfig {
+    /// Field-naming validation, mirroring [`crate::merging::MergeSpec`]'s
+    /// validate-once discipline.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.max_sessions >= 1, "streaming: max_sessions must be >= 1");
+        ensure!(
+            self.session_ttl > Duration::ZERO,
+            "streaming: session_ttl must be positive"
+        );
+        ensure!(self.reprobe_every >= 1, "streaming: reprobe_every must be >= 1");
+        ensure!(
+            self.raw_window >= 2,
+            "streaming: raw_window must hold at least one pair (>= 2)"
+        );
+        ensure!(self.max_merged >= 1, "streaming: max_merged must be >= 1");
+        ensure!(self.min_new >= 1, "streaming: min_new must be >= 1");
+        self.policy.validate()
+    }
+}

@@ -1,0 +1,156 @@
+//! [`StreamPolicy`]: spectral entropy → causal merge threshold.
+//!
+//! The batch serving policy (`coordinator::policy::MergePolicy`) routes a
+//! request to a *compiled variant* by spectral entropy.  A stream session
+//! has no per-request artifact choice — its knob is the causal
+//! dynamic-merge threshold of its incremental state (paper §5.5 under the
+//! causal restriction).  The mapping follows the same table-4 logic:
+//! noisy, high-entropy series tolerate aggressive merging (low
+//! threshold), clean series should merge conservatively or not at all.
+
+use anyhow::{ensure, Result};
+
+use crate::merging::MergeSpec;
+
+/// An entropy ladder over causal merge thresholds.
+///
+/// `thresholds[i]` applies to the i-th entropy band of the uniform
+/// partition of `[entropy_lo, entropy_hi]` (same arithmetic as
+/// `MergePolicy::uniform`); entries must be **non-increasing** (higher
+/// entropy never merges less aggressively).  A threshold above `1.0`
+/// (the cosine ceiling) means "never merge" and is compiled to
+/// [`MergeSpec::off`] outright, so such sessions skip score computation
+/// entirely.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamPolicy {
+    pub entropy_lo: f64,
+    pub entropy_hi: f64,
+    /// causal dynamic-merge threshold per entropy band, most conservative
+    /// first; length = number of bands (>= 1)
+    pub thresholds: Vec<f64>,
+}
+
+impl Default for StreamPolicy {
+    /// Three bands: clean series off, mid conservative, noisy aggressive.
+    fn default() -> StreamPolicy {
+        StreamPolicy {
+            entropy_lo: 3.0,
+            entropy_hi: 7.5,
+            thresholds: vec![1.1, 0.95, 0.8],
+        }
+    }
+}
+
+impl StreamPolicy {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            !self.thresholds.is_empty(),
+            "stream policy: thresholds must not be empty"
+        );
+        ensure!(
+            self.entropy_lo.is_finite() && self.entropy_hi.is_finite(),
+            "stream policy: entropy bounds must be finite"
+        );
+        ensure!(
+            self.entropy_lo < self.entropy_hi,
+            "stream policy: entropy_lo must be < entropy_hi"
+        );
+        for (i, &th) in self.thresholds.iter().enumerate() {
+            ensure!(
+                th.is_finite() && th >= 0.0,
+                "stream policy: thresholds[{i}] must be finite and >= 0, got {th}"
+            );
+        }
+        ensure!(
+            self.thresholds.windows(2).all(|w| w[0] >= w[1]),
+            "stream policy: thresholds must be non-increasing (higher entropy \
+             must not merge less aggressively)"
+        );
+        // every reachable spec must validate (off or causal dynamic)
+        for &th in &self.thresholds {
+            Self::spec_for_threshold(th).validate()?;
+        }
+        Ok(())
+    }
+
+    /// Entropy band index for a measured entropy (same uniform-cut
+    /// arithmetic as `MergePolicy::uniform` + `decision_for`).
+    pub fn band_for(&self, entropy: f64) -> usize {
+        let n = self.thresholds.len();
+        let mut idx = 0;
+        for i in 1..n {
+            let cut = self.entropy_lo + (self.entropy_hi - self.entropy_lo) * i as f64 / n as f64;
+            if entropy >= cut {
+                idx = i;
+            }
+        }
+        idx
+    }
+
+    /// The causal merge spec a session at this entropy should run.
+    pub fn spec_for(&self, entropy: f64) -> MergeSpec {
+        Self::spec_for_threshold(self.thresholds[self.band_for(entropy)])
+    }
+
+    fn spec_for_threshold(th: f64) -> MergeSpec {
+        if th > 1.0 {
+            MergeSpec::off()
+        } else {
+            MergeSpec::dynamic(th, 1).with_causal()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::merging::MergeMode;
+
+    #[test]
+    fn default_ladder_validates_and_orders() {
+        let p = StreamPolicy::default();
+        p.validate().unwrap();
+        // below the range: most conservative band = off
+        assert!(p.spec_for(0.0).is_off());
+        // above the range: most aggressive band
+        match p.spec_for(12.0).mode {
+            MergeMode::Dynamic { threshold } => assert_eq!(threshold, 0.8),
+            m => panic!("unexpected mode {m:?}"),
+        }
+        // every reachable spec is causal (or off) and valid
+        for e in [0.0, 4.0, 5.0, 6.0, 7.0, 9.0] {
+            let spec = p.spec_for(e);
+            spec.validate().unwrap();
+            assert!(spec.is_off() || (spec.causal && spec.k == 1));
+        }
+    }
+
+    #[test]
+    fn band_cuts_match_merge_policy_arithmetic() {
+        let p = StreamPolicy {
+            entropy_lo: 2.0,
+            entropy_hi: 8.0,
+            thresholds: vec![1.1, 0.9, 0.7],
+        };
+        // cuts at 4.0 and 6.0
+        assert_eq!(p.band_for(3.9), 0);
+        assert_eq!(p.band_for(4.0), 1);
+        assert_eq!(p.band_for(5.9), 1);
+        assert_eq!(p.band_for(6.0), 2);
+    }
+
+    #[test]
+    fn rejects_bad_ladders() {
+        let mut p = StreamPolicy::default();
+        p.thresholds = vec![];
+        assert!(p.validate().is_err());
+        p.thresholds = vec![0.5, 0.9]; // increasing = less merge at higher entropy
+        assert!(p.validate().is_err());
+        p.thresholds = vec![f64::NAN];
+        assert!(p.validate().is_err());
+        p.thresholds = vec![-0.1];
+        assert!(p.validate().is_err());
+        p = StreamPolicy { entropy_lo: 5.0, entropy_hi: 5.0, ..StreamPolicy::default() };
+        assert!(p.validate().is_err());
+    }
+}

@@ -1,0 +1,297 @@
+//! [`StreamSession`]: one live stream — raw-observation ring plus
+//! incremental causal merge state.
+//!
+//! A session's hot path is [`StreamSession::append`]: push the points
+//! into the bounded raw ring (recent history for re-probing and
+//! re-routing) and feed them through the
+//! [`IncrementalMerge`](crate::merging::IncrementalMerge) state — O(n)
+//! per `n` appended points, never a function of the stream's age.  The
+//! decode path reads the merged representation's tail
+//! ([`StreamSession::context_into`]) without touching raw history.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::merging::{IncrementalMerge, MergeSpec};
+
+/// Fixed-capacity ring of the most recent raw observations.
+#[derive(Clone, Debug)]
+pub struct RawRing {
+    buf: Vec<f32>,
+    capacity: usize,
+    /// index of the oldest element (valid once `len == capacity`)
+    head: usize,
+    len: usize,
+}
+
+impl RawRing {
+    pub fn new(capacity: usize) -> RawRing {
+        RawRing { buf: vec![0.0; capacity.max(1)], capacity: capacity.max(1), head: 0, len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Push points, overwriting the oldest once full.
+    pub fn push(&mut self, points: &[f32]) {
+        for &p in points {
+            if self.len < self.capacity {
+                self.buf[(self.head + self.len) % self.capacity] = p;
+                self.len += 1;
+            } else {
+                self.buf[self.head] = p;
+                self.head = (self.head + 1) % self.capacity;
+            }
+        }
+    }
+
+    /// Copy the retained window, oldest first, into `out`.
+    pub fn copy_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.len);
+        for i in 0..self.len {
+            out.push(self.buf[(self.head + i) % self.capacity]);
+        }
+    }
+}
+
+/// A long-lived univariate stream: bounded raw history + incremental
+/// causal merged representation + decode-readiness bookkeeping.
+#[derive(Debug)]
+pub struct StreamSession {
+    pub id: u64,
+    merge: IncrementalMerge,
+    ring: RawRing,
+    /// total points ever appended (outlives the ring)
+    appended: u64,
+    /// points since the last spectral probe
+    since_probe: usize,
+    /// points since the last decode step served this session
+    since_new: usize,
+    /// monotonic sequence at which the session crossed `min_new`
+    /// (None = not ready); drives FIFO-fair decode scheduling
+    ready_since: Option<u64>,
+    /// wall-clock twin of `ready_since`: when the oldest currently
+    /// unserved point arrived (drives the partial-batch flush deadline)
+    ready_at: Option<Instant>,
+    /// wall-clock of the last append/decode (TTL eviction)
+    pub last_touch: Instant,
+    /// monotonic touch sequence (LRU eviction, no clock reads)
+    pub touch_seq: u64,
+    /// regime changes this session went through
+    reroutes: u32,
+}
+
+impl StreamSession {
+    /// A fresh session merging under `spec` (derived by the manager from
+    /// the admission probe), retaining `raw_window` raw points.
+    pub fn new(id: u64, spec: MergeSpec, raw_window: usize, now: Instant) -> Result<StreamSession> {
+        Ok(StreamSession {
+            id,
+            merge: IncrementalMerge::new(spec, 1)?,
+            ring: RawRing::new(raw_window),
+            appended: 0,
+            since_probe: 0,
+            since_new: 0,
+            ready_since: None,
+            ready_at: None,
+            last_touch: now,
+            touch_seq: 0,
+            reroutes: 0,
+        })
+    }
+
+    /// The session's current merge spec.
+    pub fn spec(&self) -> &MergeSpec {
+        self.merge.spec()
+    }
+
+    /// The incremental merge state (read-only).
+    pub fn merge(&self) -> &IncrementalMerge {
+        &self.merge
+    }
+
+    /// Total points appended over the session's lifetime.
+    pub fn appended(&self) -> u64 {
+        self.appended
+    }
+
+    /// Points appended since the last probe (manager-internal cadence).
+    pub fn since_probe(&self) -> usize {
+        self.since_probe
+    }
+
+    /// Regime changes (re-routes) so far.
+    pub fn reroutes(&self) -> u32 {
+        self.reroutes
+    }
+
+    /// Merged tokens currently held.
+    pub fn merged_len(&self) -> usize {
+        self.merge.len()
+    }
+
+    /// The retained raw window, oldest first (re-probe / re-route input).
+    pub fn raw_window_into(&self, out: &mut Vec<f32>) {
+        self.ring.copy_into(out);
+    }
+
+    /// Append observations: ring + incremental merge, O(points).
+    /// `max_merged` bounds the merged representation (front-trimmed).
+    pub fn append(&mut self, points: &[f32], max_merged: usize, now: Instant, seq: u64) {
+        self.ring.push(points);
+        self.merge.append(points);
+        self.merge.trim_front(max_merged);
+        self.appended += points.len() as u64;
+        self.since_probe += points.len();
+        self.since_new += points.len();
+        self.last_touch = now;
+        self.touch_seq = seq;
+        if self.ready_since.is_none() {
+            self.ready_since = Some(seq);
+            self.ready_at = Some(now);
+        }
+    }
+
+    /// Whether a decode step should include this session: at least
+    /// `min_new` unserved points.
+    pub fn is_ready(&self, min_new: usize) -> bool {
+        self.since_new >= min_new
+    }
+
+    /// The touch sequence at which this session first accumulated
+    /// unserved points (FIFO decode fairness key).
+    pub fn ready_since(&self) -> Option<u64> {
+        self.ready_since
+    }
+
+    /// Wall-clock arrival of the oldest unserved point (the decode
+    /// scheduler's flush-deadline key).
+    pub fn ready_at(&self) -> Option<Instant> {
+        self.ready_at
+    }
+
+    /// Mark the session served by a decode step.
+    pub fn mark_decoded(&mut self, now: Instant, seq: u64) {
+        self.since_new = 0;
+        self.ready_since = None;
+        self.ready_at = None;
+        self.last_touch = now;
+        self.touch_seq = seq;
+    }
+
+    /// Assemble the decode input row: the last `row.len()` merged token
+    /// values right-aligned into `row` with their sizes in `size_row`
+    /// (padding sizes 0 — the size-array form that lets sessions at
+    /// different fill levels share one batch).  Returns the real-token
+    /// fill.
+    pub fn context_into(&self, row: &mut [f32], size_row: &mut [f32]) -> usize {
+        self.merge.context_tail_into(row, size_row)
+    }
+
+    /// Switch the session to a new merge spec (regime change): the merged
+    /// history is rebuilt by replaying the retained raw window, so the
+    /// new regime's representation covers exactly what the ring still
+    /// holds.  `scratch` is a reusable replay buffer.
+    pub fn reroute(
+        &mut self,
+        spec: MergeSpec,
+        max_merged: usize,
+        scratch: &mut Vec<f32>,
+    ) -> Result<()> {
+        let mut fresh = IncrementalMerge::new(spec, 1)?;
+        self.ring.copy_into(scratch);
+        fresh.append(scratch);
+        fresh.trim_front(max_merged);
+        self.merge = fresh;
+        self.reroutes += 1;
+        Ok(())
+    }
+
+    /// Reset the probe cadence counter (manager calls this after probing).
+    pub fn probe_done(&mut self) {
+        self.since_probe = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::merging::MergeSpec;
+
+    fn causal(th: f64) -> MergeSpec {
+        MergeSpec::dynamic(th, 1).with_causal()
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut r = RawRing::new(4);
+        r.push(&[1.0, 2.0, 3.0]);
+        let mut out = Vec::new();
+        r.copy_into(&mut out);
+        assert_eq!(out, vec![1.0, 2.0, 3.0]);
+        r.push(&[4.0, 5.0, 6.0]);
+        r.copy_into(&mut out);
+        assert_eq!(out, vec![3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(r.len(), 4);
+        // pushing more than capacity in one call keeps the newest tail
+        r.push(&[7.0, 8.0, 9.0, 10.0, 11.0]);
+        r.copy_into(&mut out);
+        assert_eq!(out, vec![8.0, 9.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn readiness_follows_min_new() {
+        let now = Instant::now();
+        let mut s = StreamSession::new(1, causal(1.5), 64, now).unwrap();
+        assert!(!s.is_ready(4));
+        s.append(&[1.0, 2.0, 3.0], 1024, now, 1);
+        assert!(!s.is_ready(4));
+        s.append(&[4.0], 1024, now, 2);
+        assert!(s.is_ready(4));
+        assert_eq!(s.ready_since(), Some(1), "readiness dates from the first unserved point");
+        s.mark_decoded(now, 3);
+        assert!(!s.is_ready(4));
+        assert_eq!(s.ready_since(), None);
+    }
+
+    #[test]
+    fn reroute_replays_the_ring() {
+        let now = Instant::now();
+        // threshold 1.5: nothing merges, merged rep == raw history
+        let mut s = StreamSession::new(2, causal(1.5), 8, now).unwrap();
+        for i in 0..20 {
+            s.append(&[i as f32], 1024, now, i);
+        }
+        assert_eq!(s.merged_len(), 20);
+        // reroute to threshold 0.0 (merge everything similar): the new
+        // state covers exactly the ring's 8 retained points
+        let mut scratch = Vec::new();
+        s.reroute(causal(0.0), 1024, &mut scratch).unwrap();
+        assert_eq!(s.merge().raw_len(), 8);
+        assert_eq!(s.reroutes(), 1);
+        // monotone ramp: adjacent cosine = 1 > 0 ⇒ all 4 pairs merge
+        assert_eq!(s.merged_len(), 4);
+    }
+
+    #[test]
+    fn append_is_bounded_by_max_merged() {
+        let now = Instant::now();
+        let mut s = StreamSession::new(3, causal(1.5), 16, now).unwrap();
+        for i in 0..100 {
+            s.append(&[i as f32, (i + 1) as f32], 10, now, i);
+            assert!(s.merged_len() <= 10);
+        }
+        assert_eq!(s.appended(), 200);
+    }
+}

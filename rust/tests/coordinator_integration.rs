@@ -28,6 +28,7 @@ fn server(dir: PathBuf) -> coordinator::ServerHandle {
         max_queue: 256,
         merge_workers: 0,
         merge: tomers::coordinator::default_host_merge(),
+        streaming: None,
     })
     .expect("server start")
 }

@@ -1,0 +1,164 @@
+//! Differential suite for the streaming incremental causal merge
+//! (ISSUE 4 acceptance): across randomized append schedules,
+//!
+//!   incremental state  ≡  full-sequence causal `MergePlan`  ≡  scalar
+//!   reference oracle (`merging::reference::merge_dynamic_reference`)
+//!
+//! * incremental ≡ plan is **bitwise** for both accumulation modes (the
+//!   incremental path calls the kernel's own `token_norm`/`pair_score`
+//!   and mirrors its scatter arithmetic op for op);
+//! * plan ≡ reference is **bitwise at d == 1** (the kernel's 4-lane
+//!   chunked dot degenerates to the reference's serial loop below 4
+//!   lanes), decision-exact + 1e-5-close elsewhere (the established
+//!   contract of `tests/merging_differential.rs`).
+//!
+//! The schedule count is deliberately ≥ 1k (the acceptance floor).
+
+#![allow(unknown_lints)]
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
+use tomers::merging::reference::merge_dynamic_reference;
+use tomers::merging::{Accum, IncrementalMerge, MergeSpec};
+use tomers::util::Rng;
+
+/// One randomized append schedule: random threshold, random chunk sizes,
+/// occasional non-unit token sizes; after every append the incremental
+/// state is compared against a from-scratch plan run, and at the end
+/// against the scalar reference.
+fn run_schedule(seed: u64, d: usize, accum: Accum, check_every_step: bool) {
+    let mut rng = Rng::new(seed);
+    let threshold = match rng.below(5) {
+        0 => 0.0,
+        1 => 0.5,
+        2 => 0.9,
+        3 => 1.1, // above the cosine ceiling: nothing merges
+        _ => rng.uniform(),
+    };
+    let spec = MergeSpec::dynamic(threshold, 1).with_causal().with_accum(accum);
+    let mut inc = IncrementalMerge::new(spec.clone(), d).unwrap();
+
+    let mut tokens: Vec<f32> = Vec::new();
+    let mut sizes: Vec<f32> = Vec::new();
+    let (mut snap_t, mut snap_s) = (Vec::new(), Vec::new());
+    let appends = 1 + rng.below(12);
+    for step in 0..appends {
+        // chunk sizes 0..=7 tokens: exercises empty appends and repeated
+        // odd/even parity boundaries
+        let n = rng.below(8);
+        for _ in 0..n {
+            let row: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let size = if rng.below(4) == 0 { 1.0 + rng.below(3) as f32 } else { 1.0 };
+            inc.push_token(&row, size);
+            tokens.extend_from_slice(&row);
+            sizes.push(size);
+        }
+        let t = sizes.len();
+        if t == 0 || (!check_every_step && step + 1 != appends) {
+            continue;
+        }
+        let full = spec.compile(t, d).unwrap().run(&tokens, &sizes);
+        inc.snapshot_into(&mut snap_t, &mut snap_s);
+        assert_eq!(
+            snap_t, full.tokens,
+            "seed {seed} step {step} t={t} d={d} th={threshold} {accum:?}: tokens diverged"
+        );
+        assert_eq!(snap_s, full.sizes, "seed {seed} step {step}: sizes diverged");
+        assert_eq!(inc.raw_len(), t);
+        assert_eq!(
+            t - inc.merged_pairs(),
+            *full.token_counts.last().unwrap(),
+            "seed {seed} step {step}: merged-pair count diverged"
+        );
+    }
+
+    // final state against the scalar reference oracle
+    let t = sizes.len();
+    if t == 0 || accum != Accum::F64 {
+        return; // the reference is f64-only; f32 runs pin incremental ≡ plan
+    }
+    let (refr, ref_eff) = merge_dynamic_reference(&tokens, &sizes, t, d, 1, threshold);
+    inc.snapshot_into(&mut snap_t, &mut snap_s);
+    assert_eq!(t - inc.merged_pairs(), ref_eff, "seed {seed}: reference eff diverged");
+    assert_eq!(snap_s.len(), refr.sizes.len());
+    if d == 1 {
+        // exact: see the header
+        assert_eq!(snap_t, refr.tokens, "seed {seed}: d=1 must be bitwise vs reference");
+        assert_eq!(snap_s, refr.sizes);
+    } else {
+        for (i, (a, b)) in snap_t.iter().zip(&refr.tokens).enumerate() {
+            assert!((a - b).abs() <= 1e-5, "seed {seed} token {i}: {a} vs {b}");
+        }
+        for (a, b) in snap_s.iter().zip(&refr.sizes) {
+            assert!((a - b).abs() <= 1e-5);
+        }
+    }
+}
+
+/// ≥ 1k randomized schedules at d == 1 (the univariate streaming form):
+/// every append checked bitwise against the plan, final state bitwise
+/// against the scalar reference.
+#[test]
+fn incremental_equals_plan_and_reference_univariate() {
+    for seed in 0..1000 {
+        run_schedule(7000 + seed, 1, Accum::F64, true);
+    }
+}
+
+/// Multivariate schedules: bitwise vs the plan, tolerance vs the
+/// reference (chunked-dot rounding).
+#[test]
+fn incremental_equals_plan_multivariate() {
+    for seed in 0..150 {
+        let d = [2usize, 3, 5, 8][seed as usize % 4];
+        run_schedule(9000 + seed, d, Accum::F64, true);
+    }
+}
+
+/// F32-accumulation schedules: the incremental path must track the
+/// plan's f32 scoring bit for bit too (both call the same `dot_f32`).
+#[test]
+fn incremental_equals_plan_f32_accum() {
+    for seed in 0..150 {
+        let d = [1usize, 4][seed as usize % 2];
+        run_schedule(11_000 + seed, d, Accum::F32, true);
+    }
+}
+
+/// Off-mode sessions: the incremental state is a verbatim identity, like
+/// an Off plan.
+#[test]
+fn off_mode_matches_off_plan() {
+    let mut rng = Rng::new(5);
+    let spec = MergeSpec::off();
+    let mut inc = IncrementalMerge::new(spec.clone(), 2).unwrap();
+    let mut tokens = Vec::new();
+    for _ in 0..50 {
+        let row: Vec<f32> = (0..2).map(|_| rng.normal() as f32).collect();
+        inc.push_token(&row, 1.0);
+        tokens.extend_from_slice(&row);
+    }
+    let full = spec.compile(25, 2).unwrap().run(&tokens, &vec![1.0; 25]);
+    let (mut snap_t, mut snap_s) = (Vec::new(), Vec::new());
+    inc.snapshot_into(&mut snap_t, &mut snap_s);
+    assert_eq!(snap_t, full.tokens);
+    assert_eq!(snap_s, full.sizes);
+    assert_eq!(inc.merged_pairs(), 0);
+}
+
+/// The plan-side entry point hands back an equivalent incremental state.
+#[test]
+fn plan_incremental_entry_point() {
+    let spec = MergeSpec::dynamic(0.7, 1).with_causal();
+    let plan = spec.compile(32, 4).unwrap();
+    let mut inc = plan.incremental().unwrap();
+    assert_eq!(inc.spec(), &spec);
+    assert_eq!(inc.d(), 4);
+    inc.append(&[0.5; 8]); // two identical tokens: cosine 1 > 0.7, merges
+    assert_eq!(inc.merged_pairs(), 1);
+    // fixed-r plans refuse (global top-r cannot be incremental)
+    assert!(MergeSpec::single(4, 1)
+        .with_causal()
+        .compile(32, 4)
+        .unwrap()
+        .incremental()
+        .is_err());
+}

@@ -1,0 +1,165 @@
+//! Integration tests for the streaming subsystem: bounded memory under
+//! session churn (ISSUE 4 acceptance), TTL/LRU eviction behaviour, and
+//! the decode scheduler driving the staged pipeline end to end.
+
+#![allow(unknown_lints)]
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use tomers::coordinator::{run_stream_stages, Metrics, StreamEvent, VariantMeta};
+use tomers::streaming::{SessionManager, StreamPolicy, StreamingConfig};
+use tomers::util::{lock_ignore_poison as lock, Rng};
+
+fn small_cfg(max_sessions: usize, raw_window: usize, max_merged: usize) -> StreamingConfig {
+    StreamingConfig {
+        max_sessions,
+        session_ttl: Duration::from_secs(3600),
+        reprobe_every: 10_000,
+        raw_window,
+        max_merged,
+        min_new: 4,
+        policy: StreamPolicy::default(),
+    }
+}
+
+/// Acceptance: under 2x-capacity churn the table never exceeds its
+/// capacity and per-session state never exceeds its ring/merged bounds,
+/// so total memory is bounded by
+/// `max_sessions * (raw_window + max_merged)` floats regardless of how
+/// many sessions or points ever arrived.
+#[test]
+fn eviction_bounds_memory_under_2x_churn() {
+    let (cap, raw_window, max_merged) = (16usize, 64usize, 96usize);
+    let mut m = SessionManager::new(small_cfg(cap, raw_window, max_merged)).unwrap();
+    let now = Instant::now();
+    let mut rng = Rng::new(23);
+    let churn = 2 * cap;
+    for id in 0..churn as u64 {
+        // long-lived appends: each session sees far more points than its
+        // retention bounds
+        for _ in 0..6 {
+            let pts: Vec<f32> = (0..48).map(|_| rng.normal() as f32).collect();
+            m.append(id, &pts, now).unwrap();
+        }
+        assert!(m.len() <= cap, "table exceeded capacity at id {id}");
+        // every retained session respects its per-session bounds
+        for sid in 0..=id {
+            if let Some(s) = m.session(sid) {
+                assert!(s.merged_len() <= max_merged, "session {sid} merged overflow");
+                assert!(s.merge().raw_len() >= s.merged_len());
+            }
+        }
+    }
+    let stats = m.stats();
+    assert_eq!(stats.admitted, churn as u64);
+    assert_eq!(stats.evicted_capacity, cap as u64, "exactly the overflow was evicted");
+    assert_eq!(m.len(), cap);
+    // the survivors are the most recently admitted half
+    for id in cap as u64..churn as u64 {
+        assert!(m.session(id).is_some(), "recent session {id} missing");
+    }
+    // a hard upper bound on retained float state
+    let bound = cap * (raw_window + max_merged);
+    let held: usize = (0..churn as u64)
+        .filter_map(|id| m.session(id))
+        .map(|s| s.merged_len() + raw_window)
+        .sum();
+    assert!(held <= bound, "retained state {held} floats exceeds bound {bound}");
+}
+
+#[test]
+fn ttl_and_lru_interact_sanely() {
+    let mut m = SessionManager::new(StreamingConfig {
+        session_ttl: Duration::from_millis(50),
+        ..small_cfg(4, 32, 64)
+    })
+    .unwrap();
+    let t0 = Instant::now();
+    let mut rng = Rng::new(29);
+    for id in 0..4u64 {
+        let pts: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+        m.admit(id, &pts, t0).unwrap();
+    }
+    // keep 0 and 1 fresh; 2 and 3 go stale
+    let later = t0 + Duration::from_millis(100);
+    m.append(0, &[1.0], later).unwrap();
+    m.append(1, &[1.0], later).unwrap();
+    assert_eq!(m.evict_expired(later), 2);
+    assert!(m.session(0).is_some() && m.session(1).is_some());
+    assert!(m.session(2).is_none() && m.session(3).is_none());
+    assert_eq!(m.stats().evicted_ttl, 2);
+    // admission on a full-but-fresh table still evicts LRU, never panics
+    for id in 10..13u64 {
+        let pts: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+        m.admit(id, &pts, later).unwrap();
+    }
+    assert_eq!(m.len(), 4);
+}
+
+/// The scheduler + staged pipeline under realistic churn: many sessions
+/// at mixed fill levels, partial batches, metrics accounting.
+#[test]
+fn continuous_batching_serves_mixed_fill_levels() {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let mut rng = Rng::new(31);
+    let sessions = 9u64;
+    let mut sent_points = 0usize;
+    for round in 0..6 {
+        for id in 0..sessions {
+            // uneven feed: session id gets id-dependent chunk sizes, so
+            // fill levels differ when batches form
+            let n = 2 + ((id as usize + round) % 5);
+            sent_points += n;
+            let pts: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            tx.send(StreamEvent::Append { session: id, points: pts }).unwrap();
+        }
+    }
+    drop(tx);
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let delivered: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = Arc::clone(&delivered);
+    let meta = VariantMeta { capacity: 4, m: 32 };
+    run_stream_stages(
+        rx,
+        meta,
+        small_cfg(16, 64, 64),
+        tomers::runtime::WorkerPool::global(),
+        Arc::clone(&metrics),
+        |step| {
+            // slab invariants hold on every step
+            assert!(step.rows >= 1 && step.rows <= 4);
+            assert_eq!(step.slab.len(), 4 * 32);
+            assert_eq!(step.sizes.len(), 4 * 32);
+            assert_eq!(step.sessions.len(), step.rows);
+            for r in 0..step.rows {
+                let fill = step.fills[r];
+                assert!(fill >= 1 && fill <= 32);
+                let sizes = &step.sizes[r * 32..(r + 1) * 32];
+                assert!(sizes[32 - fill..].iter().all(|&s| s > 0.0), "real tokens sized");
+                assert!(sizes[..32 - fill].iter().all(|&s| s == 0.0), "padding size 0");
+            }
+            for p in step.rows..4 {
+                assert!(step.sizes[p * 32..(p + 1) * 32].iter().all(|&s| s == 0.0));
+            }
+            Ok(vec![vec![1.0f32; 8]; step.rows])
+        },
+        move |id, f| {
+            assert_eq!(f.len(), 8);
+            lock(&sink).push(id);
+        },
+    )
+    .unwrap();
+    let got = lock(&delivered);
+    // every session got at least one rolling forecast
+    for id in 0..sessions {
+        assert!(got.iter().any(|&s| s == id), "session {id} starved");
+    }
+    let mx = lock(&metrics);
+    assert_eq!(mx.decode_rows(), got.len());
+    assert!(mx.decode_steps() >= (sessions as usize + 3) / 4);
+    assert!(mx.decode_occupancy() > 0.0);
+    let report = mx.report();
+    assert!(report.contains("streaming:"), "{report}");
+    assert!(report.contains(&format!("points={sent_points}")), "{report}");
+}

@@ -9,13 +9,18 @@
 #   5. cargo doc --no-deps            (rustdoc warnings are errors: the public
 #                                      MergeSpec/MergePlan API stays documented)
 #   6. cargo test  -q                 (unit + property + differential + pool tests)
-#   7. cargo bench --bench merging    (quick mode: acceptance cases only)
+#   7. cargo build --example stream_sessions (the offline streaming demo
+#      must keep compiling in the default build)
+#   8. cargo bench --bench merging    (quick mode: acceptance cases only)
 #      asserts BENCH_merging.json reports speedup_batched >= MIN_SPEEDUP on
 #      the t=8192 d=64 k=16 case (pool-backed batched path), zero
 #      post-warmup thread spawns, and pool p50 <= thread::scope p50 at b=32.
-#   8. cargo bench --bench coordinator (quick) -> BENCH_serving.json;
+#   9. cargo bench --bench coordinator (quick) -> BENCH_serving.json;
 #      asserts staged (merge-while-execute) throughput beats the serial
 #      loop on the balanced row.
+#  10. cargo bench --bench streaming (quick) -> BENCH_streaming.json;
+#      asserts the incremental causal append path is >= MIN_STREAM_RATIO x
+#      faster than full recompute at t=4096, n=16.
 #
 # Usage: scripts/verify.sh [--no-bench]
 set -euo pipefail
@@ -23,6 +28,7 @@ set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
 MIN_SPEEDUP="${MIN_SPEEDUP:-3.0}"
+MIN_STREAM_RATIO="${MIN_STREAM_RATIO:-5.0}"
 
 if ! command -v cargo >/dev/null 2>&1; then
     echo "ERROR: cargo not found on PATH — install a Rust toolchain (>= 1.70)." >&2
@@ -37,8 +43,11 @@ if [[ "${TOMERS_SKIP_LINT:-0}" != "1" ]]; then
         exit 1
     fi
 
-    echo "== lint: cargo clippy -D warnings =="
-    if ! cargo clippy --offline --all-targets -- -D warnings; then
+    echo "== lint: cargo clippy -D warnings -D deprecated =="
+    # -D deprecated explicitly: calls into the pre-PR 3 one-shot merge
+    # wrappers must not creep back in (the differential suite opts in
+    # with a scoped allow(deprecated); nothing else may).
+    if ! cargo clippy --offline --all-targets -- -D warnings -D deprecated; then
         echo "ERROR: clippy findings — fix them (or TOMERS_SKIP_LINT=1 to bypass)" >&2
         exit 1
     fi
@@ -57,6 +66,9 @@ RUSTDOCFLAGS="-D warnings" cargo doc --offline --no-deps --quiet
 
 echo "== tier-1: cargo test -q =="
 cargo test -q --offline
+
+echo "== example gate: cargo build --example stream_sessions =="
+cargo build --offline --release --example stream_sessions
 
 if [[ "${1:-}" == "--no-bench" ]]; then
     echo "OK (bench smoke skipped)"
@@ -79,10 +91,19 @@ if [[ ! -f BENCH_serving.json ]]; then
     exit 1
 fi
 
+echo "== perf smoke: streaming bench (quick) =="
+TOMERS_BENCH_QUICK=1 cargo bench --offline --bench streaming
+
+if [[ ! -f BENCH_streaming.json ]]; then
+    echo "ERROR: bench did not write BENCH_streaming.json" >&2
+    exit 1
+fi
+
 if command -v python3 >/dev/null 2>&1; then
-    python3 - "$MIN_SPEEDUP" <<'EOF'
+    python3 - "$MIN_SPEEDUP" "$MIN_STREAM_RATIO" <<'EOF'
 import json, sys
 min_speedup = float(sys.argv[1])
+min_stream_ratio = float(sys.argv[2])
 
 report = json.load(open("BENCH_merging.json"))
 cases = [c for c in report["cases"] if c["t"] == 8192 and c["d"] == 64 and c["k"] == 16]
@@ -119,6 +140,22 @@ print(f"serving: serial={row['serial_rps']:.1f} req/s staged={row['staged_rps']:
 if row["staged_rps"] <= row["serial_rps"]:
     sys.exit("ERROR: staged pipeline did not beat the serial loop — overlap is broken")
 print("OK: serving overlap gate passed")
+
+streaming = json.load(open("BENCH_streaming.json"))
+acceptance = [c for c in streaming["cases"] if c["t"] == 4096 and c["n"] == 16]
+if not acceptance:
+    sys.exit("ERROR: acceptance case t=4096 n=16 missing from BENCH_streaming.json")
+for c in acceptance:
+    if "incremental_ratio" not in c:
+        sys.exit("ERROR: BENCH_streaming.json case lacks the incremental_ratio field")
+ratio = min(c["incremental_ratio"] for c in acceptance)
+print(f"streaming: incremental append {ratio:.1f}x faster than full recompute "
+      f"at t=4096 n=16 (gated >= {min_stream_ratio}x)")
+if ratio < min_stream_ratio:
+    sys.exit(f"ERROR: incremental append path fell below {min_stream_ratio}x vs recompute")
+aps = streaming.get("sessions", {}).get("appends_per_sec", 0.0)
+print(f"streaming sessions steady state: {aps:.0f} appends/s")
+print("OK: streaming gates passed")
 EOF
 else
     echo "WARN: python3 unavailable — skipping the numeric gates" >&2
