@@ -2,7 +2,7 @@
 //! genomic sequences, then compare local (k=1) against global (k=t/2)
 //! token merging — local merging should be both faster and more accurate.
 //!
-//!     cargo run --release --offline --example genomic_classify [steps]
+//!     cargo run --release --offline --features pjrt --example genomic_classify [steps]
 
 use anyhow::Result;
 use tomers::data::genomic;

@@ -1,8 +1,9 @@
 //! Quickstart: load a compiled chronos-like forecaster, apply token
 //! merging, and compare throughput against the unmerged model.
 //!
-//! Run after `make artifacts`:
-//!     cargo run --release --offline --example quickstart
+//! Run after `make artifacts` (needs a real PJRT binding in
+//! rust/vendor/xla):
+//!     cargo run --release --offline --features pjrt --example quickstart
 
 use anyhow::Result;
 use tomers::data;

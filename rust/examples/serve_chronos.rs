@@ -2,7 +2,7 @@
 //! through merge-rate variants chosen by the spectral-entropy policy —
 //! the serving-system realisation of the paper's dynamic merging (§5.5).
 //!
-//!     cargo run --release --offline --example serve_chronos [n_requests]
+//!     cargo run --release --offline --features pjrt --example serve_chronos [n_requests]
 
 use std::time::Duration;
 

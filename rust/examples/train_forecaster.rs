@@ -3,7 +3,7 @@
 //! train-step artifact, log the loss curve, then serve the trained model
 //! with token merging and report the accuracy/throughput trade-off.
 //!
-//!     cargo run --release --offline --example train_forecaster [steps]
+//!     cargo run --release --offline --features pjrt --example train_forecaster [steps]
 //!
 //! This exercises every layer: L1 similarity kernels (inside the compiled
 //! graphs), the L2 model + merging + Adam graph, and the L3 loop,
