@@ -306,6 +306,7 @@ fn real_stack(policy: MergePolicy) {
         merge_workers: 0,
         merge: tomers::coordinator::default_host_merge(),
         streaming: None,
+        prefer_manifest_spec: true,
     })
     .expect("server");
     let client = handle.client();

@@ -35,6 +35,7 @@ fn main() -> Result<()> {
         merge_workers: 0,
         merge: coordinator::default_host_merge(),
         streaming: None,
+        prefer_manifest_spec: true,
     })?;
     let client = handle.client();
 

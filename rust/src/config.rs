@@ -32,9 +32,14 @@
 //!
 //! The optional `"streaming"` block configures the streaming decode
 //! subsystem (DESIGN.md §9): session-table capacity and TTL, the raw
-//! ring / merged-retention bounds, the decode-readiness threshold and
+//! ring / merged-retention bounds, the decode-readiness threshold, the
+//! per-frame channel count `"d"` (homogeneous across the process), the
+//! decode `"variant"` (which loaded artifact executes stream steps) and
 //! the entropy → causal-merge-threshold ladder
-//! (`streaming::StreamPolicy`).  Omit the block for batch-only serving.
+//! (`streaming::StreamPolicy`).  Under `tomers serve` the block wires
+//! the dual serving loop; omit it for batch-only serving.  The root
+//! `"spec_source"` key (`"manifest"` default | `"config"`) picks which
+//! side wins when a loaded artifact's manifest carries a `merge_spec`.
 //!
 //! **Unknown keys are rejected at every level** with an error naming the
 //! key and the accepted set — a typo like `"entropy_low"` fails loudly
@@ -65,6 +70,10 @@ pub struct ServeFileConfig {
     pub merge: MergeSpec,
     /// streaming decode subsystem (`None` = batch-only serving)
     pub streaming: Option<StreamingConfig>,
+    /// `"spec_source"`: prefer each artifact's `Manifest.merge_spec` over
+    /// the variant declaration (`"manifest"`, the default) or force the
+    /// declaration (`"config"`)
+    pub prefer_manifest_spec: bool,
 }
 
 /// Error unless `v` is a JSON object whose every key is in `allowed`
@@ -195,6 +204,8 @@ pub fn streaming_from_json(v: &Json, path: &str) -> Result<StreamingConfig> {
             "raw_window",
             "max_merged",
             "min_new",
+            "d",
+            "variant",
             "policy",
         ],
     )?;
@@ -245,7 +256,12 @@ pub fn streaming_from_json(v: &Json, path: &str) -> Result<StreamingConfig> {
         raw_window: get_usize("raw_window", defaults.raw_window)?,
         max_merged: get_usize("max_merged", defaults.max_merged)?,
         min_new: get_usize("min_new", defaults.min_new)?,
+        d: get_usize("d", defaults.d)?,
         policy,
+        variant: match v.get("variant") {
+            Some(x) => Some(x.as_str()?.to_string()),
+            None => None,
+        },
     };
     cfg.validate().with_context(|| format!("invalid {path}"))?;
     Ok(cfg)
@@ -263,7 +279,15 @@ impl ServeFileConfig {
         reject_unknown_keys(
             &v,
             "the config root",
-            &["artifact_dir", "policy", "batching", "merge_workers", "merge", "streaming"],
+            &[
+                "artifact_dir",
+                "policy",
+                "batching",
+                "merge_workers",
+                "merge",
+                "streaming",
+                "spec_source",
+            ],
         )?;
         let artifact_dir = PathBuf::from(
             v.get("artifact_dir").and_then(|d| d.as_str().ok()).unwrap_or("artifacts"),
@@ -364,6 +388,20 @@ impl ServeFileConfig {
             .map(|s| streaming_from_json(s, "\"streaming\""))
             .transpose()?;
 
+        // Which source wins when a loaded artifact's manifest carries a
+        // merge_spec: the manifest (default — the artifact is the ground
+        // truth for what was compiled into it) or the config declaration.
+        let prefer_manifest_spec = match v.get("spec_source") {
+            None => true,
+            Some(s) => match s.as_str()? {
+                "manifest" => true,
+                "config" => false,
+                other => bail!(
+                    "\"spec_source\": unknown value {other:?} (manifest | config)"
+                ),
+            },
+        };
+
         Ok(ServeFileConfig {
             artifact_dir,
             policy,
@@ -372,6 +410,7 @@ impl ServeFileConfig {
             merge_workers,
             merge,
             streaming,
+            prefer_manifest_spec,
         })
     }
 
@@ -384,10 +423,16 @@ impl ServeFileConfig {
             merge_workers: self.merge_workers,
             merge: self.merge,
             streaming: self.streaming,
+            prefer_manifest_spec: self.prefer_manifest_spec,
         }
     }
 
-    /// The default config written by `tomers serve --write-config`.
+    /// The default config written by `tomers serve --write-config`.  The
+    /// `"streaming"` block is live under `tomers serve`: it wires stream
+    /// sessions through the dual serving loop, decoding on `"variant"`
+    /// (here the unmerged artifact; `"d"` is its channel count) — drop
+    /// the block for batch-only serving.  `"spec_source"` picks which
+    /// merge-spec source wins when a loaded manifest carries one.
     pub fn example() -> &'static str {
         r#"{
  "artifact_dir": "artifacts",
@@ -403,6 +448,7 @@ impl ServeFileConfig {
  "batching": {"max_wait_ms": 20, "max_queue": 4096},
  "merge_workers": 0,
  "merge": {"mode": "fixed", "k": 8},
+ "spec_source": "manifest",
  "streaming": {
   "max_sessions": 1024,
   "session_ttl_ms": 60000,
@@ -410,6 +456,8 @@ impl ServeFileConfig {
   "raw_window": 1024,
   "max_merged": 4096,
   "min_new": 16,
+  "d": 1,
+  "variant": "chronos_s__r0",
   "policy": {"entropy_lo": 3.0, "entropy_hi": 7.5, "thresholds": [1.1, 0.95, 0.8]}
  }
 }
@@ -437,7 +485,58 @@ mod tests {
         let streaming = cfg.streaming.expect("example carries a streaming block");
         assert_eq!(streaming.max_sessions, 1024);
         assert_eq!(streaming.min_new, 16);
+        assert_eq!(streaming.d, 1);
+        assert_eq!(streaming.variant.as_deref(), Some("chronos_s__r0"));
         assert_eq!(streaming.policy.thresholds, vec![1.1, 0.95, 0.8]);
+        assert!(cfg.prefer_manifest_spec, "the example names the default spec source");
+    }
+
+    #[test]
+    fn spec_source_escape_hatch_parses() {
+        let base = |root_extra: &str| {
+            format!(r#"{{"policy": {{"variants": [{{"name": "a", "r": 0}}]}}{root_extra}}}"#)
+        };
+        // default: the manifest wins
+        let cfg = ServeFileConfig::parse(&base("")).unwrap();
+        assert!(cfg.prefer_manifest_spec);
+        // explicit default
+        let cfg = ServeFileConfig::parse(&base(r#", "spec_source": "manifest""#)).unwrap();
+        assert!(cfg.prefer_manifest_spec);
+        // the escape hatch forces the config declaration
+        let cfg = ServeFileConfig::parse(&base(r#", "spec_source": "config""#)).unwrap();
+        assert!(!cfg.prefer_manifest_spec);
+        // unknown values are rejected with the accepted set named
+        let err = ServeFileConfig::parse(&base(r#", "spec_source": "artifact""#)).unwrap_err();
+        assert!(err.to_string().contains("manifest | config"), "{err}");
+        // wrong-typed values error instead of defaulting
+        assert!(ServeFileConfig::parse(&base(r#", "spec_source": 1"#)).is_err());
+        // the flag survives into the server config
+        let sc = ServeFileConfig::parse(&base(r#", "spec_source": "config""#))
+            .unwrap()
+            .into_server_config();
+        assert!(!sc.prefer_manifest_spec);
+    }
+
+    #[test]
+    fn streaming_d_and_variant_parse_and_validate() {
+        let base = |block: &str| {
+            format!(
+                r#"{{"policy": {{"variants": [{{"name": "a", "r": 0}}]}}, "streaming": {}}}"#,
+                block
+            )
+        };
+        let cfg = ServeFileConfig::parse(&base(r#"{"d": 7, "variant": "a"}"#)).unwrap();
+        let s = cfg.streaming.unwrap();
+        assert_eq!(s.d, 7);
+        assert_eq!(s.variant.as_deref(), Some("a"));
+        // defaults: univariate, variant unset (the policy's first)
+        let cfg = ServeFileConfig::parse(&base("{}")).unwrap();
+        let s = cfg.streaming.unwrap();
+        assert_eq!(s.d, 1);
+        assert!(s.variant.is_none());
+        // d = 0 and wrong types fail at parse time
+        assert!(ServeFileConfig::parse(&base(r#"{"d": 0}"#)).is_err());
+        assert!(ServeFileConfig::parse(&base(r#"{"variant": 3}"#)).is_err());
     }
 
     #[test]

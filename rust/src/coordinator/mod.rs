@@ -30,6 +30,11 @@
 //!   into a staged prep/execute pipeline of the same shape as
 //!   `pipeline::run_stages` — PJRT-free and generic over the device
 //!   closure, like the batch core.
+//! * `serve_loop` — the dual serving loop: when a `"streaming"` block is
+//!   configured, the batch and stream prep stages feed one tagged
+//!   `ReadyWork` channel and a single device thread executes both —
+//!   the topology `tomers serve` runs (PJRT-free, synthetic-device
+//!   testable).
 //! * `metrics`  — latency/throughput accounting shared across the stages,
 //!   including session-level streaming counters.
 
@@ -37,6 +42,7 @@ pub mod batcher;
 pub mod metrics;
 pub mod pipeline;
 pub mod policy;
+pub mod serve_loop;
 #[cfg(feature = "pjrt")]
 pub mod server;
 pub mod stream;
@@ -44,9 +50,12 @@ pub mod stream;
 pub use batcher::{drain_ready, BatcherConfig, DynamicBatcher};
 pub use metrics::Metrics;
 pub use pipeline::{default_host_merge, HostPrep, PrepJob, ReadyBatch, VariantMeta};
-pub use policy::{EntropyCache, MergePolicy, PolicyDecision, Variant};
+pub use policy::{
+    EntropyCache, MergePolicy, PolicyDecision, SpecResolution, SpecSource, Variant,
+};
+pub use serve_loop::{resolve_stream_artifact, run_serve_stages, ReadyWork, StreamArtifact};
 #[cfg(feature = "pjrt")]
-pub use server::{Client, ServerHandle};
+pub use server::{Client, ServerHandle, StreamClient};
 pub use stream::{run_stream_stages, DecodeStep, StreamEvent, StreamScheduler};
 
 use crate::merging::MergeSpec;
@@ -69,9 +78,18 @@ pub struct ServerConfig {
     /// [`pipeline::default_host_merge`])
     pub merge: MergeSpec,
     /// streaming decode subsystem (session-managed continuous batching,
-    /// DESIGN.md §9); `None` = batch-only serving.  `tomers stream` and
-    /// [`stream::run_stream_stages`] consume this block.
+    /// DESIGN.md §9); `None` = batch-only serving.  Under `tomers serve`
+    /// the block selects the dual serving loop
+    /// ([`serve_loop::run_serve_stages`]): stream decode steps share the
+    /// device thread, `WorkerPool` and metrics with the batch pipeline.
+    /// `tomers stream` and [`stream::run_stream_stages`] drive the same
+    /// stages offline.
     pub streaming: Option<StreamingConfig>,
+    /// Prefer each loaded artifact's `Manifest.merge_spec` over the
+    /// config's variant declaration (default `true`; the
+    /// `"spec_source": "config"` escape hatch sets `false`) — see
+    /// [`MergePolicy::prefer_manifest_specs`].
+    pub prefer_manifest_spec: bool,
 }
 
 /// A forecast request: univariate context, horizon fixed by the artifact.

@@ -38,7 +38,7 @@
 //! measured without hardware.
 
 use std::collections::BTreeMap;
-use std::sync::mpsc::{sync_channel, Receiver, Sender};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::Instant;
@@ -214,33 +214,34 @@ impl HostPrep {
     }
 }
 
-/// Run the prep + execute stages until the job channel closes.
-///
-/// * `jobs` — batches from the intake stage (routing + deadline-ordered
-///   dynamic batching).
-/// * `merge` — the serving [`MergeSpec`] for host premerge of over-length
-///   contexts ([`MergeSpec::off`] rejects them instead).
-/// * `execute` — the device stage, running **on the calling thread** (PJRT
-///   handles are not `Send`): takes a prepped batch (mutably, so it may
-///   temporarily move the slab out — e.g. into a host tensor — as long as
-///   it leaves *a* buffer behind for recycling), returns one forecast row
-///   per real request.
-///
-/// A prep failure or execute failure drops that batch (clients observe a
-/// closed response channel, as before) and the pipeline keeps serving.
-/// Metrics are recorded **before** the responses go out, so a client that
-/// drains its responses and immediately asks for a report sees this batch.
-pub fn run_stages<X>(
+/// The spawned half of the batch pipeline: the prep thread's handle plus
+/// the recycle channel the execute side returns slab buffers through.
+/// Produced by [`spawn_prep`].
+pub struct PrepStage {
+    /// send executed slabs back for buffer recycling
+    pub recycle: Sender<Vec<f32>>,
+    /// the prep thread (exits when the job channel closes or the ready
+    /// channel is dropped)
+    pub join: thread::JoinHandle<()>,
+}
+
+/// Spawn the batch-prep thread: it pads/premerges each job into a slab
+/// and sends the [`ReadyBatch`] through `ready_tx` (mapped by `wrap`, so
+/// the batch and stream pipelines can share one ready channel — see
+/// [`super::serve_loop::run_serve_stages`]).  [`run_stages`] is the
+/// single-pipeline composition of this plus an execute loop.
+pub fn spawn_prep<T, W>(
     jobs: Receiver<PrepJob>,
     metas: BTreeMap<String, VariantMeta>,
     merge: MergeSpec,
     prep_slots: usize,
     pool: &'static WorkerPool,
-    metrics: Arc<Mutex<Metrics>>,
-    mut execute: X,
-) -> Result<()>
+    ready_tx: SyncSender<T>,
+    wrap: W,
+) -> Result<PrepStage>
 where
-    X: FnMut(&mut ReadyBatch) -> Result<Vec<Vec<f32>>>,
+    T: Send + 'static,
+    W: Fn(ReadyBatch) -> T + Send + 'static,
 {
     merge.validate()?;
     // The prep stage derives the premerge schedule per (context length,
@@ -256,13 +257,12 @@ where
         "serving merge spec must be Off or a schedule-free FixedR template \
          (the premerge schedule is derived per request shape)"
     );
-    let (ready_tx, ready_rx) = sync_channel::<ReadyBatch>(1);
     let (slab_tx, slab_rx) = std::sync::mpsc::channel::<Vec<f32>>();
     for _ in 0..SLAB_BUFFERS {
         let _ = slab_tx.send(Vec::new());
     }
     let prep_slab_tx = slab_tx.clone();
-    let prep = thread::Builder::new()
+    let join = thread::Builder::new()
         .name("tomers-prep".into())
         .spawn(move || {
             let mut hp = HostPrep::new(prep_slots, merge);
@@ -288,7 +288,7 @@ where
                             rows,
                             premerged,
                         };
-                        if ready_tx.send(ready).is_err() {
+                        if ready_tx.send(wrap(ready)).is_err() {
                             return;
                         }
                     }
@@ -301,44 +301,93 @@ where
             }
         })
         .map_err(|e| anyhow!("spawning prep thread: {e}"))?;
+    Ok(PrepStage { recycle: slab_tx, join })
+}
 
-    for mut ready in ready_rx.iter() {
-        let result = execute(&mut ready);
-        let ReadyBatch { variant, batch, slab, rows, .. } = ready;
-        match result {
-            Ok(forecasts) if forecasts.len() >= rows => {
-                // latencies measured (and recorded) before the sends, so a
-                // report requested right after the last response includes
-                // this batch
-                let latencies: Vec<f64> =
-                    batch.iter().map(|(_, t0, _)| t0.elapsed().as_secs_f64()).collect();
-                lock(&metrics).record_batch(&variant, rows, &latencies);
-                for (((req, _, rtx), forecast), latency) in
-                    batch.into_iter().zip(forecasts).zip(latencies)
-                {
-                    let _ = rtx.send(ForecastResponse {
-                        id: req.id,
-                        forecast,
-                        variant: variant.clone(),
-                        latency,
-                        batch_size: rows,
-                    });
-                }
-            }
-            Ok(forecasts) => {
-                eprintln!(
-                    "execute on {variant} returned {} rows for {rows} requests — dropping batch",
-                    forecasts.len()
-                );
-            }
-            Err(e) => {
-                eprintln!("batch execution failed on {variant}: {e:#}");
+/// Execute one prepped batch and send the responses — the execute-stage
+/// body shared by [`run_stages`] and the dual serving loop.  Returns the
+/// slab buffer for recycling, whatever happened.  A failed execute drops
+/// the batch (clients observe a closed response channel).  Metrics are
+/// recorded **before** the responses go out, so a client that drains its
+/// responses and immediately asks for a report sees this batch.
+pub(crate) fn execute_and_respond<X>(
+    execute: &mut X,
+    ready: ReadyBatch,
+    metrics: &Mutex<Metrics>,
+) -> Vec<f32>
+where
+    X: FnMut(&mut ReadyBatch) -> Result<Vec<Vec<f32>>>,
+{
+    let mut ready = ready;
+    let result = execute(&mut ready);
+    let ReadyBatch { variant, batch, slab, rows, .. } = ready;
+    match result {
+        Ok(forecasts) if forecasts.len() >= rows => {
+            let latencies: Vec<f64> =
+                batch.iter().map(|(_, t0, _)| t0.elapsed().as_secs_f64()).collect();
+            lock(metrics).record_batch(&variant, rows, &latencies);
+            for (((req, _, rtx), forecast), latency) in
+                batch.into_iter().zip(forecasts).zip(latencies)
+            {
+                let _ = rtx.send(ForecastResponse {
+                    id: req.id,
+                    forecast,
+                    variant: variant.clone(),
+                    latency,
+                    batch_size: rows,
+                });
             }
         }
-        let _ = slab_tx.send(slab);
+        Ok(forecasts) => {
+            eprintln!(
+                "execute on {variant} returned {} rows for {rows} requests — dropping batch",
+                forecasts.len()
+            );
+        }
+        Err(e) => {
+            eprintln!("batch execution failed on {variant}: {e:#}");
+        }
     }
-    drop(slab_tx);
-    prep.join().map_err(|_| anyhow!("prep thread panicked"))?;
+    slab
+}
+
+/// Run the prep + execute stages until the job channel closes.
+///
+/// * `jobs` — batches from the intake stage (routing + deadline-ordered
+///   dynamic batching).
+/// * `merge` — the serving [`MergeSpec`] for host premerge of over-length
+///   contexts ([`MergeSpec::off`] rejects them instead).
+/// * `execute` — the device stage, running **on the calling thread** (PJRT
+///   handles are not `Send`): takes a prepped batch (mutably, so it may
+///   temporarily move the slab out — e.g. into a host tensor — as long as
+///   it leaves *a* buffer behind for recycling), returns one forecast row
+///   per real request.
+///
+/// A prep failure or execute failure drops that batch (clients observe a
+/// closed response channel, as before) and the pipeline keeps serving.
+/// When the server also runs stream sessions it uses
+/// [`super::serve_loop::run_serve_stages`], which multiplexes this
+/// pipeline with the streaming decode stages on one device thread.
+pub fn run_stages<X>(
+    jobs: Receiver<PrepJob>,
+    metas: BTreeMap<String, VariantMeta>,
+    merge: MergeSpec,
+    prep_slots: usize,
+    pool: &'static WorkerPool,
+    metrics: Arc<Mutex<Metrics>>,
+    mut execute: X,
+) -> Result<()>
+where
+    X: FnMut(&mut ReadyBatch) -> Result<Vec<Vec<f32>>>,
+{
+    let (ready_tx, ready_rx) = sync_channel::<ReadyBatch>(1);
+    let prep = spawn_prep(jobs, metas, merge, prep_slots, pool, ready_tx, |b| b)?;
+    for ready in ready_rx.iter() {
+        let slab = execute_and_respond(&mut execute, ready, &metrics);
+        let _ = prep.recycle.send(slab);
+    }
+    drop(prep.recycle);
+    prep.join.join().map_err(|_| anyhow!("prep thread panicked"))?;
     Ok(())
 }
 

@@ -8,7 +8,8 @@
 //! statistic and select the compiled merge-rate variant — a static-shape
 //! realisation of §5.5 per-batch dynamic merging (DESIGN.md §3b).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::fmt;
 
 use crate::merging::MergeSpec;
 use crate::signal;
@@ -104,6 +105,111 @@ impl MergePolicy {
 
     pub fn variant_names(&self) -> Vec<String> {
         self.variants.iter().map(|v| v.name.clone()).collect()
+    }
+
+    /// Reconcile each variant's declared spec with the spec its loaded
+    /// artifact manifest carries (`Manifest.merge_spec`), keyed by
+    /// variant name.  By default the **manifest wins** — the artifact is
+    /// the ground truth for what was actually compiled into it, and a
+    /// config declaration that disagrees is at best stale; pass
+    /// `prefer_manifest = false` (the `"spec_source": "config"` escape
+    /// hatch) to force the config's declaration instead, e.g. while
+    /// migrating mislabeled artifacts.
+    ///
+    /// Returns one [`SpecResolution`] per variant that has a manifest
+    /// spec (variants without one always keep their declaration), so the
+    /// caller can log which source won for every routed artifact.  Note
+    /// the entropy bands still follow the variant *list order* — a
+    /// manifest spec that changes a variant's aggressiveness does not
+    /// re-sort the ladder.
+    pub fn prefer_manifest_specs(
+        &mut self,
+        manifest_specs: &BTreeMap<String, MergeSpec>,
+        prefer_manifest: bool,
+    ) -> Vec<SpecResolution> {
+        let mut resolutions = Vec::new();
+        for variant in &mut self.variants {
+            let Some(manifest) = manifest_specs.get(&variant.name) else {
+                continue;
+            };
+            let declared = variant.spec.clone();
+            let source = if prefer_manifest { SpecSource::Manifest } else { SpecSource::Config };
+            if prefer_manifest {
+                variant.spec = manifest.clone();
+            }
+            resolutions.push(SpecResolution {
+                variant: variant.name.clone(),
+                source,
+                declared,
+                manifest: manifest.clone(),
+            });
+        }
+        resolutions
+    }
+}
+
+/// Which side won a [`MergePolicy::prefer_manifest_specs`] reconciliation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpecSource {
+    /// the artifact manifest's `merge_spec` (the default)
+    Manifest,
+    /// the config file's variant declaration (`"spec_source": "config"`)
+    Config,
+}
+
+/// The outcome of reconciling one variant's spec sources — [`fmt::Display`]
+/// renders the loud per-variant log line the server emits at startup.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpecResolution {
+    /// variant (artifact) name
+    pub variant: String,
+    /// which source won
+    pub source: SpecSource,
+    /// what the config declared
+    pub declared: MergeSpec,
+    /// what the artifact manifest carries
+    pub manifest: MergeSpec,
+}
+
+impl SpecResolution {
+    /// The spec the policy routes with after reconciliation.
+    pub fn chosen(&self) -> &MergeSpec {
+        match self.source {
+            SpecSource::Manifest => &self.manifest,
+            SpecSource::Config => &self.declared,
+        }
+    }
+
+    /// Whether the two sources disagreed (the interesting case to log).
+    pub fn disagreed(&self) -> bool {
+        self.declared != self.manifest
+    }
+}
+
+impl fmt::Display for SpecResolution {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let (winner, note) = match self.source {
+            SpecSource::Manifest => ("manifest merge_spec", "default"),
+            SpecSource::Config => ("config declaration", "forced by spec_source=\"config\""),
+        };
+        if self.disagreed() {
+            write!(
+                f,
+                "variant {}: {winner} wins ({note}) — using {:?} (manifest carries {:?}, \
+                 config declared {:?})",
+                self.variant,
+                self.chosen().mode,
+                self.manifest.mode,
+                self.declared.mode,
+            )
+        } else {
+            write!(
+                f,
+                "variant {}: {winner} wins ({note}) — manifest and config agree on {:?}",
+                self.variant,
+                self.chosen().mode,
+            )
+        }
     }
 }
 
@@ -297,6 +403,45 @@ mod tests {
             policy.variants[2].spec.mode,
             crate::merging::MergeMode::Dynamic { .. }
         ));
+    }
+
+    #[test]
+    fn manifest_specs_win_by_default_config_wins_when_forced() {
+        use crate::merging::{MergeMode, MergeSpec};
+        let manifest_specs: BTreeMap<String, MergeSpec> = [
+            // r32's artifact disagrees with its declaration
+            ("chronos_s__r32".to_string(), MergeSpec::dynamic(0.9, 1).with_causal()),
+            // r128's artifact agrees
+            ("chronos_s__r128".to_string(), MergeSpec::single(128, MergeSpec::DEFAULT_K)),
+        ]
+        .into();
+
+        // default: the manifest is the ground truth
+        let mut policy = MergePolicy::uniform(variants(), 2.0, 7.0);
+        let res = policy.prefer_manifest_specs(&manifest_specs, true);
+        assert_eq!(res.len(), 2, "one resolution per manifest-spec variant");
+        assert!(res.iter().all(|r| r.source == SpecSource::Manifest));
+        assert!(
+            matches!(policy.variants[1].spec.mode, MergeMode::Dynamic { .. }),
+            "the routed spec must be the manifest's"
+        );
+        assert_eq!(policy.variants[2].spec.total_r(), 128);
+        // r0 has no manifest spec: declaration kept, no resolution
+        assert!(policy.variants[0].spec.is_off());
+        let r32 = res.iter().find(|r| r.variant == "chronos_s__r32").unwrap();
+        assert!(r32.disagreed());
+        assert!(format!("{r32}").contains("manifest merge_spec wins"), "{r32}");
+        let r128 = res.iter().find(|r| r.variant == "chronos_s__r128").unwrap();
+        assert!(!r128.disagreed());
+
+        // escape hatch: the config declaration is forced
+        let mut policy = MergePolicy::uniform(variants(), 2.0, 7.0);
+        let res = policy.prefer_manifest_specs(&manifest_specs, false);
+        assert!(res.iter().all(|r| r.source == SpecSource::Config));
+        assert_eq!(policy.variants[1].spec.total_r(), 32, "declaration must survive");
+        let r32 = res.iter().find(|r| r.variant == "chronos_s__r32").unwrap();
+        assert_eq!(r32.chosen(), &r32.declared);
+        assert!(format!("{r32}").contains("spec_source"), "{r32}");
     }
 
     #[test]

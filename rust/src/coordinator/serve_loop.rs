@@ -1,0 +1,217 @@
+//! The dual serving loop: batch requests and stream sessions multiplexed
+//! onto **one** device thread (DESIGN.md §9).
+//!
+//! PJRT handles are not `Send`, so a serving process has exactly one
+//! thread that may touch the engine.  When a `"streaming"` block is
+//! configured, that thread must drain two producers — the batch prep
+//! stage ([`pipeline::spawn_prep`]) and the stream prep stage
+//! ([`stream::spawn_stream_prep`]) — so both wrap their output into one
+//! [`ReadyWork`] channel and the execute loop dispatches on the variant:
+//!
+//! ```text
+//!  intake thread ──jobs──► batch prep ──┐ ReadyWork   execute thread
+//!  (route+batch)           (slab fill)  ├───────────► Batch  -> respond
+//!  stream clients ──────► stream prep ──┘  (depth 2)  Stream -> deliver
+//!  (append events)        (decode steps)    ▲               │
+//!                              ▲            └── recycle ────┘
+//!                              └──── per-stage slab channels
+//! ```
+//!
+//! Each prep stage keeps its own recycle channel and two slab buffers, so
+//! the merge-while-execute overlap of both pipelines is preserved: batch
+//! N+1's slab fill and the next decode step's assembly both proceed while
+//! the device runs.  The shared ready channel has depth
+//! [`SERVE_QUEUE_DEPTH`] (one slot per producer).
+//!
+//! Everything here is PJRT-free and generic over the device closures:
+//! `tests/serve_stream.rs` drives the identical machinery with synthetic
+//! devices, which is how the server wiring is pinned without hardware.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::metrics::Metrics;
+use super::pipeline::{self, PrepJob, ReadyBatch, VariantMeta};
+use super::policy::MergePolicy;
+use super::stream::{self, DecodeStep, StreamEvent};
+use crate::merging::MergeSpec;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::pool::WorkerPool;
+use crate::streaming::StreamingConfig;
+
+/// One unit of device work, tagged by which pipeline produced it.
+pub enum ReadyWork {
+    /// a prepped one-shot forecast batch
+    Batch(ReadyBatch),
+    /// an assembled streaming decode step
+    Stream(DecodeStep),
+}
+
+/// What startup resolved about the artifact that executes stream decode
+/// steps (see [`resolve_stream_artifact`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StreamArtifact {
+    /// variant (artifact) name executing decode steps
+    pub variant: String,
+    /// decode-step geometry: the artifact's batch capacity and `m`
+    /// (context tokens — `m * d` values per row)
+    pub meta: VariantMeta,
+    /// the artifact consumes the `(capacity, m)` size array as a second
+    /// input (so it can mask padding); plain artifacts get values only
+    pub size_aware: bool,
+}
+
+/// Resolve which loaded artifact executes stream decode steps
+/// (`"streaming"."variant"`, defaulting to the policy's first variant)
+/// and check it is streaming-capable: input 0 a `(capacity, m * d)`
+/// value slab (trailing dims flattened), optionally a second
+/// `(capacity, m)` size input that consumes the decode step's size
+/// array.  This is the startup **gate** that replaced the old
+/// warn-and-ignore path: a configured `"streaming"` block with no loaded
+/// streaming-capable artifact is an error, never a silent no-op.
+pub fn resolve_stream_artifact(
+    manifests: &BTreeMap<String, &Manifest>,
+    policy: &MergePolicy,
+    scfg: &StreamingConfig,
+) -> Result<StreamArtifact> {
+    ensure!(
+        !policy.variants.is_empty(),
+        "streaming serve needs at least one loaded variant"
+    );
+    let variant = match &scfg.variant {
+        Some(v) => v.clone(),
+        None => policy.variants[0].name.clone(),
+    };
+    let manifest = manifests.get(&variant).ok_or_else(|| {
+        anyhow!(
+            "the \"streaming\" block needs a loaded streaming-capable artifact, but \
+             variant {variant:?} is not among the loaded variants {:?} — name one via \
+             \"streaming\".\"variant\" or drop the block for batch-only serving",
+            policy.variant_names()
+        )
+    })?;
+    let inputs = &manifest.inputs;
+    ensure!(
+        !inputs.is_empty() && inputs[0].shape.len() >= 2,
+        "artifact {variant}: input 0 shape {:?} is not a (batch, context) slab — not \
+         streaming-capable",
+        inputs.first().map(|i| i.shape.clone()).unwrap_or_default()
+    );
+    let capacity = manifest.batch();
+    let row_elems: usize = inputs[0].shape[1..].iter().product();
+    ensure!(
+        inputs[0].shape[0] == capacity && row_elems >= 1,
+        "artifact {variant}: input 0 shape {:?} disagrees with its batch capacity \
+         {capacity} — not streaming-capable",
+        inputs[0].shape
+    );
+    ensure!(
+        row_elems % scfg.d == 0,
+        "artifact {variant}: {row_elems} values per row is not a whole number of \
+         d = {} channels (streaming d must match the artifact's channel count)",
+        scfg.d
+    );
+    let m = row_elems / scfg.d;
+    ensure!(
+        inputs.len() <= 2,
+        "artifact {variant}: {} inputs — streaming decode feeds (values) or \
+         (values, sizes) only",
+        inputs.len()
+    );
+    let size_aware = inputs.len() == 2;
+    if size_aware {
+        let size_elems: usize = inputs[1].shape[1..].iter().product();
+        ensure!(
+            inputs[1].shape[0] == capacity && size_elems == m,
+            "artifact {variant}: second input shape {:?} is not the (batch, m = {m}) \
+             size array streaming decode produces",
+            inputs[1].shape
+        );
+    }
+    Ok(StreamArtifact { variant, meta: VariantMeta { capacity, m }, size_aware })
+}
+
+/// Depth of the shared ready channel: one slot per producing prep stage,
+/// so neither pipeline can monopolize the device backlog.
+pub const SERVE_QUEUE_DEPTH: usize = 2;
+
+/// Run the batch **and** streaming pipelines until both input channels
+/// close, executing all device work on the calling thread.
+///
+/// * `jobs` — batches from the intake stage; closing it winds down the
+///   batch prep stage.
+/// * `events` — stream append events; closing it (every sender dropped)
+///   flushes remaining ready sessions and winds down the stream prep
+///   stage.
+/// * `execute_batch` / `execute_stream` — the device stages, running on
+///   the calling thread; both may temporarily move the slab out of the
+///   work item as long as a buffer is left behind for recycling.
+/// * `deliver` — receives each session's rolling forecast.
+///
+/// Failures follow the single-pipeline rules: a failed batch drops its
+/// responses, a failed decode step drops that window (the sessions
+/// reappear on the next step), and the loop keeps serving.  The loop
+/// returns once **both** prep stages have exited.
+#[allow(clippy::too_many_arguments)] // the serving composition root: two
+// pipelines x (inputs, device closure) + shared infrastructure; every
+// caller is a thin wrapper (server.rs, tests) and a builder would only
+// move the argument list into a struct literal of the same size.
+pub fn run_serve_stages<XB, XS, S>(
+    jobs: Receiver<PrepJob>,
+    events: Receiver<StreamEvent>,
+    metas: BTreeMap<String, VariantMeta>,
+    merge: MergeSpec,
+    prep_slots: usize,
+    stream_meta: VariantMeta,
+    stream_cfg: StreamingConfig,
+    pool: &'static WorkerPool,
+    metrics: Arc<Mutex<Metrics>>,
+    mut execute_batch: XB,
+    mut execute_stream: XS,
+    mut deliver: S,
+) -> Result<()>
+where
+    XB: FnMut(&mut ReadyBatch) -> Result<Vec<Vec<f32>>>,
+    XS: FnMut(&mut DecodeStep) -> Result<Vec<Vec<f32>>>,
+    S: FnMut(u64, Vec<f32>),
+{
+    let (ready_tx, ready_rx) = sync_channel::<ReadyWork>(SERVE_QUEUE_DEPTH);
+    let batch_prep = pipeline::spawn_prep(
+        jobs,
+        metas,
+        merge,
+        prep_slots,
+        pool,
+        ready_tx.clone(),
+        ReadyWork::Batch,
+    )?;
+    let stream_prep = stream::spawn_stream_prep(
+        events,
+        stream_meta,
+        stream_cfg,
+        pool,
+        Arc::clone(&metrics),
+        ready_tx,
+        ReadyWork::Stream,
+    )?;
+    for work in ready_rx.iter() {
+        match work {
+            ReadyWork::Batch(ready) => {
+                let slab = pipeline::execute_and_respond(&mut execute_batch, ready, &metrics);
+                let _ = batch_prep.recycle.send(slab);
+            }
+            ReadyWork::Stream(mut step) => {
+                stream::execute_and_deliver(&mut execute_stream, &mut deliver, &mut step);
+                let _ = stream_prep.recycle.send(step);
+            }
+        }
+    }
+    drop(batch_prep.recycle);
+    drop(stream_prep.recycle);
+    batch_prep.join.join().map_err(|_| anyhow!("prep thread panicked"))?;
+    stream_prep.join.join().map_err(|_| anyhow!("stream-prep thread panicked"))?;
+    Ok(())
+}

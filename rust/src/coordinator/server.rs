@@ -1,6 +1,9 @@
-//! Serving front-end: intake thread + staged prep/execute pipeline.
+//! Serving front-end: intake thread + staged prep/execute pipeline, with
+//! stream sessions multiplexed onto the same device thread when a
+//! `"streaming"` block is configured.
 //!
-//! Three threads serve a process (see `pipeline` for the stage core):
+//! Three threads serve a batch-only process (see `pipeline` for the stage
+//! core):
 //!
 //! * **intake** — owns the client channel, routes each request through the
 //!   merge policy, batches per variant, and flushes ready batches **in
@@ -15,8 +18,26 @@
 //!   thread — the standard topology for a single-accelerator serving
 //!   process), runs `model.execute`, dequantizes and responds.
 //!
+//! With a `"streaming"` block a **fourth** thread joins (the stream prep
+//! stage) and the execute thread runs `serve_loop::run_serve_stages`
+//! instead: batch slabs and stream decode steps arrive tagged on one
+//! ready channel and share the device, the `WorkerPool` and the metrics
+//! (DESIGN.md §9).  The stream intake is bounded by `max_queue` like the
+//! batch queue — appends fail fast under backpressure instead of
+//! buffering unbounded events.  Startup *fails* when the block names no
+//! loaded streaming-capable artifact — a configured block can never be a
+//! silent no-op.
+//!
+//! At startup the execute thread reconciles each variant's declared merge
+//! spec with its loaded artifact's `Manifest.merge_spec`
+//! ([`MergePolicy::prefer_manifest_specs`]): the manifest wins by default
+//! (one log line per artifact says which source won), the
+//! `"spec_source": "config"` escape hatch forces the declaration.
+//!
 //! Clients hold a cheap cloneable handle; each request carries its own
-//! response channel.
+//! response channel.  Stream clients hold a [`StreamClient`] from
+//! [`ServerHandle::stream_client`] and read rolling forecasts off
+//! [`ServerHandle::take_stream_forecasts`].
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
@@ -24,15 +45,18 @@ use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use super::batcher::{self, BatcherConfig, DynamicBatcher};
 use super::metrics::Metrics;
 use super::pipeline::{self, Pending, PrepJob, ReadyBatch, VariantMeta};
-use super::policy::EntropyCache;
+use super::policy::{EntropyCache, MergePolicy};
+use super::serve_loop;
+use super::stream::{DecodeStep, StreamEvent};
 use super::{ForecastRequest, ForecastResponse, ServerConfig};
+use crate::merging::MergeSpec;
 use crate::runtime::pool::WorkerPool;
-use crate::runtime::Engine;
+use crate::runtime::{Engine, Model};
 use crate::tensor::Tensor;
 use crate::util::lock_ignore_poison;
 
@@ -78,9 +102,58 @@ impl Client {
     }
 }
 
+/// Stream-session handle: append observation frames to a session (the
+/// session is admitted on first sight).  Rolling forecasts come back on
+/// the channel from [`ServerHandle::take_stream_forecasts`].
+///
+/// The intake is **bounded** (`max_queue` pending events, mirroring the
+/// batch path's queue bound): when the device falls behind and the
+/// buffer fills, [`StreamClient::append`] fails fast with a
+/// backpressure error instead of queueing unbounded memory — the caller
+/// retries or sheds.
+#[derive(Clone)]
+pub struct StreamClient {
+    tx: mpsc::SyncSender<StreamEvent>,
+    /// channels per frame of this serving process (homogeneous-`d`)
+    d: usize,
+}
+
+impl StreamClient {
+    /// Channels per frame this serving process accepts.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Append `points` (a whole number of `d`-channel interleaved frames
+    /// for the configured streaming `d`) to `session`.  A ragged length
+    /// errs **here**, at the caller — the prep thread would only be able
+    /// to log it, invisibly to the client.  Errs without blocking when
+    /// the bounded intake is full (backpressure).
+    pub fn append(&self, session: u64, points: Vec<f32>) -> Result<()> {
+        ensure!(
+            points.len() % self.d == 0,
+            "session {session}: {} values is not a whole number of {}-channel frames \
+             (this serving process runs homogeneous d = {} sessions)",
+            points.len(),
+            self.d,
+            self.d
+        );
+        self.tx.try_send(StreamEvent::Append { session, points }).map_err(|e| match e {
+            mpsc::TrySendError::Full(_) => {
+                anyhow!("stream intake full (max_queue events pending) — backpressure, retry")
+            }
+            mpsc::TrySendError::Disconnected(_) => anyhow!("stream serving stopped"),
+        })
+    }
+}
+
 pub struct ServerHandle {
     tx: mpsc::Sender<Msg>,
     join: Option<thread::JoinHandle<Result<()>>>,
+    stream_tx: Option<mpsc::SyncSender<StreamEvent>>,
+    /// channels per frame of the streaming subsystem (handed to clients)
+    stream_d: usize,
+    stream_forecasts: Option<mpsc::Receiver<(u64, Vec<f32>)>>,
 }
 
 impl ServerHandle {
@@ -88,7 +161,26 @@ impl ServerHandle {
         Client { tx: self.tx.clone() }
     }
 
+    /// A stream-session client (`None` when no `"streaming"` block is
+    /// configured).  All clones must be dropped before [`Self::shutdown`]
+    /// can wind the stream prep stage down.
+    pub fn stream_client(&self) -> Option<StreamClient> {
+        self.stream_tx.clone().map(|tx| StreamClient { tx, d: self.stream_d })
+    }
+
+    /// Take the rolling-forecast channel: one `(session, forecast)` per
+    /// decoded session row.  `None` when streaming is unconfigured or the
+    /// channel was already taken.
+    pub fn take_stream_forecasts(&mut self) -> Option<mpsc::Receiver<(u64, Vec<f32>)>> {
+        self.stream_forecasts.take()
+    }
+
     pub fn shutdown(mut self) -> Result<()> {
+        // Close the stream intake first so the stream prep stage flushes
+        // its ready sessions and exits (the dual loop ends only when both
+        // input channels are closed).
+        self.stream_tx = None;
+        self.stream_forecasts = None;
         let _ = self.tx.send(Msg::Shutdown);
         match self.join.take() {
             Some(j) => j.join().map_err(|_| anyhow!("server thread panicked"))?,
@@ -98,19 +190,10 @@ impl ServerHandle {
 }
 
 /// Spawn the serving threads.  The execute thread loads every variant
-/// named by the policy and binds its weights before intake accepts
-/// requests.
+/// named by the policy, binds its weights, reconciles each variant's
+/// merge spec against its manifest, and — when streaming is configured —
+/// resolves the stream-decode artifact before intake accepts requests.
 pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
-    // The batch server does not drive stream sessions yet (the streaming
-    // scheduler is wired via `tomers stream` / `run_stream_stages`); say
-    // so loudly rather than letting a configured block silently do
-    // nothing.
-    if config.streaming.is_some() {
-        eprintln!(
-            "WARN: the \"streaming\" config block is not yet wired into `tomers serve` — \
-             it only takes effect under `tomers stream` (see DESIGN.md §9)"
-        );
-    }
     // The pool is process-wide; size it here if the config asks and the
     // pool does not exist yet.
     if config.merge_workers > 0 {
@@ -125,12 +208,24 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
         );
     }
 
+    let has_streaming = config.streaming.is_some();
+    let stream_d = config.streaming.as_ref().map(|s| s.d).unwrap_or(1);
     let (tx, rx) = mpsc::channel::<Msg>();
     let metrics = Arc::new(Mutex::new(Metrics::new()));
     let (jobs_tx, jobs_rx) = mpsc::sync_channel::<PrepJob>(PREP_QUEUE_DEPTH);
-    let (ready_tx, ready_rx) = mpsc::channel::<Result<BTreeMap<String, VariantMeta>>>();
+    // startup handshake: metas + the manifest-reconciled routing policy
+    type Startup = (BTreeMap<String, VariantMeta>, MergePolicy);
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<Startup>>();
+    // stream plumbing (created unconditionally; the batch-only path drops
+    // its ends so nothing dangles).  The event channel is bounded by the
+    // same max_queue as the batch intake: when the device falls behind,
+    // StreamClient::append fails fast instead of buffering unbounded
+    // events behind a blocked stream-prep thread.
+    let (ev_tx, ev_rx) = mpsc::sync_channel::<StreamEvent>(config.max_queue.max(1));
+    let (fc_tx, fc_rx) = mpsc::channel::<(u64, Vec<f32>)>();
 
-    // Execute thread: owns the engine; prep is spawned inside run_stages.
+    // Execute thread: owns the engine; prep stages are spawned inside
+    // run_stages / run_serve_stages.
     let exec_cfg = config.clone();
     let exec_metrics = Arc::clone(&metrics);
     let exec = thread::Builder::new()
@@ -161,20 +256,83 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
                     }
                 }
             }
-            let _ = ready_tx.send(Ok(metas.clone()));
-            pipeline::run_stages(
-                jobs_rx,
-                metas,
-                exec_cfg.merge.clone(),
-                pool.workers(),
-                pool,
-                exec_metrics,
-                |ready| execute_ready(&models, ready),
-            )
+            // The loader prefers each artifact's Manifest.merge_spec over
+            // the config's variant declaration (default; the
+            // "spec_source": "config" escape hatch flips it) — one loud
+            // line per artifact names which source won.
+            let mut policy = exec_cfg.policy.clone();
+            let manifest_specs: BTreeMap<String, MergeSpec> = models
+                .iter()
+                .filter_map(|(n, m)| m.manifest.merge_spec.clone().map(|s| (n.clone(), s)))
+                .collect();
+            for resolution in
+                policy.prefer_manifest_specs(&manifest_specs, exec_cfg.prefer_manifest_spec)
+            {
+                eprintln!("INFO: {resolution}");
+            }
+            match exec_cfg.streaming.clone() {
+                Some(scfg) => {
+                    // Streaming serve: resolve the decode artifact (a
+                    // startup error when none is capable), then drive
+                    // batch + stream work through one device thread.
+                    let manifests: BTreeMap<String, &crate::runtime::Manifest> =
+                        models.iter().map(|(n, m)| (n.clone(), &m.manifest)).collect();
+                    let art =
+                        match serve_loop::resolve_stream_artifact(&manifests, &policy, &scfg) {
+                            Ok(a) => a,
+                            Err(e) => {
+                                let _ = ready_tx.send(Err(anyhow!("{e:#}")));
+                                return Err(e);
+                            }
+                        };
+                    drop(manifests);
+                    eprintln!(
+                        "INFO: streaming decode wired: variant {} (capacity {}, m {}, d {}{})",
+                        art.variant,
+                        art.meta.capacity,
+                        art.meta.m,
+                        scfg.d,
+                        if art.size_aware { ", size-aware" } else { "" },
+                    );
+                    let _ = ready_tx.send(Ok((metas.clone(), policy)));
+                    let stream_model =
+                        models.get(&art.variant).expect("resolved from this map");
+                    serve_loop::run_serve_stages(
+                        jobs_rx,
+                        ev_rx,
+                        metas,
+                        exec_cfg.merge.clone(),
+                        pool.workers(),
+                        art.meta.clone(),
+                        scfg,
+                        pool,
+                        exec_metrics,
+                        |ready| execute_ready(&models, ready),
+                        |step| execute_stream_step(stream_model, art.size_aware, step),
+                        move |session, forecast| {
+                            let _ = fc_tx.send((session, forecast));
+                        },
+                    )
+                }
+                None => {
+                    drop(ev_rx);
+                    drop(fc_tx);
+                    let _ = ready_tx.send(Ok((metas.clone(), policy)));
+                    pipeline::run_stages(
+                        jobs_rx,
+                        metas,
+                        exec_cfg.merge.clone(),
+                        pool.workers(),
+                        pool,
+                        exec_metrics,
+                        |ready| execute_ready(&models, ready),
+                    )
+                }
+            }
         })
         .map_err(|e| anyhow!("spawning execute thread: {e}"))?;
 
-    let metas = ready_rx
+    let (metas, policy) = ready_rx
         .recv()
         .map_err(|_| anyhow!("execute thread died during startup"))??;
 
@@ -197,8 +355,9 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
             // Routing statistic cache: the full-context FFT per request is
             // the hottest non-model cost on the intake thread.  Entropy is
             // computed on a bounded prefix and memoized by context hash
-            // (see policy.rs).
-            let mut entropy_cache = EntropyCache::for_policy(4096, &cfg.policy);
+            // (see policy.rs).  The policy is the manifest-reconciled one
+            // the execute thread sent back at startup.
+            let mut entropy_cache = EntropyCache::for_policy(4096, &policy);
             'serve: loop {
                 // Poll with a timeout tight enough to honour flush deadlines.
                 let now = Instant::now();
@@ -209,7 +368,7 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
                     .unwrap_or(Duration::from_millis(50));
                 match rx.recv_timeout(timeout) {
                     Ok(Msg::Request(req, t0, rtx)) => {
-                        let decision = cfg.policy.decide_cached(&mut entropy_cache, &req.context);
+                        let decision = policy.decide_cached(&mut entropy_cache, &req.context);
                         let name = decision.variant.name;
                         let capacity = metas
                             .get(&name)
@@ -264,7 +423,13 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
             }
         })
         .map_err(|e| anyhow!("spawning intake thread: {e}"))?;
-    Ok(ServerHandle { tx, join: Some(join) })
+    Ok(ServerHandle {
+        tx,
+        join: Some(join),
+        stream_tx: has_streaming.then_some(ev_tx),
+        stream_d,
+        stream_forecasts: has_streaming.then_some(fc_rx),
+    })
 }
 
 /// The device stage: execute one prepped batch and return a forecast row
@@ -272,7 +437,7 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
 /// afterwards (no per-batch copy — the recycled buffer round-trips through
 /// the tensor).
 fn execute_ready(
-    models: &BTreeMap<String, crate::runtime::Model>,
+    models: &BTreeMap<String, Model>,
     ready: &mut ReadyBatch,
 ) -> Result<Vec<Vec<f32>>> {
     let model = models
@@ -280,7 +445,7 @@ fn execute_ready(
         .ok_or_else(|| anyhow!("no model for variant {}", ready.variant))?;
     let capacity = model.manifest.batch();
     let m = model.manifest.inputs[0].shape[1];
-    anyhow::ensure!(
+    ensure!(
         ready.slab.len() == capacity * m,
         "slab {} != ({capacity}, {m})",
         ready.slab.len()
@@ -291,8 +456,55 @@ fn execute_ready(
     if let Tensor::F32 { data, .. } = x {
         ready.slab = data;
     }
-    let outputs = result?;
-    // chronos family: out0 = logits (b, p, vocab), out1 = scales (b,)
+    forecast_rows(model, result?, ready.rows)
+}
+
+/// The streaming device stage: execute one decode step — values slab
+/// always, the size array too when the artifact is size-aware — and
+/// return one rolling forecast per real session row.  Both buffers
+/// round-trip through the host tensors so the recycle channel keeps its
+/// zero-copy steady state.
+fn execute_stream_step(
+    model: &Model,
+    size_aware: bool,
+    step: &mut DecodeStep,
+) -> Result<Vec<Vec<f32>>> {
+    let in0 = &model.manifest.inputs[0];
+    ensure!(
+        step.slab.len() == in0.elements(),
+        "stream slab {} values != artifact input {:?}",
+        step.slab.len(),
+        in0.shape
+    );
+    let mut inputs = Vec::with_capacity(2);
+    inputs.push(Tensor::from_f32(&in0.shape, std::mem::take(&mut step.slab))?);
+    if size_aware {
+        let in1 = &model.manifest.inputs[1];
+        ensure!(
+            step.sizes.len() == in1.elements(),
+            "stream size array {} values != artifact input {:?}",
+            step.sizes.len(),
+            in1.shape
+        );
+        inputs.push(Tensor::from_f32(&in1.shape, std::mem::take(&mut step.sizes))?);
+    }
+    let result = model.execute(&inputs);
+    // reclaim the buffers for the recycle channel, whatever execute did
+    if size_aware {
+        if let Some(Tensor::F32 { data, .. }) = inputs.pop() {
+            step.sizes = data;
+        }
+    }
+    if let Some(Tensor::F32 { data, .. }) = inputs.pop() {
+        step.slab = data;
+    }
+    forecast_rows(model, result?, step.rows)
+}
+
+/// Post-process device outputs into one forecast row per real request:
+/// chronos-family artifacts dequantize (out0 = logits, out1 = scales),
+/// everything else returns out0's rows directly.
+fn forecast_rows(model: &Model, outputs: Vec<Tensor>, rows: usize) -> Result<Vec<Vec<f32>>> {
     let vocab = model.manifest.config_usize("vocab").unwrap_or(0);
     let forecasts = if vocab > 0 {
         let clip = model
@@ -305,5 +517,5 @@ fn execute_ready(
     } else {
         outputs[0].clone()
     };
-    (0..ready.rows).map(|i| Ok(forecasts.row_f32(i)?.to_vec())).collect()
+    (0..rows).map(|i| Ok(forecasts.row_f32(i)?.to_vec())).collect()
 }

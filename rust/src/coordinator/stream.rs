@@ -19,7 +19,7 @@
 //!   session's incremental causal merge state — never a recompute.
 //! * A **decode step** batches up to `capacity` ready sessions (FIFO by
 //!   oldest unserved data, so a hot session cannot starve a quiet one),
-//!   assembles the `(capacity, m)` merged-context slab **in parallel on
+//!   assembles the `(capacity, m·d)` merged-context slab **in parallel on
 //!   the shared [`WorkerPool`]** (one task per row), and hands it to the
 //!   execute closure through a depth-1 channel with recycled buffers —
 //!   the same double-buffered merge-while-execute shape as the batch
@@ -34,7 +34,7 @@
 //! over the device closure: `tomers stream`, the streaming bench and the
 //! tests drive the identical machinery with a synthetic device.
 
-use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -52,25 +52,45 @@ use crate::util::lock_ignore_poison as lock;
 pub enum StreamEvent {
     /// Observations for a session (admitted on first sight — the
     /// admission probe derives its merge spec from these points).
+    /// `points` is a whole number of `d`-channel interleaved frames for
+    /// the manager's configured `d` (ragged lengths are rejected at
+    /// intake — the homogeneous-`d` design, DESIGN.md §9).
     Append { session: u64, points: Vec<f32> },
 }
 
 /// One assembled decode step: `rows` ready sessions sharing a
-/// `(capacity, m)` slab.
+/// `(capacity, m, d)` slab.
 pub struct DecodeStep {
     /// session ids, one per real row
     pub sessions: Vec<u64>,
-    /// `(capacity, m)` merged-context values; short batches repeat the
-    /// last real row (the batch pipeline's padding convention)
+    /// `(capacity, m * d)` merged-context values (interleaved channels);
+    /// short batches repeat the last real row (the batch pipeline's
+    /// padding convention)
     pub slab: Vec<f32>,
-    /// `(capacity, m)` token sizes; 0 marks padding (both within-row
+    /// `(capacity, m)` per-token sizes; 0 marks padding (both within-row
     /// front padding and whole padding rows)
     pub sizes: Vec<f32>,
     /// real rows
     pub rows: usize,
+    /// channels per token of this step's slab rows
+    pub d: usize,
     /// per-row real-token fill (diagnostics: batch share of sessions
     /// still shorter than m)
     pub fills: Vec<usize>,
+}
+
+impl DecodeStep {
+    /// An empty recyclable step buffer.
+    pub fn empty() -> DecodeStep {
+        DecodeStep {
+            sessions: Vec::new(),
+            slab: Vec::new(),
+            sizes: Vec::new(),
+            rows: 0,
+            d: 1,
+            fills: Vec::new(),
+        }
+    }
 }
 
 /// Number of slab pairs in flight between the stream-prep thread and the
@@ -128,11 +148,14 @@ impl StreamScheduler {
     }
 
     /// Assemble the next decode step into recycled buffers: up to
-    /// `capacity` ready sessions FIFO-fair, slab rows filled in parallel
-    /// on `pool`, sessions marked served.  Returns the real row count
-    /// (0 = nothing ready; `step` untouched beyond its buffers).
+    /// `capacity` ready sessions FIFO-fair, slab rows (`m * d` values
+    /// each, one size per token) filled in parallel on `pool`, sessions
+    /// marked served.  Returns the real row count (0 = nothing ready;
+    /// `step` untouched beyond its buffers).
     pub fn step_into(&mut self, pool: &WorkerPool, now: Instant, step: &mut DecodeStep) -> usize {
         let (capacity, m) = (self.meta.capacity, self.meta.m);
+        let d = self.manager.config().d;
+        let row_len = m * d;
         self.manager.take_ready(capacity, &mut self.ready);
         let rows = self.ready.len();
         if rows == 0 {
@@ -141,8 +164,9 @@ impl StreamScheduler {
         step.sessions.clear();
         step.sessions.extend_from_slice(&self.ready);
         step.rows = rows;
+        step.d = d;
         step.slab.clear();
-        step.slab.resize(capacity * m, 0.0);
+        step.slab.resize(capacity * row_len, 0.0);
         step.sizes.clear();
         step.sizes.resize(capacity * m, 0.0);
         step.fills.clear();
@@ -152,7 +176,7 @@ impl StreamScheduler {
             let tasks: Vec<_> = step
                 .sessions
                 .iter()
-                .zip(step.slab.chunks_mut(m))
+                .zip(step.slab.chunks_mut(row_len))
                 .zip(step.sizes.chunks_mut(m))
                 .zip(step.fills.iter_mut())
                 .map(|(((&id, row), size_row), fill)| {
@@ -166,54 +190,56 @@ impl StreamScheduler {
         // pad short batches by repeating the last real row (values only —
         // padding rows keep size 0)
         for p in rows..capacity {
-            step.slab.copy_within((rows - 1) * m..rows * m, p * m);
+            step.slab.copy_within((rows - 1) * row_len..rows * row_len, p * row_len);
         }
         self.manager.mark_decoded(&step.sessions, now);
         rows
     }
 }
 
-/// Run the streaming intake + decode stages until the event channel
-/// closes, mirroring [`super::pipeline::run_stages`]'s topology: a prep thread
-/// owns the sessions and assembles steps, the **calling thread** runs
-/// `execute` (PJRT handles are not `Send`) and delivers each session's
-/// rolling forecast through `deliver`.
+/// The spawned half of the streaming pipeline: the prep thread's handle
+/// plus the recycle channel the execute side returns step buffers
+/// through.  Produced by [`spawn_stream_prep`].
+pub struct StreamPrepStage {
+    /// send executed steps back for buffer recycling
+    pub recycle: Sender<DecodeStep>,
+    /// the stream-prep thread (exits when the event channel closes or the
+    /// ready channel is dropped)
+    pub join: thread::JoinHandle<()>,
+}
+
+/// Spawn the stream-prep thread: it owns the sessions, absorbs events,
+/// and sends assembled decode steps through `ready_tx` (mapped by `wrap`,
+/// so the batch and stream pipelines can share one ready channel — see
+/// [`super::serve_loop::run_serve_stages`]).  [`run_stream_stages`] is
+/// the single-pipeline composition of this plus an execute loop.
 ///
 /// Decode cadence: a step is emitted as soon as `capacity` sessions are
 /// ready, or — once the intake has drained every pending event — for
-/// whatever is ready (partial batches flush rather than wait for load).
-/// A failed execute drops that step's window (the affected sessions keep
-/// accumulating and reappear on the next step) and the pipeline keeps
-/// serving.  On channel close, remaining ready sessions are flushed
-/// before shutdown.
-pub fn run_stream_stages<X, S>(
+/// whatever is ready (partial batches flush rather than wait for load),
+/// with a `DECODE_MAX_WAIT` (20 ms) deadline so sustained sub-capacity
+/// traffic cannot starve partial batches.  On event-channel close,
+/// remaining ready sessions are flushed before the thread exits.
+pub fn spawn_stream_prep<T, W>(
     events: Receiver<StreamEvent>,
     meta: VariantMeta,
     cfg: StreamingConfig,
     pool: &'static WorkerPool,
     metrics: Arc<Mutex<Metrics>>,
-    mut execute: X,
-    mut deliver: S,
-) -> Result<()>
+    ready_tx: SyncSender<T>,
+    wrap: W,
+) -> Result<StreamPrepStage>
 where
-    X: FnMut(&mut DecodeStep) -> Result<Vec<Vec<f32>>>,
-    S: FnMut(u64, Vec<f32>),
+    T: Send + 'static,
+    W: Fn(DecodeStep) -> T + Send + 'static,
 {
     let mut scheduler = StreamScheduler::new(meta.clone(), cfg)?;
-    let (ready_tx, ready_rx) = sync_channel::<DecodeStep>(1);
     let (slab_tx, slab_rx) = std::sync::mpsc::channel::<DecodeStep>();
     for _ in 0..STREAM_SLAB_BUFFERS {
-        let _ = slab_tx.send(DecodeStep {
-            sessions: Vec::new(),
-            slab: Vec::new(),
-            sizes: Vec::new(),
-            rows: 0,
-            fills: Vec::new(),
-        });
+        let _ = slab_tx.send(DecodeStep::empty());
     }
-    let prep_metrics = Arc::clone(&metrics);
     let prep_slab_tx = slab_tx.clone();
-    let prep = thread::Builder::new()
+    let join = thread::Builder::new()
         .name("tomers-stream-prep".into())
         .spawn(move || {
             let mut open = true;
@@ -267,40 +293,78 @@ where
                         break;
                     }
                     {
-                        let mut mx = lock(&prep_metrics);
+                        let mut mx = lock(&metrics);
                         mx.record_decode_step(rows);
                         mx.set_stream(scheduler.manager().len(), scheduler.manager().stats());
                     }
-                    if ready_tx.send(step).is_err() {
+                    if ready_tx.send(wrap(step)).is_err() {
                         return;
                     }
                 }
             }
         })
         .map_err(|e| anyhow!("spawning stream-prep thread: {e}"))?;
+    Ok(StreamPrepStage { recycle: slab_tx, join })
+}
 
-    for mut step in ready_rx.iter() {
-        match execute(&mut step) {
-            Ok(forecasts) if forecasts.len() >= step.rows => {
-                for (id, forecast) in step.sessions.iter().zip(forecasts) {
-                    deliver(*id, forecast);
-                }
-            }
-            Ok(forecasts) => {
-                eprintln!(
-                    "stream execute returned {} rows for {} sessions — dropping step",
-                    forecasts.len(),
-                    step.rows
-                );
-            }
-            Err(e) => {
-                eprintln!("stream decode step failed: {e:#}");
+/// Execute one decode step and deliver each session's rolling forecast —
+/// the execute-stage body shared by [`run_stream_stages`] and the dual
+/// serving loop.  A failed execute drops that step's window (the affected
+/// sessions keep accumulating and reappear on the next step); the caller
+/// recycles `step` afterwards either way.
+pub(crate) fn execute_and_deliver<X, S>(execute: &mut X, deliver: &mut S, step: &mut DecodeStep)
+where
+    X: FnMut(&mut DecodeStep) -> Result<Vec<Vec<f32>>>,
+    S: FnMut(u64, Vec<f32>),
+{
+    match execute(step) {
+        Ok(forecasts) if forecasts.len() >= step.rows => {
+            for (id, forecast) in step.sessions.iter().zip(forecasts) {
+                deliver(*id, forecast);
             }
         }
-        let _ = slab_tx.send(step);
+        Ok(forecasts) => {
+            eprintln!(
+                "stream execute returned {} rows for {} sessions — dropping step",
+                forecasts.len(),
+                step.rows
+            );
+        }
+        Err(e) => {
+            eprintln!("stream decode step failed: {e:#}");
+        }
     }
-    drop(slab_tx);
-    prep.join().map_err(|_| anyhow!("stream-prep thread panicked"))?;
+}
+
+/// Run the streaming intake + decode stages until the event channel
+/// closes, mirroring [`super::pipeline::run_stages`]'s topology: a prep
+/// thread ([`spawn_stream_prep`]) owns the sessions and assembles steps,
+/// the **calling thread** runs `execute` (PJRT handles are not `Send`)
+/// and delivers each session's rolling forecast through `deliver`.
+/// `tomers serve` uses [`super::serve_loop::run_serve_stages`] instead,
+/// which multiplexes these stages with the batch pipeline on one device
+/// thread.
+pub fn run_stream_stages<X, S>(
+    events: Receiver<StreamEvent>,
+    meta: VariantMeta,
+    cfg: StreamingConfig,
+    pool: &'static WorkerPool,
+    metrics: Arc<Mutex<Metrics>>,
+    mut execute: X,
+    mut deliver: S,
+) -> Result<()>
+where
+    X: FnMut(&mut DecodeStep) -> Result<Vec<Vec<f32>>>,
+    S: FnMut(u64, Vec<f32>),
+{
+    let (ready_tx, ready_rx) = sync_channel::<DecodeStep>(1);
+    let prep = spawn_stream_prep(events, meta, cfg, pool, metrics, ready_tx, |s| s)?;
+    for mut step in ready_rx.iter() {
+        execute_and_deliver(&mut execute, &mut deliver, &mut step);
+        let _ = prep.recycle.send(step);
+    }
+    drop(prep.recycle);
+    prep.join.join().map_err(|_| anyhow!("stream-prep thread panicked"))?;
     Ok(())
 }
 
@@ -319,6 +383,7 @@ mod tests {
             max_merged: 256,
             min_new: 4,
             policy: StreamPolicy::default(),
+            ..StreamingConfig::default()
         }
     }
 
@@ -335,15 +400,10 @@ mod tests {
             sched.apply(StreamEvent::Append { session: id, points: pts }, now).unwrap();
         }
         sched.apply(StreamEvent::Append { session: 3, points: vec![1.0] }, now).unwrap();
-        let mut step = DecodeStep {
-            sessions: Vec::new(),
-            slab: Vec::new(),
-            sizes: Vec::new(),
-            rows: 0,
-            fills: Vec::new(),
-        };
+        let mut step = DecodeStep::empty();
         let rows = sched.step_into(&pool, now, &mut step);
         assert_eq!(rows, 2);
+        assert_eq!(step.d, 1);
         assert_eq!(step.sessions, vec![1, 2]);
         assert_eq!(step.slab.len(), 4 * 8);
         assert_eq!(step.sizes.len(), 4 * 8);
@@ -361,6 +421,45 @@ mod tests {
         }
         // the step marked sessions served: nothing ready now
         assert_eq!(sched.ready_len(), 0);
+    }
+
+    /// Multivariate decode steps: the slab row is `m * d` interleaved
+    /// values with one size per token, homogeneous `d` across the batch.
+    #[test]
+    fn step_assembles_multivariate_rows() {
+        let pool = WorkerPool::new(2);
+        let (capacity, m, d) = (3usize, 8usize, 2usize);
+        let meta = VariantMeta { capacity, m };
+        let cfg = StreamingConfig { d, ..test_cfg() };
+        let mut sched = StreamScheduler::new(meta, cfg).unwrap();
+        let now = Instant::now();
+        let mut rng = Rng::new(5);
+        for id in [1u64, 2] {
+            // 6 frames x 2 channels
+            let pts: Vec<f32> = (0..6 * d).map(|_| rng.normal() as f32).collect();
+            sched.apply(StreamEvent::Append { session: id, points: pts }, now).unwrap();
+        }
+        let mut step = DecodeStep::empty();
+        let rows = sched.step_into(&pool, now, &mut step);
+        assert_eq!(rows, 2);
+        assert_eq!(step.d, d);
+        assert_eq!(step.slab.len(), capacity * m * d, "values are (capacity, m*d)");
+        assert_eq!(step.sizes.len(), capacity * m, "sizes stay per token");
+        // padding rows repeat the last real row's m*d values, size 0
+        assert_eq!(step.slab[2 * m * d..3 * m * d], step.slab[m * d..2 * m * d]);
+        assert!(step.sizes[2 * m..].iter().all(|&s| s == 0.0));
+        for r in 0..rows {
+            let fill = step.fills[r];
+            assert!(fill > 0 && fill <= m);
+            let sz = &step.sizes[r * m..(r + 1) * m];
+            assert!(sz[..m - fill].iter().all(|&s| s == 0.0));
+            assert!(sz[m - fill..].iter().all(|&s| s > 0.0));
+        }
+        // a ragged append (5 scalars against d = 2) errors through apply
+        let err = sched
+            .apply(StreamEvent::Append { session: 9, points: vec![0.0; 5] }, now)
+            .unwrap_err();
+        assert!(err.to_string().contains("2-channel"), "{err}");
     }
 
     #[test]

@@ -20,7 +20,8 @@
 // not trip over newer lint names.  The historical crate-wide
 // `too_many_arguments` allow is gone: merge configuration is a typed
 // `MergeSpec`/`MergePlan` (merging::spec), and the only remaining wide
-// signatures are the kernel innermost layer, each with a scoped,
+// signatures are the kernel innermost layer plus the serving composition
+// root (`coordinator::serve_loop::run_serve_stages`), each with a scoped,
 // justified allow.
 #![allow(unknown_lints)]
 #![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]

@@ -76,8 +76,10 @@ USAGE:
   tomers eval <artifact> <dataset> [--windows N] [--dir artifacts]
   tomers serve [--requests N] [--merge-workers N] [--merge-mode off|fixed]
                [--merge-k N] [--config serve.json] [--write-config serve.json]
+               (a "streaming" config block wires stream sessions into the
+                serving loop; see DESIGN.md §9)
   tomers stream [--sessions N] [--rounds N] [--points N] [--batch N] [--m N]
-                [--merge-workers N] [--config serve.json]
+                [--d N] [--merge-workers N] [--config serve.json]
   tomers bench <table1|fig2|table2|table3|table4|table5|table8|fig4|fig5|fig6|fig7|fig8|fig9|fig15|fig16|fig19|ablation_k|deconly|ablation_bound|all> [--quick] [--dir artifacts]
 
 Datasets: etth1 ettm1 weather electricity traffic (synthetic, DESIGN.md §7)
@@ -205,29 +207,37 @@ fn cmd_stream(args: &Args) -> Result<()> {
     if merge_workers > 0 {
         tomers::runtime::WorkerPool::init_global(merge_workers);
     }
-    let cfg = match args.flag("config") {
+    let mut cfg = match args.flag("config") {
         Some(path) => tomers::config::ServeFileConfig::load(std::path::Path::new(path))?
             .streaming
             .unwrap_or_default(),
         None => StreamingConfig::default(),
     };
+    if let Some(d) = args.flag("d") {
+        cfg.d = d.parse().context("--d")?;
+        ensure!(cfg.d >= 1, "--d must be >= 1");
+    }
+    let d = cfg.d;
     let horizon = 16usize;
 
-    // Mixed workload, half clean half noisy, streamed as append events:
-    // sine sessions should probe into the conservative bands, noise
-    // sessions into the aggressive ones (visible in the reroute/probe
-    // counters and each session's merge compression).
+    // Mixed workload, half clean half noisy, streamed as append events
+    // of `points` d-channel frames: sine sessions should probe into the
+    // conservative bands, noise sessions into the aggressive ones
+    // (visible in the reroute/probe counters and each session's merge
+    // compression).
     let (tx, rx) = std::sync::mpsc::channel();
     let mut rng = tomers::util::Rng::new(17);
     for round in 0..rounds {
         for s in 0..sessions as u64 {
-            let mut pts = Vec::with_capacity(points);
+            let mut pts = Vec::with_capacity(points * d);
             for i in 0..points {
                 let t = (round * points + i) as f64;
-                if s % 2 == 0 {
-                    pts.push((2.0 * std::f64::consts::PI * t / 64.0).sin() as f32);
-                } else {
-                    pts.push(rng.normal() as f32);
+                for _ in 0..d {
+                    if s % 2 == 0 {
+                        pts.push((2.0 * std::f64::consts::PI * t / 64.0).sin() as f32);
+                    } else {
+                        pts.push(rng.normal() as f32);
+                    }
                 }
             }
             tx.send(StreamEvent::Append { session: s, points: pts })
@@ -241,10 +251,11 @@ fn cmd_stream(args: &Args) -> Result<()> {
     let sink = Arc::clone(&delivered);
     let total_points = (sessions * rounds * points) as f64;
     println!(
-        "streaming {sessions} sessions x {rounds} rounds x {points} points \
-         (batch {capacity}, m {m}, synthetic device) ..."
+        "streaming {sessions} sessions x {rounds} rounds x {points} frames \
+         (batch {capacity}, m {m}, d {d}, synthetic device) ..."
     );
     let t0 = Instant::now();
+    let row_len = m * d;
     run_stream_stages(
         rx,
         VariantMeta { capacity, m },
@@ -253,13 +264,15 @@ fn cmd_stream(args: &Args) -> Result<()> {
         Arc::clone(&metrics),
         move |step| {
             // synthetic device: one pass over the slab, "forecast" = the
-            // session's most recent merged token repeated over the horizon
+            // session's most recent merged value repeated over the horizon
             let mut spin = 0.0f32;
             for &v in step.slab.iter() {
                 spin += v * 1e-3;
             }
             std::hint::black_box(spin);
-            Ok((0..step.rows).map(|r| vec![step.slab[(r + 1) * m - 1]; horizon]).collect())
+            Ok((0..step.rows)
+                .map(|r| vec![step.slab[(r + 1) * row_len - 1]; horizon])
+                .collect())
         },
         move |_session, _forecast| *lock(&sink) += 1,
     )?;
@@ -371,7 +384,8 @@ fn cmd_eval(dir: &PathBuf, artifact: &str, ds_name: &str, windows: usize) -> Res
 
 #[cfg(feature = "pjrt")]
 fn cmd_serve_config(config: ServerConfig, requests: usize) -> Result<()> {
-    let handle = coordinator::server::serve(config)?;
+    let streaming = config.streaming.clone();
+    let mut handle = coordinator::server::serve(config)?;
     let client = handle.client();
     println!("serving {requests} mixed-workload requests (config file) ...");
     let mut rng = Rng::new(7);
@@ -384,6 +398,37 @@ fn cmd_serve_config(config: ServerConfig, requests: usize) -> Result<()> {
     }
     for rx in pending {
         let _ = rx.recv();
+    }
+    // A configured "streaming" block is live: demo it alongside the batch
+    // workload — a few sessions streaming d-channel frames through the
+    // same device thread, rolling forecasts counted off the channel.
+    if let Some(scfg) = streaming {
+        let stream = handle.stream_client().expect("streaming configured");
+        let forecasts = handle.take_stream_forecasts().expect("first take");
+        let stream_sessions = 4u64.min(requests.max(1) as u64);
+        let frames = scfg.min_new.max(4);
+        println!(
+            "streaming {stream_sessions} demo sessions x {frames} frames x 8 rounds \
+             (d {}) through the serving loop ...",
+            scfg.d
+        );
+        for _round in 0..8 {
+            for s in 0..stream_sessions {
+                let pts: Vec<f32> =
+                    (0..frames * scfg.d).map(|_| rng.normal() as f32).collect();
+                stream.append(s, pts)?;
+            }
+        }
+        drop(stream);
+        let mut rolling = 0usize;
+        // the server keeps serving while we drain; a short settle window
+        // lets the decode deadline flush partial batches
+        while let Ok((_session, _forecast)) =
+            forecasts.recv_timeout(Duration::from_millis(200))
+        {
+            rolling += 1;
+        }
+        println!("{rolling} rolling forecasts delivered");
     }
     println!("{}", client.metrics_report()?);
     handle.shutdown()?;
@@ -407,6 +452,7 @@ fn cmd_serve(dir: &PathBuf, requests: usize, merge_workers: usize, merge: MergeS
         merge_workers,
         merge,
         streaming: None,
+        prefer_manifest_spec: true,
     })?;
     let client = handle.client();
     println!("serving {requests} mixed-workload requests ...");

@@ -239,18 +239,18 @@ impl IncrementalMerge {
         }
     }
 
-    /// Copy the **last** `m = row.len()` output token values (d == 1
-    /// streaming form) right-aligned into `row`/`size_row` (equal-length
-    /// slices, so a batch slab's disjoint chunks can be filled in
+    /// Copy the **last** `m = size_row.len()` output tokens right-aligned
+    /// into `row`/`size_row` (`row` holds `m * d` interleaved values, one
+    /// size per token, so a batch slab's disjoint chunks can be filled in
     /// parallel).  When fewer than `m` tokens exist, the front is padded
-    /// by repeating the oldest available value — the slab-padding
+    /// by repeating the oldest available token — the slab-padding
     /// convention of `coordinator::pipeline::HostPrep` — with padding
     /// sizes set to 0 so a size-aware consumer can mask them out.
     /// Returns the number of real (unpadded) tokens.
     pub fn context_tail_into(&self, row: &mut [f32], size_row: &mut [f32]) -> usize {
-        assert_eq!(self.d, 1, "context_tail_into is the univariate serving form");
-        let m = row.len();
-        assert_eq!(size_row.len(), m, "row and size_row must have equal length");
+        let d = self.d;
+        let m = size_row.len();
+        assert_eq!(row.len(), m * d, "row must hold m * d values");
         row.fill(0.0);
         size_row.fill(0.0);
         let have = self.len();
@@ -258,23 +258,24 @@ impl IncrementalMerge {
         if take == 0 {
             return 0;
         }
-        // gather the last `take` (value, size) pairs, tail included
+        // gather the last `take` (token, size) pairs, tail included
         let decided = self.sizes.len();
         let from_tail = usize::from(!self.tail.is_empty()).min(take);
         let from_decided = take - from_tail;
         let start = decided - from_decided;
         for (i, p) in (start..decided).enumerate() {
-            row[m - take + i] = self.tokens[p];
+            let dst = (m - take + i) * d;
+            row[dst..dst + d].copy_from_slice(&self.tokens[p * d..(p + 1) * d]);
             size_row[m - take + i] = self.sizes[p];
         }
         if from_tail == 1 {
-            row[m - 1] = self.tail[0];
+            row[(m - 1) * d..m * d].copy_from_slice(&self.tail);
             size_row[m - 1] = self.tail_size;
         }
-        // edge-replicate the oldest real value across the front padding
-        let edge = row[m - take];
-        for v in row.iter_mut().take(m - take) {
-            *v = edge;
+        // edge-replicate the oldest real token across the front padding
+        let edge = (m - take) * d;
+        for f in 0..m - take {
+            row.copy_within(edge..edge + d, f * d);
         }
         take
     }
@@ -384,6 +385,24 @@ mod tests {
         let (mut row, mut sz) = (vec![9.0f32; 3], vec![9.0f32; 3]);
         assert_eq!(empty.context_tail_into(&mut row, &mut sz), 0);
         assert_eq!(row, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn context_tail_handles_multivariate_rows() {
+        // d = 2, threshold above the cosine ceiling: nothing merges
+        let mut inc = IncrementalMerge::new(causal_dynamic(1.5), 2).unwrap();
+        inc.append(&[1.0, 10.0, 2.0, 20.0, 3.0, 30.0]); // 3 frames
+        let (mut row, mut sz) = (vec![0.0f32; 2 * 5], vec![0.0f32; 5]);
+        let fill = inc.context_tail_into(&mut row, &mut sz);
+        assert_eq!(fill, 3);
+        // front padding edge-replicates the oldest whole frame
+        assert_eq!(row, vec![1.0, 10.0, 1.0, 10.0, 1.0, 10.0, 2.0, 20.0, 3.0, 30.0]);
+        assert_eq!(sz, vec![0.0, 0.0, 1.0, 1.0, 1.0]);
+        // m smaller than held tokens: the most recent frames, tail included
+        let (mut row, mut sz) = (vec![0.0f32; 2 * 2], vec![0.0f32; 2]);
+        assert_eq!(inc.context_tail_into(&mut row, &mut sz), 2);
+        assert_eq!(row, vec![2.0, 20.0, 3.0, 30.0]);
+        assert_eq!(sz, vec![1.0, 1.0]);
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //!   reads on the hot path); idle sessions past `session_ttl` are evicted
 //!   by [`SessionManager::evict_expired`].  Under churn the table and the
 //!   per-session rings are the only state, so memory stays bounded by
-//!   `max_sessions * (raw_window + max_merged)` floats (asserted in
+//!   `max_sessions * (raw_window + max_merged) * d` floats (asserted in
 //!   `tests/streaming_sessions.rs`).
 //! * **Re-probing** — every `reprobe_every` appended points a session's
 //!   retained raw window is re-probed; a changed spec re-routes the
@@ -41,6 +41,7 @@ pub struct StreamStats {
     pub evicted_ttl: u64,
     pub reroutes: u64,
     pub probes: u64,
+    /// appended frames (a `d`-channel frame counts once)
     pub appended_points: u64,
 }
 
@@ -54,6 +55,15 @@ pub struct AppendOutcome {
 }
 
 /// Bounded table of live [`StreamSession`]s.  See the module docs.
+///
+/// **Multivariate sessions** (the homogeneous-`d` design, DESIGN.md §9):
+/// the manager's [`StreamingConfig::d`] fixes one channel count for every
+/// session it admits, matching the serving artifact's shape — so every
+/// decode batch is homogeneous in `d` by construction, and an append
+/// whose length is not a whole number of `d`-channel frames is rejected
+/// with an error (never silently reinterpreted).  Spectral probes reduce
+/// a multivariate window to one series by averaging channels per frame
+/// before the entropy FFT.
 pub struct SessionManager {
     cfg: StreamingConfig,
     sessions: HashMap<u64, StreamSession>,
@@ -61,14 +71,31 @@ pub struct SessionManager {
     /// [`SessionManager::append`]), so reconnect/retry memos are not
     /// evicted by sliding-window churn
     entropy: EntropyCache,
-    /// leading samples a probe analyzes (flat FFT cost; shared between
+    /// leading frames a probe analyzes (flat FFT cost; shared between
     /// the admission cache and the direct re-probe path)
     probe_prefix: usize,
     /// monotonic touch sequence (LRU order + FIFO decode fairness)
     seq: u64,
     stats: StreamStats,
-    /// reusable probe/replay buffer
+    /// reusable probe/replay buffer (interleaved frames)
     scratch: Vec<f32>,
+    /// reusable channel-reduced probe series (`d > 1` only)
+    reduced: Vec<f32>,
+}
+
+/// Average the channels of each `d`-channel frame into one value — the
+/// univariate reduction the spectral probe analyzes for multivariate
+/// sessions (`d == 1` is the identity copy).
+fn reduce_channels(interleaved: &[f32], d: usize, out: &mut Vec<f32>) {
+    out.clear();
+    if d == 1 {
+        out.extend_from_slice(interleaved);
+        return;
+    }
+    out.reserve(interleaved.len() / d);
+    for frame in interleaved.chunks_exact(d) {
+        out.push(frame.iter().sum::<f32>() / d as f32);
+    }
 }
 
 impl SessionManager {
@@ -78,7 +105,44 @@ impl SessionManager {
         // context is.  Floor 256 so the achievable entropy (~log2(n/2)
         // bits) clears the default ladder's top band even when the raw
         // window is configured tiny; ceiling keeps the probe FFT cheap.
-        let prefix_cap = cfg.raw_window.clamp(256, 16384);
+        // Like `EntropyCache::for_policy` on the batch side, the cap is
+        // additionally sized to the *configured* ladder: the top band cut
+        // needs log2(prefix/2) bits of headroom, else a custom
+        // high-entropy band would be silently unreachable and aggressive
+        // merging would never engage.
+        let n = cfg.policy.thresholds.len();
+        let top_cut = if n > 1 {
+            cfg.policy.entropy_lo
+                + (cfg.policy.entropy_hi - cfg.policy.entropy_lo) * (n - 1) as f64 / n as f64
+        } else {
+            0.0
+        };
+        // need log2(prefix/2) > top_cut, with ~1.5 bits of headroom
+        let need = (top_cut + 1.5).exp2().ceil() as usize * 2;
+        let prefix_cap = cfg.raw_window.clamp(256, 16384).max(need.min(16384));
+        if need > 16384 {
+            eprintln!(
+                "WARN: stream policy top entropy cut {top_cut:.1} bits needs a \
+                 {need}-sample probe, capped at 16384 (max achievable ~{:.1} bits) — \
+                 the most aggressive threshold band may be unreachable; lower the cut",
+                (16384f64 / 2.0).log2()
+            );
+        } else if need > cfg.raw_window && n > 1 {
+            // the ladder-sized prefix only helps the *admission* probe
+            // (its context can be arbitrarily long); a re-probe analyzes
+            // at most the retained ring, so a top band beyond the
+            // window's achievable entropy gets re-routed out of at the
+            // first re-probe however noisy the signal is
+            eprintln!(
+                "WARN: stream policy top entropy cut {top_cut:.1} bits needs ~{need} \
+                 samples, but re-probes analyze at most raw_window = {} frames \
+                 (~{:.1} bits achievable) — sessions admitted into the top band will \
+                 be re-routed out of it at their first re-probe; raise raw_window or \
+                 lower the cut",
+                cfg.raw_window,
+                (cfg.raw_window as f64 / 2.0).log2()
+            );
+        }
         let capacity = cfg.max_sessions.min(4096);
         Ok(SessionManager {
             cfg,
@@ -88,6 +152,7 @@ impl SessionManager {
             seq: 0,
             stats: StreamStats::default(),
             scratch: Vec::new(),
+            reduced: Vec::new(),
         })
     }
 
@@ -118,9 +183,17 @@ impl SessionManager {
 
     /// Admit a new session: probe the initial context, derive its merge
     /// spec, evict (TTL first, then LRU) if the table is full, then
-    /// append the initial points.  Errs on a duplicate id.
+    /// append the initial points.  Errs on a duplicate id or on an
+    /// `initial` that is not a whole number of `d`-channel frames.
     pub fn admit(&mut self, id: u64, initial: &[f32], now: Instant) -> Result<()> {
         ensure!(!self.sessions.contains_key(&id), "session {id} already admitted");
+        let d = self.cfg.d;
+        ensure!(
+            initial.len() % d == 0,
+            "session {id}: {} values is not a whole number of {d}-channel frames \
+             (this serving process runs homogeneous d = {d} sessions)",
+            initial.len()
+        );
         self.evict_expired(now);
         while self.sessions.len() >= self.cfg.max_sessions {
             let lru = self
@@ -132,14 +205,22 @@ impl SessionManager {
             self.sessions.remove(&lru);
             self.stats.evicted_capacity += 1;
         }
-        let entropy = self.entropy.entropy(initial);
+        let entropy = if d == 1 {
+            self.entropy.entropy(initial)
+        } else {
+            // probe the channel-mean series; the memo still pays off on
+            // replayed admission contexts (same bytes -> same reduction)
+            let SessionManager { entropy, reduced, .. } = self;
+            reduce_channels(initial, d, reduced);
+            entropy.entropy(&reduced[..])
+        };
         self.stats.probes += 1;
         let spec = self.cfg.policy.spec_for(entropy);
-        let mut session = StreamSession::new(id, spec, self.cfg.raw_window, now)?;
+        let mut session = StreamSession::new(id, spec, d, self.cfg.raw_window, now)?;
         let seq = self.next_seq();
         if !initial.is_empty() {
             session.append(initial, self.cfg.max_merged, now, seq);
-            self.stats.appended_points += initial.len() as u64;
+            self.stats.appended_points += (initial.len() / d) as u64;
         } else {
             session.touch_seq = seq;
         }
@@ -150,19 +231,27 @@ impl SessionManager {
     }
 
     /// Append observations to a session (admitting it first if unknown —
-    /// the streaming intake path).  Re-probes every
-    /// [`StreamingConfig::reprobe_every`] points and re-routes on a
+    /// the streaming intake path).  Errs when `points` is not a whole
+    /// number of `d`-channel frames.  Re-probes every
+    /// [`StreamingConfig::reprobe_every`] frames and re-routes on a
     /// regime change.
     pub fn append(&mut self, id: u64, points: &[f32], now: Instant) -> Result<AppendOutcome> {
         if !self.sessions.contains_key(&id) {
             self.admit(id, points, now)?;
             return Ok(AppendOutcome::default());
         }
+        let d = self.cfg.d;
+        ensure!(
+            points.len() % d == 0,
+            "session {id}: {} values is not a whole number of {d}-channel frames \
+             (this serving process runs homogeneous d = {d} sessions)",
+            points.len()
+        );
         let seq = self.next_seq();
-        let SessionManager { cfg, sessions, probe_prefix, stats, scratch, .. } = self;
+        let SessionManager { cfg, sessions, probe_prefix, stats, scratch, reduced, .. } = self;
         let session = sessions.get_mut(&id).expect("checked above");
         session.append(points, cfg.max_merged, now, seq);
-        stats.appended_points += points.len() as u64;
+        stats.appended_points += (points.len() / d) as u64;
         let mut outcome = AppendOutcome::default();
         if session.since_probe() >= cfg.reprobe_every {
             outcome.probed = true;
@@ -172,12 +261,20 @@ impl SessionManager {
             // window's bytes differ from every previous probe, so a
             // cache lookup would always miss while its insertion evicts
             // the reusable admission memos.  Cost is one prefix FFT per
-            // `reprobe_every` points — the cadence is the cost control.
-            let prefix = &scratch[..scratch.len().min(*probe_prefix)];
+            // `reprobe_every` frames — the cadence is the cost control.
+            let series: &[f32] = if d == 1 {
+                &scratch[..]
+            } else {
+                reduce_channels(scratch, d, reduced);
+                &reduced[..]
+            };
+            let prefix = &series[..series.len().min(*probe_prefix)];
             let e = crate::signal::spectral_entropy(prefix);
             let spec = cfg.policy.spec_for(e);
             if &spec != session.spec() {
-                session.reroute(spec, cfg.max_merged, scratch)?;
+                // replay the window already materialized above — reroute
+                // does not re-copy the ring
+                session.reroute(spec, cfg.max_merged, &scratch[..])?;
                 stats.reroutes += 1;
                 outcome.rerouted = true;
             }
@@ -231,11 +328,13 @@ impl SessionManager {
         out.extend(ready.into_iter().take(max).map(|(_, id)| id));
     }
 
-    /// Assemble one decode row for a session (delegates to
-    /// [`StreamSession::context_into`]).  An unknown id — impossible when
-    /// the id came from [`SessionManager::take_ready`] under the same
-    /// borrow — zeroes the row and reports fill 0, so a pool-parallel
-    /// slab fill never panics mid-batch.
+    /// Assemble one decode row for a session: `row` holds
+    /// `size_row.len() * d` interleaved values, `size_row` one size per
+    /// token (delegates to [`StreamSession::context_into`]).  An unknown
+    /// id — impossible when the id came from
+    /// [`SessionManager::take_ready`] under the same borrow — zeroes the
+    /// row and reports fill 0, so a pool-parallel slab fill never panics
+    /// mid-batch.
     pub fn context_fill(&self, id: u64, row: &mut [f32], size_row: &mut [f32]) -> usize {
         match self.sessions.get(&id) {
             Some(s) => s.context_into(row, size_row),
@@ -358,6 +457,92 @@ mod tests {
         assert!(m.stats().reroutes >= 1);
         // the rebuilt state covers the retained window only
         assert!(m.session(1).unwrap().merge().raw_len() <= 128);
+    }
+
+    #[test]
+    fn probe_prefix_clears_the_configured_ladder() {
+        use crate::streaming::StreamPolicy;
+        // default ladder (cuts at 4.5/6.0 bits): the prefix must give the
+        // top band headroom beyond the raw_window floor
+        let m = SessionManager::new(cfg(4)).unwrap();
+        assert!(m.probe_prefix >= 256);
+        assert!(
+            (m.probe_prefix as f64 / 2.0).log2() > 6.0,
+            "prefix {} cannot reach the default top band",
+            m.probe_prefix
+        );
+        // a custom high-entropy ladder (top cut 9.0 bits) forces a bigger
+        // probe window than raw_window alone would pick — without this, a
+        // validating config would silently never engage its top band
+        let hot = StreamingConfig {
+            raw_window: 256,
+            policy: StreamPolicy {
+                entropy_lo: 6.0,
+                entropy_hi: 12.0,
+                thresholds: vec![1.1, 0.8],
+            },
+            ..cfg(4)
+        };
+        let m = SessionManager::new(hot).unwrap();
+        assert!(
+            (m.probe_prefix as f64 / 2.0).log2() > 9.0,
+            "prefix {} cannot reach the configured 9-bit cut",
+            m.probe_prefix
+        );
+    }
+
+    #[test]
+    fn multivariate_manager_rejects_ragged_frames() {
+        // homogeneous-d design: the manager runs one d for every session
+        let mut m = SessionManager::new(StreamingConfig { d: 3, ..cfg(4) }).unwrap();
+        let now = Instant::now();
+        let mut rng = Rng::new(15);
+        // 8 frames x 3 channels admits cleanly
+        m.admit(1, &noise(&mut rng, 24), now).unwrap();
+        assert_eq!(m.session(1).unwrap().d(), 3);
+        assert_eq!(m.session(1).unwrap().appended(), 8);
+        assert_eq!(m.stats().appended_points, 8, "stats count frames, not scalars");
+        // a ragged append (not a multiple of d) is an error, not a
+        // silent reinterpretation — on admission and on append alike
+        let err = m.admit(2, &noise(&mut rng, 10), now).unwrap_err();
+        assert!(err.to_string().contains("3-channel"), "{err}");
+        assert!(m.session(2).is_none());
+        assert!(m.append(1, &noise(&mut rng, 7), now).is_err());
+        assert_eq!(m.session(1).unwrap().appended(), 8, "ragged append must not land");
+        // whole frames keep flowing
+        m.append(1, &noise(&mut rng, 6), now).unwrap();
+        assert_eq!(m.session(1).unwrap().appended(), 10);
+    }
+
+    #[test]
+    fn multivariate_reprobe_reduces_channels() {
+        let mut m = SessionManager::new(StreamingConfig {
+            d: 2,
+            reprobe_every: 32,
+            raw_window: 64,
+            ..cfg(4)
+        })
+        .unwrap();
+        let now = Instant::now();
+        let mut rng = Rng::new(16);
+        // noisy admission in both channels -> aggressive causal merging
+        m.admit(1, &noise(&mut rng, 128), now).unwrap();
+        assert!(!m.session(1).unwrap().spec().is_off());
+        // regime change: both channels turn into the same clean sine, so
+        // the channel-mean probe series is clean too and re-routes to Off
+        let mut rerouted = false;
+        for round in 0..4 {
+            let frames: Vec<f32> = (0..32)
+                .flat_map(|i| {
+                    let t = (round * 32 + i) as f64;
+                    let v = (2.0 * std::f64::consts::PI * t / 32.0).sin() as f32;
+                    [v, v]
+                })
+                .collect();
+            rerouted |= m.append(1, &frames, now).unwrap().rerouted;
+        }
+        assert!(rerouted, "a clean multivariate window must re-route");
+        assert!(m.session(1).unwrap().spec().is_off());
     }
 
     #[test]

@@ -50,18 +50,29 @@ pub struct StreamingConfig {
     pub max_sessions: usize,
     /// sessions idle longer than this are evicted
     pub session_ttl: Duration,
-    /// appended points between spectral re-probes of a session (regime
+    /// appended frames between spectral re-probes of a session (regime
     /// detection)
     pub reprobe_every: usize,
-    /// raw observations retained per session (ring buffer capacity);
-    /// also the window a re-probe analyzes and a re-route replays
+    /// raw observation frames retained per session (ring buffer
+    /// capacity); also the window a re-probe analyzes and a re-route
+    /// replays
     pub raw_window: usize,
     /// merged tokens retained per session (front-trimmed beyond this)
     pub max_merged: usize,
-    /// new points a session must accumulate to become decode-ready
+    /// new frames a session must accumulate to become decode-ready
     pub min_new: usize,
+    /// channels per frame (token dimensionality `d`).  One `d` per
+    /// serving process — the homogeneous-`d` design (DESIGN.md §9): every
+    /// session shares the artifact's channel count, so every decode batch
+    /// is homogeneous by construction and appends whose length is not a
+    /// whole number of `d`-channel frames are rejected at intake.
+    pub d: usize,
     /// entropy → merge-threshold ladder
     pub policy: StreamPolicy,
+    /// artifact variant that executes stream decode steps under
+    /// `tomers serve` (`None` = the policy's first variant).  Ignored by
+    /// the offline demos, which use a synthetic device.
+    pub variant: Option<String>,
 }
 
 impl Default for StreamingConfig {
@@ -73,7 +84,9 @@ impl Default for StreamingConfig {
             raw_window: 1024,
             max_merged: 4096,
             min_new: 16,
+            d: 1,
             policy: StreamPolicy::default(),
+            variant: None,
         }
     }
 }
@@ -94,6 +107,10 @@ impl StreamingConfig {
         );
         ensure!(self.max_merged >= 1, "streaming: max_merged must be >= 1");
         ensure!(self.min_new >= 1, "streaming: min_new must be >= 1");
+        ensure!(self.d >= 1, "streaming: d (channels per frame) must be >= 1");
+        if let Some(v) = &self.variant {
+            ensure!(!v.is_empty(), "streaming: variant must not be empty when given");
+        }
         self.policy.validate()
     }
 }

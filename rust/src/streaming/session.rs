@@ -65,18 +65,24 @@ impl RawRing {
     }
 }
 
-/// A long-lived univariate stream: bounded raw history + incremental
-/// causal merged representation + decode-readiness bookkeeping.
+/// A long-lived stream of `d`-channel frames: bounded raw history +
+/// incremental causal merged representation + decode-readiness
+/// bookkeeping.  All frame counters (`appended`, `since_*`, readiness)
+/// count *frames*, not scalars, so a multivariate session becomes
+/// decode-ready at the same cadence a univariate one does.
 #[derive(Debug)]
 pub struct StreamSession {
     pub id: u64,
     merge: IncrementalMerge,
+    /// scalar ring holding `raw_window * d` values — pushes are whole
+    /// frames (multiples of `d`) and the capacity is a multiple of `d`,
+    /// so frame boundaries stay aligned under wraparound
     ring: RawRing,
-    /// total points ever appended (outlives the ring)
+    /// total frames ever appended (outlives the ring)
     appended: u64,
-    /// points since the last spectral probe
+    /// frames since the last spectral probe
     since_probe: usize,
-    /// points since the last decode step served this session
+    /// frames since the last decode step served this session
     since_new: usize,
     /// monotonic sequence at which the session crossed `min_new`
     /// (None = not ready); drives FIFO-fair decode scheduling
@@ -93,13 +99,20 @@ pub struct StreamSession {
 }
 
 impl StreamSession {
-    /// A fresh session merging under `spec` (derived by the manager from
-    /// the admission probe), retaining `raw_window` raw points.
-    pub fn new(id: u64, spec: MergeSpec, raw_window: usize, now: Instant) -> Result<StreamSession> {
+    /// A fresh session of `d`-channel frames merging under `spec`
+    /// (derived by the manager from the admission probe), retaining
+    /// `raw_window` raw frames.
+    pub fn new(
+        id: u64,
+        spec: MergeSpec,
+        d: usize,
+        raw_window: usize,
+        now: Instant,
+    ) -> Result<StreamSession> {
         Ok(StreamSession {
             id,
-            merge: IncrementalMerge::new(spec, 1)?,
-            ring: RawRing::new(raw_window),
+            merge: IncrementalMerge::new(spec, d)?,
+            ring: RawRing::new(raw_window.max(1) * d.max(1)),
             appended: 0,
             since_probe: 0,
             since_new: 0,
@@ -121,12 +134,17 @@ impl StreamSession {
         &self.merge
     }
 
-    /// Total points appended over the session's lifetime.
+    /// Channels per frame (token dimensionality).
+    pub fn d(&self) -> usize {
+        self.merge.d()
+    }
+
+    /// Total frames appended over the session's lifetime.
     pub fn appended(&self) -> u64 {
         self.appended
     }
 
-    /// Points appended since the last probe (manager-internal cadence).
+    /// Frames appended since the last probe (manager-internal cadence).
     pub fn since_probe(&self) -> usize {
         self.since_probe
     }
@@ -146,25 +164,31 @@ impl StreamSession {
         self.ring.copy_into(out);
     }
 
-    /// Append observations: ring + incremental merge, O(points).
-    /// `max_merged` bounds the merged representation (front-trimmed).
+    /// Append observations (`points.len()` must be a whole number of
+    /// `d`-channel frames — the manager rejects ragged appends before
+    /// calling): ring + incremental merge, O(points).  `max_merged`
+    /// bounds the merged representation (front-trimmed).
     pub fn append(&mut self, points: &[f32], max_merged: usize, now: Instant, seq: u64) {
+        let frames = points.len() / self.merge.d();
+        debug_assert_eq!(points.len() % self.merge.d(), 0, "ragged append reached the session");
         self.ring.push(points);
         self.merge.append(points);
         self.merge.trim_front(max_merged);
-        self.appended += points.len() as u64;
-        self.since_probe += points.len();
-        self.since_new += points.len();
+        self.appended += frames as u64;
+        self.since_probe += frames;
+        self.since_new += frames;
         self.last_touch = now;
         self.touch_seq = seq;
-        if self.ready_since.is_none() {
+        // an empty append is a touch (keep-alive), not unserved data — it
+        // must not date the FIFO/flush-deadline keys
+        if frames > 0 && self.ready_since.is_none() {
             self.ready_since = Some(seq);
             self.ready_at = Some(now);
         }
     }
 
     /// Whether a decode step should include this session: at least
-    /// `min_new` unserved points.
+    /// `min_new` unserved frames.
     pub fn is_ready(&self, min_new: usize) -> bool {
         self.since_new >= min_new
     }
@@ -190,28 +214,24 @@ impl StreamSession {
         self.touch_seq = seq;
     }
 
-    /// Assemble the decode input row: the last `row.len()` merged token
-    /// values right-aligned into `row` with their sizes in `size_row`
-    /// (padding sizes 0 — the size-array form that lets sessions at
-    /// different fill levels share one batch).  Returns the real-token
-    /// fill.
+    /// Assemble the decode input row: the last `size_row.len()` merged
+    /// tokens right-aligned into `row` (`m * d` interleaved values) with
+    /// one size per token in `size_row` (padding sizes 0 — the size-array
+    /// form that lets sessions at different fill levels share one batch).
+    /// Returns the real-token fill.
     pub fn context_into(&self, row: &mut [f32], size_row: &mut [f32]) -> usize {
         self.merge.context_tail_into(row, size_row)
     }
 
     /// Switch the session to a new merge spec (regime change): the merged
-    /// history is rebuilt by replaying the retained raw window, so the
-    /// new regime's representation covers exactly what the ring still
-    /// holds.  `scratch` is a reusable replay buffer.
-    pub fn reroute(
-        &mut self,
-        spec: MergeSpec,
-        max_merged: usize,
-        scratch: &mut Vec<f32>,
-    ) -> Result<()> {
-        let mut fresh = IncrementalMerge::new(spec, 1)?;
-        self.ring.copy_into(scratch);
-        fresh.append(scratch);
+    /// history is rebuilt by replaying `window` — the retained raw window
+    /// the caller already materialized via
+    /// [`StreamSession::raw_window_into`] (the manager's re-probe path
+    /// has it in hand, so replay never re-copies the ring) — so the new
+    /// regime's representation covers exactly what the ring still holds.
+    pub fn reroute(&mut self, spec: MergeSpec, max_merged: usize, window: &[f32]) -> Result<()> {
+        let mut fresh = IncrementalMerge::new(spec, self.merge.d())?;
+        fresh.append(window);
         fresh.trim_front(max_merged);
         self.merge = fresh;
         self.reroutes += 1;
@@ -253,7 +273,7 @@ mod tests {
     #[test]
     fn readiness_follows_min_new() {
         let now = Instant::now();
-        let mut s = StreamSession::new(1, causal(1.5), 64, now).unwrap();
+        let mut s = StreamSession::new(1, causal(1.5), 1, 64, now).unwrap();
         assert!(!s.is_ready(4));
         s.append(&[1.0, 2.0, 3.0], 1024, now, 1);
         assert!(!s.is_ready(4));
@@ -263,21 +283,31 @@ mod tests {
         s.mark_decoded(now, 3);
         assert!(!s.is_ready(4));
         assert_eq!(s.ready_since(), None);
+        // an empty append is a keep-alive touch: it must not date the
+        // FIFO key or the flush deadline ahead of real data
+        s.append(&[], 1024, now, 4);
+        assert_eq!(s.ready_since(), None, "empty append must not look like unserved data");
+        assert!(s.ready_at().is_none());
+        assert_eq!(s.touch_seq, 4, "but it does refresh the TTL/LRU touch");
+        s.append(&[5.0], 1024, now, 5);
+        assert_eq!(s.ready_since(), Some(5), "readiness dates from the first real point");
     }
 
     #[test]
     fn reroute_replays_the_ring() {
         let now = Instant::now();
         // threshold 1.5: nothing merges, merged rep == raw history
-        let mut s = StreamSession::new(2, causal(1.5), 8, now).unwrap();
+        let mut s = StreamSession::new(2, causal(1.5), 1, 8, now).unwrap();
         for i in 0..20 {
             s.append(&[i as f32], 1024, now, i);
         }
         assert_eq!(s.merged_len(), 20);
         // reroute to threshold 0.0 (merge everything similar): the new
-        // state covers exactly the ring's 8 retained points
+        // state covers exactly the ring's 8 retained points (the caller
+        // materializes the window; reroute replays it without re-copying)
         let mut scratch = Vec::new();
-        s.reroute(causal(0.0), 1024, &mut scratch).unwrap();
+        s.raw_window_into(&mut scratch);
+        s.reroute(causal(0.0), 1024, &scratch).unwrap();
         assert_eq!(s.merge().raw_len(), 8);
         assert_eq!(s.reroutes(), 1);
         // monotone ramp: adjacent cosine = 1 > 0 ⇒ all 4 pairs merge
@@ -287,11 +317,38 @@ mod tests {
     #[test]
     fn append_is_bounded_by_max_merged() {
         let now = Instant::now();
-        let mut s = StreamSession::new(3, causal(1.5), 16, now).unwrap();
+        let mut s = StreamSession::new(3, causal(1.5), 1, 16, now).unwrap();
         for i in 0..100 {
             s.append(&[i as f32, (i + 1) as f32], 10, now, i);
             assert!(s.merged_len() <= 10);
         }
         assert_eq!(s.appended(), 200);
+    }
+
+    #[test]
+    fn multivariate_sessions_count_frames_not_scalars() {
+        let now = Instant::now();
+        let mut s = StreamSession::new(4, causal(1.5), 3, 8, now).unwrap();
+        assert_eq!(s.d(), 3);
+        // 2 frames of 3 channels = 6 scalars
+        s.append(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 1024, now, 1);
+        assert_eq!(s.appended(), 2, "readiness cadence counts frames");
+        assert!(!s.is_ready(3));
+        s.append(&[7.0, 8.0, 9.0], 1024, now, 2);
+        assert!(s.is_ready(3));
+        // the ring retains raw_window *frames* (8 * 3 scalars)
+        for i in 0..20 {
+            s.append(&[i as f32; 3], 1024, now, 3 + i as u64);
+        }
+        let mut window = Vec::new();
+        s.raw_window_into(&mut window);
+        assert_eq!(window.len(), 8 * 3);
+        assert_eq!(&window[21..24], &[19.0, 19.0, 19.0]);
+        // decode rows carry m*d values with one size per frame
+        let (mut row, mut sz) = (vec![0.0f32; 4 * 3], vec![0.0f32; 4]);
+        let fill = s.context_into(&mut row, &mut sz);
+        assert_eq!(fill, 4);
+        assert_eq!(&row[9..12], &[19.0, 19.0, 19.0]);
+        assert!(sz.iter().all(|&x| x > 0.0));
     }
 }

@@ -29,6 +29,7 @@ fn server(dir: PathBuf) -> coordinator::ServerHandle {
         merge_workers: 0,
         merge: tomers::coordinator::default_host_merge(),
         streaming: None,
+        prefer_manifest_spec: true,
     })
     .expect("server start")
 }
@@ -101,6 +102,62 @@ fn batches_concurrent_requests() {
     assert!(max_batch > 1, "burst was never batched (max batch {max_batch})");
     let report = client.metrics_report().unwrap();
     assert!(report.contains("served=16"), "report: {report}");
+    handle.shutdown().unwrap();
+}
+
+/// Streaming serve over real artifacts: a configured "streaming" block
+/// wires sessions into the serving loop (decode steps + rolling
+/// forecasts alongside batch traffic), and `Manifest.merge_spec` — when
+/// the artifacts carry one — is preferred over the config declaration.
+#[test]
+fn streaming_serve_decodes_sessions_end_to_end() {
+    use tomers::streaming::StreamingConfig;
+    let Some(dir) = artifact_dir() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let variants = vec![
+        Variant::fixed("chronos_s__r0", 0),
+        Variant::fixed("chronos_s__r128", 128),
+    ];
+    let mut handle = coordinator::server::serve(ServerConfig {
+        artifact_dir: dir,
+        policy: MergePolicy::uniform(variants, 3.0, 7.5),
+        max_wait: Duration::from_millis(10),
+        max_queue: 256,
+        merge_workers: 0,
+        merge: tomers::coordinator::default_host_merge(),
+        streaming: Some(StreamingConfig {
+            min_new: 8,
+            variant: Some("chronos_s__r0".into()),
+            ..StreamingConfig::default()
+        }),
+        prefer_manifest_spec: true,
+    })
+    .expect("streaming serve start");
+    let client = handle.client();
+    let stream = handle.stream_client().expect("streaming configured");
+    let forecasts = handle.take_stream_forecasts().expect("forecast channel");
+    // batch and stream traffic through the same device thread
+    let batch_resp = client
+        .forecast(ForecastRequest { id: 1, context: context("etth1", 3) })
+        .expect("batch forecast");
+    assert_eq!(batch_resp.id, 1);
+    let mut rng = Rng::new(41);
+    for _ in 0..3 {
+        for id in 0..3u64 {
+            let pts: Vec<f32> = (0..16).map(|_| (rng.next_u64() % 7) as f32).collect();
+            stream.append(id, pts).expect("stream append");
+        }
+    }
+    drop(stream);
+    let mut rolling = 0usize;
+    while forecasts.recv_timeout(Duration::from_millis(500)).is_ok() {
+        rolling += 1;
+    }
+    assert!(rolling >= 3, "every session must get at least one rolling forecast");
+    let report = client.metrics_report().expect("report");
+    assert!(report.contains("streaming:"), "decode steps recorded: {report}");
     handle.shutdown().unwrap();
 }
 

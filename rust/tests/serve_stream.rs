@@ -1,0 +1,233 @@
+//! The `tomers serve` streaming wiring, pinned without PJRT (ISSUE 5
+//! acceptance): the dual serving loop (`coordinator::serve_loop`) drives
+//! batch forecasts **and** stream decode steps through one device thread
+//! with shared metrics; the stream-artifact resolver turns a configured
+//! `"streaming"` block with no capable artifact into a startup error
+//! (the old warn-and-ignore path is gone); and the serving loader
+//! prefers `Manifest.merge_spec` over the config's variant declaration
+//! by default, with the `"spec_source": "config"` escape hatch.
+
+#![allow(unknown_lints)]
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use tomers::coordinator::{
+    default_host_merge, policy::Variant, resolve_stream_artifact, run_serve_stages,
+    ForecastRequest, MergePolicy, Metrics, PrepJob, StreamEvent, VariantMeta,
+};
+use tomers::merging::{MergeMode, MergeSpec};
+use tomers::runtime::{Manifest, WorkerPool};
+use tomers::streaming::{StreamingConfig, StreamPolicy};
+use tomers::util::{lock_ignore_poison as lock, Rng};
+
+fn stream_cfg(d: usize) -> StreamingConfig {
+    StreamingConfig {
+        max_sessions: 16,
+        session_ttl: Duration::from_secs(3600),
+        reprobe_every: 10_000,
+        raw_window: 64,
+        max_merged: 256,
+        min_new: 4,
+        d,
+        policy: StreamPolicy::default(),
+        variant: None,
+    }
+}
+
+/// The acceptance pin: one serving loop, batch jobs and stream sessions
+/// in flight together, decode steps counted in the same metrics the
+/// batch pipeline records into — no WARN path, actual decode work.
+#[test]
+fn dual_serving_loop_drives_batch_and_stream_together() {
+    let (capacity, m) = (2usize, 16usize);
+    let metas: BTreeMap<String, VariantMeta> =
+        [("v".to_string(), VariantMeta { capacity, m })].into();
+
+    // batch side: 4 single-request jobs at the artifact's exact length
+    let (jobs_tx, jobs_rx) = mpsc::sync_channel::<PrepJob>(8);
+    let mut responses = Vec::new();
+    for id in 0..4u64 {
+        let (rtx, rrx) = mpsc::channel();
+        let req = ForecastRequest { id, context: vec![0.25; m] };
+        jobs_tx
+            .send(PrepJob { variant: "v".into(), batch: vec![(req, Instant::now(), rtx)] })
+            .unwrap();
+        responses.push(rrx);
+    }
+    drop(jobs_tx);
+
+    // stream side: 5 sessions, several rounds of appends
+    let (ev_tx, ev_rx) = mpsc::channel::<StreamEvent>();
+    let mut rng = Rng::new(71);
+    for _round in 0..3 {
+        for id in 0..5u64 {
+            let pts: Vec<f32> = (0..6).map(|_| rng.normal() as f32).collect();
+            ev_tx.send(StreamEvent::Append { session: id, points: pts }).unwrap();
+        }
+    }
+    drop(ev_tx);
+
+    let stream_meta = VariantMeta { capacity: 2, m: 8 };
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let delivered: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = Arc::clone(&delivered);
+    run_serve_stages(
+        jobs_rx,
+        ev_rx,
+        metas,
+        default_host_merge(),
+        2,
+        stream_meta,
+        stream_cfg(1),
+        WorkerPool::global(),
+        Arc::clone(&metrics),
+        |ready| {
+            assert_eq!(ready.variant, "v");
+            assert_eq!(ready.slab.len(), capacity * m);
+            Ok(vec![vec![1.0f32; 4]; ready.rows])
+        },
+        |step| {
+            assert_eq!(step.slab.len(), 2 * 8);
+            assert_eq!(step.sizes.len(), 2 * 8);
+            Ok(vec![vec![2.0f32; 3]; step.rows])
+        },
+        move |id, forecast| {
+            assert_eq!(forecast.len(), 3);
+            lock(&sink).push(id);
+        },
+    )
+    .unwrap();
+
+    // every batch request answered through the shared loop
+    for (id, rrx) in responses.into_iter().enumerate() {
+        let resp = rrx.recv().expect("batch response");
+        assert_eq!(resp.id, id as u64);
+        assert_eq!(resp.variant, "v");
+        assert_eq!(resp.forecast, vec![1.0f32; 4]);
+    }
+    // every stream session decoded at least once before shutdown flush
+    let got = lock(&delivered);
+    for id in 0..5u64 {
+        assert!(got.iter().any(|&s| s == id), "session {id} never decoded");
+    }
+    // one metrics object saw both pipelines
+    let mx = lock(&metrics);
+    assert_eq!(mx.served(), 4, "batch responses recorded");
+    assert!(mx.decode_steps() >= 3, "5 sessions / capacity 2 needs >= 3 steps");
+    assert_eq!(mx.decode_rows(), got.len());
+    let report = mx.report();
+    assert!(report.contains("v: 4"), "batch section: {report}");
+    assert!(report.contains("streaming:"), "streaming section: {report}");
+}
+
+const BASE_MANIFEST: &str = r#"{
+  "name": "chronos_s__r0", "family": "chronos",
+  "config": {"m": 16},
+  "params": [],
+  "inputs": [{"name": "x", "shape": [2, 16], "dtype": "f32"}],
+  "outputs": [{"name": "out0", "shape": [2, 8], "dtype": "f32"}],
+  "meta": {"batch": 2}
+}"#;
+
+fn manifests(texts: &[(&str, &str)]) -> Vec<(String, Manifest)> {
+    texts
+        .iter()
+        .map(|(name, text)| (name.to_string(), Manifest::parse(text).unwrap()))
+        .collect()
+}
+
+fn as_refs(owned: &[(String, Manifest)]) -> BTreeMap<String, &Manifest> {
+    owned.iter().map(|(n, m)| (n.clone(), m)).collect()
+}
+
+/// The startup gate that replaced the dead WARN: a configured streaming
+/// block resolves a capable artifact or errs — never a silent no-op.
+#[test]
+fn stream_artifact_resolution_gates_startup() {
+    let policy = MergePolicy::uniform(
+        vec![Variant::fixed("chronos_s__r0", 0), Variant::fixed("chronos_s__r128", 128)],
+        3.0,
+        7.5,
+    );
+    let owned = manifests(&[("chronos_s__r0", BASE_MANIFEST)]);
+    let loaded = as_refs(&owned);
+
+    // default: the policy's first variant, values-only artifact
+    let art = resolve_stream_artifact(&loaded, &policy, &stream_cfg(1)).unwrap();
+    assert_eq!(art.variant, "chronos_s__r0");
+    assert_eq!(art.meta, VariantMeta { capacity: 2, m: 16 });
+    assert!(!art.size_aware);
+
+    // a named variant that is not loaded is a startup error naming the fix
+    let cfg = StreamingConfig { variant: Some("chronos_s__r999".into()), ..stream_cfg(1) };
+    let err = resolve_stream_artifact(&loaded, &policy, &cfg).unwrap_err();
+    assert!(err.to_string().contains("streaming-capable"), "{err}");
+    assert!(err.to_string().contains("chronos_s__r999"), "{err}");
+
+    // multivariate: a (2, 8, 3) slab at d = 3 is m = 8; at d = 5 it errs
+    let mv = BASE_MANIFEST.replace("[2, 16]", "[2, 8, 3]");
+    let owned = manifests(&[("chronos_s__r0", &mv)]);
+    let art = resolve_stream_artifact(&as_refs(&owned), &policy, &stream_cfg(3)).unwrap();
+    assert_eq!(art.meta, VariantMeta { capacity: 2, m: 8 });
+    let err = resolve_stream_artifact(&as_refs(&owned), &policy, &stream_cfg(5)).unwrap_err();
+    assert!(err.to_string().contains("channels"), "{err}");
+
+    // a size-aware artifact: second (batch, m) input consumes the size row
+    let sa = BASE_MANIFEST.replace(
+        r#"[{"name": "x", "shape": [2, 16], "dtype": "f32"}]"#,
+        r#"[{"name": "x", "shape": [2, 16], "dtype": "f32"},
+            {"name": "sizes", "shape": [2, 16], "dtype": "f32"}]"#,
+    );
+    let owned = manifests(&[("chronos_s__r0", &sa)]);
+    let art = resolve_stream_artifact(&as_refs(&owned), &policy, &stream_cfg(1)).unwrap();
+    assert!(art.size_aware);
+    // ... but a second input of the wrong shape is not
+    let bad = sa.replace(r#""sizes", "shape": [2, 16]"#, r#""sizes", "shape": [2, 4]"#);
+    let owned = manifests(&[("chronos_s__r0", &bad)]);
+    assert!(resolve_stream_artifact(&as_refs(&owned), &policy, &stream_cfg(1)).is_err());
+}
+
+/// The serving loader's spec preference, driven end to end through the
+/// real manifest parser: `Manifest.merge_spec` wins by default, the
+/// `"spec_source": "config"` escape hatch keeps the declaration.
+#[test]
+fn manifest_merge_spec_preferred_over_config_declaration() {
+    // the artifact says causal dynamic; the config declared fixed r=128
+    let with_spec = BASE_MANIFEST.replacen(
+        "\"meta\":",
+        "\"merge_spec\": {\"mode\": \"dynamic\", \"k\": 1, \"threshold\": 0.9, \
+         \"causal\": true}, \"meta\":",
+        1,
+    );
+    let manifest = Manifest::parse(&with_spec).unwrap();
+    let manifest_spec = manifest.merge_spec.clone().expect("manifest carries a spec");
+    let specs: BTreeMap<String, MergeSpec> =
+        [("chronos_s__r128".to_string(), manifest_spec)].into();
+    let variants =
+        vec![Variant::fixed("chronos_s__r0", 0), Variant::fixed("chronos_s__r128", 128)];
+
+    // default ("spec_source": "manifest"): the artifact is ground truth
+    let mut policy = MergePolicy::uniform(variants.clone(), 3.0, 7.5);
+    let resolutions = policy.prefer_manifest_specs(&specs, true);
+    assert_eq!(resolutions.len(), 1);
+    assert!(resolutions[0].disagreed());
+    assert!(
+        matches!(policy.variants[1].spec.mode, MergeMode::Dynamic { .. }),
+        "the policy must route with the manifest's spec"
+    );
+    assert!(policy.variants[1].spec.causal);
+    let line = format!("{}", resolutions[0]);
+    assert!(line.contains("manifest merge_spec wins"), "{line}");
+    assert!(line.contains("chronos_s__r128"), "{line}");
+
+    // forced config: the declaration survives, the log line says why
+    let mut policy = MergePolicy::uniform(variants, 3.0, 7.5);
+    let resolutions = policy.prefer_manifest_specs(&specs, false);
+    assert_eq!(policy.variants[1].spec.total_r(), 128);
+    let line = format!("{}", resolutions[0]);
+    assert!(line.contains("config declaration wins"), "{line}");
+    assert!(line.contains("spec_source"), "{line}");
+}

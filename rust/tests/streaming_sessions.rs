@@ -20,6 +20,7 @@ fn small_cfg(max_sessions: usize, raw_window: usize, max_merged: usize) -> Strea
         max_merged,
         min_new: 4,
         policy: StreamPolicy::default(),
+        ..StreamingConfig::default()
     }
 }
 
@@ -162,4 +163,83 @@ fn continuous_batching_serves_mixed_fill_levels() {
     let report = mx.report();
     assert!(report.contains("streaming:"), "{report}");
     assert!(report.contains(&format!("points={sent_points}")), "{report}");
+}
+
+/// Multivariate (`d > 1`) sessions end to end through the scheduler and
+/// the staged pipeline — the homogeneous-`d` design (DESIGN.md §9): one
+/// `d` per serving process, so every batch is homogeneous by
+/// construction; the slab is `(capacity, m * d)` with one size per token,
+/// and the slab + size-array invariants hold on every step.  Appends that
+/// are not whole `d`-channel frames are rejected (see
+/// `multivariate_manager_rejects_ragged_frames` in streaming::manager for
+/// the intake-level pin).
+#[test]
+fn multivariate_sessions_stream_end_to_end() {
+    let (capacity, m, d) = (4usize, 16usize, 3usize);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let mut rng = Rng::new(37);
+    let sessions = 7u64;
+    let mut sent_frames = 0usize;
+    for round in 0..5 {
+        for id in 0..sessions {
+            // uneven feed, always whole frames
+            let frames = 2 + ((id as usize + round) % 4);
+            sent_frames += frames;
+            let pts: Vec<f32> = (0..frames * d).map(|_| rng.normal() as f32).collect();
+            tx.send(StreamEvent::Append { session: id, points: pts }).unwrap();
+        }
+    }
+    drop(tx);
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let delivered: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = Arc::clone(&delivered);
+    let cfg = StreamingConfig { d, ..small_cfg(16, 64, 64) };
+    run_stream_stages(
+        rx,
+        VariantMeta { capacity, m },
+        cfg,
+        tomers::runtime::WorkerPool::global(),
+        Arc::clone(&metrics),
+        move |step| {
+            // slab + size-array invariants for homogeneous-d batches
+            assert_eq!(step.d, d, "steps carry the process-wide d");
+            assert!(step.rows >= 1 && step.rows <= capacity);
+            assert_eq!(step.slab.len(), capacity * m * d, "values are (capacity, m*d)");
+            assert_eq!(step.sizes.len(), capacity * m, "sizes stay one per token");
+            assert_eq!(step.sessions.len(), step.rows);
+            for r in 0..step.rows {
+                let fill = step.fills[r];
+                assert!(fill >= 1 && fill <= m);
+                let sizes = &step.sizes[r * m..(r + 1) * m];
+                assert!(sizes[m - fill..].iter().all(|&s| s > 0.0), "real tokens sized");
+                assert!(sizes[..m - fill].iter().all(|&s| s == 0.0), "padding size 0");
+                assert!(
+                    step.slab[r * m * d..(r + 1) * m * d].iter().all(|v| v.is_finite()),
+                    "interleaved channels stay finite"
+                );
+            }
+            // whole padding rows: values repeat the last real row, size 0
+            for p in step.rows..capacity {
+                assert_eq!(
+                    step.slab[p * m * d..(p + 1) * m * d],
+                    step.slab[(step.rows - 1) * m * d..step.rows * m * d]
+                );
+                assert!(step.sizes[p * m..(p + 1) * m].iter().all(|&s| s == 0.0));
+            }
+            Ok(vec![vec![2.0f32; 6]; step.rows])
+        },
+        move |id, f| {
+            assert_eq!(f.len(), 6);
+            lock(&sink).push(id);
+        },
+    )
+    .unwrap();
+    let got = lock(&delivered);
+    for id in 0..sessions {
+        assert!(got.iter().any(|&s| s == id), "multivariate session {id} starved");
+    }
+    let mx = lock(&metrics);
+    assert_eq!(mx.decode_rows(), got.len());
+    let report = mx.report();
+    assert!(report.contains(&format!("points={sent_frames}")), "frames counted: {report}");
 }

@@ -6,19 +6,25 @@
 #   2. cargo clippy -- -D warnings    (lint gate; skip: TOMERS_SKIP_LINT=1)
 #   3. cargo build --release          (offline, default features)
 #   4. cargo check --features pjrt    (the stubbed PJRT surface must keep compiling)
-#   5. cargo doc --no-deps            (rustdoc warnings are errors: the public
+#   5. cargo check --features pjrt --examples (the walkthrough examples under
+#      rust/examples/ — the pjrt-gated ones included — must keep compiling)
+#   6. cargo doc --no-deps            (rustdoc warnings are errors: the public
 #                                      MergeSpec/MergePlan API stays documented)
-#   6. cargo test  -q                 (unit + property + differential + pool tests)
-#   7. cargo build --example stream_sessions (the offline streaming demo
+#   7. cargo test  -q                 (unit + property + differential + pool tests)
+#   8. cargo build --example stream_sessions (the offline streaming demo
 #      must keep compiling in the default build)
-#   8. cargo bench --bench merging    (quick mode: acceptance cases only)
+#   9. streaming-serve smoke: `tomers stream` (univariate and d=3) must
+#      drive the decode scheduler — gated on decode_steps >= 1 in the
+#      metrics report (the same staged machinery `tomers serve` wires
+#      when a "streaming" config block is present)
+#  10. cargo bench --bench merging    (quick mode: acceptance cases only)
 #      asserts BENCH_merging.json reports speedup_batched >= MIN_SPEEDUP on
 #      the t=8192 d=64 k=16 case (pool-backed batched path), zero
 #      post-warmup thread spawns, and pool p50 <= thread::scope p50 at b=32.
-#   9. cargo bench --bench coordinator (quick) -> BENCH_serving.json;
+#  11. cargo bench --bench coordinator (quick) -> BENCH_serving.json;
 #      asserts staged (merge-while-execute) throughput beats the serial
 #      loop on the balanced row.
-#  10. cargo bench --bench streaming (quick) -> BENCH_streaming.json;
+#  12. cargo bench --bench streaming (quick) -> BENCH_streaming.json;
 #      asserts the incremental causal append path is >= MIN_STREAM_RATIO x
 #      faster than full recompute at t=4096, n=16.
 #
@@ -61,6 +67,9 @@ cargo build --release --offline
 echo "== feature gate: cargo check --features pjrt =="
 cargo check --offline --features pjrt
 
+echo "== example gate: cargo check --features pjrt --examples =="
+cargo check --offline --features pjrt --examples
+
 echo "== docs gate: cargo doc --no-deps (rustdoc warnings as errors) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --offline --no-deps --quiet
 
@@ -69,6 +78,22 @@ cargo test -q --offline
 
 echo "== example gate: cargo build --example stream_sessions =="
 cargo build --offline --release --example stream_sessions
+
+echo "== stream smoke: tomers stream must drive the decode scheduler =="
+STREAM_OUT=$(cargo run --offline --release --quiet -- stream \
+    --sessions 8 --rounds 6 --points 8 --batch 4 --m 32 2>&1)
+echo "$STREAM_OUT" | tail -n 3
+if ! echo "$STREAM_OUT" | grep -Eq "streaming: decode_steps=[1-9]"; then
+    echo "ERROR: tomers stream produced no decode steps — the wired streaming path is dead" >&2
+    exit 1
+fi
+MULTI_OUT=$(cargo run --offline --release --quiet -- stream \
+    --sessions 6 --rounds 5 --points 8 --batch 4 --m 32 --d 3 2>&1)
+if ! echo "$MULTI_OUT" | grep -Eq "streaming: decode_steps=[1-9]"; then
+    echo "ERROR: multivariate (--d 3) tomers stream produced no decode steps" >&2
+    exit 1
+fi
+echo "OK: stream smoke (univariate + d=3) passed"
 
 if [[ "${1:-}" == "--no-bench" ]]; then
     echo "OK (bench smoke skipped)"
