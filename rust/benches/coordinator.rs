@@ -38,8 +38,8 @@ use std::time::{Duration, Instant};
 
 use tomers::coordinator::pipeline::{self, Pending, PrepJob, VariantMeta};
 use tomers::coordinator::{
-    policy::Variant, BatcherConfig, DynamicBatcher, ForecastRequest, ForecastResponse,
-    MergePolicy, Metrics,
+    policy::Variant, BatcherConfig, DynamicBatcher, FaultContext, ForecastOutcome,
+    ForecastRequest, ForecastResponse, MergePolicy, Metrics,
 };
 use tomers::data;
 use tomers::json::Json;
@@ -129,6 +129,7 @@ fn staged_vs_serial(
                 variant: VARIANT.to_string(),
                 latency: tq.elapsed().as_secs_f64(),
                 batch_size: meta.capacity,
+                outcome: ForecastOutcome::Delivered,
             });
         }
     }
@@ -155,6 +156,7 @@ fn staged_vs_serial(
         pool.workers(), // prep parallelism as the real server configures it
         pool,
         Arc::clone(&metrics),
+        FaultContext::default(),
         |ready| {
             device_work(&ready.slab, reps);
             Ok(forecast_rows(ready.rows))
@@ -307,6 +309,7 @@ fn real_stack(policy: MergePolicy) {
         merge: tomers::coordinator::default_host_merge(),
         streaming: None,
         prefer_manifest_spec: true,
+        faults: tomers::coordinator::FaultPolicy::default(),
     })
     .expect("server");
     let client = handle.client();

@@ -29,7 +29,7 @@
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use tomers::coordinator::{run_stream_stages, Metrics, StreamEvent, VariantMeta};
+use tomers::coordinator::{run_stream_stages, FaultPolicy, Metrics, StreamEvent, VariantMeta};
 use tomers::json::Json;
 use tomers::merging::{IncrementalMerge, MergeSpec, PipelineResult};
 use tomers::runtime::WorkerPool;
@@ -137,6 +137,7 @@ fn main() {
         StreamingConfig { max_sessions: sessions, ..StreamingConfig::default() },
         WorkerPool::global(),
         Arc::clone(&metrics),
+        FaultPolicy::default(),
         |step| {
             let mut acc = 0.0f32;
             for &v in step.slab.iter() {

@@ -16,7 +16,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
-use tomers::coordinator::{run_stream_stages, Metrics, StreamEvent, VariantMeta};
+use tomers::coordinator::{run_stream_stages, FaultPolicy, Metrics, StreamEvent, VariantMeta};
 use tomers::merging::{IncrementalMerge, MergeSpec};
 use tomers::streaming::{SessionManager, StreamingConfig};
 use tomers::util::{lock_ignore_poison as lock, Rng};
@@ -91,6 +91,7 @@ fn main() -> Result<()> {
         StreamingConfig::default(),
         tomers::runtime::WorkerPool::global(),
         Arc::clone(&metrics),
+        FaultPolicy::default(),
         |step| Ok(vec![vec![0.0f32; 8]; step.rows]), // synthetic device
         move |_id, _forecast| *lock(&sink) += 1,
     )?;

@@ -41,6 +41,12 @@
 //! `"spec_source"` key (`"manifest"` default | `"config"`) picks which
 //! side wins when a loaded artifact's manifest carries a `merge_spec`.
 //!
+//! The optional `"faults"` block configures fault tolerance (DESIGN.md
+//! §10): device-call retry/backoff, request and decode-step deadlines,
+//! the session/variant quarantine budgets, and the stream-forecast
+//! delivery bounds (outbox capacity, TTL).  Omit it for the defaults
+//! (bounded retry, no deadlines).
+//!
 //! **Unknown keys are rejected at every level** with an error naming the
 //! key and the accepted set — a typo like `"entropy_low"` fails loudly
 //! instead of silently falling back to the default, and a key another
@@ -53,7 +59,7 @@ use std::time::Duration;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::policy::{MergePolicy, Variant};
-use crate::coordinator::ServerConfig;
+use crate::coordinator::{FaultPolicy, ServerConfig};
 use crate::json::Json;
 use crate::merging::{Accum, MergeMode, MergeSpec};
 use crate::streaming::{StreamPolicy, StreamingConfig};
@@ -74,6 +80,9 @@ pub struct ServeFileConfig {
     /// the variant declaration (`"manifest"`, the default) or force the
     /// declaration (`"config"`)
     pub prefer_manifest_spec: bool,
+    /// fault tolerance: retry/backoff, deadlines, quarantine budgets and
+    /// delivery bounds (the `"faults"` block; defaults when omitted)
+    pub faults: FaultPolicy,
 }
 
 /// Error unless `v` is a JSON object whose every key is in `allowed`
@@ -267,6 +276,82 @@ pub fn streaming_from_json(v: &Json, path: &str) -> Result<StreamingConfig> {
     Ok(cfg)
 }
 
+/// Parse a `"faults"` JSON block into a validated
+/// [`FaultPolicy`] — same unknown-key-rejection discipline as the
+/// `"merge"` and `"streaming"` blocks.  Durations are milliseconds;
+/// `request_deadline_ms` / `step_deadline_ms` default to absent (no
+/// deadline), everything else to [`FaultPolicy::default`].
+pub fn faults_from_json(v: &Json, path: &str) -> Result<FaultPolicy> {
+    reject_unknown_keys(
+        v,
+        path,
+        &[
+            "max_retries",
+            "backoff_base_ms",
+            "backoff_max_ms",
+            "request_deadline_ms",
+            "step_deadline_ms",
+            "session_fault_budget",
+            "variant_fault_budget",
+            "outbox_cap",
+            "forecast_ttl_ms",
+        ],
+    )?;
+    let defaults = FaultPolicy::default();
+    let get_ms = |key: &str, dflt: Duration| -> Result<Duration> {
+        match v.get(key) {
+            Some(x) => {
+                let ms = x.as_f64()?;
+                ensure!(
+                    ms.is_finite() && ms >= 0.0,
+                    "{path}: {key} must be a non-negative number of milliseconds"
+                );
+                Ok(Duration::from_micros((ms * 1000.0) as u64))
+            }
+            None => Ok(dflt),
+        }
+    };
+    let get_opt_ms = |key: &str| -> Result<Option<Duration>> {
+        match v.get(key) {
+            Some(x) => {
+                let ms = x.as_f64()?;
+                ensure!(
+                    ms.is_finite() && ms > 0.0,
+                    "{path}: {key} must be a positive number of milliseconds"
+                );
+                Ok(Some(Duration::from_micros((ms * 1000.0) as u64)))
+            }
+            None => Ok(None),
+        }
+    };
+    let get_u32 = |key: &str, dflt: u32| -> Result<u32> {
+        match v.get(key) {
+            Some(x) => Ok(u32::try_from(x.as_usize()?)
+                .map_err(|_| anyhow::anyhow!("{path}: {key} out of range"))?),
+            None => Ok(dflt),
+        }
+    };
+    let policy = FaultPolicy {
+        max_retries: match v.get("max_retries") {
+            Some(x) => x.as_usize()?,
+            None => defaults.max_retries,
+        },
+        backoff_base: get_ms("backoff_base_ms", defaults.backoff_base)?,
+        backoff_max: get_ms("backoff_max_ms", defaults.backoff_max)?,
+        request_deadline: get_opt_ms("request_deadline_ms")?,
+        step_deadline: get_opt_ms("step_deadline_ms")?,
+        session_fault_budget: get_u32("session_fault_budget", defaults.session_fault_budget)?,
+        variant_fault_budget: get_u32("variant_fault_budget", defaults.variant_fault_budget)?,
+        outbox_cap: match v.get("outbox_cap") {
+            Some(x) => x.as_usize()?,
+            None => defaults.outbox_cap,
+        },
+        forecast_ttl: get_ms("forecast_ttl_ms", defaults.forecast_ttl)?,
+    };
+    policy.validate().with_context(|| format!("invalid {path}"))?;
+    Ok(policy)
+}
+
 impl ServeFileConfig {
     pub fn load(path: &Path) -> Result<ServeFileConfig> {
         let text = std::fs::read_to_string(path)
@@ -287,6 +372,7 @@ impl ServeFileConfig {
                 "merge",
                 "streaming",
                 "spec_source",
+                "faults",
             ],
         )?;
         let artifact_dir = PathBuf::from(
@@ -388,6 +474,12 @@ impl ServeFileConfig {
             .map(|s| streaming_from_json(s, "\"streaming\""))
             .transpose()?;
 
+        let faults = v
+            .get("faults")
+            .map(|f| faults_from_json(f, "\"faults\""))
+            .transpose()?
+            .unwrap_or_default();
+
         // Which source wins when a loaded artifact's manifest carries a
         // merge_spec: the manifest (default — the artifact is the ground
         // truth for what was compiled into it) or the config declaration.
@@ -411,6 +503,7 @@ impl ServeFileConfig {
             merge,
             streaming,
             prefer_manifest_spec,
+            faults,
         })
     }
 
@@ -424,6 +517,7 @@ impl ServeFileConfig {
             merge: self.merge,
             streaming: self.streaming,
             prefer_manifest_spec: self.prefer_manifest_spec,
+            faults: self.faults,
         }
     }
 
@@ -432,7 +526,9 @@ impl ServeFileConfig {
     /// sessions through the dual serving loop, decoding on `"variant"`
     /// (here the unmerged artifact; `"d"` is its channel count) — drop
     /// the block for batch-only serving.  `"spec_source"` picks which
-    /// merge-spec source wins when a loaded manifest carries one.
+    /// merge-spec source wins when a loaded manifest carries one.  The
+    /// `"faults"` block configures fault tolerance (DESIGN.md §10) —
+    /// shown here with its defaults plus an explicit request deadline.
     pub fn example() -> &'static str {
         r#"{
  "artifact_dir": "artifacts",
@@ -459,6 +555,16 @@ impl ServeFileConfig {
   "d": 1,
   "variant": "chronos_s__r0",
   "policy": {"entropy_lo": 3.0, "entropy_hi": 7.5, "thresholds": [1.1, 0.95, 0.8]}
+ },
+ "faults": {
+  "max_retries": 2,
+  "backoff_base_ms": 2,
+  "backoff_max_ms": 250,
+  "request_deadline_ms": 5000,
+  "session_fault_budget": 3,
+  "variant_fault_budget": 5,
+  "outbox_cap": 16,
+  "forecast_ttl_ms": 60000
  }
 }
 "#
@@ -489,6 +595,70 @@ mod tests {
         assert_eq!(streaming.variant.as_deref(), Some("chronos_s__r0"));
         assert_eq!(streaming.policy.thresholds, vec![1.1, 0.95, 0.8]);
         assert!(cfg.prefer_manifest_spec, "the example names the default spec source");
+        assert_eq!(cfg.faults.max_retries, 2);
+        assert_eq!(cfg.faults.request_deadline, Some(Duration::from_secs(5)));
+        assert_eq!(cfg.faults.step_deadline, None, "no step deadline in the example");
+        assert_eq!(cfg.faults.outbox_cap, 16);
+        assert_eq!(cfg.faults.forecast_ttl, Duration::from_secs(60));
+    }
+
+    #[test]
+    fn parses_faults_block() {
+        let base = |block: &str| {
+            format!(
+                r#"{{"policy": {{"variants": [{{"name": "a", "r": 0}}]}}, "faults": {}}}"#,
+                block
+            )
+        };
+        // partial block: named keys override, the rest default
+        let cfg = ServeFileConfig::parse(&base(
+            r#"{"max_retries": 5, "step_deadline_ms": 40, "outbox_cap": 4}"#,
+        ))
+        .unwrap();
+        assert_eq!(cfg.faults.max_retries, 5);
+        assert_eq!(cfg.faults.step_deadline, Some(Duration::from_millis(40)));
+        assert_eq!(cfg.faults.outbox_cap, 4);
+        assert_eq!(cfg.faults.backoff_base, FaultPolicy::default().backoff_base);
+        assert_eq!(cfg.faults.request_deadline, None, "deadlines default off");
+        // omitted block = all defaults
+        let cfg = ServeFileConfig::parse(
+            r#"{"policy": {"variants": [{"name": "a", "r": 0}]}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.faults, FaultPolicy::default());
+        // the block survives into the server config
+        let sc = ServeFileConfig::parse(&base(r#"{"max_retries": 0}"#))
+            .unwrap()
+            .into_server_config();
+        assert_eq!(sc.faults.max_retries, 0);
+    }
+
+    #[test]
+    fn rejects_bad_faults_blocks() {
+        let base = |block: &str| {
+            format!(
+                r#"{{"policy": {{"variants": [{{"name": "a", "r": 0}}]}}, "faults": {}}}"#,
+                block
+            )
+        };
+        // unknown key, with the accepted set named
+        let err = ServeFileConfig::parse(&base(r#"{"retries": 3}"#)).unwrap_err();
+        assert!(err.to_string().contains("retries"), "{err}");
+        assert!(err.to_string().contains("max_retries"), "{err}");
+        // non-object block
+        assert!(ServeFileConfig::parse(&base(r#""on""#)).is_err());
+        // validation failures surface at parse time, naming the field
+        let err = ServeFileConfig::parse(&base(r#"{"outbox_cap": 0}"#)).unwrap_err();
+        assert!(format!("{err:#}").contains("outbox_cap"), "{err:#}");
+        assert!(ServeFileConfig::parse(&base(r#"{"backoff_base_ms": 0}"#)).is_err());
+        assert!(ServeFileConfig::parse(
+            &base(r#"{"backoff_base_ms": 10, "backoff_max_ms": 1}"#)
+        )
+        .is_err());
+        assert!(ServeFileConfig::parse(&base(r#"{"request_deadline_ms": 0}"#)).is_err());
+        assert!(ServeFileConfig::parse(&base(r#"{"session_fault_budget": 0}"#)).is_err());
+        // wrong-typed values error instead of defaulting
+        assert!(ServeFileConfig::parse(&base(r#"{"max_retries": "lots"}"#)).is_err());
     }
 
     #[test]

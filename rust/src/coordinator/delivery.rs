@@ -1,0 +1,257 @@
+//! Delivery accounting for stream forecasts (DESIGN.md §10).
+//!
+//! The dual serving loop used to push rolling forecasts into a
+//! fire-and-forget `(session, forecast)` channel: a slow collector made
+//! it grow without bound, a dead one lost every forecast silently, and a
+//! dropped message was indistinguishable from one never produced.  The
+//! [`DeliveryMonitor`] replaces it with a per-session **bounded outbox**
+//! with at-least-once semantics:
+//!
+//! * `offer` enqueues a forecast under a per-session monotonic sequence
+//!   number; when the outbox is full the *oldest* unacked entry is
+//!   dropped and counted (`dropped_overflow`) — memory stays within
+//!   `cap` per session, asserted by the fault suite.
+//! * `collect` hands back every unacked forecast in sequence order;
+//!   forecasts seen by a previous `collect` are counted as redelivered.
+//!   Order within a session is the enqueue order, always.
+//! * `ack(session, upto)` retires delivered forecasts.
+//! * `expire` drops unacked forecasts older than the TTL
+//!   (`expired_undelivered`) and forgets sessions idle past the TTL.
+
+use std::collections::{HashMap, VecDeque};
+use std::time::{Duration, Instant};
+
+/// Delivery counters, merged into the serving [`Metrics`](super::Metrics)
+/// report.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DeliveryStats {
+    pub enqueued: u64,
+    pub acked: u64,
+    /// forecasts handed out by `collect` more than once
+    pub redelivered: u64,
+    /// unacked forecasts dropped by TTL expiry
+    pub expired_undelivered: u64,
+    /// unacked forecasts dropped because the outbox was full
+    pub dropped_overflow: u64,
+}
+
+#[derive(Debug)]
+struct Entry {
+    seq: u64,
+    forecast: Vec<f32>,
+    enqueued: Instant,
+    /// times `collect` has handed this entry out
+    deliveries: u32,
+}
+
+#[derive(Debug, Default)]
+struct Outbox {
+    queue: VecDeque<Entry>,
+    next_seq: u64,
+    last_touch: Option<Instant>,
+}
+
+/// Per-session bounded outboxes for stream forecasts; see module docs.
+/// Not internally synchronized — the server shares it behind a mutex.
+#[derive(Debug)]
+pub struct DeliveryMonitor {
+    cap: usize,
+    ttl: Duration,
+    outboxes: HashMap<u64, Outbox>,
+    stats: DeliveryStats,
+}
+
+impl DeliveryMonitor {
+    pub fn new(cap: usize, ttl: Duration) -> Self {
+        Self { cap: cap.max(1), ttl, outboxes: HashMap::new(), stats: DeliveryStats::default() }
+    }
+
+    /// Enqueue a forecast for `session`, evicting the oldest unacked
+    /// entry if the outbox is at capacity.  Returns the forecast's
+    /// sequence number.
+    pub fn offer(&mut self, session: u64, forecast: Vec<f32>, now: Instant) -> u64 {
+        let outbox = self.outboxes.entry(session).or_default();
+        if outbox.queue.len() >= self.cap {
+            outbox.queue.pop_front();
+            self.stats.dropped_overflow += 1;
+        }
+        let seq = outbox.next_seq;
+        outbox.next_seq += 1;
+        outbox.queue.push_back(Entry { seq, forecast, enqueued: now, deliveries: 0 });
+        outbox.last_touch = Some(now);
+        self.stats.enqueued += 1;
+        seq
+    }
+
+    /// Every unacked forecast for `session`, oldest first, as
+    /// `(seq, forecast)`.  Entries stay queued until [`ack`]ed; a repeat
+    /// collect redelivers them (and counts the redelivery).
+    ///
+    /// [`ack`]: DeliveryMonitor::ack
+    pub fn collect(&mut self, session: u64) -> Vec<(u64, Vec<f32>)> {
+        let Some(outbox) = self.outboxes.get_mut(&session) else {
+            return Vec::new();
+        };
+        let mut out = Vec::with_capacity(outbox.queue.len());
+        for entry in outbox.queue.iter_mut() {
+            if entry.deliveries > 0 {
+                self.stats.redelivered += 1;
+            }
+            entry.deliveries += 1;
+            out.push((entry.seq, entry.forecast.clone()));
+        }
+        out
+    }
+
+    /// Retire every entry of `session` with `seq <= upto`.  Returns how
+    /// many were acked (idempotent: re-acking is a no-op).
+    pub fn ack(&mut self, session: u64, upto: u64, now: Instant) -> usize {
+        let Some(outbox) = self.outboxes.get_mut(&session) else {
+            return 0;
+        };
+        let mut acked = 0;
+        while outbox.queue.front().is_some_and(|e| e.seq <= upto) {
+            outbox.queue.pop_front();
+            acked += 1;
+        }
+        outbox.last_touch = Some(now);
+        self.stats.acked += acked as u64;
+        acked
+    }
+
+    /// Drop unacked forecasts older than the TTL (counted as
+    /// `expired_undelivered`) and forget sessions whose outbox is empty
+    /// and idle past the TTL.  Returns how many forecasts expired.
+    pub fn expire(&mut self, now: Instant) -> usize {
+        let ttl = self.ttl;
+        let mut expired = 0usize;
+        self.outboxes.retain(|_, outbox| {
+            while outbox
+                .queue
+                .front()
+                .is_some_and(|e| now.duration_since(e.enqueued) >= ttl)
+            {
+                outbox.queue.pop_front();
+                expired += 1;
+            }
+            !outbox.queue.is_empty()
+                || outbox
+                    .last_touch
+                    .map_or(true, |t| now.duration_since(t) < ttl)
+        });
+        self.stats.expired_undelivered += expired as u64;
+        expired
+    }
+
+    /// Unacked forecasts queued for `session`.
+    pub fn pending(&self, session: u64) -> usize {
+        self.outboxes.get(&session).map_or(0, |o| o.queue.len())
+    }
+
+    /// Unacked forecasts across all sessions.
+    pub fn total_pending(&self) -> usize {
+        self.outboxes.values().map(|o| o.queue.len()).sum()
+    }
+
+    /// Largest single-session outbox depth — by construction `<= cap`,
+    /// asserted (not just logged) by the fault-injection suite.
+    pub fn max_outbox_depth(&self) -> usize {
+        self.outboxes.values().map(|o| o.queue.len()).max().unwrap_or(0)
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn stats(&self) -> DeliveryStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn offer_collect_ack_roundtrip() {
+        let mut m = DeliveryMonitor::new(8, Duration::from_secs(60));
+        let now = t0();
+        assert_eq!(m.offer(1, vec![1.0], now), 0);
+        assert_eq!(m.offer(1, vec![2.0], now), 1);
+        assert_eq!(m.offer(2, vec![9.0], now), 0, "sequences are per-session");
+        let got = m.collect(1);
+        assert_eq!(got, vec![(0, vec![1.0]), (1, vec![2.0])]);
+        assert_eq!(m.ack(1, 1, now), 2);
+        assert!(m.collect(1).is_empty());
+        assert_eq!(m.pending(2), 1);
+        let s = m.stats();
+        assert_eq!((s.enqueued, s.acked, s.redelivered), (3, 2, 0));
+    }
+
+    #[test]
+    fn uncollected_forecasts_are_redelivered_in_order() {
+        let mut m = DeliveryMonitor::new(8, Duration::from_secs(60));
+        let now = t0();
+        for i in 0..3 {
+            m.offer(5, vec![i as f32], now);
+        }
+        let first = m.collect(5);
+        // ack only the first entry; the rest must come back, in order
+        m.ack(5, 0, now);
+        m.offer(5, vec![3.0], now);
+        let second = m.collect(5);
+        assert_eq!(first.len(), 3);
+        assert_eq!(
+            second.iter().map(|(s, _)| *s).collect::<Vec<_>>(),
+            vec![1, 2, 3],
+            "unacked survive, order preserved, new entry appended"
+        );
+        assert_eq!(m.stats().redelivered, 2, "entries 1 and 2 were redelivered");
+    }
+
+    #[test]
+    fn overflow_drops_oldest_and_counts() {
+        let mut m = DeliveryMonitor::new(3, Duration::from_secs(60));
+        let now = t0();
+        for i in 0..10u64 {
+            m.offer(1, vec![i as f32], now);
+            assert!(m.pending(1) <= 3, "outbox beyond its bound");
+        }
+        assert_eq!(m.stats().dropped_overflow, 7);
+        // the survivors are the newest three, still in order
+        let seqs: Vec<u64> = m.collect(1).iter().map(|(s, _)| *s).collect();
+        assert_eq!(seqs, vec![7, 8, 9]);
+        assert_eq!(m.max_outbox_depth(), 3);
+    }
+
+    #[test]
+    fn ttl_expires_unacked_and_forgets_idle_sessions() {
+        let mut m = DeliveryMonitor::new(8, Duration::from_millis(10));
+        let now = t0();
+        m.offer(1, vec![1.0], now);
+        m.offer(1, vec![2.0], now + Duration::from_millis(8));
+        assert_eq!(m.expire(now + Duration::from_millis(5)), 0, "nothing old enough");
+        assert_eq!(m.expire(now + Duration::from_millis(12)), 1, "first entry expired");
+        assert_eq!(m.pending(1), 1);
+        assert_eq!(m.expire(now + Duration::from_millis(30)), 1, "second follows");
+        assert_eq!(m.stats().expired_undelivered, 2);
+        // idle empty outbox is eventually forgotten entirely
+        assert_eq!(m.expire(now + Duration::from_secs(1)), 0);
+        assert_eq!(m.total_pending(), 0);
+        assert!(m.outboxes.is_empty(), "idle session table entry must be reclaimed");
+    }
+
+    #[test]
+    fn ack_is_idempotent_and_ignores_unknown_sessions() {
+        let mut m = DeliveryMonitor::new(4, Duration::from_secs(60));
+        let now = t0();
+        m.offer(1, vec![1.0], now);
+        assert_eq!(m.ack(1, 0, now), 1);
+        assert_eq!(m.ack(1, 0, now), 0);
+        assert_eq!(m.ack(99, 5, now), 0);
+    }
+}

@@ -1,11 +1,35 @@
 //! Serving metrics: latency distribution, throughput, batch occupancy,
-//! per-variant routing counts, and session-level streaming counters.
+//! per-variant routing counts, session-level streaming counters, and
+//! fault/delivery accounting (DESIGN.md §10).
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+use super::delivery::DeliveryStats;
 use crate::streaming::StreamStats;
 use crate::util::percentile;
+
+/// Fault-tolerance counters (DESIGN.md §10), all monotone.  "exec" is the
+/// batch device path, "step" the stream decode path; `timeouts` and
+/// `failed` count *requests* that ended in a terminal non-delivered
+/// outcome, while the retry/fault counters count device calls.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// batch device-call retries (attempts beyond the first)
+    pub exec_retries: u64,
+    /// batch device calls that exhausted retries or their deadline
+    pub exec_faults: u64,
+    /// stream decode-step retries
+    pub step_retries: u64,
+    /// stream decode steps that exhausted retries or their deadline
+    pub step_faults: u64,
+    /// requests answered `DeadlineExceeded`
+    pub timeouts: u64,
+    /// requests answered `Failed`
+    pub failed: u64,
+    /// requests rerouted to a cheaper variant after a quarantine
+    pub downgrades: u64,
+}
 
 #[derive(Debug)]
 pub struct Metrics {
@@ -20,6 +44,11 @@ pub struct Metrics {
     decode_rows: usize,
     /// latest session-table snapshot: (active sessions, manager counters)
     stream: Option<(usize, StreamStats)>,
+    faults: FaultCounters,
+    /// per `from->to` quarantine-downgrade routing counts
+    downgrades: BTreeMap<String, u64>,
+    /// latest delivery-monitor snapshot (stream forecast outboxes)
+    delivery: Option<DeliveryStats>,
 }
 
 impl Default for Metrics {
@@ -39,7 +68,59 @@ impl Metrics {
             decode_steps: 0,
             decode_rows: 0,
             stream: None,
+            faults: FaultCounters::default(),
+            downgrades: BTreeMap::new(),
+            delivery: None,
         }
+    }
+
+    /// Batch device-call retries beyond the first attempt.
+    pub fn record_exec_retries(&mut self, retries: usize) {
+        self.faults.exec_retries += retries as u64;
+    }
+
+    /// A batch device call exhausted its retries or deadline.
+    pub fn record_exec_fault(&mut self) {
+        self.faults.exec_faults += 1;
+    }
+
+    /// Stream decode-step retries beyond the first attempt.
+    pub fn record_step_retries(&mut self, retries: usize) {
+        self.faults.step_retries += retries as u64;
+    }
+
+    /// A stream decode step exhausted its retries or deadline.
+    pub fn record_step_fault(&mut self) {
+        self.faults.step_faults += 1;
+    }
+
+    /// `n` requests answered with a terminal `DeadlineExceeded`.
+    pub fn record_timeouts(&mut self, n: usize) {
+        self.faults.timeouts += n as u64;
+    }
+
+    /// `n` requests answered with a terminal `Failed`.
+    pub fn record_failed(&mut self, n: usize) {
+        self.faults.failed += n as u64;
+    }
+
+    /// A request was rerouted off a quarantined variant.
+    pub fn record_downgrade(&mut self, from: &str, to: &str) {
+        self.faults.downgrades += 1;
+        *self.downgrades.entry(format!("{from}->{to}")).or_insert(0) += 1;
+    }
+
+    pub fn faults(&self) -> FaultCounters {
+        self.faults
+    }
+
+    /// Latest delivery-monitor counters (stream forecast outboxes).
+    pub fn set_delivery(&mut self, stats: DeliveryStats) {
+        self.delivery = Some(stats);
+    }
+
+    pub fn delivery(&self) -> Option<DeliveryStats> {
+        self.delivery
     }
 
     /// One streaming decode step served `rows` sessions.
@@ -51,6 +132,11 @@ impl Metrics {
     /// Latest session-table snapshot from the `SessionManager`.
     pub fn set_stream(&mut self, active: usize, stats: StreamStats) {
         self.stream = Some((active, stats));
+    }
+
+    /// Latest session-table snapshot, if any decode activity recorded one.
+    pub fn stream_snapshot(&self) -> Option<(usize, StreamStats)> {
+        self.stream
     }
 
     pub fn decode_steps(&self) -> usize {
@@ -136,7 +222,7 @@ impl Metrics {
             if let Some((active, st)) = &self.stream {
                 s.push_str(&format!(
                     "  sessions: active={} admitted={} evicted_lru={} evicted_ttl={} \
-                     reroutes={} probes={} points={}\n",
+                     reroutes={} probes={} points={} requeued={} quarantined={}\n",
                     active,
                     st.admitted,
                     st.evicted_capacity,
@@ -144,8 +230,34 @@ impl Metrics {
                     st.reroutes,
                     st.probes,
                     st.appended_points,
+                    st.requeued_windows,
+                    st.quarantined,
                 ));
             }
+        }
+        let f = &self.faults;
+        if *f != FaultCounters::default() {
+            s.push_str(&format!(
+                "faults: exec_retries={} exec_faults={} step_retries={} step_faults={} \
+                 timeouts={} failed={} downgrades={}\n",
+                f.exec_retries,
+                f.exec_faults,
+                f.step_retries,
+                f.step_faults,
+                f.timeouts,
+                f.failed,
+                f.downgrades,
+            ));
+            for (route, n) in &self.downgrades {
+                s.push_str(&format!("  downgrade {route}: {n}\n"));
+            }
+        }
+        if let Some(d) = &self.delivery {
+            s.push_str(&format!(
+                "delivery: enqueued={} acked={} redelivered={} expired_undelivered={} \
+                 dropped_overflow={}\n",
+                d.enqueued, d.acked, d.redelivered, d.expired_undelivered, d.dropped_overflow,
+            ));
         }
         s
     }
@@ -184,5 +296,41 @@ mod tests {
         assert!(report.contains("decode_steps=2"));
         assert!(report.contains("active=7"));
         assert!(report.contains("admitted=9"));
+        assert_eq!(m.stream_snapshot().unwrap().0, 7);
+    }
+
+    #[test]
+    fn fault_and_delivery_sections_appear_once_recorded() {
+        let mut m = Metrics::new();
+        let clean = m.report();
+        assert!(!clean.contains("faults:") && !clean.contains("delivery:"));
+        m.record_exec_retries(2);
+        m.record_exec_fault();
+        m.record_step_retries(1);
+        m.record_step_fault();
+        m.record_timeouts(3);
+        m.record_failed(4);
+        m.record_downgrade("v2", "v1");
+        m.record_downgrade("v2", "v1");
+        let f = m.faults();
+        assert_eq!(
+            (f.exec_retries, f.exec_faults, f.step_retries, f.step_faults),
+            (2, 1, 1, 1)
+        );
+        assert_eq!((f.timeouts, f.failed, f.downgrades), (3, 4, 2));
+        m.set_delivery(DeliveryStats {
+            enqueued: 10,
+            acked: 6,
+            redelivered: 1,
+            expired_undelivered: 2,
+            dropped_overflow: 0,
+        });
+        let report = m.report();
+        assert!(report.contains("faults: exec_retries=2"));
+        assert!(report.contains("timeouts=3 failed=4 downgrades=2"));
+        assert!(report.contains("downgrade v2->v1: 2"));
+        assert!(report.contains("delivery: enqueued=10"));
+        assert!(report.contains("expired_undelivered=2"));
+        assert_eq!(m.delivery().unwrap().acked, 6);
     }
 }

@@ -37,8 +37,16 @@
 //!   testable).
 //! * `metrics`  — latency/throughput accounting shared across the stages,
 //!   including session-level streaming counters.
+//! * `faults`   — fault tolerance (DESIGN.md §10): retry with backoff +
+//!   deadlines around device execution, per-variant quarantine behind
+//!   graceful degradation, and the seeded fault-injection harness.
+//! * `delivery` — per-session bounded outboxes with ack/redelivery/TTL
+//!   accounting for stream forecasts, replacing the fire-and-forget
+//!   forecast channel.
 
 pub mod batcher;
+pub mod delivery;
+pub mod faults;
 pub mod metrics;
 pub mod pipeline;
 pub mod policy;
@@ -48,7 +56,9 @@ pub mod server;
 pub mod stream;
 
 pub use batcher::{drain_ready, BatcherConfig, DynamicBatcher};
-pub use metrics::Metrics;
+pub use delivery::{DeliveryMonitor, DeliveryStats};
+pub use faults::{call_with_retry, FaultContext, FaultPlan, FaultPolicy, FaultTracker};
+pub use metrics::{FaultCounters, Metrics};
 pub use pipeline::{default_host_merge, HostPrep, PrepJob, ReadyBatch, VariantMeta};
 pub use policy::{
     EntropyCache, MergePolicy, PolicyDecision, SpecResolution, SpecSource, Variant,
@@ -90,6 +100,11 @@ pub struct ServerConfig {
     /// `"spec_source": "config"` escape hatch sets `false`) — see
     /// [`MergePolicy::prefer_manifest_specs`].
     pub prefer_manifest_spec: bool,
+    /// fault handling: device-call retry/backoff, request and decode-step
+    /// deadlines, quarantine budgets and the delivery-monitor bounds
+    /// (the `"faults"` config block; defaults keep the happy path
+    /// unchanged)
+    pub faults: FaultPolicy,
 }
 
 /// A forecast request: univariate context, horizon fixed by the artifact.
@@ -97,6 +112,27 @@ pub struct ServerConfig {
 pub struct ForecastRequest {
     pub id: u64,
     pub context: Vec<f32>,
+}
+
+/// Terminal outcome of a forecast request.  Every submitted request gets
+/// exactly one response with one of these — a device fault or a missed
+/// deadline produces a terminal error response, never a silently dropped
+/// channel (the pre-fault-tolerance behaviour).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ForecastOutcome {
+    /// `forecast` carries the model output
+    Delivered,
+    /// the request aged past `faults.request_deadline` (or its batch's
+    /// retry window was cut short by it); `forecast` is empty
+    DeadlineExceeded,
+    /// retries exhausted or the batch was unservable; carries the reason
+    Failed(String),
+}
+
+impl ForecastOutcome {
+    pub fn is_delivered(&self) -> bool {
+        matches!(self, ForecastOutcome::Delivered)
+    }
 }
 
 /// A served forecast.
@@ -110,4 +146,6 @@ pub struct ForecastResponse {
     pub latency: f64,
     /// batch size this request was served in
     pub batch_size: usize,
+    /// terminal outcome; `forecast` is only meaningful when `Delivered`
+    pub outcome: ForecastOutcome,
 }

@@ -45,11 +45,12 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, ensure, Result};
 
+use super::faults::{call_with_retry, FaultContext};
 use super::metrics::Metrics;
-use super::{ForecastRequest, ForecastResponse};
+use super::{ForecastOutcome, ForecastRequest, ForecastResponse};
 use crate::merging::{MergeMode, MergePlan, MergeSpec, PipelineResult};
 use crate::runtime::pool::WorkerPool;
-use crate::util::lock_ignore_poison as lock;
+use crate::util::{join_annotated, lock_ignore_poison as lock};
 
 /// A routed request waiting for execution: request, enqueue time, response
 /// channel.
@@ -229,13 +230,20 @@ pub struct PrepStage {
 /// and sends the [`ReadyBatch`] through `ready_tx` (mapped by `wrap`, so
 /// the batch and stream pipelines can share one ready channel — see
 /// [`super::serve_loop::run_serve_stages`]).  [`run_stages`] is the
-/// single-pipeline composition of this plus an execute loop.
+/// single-pipeline composition of this plus an execute loop.  A batch
+/// prep cannot serve — unknown variant, ragged/over-length contexts —
+/// gets terminal [`ForecastOutcome::Failed`] responses (and a `failed`
+/// metrics count), never a silently dropped response channel.
+// One arg over clippy's limit: the stage wiring (channels + wrap) and the
+// shared metrics are each irreducible here.
+#[allow(clippy::too_many_arguments)]
 pub fn spawn_prep<T, W>(
     jobs: Receiver<PrepJob>,
     metas: BTreeMap<String, VariantMeta>,
     merge: MergeSpec,
     prep_slots: usize,
     pool: &'static WorkerPool,
+    metrics: Arc<Mutex<Metrics>>,
     ready_tx: SyncSender<T>,
     wrap: W,
 ) -> Result<PrepStage>
@@ -270,7 +278,17 @@ where
                 let meta = match metas.get(&job.variant) {
                     Some(meta) => meta,
                     None => {
-                        eprintln!("prep: unknown variant {} — dropping batch", job.variant);
+                        eprintln!("prep: unknown variant {} — failing batch", job.variant);
+                        lock(&metrics).record_failed(job.batch.len());
+                        respond_terminal(
+                            job.batch,
+                            &job.variant,
+                            0,
+                            ForecastOutcome::Failed(format!(
+                                "unknown variant {}",
+                                job.variant
+                            )),
+                        );
                         continue;
                     }
                 };
@@ -295,7 +313,13 @@ where
                     Err(e) => {
                         eprintln!("prep failed on {}: {e:#}", job.variant);
                         let _ = prep_slab_tx.send(slab);
-                        // dropping job.batch closes the response channels
+                        lock(&metrics).record_failed(job.batch.len());
+                        respond_terminal(
+                            job.batch,
+                            &job.variant,
+                            0,
+                            ForecastOutcome::Failed(format!("prep failed: {e:#}")),
+                        );
                     }
                 }
             }
@@ -304,51 +328,164 @@ where
     Ok(PrepStage { recycle: slab_tx, join })
 }
 
+/// Send a terminal non-delivered response to every request of a batch —
+/// the fault path's replacement for silently dropping response channels:
+/// a `submit()` receiver always observes exactly one terminal response.
+pub(crate) fn respond_terminal(
+    batch: Vec<Pending>,
+    variant: &str,
+    batch_size: usize,
+    outcome: ForecastOutcome,
+) {
+    for (req, t0, rtx) in batch {
+        let _ = rtx.send(ForecastResponse {
+            id: req.id,
+            forecast: Vec::new(),
+            variant: variant.to_string(),
+            latency: t0.elapsed().as_secs_f64(),
+            batch_size,
+            outcome: outcome.clone(),
+        });
+    }
+}
+
 /// Execute one prepped batch and send the responses — the execute-stage
 /// body shared by [`run_stages`] and the dual serving loop.  Returns the
-/// slab buffer for recycling, whatever happened.  A failed execute drops
-/// the batch (clients observe a closed response channel).  Metrics are
+/// slab buffer for recycling, whatever happened.
+///
+/// Fault semantics (DESIGN.md §10): requests already past
+/// `faults.request_deadline` get a terminal `DeadlineExceeded` response
+/// (without device work if the whole batch expired); the device call is
+/// retried with exponential backoff inside the earliest live request's
+/// deadline; an exhausted batch gets terminal `Failed` responses and
+/// counts one fault against the variant's quarantine budget.  Metrics are
 /// recorded **before** the responses go out, so a client that drains its
 /// responses and immediately asks for a report sees this batch.
 pub(crate) fn execute_and_respond<X>(
     execute: &mut X,
     ready: ReadyBatch,
     metrics: &Mutex<Metrics>,
+    faults: &FaultContext,
 ) -> Vec<f32>
 where
     X: FnMut(&mut ReadyBatch) -> Result<Vec<Vec<f32>>>,
 {
     let mut ready = ready;
-    let result = execute(&mut ready);
+    let policy = &faults.policy;
+    let now = Instant::now();
+    // requests already past their deadline time out without device work;
+    // the live ones' earliest deadline bounds the retry window
+    let mut expired = vec![false; ready.batch.len()];
+    let mut batch_deadline: Option<Instant> = None;
+    if let Some(limit) = policy.request_deadline {
+        for (i, (_, t0, _)) in ready.batch.iter().enumerate() {
+            let d = *t0 + limit;
+            if d <= now {
+                expired[i] = true;
+            } else {
+                batch_deadline = Some(batch_deadline.map_or(d, |b| b.min(d)));
+            }
+        }
+        if expired.iter().all(|&e| e) {
+            let ReadyBatch { variant, batch, slab, rows, .. } = ready;
+            lock(metrics).record_timeouts(batch.len());
+            respond_terminal(batch, &variant, rows, ForecastOutcome::DeadlineExceeded);
+            return slab;
+        }
+    }
+    let out =
+        call_with_retry(policy, batch_deadline, "device execute", || execute(&mut ready));
     let ReadyBatch { variant, batch, slab, rows, .. } = ready;
-    match result {
+    if out.attempts > 1 {
+        lock(metrics).record_exec_retries(out.attempts - 1);
+    }
+    match out.result {
         Ok(forecasts) if forecasts.len() >= rows => {
+            lock(&faults.tracker).record_success(&variant);
             let latencies: Vec<f64> =
                 batch.iter().map(|(_, t0, _)| t0.elapsed().as_secs_f64()).collect();
-            lock(metrics).record_batch(&variant, rows, &latencies);
-            for (((req, _, rtx), forecast), latency) in
-                batch.into_iter().zip(forecasts).zip(latencies)
+            let delivered: Vec<f64> = latencies
+                .iter()
+                .zip(&expired)
+                .filter(|(_, &e)| !e)
+                .map(|(l, _)| *l)
+                .collect();
             {
+                let mut mx = lock(metrics);
+                if !delivered.is_empty() {
+                    mx.record_batch(&variant, delivered.len(), &delivered);
+                }
+                mx.record_timeouts(rows - delivered.len());
+            }
+            for (i, (((req, _, rtx), forecast), latency)) in
+                batch.into_iter().zip(forecasts).zip(latencies).enumerate()
+            {
+                let (forecast, outcome) = if expired[i] {
+                    (Vec::new(), ForecastOutcome::DeadlineExceeded)
+                } else {
+                    (forecast, ForecastOutcome::Delivered)
+                };
                 let _ = rtx.send(ForecastResponse {
                     id: req.id,
                     forecast,
                     variant: variant.clone(),
                     latency,
                     batch_size: rows,
+                    outcome,
                 });
             }
         }
         Ok(forecasts) => {
-            eprintln!(
-                "execute on {variant} returned {} rows for {rows} requests — dropping batch",
+            let reason = format!(
+                "execute on {variant} returned {} rows for {rows} requests",
                 forecasts.len()
             );
+            eprintln!("{reason} — failing batch");
+            fail_batch(batch, &variant, rows, reason, false, metrics, faults);
         }
         Err(e) => {
-            eprintln!("batch execution failed on {variant}: {e:#}");
+            let reason = format!("{e:#}");
+            eprintln!("batch execution failed on {variant}: {reason}");
+            fail_batch(batch, &variant, rows, reason, out.timed_out, metrics, faults);
         }
     }
     slab
+}
+
+/// Terminal-failure bookkeeping shared by the execute error paths: fault
+/// metrics, the variant's quarantine budget, and terminal responses
+/// (`DeadlineExceeded` when the deadline — not the device — gave up).
+fn fail_batch(
+    batch: Vec<Pending>,
+    variant: &str,
+    rows: usize,
+    reason: String,
+    timed_out: bool,
+    metrics: &Mutex<Metrics>,
+    faults: &FaultContext,
+) {
+    {
+        let mut mx = lock(metrics);
+        mx.record_exec_fault();
+        if timed_out {
+            mx.record_timeouts(batch.len());
+        } else {
+            mx.record_failed(batch.len());
+        }
+    }
+    if lock(&faults.tracker).record_fault(variant) {
+        eprintln!(
+            "variant {variant} quarantined after {} consecutive faults — routing will \
+             downgrade to a cheaper variant",
+            faults.policy.variant_fault_budget
+        );
+    }
+    let outcome = if timed_out {
+        ForecastOutcome::DeadlineExceeded
+    } else {
+        ForecastOutcome::Failed(reason)
+    };
+    respond_terminal(batch, variant, rows, outcome);
 }
 
 /// Run the prep + execute stages until the job channel closes.
@@ -363,11 +500,16 @@ where
 ///   it leaves *a* buffer behind for recycling), returns one forecast row
 ///   per real request.
 ///
-/// A prep failure or execute failure drops that batch (clients observe a
-/// closed response channel, as before) and the pipeline keeps serving.
-/// When the server also runs stream sessions it uses
-/// [`super::serve_loop::run_serve_stages`], which multiplexes this
-/// pipeline with the streaming decode stages on one device thread.
+/// A prep failure or an exhausted execute failure fails that batch with
+/// terminal responses ([`ForecastOutcome::Failed`] /
+/// [`ForecastOutcome::DeadlineExceeded`] — see [`execute_and_respond`])
+/// and the pipeline keeps serving.  When the server also runs stream
+/// sessions it uses [`super::serve_loop::run_serve_stages`], which
+/// multiplexes this pipeline with the streaming decode stages on one
+/// device thread.
+// One arg over clippy's limit: the fault context joined an already-full
+// stage signature; bundling it with metrics would couple unrelated types.
+#[allow(clippy::too_many_arguments)]
 pub fn run_stages<X>(
     jobs: Receiver<PrepJob>,
     metas: BTreeMap<String, VariantMeta>,
@@ -375,19 +517,30 @@ pub fn run_stages<X>(
     prep_slots: usize,
     pool: &'static WorkerPool,
     metrics: Arc<Mutex<Metrics>>,
+    faults: FaultContext,
     mut execute: X,
 ) -> Result<()>
 where
     X: FnMut(&mut ReadyBatch) -> Result<Vec<Vec<f32>>>,
 {
+    faults.policy.validate()?;
     let (ready_tx, ready_rx) = sync_channel::<ReadyBatch>(1);
-    let prep = spawn_prep(jobs, metas, merge, prep_slots, pool, ready_tx, |b| b)?;
+    let prep = spawn_prep(
+        jobs,
+        metas,
+        merge,
+        prep_slots,
+        pool,
+        Arc::clone(&metrics),
+        ready_tx,
+        |b| b,
+    )?;
     for ready in ready_rx.iter() {
-        let slab = execute_and_respond(&mut execute, ready, &metrics);
+        let slab = execute_and_respond(&mut execute, ready, &metrics, &faults);
         let _ = prep.recycle.send(slab);
     }
     drop(prep.recycle);
-    prep.join.join().map_err(|_| anyhow!("prep thread panicked"))?;
+    join_annotated(prep.join, "prep thread")?;
     Ok(())
 }
 

@@ -33,6 +33,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, ensure, Result};
 
+use super::faults::FaultContext;
 use super::metrics::Metrics;
 use super::pipeline::{self, PrepJob, ReadyBatch, VariantMeta};
 use super::policy::MergePolicy;
@@ -41,6 +42,7 @@ use crate::merging::MergeSpec;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::pool::WorkerPool;
 use crate::streaming::StreamingConfig;
+use crate::util::join_annotated;
 
 /// One unit of device work, tagged by which pipeline produced it.
 pub enum ReadyWork {
@@ -94,11 +96,17 @@ pub fn resolve_stream_artifact(
         )
     })?;
     let inputs = &manifest.inputs;
+    // a degenerate manifest gets its own named error rather than falling
+    // through to a confusing dims complaint about a defaulted shape
     ensure!(
-        !inputs.is_empty() && inputs[0].shape.len() >= 2,
+        !inputs.is_empty(),
+        "artifact {variant}: stream decode artifact has no inputs — not streaming-capable"
+    );
+    ensure!(
+        inputs[0].shape.len() >= 2,
         "artifact {variant}: input 0 shape {:?} is not a (batch, context) slab — not \
          streaming-capable",
-        inputs.first().map(|i| i.shape.clone()).unwrap_or_default()
+        inputs[0].shape
     );
     let capacity = manifest.batch();
     let row_elems: usize = inputs[0].shape[1..].iter().product();
@@ -150,11 +158,13 @@ pub const SERVE_QUEUE_DEPTH: usize = 2;
 ///   the calling thread; both may temporarily move the slab out of the
 ///   work item as long as a buffer is left behind for recycling.
 /// * `deliver` — receives each session's rolling forecast.
-///
-/// Failures follow the single-pipeline rules: a failed batch drops its
-/// responses, a failed decode step drops that window (the sessions
-/// reappear on the next step), and the loop keeps serving.  The loop
-/// returns once **both** prep stages have exited.
+/// * `faults` — the fault policy plus shared quarantine tracker
+///   (DESIGN.md §10): device calls on both paths retry with backoff
+///   under their deadlines; an exhausted batch answers every request
+///   with a terminal error response, an exhausted decode step re-enqueues
+///   its sessions' windows through the recycle path.  The loop keeps
+///   serving through faults and returns once **both** prep stages have
+///   exited.
 #[allow(clippy::too_many_arguments)] // the serving composition root: two
 // pipelines x (inputs, device closure) + shared infrastructure; every
 // caller is a thin wrapper (server.rs, tests) and a builder would only
@@ -169,6 +179,7 @@ pub fn run_serve_stages<XB, XS, S>(
     stream_cfg: StreamingConfig,
     pool: &'static WorkerPool,
     metrics: Arc<Mutex<Metrics>>,
+    faults: FaultContext,
     mut execute_batch: XB,
     mut execute_stream: XS,
     mut deliver: S,
@@ -178,6 +189,7 @@ where
     XS: FnMut(&mut DecodeStep) -> Result<Vec<Vec<f32>>>,
     S: FnMut(u64, Vec<f32>),
 {
+    faults.policy.validate()?;
     let (ready_tx, ready_rx) = sync_channel::<ReadyWork>(SERVE_QUEUE_DEPTH);
     let batch_prep = pipeline::spawn_prep(
         jobs,
@@ -185,6 +197,7 @@ where
         merge,
         prep_slots,
         pool,
+        Arc::clone(&metrics),
         ready_tx.clone(),
         ReadyWork::Batch,
     )?;
@@ -194,24 +207,32 @@ where
         stream_cfg,
         pool,
         Arc::clone(&metrics),
+        faults.policy.clone(),
         ready_tx,
         ReadyWork::Stream,
     )?;
     for work in ready_rx.iter() {
         match work {
             ReadyWork::Batch(ready) => {
-                let slab = pipeline::execute_and_respond(&mut execute_batch, ready, &metrics);
+                let slab =
+                    pipeline::execute_and_respond(&mut execute_batch, ready, &metrics, &faults);
                 let _ = batch_prep.recycle.send(slab);
             }
             ReadyWork::Stream(mut step) => {
-                stream::execute_and_deliver(&mut execute_stream, &mut deliver, &mut step);
+                stream::execute_and_deliver(
+                    &mut execute_stream,
+                    &mut deliver,
+                    &mut step,
+                    &faults.policy,
+                    &metrics,
+                );
                 let _ = stream_prep.recycle.send(step);
             }
         }
     }
     drop(batch_prep.recycle);
     drop(stream_prep.recycle);
-    batch_prep.join.join().map_err(|_| anyhow!("prep thread panicked"))?;
-    stream_prep.join.join().map_err(|_| anyhow!("stream-prep thread panicked"))?;
+    join_annotated(batch_prep.join, "prep thread")?;
+    join_annotated(stream_prep.join, "stream-prep thread")?;
     Ok(())
 }

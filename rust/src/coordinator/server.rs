@@ -35,9 +35,14 @@
 //! `"spec_source": "config"` escape hatch forces the declaration.
 //!
 //! Clients hold a cheap cloneable handle; each request carries its own
-//! response channel.  Stream clients hold a [`StreamClient`] from
-//! [`ServerHandle::stream_client`] and read rolling forecasts off
-//! [`ServerHandle::take_stream_forecasts`].
+//! response channel and always receives a **terminal** response
+//! ([`super::ForecastOutcome`]) — a device fault or a missed deadline
+//! answers with an error outcome, never a silently dropped channel.
+//! Stream clients hold a [`StreamClient`] from
+//! [`ServerHandle::stream_client`]; rolling forecasts land in a
+//! per-session bounded outbox ([`DeliveryMonitor`]) read through
+//! [`StreamClient::collect`] and retired with [`StreamClient::ack`]
+//! (at-least-once delivery, DESIGN.md §10).
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
@@ -48,6 +53,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, ensure, Result};
 
 use super::batcher::{self, BatcherConfig, DynamicBatcher};
+use super::delivery::DeliveryMonitor;
+use super::faults::FaultContext;
 use super::metrics::Metrics;
 use super::pipeline::{self, Pending, PrepJob, ReadyBatch, VariantMeta};
 use super::policy::{EntropyCache, MergePolicy};
@@ -58,7 +65,7 @@ use crate::merging::MergeSpec;
 use crate::runtime::pool::WorkerPool;
 use crate::runtime::{Engine, Model};
 use crate::tensor::Tensor;
-use crate::util::lock_ignore_poison;
+use crate::util::{join_annotated, lock_ignore_poison};
 
 /// Depth of the intake -> prep job channel: enough to keep prep busy, small
 /// enough that backpressure reaches the batcher quickly.
@@ -103,8 +110,10 @@ impl Client {
 }
 
 /// Stream-session handle: append observation frames to a session (the
-/// session is admitted on first sight).  Rolling forecasts come back on
-/// the channel from [`ServerHandle::take_stream_forecasts`].
+/// session is admitted on first sight).  Rolling forecasts accumulate in
+/// the session's bounded outbox; [`StreamClient::collect`] reads them and
+/// [`StreamClient::ack`] retires them (at-least-once: uncollected or
+/// unacked forecasts are redelivered, DESIGN.md §10).
 ///
 /// The intake is **bounded** (`max_queue` pending events, mirroring the
 /// batch path's queue bound): when the device falls behind and the
@@ -116,6 +125,7 @@ pub struct StreamClient {
     tx: mpsc::SyncSender<StreamEvent>,
     /// channels per frame of this serving process (homogeneous-`d`)
     d: usize,
+    delivery: Arc<Mutex<DeliveryMonitor>>,
 }
 
 impl StreamClient {
@@ -145,6 +155,19 @@ impl StreamClient {
             mpsc::TrySendError::Disconnected(_) => anyhow!("stream serving stopped"),
         })
     }
+
+    /// Every unacked rolling forecast for `session`, oldest first, as
+    /// `(seq, forecast)`.  Entries stay queued (and are redelivered by a
+    /// later collect) until [`StreamClient::ack`]ed.
+    pub fn collect(&self, session: u64) -> Vec<(u64, Vec<f32>)> {
+        lock_ignore_poison(&self.delivery).collect(session)
+    }
+
+    /// Retire `session`'s forecasts up to and including `upto`; returns
+    /// how many were acked.
+    pub fn ack(&self, session: u64, upto: u64) -> usize {
+        lock_ignore_poison(&self.delivery).ack(session, upto, Instant::now())
+    }
 }
 
 pub struct ServerHandle {
@@ -153,7 +176,9 @@ pub struct ServerHandle {
     stream_tx: Option<mpsc::SyncSender<StreamEvent>>,
     /// channels per frame of the streaming subsystem (handed to clients)
     stream_d: usize,
-    stream_forecasts: Option<mpsc::Receiver<(u64, Vec<f32>)>>,
+    /// per-session forecast outboxes (shared with the execute thread's
+    /// deliver closure); `None` without a `"streaming"` block
+    delivery: Option<Arc<Mutex<DeliveryMonitor>>>,
 }
 
 impl ServerHandle {
@@ -165,14 +190,21 @@ impl ServerHandle {
     /// configured).  All clones must be dropped before [`Self::shutdown`]
     /// can wind the stream prep stage down.
     pub fn stream_client(&self) -> Option<StreamClient> {
-        self.stream_tx.clone().map(|tx| StreamClient { tx, d: self.stream_d })
+        match (&self.stream_tx, &self.delivery) {
+            (Some(tx), Some(delivery)) => Some(StreamClient {
+                tx: tx.clone(),
+                d: self.stream_d,
+                delivery: Arc::clone(delivery),
+            }),
+            _ => None,
+        }
     }
 
-    /// Take the rolling-forecast channel: one `(session, forecast)` per
-    /// decoded session row.  `None` when streaming is unconfigured or the
-    /// channel was already taken.
-    pub fn take_stream_forecasts(&mut self) -> Option<mpsc::Receiver<(u64, Vec<f32>)>> {
-        self.stream_forecasts.take()
+    /// The delivery monitor behind the stream outboxes — for accounting
+    /// checks (pending depth, stats) outside a [`StreamClient`].  `None`
+    /// when streaming is unconfigured.
+    pub fn delivery_monitor(&self) -> Option<Arc<Mutex<DeliveryMonitor>>> {
+        self.delivery.as_ref().map(Arc::clone)
     }
 
     pub fn shutdown(mut self) -> Result<()> {
@@ -180,10 +212,10 @@ impl ServerHandle {
         // its ready sessions and exits (the dual loop ends only when both
         // input channels are closed).
         self.stream_tx = None;
-        self.stream_forecasts = None;
+        self.delivery = None;
         let _ = self.tx.send(Msg::Shutdown);
         match self.join.take() {
-            Some(j) => j.join().map_err(|_| anyhow!("server thread panicked"))?,
+            Some(j) => join_annotated(j, "server thread")?,
             None => Ok(()),
         }
     }
@@ -208,10 +240,15 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
         );
     }
 
+    config.faults.validate()?;
     let has_streaming = config.streaming.is_some();
     let stream_d = config.streaming.as_ref().map(|s| s.d).unwrap_or(1);
     let (tx, rx) = mpsc::channel::<Msg>();
     let metrics = Arc::new(Mutex::new(Metrics::new()));
+    // fault policy + the variant quarantine tracker, shared between the
+    // execute stage (records faults) and the intake (routes around
+    // quarantined variants)
+    let faults = FaultContext::new(config.faults.clone());
     let (jobs_tx, jobs_rx) = mpsc::sync_channel::<PrepJob>(PREP_QUEUE_DEPTH);
     // startup handshake: metas + the manifest-reconciled routing policy
     type Startup = (BTreeMap<String, VariantMeta>, MergePolicy);
@@ -222,12 +259,19 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
     // StreamClient::append fails fast instead of buffering unbounded
     // events behind a blocked stream-prep thread.
     let (ev_tx, ev_rx) = mpsc::sync_channel::<StreamEvent>(config.max_queue.max(1));
-    let (fc_tx, fc_rx) = mpsc::channel::<(u64, Vec<f32>)>();
+    // per-session bounded outboxes for rolling forecasts (replaces the
+    // old fire-and-forget forecast channel)
+    let delivery = Arc::new(Mutex::new(DeliveryMonitor::new(
+        config.faults.outbox_cap,
+        config.faults.forecast_ttl,
+    )));
 
     // Execute thread: owns the engine; prep stages are spawned inside
     // run_stages / run_serve_stages.
     let exec_cfg = config.clone();
     let exec_metrics = Arc::clone(&metrics);
+    let exec_faults = faults.clone();
+    let exec_delivery = Arc::clone(&delivery);
     let exec = thread::Builder::new()
         .name("tomers-exec".into())
         .spawn(move || -> Result<()> {
@@ -297,6 +341,12 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
                     let _ = ready_tx.send(Ok((metas.clone(), policy)));
                     let stream_model =
                         models.get(&art.variant).expect("resolved from this map");
+                    // forecasts land in the session's bounded outbox;
+                    // expiry runs time-gated off the same closure so a
+                    // collector-less process still bounds its memory
+                    let ttl = exec_cfg.faults.forecast_ttl;
+                    let expire_every = (ttl / 4).max(Duration::from_millis(50));
+                    let mut last_expire = Instant::now();
                     serve_loop::run_serve_stages(
                         jobs_rx,
                         ev_rx,
@@ -307,16 +357,23 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
                         scfg,
                         pool,
                         exec_metrics,
+                        exec_faults,
                         |ready| execute_ready(&models, ready),
                         |step| execute_stream_step(stream_model, art.size_aware, step),
                         move |session, forecast| {
-                            let _ = fc_tx.send((session, forecast));
+                            let now = Instant::now();
+                            let mut d = lock_ignore_poison(&exec_delivery);
+                            d.offer(session, forecast, now);
+                            if now.duration_since(last_expire) >= expire_every {
+                                d.expire(now);
+                                last_expire = now;
+                            }
                         },
                     )
                 }
                 None => {
                     drop(ev_rx);
-                    drop(fc_tx);
+                    drop(exec_delivery);
                     let _ = ready_tx.send(Ok((metas.clone(), policy)));
                     pipeline::run_stages(
                         jobs_rx,
@@ -325,6 +382,7 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
                         pool.workers(),
                         pool,
                         exec_metrics,
+                        exec_faults,
                         |ready| execute_ready(&models, ready),
                     )
                 }
@@ -339,6 +397,12 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
     // Intake thread: routing + deadline-ordered batching.
     let cfg = config;
     let intake_metrics = metrics;
+    let intake_faults = faults;
+    let intake_delivery = has_streaming.then(|| Arc::clone(&delivery));
+    // graceful-degradation order: the policy lists variants by increasing
+    // merge rate, so walking left from a quarantined variant reaches
+    // cheaper (less merged, more conservative) artifacts first
+    let ordered_variants = policy.variant_names();
     let join = thread::Builder::new()
         .name("tomers-intake".into())
         .spawn(move || -> Result<()> {
@@ -369,7 +433,20 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
                 match rx.recv_timeout(timeout) {
                     Ok(Msg::Request(req, t0, rtx)) => {
                         let decision = policy.decide_cached(&mut entropy_cache, &req.context);
-                        let name = decision.variant.name;
+                        let mut name = decision.variant.name;
+                        // graceful degradation: route around a quarantined
+                        // variant (repeated device faults) instead of
+                        // feeding it more requests to fail
+                        {
+                            let tracker = lock_ignore_poison(&intake_faults.tracker);
+                            if tracker.is_quarantined(&name) {
+                                if let Some(alt) = tracker.fallback(&ordered_variants, &name) {
+                                    lock_ignore_poison(&intake_metrics)
+                                        .record_downgrade(&name, alt);
+                                    name = alt.to_string();
+                                }
+                            }
+                        }
                         let capacity = metas
                             .get(&name)
                             .map(|meta| meta.capacity)
@@ -396,6 +473,16 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
                         }
                     }
                     Ok(Msg::Report(rtx)) => {
+                        // fold the delivery-monitor counters in (and run a
+                        // TTL sweep) so the report reflects the outboxes
+                        if let Some(delivery) = &intake_delivery {
+                            let stats = {
+                                let mut d = lock_ignore_poison(delivery);
+                                d.expire(Instant::now());
+                                d.stats()
+                            };
+                            lock_ignore_poison(&intake_metrics).set_delivery(stats);
+                        }
                         let _ = rtx.send(lock_ignore_poison(&intake_metrics).report());
                     }
                     Ok(Msg::Shutdown) => break,
@@ -417,10 +504,7 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
                 queues.retain(|_, q| !q.is_empty());
             }
             drop(jobs_tx); // unwinds prep + execute
-            match exec.join() {
-                Ok(r) => r,
-                Err(_) => Err(anyhow!("execute thread panicked")),
-            }
+            join_annotated(exec, "execute thread")?
         })
         .map_err(|e| anyhow!("spawning intake thread: {e}"))?;
     Ok(ServerHandle {
@@ -428,7 +512,7 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
         join: Some(join),
         stream_tx: has_streaming.then_some(ev_tx),
         stream_d,
-        stream_forecasts: has_streaming.then_some(fc_rx),
+        delivery: has_streaming.then_some(delivery),
     })
 }
 

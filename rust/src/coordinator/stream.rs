@@ -41,11 +41,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use super::faults::{call_with_retry, FaultPolicy};
 use super::metrics::Metrics;
 use super::pipeline::VariantMeta;
 use crate::runtime::pool::WorkerPool;
 use crate::streaming::{SessionManager, StreamingConfig};
-use crate::util::lock_ignore_poison as lock;
+use crate::util::{join_annotated, lock_ignore_poison as lock};
 
 /// One client-side event of a stream intake.
 #[derive(Clone, Debug)]
@@ -77,6 +78,11 @@ pub struct DecodeStep {
     /// per-row real-token fill (diagnostics: batch share of sessions
     /// still shorter than m)
     pub fills: Vec<usize>,
+    /// set by the execute stage when this step's device call exhausted
+    /// its retries: the recycle path doubles as the fault-feedback path —
+    /// the prep thread re-enqueues the step's sessions' windows (or
+    /// quarantines repeat offenders) when it harvests the buffer
+    pub faulted: bool,
 }
 
 impl DecodeStep {
@@ -89,6 +95,7 @@ impl DecodeStep {
             rows: 0,
             d: 1,
             fills: Vec::new(),
+            faulted: false,
         }
     }
 }
@@ -220,12 +227,24 @@ pub struct StreamPrepStage {
 /// with a `DECODE_MAX_WAIT` (20 ms) deadline so sustained sub-capacity
 /// traffic cannot starve partial batches.  On event-channel close,
 /// remaining ready sessions are flushed before the thread exits.
+///
+/// Fault feedback (DESIGN.md §10): recycled step buffers carry
+/// [`DecodeStep::faulted`]; on harvest the prep thread restores the
+/// step's sessions' consumed windows via
+/// [`SessionManager::requeue_after_fault`] — so a faulted window is
+/// retried on the next step instead of dropped — quarantining sessions
+/// past `faults.session_fault_budget`.  (A step still in flight at
+/// shutdown cannot be harvested; its window is lost with the pipeline.)
+// One arg over clippy's limit: stage wiring (channels + wrap), shared
+// metrics and the fault policy are each irreducible here.
+#[allow(clippy::too_many_arguments)]
 pub fn spawn_stream_prep<T, W>(
     events: Receiver<StreamEvent>,
     meta: VariantMeta,
     cfg: StreamingConfig,
     pool: &'static WorkerPool,
     metrics: Arc<Mutex<Metrics>>,
+    faults: FaultPolicy,
     ready_tx: SyncSender<T>,
     wrap: W,
 ) -> Result<StreamPrepStage>
@@ -233,15 +252,19 @@ where
     T: Send + 'static,
     W: Fn(DecodeStep) -> T + Send + 'static,
 {
+    faults.validate()?;
     let mut scheduler = StreamScheduler::new(meta.clone(), cfg)?;
     let (slab_tx, slab_rx) = std::sync::mpsc::channel::<DecodeStep>();
     for _ in 0..STREAM_SLAB_BUFFERS {
         let _ = slab_tx.send(DecodeStep::empty());
     }
-    let prep_slab_tx = slab_tx.clone();
     let join = thread::Builder::new()
         .name("tomers-stream-prep".into())
         .spawn(move || {
+            let budget = faults.session_fault_budget;
+            // step buffers harvested off the recycle channel, ready for
+            // reuse (fault flags already processed)
+            let mut free: Vec<DecodeStep> = Vec::new();
             let mut open = true;
             while open {
                 // absorb events: block briefly for the first, drain the rest
@@ -264,6 +287,13 @@ where
                         eprintln!("stream intake: {e:#}");
                     }
                 }
+                // harvest recycled buffers eagerly, even when no step will
+                // be emitted: a faulted step's sessions only become ready
+                // again once their windows are restored here
+                while let Ok(mut step) = slab_rx.try_recv() {
+                    harvest_step(&mut scheduler, &mut step, budget, &metrics);
+                    free.push(step);
+                }
                 scheduler.manager_mut().evict_expired(Instant::now());
                 // emit: full batches always; partial batches once the
                 // intake is idle (nothing drained), the oldest ready
@@ -283,13 +313,19 @@ where
                             break;
                         }
                     }
-                    let mut step = match slab_rx.recv() {
-                        Ok(s) => s,
-                        Err(_) => return, // execute stage gone
+                    let mut step = match free.pop() {
+                        Some(s) => s,
+                        None => match slab_rx.recv() {
+                            Ok(mut s) => {
+                                harvest_step(&mut scheduler, &mut s, budget, &metrics);
+                                s
+                            }
+                            Err(_) => return, // execute stage gone
+                        },
                     };
                     let rows = scheduler.step_into(pool, now, &mut step);
                     if rows == 0 {
-                        let _ = prep_slab_tx.send(step);
+                        free.push(step);
                         break;
                     }
                     {
@@ -307,17 +343,63 @@ where
     Ok(StreamPrepStage { recycle: slab_tx, join })
 }
 
+/// Process a harvested step buffer's fault feedback.  Faulted: restore
+/// its sessions' consumed windows for the next decode step, quarantining
+/// sessions past their fault budget, and refresh the streaming metrics
+/// snapshot so the requeue/quarantine counters are visible without
+/// another decode step.  Clean: reset the sessions' consecutive-fault
+/// counts — success must be confirmed from the harvest, not assumed at
+/// assembly, or an always-faulting session would never hit its budget.
+/// Zeroes `rows` either way so a buffer is processed exactly once.
+fn harvest_step(
+    scheduler: &mut StreamScheduler,
+    step: &mut DecodeStep,
+    budget: u32,
+    metrics: &Mutex<Metrics>,
+) {
+    let ids = &step.sessions[..step.rows];
+    if step.faulted {
+        step.faulted = false;
+        let now = Instant::now();
+        let (_requeued, quarantined) =
+            scheduler.manager_mut().requeue_after_fault(ids, budget, now);
+        if quarantined > 0 {
+            eprintln!(
+                "stream: {quarantined} session(s) quarantined after {budget} consecutive \
+                 decode faults"
+            );
+        }
+        let mut mx = lock(metrics);
+        mx.set_stream(scheduler.manager().len(), scheduler.manager().stats());
+    } else if step.rows > 0 {
+        scheduler.manager_mut().decode_succeeded(ids);
+    }
+    step.rows = 0;
+}
+
 /// Execute one decode step and deliver each session's rolling forecast —
 /// the execute-stage body shared by [`run_stream_stages`] and the dual
-/// serving loop.  A failed execute drops that step's window (the affected
-/// sessions keep accumulating and reappear on the next step); the caller
-/// recycles `step` afterwards either way.
-pub(crate) fn execute_and_deliver<X, S>(execute: &mut X, deliver: &mut S, step: &mut DecodeStep)
-where
+/// serving loop.  The device call is retried with the policy's backoff
+/// inside `faults.step_deadline`; an exhausted step is marked
+/// [`DecodeStep::faulted`] so the recycle path re-enqueues its sessions'
+/// windows (see [`spawn_stream_prep`]) instead of dropping them.  The
+/// caller recycles `step` afterwards either way.
+pub(crate) fn execute_and_deliver<X, S>(
+    execute: &mut X,
+    deliver: &mut S,
+    step: &mut DecodeStep,
+    faults: &FaultPolicy,
+    metrics: &Mutex<Metrics>,
+) where
     X: FnMut(&mut DecodeStep) -> Result<Vec<Vec<f32>>>,
     S: FnMut(u64, Vec<f32>),
 {
-    match execute(step) {
+    let deadline = faults.step_deadline.map(|d| Instant::now() + d);
+    let out = call_with_retry(faults, deadline, "stream decode step", || execute(step));
+    if out.attempts > 1 {
+        lock(metrics).record_step_retries(out.attempts - 1);
+    }
+    match out.result {
         Ok(forecasts) if forecasts.len() >= step.rows => {
             for (id, forecast) in step.sessions.iter().zip(forecasts) {
                 deliver(*id, forecast);
@@ -325,13 +407,21 @@ where
         }
         Ok(forecasts) => {
             eprintln!(
-                "stream execute returned {} rows for {} sessions — dropping step",
+                "stream execute returned {} rows for {} sessions — re-enqueuing the step's \
+                 windows",
                 forecasts.len(),
                 step.rows
             );
+            lock(metrics).record_step_fault();
+            step.faulted = true;
         }
         Err(e) => {
-            eprintln!("stream decode step failed: {e:#}");
+            eprintln!(
+                "stream decode step failed{}: {e:#}",
+                if out.timed_out { " (step deadline)" } else { "" }
+            );
+            lock(metrics).record_step_fault();
+            step.faulted = true;
         }
     }
 }
@@ -344,12 +434,16 @@ where
 /// `tomers serve` uses [`super::serve_loop::run_serve_stages`] instead,
 /// which multiplexes these stages with the batch pipeline on one device
 /// thread.
+// One arg over clippy's limit: the fault policy joined an already-full
+// stage signature (see `spawn_stream_prep`).
+#[allow(clippy::too_many_arguments)]
 pub fn run_stream_stages<X, S>(
     events: Receiver<StreamEvent>,
     meta: VariantMeta,
     cfg: StreamingConfig,
     pool: &'static WorkerPool,
     metrics: Arc<Mutex<Metrics>>,
+    faults: FaultPolicy,
     mut execute: X,
     mut deliver: S,
 ) -> Result<()>
@@ -358,13 +452,22 @@ where
     S: FnMut(u64, Vec<f32>),
 {
     let (ready_tx, ready_rx) = sync_channel::<DecodeStep>(1);
-    let prep = spawn_stream_prep(events, meta, cfg, pool, metrics, ready_tx, |s| s)?;
+    let prep = spawn_stream_prep(
+        events,
+        meta,
+        cfg,
+        pool,
+        Arc::clone(&metrics),
+        faults.clone(),
+        ready_tx,
+        |s| s,
+    )?;
     for mut step in ready_rx.iter() {
-        execute_and_deliver(&mut execute, &mut deliver, &mut step);
+        execute_and_deliver(&mut execute, &mut deliver, &mut step, &faults, &metrics);
         let _ = prep.recycle.send(step);
     }
     drop(prep.recycle);
-    prep.join.join().map_err(|_| anyhow!("stream-prep thread panicked"))?;
+    join_annotated(prep.join, "stream-prep thread")?;
     Ok(())
 }
 
@@ -486,6 +589,7 @@ mod tests {
             test_cfg(),
             pool,
             Arc::clone(&metrics),
+            FaultPolicy::default(),
             |step| {
                 assert_eq!(step.slab.len(), 2 * 16);
                 Ok(vec![vec![0.5f32; 4]; step.rows])
@@ -537,6 +641,7 @@ mod tests {
             cfg,
             pool,
             Arc::clone(&metrics),
+            FaultPolicy::default(),
             |step| Ok(vec![Vec::new(); step.rows]),
             move |_, _| *lock(&sink) += 1,
         )
@@ -567,7 +672,8 @@ mod tests {
             meta,
             test_cfg(),
             pool,
-            metrics,
+            Arc::clone(&metrics),
+            FaultPolicy::default(),
             move |step| {
                 calls += 1;
                 if calls == 1 {
@@ -578,7 +684,58 @@ mod tests {
             move |_, _| *lock(&sink) += 1,
         )
         .unwrap();
-        // the faulted step's sessions lost that window but the pipeline
-        // finished cleanly (no hang, no panic)
+        // the transient fault is absorbed by the default retry policy:
+        // the step's sessions are still delivered, and the retry counted
+        assert_eq!(*lock(&delivered), 4, "retry must recover the step");
+        assert!(lock(&metrics).faults().step_retries >= 1);
+    }
+
+    /// Requeue-after-fault: with retries disabled, an exhausted decode
+    /// step's sessions must not lose their window — the recycled buffer's
+    /// fault flag re-enqueues them and a later step serves them.
+    #[test]
+    fn faulted_step_requeues_windows_for_a_later_step() {
+        let pool = WorkerPool::global();
+        let meta = VariantMeta { capacity: 8, m: 8 };
+        let (tx, rx) = std::sync::mpsc::channel();
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let feeder = std::thread::spawn(move || {
+            for id in 0..4u64 {
+                tx.send(StreamEvent::Append { session: id, points: vec![1.0; 6] }).unwrap();
+            }
+            // keep the intake open so the prep loop keeps polling and can
+            // harvest the faulted buffer before the shutdown flush
+            std::thread::sleep(Duration::from_millis(150));
+        });
+        let faults = FaultPolicy { max_retries: 0, ..FaultPolicy::default() };
+        let mut calls = 0;
+        let delivered = Arc::new(Mutex::new(Vec::<u64>::new()));
+        let sink = Arc::clone(&delivered);
+        run_stream_stages(
+            rx,
+            meta,
+            test_cfg(),
+            pool,
+            Arc::clone(&metrics),
+            faults,
+            move |step| {
+                calls += 1;
+                if calls == 1 {
+                    anyhow::bail!("synthetic device fault");
+                }
+                Ok(vec![Vec::new(); step.rows])
+            },
+            move |id, _| lock(&sink).push(id),
+        )
+        .unwrap();
+        feeder.join().unwrap();
+        let got = lock(&delivered);
+        for id in 0..4u64 {
+            assert!(got.iter().any(|&s| s == id), "session {id} lost its faulted window");
+        }
+        let mx = lock(&metrics);
+        assert!(mx.faults().step_faults >= 1, "the exhausted step must be counted");
+        let (_, stats) = mx.stream_snapshot().expect("stream stats recorded");
+        assert!(stats.requeued_windows >= 4, "windows requeued: {:?}", stats);
     }
 }

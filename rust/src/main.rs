@@ -8,6 +8,10 @@
 //!   stream   [--sessions N]       run the streaming-decode demo workload
 //!                                 (session-managed incremental merging;
 //!                                 PJRT-free — synthetic device stage)
+//!   serve-sim [--fault-rate R]    fault-injection run of the dual serving
+//!                                 loop (DESIGN.md §10): seeded device
+//!                                 faults, terminal-outcome and delivery
+//!                                 accounting checked at exit (PJRT-free)
 //!   bench    <experiment>         regenerate a paper table/figure (or `all`)
 //!
 //! Offline build: argument parsing is hand-rolled (no clap in the vendored
@@ -23,7 +27,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use tomers::bench::{self, BenchCtx};
 #[cfg(feature = "pjrt")]
-use tomers::coordinator::{self, policy::Variant, MergePolicy};
+use tomers::coordinator::{self, policy::Variant, FaultPolicy, MergePolicy};
 use tomers::coordinator::ServerConfig;
 #[cfg(feature = "pjrt")]
 use tomers::data::Split;
@@ -80,6 +84,11 @@ USAGE:
                 serving loop; see DESIGN.md §9)
   tomers stream [--sessions N] [--rounds N] [--points N] [--batch N] [--m N]
                 [--d N] [--merge-workers N] [--config serve.json]
+  tomers serve-sim [--requests N] [--sessions N] [--rounds N]
+                   [--fault-rate R] [--seed N]
+                   (deterministic fault injection over the dual serving
+                    loop; exits non-zero if any request fails to reach a
+                    terminal outcome or delivery accounting is off)
   tomers bench <table1|fig2|table2|table3|table4|table5|table8|fig4|fig5|fig6|fig7|fig8|fig9|fig15|fig16|fig19|ablation_k|deconly|ablation_bound|all> [--quick] [--dir artifacts]
 
 Datasets: etth1 ettm1 weather electricity traffic (synthetic, DESIGN.md §7)
@@ -135,6 +144,7 @@ fn run() -> Result<()> {
             cmd_serve(&dir, requests, merge_workers, merge)
         }
         Some("stream") => cmd_stream(&args),
+        Some("serve-sim") => cmd_serve_sim(&args),
         Some("bench") => {
             let which = args.positional.get(1).context("missing experiment id")?.clone();
             let ctx = BenchCtx::new(&dir, args.has("quick"))?;
@@ -190,7 +200,7 @@ fn host_merge_from_flags(args: &Args) -> Result<Option<MergeSpec>> {
 fn cmd_stream(args: &Args) -> Result<()> {
     use std::sync::{Arc, Mutex};
     use std::time::Instant;
-    use tomers::coordinator::{run_stream_stages, Metrics, StreamEvent, VariantMeta};
+    use tomers::coordinator::{run_stream_stages, FaultPolicy, Metrics, StreamEvent, VariantMeta};
     use tomers::streaming::StreamingConfig;
     use tomers::util::lock_ignore_poison as lock;
 
@@ -262,6 +272,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
         cfg,
         tomers::runtime::WorkerPool::global(),
         Arc::clone(&metrics),
+        FaultPolicy::default(),
         move |step| {
             // synthetic device: one pass over the slab, "forecast" = the
             // session's most recent merged value repeated over the horizon
@@ -283,6 +294,236 @@ fn cmd_stream(args: &Args) -> Result<()> {
         lock(&delivered),
     );
     println!("{}", lock(&metrics).report());
+    Ok(())
+}
+
+/// `tomers serve-sim` — deterministic fault-injection run of the dual
+/// serving loop (DESIGN.md §10), PJRT-free so the default offline build
+/// can gate on it (`scripts/verify.sh` does): synthetic batch and stream
+/// devices behind a seeded [`FaultPlan`], the real
+/// `coordinator::run_serve_stages` in between, and the fault-tolerance
+/// invariants checked at exit — every submitted request reaches exactly
+/// one terminal outcome (no hung receivers), per-session forecast order
+/// holds, and the delivery monitor's ledger balances
+/// (`enqueued == acked + expired_undelivered + dropped_overflow` once
+/// everything unacked is expired).
+fn cmd_serve_sim(args: &Args) -> Result<()> {
+    use std::collections::BTreeMap;
+    use std::sync::{mpsc, Arc, Mutex};
+    use std::time::{Duration, Instant};
+    use tomers::coordinator::{
+        call_with_retry, default_host_merge, run_serve_stages, DeliveryMonitor, FaultContext,
+        FaultPlan, FaultPolicy, ForecastOutcome, ForecastRequest, Metrics, PrepJob, StreamEvent,
+        VariantMeta,
+    };
+    use tomers::streaming::StreamingConfig;
+    use tomers::util::{join_annotated, lock_ignore_poison as lock};
+
+    let requests: usize = args.flag("requests").unwrap_or("200").parse()?;
+    let sessions: usize = args.flag("sessions").unwrap_or("20").parse()?;
+    let rounds: usize = args.flag("rounds").unwrap_or("6").parse()?;
+    let fault_rate: f64 = args.flag("fault-rate").unwrap_or("0.2").parse()?;
+    let seed: u64 = args.flag("seed").unwrap_or("7").parse()?;
+    ensure!(
+        requests >= 1 && sessions >= 1 && rounds >= 1,
+        "--requests/--sessions/--rounds must all be >= 1"
+    );
+    ensure!((0.0..=1.0).contains(&fault_rate), "--fault-rate must be within [0, 1]");
+
+    // serving-shaped policy with sim-speed backoff; a small outbox so the
+    // overflow accounting is actually exercised at default scale
+    let policy = FaultPolicy {
+        backoff_base: Duration::from_micros(200),
+        backoff_max: Duration::from_millis(2),
+        request_deadline: Some(Duration::from_secs(30)),
+        step_deadline: Some(Duration::from_millis(100)),
+        outbox_cap: 4,
+        ..FaultPolicy::default()
+    };
+    let (capacity, m) = (4usize, 32usize);
+    let metas: BTreeMap<String, VariantMeta> =
+        [("v".to_string(), VariantMeta { capacity, m })].into();
+
+    // batch side: every request's response receiver is kept — liveness is
+    // "each of these yields exactly one terminal response"
+    let (jobs_tx, jobs_rx) = mpsc::sync_channel::<PrepJob>(requests);
+    let mut receivers = Vec::with_capacity(requests);
+    let mut batch = Vec::new();
+    for id in 0..requests as u64 {
+        let (rtx, rrx) = mpsc::channel();
+        let context: Vec<f32> =
+            (0..m).map(|i| ((id as usize + i) % 7) as f32 * 0.1).collect();
+        batch.push((ForecastRequest { id, context }, Instant::now(), rtx));
+        receivers.push(rrx);
+        if batch.len() == capacity {
+            jobs_tx.send(PrepJob { variant: "v".into(), batch: std::mem::take(&mut batch) })?;
+        }
+    }
+    if !batch.is_empty() {
+        jobs_tx.send(PrepJob { variant: "v".into(), batch })?;
+    }
+    drop(jobs_tx);
+
+    // stream side: a *bounded* intake fed through try_send + bounded
+    // retry, so sustained backpressure surfaces as an error instead of
+    // blocking the producer forever
+    let scfg = StreamingConfig { max_sessions: sessions, min_new: 4, d: 1, ..Default::default() };
+    let frames = scfg.min_new;
+    let (ev_tx, ev_rx) = mpsc::sync_channel::<StreamEvent>(64);
+    let intake_policy = FaultPolicy {
+        max_retries: 500,
+        backoff_base: Duration::from_micros(500),
+        backoff_max: Duration::from_millis(5),
+        ..FaultPolicy::default()
+    };
+    let n_sessions = sessions as u64;
+    let feeder = std::thread::spawn(move || -> Result<()> {
+        for round in 0..rounds {
+            for s in 0..n_sessions {
+                let mut ev = Some(StreamEvent::Append {
+                    session: s,
+                    points: (0..frames)
+                        .map(|i| ((round * frames + i) as f32 * 0.05).sin())
+                        .collect(),
+                });
+                let out = call_with_retry(
+                    &intake_policy,
+                    Some(Instant::now() + Duration::from_secs(10)),
+                    "stream intake",
+                    || {
+                        let e = ev.take().expect("retaken only after a full queue");
+                        match ev_tx.try_send(e) {
+                            Ok(()) => Ok(()),
+                            Err(mpsc::TrySendError::Full(e)) => {
+                                ev = Some(e);
+                                anyhow::bail!("intake queue full")
+                            }
+                            Err(mpsc::TrySendError::Disconnected(e)) => {
+                                ev = Some(e);
+                                anyhow::bail!("serving loop gone")
+                            }
+                        }
+                    },
+                );
+                out.result?;
+            }
+        }
+        Ok(())
+    });
+
+    let delivery =
+        Arc::new(Mutex::new(DeliveryMonitor::new(policy.outbox_cap, policy.forecast_ttl)));
+    let plan = Arc::new(Mutex::new(FaultPlan::new(seed, fault_rate)));
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let faults = FaultContext::new(policy.clone());
+
+    let horizon = 8usize;
+    let stream_meta = VariantMeta { capacity: 4, m: 16 };
+    let row = stream_meta.m * scfg.d;
+    let bplan = Arc::clone(&plan);
+    let splan = Arc::clone(&plan);
+    let sink = Arc::clone(&delivery);
+    println!(
+        "serve-sim: {requests} batch requests + {sessions} stream sessions x {rounds} rounds, \
+         fault rate {fault_rate}, seed {seed} ..."
+    );
+    run_serve_stages(
+        jobs_rx,
+        ev_rx,
+        metas,
+        default_host_merge(),
+        2,
+        stream_meta,
+        scfg,
+        tomers::runtime::WorkerPool::global(),
+        Arc::clone(&metrics),
+        faults,
+        move |ready| {
+            FaultPlan::gate(&bplan)?;
+            Ok((0..ready.rows).map(|r| vec![ready.slab[(r + 1) * m - 1]; horizon]).collect())
+        },
+        move |step| {
+            FaultPlan::gate(&splan)?;
+            Ok((0..step.rows).map(|r| vec![step.slab[(r + 1) * row - 1]; horizon]).collect())
+        },
+        move |session, forecast| {
+            lock(&sink).offer(session, forecast, Instant::now());
+        },
+    )?;
+    join_annotated(feeder, "stream feeder")??;
+
+    // liveness: every request answered with exactly one terminal outcome
+    let (mut delivered, mut timeouts, mut failed, mut non_terminal) = (0usize, 0usize, 0usize, 0usize);
+    for rrx in receivers {
+        match rrx.recv() {
+            Ok(resp) => match resp.outcome {
+                ForecastOutcome::Delivered => delivered += 1,
+                ForecastOutcome::DeadlineExceeded => timeouts += 1,
+                ForecastOutcome::Failed(_) => failed += 1,
+            },
+            Err(_) => non_terminal += 1,
+        }
+    }
+    println!(
+        "batch: delivered={delivered} timeouts={timeouts} failed={failed} \
+         non_terminal={non_terminal}"
+    );
+    ensure!(non_terminal == 0, "liveness violated: {non_terminal} request(s) never answered");
+    ensure!(
+        delivered + timeouts + failed == requests,
+        "terminal outcomes must cover every request"
+    );
+
+    // delivery accounting: collect everything, ack half the sessions,
+    // expire the rest — the ledger must balance exactly
+    let mut d = lock(&delivery);
+    let mut collected = 0usize;
+    for s in 0..n_sessions {
+        let got = d.collect(s);
+        ensure!(
+            got.windows(2).all(|w| w[0].0 < w[1].0),
+            "session {s}: forecast sequence order violated"
+        );
+        collected += got.len();
+        if s % 2 == 0 {
+            if let Some(&(last, _)) = got.last() {
+                d.ack(s, last, Instant::now());
+            }
+        }
+    }
+    ensure!(d.max_outbox_depth() <= d.cap(), "outbox depth exceeded its bound");
+    let pending = d.total_pending();
+    let expired = d.expire(Instant::now() + policy.forecast_ttl + Duration::from_secs(1));
+    ensure!(
+        expired == pending && d.total_pending() == 0,
+        "expiry must settle every unacked forecast ({expired} expired, {pending} were pending)"
+    );
+    let st = d.stats();
+    ensure!(
+        st.enqueued == st.acked + st.expired_undelivered + st.dropped_overflow,
+        "delivery ledger must balance: {st:?}"
+    );
+    drop(d);
+    println!(
+        "stream: collected={collected} enqueued={} acked={} redelivered={} \
+         expired_undelivered={} dropped_overflow={}",
+        st.enqueued, st.acked, st.redelivered, st.expired_undelivered, st.dropped_overflow
+    );
+    println!("delivery accounting consistent");
+    {
+        let p = lock(&plan);
+        println!(
+            "injected: {} fault(s) over {} device calls (errors={} delays={} panics={})",
+            p.injected(),
+            p.calls(),
+            p.injected_errors,
+            p.injected_delays,
+            p.injected_panics
+        );
+    }
+    let mut mx = lock(&metrics);
+    mx.set_delivery(st);
+    println!("{}", mx.report());
     Ok(())
 }
 
@@ -401,10 +642,10 @@ fn cmd_serve_config(config: ServerConfig, requests: usize) -> Result<()> {
     }
     // A configured "streaming" block is live: demo it alongside the batch
     // workload — a few sessions streaming d-channel frames through the
-    // same device thread, rolling forecasts counted off the channel.
+    // same device thread, rolling forecasts collected + acked through the
+    // delivery monitor (at-least-once; see DESIGN.md §10).
     if let Some(scfg) = streaming {
         let stream = handle.stream_client().expect("streaming configured");
-        let forecasts = handle.take_stream_forecasts().expect("first take");
         let stream_sessions = 4u64.min(requests.max(1) as u64);
         let frames = scfg.min_new.max(4);
         println!(
@@ -419,16 +660,24 @@ fn cmd_serve_config(config: ServerConfig, requests: usize) -> Result<()> {
                 stream.append(s, pts)?;
             }
         }
-        drop(stream);
+        // the server keeps serving while we poll; a settle window lets the
+        // decode deadline flush partial batches before the last collect
         let mut rolling = 0usize;
-        // the server keeps serving while we drain; a short settle window
-        // lets the decode deadline flush partial batches
-        while let Ok((_session, _forecast)) =
-            forecasts.recv_timeout(Duration::from_millis(200))
-        {
-            rolling += 1;
+        let mut idle_rounds = 0usize;
+        while idle_rounds < 3 {
+            std::thread::sleep(Duration::from_millis(100));
+            let mut got = 0usize;
+            for s in 0..stream_sessions {
+                let batch = stream.collect(s);
+                if let Some(&(last, _)) = batch.last() {
+                    stream.ack(s, last);
+                }
+                got += batch.len();
+            }
+            rolling += got;
+            idle_rounds = if got == 0 { idle_rounds + 1 } else { 0 };
         }
-        println!("{rolling} rolling forecasts delivered");
+        println!("{rolling} rolling forecasts delivered and acked");
     }
     println!("{}", client.metrics_report()?);
     handle.shutdown()?;
@@ -453,6 +702,7 @@ fn cmd_serve(dir: &PathBuf, requests: usize, merge_workers: usize, merge: MergeS
         merge,
         streaming: None,
         prefer_manifest_spec: true,
+        faults: FaultPolicy::default(),
     })?;
     let client = handle.client();
     println!("serving {requests} mixed-workload requests ...");
@@ -466,13 +716,15 @@ fn cmd_serve(dir: &PathBuf, requests: usize, merge_workers: usize, merge: MergeS
         let context = series.column(0);
         pending.push(client.submit(coordinator::ForecastRequest { id, context })?);
     }
-    let mut ok = 0usize;
+    let (mut ok, mut terminal_errors) = (0usize, 0usize);
     for rx in pending {
-        if rx.recv().is_ok() {
-            ok += 1;
+        match rx.recv() {
+            Ok(resp) if resp.outcome.is_delivered() => ok += 1,
+            Ok(_) => terminal_errors += 1,
+            Err(_) => {}
         }
     }
-    println!("completed {ok}/{requests}");
+    println!("completed {ok}/{requests} ({terminal_errors} terminal error responses)");
     println!("{}", client.metrics_report()?);
     handle.shutdown()?;
     Ok(())

@@ -43,6 +43,10 @@ pub struct StreamStats {
     pub probes: u64,
     /// appended frames (a `d`-channel frame counts once)
     pub appended_points: u64,
+    /// windows restored after a faulted decode step (DESIGN.md §10)
+    pub requeued_windows: u64,
+    /// sessions evicted for exhausting their consecutive-fault budget
+    pub quarantined: u64,
 }
 
 /// Outcome of one [`SessionManager::append`] call.
@@ -355,6 +359,51 @@ impl SessionManager {
             }
         }
     }
+
+    /// A decode step carrying these sessions faulted after retries: make
+    /// each session's last window pending again so a later step re-serves
+    /// it (the windows were consumed at assembly by
+    /// [`SessionManager::mark_decoded`]).  A session whose *consecutive*
+    /// fault count reaches `budget` is quarantined — evicted, so a
+    /// poisoned context cannot fault every step it lands in forever
+    /// (`budget` 0 disables quarantine).  Returns
+    /// `(requeued, quarantined)`.
+    pub fn requeue_after_fault(
+        &mut self,
+        ids: &[u64],
+        budget: u32,
+        now: Instant,
+    ) -> (usize, usize) {
+        let seq = self.next_seq();
+        let mut requeued = 0usize;
+        let mut quarantined = 0usize;
+        for id in ids {
+            let Some(s) = self.sessions.get_mut(id) else { continue };
+            let faults = s.restore_window(now, seq);
+            if budget > 0 && faults >= budget {
+                self.sessions.remove(id);
+                quarantined += 1;
+                self.stats.quarantined += 1;
+            } else {
+                requeued += 1;
+                self.stats.requeued_windows += 1;
+            }
+        }
+        (requeued, quarantined)
+    }
+
+    /// A decode step carrying these sessions completed cleanly: reset
+    /// their consecutive-fault counts.  Fed back from the step-buffer
+    /// harvest (not at assembly time — a step's fate is unknown then, and
+    /// resetting early would let an always-faulting session escape its
+    /// quarantine budget).
+    pub fn decode_succeeded(&mut self, ids: &[u64]) {
+        for id in ids {
+            if let Some(s) = self.sessions.get_mut(id) {
+                s.decode_succeeded();
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -543,6 +592,46 @@ mod tests {
         }
         assert!(rerouted, "a clean multivariate window must re-route");
         assert!(m.session(1).unwrap().spec().is_off());
+    }
+
+    #[test]
+    fn requeue_after_fault_restores_readiness_and_quarantines() {
+        let mut m = SessionManager::new(cfg(8)).unwrap();
+        let now = Instant::now();
+        let mut rng = Rng::new(21);
+        for id in [1, 2] {
+            m.admit(id, &noise(&mut rng, 8), now).unwrap();
+        }
+        let mut ids = Vec::new();
+        m.take_ready(8, &mut ids);
+        assert_eq!(ids, vec![1, 2]);
+        m.mark_decoded(&ids, now);
+        assert_eq!(m.ready_count(), 0, "windows consumed at assembly");
+        // the step faults: both windows come back, sessions ready again
+        let (requeued, quarantined) = m.requeue_after_fault(&[1, 2], 3, now);
+        assert_eq!((requeued, quarantined), (2, 0));
+        assert_eq!(m.ready_count(), 2, "restored windows are decode-ready");
+        assert_eq!(m.stats().requeued_windows, 2);
+        // session 1 keeps faulting (assemble -> fault), session 2 succeeds
+        m.mark_decoded(&[1, 2], now);
+        m.decode_succeeded(&[2]);
+        m.requeue_after_fault(&[1], 3, now);
+        m.mark_decoded(&[1], now);
+        // third consecutive fault for 1 hits the budget: quarantined
+        let (requeued, quarantined) = m.requeue_after_fault(&[1], 3, now);
+        assert_eq!((requeued, quarantined), (0, 1));
+        assert!(m.session(1).is_none(), "quarantined session must be evicted");
+        assert!(m.session(2).is_some(), "clean session unaffected");
+        assert_eq!(m.stats().quarantined, 1);
+        // unknown ids are ignored, budget 0 disables quarantine
+        assert_eq!(m.requeue_after_fault(&[99], 3, now), (0, 0));
+        m.take_ready(8, &mut ids);
+        m.mark_decoded(&ids, now);
+        for _ in 0..10 {
+            m.requeue_after_fault(&[2], 0, now);
+            m.mark_decoded(&[2], now);
+        }
+        assert!(m.session(2).is_some(), "budget 0 must never quarantine");
     }
 
     #[test]

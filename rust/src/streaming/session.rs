@@ -96,6 +96,12 @@ pub struct StreamSession {
     pub touch_seq: u64,
     /// regime changes this session went through
     reroutes: u32,
+    /// consecutive faulted decode steps (reset on a successful decode;
+    /// the manager quarantines the session past its budget)
+    fault_count: u32,
+    /// frames consumed by the last decode step — restorable by
+    /// [`StreamSession::restore_window`] when that step faults
+    last_window: usize,
 }
 
 impl StreamSession {
@@ -121,6 +127,8 @@ impl StreamSession {
             last_touch: now,
             touch_seq: 0,
             reroutes: 0,
+            fault_count: 0,
+            last_window: 0,
         })
     }
 
@@ -205,13 +213,51 @@ impl StreamSession {
         self.ready_at
     }
 
-    /// Mark the session served by a decode step.
+    /// Mark the session served by a decode step.  The consumed window is
+    /// remembered so a faulted step can restore it
+    /// ([`StreamSession::restore_window`]).  The fault count is *not*
+    /// touched here — a step's fate is unknown at assembly time; the
+    /// manager clears it via [`StreamSession::decode_succeeded`] when the
+    /// step's buffer comes back clean.
     pub fn mark_decoded(&mut self, now: Instant, seq: u64) {
+        self.last_window = self.since_new;
         self.since_new = 0;
         self.ready_since = None;
         self.ready_at = None;
         self.last_touch = now;
         self.touch_seq = seq;
+    }
+
+    /// A decode step containing this session completed normally: the
+    /// consecutive-fault count resets (the budget is for *consecutive*
+    /// faults; sporadic recovered faults must not accumulate into an
+    /// eviction over a long-lived session).
+    pub fn decode_succeeded(&mut self) {
+        self.fault_count = 0;
+    }
+
+    /// Restore the window consumed by the last (faulted) decode step so
+    /// the next step retries it, and count the fault.  Returns the
+    /// consecutive-fault count, which the manager checks against the
+    /// session's fault budget.  Idempotent per decode: a second call
+    /// without an intervening [`StreamSession::mark_decoded`] restores
+    /// nothing more (the window is already back).
+    pub fn restore_window(&mut self, now: Instant, seq: u64) -> u32 {
+        self.since_new += self.last_window;
+        self.last_window = 0;
+        if self.since_new > 0 && self.ready_since.is_none() {
+            self.ready_since = Some(seq);
+            self.ready_at = Some(now);
+        }
+        self.last_touch = now;
+        self.touch_seq = seq;
+        self.fault_count += 1;
+        self.fault_count
+    }
+
+    /// Consecutive faulted decode steps (0 after any successful one).
+    pub fn fault_count(&self) -> u32 {
+        self.fault_count
     }
 
     /// Assemble the decode input row: the last `size_row.len()` merged
@@ -323,6 +369,32 @@ mod tests {
             assert!(s.merged_len() <= 10);
         }
         assert_eq!(s.appended(), 200);
+    }
+
+    #[test]
+    fn restore_window_reverses_mark_decoded() {
+        let now = Instant::now();
+        let mut s = StreamSession::new(5, causal(1.5), 1, 64, now).unwrap();
+        s.append(&[1.0, 2.0, 3.0, 4.0, 5.0], 1024, now, 1);
+        assert!(s.is_ready(4));
+        s.mark_decoded(now, 2);
+        assert!(!s.is_ready(4));
+        // the step faulted: the 5-frame window comes back, readiness too
+        assert_eq!(s.restore_window(now, 3), 1);
+        assert!(s.is_ready(4));
+        assert_eq!(s.ready_since(), Some(3));
+        // idempotent per decode: a duplicate restore adds nothing
+        assert_eq!(s.restore_window(now, 4), 2, "but the fault still counts");
+        assert_eq!(s.fault_count(), 2);
+        // consecutive-fault accounting resets only on a *completed* step
+        s.mark_decoded(now, 5);
+        assert_eq!(s.fault_count(), 2, "assembly alone must not reset the count");
+        s.decode_succeeded();
+        assert_eq!(s.fault_count(), 0);
+        // restored frames merge with newly appended ones
+        s.append(&[6.0], 1024, now, 6);
+        s.restore_window(now, 7);
+        assert!(s.is_ready(4), "5 restored + 1 new frames ready again");
     }
 
     #[test]

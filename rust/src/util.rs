@@ -4,7 +4,9 @@
 //! benchmark statistics are hand-rolled here instead of pulling `rand` /
 //! `criterion`.
 
+use std::any::Any;
 use std::sync::{Mutex, MutexGuard};
+use std::thread::JoinHandle;
 use std::time::Instant;
 
 /// Lock that shrugs off poisoning: used by the pool and the serving
@@ -13,6 +15,28 @@ use std::time::Instant;
 #[inline]
 pub fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Best-effort extraction of a panic payload's message.  `panic!("...")`
+/// carries a `&str`, `panic!("{x}")` a `String`; anything else (a custom
+/// payload) gets a placeholder rather than losing the event.
+pub fn panic_message(payload: &(dyn Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "<non-string panic payload>"
+    }
+}
+
+/// Join a thread, annotating a panic with its payload message instead of
+/// discarding it (`join().map_err(|_| ...)` loses the reason the thread
+/// died — the one fact needed to debug it).
+pub fn join_annotated<T>(handle: JoinHandle<T>, what: &str) -> anyhow::Result<T> {
+    handle
+        .join()
+        .map_err(|payload| anyhow::anyhow!("{what} panicked: {}", panic_message(&*payload)))
 }
 
 /// SplitMix64 PRNG — deterministic, seedable, good enough for synthetic
@@ -184,6 +208,28 @@ mod tests {
         assert_eq!(s.mean(), 2.0);
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn panic_message_downcasts_common_payloads() {
+        let join = |f: fn()| std::thread::spawn(f).join().unwrap_err();
+        assert_eq!(panic_message(&*join(|| panic!("static str"))), "static str");
+        assert_eq!(panic_message(&*join(|| panic!("{}", 41 + 1))), "42");
+        assert_eq!(
+            panic_message(&*join(|| std::panic::panic_any(7u32))),
+            "<non-string panic payload>"
+        );
+    }
+
+    #[test]
+    fn join_annotated_keeps_the_payload() {
+        let h = std::thread::spawn(|| panic!("boom at step {}", 3));
+        let err = join_annotated(h, "worker thread").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("worker thread panicked"), "{msg}");
+        assert!(msg.contains("boom at step 3"), "{msg}");
+        let ok = std::thread::spawn(|| 5usize);
+        assert_eq!(join_annotated(ok, "ok thread").unwrap(), 5);
     }
 
     #[test]

@@ -7,7 +7,9 @@
 use std::path::PathBuf;
 use std::time::Duration;
 
-use tomers::coordinator::{self, policy::Variant, ForecastRequest, MergePolicy, ServerConfig};
+use tomers::coordinator::{
+    self, policy::Variant, FaultPolicy, ForecastRequest, MergePolicy, ServerConfig,
+};
 use tomers::data;
 use tomers::util::Rng;
 
@@ -30,6 +32,7 @@ fn server(dir: PathBuf) -> coordinator::ServerHandle {
         merge: tomers::coordinator::default_host_merge(),
         streaming: None,
         prefer_manifest_spec: true,
+        faults: FaultPolicy::default(),
     })
     .expect("server start")
 }
@@ -133,16 +136,17 @@ fn streaming_serve_decodes_sessions_end_to_end() {
             ..StreamingConfig::default()
         }),
         prefer_manifest_spec: true,
+        faults: FaultPolicy::default(),
     })
     .expect("streaming serve start");
     let client = handle.client();
     let stream = handle.stream_client().expect("streaming configured");
-    let forecasts = handle.take_stream_forecasts().expect("forecast channel");
     // batch and stream traffic through the same device thread
     let batch_resp = client
         .forecast(ForecastRequest { id: 1, context: context("etth1", 3) })
         .expect("batch forecast");
     assert_eq!(batch_resp.id, 1);
+    assert!(batch_resp.outcome.is_delivered());
     let mut rng = Rng::new(41);
     for _ in 0..3 {
         for id in 0..3u64 {
@@ -150,12 +154,27 @@ fn streaming_serve_decodes_sessions_end_to_end() {
             stream.append(id, pts).expect("stream append");
         }
     }
-    drop(stream);
+    // rolling forecasts arrive through the delivery monitor: poll
+    // collect + ack until a settle window passes with nothing new
     let mut rolling = 0usize;
-    while forecasts.recv_timeout(Duration::from_millis(500)).is_ok() {
-        rolling += 1;
+    let mut sessions_seen = std::collections::BTreeSet::new();
+    let mut idle = 0usize;
+    while idle < 4 {
+        std::thread::sleep(Duration::from_millis(125));
+        let mut got = 0usize;
+        for id in 0..3u64 {
+            let batch = stream.collect(id);
+            if let Some(&(last, _)) = batch.last() {
+                stream.ack(id, last);
+                sessions_seen.insert(id);
+            }
+            got += batch.len();
+        }
+        rolling += got;
+        idle = if got == 0 { idle + 1 } else { 0 };
     }
-    assert!(rolling >= 3, "every session must get at least one rolling forecast");
+    assert!(rolling >= 3, "sessions must get rolling forecasts ({rolling})");
+    assert_eq!(sessions_seen.len(), 3, "every session must get at least one forecast");
     let report = client.metrics_report().expect("report");
     assert!(report.contains("streaming:"), "decode steps recorded: {report}");
     handle.shutdown().unwrap();

@@ -12,7 +12,9 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use tomers::coordinator::pipeline::{default_host_merge, HostPrep, Pending, PrepJob, VariantMeta};
-use tomers::coordinator::{pipeline, ForecastRequest, Metrics};
+use tomers::coordinator::{
+    pipeline, FaultContext, FaultPolicy, ForecastOutcome, ForecastRequest, Metrics,
+};
 use tomers::merging::MergeSpec;
 use tomers::runtime::WorkerPool;
 use tomers::util::Rng;
@@ -104,7 +106,8 @@ fn prep_rejects_ragged_and_overlong_when_disabled() {
 
 /// End-to-end through `run_stages` with a synthetic device: responses
 /// arrive with the right ids/rows, premerged slabs reach the executor,
-/// and a failing batch poisons nothing.
+/// and a failing batch poisons nothing — its clients get a terminal
+/// `Failed` response (DESIGN.md §10), never a silently dropped channel.
 #[test]
 fn staged_pipeline_serves_and_isolates_failures() {
     let pool = WorkerPool::global();
@@ -126,7 +129,8 @@ fn staged_pipeline_serves_and_isolates_failures() {
         }
         feed.push(PrepJob { variant: "v".to_string(), batch });
     }
-    // one batch routed to an unknown variant: dropped by prep, not fatal
+    // one batch routed to an unknown variant: answered with a terminal
+    // error by prep, not fatal and not silently dropped
     let (p, rx_lost) = request(999, (0..len).map(|_| 0.25f32).collect());
     feed.insert(2, PrepJob { variant: "nope".to_string(), batch: vec![p] });
 
@@ -140,6 +144,9 @@ fn staged_pipeline_serves_and_isolates_failures() {
     let executed = Arc::new(Mutex::new(Vec::<usize>::new()));
     let exec_log = Arc::clone(&executed);
     let fail_batch = 1u64; // fail the batch whose first id is 10
+    // zero retries so the device-call count stays deterministic; the
+    // retry loop itself is pinned by tests/serve_faults.rs
+    let faults = FaultContext::new(FaultPolicy { max_retries: 0, ..FaultPolicy::default() });
     pipeline::run_stages(
         jobs_rx,
         metas,
@@ -147,6 +154,7 @@ fn staged_pipeline_serves_and_isolates_failures() {
         1,
         pool,
         Arc::clone(&metrics),
+        faults,
         move |ready| {
             assert_eq!(ready.slab.len(), capacity * m, "slab shape");
             assert_eq!(ready.premerged, ready.rows, "all contexts premerged");
@@ -160,27 +168,44 @@ fn staged_pipeline_serves_and_isolates_failures() {
     .expect("run_stages");
     feeder.join().unwrap();
 
-    // the failed batch's clients see a dropped channel; everyone else is
-    // answered with their row
-    let mut ok = 0;
+    // every client is answered terminally: the failed batch's clients get
+    // `Failed`, everyone else their delivered row
+    let (mut ok, mut failed) = (0, 0);
     for (b, id, rx) in receivers {
-        match rx.recv() {
-            Ok(resp) => {
-                assert_ne!(b, fail_batch, "failed batch must not answer");
-                assert_eq!(resp.id, id);
-                assert_eq!(resp.forecast.len(), 7);
-                assert_eq!(resp.variant, "v");
-                assert_eq!(resp.batch_size, capacity);
-                ok += 1;
+        let resp = rx.recv().expect("every request gets a terminal response");
+        assert_eq!(resp.id, id);
+        if b == fail_batch {
+            match &resp.outcome {
+                ForecastOutcome::Failed(reason) => {
+                    assert!(reason.contains("synthetic device fault"), "{reason}");
+                }
+                other => panic!("failed batch must answer Failed, got {other:?}"),
             }
-            Err(_) => assert_eq!(b, fail_batch, "only the failed batch may drop"),
+            assert!(resp.forecast.is_empty(), "no forecast on a failed response");
+            failed += 1;
+        } else {
+            assert!(resp.outcome.is_delivered());
+            assert_eq!(resp.forecast.len(), 7);
+            assert_eq!(resp.variant, "v");
+            assert_eq!(resp.batch_size, capacity);
+            ok += 1;
         }
     }
     assert_eq!(ok, 4 * capacity);
-    assert!(rx_lost.recv().is_err(), "unknown-variant batch must be dropped");
+    assert_eq!(failed, capacity);
+    // the unknown-variant request is answered too, not silently dropped
+    let lost = rx_lost.recv().expect("unknown-variant request answered");
+    assert!(
+        matches!(lost.outcome, ForecastOutcome::Failed(_)),
+        "unknown variant is a terminal failure: {:?}",
+        lost.outcome
+    );
     assert_eq!(executed.lock().unwrap().len(), 5, "all known-variant batches reached the device");
-    let m = metrics.lock().unwrap();
-    assert_eq!(m.served(), 4 * capacity);
+    let mx = metrics.lock().unwrap();
+    assert_eq!(mx.served(), 4 * capacity);
+    let f = mx.faults();
+    assert_eq!(f.exec_faults, 1, "one batch exhausted its (zero) retries");
+    assert_eq!(f.failed, capacity as u64 + 1, "failed batch rows + unknown-variant request");
 }
 
 /// An invalid serving spec fails `run_stages` up front instead of
@@ -203,6 +228,7 @@ fn run_stages_rejects_invalid_spec() {
             1,
             pool,
             Arc::new(Mutex::new(Metrics::new())),
+            FaultContext::default(),
             |_ready| Ok(Vec::new()),
         )
         .unwrap_err();

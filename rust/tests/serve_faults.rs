@@ -1,0 +1,561 @@
+//! Fault-injection suite for the serving stages (ISSUE 6 acceptance,
+//! DESIGN.md §10) — PJRT-free, driving the identical machinery `tomers
+//! serve` runs with synthetic devices behind a seeded [`FaultPlan`]:
+//!
+//! * liveness: under 20% injected device faults (errors, latency spikes,
+//!   panics) every submitted request reaches exactly one **terminal**
+//!   outcome — no hung `submit()` receiver, no silently dropped channel;
+//! * accounting: the delivery monitor's ledger balances, per-session
+//!   forecast order is preserved across redelivery, and outbox memory
+//!   stays within its configured bound;
+//! * degradation: a repeatedly-faulting variant crosses its quarantine
+//!   budget; a faulted decode step re-enqueues its sessions for a later
+//!   step instead of losing them.
+
+#![allow(unknown_lints)]
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use tomers::coordinator::{
+    call_with_retry, pipeline, run_serve_stages, run_stream_stages, DeliveryMonitor,
+    FaultContext, FaultPlan, FaultPolicy, ForecastOutcome, ForecastRequest, Metrics, PrepJob,
+    StreamEvent, VariantMeta,
+};
+use tomers::merging::MergeSpec;
+use tomers::runtime::WorkerPool;
+use tomers::streaming::StreamingConfig;
+use tomers::util::lock_ignore_poison as lock;
+
+type Responses = Vec<mpsc::Receiver<tomers::coordinator::ForecastResponse>>;
+
+/// Fast-backoff policy so the suite runs in seconds; the semantics are
+/// the serving defaults.
+fn fast_policy() -> FaultPolicy {
+    FaultPolicy {
+        backoff_base: Duration::from_micros(100),
+        backoff_max: Duration::from_millis(1),
+        ..FaultPolicy::default()
+    }
+}
+
+/// `requests` single-variant jobs batched to `capacity`, with every
+/// response receiver kept for the liveness check.
+fn make_jobs(
+    requests: usize,
+    capacity: usize,
+    m: usize,
+    variant: &str,
+) -> (Vec<PrepJob>, Responses) {
+    let mut jobs = Vec::new();
+    let mut receivers = Vec::with_capacity(requests);
+    let mut batch = Vec::new();
+    for id in 0..requests as u64 {
+        let (rtx, rrx) = mpsc::channel();
+        let context: Vec<f32> = (0..m).map(|i| ((id as usize + i) % 5) as f32 * 0.2).collect();
+        batch.push((ForecastRequest { id, context }, Instant::now(), rtx));
+        receivers.push(rrx);
+        if batch.len() == capacity {
+            jobs.push(PrepJob { variant: variant.to_string(), batch: std::mem::take(&mut batch) });
+        }
+    }
+    if !batch.is_empty() {
+        jobs.push(PrepJob { variant: variant.to_string(), batch });
+    }
+    (jobs, receivers)
+}
+
+fn stream_events(sessions: u64, rounds: usize, frames: usize) -> Vec<StreamEvent> {
+    let mut events = Vec::new();
+    for round in 0..rounds {
+        for s in 0..sessions {
+            events.push(StreamEvent::Append {
+                session: s,
+                points: (0..frames).map(|i| ((round * frames + i) as f32 * 0.1).sin()).collect(),
+            });
+        }
+    }
+    events
+}
+
+/// THE acceptance pin: >= 200 batch requests and >= 20 stream sessions
+/// through the dual serving loop with seeded 20% device faults — every
+/// request terminal, per-session forecast order preserved across
+/// redelivery, outbox memory within its bound, delivery ledger balanced.
+#[test]
+fn seeded_faults_leave_every_request_terminal_and_accounted() {
+    let (requests, sessions, rounds) = (200usize, 20u64, 6usize);
+    let policy = FaultPolicy {
+        request_deadline: Some(Duration::from_secs(30)),
+        step_deadline: Some(Duration::from_millis(100)),
+        outbox_cap: 4,
+        ..fast_policy()
+    };
+    let (capacity, m) = (4usize, 32usize);
+    let metas: BTreeMap<String, VariantMeta> =
+        [("v".to_string(), VariantMeta { capacity, m })].into();
+    let (jobs, receivers) = make_jobs(requests, capacity, m, "v");
+    let (jobs_tx, jobs_rx) = mpsc::sync_channel::<PrepJob>(jobs.len());
+    for job in jobs {
+        jobs_tx.send(job).unwrap();
+    }
+    drop(jobs_tx);
+    // the feeder holds the event channel open past the last append so the
+    // prep thread can harvest faulted step buffers and requeue their
+    // windows before the shutdown flush (a buffer recycled after the
+    // channel closes is lost with the pipeline — see spawn_stream_prep)
+    let (ev_tx, ev_rx) = mpsc::channel::<StreamEvent>();
+    let feeder = std::thread::spawn(move || {
+        for ev in stream_events(sessions, rounds, 4) {
+            ev_tx.send(ev).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(250));
+    });
+
+    let scfg = StreamingConfig { max_sessions: sessions as usize, min_new: 4, ..Default::default() };
+    let stream_meta = VariantMeta { capacity: 4, m: 16 };
+    let delivery =
+        Arc::new(Mutex::new(DeliveryMonitor::new(policy.outbox_cap, policy.forecast_ttl)));
+    let sink = Arc::clone(&delivery);
+    let plan = Arc::new(Mutex::new(FaultPlan::new(7, 0.2)));
+    let (bplan, splan) = (Arc::clone(&plan), Arc::clone(&plan));
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    run_serve_stages(
+        jobs_rx,
+        ev_rx,
+        metas,
+        pipeline::default_host_merge(),
+        2,
+        stream_meta,
+        scfg,
+        WorkerPool::global(),
+        Arc::clone(&metrics),
+        FaultContext::new(policy.clone()),
+        move |ready| {
+            FaultPlan::gate(&bplan)?;
+            Ok(vec![vec![1.0f32; 8]; ready.rows])
+        },
+        move |step| {
+            FaultPlan::gate(&splan)?;
+            Ok(vec![vec![2.0f32; 8]; step.rows])
+        },
+        move |session, forecast| {
+            lock(&sink).offer(session, forecast, Instant::now());
+        },
+    )
+    .expect("the serving loop must survive injected faults");
+    feeder.join().expect("feeder");
+
+    // liveness: every batch request answered with one terminal outcome
+    let (mut delivered, mut timeouts, mut failed) = (0usize, 0usize, 0usize);
+    for rrx in receivers {
+        let resp = rrx.recv().expect("no request may hang or be dropped");
+        match resp.outcome {
+            ForecastOutcome::Delivered => delivered += 1,
+            ForecastOutcome::DeadlineExceeded => timeouts += 1,
+            ForecastOutcome::Failed(_) => failed += 1,
+        }
+    }
+    assert_eq!(delivered + timeouts + failed, requests);
+    assert!(delivered > 0, "a 20% fault rate must not take the service down");
+
+    // at 20% over this many device calls, injections are a statistical
+    // certainty; the fault machinery must have both retried and, with
+    // retries sometimes exhausted, recorded faults somewhere
+    let p = lock(&plan);
+    assert!(p.injected() >= 1, "the plan injected nothing — harness wired wrong?");
+    drop(p);
+    let mx = lock(&metrics);
+    let f = mx.faults();
+    assert!(
+        f.exec_retries + f.step_retries + f.exec_faults + f.step_faults >= 1,
+        "faults were injected but nothing recorded: {f:?}"
+    );
+    drop(mx);
+
+    // delivery accounting: order across redelivery, bounded memory,
+    // balanced ledger
+    let mut d = lock(&delivery);
+    assert!(d.max_outbox_depth() <= d.cap(), "outbox memory bound violated");
+    let mut first_seqs: BTreeMap<u64, Vec<u64>> = BTreeMap::new();
+    for s in 0..sessions {
+        let got = d.collect(s);
+        assert!(
+            got.windows(2).all(|w| w[0].0 < w[1].0),
+            "session {s}: sequence order violated on first collect"
+        );
+        first_seqs.insert(s, got.iter().map(|(q, _)| *q).collect());
+    }
+    // nothing acked yet: a second collect redelivers the same forecasts,
+    // in the same order
+    let mut redelivered_total = 0usize;
+    for s in 0..sessions {
+        let again: Vec<u64> = d.collect(s).iter().map(|(q, _)| *q).collect();
+        assert_eq!(&again, &first_seqs[&s], "session {s}: redelivery changed order");
+        redelivered_total += again.len();
+    }
+    assert_eq!(d.stats().redelivered as usize, redelivered_total);
+    // ack even sessions, expire the rest; the ledger must balance exactly
+    for s in (0..sessions).step_by(2) {
+        if let Some(&last) = first_seqs[&s].last() {
+            d.ack(s, last, Instant::now());
+        }
+    }
+    let pending = d.total_pending();
+    let expired = d.expire(Instant::now() + policy.forecast_ttl + Duration::from_secs(1));
+    assert_eq!(expired, pending, "expiry must settle exactly the unacked remainder");
+    assert_eq!(d.total_pending(), 0);
+    let st = d.stats();
+    assert_eq!(
+        st.enqueued,
+        st.acked + st.expired_undelivered + st.dropped_overflow,
+        "delivery ledger out of balance: {st:?}"
+    );
+    assert!(st.enqueued > 0, "stream sessions produced no forecasts at all");
+}
+
+/// Transient faults are absorbed by retry: a device that fails exactly
+/// once per batch still delivers everything, and the retries are
+/// counted.
+#[test]
+fn transient_faults_retry_to_success() {
+    let (capacity, m) = (2usize, 16usize);
+    let metas: BTreeMap<String, VariantMeta> =
+        [("v".to_string(), VariantMeta { capacity, m })].into();
+    let (jobs, receivers) = make_jobs(8, capacity, m, "v");
+    let n_batches = jobs.len();
+    let (jobs_tx, jobs_rx) = mpsc::sync_channel::<PrepJob>(n_batches);
+    for job in jobs {
+        jobs_tx.send(job).unwrap();
+    }
+    drop(jobs_tx);
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let mut calls = 0usize;
+    pipeline::run_stages(
+        jobs_rx,
+        metas,
+        MergeSpec::fixed_r(Vec::new(), 4),
+        1,
+        WorkerPool::global(),
+        Arc::clone(&metrics),
+        FaultContext::new(fast_policy()),
+        move |ready| {
+            calls += 1;
+            if calls % 2 == 1 {
+                anyhow::bail!("transient device fault");
+            }
+            Ok(vec![vec![0.5f32; 4]; ready.rows])
+        },
+    )
+    .unwrap();
+    for rrx in receivers {
+        let resp = rrx.recv().expect("terminal response");
+        assert!(resp.outcome.is_delivered(), "retry must absorb the transient fault");
+    }
+    let mx = lock(&metrics);
+    assert_eq!(mx.faults().exec_retries as usize, n_batches, "one retry per batch");
+    assert_eq!(mx.faults().exec_faults, 0);
+}
+
+/// A panicking device closure is a fault like any other: caught, retried,
+/// and — when persistent — answered with a terminal failure instead of a
+/// dead serving thread.
+#[test]
+fn panicking_device_is_contained() {
+    let (capacity, m) = (2usize, 16usize);
+    let metas: BTreeMap<String, VariantMeta> =
+        [("v".to_string(), VariantMeta { capacity, m })].into();
+    let (jobs, receivers) = make_jobs(4, capacity, m, "v");
+    let (jobs_tx, jobs_rx) = mpsc::sync_channel::<PrepJob>(jobs.len());
+    for job in jobs {
+        jobs_tx.send(job).unwrap();
+    }
+    drop(jobs_tx);
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    pipeline::run_stages(
+        jobs_rx,
+        metas,
+        MergeSpec::fixed_r(Vec::new(), 4),
+        1,
+        WorkerPool::global(),
+        Arc::clone(&metrics),
+        FaultContext::new(FaultPolicy { max_retries: 1, ..fast_policy() }),
+        |_ready| -> anyhow::Result<Vec<Vec<f32>>> { panic!("device blew up") },
+    )
+    .expect("the loop survives a panicking device");
+    for rrx in receivers {
+        let resp = rrx.recv().expect("terminal response despite panics");
+        match resp.outcome {
+            ForecastOutcome::Failed(reason) => {
+                assert!(reason.contains("device blew up"), "panic payload preserved: {reason}")
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+    }
+}
+
+/// Requests already past their deadline get `DeadlineExceeded` without
+/// burning device work; the device is never called for a fully-expired
+/// batch.
+#[test]
+fn expired_requests_time_out_without_device_work() {
+    let (capacity, m) = (2usize, 16usize);
+    let metas: BTreeMap<String, VariantMeta> =
+        [("v".to_string(), VariantMeta { capacity, m })].into();
+    // enqueue timestamps in the past, far beyond the 5ms deadline
+    let mut receivers = Vec::new();
+    let mut batch = Vec::new();
+    let stale = Instant::now() - Duration::from_millis(250);
+    for id in 0..4u64 {
+        let (rtx, rrx) = mpsc::channel();
+        batch.push((ForecastRequest { id, context: vec![0.1; m] }, stale, rtx));
+        receivers.push(rrx);
+    }
+    let (jobs_tx, jobs_rx) = mpsc::sync_channel::<PrepJob>(2);
+    jobs_tx.send(PrepJob { variant: "v".into(), batch: batch.drain(..2).collect() }).unwrap();
+    jobs_tx.send(PrepJob { variant: "v".into(), batch }).unwrap();
+    drop(jobs_tx);
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let executed = Arc::new(Mutex::new(0usize));
+    let count = Arc::clone(&executed);
+    pipeline::run_stages(
+        jobs_rx,
+        metas,
+        MergeSpec::fixed_r(Vec::new(), 4),
+        1,
+        WorkerPool::global(),
+        Arc::clone(&metrics),
+        FaultContext::new(FaultPolicy {
+            request_deadline: Some(Duration::from_millis(5)),
+            ..fast_policy()
+        }),
+        move |ready| {
+            *lock(&count) += 1;
+            Ok(vec![vec![0.0f32; 4]; ready.rows])
+        },
+    )
+    .unwrap();
+    for rrx in receivers {
+        let resp = rrx.recv().expect("terminal timeout response");
+        assert_eq!(resp.outcome, ForecastOutcome::DeadlineExceeded);
+        assert!(resp.forecast.is_empty());
+    }
+    assert_eq!(*lock(&executed), 0, "expired batches must skip the device entirely");
+    assert_eq!(lock(&metrics).faults().timeouts, 4);
+}
+
+/// A variant that faults past its budget is quarantined in the shared
+/// tracker — the signal the intake thread's graceful-degradation reroute
+/// consumes (`fallback` walks to the next cheaper variant; pinned at the
+/// unit level in coordinator::faults).
+#[test]
+fn persistent_faults_quarantine_the_variant() {
+    let (capacity, m) = (2usize, 16usize);
+    let metas: BTreeMap<String, VariantMeta> =
+        [("v".to_string(), VariantMeta { capacity, m })].into();
+    let (jobs, receivers) = make_jobs(8, capacity, m, "v");
+    let (jobs_tx, jobs_rx) = mpsc::sync_channel::<PrepJob>(jobs.len());
+    for job in jobs {
+        jobs_tx.send(job).unwrap();
+    }
+    drop(jobs_tx);
+    let faults = FaultContext::new(FaultPolicy {
+        max_retries: 0,
+        variant_fault_budget: 2,
+        ..fast_policy()
+    });
+    let tracker = Arc::clone(&faults.tracker);
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    pipeline::run_stages(
+        jobs_rx,
+        metas,
+        MergeSpec::fixed_r(Vec::new(), 4),
+        1,
+        WorkerPool::global(),
+        Arc::clone(&metrics),
+        faults,
+        |_ready| -> anyhow::Result<Vec<Vec<f32>>> { anyhow::bail!("device down hard") },
+    )
+    .unwrap();
+    for rrx in receivers {
+        assert!(matches!(
+            rrx.recv().expect("terminal").outcome,
+            ForecastOutcome::Failed(_)
+        ));
+    }
+    assert!(lock(&tracker).is_quarantined("v"), "budget 2 crossed by 4 faulted batches");
+    let ordered = vec!["r0".to_string(), "v".to_string()];
+    assert_eq!(
+        lock(&tracker).fallback(&ordered, "v"),
+        Some("r0"),
+        "routing downgrades to the cheaper variant"
+    );
+    assert_eq!(lock(&metrics).faults().exec_faults, 4);
+}
+
+/// A faulted decode step loses nothing: its sessions' windows are
+/// restored and served by a later step once the device recovers, and the
+/// requeue is visible in the stream stats.
+#[test]
+fn faulted_decode_steps_requeue_sessions() {
+    let sessions = 6u64;
+    // keep the intake open so the faulted buffers are harvested (and
+    // their windows requeued) before the shutdown flush
+    let (ev_tx, ev_rx) = mpsc::channel::<StreamEvent>();
+    let feeder = std::thread::spawn(move || {
+        for ev in stream_events(sessions, 4, 4) {
+            ev_tx.send(ev).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    });
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let delivered: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = Arc::clone(&delivered);
+    let mut calls = 0usize;
+    run_stream_stages(
+        ev_rx,
+        VariantMeta { capacity: 4, m: 16 },
+        StreamingConfig { min_new: 4, ..Default::default() },
+        WorkerPool::global(),
+        Arc::clone(&metrics),
+        FaultPolicy { max_retries: 0, ..fast_policy() },
+        move |step| {
+            calls += 1;
+            if calls <= 2 {
+                anyhow::bail!("decode device hiccup");
+            }
+            Ok(vec![vec![3.0f32; 8]; step.rows])
+        },
+        move |id, _forecast| lock(&sink).push(id),
+    )
+    .unwrap();
+    feeder.join().expect("feeder");
+    let got = lock(&delivered);
+    for id in 0..sessions {
+        assert!(got.iter().any(|&s| s == id), "session {id} lost by the faulted steps");
+    }
+    let mx = lock(&metrics);
+    assert!(mx.faults().step_faults >= 2, "both hiccups counted");
+    let (_, stats) = mx.stream_snapshot().expect("stream stats recorded");
+    assert!(stats.requeued_windows >= 1, "requeue must be visible: {stats:?}");
+    assert_eq!(stats.quarantined, 0, "transient hiccups must not evict sessions");
+}
+
+/// Repeat offenders are evicted: a session whose decode faults every time
+/// it reaches the device crosses `session_fault_budget` and is
+/// quarantined, while the healthy sessions keep streaming.
+#[test]
+fn repeat_offender_sessions_are_quarantined() {
+    // feed only one session into an always-faulting device: every step it
+    // rides in faults, so its consecutive-fault count climbs to the
+    // budget.  The feeder keeps the intake open long enough for the
+    // fault -> harvest -> requeue cycle to spin to quarantine.
+    let (ev_tx, ev_rx) = mpsc::channel::<StreamEvent>();
+    let feeder = std::thread::spawn(move || {
+        for ev in stream_events(1, 8, 4) {
+            ev_tx.send(ev).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(300));
+    });
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    run_stream_stages(
+        ev_rx,
+        VariantMeta { capacity: 2, m: 16 },
+        StreamingConfig { min_new: 4, ..Default::default() },
+        WorkerPool::global(),
+        Arc::clone(&metrics),
+        FaultPolicy { max_retries: 0, session_fault_budget: 3, ..fast_policy() },
+        |step| -> anyhow::Result<Vec<Vec<f32>>> {
+            anyhow::bail!("device poisons every step ({} rows)", step.rows)
+        },
+        |_id, _forecast| panic!("nothing may be delivered"),
+    )
+    .unwrap();
+    feeder.join().expect("feeder");
+    let mx = lock(&metrics);
+    let (_, stats) = mx.stream_snapshot().expect("stream stats recorded");
+    // at least one eviction; appends landing after it can re-admit the
+    // session and quarantine it again, so the count is a floor
+    assert!(stats.quarantined >= 1, "the offender must be evicted: {stats:?}");
+    assert!(mx.faults().step_faults >= 3, "budget 3 takes three faulted steps");
+}
+
+/// Shutdown under fault (ISSUE 6 satellite): with every device call
+/// failing and the input channels closed, the loop still drains to
+/// completion — terminal responses everywhere, `Ok` from the loop, no
+/// wedged thread.  Dropped response receivers change nothing.
+#[test]
+fn total_device_failure_still_winds_down_cleanly() {
+    let (capacity, m) = (2usize, 16usize);
+    let metas: BTreeMap<String, VariantMeta> =
+        [("v".to_string(), VariantMeta { capacity, m })].into();
+    let (jobs, receivers) = make_jobs(6, capacity, m, "v");
+    let (jobs_tx, jobs_rx) = mpsc::sync_channel::<PrepJob>(jobs.len());
+    for job in jobs {
+        jobs_tx.send(job).unwrap();
+    }
+    drop(jobs_tx);
+    // half the clients walk away before their responses arrive — the
+    // send-side must shrug (Err ignored), not wedge or panic
+    let keep: Responses = receivers
+        .into_iter()
+        .enumerate()
+        .filter_map(|(i, rrx)| (i % 2 == 0).then_some(rrx))
+        .collect();
+    let (ev_tx, ev_rx) = mpsc::channel::<StreamEvent>();
+    for ev in stream_events(3, 2, 4) {
+        ev_tx.send(ev).unwrap();
+    }
+    drop(ev_tx);
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    run_serve_stages(
+        jobs_rx,
+        ev_rx,
+        metas,
+        pipeline::default_host_merge(),
+        1,
+        VariantMeta { capacity: 2, m: 16 },
+        StreamingConfig { min_new: 4, ..Default::default() },
+        WorkerPool::global(),
+        Arc::clone(&metrics),
+        FaultContext::new(FaultPolicy { max_retries: 0, ..fast_policy() }),
+        |_ready| -> anyhow::Result<Vec<Vec<f32>>> { anyhow::bail!("batch device dead") },
+        |_step| -> anyhow::Result<Vec<Vec<f32>>> { anyhow::bail!("stream device dead") },
+        |_session, _forecast| panic!("nothing may be delivered"),
+    )
+    .expect("total device failure must not hang or error the loop");
+    for rrx in keep {
+        assert!(matches!(
+            rrx.recv().expect("surviving clients still get terminal responses").outcome,
+            ForecastOutcome::Failed(_)
+        ));
+    }
+    let mx = lock(&metrics);
+    assert!(mx.faults().exec_faults >= 3, "every batch faulted");
+    assert_eq!(mx.served(), 0);
+}
+
+/// Bounded intake (ISSUE 6 satellite): `try_send` into a full queue plus
+/// `call_with_retry` surfaces sustained backpressure as a bounded error —
+/// it neither blocks forever nor retries forever.
+#[test]
+fn intake_backpressure_surfaces_boundedly() {
+    let (tx, _rx) = mpsc::sync_channel::<u64>(1);
+    tx.send(1).unwrap(); // queue now full, and nobody ever drains it
+    let policy = FaultPolicy { max_retries: 3, ..fast_policy() };
+    let t0 = Instant::now();
+    let out = call_with_retry(
+        &policy,
+        Some(Instant::now() + Duration::from_millis(50)),
+        "stream intake",
+        || match tx.try_send(2) {
+            Ok(()) => Ok(()),
+            Err(_) => anyhow::bail!("intake queue full"),
+        },
+    );
+    assert!(out.result.is_err(), "sustained backpressure must surface");
+    assert!(out.attempts <= 4, "1 + max_retries bounds the attempts");
+    assert!(t0.elapsed() < Duration::from_secs(5), "backpressure must not block");
+}

@@ -16,7 +16,7 @@ use std::time::{Duration, Instant};
 
 use tomers::coordinator::{
     default_host_merge, policy::Variant, resolve_stream_artifact, run_serve_stages,
-    ForecastRequest, MergePolicy, Metrics, PrepJob, StreamEvent, VariantMeta,
+    FaultContext, ForecastRequest, MergePolicy, Metrics, PrepJob, StreamEvent, VariantMeta,
 };
 use tomers::merging::{MergeMode, MergeSpec};
 use tomers::runtime::{Manifest, WorkerPool};
@@ -84,6 +84,7 @@ fn dual_serving_loop_drives_batch_and_stream_together() {
         stream_cfg(1),
         WorkerPool::global(),
         Arc::clone(&metrics),
+        FaultContext::default(),
         |ready| {
             assert_eq!(ready.variant, "v");
             assert_eq!(ready.slab.len(), capacity * m);
@@ -107,6 +108,7 @@ fn dual_serving_loop_drives_batch_and_stream_together() {
         assert_eq!(resp.id, id as u64);
         assert_eq!(resp.variant, "v");
         assert_eq!(resp.forecast, vec![1.0f32; 4]);
+        assert!(resp.outcome.is_delivered());
     }
     // every stream session decoded at least once before shutdown flush
     let got = lock(&delivered);

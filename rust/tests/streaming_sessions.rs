@@ -7,7 +7,7 @@
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use tomers::coordinator::{run_stream_stages, Metrics, StreamEvent, VariantMeta};
+use tomers::coordinator::{run_stream_stages, FaultPolicy, Metrics, StreamEvent, VariantMeta};
 use tomers::streaming::{SessionManager, StreamPolicy, StreamingConfig};
 use tomers::util::{lock_ignore_poison as lock, Rng};
 
@@ -127,6 +127,7 @@ fn continuous_batching_serves_mixed_fill_levels() {
         small_cfg(16, 64, 64),
         tomers::runtime::WorkerPool::global(),
         Arc::clone(&metrics),
+        FaultPolicy::default(),
         |step| {
             // slab invariants hold on every step
             assert!(step.rows >= 1 && step.rows <= 4);
@@ -200,6 +201,7 @@ fn multivariate_sessions_stream_end_to_end() {
         cfg,
         tomers::runtime::WorkerPool::global(),
         Arc::clone(&metrics),
+        FaultPolicy::default(),
         move |step| {
             // slab + size-array invariants for homogeneous-d batches
             assert_eq!(step.d, d, "steps carry the process-wide d");

@@ -17,14 +17,19 @@
 #      drive the decode scheduler — gated on decode_steps >= 1 in the
 #      metrics report (the same staged machinery `tomers serve` wires
 #      when a "streaming" config block is present)
-#  10. cargo bench --bench merging    (quick mode: acceptance cases only)
+#  10. fault-injection smoke: `tomers serve-sim --fault-rate 0.2 --seed 7`
+#      drives the dual serving loop through the seeded FaultPlan — gated
+#      on every request reaching a terminal outcome (non_terminal=0) and
+#      the delivery monitor's ledger balancing ("delivery accounting
+#      consistent"), the liveness + accounting pins of DESIGN.md §10
+#  11. cargo bench --bench merging    (quick mode: acceptance cases only)
 #      asserts BENCH_merging.json reports speedup_batched >= MIN_SPEEDUP on
 #      the t=8192 d=64 k=16 case (pool-backed batched path), zero
 #      post-warmup thread spawns, and pool p50 <= thread::scope p50 at b=32.
-#  11. cargo bench --bench coordinator (quick) -> BENCH_serving.json;
+#  12. cargo bench --bench coordinator (quick) -> BENCH_serving.json;
 #      asserts staged (merge-while-execute) throughput beats the serial
 #      loop on the balanced row.
-#  12. cargo bench --bench streaming (quick) -> BENCH_streaming.json;
+#  13. cargo bench --bench streaming (quick) -> BENCH_streaming.json;
 #      asserts the incremental causal append path is >= MIN_STREAM_RATIO x
 #      faster than full recompute at t=4096, n=16.
 #
@@ -94,6 +99,20 @@ if ! echo "$MULTI_OUT" | grep -Eq "streaming: decode_steps=[1-9]"; then
     exit 1
 fi
 echo "OK: stream smoke (univariate + d=3) passed"
+
+echo "== fault smoke: tomers serve-sim under 20% injected faults =="
+FAULT_OUT=$(cargo run --offline --release --quiet -- serve-sim \
+    --fault-rate 0.2 --seed 7 2>&1)
+echo "$FAULT_OUT" | grep -E "batch:|delivery|injected" || true
+if ! echo "$FAULT_OUT" | grep -q "non_terminal=0"; then
+    echo "ERROR: serve-sim left requests without a terminal outcome under faults" >&2
+    exit 1
+fi
+if ! echo "$FAULT_OUT" | grep -q "delivery accounting consistent"; then
+    echo "ERROR: serve-sim delivery ledger did not balance under faults" >&2
+    exit 1
+fi
+echo "OK: fault smoke passed (liveness + delivery accounting under injected faults)"
 
 if [[ "${1:-}" == "--no-bench" ]]; then
     echo "OK (bench smoke skipped)"
