@@ -425,6 +425,58 @@ def write_golden(art: Artifact, out_dir: str):
 
 
 # ---------------------------------------------------------------------------
+# Manifest merge_spec
+
+# Mirrors the Rust side's "k = 0 means global pool" convention: the band
+# half-width is clamped to t/2 inside the kernel, so any huge value acts
+# as "unbounded" (config.rs uses the same sentinel).
+GLOBAL_K = 10**6
+
+
+def merge_spec_for(family, config, meta):
+    """Derive the manifest ``merge_spec`` block for an inference artifact.
+
+    Emits the same JSON dialect the Rust loader parses strictly
+    (``config::merge_spec_from_json`` — unknown keys rejected, schedule
+    entries >= 1, ``causal`` implies ``k == 1``); the serving coordinator
+    prefers this block over its own config.  Returns ``None`` for
+    artifacts that never premerge (training steps) or whose merge rate is
+    chosen at serve time (``chronos_dyn``).
+
+    The fixed-mode schedule is the per-layer merge counts: positive
+    diffs of the builder's token-count meta, dropping layers where the
+    ``q_min`` floor made the step zero.
+    """
+    if family in ("forecast", "chronos"):
+        counts, k, causal = meta.get("enc_tokens"), config["k_enc"], False
+    elif family in ("hyena", "mamba"):
+        counts, k, causal = meta.get("tokens"), config["k"], False
+    elif family == "deconly":
+        # Decoder-only merging is causal: band k = 1 always (§3.3).
+        counts, k, causal = meta.get("tokens"), 1, True
+    elif family == "patchtst":
+        # PatchTST builders carry no token meta; recompute the schedule
+        # from the patching geometry.
+        n_patches = (config["m"] - config["patch_len"]) // config["stride"] + 1
+        counts = merging.merge_schedule(n_patches, r=config["r"],
+                                        num_layers=config["layers"],
+                                        q=config["q_min"])
+        k, causal = config["k"], False
+    else:
+        return None
+    if counts is None:
+        return None
+    schedule = [a - b for a, b in zip(counts, counts[1:]) if a > b]
+    if not schedule:
+        return {"mode": "off"}
+    spec = {"mode": "fixed", "k": k if k >= 1 else GLOBAL_K,
+            "schedule": schedule}
+    if causal:
+        spec["causal"] = True
+    return spec
+
+
+# ---------------------------------------------------------------------------
 # Driver
 
 
@@ -465,7 +517,8 @@ def lower_artifact(art: Artifact, out_dir: str, force: bool) -> str:
     meta["backend"] = art.backend
     formats.write_manifest(man_path, name=art.name, family=art.family,
                            config=config, params_tree=params,
-                           inputs=named_inputs, outputs=outputs, meta=meta)
+                           inputs=named_inputs, outputs=outputs, meta=meta,
+                           merge_spec=merge_spec_for(art.family, config, meta))
     return "ok"
 
 

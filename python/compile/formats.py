@@ -84,7 +84,7 @@ def tensor_spec(name, arr_or_spec):
 
 
 def write_manifest(path, *, name, family, config, params_tree, inputs, outputs,
-                   meta=None):
+                   meta=None, merge_spec=None):
     manifest = {
         "name": name,
         "family": family,
@@ -94,5 +94,10 @@ def write_manifest(path, *, name, family, config, params_tree, inputs, outputs,
         "outputs": [tensor_spec(n, s) for n, s in outputs],
         "meta": meta or {},
     }
+    if merge_spec is not None:
+        # Same JSON dialect as the Rust loader's "merge" block
+        # (config::merge_spec_from_json) — the serving coordinator prefers
+        # this over its own config when the manifest carries one.
+        manifest["merge_spec"] = merge_spec
     with open(path, "w") as f:
         json.dump(manifest, f, indent=1, sort_keys=True)

@@ -51,6 +51,57 @@ def test_manifest_contains_full_contract(tmp_path):
     assert m["meta"]["batch"] == 8
 
 
+def test_manifest_merge_spec_roundtrip(tmp_path):
+    params = {"w": jnp.zeros((2,))}
+    inputs = [("x", jax.ShapeDtypeStruct((4,), jnp.float32))]
+    outputs = [("out0", jax.ShapeDtypeStruct((4,), jnp.float32))]
+    spec = {"mode": "fixed", "k": 10**6, "schedule": [16, 16, 8]}
+    path = tmp_path / "m.json"
+    formats.write_manifest(path, name="t", family="chronos", config={},
+                           params_tree=params, inputs=inputs, outputs=outputs,
+                           merge_spec=spec)
+    m = json.loads(path.read_text())
+    assert m["merge_spec"] == spec
+    # omitted entirely when None, so pre-merge_spec manifests keep parsing
+    formats.write_manifest(path, name="t", family="chronos", config={},
+                           params_tree=params, inputs=inputs, outputs=outputs)
+    assert "merge_spec" not in json.loads(path.read_text())
+
+
+def test_merge_spec_dialect_matches_rust_loader():
+    """Pins the exact dicts merge_spec_for emits to the dialect the Rust
+    loader parses strictly (config::merge_spec_from_json): mode-dependent
+    key subsets, schedule entries >= 1, causal implies k == 1, and the
+    k = 0 global pool mapped to the huge-band sentinel."""
+    spec = aot.merge_spec_for("chronos", {"k_enc": 4},
+                              {"enc_tokens": [512, 448, 384]})
+    assert spec == {"mode": "fixed", "k": 4, "schedule": [64, 64]}
+    # k_enc = 0 (global pool) maps to the sentinel the kernel clamps to t/2
+    spec = aot.merge_spec_for("forecast", {"k_enc": 0},
+                              {"enc_tokens": [96, 64, 48]})
+    assert spec == {"mode": "fixed", "k": aot.GLOBAL_K, "schedule": [32, 16]}
+    # zero-step layers (q_min floor) are dropped: entries stay >= 1
+    spec = aot.merge_spec_for("hyena", {"k": 1}, {"tokens": [16, 8, 8, 8]})
+    assert spec == {"mode": "fixed", "k": 1, "schedule": [8]}
+    # r = 0 variants are an explicit "off" block with no other keys
+    assert aot.merge_spec_for("mamba", {"k": 1},
+                              {"tokens": [512, 512]}) == {"mode": "off"}
+    # decoder-only merging is causal with k = 1, regardless of config
+    spec = aot.merge_spec_for("deconly", {}, {"tokens": [32, 24, 16]})
+    assert spec == {"mode": "fixed", "k": 1, "schedule": [8, 8],
+                    "causal": True}
+    # patchtst carries no token meta: schedule recomputed from the
+    # patching geometry ((192 - 16) // 8 + 1 = 23 patches, r = 4 x 2 layers)
+    cfg = {"m": 192, "patch_len": 16, "stride": 8, "layers": 2, "r": 4,
+           "k": 0, "q_min": 4}
+    spec = aot.merge_spec_for("patchtst", cfg, {"batch": 8})
+    assert spec == {"mode": "fixed", "k": aot.GLOBAL_K, "schedule": [4, 4]}
+    # serve-time-rate and training artifacts carry no spec at all
+    for fam in ("chronos_dyn", "forecast_train", "chronos_train",
+                "deconly_train", "classify_train", "patchtst_train"):
+        assert aot.merge_spec_for(fam, {}, {}) is None
+
+
 def test_registry_names_unique_and_well_formed():
     arts = aot.registry()
     names = [a.name for a in arts]
@@ -114,3 +165,7 @@ def test_lower_artifact_is_idempotent(tmp_path):
     n_params = len(manifest["params"]) + len(manifest["inputs"])
     assert hlo.count("parameter(") >= n_params
     assert "largest=true" not in hlo  # 0.5.1 parser compatibility shim
+    # lowering wires the derived merge_spec into the manifest
+    assert manifest["merge_spec"] == aot.merge_spec_for(
+        "patchtst", manifest["config"], manifest["meta"])
+    assert manifest["merge_spec"]["mode"] == "fixed"

@@ -5,15 +5,26 @@
 //! (`run_batch_into_scoped`, the baseline the pool must beat or match,
 //! since it does strictly less work per call).
 //!
+//! PR 7 adds two single-thread contrasts per case:
+//! * `simd_vs_scalar` — the dispatched explicit-SIMD kernel vs the same
+//!   kernel forced through the scalar path (`simd::force_scalar`), p50
+//!   over p50.  On scalar-only hosts both runs take the same path, so
+//!   the ratio sits at ~1.0 and verify.sh skips its gate with a WARN.
+//! * `blocked_vs_streaming` — the cache-blocked matching walk at the
+//!   default [`matching_tile`] vs `tile = usize::MAX` (the pre-blocking
+//!   two-pass norms-then-scores walk over the whole slab).
+//!
 //! Offline build: hand-rolled harness (no criterion crate available);
 //! run with `cargo bench --offline --bench merging`.
 //!
-//! Writes a machine-readable `BENCH_merging.json` (schema v3, documented
+//! Writes a machine-readable `BENCH_merging.json` (schema v4, documented
 //! in `src/merging/mod.rs`) so the kernel's perf trajectory accumulates
 //! across PRs; `scripts/verify.sh` gates on the acceptance case
 //! `t=8192 d=64 k=16` keeping `speedup_batched >= 3` (the pool-backed
-//! plan) and on `post_warmup_spawns == 0` — the pool's entire point is
-//! that steady state spawns no threads.
+//! plan), on `post_warmup_spawns == 0` — the pool's entire point is
+//! that steady state spawns no threads — and on the `t=4096 d=64` case
+//! keeping `simd_vs_scalar >= MIN_SIMD_SPEEDUP` when a SIMD ISA is
+//! dispatched.
 //!
 //! Env knobs:
 //! * `TOMERS_BENCH_QUICK=1` — few iterations, acceptance cases only
@@ -24,9 +35,10 @@
 #![allow(unknown_lints)]
 #![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
 use tomers::json::Json;
-use tomers::merging::kernel::merge_fixed_r_scratch;
+use tomers::merging::kernel::{match_tokens_scratch_tiled, matching_tile, merge_fixed_r_scratch};
+use tomers::merging::simd;
 use tomers::merging::{
-    reference, MergeResult, MergeScratch, MergeSpec, PipelineResult,
+    reference, Accum, MergeResult, MergeScratch, MergeSpec, PipelineResult,
 };
 use tomers::runtime::WorkerPool;
 use tomers::util::{bench, bench_samples, percentile, Rng};
@@ -45,19 +57,25 @@ fn main() {
         std::env::var("TOMERS_BENCH_OUT").unwrap_or_else(|_| "BENCH_merging.json".to_string());
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let pool = WorkerPool::global();
+    let isa = simd::active_isa();
 
-    // The verify.sh acceptance case (t=8192, d=64, k=16, b=4) and the
-    // pool-vs-scope acceptance case (same shape, b=32) are always present.
+    // The verify.sh acceptance cases — t=8192 d=64 k=16 b=4 (kernel
+    // speedup), same shape b=32 (pool vs scope), and t=4096 d=64 k=16
+    // (simd_vs_scalar) — are always present.
     let cases: Vec<Case> = if quick {
         vec![
             Case { t: 8192, d: 64, k: 16, batch: 4, iters: 3 },
             // more samples: the pool-vs-scope p50 gate needs a stable median
             Case { t: 8192, d: 64, k: 16, batch: 32, iters: 7 },
+            // the MIN_SIMD_SPEEDUP acceptance shape; the single-thread
+            // simd-vs-scalar p50 gate also wants a stable median
+            Case { t: 4096, d: 64, k: 16, batch: 4, iters: 7 },
         ]
     } else {
         vec![
             Case { t: 512, d: 64, k: 1, batch: 8, iters: 20 },
             Case { t: 2048, d: 64, k: 16, batch: 8, iters: 10 },
+            Case { t: 4096, d: 64, k: 16, batch: 4, iters: 7 },
             Case { t: 8192, d: 64, k: 16, batch: 8, iters: 5 },
             Case { t: 8192, d: 64, k: 16, batch: 32, iters: 5 },
             Case { t: 8192, d: 64, k: 1, batch: 8, iters: 5 },
@@ -67,12 +85,14 @@ fn main() {
 
     println!(
         "== bench: merging (legacy vs optimized vs MergePlan pool/scope; {threads} threads, \
-         pool={} workers) ==",
-        pool.workers()
+         pool={} workers, isa={} [{}]) ==",
+        pool.workers(),
+        isa.name(),
+        simd::cpu_features()
     );
     println!(
-        "{:<22} {:>11} {:>11} {:>11} {:>11} {:>7} {:>7} {:>13}",
-        "case", "legacy", "optimized", "pool", "scope", "x-opt", "x-pool", "sim-ops(eq.2)"
+        "{:<22} {:>11} {:>11} {:>11} {:>11} {:>7} {:>7} {:>7} {:>7}",
+        "case", "legacy", "optimized", "pool", "scope", "x-opt", "x-pool", "x-simd", "x-blk"
     );
 
     let mut rng = Rng::new(1);
@@ -107,7 +127,7 @@ fn main() {
         // loop, measured without the batching layer)
         let mut scratch = MergeScratch::with_capacity(t, d);
         let mut out = MergeResult::default();
-        let (opt_s, _) = bench(1, case.iters, || {
+        let mut single_batch = |scr: &mut MergeScratch, res: &mut MergeResult| {
             for i in 0..b {
                 merge_fixed_r_scratch(
                     &tokens[i * t * d..(i + 1) * t * d],
@@ -116,11 +136,56 @@ fn main() {
                     d,
                     r,
                     k,
+                    scr,
+                    res,
+                );
+            }
+        };
+        let (opt_s, _) = bench(1, case.iters, || single_batch(&mut scratch, &mut out));
+
+        // the same single-thread work, dispatched ISA vs forced scalar
+        // (identical code both runs — only the dispatch differs)
+        let mut simd_samples =
+            bench_samples(1, case.iters, || single_batch(&mut scratch, &mut out));
+        simd::force_scalar(true);
+        let mut scalar_samples =
+            bench_samples(1, case.iters, || single_batch(&mut scratch, &mut out));
+        simd::force_scalar(false);
+        let simd_p50 = percentile(&mut simd_samples, 50.0);
+        let scalar_p50 = percentile(&mut scalar_samples, 50.0);
+        let x_simd = scalar_p50 / simd_p50.max(1e-12);
+
+        // matching stage only: cache-blocked default tile vs the
+        // pre-blocking streaming walk (tile = MAX, bitwise identical)
+        let mut blocked_samples = bench_samples(1, case.iters, || {
+            for i in 0..b {
+                match_tokens_scratch_tiled(
+                    &tokens[i * t * d..(i + 1) * t * d],
+                    t,
+                    d,
+                    k,
                     &mut scratch,
-                    &mut out,
+                    Accum::F64,
+                    matching_tile(d),
                 );
             }
         });
+        let mut streaming_samples = bench_samples(1, case.iters, || {
+            for i in 0..b {
+                match_tokens_scratch_tiled(
+                    &tokens[i * t * d..(i + 1) * t * d],
+                    t,
+                    d,
+                    k,
+                    &mut scratch,
+                    Accum::F64,
+                    usize::MAX,
+                );
+            }
+        });
+        let blocked_p50 = percentile(&mut blocked_samples, 50.0);
+        let streaming_p50 = percentile(&mut streaming_samples, 50.0);
+        let x_blk = streaming_p50 / blocked_p50.max(1e-12);
 
         // compiled plan, batched on the persistent pool (production path)
         let mut plan = spec
@@ -144,7 +209,7 @@ fn main() {
         let x_opt = legacy_s / opt_s.max(1e-12);
         let x_pool = legacy_s / pool_s.max(1e-12);
         println!(
-            "t={:<6} k={:<4} b={:<3} {:>9.3}ms {:>9.3}ms {:>9.3}ms {:>9.3}ms {:>6.2}x {:>6.2}x {:>13}",
+            "t={:<6} k={:<4} b={:<3} {:>9.3}ms {:>9.3}ms {:>9.3}ms {:>9.3}ms {:>6.2}x {:>6.2}x {:>6.2}x {:>6.2}x",
             t,
             k,
             b,
@@ -154,7 +219,8 @@ fn main() {
             scope_s * 1e3,
             x_opt,
             x_pool,
-            spec.similarity_cost(t)
+            x_simd,
+            x_blk,
         );
 
         rows.push(Json::obj(vec![
@@ -171,6 +237,12 @@ fn main() {
             ("batched_scope_p50_ms", Json::num(scope_p50 * 1e3)),
             ("speedup_optimized", Json::num(x_opt)),
             ("speedup_batched", Json::num(x_pool)),
+            ("simd_p50_ms", Json::num(simd_p50 * 1e3)),
+            ("scalar_p50_ms", Json::num(scalar_p50 * 1e3)),
+            ("simd_vs_scalar", Json::num(x_simd)),
+            ("blocked_p50_ms", Json::num(blocked_p50 * 1e3)),
+            ("streaming_p50_ms", Json::num(streaming_p50 * 1e3)),
+            ("blocked_vs_streaming", Json::num(x_blk)),
         ]));
     }
 
@@ -182,13 +254,16 @@ fn main() {
         pool.steals(),
         pool.tasks_executed()
     );
+    println!("kernel: {}", simd::dispatch_report());
 
     let report = Json::obj(vec![
-        ("schema_version", Json::num(3.0)),
+        ("schema_version", Json::num(4.0)),
         ("bench", Json::str("merging")),
         ("quick", Json::Bool(quick)),
         ("threads", Json::num(threads as f64)),
         ("pool_workers", Json::num(pool.workers() as f64)),
+        ("isa", Json::str(isa.name())),
+        ("cpu_features", Json::str(&simd::cpu_features())),
         ("post_warmup_spawns", Json::num(post_warmup_spawns as f64)),
         ("pool_steals", Json::num(pool.steals() as f64)),
         ("cases", Json::arr(rows)),
@@ -198,5 +273,6 @@ fn main() {
         Err(e) => eprintln!("\nWARN: could not write {out_path}: {e}"),
     }
     println!("expected shape: optimized >= 3x legacy on the banded cases; pool p50 <=");
-    println!("scope p50 at b=32 (no per-call spawns); local k=1 ~linear in t, global ~t^2.");
+    println!("scope p50 at b=32 (no per-call spawns); simd >= 1.5x forced-scalar at");
+    println!("t=4096 d=64 on SIMD hosts; local k=1 ~linear in t, global ~t^2.");
 }

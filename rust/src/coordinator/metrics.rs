@@ -259,6 +259,10 @@ impl Metrics {
                 d.enqueued, d.acked, d.redelivered, d.expired_undelivered, d.dropped_overflow,
             ));
         }
+        // Which ISA the merge kernel dispatched to (DESIGN.md §11) — the
+        // observable contract for "is SIMD actually on in this serving
+        // process", and what tests/dispatch_env.rs asserts against.
+        s.push_str(&format!("kernel: {}\n", crate::merging::simd::dispatch_report()));
         s
     }
 }
@@ -280,6 +284,13 @@ mod tests {
         let (p50, p95, p99) = m.latency_percentiles();
         assert!(p50 <= p95 && p95 <= p99);
         assert!(m.report().contains("v2: 2"));
+    }
+
+    #[test]
+    fn report_names_the_kernel_isa() {
+        let report = Metrics::new().report();
+        assert!(report.contains("kernel: isa="), "{report}");
+        assert!(report.contains("features="), "{report}");
     }
 
     #[test]

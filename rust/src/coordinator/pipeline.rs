@@ -104,6 +104,11 @@ const PLAN_CACHE_CAP: usize = 16;
 /// premerge plans cached per `(context length, artifact m)` (one slot per
 /// pool worker, so scratch stays warm), plus grow-only gather buffers —
 /// steady-state prep of a batch allocates nothing.
+///
+/// Premerge executes compiled [`MergePlan`]s, so it inherits the kernel's
+/// SIMD dispatch and cache-blocked matching (`merging::simd`, DESIGN.md
+/// §11) with no state here; `Metrics::report()`'s `kernel:` line shows
+/// which ISA this serving process premerges under.
 pub struct HostPrep {
     merge: MergeSpec,
     slots: usize,

@@ -9,12 +9,35 @@
 //! pool thread runs which chunk, and a warm batch performs **no heap
 //! allocations and no thread spawns** (the pool's `spawned_threads`
 //! counter pins this down in `tests/runtime_pool.rs`).
+//!
+//! The splitter is **balanced**: `min(n_slots, b)` chunks whose sizes
+//! differ by at most one row, never an empty chunk.  The previous
+//! ceil-div split (`chunk = ⌈b / n_slots⌉` rows per chunk) wasted
+//! parallelism on small batches — e.g. b=9 over 8 slots produced five
+//! chunks of two sequences each (three slots idle, critical path 2)
+//! where the balanced split runs 8 chunks (seven slots busy, critical
+//! path 2 only on one) — and for b slightly above a multiple of the
+//! slot count left whole slots without work.
 
 use crate::runtime::pool::WorkerPool;
+
+/// Balanced contiguous partition of `b` rows into at most `n_slots`
+/// chunks: `min(n_slots, b)` chunk lengths, each `>= 1`, differing by at
+/// most one, summing to `b`, larger chunks first.
+pub(crate) fn chunk_lens(b: usize, n_slots: usize) -> impl Iterator<Item = usize> {
+    let n_chunks = n_slots.min(b);
+    let base = if n_chunks == 0 { 0 } else { b / n_chunks };
+    let extra = if n_chunks == 0 { 0 } else { b % n_chunks };
+    (0..n_chunks).map(move |c| if c < extra { base + 1 } else { base })
+}
 
 /// Split a `(b, t, d)` slab into one contiguous chunk per slot and run
 /// `f(slot_state, seq_tokens, seq_sizes, out)` per sequence — inline when
 /// there is a single slot (or sequence), as pool tasks otherwise.
+///
+/// SIMD dispatch note: `f` runs on pool threads, but
+/// [`crate::merging::simd::active_isa`] is process-global (one cached
+/// probe), so every chunk computes under the same ISA as the caller.
 // too_many_arguments: crate-internal splitter under the kernel-layer
 // exception — it threads the raw slab shape between MergePlan and the
 // pool, and bundling (b, t, d) into a struct here would just be a second
@@ -42,21 +65,102 @@ pub(crate) fn run_chunked<S: Send, T: Send, F>(
         }
         return;
     }
-    // Contiguous chunk per slot; the last chunk may be short.
-    let chunk = (b + n_slots - 1) / n_slots;
+    // Balanced contiguous chunks — every chunk non-empty by construction,
+    // so no slot is handed zero rows and no pool task is a no-op.
     let f = &f;
-    let tasks: Vec<_> = outs
-        .chunks_mut(chunk)
-        .zip(tokens.chunks(chunk * t * d).zip(sizes.chunks(chunk * t)))
-        .zip(slots.iter_mut())
-        .map(|((out_chunk, (tok_chunk, size_chunk)), slot)| {
-            move || {
-                for (i, out) in out_chunk.iter_mut().enumerate() {
-                    let tok = &tok_chunk[i * t * d..(i + 1) * t * d];
-                    f(slot, tok, &size_chunk[i * t..(i + 1) * t], out);
+    let mut outs_rest = outs;
+    let mut tok_rest = tokens;
+    let mut size_rest = sizes;
+    let mut slots_rest = slots;
+    let mut tasks = Vec::with_capacity(n_slots.min(b));
+    for rows in chunk_lens(b, n_slots) {
+        let (out_chunk, outs_tail) = std::mem::take(&mut outs_rest).split_at_mut(rows);
+        outs_rest = outs_tail;
+        let (tok_chunk, tok_tail) = tok_rest.split_at(rows * t * d);
+        tok_rest = tok_tail;
+        let (size_chunk, size_tail) = size_rest.split_at(rows * t);
+        size_rest = size_tail;
+        let (slot_chunk, slots_tail) = std::mem::take(&mut slots_rest).split_at_mut(1);
+        slots_rest = slots_tail;
+        let slot = &mut slot_chunk[0];
+        tasks.push(move || {
+            for (i, out) in out_chunk.iter_mut().enumerate() {
+                let tok = &tok_chunk[i * t * d..(i + 1) * t * d];
+                f(slot, tok, &size_chunk[i * t..(i + 1) * t], out);
+            }
+        });
+    }
+    pool.run(tasks);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The splitter invariants behind the "no slot receives zero rows"
+    /// guarantee: partition sums to b, no empty chunks, sizes differ by
+    /// at most one.
+    #[test]
+    fn chunk_lens_is_balanced_and_never_empty() {
+        for n_slots in 1..=12usize {
+            for b in 0..=40usize {
+                let lens: Vec<usize> = chunk_lens(b, n_slots).collect();
+                assert_eq!(lens.iter().sum::<usize>(), b, "b={b} slots={n_slots}");
+                assert_eq!(lens.len(), n_slots.min(b), "b={b} slots={n_slots}");
+                assert!(lens.iter().all(|&l| l >= 1) || b == 0, "empty chunk: b={b} slots={n_slots}");
+                if let (Some(max), Some(min)) = (lens.iter().max(), lens.iter().min()) {
+                    assert!(max - min <= 1, "imbalance: b={b} slots={n_slots} {lens:?}");
                 }
             }
-        })
-        .collect();
-    pool.run(tasks);
+        }
+    }
+
+    /// End-to-end over the pool: every sequence is processed exactly once,
+    /// chunks stay contiguous, and — the PR 7 small-fix pin — no slot that
+    /// receives work receives zero rows (observed via per-slot counters).
+    #[test]
+    fn run_chunked_processes_every_row_once_with_no_empty_slots() {
+        let pool = WorkerPool::new(4);
+        let (t, d) = (6usize, 3usize);
+        for n_slots in [1usize, 2, 3, 4, 8] {
+            for b in [1usize, 2, 3, 5, 8, 9, 16, 17] {
+                // slot state = rows seen by this slot
+                let mut slots: Vec<usize> = vec![0; n_slots];
+                let tokens: Vec<f32> = (0..b * t * d).map(|i| i as f32).collect();
+                let sizes: Vec<f32> = vec![1.0; b * t];
+                let mut outs: Vec<f32> = vec![-1.0; b];
+                run_chunked(
+                    &pool,
+                    &mut slots,
+                    &tokens,
+                    &sizes,
+                    b,
+                    t,
+                    d,
+                    &mut outs,
+                    |seen, tok, sz, out| {
+                        *seen += 1;
+                        assert_eq!(tok.len(), t * d);
+                        assert_eq!(sz.len(), t);
+                        // first element identifies the sequence index
+                        *out = tok[0] / (t * d) as f32;
+                    },
+                );
+                // every sequence processed exactly once, in order
+                for (i, &o) in outs.iter().enumerate() {
+                    assert_eq!(o as usize, i, "b={b} slots={n_slots}");
+                }
+                let used: Vec<usize> = slots.iter().copied().filter(|&c| c > 0).collect();
+                assert_eq!(used.iter().sum::<usize>(), b, "b={b} slots={n_slots}");
+                if n_slots > 1 && b > 1 {
+                    // balanced fan-out: min(slots, b) slots busy, each with
+                    // at least one row — the old ceil-div split failed this
+                    // at e.g. b=9, slots=8 (five chunks of two).
+                    assert_eq!(used.len(), n_slots.min(b), "b={b} slots={n_slots}");
+                    let (mx, mn) = (used.iter().max().unwrap(), used.iter().min().unwrap());
+                    assert!(mx - mn <= 1, "b={b} slots={n_slots} {slots:?}");
+                }
+            }
+        }
+    }
 }

@@ -29,7 +29,11 @@
 //! shared with the batch kernel:
 //!
 //! * scores come from [`kernel::token_norm`] + [`kernel::pair_score`] —
-//!   the very functions the matching stage calls;
+//!   the very functions the matching stage calls.  Both resolve the
+//!   process-global SIMD dispatch ([`super::simd::active_isa`]) on entry,
+//!   so the streaming path always computes under the same ISA as the
+//!   batch kernel — and the F64 primitives are bitwise identical across
+//!   ISAs anyway (see `simd.rs`), so dispatch cannot split the contract;
 //! * a merged pair is accumulated exactly like the kernel's
 //!   size-weighted scatter: `num[j] = a[j]·wa + b[j]·wb` in f64 in
 //!   position order, `den = wa + wb`, output `(num / den) as f32` —

@@ -8,9 +8,20 @@
 //! * **Precomputed norms** — the reference recomputes `|a|` and `|b|`
 //!   inside every banded pair, i.e. O(k) times per token.  Here every
 //!   token's L2 norm is computed once, so each pair costs a single dot.
-//! * **Chunked accumulation** — the dot runs over four independent f64
-//!   accumulators, breaking the serial dependency chain so the compiler
-//!   can autovectorize (the reference's single-accumulator loop cannot).
+//! * **Explicit SIMD with runtime dispatch** — the banded dot and the
+//!   norms are [`super::simd`] primitives: hand-written AVX2 (x86_64) /
+//!   NEON (aarch64) vector loops selected once per process
+//!   ([`super::simd::active_isa`]), with a 4-lane chunked scalar fallback
+//!   that is always available and forceable via `TOMERS_FORCE_SCALAR=1`.
+//!   The `Accum::F64` vector paths are **bit-for-bit identical** to the
+//!   scalar path (mul+add only, never FMA — see `simd.rs` for why), so
+//!   dispatch never changes results in the default precision.
+//! * **Cache-blocked matching** — [`match_tokens_scratch_tiled`] walks
+//!   the A-token axis in tiles sized from `d` ([`matching_tile`]), fusing
+//!   the norm pass into the score pass so a tile's token rows are still
+//!   L1/L2-resident when its banded scores read them, instead of
+//!   streaming the whole `t·d` slab once for norms and again for scores.
+//!   Per-token norms are order-independent, so tiling is bitwise-neutral.
 //! * **O(t) top-r selection** — `select_nth_unstable_by` with a total
 //!   order (score desc, index asc) replaces the full O(t log t) sort.
 //!   The total order is NaN-safe by construction (the legacy
@@ -19,26 +30,53 @@
 //!   reference's stable descending sort, tie-for-tie.
 //! * **Zero allocations** — every intermediate lives in a caller-provided
 //!   [`MergeScratch`]; outputs land in a reusable [`MergeResult`].
+//!
+//! The select and scatter stages deliberately remain single streaming
+//! passes: each already reads its inputs exactly once, and the scatter's
+//! f64 accumulation order (original position order, divide-not-reciprocal)
+//! is part of the bitwise contract with [`super::reference`] and
+//! [`super::incremental`], so there is no locality to recover there
+//! without reordering float ops.
+//!
+//! **Norm-accumulation order (PR 7 reorder):** the sum-of-squares norm
+//! historically accumulated serially in index order — an order the
+//! reference's cosine shared, and one a 4-wide vector unit cannot
+//! reproduce.  It now uses the same 4-lane chunked order as the dot
+//! (`simd::sumsq_f64`), and `reference.rs::sumsq` mirrors that exact
+//! order so the norm computation stays bitwise-shared between kernel and
+//! oracle at every `d` (and the full scores stay bitwise-shared at
+//! `d < 4`, where the chunked dot and the oracle's serial dot coincide —
+//! the `d == 1` reference pins in `tests/streaming_differential.rs`
+//! depend on this).  Any future change to the accumulation order MUST be
+//! made in `simd.rs` (scalar + both vector paths) and `reference.rs`
+//! together.
+//!
+//! The public [`token_norm`] / [`pair_score`] entry points resolve the
+//! dispatch per call, so the streaming incremental path stays bit-for-bit
+//! equal to the batch kernel under every ISA.
 
 use super::scratch::MergeScratch;
+use super::simd::{self, Isa};
 use super::MergeResult;
 
 /// Accumulation precision of the banded dot (and the matching norms).
 ///
 /// * [`Accum::F64`] — the default: f64 accumulators, bitwise identical to
-///   the reference path.  Every pre-existing entry point uses this.
+///   the reference path **under every dispatched ISA** (scalar, AVX2,
+///   NEON — see `simd.rs`).  Every pre-existing entry point uses this.
 /// * [`Accum::F32`] — f32 accumulators throughout the similarity
 ///   computation (ROADMAP "f32 accumulation variants"): half the
-///   accumulator register width, so the autovectorized dot runs twice as
-///   many lanes per SIMD op — for throughput-bound callers that tolerate
-///   a tiny score perturbation.  The merge itself (size-weighted
-///   scatter-average) stays f64 in both modes; only *which* pairs merge
-///   can differ, and only on near-ties.
+///   accumulator register width, so the dot runs twice as many lanes per
+///   SIMD op — for throughput-bound callers that tolerate a tiny score
+///   perturbation.  The merge itself (size-weighted scatter-average)
+///   stays f64 in both modes; only *which* pairs merge can differ, and
+///   only on near-ties.
 ///
-/// Accuracy contract (checked by `tests/merging_differential.rs`): for
-/// standardized inputs (|x| = O(1)) and d <= 64 the f32 cosine scores
-/// stay within **1e-5** of the f64 scores (measured worst case ~2e-7 over
-/// 20k random pairs; the 50x margin covers lane-count reassociation).
+/// Accuracy contract (checked by `tests/merging_differential.rs` and
+/// `tests/merging_dispatch.rs`): for standardized inputs (|x| = O(1)) and
+/// d <= 64 the f32 cosine scores stay within **1e-5** of the f64 scores
+/// (measured worst case ~2e-7 over 20k random pairs; the 50x margin
+/// covers lane-count reassociation, including the AVX2 8-lane FMA path).
 /// Error grows ~sqrt(d)·eps_f32, so expect ~1e-4 by d ~ 4096.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum Accum {
@@ -47,97 +85,58 @@ pub enum Accum {
     F32,
 }
 
-/// Dot product of two f32 rows, accumulated in f64 over four independent
-/// lanes (autovectorizable) plus a scalar tail.
-#[inline]
-fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] as f64 * b[i] as f64;
-        s1 += a[i + 1] as f64 * b[i + 1] as f64;
-        s2 += a[i + 2] as f64 * b[i + 2] as f64;
-        s3 += a[i + 3] as f64 * b[i + 3] as f64;
-    }
-    let mut tail = 0.0f64;
-    for i in chunks * 4..n {
-        tail += a[i] as f64 * b[i] as f64;
-    }
-    (s0 + s1) + (s2 + s3) + tail
-}
-
-/// Sum of squares of an f32 row, accumulated in f64 in index order (bitwise
-/// identical to the reference's norm accumulation).
-#[inline]
-fn sumsq_f64(a: &[f32]) -> f64 {
-    let mut acc = 0.0f64;
-    for &v in a {
-        let x = v as f64;
-        acc += x * x;
-    }
-    acc
-}
-
-/// f32-accumulation twin of [`dot_f64`]: four independent f32 lanes plus a
-/// scalar tail, widened to f64 only at the very end.  See [`Accum`] for
-/// the accuracy contract.
-#[inline]
-fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    let mut tail = 0.0f32;
-    for i in chunks * 4..n {
-        tail += a[i] * b[i];
-    }
-    ((s0 + s1) + (s2 + s3) + tail) as f64
-}
-
-/// f32-accumulation twin of [`sumsq_f64`].
-#[inline]
-fn sumsq_f32(a: &[f32]) -> f64 {
-    let mut acc = 0.0f32;
-    for &v in a {
-        acc += v * v;
-    }
-    acc as f64
-}
-
 /// L2 norm of one token row under the given accumulation precision —
 /// exactly the per-token norm [`match_tokens_scratch_accum`] precomputes,
 /// down to the rounding of every intermediate.  Exposed so the streaming
 /// incremental path (`merging::incremental`) stays bit-for-bit equal to
-/// the batch kernel.
+/// the batch kernel.  Resolves the SIMD dispatch per call; the batch
+/// matching loop hoists it instead ([`super::simd::active_isa`] is
+/// process-global, so both see the same ISA).
 #[inline]
 pub fn token_norm(row: &[f32], accum: Accum) -> f64 {
+    token_norm_isa(row, accum, simd::active_isa())
+}
+
+#[inline]
+fn token_norm_isa(row: &[f32], accum: Accum, isa: Isa) -> f64 {
     match accum {
-        Accum::F64 => sumsq_f64(row).sqrt(),
-        Accum::F32 => sumsq_f32(row).sqrt(),
+        Accum::F64 => simd::sumsq_f64(isa, row).sqrt(),
+        Accum::F32 => simd::sumsq_f32(isa, row).sqrt(),
     }
 }
 
 /// Banded cosine score of one (A, B) pair given the tokens' precomputed
 /// [`token_norm`]s — exactly the score the matching stage computes
 /// (including the `1e-8` denominator guard).  See [`token_norm`] for why
-/// this is public.
+/// this is public and how dispatch stays consistent with it.
 #[inline]
 pub fn pair_score(a: &[f32], b: &[f32], na: f64, nb: f64, accum: Accum) -> f64 {
+    pair_score_isa(a, b, na, nb, accum, simd::active_isa())
+}
+
+#[inline]
+fn pair_score_isa(a: &[f32], b: &[f32], na: f64, nb: f64, accum: Accum, isa: Isa) -> f64 {
     let dot = match accum {
-        Accum::F64 => dot_f64(a, b),
-        Accum::F32 => dot_f32(a, b),
+        Accum::F64 => simd::dot_f64(isa, a, b),
+        Accum::F32 => simd::dot_f32(isa, a, b),
     };
     dot / (na * nb + 1e-8)
+}
+
+/// Default t-axis tile (in A-tokens) for the cache-blocked matching walk,
+/// derived from the token dimension `d`.
+///
+/// Rationale: a tile of `T` A-tokens touches its `T` A-rows plus the `T`
+/// B-rows of the band core (the `2(k-1)` band-overhang rows are shared
+/// with neighbouring tiles), i.e. about `2·T·4d` bytes of token data.
+/// `T = 32 KiB / 8d` keeps that working set within half a typical
+/// 48–64 KiB L1d, leaving room for the norms/scores being written.  The
+/// clamp floor of 64 keeps tiles from degenerating at large `d` (the set
+/// then spills to L2, still far better than streaming the whole slab),
+/// and the 4096 cap bounds the norm-watermark lead at small `d`.
+pub fn matching_tile(d: usize) -> usize {
+    const TILE_TARGET_BYTES: usize = 32 * 1024;
+    (TILE_TARGET_BYTES / (8 * d.max(1))).clamp(64, 4096)
 }
 
 /// Bipartite soft matching under locality constraint `k` (paper eq. 1)
@@ -151,7 +150,8 @@ pub fn match_tokens_scratch(tokens: &[f32], t: usize, d: usize, k: usize, scratc
 }
 
 /// [`match_tokens_scratch`] with an explicit accumulation precision for
-/// the banded dot and the norms (see [`Accum`]).
+/// the banded dot and the norms (see [`Accum`]).  Uses the
+/// [`matching_tile`] default for the cache-blocked walk.
 pub fn match_tokens_scratch_accum(
     tokens: &[f32],
     t: usize,
@@ -160,40 +160,79 @@ pub fn match_tokens_scratch_accum(
     scratch: &mut MergeScratch,
     accum: Accum,
 ) {
+    match_tokens_scratch_tiled(tokens, t, d, k, scratch, accum, matching_tile(d));
+}
+
+/// The cache-blocked matching walk with an explicit t-axis tile (in
+/// A-tokens).  `tile >= t/2` degenerates to the pre-blocking two-pass
+/// walk (all norms, then all scores) — the `blocked_vs_streaming` row in
+/// `benches/merging.rs` measures exactly that contrast, and
+/// `tests/merging_dispatch.rs` pins that every tile size is bitwise
+/// equivalent (per-token norms and per-pair scores are order-independent
+/// computations; tiling only changes traversal order).
+///
+/// Within a tile `[i0, i1)` the walk first extends the norm watermark to
+/// cover every token the tile's band can read — A-rows `2i` for `i < i1`
+/// and B-rows `2j+1` for `j <= min(i1-1 + k-1, t2-1)`, both monotone in
+/// `i1` — then scores the tile's A-tokens while those rows are hot.
+pub fn match_tokens_scratch_tiled(
+    tokens: &[f32],
+    t: usize,
+    d: usize,
+    k: usize,
+    scratch: &mut MergeScratch,
+    accum: Accum,
+    tile: usize,
+) {
     assert!(tokens.len() >= t * d, "tokens slab too short: {} < {}", tokens.len(), t * d);
     let te = t - (t % 2);
     let t2 = te / 2;
     let k = k.clamp(1, t2.max(1));
+    let isa = simd::active_isa();
 
     scratch.norms.clear();
     scratch.norms.resize(te, 0.0);
-    for p in 0..te {
-        scratch.norms[p] = token_norm(&tokens[p * d..(p + 1) * d], accum);
-    }
-
     scratch.scores.clear();
     scratch.scores.resize(t2, f64::NEG_INFINITY);
     scratch.best.clear();
     scratch.best.resize(t2, 0);
+    if t2 == 0 {
+        return;
+    }
 
-    for i in 0..t2 {
-        let a = &tokens[(2 * i) * d..(2 * i + 1) * d];
-        let na = scratch.norms[2 * i];
-        let lo = i.saturating_sub(k - 1);
-        let hi = (i + k - 1).min(t2 - 1);
-        let mut best_score = f64::NEG_INFINITY;
-        let mut best_j = 0usize;
-        for j in lo..=hi {
-            let b = &tokens[(2 * j + 1) * d..(2 * j + 2) * d];
-            // predictable per-case branch inside pair_score; the dot dominates
-            let s = pair_score(a, b, na, scratch.norms[2 * j + 1], accum);
-            if s > best_score {
-                best_score = s;
-                best_j = j;
-            }
+    let tile = tile.max(1);
+    // Norm watermark: token positions < filled have norms computed.
+    let mut filled = 0usize;
+    let mut i0 = 0usize;
+    while i0 < t2 {
+        let i1 = (i0 + tile).min(t2);
+        // Highest token position the tile reads is the B-row of the band
+        // end: 2·min(i1-1 + k-1, t2-1) + 1.  need is the exclusive bound.
+        let need = 2 * (i1 - 1 + (k - 1)).min(t2 - 1) + 2;
+        while filled < need {
+            scratch.norms[filled] = token_norm_isa(&tokens[filled * d..(filled + 1) * d], accum, isa);
+            filled += 1;
         }
-        scratch.scores[i] = best_score;
-        scratch.best[i] = best_j;
+        for i in i0..i1 {
+            let a = &tokens[(2 * i) * d..(2 * i + 1) * d];
+            let na = scratch.norms[2 * i];
+            let lo = i.saturating_sub(k - 1);
+            let hi = (i + k - 1).min(t2 - 1);
+            let mut best_score = f64::NEG_INFINITY;
+            let mut best_j = 0usize;
+            for j in lo..=hi {
+                let b = &tokens[(2 * j + 1) * d..(2 * j + 2) * d];
+                // predictable per-case branch inside the score; the dot dominates
+                let s = pair_score_isa(a, b, na, scratch.norms[2 * j + 1], accum, isa);
+                if s > best_score {
+                    best_score = s;
+                    best_j = j;
+                }
+            }
+            scratch.scores[i] = best_score;
+            scratch.best[i] = best_j;
+        }
+        i0 = i1;
     }
 }
 
@@ -255,7 +294,9 @@ fn merge_given_match(
     }
 
     // Size-weighted scatter-average, accumulated in f64 in original
-    // position order (bitwise identical to the reference).
+    // position order (bitwise identical to the reference).  One streaming
+    // pass by construction — see the module docs for why this stage is
+    // not tiled.
     let out_t = t - r;
     num.clear();
     num.resize(out_t * d, 0.0);
@@ -402,13 +443,17 @@ mod tests {
     #[test]
     fn dot_matches_serial() {
         let mut rng = Rng::new(11);
+        let isa = simd::active_isa();
         for n in [0usize, 1, 3, 4, 7, 64, 129] {
             let a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
             let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
             let serial: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
-            assert!((dot_f64(&a, &b) - serial).abs() < 1e-9, "n={n}");
-            // the f32 lane accumulation stays within its contract too
-            assert!((dot_f32(&a, &b) - serial).abs() < 1e-4, "n={n}");
+            let scale: f64 =
+                a.iter().zip(&b).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum::<f64>().max(1.0);
+            assert!((simd::dot_f64(isa, &a, &b) - serial).abs() < 1e-9, "n={n}");
+            // the f32 lane accumulation stays within its (magnitude-scaled
+            // raw-reduction) contract too
+            assert!((simd::dot_f32(isa, &a, &b) - serial).abs() < 1e-4 * scale, "n={n}");
         }
     }
 
@@ -425,6 +470,38 @@ mod tests {
                 assert!((a - b).abs() <= 1e-5, "score[{i}] t={t} d={d} k={k}: {a} vs {b}");
             }
         }
+    }
+
+    /// Tiling only reorders the walk: every tile size must give bitwise
+    /// identical norms, scores and matches (per-token norms and per-pair
+    /// scores are order-independent computations).
+    #[test]
+    fn tile_size_is_bitwise_neutral() {
+        let mut rng = Rng::new(15);
+        let mut blocked = MergeScratch::new();
+        let mut streaming = MergeScratch::new();
+        for &(t, d, k) in &[(64usize, 8usize, 4usize), (97, 3, 16), (33, 1, 33), (128, 64, 1)] {
+            let tokens: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+            // streaming baseline: one tile covering everything
+            match_tokens_scratch_tiled(&tokens, t, d, k, &mut streaming, Accum::F64, usize::MAX);
+            for tile in [1usize, 2, 3, 7, 64] {
+                match_tokens_scratch_tiled(&tokens, t, d, k, &mut blocked, Accum::F64, tile);
+                assert_eq!(blocked.scores(), streaming.scores(), "t={t} d={d} k={k} tile={tile}");
+                assert_eq!(blocked.best(), streaming.best(), "t={t} d={d} k={k} tile={tile}");
+            }
+            // and the default-tile entry point agrees too
+            match_tokens_scratch_accum(&tokens, t, d, k, &mut blocked, Accum::F64);
+            assert_eq!(blocked.scores(), streaming.scores(), "default tile t={t} d={d} k={k}");
+        }
+    }
+
+    #[test]
+    fn matching_tile_is_d_derived_and_clamped() {
+        assert_eq!(matching_tile(1), 4096);
+        assert_eq!(matching_tile(8), 512);
+        assert_eq!(matching_tile(64), 64);
+        assert_eq!(matching_tile(4096), 64);
+        assert_eq!(matching_tile(0), 4096); // degenerate d guarded
     }
 
     #[test]

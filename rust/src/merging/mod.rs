@@ -43,13 +43,19 @@
 //!   baseline), slot-map composition, [`PipelineResult`].
 //! * [`kernel`]    — the optimized single-sequence kernel.  Per-token norms
 //!   are precomputed once (one dot per banded pair instead of recomputing
-//!   `|a|` O(k) times), the cosine dot runs as a 4-lane chunked f64
-//!   accumulation the compiler can autovectorize, and top-r selection uses
+//!   `|a|` O(k) times), the matching walk is cache-blocked over the
+//!   t-axis ([`kernel::matching_tile`]), and top-r selection uses
 //!   `select_nth_unstable` (O(t)) instead of a full sort (O(t log t)).
 //!   All entry points take a [`MergeScratch`] and an out-param, so steady
 //!   state does **zero heap allocations per call**.  This is the one
 //!   layer that keeps the paper's full positional tuple (scoped
 //!   `too_many_arguments` allows; the crate-wide allow is gone).
+//! * [`simd`]      — the dot/sum-of-squares reduction primitives the
+//!   kernel is built from: explicit AVX2 (x86_64) / NEON (aarch64) vector
+//!   loops behind one-time runtime dispatch ([`simd::active_isa`],
+//!   overridable via `TOMERS_FORCE_SCALAR=1`), with a 4-lane chunked
+//!   scalar fallback that is the bitwise ground truth for `Accum::F64`
+//!   (DESIGN.md §11).
 //! * [`scratch`]   — [`MergeScratch`], the reusable arena backing the
 //!   kernel (norms, scores, match indices, slot workspace, f64 scatter
 //!   accumulators).  Grow-only: buffers are `clear()`+`resize()`d, never
@@ -69,17 +75,21 @@
 //!
 //! `cargo bench --bench merging` writes a machine-readable perf record so
 //! the kernel's trajectory accumulates across PRs (see `scripts/verify.sh`
-//! for the regression gate).  Schema (`schema_version` 3 — v3 switched the
+//! for the regression gate).  Schema (`schema_version` 4 — v4 added the
+//! `isa`/`cpu_features` dispatch record and the per-case
+//! `simd_vs_scalar` / `blocked_vs_streaming` p50 ratios; v3 switched the
 //! batched rows to the `MergePlan` entry points; v2 added the
 //! pool-vs-scope comparison and the pool spawn/steal counters):
 //!
 //! ```json
 //! {
-//!   "schema_version": 3,
+//!   "schema_version": 4,
 //!   "bench": "merging",
 //!   "quick": false,
 //!   "threads": 8,
 //!   "pool_workers": 8,
+//!   "isa": "avx2",             // simd::active_isa().name()
+//!   "cpu_features": "sse2,avx,avx2,fma",  // simd::cpu_features()
 //!   "post_warmup_spawns": 0,   // thread spawns during the timed runs (must be 0)
 //!   "pool_steals": 0,          // lifetime steal count after the run
 //!   "cases": [
@@ -92,7 +102,13 @@
 //!       "batched_scope_ms": 0.0,   // MergePlan::run_batch_into_scoped baseline (mean)
 //!       "batched_scope_p50_ms": 0.0, //   .. median
 //!       "speedup_optimized": 0.0,  // legacy_ms / optimized_ms
-//!       "speedup_batched": 0.0     // legacy_ms / batched_ms (pool path)
+//!       "speedup_batched": 0.0,    // legacy_ms / batched_ms (pool path)
+//!       "simd_p50_ms": 0.0,        // single-thread kernel p50, dispatched ISA
+//!       "scalar_p50_ms": 0.0,      //   .. same work forced through the scalar path
+//!       "simd_vs_scalar": 0.0,     // scalar_p50_ms / simd_p50_ms (1.0 on scalar hosts)
+//!       "blocked_p50_ms": 0.0,     // matching p50, default matching_tile(d)
+//!       "streaming_p50_ms": 0.0,   //   .. tile = MAX (pre-blocking two-pass walk)
+//!       "blocked_vs_streaming": 0.0 // streaming_p50_ms / blocked_p50_ms
 //!     }
 //!   ]
 //! }
@@ -105,6 +121,7 @@ pub mod kernel;
 pub mod pipeline;
 pub mod reference;
 pub mod scratch;
+pub mod simd;
 pub mod spec;
 
 pub use analytic::{merge_schedule, similarity_complexity, speedup_bound};

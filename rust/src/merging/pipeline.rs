@@ -23,6 +23,17 @@
 //!
 //! Dynamic mode (§5.5) runs as a single data-dependent layer; the
 //! realized output length lands in [`PipelineResult::token_counts`].
+//!
+//! SIMD dispatch and cache blocking (PR 7) ride through every plan path
+//! automatically: all three entry points bottom out in the
+//! [`kernel`] scratch functions, which resolve
+//! [`super::simd::active_isa`] per call (one process-global probe) and
+//! tile the matching walk via [`kernel::matching_tile`].  There is no
+//! per-plan ISA state to configure — a plan compiled before the first
+//! kernel call behaves identically to one compiled after, and the
+//! coordinator's `HostPrep` premerge (which executes compiled plans)
+//! inherits both for free.  `Accum::F64` plans are bitwise-invariant to
+//! the dispatched ISA (see `simd.rs`).
 
 use super::kernel;
 use super::scratch::MergeScratch;

@@ -14,18 +14,48 @@
 //! NaN, so every score stays `-inf` or finite.  `total_cmp` removes the
 //! panic path outright so no future refactor of the matching loop can
 //! re-arm it (see `nan_tokens_do_not_panic` in `mod.rs`).
+//!
+//! One accumulation-order change (PR 7): the norm sum-of-squares in
+//! [`cosine`] accumulates in the same 4-lane chunked order as the kernel's
+//! `simd::sumsq_f64` instead of serially, mirroring the kernel's reorder
+//! so the shared-norm bitwise relationship between oracle and kernel is
+//! preserved (the dot stays serial — the kernel's 4-lane dot was never
+//! bitwise-shared with the oracle except at d < 4, where chunked and
+//! serial coincide).  See the norm-accumulation note in `kernel.rs`.
 
 use super::MergeResult;
 
+/// Sum of squares in the kernel's 4-lane chunked accumulation order —
+/// a verbatim mirror of `simd::sumsq_f64_scalar`; change both together
+/// or the d < 4 bitwise pins and the shared-norm contract break.
+fn sumsq(a: &[f32]) -> f64 {
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for c in 0..chunks {
+        let i = c * 4;
+        let (x0, x1) = (a[i] as f64, a[i + 1] as f64);
+        let (x2, x3) = (a[i + 2] as f64, a[i + 3] as f64);
+        s0 += x0 * x0;
+        s1 += x1 * x1;
+        s2 += x2 * x2;
+        s3 += x3 * x3;
+    }
+    let mut tail = 0.0f64;
+    for i in chunks * 4..n {
+        let x = a[i] as f64;
+        tail += x * x;
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
 /// Cosine similarity between two d-vectors.
 fn cosine(a: &[f32], b: &[f32]) -> f64 {
-    let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    let mut dot = 0.0f64;
     for i in 0..a.len() {
         dot += a[i] as f64 * b[i] as f64;
-        na += (a[i] as f64).powi(2);
-        nb += (b[i] as f64).powi(2);
     }
-    dot / (na.sqrt() * nb.sqrt() + 1e-8)
+    dot / (sumsq(a).sqrt() * sumsq(b).sqrt() + 1e-8)
 }
 
 /// Reference bipartite soft matching (paper eq. 1): per A-token, the best

@@ -1,0 +1,649 @@
+//! Explicit-SIMD similarity primitives behind runtime ISA dispatch.
+//!
+//! This module owns the four scalar reduction primitives the merge kernel
+//! is built from — [`dot_f64`] / [`dot_f32`] (banded cosine dot) and
+//! [`sumsq_f64`] / [`sumsq_f32`] (token norms) — together with
+//! hand-written AVX2 (x86_64) and NEON (aarch64) implementations of each,
+//! selected once per process and dispatched per call through [`Isa`].
+//!
+//! # The bitwise-F64 contract
+//!
+//! The scalar `Accum::F64` dot accumulates over **four independent f64
+//! lanes in strided order** (`s_l += a[4c+l]·b[4c+l]`), reduced as
+//! `(s0 + s1) + (s2 + s3) + tail`.  A 4-wide f64 vector accumulator
+//! performs *the same* IEEE-754 operation sequence per lane —
+//! f32→f64 convert (exact), multiply (rounded once), add (rounded once) —
+//! so the AVX2 and NEON F64 paths are **bit-for-bit identical** to the
+//! scalar path, not merely close.  Two consequences:
+//!
+//! * **No FMA on any F64 path.**  A fused multiply-add rounds once where
+//!   mul+add rounds twice, which breaks bitwise identity with the scalar
+//!   kernel, the incremental streaming path, and the differential oracle.
+//!   FMA is used only on the x86 `Accum::F32` path, whose contract is
+//!   tolerance-based (scores within 1e-5 of f64 — see
+//!   [`Accum`](super::kernel::Accum)).
+//! * The norms use the same 4-lane chunked order (`sumsq`), which is
+//!   mirrored verbatim by `merging/reference.rs` so the oracle stays
+//!   bitwise comparable (see the note in `kernel.rs`).
+//!
+//! The NEON F64 path models the 4-lane accumulator as two `float64x2_t`
+//! registers holding lanes (0,1) and (2,3); the reduction
+//! `(s0 + s1) + (s2 + s3) + tail` is unchanged.  The NEON F32 path is a
+//! 4-lane mul+add and therefore *also* bitwise identical to the scalar
+//! `Accum::F32` twin; only x86 F32 (8-lane FMA) trades bitwise identity
+//! for throughput, inside the documented 1e-5 contract.
+//!
+//! # Selection
+//!
+//! [`active_isa`] resolves, in order:
+//!
+//! 1. the process-local [`force_scalar`] override (bench/test hook, an
+//!    atomic — lets one process time SIMD vs scalar back to back);
+//! 2. `TOMERS_FORCE_SCALAR=1` in the environment, read **once** at first
+//!    use (cached alongside the CPU feature probe);
+//! 3. CPU feature detection: `avx2 && fma` on x86_64
+//!    (`is_x86_feature_detected!`), NEON unconditionally on aarch64
+//!    (baseline for every aarch64 Rust target), scalar everywhere else.
+//!
+//! The selected ISA is observable — never infer it from timing — via
+//! [`dispatch_report`] (the string `Metrics::report()` and the merging
+//! bench JSON embed) and [`Isa::name`].
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+/// Instruction set the similarity primitives dispatch to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable 4-lane chunked scalar loops (always available; the
+    /// bitwise ground truth the vector paths must reproduce for F64).
+    Scalar,
+    /// x86_64 AVX2: 4×f64 vector accumulator for F64 (mul+add, no FMA —
+    /// bitwise), 8×f32 FMA accumulator for F32 (within the 1e-5 contract).
+    Avx2,
+    /// aarch64 NEON: 2×2 f64 accumulators for F64 and a 4×f32 mul+add for
+    /// F32 — both bitwise identical to the scalar paths.
+    Neon,
+}
+
+impl Isa {
+    /// Stable lower-case name (`"scalar"` / `"avx2"` / `"neon"`), used in
+    /// `Metrics::report()` and the `BENCH_merging.json` `isa` field.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+}
+
+/// Bench/test override: route every primitive through the scalar path
+/// while `true`, regardless of what the host supports.  Process-local and
+/// reversible, unlike the `TOMERS_FORCE_SCALAR` environment variable
+/// (which is latched at first use); this is what lets the merging bench
+/// time `simd_vs_scalar` inside one process.
+pub fn force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+}
+
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+static DETECTED: OnceLock<Isa> = OnceLock::new();
+
+/// Environment + CPU probe, evaluated once per process.
+fn detect() -> Isa {
+    if std::env::var_os("TOMERS_FORCE_SCALAR").is_some_and(|v| v == "1") {
+        return Isa::Scalar;
+    }
+    detect_cpu()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_cpu() -> Isa {
+    // FMA is required alongside AVX2: the f32 path uses fused ops.
+    // (Every AVX2 CPU to date also has FMA, but probe both anyway.)
+    if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma") {
+        Isa::Avx2
+    } else {
+        Isa::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_cpu() -> Isa {
+    // NEON (ASIMD) is baseline on every aarch64 Rust target.
+    Isa::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_cpu() -> Isa {
+    Isa::Scalar
+}
+
+/// The ISA every kernel primitive dispatches to right now.  Callers on a
+/// hot path should fetch this once per kernel invocation and pass it down
+/// rather than re-resolving per element pair.
+#[inline]
+pub fn active_isa() -> Isa {
+    if FORCE_SCALAR.load(Ordering::Relaxed) {
+        return Isa::Scalar;
+    }
+    *DETECTED.get_or_init(detect)
+}
+
+/// Detected CPU SIMD features as a comma-joined string (independent of
+/// what [`active_isa`] selected — a forced-scalar run still reports the
+/// hardware), for the bench JSON `cpu_features` field.
+pub fn cpu_features() -> String {
+    let mut feats: Vec<&str> = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    {
+        for (name, have) in [
+            ("sse2", std::arch::is_x86_feature_detected!("sse2")),
+            ("avx", std::arch::is_x86_feature_detected!("avx")),
+            ("avx2", std::arch::is_x86_feature_detected!("avx2")),
+            ("fma", std::arch::is_x86_feature_detected!("fma")),
+            ("avx512f", std::arch::is_x86_feature_detected!("avx512f")),
+        ] {
+            if have {
+                feats.push(name);
+            }
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        feats.push("neon");
+    }
+    if feats.is_empty() {
+        feats.push("none");
+    }
+    feats.join(",")
+}
+
+/// One-line dispatch summary, e.g.
+/// `isa=avx2 features=sse2,avx,avx2,fma f64=4-lane f32=8-lane+fma`.
+/// This string — not wall-clock timing — is the contract for asserting
+/// where dispatch routed (see `tests/dispatch_env.rs`).
+pub fn dispatch_report() -> String {
+    let isa = active_isa();
+    let lanes = match isa {
+        Isa::Scalar => "f64=4-lane f32=4-lane",
+        Isa::Avx2 => "f64=4-lane f32=8-lane+fma",
+        Isa::Neon => "f64=2x2-lane f32=4-lane",
+    };
+    format!("isa={} features={} {lanes}", isa.name(), cpu_features())
+}
+
+// ---------------------------------------------------------------------------
+// Scalar paths: the bitwise ground truth.
+
+/// Scalar F64 dot: four independent f64 accumulators over strided indices
+/// `4c + l`, serial tail, reduced `(s0 + s1) + (s2 + s3) + tail`.  The
+/// vector paths must reproduce this op-for-op.
+pub fn dot_f64_scalar(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] as f64 * b[i] as f64;
+        s1 += a[i + 1] as f64 * b[i + 1] as f64;
+        s2 += a[i + 2] as f64 * b[i + 2] as f64;
+        s3 += a[i + 3] as f64 * b[i + 3] as f64;
+    }
+    let mut tail = 0.0f64;
+    for i in chunks * 4..n {
+        tail += a[i] as f64 * b[i] as f64;
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// Scalar F64 sum of squares, in the same 4-lane chunked order as
+/// [`dot_f64_scalar`] (historically this was a serial index-order loop;
+/// the reorder is mirrored by `reference.rs` — see `kernel.rs` docs).
+pub fn sumsq_f64_scalar(a: &[f32]) -> f64 {
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for c in 0..chunks {
+        let i = c * 4;
+        let (x0, x1) = (a[i] as f64, a[i + 1] as f64);
+        let (x2, x3) = (a[i + 2] as f64, a[i + 3] as f64);
+        s0 += x0 * x0;
+        s1 += x1 * x1;
+        s2 += x2 * x2;
+        s3 += x3 * x3;
+    }
+    let mut tail = 0.0f64;
+    for i in chunks * 4..n {
+        let x = a[i] as f64;
+        tail += x * x;
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// Scalar F32 dot twin: four independent f32 lanes, widened to f64 only
+/// at the very end.
+pub fn dot_f32_scalar(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 4..n {
+        tail += a[i] * b[i];
+    }
+    ((s0 + s1) + (s2 + s3) + tail) as f64
+}
+
+/// Scalar F32 sum-of-squares twin, 4-lane chunked like
+/// [`sumsq_f64_scalar`].
+pub fn sumsq_f32_scalar(a: &[f32]) -> f64 {
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * a[i];
+        s1 += a[i + 1] * a[i + 1];
+        s2 += a[i + 2] * a[i + 2];
+        s3 += a[i + 3] * a[i + 3];
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 4..n {
+        tail += a[i] * a[i];
+    }
+    ((s0 + s1) + (s2 + s3) + tail) as f64
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 (x86_64)
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// 4×f64 vector accumulator; lane `l` holds exactly the scalar `s_l`.
+    /// mul+add, **not** FMA, so every intermediate rounds exactly like
+    /// the scalar path — bitwise identical (module docs).
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2 and `a.len() == b.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let i = c * 4;
+            let va = _mm256_cvtps_pd(_mm_loadu_ps(a.as_ptr().add(i)));
+            let vb = _mm256_cvtps_pd(_mm_loadu_ps(b.as_ptr().add(i)));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(va, vb));
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut tail = 0.0f64;
+        for i in chunks * 4..n {
+            tail += a[i] as f64 * b[i] as f64;
+        }
+        (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]) + tail
+    }
+
+    /// Vector sum of squares; same lane layout and reduction as
+    /// [`dot_f64`], so bitwise identical to `sumsq_f64_scalar`.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sumsq_f64(a: &[f32]) -> f64 {
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let v = _mm256_cvtps_pd(_mm_loadu_ps(a.as_ptr().add(c * 4)));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(v, v));
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut tail = 0.0f64;
+        for i in chunks * 4..n {
+            let x = a[i] as f64;
+            tail += x * x;
+        }
+        (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]) + tail
+    }
+
+    /// 8×f32 FMA accumulator.  Twice the lanes of the scalar F32 twin and
+    /// fused rounding — NOT bitwise equal to it, but well inside the
+    /// `Accum::F32` 1e-5 score contract (reassociation error here is the
+    /// same order as the scalar twin's own deviation from f64).
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2 and FMA, and
+    /// `a.len() == b.len()`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len();
+        let chunks = n / 8;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let i = c * 8;
+            let va = _mm256_loadu_ps(a.as_ptr().add(i));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+            acc = _mm256_fmadd_ps(va, vb, acc);
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut tail = 0.0f32;
+        for i in chunks * 8..n {
+            tail += a[i] * b[i];
+        }
+        let body = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+            + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+        (body + tail) as f64
+    }
+
+    /// 8×f32 FMA sum of squares; same contract as [`dot_f32`].
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2 and FMA.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn sumsq_f32(a: &[f32]) -> f64 {
+        let n = a.len();
+        let chunks = n / 8;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let v = _mm256_loadu_ps(a.as_ptr().add(c * 8));
+            acc = _mm256_fmadd_ps(v, v, acc);
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut tail = 0.0f32;
+        for i in chunks * 8..n {
+            tail += a[i] * a[i];
+        }
+        let body = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+            + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+        (body + tail) as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON (aarch64)
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// The scalar 4-lane f64 accumulator as two `float64x2_t` registers:
+    /// `acc01` holds lanes (s0, s1), `acc23` holds (s2, s3).  mul+add
+    /// only (no `vfmaq_f64`) — bitwise identical to the scalar path.
+    ///
+    /// # Safety
+    /// Caller must ensure NEON is available (baseline on aarch64) and
+    /// `a.len() == b.len()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc01 = vdupq_n_f64(0.0);
+        let mut acc23 = vdupq_n_f64(0.0);
+        for c in 0..chunks {
+            let i = c * 4;
+            let va = vld1q_f32(a.as_ptr().add(i));
+            let vb = vld1q_f32(b.as_ptr().add(i));
+            let lo = vmulq_f64(vcvt_f64_f32(vget_low_f32(va)), vcvt_f64_f32(vget_low_f32(vb)));
+            let hi = vmulq_f64(vcvt_high_f64_f32(va), vcvt_high_f64_f32(vb));
+            acc01 = vaddq_f64(acc01, lo);
+            acc23 = vaddq_f64(acc23, hi);
+        }
+        let (s0, s1) = (vgetq_lane_f64::<0>(acc01), vgetq_lane_f64::<1>(acc01));
+        let (s2, s3) = (vgetq_lane_f64::<0>(acc23), vgetq_lane_f64::<1>(acc23));
+        let mut tail = 0.0f64;
+        for i in chunks * 4..n {
+            tail += a[i] as f64 * b[i] as f64;
+        }
+        (s0 + s1) + (s2 + s3) + tail
+    }
+
+    /// NEON sum of squares; same lane layout as [`dot_f64`] — bitwise
+    /// identical to `sumsq_f64_scalar`.
+    ///
+    /// # Safety
+    /// Caller must ensure NEON is available.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sumsq_f64(a: &[f32]) -> f64 {
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc01 = vdupq_n_f64(0.0);
+        let mut acc23 = vdupq_n_f64(0.0);
+        for c in 0..chunks {
+            let v = vld1q_f32(a.as_ptr().add(c * 4));
+            let lo = vcvt_f64_f32(vget_low_f32(v));
+            let hi = vcvt_high_f64_f32(v);
+            acc01 = vaddq_f64(acc01, vmulq_f64(lo, lo));
+            acc23 = vaddq_f64(acc23, vmulq_f64(hi, hi));
+        }
+        let (s0, s1) = (vgetq_lane_f64::<0>(acc01), vgetq_lane_f64::<1>(acc01));
+        let (s2, s3) = (vgetq_lane_f64::<0>(acc23), vgetq_lane_f64::<1>(acc23));
+        let mut tail = 0.0f64;
+        for i in chunks * 4..n {
+            let x = a[i] as f64;
+            tail += x * x;
+        }
+        (s0 + s1) + (s2 + s3) + tail
+    }
+
+    /// 4×f32 mul+add — the same lane count, op order and reduction as the
+    /// scalar F32 twin, so bitwise identical to it (unlike x86's 8-lane
+    /// FMA variant).
+    ///
+    /// # Safety
+    /// Caller must ensure NEON is available and `a.len() == b.len()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let i = c * 4;
+            let va = vld1q_f32(a.as_ptr().add(i));
+            let vb = vld1q_f32(b.as_ptr().add(i));
+            acc = vaddq_f32(acc, vmulq_f32(va, vb));
+        }
+        let (s0, s1) = (vgetq_lane_f32::<0>(acc), vgetq_lane_f32::<1>(acc));
+        let (s2, s3) = (vgetq_lane_f32::<2>(acc), vgetq_lane_f32::<3>(acc));
+        let mut tail = 0.0f32;
+        for i in chunks * 4..n {
+            tail += a[i] * b[i];
+        }
+        (((s0 + s1) + (s2 + s3)) + tail) as f64
+    }
+
+    /// NEON F32 sum of squares; bitwise identical to `sumsq_f32_scalar`.
+    ///
+    /// # Safety
+    /// Caller must ensure NEON is available.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sumsq_f32(a: &[f32]) -> f64 {
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let v = vld1q_f32(a.as_ptr().add(c * 4));
+            acc = vaddq_f32(acc, vmulq_f32(v, v));
+        }
+        let (s0, s1) = (vgetq_lane_f32::<0>(acc), vgetq_lane_f32::<1>(acc));
+        let (s2, s3) = (vgetq_lane_f32::<2>(acc), vgetq_lane_f32::<3>(acc));
+        let mut tail = 0.0f32;
+        for i in chunks * 4..n {
+            tail += a[i] * a[i];
+        }
+        (((s0 + s1) + (s2 + s3)) + tail) as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch
+
+/// F64 banded dot under `isa`.  Bit-for-bit identical across every ISA
+/// (module docs); `isa` is a parameter — not re-resolved here — so hot
+/// loops resolve dispatch once per kernel call.
+#[inline]
+pub fn dot_f64(isa: Isa, a: &[f32], b: &[f32]) -> f64 {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active_isa only yields Avx2 after is_x86_feature_detected
+        // confirmed avx2+fma on this CPU.
+        Isa::Avx2 => unsafe { avx2::dot_f64(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on every aarch64 Rust target.
+        Isa::Neon => unsafe { neon::dot_f64(a, b) },
+        _ => dot_f64_scalar(a, b),
+    }
+}
+
+/// F64 sum of squares under `isa` (bitwise identical across ISAs).
+#[inline]
+pub fn sumsq_f64(isa: Isa, a: &[f32]) -> f64 {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 implies a successful avx2+fma feature probe.
+        Isa::Avx2 => unsafe { avx2::sumsq_f64(a) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        Isa::Neon => unsafe { neon::sumsq_f64(a) },
+        _ => sumsq_f64_scalar(a),
+    }
+}
+
+/// F32 banded dot under `isa`.  Scalar and NEON agree bitwise; AVX2 is
+/// within the `Accum::F32` 1e-5 score contract.
+#[inline]
+pub fn dot_f32(isa: Isa, a: &[f32], b: &[f32]) -> f64 {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 implies a successful avx2+fma feature probe.
+        Isa::Avx2 => unsafe { avx2::dot_f32(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        Isa::Neon => unsafe { neon::dot_f32(a, b) },
+        _ => dot_f32_scalar(a, b),
+    }
+}
+
+/// F32 sum of squares under `isa`; same contract split as [`dot_f32`].
+#[inline]
+pub fn sumsq_f32(isa: Isa, a: &[f32]) -> f64 {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 implies a successful avx2+fma feature probe.
+        Isa::Avx2 => unsafe { avx2::sumsq_f32(a) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        Isa::Neon => unsafe { neon::sumsq_f32(a) },
+        _ => sumsq_f32_scalar(a),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Length sweep covering the remainder/alignment edges of both lane
+    /// widths (4 for f64/scalar-f32/neon, 8 for the avx2 f32 path).
+    const LENS: [usize; 12] = [0, 1, 2, 3, 4, 5, 7, 8, 9, 63, 64, 257];
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Tolerance for raw f32 reductions vs an f64 witness: f32 rounding
+    /// error scales with the sum of |terms|, so the bound must too (the
+    /// kernel's flat 1e-5 contract is on *normalized* cosine scores).
+    fn f32_tol(scale: f64) -> f64 {
+        1e-4 * scale.max(1.0)
+    }
+
+    #[test]
+    fn scalar_f64_matches_serial_reference() {
+        let mut rng = Rng::new(21);
+        for n in LENS {
+            let (a, b) = (rand_vec(&mut rng, n), rand_vec(&mut rng, n));
+            let dot: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let dot_scale: f64 =
+                a.iter().zip(&b).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum();
+            let ss: f64 = a.iter().map(|&x| (x as f64) * (x as f64)).sum();
+            assert!((dot_f64_scalar(&a, &b) - dot).abs() < 1e-9, "n={n}");
+            assert!((sumsq_f64_scalar(&a) - ss).abs() < 1e-9, "n={n}");
+            assert!((dot_f32_scalar(&a, &b) - dot).abs() < f32_tol(dot_scale), "n={n}");
+            assert!((sumsq_f32_scalar(&a) - ss).abs() < f32_tol(ss), "n={n}");
+        }
+    }
+
+    #[test]
+    fn vector_f64_is_bitwise_equal_to_scalar() {
+        let isa = *DETECTED.get_or_init(detect);
+        if isa == Isa::Scalar {
+            eprintln!("WARN: no SIMD path on this host — vector bitwise test is vacuous");
+        }
+        let mut rng = Rng::new(22);
+        for n in LENS {
+            for _ in 0..8 {
+                let (a, b) = (rand_vec(&mut rng, n), rand_vec(&mut rng, n));
+                // f64: exact bit equality, the core dispatch contract
+                assert_eq!(
+                    dot_f64(isa, &a, &b).to_bits(),
+                    dot_f64_scalar(&a, &b).to_bits(),
+                    "dot_f64 n={n} isa={}",
+                    isa.name()
+                );
+                assert_eq!(
+                    sumsq_f64(isa, &a).to_bits(),
+                    sumsq_f64_scalar(&a).to_bits(),
+                    "sumsq_f64 n={n} isa={}",
+                    isa.name()
+                );
+                // f32: lane-reassociation error bounded relative to the
+                // term-magnitude sum (bitwise on NEON, 8-lane FMA on AVX2)
+                let dot_scale: f64 =
+                    a.iter().zip(&b).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum();
+                assert!(
+                    (dot_f32(isa, &a, &b) - dot_f32_scalar(&a, &b)).abs() <= f32_tol(dot_scale)
+                );
+                assert!(
+                    (sumsq_f32(isa, &a) - sumsq_f32_scalar(&a)).abs()
+                        <= f32_tol(sumsq_f64_scalar(&a))
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn force_scalar_overrides_dispatch() {
+        force_scalar(true);
+        assert_eq!(active_isa(), Isa::Scalar);
+        assert!(dispatch_report().starts_with("isa=scalar "));
+        force_scalar(false);
+        assert_eq!(active_isa(), *DETECTED.get_or_init(detect));
+    }
+
+    #[test]
+    fn report_names_are_stable() {
+        assert_eq!(Isa::Scalar.name(), "scalar");
+        assert_eq!(Isa::Avx2.name(), "avx2");
+        assert_eq!(Isa::Neon.name(), "neon");
+        let report = dispatch_report();
+        assert!(report.contains("features="), "{report}");
+        assert!(!cpu_features().is_empty());
+    }
+}

@@ -1,0 +1,181 @@
+//! Dispatch-edge differential tests (ISSUE 7): the explicit-SIMD kernel
+//! must be **bitwise** equal to the forced-scalar kernel for
+//! [`Accum::F64`], and within the documented 1e-5 score contract for
+//! [`Accum::F32`], across dimension sweeps that hit every
+//! remainder/alignment edge of both lane widths (4 for f64 and the
+//! scalar/NEON f32 paths, 8 for the AVX2 f32 path).  Also pins the
+//! cache-blocked matching walk bitwise against the streaming walk at
+//! tile boundaries.
+//!
+//! On a host where [`simd::active_isa`] is already [`Isa::Scalar`], the
+//! SIMD-vs-scalar comparisons degenerate to scalar-vs-scalar; the suite
+//! prints a WARN so a green run on such a host is not mistaken for
+//! vector coverage.
+//!
+//! NOTE: `simd::force_scalar` is a process-global toggle and tests run
+//! concurrently, so tests here never assume the *dispatched* path while
+//! the toggle is on; every comparison computes its scalar side through
+//! the explicitly-parameterized `Isa::Scalar` primitives or under the
+//! toggle with the SIMD side captured first.
+
+use tomers::merging::kernel::{
+    match_tokens_scratch_tiled, matching_tile, merge_fixed_r_scratch_accum, pair_score, token_norm,
+    Accum,
+};
+use tomers::merging::simd::{self, Isa};
+use tomers::merging::{MergeResult, MergeScratch};
+use tomers::util::Rng;
+
+/// d sweep from the ISSUE: 1, 3, lane−1, lane, lane+1, 64, 257 for both
+/// the 4-wide and 8-wide lane counts.
+const DIMS: [usize; 9] = [1, 3, 4, 5, 7, 8, 9, 64, 257];
+
+fn rand_tokens(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn primitives_simd_equals_scalar_over_dim_sweep() {
+    let isa = simd::active_isa();
+    if isa == Isa::Scalar {
+        eprintln!("WARN: scalar-only host — SIMD differential is vacuous here");
+    }
+    let mut rng = Rng::new(71);
+    for d in DIMS {
+        for _ in 0..16 {
+            let a = rand_tokens(&mut rng, d);
+            let b = rand_tokens(&mut rng, d);
+            // F64: exact bit equality across the dispatch boundary
+            assert_eq!(
+                simd::dot_f64(isa, &a, &b).to_bits(),
+                simd::dot_f64(Isa::Scalar, &a, &b).to_bits(),
+                "dot_f64 d={d} isa={}",
+                isa.name()
+            );
+            assert_eq!(
+                simd::sumsq_f64(isa, &a).to_bits(),
+                simd::sumsq_f64(Isa::Scalar, &a).to_bits(),
+                "sumsq_f64 d={d} isa={}",
+                isa.name()
+            );
+            // F32 raw reductions: reassociation error scales with the sum
+            // of |terms| (the 1e-5 contract is on *normalized* scores, not
+            // raw dots), so the tolerance is relative to that magnitude.
+            let dot_scale: f64 =
+                a.iter().zip(&b).map(|(&x, &y)| (x * y).abs() as f64).sum::<f64>().max(1.0);
+            let (dv, ds) = (simd::dot_f32(isa, &a, &b), simd::dot_f32(Isa::Scalar, &a, &b));
+            assert!((dv - ds).abs() <= 1e-4 * dot_scale, "dot_f32 d={d}: {dv} vs {ds}");
+            let ss_scale = simd::sumsq_f64(Isa::Scalar, &a).max(1.0);
+            let (sv, ss) = (simd::sumsq_f32(isa, &a), simd::sumsq_f32(Isa::Scalar, &a));
+            assert!((sv - ss).abs() <= 1e-4 * ss_scale, "sumsq_f32 d={d}: {sv} vs {ss}");
+        }
+    }
+}
+
+/// Full-kernel differential: the merged tokens, sizes, slot map and raw
+/// match scores under the dispatched ISA are bitwise identical to the
+/// forced-scalar run for `Accum::F64`.
+#[test]
+fn kernel_f64_simd_is_bitwise_equal_to_forced_scalar() {
+    let mut rng = Rng::new(72);
+    let mut scr_v = MergeScratch::new();
+    let mut scr_s = MergeScratch::new();
+    let mut out_v = MergeResult::default();
+    let mut out_s = MergeResult::default();
+    for d in DIMS {
+        let (t, k) = (48usize, 5usize);
+        let r = 12usize;
+        let tokens = rand_tokens(&mut rng, t * d);
+        let sizes: Vec<f32> = (0..t).map(|_| 1.0 + rng.below(3) as f32).collect();
+
+        merge_fixed_r_scratch_accum(&tokens, &sizes, t, d, r, k, &mut scr_v, &mut out_v, Accum::F64);
+        simd::force_scalar(true);
+        merge_fixed_r_scratch_accum(&tokens, &sizes, t, d, r, k, &mut scr_s, &mut out_s, Accum::F64);
+        simd::force_scalar(false);
+
+        assert_eq!(bits(scr_v.scores()), bits(scr_s.scores()), "scores d={d}");
+        assert_eq!(scr_v.best(), scr_s.best(), "best d={d}");
+        assert_eq!(out_v.slot_map, out_s.slot_map, "slot_map d={d}");
+        // f32 outputs: exact equality is bit equality for finite values
+        // produced by identical op sequences
+        assert_eq!(out_v.tokens, out_s.tokens, "tokens d={d}");
+        assert_eq!(out_v.sizes, out_s.sizes, "sizes d={d}");
+    }
+}
+
+/// `Accum::F32` under the dispatched ISA stays within 1e-5 of the
+/// forced-scalar F32 scores (the AVX2 path reassociates to 8 lanes with
+/// FMA; scalar and NEON are bitwise).
+#[test]
+fn kernel_f32_simd_tracks_forced_scalar_within_contract() {
+    let mut rng = Rng::new(73);
+    let mut scr_v = MergeScratch::new();
+    let mut scr_s = MergeScratch::new();
+    for d in DIMS {
+        let (t, k) = (48usize, 5usize);
+        let tokens = rand_tokens(&mut rng, t * d);
+        match_tokens_scratch_tiled(&tokens, t, d, k, &mut scr_v, Accum::F32, matching_tile(d));
+        simd::force_scalar(true);
+        match_tokens_scratch_tiled(&tokens, t, d, k, &mut scr_s, Accum::F32, matching_tile(d));
+        simd::force_scalar(false);
+        for (i, (a, b)) in scr_v.scores().iter().zip(scr_s.scores()).enumerate() {
+            assert!((a - b).abs() <= 1e-5, "score[{i}] d={d}: {a} vs {b}");
+        }
+    }
+}
+
+/// The incremental streaming primitives (`token_norm` / `pair_score`) go
+/// through the same dispatch — pin them bitwise against the explicit
+/// scalar primitives for F64 so the incremental ≡ recompute guarantee
+/// cannot split across ISAs.
+#[test]
+fn streaming_primitives_match_scalar_bitwise() {
+    let mut rng = Rng::new(74);
+    for d in DIMS {
+        let a = rand_tokens(&mut rng, d);
+        let b = rand_tokens(&mut rng, d);
+        let na = token_norm(&a, Accum::F64);
+        let nb = token_norm(&b, Accum::F64);
+        assert_eq!(
+            na.to_bits(),
+            simd::sumsq_f64(Isa::Scalar, &a).sqrt().to_bits(),
+            "token_norm d={d}"
+        );
+        let s = pair_score(&a, &b, na, nb, Accum::F64);
+        let scalar = simd::dot_f64(Isa::Scalar, &a, &b) / (na * nb + 1e-8);
+        assert_eq!(s.to_bits(), scalar.to_bits(), "pair_score d={d}");
+    }
+}
+
+/// Tile boundaries: every tile size — including ones that split the band
+/// mid-overlap and the degenerate single-token tile — must reproduce the
+/// streaming walk bit-for-bit, across dims and band widths.
+#[test]
+fn blocked_walk_is_bitwise_equal_to_streaming_walk() {
+    let mut rng = Rng::new(75);
+    let mut blocked = MergeScratch::new();
+    let mut streaming = MergeScratch::new();
+    for &(t, d, k) in &[
+        (130usize, 7usize, 9usize),
+        (127, 64, 16),
+        (64, 257, 4),
+        (33, 1, 40),
+        (8, 3, 1),
+    ] {
+        let tokens = rand_tokens(&mut rng, t * d);
+        match_tokens_scratch_tiled(&tokens, t, d, k, &mut streaming, Accum::F64, usize::MAX);
+        for tile in [1usize, 2, 5, 16, 63, 64, 65, 4096] {
+            match_tokens_scratch_tiled(&tokens, t, d, k, &mut blocked, Accum::F64, tile);
+            assert_eq!(
+                bits(blocked.scores()),
+                bits(streaming.scores()),
+                "t={t} d={d} k={k} tile={tile}"
+            );
+            assert_eq!(blocked.best(), streaming.best(), "t={t} d={d} k={k} tile={tile}");
+        }
+    }
+}

@@ -1,0 +1,356 @@
+#!/usr/bin/env python3
+"""Transliteration cross-check for the PR 7 merge-kernel changes.
+
+When the container has no Rust toolchain, this script is the executable
+half of the review: it transliterates the exact arithmetic of
+`rust/src/merging/simd.rs` (lane/index layout of the scalar and vector
+reduction models), `kernel.rs::match_tokens_scratch_tiled` (cache-blocked
+walk + norm watermark) and `batch.rs::chunk_lens` (balanced splitter)
+into Python — where every float op is the same IEEE-754 binary64 op Rust
+performs — and checks the properties the Rust test suite asserts:
+
+  1. vector lane models (AVX2 4x f64, NEON 2x2 f64) are *bitwise* equal
+     to the 4-lane chunked scalar reduction, for dot and sumsq, across
+     the remainder-edge length sweep;
+  2. the tiled matching walk is bitwise equal to the one-tile streaming
+     walk for every tile size, and the norm watermark never lets a score
+     read an unfilled norm (sentinel-checked);
+  3. at d < 4 the kernel scores are bitwise equal to the reference
+     transliteration (serial dot + mirrored chunked sumsq), and the
+     norms are bitwise-shared at every d — the documented contract;
+  4. top-r selection under the total order (score desc, index asc)
+     selects the same *set* as the reference's stable descending sort;
+  5. chunk_lens invariants: sums to b, min(slots, b) chunks, no empty
+     chunk, sizes differ by at most one;
+  6. matching_tile clamp pins.
+
+Inputs are f32-rounded (struct round-trip), so the f64 accumulation here
+is op-for-op what the Rust f64 paths compute.  Run: python3 scripts/crosscheck_kernel.py
+"""
+
+import math
+import random
+import struct
+import sys
+
+FAILURES = []
+
+
+def check(name, ok, detail=""):
+    if ok:
+        print(f"PASS  {name}")
+    else:
+        print(f"FAIL  {name}  {detail}")
+        FAILURES.append(name)
+
+
+def f32(x):
+    """Round a Python float through IEEE binary32 (Rust `as f32`)."""
+    return struct.unpack("<f", struct.pack("<f", x))[0]
+
+
+def rand_vec(rng, n):
+    return [f32(rng.gauss(0.0, 1.0)) for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# 1. simd.rs reduction models (f64 paths; Python float == IEEE binary64)
+
+
+def dot_f64_scalar(a, b):
+    """simd.rs::dot_f64_scalar — 4 strided lanes, (s0+s1)+(s2+s3)+tail."""
+    n = len(a)
+    chunks = n // 4
+    s = [0.0, 0.0, 0.0, 0.0]
+    for c in range(chunks):
+        i = 4 * c
+        for l in range(4):
+            s[l] += a[i + l] * b[i + l]
+    tail = 0.0
+    for i in range(4 * chunks, n):
+        tail += a[i] * b[i]
+    return (s[0] + s[1]) + (s[2] + s[3]) + tail
+
+
+def sumsq_f64_scalar(a):
+    """simd.rs::sumsq_f64_scalar — same lane layout as the dot."""
+    n = len(a)
+    chunks = n // 4
+    s = [0.0, 0.0, 0.0, 0.0]
+    for c in range(chunks):
+        i = 4 * c
+        for l in range(4):
+            x = a[i + l]
+            s[l] += x * x
+    tail = 0.0
+    for i in range(4 * chunks, n):
+        tail += a[i] * a[i]
+    return (s[0] + s[1]) + (s[2] + s[3]) + tail
+
+
+def dot_f64_avx2_model(a, b):
+    """avx2::dot_f64 — one 4-wide accumulator: lane l sees exactly the ops
+    acc[l] = acc[l] + (a[4c+l] * b[4c+l]) (cvtps_pd exact, mul rounds once,
+    add rounds once — no FMA), reduced (l0+l1)+(l2+l3)+tail."""
+    n = len(a)
+    chunks = n // 4
+    acc = [0.0, 0.0, 0.0, 0.0]
+    for c in range(chunks):
+        i = 4 * c
+        va = a[i:i + 4]          # _mm_loadu_ps + _mm256_cvtps_pd (exact)
+        vb = b[i:i + 4]
+        prod = [va[l] * vb[l] for l in range(4)]      # _mm256_mul_pd
+        acc = [acc[l] + prod[l] for l in range(4)]    # _mm256_add_pd
+    tail = 0.0
+    for i in range(4 * chunks, n):
+        tail += a[i] * b[i]
+    return (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+
+
+def dot_f64_neon_model(a, b):
+    """neon::dot_f64 — two float64x2_t accumulators holding lanes (0,1)
+    and (2,3); vcvt exact, vmulq then vaddq (no vfmaq)."""
+    n = len(a)
+    chunks = n // 4
+    acc01 = [0.0, 0.0]
+    acc23 = [0.0, 0.0]
+    for c in range(chunks):
+        i = 4 * c
+        lo = [a[i] * b[i], a[i + 1] * b[i + 1]]           # vmulq_f64 low
+        hi = [a[i + 2] * b[i + 2], a[i + 3] * b[i + 3]]   # vmulq_f64 high
+        acc01 = [acc01[0] + lo[0], acc01[1] + lo[1]]      # vaddq_f64
+        acc23 = [acc23[0] + hi[0], acc23[1] + hi[1]]
+    tail = 0.0
+    for i in range(4 * chunks, n):
+        tail += a[i] * b[i]
+    return (acc01[0] + acc01[1]) + (acc23[0] + acc23[1]) + tail
+
+
+def sumsq_f64_vector_model(a, two_regs):
+    n = len(a)
+    chunks = n // 4
+    acc = [0.0, 0.0, 0.0, 0.0]
+    for c in range(chunks):
+        i = 4 * c
+        v = a[i:i + 4]
+        prod = [v[l] * v[l] for l in range(4)]
+        acc = [acc[l] + prod[l] for l in range(4)]
+    tail = 0.0
+    for i in range(4 * chunks, n):
+        tail += a[i] * a[i]
+    # two_regs (NEON) vs one 4-wide reg (AVX2): identical lane contents,
+    # identical reduction expression
+    return (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+
+
+def bits(x):
+    return struct.unpack("<Q", struct.pack("<d", x))[0]
+
+
+def check_lane_models():
+    rng = random.Random(22)
+    lens = [0, 1, 2, 3, 4, 5, 7, 8, 9, 63, 64, 257]
+    ok = True
+    detail = ""
+    for n in lens:
+        for _ in range(8):
+            a, b = rand_vec(rng, n), rand_vec(rng, n)
+            s = dot_f64_scalar(a, b)
+            for name, model in [("avx2", dot_f64_avx2_model(a, b)),
+                                ("neon", dot_f64_neon_model(a, b))]:
+                if bits(model) != bits(s):
+                    ok, detail = False, f"dot {name} n={n}: {model!r} != {s!r}"
+            ss = sumsq_f64_scalar(a)
+            for tr in (False, True):
+                if bits(sumsq_f64_vector_model(a, tr)) != bits(ss):
+                    ok, detail = False, f"sumsq two_regs={tr} n={n}"
+            # every index consumed exactly once by the lane partition
+            used = sorted(list(range(0, 4 * (n // 4))) + list(range(4 * (n // 4), n)))
+            if used != list(range(n)):
+                ok, detail = False, f"index coverage n={n}"
+    check("simd lane models bitwise == 4-lane chunked scalar (dot, sumsq)", ok, detail)
+
+
+# ---------------------------------------------------------------------------
+# 2–3. kernel.rs tiled matching walk + reference comparison
+
+
+def match_tiled(tokens, t, d, k, tile):
+    """kernel.rs::match_tokens_scratch_tiled, with sentinel norms: any
+    score reading an unfilled norm raises (the watermark proof)."""
+    te = t - (t % 2)
+    t2 = te // 2
+    k = max(1, min(k, max(t2, 1)))
+    norms = [None] * te          # sentinel: None == not yet filled
+    scores = [float("-inf")] * t2
+    best = [0] * t2
+    if t2 == 0:
+        return scores, best, norms
+    tile = max(tile, 1)
+    filled = 0
+    i0 = 0
+    while i0 < t2:
+        i1 = min(i0 + tile, t2)
+        need = 2 * min(i1 - 1 + (k - 1), t2 - 1) + 2
+        assert need <= te, f"watermark overrun: need={need} te={te}"
+        while filled < need:
+            row = tokens[filled * d:(filled + 1) * d]
+            norms[filled] = math.sqrt(sumsq_f64_scalar(row))
+            filled += 1
+        for i in range(i0, i1):
+            a = tokens[(2 * i) * d:(2 * i + 1) * d]
+            na = norms[2 * i]
+            assert na is not None, f"A-norm read before fill: i={i}"
+            lo = max(i - (k - 1), 0)
+            hi = min(i + k - 1, t2 - 1)
+            best_score = float("-inf")
+            best_j = 0
+            for j in range(lo, hi + 1):
+                nb = norms[2 * j + 1]
+                assert nb is not None, f"B-norm read before fill: i={i} j={j}"
+                b = tokens[(2 * j + 1) * d:(2 * j + 2) * d]
+                s = dot_f64_scalar(a, b) / (na * nb + 1e-8)
+                if s > best_score:
+                    best_score = s
+                    best_j = j
+            scores[i] = best_score
+            best[i] = best_j
+        i0 = i1
+    return scores, best, norms
+
+
+def match_reference(tokens, t, d, k):
+    """reference.rs matching: serial-index-order dot, chunked sumsq (the
+    PR 7 mirror), same band/tie-break semantics."""
+    te = t - (t % 2)
+    t2 = te // 2
+    k = max(1, min(k, max(t2, 1)))
+    scores = [float("-inf")] * t2
+    best = [0] * t2
+    for i in range(t2):
+        a = tokens[(2 * i) * d:(2 * i + 1) * d]
+        lo = max(i - (k - 1), 0)
+        hi = min(i + k - 1, t2 - 1)
+        for j in range(lo, hi + 1):
+            b = tokens[(2 * j + 1) * d:(2 * j + 2) * d]
+            dot = 0.0
+            for x, y in zip(a, b):
+                dot += x * y
+            s = dot / (math.sqrt(sumsq_f64_scalar(a)) * math.sqrt(sumsq_f64_scalar(b)) + 1e-8)
+            if s > scores[i]:
+                scores[i] = s
+                best[i] = j
+    return scores, best
+
+
+SHAPES = [(130, 7, 9), (127, 64, 16), (64, 257, 4), (33, 1, 40), (8, 3, 1),
+          (64, 8, 4), (97, 3, 16), (33, 1, 33), (128, 64, 1), (7, 2, 3), (1, 4, 1), (0, 4, 1)]
+TILES = [1, 2, 3, 5, 7, 16, 63, 64, 65, 4096]
+
+
+def check_tiled_walk():
+    rng = random.Random(7)
+    ok = True
+    detail = ""
+    for (t, d, k) in SHAPES:
+        tokens = rand_vec(rng, t * d)
+        s_stream, b_stream, n_stream = match_tiled(tokens, t, d, k, 10 ** 9)
+        for tile in TILES:
+            s_blk, b_blk, n_blk = match_tiled(tokens, t, d, k, tile)
+            if [bits(x) for x in s_blk] != [bits(x) for x in s_stream] or b_blk != b_stream:
+                ok, detail = False, f"t={t} d={d} k={k} tile={tile}"
+            if None in n_blk or [bits(x) for x in n_blk] != [bits(x) for x in n_stream]:
+                ok, detail = False, f"norms t={t} d={d} k={k} tile={tile}"
+    check("tiled walk bitwise == streaming walk; watermark never under-fills", ok, detail)
+
+    ok = True
+    detail = ""
+    for (t, d, k) in SHAPES:
+        tokens = rand_vec(rng, t * d)
+        s_k, b_k, n_k = match_tiled(tokens, t, d, k, 64)
+        s_r, b_r = match_reference(tokens, t, d, k)
+        if d < 4:
+            # chunked dot has no 4-chunks at d < 4: serial tail only, so
+            # kernel scores are bitwise the reference scores
+            if [bits(x) for x in s_k] != [bits(x) for x in s_r] or b_k != b_r:
+                ok, detail = False, f"d<4 bitwise t={t} d={d} k={k}"
+        else:
+            # norms stay bitwise-shared at every d (mirrored sumsq); the
+            # dots differ only in summation order, so matches agree up to
+            # near-ties — require score agreement within reassociation noise
+            for x, y in zip(s_k, s_r):
+                if abs(x - y) > 1e-12 * max(1.0, abs(x)):
+                    ok, detail = False, f"score drift t={t} d={d} k={k}: {x!r} vs {y!r}"
+    check("kernel == reference: bitwise at d<4, reassociation-only drift at d>=4", ok, detail)
+
+
+def check_selection():
+    rng = random.Random(9)
+    ok = True
+    detail = ""
+    for trial in range(200):
+        t2 = rng.randrange(1, 40)
+        # coarse scores force ties, exercising the tie-break
+        scores = [rng.randrange(0, 6) / 4.0 for _ in range(t2)]
+        r = rng.randrange(1, t2 + 1)
+        # kernel: total order (score desc, index asc), top r
+        kernel_sel = set(sorted(range(t2), key=lambda i: (-scores[i], i))[:r])
+        # reference: stable descending sort by score, first r
+        ref_sel = set(sorted(range(t2), key=lambda i: -scores[i])[:r])
+        if kernel_sel != ref_sel:
+            ok, detail = False, f"trial={trial} r={r} {scores}"
+    check("top-r total order selects the same set as stable descending sort", ok, detail)
+
+
+# ---------------------------------------------------------------------------
+# 4. batch.rs::chunk_lens
+
+
+def chunk_lens(b, n_slots):
+    n_chunks = min(n_slots, b)
+    base = b // n_chunks if n_chunks else 0
+    extra = b % n_chunks if n_chunks else 0
+    return [base + 1 if c < extra else base for c in range(n_chunks)]
+
+
+def check_splitter():
+    ok = True
+    detail = ""
+    for n_slots in range(1, 41):
+        for b in range(0, 201):
+            lens = chunk_lens(b, n_slots)
+            if sum(lens) != b or len(lens) != min(n_slots, b):
+                ok, detail = False, f"b={b} slots={n_slots} {lens}"
+            if b and (min(lens) < 1 or max(lens) - min(lens) > 1):
+                ok, detail = False, f"b={b} slots={n_slots} {lens}"
+    # the regression the PR fixes: ceil-div at b=9, slots=8 used 5 slots
+    old_style = -(-9 // 8)  # ceil
+    assert old_style == 2 and -(-9 // old_style) == 5
+    if chunk_lens(9, 8) != [2, 1, 1, 1, 1, 1, 1, 1]:
+        ok, detail = False, f"b=9 slots=8 -> {chunk_lens(9, 8)}"
+    check("chunk_lens: sums to b, min(slots,b) chunks, non-empty, max-min<=1", ok, detail)
+
+
+def check_matching_tile():
+    def matching_tile(d):
+        return min(max(32 * 1024 // (8 * max(d, 1)), 64), 4096)
+    pins = {1: 4096, 8: 512, 64: 64, 4096: 64, 0: 4096, 2: 2048, 16: 256}
+    bad = {d: (matching_tile(d), want) for d, want in pins.items() if matching_tile(d) != want}
+    check("matching_tile(d) clamp pins", not bad, str(bad))
+
+
+def main():
+    check_lane_models()
+    check_tiled_walk()
+    check_selection()
+    check_splitter()
+    check_matching_tile()
+    if FAILURES:
+        print(f"\n{len(FAILURES)} check(s) FAILED")
+        return 1
+    print("\nall crosschecks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

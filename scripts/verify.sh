@@ -25,7 +25,10 @@
 #  11. cargo bench --bench merging    (quick mode: acceptance cases only)
 #      asserts BENCH_merging.json reports speedup_batched >= MIN_SPEEDUP on
 #      the t=8192 d=64 k=16 case (pool-backed batched path), zero
-#      post-warmup thread spawns, and pool p50 <= thread::scope p50 at b=32.
+#      post-warmup thread spawns, and pool p50 <= thread::scope p50 at b=32;
+#      PR 7: also gates simd_vs_scalar >= MIN_SIMD_SPEEDUP (default 1.5)
+#      on the t=4096 d=64 case when a SIMD ISA is dispatched, with a loud
+#      WARN skip on scalar-only hosts.
 #  12. cargo bench --bench coordinator (quick) -> BENCH_serving.json;
 #      asserts staged (merge-while-execute) throughput beats the serial
 #      loop on the balanced row.
@@ -40,6 +43,7 @@ cd "$(dirname "$0")/../rust"
 
 MIN_SPEEDUP="${MIN_SPEEDUP:-3.0}"
 MIN_STREAM_RATIO="${MIN_STREAM_RATIO:-5.0}"
+MIN_SIMD_SPEEDUP="${MIN_SIMD_SPEEDUP:-1.5}"
 
 if ! command -v cargo >/dev/null 2>&1; then
     echo "ERROR: cargo not found on PATH — install a Rust toolchain (>= 1.70)." >&2
@@ -144,10 +148,11 @@ if [[ ! -f BENCH_streaming.json ]]; then
 fi
 
 if command -v python3 >/dev/null 2>&1; then
-    python3 - "$MIN_SPEEDUP" "$MIN_STREAM_RATIO" <<'EOF'
+    python3 - "$MIN_SPEEDUP" "$MIN_STREAM_RATIO" "$MIN_SIMD_SPEEDUP" <<'EOF'
 import json, sys
 min_speedup = float(sys.argv[1])
 min_stream_ratio = float(sys.argv[2])
+min_simd = float(sys.argv[3])
 
 report = json.load(open("BENCH_merging.json"))
 cases = [c for c in report["cases"] if c["t"] == 8192 and c["d"] == 64 and c["k"] == 16]
@@ -172,6 +177,29 @@ print(f"b=32 p50: pool={pool_p50:.3f}ms scope={scope_p50:.3f}ms (gated pool <= s
 # regression (re-introducing per-call spawns) shows up far above 5%.
 if pool_p50 > scope_p50 * 1.05:
     sys.exit("ERROR: pool-backed merge_batch lost to the thread::scope baseline at b=32")
+
+# SIMD dispatch gate (schema v4): the explicit-SIMD kernel must beat its
+# own forced-scalar path on the t=4096 d=64 acceptance shape — unless the
+# host has no SIMD path at all, in which case both timings are the same
+# code and the gate is meaningless.
+isa = report.get("isa", "unknown")
+simd_cases = [c for c in report["cases"] if c["t"] == 4096 and c["d"] == 64]
+if not simd_cases:
+    sys.exit("ERROR: acceptance case t=4096 d=64 missing from BENCH_merging.json")
+if isa == "scalar":
+    print("=" * 72)
+    print(f"WARN: kernel dispatched to the SCALAR path (isa={isa}, "
+          f"cpu_features={report.get('cpu_features', '?')}) —")
+    print(f"WARN: skipping the simd_vs_scalar >= {min_simd}x gate on this host.")
+    print("=" * 72)
+else:
+    x_simd = min(c["simd_vs_scalar"] for c in simd_cases)
+    print(f"simd dispatch (isa={isa}): simd_vs_scalar={x_simd:.2f}x at t=4096 d=64 "
+          f"(gated >= {min_simd}x)")
+    if x_simd < min_simd:
+        sys.exit(f"ERROR: explicit-SIMD kernel speedup fell below {min_simd}x vs forced scalar")
+    x_blk = min(c["blocked_vs_streaming"] for c in simd_cases)
+    print(f"cache blocking: blocked_vs_streaming={x_blk:.2f}x at t=4096 d=64 (trend, ungated)")
 print("OK: merging kernel gates passed")
 
 serving = json.load(open("BENCH_serving.json"))
