@@ -1,0 +1,120 @@
+//! Network-front benchmarks (DESIGN.md §12): the wire hot paths in
+//! isolation — frame encode/decode and the consistent-hash router — plus
+//! the end-to-end loopback throughput of the sharded server with an
+//! instant synthetic device, so the wire + routing + intake overhead is
+//! measurable apart from model execution.
+//!
+//! Expected shape: framing and routing are sub-microsecond per op (they
+//! sit on every request); loopback serving lands within a small factor of
+//! the in-process pipeline benches (`coordinator.rs`) — the gap *is* the
+//! wire cost.
+
+#![allow(unknown_lints)]
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use tomers::coordinator::{
+    default_host_merge, DecodeStep, FaultPolicy, MergePolicy, ReadyBatch, Variant, VariantMeta,
+};
+use tomers::net::{
+    parse_request, request_to_json, serve_net, FrameDecoder, NetClient, NetConfig, Request,
+    Response, ShardRouter, ShardSpec, DEFAULT_MAX_FRAME_BYTES,
+};
+use tomers::net::write_frame;
+use tomers::runtime::WorkerPool;
+use tomers::streaming::StreamingConfig;
+use tomers::util::bench;
+
+const M: usize = 32;
+const HORIZON: usize = 8;
+
+fn main() {
+    let quick = std::env::var("TOMERS_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    println!("== bench: net ==");
+
+    // frame encode: serialize + length-prefix one forecast request
+    let req = Request::Forecast { id: 42, context: (0..M).map(|i| i as f32 * 0.1).collect() };
+    let payload = request_to_json(&req).to_string();
+    let (mean, _) = bench(5, if quick { 200 } else { 2000 }, || {
+        let mut buf = Vec::with_capacity(payload.len() + 4);
+        write_frame(&mut buf, &payload, DEFAULT_MAX_FRAME_BYTES).unwrap();
+        std::hint::black_box(&buf);
+    });
+    println!("frame encode ({}B)         {:>10.2}us", payload.len(), mean * 1e6);
+
+    // frame decode + parse: the server's per-request read path
+    let mut framed = Vec::new();
+    write_frame(&mut framed, &payload, DEFAULT_MAX_FRAME_BYTES).unwrap();
+    let (mean, _) = bench(5, if quick { 200 } else { 2000 }, || {
+        let mut dec = FrameDecoder::new(DEFAULT_MAX_FRAME_BYTES);
+        dec.push(&framed).unwrap();
+        let p = dec.next().unwrap();
+        std::hint::black_box(parse_request(&p).unwrap());
+    });
+    println!("frame decode+parse          {:>10.2}us", mean * 1e6);
+
+    // router: shard_for over a 4-shard ring (binary search on 256 points)
+    let router = ShardRouter::new(4).unwrap();
+    let (mean, _) = bench(5, if quick { 50 } else { 500 }, || {
+        let mut acc = 0usize;
+        for id in 0..1000u64 {
+            acc += router.shard_for(id);
+        }
+        std::hint::black_box(acc);
+    });
+    println!("router.shard_for x1000      {:>10.2}us", mean * 1e6);
+
+    // end-to-end loopback: pipelined forecasts through 2 shards with an
+    // instant device — wire + routing + intake + batching overhead
+    let spec = ShardSpec {
+        policy: MergePolicy::fixed(Variant::fixed("v", 0)),
+        metas: BTreeMap::from([("v".to_string(), VariantMeta { capacity: 4, m: M })]),
+        merge: default_host_merge(),
+        prep_slots: 2,
+        stream_meta: VariantMeta { capacity: 4, m: 16 },
+        stream_cfg: StreamingConfig { min_new: 4, d: 1, ..Default::default() },
+        max_wait: Duration::from_millis(1),
+        max_queue: 4096,
+        faults: FaultPolicy::default(),
+    };
+    let handle = serve_net(
+        &NetConfig { shards: 2, ..NetConfig::default() },
+        &spec,
+        WorkerPool::global(),
+        |_| {
+            |ready: &mut ReadyBatch| -> anyhow::Result<Vec<Vec<f32>>> {
+                Ok(vec![vec![0.0; HORIZON]; ready.rows])
+            }
+        },
+        |_| {
+            |step: &mut DecodeStep| -> anyhow::Result<Vec<Vec<f32>>> {
+                Ok(vec![vec![0.0; HORIZON]; step.rows])
+            }
+        },
+    )
+    .expect("bench server");
+    let n: u64 = if quick { 400 } else { 2000 };
+    let mut c = NetClient::connect_retry(&handle.addr().to_string(), DEFAULT_MAX_FRAME_BYTES, 20)
+        .expect("loopback connect");
+    c.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    let t0 = std::time::Instant::now();
+    for i in 0..n {
+        let context: Vec<f32> = (0..M).map(|j| ((i as usize + j) % 7) as f32 * 0.1).collect();
+        c.send(&Request::Forecast { id: i, context }).unwrap();
+    }
+    let mut done = 0u64;
+    while done < n {
+        match c.recv().expect("liveness") {
+            Response::Forecast { .. } => done += 1,
+            other => panic!("unexpected response: {other:?}"),
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "loopback 2-shard serving    {:>10.1} req/s ({n} pipelined requests in {dt:.2}s)",
+        n as f64 / dt
+    );
+    drop(c);
+    handle.shutdown().expect("drain");
+}

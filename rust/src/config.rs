@@ -62,6 +62,7 @@ use crate::coordinator::policy::{MergePolicy, Variant};
 use crate::coordinator::{FaultPolicy, ServerConfig};
 use crate::json::Json;
 use crate::merging::{Accum, MergeMode, MergeSpec};
+use crate::net::NetConfig;
 use crate::streaming::{StreamPolicy, StreamingConfig};
 
 #[derive(Clone, Debug)]
@@ -83,12 +84,17 @@ pub struct ServeFileConfig {
     /// fault tolerance: retry/backoff, deadlines, quarantine budgets and
     /// delivery bounds (the `"faults"` block; defaults when omitted)
     pub faults: FaultPolicy,
+    /// sharded network serving front (the `"net"` block, DESIGN.md §12);
+    /// `None` = in-process serving only.  Consumed by `tomers serve-net`.
+    pub net: Option<NetConfig>,
 }
 
 /// Error unless `v` is a JSON object whose every key is in `allowed`
 /// (a non-object here would otherwise make every lookup silently fall
 /// back to its default).  `path` names the enclosing block in the error.
-fn reject_unknown_keys(v: &Json, path: &str, allowed: &[&str]) -> Result<()> {
+/// `pub(crate)` so the wire protocol (`net::protocol`) applies the same
+/// strictness discipline to every frame it parses.
+pub(crate) fn reject_unknown_keys(v: &Json, path: &str, allowed: &[&str]) -> Result<()> {
     let Json::Obj(map) = v else {
         bail!("{path} must be a JSON object — accepted keys: {allowed:?}");
     };
@@ -352,6 +358,31 @@ pub fn faults_from_json(v: &Json, path: &str) -> Result<FaultPolicy> {
     Ok(policy)
 }
 
+/// Parse a `"net"` JSON block into a validated [`NetConfig`] — the
+/// sharded network front (DESIGN.md §12).  Same strictness as the other
+/// blocks; every field defaults from [`NetConfig::default`].
+pub fn net_from_json(v: &Json, path: &str) -> Result<NetConfig> {
+    reject_unknown_keys(v, path, &["shards", "addr", "max_conns", "max_frame_bytes"])?;
+    let defaults = NetConfig::default();
+    let get_usize = |key: &str, dflt: usize| -> Result<usize> {
+        match v.get(key) {
+            Some(x) => x.as_usize().with_context(|| format!("{path}: bad {key}")),
+            None => Ok(dflt),
+        }
+    };
+    let cfg = NetConfig {
+        shards: get_usize("shards", defaults.shards)?,
+        addr: match v.get("addr") {
+            Some(a) => a.as_str()?.to_string(),
+            None => defaults.addr,
+        },
+        max_conns: get_usize("max_conns", defaults.max_conns)?,
+        max_frame_bytes: get_usize("max_frame_bytes", defaults.max_frame_bytes)?,
+    };
+    cfg.validate().with_context(|| format!("invalid {path}"))?;
+    Ok(cfg)
+}
+
 impl ServeFileConfig {
     pub fn load(path: &Path) -> Result<ServeFileConfig> {
         let text = std::fs::read_to_string(path)
@@ -373,6 +404,7 @@ impl ServeFileConfig {
                 "streaming",
                 "spec_source",
                 "faults",
+                "net",
             ],
         )?;
         let artifact_dir = PathBuf::from(
@@ -480,6 +512,8 @@ impl ServeFileConfig {
             .transpose()?
             .unwrap_or_default();
 
+        let net = v.get("net").map(|n| net_from_json(n, "\"net\"")).transpose()?;
+
         // Which source wins when a loaded artifact's manifest carries a
         // merge_spec: the manifest (default — the artifact is the ground
         // truth for what was compiled into it) or the config declaration.
@@ -504,6 +538,7 @@ impl ServeFileConfig {
             streaming,
             prefer_manifest_spec,
             faults,
+            net,
         })
     }
 
@@ -529,6 +564,8 @@ impl ServeFileConfig {
     /// merge-spec source wins when a loaded manifest carries one.  The
     /// `"faults"` block configures fault tolerance (DESIGN.md §10) —
     /// shown here with its defaults plus an explicit request deadline.
+    /// The `"net"` block configures the sharded network front
+    /// (`tomers serve-net`, DESIGN.md §12); in-process serving ignores it.
     pub fn example() -> &'static str {
         r#"{
  "artifact_dir": "artifacts",
@@ -565,6 +602,12 @@ impl ServeFileConfig {
   "variant_fault_budget": 5,
   "outbox_cap": 16,
   "forecast_ttl_ms": 60000
+ },
+ "net": {
+  "shards": 2,
+  "addr": "127.0.0.1:7070",
+  "max_conns": 64,
+  "max_frame_bytes": 1048576
  }
 }
 "#
@@ -600,6 +643,40 @@ mod tests {
         assert_eq!(cfg.faults.step_deadline, None, "no step deadline in the example");
         assert_eq!(cfg.faults.outbox_cap, 16);
         assert_eq!(cfg.faults.forecast_ttl, Duration::from_secs(60));
+        let net = cfg.net.expect("example carries a net block");
+        assert_eq!(net.shards, 2);
+        assert_eq!(net.addr, "127.0.0.1:7070");
+        assert_eq!(net.max_conns, 64);
+        assert_eq!(net.max_frame_bytes, 1 << 20);
+    }
+
+    #[test]
+    fn parses_net_block() {
+        let base = r#"{"policy": {"variants": [{"name": "a", "r": 0}]}"#;
+        // omitted block: no network front
+        let cfg = ServeFileConfig::parse(&format!("{base}}}")).unwrap();
+        assert!(cfg.net.is_none());
+        // partial block: named keys override, the rest default
+        let cfg =
+            ServeFileConfig::parse(&format!(r#"{base}, "net": {{"shards": 4}}}}"#)).unwrap();
+        let net = cfg.net.unwrap();
+        assert_eq!(net.shards, 4);
+        assert_eq!(net.addr, NetConfig::default().addr);
+        assert_eq!(net.max_frame_bytes, NetConfig::default().max_frame_bytes);
+        // unknown key rejected, degenerate values rejected
+        let err = ServeFileConfig::parse(&format!(r#"{base}, "net": {{"shard": 4}}}}"#))
+            .unwrap_err();
+        assert!(err.to_string().contains("shard"), "{err}");
+        for bad in [
+            r#"{"shards": 0}"#,
+            r#"{"max_conns": 0}"#,
+            r#"{"max_frame_bytes": 0}"#,
+            r#"{"addr": ""}"#,
+        ] {
+            let err = ServeFileConfig::parse(&format!(r#"{base}, "net": {bad}}}"#))
+                .unwrap_err();
+            assert!(err.to_string().contains("net"), "{bad}: {err}");
+        }
     }
 
     #[test]

@@ -33,6 +33,11 @@ pub struct DeliveryStats {
     pub expired_undelivered: u64,
     /// unacked forecasts dropped because the outbox was full
     pub dropped_overflow: u64,
+    /// forecasts still queued at snapshot time — closes the ledger:
+    /// `enqueued == acked + expired_undelivered + dropped_overflow +
+    /// pending` holds for every snapshot, and (being an identity, not a
+    /// rate) still holds after summing snapshots across shards
+    pub pending: u64,
 }
 
 #[derive(Debug)]
@@ -163,8 +168,10 @@ impl DeliveryMonitor {
         self.cap
     }
 
+    /// Counter snapshot; `pending` is computed at snapshot time so the
+    /// ledger identity (see [`DeliveryStats::pending`]) always balances.
     pub fn stats(&self) -> DeliveryStats {
-        self.stats
+        DeliveryStats { pending: self.total_pending() as u64, ..self.stats }
     }
 }
 
@@ -190,6 +197,12 @@ mod tests {
         assert_eq!(m.pending(2), 1);
         let s = m.stats();
         assert_eq!((s.enqueued, s.acked, s.redelivered), (3, 2, 0));
+        assert_eq!(s.pending, 1, "session 2's forecast is still queued");
+        assert_eq!(
+            s.enqueued,
+            s.acked + s.expired_undelivered + s.dropped_overflow + s.pending,
+            "ledger identity"
+        );
     }
 
     #[test]

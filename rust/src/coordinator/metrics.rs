@@ -255,8 +255,13 @@ impl Metrics {
         if let Some(d) = &self.delivery {
             s.push_str(&format!(
                 "delivery: enqueued={} acked={} redelivered={} expired_undelivered={} \
-                 dropped_overflow={}\n",
-                d.enqueued, d.acked, d.redelivered, d.expired_undelivered, d.dropped_overflow,
+                 dropped_overflow={} pending={}\n",
+                d.enqueued,
+                d.acked,
+                d.redelivered,
+                d.expired_undelivered,
+                d.dropped_overflow,
+                d.pending,
             ));
         }
         // Which ISA the merge kernel dispatched to (DESIGN.md §11) — the
@@ -265,6 +270,90 @@ impl Metrics {
         s.push_str(&format!("kernel: {}\n", crate::merging::simd::dispatch_report()));
         s
     }
+}
+
+/// Sum two fault-counter snapshots (for the cross-shard roll-up).
+fn sum_faults(a: FaultCounters, b: FaultCounters) -> FaultCounters {
+    FaultCounters {
+        exec_retries: a.exec_retries + b.exec_retries,
+        exec_faults: a.exec_faults + b.exec_faults,
+        step_retries: a.step_retries + b.step_retries,
+        step_faults: a.step_faults + b.step_faults,
+        timeouts: a.timeouts + b.timeouts,
+        failed: a.failed + b.failed,
+        downgrades: a.downgrades + b.downgrades,
+    }
+}
+
+/// Sum two delivery-ledger snapshots.  Every field is either a monotone
+/// count or (`pending`) an instantaneous queue depth, so summation keeps
+/// the per-shard ledger identity
+/// `enqueued == acked + expired_undelivered + dropped_overflow + pending`
+/// intact — pinned by `merged_ledger_identity_survives_summation`.
+pub fn sum_delivery(a: DeliveryStats, b: DeliveryStats) -> DeliveryStats {
+    DeliveryStats {
+        enqueued: a.enqueued + b.enqueued,
+        acked: a.acked + b.acked,
+        redelivered: a.redelivered + b.redelivered,
+        expired_undelivered: a.expired_undelivered + b.expired_undelivered,
+        dropped_overflow: a.dropped_overflow + b.dropped_overflow,
+        pending: a.pending + b.pending,
+    }
+}
+
+/// Merge per-shard metrics into one process-level report (DESIGN.md §12):
+/// a summary line with cross-shard totals, summed fault and delivery
+/// counters (ledger identity preserved — see [`sum_delivery`]), then each
+/// shard's full [`Metrics::report`] indented under a `shard=<i>` header.
+/// Percentiles are deliberately **not** merged: quantiles don't sum, so
+/// they stay per-shard where they are meaningful.
+pub fn merged_report(shards: &[&Metrics]) -> String {
+    let served: usize = shards.iter().map(|m| m.served()).sum();
+    let rejected: usize = shards.iter().map(|m| m.rejected()).sum();
+    let decode_steps: usize = shards.iter().map(|m| m.decode_steps()).sum();
+    let decode_rows: usize = shards.iter().map(|m| m.decode_rows()).sum();
+    let mut s = format!(
+        "process: shards={} served={served} rejected={rejected} decode_steps={decode_steps} \
+         decode_rows={decode_rows}\n",
+        shards.len(),
+    );
+    let faults = shards
+        .iter()
+        .map(|m| m.faults())
+        .fold(FaultCounters::default(), sum_faults);
+    if faults != FaultCounters::default() {
+        s.push_str(&format!(
+            "faults: exec_retries={} exec_faults={} step_retries={} step_faults={} \
+             timeouts={} failed={} downgrades={}\n",
+            faults.exec_retries,
+            faults.exec_faults,
+            faults.step_retries,
+            faults.step_faults,
+            faults.timeouts,
+            faults.failed,
+            faults.downgrades,
+        ));
+    }
+    if shards.iter().any(|m| m.delivery().is_some()) {
+        let d = shards
+            .iter()
+            .filter_map(|m| m.delivery())
+            .fold(DeliveryStats::default(), sum_delivery);
+        s.push_str(&format!(
+            "delivery: enqueued={} acked={} redelivered={} expired_undelivered={} \
+             dropped_overflow={} pending={}\n",
+            d.enqueued, d.acked, d.redelivered, d.expired_undelivered, d.dropped_overflow, d.pending,
+        ));
+    }
+    for (i, m) in shards.iter().enumerate() {
+        s.push_str(&format!("shard={i}\n"));
+        for line in m.report().lines() {
+            s.push_str("  ");
+            s.push_str(line);
+            s.push('\n');
+        }
+    }
+    s
 }
 
 #[cfg(test)]
@@ -335,6 +424,7 @@ mod tests {
             redelivered: 1,
             expired_undelivered: 2,
             dropped_overflow: 0,
+            pending: 2,
         });
         let report = m.report();
         assert!(report.contains("faults: exec_retries=2"));
@@ -342,6 +432,66 @@ mod tests {
         assert!(report.contains("downgrade v2->v1: 2"));
         assert!(report.contains("delivery: enqueued=10"));
         assert!(report.contains("expired_undelivered=2"));
+        assert!(report.contains("pending=2"));
         assert_eq!(m.delivery().unwrap().acked, 6);
+    }
+
+    fn balanced(
+        enqueued: u64,
+        acked: u64,
+        redelivered: u64,
+        expired: u64,
+        dropped: u64,
+    ) -> DeliveryStats {
+        let stats = DeliveryStats {
+            enqueued,
+            acked,
+            redelivered,
+            expired_undelivered: expired,
+            dropped_overflow: dropped,
+            pending: enqueued - acked - expired - dropped,
+        };
+        assert_eq!(
+            stats.enqueued,
+            stats.acked + stats.expired_undelivered + stats.dropped_overflow + stats.pending,
+            "test fixture must balance"
+        );
+        stats
+    }
+
+    /// The satellite contract for the cross-shard roll-up: summing
+    /// per-shard ledgers (each individually balanced) yields a ledger
+    /// that still satisfies
+    /// `enqueued == acked + expired_undelivered + dropped_overflow + pending`.
+    #[test]
+    fn merged_ledger_identity_survives_summation() {
+        let mut a = Metrics::new();
+        a.record_batch("v1", 2, &[0.010, 0.011]);
+        a.set_delivery(balanced(10, 4, 1, 2, 1));
+        let mut b = Metrics::new();
+        b.record_batch("v2", 1, &[0.020]);
+        b.record_rejected();
+        b.record_failed(1);
+        b.set_delivery(balanced(7, 7, 0, 0, 0));
+        let c = Metrics::new(); // idle shard: no delivery snapshot at all
+        let merged = sum_delivery(a.delivery().unwrap(), b.delivery().unwrap());
+        assert_eq!(
+            merged.enqueued,
+            merged.acked + merged.expired_undelivered + merged.dropped_overflow + merged.pending,
+            "ledger identity must survive summation: {merged:?}"
+        );
+        assert_eq!((merged.enqueued, merged.acked, merged.pending), (17, 11, 3));
+        let report = merged_report(&[&a, &b, &c]);
+        assert!(report.contains("process: shards=3 served=3 rejected=1"), "{report}");
+        assert!(report.contains("delivery: enqueued=17"), "{report}");
+        assert!(report.contains("pending=3"), "{report}");
+        assert!(report.contains("faults: ") && report.contains("failed=1"), "{report}");
+        for i in 0..3 {
+            assert!(report.contains(&format!("shard={i}\n")), "{report}");
+        }
+        // per-shard sections are indented copies of each shard's report
+        assert!(report.contains("  served=2 "), "{report}");
+        assert!(report.contains("  served=1 "), "{report}");
+        assert!(report.contains("  served=0 "), "{report}");
     }
 }

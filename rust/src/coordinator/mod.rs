@@ -43,6 +43,12 @@
 //! * `delivery` — per-session bounded outboxes with ack/redelivery/TTL
 //!   accounting for stream forecasts, replacing the fire-and-forget
 //!   forecast channel.
+//!
+//! The network front (`crate::net`, DESIGN.md §12) stacks on top of this
+//! layer: each shard of `tomers serve-net` runs its own
+//! `serve_loop::run_serve_stages` instance (own device thread, session
+//! table, `DeliveryMonitor`, bounded intake), and per-shard [`Metrics`]
+//! roll up through [`metrics::merged_report`].
 
 pub mod batcher;
 pub mod delivery;
@@ -58,7 +64,7 @@ pub mod stream;
 pub use batcher::{drain_ready, BatcherConfig, DynamicBatcher};
 pub use delivery::{DeliveryMonitor, DeliveryStats};
 pub use faults::{call_with_retry, FaultContext, FaultPlan, FaultPolicy, FaultTracker};
-pub use metrics::{FaultCounters, Metrics};
+pub use metrics::{merged_report, sum_delivery, FaultCounters, Metrics};
 pub use pipeline::{default_host_merge, HostPrep, PrepJob, ReadyBatch, VariantMeta};
 pub use policy::{
     EntropyCache, MergePolicy, PolicyDecision, SpecResolution, SpecSource, Variant,

@@ -11,6 +11,9 @@
 //!   worker pool), training driver, evaluation, benchmark harness, and
 //!   the substrates (signal processing, synthetic datasets, cost model,
 //!   Rust merging reference).
+//! * L4 (`net`, DESIGN.md §12): the sharded TCP serving front — wire
+//!   framing + protocol, consistent-hash shard router, and N independent
+//!   dual serve loops behind one acceptor.
 //! * L2/L1 live in `python/compile/` and arrive here as HLO-text
 //!   artifacts + manifests + weights (`make artifacts`).
 
@@ -34,6 +37,7 @@ pub mod data;
 pub mod eval;
 pub mod json;
 pub mod merging;
+pub mod net;
 pub mod runtime;
 pub mod signal;
 pub mod streaming;

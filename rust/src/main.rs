@@ -12,6 +12,15 @@
 //!                                 loop (DESIGN.md §10): seeded device
 //!                                 faults, terminal-outcome and delivery
 //!                                 accounting checked at exit (PJRT-free)
+//!   serve-net [--shards N]        sharded TCP serving front (DESIGN.md
+//!                                 §12): N independent dual serve loops
+//!                                 behind a consistent-hash router and a
+//!                                 length-prefixed JSON wire (PJRT-free —
+//!                                 synthetic per-shard devices)
+//!   client   --addr HOST:PORT     loopback driver for serve-net: pipelines
+//!                                 forecasts + stream sessions over the
+//!                                 wire and checks the liveness, routing
+//!                                 and delivery-ledger invariants
 //!   bench    <experiment>         regenerate a paper table/figure (or `all`)
 //!
 //! Offline build: argument parsing is hand-rolled (no clap in the vendored
@@ -89,6 +98,18 @@ USAGE:
                    (deterministic fault injection over the dual serving
                     loop; exits non-zero if any request fails to reach a
                     terminal outcome or delivery accounting is off)
+  tomers serve-net [--shards N] [--addr HOST:PORT] [--max-conns N]
+                   [--max-frame-bytes N] [--max-queue N] [--fault-rate R]
+                   [--seed N] [--exit-after N] [--config serve.json]
+                   (sharded TCP front over N dual serve loops; --exit-after
+                    drains after N connections close, 0 = serve forever;
+                    a "net" config block sets the same knobs)
+  tomers client --addr HOST:PORT [--requests N] [--sessions N] [--rounds N]
+                [--shards N]
+                (serve-net loopback driver; exits non-zero unless every
+                 request reaches a terminal outcome, sessions stay pinned
+                 to the shard the client's own router predicts, and the
+                 summed delivery ledger balances)
   tomers bench <table1|fig2|table2|table3|table4|table5|table8|fig4|fig5|fig6|fig7|fig8|fig9|fig15|fig16|fig19|ablation_k|deconly|ablation_bound|all> [--quick] [--dir artifacts]
 
 Datasets: etth1 ettm1 weather electricity traffic (synthetic, DESIGN.md §7)
@@ -145,6 +166,8 @@ fn run() -> Result<()> {
         }
         Some("stream") => cmd_stream(&args),
         Some("serve-sim") => cmd_serve_sim(&args),
+        Some("serve-net") => cmd_serve_net(&args),
+        Some("client") => cmd_client(&args),
         Some("bench") => {
             let which = args.positional.get(1).context("missing experiment id")?.clone();
             let ctx = BenchCtx::new(&dir, args.has("quick"))?;
@@ -524,6 +547,283 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     let mut mx = lock(&metrics);
     mx.set_delivery(st);
     println!("{}", mx.report());
+    Ok(())
+}
+
+/// `tomers serve-net` — the sharded TCP serving front (DESIGN.md §12):
+/// `--shards N` independent dual serve loops behind one acceptor, each
+/// with its own synthetic device pair gated by a per-shard seeded
+/// [`FaultPlan`] (PJRT-free, so the offline build's loopback smoke gate
+/// in `scripts/verify.sh` can drive it).  The serving shape mirrors
+/// `serve-sim`, so the two commands exercise the same stages — one
+/// in-process, one over the wire.
+fn cmd_serve_net(args: &Args) -> Result<()> {
+    use std::collections::BTreeMap;
+    use std::sync::{Arc, Mutex};
+    use std::time::Duration;
+    use tomers::coordinator::{
+        default_host_merge, policy::Variant, DecodeStep, FaultPlan, FaultPolicy, MergePolicy,
+        ReadyBatch, VariantMeta,
+    };
+    use tomers::net::{serve_net, NetConfig, ShardSpec};
+    use tomers::streaming::StreamingConfig;
+
+    // config-file "net" block first; CLI flags override field by field
+    let mut net = match args.flag("config") {
+        Some(path) => tomers::config::ServeFileConfig::load(std::path::Path::new(path))?
+            .net
+            .unwrap_or_default(),
+        None => NetConfig::default(),
+    };
+    if let Some(s) = args.flag("shards") {
+        net.shards = s.parse().context("--shards")?;
+    }
+    if let Some(a) = args.flag("addr") {
+        net.addr = a.to_string();
+    }
+    if let Some(c) = args.flag("max-conns") {
+        net.max_conns = c.parse().context("--max-conns")?;
+    }
+    if let Some(b) = args.flag("max-frame-bytes") {
+        net.max_frame_bytes = b.parse().context("--max-frame-bytes")?;
+    }
+    net.validate()?;
+    let fault_rate: f64 = args.flag("fault-rate").unwrap_or("0.0").parse()?;
+    ensure!((0.0..=1.0).contains(&fault_rate), "--fault-rate must be within [0, 1]");
+    let seed: u64 = args.flag("seed").unwrap_or("7").parse()?;
+    let exit_after: usize = args.flag("exit-after").unwrap_or("0").parse()?;
+    let max_queue: usize = args.flag("max-queue").unwrap_or("256").parse()?;
+    ensure!(max_queue >= 1, "--max-queue must be >= 1");
+
+    // serve-sim's serving shape: one variant, sim-speed fault policy, a
+    // small outbox so overflow accounting is exercised at default scale
+    let faults = FaultPolicy {
+        backoff_base: Duration::from_micros(200),
+        backoff_max: Duration::from_millis(2),
+        request_deadline: Some(Duration::from_secs(30)),
+        step_deadline: Some(Duration::from_millis(100)),
+        outbox_cap: 4,
+        ..FaultPolicy::default()
+    };
+    let (capacity, m) = (4usize, 32usize);
+    let stream_cfg = StreamingConfig { min_new: 4, d: 1, ..Default::default() };
+    let stream_meta = VariantMeta { capacity: 4, m: 16 };
+    let horizon = 8usize;
+    let row = stream_meta.m * stream_cfg.d;
+    let spec = ShardSpec {
+        policy: MergePolicy::fixed(Variant::fixed("v", 0)),
+        metas: BTreeMap::from([("v".to_string(), VariantMeta { capacity, m })]),
+        merge: default_host_merge(),
+        prep_slots: 2,
+        stream_meta,
+        stream_cfg,
+        max_wait: Duration::from_millis(5),
+        max_queue,
+        faults,
+    };
+
+    let handle = serve_net(
+        &net,
+        &spec,
+        tomers::runtime::WorkerPool::global(),
+        |i| {
+            // per-shard seeds: shards fault independently but reproducibly
+            let plan =
+                Arc::new(Mutex::new(FaultPlan::new(seed.wrapping_add(i as u64), fault_rate)));
+            move |ready: &mut ReadyBatch| -> Result<Vec<Vec<f32>>> {
+                FaultPlan::gate(&plan)?;
+                Ok((0..ready.rows)
+                    .map(|r| vec![ready.slab[(r + 1) * m - 1]; horizon])
+                    .collect())
+            }
+        },
+        |i| {
+            let plan = Arc::new(Mutex::new(FaultPlan::new(
+                seed.wrapping_add(0x9E37_79B9).wrapping_add(i as u64),
+                fault_rate,
+            )));
+            move |step: &mut DecodeStep| -> Result<Vec<Vec<f32>>> {
+                FaultPlan::gate(&plan)?;
+                Ok((0..step.rows).map(|r| vec![step.slab[(r + 1) * row - 1]; horizon]).collect())
+            }
+        },
+    )?;
+    println!(
+        "serve-net: listening on {} shards={} fault_rate={fault_rate} seed={seed}",
+        handle.addr(),
+        net.shards
+    );
+    if exit_after == 0 {
+        println!("serve-net: serving until killed (--exit-after 0)");
+        loop {
+            std::thread::sleep(Duration::from_secs(1));
+        }
+    }
+    while handle.connections_closed() < exit_after {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let report = handle.shutdown()?;
+    println!("serve-net: drained after {exit_after} connection(s)");
+    print!("{report}");
+    Ok(())
+}
+
+/// `tomers client` — loopback driver for `serve-net`: pipelines batch
+/// forecasts and stream-session appends over one connection, then checks
+/// the wire-level invariants the in-process `serve-sim` checks locally —
+/// every forecast reaches exactly one terminal outcome, sessions stay
+/// pinned to the shard the client's own [`ShardRouter`] predicts, and the
+/// summed delivery ledger balances.  Exits non-zero on any violation
+/// (`scripts/verify.sh` greps the two gate lines).
+fn cmd_client(args: &Args) -> Result<()> {
+    use std::collections::BTreeMap;
+    use std::time::Duration;
+    use tomers::coordinator::ForecastOutcome;
+    use tomers::net::{NetClient, Request, Response, ShardRouter, DEFAULT_MAX_FRAME_BYTES};
+
+    let addr = args.flag("addr").context("--addr HOST:PORT is required (see serve-net)")?;
+    let requests: usize = args.flag("requests").unwrap_or("200").parse()?;
+    let sessions: u64 = args.flag("sessions").unwrap_or("20").parse()?;
+    let rounds: usize = args.flag("rounds").unwrap_or("4").parse()?;
+    let shards: usize = args.flag("shards").unwrap_or("2").parse()?;
+    ensure!(requests >= 1 && sessions >= 1 && rounds >= 1, "--requests/--sessions/--rounds >= 1");
+    let router = ShardRouter::new(shards)?; // must mirror the server's
+    let m = 32usize; // context length of serve-net's synthetic variant
+
+    let mut c = NetClient::connect_retry(addr, DEFAULT_MAX_FRAME_BYTES, 40)?;
+    c.set_timeout(Some(Duration::from_secs(10)))?;
+
+    // pipeline everything: forecasts first, then the stream appends —
+    // responses come back in server order, tallied by type below
+    let base = 10_000u64; // keep forecast ids and session ids disjoint
+    for i in 0..requests as u64 {
+        let context: Vec<f32> = (0..m).map(|j| ((i as usize + j) % 7) as f32 * 0.1).collect();
+        c.send(&Request::Forecast { id: base + i, context })?;
+    }
+    let appends = sessions as usize * rounds;
+    for round in 0..rounds {
+        for s in 0..sessions {
+            let points: Vec<f32> =
+                (0..4).map(|j| ((round * 4 + j) as f32 * 0.05).sin()).collect();
+            c.send(&Request::Append { session: s, points })?;
+        }
+    }
+
+    // drain until every pipelined request is answered; a read timeout
+    // means the server broke the liveness contract
+    let (mut delivered, mut timeouts, mut failed) = (0usize, 0usize, 0usize);
+    let mut appended = 0usize;
+    let mut append_errors = 0usize;
+    let mut per_shard: Vec<usize> = vec![0; shards];
+    let mut session_shard: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut forecast_seen = 0usize;
+    let mut append_seen = 0usize;
+    let mut drain_error = None;
+    while forecast_seen < requests || append_seen < appends {
+        let resp = match c.recv() {
+            Ok(r) => r,
+            Err(e) => {
+                drain_error = Some(e);
+                break;
+            }
+        };
+        match resp {
+            Response::Forecast { id, outcome, shard, .. } => {
+                forecast_seen += 1;
+                ensure!(shard == router.shard_for(id), "forecast {id} routed off-ring");
+                per_shard[shard] += 1;
+                match outcome {
+                    ForecastOutcome::Delivered => delivered += 1,
+                    ForecastOutcome::DeadlineExceeded => timeouts += 1,
+                    ForecastOutcome::Failed(_) => failed += 1,
+                }
+            }
+            Response::Appended { session, shard } => {
+                append_seen += 1;
+                appended += 1;
+                ensure!(shard == router.shard_for(session), "session {session} routed off-ring");
+                // pinning: every append of a session must land on one shard
+                let prev = session_shard.entry(session).or_insert(shard);
+                ensure!(*prev == shard, "session {session} moved shards: {prev} -> {shard}");
+            }
+            Response::Error { context, reason } => {
+                // stream backpressure surfaces here; anything else is fatal
+                ensure!(
+                    context == "append" && reason.contains("backpressure"),
+                    "unexpected error frame: {context}: {reason}"
+                );
+                append_seen += 1;
+                append_errors += 1;
+            }
+            other => bail!("unexpected response while draining: {other:?}"),
+        }
+    }
+    let non_terminal = requests - forecast_seen;
+    println!(
+        "batch: delivered={delivered} timeouts={timeouts} failed={failed} \
+         non_terminal={non_terminal}"
+    );
+    println!("stream: appended={appended} backpressure_errors={append_errors}");
+    if let Some(e) = drain_error {
+        return Err(e.context(format!(
+            "drain stalled with {non_terminal} forecast(s) and {} append(s) unanswered",
+            appends - append_seen
+        )));
+    }
+    ensure!(non_terminal == 0, "liveness violated: {non_terminal} request(s) never answered");
+    let shard_line = per_shard
+        .iter()
+        .enumerate()
+        .map(|(i, n)| format!("shard{i}={n}"))
+        .collect::<Vec<_>>()
+        .join(" ");
+    ensure!(
+        per_shard.iter().sum::<usize>() == requests,
+        "per-shard forecast counts must sum to the total"
+    );
+    println!("routing: {shard_line} total={requests}");
+
+    // give in-flight decode steps a beat to land in the outboxes, then
+    // collect + ack every session (strictly synchronous exchanges now —
+    // nothing else is in flight on this connection)
+    std::thread::sleep(Duration::from_millis(200));
+    let mut collected = 0usize;
+    for s in 0..sessions {
+        let (shard, entries) = match c.call(&Request::Collect { session: s })? {
+            Response::Collected { session, shard, entries } => {
+                ensure!(session == s, "collect answered for the wrong session");
+                (shard, entries)
+            }
+            other => bail!("expected a collected response, got {other:?}"),
+        };
+        ensure!(shard == router.shard_for(s), "collect for session {s} routed off-ring");
+        ensure!(
+            entries.windows(2).all(|w| w[0].0 < w[1].0),
+            "session {s}: forecast sequence order violated"
+        );
+        collected += entries.len();
+        if let Some(&(last, _)) = entries.last() {
+            match c.call(&Request::Ack { session: s, upto: last })? {
+                Response::Acked { session, .. } => {
+                    ensure!(session == s, "ack answered for the wrong session")
+                }
+                other => bail!("expected an acked response, got {other:?}"),
+            }
+        }
+    }
+    println!("stream: collected={collected}");
+
+    // the summed per-shard ledger must balance exactly (DESIGN.md §11)
+    let (text, d) = match c.call(&Request::Report)? {
+        Response::Report { text, delivery } => (text, delivery),
+        other => bail!("expected a report response, got {other:?}"),
+    };
+    ensure!(
+        d.enqueued == d.acked + d.expired_undelivered + d.dropped_overflow + d.pending,
+        "delivery ledger must balance: {d:?}"
+    );
+    println!("delivery accounting consistent");
+    print!("{text}");
     Ok(())
 }
 

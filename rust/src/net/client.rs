@@ -1,0 +1,97 @@
+//! Blocking wire client: what `tomers client` and the loopback tests
+//! drive the sharded front with.
+//!
+//! One [`NetClient`] wraps one TCP connection.  Requests are written as
+//! frames ([`super::frame`]); responses are decoded as they arrive, in
+//! server order — which is **not** request order once forecasts are in
+//! flight (terminal forecast responses land whenever their batch
+//! executes, interleaved with the synchronous replies).  Callers that
+//! pipeline therefore tally responses by type/id rather than zipping them
+//! against requests.
+
+use std::io::Read;
+use std::net::TcpStream;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::frame::{write_frame, FrameDecoder};
+use super::protocol::{parse_response, request_to_json, Request, Response};
+
+/// A blocking connection to a `serve-net` front.
+pub struct NetClient {
+    stream: TcpStream,
+    dec: FrameDecoder,
+    max_frame_bytes: usize,
+}
+
+impl NetClient {
+    /// Connect once.
+    pub fn connect(addr: &str, max_frame_bytes: usize) -> Result<NetClient> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        Ok(NetClient { stream, dec: FrameDecoder::new(max_frame_bytes), max_frame_bytes })
+    }
+
+    /// Connect with bounded retries — the smoke gate starts the client
+    /// while the server is still binding its listener.
+    pub fn connect_retry(addr: &str, max_frame_bytes: usize, attempts: usize) -> Result<NetClient> {
+        let mut last = None;
+        for i in 0..attempts.max(1) {
+            match NetClient::connect(addr, max_frame_bytes) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    last = Some(e);
+                    if i + 1 < attempts {
+                        thread::sleep(Duration::from_millis(50 << i.min(4)));
+                    }
+                }
+            }
+        }
+        Err(last.expect("at least one attempt").context(format!(
+            "connecting to {addr} ({attempts} attempts)"
+        )))
+    }
+
+    /// Bound how long [`recv`](Self::recv) blocks waiting for bytes
+    /// (`None` = forever).
+    pub fn set_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        self.stream.set_read_timeout(timeout).context("setting read timeout")
+    }
+
+    /// Write one request frame.
+    pub fn send(&mut self, req: &Request) -> Result<()> {
+        let payload = request_to_json(req).to_string();
+        write_frame(&mut self.stream, &payload, self.max_frame_bytes)
+            .context("writing request frame")
+    }
+
+    /// Block until the next response frame (server order, not request
+    /// order — see the module docs).
+    pub fn recv(&mut self) -> Result<Response> {
+        loop {
+            if let Some(payload) = self.dec.next() {
+                return parse_response(&payload);
+            }
+            let mut buf = [0u8; 4096];
+            let n = self.stream.read(&mut buf).context("reading response frame")?;
+            if n == 0 {
+                if self.dec.mid_frame() {
+                    bail!("server closed the connection mid-frame");
+                }
+                bail!("server closed the connection");
+            }
+            self.dec.push(&buf[..n])?;
+        }
+    }
+
+    /// `send` + `recv` for strictly synchronous exchanges (collect, ack,
+    /// report).  Only valid when no forecast responses are in flight on
+    /// this connection — an in-flight terminal response would be returned
+    /// here instead.
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        self.send(req)?;
+        self.recv()
+    }
+}

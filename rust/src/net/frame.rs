@@ -1,0 +1,265 @@
+//! Wire framing: length-prefixed line-JSON frames (DESIGN.md §12).
+//!
+//! A frame is a 4-byte big-endian length followed by exactly that many
+//! bytes of UTF-8 JSON (one logical line — the compact `Json::to_string`
+//! form contains no raw newlines).  The length prefix makes partial
+//! reads unambiguous (no scanning for delimiters inside string escapes)
+//! and lets the receiver enforce its memory bound **before** allocating:
+//! a header declaring more than `max_frame_bytes` is rejected on sight,
+//! so a hostile or broken peer cannot make a connection thread reserve
+//! an arbitrary buffer.
+//!
+//! Two consumption styles share the same state machine:
+//!
+//! * [`FrameDecoder`] — incremental: feed whatever `read` returned
+//!   (`push`), pop completed frames (`next`).  The server's connection
+//!   threads use this under a read timeout so a blocked socket never
+//!   wedges a partial frame, and the unit tests drive it byte-by-byte
+//!   to pin reassembly across arbitrary read boundaries.
+//! * [`write_frame`] — blocking write of one frame, used by both sides.
+
+use std::collections::VecDeque;
+use std::io::Write;
+
+use anyhow::{bail, ensure, Result};
+
+/// Default per-frame payload bound (the `"net"."max_frame_bytes"` config
+/// default): generous for forecast contexts, small enough that a
+/// per-connection buffer is never a memory event.
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 1 << 20;
+
+/// Length-prefix header size (u32, big-endian).
+pub const FRAME_HEADER_BYTES: usize = 4;
+
+/// Write one frame: 4-byte big-endian length + the UTF-8 payload.
+/// Callers pass the same `max_frame_bytes` they accept, so an oversized
+/// *outgoing* frame fails loudly at the sender instead of poisoning the
+/// peer's connection.
+pub fn write_frame(w: &mut impl Write, payload: &str, max_frame_bytes: usize) -> Result<()> {
+    ensure!(!payload.is_empty(), "refusing to send an empty frame");
+    ensure!(
+        payload.len() <= max_frame_bytes,
+        "frame payload of {} bytes exceeds max_frame_bytes = {max_frame_bytes}",
+        payload.len()
+    );
+    let len = (payload.len() as u32).to_be_bytes();
+    w.write_all(&len)?;
+    w.write_all(payload.as_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Incremental frame reassembler with a hard payload bound; see the
+/// module docs.  After an error (oversized or zero-length header, bad
+/// UTF-8) the byte stream has lost framing sync, so the connection must
+/// be closed — the decoder stays poisoned and keeps erroring.
+#[derive(Debug)]
+pub struct FrameDecoder {
+    max_frame_bytes: usize,
+    /// partial length prefix (big-endian accumulation)
+    header: [u8; FRAME_HEADER_BYTES],
+    header_len: usize,
+    /// expected payload length once the header is complete
+    need: Option<usize>,
+    payload: Vec<u8>,
+    ready: VecDeque<String>,
+    poisoned: bool,
+}
+
+impl FrameDecoder {
+    pub fn new(max_frame_bytes: usize) -> FrameDecoder {
+        FrameDecoder {
+            max_frame_bytes: max_frame_bytes.max(1),
+            header: [0; FRAME_HEADER_BYTES],
+            header_len: 0,
+            need: None,
+            payload: Vec::new(),
+            ready: VecDeque::new(),
+            poisoned: false,
+        }
+    }
+
+    /// Feed bytes as they arrived off the socket.  Completed frames are
+    /// queued for [`next`](Self::next); a framing violation (length 0 or
+    /// beyond the bound, invalid UTF-8) errors **before** any payload
+    /// allocation for that frame and poisons the decoder.
+    pub fn push(&mut self, mut chunk: &[u8]) -> Result<()> {
+        ensure!(!self.poisoned, "frame decoder poisoned by an earlier framing error");
+        while !chunk.is_empty() {
+            match self.need {
+                None => {
+                    let take = (FRAME_HEADER_BYTES - self.header_len).min(chunk.len());
+                    self.header[self.header_len..self.header_len + take]
+                        .copy_from_slice(&chunk[..take]);
+                    self.header_len += take;
+                    chunk = &chunk[take..];
+                    if self.header_len == FRAME_HEADER_BYTES {
+                        let len = u32::from_be_bytes(self.header) as usize;
+                        if len == 0 || len > self.max_frame_bytes {
+                            self.poisoned = true;
+                            bail!(
+                                "frame header declares {len} bytes — outside \
+                                 (0, max_frame_bytes = {}]",
+                                self.max_frame_bytes
+                            );
+                        }
+                        self.need = Some(len);
+                        self.header_len = 0;
+                    }
+                }
+                Some(len) => {
+                    let take = (len - self.payload.len()).min(chunk.len());
+                    self.payload.extend_from_slice(&chunk[..take]);
+                    chunk = &chunk[take..];
+                    if self.payload.len() == len {
+                        let bytes = std::mem::take(&mut self.payload);
+                        self.need = None;
+                        match String::from_utf8(bytes) {
+                            Ok(s) => self.ready.push_back(s),
+                            Err(_) => {
+                                self.poisoned = true;
+                                bail!("frame payload is not valid UTF-8");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Pop the next completed frame payload, if any.
+    pub fn next(&mut self) -> Option<String> {
+        self.ready.pop_front()
+    }
+
+    /// Whether a frame is mid-reassembly (useful for "clean EOF" checks:
+    /// EOF with `mid_frame()` is a truncated stream, not a close).
+    pub fn mid_frame(&self) -> bool {
+        self.header_len > 0 || self.need.is_some()
+    }
+
+    /// Bytes currently buffered for the in-progress frame — by
+    /// construction `<= max_frame_bytes`; the bound test asserts the
+    /// backing capacity too.
+    pub fn buffered(&self) -> usize {
+        self.header_len + self.payload.len()
+    }
+
+    /// Capacity of the payload buffer (for the no-allocation-on-reject
+    /// test: a rejected oversized header must leave this untouched).
+    pub fn payload_capacity(&self) -> usize {
+        self.payload.capacity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame_bytes(payload: &str) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_frame(&mut out, payload, DEFAULT_MAX_FRAME_BYTES).unwrap();
+        out
+    }
+
+    #[test]
+    fn roundtrip_one_frame() {
+        let mut dec = FrameDecoder::new(1024);
+        dec.push(&frame_bytes(r#"{"type":"report"}"#)).unwrap();
+        assert_eq!(dec.next().as_deref(), Some(r#"{"type":"report"}"#));
+        assert!(dec.next().is_none());
+        assert!(!dec.mid_frame());
+    }
+
+    #[test]
+    fn partial_frames_across_reads() {
+        // byte-by-byte delivery: reassembly must be boundary-agnostic
+        let mut bytes = frame_bytes(r#"{"type":"collect","session":7}"#);
+        bytes.extend(frame_bytes(r#"{"type":"ack","session":7,"upto":3}"#));
+        let mut dec = FrameDecoder::new(1024);
+        let mut got = Vec::new();
+        for b in bytes {
+            dec.push(&[b]).unwrap();
+            while let Some(f) = dec.next() {
+                got.push(f);
+            }
+        }
+        assert_eq!(
+            got,
+            vec![
+                r#"{"type":"collect","session":7}"#.to_string(),
+                r#"{"type":"ack","session":7,"upto":3}"#.to_string(),
+            ]
+        );
+        // ragged split straddling a header boundary
+        let bytes = frame_bytes("[1,2,3]");
+        let mut dec = FrameDecoder::new(1024);
+        dec.push(&bytes[..3]).unwrap();
+        assert!(dec.mid_frame() && dec.next().is_none());
+        dec.push(&bytes[3..6]).unwrap();
+        dec.push(&bytes[6..]).unwrap();
+        assert_eq!(dec.next().as_deref(), Some("[1,2,3]"));
+    }
+
+    #[test]
+    fn multiple_frames_in_one_read() {
+        let mut bytes = Vec::new();
+        for i in 0..5 {
+            bytes.extend(frame_bytes(&format!("[{i}]")));
+        }
+        let mut dec = FrameDecoder::new(64);
+        dec.push(&bytes).unwrap();
+        let got: Vec<String> = std::iter::from_fn(|| dec.next()).collect();
+        assert_eq!(got, vec!["[0]", "[1]", "[2]", "[3]", "[4]"]);
+    }
+
+    #[test]
+    fn oversized_frame_rejected_without_allocation() {
+        let mut dec = FrameDecoder::new(64);
+        // header declares 16 MiB; the decoder must reject on the header
+        // alone, never reserving the declared payload
+        let header = ((16u32) << 20).to_be_bytes();
+        let err = dec.push(&header).unwrap_err();
+        assert!(err.to_string().contains("max_frame_bytes"), "{err}");
+        assert_eq!(dec.payload_capacity(), 0, "rejected frame must not allocate");
+        // the decoder is poisoned: framing sync is unrecoverable
+        assert!(dec.push(b"x").is_err());
+    }
+
+    #[test]
+    fn zero_length_frame_rejected() {
+        let mut dec = FrameDecoder::new(64);
+        assert!(dec.push(&0u32.to_be_bytes()).is_err());
+    }
+
+    #[test]
+    fn invalid_utf8_rejected() {
+        let mut dec = FrameDecoder::new(64);
+        let mut bytes = 2u32.to_be_bytes().to_vec();
+        bytes.extend([0xff, 0xfe]);
+        assert!(dec.push(&bytes).is_err());
+        assert!(dec.push(b"x").is_err(), "poisoned after the framing error");
+    }
+
+    #[test]
+    fn writer_rejects_oversized_and_empty_payloads() {
+        let mut out = Vec::new();
+        assert!(write_frame(&mut out, "", 64).is_err());
+        assert!(write_frame(&mut out, &"x".repeat(65), 64).is_err());
+        assert!(out.is_empty(), "rejected frames must write nothing");
+        write_frame(&mut out, "ok", 64).unwrap();
+        assert_eq!(out.len(), FRAME_HEADER_BYTES + 2);
+    }
+
+    #[test]
+    fn buffered_stays_within_bound() {
+        let mut dec = FrameDecoder::new(32);
+        let bytes = frame_bytes(&"a".repeat(32));
+        // feed all but the last byte: buffered payload is at its max
+        dec.push(&bytes[..bytes.len() - 1]).unwrap();
+        assert!(dec.buffered() <= 32 + FRAME_HEADER_BYTES);
+        dec.push(&bytes[bytes.len() - 1..]).unwrap();
+        assert_eq!(dec.next().unwrap().len(), 32);
+    }
+}

@@ -1,0 +1,105 @@
+//! Layer-4 network front: a sharded TCP serving fabric over the
+//! coordinator (DESIGN.md §12).
+//!
+//! The coordinator serves one process-internal dual loop
+//! ([`crate::coordinator::serve_loop`]); this layer puts a wire and a
+//! shard fabric in front of it, dependency-free over `std::net`:
+//!
+//! * `frame`    — length-prefixed line-JSON framing with a hard
+//!   per-frame memory bound (`max_frame_bytes`, enforced before
+//!   allocation).
+//! * `protocol` — the frame vocabulary: forecast / append / collect /
+//!   ack / report requests and their terminal responses, parsed with the
+//!   config system's unknown-key-rejection strictness.
+//! * `router`   — [`ShardRouter`]: consistent-hashes session/request ids
+//!   onto shards via a splitmix64 vnode ring; deterministic across
+//!   processes (golden-pinned and cross-checked by
+//!   `scripts/crosscheck_net.py`).
+//! * `server`   — N self-contained shards (each its own dual serve loop,
+//!   device thread, session table, `DeliveryMonitor`, bounded intake)
+//!   behind one acceptor; fail-fast backpressure on the wire; graceful
+//!   drain merging per-shard metrics into one process report.
+//! * `client`   — the blocking loopback driver `tomers client` uses.
+//!
+//! There is deliberately **no cross-shard rebalancing**: an id's shard is
+//! a pure function of the id, so shards share nothing (no routing table,
+//! no cross-shard locks) and the fabric scales to N device threads.
+
+pub mod client;
+pub mod frame;
+pub mod protocol;
+pub mod router;
+pub mod server;
+
+use anyhow::{ensure, Result};
+
+pub use client::NetClient;
+pub use frame::{write_frame, FrameDecoder, DEFAULT_MAX_FRAME_BYTES, FRAME_HEADER_BYTES};
+pub use protocol::{
+    forecast_response, parse_request, parse_response, request_to_json, response_to_json,
+    Request, Response,
+};
+pub use router::{mix64, ShardRouter, VNODES_PER_SHARD};
+pub use server::{serve_net, spawn_shard, NetServerHandle, ShardPorts, ShardSpec};
+
+/// The `"net"` config block (parsed by [`crate::config::net_from_json`]):
+/// how `tomers serve-net` exposes the shard fabric.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NetConfig {
+    /// independent serve-loop shards (= device threads)
+    pub shards: usize,
+    /// listen address; port 0 picks an ephemeral port (tests, loopback
+    /// smoke gates)
+    pub addr: String,
+    /// concurrent connection cap — excess connects get an error frame
+    /// and are closed, never queued
+    pub max_conns: usize,
+    /// per-frame payload bound, enforced on both sides before allocation
+    pub max_frame_bytes: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            shards: 2,
+            addr: "127.0.0.1:0".to_string(),
+            max_conns: 64,
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+        }
+    }
+}
+
+impl NetConfig {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.shards >= 1, "net.shards must be >= 1");
+        ensure!(!self.addr.is_empty(), "net.addr must not be empty");
+        ensure!(self.max_conns >= 1, "net.max_conns must be >= 1");
+        ensure!(
+            self.max_frame_bytes >= 64,
+            "net.max_frame_bytes must be >= 64 (error frames need room)"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_validates() {
+        NetConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn degenerate_configs_rejected() {
+        for cfg in [
+            NetConfig { shards: 0, ..NetConfig::default() },
+            NetConfig { addr: String::new(), ..NetConfig::default() },
+            NetConfig { max_conns: 0, ..NetConfig::default() },
+            NetConfig { max_frame_bytes: 8, ..NetConfig::default() },
+        ] {
+            assert!(cfg.validate().is_err(), "{cfg:?} must be rejected");
+        }
+    }
+}

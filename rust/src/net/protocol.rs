@@ -1,0 +1,484 @@
+//! Frame vocabulary: the JSON payloads carried by [`frame`](super::frame)
+//! frames, parsed with the same strictness discipline as the config
+//! system (`config.rs`): **unknown keys are rejected at every level**,
+//! a wrong-typed value is an error, and every request frame yields
+//! exactly one response frame — the wire realisation of the in-process
+//! terminal-outcome contract (`ForecastOutcome`).
+//!
+//! Requests (client → server), dispatched on `"type"`:
+//!
+//! ```json
+//! {"type": "forecast", "id": 7, "context": [0.1, 0.2]}
+//! {"type": "append",   "session": 3, "points": [0.5, 0.5]}
+//! {"type": "collect",  "session": 3}
+//! {"type": "ack",      "session": 3, "upto": 11}
+//! {"type": "report"}
+//! ```
+//!
+//! Responses (server → client): `"forecast"` (terminal, with
+//! `"outcome"` of `delivered | deadline_exceeded | failed` and the
+//! serving shard), `"appended"`, `"collected"` (the unacked outbox,
+//! oldest first), `"acked"`, `"report"` (merged text + summed delivery
+//! ledger) and `"error"` (per-connection: malformed input or wire
+//! backpressure — never a process fault).
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::reject_unknown_keys;
+use crate::coordinator::{DeliveryStats, ForecastOutcome, ForecastResponse};
+use crate::json::Json;
+
+/// A decoded client request frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// one-shot forecast over a materialized context
+    Forecast { id: u64, context: Vec<f32> },
+    /// stream observations for a session (whole `d`-channel frames)
+    Append { session: u64, points: Vec<f32> },
+    /// fetch the session's unacked forecasts (at-least-once)
+    Collect { session: u64 },
+    /// retire the session's forecasts with `seq <= upto`
+    Ack { session: u64, upto: u64 },
+    /// merged per-shard metrics report
+    Report,
+}
+
+/// A decoded server response frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// terminal outcome of one forecast request
+    Forecast {
+        id: u64,
+        outcome: ForecastOutcome,
+        forecast: Vec<f32>,
+        variant: String,
+        latency_ms: f64,
+        batch_size: usize,
+        shard: usize,
+    },
+    /// the append was accepted into the shard's bounded intake
+    Appended { session: u64, shard: usize },
+    /// the session's unacked forecasts, oldest first
+    Collected { session: u64, shard: usize, entries: Vec<(u64, Vec<f32>)> },
+    /// how many forecasts the ack retired
+    Acked { session: u64, shard: usize, count: usize },
+    /// merged metrics text + the summed delivery ledger
+    Report { text: String, delivery: DeliveryStats },
+    /// per-connection error: what failed (`context`) and why
+    Error { context: String, reason: String },
+}
+
+fn get_u64(v: &Json, key: &str, path: &str) -> Result<u64> {
+    let n = v.req(key).with_context(|| format!("{path}: missing {key:?}"))?.as_f64()?;
+    ensure!(
+        n.fract() == 0.0 && (0.0..=9.007_199_254_740_992e15).contains(&n),
+        "{path}: {key} must be a non-negative integer"
+    );
+    Ok(n as u64)
+}
+
+fn get_f32s(v: &Json, key: &str, path: &str) -> Result<Vec<f32>> {
+    v.req(key)
+        .with_context(|| format!("{path}: missing {key:?}"))?
+        .as_arr()?
+        .iter()
+        .map(|x| Ok(x.as_f64()? as f32))
+        .collect()
+}
+
+fn f32s_json(values: &[f32]) -> Json {
+    Json::arr(values.iter().map(|&x| Json::num(x as f64)).collect())
+}
+
+/// Parse one request frame payload; see the module docs for the grammar.
+pub fn parse_request(text: &str) -> Result<Request> {
+    let v = Json::parse(text).context("request frame is not valid JSON")?;
+    let ty = v.req("type").context("request frame: missing \"type\"")?.as_str()?.to_string();
+    match ty.as_str() {
+        "forecast" => {
+            reject_unknown_keys(&v, "\"forecast\" frame", &["type", "id", "context"])?;
+            Ok(Request::Forecast {
+                id: get_u64(&v, "id", "\"forecast\" frame")?,
+                context: get_f32s(&v, "context", "\"forecast\" frame")?,
+            })
+        }
+        "append" => {
+            reject_unknown_keys(&v, "\"append\" frame", &["type", "session", "points"])?;
+            Ok(Request::Append {
+                session: get_u64(&v, "session", "\"append\" frame")?,
+                points: get_f32s(&v, "points", "\"append\" frame")?,
+            })
+        }
+        "collect" => {
+            reject_unknown_keys(&v, "\"collect\" frame", &["type", "session"])?;
+            Ok(Request::Collect { session: get_u64(&v, "session", "\"collect\" frame")? })
+        }
+        "ack" => {
+            reject_unknown_keys(&v, "\"ack\" frame", &["type", "session", "upto"])?;
+            Ok(Request::Ack {
+                session: get_u64(&v, "session", "\"ack\" frame")?,
+                upto: get_u64(&v, "upto", "\"ack\" frame")?,
+            })
+        }
+        "report" => {
+            reject_unknown_keys(&v, "\"report\" frame", &["type"])?;
+            Ok(Request::Report)
+        }
+        other => bail!(
+            "unknown request type {other:?} — accepted: forecast | append | collect | \
+             ack | report"
+        ),
+    }
+}
+
+/// Serialize one request frame payload (the client half).
+pub fn request_to_json(req: &Request) -> Json {
+    match req {
+        Request::Forecast { id, context } => Json::obj(vec![
+            ("type", Json::str("forecast")),
+            ("id", Json::num(*id as f64)),
+            ("context", f32s_json(context)),
+        ]),
+        Request::Append { session, points } => Json::obj(vec![
+            ("type", Json::str("append")),
+            ("session", Json::num(*session as f64)),
+            ("points", f32s_json(points)),
+        ]),
+        Request::Collect { session } => Json::obj(vec![
+            ("type", Json::str("collect")),
+            ("session", Json::num(*session as f64)),
+        ]),
+        Request::Ack { session, upto } => Json::obj(vec![
+            ("type", Json::str("ack")),
+            ("session", Json::num(*session as f64)),
+            ("upto", Json::num(*upto as f64)),
+        ]),
+        Request::Report => Json::obj(vec![("type", Json::str("report"))]),
+    }
+}
+
+/// The `"outcome"` wire word for a terminal [`ForecastOutcome`].
+fn outcome_word(outcome: &ForecastOutcome) -> &'static str {
+    match outcome {
+        ForecastOutcome::Delivered => "delivered",
+        ForecastOutcome::DeadlineExceeded => "deadline_exceeded",
+        ForecastOutcome::Failed(_) => "failed",
+    }
+}
+
+/// Wrap a served [`ForecastResponse`] (plus the shard that served it)
+/// into its wire frame.
+pub fn forecast_response(resp: &ForecastResponse, shard: usize) -> Response {
+    Response::Forecast {
+        id: resp.id,
+        outcome: resp.outcome.clone(),
+        forecast: resp.forecast.clone(),
+        variant: resp.variant.clone(),
+        latency_ms: resp.latency * 1e3,
+        batch_size: resp.batch_size,
+        shard,
+    }
+}
+
+/// Serialize one response frame payload (the server half).
+pub fn response_to_json(resp: &Response) -> Json {
+    match resp {
+        Response::Forecast { id, outcome, forecast, variant, latency_ms, batch_size, shard } => {
+            let mut pairs = vec![
+                ("type", Json::str("forecast")),
+                ("id", Json::num(*id as f64)),
+                ("outcome", Json::str(outcome_word(outcome))),
+            ];
+            if let ForecastOutcome::Failed(reason) = outcome {
+                pairs.push(("reason", Json::str(reason.clone())));
+            }
+            pairs.extend([
+                ("forecast", f32s_json(forecast)),
+                ("variant", Json::str(variant.clone())),
+                ("latency_ms", Json::num(*latency_ms)),
+                ("batch_size", Json::num(*batch_size as f64)),
+                ("shard", Json::num(*shard as f64)),
+            ]);
+            Json::obj(pairs)
+        }
+        Response::Appended { session, shard } => Json::obj(vec![
+            ("type", Json::str("appended")),
+            ("session", Json::num(*session as f64)),
+            ("shard", Json::num(*shard as f64)),
+        ]),
+        Response::Collected { session, shard, entries } => Json::obj(vec![
+            ("type", Json::str("collected")),
+            ("session", Json::num(*session as f64)),
+            ("shard", Json::num(*shard as f64)),
+            (
+                "entries",
+                Json::arr(
+                    entries
+                        .iter()
+                        .map(|(seq, forecast)| {
+                            Json::obj(vec![
+                                ("seq", Json::num(*seq as f64)),
+                                ("forecast", f32s_json(forecast)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+        Response::Acked { session, shard, count } => Json::obj(vec![
+            ("type", Json::str("acked")),
+            ("session", Json::num(*session as f64)),
+            ("shard", Json::num(*shard as f64)),
+            ("count", Json::num(*count as f64)),
+        ]),
+        Response::Report { text, delivery } => Json::obj(vec![
+            ("type", Json::str("report")),
+            ("text", Json::str(text.clone())),
+            ("enqueued", Json::num(delivery.enqueued as f64)),
+            ("acked", Json::num(delivery.acked as f64)),
+            ("redelivered", Json::num(delivery.redelivered as f64)),
+            ("expired_undelivered", Json::num(delivery.expired_undelivered as f64)),
+            ("dropped_overflow", Json::num(delivery.dropped_overflow as f64)),
+            ("pending", Json::num(delivery.pending as f64)),
+        ]),
+        Response::Error { context, reason } => Json::obj(vec![
+            ("type", Json::str("error")),
+            ("context", Json::str(context.clone())),
+            ("reason", Json::str(reason.clone())),
+        ]),
+    }
+}
+
+/// Parse one response frame payload (the client half).
+pub fn parse_response(text: &str) -> Result<Response> {
+    let v = Json::parse(text).context("response frame is not valid JSON")?;
+    let ty = v.req("type").context("response frame: missing \"type\"")?.as_str()?.to_string();
+    match ty.as_str() {
+        "forecast" => {
+            reject_unknown_keys(
+                &v,
+                "\"forecast\" response",
+                &[
+                    "type",
+                    "id",
+                    "outcome",
+                    "reason",
+                    "forecast",
+                    "variant",
+                    "latency_ms",
+                    "batch_size",
+                    "shard",
+                ],
+            )?;
+            let outcome = match v.req("outcome")?.as_str()? {
+                "delivered" => ForecastOutcome::Delivered,
+                "deadline_exceeded" => ForecastOutcome::DeadlineExceeded,
+                "failed" => ForecastOutcome::Failed(match v.get("reason") {
+                    Some(r) => r.as_str()?.to_string(),
+                    None => String::new(),
+                }),
+                other => bail!("unknown forecast outcome {other:?}"),
+            };
+            Ok(Response::Forecast {
+                id: get_u64(&v, "id", "\"forecast\" response")?,
+                outcome,
+                forecast: get_f32s(&v, "forecast", "\"forecast\" response")?,
+                variant: v.req("variant")?.as_str()?.to_string(),
+                latency_ms: v.req("latency_ms")?.as_f64()?,
+                batch_size: v.req("batch_size")?.as_usize()?,
+                shard: v.req("shard")?.as_usize()?,
+            })
+        }
+        "appended" => {
+            reject_unknown_keys(&v, "\"appended\" response", &["type", "session", "shard"])?;
+            Ok(Response::Appended {
+                session: get_u64(&v, "session", "\"appended\" response")?,
+                shard: v.req("shard")?.as_usize()?,
+            })
+        }
+        "collected" => {
+            reject_unknown_keys(
+                &v,
+                "\"collected\" response",
+                &["type", "session", "shard", "entries"],
+            )?;
+            let mut entries = Vec::new();
+            for (i, e) in v.req("entries")?.as_arr()?.iter().enumerate() {
+                let path = format!("\"collected\" entries[{i}]");
+                reject_unknown_keys(e, &path, &["seq", "forecast"])?;
+                entries.push((get_u64(e, "seq", &path)?, get_f32s(e, "forecast", &path)?));
+            }
+            Ok(Response::Collected {
+                session: get_u64(&v, "session", "\"collected\" response")?,
+                shard: v.req("shard")?.as_usize()?,
+                entries,
+            })
+        }
+        "acked" => {
+            reject_unknown_keys(
+                &v,
+                "\"acked\" response",
+                &["type", "session", "shard", "count"],
+            )?;
+            Ok(Response::Acked {
+                session: get_u64(&v, "session", "\"acked\" response")?,
+                shard: v.req("shard")?.as_usize()?,
+                count: v.req("count")?.as_usize()?,
+            })
+        }
+        "report" => {
+            reject_unknown_keys(
+                &v,
+                "\"report\" response",
+                &[
+                    "type",
+                    "text",
+                    "enqueued",
+                    "acked",
+                    "redelivered",
+                    "expired_undelivered",
+                    "dropped_overflow",
+                    "pending",
+                ],
+            )?;
+            Ok(Response::Report {
+                text: v.req("text")?.as_str()?.to_string(),
+                delivery: DeliveryStats {
+                    enqueued: get_u64(&v, "enqueued", "\"report\" response")?,
+                    acked: get_u64(&v, "acked", "\"report\" response")?,
+                    redelivered: get_u64(&v, "redelivered", "\"report\" response")?,
+                    expired_undelivered: get_u64(
+                        &v,
+                        "expired_undelivered",
+                        "\"report\" response",
+                    )?,
+                    dropped_overflow: get_u64(&v, "dropped_overflow", "\"report\" response")?,
+                    pending: get_u64(&v, "pending", "\"report\" response")?,
+                },
+            })
+        }
+        "error" => {
+            reject_unknown_keys(&v, "\"error\" response", &["type", "context", "reason"])?;
+            Ok(Response::Error {
+                context: v.req("context")?.as_str()?.to_string(),
+                reason: v.req("reason")?.as_str()?.to_string(),
+            })
+        }
+        other => bail!("unknown response type {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_request(req: Request) {
+        let text = request_to_json(&req).to_string();
+        assert_eq!(parse_request(&text).unwrap(), req, "{text}");
+    }
+
+    fn roundtrip_response(resp: Response) {
+        let text = response_to_json(&resp).to_string();
+        assert_eq!(parse_response(&text).unwrap(), resp, "{text}");
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        roundtrip_request(Request::Forecast { id: 7, context: vec![0.25, -1.5, 3.375] });
+        roundtrip_request(Request::Append { session: 3, points: vec![0.5, 0.125] });
+        roundtrip_request(Request::Collect { session: u64::MAX >> 12 });
+        roundtrip_request(Request::Ack { session: 3, upto: 11 });
+        roundtrip_request(Request::Report);
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        roundtrip_response(Response::Forecast {
+            id: 9,
+            outcome: ForecastOutcome::Delivered,
+            forecast: vec![1.0, 2.5],
+            variant: "v".into(),
+            latency_ms: 12.5,
+            batch_size: 4,
+            shard: 1,
+        });
+        roundtrip_response(Response::Forecast {
+            id: 10,
+            outcome: ForecastOutcome::Failed("backpressure: shard 0 intake full".into()),
+            forecast: vec![],
+            variant: String::new(),
+            latency_ms: 0.5,
+            batch_size: 0,
+            shard: 0,
+        });
+        roundtrip_response(Response::Appended { session: 3, shard: 1 });
+        roundtrip_response(Response::Collected {
+            session: 3,
+            shard: 1,
+            entries: vec![(0, vec![1.0]), (1, vec![2.0, 3.0])],
+        });
+        roundtrip_response(Response::Acked { session: 3, shard: 1, count: 2 });
+        roundtrip_response(Response::Report {
+            text: "served=1\n".into(),
+            delivery: DeliveryStats {
+                enqueued: 10,
+                acked: 4,
+                redelivered: 1,
+                expired_undelivered: 2,
+                dropped_overflow: 1,
+                pending: 3,
+            },
+        });
+        roundtrip_response(Response::Error { context: "parse".into(), reason: "bad".into() });
+    }
+
+    #[test]
+    fn unknown_keys_rejected_at_every_level() {
+        let err = parse_request(r#"{"type":"collect","session":1,"sesion":2}"#).unwrap_err();
+        assert!(err.to_string().contains("sesion"), "{err}");
+        let err = parse_request(r#"{"type":"forecast","id":1,"context":[1],"prio":9}"#)
+            .unwrap_err();
+        assert!(err.to_string().contains("prio"), "{err}");
+        // nested: a collected entry with a stray key
+        let err = parse_response(
+            r#"{"type":"collected","session":1,"shard":0,
+                "entries":[{"seq":0,"forecast":[1],"extra":true}]}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("extra"), "{err}");
+    }
+
+    #[test]
+    fn malformed_and_mistyped_frames_rejected() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"type":"warp"}"#).is_err());
+        assert!(parse_request(r#"{"type":"collect","session":"three"}"#).is_err());
+        assert!(parse_request(r#"{"type":"ack","session":1,"upto":-3}"#).is_err());
+        assert!(parse_request(r#"{"type":"ack","session":1,"upto":1.5}"#).is_err());
+        assert!(parse_response(r#"{"type":"forecast","id":1,"outcome":"maybe",
+            "forecast":[],"variant":"v","latency_ms":1,"batch_size":1,"shard":0}"#)
+            .is_err());
+    }
+
+    #[test]
+    fn forecast_wrapper_carries_shard_and_reason() {
+        let resp = ForecastResponse {
+            id: 4,
+            forecast: vec![],
+            variant: "v".into(),
+            latency: 0.002,
+            batch_size: 2,
+            outcome: ForecastOutcome::Failed("injected fault #3".into()),
+        };
+        let wire = forecast_response(&resp, 1);
+        let text = response_to_json(&wire).to_string();
+        assert!(text.contains("\"shard\": 1") || text.contains("\"shard\":1"), "{text}");
+        match parse_response(&text).unwrap() {
+            Response::Forecast { outcome: ForecastOutcome::Failed(r), shard, .. } => {
+                assert_eq!(r, "injected fault #3");
+                assert_eq!(shard, 1);
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+}

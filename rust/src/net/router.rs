@@ -1,0 +1,168 @@
+//! Consistent-hash routing of session/request ids onto shards
+//! (DESIGN.md §12).
+//!
+//! Each shard contributes [`VNODES_PER_SHARD`] virtual points on a
+//! 64-bit hash ring; an id is hashed with the SplitMix64 finalizer (the
+//! same mixer as [`crate::util::Rng`]) and owned by the first ring point
+//! clockwise from it.  Properties the serving fabric relies on:
+//!
+//! * **deterministic & platform-independent** — pure integer mixing, no
+//!   `RandomState`; the same id maps to the same shard in every process,
+//!   pinned by golden values cross-checked against the Python
+//!   transliteration (`scripts/crosscheck_net.py`);
+//! * **stable under shard-count change** — growing N shards to N+1
+//!   moves only the keys the new shard's vnodes capture (≈1/(N+1) of
+//!   the space), not a full reshuffle like `id % N` would;
+//! * **stateless** — connection threads route without consulting the
+//!   shards, so there is no routing table to lock or rebalance.
+
+use anyhow::{ensure, Result};
+
+/// Virtual ring points per shard: enough that the expected load
+/// imbalance between shards stays within a few percent, small enough
+/// that building and searching the ring is trivial.
+pub const VNODES_PER_SHARD: usize = 64;
+
+/// SplitMix64 finalizer (`util::Rng`'s output stage): the ring's point
+/// hash and the id hash.
+#[inline]
+pub fn mix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Consistent-hash ring over `shards` shards; see the module docs.
+#[derive(Clone, Debug)]
+pub struct ShardRouter {
+    /// `(ring point, shard)` sorted by point
+    ring: Vec<(u64, u32)>,
+    shards: usize,
+}
+
+impl ShardRouter {
+    pub fn new(shards: usize) -> Result<ShardRouter> {
+        Self::with_vnodes(shards, VNODES_PER_SHARD)
+    }
+
+    /// Ring with an explicit vnode count (tests shrink it to probe
+    /// imbalance; serving always uses [`VNODES_PER_SHARD`]).
+    pub fn with_vnodes(shards: usize, vnodes: usize) -> Result<ShardRouter> {
+        ensure!(shards >= 1, "a shard router needs at least one shard");
+        ensure!(vnodes >= 1, "a shard router needs at least one vnode per shard");
+        let mut ring = Vec::with_capacity(shards * vnodes);
+        for shard in 0..shards as u64 {
+            for vnode in 0..vnodes as u64 {
+                // distinct, order-free point stream per (shard, vnode):
+                // mix a shard stream key with the vnode index
+                let point = mix64(mix64(shard) ^ vnode.wrapping_mul(0xA24B_AED4_963E_E407));
+                ring.push((point, shard as u32));
+            }
+        }
+        ring.sort_unstable();
+        Ok(ShardRouter { ring, shards })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The shard owning `id` (a session or request id): first ring point
+    /// at or clockwise-after `mix64(id)`, wrapping at the top.
+    pub fn shard_for(&self, id: u64) -> usize {
+        let h = mix64(id);
+        let idx = self.ring.partition_point(|&(point, _)| point < h);
+        self.ring[idx % self.ring.len()].1 as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_shard_owns_everything() {
+        let r = ShardRouter::new(1).unwrap();
+        for id in 0..1000 {
+            assert_eq!(r.shard_for(id), 0);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let a = ShardRouter::new(4).unwrap();
+        let b = ShardRouter::new(4).unwrap();
+        for id in 0..10_000 {
+            assert_eq!(a.shard_for(id), b.shard_for(id));
+        }
+    }
+
+    /// Golden routing pins, cross-checked bit-for-bit by the Python
+    /// transliteration in `scripts/crosscheck_net.py` — a silent change
+    /// to the mixer or ring construction would reshuffle every session
+    /// onto a different shard's `SessionManager`/`DeliveryMonitor`
+    /// mid-deployment, so the assignment is part of the wire contract.
+    #[test]
+    fn hash_stability_golden_pins() {
+        let ids: [u64; 8] = [0, 1, 2, 3, 7, 42, 1_000_003, u64::MAX >> 13];
+        let got: Vec<Vec<usize>> = [2usize, 3, 4]
+            .iter()
+            .map(|&n| {
+                let r = ShardRouter::new(n).unwrap();
+                ids.iter().map(|&id| r.shard_for(id)).collect()
+            })
+            .collect();
+        let expect: [[usize; 8]; 3] = [
+            [0, 1, 0, 1, 1, 1, 0, 0],
+            [0, 1, 0, 2, 2, 1, 2, 2],
+            [3, 1, 0, 2, 2, 1, 3, 2],
+        ];
+        for (row, (g, e)) in got.iter().zip(expect.iter()).enumerate() {
+            assert_eq!(g.as_slice(), e.as_slice(), "shards={}", row + 2);
+        }
+    }
+
+    #[test]
+    fn mixer_golden_pins() {
+        // splitmix64 finalizer reference values (shared with util::Rng's
+        // output stage and the Python transliteration)
+        assert_eq!(mix64(0), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(mix64(1), 0x910A_2DEC_8902_5CC1);
+        assert_eq!(mix64(0xDEAD_BEEF), 0x4ADF_B90F_68C9_EB9B);
+    }
+
+    #[test]
+    fn distribution_is_roughly_balanced() {
+        let r = ShardRouter::new(4).unwrap();
+        let mut counts = [0usize; 4];
+        for id in 0..40_000u64 {
+            counts[r.shard_for(id)] += 1;
+        }
+        for (s, &c) in counts.iter().enumerate() {
+            // 4 shards x 64 vnodes: expect 10k +- a few thousand each
+            assert!((4_000..=20_000).contains(&c), "shard {s} got {c} of 40k ids");
+        }
+    }
+
+    #[test]
+    fn growth_moves_a_bounded_fraction() {
+        // consistent hashing's point: adding a shard must not reshuffle
+        // the world.  With id % N, ~3/4 of ids would move from N=3 to 4.
+        let before = ShardRouter::new(3).unwrap();
+        let after = ShardRouter::new(4).unwrap();
+        let moved = (0..40_000u64)
+            .filter(|&id| before.shard_for(id) != after.shard_for(id))
+            .count();
+        assert!(
+            moved < 40_000 / 2,
+            "{moved} of 40k ids moved when growing 3 -> 4 shards (expected ~1/4)"
+        );
+    }
+
+    #[test]
+    fn rejects_degenerate_configs() {
+        assert!(ShardRouter::new(0).is_err());
+        assert!(ShardRouter::with_vnodes(2, 0).is_err());
+    }
+}

@@ -1,0 +1,658 @@
+//! The sharded serving front (DESIGN.md §12): N self-contained dual
+//! serve loops behind one TCP acceptor.
+//!
+//! Thread topology for `shards = N` with `C` live connections:
+//!
+//! ```text
+//!            acceptor ──spawns──► C connection readers (+ C writers)
+//!                                        │ route by ShardRouter
+//!                  ┌─────────────────────┴──────────────────────┐
+//!            shard 0 …                                     shard N-1
+//!            intake thread (batching)                      intake thread
+//!            exec thread (run_serve_stages                 exec thread
+//!              = device + both prep stages)
+//! ```
+//!
+//! Every shard owns its full serving state — session table, delivery
+//! outboxes, metrics, bounded intake — and shards share **nothing**: an
+//! id's shard is a pure function of the id ([`ShardRouter`]), so there is
+//! no routing table to lock and no cross-shard rebalancing to get wrong.
+//!
+//! **Backpressure is fail-fast on the wire.**  In-process, the server
+//! signals overload by dropping the response sender; over TCP a dropped
+//! sender is indistinguishable from a hang, so overload answers with a
+//! terminal `Failed("backpressure: …")` forecast response (stream appends
+//! get an error frame).  Every request still reaches exactly one terminal
+//! response — the wire realisation of the `ForecastOutcome` liveness
+//! contract.
+//!
+//! **Drain order on shutdown** (each step gates the next, every handle
+//! joined via [`join_annotated`]): stop accepting → connection threads
+//! exit (50 ms read timeout polls the flag) → the last [`ShardPorts`]
+//! clone drops, closing every shard's intake channels → each intake
+//! flushes its remaining batches (so queued requests reach terminal
+//! outcomes), drops its jobs channel and the dual loop winds down through
+//! the fault-tolerant close paths → per-shard metrics merge into one
+//! process report ([`merged_report`]).
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, sync_channel, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::frame::{write_frame, FrameDecoder};
+use super::protocol::{self, Request, Response};
+use super::router::ShardRouter;
+use super::NetConfig;
+use crate::coordinator::batcher;
+use crate::coordinator::metrics::{merged_report, sum_delivery};
+use crate::coordinator::pipeline::Pending;
+use crate::coordinator::serve_loop::SERVE_QUEUE_DEPTH;
+use crate::coordinator::stream::DecodeStep;
+use crate::coordinator::{
+    run_serve_stages, BatcherConfig, DeliveryMonitor, DeliveryStats, DynamicBatcher,
+    EntropyCache, FaultContext, FaultPolicy, ForecastOutcome, ForecastRequest, ForecastResponse,
+    MergePolicy, Metrics, PrepJob, ReadyBatch, StreamEvent, VariantMeta,
+};
+use crate::merging::MergeSpec;
+use crate::runtime::pool::WorkerPool;
+use crate::streaming::StreamingConfig;
+use crate::util::{join_annotated, lock_ignore_poison as lock};
+
+/// Everything one shard needs to stand up its dual serve loop — the
+/// per-loop slice of [`crate::coordinator::ServerConfig`].  Cloned per
+/// shard: each gets its own policy/meta copies, never shared references.
+#[derive(Clone)]
+pub struct ShardSpec {
+    /// merge-rate routing policy (each shard runs its own entropy cache)
+    pub policy: MergePolicy,
+    /// batch geometry per variant
+    pub metas: BTreeMap<String, VariantMeta>,
+    /// host premerge for over-length contexts
+    pub merge: MergeSpec,
+    /// prep-stage parallelism for `run_serve_stages`
+    pub prep_slots: usize,
+    /// stream decode geometry
+    pub stream_meta: VariantMeta,
+    /// streaming subsystem config (session table, probe cadence, …)
+    pub stream_cfg: StreamingConfig,
+    /// batching flush deadline
+    pub max_wait: Duration,
+    /// bound on pending requests per shard — the intake channel depth
+    /// *and* the batcher's global bound
+    pub max_queue: usize,
+    /// fault tolerance: retries/deadlines/quarantine + delivery bounds
+    pub faults: FaultPolicy,
+}
+
+/// A shard's client-facing side: what connection threads route into.
+/// Dropping the last clone closes the shard's intake channels, which is
+/// exactly the drain signal the shard's threads wind down on.
+#[derive(Clone)]
+pub struct ShardPorts {
+    /// bounded forecast intake (`try_send` = wire backpressure)
+    pub forecast_tx: SyncSender<Pending>,
+    /// bounded stream-append intake
+    pub event_tx: SyncSender<StreamEvent>,
+    /// the shard's delivery outboxes (collect/ack served directly)
+    pub delivery: Arc<Mutex<DeliveryMonitor>>,
+    /// the shard's metrics (reports + wire-level rejection accounting)
+    pub metrics: Arc<Mutex<Metrics>>,
+}
+
+/// A shard's server-owned side: joined on shutdown.
+pub struct ShardRuntime {
+    /// the intake thread; joins the exec thread internally, so joining
+    /// this joins the whole shard
+    intake: JoinHandle<Result<()>>,
+    metrics: Arc<Mutex<Metrics>>,
+    delivery: Arc<Mutex<DeliveryMonitor>>,
+}
+
+/// Answer a forecast that the shard cannot queue with a terminal
+/// `Failed` — the wire's fail-fast backpressure contract.
+fn reject_forecast(
+    shard: usize,
+    metrics: &Arc<Mutex<Metrics>>,
+    req: ForecastRequest,
+    t0: Instant,
+    rtx: mpsc::Sender<ForecastResponse>,
+) {
+    {
+        let mut m = lock(metrics);
+        m.record_rejected();
+        m.record_failed(1);
+    }
+    let _ = rtx.send(ForecastResponse {
+        id: req.id,
+        forecast: Vec::new(),
+        variant: String::new(),
+        latency: t0.elapsed().as_secs_f64(),
+        batch_size: 0,
+        outcome: ForecastOutcome::Failed(format!("backpressure: shard {shard} intake full")),
+    });
+}
+
+/// Stand up one self-contained shard: an intake thread (routing +
+/// deadline-ordered batching, the `coordinator::server` idiom) feeding an
+/// exec thread that runs the dual serve loop with the given synthetic or
+/// real device closures.  Returns the client-facing ports and the
+/// join-side runtime.
+pub fn spawn_shard<XB, XS>(
+    index: usize,
+    spec: ShardSpec,
+    pool: &'static WorkerPool,
+    execute_batch: XB,
+    execute_stream: XS,
+) -> Result<(ShardPorts, ShardRuntime)>
+where
+    XB: FnMut(&mut ReadyBatch) -> Result<Vec<Vec<f32>>> + Send + 'static,
+    XS: FnMut(&mut DecodeStep) -> Result<Vec<Vec<f32>>> + Send + 'static,
+{
+    let ShardSpec {
+        policy,
+        metas,
+        merge,
+        prep_slots,
+        stream_meta,
+        stream_cfg,
+        max_wait,
+        max_queue,
+        faults: fault_policy,
+    } = spec;
+    fault_policy.validate()?;
+    let delivery = Arc::new(Mutex::new(DeliveryMonitor::new(
+        fault_policy.outbox_cap,
+        fault_policy.forecast_ttl,
+    )));
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let faults = FaultContext::new(fault_policy);
+    let (forecast_tx, forecast_rx) = sync_channel::<Pending>(max_queue);
+    let (event_tx, event_rx) = sync_channel::<StreamEvent>(max_queue);
+    let (jobs_tx, jobs_rx) = sync_channel::<PrepJob>(SERVE_QUEUE_DEPTH);
+
+    // Exec thread: the dual serve loop — device closures plus both prep
+    // stages; rolling forecasts land in this shard's delivery monitor
+    // with a periodic TTL sweep (the coordinator::server cadence).
+    let exec_metrics = Arc::clone(&metrics);
+    let exec_delivery = Arc::clone(&delivery);
+    let exec_faults = faults.clone();
+    let exec_metas = metas.clone();
+    let ttl = exec_faults.policy.forecast_ttl;
+    let expire_every = (ttl / 4).max(Duration::from_millis(50));
+    let exec = thread::Builder::new()
+        .name(format!("tomers-shard{index}-exec"))
+        .spawn(move || -> Result<()> {
+            let mut last_expire = Instant::now();
+            run_serve_stages(
+                jobs_rx,
+                event_rx,
+                exec_metas,
+                merge,
+                prep_slots,
+                stream_meta,
+                stream_cfg,
+                pool,
+                exec_metrics,
+                exec_faults,
+                execute_batch,
+                execute_stream,
+                move |session, forecast| {
+                    let now = Instant::now();
+                    let mut d = lock(&exec_delivery);
+                    d.offer(session, forecast, now);
+                    if now.duration_since(last_expire) >= expire_every {
+                        d.expire(now);
+                        last_expire = now;
+                    }
+                },
+            )
+        })
+        .map_err(|e| anyhow!("spawning shard {index} exec thread: {e}"))?;
+
+    // Intake thread: entropy routing + deadline-ordered batching, same
+    // shape as coordinator::server's intake, except overload answers a
+    // terminal Failed (see the module docs) instead of dropping senders.
+    let intake_metrics = Arc::clone(&metrics);
+    let intake = thread::Builder::new()
+        .name(format!("tomers-shard{index}-intake"))
+        .spawn(move || -> Result<()> {
+            let mut queues: BTreeMap<(String, usize), DynamicBatcher<Pending>> = BTreeMap::new();
+            let mut total_pending = 0usize;
+            let mut entropy_cache = EntropyCache::for_policy(4096, &policy);
+            let ordered_variants = policy.variant_names();
+            'serve: loop {
+                let now = Instant::now();
+                let timeout = queues
+                    .values()
+                    .filter_map(|q| q.next_deadline(now))
+                    .min()
+                    .unwrap_or(Duration::from_millis(50));
+                match forecast_rx.recv_timeout(timeout) {
+                    Ok((req, t0, rtx)) => {
+                        let decision = policy.decide_cached(&mut entropy_cache, &req.context);
+                        let mut name = decision.variant.name;
+                        {
+                            let tracker = lock(&faults.tracker);
+                            if tracker.is_quarantined(&name) {
+                                if let Some(alt) = tracker.fallback(&ordered_variants, &name) {
+                                    lock(&intake_metrics).record_downgrade(&name, alt);
+                                    name = alt.to_string();
+                                }
+                            }
+                        }
+                        let capacity = metas
+                            .get(&name)
+                            .map(|meta| meta.capacity)
+                            .expect("policy names a loaded variant");
+                        if total_pending >= max_queue {
+                            reject_forecast(index, &intake_metrics, req, t0, rtx);
+                        } else {
+                            let q = queues
+                                .entry((name, req.context.len()))
+                                .or_insert_with(|| {
+                                    DynamicBatcher::new(BatcherConfig {
+                                        capacity,
+                                        max_wait,
+                                        max_queue,
+                                    })
+                                });
+                            match q.push((req, t0, rtx)) {
+                                Ok(()) => total_pending += 1,
+                                Err((req, t0, rtx)) => {
+                                    reject_forecast(index, &intake_metrics, req, t0, rtx);
+                                }
+                            }
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+                let now = Instant::now();
+                for ((variant, _len), batch) in batcher::drain_ready(&mut queues, now) {
+                    total_pending -= batch.len();
+                    if jobs_tx.send(PrepJob { variant, batch }).is_err() {
+                        break 'serve;
+                    }
+                }
+                queues.retain(|_, q| !q.is_empty());
+            }
+            // Drain: the intake channel closed (shutdown) — flush every
+            // still-pending request so each reaches a terminal outcome
+            // before the stages wind down.
+            for ((variant, _len), mut q) in std::mem::take(&mut queues) {
+                while !q.is_empty() {
+                    let batch = q.drain_batch();
+                    if jobs_tx.send(PrepJob { variant: variant.clone(), batch }).is_err() {
+                        break;
+                    }
+                }
+            }
+            drop(jobs_tx); // unwinds prep + execute
+            join_annotated(exec, "shard exec thread")?
+        })
+        .map_err(|e| anyhow!("spawning shard {index} intake thread: {e}"))?;
+
+    Ok((
+        ShardPorts {
+            forecast_tx,
+            event_tx,
+            delivery: Arc::clone(&delivery),
+            metrics: Arc::clone(&metrics),
+        },
+        ShardRuntime { intake, metrics, delivery },
+    ))
+}
+
+/// TTL-sweep every shard's outboxes, fold the ledgers into the per-shard
+/// metrics, and return the merged process report plus the summed delivery
+/// ledger (identity-preserving — see [`sum_delivery`]).
+pub fn process_report(ports: &[ShardPorts]) -> (String, DeliveryStats) {
+    let now = Instant::now();
+    for p in ports {
+        let stats = {
+            let mut d = lock(&p.delivery);
+            d.expire(now);
+            d.stats()
+        };
+        lock(&p.metrics).set_delivery(stats);
+    }
+    let guards: Vec<_> = ports.iter().map(|p| lock(&p.metrics)).collect();
+    let refs: Vec<&Metrics> = guards.iter().map(|g| &**g).collect();
+    let text = merged_report(&refs);
+    let delivery = refs
+        .iter()
+        .filter_map(|m| m.delivery())
+        .fold(DeliveryStats::default(), sum_delivery);
+    (text, delivery)
+}
+
+/// The running sharded server: joinable from the thread that called
+/// [`serve_net`].  Call [`shutdown`](NetServerHandle::shutdown) to drain
+/// (see the module docs for the order) — dropping the handle without it
+/// leaves the listener running.
+pub struct NetServerHandle {
+    addr: SocketAddr,
+    flag: Arc<AtomicBool>,
+    ports: Arc<Vec<ShardPorts>>,
+    acceptor: JoinHandle<()>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    shards: Vec<ShardRuntime>,
+    closed: Arc<AtomicUsize>,
+}
+
+impl NetServerHandle {
+    /// The bound listen address (resolves port 0 to the ephemeral pick).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Connections fully served and closed so far (drives the CLI's
+    /// `--exit-after`).
+    pub fn connections_closed(&self) -> usize {
+        self.closed.load(Ordering::Relaxed)
+    }
+
+    /// Graceful drain; returns the merged process report.  Every thread
+    /// the server spawned is joined here — acceptor, connections, then
+    /// each shard (whose intake joins its exec internally).
+    pub fn shutdown(self) -> Result<String> {
+        let NetServerHandle { addr: _, flag, ports, acceptor, conns, shards, closed: _ } = self;
+        flag.store(true, Ordering::Relaxed);
+        join_annotated(acceptor, "net acceptor thread")?;
+        for conn in std::mem::take(&mut *lock(&conns)) {
+            join_annotated(conn, "net connection thread")?;
+        }
+        // last ports clone: shard intake channels close and the drain
+        // cascade runs (module docs)
+        drop(ports);
+        let mut reports = Vec::with_capacity(shards.len());
+        for (i, rt) in shards.into_iter().enumerate() {
+            join_annotated(rt.intake, "shard intake thread")
+                .with_context(|| format!("shard {i}"))??;
+            let stats = {
+                let mut d = lock(&rt.delivery);
+                d.expire(Instant::now());
+                d.stats()
+            };
+            lock(&rt.metrics).set_delivery(stats);
+            reports.push(rt.metrics);
+        }
+        let guards: Vec<_> = reports.iter().map(|m| lock(m)).collect();
+        let refs: Vec<&Metrics> = guards.iter().map(|g| &**g).collect();
+        Ok(merged_report(&refs))
+    }
+}
+
+/// Bind `cfg.addr` and serve `cfg.shards` independent dual serve loops
+/// behind it.  `batch_device(i)` / `stream_device(i)` build shard `i`'s
+/// device closures (so tests and `serve-net` seed per-shard fault plans);
+/// each shard gets a clone of `spec`.
+pub fn serve_net<MB, MS, XB, XS>(
+    cfg: &NetConfig,
+    spec: &ShardSpec,
+    pool: &'static WorkerPool,
+    mut batch_device: MB,
+    mut stream_device: MS,
+) -> Result<NetServerHandle>
+where
+    MB: FnMut(usize) -> XB,
+    MS: FnMut(usize) -> XS,
+    XB: FnMut(&mut ReadyBatch) -> Result<Vec<Vec<f32>>> + Send + 'static,
+    XS: FnMut(&mut DecodeStep) -> Result<Vec<Vec<f32>>> + Send + 'static,
+{
+    cfg.validate()?;
+    let router = Arc::new(ShardRouter::new(cfg.shards)?);
+    let mut ports = Vec::with_capacity(cfg.shards);
+    let mut shards = Vec::with_capacity(cfg.shards);
+    for i in 0..cfg.shards {
+        let (p, rt) = spawn_shard(i, spec.clone(), pool, batch_device(i), stream_device(i))?;
+        ports.push(p);
+        shards.push(rt);
+    }
+    let ports = Arc::new(ports);
+
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("binding net listener on {}", cfg.addr))?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let flag = Arc::new(AtomicBool::new(false));
+    let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+    let closed = Arc::new(AtomicUsize::new(0));
+    let live = Arc::new(AtomicUsize::new(0));
+
+    let a_ports = Arc::clone(&ports);
+    let a_flag = Arc::clone(&flag);
+    let a_conns = Arc::clone(&conns);
+    let a_closed = Arc::clone(&closed);
+    let max_conns = cfg.max_conns;
+    let max_frame_bytes = cfg.max_frame_bytes;
+    let acceptor = thread::Builder::new()
+        .name("tomers-net-accept".into())
+        .spawn(move || {
+            while !a_flag.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        if live.load(Ordering::Relaxed) >= max_conns {
+                            // over the cap: error frame + close, never queue
+                            let _ = stream.set_nonblocking(false);
+                            let reply = protocol::response_to_json(&Response::Error {
+                                context: "accept".into(),
+                                reason: format!("connection limit {max_conns} reached"),
+                            })
+                            .to_string();
+                            let mut s = stream;
+                            let _ = write_frame(&mut s, &reply, max_frame_bytes);
+                            continue;
+                        }
+                        live.fetch_add(1, Ordering::Relaxed);
+                        let c_ports = Arc::clone(&a_ports);
+                        let c_router = Arc::clone(&router);
+                        let c_flag = Arc::clone(&a_flag);
+                        let c_live = Arc::clone(&live);
+                        let c_closed = Arc::clone(&a_closed);
+                        let spawned = thread::Builder::new()
+                            .name("tomers-net-conn".into())
+                            .spawn(move || {
+                                handle_conn(stream, &c_ports, &c_router, max_frame_bytes, &c_flag);
+                                c_live.fetch_sub(1, Ordering::Relaxed);
+                                c_closed.fetch_add(1, Ordering::Relaxed);
+                            });
+                        match spawned {
+                            Ok(handle) => lock(&a_conns).push(handle),
+                            Err(_) => {
+                                live.fetch_sub(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        thread::sleep(Duration::from_millis(5));
+                    }
+                    // transient accept errors (per-connection resets):
+                    // keep accepting
+                    Err(_) => thread::sleep(Duration::from_millis(5)),
+                }
+            }
+        })
+        .map_err(|e| anyhow!("spawning net acceptor: {e}"))?;
+
+    Ok(NetServerHandle { addr, flag, ports, acceptor, conns, shards, closed })
+}
+
+/// Serialize one response frame onto the shared write half.  Write errors
+/// are swallowed: an abruptly-disconnected peer must not take the server
+/// down, and its session outboxes survive for reconnect-collect.
+fn send_reply(stream: &Arc<Mutex<TcpStream>>, max_frame_bytes: usize, resp: &Response) {
+    let payload = protocol::response_to_json(resp).to_string();
+    let mut s = lock(stream);
+    let _ = write_frame(&mut *s, &payload, max_frame_bytes);
+}
+
+/// One connection: a reader thread (this function) decoding frames and
+/// routing them, plus a writer thread fanning terminal forecast responses
+/// back.  Both serialize frames under one write-half mutex so frames
+/// never interleave.
+fn handle_conn(
+    stream: TcpStream,
+    ports: &Arc<Vec<ShardPorts>>,
+    router: &Arc<ShardRouter>,
+    max_frame_bytes: usize,
+    shutdown: &Arc<AtomicBool>,
+) {
+    let _ = stream.set_nonblocking(false);
+    // the read timeout doubles as the shutdown poll cadence
+    if stream.set_read_timeout(Some(Duration::from_millis(50))).is_err() {
+        return;
+    }
+    let Ok(write_half) = stream.try_clone() else { return };
+    let write_half = Arc::new(Mutex::new(write_half));
+
+    // Terminal forecast responses arrive whenever their batch executes,
+    // on the shard's exec thread — a dedicated writer drains them so the
+    // reader keeps decoding while batches are in flight.
+    let (resp_tx, resp_rx) = mpsc::channel::<ForecastResponse>();
+    let w_stream = Arc::clone(&write_half);
+    let w_router = Arc::clone(router);
+    let writer = thread::spawn(move || {
+        for resp in resp_rx.iter() {
+            let shard = w_router.shard_for(resp.id);
+            let payload =
+                protocol::response_to_json(&protocol::forecast_response(&resp, shard))
+                    .to_string();
+            let mut s = lock(&w_stream);
+            let _ = write_frame(&mut *s, &payload, max_frame_bytes);
+        }
+    });
+
+    let mut dec = FrameDecoder::new(max_frame_bytes);
+    let mut stream = stream;
+    let mut buf = [0u8; 4096];
+    loop {
+        if shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => break, // clean EOF (or truncated stream — same close)
+            Ok(n) => {
+                if let Err(e) = dec.push(&buf[..n]) {
+                    // framing errors (oversized header, bad UTF-8) lose
+                    // byte-stream sync: report and close this connection
+                    send_reply(
+                        &write_half,
+                        max_frame_bytes,
+                        &Response::Error { context: "framing".into(), reason: format!("{e:#}") },
+                    );
+                    break;
+                }
+                while let Some(payload) = dec.next() {
+                    handle_frame(&payload, ports, router, &write_half, &resp_tx, max_frame_bytes);
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(_) => break,
+        }
+    }
+    // writer exits once every in-flight request's sender resolves —
+    // batches already queued keep flushing on their max_wait deadline
+    drop(resp_tx);
+    let _ = writer.join();
+}
+
+/// Decode + route one request frame.  Malformed JSON in a well-framed
+/// payload answers an error frame and keeps the connection alive — only
+/// framing-level violations close it.
+fn handle_frame(
+    payload: &str,
+    ports: &[ShardPorts],
+    router: &ShardRouter,
+    stream: &Arc<Mutex<TcpStream>>,
+    resp_tx: &mpsc::Sender<ForecastResponse>,
+    max_frame_bytes: usize,
+) {
+    let req = match protocol::parse_request(payload) {
+        Ok(r) => r,
+        Err(e) => {
+            send_reply(
+                stream,
+                max_frame_bytes,
+                &Response::Error { context: "parse".into(), reason: format!("{e:#}") },
+            );
+            return;
+        }
+    };
+    match req {
+        Request::Forecast { id, context } => {
+            let shard = router.shard_for(id);
+            let pending: Pending =
+                (ForecastRequest { id, context }, Instant::now(), resp_tx.clone());
+            match ports[shard].forecast_tx.try_send(pending) {
+                Ok(()) => {}
+                Err(TrySendError::Full((req, t0, rtx))) => {
+                    reject_forecast(shard, &ports[shard].metrics, req, t0, rtx);
+                }
+                Err(TrySendError::Disconnected(_)) => send_reply(
+                    stream,
+                    max_frame_bytes,
+                    &Response::Error {
+                        context: "forecast".into(),
+                        reason: format!("shard {shard} is down"),
+                    },
+                ),
+            }
+        }
+        Request::Append { session, points } => {
+            let shard = router.shard_for(session);
+            match ports[shard].event_tx.try_send(StreamEvent::Append { session, points }) {
+                Ok(()) => {
+                    send_reply(stream, max_frame_bytes, &Response::Appended { session, shard });
+                }
+                Err(TrySendError::Full(_)) => send_reply(
+                    stream,
+                    max_frame_bytes,
+                    &Response::Error {
+                        context: "append".into(),
+                        reason: format!("backpressure: shard {shard} stream intake full"),
+                    },
+                ),
+                Err(TrySendError::Disconnected(_)) => send_reply(
+                    stream,
+                    max_frame_bytes,
+                    &Response::Error {
+                        context: "append".into(),
+                        reason: format!("shard {shard} is down"),
+                    },
+                ),
+            }
+        }
+        Request::Collect { session } => {
+            let shard = router.shard_for(session);
+            let entries = lock(&ports[shard].delivery).collect(session);
+            send_reply(
+                stream,
+                max_frame_bytes,
+                &Response::Collected { session, shard, entries },
+            );
+        }
+        Request::Ack { session, upto } => {
+            let shard = router.shard_for(session);
+            let count = lock(&ports[shard].delivery).ack(session, upto, Instant::now());
+            send_reply(stream, max_frame_bytes, &Response::Acked { session, shard, count });
+        }
+        Request::Report => {
+            let (text, delivery) = process_report(ports);
+            send_reply(stream, max_frame_bytes, &Response::Report { text, delivery });
+        }
+    }
+}

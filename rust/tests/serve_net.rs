@@ -1,0 +1,405 @@
+//! Loopback acceptance suite for the sharded network front (ISSUE 8,
+//! DESIGN.md §12) — real TCP on 127.0.0.1, ephemeral ports, synthetic
+//! per-shard devices behind seeded [`FaultPlan`]s:
+//!
+//! * liveness over the wire: >= 200 pipelined forecasts and >= 20 stream
+//!   sessions against a 2-shard server under 20% injected device faults —
+//!   every request answers with exactly one terminal response;
+//! * routing: the shard each response reports equals what an independent
+//!   client-side [`ShardRouter`] computes, for every id (the ring is a
+//!   pure function of the id — golden-pinned in `net::router` and
+//!   cross-checked by `scripts/crosscheck_net.py`);
+//! * protocol robustness: malformed JSON answers an error frame and the
+//!   connection keeps serving; an oversized frame header is rejected and
+//!   the connection closed; an abrupt disconnect leaves outboxes
+//!   collectable on reconnect until TTL expiry retires them;
+//! * backpressure: a full shard intake answers a terminal
+//!   `Failed("backpressure: …")` on the wire, never a hang;
+//! * shutdown: `NetServerHandle::shutdown` joins every thread it spawned
+//!   (acceptor, connections, shard intake + exec) and returns the merged
+//!   per-shard report.
+
+#![allow(unknown_lints)]
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use tomers::coordinator::{
+    default_host_merge, DecodeStep, FaultPlan, FaultPolicy, ForecastOutcome, MergePolicy,
+    ReadyBatch, Variant, VariantMeta,
+};
+use tomers::net::{
+    parse_response, serve_net, write_frame, FrameDecoder, NetClient, NetConfig,
+    NetServerHandle, Request, Response, ShardRouter, ShardSpec, DEFAULT_MAX_FRAME_BYTES,
+};
+use tomers::runtime::WorkerPool;
+use tomers::streaming::StreamingConfig;
+
+const M: usize = 32; // context length of the synthetic "v" variant
+const HORIZON: usize = 8;
+
+fn spec(max_queue: usize, ttl: Duration) -> ShardSpec {
+    ShardSpec {
+        policy: MergePolicy::fixed(Variant::fixed("v", 0)),
+        metas: BTreeMap::from([("v".to_string(), VariantMeta { capacity: 4, m: M })]),
+        merge: default_host_merge(),
+        prep_slots: 2,
+        stream_meta: VariantMeta { capacity: 4, m: 16 },
+        stream_cfg: StreamingConfig { min_new: 4, d: 1, ..Default::default() },
+        max_wait: Duration::from_millis(5),
+        max_queue,
+        faults: FaultPolicy {
+            backoff_base: Duration::from_micros(200),
+            backoff_max: Duration::from_millis(2),
+            request_deadline: Some(Duration::from_secs(30)),
+            step_deadline: Some(Duration::from_millis(100)),
+            outbox_cap: 4,
+            forecast_ttl: ttl,
+            ..FaultPolicy::default()
+        },
+    }
+}
+
+/// A 127.0.0.1:0 server with `cmd_serve_net`'s synthetic device shape;
+/// `device_sleep` slows the batch device down (backpressure tests).
+fn spawn(
+    shards: usize,
+    fault_rate: f64,
+    max_queue: usize,
+    ttl: Duration,
+    device_sleep: Duration,
+) -> NetServerHandle {
+    let cfg = NetConfig { shards, ..NetConfig::default() };
+    serve_net(
+        &cfg,
+        &spec(max_queue, ttl),
+        WorkerPool::global(),
+        |i| {
+            let plan = Arc::new(Mutex::new(FaultPlan::new(7 + i as u64, fault_rate)));
+            move |ready: &mut ReadyBatch| -> anyhow::Result<Vec<Vec<f32>>> {
+                if device_sleep > Duration::ZERO {
+                    std::thread::sleep(device_sleep);
+                }
+                FaultPlan::gate(&plan)?;
+                Ok((0..ready.rows)
+                    .map(|r| vec![ready.slab[(r + 1) * M - 1]; HORIZON])
+                    .collect())
+            }
+        },
+        |i| {
+            let plan = Arc::new(Mutex::new(FaultPlan::new(1000 + i as u64, fault_rate)));
+            move |step: &mut DecodeStep| -> anyhow::Result<Vec<Vec<f32>>> {
+                FaultPlan::gate(&plan)?;
+                // stream_meta is (capacity 4, m 16) at d=1 -> 16-wide rows
+                Ok((0..step.rows)
+                    .map(|r| vec![step.slab[(r + 1) * 16 - 1]; HORIZON])
+                    .collect())
+            }
+        },
+    )
+    .expect("server must start")
+}
+
+fn connect(handle: &NetServerHandle) -> NetClient {
+    let mut c = NetClient::connect_retry(
+        &handle.addr().to_string(),
+        DEFAULT_MAX_FRAME_BYTES,
+        20,
+    )
+    .expect("loopback connect");
+    c.set_timeout(Some(Duration::from_secs(10))).unwrap();
+    c
+}
+
+/// THE acceptance pin: the wire-level mirror of `serve_faults` — 200
+/// batch forecasts + 20 stream sessions against 2 shards at 20% injected
+/// device faults, all over one pipelined TCP connection.
+#[test]
+fn loopback_roundtrip_with_faults_leaves_every_request_terminal() {
+    let (requests, sessions, rounds) = (200u64, 20u64, 4usize);
+    let handle = spawn(2, 0.2, 256, Duration::from_secs(60), Duration::ZERO);
+    let router = ShardRouter::new(2).unwrap();
+    let mut c = connect(&handle);
+
+    let base = 10_000u64;
+    for i in 0..requests {
+        let context: Vec<f32> = (0..M).map(|j| ((i as usize + j) % 7) as f32 * 0.1).collect();
+        c.send(&Request::Forecast { id: base + i, context }).unwrap();
+    }
+    let appends = sessions as usize * rounds;
+    for round in 0..rounds {
+        for s in 0..sessions {
+            let points: Vec<f32> =
+                (0..4).map(|j| ((round * 4 + j) as f32 * 0.05).sin()).collect();
+            c.send(&Request::Append { session: s, points }).unwrap();
+        }
+    }
+
+    // drain: responses arrive in server order, tallied by type
+    let mut per_shard = [0usize; 2];
+    let mut terminal = 0usize;
+    let mut append_ok = 0usize;
+    let mut session_shard: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut seen_forecast = 0u64;
+    let mut seen_append = 0usize;
+    while seen_forecast < requests || seen_append < appends {
+        match c.recv().expect("liveness: every pipelined request answers") {
+            Response::Forecast { id, outcome, shard, .. } => {
+                seen_forecast += 1;
+                assert_eq!(shard, router.shard_for(id), "forecast {id} routed off-ring");
+                per_shard[shard] += 1;
+                match outcome {
+                    ForecastOutcome::Delivered
+                    | ForecastOutcome::DeadlineExceeded
+                    | ForecastOutcome::Failed(_) => terminal += 1,
+                }
+            }
+            Response::Appended { session, shard } => {
+                seen_append += 1;
+                append_ok += 1;
+                assert_eq!(shard, router.shard_for(session), "session {session} off-ring");
+                let prev = *session_shard.entry(session).or_insert(shard);
+                assert_eq!(prev, shard, "session {session} moved shards");
+            }
+            Response::Error { context, reason } => {
+                assert!(
+                    context == "append" && reason.contains("backpressure"),
+                    "unexpected error frame: {context}: {reason}"
+                );
+                seen_append += 1;
+            }
+            other => panic!("unexpected response while draining: {other:?}"),
+        }
+    }
+    assert_eq!(terminal as u64, requests, "every forecast exactly one terminal outcome");
+    assert_eq!(per_shard.iter().sum::<usize>() as u64, requests);
+    assert!(per_shard[0] > 0 && per_shard[1] > 0, "both shards served: {per_shard:?}");
+    assert!(append_ok > 0, "at least some appends must land");
+
+    // collect + ack every session, then the summed ledger must balance
+    std::thread::sleep(Duration::from_millis(200));
+    let mut collected = 0usize;
+    for s in 0..sessions {
+        match c.call(&Request::Collect { session: s }).unwrap() {
+            Response::Collected { session, shard, entries } => {
+                assert_eq!(session, s);
+                assert_eq!(shard, router.shard_for(s));
+                assert!(entries.windows(2).all(|w| w[0].0 < w[1].0), "order violated");
+                collected += entries.len();
+                if let Some(&(last, _)) = entries.last() {
+                    match c.call(&Request::Ack { session: s, upto: last }).unwrap() {
+                        Response::Acked { session, count, .. } => {
+                            assert_eq!(session, s);
+                            assert!(count > 0);
+                        }
+                        other => panic!("expected acked, got {other:?}"),
+                    }
+                }
+            }
+            other => panic!("expected collected, got {other:?}"),
+        }
+    }
+    assert!(collected > 0, "stream sessions must produce rolling forecasts");
+    match c.call(&Request::Report).unwrap() {
+        Response::Report { text, delivery: d } => {
+            assert!(text.contains("process: shards=2"), "merged report: {text}");
+            assert!(text.contains("shard=0") && text.contains("shard=1"));
+            assert_eq!(
+                d.enqueued,
+                d.acked + d.expired_undelivered + d.dropped_overflow + d.pending,
+                "summed ledger must balance: {d:?}"
+            );
+        }
+        other => panic!("expected report, got {other:?}"),
+    }
+    drop(c);
+    let report = handle.shutdown().expect("drain joins every thread");
+    assert!(report.contains("process: shards=2"), "{report}");
+}
+
+/// Malformed JSON inside a well-formed frame answers a parse error and
+/// the connection keeps serving; an oversized frame header is rejected
+/// (before allocation — pinned in `net::frame`) and closes it.
+#[test]
+fn malformed_and_oversized_frames() {
+    let handle = spawn(1, 0.0, 64, Duration::from_secs(60), Duration::ZERO);
+
+    // raw socket: NetClient (rightly) cannot send garbage
+    let mut s = TcpStream::connect(handle.addr()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut dec = FrameDecoder::new(DEFAULT_MAX_FRAME_BYTES);
+    let mut read_one = |s: &mut TcpStream, dec: &mut FrameDecoder| -> Response {
+        loop {
+            if let Some(p) = dec.next() {
+                return parse_response(&p).unwrap();
+            }
+            let mut buf = [0u8; 4096];
+            let n = s.read(&mut buf).unwrap();
+            assert!(n > 0, "connection closed while awaiting a response");
+            dec.push(&buf[..n]).unwrap();
+        }
+    };
+
+    write_frame(&mut s, "{\"type\": \"forecast\"", DEFAULT_MAX_FRAME_BYTES).unwrap();
+    match read_one(&mut s, &mut dec) {
+        Response::Error { context, .. } => assert_eq!(context, "parse"),
+        other => panic!("expected a parse error, got {other:?}"),
+    }
+    // same connection still serves
+    write_frame(
+        &mut s,
+        "{\"type\": \"collect\", \"session\": 1}",
+        DEFAULT_MAX_FRAME_BYTES,
+    )
+    .unwrap();
+    match read_one(&mut s, &mut dec) {
+        Response::Collected { session: 1, entries, .. } => assert!(entries.is_empty()),
+        other => panic!("expected an empty collect, got {other:?}"),
+    }
+
+    // framing violation: a header larger than max_frame_bytes — error
+    // frame, then close
+    s.write_all(&u32::MAX.to_be_bytes()).unwrap();
+    match read_one(&mut s, &mut dec) {
+        Response::Error { context, reason } => {
+            assert_eq!(context, "framing");
+            assert!(reason.contains("max_frame_bytes"), "{reason}");
+        }
+        other => panic!("expected a framing error, got {other:?}"),
+    }
+    let mut buf = [0u8; 64];
+    let mut closed = false;
+    for _ in 0..100 {
+        match s.read(&mut buf) {
+            Ok(0) => {
+                closed = true;
+                break;
+            }
+            Ok(_) => {}
+            Err(_) => {
+                closed = true; // reset counts as closed too
+                break;
+            }
+        }
+    }
+    assert!(closed, "a framing violation must close the connection");
+    handle.shutdown().unwrap();
+}
+
+/// An abrupt disconnect must not lose undelivered forecasts: the
+/// session's outbox survives for a reconnecting collector, and TTL expiry
+/// (not the disconnect) is what finally retires unacked entries.
+#[test]
+fn disconnect_preserves_outbox_until_ttl() {
+    let ttl = Duration::from_millis(300);
+    let handle = spawn(1, 0.0, 64, ttl, Duration::ZERO);
+
+    let mut c1 = connect(&handle);
+    for round in 0..3 {
+        let points: Vec<f32> = (0..4).map(|j| (round * 4 + j) as f32 * 0.1).collect();
+        match c1.call(&Request::Append { session: 5, points }).unwrap() {
+            Response::Appended { session: 5, .. } => {}
+            other => panic!("expected appended, got {other:?}"),
+        }
+    }
+    // let the decode steps land their rolling forecasts, then vanish
+    // without collecting
+    std::thread::sleep(Duration::from_millis(250));
+    drop(c1);
+
+    let mut c2 = connect(&handle);
+    let n = match c2.call(&Request::Collect { session: 5 }).unwrap() {
+        Response::Collected { entries, .. } => entries.len(),
+        other => panic!("expected collected, got {other:?}"),
+    };
+    assert!(n > 0, "outbox must survive the disconnect");
+
+    // never acked: once past TTL the report's sweep retires them and the
+    // ledger still balances
+    std::thread::sleep(ttl + Duration::from_millis(150));
+    match c2.call(&Request::Report).unwrap() {
+        Response::Report { delivery: d, .. } => {
+            assert!(d.expired_undelivered > 0, "TTL must retire unacked entries: {d:?}");
+            assert_eq!(d.pending, 0, "nothing may linger past TTL: {d:?}");
+            assert_eq!(d.enqueued, d.acked + d.expired_undelivered + d.dropped_overflow);
+        }
+        other => panic!("expected report, got {other:?}"),
+    }
+    drop(c2);
+    handle.shutdown().unwrap();
+}
+
+/// A full shard intake answers a terminal `Failed("backpressure: …")` on
+/// the wire — fail-fast, never a hang — and fast requests still complete.
+#[test]
+fn backpressure_is_failfast_and_terminal() {
+    let n = 50u64;
+    // max_queue 2 + a slow device: the intake fills almost immediately
+    let handle = spawn(1, 0.0, 2, Duration::from_secs(60), Duration::from_millis(30));
+    let mut c = connect(&handle);
+    for i in 0..n {
+        let context: Vec<f32> = vec![0.5; M];
+        c.send(&Request::Forecast { id: i, context }).unwrap();
+    }
+    let (mut rejected, mut served) = (0u64, 0u64);
+    for _ in 0..n {
+        match c.recv().expect("every forecast still answers") {
+            Response::Forecast { outcome, .. } => match outcome {
+                ForecastOutcome::Failed(reason) if reason.contains("backpressure") => {
+                    rejected += 1
+                }
+                _ => served += 1,
+            },
+            other => panic!("expected forecasts only, got {other:?}"),
+        }
+    }
+    assert_eq!(rejected + served, n);
+    assert!(rejected > 0, "a 2-deep intake under a slow device must shed load");
+    assert!(served > 0, "shedding must not starve everything");
+    drop(c);
+    handle.shutdown().unwrap();
+}
+
+/// Connections over `max_conns` get an error frame and are closed, never
+/// queued.
+#[test]
+fn connection_limit_is_enforced() {
+    let cfg = NetConfig { shards: 1, max_conns: 1, ..NetConfig::default() };
+    let handle = serve_net(
+        &cfg,
+        &spec(64, Duration::from_secs(60)),
+        WorkerPool::global(),
+        |_| {
+            |ready: &mut ReadyBatch| -> anyhow::Result<Vec<Vec<f32>>> {
+                Ok(vec![vec![0.0; HORIZON]; ready.rows])
+            }
+        },
+        |_| {
+            |step: &mut DecodeStep| -> anyhow::Result<Vec<Vec<f32>>> {
+                Ok(vec![vec![0.0; HORIZON]; step.rows])
+            }
+        },
+    )
+    .unwrap();
+    let mut c1 = connect(&handle);
+    // a completed roundtrip pins c1 as the one live connection
+    match c1.call(&Request::Collect { session: 1 }).unwrap() {
+        Response::Collected { .. } => {}
+        other => panic!("expected collected, got {other:?}"),
+    }
+    let mut c2 = NetClient::connect(&handle.addr().to_string(), DEFAULT_MAX_FRAME_BYTES).unwrap();
+    c2.set_timeout(Some(Duration::from_secs(5))).unwrap();
+    match c2.recv().expect("the refusal must arrive as an error frame") {
+        Response::Error { context, reason } => {
+            assert_eq!(context, "accept");
+            assert!(reason.contains("connection limit"), "{reason}");
+        }
+        other => panic!("expected the limit error, got {other:?}"),
+    }
+    drop(c2);
+    drop(c1);
+    handle.shutdown().unwrap();
+}

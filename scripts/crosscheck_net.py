@@ -1,0 +1,153 @@
+#!/usr/bin/env python3
+"""Transliteration cross-check for the net subsystem (DESIGN.md §12).
+
+Executable verification of the pieces of `rust/src/net/` whose behaviour
+is a *wire contract* — values that, if they drifted, would strand state
+on the wrong shard or desynchronize framing between old and new builds:
+
+  1. `router.rs::mix64` — the SplitMix64 finalizer, bit-for-bit
+     (reference values are also pinned by the Rust unit tests);
+  2. `router.rs::ShardRouter` — ring construction + lookup: the golden
+     (shards, id) -> shard table embedded in the Rust
+     `hash_stability_golden_pins` test must match this transliteration
+     exactly, and the ring must be roughly balanced;
+  3. `frame.rs` — the length-prefixed frame layout: header encoding and
+     the oversized-reject bound;
+  4. `metrics.rs::merged_report` ledger arithmetic — summing per-shard
+     delivery ledgers preserves the identity
+     enqueued == acked + expired_undelivered + dropped_overflow + pending.
+
+All integer arithmetic is explicitly wrapped to 64 bits, so every op is
+the op the Rust code performs.  Run: python3 scripts/crosscheck_net.py
+"""
+
+import bisect
+import struct
+import sys
+
+MASK = (1 << 64) - 1
+
+
+def mix64(x: int) -> int:
+    """rust/src/net/router.rs::mix64 (SplitMix64 finalizer)."""
+    z = (x + 0x9E3779B97F4A7C15) & MASK
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return z ^ (z >> 31)
+
+
+def build_ring(shards: int, vnodes: int = 64):
+    """rust/src/net/router.rs::ShardRouter::with_vnodes."""
+    ring = []
+    for shard in range(shards):
+        for vnode in range(vnodes):
+            point = mix64(mix64(shard) ^ ((vnode * 0xA24BAED4963EE407) & MASK))
+            ring.append((point, shard))
+    ring.sort()
+    return ring
+
+
+def shard_for(ring, ident: int) -> int:
+    """rust partition_point(point < h) + wrap — bisect_left((h,)) is the
+    first index whose (point, shard) tuple is >= (h,)."""
+    h = mix64(ident)
+    idx = bisect.bisect_left(ring, (h,))
+    return ring[idx % len(ring)][1]
+
+
+def check_mixer():
+    # the reference constants the Rust mixer_golden_pins test asserts
+    expect = {
+        0: 0xE220A8397B1DCDAF,  # canonical splitmix64(seed=0) first output
+        1: 0x910A2DEC89025CC1,  # canonical splitmix64(seed=0) second output
+        0xDEADBEEF: 0x4ADFB90F68C9EB9B,
+    }
+    got = {k: mix64(k) for k in expect}
+    for k, e in expect.items():
+        if got[k] != e:
+            sys.exit(f"ERROR: mix64({k:#x}) = {got[k]:#x}, expected {e:#x} — "
+                     "not the SplitMix64 finalizer the router pins")
+    print(f"mixer: mix64(0)={got[0]:#018x} mix64(1)={got[1]:#018x} "
+          f"mix64(0xDEADBEEF)={got[0xDEADBEEF]:#018x}")
+    return got
+
+
+# The golden table `rust/tests` + `router.rs::hash_stability_golden_pins`
+# assert: rows are shard counts 2/3/4, columns the ids below.
+GOLDEN_IDS = [0, 1, 2, 3, 7, 42, 1_000_003, (1 << 64) - 1 >> 13]
+GOLDEN_TABLE = {
+    2: [0, 1, 0, 1, 1, 1, 0, 0],
+    3: [0, 1, 0, 2, 2, 1, 2, 2],
+    4: [3, 1, 0, 2, 2, 1, 3, 2],
+}
+
+
+def check_router():
+    print("router golden table (ids = %s):" % GOLDEN_IDS)
+    table = {}
+    for shards in (2, 3, 4):
+        ring = build_ring(shards)
+        row = [shard_for(ring, i) for i in GOLDEN_IDS]
+        table[shards] = row
+        print(f"  shards={shards}: {row}")
+        expected = GOLDEN_TABLE[shards]
+        if expected is not None and row != expected:
+            sys.exit(f"ERROR: golden drift at shards={shards}: {row} != {expected}")
+    # balance: 4 shards x 64 vnodes over 40k sequential ids
+    ring = build_ring(4)
+    counts = [0, 0, 0, 0]
+    for i in range(40_000):
+        counts[shard_for(ring, i)] += 1
+    print(f"  balance over 40k ids at shards=4: {counts}")
+    if not all(4_000 <= c <= 20_000 for c in counts):
+        sys.exit("ERROR: ring badly imbalanced — vnode hashing broken")
+    # growth moves a bounded fraction (the consistent-hashing property)
+    r3, r4 = build_ring(3), build_ring(4)
+    moved = sum(1 for i in range(40_000) if shard_for(r3, i) != shard_for(r4, i))
+    print(f"  moved 3->4 shards: {moved}/40000")
+    if moved >= 20_000:
+        sys.exit("ERROR: growing the ring reshuffled >= half the ids")
+    return table
+
+
+def check_framing():
+    """frame.rs: u32 big-endian length + UTF-8 payload."""
+    payload = b'{"type":"report"}'
+    frame = struct.pack(">I", len(payload)) + payload
+    if frame[:4] != bytes([0, 0, 0, 17]) or len(frame) != 21:
+        sys.exit("ERROR: frame layout drifted from u32-BE length + payload")
+    # the reject bound: a header declaring max_frame_bytes+1 must be seen
+    # as oversized by an instance configured with that max
+    max_frame = 64
+    declared = struct.unpack(">I", struct.pack(">I", max_frame + 1))[0]
+    if not declared > max_frame:
+        sys.exit("ERROR: oversized-header arithmetic broken")
+    print(f"framing: header BE-u32 ok, oversize bound ok (example frame {len(frame)}B)")
+
+
+def check_ledger_merge():
+    """metrics.rs::merged_report — summed ledgers keep the identity."""
+    shards = [
+        dict(enqueued=10, acked=4, redelivered=1, expired=2, dropped=1, pending=3),
+        dict(enqueued=7, acked=7, redelivered=0, expired=0, dropped=0, pending=0),
+        dict(enqueued=0, acked=0, redelivered=0, expired=0, dropped=0, pending=0),
+    ]
+    for i, s in enumerate(shards):
+        if s["enqueued"] != s["acked"] + s["expired"] + s["dropped"] + s["pending"]:
+            sys.exit(f"ERROR: test fixture shard {i} ledger does not balance")
+    tot = {k: sum(s[k] for s in shards) for k in shards[0]}
+    if tot["enqueued"] != tot["acked"] + tot["expired"] + tot["dropped"] + tot["pending"]:
+        sys.exit("ERROR: ledger identity not preserved under summation")
+    print(f"ledger merge: sum {tot} balances")
+
+
+def main():
+    check_mixer()
+    check_router()
+    check_framing()
+    check_ledger_merge()
+    print("OK: net crosscheck passed")
+
+
+if __name__ == "__main__":
+    main()

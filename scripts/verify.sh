@@ -2,6 +2,11 @@
 # Tier-1 verification + lint gates + merging/serving perf smoke.
 #
 # Runs:
+#   0. python crosschecks (toolchain-independent, before anything cargo):
+#      scripts/crosscheck_kernel.py pins the SIMD kernel semantics and
+#      scripts/crosscheck_net.py pins the net-layer goldens (splitmix64
+#      mixer, consistent-hash routing table, frame header layout, ledger
+#      merge identity) against independent Python reimplementations
 #   1. cargo fmt --check              (style gate; skip: TOMERS_SKIP_LINT=1)
 #   2. cargo clippy -- -D warnings    (lint gate; skip: TOMERS_SKIP_LINT=1)
 #   3. cargo build --release          (offline, default features)
@@ -22,6 +27,11 @@
 #      on every request reaching a terminal outcome (non_terminal=0) and
 #      the delivery monitor's ledger balancing ("delivery accounting
 #      consistent"), the liveness + accounting pins of DESIGN.md §10
+#  10b. net smoke: `tomers serve-net --shards 2` + `tomers client` over
+#      loopback TCP (DESIGN.md §12) — gated on wire-level liveness
+#      (non_terminal=0), per-shard routing counts summing to the total,
+#      the summed delivery ledger balancing, and the server draining with
+#      the merged per-shard report
 #  11. cargo bench --bench merging    (quick mode: acceptance cases only)
 #      asserts BENCH_merging.json reports speedup_batched >= MIN_SPEEDUP on
 #      the t=8192 d=64 k=16 case (pool-backed batched path), zero
@@ -39,11 +49,27 @@
 # Usage: scripts/verify.sh [--no-bench]
 set -euo pipefail
 
-cd "$(dirname "$0")/../rust"
+SCRIPTS_DIR="$(cd "$(dirname "$0")" && pwd)"
+cd "$SCRIPTS_DIR/../rust"
 
 MIN_SPEEDUP="${MIN_SPEEDUP:-3.0}"
 MIN_STREAM_RATIO="${MIN_STREAM_RATIO:-5.0}"
 MIN_SIMD_SPEEDUP="${MIN_SIMD_SPEEDUP:-1.5}"
+
+# Always-on toolchain-independent gates: the Python transliteration
+# crosschecks pin the SIMD kernel semantics and the net-layer goldens
+# (splitmix64 mixer, consistent-hash routing table, frame header layout,
+# ledger merge identity) against independent reimplementations — they run
+# before anything cargo-dependent so a missing Rust toolchain cannot mask
+# a semantic drift.
+if command -v python3 >/dev/null 2>&1; then
+    echo "== crosscheck: scripts/crosscheck_kernel.py =="
+    python3 "$SCRIPTS_DIR/crosscheck_kernel.py"
+    echo "== crosscheck: scripts/crosscheck_net.py =="
+    python3 "$SCRIPTS_DIR/crosscheck_net.py"
+else
+    echo "WARN: python3 unavailable — skipping the kernel/net crosscheck gates" >&2
+fi
 
 if ! command -v cargo >/dev/null 2>&1; then
     echo "ERROR: cargo not found on PATH — install a Rust toolchain (>= 1.70)." >&2
@@ -117,6 +143,51 @@ if ! echo "$FAULT_OUT" | grep -q "delivery accounting consistent"; then
     exit 1
 fi
 echo "OK: fault smoke passed (liveness + delivery accounting under injected faults)"
+
+echo "== net smoke: serve-net + client loopback over real TCP =="
+# ephemeral-ish port in the dynamic range, seeded by PID to dodge collisions
+NET_PORT=$(( 20000 + $$ % 20000 ))
+NET_LOG=$(mktemp)
+cargo run --offline --release --quiet -- serve-net \
+    --shards 2 --addr "127.0.0.1:${NET_PORT}" --fault-rate 0.2 --seed 7 \
+    --exit-after 1 >"$NET_LOG" 2>&1 &
+NET_PID=$!
+NET_CLIENT_OUT=$(cargo run --offline --release --quiet -- client \
+    --addr "127.0.0.1:${NET_PORT}" --shards 2 2>&1) || {
+    echo "$NET_CLIENT_OUT"
+    echo "--- server log ---"; cat "$NET_LOG"
+    kill "$NET_PID" 2>/dev/null || true
+    echo "ERROR: tomers client failed against the sharded net front" >&2
+    exit 1
+}
+echo "$NET_CLIENT_OUT" | grep -E "batch:|routing:|delivery" || true
+if ! echo "$NET_CLIENT_OUT" | grep -q "non_terminal=0"; then
+    echo "ERROR: net front left requests without a terminal outcome over the wire" >&2
+    kill "$NET_PID" 2>/dev/null || true
+    exit 1
+fi
+if ! echo "$NET_CLIENT_OUT" | grep -q "delivery accounting consistent"; then
+    echo "ERROR: summed per-shard delivery ledger did not balance over the wire" >&2
+    kill "$NET_PID" 2>/dev/null || true
+    exit 1
+fi
+if ! echo "$NET_CLIENT_OUT" | grep -Eq "routing: shard0=[0-9]+ shard1=[0-9]+ total="; then
+    echo "ERROR: per-shard routing counts missing from the client report" >&2
+    kill "$NET_PID" 2>/dev/null || true
+    exit 1
+fi
+if ! wait "$NET_PID"; then
+    echo "--- server log ---"; cat "$NET_LOG"
+    echo "ERROR: serve-net did not drain cleanly after the client disconnected" >&2
+    exit 1
+fi
+if ! grep -q "process: shards=2" "$NET_LOG"; then
+    echo "--- server log ---"; cat "$NET_LOG"
+    echo "ERROR: serve-net shutdown did not print the merged per-shard report" >&2
+    exit 1
+fi
+rm -f "$NET_LOG"
+echo "OK: net smoke passed (wire liveness + routing + merged delivery ledger)"
 
 if [[ "${1:-}" == "--no-bench" ]]; then
     echo "OK (bench smoke skipped)"
