@@ -22,6 +22,7 @@ use tomers::net::{
     Response, ShardRouter, ShardSpec, DEFAULT_MAX_FRAME_BYTES,
 };
 use tomers::net::write_frame;
+use tomers::obs::ObsConfig;
 use tomers::runtime::WorkerPool;
 use tomers::streaming::StreamingConfig;
 use tomers::util::bench;
@@ -77,6 +78,7 @@ fn main() {
         max_wait: Duration::from_millis(1),
         max_queue: 4096,
         faults: FaultPolicy::default(),
+        obs: ObsConfig::default(),
     };
     let handle = serve_net(
         &NetConfig { shards: 2, ..NetConfig::default() },

@@ -1,0 +1,145 @@
+//! Observability overhead bench (DESIGN.md §13): the loopback serving
+//! path from `benches/net.rs`, run twice — span recorder + stage
+//! histograms ON (the default) vs the recorder disabled — plus the
+//! microbenches of the two primitives that sit on every request
+//! (histogram record, span record).  Writes `BENCH_obs.json`:
+//!
+//! * `rps_on` / `rps_off` — pipelined loopback requests/sec with the
+//!   recorder enabled / disabled
+//! * `overhead_pct` — `(rps_off - rps_on) / rps_off * 100`; the §13
+//!   budget is <= 2% and `scripts/verify.sh` gates on it
+//!   (`OBS_MAX_OVERHEAD`, default 2.0)
+//!
+//! Env: `TOMERS_BENCH_QUICK=1` for few iterations,
+//! `TOMERS_BENCH_OBS_OUT=path` to redirect the JSON (default
+//! `BENCH_obs.json` in the package root).
+
+#![allow(unknown_lints)]
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use tomers::coordinator::{
+    default_host_merge, DecodeStep, FaultPolicy, MergePolicy, ReadyBatch, Variant, VariantMeta,
+};
+use tomers::json::Json;
+use tomers::net::{
+    serve_net, NetClient, NetConfig, Request, Response, ShardSpec, DEFAULT_MAX_FRAME_BYTES,
+};
+use tomers::obs::{recorder, Histogram, ObsConfig, Stage};
+use tomers::runtime::WorkerPool;
+use tomers::streaming::StreamingConfig;
+use tomers::util::bench;
+
+const M: usize = 32;
+const HORIZON: usize = 8;
+
+/// One loopback serving run (the `benches/net.rs` end-to-end shape):
+/// pipeline `n` forecasts through a 2-shard server with an instant
+/// device, return requests/sec.
+fn loopback_rps(n: u64) -> f64 {
+    let spec = ShardSpec {
+        policy: MergePolicy::fixed(Variant::fixed("v", 0)),
+        metas: BTreeMap::from([("v".to_string(), VariantMeta { capacity: 4, m: M })]),
+        merge: default_host_merge(),
+        prep_slots: 2,
+        stream_meta: VariantMeta { capacity: 4, m: 16 },
+        stream_cfg: StreamingConfig { min_new: 4, d: 1, ..Default::default() },
+        max_wait: Duration::from_millis(1),
+        max_queue: 4096,
+        faults: FaultPolicy::default(),
+        obs: ObsConfig::default(),
+    };
+    let handle = serve_net(
+        &NetConfig { shards: 2, ..NetConfig::default() },
+        &spec,
+        WorkerPool::global(),
+        |_| {
+            |ready: &mut ReadyBatch| -> anyhow::Result<Vec<Vec<f32>>> {
+                Ok(vec![vec![0.0; HORIZON]; ready.rows])
+            }
+        },
+        |_| {
+            |step: &mut DecodeStep| -> anyhow::Result<Vec<Vec<f32>>> {
+                Ok(vec![vec![0.0; HORIZON]; step.rows])
+            }
+        },
+    )
+    .expect("bench server");
+    let mut c = NetClient::connect_retry(&handle.addr().to_string(), DEFAULT_MAX_FRAME_BYTES, 20)
+        .expect("loopback connect");
+    c.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    let t0 = std::time::Instant::now();
+    for i in 0..n {
+        let context: Vec<f32> = (0..M).map(|j| ((i as usize + j) % 7) as f32 * 0.1).collect();
+        c.send(&Request::Forecast { id: i, context }).unwrap();
+    }
+    let mut done = 0u64;
+    while done < n {
+        match c.recv().expect("liveness") {
+            Response::Forecast { .. } => done += 1,
+            other => panic!("unexpected response: {other:?}"),
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    drop(c);
+    handle.shutdown().expect("drain");
+    n as f64 / dt.max(1e-9)
+}
+
+fn main() {
+    let quick = std::env::var("TOMERS_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let out_path =
+        std::env::var("TOMERS_BENCH_OBS_OUT").unwrap_or_else(|_| "BENCH_obs.json".to_string());
+    println!("== bench: obs ==");
+
+    // primitive: one histogram record (sits on every request + stage)
+    let mut h = Histogram::new(-20, 7).unwrap();
+    let (mean, _) = bench(5, if quick { 200 } else { 2000 }, || {
+        for i in 0..1000u32 {
+            h.record(1e-4 * (1.0 + i as f64));
+        }
+        std::hint::black_box(h.count());
+    });
+    println!("hist.record x1000           {:>10.2}us", mean * 1e6);
+
+    // primitive: one span record into the global ring (sampled path)
+    let cfg = ObsConfig::default();
+    cfg.apply();
+    let t0 = std::time::Instant::now();
+    let (mean, _) = bench(5, if quick { 200 } else { 2000 }, || {
+        for i in 0..1000u64 {
+            recorder().record(i, Stage::Exec, 0, t0, Duration::from_micros(50), 4);
+        }
+    });
+    println!("span.record x1000           {:>10.2}us", mean * 1e6);
+
+    // end-to-end: the same loopback serving run, recorder on vs off.
+    // Interleave a warmup so thread-pool and allocator state is identical
+    // for both measured runs.
+    let n: u64 = if quick { 400 } else { 2000 };
+    let _ = loopback_rps(n.min(200)); // warmup
+    cfg.apply(); // recorder enabled, default ring
+    let rps_on = loopback_rps(n);
+    recorder().configure(cfg.trace_ring, cfg.sample_every, false);
+    let rps_off = loopback_rps(n);
+    recorder().configure(cfg.trace_ring, cfg.sample_every, true);
+    let overhead_pct = (rps_off - rps_on) / rps_off.max(1e-9) * 100.0;
+    println!("loopback recorder on        {rps_on:>10.1} req/s");
+    println!("loopback recorder off       {rps_off:>10.1} req/s");
+    println!("recorder overhead           {overhead_pct:>10.2}%");
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("obs")),
+        ("schema", Json::num(1.0)),
+        ("quick", Json::Bool(quick)),
+        ("requests", Json::num(n as f64)),
+        ("rps_on", Json::num(rps_on)),
+        ("rps_off", Json::num(rps_off)),
+        ("overhead_pct", Json::num(overhead_pct)),
+    ]);
+    match std::fs::write(&out_path, report.to_string_pretty()) {
+        Ok(()) => println!("obs record -> {out_path}"),
+        Err(e) => eprintln!("WARN: could not write {out_path}: {e}"),
+    }
+}

@@ -63,6 +63,7 @@ use crate::coordinator::{FaultPolicy, ServerConfig};
 use crate::json::Json;
 use crate::merging::{Accum, MergeMode, MergeSpec};
 use crate::net::NetConfig;
+use crate::obs::ObsConfig;
 use crate::streaming::{StreamPolicy, StreamingConfig};
 
 #[derive(Clone, Debug)]
@@ -87,6 +88,9 @@ pub struct ServeFileConfig {
     /// sharded network serving front (the `"net"` block, DESIGN.md §12);
     /// `None` = in-process serving only.  Consumed by `tomers serve-net`.
     pub net: Option<NetConfig>,
+    /// observability: trace-ring capacity/sampling and latency-histogram
+    /// bounds (the `"obs"` block, DESIGN.md §13; defaults when omitted)
+    pub obs: ObsConfig,
 }
 
 /// Error unless `v` is a JSON object whose every key is in `allowed`
@@ -383,6 +387,49 @@ pub fn net_from_json(v: &Json, path: &str) -> Result<NetConfig> {
     Ok(cfg)
 }
 
+/// Parse an `"obs"` JSON block into a validated [`ObsConfig`] — the
+/// observability settings (DESIGN.md §13).  Same strictness as the other
+/// blocks; every field defaults from [`ObsConfig::default`].  The
+/// histogram exponents are powers of two: the latency histogram covers
+/// `[2^hist_min_exp, 2^hist_max_exp)` seconds.
+pub fn obs_from_json(v: &Json, path: &str) -> Result<ObsConfig> {
+    reject_unknown_keys(
+        v,
+        path,
+        &["trace_ring", "sample_every", "hist_min_exp", "hist_max_exp"],
+    )?;
+    let defaults = ObsConfig::default();
+    let get_i32 = |key: &str, dflt: i32| -> Result<i32> {
+        match v.get(key) {
+            Some(x) => {
+                let n = x.as_f64()?;
+                ensure!(
+                    n.fract() == 0.0 && (-1022.0..=1023.0).contains(&n),
+                    "{path}: {key} must be an integer binary exponent in [-1022, 1023]"
+                );
+                Ok(n as i32)
+            }
+            None => Ok(dflt),
+        }
+    };
+    let cfg = ObsConfig {
+        trace_ring: match v.get("trace_ring") {
+            Some(x) => x.as_usize().with_context(|| format!("{path}: bad trace_ring"))?,
+            None => defaults.trace_ring,
+        },
+        sample_every: match v.get("sample_every") {
+            Some(x) => {
+                x.as_usize().with_context(|| format!("{path}: bad sample_every"))? as u64
+            }
+            None => defaults.sample_every,
+        },
+        hist_min_exp: get_i32("hist_min_exp", defaults.hist_min_exp)?,
+        hist_max_exp: get_i32("hist_max_exp", defaults.hist_max_exp)?,
+    };
+    cfg.validate().with_context(|| format!("invalid {path}"))?;
+    Ok(cfg)
+}
+
 impl ServeFileConfig {
     pub fn load(path: &Path) -> Result<ServeFileConfig> {
         let text = std::fs::read_to_string(path)
@@ -405,6 +452,7 @@ impl ServeFileConfig {
                 "spec_source",
                 "faults",
                 "net",
+                "obs",
             ],
         )?;
         let artifact_dir = PathBuf::from(
@@ -514,6 +562,12 @@ impl ServeFileConfig {
 
         let net = v.get("net").map(|n| net_from_json(n, "\"net\"")).transpose()?;
 
+        let obs = v
+            .get("obs")
+            .map(|o| obs_from_json(o, "\"obs\""))
+            .transpose()?
+            .unwrap_or_default();
+
         // Which source wins when a loaded artifact's manifest carries a
         // merge_spec: the manifest (default — the artifact is the ground
         // truth for what was compiled into it) or the config declaration.
@@ -539,6 +593,7 @@ impl ServeFileConfig {
             prefer_manifest_spec,
             faults,
             net,
+            obs,
         })
     }
 
@@ -608,6 +663,12 @@ impl ServeFileConfig {
   "addr": "127.0.0.1:7070",
   "max_conns": 64,
   "max_frame_bytes": 1048576
+ },
+ "obs": {
+  "trace_ring": 4096,
+  "sample_every": 1,
+  "hist_min_exp": -20,
+  "hist_max_exp": 7
  }
 }
 "#
@@ -648,6 +709,45 @@ mod tests {
         assert_eq!(net.addr, "127.0.0.1:7070");
         assert_eq!(net.max_conns, 64);
         assert_eq!(net.max_frame_bytes, 1 << 20);
+        assert_eq!(cfg.obs, ObsConfig::default(), "the example shows the obs defaults");
+    }
+
+    #[test]
+    fn parses_obs_block() {
+        let base = r#"{"policy": {"variants": [{"name": "a", "r": 0}]}"#;
+        // omitted block = defaults
+        let cfg = ServeFileConfig::parse(&format!("{base}}}")).unwrap();
+        assert_eq!(cfg.obs, ObsConfig::default());
+        // partial block: named keys override, the rest default
+        let cfg = ServeFileConfig::parse(&format!(
+            r#"{base}, "obs": {{"trace_ring": 128, "hist_min_exp": -10}}}}"#
+        ))
+        .unwrap();
+        assert_eq!(cfg.obs.trace_ring, 128);
+        assert_eq!(cfg.obs.hist_min_exp, -10);
+        assert_eq!(cfg.obs.sample_every, ObsConfig::default().sample_every);
+        assert_eq!(cfg.obs.hist_max_exp, ObsConfig::default().hist_max_exp);
+        // unknown key rejected with the accepted set named
+        let err = ServeFileConfig::parse(&format!(
+            r#"{base}, "obs": {{"trace_rings": 128}}}}"#
+        ))
+        .unwrap_err();
+        assert!(err.to_string().contains("trace_rings"), "{err}");
+        assert!(err.to_string().contains("trace_ring"), "{err}");
+        // degenerate values rejected at parse time
+        for bad in [
+            r#"{"trace_ring": 0}"#,
+            r#"{"sample_every": 0}"#,
+            r#"{"hist_min_exp": 8, "hist_max_exp": 7}"#,
+            r#"{"hist_min_exp": 2.5}"#,
+            r#"{"hist_max_exp": 99999}"#,
+        ] {
+            let err = ServeFileConfig::parse(&format!(r#"{base}, "obs": {bad}}}"#))
+                .unwrap_err();
+            assert!(err.to_string().contains("obs"), "{bad}: {err}");
+        }
+        // non-object block
+        assert!(ServeFileConfig::parse(&format!(r#"{base}, "obs": "on"}}"#)).is_err());
     }
 
     #[test]

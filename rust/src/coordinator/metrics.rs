@@ -1,13 +1,22 @@
 //! Serving metrics: latency distribution, throughput, batch occupancy,
 //! per-variant routing counts, session-level streaming counters, and
-//! fault/delivery accounting (DESIGN.md §10).
+//! fault/delivery accounting (DESIGN.md §10, §13).
+//!
+//! All distributions live in bounded log-linear [`Histogram`]s
+//! (`obs::hist`), so a `Metrics` holds **no per-request storage**: its
+//! heap footprint is constant in the number of requests served (pinned
+//! by `memory_is_constant_in_request_count`).  Because histograms merge
+//! losslessly (exact bucket/count/sum identities), the cross-shard
+//! roll-up can answer true process-level percentiles — see
+//! [`merged_report`] / [`merged_json`].
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
 use super::delivery::DeliveryStats;
+use crate::json::Json;
+use crate::obs::{Histogram, ObsConfig, Stage};
 use crate::streaming::StreamStats;
-use crate::util::percentile;
 
 /// Fault-tolerance counters (DESIGN.md §10), all monotone.  "exec" is the
 /// batch device path, "step" the stream decode path; `timeouts` and
@@ -31,12 +40,103 @@ pub struct FaultCounters {
     pub downgrades: u64,
 }
 
+/// Merge-efficiency telemetry for one variant: how many tokens entered
+/// the merge pipeline vs how many reached the device (DESIGN.md §13).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CompressionStats {
+    /// merge-pipeline invocations (batches / incremental folds)
+    pub calls: u64,
+    /// tokens entering layer 0, summed over calls
+    pub tokens_in: u64,
+    /// tokens surviving the last layer, summed over calls
+    pub tokens_out: u64,
+    /// merge layers run, summed over calls
+    pub layers: u64,
+}
+
+impl CompressionStats {
+    /// Aggregate compression ratio `tokens_in / tokens_out` (1.0 when
+    /// nothing was merged; > 1.0 when merging shrank the batch).
+    pub fn ratio(&self) -> f64 {
+        if self.tokens_out == 0 {
+            1.0
+        } else {
+            self.tokens_in as f64 / self.tokens_out as f64
+        }
+    }
+
+    /// Mean merge layers per call.
+    pub fn mean_layers(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            self.layers as f64 / self.calls as f64
+        }
+    }
+}
+
+/// Entropy-band routing telemetry for one variant: how often the router
+/// picked it and the entropy range of the windows that landed there.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RouteStats {
+    pub decisions: u64,
+    entropy_sum: f64,
+    entropy_min: f64,
+    entropy_max: f64,
+}
+
+impl Default for RouteStats {
+    fn default() -> RouteStats {
+        RouteStats {
+            decisions: 0,
+            entropy_sum: 0.0,
+            entropy_min: f64::INFINITY,
+            entropy_max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl RouteStats {
+    pub fn entropy_mean(&self) -> f64 {
+        if self.decisions == 0 {
+            0.0
+        } else {
+            self.entropy_sum / self.decisions as f64
+        }
+    }
+
+    pub fn entropy_min(&self) -> f64 {
+        if self.decisions == 0 {
+            0.0
+        } else {
+            self.entropy_min
+        }
+    }
+
+    pub fn entropy_max(&self) -> f64 {
+        if self.decisions == 0 {
+            0.0
+        } else {
+            self.entropy_max
+        }
+    }
+}
+
 #[derive(Debug)]
 pub struct Metrics {
     started: Instant,
-    latencies: Vec<f64>,
-    batch_sizes: Vec<usize>,
+    served: usize,
+    /// request latencies, seconds (bounded log-linear histogram)
+    latency: Histogram,
+    /// batch occupancies (rows per formed batch)
+    batch: Histogram,
+    /// per-stage durations, indexed by [`Stage::idx`]
+    stages: Vec<Histogram>,
     per_variant: BTreeMap<String, usize>,
+    /// per-variant merge-efficiency telemetry
+    compression: BTreeMap<String, CompressionStats>,
+    /// per-variant entropy-band routing telemetry
+    routes: BTreeMap<String, RouteStats>,
     rejected: usize,
     /// decode steps executed by the streaming scheduler
     decode_steps: usize,
@@ -44,6 +144,8 @@ pub struct Metrics {
     decode_rows: usize,
     /// latest session-table snapshot: (active sessions, manager counters)
     stream: Option<(usize, StreamStats)>,
+    /// latest session-merge gauge: (raw tokens held, tokens after merge)
+    stream_tokens: Option<(u64, u64)>,
     faults: FaultCounters,
     /// per `from->to` quarantine-downgrade routing counts
     downgrades: BTreeMap<String, u64>,
@@ -59,15 +161,27 @@ impl Default for Metrics {
 
 impl Metrics {
     pub fn new() -> Metrics {
+        Metrics::with_obs(&ObsConfig::default())
+    }
+
+    /// Metrics whose latency / stage histograms use the `"obs"` config
+    /// block's bounds.  Shards must share one config for the per-shard
+    /// histograms to merge (enforced by [`Histogram::merge`]).
+    pub fn with_obs(cfg: &ObsConfig) -> Metrics {
         Metrics {
             started: Instant::now(),
-            latencies: Vec::new(),
-            batch_sizes: Vec::new(),
+            served: 0,
+            latency: cfg.latency_histogram(),
+            batch: Histogram::batch_sizes(),
+            stages: (0..Stage::ALL.len()).map(|_| cfg.latency_histogram()).collect(),
             per_variant: BTreeMap::new(),
+            compression: BTreeMap::new(),
+            routes: BTreeMap::new(),
             rejected: 0,
             decode_steps: 0,
             decode_rows: 0,
             stream: None,
+            stream_tokens: None,
             faults: FaultCounters::default(),
             downgrades: BTreeMap::new(),
             delivery: None,
@@ -139,6 +253,16 @@ impl Metrics {
         self.stream
     }
 
+    /// Latest session-merge gauge: raw tokens held across sessions vs
+    /// tokens remaining after incremental merging.
+    pub fn set_stream_tokens(&mut self, raw: u64, merged: u64) {
+        self.stream_tokens = Some((raw, merged));
+    }
+
+    pub fn stream_tokens(&self) -> Option<(u64, u64)> {
+        self.stream_tokens
+    }
+
     pub fn decode_steps(&self) -> usize {
         self.decode_steps
     }
@@ -156,9 +280,60 @@ impl Metrics {
     }
 
     pub fn record_batch(&mut self, variant: &str, batch: usize, latencies: &[f64]) {
-        self.batch_sizes.push(batch);
-        self.latencies.extend_from_slice(latencies);
+        self.batch.record(batch as f64);
+        for &l in latencies {
+            self.latency.record(l);
+        }
+        self.served += latencies.len();
         *self.per_variant.entry(variant.to_string()).or_insert(0) += latencies.len();
+    }
+
+    /// One merge-pipeline invocation for `variant`: `tokens_in` entered
+    /// layer 0, `tokens_out` survived `layers` merge layers.  Recorded
+    /// even when merging is bypassed (`tokens_in == tokens_out`,
+    /// `layers == 0`) so every serving variant reports a compression
+    /// ratio.
+    pub fn record_compression(
+        &mut self,
+        variant: &str,
+        tokens_in: usize,
+        tokens_out: usize,
+        layers: usize,
+    ) {
+        let c = self.compression.entry(variant.to_string()).or_default();
+        c.calls += 1;
+        c.tokens_in += tokens_in as u64;
+        c.tokens_out += tokens_out as u64;
+        c.layers += layers as u64;
+    }
+
+    pub fn compression(&self) -> &BTreeMap<String, CompressionStats> {
+        &self.compression
+    }
+
+    /// The router sent a window with spectral entropy `entropy` to
+    /// `variant` (the entropy-band decision, DESIGN.md §7).
+    pub fn record_route(&mut self, variant: &str, entropy: f64) {
+        let r = self.routes.entry(variant.to_string()).or_default();
+        r.decisions += 1;
+        r.entropy_sum += entropy;
+        r.entropy_min = r.entropy_min.min(entropy);
+        r.entropy_max = r.entropy_max.max(entropy);
+    }
+
+    pub fn routes(&self) -> &BTreeMap<String, RouteStats> {
+        &self.routes
+    }
+
+    /// One stage duration in seconds (also stamped into the trace ring by
+    /// the serving layers; this is the aggregate view).
+    pub fn record_stage(&mut self, stage: Stage, secs: f64) {
+        self.stages[stage.idx()].record(secs);
+    }
+
+    /// Per-stage duration histograms, indexed by [`Stage::idx`].
+    pub fn stage_histograms(&self) -> &[Histogram] {
+        &self.stages
     }
 
     pub fn record_rejected(&mut self) {
@@ -166,7 +341,7 @@ impl Metrics {
     }
 
     pub fn served(&self) -> usize {
-        self.latencies.len()
+        self.served
     }
 
     pub fn rejected(&self) -> usize {
@@ -174,34 +349,48 @@ impl Metrics {
     }
 
     pub fn throughput(&self) -> f64 {
-        self.served() as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+        self.served as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn latency_histogram(&self) -> &Histogram {
+        &self.latency
     }
 
     pub fn latency_percentiles(&self) -> (f64, f64, f64) {
-        let mut l = self.latencies.clone();
         (
-            percentile(&mut l, 50.0),
-            percentile(&mut l, 95.0),
-            percentile(&mut l, 99.0),
+            self.latency.percentile(50.0),
+            self.latency.percentile(95.0),
+            self.latency.percentile(99.0),
         )
     }
 
     pub fn mean_batch_occupancy(&self) -> f64 {
-        if self.batch_sizes.is_empty() {
-            return 0.0;
-        }
-        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+        self.batch.mean()
     }
 
     pub fn per_variant(&self) -> &BTreeMap<String, usize> {
         &self.per_variant
     }
 
+    /// Heap footprint of the distribution state — constant in the number
+    /// of requests served (histograms are fixed-size; the maps grow only
+    /// with the variant set).
+    pub fn approx_heap_bytes(&self) -> usize {
+        self.latency.heap_bytes()
+            + self.batch.heap_bytes()
+            + self.stages.iter().map(Histogram::heap_bytes).sum::<usize>()
+            + (self.per_variant.len()
+                + self.compression.len()
+                + self.routes.len()
+                + self.downgrades.len())
+                * std::mem::size_of::<(String, CompressionStats)>()
+    }
+
     pub fn report(&self) -> String {
         let (p50, p95, p99) = self.latency_percentiles();
         let mut s = format!(
             "served={} rejected={} throughput={:.1}/s p50={:.1}ms p95={:.1}ms p99={:.1}ms occupancy={:.2}\n",
-            self.served(),
+            self.served,
             self.rejected,
             self.throughput(),
             p50 * 1e3,
@@ -209,10 +398,48 @@ impl Metrics {
             p99 * 1e3,
             self.mean_batch_occupancy(),
         );
-        for (v, n) in &self.per_variant {
-            s.push_str(&format!("  {v}: {n}\n"));
+        // per-variant serve counts + merge efficiency, over the union of
+        // routed and merged variants
+        let variants: std::collections::BTreeSet<&String> =
+            self.per_variant.keys().chain(self.compression.keys()).collect();
+        for v in variants {
+            let n = self.per_variant.get(v).copied().unwrap_or(0);
+            match self.compression.get(v) {
+                Some(c) => s.push_str(&format!(
+                    "  {v}: {n} compression={:.2}x (in={} out={} layers={:.0} calls={})\n",
+                    c.ratio(),
+                    c.tokens_in,
+                    c.tokens_out,
+                    c.mean_layers(),
+                    c.calls,
+                )),
+                None => s.push_str(&format!("  {v}: {n}\n")),
+            }
         }
-        if self.decode_steps > 0 || self.stream.is_some() {
+        for (v, r) in &self.routes {
+            s.push_str(&format!(
+                "  route {v}: decisions={} entropy_mean={:.3} min={:.3} max={:.3}\n",
+                r.decisions,
+                r.entropy_mean(),
+                r.entropy_min(),
+                r.entropy_max(),
+            ));
+        }
+        for (stage, h) in Stage::ALL.iter().zip(&self.stages) {
+            if h.is_empty() {
+                continue;
+            }
+            s.push_str(&format!(
+                "stage: {} count={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms\n",
+                stage.name(),
+                h.count(),
+                h.mean() * 1e3,
+                h.percentile(50.0) * 1e3,
+                h.percentile(95.0) * 1e3,
+                h.percentile(99.0) * 1e3,
+            ));
+        }
+        if self.decode_steps > 0 || self.stream.is_some() || self.stream_tokens.is_some() {
             s.push_str(&format!(
                 "streaming: decode_steps={} rows={} occupancy={:.2}\n",
                 self.decode_steps,
@@ -232,6 +459,12 @@ impl Metrics {
                     st.appended_points,
                     st.requeued_windows,
                     st.quarantined,
+                ));
+            }
+            if let Some((raw, merged)) = self.stream_tokens {
+                let ratio = if merged == 0 { 1.0 } else { raw as f64 / merged as f64 };
+                s.push_str(&format!(
+                    "  merge: raw_tokens={raw} merged_tokens={merged} compression={ratio:.2}x\n",
                 ));
             }
         }
@@ -270,6 +503,122 @@ impl Metrics {
         s.push_str(&format!("kernel: {}\n", crate::merging::simd::dispatch_report()));
         s
     }
+
+    /// This shard's metrics as structured JSON — one element of the wire
+    /// `metrics` response ([`merged_json`]); rendered for humans by
+    /// `obs::prometheus_text`.
+    pub fn to_json(&self, shard: usize) -> Json {
+        let mut o = vec![
+            ("shard", Json::num(shard as f64)),
+            ("served", Json::num(self.served as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("latency", hist_json(&self.latency)),
+            (
+                "batch",
+                Json::obj(vec![
+                    ("count", Json::num(self.batch.count() as f64)),
+                    ("mean", Json::num(self.batch.mean())),
+                ]),
+            ),
+        ];
+        let mut stages = BTreeMap::new();
+        for (stage, h) in Stage::ALL.iter().zip(&self.stages) {
+            if !h.is_empty() {
+                stages.insert(stage.name().to_string(), hist_json(h));
+            }
+        }
+        if !stages.is_empty() {
+            o.push(("stages", Json::Obj(stages)));
+        }
+        let names: std::collections::BTreeSet<&String> =
+            self.per_variant.keys().chain(self.compression.keys()).collect();
+        let mut variants = BTreeMap::new();
+        for v in names {
+            let mut b = vec![(
+                "served",
+                Json::num(self.per_variant.get(v).copied().unwrap_or(0) as f64),
+            )];
+            if let Some(c) = self.compression.get(v) {
+                b.push(("calls", Json::num(c.calls as f64)));
+                b.push(("tokens_in", Json::num(c.tokens_in as f64)));
+                b.push(("tokens_out", Json::num(c.tokens_out as f64)));
+                b.push(("layers", Json::num(c.mean_layers())));
+                b.push(("compression", Json::num(c.ratio())));
+            }
+            variants.insert(v.clone(), Json::obj(b));
+        }
+        if !variants.is_empty() {
+            o.push(("variants", Json::Obj(variants)));
+        }
+        if !self.routes.is_empty() {
+            let mut routes = BTreeMap::new();
+            for (v, r) in &self.routes {
+                routes.insert(
+                    v.clone(),
+                    Json::obj(vec![
+                        ("decisions", Json::num(r.decisions as f64)),
+                        ("entropy_mean", Json::num(r.entropy_mean())),
+                        ("entropy_min", Json::num(r.entropy_min())),
+                        ("entropy_max", Json::num(r.entropy_max())),
+                    ]),
+                );
+            }
+            o.push(("routes", Json::Obj(routes)));
+        }
+        o.push(("decode_steps", Json::num(self.decode_steps as f64)));
+        o.push(("decode_rows", Json::num(self.decode_rows as f64)));
+        if self.faults != FaultCounters::default() {
+            o.push(("faults", faults_json(&self.faults)));
+        }
+        if let Some(d) = &self.delivery {
+            o.push(("delivery", delivery_json(d)));
+        }
+        if let Some((raw, merged)) = self.stream_tokens {
+            o.push((
+                "stream_tokens",
+                Json::obj(vec![
+                    ("raw", Json::num(raw as f64)),
+                    ("merged", Json::num(merged as f64)),
+                ]),
+            ));
+        }
+        Json::obj(o)
+    }
+}
+
+fn hist_json(h: &Histogram) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(h.count() as f64)),
+        ("sum", Json::num(h.sum())),
+        ("min", Json::num(h.min())),
+        ("max", Json::num(h.max())),
+        ("p50", Json::num(h.percentile(50.0))),
+        ("p95", Json::num(h.percentile(95.0))),
+        ("p99", Json::num(h.percentile(99.0))),
+    ])
+}
+
+fn faults_json(f: &FaultCounters) -> Json {
+    Json::obj(vec![
+        ("exec_retries", Json::num(f.exec_retries as f64)),
+        ("exec_faults", Json::num(f.exec_faults as f64)),
+        ("step_retries", Json::num(f.step_retries as f64)),
+        ("step_faults", Json::num(f.step_faults as f64)),
+        ("timeouts", Json::num(f.timeouts as f64)),
+        ("failed", Json::num(f.failed as f64)),
+        ("downgrades", Json::num(f.downgrades as f64)),
+    ])
+}
+
+fn delivery_json(d: &DeliveryStats) -> Json {
+    Json::obj(vec![
+        ("enqueued", Json::num(d.enqueued as f64)),
+        ("acked", Json::num(d.acked as f64)),
+        ("redelivered", Json::num(d.redelivered as f64)),
+        ("expired_undelivered", Json::num(d.expired_undelivered as f64)),
+        ("dropped_overflow", Json::num(d.dropped_overflow as f64)),
+        ("pending", Json::num(d.pending as f64)),
+    ])
 }
 
 /// Sum two fault-counter snapshots (for the cross-shard roll-up).
@@ -301,12 +650,24 @@ pub fn sum_delivery(a: DeliveryStats, b: DeliveryStats) -> DeliveryStats {
     }
 }
 
+/// The cross-shard latency histogram: a lossless fold of every shard's
+/// latency histogram (`None` only when shard configs disagree on bounds).
+fn merged_latency(shards: &[&Metrics]) -> Option<Histogram> {
+    let mut it = shards.iter();
+    let mut acc = it.next()?.latency.clone();
+    for m in it {
+        acc.merge(&m.latency).ok()?;
+    }
+    Some(acc)
+}
+
 /// Merge per-shard metrics into one process-level report (DESIGN.md §12):
-/// a summary line with cross-shard totals, summed fault and delivery
-/// counters (ledger identity preserved — see [`sum_delivery`]), then each
-/// shard's full [`Metrics::report`] indented under a `shard=<i>` header.
-/// Percentiles are deliberately **not** merged: quantiles don't sum, so
-/// they stay per-shard where they are meaningful.
+/// a summary line with cross-shard totals, a merged latency line (the
+/// per-shard histograms sum losslessly, so these are true process-level
+/// percentiles within the documented 1/32 bucket error), summed fault
+/// and delivery counters (ledger identity preserved — see
+/// [`sum_delivery`]), then each shard's full [`Metrics::report`]
+/// indented under a `shard=<i>` header.
 pub fn merged_report(shards: &[&Metrics]) -> String {
     let served: usize = shards.iter().map(|m| m.served()).sum();
     let rejected: usize = shards.iter().map(|m| m.rejected()).sum();
@@ -317,6 +678,17 @@ pub fn merged_report(shards: &[&Metrics]) -> String {
          decode_rows={decode_rows}\n",
         shards.len(),
     );
+    if let Some(lat) = merged_latency(shards) {
+        if !lat.is_empty() {
+            s.push_str(&format!(
+                "latency: count={} p50={:.1}ms p95={:.1}ms p99={:.1}ms (merged histograms)\n",
+                lat.count(),
+                lat.percentile(50.0) * 1e3,
+                lat.percentile(95.0) * 1e3,
+                lat.percentile(99.0) * 1e3,
+            ));
+        }
+    }
     let faults = shards
         .iter()
         .map(|m| m.faults())
@@ -356,9 +728,57 @@ pub fn merged_report(shards: &[&Metrics]) -> String {
     s
 }
 
+/// The structured form of [`merged_report`] — the wire `metrics`
+/// response: every shard's [`Metrics::to_json`] plus a `total` block
+/// with cross-shard sums and the merged latency histogram.
+pub fn merged_json(shards: &[&Metrics]) -> Json {
+    let shard_objs: Vec<Json> =
+        shards.iter().enumerate().map(|(i, m)| m.to_json(i)).collect();
+    let mut total = vec![
+        (
+            "served",
+            Json::num(shards.iter().map(|m| m.served()).sum::<usize>() as f64),
+        ),
+        (
+            "rejected",
+            Json::num(shards.iter().map(|m| m.rejected()).sum::<usize>() as f64),
+        ),
+        (
+            "decode_steps",
+            Json::num(shards.iter().map(|m| m.decode_steps()).sum::<usize>() as f64),
+        ),
+        (
+            "decode_rows",
+            Json::num(shards.iter().map(|m| m.decode_rows()).sum::<usize>() as f64),
+        ),
+    ];
+    if let Some(lat) = merged_latency(shards) {
+        total.push(("latency", hist_json(&lat)));
+    }
+    let faults = shards
+        .iter()
+        .map(|m| m.faults())
+        .fold(FaultCounters::default(), sum_faults);
+    if faults != FaultCounters::default() {
+        total.push(("faults", faults_json(&faults)));
+    }
+    if shards.iter().any(|m| m.delivery().is_some()) {
+        let d = shards
+            .iter()
+            .filter_map(|m| m.delivery())
+            .fold(DeliveryStats::default(), sum_delivery);
+        total.push(("delivery", delivery_json(&d)));
+    }
+    Json::obj(vec![
+        ("shards", Json::arr(shard_objs)),
+        ("total", Json::obj(total)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::{percentile, Rng};
 
     #[test]
     fn records_and_reports() {
@@ -436,6 +856,140 @@ mod tests {
         assert_eq!(m.delivery().unwrap().acked, 6);
     }
 
+    /// The headline bugfix of the observability PR: `Metrics` used to
+    /// keep every latency and batch size in growing `Vec`s.  With the
+    /// histograms, heap usage must not move no matter how many requests
+    /// are recorded.
+    #[test]
+    fn memory_is_constant_in_request_count() {
+        let mut m = Metrics::new();
+        m.record_batch("v1", 4, &[0.010, 0.012, 0.011, 0.013]);
+        m.record_stage(Stage::Exec, 0.002);
+        m.record_compression("v1", 256, 128, 3);
+        m.record_route("v1", 4.0);
+        let before = m.approx_heap_bytes();
+        for i in 0..10_000usize {
+            m.record_batch("v1", 8, &[0.005, 0.007, 0.009, 0.011]);
+            m.record_stage(Stage::Exec, 1e-3 * ((i % 7) + 1) as f64);
+            m.record_stage(Stage::QueueWait, 1e-4);
+            m.record_compression("v1", 512, 256, 3);
+            m.record_route("v1", 3.0 + (i % 5) as f64 * 0.1);
+        }
+        assert_eq!(
+            m.approx_heap_bytes(),
+            before,
+            "Metrics must hold no per-request storage"
+        );
+        assert_eq!(m.served(), 40_004);
+        assert_eq!(m.latency_histogram().count(), 40_004);
+    }
+
+    #[test]
+    fn compression_stage_route_and_merge_gauge_sections() {
+        let mut m = Metrics::new();
+        m.record_batch("v1", 2, &[0.010, 0.020]);
+        m.record_compression("v1", 768, 384, 3);
+        m.record_compression("v1", 768, 384, 3);
+        m.record_stage(Stage::Prep, 0.001);
+        m.record_stage(Stage::Exec, 0.004);
+        m.record_route("v1", 4.2);
+        m.record_route("v1", 3.8);
+        m.set_stream_tokens(1000, 400);
+        let report = m.report();
+        assert!(report.contains("v1: 2 compression=2.00x"), "{report}");
+        assert!(report.contains("in=1536 out=768 layers=3 calls=2"), "{report}");
+        assert!(report.contains("stage: prep"), "{report}");
+        assert!(report.contains("stage: exec"), "{report}");
+        assert!(report.contains("route v1: decisions=2 entropy_mean=4.000"), "{report}");
+        assert!(
+            report.contains("merge: raw_tokens=1000 merged_tokens=400 compression=2.50x"),
+            "{report}"
+        );
+        // a variant seen only by the merge pipeline still reports
+        m.record_compression("probe", 32, 32, 0);
+        assert!(m.report().contains("probe: 0 compression=1.00x"), "{}", m.report());
+        let c = m.compression()["v1"];
+        assert_eq!((c.calls, c.tokens_in, c.tokens_out), (2, 1536, 768));
+        assert!((c.ratio() - 2.0).abs() < 1e-12);
+    }
+
+    /// Merged per-shard histograms answer true process-level percentiles
+    /// within the documented 1/32 bucket error of the pooled
+    /// sorted-vector oracle — the merging contract of the roll-up.
+    #[test]
+    fn merged_shard_percentiles_within_bound_of_pooled_oracle() {
+        let mut rng = Rng::new(11);
+        let (mut a, mut b) = (Metrics::new(), Metrics::new());
+        let mut all = Vec::new();
+        for i in 0..1500usize {
+            let v = if i % 2 == 0 {
+                0.001 * (1.0 + rng.uniform()) // fast shard: ~1-2ms
+            } else {
+                0.05 * (1.0 + rng.uniform()) // slow shard: ~50-100ms
+            };
+            if i % 2 == 0 {
+                a.record_batch("v1", 1, &[v]);
+            } else {
+                b.record_batch("v2", 1, &[v]);
+            }
+            all.push(v);
+        }
+        let merged = merged_json(&[&a, &b]);
+        let total = merged.req("total").unwrap();
+        let lat = total.req("latency").unwrap();
+        assert_eq!(lat.req("count").unwrap().as_usize().unwrap(), 1500);
+        let sum = lat.req("sum").unwrap().as_f64().unwrap();
+        assert!((sum - all.iter().sum::<f64>()).abs() < 1e-9, "sum identity");
+        for (p, key) in [(50.0, "p50"), (99.0, "p99")] {
+            let oracle = percentile(&mut all, p);
+            let got = lat.req(key).unwrap().as_f64().unwrap();
+            let rel = (got - oracle).abs() / oracle;
+            assert!(rel <= 1.0 / 32.0 + 1e-12, "{key}: {got} vs oracle {oracle}");
+        }
+        let report = merged_report(&[&a, &b]);
+        assert!(report.contains("latency: count=1500"), "{report}");
+        assert!(report.contains("(merged histograms)"), "{report}");
+    }
+
+    #[test]
+    fn shard_json_exposes_the_full_schema() {
+        let mut m = Metrics::new();
+        m.record_batch("v1", 3, &[0.010, 0.011, 0.012]);
+        m.record_stage(Stage::Exec, 0.004);
+        m.record_compression("v1", 96, 48, 2);
+        m.record_route("v1", 4.5);
+        m.record_exec_fault();
+        m.set_delivery(DeliveryStats { enqueued: 2, pending: 2, ..DeliveryStats::default() });
+        m.set_stream_tokens(128, 64);
+        let j = m.to_json(3);
+        assert_eq!(j.req("shard").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.req("served").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.req("latency").unwrap().req("count").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.req("batch").unwrap().req("mean").unwrap().as_f64().unwrap(), 3.0);
+        let exec = j.req("stages").unwrap().req("exec").unwrap();
+        assert_eq!(exec.req("count").unwrap().as_usize().unwrap(), 1);
+        let v1 = j.req("variants").unwrap().req("v1").unwrap();
+        assert_eq!(v1.req("tokens_in").unwrap().as_usize().unwrap(), 96);
+        assert!((v1.req("compression").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-12);
+        let route = j.req("routes").unwrap().req("v1").unwrap();
+        assert_eq!(route.req("decisions").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(
+            j.req("faults").unwrap().req("exec_faults").unwrap().as_usize().unwrap(),
+            1
+        );
+        assert_eq!(
+            j.req("delivery").unwrap().req("pending").unwrap().as_usize().unwrap(),
+            2
+        );
+        assert_eq!(
+            j.req("stream_tokens").unwrap().req("merged").unwrap().as_usize().unwrap(),
+            64
+        );
+        // the JSON round-trips through the wire encoding
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back, j);
+    }
+
     fn balanced(
         enqueued: u64,
         acked: u64,
@@ -493,5 +1047,14 @@ mod tests {
         assert!(report.contains("  served=2 "), "{report}");
         assert!(report.contains("  served=1 "), "{report}");
         assert!(report.contains("  served=0 "), "{report}");
+        // and the structured form agrees on the totals
+        let j = merged_json(&[&a, &b, &c]);
+        assert_eq!(j.req("shards").unwrap().as_arr().unwrap().len(), 3);
+        let total = j.req("total").unwrap();
+        assert_eq!(total.req("served").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(
+            total.req("delivery").unwrap().req("enqueued").unwrap().as_usize().unwrap(),
+            17
+        );
     }
 }

@@ -64,7 +64,10 @@ pub mod stream;
 pub use batcher::{drain_ready, BatcherConfig, DynamicBatcher};
 pub use delivery::{DeliveryMonitor, DeliveryStats};
 pub use faults::{call_with_retry, FaultContext, FaultPlan, FaultPolicy, FaultTracker};
-pub use metrics::{merged_report, sum_delivery, FaultCounters, Metrics};
+pub use metrics::{
+    merged_json, merged_report, sum_delivery, CompressionStats, FaultCounters, Metrics,
+    RouteStats,
+};
 pub use pipeline::{default_host_merge, HostPrep, PrepJob, ReadyBatch, VariantMeta};
 pub use policy::{
     EntropyCache, MergePolicy, PolicyDecision, SpecResolution, SpecSource, Variant,

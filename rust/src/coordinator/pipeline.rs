@@ -49,6 +49,7 @@ use super::faults::{call_with_retry, FaultContext};
 use super::metrics::Metrics;
 use super::{ForecastOutcome, ForecastRequest, ForecastResponse};
 use crate::merging::{MergeMode, MergePlan, MergeSpec, PipelineResult};
+use crate::obs::{recorder, Stage};
 use crate::runtime::pool::WorkerPool;
 use crate::util::{join_annotated, lock_ignore_poison as lock};
 
@@ -120,6 +121,9 @@ pub struct HostPrep {
     ctx: Vec<f32>,
     ones: Vec<f32>,
     outs: Vec<PipelineResult>,
+    /// merge telemetry of the most recent `prep_into` — see
+    /// [`HostPrep::last_merge_telemetry`]
+    last_merge: (usize, usize, usize),
 }
 
 impl HostPrep {
@@ -132,12 +136,22 @@ impl HostPrep {
             ctx: Vec::new(),
             ones: Vec::new(),
             outs: Vec::new(),
+            last_merge: (0, 0, 0),
         }
     }
 
     /// The serving merge spec this prep stage premerges with.
     pub fn merge_spec(&self) -> &MergeSpec {
         &self.merge
+    }
+
+    /// Merge telemetry of the most recent successful [`HostPrep::prep_into`]:
+    /// `(tokens entering premerge, tokens after, merge layers run)`,
+    /// summed over the batch rows.  A batch that needed no premerge
+    /// reports `in == out` with 0 layers, so every served batch yields a
+    /// compression sample (`Metrics::record_compression`).
+    pub fn last_merge_telemetry(&self) -> (usize, usize, usize) {
+        self.last_merge
     }
 
     /// Fill `slab` with the padded `(capacity, m)` input for `batch`,
@@ -168,9 +182,10 @@ impl HostPrep {
             for (req, _, _) in batch {
                 slab.extend_from_slice(&req.context);
             }
+            self.last_merge = (n * m, n * m, 0);
             0
         } else if len > m && !self.merge.is_off() {
-            let HostPrep { merge, slots, plans, plan_fifo, ctx, ones, outs } = self;
+            let HostPrep { merge, slots, plans, plan_fifo, ctx, ones, outs, .. } = self;
             if plans.len() >= PLAN_CACHE_CAP && !plans.contains_key(&(len, m)) {
                 // evict the oldest entry, not the whole cache: a rotation
                 // through cap+1 recurring shapes must not recompile every
@@ -195,14 +210,19 @@ impl HostPrep {
             ones.clear();
             ones.resize(n * len, 1.0);
             plan.run_batch_into(pool, ctx, ones, n, outs);
+            let (mut tokens_in, mut tokens_out) = (0usize, 0usize);
             for out in outs.iter().take(n) {
                 ensure!(
                     out.sizes.len() == m,
                     "premerge produced {} tokens, wanted {m}",
                     out.sizes.len()
                 );
+                tokens_in += out.tokens_in();
+                tokens_out += out.tokens_out();
                 slab.extend_from_slice(&out.tokens);
             }
+            let layers = outs.first().map_or(0, |o| o.layers());
+            self.last_merge = (tokens_in, tokens_out, layers);
             n
         } else {
             bail!(
@@ -301,9 +321,34 @@ where
                     Ok(s) => s,
                     Err(_) => return, // execute stage gone
                 };
+                let t_prep = Instant::now();
                 match hp.prep_into(pool, &job.batch, meta, &mut slab) {
                     Ok(premerged) => {
+                        let prep_dur = t_prep.elapsed();
                         let rows = job.batch.len();
+                        let leader = job.batch.first().map_or(0, |(r, _, _)| r.id);
+                        let (tokens_in, tokens_out, layers) = hp.last_merge_telemetry();
+                        {
+                            let mut mx = lock(&metrics);
+                            for (_, t0, _) in &job.batch {
+                                let wait = t_prep.saturating_duration_since(*t0);
+                                mx.record_stage(Stage::QueueWait, wait.as_secs_f64());
+                            }
+                            mx.record_stage(Stage::Prep, prep_dur.as_secs_f64());
+                            mx.record_compression(
+                                &job.variant,
+                                tokens_in,
+                                tokens_out,
+                                layers,
+                            );
+                        }
+                        if let Some((_, t0, _)) = job.batch.first() {
+                            let wait = t_prep.saturating_duration_since(*t0);
+                            recorder()
+                                .record(leader, Stage::QueueWait, 0, *t0, wait, rows as u32);
+                        }
+                        recorder()
+                            .record(leader, Stage::Prep, 0, t_prep, prep_dur, premerged as u32);
                         let ready = ReadyBatch {
                             variant: job.variant,
                             batch: job.batch,
@@ -398,11 +443,19 @@ where
             return slab;
         }
     }
+    let t_exec = Instant::now();
     let out =
         call_with_retry(policy, batch_deadline, "device execute", || execute(&mut ready));
+    let exec_dur = t_exec.elapsed();
     let ReadyBatch { variant, batch, slab, rows, .. } = ready;
-    if out.attempts > 1 {
-        lock(metrics).record_exec_retries(out.attempts - 1);
+    let leader = batch.first().map_or(0, |(r, _, _)| r.id);
+    recorder().record(leader, Stage::Exec, 0, t_exec, exec_dur, out.attempts as u32);
+    {
+        let mut mx = lock(metrics);
+        mx.record_stage(Stage::Exec, exec_dur.as_secs_f64());
+        if out.attempts > 1 {
+            mx.record_exec_retries(out.attempts - 1);
+        }
     }
     match out.result {
         Ok(forecasts) if forecasts.len() >= rows => {
@@ -422,6 +475,7 @@ where
                 }
                 mx.record_timeouts(rows - delivered.len());
             }
+            let t_resp = Instant::now();
             for (i, (((req, _, rtx), forecast), latency)) in
                 batch.into_iter().zip(forecasts).zip(latencies).enumerate()
             {
@@ -439,6 +493,9 @@ where
                     outcome,
                 });
             }
+            let resp_dur = t_resp.elapsed();
+            recorder().record(leader, Stage::Respond, 0, t_resp, resp_dur, rows as u32);
+            lock(metrics).record_stage(Stage::Respond, resp_dur.as_secs_f64());
         }
         Ok(forecasts) => {
             let reason = format!(

@@ -432,7 +432,18 @@ pub fn serve(config: ServerConfig) -> Result<ServerHandle> {
                     .unwrap_or(Duration::from_millis(50));
                 match rx.recv_timeout(timeout) {
                     Ok(Msg::Request(req, t0, rtx)) => {
+                        let t_in = Instant::now();
                         let decision = policy.decide_cached(&mut entropy_cache, &req.context);
+                        crate::obs::recorder().record(
+                            req.id,
+                            crate::obs::Stage::Intake,
+                            0,
+                            t_in,
+                            t_in.elapsed(),
+                            req.context.len() as u32,
+                        );
+                        lock_ignore_poison(&intake_metrics)
+                            .record_route(&decision.variant.name, decision.entropy);
                         let mut name = decision.variant.name;
                         // graceful degradation: route around a quarantined
                         // variant (repeated device faults) instead of

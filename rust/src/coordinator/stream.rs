@@ -44,6 +44,7 @@ use anyhow::{anyhow, Result};
 use super::faults::{call_with_retry, FaultPolicy};
 use super::metrics::Metrics;
 use super::pipeline::VariantMeta;
+use crate::obs::{recorder, Stage};
 use crate::runtime::pool::WorkerPool;
 use crate::streaming::{SessionManager, StreamingConfig};
 use crate::util::{join_annotated, lock_ignore_poison as lock};
@@ -328,10 +329,16 @@ where
                         free.push(step);
                         break;
                     }
+                    let prep_dur = now.elapsed();
+                    let leader = step.sessions.first().copied().unwrap_or(0);
+                    recorder().record(leader, Stage::StreamPrep, 0, now, prep_dur, rows as u32);
                     {
                         let mut mx = lock(&metrics);
+                        mx.record_stage(Stage::StreamPrep, prep_dur.as_secs_f64());
                         mx.record_decode_step(rows);
                         mx.set_stream(scheduler.manager().len(), scheduler.manager().stats());
+                        let (raw, merged) = scheduler.manager().merge_totals();
+                        mx.set_stream_tokens(raw, merged);
                     }
                     if ready_tx.send(wrap(step)).is_err() {
                         return;
@@ -394,16 +401,28 @@ pub(crate) fn execute_and_deliver<X, S>(
     X: FnMut(&mut DecodeStep) -> Result<Vec<Vec<f32>>>,
     S: FnMut(u64, Vec<f32>),
 {
-    let deadline = faults.step_deadline.map(|d| Instant::now() + d);
+    let t_exec = Instant::now();
+    let deadline = faults.step_deadline.map(|d| t_exec + d);
     let out = call_with_retry(faults, deadline, "stream decode step", || execute(step));
-    if out.attempts > 1 {
-        lock(metrics).record_step_retries(out.attempts - 1);
+    let exec_dur = t_exec.elapsed();
+    let leader = step.sessions.first().copied().unwrap_or(0);
+    recorder().record(leader, Stage::StreamExec, 0, t_exec, exec_dur, out.attempts as u32);
+    {
+        let mut mx = lock(metrics);
+        mx.record_stage(Stage::StreamExec, exec_dur.as_secs_f64());
+        if out.attempts > 1 {
+            mx.record_step_retries(out.attempts - 1);
+        }
     }
     match out.result {
         Ok(forecasts) if forecasts.len() >= step.rows => {
+            let t_del = Instant::now();
             for (id, forecast) in step.sessions.iter().zip(forecasts) {
                 deliver(*id, forecast);
             }
+            let del_dur = t_del.elapsed();
+            recorder().record(leader, Stage::Deliver, 0, t_del, del_dur, step.rows as u32);
+            lock(metrics).record_stage(Stage::Deliver, del_dur.as_secs_f64());
         }
         Ok(forecasts) => {
             eprintln!(

@@ -38,6 +38,7 @@ pub mod eval;
 pub mod json;
 pub mod merging;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod signal;
 pub mod streaming;

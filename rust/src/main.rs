@@ -21,6 +21,11 @@
 //!                                 forecasts + stream sessions over the
 //!                                 wire and checks the liveness, routing
 //!                                 and delivery-ledger invariants
+//!                                 (--metrics also fetches the structured
+//!                                 metrics and prints Prometheus text)
+//!   trace-dump [--out trace.json] run a small in-process serving workload
+//!                                 and export the per-stage span ring as
+//!                                 Chrome trace_event JSON (DESIGN.md §13)
 //!   bench    <experiment>         regenerate a paper table/figure (or `all`)
 //!
 //! Offline build: argument parsing is hand-rolled (no clap in the vendored
@@ -105,11 +110,16 @@ USAGE:
                     drains after N connections close, 0 = serve forever;
                     a "net" config block sets the same knobs)
   tomers client --addr HOST:PORT [--requests N] [--sessions N] [--rounds N]
-                [--shards N]
+                [--shards N] [--metrics]
                 (serve-net loopback driver; exits non-zero unless every
                  request reaches a terminal outcome, sessions stay pinned
                  to the shard the client's own router predicts, and the
-                 summed delivery ledger balances)
+                 summed delivery ledger balances; --metrics also fetches
+                 the merged structured metrics and prints Prometheus text)
+  tomers trace-dump [--out trace.json] [--requests N]
+                (run a small in-process dual-loop workload and export the
+                 per-stage span ring as Chrome trace_event JSON; prints
+                 span and complete-chain counts)
   tomers bench <table1|fig2|table2|table3|table4|table5|table8|fig4|fig5|fig6|fig7|fig8|fig9|fig15|fig16|fig19|ablation_k|deconly|ablation_bound|all> [--quick] [--dir artifacts]
 
 Datasets: etth1 ettm1 weather electricity traffic (synthetic, DESIGN.md §7)
@@ -168,6 +178,7 @@ fn run() -> Result<()> {
         Some("serve-sim") => cmd_serve_sim(&args),
         Some("serve-net") => cmd_serve_net(&args),
         Some("client") => cmd_client(&args),
+        Some("trace-dump") => cmd_trace_dump(&args),
         Some("bench") => {
             let which = args.positional.get(1).context("missing experiment id")?.clone();
             let ctx = BenchCtx::new(&dir, args.has("quick"))?;
@@ -374,8 +385,13 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     let mut batch = Vec::new();
     for id in 0..requests as u64 {
         let (rtx, rrx) = mpsc::channel();
+        // alternate per batch (batches must be length-uniform): exact-m
+        // contexts go straight through, 2m contexts exercise the prep
+        // stage's host premerge — so the report's per-variant
+        // compression telemetry shows both ratios
+        let len = if (id / capacity as u64) % 2 == 0 { m } else { 2 * m };
         let context: Vec<f32> =
-            (0..m).map(|i| ((id as usize + i) % 7) as f32 * 0.1).collect();
+            (0..len).map(|i| ((id as usize + i) % 7) as f32 * 0.1).collect();
         batch.push((ForecastRequest { id, context }, Instant::now(), rtx));
         receivers.push(rrx);
         if batch.len() == capacity {
@@ -566,14 +582,17 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
         ReadyBatch, VariantMeta,
     };
     use tomers::net::{serve_net, NetConfig, ShardSpec};
+    use tomers::obs::ObsConfig;
     use tomers::streaming::StreamingConfig;
 
-    // config-file "net" block first; CLI flags override field by field
-    let mut net = match args.flag("config") {
-        Some(path) => tomers::config::ServeFileConfig::load(std::path::Path::new(path))?
-            .net
-            .unwrap_or_default(),
-        None => NetConfig::default(),
+    // config-file "net" + "obs" blocks first; CLI flags override the net
+    // fields field by field
+    let (mut net, obs) = match args.flag("config") {
+        Some(path) => {
+            let cfg = tomers::config::ServeFileConfig::load(std::path::Path::new(path))?;
+            (cfg.net.unwrap_or_default(), cfg.obs)
+        }
+        None => (NetConfig::default(), ObsConfig::default()),
     };
     if let Some(s) = args.flag("shards") {
         net.shards = s.parse().context("--shards")?;
@@ -620,6 +639,7 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
         max_wait: Duration::from_millis(5),
         max_queue,
         faults,
+        obs,
     };
 
     let handle = serve_net(
@@ -824,6 +844,116 @@ fn cmd_client(args: &Args) -> Result<()> {
     );
     println!("delivery accounting consistent");
     print!("{text}");
+
+    // --metrics: fetch the merged structured metrics (DESIGN.md §13) and
+    // render them as Prometheus text — the scrape-shaped view of the same
+    // counters the human report above prints
+    if args.has("metrics") {
+        let metrics = match c.call(&Request::Metrics)? {
+            Response::Metrics { metrics } => metrics,
+            other => bail!("expected a metrics response, got {other:?}"),
+        };
+        print!("{}", tomers::obs::prometheus_text(&metrics));
+    }
+    Ok(())
+}
+
+/// `tomers trace-dump` — run a small in-process dual-loop workload (the
+/// `serve-sim` shape at fault rate 0) with the global span recorder on,
+/// then export the ring as Chrome `trace_event` JSON (load the file at
+/// `chrome://tracing` or https://ui.perfetto.dev).  The printed
+/// `complete_chains` count is the number of request ids whose
+/// prep → exec → respond edges all landed in the ring — `verify.sh`
+/// greps it as the tracing smoke gate.
+fn cmd_trace_dump(args: &Args) -> Result<()> {
+    use std::collections::BTreeMap;
+    use std::sync::{mpsc, Arc, Mutex};
+    use std::time::Instant;
+    use tomers::coordinator::{
+        default_host_merge, run_serve_stages, FaultContext, FaultPolicy, ForecastRequest,
+        Metrics, PrepJob, StreamEvent, VariantMeta,
+    };
+    use tomers::obs::{complete_chains, recorder, ObsConfig};
+    use tomers::streaming::StreamingConfig;
+
+    let out = args.flag("out").unwrap_or("trace.json").to_string();
+    let requests: usize = args.flag("requests").unwrap_or("32").parse()?;
+    ensure!(requests >= 1, "--requests must be >= 1");
+    let obs = ObsConfig::default();
+    obs.apply();
+
+    // the serve-sim serving shape, faults off: 2m contexts so the prep
+    // stage premerges and the trace shows real per-stage compression work
+    let (capacity, m) = (4usize, 32usize);
+    let metas = BTreeMap::from([("v".to_string(), VariantMeta { capacity, m })]);
+    let (jobs_tx, jobs_rx) = mpsc::sync_channel::<PrepJob>(requests);
+    let mut receivers = Vec::with_capacity(requests);
+    let mut batch = Vec::new();
+    for id in 0..requests as u64 {
+        let (rtx, rrx) = mpsc::channel();
+        let context: Vec<f32> =
+            (0..2 * m).map(|i| ((id as usize + i) % 7) as f32 * 0.1).collect();
+        batch.push((ForecastRequest { id, context }, Instant::now(), rtx));
+        receivers.push(rrx);
+        if batch.len() == capacity {
+            jobs_tx.send(PrepJob {
+                variant: "v".to_string(),
+                batch: std::mem::take(&mut batch),
+            })?;
+        }
+    }
+    if !batch.is_empty() {
+        jobs_tx.send(PrepJob { variant: "v".to_string(), batch })?;
+    }
+    drop(jobs_tx);
+
+    let (ev_tx, ev_rx) = mpsc::sync_channel::<StreamEvent>(256);
+    for round in 0..3 {
+        for s in 0..4u64 {
+            ev_tx.send(StreamEvent::Append {
+                session: s,
+                points: (0..4).map(|i| ((round * 4 + i) as f32 * 0.05).sin()).collect(),
+            })?;
+        }
+    }
+    drop(ev_tx);
+
+    let stream_cfg = StreamingConfig { min_new: 4, d: 1, ..Default::default() };
+    let stream_meta = VariantMeta { capacity: 4, m: 16 };
+    let row = stream_meta.m * stream_cfg.d;
+    let horizon = 8usize;
+    let metrics = Arc::new(Mutex::new(Metrics::with_obs(&obs)));
+    run_serve_stages(
+        jobs_rx,
+        ev_rx,
+        metas,
+        default_host_merge(),
+        2,
+        stream_meta,
+        stream_cfg,
+        tomers::runtime::WorkerPool::global(),
+        Arc::clone(&metrics),
+        FaultContext::new(FaultPolicy::default()),
+        move |ready| {
+            Ok((0..ready.rows).map(|r| vec![ready.slab[(r + 1) * m - 1]; horizon]).collect())
+        },
+        move |step| {
+            Ok((0..step.rows).map(|r| vec![step.slab[(r + 1) * row - 1]; horizon]).collect())
+        },
+        |_session, _forecast| {},
+    )?;
+    for rrx in receivers {
+        let _ = rrx.recv();
+    }
+
+    let (spans, dropped) = recorder().snapshot();
+    let chains = complete_chains(&spans);
+    std::fs::write(&out, recorder().export_chrome().to_string_pretty())
+        .with_context(|| format!("writing {out}"))?;
+    println!(
+        "trace: spans={} complete_chains={chains} dropped={dropped} out={out}",
+        spans.len()
+    );
     Ok(())
 }
 

@@ -168,6 +168,24 @@ impl IncrementalMerge {
         self.trimmed
     }
 
+    /// Output tokens produced over the whole history: currently held plus
+    /// any trimmed off the front.
+    pub fn output_len(&self) -> usize {
+        self.len() + self.trimmed
+    }
+
+    /// Realized stream compression `raw_len / output_len` (1.0 before any
+    /// append) — the merge-efficiency sample the serving metrics
+    /// aggregate per session.
+    pub fn compression_ratio(&self) -> f64 {
+        let out = self.output_len();
+        if out == 0 {
+            1.0
+        } else {
+            self.raw_len as f64 / out as f64
+        }
+    }
+
     /// Append `n` unit-size observations (`points.len() == n * d`).
     pub fn append(&mut self, points: &[f32]) {
         assert_eq!(points.len() % self.d, 0, "points not a whole number of tokens");
@@ -367,6 +385,8 @@ mod tests {
         assert_eq!(t, pts.to_vec());
         assert_eq!(s, vec![1.0; 3]);
         assert_eq!(inc.merged_pairs(), 0);
+        assert_eq!(inc.output_len(), 3);
+        assert_eq!(inc.compression_ratio(), 1.0);
     }
 
     #[test]

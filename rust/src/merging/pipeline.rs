@@ -61,6 +61,33 @@ impl PipelineResult {
     pub fn unmerge(&self, d: usize) -> Vec<f32> {
         unmerge(&self.tokens, d, &self.slot_map)
     }
+
+    /// Tokens entering layer 0 (0 before any run).
+    pub fn tokens_in(&self) -> usize {
+        self.token_counts.first().copied().unwrap_or(0)
+    }
+
+    /// Tokens surviving the last layer (0 before any run).
+    pub fn tokens_out(&self) -> usize {
+        self.token_counts.last().copied().unwrap_or(0)
+    }
+
+    /// Merge layers this run executed (`token_counts` holds the count
+    /// before layer 0 plus one entry per layer).
+    pub fn layers(&self) -> usize {
+        self.token_counts.len().saturating_sub(1)
+    }
+
+    /// Realized compression `tokens_in / tokens_out` of this run (1.0
+    /// when nothing merged) — the per-call merge-efficiency sample the
+    /// serving metrics aggregate (`Metrics::record_compression`).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.tokens_out() == 0 {
+            1.0
+        } else {
+            self.tokens_in() as f64 / self.tokens_out() as f64
+        }
+    }
 }
 
 /// Per-chunk execution state: kernel scratch plus two ping-pong layer
@@ -544,12 +571,16 @@ mod tests {
         let res = plan.run(&tokens, &sizes);
         assert_eq!(res.token_counts, vec![t, t]);
         assert_eq!(res.tokens, tokens);
+        assert_eq!((res.tokens_in(), res.tokens_out(), res.layers()), (t, t, 1));
+        assert_eq!(res.compression_ratio(), 1.0);
         // threshold 0 on identical tokens: every pair merges
         let constant: Vec<f32> = (0..t * d).map(|i| ((i % d) + 1) as f32).collect();
         let mut plan = MergeSpec::dynamic(0.0, 1).compile(t, d).unwrap();
         let res = plan.run(&constant, &sizes);
         assert_eq!(*res.token_counts.last().unwrap(), t - t / 2);
         assert_eq!(res.sizes.len(), t - t / 2);
+        assert_eq!(res.tokens_out(), t - t / 2);
+        assert!((res.compression_ratio() - 2.0).abs() < 1e-12);
     }
 
     #[test]

@@ -9,8 +9,8 @@
 //!   per-frame memory bound (`max_frame_bytes`, enforced before
 //!   allocation).
 //! * `protocol` — the frame vocabulary: forecast / append / collect /
-//!   ack / report requests and their terminal responses, parsed with the
-//!   config system's unknown-key-rejection strictness.
+//!   ack / report / metrics requests and their terminal responses, parsed
+//!   with the config system's unknown-key-rejection strictness.
 //! * `router`   — [`ShardRouter`]: consistent-hashes session/request ids
 //!   onto shards via a splitmix64 vnode ring; deterministic across
 //!   processes (golden-pinned and cross-checked by
@@ -40,7 +40,10 @@ pub use protocol::{
     Request, Response,
 };
 pub use router::{mix64, ShardRouter, VNODES_PER_SHARD};
-pub use server::{serve_net, spawn_shard, NetServerHandle, ShardPorts, ShardSpec};
+pub use server::{
+    process_metrics_json, process_report, serve_net, spawn_shard, NetServerHandle,
+    ShardPorts, ShardSpec,
+};
 
 /// The `"net"` config block (parsed by [`crate::config::net_from_json`]):
 /// how `tomers serve-net` exposes the shard fabric.

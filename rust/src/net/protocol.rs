@@ -41,6 +41,9 @@ pub enum Request {
     Ack { session: u64, upto: u64 },
     /// merged per-shard metrics report
     Report,
+    /// merged per-shard structured metrics (JSON; the machine-readable
+    /// twin of `Report` — see `Metrics::to_json` / `merged_json`)
+    Metrics,
 }
 
 /// A decoded server response frame.
@@ -64,6 +67,10 @@ pub enum Response {
     Acked { session: u64, shard: usize, count: usize },
     /// merged metrics text + the summed delivery ledger
     Report { text: String, delivery: DeliveryStats },
+    /// merged structured metrics: `{"shards": [...], "total": {...}}`
+    /// (`coordinator::merged_json`); carried opaque so new telemetry
+    /// fields never need a wire change
+    Metrics { metrics: Json },
     /// per-connection error: what failed (`context`) and why
     Error { context: String, reason: String },
 }
@@ -124,9 +131,13 @@ pub fn parse_request(text: &str) -> Result<Request> {
             reject_unknown_keys(&v, "\"report\" frame", &["type"])?;
             Ok(Request::Report)
         }
+        "metrics" => {
+            reject_unknown_keys(&v, "\"metrics\" frame", &["type"])?;
+            Ok(Request::Metrics)
+        }
         other => bail!(
             "unknown request type {other:?} — accepted: forecast | append | collect | \
-             ack | report"
+             ack | report | metrics"
         ),
     }
 }
@@ -154,6 +165,7 @@ pub fn request_to_json(req: &Request) -> Json {
             ("upto", Json::num(*upto as f64)),
         ]),
         Request::Report => Json::obj(vec![("type", Json::str("report"))]),
+        Request::Metrics => Json::obj(vec![("type", Json::str("metrics"))]),
     }
 }
 
@@ -240,6 +252,10 @@ pub fn response_to_json(resp: &Response) -> Json {
             ("expired_undelivered", Json::num(delivery.expired_undelivered as f64)),
             ("dropped_overflow", Json::num(delivery.dropped_overflow as f64)),
             ("pending", Json::num(delivery.pending as f64)),
+        ]),
+        Response::Metrics { metrics } => Json::obj(vec![
+            ("type", Json::str("metrics")),
+            ("metrics", metrics.clone()),
         ]),
         Response::Error { context, reason } => Json::obj(vec![
             ("type", Json::str("error")),
@@ -357,6 +373,12 @@ pub fn parse_response(text: &str) -> Result<Response> {
                 },
             })
         }
+        "metrics" => {
+            reject_unknown_keys(&v, "\"metrics\" response", &["type", "metrics"])?;
+            Ok(Response::Metrics {
+                metrics: v.req("metrics").context("\"metrics\" response")?.clone(),
+            })
+        }
         "error" => {
             reject_unknown_keys(&v, "\"error\" response", &["type", "context", "reason"])?;
             Ok(Response::Error {
@@ -389,6 +411,7 @@ mod tests {
         roundtrip_request(Request::Collect { session: u64::MAX >> 12 });
         roundtrip_request(Request::Ack { session: 3, upto: 11 });
         roundtrip_request(Request::Report);
+        roundtrip_request(Request::Metrics);
     }
 
     #[test]
@@ -430,6 +453,12 @@ mod tests {
             },
         });
         roundtrip_response(Response::Error { context: "parse".into(), reason: "bad".into() });
+        roundtrip_response(Response::Metrics {
+            metrics: Json::obj(vec![
+                ("shards", Json::arr(vec![Json::obj(vec![("served", Json::num(3.0))])])),
+                ("total", Json::obj(vec![("served", Json::num(3.0))])),
+            ]),
+        });
     }
 
     #[test]

@@ -51,7 +51,7 @@ use super::protocol::{self, Request, Response};
 use super::router::ShardRouter;
 use super::NetConfig;
 use crate::coordinator::batcher;
-use crate::coordinator::metrics::{merged_report, sum_delivery};
+use crate::coordinator::metrics::{merged_json, merged_report, sum_delivery};
 use crate::coordinator::pipeline::Pending;
 use crate::coordinator::serve_loop::SERVE_QUEUE_DEPTH;
 use crate::coordinator::stream::DecodeStep;
@@ -60,7 +60,9 @@ use crate::coordinator::{
     EntropyCache, FaultContext, FaultPolicy, ForecastOutcome, ForecastRequest, ForecastResponse,
     MergePolicy, Metrics, PrepJob, ReadyBatch, StreamEvent, VariantMeta,
 };
+use crate::json::Json;
 use crate::merging::MergeSpec;
+use crate::obs::{recorder, ObsConfig, Stage};
 use crate::runtime::pool::WorkerPool;
 use crate::streaming::StreamingConfig;
 use crate::util::{join_annotated, lock_ignore_poison as lock};
@@ -89,6 +91,10 @@ pub struct ShardSpec {
     pub max_queue: usize,
     /// fault tolerance: retries/deadlines/quarantine + delivery bounds
     pub faults: FaultPolicy,
+    /// observability: trace-ring/sampling settings and histogram bounds
+    /// (the `"obs"` config block; defaults are always-on with negligible
+    /// overhead — see `benches/obs.rs`)
+    pub obs: ObsConfig,
 }
 
 /// A shard's client-facing side: what connection threads route into.
@@ -165,13 +171,15 @@ where
         max_wait,
         max_queue,
         faults: fault_policy,
+        obs,
     } = spec;
     fault_policy.validate()?;
+    obs.validate()?;
     let delivery = Arc::new(Mutex::new(DeliveryMonitor::new(
         fault_policy.outbox_cap,
         fault_policy.forecast_ttl,
     )));
-    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let metrics = Arc::new(Mutex::new(Metrics::with_obs(&obs)));
     let faults = FaultContext::new(fault_policy);
     let (forecast_tx, forecast_rx) = sync_channel::<Pending>(max_queue);
     let (event_tx, event_rx) = sync_channel::<StreamEvent>(max_queue);
@@ -236,7 +244,18 @@ where
                     .unwrap_or(Duration::from_millis(50));
                 match forecast_rx.recv_timeout(timeout) {
                     Ok((req, t0, rtx)) => {
+                        let t_in = Instant::now();
                         let decision = policy.decide_cached(&mut entropy_cache, &req.context);
+                        recorder().record(
+                            req.id,
+                            Stage::Intake,
+                            index,
+                            t_in,
+                            t_in.elapsed(),
+                            req.context.len() as u32,
+                        );
+                        lock(&intake_metrics)
+                            .record_route(&decision.variant.name, decision.entropy);
                         let mut name = decision.variant.name;
                         {
                             let tracker = lock(&faults.tracker);
@@ -333,6 +352,25 @@ pub fn process_report(ports: &[ShardPorts]) -> (String, DeliveryStats) {
     (text, delivery)
 }
 
+/// TTL-sweep every shard's outboxes (like [`process_report`]) and return
+/// the merged structured metrics — per-shard objects plus the exact
+/// histogram-merged total ([`merged_json`]) — for the `"metrics"` wire
+/// request and the Prometheus formatter.
+pub fn process_metrics_json(ports: &[ShardPorts]) -> Json {
+    let now = Instant::now();
+    for p in ports {
+        let stats = {
+            let mut d = lock(&p.delivery);
+            d.expire(now);
+            d.stats()
+        };
+        lock(&p.metrics).set_delivery(stats);
+    }
+    let guards: Vec<_> = ports.iter().map(|p| lock(&p.metrics)).collect();
+    let refs: Vec<&Metrics> = guards.iter().map(|g| &**g).collect();
+    merged_json(&refs)
+}
+
 /// The running sharded server: joinable from the thread that called
 /// [`serve_net`].  Call [`shutdown`](NetServerHandle::shutdown) to drain
 /// (see the module docs for the order) — dropping the handle without it
@@ -408,6 +446,8 @@ where
     XS: FnMut(&mut DecodeStep) -> Result<Vec<Vec<f32>>> + Send + 'static,
 {
     cfg.validate()?;
+    spec.obs.validate()?;
+    spec.obs.apply();
     let router = Arc::new(ShardRouter::new(cfg.shards)?);
     let mut ports = Vec::with_capacity(cfg.shards);
     let mut shards = Vec::with_capacity(cfg.shards);
@@ -653,6 +693,10 @@ fn handle_frame(
         Request::Report => {
             let (text, delivery) = process_report(ports);
             send_reply(stream, max_frame_bytes, &Response::Report { text, delivery });
+        }
+        Request::Metrics => {
+            let metrics = process_metrics_json(ports);
+            send_reply(stream, max_frame_bytes, &Response::Metrics { metrics });
         }
     }
 }

@@ -1,0 +1,388 @@
+//! Bounded log-linear histograms — the fixed-memory replacement for the
+//! serving metrics' per-request vectors (DESIGN.md §13).
+//!
+//! An HDR-style layout extracted straight from the IEEE-754 bit pattern:
+//! each power-of-two octave in `[2^min_exp, 2^max_exp)` is split into
+//! [`SUB`] = 16 linear sub-buckets (the top [`SUB_BITS`] = 4 mantissa
+//! bits), plus an underflow bucket at index 0 (values below `2^min_exp`,
+//! including `<= 0` and NaN) and an overflow bucket at the last index.
+//! Total size is `(max_exp - min_exp) * 16 + 2` `u64` buckets — a few KB
+//! regardless of how many values are recorded, so a serving process can
+//! run forever without growing.
+//!
+//! **Error bound.**  An in-range bucket `[lo, lo + w)` has `w = lo'/16`
+//! for `lo' = 2^e <= lo`, so `w/lo <= 1/16`; the midpoint representative
+//! is therefore within `w/2 <= lo/32` of any member, a relative error of
+//! at most `2^-(SUB_BITS+1)` = **1/32 = 3.125%**.  [`Histogram::percentile`]
+//! uses the same nearest-rank rule as [`crate::util::percentile`], so it
+//! lands in the bucket holding the exact-rank sample and inherits that
+//! bound (edge buckets answer the recorded min/max exactly, and results
+//! are clamped to `[min, max]`).
+//!
+//! **Merge identities.**  [`Histogram::merge`] adds buckets/count/sum
+//! elementwise and folds min/max — bucket counts merge exactly
+//! (associative + commutative in `u64`), `count` is exact, and `sum`
+//! equals the fold of the per-shard sums (f64 addition; exact whenever
+//! the values are, e.g. integral batch sizes).  Pinned by the tests here
+//! and transliterated in `scripts/crosscheck_obs.py` (golden bucket
+//! indices included) so the semantics cannot drift silently.
+
+use anyhow::{ensure, Result};
+
+/// Linear sub-bucket bits per octave (top mantissa bits used).
+pub const SUB_BITS: u32 = 4;
+/// Linear sub-buckets per power-of-two octave.
+pub const SUB: usize = 1 << SUB_BITS;
+
+/// Default latency bounds (seconds): `2^-20` (~0.95us) .. `2^7` (128s),
+/// 434 buckets (~3.4 KB).
+pub const LATENCY_MIN_EXP: i32 = -20;
+/// See [`LATENCY_MIN_EXP`].
+pub const LATENCY_MAX_EXP: i32 = 7;
+
+/// A bounded log-linear histogram.  See the module docs for the bucket
+/// scheme, error bound and merge identities.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    min_exp: i32,
+    max_exp: i32,
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    /// Histogram covering `[2^min_exp, 2^max_exp)` plus the two edge
+    /// buckets.  The span is capped so a config typo cannot allocate an
+    /// absurd table.
+    pub fn new(min_exp: i32, max_exp: i32) -> Result<Histogram> {
+        ensure!(min_exp < max_exp, "histogram needs min_exp < max_exp ({min_exp} >= {max_exp})");
+        let span = (max_exp - min_exp) as usize;
+        ensure!(span <= 64, "histogram span {span} octaves exceeds the 64-octave cap");
+        ensure!(
+            (-1022..=1023).contains(&min_exp) && (-1022..=1023).contains(&max_exp),
+            "histogram exponents must stay in the normal f64 range"
+        );
+        Ok(Histogram {
+            min_exp,
+            max_exp,
+            buckets: vec![0; span * SUB + 2],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        })
+    }
+
+    /// Default latency histogram (seconds): ~1us .. 128s.
+    pub fn latency() -> Histogram {
+        Histogram::new(LATENCY_MIN_EXP, LATENCY_MAX_EXP).expect("default latency bounds")
+    }
+
+    /// Default batch-size histogram: 1 .. 65536 rows.  Small integers are
+    /// exactly representable, so `mean()` (= occupancy) stays exact.
+    pub fn batch_sizes() -> Histogram {
+        Histogram::new(0, 16).expect("default batch bounds")
+    }
+
+    /// Bucket index of `v`: 0 underflows (incl. `<= 0` and NaN), the last
+    /// bucket overflows, in-range values index by exponent + top mantissa
+    /// bits.  Transliterated in `scripts/crosscheck_obs.py::index`.
+    fn index(&self, v: f64) -> usize {
+        if !(v >= (self.min_exp as f64).exp2()) {
+            return 0;
+        }
+        if v >= (self.max_exp as f64).exp2() {
+            return self.buckets.len() - 1;
+        }
+        let bits = v.to_bits();
+        let e = ((bits >> 52) & 0x7ff) as i32 - 1023;
+        let sub = ((bits >> (52 - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+        1 + ((e - self.min_exp) as usize) * SUB + sub
+    }
+
+    /// Midpoint representative of in-range bucket `i` (`1 <= i <= n-2`).
+    fn representative(&self, i: usize) -> f64 {
+        let k = i - 1;
+        let e = self.min_exp + (k / SUB) as i32;
+        let octave = (e as f64).exp2();
+        let lower = octave * (1.0 + (k % SUB) as f64 / SUB as f64);
+        lower + octave / SUB as f64 / 2.0
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let i = self.index(v);
+        self.buckets[i] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Smallest recorded value (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded value (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Exact mean: `sum / count` uses the true running sum, not bucket
+    /// representatives (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Nearest-rank percentile from the buckets — same rank rule as
+    /// [`crate::util::percentile`], answering the rank's bucket midpoint
+    /// (edge buckets answer the recorded min/max), clamped to
+    /// `[min, max]`.  Relative error vs the exact-rank sample is bounded
+    /// by 1/32 for in-range values (module docs).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * (self.count - 1) as f64).round() as u64;
+        let mut cum = 0u64;
+        let last = self.buckets.len() - 1;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                let rep = if i == 0 {
+                    self.min
+                } else if i == last {
+                    self.max
+                } else {
+                    self.representative(i)
+                };
+                return rep.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Lossless merge: elementwise bucket add, `count`/`sum` add, min/max
+    /// fold.  Errs on mismatched bounds (shards must share one scheme for
+    /// the per-shard reports to sum exactly).
+    pub fn merge(&mut self, other: &Histogram) -> Result<()> {
+        ensure!(
+            self.min_exp == other.min_exp && self.max_exp == other.max_exp,
+            "histogram bound mismatch: [{}, {}] vs [{}, {}]",
+            self.min_exp,
+            self.max_exp,
+            other.min_exp,
+            other.max_exp
+        );
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        Ok(())
+    }
+
+    /// Heap footprint in bytes — constant in the number of recorded
+    /// values (the O(1)-memory pin in `coordinator::metrics`).
+    pub fn heap_bytes(&self) -> usize {
+        self.buckets.len() * std::mem::size_of::<u64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{percentile, Rng};
+
+    /// The golden table from `scripts/crosscheck_obs.py` — hand-derived
+    /// from the IEEE-754 layout at the default latency bounds.
+    #[test]
+    fn golden_bucket_indices() {
+        let h = Histogram::latency();
+        assert_eq!(h.buckets.len(), 434);
+        for (v, want) in [
+            (0.0, 0usize),
+            (f64::NAN, 0),
+            ((-21f64).exp2(), 0),
+            ((-20f64).exp2(), 1),
+            (0.001, 161),
+            (0.0015, 169),
+            (1.0, 321),
+            (1.5, 329),
+            (64.0, 417),
+            (127.9999, 432),
+            (128.0, 433),
+            (1e9, 433),
+        ] {
+            assert_eq!(h.index(v), want, "index({v})");
+        }
+    }
+
+    #[test]
+    fn percentile_within_documented_bound_of_sorted_oracle() {
+        let mut rng = Rng::new(21);
+        let mut h = Histogram::latency();
+        let mut vals = Vec::new();
+        for _ in 0..5000 {
+            // latencies over ~6 decades: ~2us .. ~4s
+            let e = -19.0 + (rng.below(21) as f64);
+            let v = e.exp2() * (1.0 + rng.uniform());
+            h.record(v);
+            vals.push(v);
+        }
+        for p in [0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            let oracle = percentile(&mut vals, p);
+            let got = h.percentile(p);
+            let rel = (got - oracle).abs() / oracle;
+            assert!(
+                rel <= 1.0 / 32.0 + 1e-12,
+                "p{p}: hist {got} vs oracle {oracle} (rel {rel})"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_is_commutative_associative_with_exact_identities() {
+        // dyadic values: f64 sums are exact, so the identities pin
+        // bit-for-bit (mirrors crosscheck_obs.py::check_merge_identities)
+        let sets: [&[f64]; 3] = [
+            &[0.5, 0.25, 1.0, 2.0, 0.125],
+            &[4.0, 0.5, 0.5, 8.0],
+            &[1.5, 0.75, 0.0078125, 32.0, 2.0, 2.0],
+        ];
+        let hs: Vec<Histogram> = sets
+            .iter()
+            .map(|vs| {
+                let mut h = Histogram::latency();
+                vs.iter().for_each(|&v| h.record(v));
+                h
+            })
+            .collect();
+        let mut ab = Histogram::latency();
+        ab.merge(&hs[0]).unwrap();
+        ab.merge(&hs[1]).unwrap();
+        let mut ba = Histogram::latency();
+        ba.merge(&hs[1]).unwrap();
+        ba.merge(&hs[0]).unwrap();
+        assert_eq!(ab, ba, "merge must be commutative");
+
+        let mut left = ab.clone();
+        left.merge(&hs[2]).unwrap();
+        let mut bc = Histogram::latency();
+        bc.merge(&hs[1]).unwrap();
+        bc.merge(&hs[2]).unwrap();
+        let mut right = Histogram::latency();
+        right.merge(&hs[0]).unwrap();
+        right.merge(&bc).unwrap();
+        assert_eq!(left, right, "merge must be associative on exact values");
+
+        // exact identities vs recording everything directly
+        let mut direct = Histogram::latency();
+        sets.iter().for_each(|vs| vs.iter().for_each(|&v| direct.record(v)));
+        assert_eq!(left, direct);
+        assert_eq!(left.count(), 15);
+        assert_eq!(left.sum(), direct.sum(), "sum identity must be exact here");
+        assert_eq!(left.min(), 0.0078125);
+        assert_eq!(left.max(), 32.0);
+    }
+
+    #[test]
+    fn merged_percentiles_match_pooled_recording() {
+        // two "shards" with disjoint latency regimes: the merged
+        // histogram answers within the bound of the pooled oracle
+        let mut rng = Rng::new(5);
+        let (mut a, mut b) = (Histogram::latency(), Histogram::latency());
+        let mut all = Vec::new();
+        for i in 0..2000 {
+            let v = if i % 2 == 0 {
+                0.001 * (1.0 + rng.uniform()) // ~1-2ms shard
+            } else {
+                0.05 * (1.0 + rng.uniform()) // ~50-100ms shard
+            };
+            if i % 2 == 0 { a.record(v) } else { b.record(v) }
+            all.push(v);
+        }
+        let mut merged = a.clone();
+        merged.merge(&b).unwrap();
+        assert_eq!(merged.count(), a.count() + b.count());
+        assert_eq!(merged.sum(), a.sum() + b.sum());
+        for p in [50.0, 99.0] {
+            let oracle = percentile(&mut all, p);
+            let rel = (merged.percentile(p) - oracle).abs() / oracle;
+            assert!(rel <= 1.0 / 32.0 + 1e-12, "merged p{p} off by {rel}");
+        }
+    }
+
+    #[test]
+    fn edge_and_degenerate_behaviour() {
+        let mut h = Histogram::latency();
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        h.record(0.25);
+        for p in [0.0, 50.0, 100.0] {
+            assert!((h.percentile(p) - 0.25).abs() <= 0.25 / 32.0);
+        }
+        // out-of-range values are retained exactly via min/max
+        h.record(0.0);
+        h.record(1e9);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 1e9);
+        assert_eq!(h.percentile(0.0), 0.0, "underflow bucket answers the true min");
+        assert_eq!(h.percentile(100.0), 1e9, "overflow bucket answers the true max");
+        // mismatched bounds refuse to merge
+        let other = Histogram::batch_sizes();
+        assert!(h.merge(&other).is_err());
+        // degenerate construction
+        assert!(Histogram::new(5, 5).is_err());
+        assert!(Histogram::new(-10, 60).is_err());
+    }
+
+    #[test]
+    fn memory_is_constant_in_record_count() {
+        let mut h = Histogram::latency();
+        let before = h.heap_bytes();
+        for i in 0..10_000 {
+            h.record(1e-6 * (i + 1) as f64);
+        }
+        assert_eq!(h.heap_bytes(), before, "recording must never grow the histogram");
+        assert_eq!(h.count(), 10_000);
+        // integral batch sizes keep the occupancy mean exact
+        let mut b = Histogram::batch_sizes();
+        for _ in 0..500 {
+            b.record(3.0);
+            b.record(5.0);
+        }
+        assert_eq!(b.mean(), 4.0);
+    }
+}

@@ -1,0 +1,267 @@
+//! Observability subsystem (DESIGN.md §13): bounded log-linear
+//! [`Histogram`]s, the per-stage span [`TraceRecorder`], and the
+//! Prometheus text exposition over the structured metrics JSON.
+//!
+//! The serving stack threads through here at three points:
+//!
+//! * `coordinator::metrics::Metrics` stores latencies / batch sizes /
+//!   per-stage durations as [`Histogram`]s (O(1) memory in request
+//!   count, lossless per-shard merging — the identities
+//!   `scripts/crosscheck_obs.py` pins);
+//! * the pipeline / stream / net layers stamp [`trace::Stage`] spans
+//!   into the global [`recorder`] ring (`tomers trace-dump` exports it
+//!   as Chrome `trace_event` JSON);
+//! * the wire `metrics` request (`net::protocol`) returns
+//!   `metrics::merged_json`, which [`prometheus_text`] renders as
+//!   Prometheus exposition for `tomers client --metrics`.
+//!
+//! The `"obs"` config block ([`ObsConfig`]) sizes the ring, the span
+//! sampling stride and the latency-histogram bounds.
+
+pub mod hist;
+pub mod trace;
+
+use anyhow::Result;
+
+pub use hist::Histogram;
+pub use trace::{complete_chains, recorder, SpanEvent, Stage, TraceRecorder};
+
+use crate::json::Json;
+
+/// The `"obs"` config block: trace-ring capacity, span sampling stride,
+/// and the latency-histogram bounds (powers of two, seconds).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ObsConfig {
+    /// bounded span-ring capacity (overwrites oldest past this)
+    pub trace_ring: usize,
+    /// keep spans for ids divisible by this (1 = trace everything)
+    pub sample_every: u64,
+    /// latency histograms cover `[2^hist_min_exp, 2^hist_max_exp)` seconds
+    pub hist_min_exp: i32,
+    /// see `hist_min_exp`
+    pub hist_max_exp: i32,
+}
+
+impl Default for ObsConfig {
+    fn default() -> ObsConfig {
+        ObsConfig {
+            trace_ring: 4096,
+            sample_every: 1,
+            hist_min_exp: hist::LATENCY_MIN_EXP,
+            hist_max_exp: hist::LATENCY_MAX_EXP,
+        }
+    }
+}
+
+impl ObsConfig {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.trace_ring > 0, "obs.trace_ring must be positive");
+        anyhow::ensure!(
+            self.trace_ring <= 1 << 22,
+            "obs.trace_ring {} exceeds the 4Mi-span cap",
+            self.trace_ring
+        );
+        anyhow::ensure!(self.sample_every > 0, "obs.sample_every must be positive");
+        // the histogram constructor owns the bound rules
+        Histogram::new(self.hist_min_exp, self.hist_max_exp)?;
+        Ok(())
+    }
+
+    /// Latency histogram at this config's bounds.
+    pub fn latency_histogram(&self) -> Histogram {
+        Histogram::new(self.hist_min_exp, self.hist_max_exp)
+            .expect("validated obs histogram bounds")
+    }
+
+    /// Push the trace settings into the global [`recorder`].
+    pub fn apply(&self) {
+        recorder().configure(self.trace_ring, self.sample_every, true);
+    }
+}
+
+fn prom_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "NaN".to_string()
+    }
+}
+
+fn prom_line(out: &mut String, name: &str, labels: &[(&str, String)], value: f64) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{k}=\"{v}\""));
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    out.push_str(&prom_f64(value));
+    out.push('\n');
+}
+
+fn num_at(v: &Json, key: &str) -> f64 {
+    v.get(key).and_then(|x| x.as_f64().ok()).unwrap_or(0.0)
+}
+
+fn prom_summary(
+    out: &mut String,
+    family: &str,
+    labels: &[(&str, String)],
+    block: &Json,
+) {
+    for q in ["p50", "p95", "p99"] {
+        if block.get(q).is_some() {
+            let mut l = labels.to_vec();
+            // "p50" -> the 0.50-style quantile label
+            l.push(("quantile", format!("0.{}", q.trim_start_matches('p'))));
+            prom_line(out, family, &l, num_at(block, q));
+        }
+    }
+    prom_line(out, &format!("{family}_count"), labels, num_at(block, "count"));
+    prom_line(out, &format!("{family}_sum"), labels, num_at(block, "sum"));
+}
+
+/// Render the structured metrics JSON (`metrics::merged_json` — the wire
+/// `metrics` response) as Prometheus text exposition.  Tolerant of
+/// missing sections: absent blocks simply emit nothing.
+pub fn prometheus_text(metrics: &Json) -> String {
+    let mut out = String::new();
+    out.push_str("# TYPE tomers_served counter\n");
+    out.push_str("# TYPE tomers_rejected counter\n");
+    out.push_str("# TYPE tomers_latency_seconds summary\n");
+    let shards: &[Json] = metrics
+        .get("shards")
+        .and_then(|s| s.as_arr().ok())
+        .unwrap_or(&[]);
+    for shard in shards {
+        let sid = num_at(shard, "shard") as usize;
+        let base = vec![("shard", sid.to_string())];
+        prom_line(&mut out, "tomers_served", &base, num_at(shard, "served"));
+        prom_line(&mut out, "tomers_rejected", &base, num_at(shard, "rejected"));
+        if let Some(lat) = shard.get("latency") {
+            prom_summary(&mut out, "tomers_latency_seconds", &base, lat);
+        }
+        if let Some(batch) = shard.get("batch") {
+            prom_line(&mut out, "tomers_batch_occupancy", &base, num_at(batch, "mean"));
+        }
+        if let Some(Ok(stages)) = shard.get("stages").map(|s| s.as_obj()) {
+            for (stage, block) in stages {
+                let mut l = base.clone();
+                l.push(("stage", stage.clone()));
+                prom_summary(&mut out, "tomers_stage_seconds", &l, block);
+            }
+        }
+        if let Some(Ok(variants)) = shard.get("variants").map(|v| v.as_obj()) {
+            for (name, block) in variants {
+                let mut l = base.clone();
+                l.push(("variant", name.clone()));
+                prom_line(&mut out, "tomers_variant_served", &l, num_at(block, "served"));
+                prom_line(
+                    &mut out,
+                    "tomers_variant_compression_ratio",
+                    &l,
+                    num_at(block, "compression"),
+                );
+                prom_line(&mut out, "tomers_variant_tokens_in", &l, num_at(block, "tokens_in"));
+                prom_line(&mut out, "tomers_variant_tokens_out", &l, num_at(block, "tokens_out"));
+            }
+        }
+        if let Some(Ok(routes)) = shard.get("routes").map(|v| v.as_obj()) {
+            for (name, block) in routes {
+                let mut l = base.clone();
+                l.push(("variant", name.clone()));
+                prom_line(&mut out, "tomers_route_decisions", &l, num_at(block, "decisions"));
+                prom_line(
+                    &mut out,
+                    "tomers_route_entropy_mean",
+                    &l,
+                    num_at(block, "entropy_mean"),
+                );
+            }
+        }
+        if let Some(Ok(faults)) = shard.get("faults").map(|v| v.as_obj()) {
+            for (kind, n) in faults {
+                let mut l = base.clone();
+                l.push(("kind", kind.clone()));
+                prom_line(&mut out, "tomers_faults", &l, n.as_f64().unwrap_or(0.0));
+            }
+        }
+        if let Some(Ok(delivery)) = shard.get("delivery").map(|v| v.as_obj()) {
+            for (state, n) in delivery {
+                let mut l = base.clone();
+                l.push(("state", state.clone()));
+                prom_line(&mut out, "tomers_delivery", &l, n.as_f64().unwrap_or(0.0));
+            }
+        }
+    }
+    if let Some(total) = metrics.get("total") {
+        prom_line(&mut out, "tomers_served_total", &[], num_at(total, "served"));
+        prom_line(&mut out, "tomers_rejected_total", &[], num_at(total, "rejected"));
+        if let Some(lat) = total.get("latency") {
+            prom_summary(&mut out, "tomers_latency_seconds_merged", &[], lat);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_config_validates() {
+        ObsConfig::default().validate().unwrap();
+        assert!(ObsConfig { trace_ring: 0, ..ObsConfig::default() }.validate().is_err());
+        assert!(ObsConfig { sample_every: 0, ..ObsConfig::default() }.validate().is_err());
+        assert!(
+            ObsConfig { hist_min_exp: 3, hist_max_exp: 3, ..ObsConfig::default() }
+                .validate()
+                .is_err()
+        );
+        let wide = ObsConfig { hist_min_exp: -40, hist_max_exp: 30, ..ObsConfig::default() };
+        assert!(wide.validate().is_err(), "a 70-octave span must be rejected");
+    }
+
+    #[test]
+    fn prometheus_text_renders_the_metrics_schema() {
+        let json = Json::parse(
+            r#"{
+              "shards": [{
+                "shard": 0, "served": 12, "rejected": 1,
+                "latency": {"count": 12, "sum": 0.6, "p50": 0.04, "p95": 0.09, "p99": 0.1},
+                "batch": {"count": 3, "mean": 4.0},
+                "stages": {"exec": {"count": 3, "sum": 0.3, "p50": 0.1}},
+                "variants": {"v": {"served": 12, "compression": 2.0,
+                                    "tokens_in": 768, "tokens_out": 384}},
+                "routes": {"v": {"decisions": 12, "entropy_mean": 4.2}},
+                "faults": {"exec_retries": 2},
+                "delivery": {"enqueued": 5, "pending": 1}
+              }],
+              "total": {"served": 12, "rejected": 1,
+                        "latency": {"count": 12, "sum": 0.6, "p50": 0.04}}
+            }"#,
+        )
+        .unwrap();
+        let text = prometheus_text(&json);
+        for needle in [
+            "tomers_served{shard=\"0\"} 12",
+            "tomers_rejected{shard=\"0\"} 1",
+            "tomers_latency_seconds{shard=\"0\",quantile=\"0.50\"} 0.04",
+            "tomers_latency_seconds_count{shard=\"0\"} 12",
+            "tomers_batch_occupancy{shard=\"0\"} 4",
+            "tomers_stage_seconds{shard=\"0\",stage=\"exec\",quantile=\"0.50\"} 0.1",
+            "tomers_variant_compression_ratio{shard=\"0\",variant=\"v\"} 2",
+            "tomers_route_decisions{shard=\"0\",variant=\"v\"} 12",
+            "tomers_faults{shard=\"0\",kind=\"exec_retries\"} 2",
+            "tomers_delivery{shard=\"0\",state=\"pending\"} 1",
+            "tomers_served_total 12",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+    }
+}

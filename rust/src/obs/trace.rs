@@ -1,0 +1,366 @@
+//! Per-stage request tracing: a bounded, mutex-guarded ring of span
+//! events stamped at each serving lifecycle edge (DESIGN.md §13).
+//!
+//! One process-global [`TraceRecorder`] (the [`recorder`] singleton, same
+//! `OnceLock` idiom as `runtime::pool::WorkerPool::global`) collects
+//! [`SpanEvent`]s from every serving thread: intake admission, batcher
+//! queue wait, host prep/premerge, the device call (retry attempts in
+//! `detail`), response send, and the stream-side prep/exec/deliver
+//! edges.  The ring overwrites oldest-first past its capacity (the
+//! `dropped` counter says how many), so tracing memory is bounded and
+//! the newest spans always survive — a post-incident dump shows the most
+//! recent traffic.
+//!
+//! `sample_every = N` keeps only ids divisible by N (1 = everything), so
+//! production rates can trace a deterministic slice instead of paying
+//! one ring slot per request.  The enabled flag is a relaxed atomic: the
+//! disabled path is one load, no lock — the recorder-off arm of
+//! `benches/obs.rs`.
+//!
+//! [`TraceRecorder::export_chrome`] renders the ring as Chrome
+//! `trace_event` JSON (complete "X" events, microsecond timestamps,
+//! shard as `tid`) — load it in `chrome://tracing` / Perfetto, or via
+//! `tomers trace-dump`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::json::Json;
+use crate::util::lock_ignore_poison;
+
+/// A serving lifecycle stage — the label on trace spans and the key of
+/// the per-stage duration histograms in `coordinator::metrics`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// net intake: frame arrival -> routing decision + enqueue
+    Intake,
+    /// batcher queue: request enqueue -> its batch forming
+    QueueWait,
+    /// host prep: slab pad + premerge on the worker pool
+    Prep,
+    /// device call, retries/backoff included
+    Exec,
+    /// terminal response send-out
+    Respond,
+    /// stream decode-step assembly (session slab fill)
+    StreamPrep,
+    /// stream device call, retries included
+    StreamExec,
+    /// stream forecast delivery (outbox offer)
+    Deliver,
+}
+
+impl Stage {
+    /// Every stage, in pipeline order — iteration key for the stage
+    /// histogram set.
+    pub const ALL: [Stage; 8] = [
+        Stage::Intake,
+        Stage::QueueWait,
+        Stage::Prep,
+        Stage::Exec,
+        Stage::Respond,
+        Stage::StreamPrep,
+        Stage::StreamExec,
+        Stage::Deliver,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Intake => "intake",
+            Stage::QueueWait => "queue_wait",
+            Stage::Prep => "prep",
+            Stage::Exec => "exec",
+            Stage::Respond => "respond",
+            Stage::StreamPrep => "stream_prep",
+            Stage::StreamExec => "stream_exec",
+            Stage::Deliver => "deliver",
+        }
+    }
+
+    /// Dense index into [`Stage::ALL`]-shaped tables.
+    pub fn idx(self) -> usize {
+        match self {
+            Stage::Intake => 0,
+            Stage::QueueWait => 1,
+            Stage::Prep => 2,
+            Stage::Exec => 3,
+            Stage::Respond => 4,
+            Stage::StreamPrep => 5,
+            Stage::StreamExec => 6,
+            Stage::Deliver => 7,
+        }
+    }
+}
+
+/// One completed span: stage + request (or batch-leader / session) id,
+/// start relative to the recorder epoch, duration, and a stage-specific
+/// detail (batch rows, retry attempts, delivered entries, shard...).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanEvent {
+    pub id: u64,
+    pub stage: Stage,
+    pub shard: usize,
+    pub t_start_us: u64,
+    pub dur_us: u64,
+    pub detail: u32,
+}
+
+struct Ring {
+    buf: Vec<SpanEvent>,
+    cap: usize,
+    /// next overwrite slot once `buf.len() == cap`
+    next: usize,
+    /// spans overwritten (oldest-first) since the last configure
+    dropped: u64,
+    sample_every: u64,
+    epoch: Instant,
+}
+
+/// The bounded span recorder.  All methods take `&self`; serving threads
+/// share the [`recorder`] singleton.
+pub struct TraceRecorder {
+    inner: Mutex<Ring>,
+    enabled: AtomicBool,
+}
+
+impl TraceRecorder {
+    pub fn new(capacity: usize, sample_every: u64) -> TraceRecorder {
+        TraceRecorder {
+            inner: Mutex::new(Ring {
+                buf: Vec::new(),
+                cap: capacity.max(1),
+                next: 0,
+                dropped: 0,
+                sample_every: sample_every.max(1),
+                epoch: Instant::now(),
+            }),
+            enabled: AtomicBool::new(true),
+        }
+    }
+
+    /// Reconfigure in place (the `"obs"` config block): clears the ring,
+    /// resets the epoch and the dropped counter.
+    pub fn configure(&self, capacity: usize, sample_every: u64, enabled: bool) {
+        let mut r = lock_ignore_poison(&self.inner);
+        r.buf.clear();
+        r.buf.shrink_to_fit();
+        r.cap = capacity.max(1);
+        r.next = 0;
+        r.dropped = 0;
+        r.sample_every = sample_every.max(1);
+        r.epoch = Instant::now();
+        drop(r);
+        self.enabled.store(enabled, Ordering::Relaxed);
+    }
+
+    /// Flip recording without touching the ring — the on/off arms of the
+    /// overhead bench.
+    pub fn set_enabled(&self, enabled: bool) {
+        self.enabled.store(enabled, Ordering::Relaxed);
+    }
+
+    /// One relaxed load — the only cost on the disabled path.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Record one completed span.  No-op when disabled or when `id` is
+    /// sampled out (`id % sample_every != 0`).  A `start` predating the
+    /// epoch clamps to 0 (requests in flight across a `configure`).
+    pub fn record(
+        &self,
+        id: u64,
+        stage: Stage,
+        shard: usize,
+        start: Instant,
+        dur: Duration,
+        detail: u32,
+    ) {
+        if !self.is_enabled() {
+            return;
+        }
+        let mut r = lock_ignore_poison(&self.inner);
+        if id % r.sample_every != 0 {
+            return;
+        }
+        let t_start_us =
+            start.checked_duration_since(r.epoch).unwrap_or(Duration::ZERO).as_micros() as u64;
+        let ev = SpanEvent {
+            id,
+            stage,
+            shard,
+            t_start_us,
+            dur_us: dur.as_micros() as u64,
+            detail,
+        };
+        if r.buf.len() < r.cap {
+            r.buf.push(ev);
+        } else {
+            let slot = r.next;
+            r.buf[slot] = ev;
+            r.next = (r.next + 1) % r.cap;
+            r.dropped += 1;
+        }
+    }
+
+    /// Copy out the ring oldest-first, plus how many older spans the ring
+    /// overwrote to stay bounded.
+    pub fn snapshot(&self) -> (Vec<SpanEvent>, u64) {
+        let r = lock_ignore_poison(&self.inner);
+        let mut out = Vec::with_capacity(r.buf.len());
+        if r.buf.len() == r.cap {
+            out.extend_from_slice(&r.buf[r.next..]);
+            out.extend_from_slice(&r.buf[..r.next]);
+        } else {
+            out.extend_from_slice(&r.buf);
+        }
+        (out, r.dropped)
+    }
+
+    /// Render the ring as Chrome `trace_event` JSON: complete (`"X"`)
+    /// events with microsecond `ts`/`dur`, shard as `tid` — loadable in
+    /// `chrome://tracing` / Perfetto.
+    pub fn export_chrome(&self) -> Json {
+        let (events, dropped) = self.snapshot();
+        let evs = events
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("name", Json::str(e.stage.name())),
+                    ("cat", Json::str("serve")),
+                    ("ph", Json::str("X")),
+                    ("ts", Json::num(e.t_start_us as f64)),
+                    ("dur", Json::num(e.dur_us as f64)),
+                    ("pid", Json::num(1.0)),
+                    ("tid", Json::num(e.shard as f64)),
+                    (
+                        "args",
+                        Json::obj(vec![
+                            ("id", Json::num(e.id as f64)),
+                            ("detail", Json::num(e.detail as f64)),
+                        ]),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("traceEvents", Json::arr(evs)),
+            ("displayTimeUnit", Json::str("ms")),
+            ("dropped", Json::num(dropped as f64)),
+        ])
+    }
+}
+
+/// Ids whose spans cover the full batch lifecycle — prep, exec and
+/// respond (a batch's leader id carries all three).  The `tomers
+/// trace-dump` gate: at least one complete chain proves the stages are
+/// actually stitched to the same request.
+pub fn complete_chains(events: &[SpanEvent]) -> usize {
+    use std::collections::BTreeMap;
+    let mut seen: BTreeMap<u64, u8> = BTreeMap::new();
+    for e in events {
+        let bit = match e.stage {
+            Stage::Prep => 1u8,
+            Stage::Exec => 2,
+            Stage::Respond => 4,
+            _ => 0,
+        };
+        if bit != 0 {
+            *seen.entry(e.id).or_insert(0) |= bit;
+        }
+    }
+    seen.values().filter(|&&m| m == 7).count()
+}
+
+/// The process-global recorder (defaults: 4096-span ring, no sampling,
+/// enabled).  `ObsConfig::apply` / `serve_net` reconfigure it at startup.
+pub fn recorder() -> &'static TraceRecorder {
+    static RECORDER: OnceLock<TraceRecorder> = OnceLock::new();
+    RECORDER.get_or_init(|| TraceRecorder::new(4096, 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(rec: &TraceRecorder, id: u64, stage: Stage) {
+        let t0 = Instant::now();
+        rec.record(id, stage, 0, t0, Duration::from_micros(5), 1);
+    }
+
+    #[test]
+    fn ring_eviction_keeps_newest_spans() {
+        let rec = TraceRecorder::new(4, 1);
+        for id in 0..10u64 {
+            span(&rec, id, Stage::Exec);
+        }
+        let (events, dropped) = rec.snapshot();
+        assert_eq!(events.len(), 4, "ring stays at capacity");
+        assert_eq!(dropped, 6, "six oldest spans overwritten");
+        let ids: Vec<u64> = events.iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9], "oldest-first snapshot of the newest spans");
+    }
+
+    #[test]
+    fn sampling_and_disable_gate_recording() {
+        let rec = TraceRecorder::new(16, 2);
+        for id in 0..6u64 {
+            span(&rec, id, Stage::Prep);
+        }
+        let (events, _) = rec.snapshot();
+        let ids: Vec<u64> = events.iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![0, 2, 4], "sample_every=2 keeps even ids only");
+
+        rec.set_enabled(false);
+        span(&rec, 8, Stage::Prep);
+        assert_eq!(rec.snapshot().0.len(), 3, "disabled recorder drops everything");
+        rec.set_enabled(true);
+        span(&rec, 10, Stage::Prep);
+        assert_eq!(rec.snapshot().0.len(), 4);
+
+        rec.configure(8, 1, true);
+        assert_eq!(rec.snapshot().0.len(), 0, "configure clears the ring");
+    }
+
+    #[test]
+    fn chrome_export_is_valid_and_parses_back() {
+        let rec = TraceRecorder::new(16, 1);
+        let t0 = Instant::now();
+        rec.record(7, Stage::Prep, 1, t0, Duration::from_micros(250), 4);
+        rec.record(7, Stage::Exec, 1, t0, Duration::from_micros(900), 2);
+        let text = rec.export_chrome().to_string();
+        let back = Json::parse(&text).expect("export must be valid JSON");
+        let evs = back.req("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        for ev in evs {
+            assert_eq!(ev.req("ph").unwrap().as_str().unwrap(), "X");
+            assert_eq!(ev.req("cat").unwrap().as_str().unwrap(), "serve");
+            assert_eq!(ev.req("tid").unwrap().as_usize().unwrap(), 1);
+            assert!(ev.req("dur").unwrap().as_f64().unwrap() > 0.0);
+            assert_eq!(ev.req("args").unwrap().req("id").unwrap().as_usize().unwrap(), 7);
+        }
+        assert_eq!(back.req("displayTimeUnit").unwrap().as_str().unwrap(), "ms");
+    }
+
+    #[test]
+    fn complete_chains_requires_all_three_stages() {
+        let rec = TraceRecorder::new(16, 1);
+        for s in [Stage::QueueWait, Stage::Prep, Stage::Exec, Stage::Respond] {
+            span(&rec, 1, s);
+        }
+        span(&rec, 2, Stage::Prep);
+        span(&rec, 2, Stage::Exec);
+        span(&rec, 3, Stage::Respond);
+        let (events, _) = rec.snapshot();
+        assert_eq!(complete_chains(&events), 1, "only id 1 carries prep+exec+respond");
+    }
+
+    #[test]
+    fn stage_table_is_dense_and_named() {
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(s.idx(), i, "Stage::ALL order must match idx()");
+            assert!(!s.name().is_empty());
+        }
+    }
+}

@@ -176,6 +176,19 @@ impl SessionManager {
         self.stats
     }
 
+    /// Merge-efficiency gauge over the whole table: total raw tokens
+    /// appended vs output tokens produced (trimmed included) across every
+    /// live session — what `Metrics::set_stream_tokens` snapshots.
+    pub fn merge_totals(&self) -> (u64, u64) {
+        let mut raw = 0u64;
+        let mut merged = 0u64;
+        for s in self.sessions.values() {
+            raw += s.merge().raw_len() as u64;
+            merged += s.merge().output_len() as u64;
+        }
+        (raw, merged)
+    }
+
     pub fn session(&self, id: u64) -> Option<&StreamSession> {
         self.sessions.get(&id)
     }
@@ -506,6 +519,10 @@ mod tests {
         assert!(m.stats().reroutes >= 1);
         // the rebuilt state covers the retained window only
         assert!(m.session(1).unwrap().merge().raw_len() <= 128);
+        // the table-wide merge gauge sums that session's counters
+        let (raw, merged) = m.merge_totals();
+        assert_eq!(raw, m.session(1).unwrap().merge().raw_len() as u64);
+        assert!(merged >= 1 && merged <= raw, "raw={raw} merged={merged}");
     }
 
     #[test]

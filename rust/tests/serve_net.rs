@@ -31,10 +31,12 @@ use tomers::coordinator::{
     default_host_merge, DecodeStep, FaultPlan, FaultPolicy, ForecastOutcome, MergePolicy,
     ReadyBatch, Variant, VariantMeta,
 };
+use tomers::json::Json;
 use tomers::net::{
     parse_response, serve_net, write_frame, FrameDecoder, NetClient, NetConfig,
     NetServerHandle, Request, Response, ShardRouter, ShardSpec, DEFAULT_MAX_FRAME_BYTES,
 };
+use tomers::obs::ObsConfig;
 use tomers::runtime::WorkerPool;
 use tomers::streaming::StreamingConfig;
 
@@ -60,6 +62,7 @@ fn spec(max_queue: usize, ttl: Duration) -> ShardSpec {
             forecast_ttl: ttl,
             ..FaultPolicy::default()
         },
+        obs: ObsConfig::default(),
     }
 }
 
@@ -218,6 +221,51 @@ fn loopback_roundtrip_with_faults_leaves_every_request_terminal() {
     drop(c);
     let report = handle.shutdown().expect("drain joins every thread");
     assert!(report.contains("process: shards=2"), "{report}");
+}
+
+/// The `metrics` request answers the merged structured metrics
+/// (DESIGN.md §13) over the wire: one object per shard plus a process
+/// total whose counters agree with what the connection actually did, and
+/// the payload renders to non-empty Prometheus text.
+#[test]
+fn metrics_request_exposes_structured_shard_metrics() {
+    let handle = spawn(2, 0.0, 256, Duration::from_secs(60), Duration::ZERO);
+    let mut c = connect(&handle);
+    let n = 40u64;
+    for i in 0..n {
+        let context: Vec<f32> = (0..M).map(|j| ((i as usize + j) % 7) as f32 * 0.1).collect();
+        c.send(&Request::Forecast { id: i, context }).unwrap();
+    }
+    let mut delivered = 0u64;
+    for _ in 0..n {
+        match c.recv().unwrap() {
+            Response::Forecast { outcome: ForecastOutcome::Delivered, .. } => delivered += 1,
+            Response::Forecast { .. } => {}
+            other => panic!("expected forecasts only, got {other:?}"),
+        }
+    }
+    assert_eq!(delivered, n, "fault-free run must deliver everything");
+
+    let metrics = match c.call(&Request::Metrics).unwrap() {
+        Response::Metrics { metrics } => metrics,
+        other => panic!("expected metrics, got {other:?}"),
+    };
+    let shards = metrics.req("shards").unwrap().as_arr().unwrap();
+    assert_eq!(shards.len(), 2, "one metrics object per shard");
+    let total = metrics.req("total").unwrap();
+    assert_eq!(total.req("served").unwrap().as_usize().unwrap() as u64, n);
+    assert_eq!(total.req("rejected").unwrap().as_usize().unwrap(), 0);
+    let lat = total.req("latency").unwrap();
+    assert_eq!(lat.req("count").unwrap().as_usize().unwrap() as u64, n);
+    // per-shard objects carry the per-stage histograms the recorder fed
+    let shard0 = &shards[0];
+    assert!(matches!(shard0.req("stages"), Ok(Json::Obj(_))), "stages block present");
+    let prom = tomers::obs::prometheus_text(&metrics);
+    assert!(prom.contains("tomers_served_total"), "{prom}");
+    assert!(prom.contains("tomers_latency_seconds"), "{prom}");
+
+    drop(c);
+    handle.shutdown().unwrap();
 }
 
 /// Malformed JSON inside a well-formed frame answers a parse error and

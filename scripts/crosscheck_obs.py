@@ -1,0 +1,268 @@
+#!/usr/bin/env python3
+"""Transliteration crosscheck for the observability histograms
+(rust/src/obs/hist.rs) — runs without the Rust toolchain.
+
+The serving metrics replace their unbounded per-request vectors with
+bounded log-linear histograms: one bucket per 1/16th of an octave
+(SUB_BITS = 4 linear sub-buckets per power of two), extracted straight
+from the f64 bit pattern, plus an underflow bucket (index 0) and an
+overflow bucket (last index).  This script reimplements, independently
+of the Rust code:
+
+  * bucket indexing from the IEEE-754 bit layout (exponent + top 4
+    mantissa bits), pinned against a hand-computed golden table;
+  * bucket bounds / midpoint representatives and the documented
+    relative-error bound (<= 1/32 = 3.125% for in-range values);
+  * nearest-rank percentile readout (the same rule as
+    `tomers::util::percentile`), checked against a sorted-vector oracle
+    on pseudorandom data within the documented bound;
+  * histogram merge: exact count/sum identities, commutativity, and
+    associativity (on dyadic-exact values, where f64 addition is exact).
+
+Any drift between this file and rust/src/obs/hist.rs is a semantic
+regression in one of them.  scripts/verify.sh runs this as a first
+gate, before anything cargo-dependent.
+"""
+
+import math
+import struct
+import sys
+
+SUB_BITS = 4
+SUB = 1 << SUB_BITS  # 16 linear sub-buckets per octave
+
+# Default latency histogram bounds (seconds): 2^-20 (~0.95us) .. 2^7 (128s).
+LAT_MIN_EXP = -20
+LAT_MAX_EXP = 7
+
+
+def bucket_count(min_exp, max_exp):
+    return (max_exp - min_exp) * SUB + 2
+
+
+def index(v, min_exp, max_exp):
+    """Bucket index of value v: 0 = underflow (incl. <= 0 and NaN),
+    last = overflow, else 1 + (exponent - min_exp) * SUB + sub."""
+    n = bucket_count(min_exp, max_exp)
+    if not (v >= 2.0 ** min_exp):  # NaN compares false -> underflow
+        return 0
+    if v >= 2.0 ** max_exp:
+        return n - 1
+    bits = struct.unpack(">Q", struct.pack(">d", v))[0]
+    e = ((bits >> 52) & 0x7FF) - 1023
+    sub = (bits >> (52 - SUB_BITS)) & (SUB - 1)
+    return 1 + (e - min_exp) * SUB + sub
+
+
+def bounds(i, min_exp):
+    """[lower, lower + width) of in-range bucket i (1 <= i <= n-2)."""
+    k = i - 1
+    e = min_exp + k // SUB
+    sub = k % SUB
+    lower = (2.0 ** e) * (1.0 + sub / SUB)
+    width = (2.0 ** e) / SUB
+    return lower, width
+
+
+def representative(i, min_exp):
+    lower, width = bounds(i, min_exp)
+    return lower + width / 2.0
+
+
+def nearest_rank(p, n):
+    """0-based nearest-rank index, matching tomers::util::percentile:
+    round-half-away-from-zero of p/100 * (n-1)."""
+    return int(math.floor(p / 100.0 * (n - 1) + 0.5))
+
+
+class Hist:
+    def __init__(self, min_exp=LAT_MIN_EXP, max_exp=LAT_MAX_EXP):
+        self.min_exp, self.max_exp = min_exp, max_exp
+        self.buckets = [0] * bucket_count(min_exp, max_exp)
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+
+    def record(self, v):
+        self.buckets[index(v, self.min_exp, self.max_exp)] += 1
+        self.count += 1
+        self.sum += v
+        self.min = min(self.min, v)
+        self.max = max(self.max, v)
+
+    def merge(self, other):
+        assert (self.min_exp, self.max_exp) == (other.min_exp, other.max_exp)
+        for i, c in enumerate(other.buckets):
+            self.buckets[i] += c
+        self.count += other.count
+        self.sum += other.sum
+        self.min = min(self.min, other.min)
+        self.max = max(self.max, other.max)
+
+    def percentile(self, p):
+        if self.count == 0:
+            return 0.0
+        rank = nearest_rank(p, self.count)
+        cum = 0
+        last = len(self.buckets) - 1
+        for i, c in enumerate(self.buckets):
+            cum += c
+            if cum > rank:
+                if i == 0:
+                    rep = self.min
+                elif i == last:
+                    rep = self.max
+                else:
+                    rep = representative(i, self.min_exp)
+                return min(max(rep, self.min), self.max)
+        return self.max
+
+
+# Golden bucket indices at the default latency bounds (-20 .. 7), each
+# hand-derived from the IEEE-754 layout.  Pinned verbatim in
+# rust/src/obs/hist.rs (test `golden_bucket_indices`).
+GOLDEN = [
+    (0.0, 0),        # <= 0 underflows
+    (float("nan"), 0),
+    (2.0 ** -21, 0),  # below 2^min_exp underflows
+    (2.0 ** -20, 1),  # first in-range bucket
+    (0.001, 161),    # e = -10, sub = 0
+    (0.0015, 169),   # e = -10, sub = 8
+    (1.0, 321),      # e = 0, sub = 0
+    (1.5, 329),      # e = 0, sub = 8
+    (64.0, 417),     # e = 6, sub = 0
+    (127.9999, 432), # last in-range bucket
+    (128.0, 433),    # 2^max_exp overflows
+    (1e9, 433),
+]
+
+
+def lcg(seed):
+    state = seed
+    while True:
+        state = (state * 6364136223846793005 + 1442695040888963407) % (1 << 64)
+        yield state >> 33
+
+
+def check_goldens():
+    n = bucket_count(LAT_MIN_EXP, LAT_MAX_EXP)
+    if n != 434:
+        sys.exit(f"ERROR: default latency histogram has {n} buckets, expected 434")
+    for v, want in GOLDEN:
+        got = index(v, LAT_MIN_EXP, LAT_MAX_EXP)
+        if got != want:
+            sys.exit(f"ERROR: index({v!r}) = {got}, golden table says {want}")
+    print(f"goldens: {len(GOLDEN)} pinned bucket indices OK (n={n})")
+
+
+def check_bounds_and_error():
+    rng = lcg(7)
+    checked = 0
+    for _ in range(4000):
+        # spread across the full in-range span
+        e = LAT_MIN_EXP + next(rng) % (LAT_MAX_EXP - LAT_MIN_EXP)
+        frac = 1.0 + (next(rng) % 10_000) / 10_000.0  # [1, 2)
+        v = (2.0 ** e) * min(frac, 1.9999)
+        i = index(v, LAT_MIN_EXP, LAT_MAX_EXP)
+        if i == 0 or i == bucket_count(LAT_MIN_EXP, LAT_MAX_EXP) - 1:
+            sys.exit(f"ERROR: in-range value {v} landed in an edge bucket")
+        lower, width = bounds(i, LAT_MIN_EXP)
+        if not (lower <= v < lower + width * (1 + 1e-12)):
+            sys.exit(f"ERROR: value {v} outside its bucket [{lower}, {lower + width})")
+        rel = abs(representative(i, LAT_MIN_EXP) - v) / v
+        if rel > 1.0 / 32.0 + 1e-12:
+            sys.exit(f"ERROR: representative error {rel:.5f} exceeds 1/32 at {v}")
+        checked += 1
+    # indexing is monotone in the value
+    vals = sorted((2.0 ** LAT_MIN_EXP) * (1.0 + k / 997.0) * 2.0 ** (k % 27) for k in range(997))
+    idxs = [index(v, LAT_MIN_EXP, LAT_MAX_EXP) for v in vals]
+    if any(a > b for a, b in zip(idxs, idxs[1:])):
+        sys.exit("ERROR: bucket index is not monotone in the value")
+    print(f"bounds: {checked} sampled values inside their bucket, error <= 1/32, monotone")
+
+
+def check_percentile_oracle():
+    rng = lcg(21)
+    values = []
+    for _ in range(5000):
+        # latencies spread over ~6 decades: 2us .. 2s
+        e = -19 + next(rng) % 21
+        frac = 1.0 + (next(rng) % 10_000) / 10_000.0
+        values.append((2.0 ** e) * frac)
+    h = Hist()
+    for v in values:
+        h.record(v)
+    s = sorted(values)
+    for p in (0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 100.0):
+        oracle = s[nearest_rank(p, len(s))]
+        got = h.percentile(p)
+        rel = abs(got - oracle) / oracle
+        if rel > 1.0 / 32.0 + 1e-12:
+            sys.exit(
+                f"ERROR: p{p}: histogram {got:.6g} vs oracle {oracle:.6g} "
+                f"(rel {rel:.5f} > 1/32)"
+            )
+    # degenerate cases
+    if Hist().percentile(50.0) != 0.0:
+        sys.exit("ERROR: empty histogram percentile must be 0")
+    one = Hist()
+    one.record(0.25)
+    for p in (0.0, 50.0, 100.0):
+        if abs(one.percentile(p) - 0.25) > 0.25 / 32.0:
+            sys.exit("ERROR: single-value percentile off its value")
+    print("percentile: p0..p100 within 1/32 of the sorted-vector oracle (n=5000)")
+
+
+def check_merge_identities():
+    # dyadic-exact values: f64 addition is exact, so sum identities and
+    # associativity hold bit-for-bit (the Rust test uses the same set)
+    sets = [
+        [0.5, 0.25, 1.0, 2.0, 0.125],
+        [4.0, 0.5, 0.5, 8.0],
+        [1.5, 0.75, 0.0078125, 32.0, 2.0, 2.0],
+    ]
+    hs = []
+    for vs in sets:
+        h = Hist()
+        for v in vs:
+            h.record(v)
+        hs.append(h)
+    # commutativity: a+b == b+a
+    ab, ba = Hist(), Hist()
+    ab.merge(hs[0]); ab.merge(hs[1])
+    ba.merge(hs[1]); ba.merge(hs[0])
+    if ab.buckets != ba.buckets or ab.sum != ba.sum or ab.count != ba.count:
+        sys.exit("ERROR: histogram merge is not commutative")
+    # associativity: (a+b)+c == a+(b+c)
+    left = Hist(); left.merge(hs[0]); left.merge(hs[1]); left.merge(hs[2])
+    bc = Hist(); bc.merge(hs[1]); bc.merge(hs[2])
+    right = Hist(); right.merge(hs[0]); right.merge(bc)
+    if left.buckets != right.buckets or left.sum != right.sum:
+        sys.exit("ERROR: histogram merge is not associative on dyadic values")
+    # exact identities vs recording everything into one histogram
+    direct = Hist()
+    for vs in sets:
+        for v in vs:
+            direct.record(v)
+    if left.count != direct.count or left.count != sum(len(vs) for vs in sets):
+        sys.exit("ERROR: merged count identity broken")
+    if left.sum != direct.sum:
+        sys.exit("ERROR: merged sum identity broken on exact values")
+    if left.buckets != direct.buckets:
+        sys.exit("ERROR: merged buckets differ from direct recording")
+    if left.min != direct.min or left.max != direct.max:
+        sys.exit("ERROR: merged min/max identity broken")
+    print("merge: commutative + associative, exact count/sum/min/max identities")
+
+
+def main():
+    check_goldens()
+    check_bounds_and_error()
+    check_percentile_oracle()
+    check_merge_identities()
+    print("OK: obs crosscheck passed")
+
+
+if __name__ == "__main__":
+    main()

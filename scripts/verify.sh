@@ -3,10 +3,13 @@
 #
 # Runs:
 #   0. python crosschecks (toolchain-independent, before anything cargo):
-#      scripts/crosscheck_kernel.py pins the SIMD kernel semantics and
+#      scripts/crosscheck_kernel.py pins the SIMD kernel semantics,
 #      scripts/crosscheck_net.py pins the net-layer goldens (splitmix64
 #      mixer, consistent-hash routing table, frame header layout, ledger
-#      merge identity) against independent Python reimplementations
+#      merge identity), and scripts/crosscheck_obs.py pins the
+#      observability substrate (log-linear histogram bucketing, the
+#      percentile relative-error bound, lossless histogram merge) against
+#      independent Python reimplementations
 #   1. cargo fmt --check              (style gate; skip: TOMERS_SKIP_LINT=1)
 #   2. cargo clippy -- -D warnings    (lint gate; skip: TOMERS_SKIP_LINT=1)
 #   3. cargo build --release          (offline, default features)
@@ -45,6 +48,9 @@
 #  13. cargo bench --bench streaming (quick) -> BENCH_streaming.json;
 #      asserts the incremental causal append path is >= MIN_STREAM_RATIO x
 #      faster than full recompute at t=4096, n=16.
+#  14. cargo bench --bench obs (quick) -> BENCH_obs.json; asserts the span
+#      recorder + stage histograms cost <= OBS_MAX_OVERHEAD % (default 2)
+#      of loopback serving throughput (DESIGN.md §13 budget).
 #
 # Usage: scripts/verify.sh [--no-bench]
 set -euo pipefail
@@ -55,6 +61,7 @@ cd "$SCRIPTS_DIR/../rust"
 MIN_SPEEDUP="${MIN_SPEEDUP:-3.0}"
 MIN_STREAM_RATIO="${MIN_STREAM_RATIO:-5.0}"
 MIN_SIMD_SPEEDUP="${MIN_SIMD_SPEEDUP:-1.5}"
+OBS_MAX_OVERHEAD="${OBS_MAX_OVERHEAD:-2.0}"
 
 # Always-on toolchain-independent gates: the Python transliteration
 # crosschecks pin the SIMD kernel semantics and the net-layer goldens
@@ -67,8 +74,10 @@ if command -v python3 >/dev/null 2>&1; then
     python3 "$SCRIPTS_DIR/crosscheck_kernel.py"
     echo "== crosscheck: scripts/crosscheck_net.py =="
     python3 "$SCRIPTS_DIR/crosscheck_net.py"
+    echo "== crosscheck: scripts/crosscheck_obs.py =="
+    python3 "$SCRIPTS_DIR/crosscheck_obs.py"
 else
-    echo "WARN: python3 unavailable — skipping the kernel/net crosscheck gates" >&2
+    echo "WARN: python3 unavailable — skipping the kernel/net/obs crosscheck gates" >&2
 fi
 
 if ! command -v cargo >/dev/null 2>&1; then
@@ -142,7 +151,42 @@ if ! echo "$FAULT_OUT" | grep -q "delivery accounting consistent"; then
     echo "ERROR: serve-sim delivery ledger did not balance under faults" >&2
     exit 1
 fi
+# observability threading (DESIGN.md §13): the report must show the prep
+# stage's merge-efficiency telemetry and the per-stage latency histograms
+if ! echo "$FAULT_OUT" | grep -q "compression="; then
+    echo "ERROR: serve-sim report lacks merge-efficiency telemetry (compression=)" >&2
+    exit 1
+fi
+if ! echo "$FAULT_OUT" | grep -q "stage: "; then
+    echo "ERROR: serve-sim report lacks per-stage latency histograms (stage:)" >&2
+    exit 1
+fi
 echo "OK: fault smoke passed (liveness + delivery accounting under injected faults)"
+
+echo "== trace smoke: tomers trace-dump exports a parseable Chrome trace =="
+TRACE_OUT_FILE=$(mktemp --suffix=.json)
+TRACE_OUT=$(cargo run --offline --release --quiet -- trace-dump \
+    --out "$TRACE_OUT_FILE" 2>&1)
+echo "$TRACE_OUT" | tail -n 1
+if ! echo "$TRACE_OUT" | grep -Eq "complete_chains=[1-9]"; then
+    echo "ERROR: trace-dump recorded no complete prep->exec->respond span chain" >&2
+    exit 1
+fi
+if command -v python3 >/dev/null 2>&1; then
+    python3 - "$TRACE_OUT_FILE" <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+events = doc["traceEvents"]
+assert events, "trace must contain span events"
+for e in events:
+    assert e["ph"] == "X" and e["ts"] >= 0 and e["dur"] >= 0, e
+names = {e["name"] for e in events}
+assert "prep" in names and "exec" in names, f"stage spans missing: {sorted(names)}"
+print(f"OK: Chrome trace parses ({len(events)} spans, stages={sorted(names)})")
+EOF
+fi
+rm -f "$TRACE_OUT_FILE"
+echo "OK: trace smoke passed (span chains + Chrome trace_event export)"
 
 echo "== net smoke: serve-net + client loopback over real TCP =="
 # ephemeral-ish port in the dynamic range, seeded by PID to dodge collisions
@@ -153,7 +197,7 @@ cargo run --offline --release --quiet -- serve-net \
     --exit-after 1 >"$NET_LOG" 2>&1 &
 NET_PID=$!
 NET_CLIENT_OUT=$(cargo run --offline --release --quiet -- client \
-    --addr "127.0.0.1:${NET_PORT}" --shards 2 2>&1) || {
+    --addr "127.0.0.1:${NET_PORT}" --shards 2 --metrics 2>&1) || {
     echo "$NET_CLIENT_OUT"
     echo "--- server log ---"; cat "$NET_LOG"
     kill "$NET_PID" 2>/dev/null || true
@@ -173,6 +217,12 @@ if ! echo "$NET_CLIENT_OUT" | grep -q "delivery accounting consistent"; then
 fi
 if ! echo "$NET_CLIENT_OUT" | grep -Eq "routing: shard0=[0-9]+ shard1=[0-9]+ total="; then
     echo "ERROR: per-shard routing counts missing from the client report" >&2
+    kill "$NET_PID" 2>/dev/null || true
+    exit 1
+fi
+# the wire metrics request must answer and render as Prometheus text
+if ! echo "$NET_CLIENT_OUT" | grep -Eq "tomers_served_total [0-9]+"; then
+    echo "ERROR: client --metrics did not print the Prometheus metrics exposition" >&2
     kill "$NET_PID" 2>/dev/null || true
     exit 1
 fi
@@ -218,12 +268,21 @@ if [[ ! -f BENCH_streaming.json ]]; then
     exit 1
 fi
 
+echo "== perf smoke: obs overhead bench (quick) =="
+TOMERS_BENCH_QUICK=1 cargo bench --offline --bench obs
+
+if [[ ! -f BENCH_obs.json ]]; then
+    echo "ERROR: bench did not write BENCH_obs.json" >&2
+    exit 1
+fi
+
 if command -v python3 >/dev/null 2>&1; then
-    python3 - "$MIN_SPEEDUP" "$MIN_STREAM_RATIO" "$MIN_SIMD_SPEEDUP" <<'EOF'
+    python3 - "$MIN_SPEEDUP" "$MIN_STREAM_RATIO" "$MIN_SIMD_SPEEDUP" "$OBS_MAX_OVERHEAD" <<'EOF'
 import json, sys
 min_speedup = float(sys.argv[1])
 min_stream_ratio = float(sys.argv[2])
 min_simd = float(sys.argv[3])
+obs_max_overhead = float(sys.argv[4])
 
 report = json.load(open("BENCH_merging.json"))
 cases = [c for c in report["cases"] if c["t"] == 8192 and c["d"] == 64 and c["k"] == 16]
@@ -299,6 +358,15 @@ if ratio < min_stream_ratio:
 aps = streaming.get("sessions", {}).get("appends_per_sec", 0.0)
 print(f"streaming sessions steady state: {aps:.0f} appends/s")
 print("OK: streaming gates passed")
+
+obs = json.load(open("BENCH_obs.json"))
+pct = obs["overhead_pct"]
+print(f"obs: recorder on {obs['rps_on']:.1f} req/s vs off {obs['rps_off']:.1f} req/s "
+      f"-> overhead {pct:+.2f}% (gated <= {obs_max_overhead}%)")
+if pct > obs_max_overhead:
+    sys.exit(f"ERROR: observability overhead {pct:.2f}% exceeds the "
+             f"{obs_max_overhead}% budget (DESIGN.md §13)")
+print("OK: obs overhead gate passed")
 EOF
 else
     echo "WARN: python3 unavailable — skipping the numeric gates" >&2
