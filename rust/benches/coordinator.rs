@@ -164,7 +164,7 @@ fn staged_vs_serial(
     )
     .expect("staged run");
     let staged_s = t0.elapsed().as_secs_f64();
-    feeder.join().expect("feeder");
+    tomers::util::join_annotated(feeder, "bench feeder").expect("feeder");
     let served = receivers.iter().filter(|rx| rx.recv().is_ok()).count();
     assert_eq!(served, n_batches * meta.capacity, "staged run dropped requests");
 

@@ -36,6 +36,7 @@ fn main() -> Result<()> {
         merge: coordinator::default_host_merge(),
         streaming: None,
         prefer_manifest_spec: true,
+        faults: coordinator::FaultPolicy::default(),
     })?;
     let client = handle.client();
 

@@ -131,7 +131,7 @@ pub fn table2(ctx: &BenchCtx) -> Result<()> {
             .iter()
             .filter(|(_, r, _)| *r == 0)
             .map(|(_, _, p)| p.clone())
-            .min_by(|a, b| a.mse.partial_cmp(&b.mse).unwrap())
+            .min_by(|a, b| a.mse.total_cmp(&b.mse))
             .unwrap();
         let merged: Vec<OperatingPoint> =
             points.iter().filter(|(_, r, _)| *r > 0).map(|(_, _, p)| p.clone()).collect();

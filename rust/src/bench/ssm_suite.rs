@@ -92,9 +92,9 @@ pub fn table3(ctx: &BenchCtx) -> Result<()> {
                 .filter(|(t, _, _)| t.contains(filter))
                 .max_by(|a, b| {
                     if best_quality {
-                        a.1.partial_cmp(&b.1).unwrap()
+                        a.1.total_cmp(&b.1)
                     } else {
-                        a.2.partial_cmp(&b.2).unwrap()
+                        a.2.total_cmp(&b.2)
                     }
                 })
                 .unwrap()

@@ -31,7 +31,7 @@ pub fn accuracy(logits: &Tensor, labels: &[i32]) -> Result<f64> {
         let pred = row
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .unwrap()
             .0;
         if pred == label as usize {
@@ -57,7 +57,7 @@ pub fn chronos_dequantize(logits: &Tensor, scales: &Tensor, vocab: usize, clip: 
             let id = row
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .unwrap()
                 .0;
             let center = (id as f64 / (vocab - 1) as f64) * 2.0 * clip - clip;
@@ -113,7 +113,7 @@ pub fn select_fastest_within<'a>(
     candidates
         .iter()
         .filter(|c| c.mse <= reference.mse + mse_budget)
-        .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
+        .max_by(|a, b| a.throughput.total_cmp(&b.throughput))
         .filter(|c| c.throughput > reference.throughput)
         .unwrap_or(reference)
 }
@@ -126,7 +126,7 @@ pub fn select_best_mse<'a>(
     candidates
         .iter()
         .chain(std::iter::once(reference))
-        .min_by(|a, b| a.mse.partial_cmp(&b.mse).unwrap())
+        .min_by(|a, b| a.mse.total_cmp(&b.mse))
         .unwrap()
 }
 
@@ -140,7 +140,7 @@ pub fn select_fastest_rel<'a>(
     candidates
         .iter()
         .filter(|c| c.mse <= reference.mse * (1.0 + rel_budget))
-        .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
+        .max_by(|a, b| a.throughput.total_cmp(&b.throughput))
         .unwrap_or(reference)
 }
 
@@ -156,7 +156,7 @@ pub fn pareto_front(points: &[OperatingPoint]) -> Vec<&OperatingPoint> {
             front.push(p);
         }
     }
-    front.sort_by(|a, b| a.mse.partial_cmp(&b.mse).unwrap());
+    front.sort_by(|a, b| a.mse.total_cmp(&b.mse));
     front
 }
 

@@ -284,6 +284,9 @@ mod avx2 {
         let mut acc = _mm256_setzero_pd();
         for c in 0..chunks {
             let i = c * 4;
+            // SAFETY: i + 4 <= chunks * 4 <= n, so both 4-lane reads are
+            // in bounds of `a` (and of `b` by the a.len() == b.len()
+            // precondition); loadu has no alignment requirement.
             let va = _mm256_cvtps_pd(_mm_loadu_ps(a.as_ptr().add(i)));
             let vb = _mm256_cvtps_pd(_mm_loadu_ps(b.as_ptr().add(i)));
             acc = _mm256_add_pd(acc, _mm256_mul_pd(va, vb));
@@ -308,6 +311,8 @@ mod avx2 {
         let chunks = n / 4;
         let mut acc = _mm256_setzero_pd();
         for c in 0..chunks {
+            // SAFETY: c * 4 + 4 <= n, so the 4-lane unaligned read stays
+            // inside `a`.
             let v = _mm256_cvtps_pd(_mm_loadu_ps(a.as_ptr().add(c * 4)));
             acc = _mm256_add_pd(acc, _mm256_mul_pd(v, v));
         }
@@ -336,6 +341,10 @@ mod avx2 {
         let mut acc = _mm256_setzero_ps();
         for c in 0..chunks {
             let i = c * 8;
+            // SAFETY: i + 8 <= chunks * 8 <= n keeps both 8-lane
+            // unaligned reads in bounds (b by the equal-length
+            // precondition); fmadd requires the fma feature enabled on
+            // this fn.
             let va = _mm256_loadu_ps(a.as_ptr().add(i));
             let vb = _mm256_loadu_ps(b.as_ptr().add(i));
             acc = _mm256_fmadd_ps(va, vb, acc);
@@ -361,6 +370,8 @@ mod avx2 {
         let chunks = n / 8;
         let mut acc = _mm256_setzero_ps();
         for c in 0..chunks {
+            // SAFETY: c * 8 + 8 <= n, so the 8-lane unaligned read stays
+            // inside `a`.
             let v = _mm256_loadu_ps(a.as_ptr().add(c * 8));
             acc = _mm256_fmadd_ps(v, v, acc);
         }
@@ -398,6 +409,9 @@ mod neon {
         let mut acc23 = vdupq_n_f64(0.0);
         for c in 0..chunks {
             let i = c * 4;
+            // SAFETY: i + 4 <= chunks * 4 <= n keeps both 4-lane loads
+            // in bounds (`b` by the equal-length precondition); vld1q
+            // tolerates unaligned addresses on aarch64.
             let va = vld1q_f32(a.as_ptr().add(i));
             let vb = vld1q_f32(b.as_ptr().add(i));
             let lo = vmulq_f64(vcvt_f64_f32(vget_low_f32(va)), vcvt_f64_f32(vget_low_f32(vb)));
@@ -426,6 +440,8 @@ mod neon {
         let mut acc01 = vdupq_n_f64(0.0);
         let mut acc23 = vdupq_n_f64(0.0);
         for c in 0..chunks {
+            // SAFETY: c * 4 + 4 <= n keeps the 4-lane load inside `a`;
+            // unaligned loads are architecturally supported.
             let v = vld1q_f32(a.as_ptr().add(c * 4));
             let lo = vcvt_f64_f32(vget_low_f32(v));
             let hi = vcvt_high_f64_f32(v);
@@ -455,6 +471,8 @@ mod neon {
         let mut acc = vdupq_n_f32(0.0);
         for c in 0..chunks {
             let i = c * 4;
+            // SAFETY: i + 4 <= chunks * 4 <= n bounds both loads (`b`
+            // via the equal-length precondition); no alignment needed.
             let va = vld1q_f32(a.as_ptr().add(i));
             let vb = vld1q_f32(b.as_ptr().add(i));
             acc = vaddq_f32(acc, vmulq_f32(va, vb));
@@ -478,6 +496,7 @@ mod neon {
         let chunks = n / 4;
         let mut acc = vdupq_n_f32(0.0);
         for c in 0..chunks {
+            // SAFETY: c * 4 + 4 <= n keeps the 4-lane load inside `a`.
             let v = vld1q_f32(a.as_ptr().add(c * 4));
             acc = vaddq_f32(acc, vmulq_f32(v, v));
         }

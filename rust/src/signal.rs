@@ -170,7 +170,7 @@ pub fn thd(x: &[f32], n_harmonics: usize) -> f64 {
         .iter()
         .enumerate()
         .skip(1)
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, &p)| (i, p))
         .unwrap();
     if p0 <= 0.0 {
@@ -301,7 +301,7 @@ mod tests {
     fn spectrum_peaks_at_sine_frequency() {
         let x = sine(256, 8.0, 1.0);
         let ps = power_spectrum(&x);
-        let peak = ps.iter().enumerate().skip(1).max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        let peak = ps.iter().enumerate().skip(1).max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
         assert_eq!(peak, 8);
     }
 

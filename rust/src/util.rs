@@ -127,7 +127,7 @@ pub fn percentile(samples: &mut [f64], p: f64) -> f64 {
     if samples.is_empty() {
         return 0.0;
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     let idx = ((p / 100.0) * (samples.len() - 1) as f64).round() as usize;
     samples[idx.min(samples.len() - 1)]
 }

@@ -1,0 +1,126 @@
+#!/usr/bin/env python3
+"""tomers-analyze — toolchain-free whole-crate static analysis gate.
+
+Runs seven passes over rust/{src,tests,benches,examples} (vendor/ is
+indexed for definitions only) without needing cargo, rustc, or any
+non-stdlib Python package:
+
+  symbols      (a) every call site / method / struct literal resolves
+               to a definition with matching arity or field set
+  wiring       (b) mod/file agreement, `use` path resolution, no
+               default-build reference to pjrt-gated items
+  concurrency  (c) no bare `.join().unwrap()`, no unbounded
+               `mpsc::channel`, lock-order hazards flagged
+  panics       (d) unwrap/expect/panic! in non-test src need a
+               justification
+  configs      (e) JSON config parsers must reject unknown keys
+  unsafe       (f) unsafe confined to merging/simd.rs + SAFETY comments
+  deprecation  (g) no non-test callers of #[deprecated] wrappers
+
+Findings are suppressed only via scripts/analyze_allow.json (strict
+schema, justification required; stale entries are errors).  Exit code
+0 = clean; 1 = new findings, stale allows, or schema errors.
+
+Usage:
+  scripts/analyze.py [--crate DIR] [--allow FILE] [--json [PATH]]
+                     [--verbose]
+
+  --json writes ANALYZE_report.json (default: next to the crate dir)
+  with per-pass counts (findings / allowlisted / new) and every finding.
+
+See DESIGN.md §14 for the analysis contract and how to add a lint.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_SCRIPTS = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, _SCRIPTS)
+
+from analyze import analyze_root  # noqa: E402
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--crate",
+        default=os.path.join(_SCRIPTS, "..", "rust"),
+        help="crate directory containing src/ (default: ../rust)",
+    )
+    ap.add_argument(
+        "--allow",
+        default=os.path.join(_SCRIPTS, "analyze_allow.json"),
+        help="allowlist path (default: scripts/analyze_allow.json)",
+    )
+    ap.add_argument(
+        "--json",
+        nargs="?",
+        const="",
+        default=None,
+        metavar="PATH",
+        help="write the JSON report (default path: <repo>/ANALYZE_report.json)",
+    )
+    ap.add_argument(
+        "--verbose", action="store_true",
+        help="also print allowlisted findings",
+    )
+    args = ap.parse_args(argv)
+
+    crate = os.path.abspath(args.crate)
+    if not os.path.isdir(os.path.join(crate, "src")):
+        print(f"ERROR: {crate} has no src/ directory", file=sys.stderr)
+        return 2
+    report = analyze_root(crate, allow_path=args.allow)
+
+    for err in report.errors:
+        print(f"ALLOWLIST ERROR: {err}", file=sys.stderr)
+
+    shown = report.findings if args.verbose else report.new_findings
+    for f in shown:
+        tag = "allow" if f.allowed_by is not None else "NEW"
+        print(f"[{f.pass_id}][{tag}] {f.file}:{f.line}: {f.message}")
+        if f.snippet:
+            print(f"    | {f.snippet}")
+    for a in report.stale_allows:
+        print(
+            f"STALE ALLOW: entries[{a.index}] (pass={a.pass_id}, "
+            f"file={a.file}, pattern={a.pattern!r}) matches nothing — "
+            f"remove it", file=sys.stderr,
+        )
+
+    print()
+    print(report.summary_table())
+    print(
+        f"\nanalyze: {report.files_scanned} files, "
+        f"{len(report.findings)} findings "
+        f"({len(report.findings) - len(report.new_findings)} allowlisted, "
+        f"{len(report.new_findings)} new), "
+        f"{len(report.stale_allows)} stale allow(s)"
+    )
+
+    if args.json is not None:
+        path = args.json or os.path.abspath(
+            os.path.join(crate, "..", "ANALYZE_report.json")
+        )
+        with open(path, "w", encoding="utf-8") as fh:
+            json.dump(report.to_json(), fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        print(f"report written: {path}")
+
+    if not report.ok:
+        print(
+            "analyze: FAIL — fix the findings or add a justified "
+            "allowlist entry (scripts/analyze_allow.json)",
+            file=sys.stderr,
+        )
+        return 1
+    print("analyze: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,117 @@
+"""tomers-analyze: toolchain-free whole-crate static analysis.
+
+`analyze_root(crate_dir)` loads every `.rs` file under the crate's
+`src/`, `tests/`, `benches/` and `examples/` directories (plus
+`vendor/` for definitions only), builds the `CrateIndex`, runs the
+seven passes, applies the allowlist, and returns a `Report`.
+
+See DESIGN.md §14 for the contract and scripts/analyze.py for the CLI.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+if _HERE not in sys.path:
+    sys.path.insert(0, _HERE)
+
+from findings import (  # noqa: E402
+    AllowlistError, Finding, PASS_IDS, Report, load_allowlist,
+)
+from index import CrateIndex, build_index  # noqa: E402
+import pass_symbols  # noqa: E402
+import pass_wiring  # noqa: E402
+import pass_concurrency  # noqa: E402
+import pass_panics  # noqa: E402
+import pass_configs  # noqa: E402
+import pass_unsafe  # noqa: E402
+import pass_deprecation  # noqa: E402
+
+__all__ = ["analyze_root", "Report", "Finding", "PASS_IDS", "AllowlistError"]
+
+_KIND_DIRS = (
+    ("src", "src"),
+    ("tests", "test"),
+    ("benches", "bench"),
+    ("examples", "example"),
+)
+
+
+def _collect_files(crate_dir: str, rel_prefix: str) -> list[tuple[str, str, str]]:
+    out: list[tuple[str, str, str]] = []
+    for sub, kind in _KIND_DIRS:
+        base = os.path.join(crate_dir, sub)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, _dirs, files in os.walk(base):
+            for fn in sorted(files):
+                if not fn.endswith(".rs"):
+                    continue
+                full = os.path.join(dirpath, fn)
+                rel = os.path.relpath(full, crate_dir)
+                with open(full, encoding="utf-8") as fh:
+                    raw = fh.read()
+                out.append((os.path.join(rel_prefix, rel), kind, raw))
+    vendor = os.path.join(crate_dir, "vendor")
+    if os.path.isdir(vendor):
+        for dirpath, _dirs, files in os.walk(vendor):
+            for fn in sorted(files):
+                if not fn.endswith(".rs"):
+                    continue
+                full = os.path.join(dirpath, fn)
+                rel = os.path.relpath(full, crate_dir)
+                with open(full, encoding="utf-8") as fh:
+                    raw = fh.read()
+                out.append((os.path.join(rel_prefix, rel), "vendor", raw))
+    return out
+
+
+def _pjrt_examples(crate_dir: str) -> set[str]:
+    """Example basenames whose Cargo.toml entry requires the pjrt
+    feature — exempt from the default-build gate check."""
+    manifest = os.path.join(crate_dir, "Cargo.toml")
+    out: set[str] = set()
+    if not os.path.exists(manifest):
+        return out
+    with open(manifest, encoding="utf-8") as fh:
+        text = fh.read()
+    for block in re.split(r"\[\[example\]\]", text)[1:]:
+        name = re.search(r'name\s*=\s*"([^"]+)"', block)
+        feats = re.search(r'required-features\s*=\s*\[([^\]]*)\]', block)
+        if name and feats and "pjrt" in feats.group(1):
+            out.add(name.group(1) + ".rs")
+    return out
+
+
+def analyze_root(
+    crate_dir: str,
+    allow_path: str | None = None,
+    rel_prefix: str = "rust",
+) -> Report:
+    report = Report()
+    file_set = _collect_files(crate_dir, rel_prefix)
+    ix = build_index(file_set)
+    report.files_scanned = sum(
+        1 for _p, k, _r in file_set if k != "vendor"
+    )
+    try:
+        known = {p for p, k, _ in file_set if k != "vendor"}
+        report.allows = load_allowlist(allow_path, known)
+    except AllowlistError as e:
+        report.errors.append(str(e))
+        return report
+    pjrt_ex = _pjrt_examples(crate_dir)
+    src_root = os.path.join(crate_dir, "src")
+    report.findings.extend(pass_symbols.run(ix))
+    report.findings.extend(pass_wiring.run(ix, src_root, pjrt_ex))
+    report.findings.extend(pass_concurrency.run(ix))
+    report.findings.extend(pass_panics.run(ix))
+    report.findings.extend(pass_configs.run(ix))
+    report.findings.extend(pass_unsafe.run(ix))
+    report.findings.extend(pass_deprecation.run(ix))
+    report.findings.sort(key=lambda f: (f.pass_id, f.file, f.line))
+    report.apply_allowlist()
+    return report

@@ -1,0 +1,212 @@
+"""Finding model, allowlist (strict schema), and the JSON report.
+
+The allowlist (`scripts/analyze_allow.json`) is the only way to ship a
+finding: every entry names the pass, the file, a match pattern, and a
+non-empty justification.  Entries that stop matching anything are
+*errors* ("stale allow"), so the list can only shrink with the code —
+it never accumulates dead exemptions.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+PASS_IDS = (
+    "symbols",       # (a) call/method/struct-literal resolution + arity
+    "wiring",        # (b) mod/file agreement, use resolution, feature gates
+    "concurrency",   # (c) bare joins, unbounded channels, lock order
+    "panics",        # (d) unwrap/expect/panic! on non-test src paths
+    "configs",       # (e) strict unknown-key rejection in config parsers
+    "unsafe",        # (f) unsafe confined to simd.rs + SAFETY comments
+    "deprecation",   # (g) no non-test callers of #[deprecated] items
+)
+
+
+@dataclass
+class Finding:
+    pass_id: str
+    file: str
+    line: int
+    symbol: str       # the symbol/pattern the finding is about
+    message: str
+    snippet: str = ""
+    allowed_by: int | None = None   # index into allowlist entries
+
+    def key(self) -> str:
+        return f"{self.pass_id}:{self.file}:{self.line}:{self.symbol}"
+
+    def to_json(self) -> dict:
+        d = {
+            "pass": self.pass_id,
+            "file": self.file,
+            "line": self.line,
+            "symbol": self.symbol,
+            "message": self.message,
+            "snippet": self.snippet,
+        }
+        if self.allowed_by is not None:
+            d["allowed_by"] = self.allowed_by
+        return d
+
+
+@dataclass
+class AllowEntry:
+    pass_id: str
+    file: str
+    pattern: str        # substring of the offending line, or exact symbol
+    justification: str
+    index: int
+    hits: int = 0
+
+    def matches(self, f: Finding) -> bool:
+        if self.pass_id != f.pass_id or self.file != f.file:
+            return False
+        return self.pattern == f.symbol or self.pattern in f.snippet
+
+
+class AllowlistError(Exception):
+    pass
+
+
+_ENTRY_KEYS = {"pass", "file", "pattern", "justification"}
+_TOP_KEYS = {"version", "entries"}
+
+
+def load_allowlist(path: str | None, known_files: set[str]) -> list[AllowEntry]:
+    """Parse + validate the allowlist.  Schema violations raise
+    AllowlistError — a malformed allowlist must fail the gate, not
+    silently allow nothing (or everything)."""
+    if path is None:
+        return []
+    try:
+        with open(path, encoding="utf-8") as fh:
+            doc = json.load(fh)
+    except FileNotFoundError:
+        return []
+    except json.JSONDecodeError as e:
+        raise AllowlistError(f"{path}: not valid JSON: {e}") from e
+    if not isinstance(doc, dict):
+        raise AllowlistError(f"{path}: top level must be an object")
+    extra = set(doc) - _TOP_KEYS
+    if extra:
+        raise AllowlistError(
+            f"{path}: unknown top-level key(s) {sorted(extra)} — "
+            f"accepted: {sorted(_TOP_KEYS)}"
+        )
+    if doc.get("version") != 1:
+        raise AllowlistError(f"{path}: version must be 1")
+    entries = doc.get("entries")
+    if not isinstance(entries, list):
+        raise AllowlistError(f"{path}: entries must be an array")
+    out: list[AllowEntry] = []
+    for i, e in enumerate(entries):
+        where = f"{path}: entries[{i}]"
+        if not isinstance(e, dict):
+            raise AllowlistError(f"{where}: must be an object")
+        extra = set(e) - _ENTRY_KEYS
+        if extra:
+            raise AllowlistError(
+                f"{where}: unknown key(s) {sorted(extra)} — "
+                f"accepted: {sorted(_ENTRY_KEYS)}"
+            )
+        missing = _ENTRY_KEYS - set(e)
+        if missing:
+            raise AllowlistError(f"{where}: missing key(s) {sorted(missing)}")
+        if e["pass"] not in PASS_IDS:
+            raise AllowlistError(
+                f"{where}: unknown pass {e['pass']!r} — one of {PASS_IDS}"
+            )
+        for k in ("file", "pattern", "justification"):
+            if not isinstance(e[k], str) or not e[k].strip():
+                raise AllowlistError(f"{where}: {k} must be a non-empty string")
+        if len(e["justification"].strip()) < 10:
+            raise AllowlistError(
+                f"{where}: justification too short — explain *why* this "
+                f"finding is acceptable, not just that it is"
+            )
+        if known_files and e["file"] not in known_files:
+            raise AllowlistError(
+                f"{where}: file {e['file']!r} is not part of the analyzed set"
+            )
+        out.append(
+            AllowEntry(
+                pass_id=e["pass"], file=e["file"], pattern=e["pattern"],
+                justification=e["justification"], index=i,
+            )
+        )
+    return out
+
+
+@dataclass
+class Report:
+    findings: list[Finding] = field(default_factory=list)
+    allows: list[AllowEntry] = field(default_factory=list)
+    files_scanned: int = 0
+    errors: list[str] = field(default_factory=list)
+
+    def apply_allowlist(self) -> None:
+        for f in self.findings:
+            for a in self.allows:
+                if a.matches(f):
+                    f.allowed_by = a.index
+                    a.hits += 1
+                    break
+
+    @property
+    def new_findings(self) -> list[Finding]:
+        return [f for f in self.findings if f.allowed_by is None]
+
+    @property
+    def stale_allows(self) -> list[AllowEntry]:
+        return [a for a in self.allows if a.hits == 0]
+
+    @property
+    def ok(self) -> bool:
+        return not self.new_findings and not self.stale_allows and not self.errors
+
+    def per_pass(self) -> dict[str, dict[str, int]]:
+        out = {p: {"findings": 0, "allowlisted": 0, "new": 0} for p in PASS_IDS}
+        for f in self.findings:
+            row = out[f.pass_id]
+            row["findings"] += 1
+            if f.allowed_by is None:
+                row["new"] += 1
+            else:
+                row["allowlisted"] += 1
+        return out
+
+    def to_json(self) -> dict:
+        return {
+            "version": 1,
+            "ok": self.ok,
+            "files_scanned": self.files_scanned,
+            "passes": self.per_pass(),
+            "findings": [f.to_json() for f in self.findings],
+            "stale_allows": [
+                {"index": a.index, "pass": a.pass_id, "file": a.file,
+                 "pattern": a.pattern}
+                for a in self.stale_allows
+            ],
+            "errors": self.errors,
+        }
+
+    def summary_table(self) -> str:
+        rows = self.per_pass()
+        w = max(len(p) for p in PASS_IDS)
+        lines = [f"{'pass'.ljust(w)}  findings  allowlisted  new"]
+        for p in PASS_IDS:
+            r = rows[p]
+            lines.append(
+                f"{p.ljust(w)}  {r['findings']:8d}  {r['allowlisted']:11d}  "
+                f"{r['new']:3d}"
+            )
+        tot = {"findings": 0, "allowlisted": 0, "new": 0}
+        for r in rows.values():
+            for k in tot:
+                tot[k] += r[k]
+        lines.append(
+            f"{'TOTAL'.ljust(w)}  {tot['findings']:8d}  "
+            f"{tot['allowlisted']:11d}  {tot['new']:3d}"
+        )
+        return "\n".join(lines)

@@ -1,0 +1,839 @@
+"""Crate index: a lightweight, offset-preserving Rust item parser.
+
+Walks the token stream of every scrubbed file and records the items the
+passes need — functions (with arity and receiver-ness), structs (field
+sets, tuple arities), enums (variant shapes), traits, impl blocks,
+macros, consts/statics/type aliases, `mod` declarations, `use` imports
+and `pub use` re-exports — together with the attribute gates active at
+every item (`#[cfg(test)]`, `#[cfg(feature = "pjrt")]`,
+`#[cfg(target_arch = …)]`, `#[deprecated]`, `#[allow(deprecated)]`).
+
+This is NOT a Rust parser; it is the mechanized version of "grep the
+call site against its definition".  It is deliberately name-global:
+a symbol resolves if *some* definition with that name and a matching
+shape exists in the crate (or the std knowledge base), which is exactly
+the bar the manual interface review applied — and it never needs a
+toolchain.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from lexer import ScrubbedFile, Tok, match_delim, match_angle, tokenize, KEYWORDS
+
+
+@dataclass
+class FnDef:
+    name: str
+    file: str
+    line: int
+    arity: int          # parameter count, excluding any self receiver
+    has_self: bool
+    module: str         # crate-relative module path ("merging::simd")
+    owner: str | None   # impl/trait type name for associated fns
+    gates: frozenset[str]
+    deprecated: bool = False
+
+
+@dataclass
+class StructDef:
+    name: str
+    file: str
+    line: int
+    kind: str                 # "named" | "tuple" | "unit"
+    fields: tuple[str, ...]   # named fields (kind == "named")
+    arity: int                # tuple arity (kind == "tuple")
+    module: str = ""
+    gates: frozenset[str] = frozenset()
+    deprecated: bool = False
+
+
+@dataclass
+class VariantDef:
+    enum: str
+    name: str
+    kind: str                 # "named" | "tuple" | "unit"
+    fields: tuple[str, ...]
+    arity: int
+
+
+@dataclass
+class ModDecl:
+    name: str
+    file: str        # file containing the `mod name;` declaration
+    line: int
+    inline: bool     # `mod name { … }` vs `mod name;`
+    gates: frozenset[str]
+
+
+@dataclass
+class UseDecl:
+    file: str
+    line: int
+    path: tuple[str, ...]     # full path segments, alias resolved away
+    alias: str                # name brought into scope
+    is_pub: bool
+    gates: frozenset[str]
+
+
+@dataclass
+class Region:
+    """A gated byte range of a file (attribute scope), used to answer
+    `gates_at(file, offset)` for expression-level scanning."""
+    start: int
+    end: int
+    gates: frozenset[str]
+    inner: bool = False   # came from a `#![…]` inner attribute
+
+
+@dataclass
+class FileInfo:
+    sf: ScrubbedFile
+    toks: list[Tok]
+    module: str               # module path of the file root
+    kind: str                 # "src" | "test" | "bench" | "example" | "vendor"
+    file_gates: frozenset[str]
+    regions: list[Region] = field(default_factory=list)
+    imports: dict[str, tuple[str, ...]] = field(default_factory=dict)
+    fn_spans: list[tuple[int, int, str, frozenset]] = field(default_factory=list)
+    # (start_off, end_off, fn_name, gates) for every fn body
+    decl_spans: list[tuple[int, int]] = field(default_factory=list)
+    # byte spans of type *declaration* bodies (enum/struct blocks) —
+    # variant/field declarations there must not be scanned as call sites
+
+    def in_decl(self, off: int) -> bool:
+        return any(s <= off < e for s, e in self.decl_spans)
+
+
+class CrateIndex:
+    def __init__(self) -> None:
+        self.files: dict[str, FileInfo] = {}
+        self.fns: dict[str, list[FnDef]] = {}
+        self.structs: dict[str, list[StructDef]] = {}
+        self.variants: dict[str, list[VariantDef]] = {}
+        self.enums: set[str] = set()
+        self.traits: set[str] = set()
+        self.macros: set[str] = set()
+        self.consts: set[str] = set()
+        self.types: set[str] = set()          # type aliases
+        self.mods: dict[str, list[ModDecl]] = {}
+        self.uses: list[UseDecl] = []
+        self.module_items: dict[str, set[str]] = {}   # module path -> names
+        self.module_reexports: dict[str, set[str]] = {}
+        self.module_globs: set[str] = set()           # modules with `pub use …::*`
+        self.deprecated: set[str] = set()
+        self.pjrt_modules: set[str] = set()           # module paths gated on pjrt
+        self.pjrt_items: set[str] = set()             # item names gated on pjrt
+
+    # -- queries -----------------------------------------------------------
+
+    def gates_at(self, path: str, off: int) -> frozenset[str]:
+        fi = self.files[path]
+        gates = set(fi.file_gates)
+        for r in fi.regions:
+            if r.start <= off < r.end:
+                gates |= r.gates
+        return frozenset(gates)
+
+    def fn_locals(self, path: str, off: int) -> set[str] | None:
+        """Set of local binding names for the innermost fn containing
+        `off` (computed lazily, cached on the span tuple's name key)."""
+        fi = self.files[path]
+        best = None
+        for start, end, name, _gates in fi.fn_spans:
+            if start <= off < end and (best is None or start > best[0]):
+                best = (start, end, name)
+        if best is None:
+            return None
+        key = (path, best[0], best[1])
+        cached = _LOCALS_CACHE.get(key)
+        if cached is None:
+            cached = _collect_locals(fi.sf.code[best[0] : best[1]])
+            _LOCALS_CACHE[key] = cached
+        return cached
+
+
+_LOCALS_CACHE: dict[tuple, set[str]] = {}
+
+_LET_RE = re.compile(r"\blet\s+(?:mut\s+)?(?:ref\s+)?([A-Za-z_][A-Za-z0-9_]*)")
+_TUPLE_LET_RE = re.compile(r"\blet\s*\(([^)]*)\)")
+_CLOSURE_RE = re.compile(r"(?<=[\(\{,=])\s*(?:move\s*)?\|([^|\n]*)\|")
+_PARAM_NAME_RE = re.compile(r"(?:^|[,(])\s*(?:mut\s+)?([A-Za-z_][A-Za-z0-9_]*)\s*[:,)|]")
+_FOR_RE = re.compile(r"\bfor\s+(?:mut\s+)?\(?([A-Za-z_][A-Za-z0-9_, ]*?)\)?\s+in\b")
+_IFLET_BIND_RE = re.compile(r"\b(?:Some|Ok|Err)\s*\(\s*(?:mut\s+)?([A-Za-z_][A-Za-z0-9_]*)\s*\)")
+
+
+def _collect_locals(body: str) -> set[str]:
+    out: set[str] = set()
+    if body.startswith("("):
+        # fn param list precedes the body block — bind its names too
+        depth = 0
+        for k, ch in enumerate(body):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        params = body[: k + 1]
+        for m in _PARAM_NAME_RE.finditer(params):
+            out.add(m.group(1))
+    out.update(_LET_RE.findall(body))
+    for grp in _TUPLE_LET_RE.findall(body):
+        out.update(re.findall(r"[A-Za-z_][A-Za-z0-9_]*", grp))
+    for grp in _CLOSURE_RE.findall(body):
+        for m in _PARAM_NAME_RE.finditer(grp + ","):
+            out.add(m.group(1))
+        out.update(re.findall(r"^\s*([A-Za-z_][A-Za-z0-9_]*)\s*$", grp))
+    for grp in _FOR_RE.findall(body):
+        out.update(re.findall(r"[A-Za-z_][A-Za-z0-9_]*", grp))
+    out.update(_IFLET_BIND_RE.findall(body))
+    out.discard("mut")
+    out.discard("ref")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Attribute parsing
+
+
+def _attr_gates(attr_text: str) -> frozenset[str]:
+    """Map one `#[…]` attribute body to the gate set it implies."""
+    gates: set[str] = set()
+    if re.search(r"\bcfg\s*\(", attr_text) or attr_text.lstrip().startswith("cfg("):
+        if re.search(r"\btest\b", attr_text):
+            gates.add("test")
+        if re.search(r"feature\s*=\s*\"pjrt\"", attr_text):
+            gates.add("pjrt")
+        if re.search(r"\btarget_arch\b", attr_text):
+            gates.add("target_arch")
+        if re.search(r"\bnot\s*\(\s*feature\s*=\s*\"pjrt\"", attr_text):
+            gates.discard("pjrt")
+            gates.add("not_pjrt")
+    if re.match(r"\s*test\b", attr_text):
+        gates.add("test")
+    if re.match(r"\s*deprecated\b", attr_text):
+        gates.add("deprecated")
+    if re.search(r"\ballow\s*\(\s*deprecated", attr_text):
+        gates.add("allow_deprecated")
+    if re.search(r"\ballow\s*\(", attr_text):
+        # scoped lint allows are recorded generically: "allow:<lint>"
+        for name in re.findall(r"allow\s*\(([^)]*)\)", attr_text):
+            for lint in re.findall(r"[A-Za-z_:]+", name):
+                gates.add(f"allow:{lint.split('::')[-1]}")
+    return frozenset(gates)
+
+
+# ---------------------------------------------------------------------------
+# The item walker
+
+
+class _Walker:
+    def __init__(self, index: CrateIndex, fi: FileInfo) -> None:
+        self.ix = index
+        self.fi = fi
+        self.toks = fi.toks
+        self.path = fi.sf.path
+
+    def line(self, off: int) -> int:
+        return self.fi.sf.line_of(off)
+
+    def walk(self) -> None:
+        self._items(0, len(self.toks), self.fi.module, self.fi.file_gates, None)
+
+    # -- item-level scan over toks[i:end) ---------------------------------
+
+    def _items(
+        self,
+        i: int,
+        end: int,
+        module: str,
+        gates: frozenset[str],
+        owner: str | None,
+    ) -> None:
+        toks = self.toks
+        pending: set[str] = set()
+        while i < end:
+            t = toks[i]
+            if t.kind == "punct" and t.val == "#":
+                # attribute: #[…] or #![…]
+                j = i + 1
+                if j < end and toks[j].val == "!":
+                    j += 1
+                if j < end and toks[j].kind == "open" and toks[j].val == "[":
+                    close = match_delim(toks, j)
+                    attr_body = self.fi.sf.code[toks[j].off + 1 : toks[close].off]
+                    g = _attr_gates(attr_body)
+                    if toks[i + 1].val == "!":
+                        # inner attribute: gates the whole remaining scope
+                        if g:
+                            self.fi.regions.append(
+                                Region(t.off, self.toks[end - 1].off + 1, g,
+                                       inner=True)
+                            )
+                            gates = frozenset(gates | g)
+                    else:
+                        pending |= g
+                    i = close + 1
+                    continue
+            if t.kind == "ident":
+                item_gates = frozenset(gates | pending)
+                nxt = self._item(i, end, module, item_gates, owner, t)
+                if nxt is not None:
+                    pending = set()
+                    i = nxt
+                    continue
+                if t.val not in ("pub", "unsafe", "extern", "default", "async"):
+                    pending = set()
+            if t.kind == "open":
+                i = match_delim(toks, i) + 1
+                continue
+            i += 1
+
+    def _item(
+        self,
+        i: int,
+        end: int,
+        module: str,
+        gates: frozenset[str],
+        owner: str | None,
+        t: Tok,
+    ) -> int | None:
+        """Try to parse an item starting at the keyword toks[i]; return
+        the index to continue from, or None if not an item keyword."""
+        toks = self.toks
+        kw = t.val
+        if kw == "fn":
+            return self._fn(i, module, gates, owner)
+        if kw in ("struct", "union"):
+            return self._struct(i, module, gates)
+        if kw == "enum":
+            return self._enum(i, module, gates)
+        if kw == "trait":
+            return self._trait(i, end, module, gates)
+        if kw == "impl":
+            return self._impl(i, end, module, gates)
+        if kw == "mod":
+            return self._mod(i, end, module, gates)
+        if kw == "use":
+            return self._use(i, module, gates)
+        if kw in ("const", "static"):
+            # `const NAME: …` (skip `const fn`, handled via fn kw later)
+            if i + 1 < end and toks[i + 1].val == "fn":
+                return None
+            if i + 1 < end and toks[i + 1].kind == "ident":
+                name = toks[i + 1].val
+                self.ix.consts.add(name)
+                self._record_module_item(module, name, gates)
+            return self._skip_to_semi_or_block(i)
+        if kw == "type":
+            if i + 1 < end and toks[i + 1].kind == "ident":
+                name = toks[i + 1].val
+                self.ix.types.add(name)
+                self._record_module_item(module, name, gates)
+            return self._skip_to_semi_or_block(i)
+        if kw == "macro_rules":
+            if i + 2 < end and toks[i + 1].val == "!":
+                name = toks[i + 2].val
+                self.ix.macros.add(name)
+                self._record_module_item(module, name, gates)
+                j = i + 3
+                while j < end and toks[j].kind != "open":
+                    j += 1
+                return match_delim(toks, j) + 1 if j < end else end
+        return None
+
+    # -- helpers -----------------------------------------------------------
+
+    def _record_module_item(
+        self, module: str, name: str, gates: frozenset[str]
+    ) -> None:
+        self.ix.module_items.setdefault(module, set()).add(name)
+        if "pjrt" in gates:
+            self.ix.pjrt_items.add(name)
+        if "deprecated" in gates:
+            self.ix.deprecated.add(name)
+
+    def _skip_to_semi_or_block(self, i: int) -> int:
+        toks = self.toks
+        j = i
+        while j < len(toks):
+            if toks[j].val == ";":
+                return j + 1
+            if toks[j].kind == "open":
+                if toks[j].val == "{":
+                    return match_delim(toks, j) + 1
+                j = match_delim(toks, j) + 1
+                continue
+            if toks[j].val == "=" and toks[j].kind == "punct":
+                pass  # const X: T = expr;  keep scanning to `;`
+            j += 1
+        return j
+
+    def _generics_end(self, j: int) -> int:
+        """If toks[j] is `<`, return index after matching `>`."""
+        if j < len(self.toks) and self.toks[j].val == "<":
+            k = match_angle(self.toks, j)
+            if k > j:
+                return k + 1
+        return j
+
+    def _fn(
+        self, i: int, module: str, gates: frozenset[str], owner: str | None
+    ) -> int:
+        toks = self.toks
+        j = i + 1
+        if j >= len(toks) or toks[j].kind != "ident":
+            return i + 1
+        name = toks[j].val
+        j = self._generics_end(j + 1)
+        if j >= len(toks) or not (toks[j].kind == "open" and toks[j].val == "("):
+            return j
+        close = match_delim(toks, j)
+        arity, has_self = self._count_params(j, close)
+        fd = FnDef(
+            name=name,
+            file=self.path,
+            line=self.line(toks[i].off),
+            arity=arity,
+            has_self=has_self,
+            module=module,
+            owner=owner,
+            gates=gates,
+            deprecated="deprecated" in gates,
+        )
+        self.ix.fns.setdefault(name, []).append(fd)
+        if not has_self:
+            self._record_module_item(module, name, gates)
+        elif "deprecated" in gates:
+            self.ix.deprecated.add(name)
+        # find the body (or `;` for trait-required methods)
+        k = close + 1
+        while k < len(toks) and not (
+            toks[k].val == ";" or (toks[k].kind == "open" and toks[k].val == "{")
+        ):
+            if toks[k].kind == "open":
+                k = match_delim(toks, k) + 1
+                continue
+            if toks[k].val == "<":
+                nk = match_angle(toks, k)
+                if nk > k:
+                    k = nk + 1
+                    continue
+            k += 1
+        if k < len(toks) and toks[k].kind == "open":
+            body_close = match_delim(toks, k)
+            # span starts at the param list so fn parameters land in the
+            # locals set (callable params like `mut f: F` shadow fn names)
+            self.fi.fn_spans.append(
+                (toks[j].off, toks[body_close].off + 1, name, gates)
+            )
+            if gates:
+                self.fi.regions.append(
+                    Region(toks[i].off, toks[body_close].off + 1, gates)
+                )
+            # nested items (incl. #[cfg(test)] mod tests inside fns is
+            # not a thing, but closures/fns can nest): walk the body for
+            # nested fn/struct/use items only when one is present
+            self._nested_items(k + 1, body_close, module, gates)
+            return body_close + 1
+        if gates and k < len(toks):
+            self.fi.regions.append(Region(toks[i].off, toks[k].off + 1, gates))
+        return k + 1
+
+    def _nested_items(
+        self, i: int, end: int, module: str, gates: frozenset[str]
+    ) -> None:
+        """Record fns/structs defined inside a fn body (rare but real)."""
+        toks = self.toks
+        j = i
+        while j < end:
+            t = toks[j]
+            if t.kind == "ident" and t.val == "fn":
+                j = self._fn(j, module, gates, None)
+                continue
+            if t.kind == "ident" and t.val in ("struct", "enum") and j + 1 < end \
+                    and toks[j + 1].kind == "ident":
+                j = (
+                    self._struct(j, module, gates)
+                    if t.val == "struct"
+                    else self._enum(j, module, gates)
+                )
+                continue
+            j += 1
+
+    def _count_params(self, open_i: int, close_i: int) -> tuple[int, bool]:
+        """Count top-level commas in a param list; detect a self receiver."""
+        toks = self.toks
+        depth_paren = 0
+        depth_angle = 0
+        parts = 1 if close_i > open_i + 1 else 0
+        has_self = False
+        first_part = True
+        trailing_comma = False
+        j = open_i + 1
+        while j < close_i:
+            t = toks[j]
+            if t.kind == "open":
+                j = match_delim(toks, j) + 1
+                trailing_comma = False
+                continue
+            if t.val == "<" and t.kind == "punct":
+                k = match_angle(toks, j)
+                if k > j:
+                    j = k + 1
+                    trailing_comma = False
+                    continue
+            if t.val == "," and depth_paren == 0 and depth_angle == 0:
+                parts += 1
+                first_part = False
+                trailing_comma = True
+            else:
+                trailing_comma = False
+                if t.kind == "ident" and t.val == "self" and first_part:
+                    has_self = True
+            j += 1
+        if trailing_comma:
+            parts -= 1
+        if has_self:
+            parts -= 1
+        return max(parts, 0), has_self
+
+    def _struct(self, i: int, module: str, gates: frozenset[str]) -> int:
+        toks = self.toks
+        j = i + 1
+        if j >= len(toks) or toks[j].kind != "ident":
+            return i + 1
+        name = toks[j].val
+        line = self.line(toks[i].off)
+        j = self._generics_end(j + 1)
+        # skip a where clause
+        while j < len(toks) and toks[j].val not in (";",) and toks[j].kind != "open":
+            j += 1
+        if j >= len(toks) or toks[j].val == ";":
+            self._add_struct(StructDef(name, self.path, line, "unit", (), 0,
+                                       module, gates))
+            return j + 1
+        close = match_delim(toks, j)
+        self.fi.decl_spans.append((toks[j].off, toks[close].off + 1))
+        if toks[j].val == "(":
+            arity, _ = self._count_params(j, close)
+            self._add_struct(StructDef(name, self.path, line, "tuple", (), arity,
+                                       module, gates))
+            # tuple struct decl ends with `;`
+            k = close + 1
+            while k < len(toks) and toks[k].val != ";":
+                k += 1
+            return k + 1
+        fields = self._named_fields(j, close)
+        self._add_struct(StructDef(name, self.path, line, "named", fields, 0,
+                                   module, gates))
+        return close + 1
+
+    def _add_struct(self, sd: StructDef) -> None:
+        self.ix.structs.setdefault(sd.name, []).append(sd)
+        self._record_module_item(sd.module, sd.name, sd.gates)
+
+    def _named_fields(self, open_i: int, close_i: int) -> tuple[str, ...]:
+        """Field names: idents at top level followed by `:` (skipping
+        attributes and `pub` modifiers)."""
+        toks = self.toks
+        fields: list[str] = []
+        j = open_i + 1
+        expect_name = True
+        while j < close_i:
+            t = toks[j]
+            if t.kind == "punct" and t.val == "#":
+                if j + 1 < close_i and toks[j + 1].kind == "open":
+                    j = match_delim(toks, j + 1) + 1
+                    continue
+            if t.kind == "open":
+                j = match_delim(toks, j) + 1
+                continue
+            if t.val == "<" and t.kind == "punct":
+                k = match_angle(toks, j)
+                if k > j:
+                    j = k + 1
+                    continue
+            if t.val == ",":
+                expect_name = True
+            elif expect_name and t.kind == "ident" and t.val != "pub":
+                if j + 1 < close_i and toks[j + 1].val == ":" \
+                        and toks[j + 1].kind == "punct":
+                    fields.append(t.val)
+                    expect_name = False
+                elif t.val in ("crate", "super", "in"):
+                    pass  # pub(crate) visibility innards
+                else:
+                    expect_name = False
+            j += 1
+        return tuple(fields)
+
+    def _enum(self, i: int, module: str, gates: frozenset[str]) -> int:
+        toks = self.toks
+        j = i + 1
+        if j >= len(toks) or toks[j].kind != "ident":
+            return i + 1
+        name = toks[j].val
+        self.ix.enums.add(name)
+        self._record_module_item(module, name, gates)
+        j = self._generics_end(j + 1)
+        while j < len(toks) and not (toks[j].kind == "open" and toks[j].val == "{"):
+            j += 1
+        if j >= len(toks):
+            return j
+        close = match_delim(toks, j)
+        self.fi.decl_spans.append((toks[j].off, toks[close].off + 1))
+        k = j + 1
+        expect_variant = True
+        while k < close:
+            t = toks[k]
+            if t.kind == "punct" and t.val == "#" and k + 1 < close \
+                    and toks[k + 1].kind == "open":
+                k = match_delim(toks, k + 1) + 1
+                continue
+            if t.val == ",":
+                expect_variant = True
+                k += 1
+                continue
+            if expect_variant and t.kind == "ident":
+                vname = t.val
+                if k + 1 < close and toks[k + 1].kind == "open":
+                    vclose = match_delim(toks, k + 1)
+                    if toks[k + 1].val == "(":
+                        arity, _ = self._count_params(k + 1, vclose)
+                        vd = VariantDef(name, vname, "tuple", (), arity)
+                    else:
+                        flds = self._named_fields(k + 1, vclose)
+                        vd = VariantDef(name, vname, "named", flds, 0)
+                    k = vclose + 1
+                else:
+                    vd = VariantDef(name, vname, "unit", (), 0)
+                    k += 1
+                self.ix.variants.setdefault(vname, []).append(vd)
+                expect_variant = False
+                continue
+            if t.kind == "open":
+                k = match_delim(toks, k) + 1
+                continue
+            k += 1
+        return close + 1
+
+    def _trait(
+        self, i: int, end: int, module: str, gates: frozenset[str]
+    ) -> int:
+        toks = self.toks
+        j = i + 1
+        if j >= len(toks) or toks[j].kind != "ident":
+            return i + 1
+        name = toks[j].val
+        self.ix.traits.add(name)
+        self._record_module_item(module, name, gates)
+        while j < len(toks) and not (toks[j].kind == "open" and toks[j].val == "{"):
+            if toks[j].val == ";":
+                return j + 1
+            j += 1
+        if j >= len(toks):
+            return j
+        close = match_delim(toks, j)
+        self._items(j + 1, close, module, gates, name)
+        return close + 1
+
+    def _impl(self, i: int, end: int, module: str, gates: frozenset[str]) -> int:
+        toks = self.toks
+        j = self._generics_end(i + 1)
+        # collect the (possibly `Trait for Type`) head up to `{`
+        segs: list[str] = []
+        owner = None
+        while j < len(toks):
+            t = toks[j]
+            if t.kind == "open" and t.val == "{":
+                break
+            if t.val == ";":
+                return j + 1
+            if t.kind == "ident" and t.val == "for":
+                segs = []  # what follows `for` is the type
+            elif t.kind == "ident" and t.val == "where":
+                break
+            elif t.kind == "ident" and t.val not in KEYWORDS:
+                segs.append(t.val)
+            elif t.val == "<":
+                k = match_angle(toks, j)
+                if k > j:
+                    j = k + 1
+                    continue
+            j += 1
+        while j < len(toks) and not (toks[j].kind == "open" and toks[j].val == "{"):
+            j += 1
+        if j >= len(toks):
+            return j
+        owner = segs[-1] if segs else None
+        close = match_delim(toks, j)
+        if gates:
+            self.fi.regions.append(Region(toks[i].off, toks[close].off + 1, gates))
+        self._items(j + 1, close, module, gates, owner)
+        return close + 1
+
+    def _mod(self, i: int, end: int, module: str, gates: frozenset[str]) -> int:
+        toks = self.toks
+        j = i + 1
+        if j >= len(toks) or toks[j].kind != "ident":
+            return i + 1
+        name = toks[j].val
+        line = self.line(toks[i].off)
+        sub = f"{module}::{name}" if module else name
+        if j + 1 < len(toks) and toks[j + 1].val == ";":
+            self.ix.mods.setdefault(name, []).append(
+                ModDecl(name, self.path, line, False, gates)
+            )
+            if "pjrt" in gates:
+                self.ix.pjrt_modules.add(sub)
+            self._record_module_item(module, name, gates)
+            return j + 2
+        if j + 1 < len(toks) and toks[j + 1].kind == "open":
+            close = match_delim(toks, j + 1)
+            self.ix.mods.setdefault(name, []).append(
+                ModDecl(name, self.path, line, True, gates)
+            )
+            if "pjrt" in gates:
+                self.ix.pjrt_modules.add(sub)
+            if gates:
+                self.fi.regions.append(
+                    Region(toks[i].off, toks[close].off + 1, gates)
+                )
+            self._record_module_item(module, name, gates)
+            self._items(j + 2, close, sub, gates, None)
+            return close + 1
+        return j + 1
+
+    def _use(self, i: int, module: str, gates: frozenset[str]) -> int:
+        toks = self.toks
+        # find `;`, collecting the subtree textually (brace-aware)
+        j = i + 1
+        start_off = toks[j].off if j < len(toks) else toks[i].off
+        depth = 0
+        while j < len(toks):
+            if toks[j].kind == "open":
+                depth += 1
+            elif toks[j].kind == "close":
+                depth -= 1
+            elif toks[j].val == ";" and depth == 0:
+                break
+            j += 1
+        end_off = toks[j].off if j < len(toks) else len(self.fi.sf.code)
+        text = self.fi.sf.code[start_off:end_off]
+        is_pub = i > 0 and toks[i - 1].val in ("pub", ")")
+        line = self.line(toks[i].off)
+        for path, alias in _expand_use(text):
+            ud = UseDecl(self.path, line, tuple(path), alias, is_pub, gates)
+            self.ix.uses.append(ud)
+            self.fi.imports[alias] = tuple(path)
+            if is_pub:
+                if alias == "*":
+                    self.ix.module_globs.add(module)
+                else:
+                    self.ix.module_reexports.setdefault(module, set()).add(alias)
+        return j + 1
+
+
+def _expand_use(text: str) -> list[tuple[list[str], str]]:
+    """Expand a use-tree body (`a::b::{c, d as e, f::*}`) into
+    (path_segments, alias) pairs."""
+    text = text.strip()
+    out: list[tuple[list[str], str]] = []
+
+    def rec(prefix: list[str], t: str) -> None:
+        t = t.strip()
+        if not t:
+            return
+        brace = t.find("{")
+        if brace != -1 and t.endswith("}"):
+            head = t[:brace].strip().rstrip(":")
+            pre = prefix + [s for s in head.split("::") if s]
+            body = t[brace + 1 : -1]
+            for part in _split_top(body):
+                rec(pre, part)
+            return
+        m = re.match(r"^(.*?)\s+as\s+([A-Za-z_][A-Za-z0-9_]*)$", t)
+        alias = None
+        if m:
+            t, alias = m.group(1).strip(), m.group(2)
+        segs = prefix + [s for s in t.split("::") if s]
+        if not segs:
+            return
+        if segs[-1] == "self":
+            segs = segs[:-1]  # `use a::b::{self, c}` — self IS the module
+            if not segs:
+                return
+        out.append((segs, alias or segs[-1]))
+
+    rec([], text)
+    return out
+
+
+def _split_top(body: str) -> list[str]:
+    parts, depth, cur = [], 0, []
+    for ch in body:
+        if ch == "{":
+            depth += 1
+        elif ch == "}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    parts.append("".join(cur))
+    return parts
+
+
+# ---------------------------------------------------------------------------
+# Crate loading
+
+
+def module_of(rel: str) -> str:
+    """Map a src-relative path (`merging/simd.rs`) to its module path."""
+    p = rel[:-3] if rel.endswith(".rs") else rel
+    parts = p.split("/")
+    if parts[-1] in ("mod", "lib", "main"):
+        parts = parts[:-1]
+    return "::".join(parts)
+
+
+def build_index(file_set: list[tuple[str, str, str]]) -> CrateIndex:
+    """file_set: (report_path, kind, raw_text) triples.
+
+    kind: "src" | "test" | "bench" | "example" | "vendor".  Vendor files
+    contribute definitions only; they are never scanned by passes.
+    """
+    from lexer import scrub
+
+    ix = CrateIndex()
+    for path, kind, raw in file_set:
+        sf = scrub(path, raw)
+        toks = tokenize(sf.code)
+        rel = path
+        for marker in ("src/", "tests/", "benches/", "examples/"):
+            pos = rel.rfind(marker)
+            if pos != -1:
+                rel = rel[pos + len(marker):]
+                break
+        module = module_of(rel) if kind == "src" else ""
+        file_gates: set[str] = set()
+        if kind == "test":
+            file_gates.add("test")
+        fi = FileInfo(
+            sf=sf, toks=toks, module=module, kind=kind,
+            file_gates=frozenset(file_gates),
+        )
+        ix.files[path] = fi
+        w = _Walker(ix, fi)
+        w.walk()
+        # inner `#![cfg(…)]` attributes recorded as whole-file regions —
+        # promote them to file gates so path checks see them
+        for r in fi.regions:
+            if r.inner and toks and r.end >= toks[-1].off:
+                fi.file_gates = frozenset(fi.file_gates | r.gates)
+    return ix

@@ -1,0 +1,265 @@
+"""Rust source scrubbing and tokenization (dependency-free).
+
+The analyzer never sees a real Rust parser; it sees this: a scrubber
+that blanks comments and string/char-literal *contents* while keeping
+every byte offset identical to the original file, and a tokenizer over
+the scrubbed text.  Offset preservation is the load-bearing property —
+every downstream pass reports `file:line` positions computed directly
+from scrubbed offsets, and the unsafe-audit pass looks back into the
+*raw* text for `// SAFETY:` comments at the same offsets.
+
+Two scrubbed renditions are produced per file:
+
+* ``code``    — comments AND string contents blanked (symbol passes:
+                an identifier inside a format string must not look like
+                a call site);
+* ``text_nc`` — comments blanked, strings kept (the strict-config pass
+                counts *distinct* literal keys like ``.get("shards")``).
+
+Rust specifics handled: nested ``/* */`` block comments, raw strings
+``r"…"`` / ``r#"…"#`` (any hash depth), byte strings, char literals vs
+lifetimes (``'a`` is a lifetime, ``'a'`` a char), escape sequences.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+
+def _blank(text: str, start: int, end: int, keep: str = "") -> list[str]:
+    """Replace text[start:end] with spaces, preserving newlines (so line
+    numbers derived from offsets stay correct)."""
+    out = []
+    for ch in text[start:end]:
+        out.append(ch if ch == "\n" or ch in keep else " ")
+    return out
+
+
+@dataclass
+class ScrubbedFile:
+    path: str           # path as reported in findings (repo-relative)
+    raw: str            # original text
+    code: str           # comments + string contents blanked
+    text_nc: str        # comments blanked, strings kept
+    line_starts: list[int] = field(default_factory=list)
+
+    def line_of(self, offset: int) -> int:
+        """1-based line number for a byte offset (binary search)."""
+        lo, hi = 0, len(self.line_starts) - 1
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            if self.line_starts[mid] <= offset:
+                lo = mid
+            else:
+                hi = mid - 1
+        return lo + 1
+
+    def line_text(self, lineno: int) -> str:
+        start = self.line_starts[lineno - 1]
+        end = (
+            self.line_starts[lineno]
+            if lineno < len(self.line_starts)
+            else len(self.raw)
+        )
+        return self.raw[start:end].rstrip("\n")
+
+
+def scrub(path: str, raw: str) -> ScrubbedFile:
+    n = len(raw)
+    code = list(raw)
+    nc = list(raw)
+    i = 0
+    while i < n:
+        ch = raw[i]
+        nxt = raw[i + 1] if i + 1 < n else ""
+        if ch == "/" and nxt == "/":
+            j = raw.find("\n", i)
+            j = n if j == -1 else j
+            code[i:j] = _blank(raw, i, j)
+            nc[i:j] = _blank(raw, i, j)
+            i = j
+        elif ch == "/" and nxt == "*":
+            depth, j = 1, i + 2
+            while j < n and depth:
+                if raw.startswith("/*", j):
+                    depth += 1
+                    j += 2
+                elif raw.startswith("*/", j):
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            code[i:j] = _blank(raw, i, j)
+            nc[i:j] = _blank(raw, i, j)
+            i = j
+        elif ch == '"' or (ch in "br" and _is_string_start(raw, i)):
+            j, is_raw = _string_end(raw, i)
+            # keep the delimiters in `code` so tokenization sees a
+            # string token; blank only the contents
+            body_start = raw.find('"', i) + 1
+            body_end = j - 1 if not is_raw else raw.rfind('"', body_start, j)
+            if body_end > body_start:
+                code[body_start:body_end] = _blank(raw, body_start, body_end)
+            i = j
+        elif ch == "'":
+            j = _char_or_lifetime_end(raw, i)
+            if j > i + 1 and raw[j - 1] == "'":  # char literal
+                if j - 1 > i + 1:
+                    code[i + 1 : j - 1] = _blank(raw, i + 1, j - 1)
+                    nc[i + 1 : j - 1] = _blank(raw, i + 1, j - 1)
+            i = j
+        else:
+            i += 1
+    line_starts = [0] + [m.end() for m in re.finditer("\n", raw)]
+    return ScrubbedFile(
+        path=path,
+        raw=raw,
+        code="".join(code),
+        text_nc="".join(nc),
+        line_starts=line_starts,
+    )
+
+
+def _is_string_start(raw: str, i: int) -> bool:
+    """True at `b"`, `r"`, `br"`, `r#"`, `br#"` — only when not part of
+    an identifier (e.g. the `r` in `for` or a var named `b`)."""
+    if i > 0 and (raw[i - 1].isalnum() or raw[i - 1] == "_"):
+        return False
+    m = re.match(r'(?:b?r#*"|b")', raw[i : i + 8])
+    return m is not None
+
+
+def _string_end(raw: str, i: int) -> tuple[int, bool]:
+    """Offset one past the closing quote; second item: is-raw-string."""
+    n = len(raw)
+    m = re.match(r'(b?r)(#*)"', raw[i : i + 8])
+    if m:  # raw string: ends at `"` + same number of hashes, no escapes
+        hashes = m.group(2)
+        close = '"' + hashes
+        j = raw.find(close, i + m.end())
+        return (n if j == -1 else j + len(close)), True
+    # ordinary (possibly byte) string with escapes
+    j = raw.find('"', i) + 1
+    while j < n:
+        if raw[j] == "\\":
+            j += 2
+        elif raw[j] == '"':
+            return j + 1, False
+        else:
+            j += 1
+    return n, False
+
+
+def _char_or_lifetime_end(raw: str, i: int) -> int:
+    """Given raw[i] == "'", return end offset of the char literal, or
+    i+1 if this is a lifetime/label (leaving the ident to the lexer)."""
+    n = len(raw)
+    # lifetime: 'ident NOT followed by closing quote
+    m = re.match(r"'([A-Za-z_][A-Za-z0-9_]*)", raw[i : i + 64])
+    if m and (i + m.end() >= n or raw[i + m.end()] != "'"):
+        return i + 1
+    # char literal: handle '\'' and '\\' and multi-byte escapes
+    j = i + 1
+    if j < n and raw[j] == "\\":
+        j += 2
+        while j < n and raw[j] != "'":
+            j += 1
+        return min(j + 1, n)
+    while j < n and raw[j] != "'":
+        j += 1
+    return min(j + 1, n)
+
+
+# ---------------------------------------------------------------------------
+# Tokenizer
+
+
+@dataclass
+class Tok:
+    kind: str   # ident | num | str | lifetime | punct | open | close
+    val: str
+    off: int
+
+    def __repr__(self) -> str:  # debugging aid
+        return f"{self.kind}:{self.val}@{self.off}"
+
+
+_PUNCTS = [
+    "::", "->", "=>", "..=", "..", "&&", "||", "<<=", ">>=", "==", "!=",
+    "<=", ">=", "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=", "<<", ">>",
+]
+
+_TOKEN_RE = re.compile(
+    r"""
+      (?P<ident>[A-Za-z_][A-Za-z0-9_]*)
+    | (?P<num>\d[\dA-Za-z_.]*)
+    | (?P<str>b?r?\#*"(?:[^"\\]|\\.)*"\#*)
+    | (?P<lifetime>'[A-Za-z_][A-Za-z0-9_]*)
+    | (?P<punct>%s)
+    | (?P<open>[([{])
+    | (?P<close>[)\]}])
+    | (?P<single>[^\s])
+    """
+    % "|".join(re.escape(p) for p in _PUNCTS),
+    re.VERBOSE,
+)
+
+KEYWORDS = {
+    "as", "async", "await", "break", "const", "continue", "crate", "dyn",
+    "else", "enum", "extern", "false", "fn", "for", "if", "impl", "in",
+    "let", "loop", "match", "mod", "move", "mut", "pub", "ref", "return",
+    "self", "Self", "static", "struct", "super", "trait", "true", "type",
+    "union", "unsafe", "use", "where", "while",
+}
+
+
+def tokenize(code: str) -> list[Tok]:
+    toks: list[Tok] = []
+    for m in _TOKEN_RE.finditer(code):
+        kind = m.lastgroup
+        if kind == "single":
+            kind = "punct"
+        toks.append(Tok(kind=kind, val=m.group(), off=m.start()))
+    return toks
+
+
+def match_delim(toks: list[Tok], i: int) -> int:
+    """toks[i] is an `open` token; return index of its matching close."""
+    assert toks[i].kind == "open", toks[i]
+    depth = 0
+    for j in range(i, len(toks)):
+        if toks[j].kind == "open":
+            depth += 1
+        elif toks[j].kind == "close":
+            depth -= 1
+            if depth == 0:
+                return j
+    return len(toks) - 1
+
+
+def match_angle(toks: list[Tok], i: int) -> int:
+    """toks[i] is `<` in a generics position; return index of matching
+    `>` (treating `>>` as two closes).  Gives up (returns i) when the
+    run looks like a comparison rather than generics."""
+    depth = 0
+    j = i
+    limit = min(len(toks), i + 4096)
+    while j < limit:
+        t = toks[j]
+        if t.val == "<" and t.kind == "punct":
+            depth += 1
+        elif t.val == "<<":
+            depth += 2
+        elif t.val == ">" and t.kind == "punct":
+            depth -= 1
+            if depth == 0:
+                return j
+        elif t.val == ">>":
+            depth -= 2
+            if depth <= 0:
+                return j
+        elif t.val in (";", "{") or t.kind == "open" and t.val == "{":
+            return i  # statement boundary: not generics after all
+        j += 1
+    return i

@@ -1,0 +1,95 @@
+"""Pass (c) `concurrency` — thread/channel/lock discipline.
+
+* bare `.join().unwrap()` / `.join().expect(…)` on thread handles is
+  forbidden outside `util::join_annotated` (the crate-wide idiom that
+  preserves panic payloads — DESIGN.md §10); non-test code only;
+* unbounded `mpsc::channel(` is forbidden in non-test code — bounded
+  `sync_channel` is the crate contract for every queue that can grow
+  with traffic (DESIGN.md §10's bounded-memory guarantee).  One-shot
+  rendezvous response channels are the known exception and must be
+  *allowlisted with that justification*, not silently skipped;
+* a function body that acquires locks on two or more distinct fields is
+  flagged as a lock-order hazard: nested `Mutex` acquisition across
+  fields is how deadlocks are born, and each such site must carry a
+  justification (ordering argument) in the allowlist.
+"""
+
+from __future__ import annotations
+
+import re
+
+from findings import Finding
+from index import CrateIndex
+
+PASS_ID = "concurrency"
+
+_JOIN_RE = re.compile(r"\.join\(\)\s*\.\s*(unwrap|expect)\s*\(")
+_CHANNEL_RE = re.compile(r"\bmpsc::channel\s*\(|\bchannel::<[^>]*>\s*\(\)")
+_LOCK_RE = re.compile(
+    r"(?:lock_ignore_poison\s*\(\s*&(?P<a>[A-Za-z_][\w.]*)\s*\)"
+    r"|(?P<b>[A-Za-z_][\w.]*)\s*\.\s*lock\s*\(\))"
+)
+
+
+def run(ix: CrateIndex) -> list[Finding]:
+    out: list[Finding] = []
+    for path, fi in ix.files.items():
+        if fi.kind == "vendor":
+            continue
+        code = fi.sf.code
+        in_util = path.endswith("util.rs")
+        for m in _JOIN_RE.finditer(code):
+            gates = ix.gates_at(path, m.start()) | fi.file_gates
+            if "test" in gates:
+                continue
+            if in_util:
+                continue  # join_annotated's own implementation site
+            line = fi.sf.line_of(m.start())
+            out.append(Finding(
+                PASS_ID, path, line, "join().unwrap",
+                "bare `.join().unwrap()/.expect()` discards the panic "
+                "payload — route through `util::join_annotated`",
+                fi.sf.line_text(line).strip()))
+        for m in _CHANNEL_RE.finditer(code):
+            gates = ix.gates_at(path, m.start()) | fi.file_gates
+            if "test" in gates:
+                continue
+            line = fi.sf.line_of(m.start())
+            out.append(Finding(
+                PASS_ID, path, line, "mpsc::channel",
+                "unbounded `mpsc::channel()` — the crate contract is a "
+                "bounded `sync_channel` for anything that can grow with "
+                "traffic (DESIGN.md §10); one-shot response channels must "
+                "be allowlisted with that justification",
+                fi.sf.line_text(line).strip()))
+        out.extend(_lock_order(ix, path, fi))
+    return out
+
+
+def _lock_order(ix: CrateIndex, path: str, fi) -> list[Finding]:
+    out: list[Finding] = []
+    for start, end, fn_name, gates in fi.fn_spans:
+        all_gates = set(gates) | set(ix.gates_at(path, start)) | set(fi.file_gates)
+        if "test" in all_gates:
+            continue
+        body = fi.sf.code[start:end]
+        receivers: dict[str, int] = {}
+        for m in _LOCK_RE.finditer(body):
+            recv = (m.group("a") or m.group("b") or "").strip()
+            if not recv or recv in ("m",):  # util::lock_ignore_poison param
+                continue
+            # normalize: drop leading `self.` so `self.x` == `x` never
+            # collides across different objects but stays stable per field
+            receivers.setdefault(recv, start + m.start())
+        if len(receivers) >= 2:
+            first_off = min(receivers.values())
+            line = fi.sf.line_of(first_off)
+            fields = sorted(receivers)
+            out.append(Finding(
+                PASS_ID, path, line, f"lock-order:{fn_name}",
+                f"fn `{fn_name}` acquires locks on {len(fields)} distinct "
+                f"receivers {fields} — nested Mutex acquisition across "
+                f"fields is a lock-order hazard; allowlist with the "
+                f"ordering argument if intentional",
+                fi.sf.line_text(line).strip()))
+    return out

@@ -1,0 +1,68 @@
+"""Pass (e) `configs` — strict-config convention.
+
+Every JSON config-block parser must carry the unknown-key-rejection
+pattern (`reject_unknown_keys`, config.rs): a parser that reads two or
+more distinct literal keys from a `Json` value without rejecting
+unknown keys silently ignores typos — the exact failure mode the
+crate's config discipline exists to kill (a `"thresold"` that defaults
+instead of erroring).
+
+Heuristic: a fn body (non-test, src only) that contains >= 2 distinct
+`.get("…")` / `.req("…")` literal-key reads and no
+`reject_unknown_keys(` call (directly, or via a `*_from_json` helper it
+delegates every read to) is flagged.  Report-*writers* (`Json::obj`
+construction) don't match because they don't `.get`.
+"""
+
+from __future__ import annotations
+
+import re
+
+from findings import Finding
+from index import CrateIndex
+
+PASS_ID = "configs"
+
+_KEY_READ_RE = re.compile(r"\.\s*(?:get|req)\s*\(\s*\"([^\"]*)\"\s*\)")
+_REJECT_RE = re.compile(r"\breject_unknown_keys\s*\(")
+_DELEGATE_RE = re.compile(r"\b([a-z_]+_from_json)\s*\(")
+_MIN_KEYS = 2
+
+
+def run(ix: CrateIndex) -> list[Finding]:
+    # fns that themselves call reject_unknown_keys — delegation targets
+    strict_fns: set[str] = set()
+    for path, fi in ix.files.items():
+        for start, end, fn_name, _gates in fi.fn_spans:
+            if _REJECT_RE.search(fi.sf.text_nc[start:end]):
+                strict_fns.add(fn_name)
+    out: list[Finding] = []
+    for path, fi in ix.files.items():
+        if fi.kind != "src":
+            continue
+        for start, end, fn_name, gates in fi.fn_spans:
+            all_gates = set(gates) | set(ix.gates_at(path, start)) \
+                | set(fi.file_gates)
+            if "test" in all_gates:
+                continue
+            body = fi.sf.text_nc[start:end]
+            keys = set(_KEY_READ_RE.findall(body))
+            if len(keys) < _MIN_KEYS:
+                continue
+            if _REJECT_RE.search(body):
+                continue
+            if fn_name in strict_fns:
+                continue
+            delegates = set(_DELEGATE_RE.findall(body))
+            if delegates & strict_fns:
+                # reads a couple of discriminator keys, then hands the
+                # block to a strict parser — the strictness holds
+                continue
+            line = fi.sf.line_of(start)
+            out.append(Finding(
+                PASS_ID, path, line, fn_name,
+                f"fn `{fn_name}` reads {len(keys)} literal JSON keys "
+                f"({sorted(keys)[:6]}…) without `reject_unknown_keys` — "
+                f"unknown/typo'd keys would be silently ignored",
+                fi.sf.line_text(line).strip()))
+    return out

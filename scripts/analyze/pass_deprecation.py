@@ -1,0 +1,65 @@
+"""Pass (g) `deprecation` — no non-test callers of `#[deprecated]` items.
+
+The pre-PR 3 one-shot merge wrappers (`merge_fixed_r`, `merge_dynamic`,
+`match_tokens`, `merge_batch`) stay in the crate as bit-pinned
+compatibility shims, and the differential suite calls them under a
+scoped `#[allow(deprecated)]`.  Nothing else may: a new call site in
+src/benches/examples reintroduces the untyped API the `MergeSpec`
+redesign removed.  (This mirrors verify.sh's `clippy -D deprecated`
+gate, which has never been able to run here.)
+"""
+
+from __future__ import annotations
+
+import re
+
+from findings import Finding
+from index import CrateIndex
+
+PASS_ID = "deprecation"
+
+
+def run(ix: CrateIndex) -> list[Finding]:
+    if not ix.deprecated:
+        return []
+    rx = re.compile(
+        r"\b(" + "|".join(re.escape(n) for n in sorted(ix.deprecated))
+        + r")\s*(?:::<[^>]*>)?\s*\("
+    )
+    out: list[Finding] = []
+    def_sites = _definition_lines(ix)
+    for path, fi in ix.files.items():
+        if fi.kind == "vendor":
+            continue
+        for m in rx.finditer(fi.sf.code):
+            name = m.group(1)
+            line = fi.sf.line_of(m.start())
+            if (path, line) in def_sites:
+                continue
+            gates = ix.gates_at(path, m.start()) | fi.file_gates
+            if "test" in gates or "allow_deprecated" in gates \
+                    or "allow:deprecated" in gates:
+                continue
+            # the deprecated wrappers delegate to each other inside the
+            # deprecated region itself — a caller that is *itself*
+            # deprecated is the shim's own body
+            if "deprecated" in gates:
+                continue
+            # skip fn definitions of the deprecated item
+            text = fi.sf.line_text(line)
+            if re.search(rf"\bfn\s+{re.escape(name)}\b", text):
+                continue
+            out.append(Finding(
+                PASS_ID, path, line, name,
+                f"non-test call of #[deprecated] `{name}` — build a "
+                f"MergeSpec / MergePlan instead (deprecation note)",
+                text.strip()))
+    return out
+
+
+def _definition_lines(ix: CrateIndex) -> set[tuple[str, int]]:
+    out: set[tuple[str, int]] = set()
+    for name in ix.deprecated:
+        for fd in ix.fns.get(name, []):
+            out.add((fd.file, fd.line))
+    return out

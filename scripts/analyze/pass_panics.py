@@ -1,0 +1,74 @@
+"""Pass (d) `panics` — panic paths in non-test src must be justified.
+
+`unwrap()`, `expect(…)`, `panic!(…)`, `unreachable!(…)`, `todo!` /
+`unimplemented!`, and the `partial_cmp(…).unwrap()` NaN hazard (PR 1's
+top-r bug class) are flagged in `rust/src` outside `#[cfg(test)]`
+scopes.  Every hit must either be removed or allowlisted with a
+one-line justification of why the invariant can't fail (or why failing
+fast is the correct behavior there).
+
+Tests, benches and examples are exempt: a panic there fails the harness
+loudly, which is exactly what those contexts want.
+"""
+
+from __future__ import annotations
+
+import re
+
+from findings import Finding
+from index import CrateIndex
+
+PASS_ID = "panics"
+
+_PATTERNS = [
+    # partial_cmp first so the more specific symbol wins on shared lines
+    (re.compile(r"\.partial_cmp\s*\([^)]*\)\s*\.\s*unwrap\s*\(\)"),
+     "partial_cmp().unwrap",
+     "`partial_cmp().unwrap()` panics on NaN (the PR 1 top-r hazard class)"
+     " — use `total_cmp` or handle the None"),
+    (re.compile(r"\.unwrap\s*\(\)"), "unwrap",
+     "`unwrap()` on a serving path turns a recoverable error into a panic"),
+    (re.compile(r"\.expect\s*\("), "expect",
+     "`expect()` on a serving path turns a recoverable error into a panic"),
+    (re.compile(r"\bpanic!\s*[\(\[{]"), "panic!",
+     "explicit `panic!` in library code"),
+    (re.compile(r"\bunreachable!\s*[\(\[{]"), "unreachable!",
+     "`unreachable!` is a panic if the reasoning ever rots"),
+    (re.compile(r"\btodo!\s*[\(\[{]"), "todo!", "`todo!` must not ship"),
+    (re.compile(r"\bunimplemented!\s*[\(\[{]"), "unimplemented!",
+     "`unimplemented!` must not ship"),
+]
+
+
+def run(ix: CrateIndex) -> list[Finding]:
+    out: list[Finding] = []
+    for path, fi in ix.files.items():
+        if fi.kind != "src":
+            continue
+        code = fi.sf.code
+        # a file may define its own method named `expect`/`unwrap` (the
+        # JSON parser's `self.expect(b'{')` is a Result-returning token
+        # check, not Option::expect) — exempt `self.<name>(` there
+        own_methods = {
+            name for name in ("expect", "unwrap")
+            if any(fd.file == path and fd.has_self
+                   for fd in ix.fns.get(name, []))
+        }
+        seen_spans: list[tuple[int, int]] = []
+        for rx, symbol, why in _PATTERNS:
+            for m in rx.finditer(code):
+                if any(s <= m.start() < e for s, e in seen_spans):
+                    continue  # already claimed by a more specific pattern
+                if own_methods and symbol in own_methods and \
+                        code[: m.start()].endswith("self"):
+                    continue
+                gates = ix.gates_at(path, m.start()) | fi.file_gates
+                if "test" in gates:
+                    continue
+                seen_spans.append((m.start(), m.end()))
+                line = fi.sf.line_of(m.start())
+                out.append(Finding(
+                    PASS_ID, path, line, symbol,
+                    f"{why} — allowlist with a justification or remove",
+                    fi.sf.line_text(line).strip()))
+    return out

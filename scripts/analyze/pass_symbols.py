@@ -1,0 +1,501 @@
+"""Pass (a) `symbols` — whole-crate interface resolution.
+
+Mechanizes the manual review every toolchain-less PR has relied on:
+every call site, method receiver and struct-literal field set must
+resolve to a definition with a matching shape *somewhere* in the crate
+(or the curated std knowledge base, `stdlib.py`).
+
+Checked, per expression position:
+
+* path calls `a::b::f(x, y)` — `f` must be a known fn / tuple-struct /
+  tuple-variant / macro-less callable with matching arity (UFCS
+  `Type::method(recv, …)` accepted at arity+1);
+* method calls `recv.m(x)` — `m` must be a crate method with matching
+  arity or a known std method (std is name-only: overload sets across
+  std types make arity checking there meaningless without inference);
+* macro calls `m!(…)` — `m` must be a crate `macro_rules!` or std macro;
+* struct literals / struct patterns `Name { f1: …, f2, .. }` — the
+  field names must be a subset of the definition's fields, and exactly
+  equal when no `..` rest appears.
+
+Resolution is name-global by design (the "grep the call against its
+definition" bar), so renames, arity drift, and field drift — the actual
+failure modes of review-only PRs — are caught, while type-level
+mistakes remain the (documented) residual for the day `cargo check`
+lands.
+"""
+
+from __future__ import annotations
+
+from findings import Finding
+from index import CrateIndex, FileInfo
+from lexer import Tok, match_delim, match_angle
+from stdlib import (
+    PRELUDE_CALLABLES,
+    STD_MACROS,
+    STD_METHODS,
+    STD_PATH_FNS,
+    STD_ROOTS,
+    STD_TYPES,
+    is_intrinsic,
+)
+
+PASS_ID = "symbols"
+
+# Idents that look like calls but are control flow / syntax.
+_NOT_CALLS = {
+    "if", "while", "for", "match", "return", "loop", "fn", "in", "as",
+    "where", "move", "mut", "ref", "let", "else", "break", "continue",
+    "impl", "dyn", "use", "pub", "unsafe", "async", "await", "box",
+    "const", "static", "type", "union", "extern",
+    # closure-trait bounds in type position, not calls
+    "Fn", "FnMut", "FnOnce",
+}
+
+
+def run(ix: CrateIndex) -> list[Finding]:
+    out: list[Finding] = []
+    for path, fi in ix.files.items():
+        if fi.kind == "vendor":
+            continue
+        out.extend(_scan_file(ix, fi))
+    return out
+
+
+def _attr_token_mask(toks: list[Tok]) -> list[bool]:
+    """True for every token inside a `#[…]` / `#![…]` attribute —
+    attribute bodies (`derive(…)`, `allow(…)`, `cfg(…)`) are meta-syntax,
+    not call expressions."""
+    mask = [False] * len(toks)
+    i = 0
+    while i < len(toks):
+        if toks[i].val == "#" and toks[i].kind == "punct":
+            j = i + 1
+            if j < len(toks) and toks[j].val == "!" and toks[j].kind == "punct":
+                j += 1
+            if j < len(toks) and toks[j].kind == "open" and toks[j].val == "[":
+                end = match_delim(toks, j)
+                for k in range(i, end + 1):
+                    mask[k] = True
+                i = end + 1
+                continue
+        i += 1
+    return mask
+
+
+def _scan_file(ix: CrateIndex, fi: FileInfo) -> list[Finding]:
+    toks = fi.toks
+    out: list[Finding] = []
+    n = len(toks)
+    in_attr = _attr_token_mask(toks)
+    for i, t in enumerate(toks):
+        if t.kind != "open" or in_attr[i] or fi.in_decl(t.off):
+            continue
+        if t.val == "(":
+            f = _check_call(ix, fi, i)
+            if f:
+                out.append(f)
+        elif t.val == "{":
+            f = _check_struct_literal(ix, fi, i)
+            if f:
+                out.append(f)
+    return out
+
+
+def _path_before(toks: list[Tok], i: int) -> tuple[list[str], int, bool]:
+    """Collect the `::`-path ending just before index i (exclusive).
+    Returns (segments, index_before_path, is_macro).  Empty segments
+    means: not a call position."""
+    j = i - 1
+    is_macro = False
+    if j >= 0 and toks[j].val == "!" and toks[j].kind == "punct":
+        is_macro = True
+        j -= 1
+    if j < 0 or toks[j].kind != "ident":
+        return [], j, is_macro
+    segs = [toks[j].val]
+    j -= 1
+    while j >= 1:
+        if toks[j].val == "::" and toks[j].kind == "punct":
+            k = j - 1
+            # turbofish `::<…>::` — the `<…>` sits *after* a `::`; here we
+            # walk backwards so a `>` just before `::` means a generics
+            # group we must skip
+            if toks[k].val == ">" and toks[k].kind == "punct":
+                depth = 1
+                k -= 1
+                while k >= 0 and depth:
+                    if toks[k].val == ">":
+                        depth += 1
+                    elif toks[k].val == "<":
+                        depth -= 1
+                    elif toks[k].val == ">>":
+                        depth += 2
+                    elif toks[k].val == "<<":
+                        depth -= 2
+                    k -= 1
+                # expect another `::` before the turbofish
+                if k >= 0 and toks[k].val == "::":
+                    k -= 1
+                else:
+                    break
+            if k >= 0 and toks[k].kind == "ident":
+                segs.append(toks[k].val)
+                j = k - 1
+                continue
+            if k >= 0 and toks[k].kind == "close" and toks[k].val == ">":
+                break
+        break
+    segs.reverse()
+    return segs, j, is_macro
+
+
+def _count_args(toks: list[Tok], open_i: int, close_i: int) -> tuple[int, bool]:
+    """Count top-level commas between ( ) — with closure-literal and
+    turbofish awareness.  Second return: True when the arg list contains
+    a `..` rest pattern (arity check must be skipped)."""
+    if close_i == open_i + 1:
+        return 0, False
+    args = 1
+    has_rest = False
+    trailing_comma = False
+    j = open_i + 1
+    while j < close_i:
+        t = toks[j]
+        if t.kind == "open":
+            j = match_delim(toks, j) + 1
+            trailing_comma = False
+            continue
+        if t.val == "|" and t.kind == "punct":
+            prev = toks[j - 1]
+            if prev.val in ("(", ",", "=", "move", "=>", "&", "&&") or (
+                prev.kind == "ident" and prev.val == "move"
+            ):
+                # closure literal: skip its parameter list
+                k = j + 1
+                while k < close_i and not (
+                    toks[k].val == "|" and toks[k].kind == "punct"
+                ):
+                    if toks[k].kind == "open":
+                        k = match_delim(toks, k)
+                    k += 1
+                j = k + 1
+                trailing_comma = False
+                continue
+        if t.val == "<" and t.kind == "punct" and j > open_i + 1 \
+                and toks[j - 1].val == "::":
+            k = match_angle(toks, j)
+            if k > j:
+                j = k + 1
+                trailing_comma = False
+                continue
+        if t.val == ".." or t.val == "..=":
+            has_rest = True
+        if t.val == "," and t.kind == "punct":
+            args += 1
+            trailing_comma = True
+        else:
+            trailing_comma = False
+        j += 1
+    if trailing_comma:
+        args -= 1
+    return max(args, 0), has_rest
+
+
+def _is_trusted_path(ix: CrateIndex, fi: FileInfo, segs: list[str]) -> bool:
+    """True when the path's root resolves into std/core/alloc (directly
+    or through this file's imports)."""
+    root = segs[0]
+    if root in STD_ROOTS:
+        return True
+    imp = fi.imports.get(root)
+    if imp and imp[0] in STD_ROOTS:
+        return True
+    return False
+
+
+def _crate_arity_ok(arities: set[int], n: int, ufcs_arities: set[int]) -> bool:
+    return n in arities or n in ufcs_arities
+
+
+def _check_call(ix: CrateIndex, fi: FileInfo, open_i: int) -> Finding | None:
+    toks = fi.toks
+    segs, before_i, is_macro = _path_before(toks, open_i)
+    if not segs:
+        return None
+    name = segs[-1]
+    prev = toks[before_i] if before_i >= 0 else None
+    # fn definitions, not calls:
+    if prev is not None and prev.kind == "ident" and prev.val == "fn":
+        return None
+    close_i = match_delim(toks, open_i)
+    nargs, has_rest = _count_args(toks, open_i, close_i)
+    line = fi.sf.line_of(toks[open_i].off)
+    snippet = fi.sf.line_text(line).strip()
+
+    is_method = prev is not None and prev.val == "." and len(segs) == 1
+
+    if is_macro:
+        if name in _NOT_CALLS:
+            return None  # `if !(cond)` — unary negation, not a macro
+        if name in ix.macros or name in STD_MACROS:
+            return None
+        return Finding(PASS_ID, fi.sf.path, line, name,
+                       f"unresolved macro `{name}!` — not defined in the "
+                       f"crate and not a known std macro", snippet)
+
+    if name in _NOT_CALLS or (len(segs) == 1 and name in ("self", "Self")):
+        return None
+
+    if is_method:
+        return _check_method(ix, fi, name, nargs, has_rest, line, snippet)
+
+    if len(segs) > 1 and _is_trusted_path(ix, fi, segs):
+        return None
+    # keyword-rooted paths are crate paths; strip the root markers
+    core = [s for s in segs if s not in ("crate", "self", "super")]
+    if not core:
+        return None
+    name = core[-1]
+
+    # a single-segment lowercase name shadowed by a local binding is a
+    # closure / fn-pointer call — not resolvable by name, skip
+    if len(segs) == 1:
+        locals_ = ix.fn_locals(fi.sf.path, toks[open_i].off)
+        if locals_ and name in locals_:
+            return None
+
+    # qualifier disambiguation: `Qual::name(…)` — if Qual is a crate type
+    # only its own assoc fns count; if Qual is a std container/primitive,
+    # trust the std knowledge base (name collisions with crate impls like
+    # `MergeScratch::with_capacity` must not shadow `Vec::with_capacity`)
+    qual = core[-2] if len(core) >= 2 else None
+    qual_is_type = qual is not None and (
+        qual in ix.structs or qual in ix.enums or qual in ix.traits
+    )
+    if qual is not None and not qual_is_type and qual in STD_TYPES:
+        return None
+
+    candidates: set[int] = set()
+    ufcs: set[int] = set()
+    known = False
+    for fd in ix.fns.get(name, []):
+        if qual_is_type and fd.owner != qual:
+            continue
+        known = True
+        if fd.has_self:
+            ufcs.add(fd.arity + 1)
+        else:
+            candidates.add(fd.arity)
+    for sd in ix.structs.get(name, []):
+        if sd.kind == "tuple":
+            if qual_is_type and sd.name != qual:
+                continue
+            known = True
+            candidates.add(sd.arity)
+    for vd in ix.variants.get(name, []):
+        if vd.kind == "tuple":
+            if qual_is_type and vd.enum != qual:
+                continue
+            known = True
+            candidates.add(vd.arity)
+    if known:
+        if has_rest or _crate_arity_ok(candidates, nargs, ufcs):
+            return None
+        shapes = sorted(candidates | ufcs)
+        return Finding(
+            PASS_ID, fi.sf.path, line, name,
+            f"arity mismatch: `{name}` called with {nargs} argument(s) but "
+            f"defined with {shapes}", snippet)
+
+    # not in the crate: prelude/std fallbacks
+    if name in PRELUDE_CALLABLES:
+        want = PRELUDE_CALLABLES[name]
+        if want is None or want == nargs or has_rest:
+            return None
+        return Finding(PASS_ID, fi.sf.path, line, name,
+                       f"`{name}` takes {want} argument(s), called with "
+                       f"{nargs}", snippet)
+    if name in STD_PATH_FNS or name in STD_METHODS or is_intrinsic(name):
+        return None
+    if len(segs) > 1 and (segs[-2] in ix.enums or segs[-2] in ix.structs
+                          or segs[-2] in ix.traits):
+        # Assoc item of a known type that we failed to index (blanket
+        # impls, derive-generated) — resolve the *type*, tolerate the
+        # member.  Derived ctors don't exist, so this stays narrow.
+        return None
+    if name[0].isupper() and len(segs) == 1:
+        # tuple-struct/variant from std (e.g. `Duration`, `Reverse(…)`)
+        # imported via use: trust if the import resolves to std
+        imp = fi.imports.get(name)
+        if imp and imp[0] in STD_ROOTS:
+            return None
+    return Finding(PASS_ID, fi.sf.path, line, name,
+                   f"unresolved call `{'::'.join(segs)}({nargs} args)` — no "
+                   f"definition in crate, vendor, or std knowledge base",
+                   snippet)
+
+
+def _check_method(
+    ix: CrateIndex, fi: FileInfo, name: str, nargs: int, has_rest: bool,
+    line: int, snippet: str,
+) -> Finding | None:
+    crate_arities: set[int] = set()
+    for fd in ix.fns.get(name, []):
+        if fd.has_self:
+            crate_arities.add(fd.arity)
+    if crate_arities:
+        if nargs in crate_arities or has_rest:
+            return None
+        if name in STD_METHODS:
+            # same name exists in std (e.g. `get`, `len`): the receiver
+            # may be a std type — name-only pass
+            return None
+        return Finding(
+            PASS_ID, fi.sf.path, line, name,
+            f"method arity mismatch: `.{name}({nargs} args)` but crate "
+            f"definitions take {sorted(crate_arities)} argument(s) and no "
+            f"std method of that name exists", snippet)
+    if name in STD_METHODS or is_intrinsic(name):
+        return None
+    return Finding(PASS_ID, fi.sf.path, line, name,
+                   f"unresolved method `.{name}()` — no crate method and "
+                   f"not a known std method", snippet)
+
+
+# ---------------------------------------------------------------------------
+# Struct literals / patterns
+
+
+def _check_struct_literal(
+    ix: CrateIndex, fi: FileInfo, open_i: int
+) -> Finding | None:
+    toks = fi.toks
+    segs, before_i, is_macro = _path_before(toks, open_i)
+    if not segs or is_macro:
+        return None
+    name = segs[-1]
+    prev = toks[before_i] if before_i >= 0 else None
+    if prev is not None and prev.kind == "ident" and prev.val in (
+        "struct", "enum", "union", "trait", "impl", "mod", "fn", "for",
+        "in", "use", "match", "while", "if", "loop", "else", "return",
+        "unsafe", "move", "dyn", "where", "as",
+    ):
+        # `match X {`, `impl X {` … are blocks, not literals — but
+        # `match` / `if` / `for` / `while` / `return` heads can *contain*
+        # literals only inside parens, which Rust forbids bare; safe to
+        # skip the ident directly preceded by these keywords.
+        if prev.val in ("struct", "enum", "union", "trait", "impl", "mod",
+                        "fn", "for", "dyn", "use", "where", "as", "in",
+                        "match", "while", "if", "loop", "else", "return",
+                        "move", "unsafe"):
+            return None
+
+    # resolve definition: struct with named fields, enum struct-variant,
+    # or `Self` inside an impl
+    fields_def: set[str] | None = None
+    kinds: list[tuple[str, set[str]]] = []
+    if name == "Self":
+        return None  # owner tracking for Self literals: resolved at impls
+    if len(segs) >= 2 and segs[-2] in ix.enums:
+        for vd in ix.variants.get(name, []):
+            if vd.enum == segs[-2] and vd.kind == "named":
+                kinds.append((f"{vd.enum}::{vd.name}", set(vd.fields)))
+        if not kinds:
+            # tuple/unit variant followed by a block (match arm body …)
+            return None
+    else:
+        for sd in ix.structs.get(name, []):
+            if sd.kind == "named":
+                kinds.append((sd.name, set(sd.fields)))
+        for vd in ix.variants.get(name, []):
+            if vd.kind == "named":
+                kinds.append((f"{vd.enum}::{vd.name}", set(vd.fields)))
+    if not kinds:
+        return None
+    close_i = match_delim(toks, open_i)
+    lit = _literal_fields(toks, open_i, close_i)
+    if lit is None:
+        return None
+    used, has_rest, has_exprs = lit
+    if not used and not has_rest:
+        return None
+    line = fi.sf.line_of(toks[open_i].off)
+    snippet = fi.sf.line_text(line).strip()
+    best: tuple[int, str, set[str]] | None = None
+    for label, fields in kinds:
+        missing = fields - used if not has_rest else set()
+        unknown = used - fields
+        score = len(missing) + len(unknown)
+        if score == 0:
+            return None
+        if best is None or score < best[0]:
+            best = (score, label, fields)
+    assert best is not None
+    _score, label, fields = best
+    unknown = sorted(used - fields)
+    missing = sorted(fields - used) if not has_rest else []
+    parts = []
+    if unknown:
+        parts.append(f"unknown field(s) {unknown}")
+    if missing:
+        parts.append(f"missing field(s) {missing} without `..`")
+    return Finding(PASS_ID, fi.sf.path, line, name,
+                   f"struct literal `{label}` field mismatch: "
+                   + "; ".join(parts), snippet)
+
+
+def _literal_fields(
+    toks: list[Tok], open_i: int, close_i: int
+) -> tuple[set[str], bool, bool] | None:
+    """Parse `{ f1: e, f2, ..rest }`.  Returns (field_names, has_rest,
+    has_exprs) or None when the braces clearly aren't a field list."""
+    used: set[str] = set()
+    has_rest = False
+    j = open_i + 1
+    expect_field = True
+    while j < close_i:
+        t = toks[j]
+        if t.val in ("..", "..="):
+            has_rest = True
+            # `..Default::default()` — skip the tail expression
+            j += 1
+            while j < close_i and toks[j].val != ",":
+                if toks[j].kind == "open":
+                    j = match_delim(toks, j)
+                j += 1
+            continue
+        if t.val == ",":
+            expect_field = True
+            j += 1
+            continue
+        if expect_field:
+            if t.kind != "ident":
+                return None
+            if t.val in ("mut", "ref"):
+                j += 1
+                continue
+            nxt = toks[j + 1] if j + 1 < close_i + 1 else None
+            if nxt is not None and nxt.val == ":" and nxt.kind == "punct":
+                used.add(t.val)
+                expect_field = False
+                # skip the value expression up to the next top-level comma
+                j += 2
+                while j < close_i and toks[j].val != ",":
+                    if toks[j].kind == "open":
+                        j = match_delim(toks, j)
+                    j += 1
+                continue
+            elif nxt is not None and (
+                nxt.val == "," or (nxt.kind == "close" and j + 1 == close_i)
+            ):
+                used.add(t.val)  # shorthand
+                expect_field = False
+                j += 1
+                continue
+            elif nxt is not None and nxt.val == "::":
+                return None  # `Enum::Variant` expression in a block
+            else:
+                return None   # statements: this is a block, not a literal
+        j += 1
+    return used, has_rest, False

@@ -1,0 +1,83 @@
+"""Pass (f) `unsafe` — unsafe confinement and SAFETY comments.
+
+The crate's contract: `unsafe` lives in `merging/simd.rs` only, each
+occurrence inside a `cfg(target_arch)`-gated scope (the intrinsic
+modules and the dispatch match arms), and every occurrence carries a
+`// SAFETY:` comment (or `# Safety` doc section for unsafe fns) within
+the preceding lines stating the alignment / length / feature-gate
+preconditions.  Unsafe anywhere else — today that's the worker pool's
+type-erased task cell — must be allowlisted with its invariant.
+"""
+
+from __future__ import annotations
+
+import re
+
+from findings import Finding
+from index import CrateIndex
+
+PASS_ID = "unsafe"
+
+_UNSAFE_RE = re.compile(r"\bunsafe\b")
+_SAFETY_RE = re.compile(r"(//\s*SAFETY:|#\s*Safety)", re.IGNORECASE)
+_ALLOWED_FILE_SUFFIX = "merging/simd.rs"
+_COMMENT_LOOKBACK_LINES = 8
+
+
+def run(ix: CrateIndex) -> list[Finding]:
+    out: list[Finding] = []
+    for path, fi in ix.files.items():
+        if fi.kind == "vendor":
+            continue
+        code = fi.sf.code
+        for m in _UNSAFE_RE.finditer(code):
+            line = fi.sf.line_of(m.start())
+            snippet = fi.sf.line_text(line).strip()
+            in_simd = path.replace("\\", "/").endswith(_ALLOWED_FILE_SUFFIX)
+            gates = ix.gates_at(path, m.start()) | fi.file_gates
+            if not in_simd:
+                out.append(Finding(
+                    PASS_ID, path, line, "unsafe",
+                    "`unsafe` outside merging/simd.rs — the kernel ISA "
+                    "module is the only sanctioned unsafe surface; "
+                    "allowlist with the invariant this block relies on",
+                    snippet))
+                continue
+            if "target_arch" not in gates and not _arch_attr_nearby(fi, line):
+                out.append(Finding(
+                    PASS_ID, path, line, "unsafe-ungated",
+                    "`unsafe` in simd.rs outside any #[cfg(target_arch)] "
+                    "scope — intrinsics must be arch-gated", snippet))
+                continue
+            if not _has_safety_comment(fi, line):
+                out.append(Finding(
+                    PASS_ID, path, line, "unsafe-no-safety-comment",
+                    f"`unsafe` at {path}:{line} lacks a `// SAFETY:` "
+                    f"comment within {_COMMENT_LOOKBACK_LINES} lines "
+                    f"stating its preconditions", snippet))
+    return out
+
+
+_ARCH_ATTR_RE = re.compile(r"#\[cfg\((?:any\()?target_arch")
+
+
+def _arch_attr_nearby(fi, line: int) -> bool:
+    """Match-arm `#[cfg(target_arch = …)]` attributes gate the arm, not
+    an item, so the region map can't see them — accept a textual
+    attribute within the lookback window."""
+    lo = max(1, line - _COMMENT_LOOKBACK_LINES)
+    for ln in range(lo, line + 1):
+        if _ARCH_ATTR_RE.search(fi.sf.line_text(ln)):
+            return True
+    return False
+
+
+def _has_safety_comment(fi, line: int) -> bool:
+    """Look back through the *raw* text (comments were scrubbed from
+    `code`) for a SAFETY marker within the lookback window, and also
+    accept one on the same line (trailing comment)."""
+    lo = max(1, line - _COMMENT_LOOKBACK_LINES)
+    for ln in range(lo, line + 1):
+        if _SAFETY_RE.search(fi.sf.line_text(ln)):
+            return True
+    return False

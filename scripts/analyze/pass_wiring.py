@@ -1,0 +1,265 @@
+"""Pass (b) `wiring` — module/file agreement, `use` resolution, and
+feature-gate discipline.
+
+* every `mod name;` declaration must have `name.rs` or `name/mod.rs`
+  next to its declaring file, and every `.rs` file under `src/` must be
+  reachable from some `mod` declaration (no orphan files silently
+  excluded from the build);
+* every `use crate::…` path must resolve: the module path must exist
+  and the leaf name must be an item, re-export, or glob-covered name of
+  that module;
+* no default-build reference to `#[cfg(feature = "pjrt")]`-only items:
+  a use/path whose target lives behind the pjrt gate is an error unless
+  the referencing site is itself pjrt-gated (file, region, or — for
+  examples — a Cargo.toml `required-features` entry).
+"""
+
+from __future__ import annotations
+
+import os
+import re
+
+from findings import Finding
+from index import CrateIndex
+
+PASS_ID = "wiring"
+
+
+def run(ix: CrateIndex, src_root: str, pjrt_examples: set[str]) -> list[Finding]:
+    out: list[Finding] = []
+    out.extend(_mod_file_agreement(ix, src_root))
+    out.extend(_use_resolution(ix))
+    out.extend(_pjrt_discipline(ix, pjrt_examples))
+    return out
+
+
+def _mod_file_agreement(ix: CrateIndex, src_root: str) -> list[Finding]:
+    out: list[Finding] = []
+    declared_files: set[str] = set()
+    for name, decls in ix.mods.items():
+        for d in decls:
+            if d.inline:
+                continue
+            base = os.path.dirname(d.file)
+            # mod decls in lib.rs/main.rs/mod.rs resolve next to the file;
+            # in `foo.rs` they resolve under `foo/`
+            stem = os.path.basename(d.file)
+            if stem not in ("lib.rs", "main.rs", "mod.rs"):
+                base = os.path.join(base, stem[:-3])
+            cand = [
+                os.path.join(base, f"{name}.rs"),
+                os.path.join(base, name, "mod.rs"),
+            ]
+            hit = next((c for c in cand if c in ix.files), None)
+            if hit is None:
+                out.append(Finding(
+                    PASS_ID, d.file, d.line, name,
+                    f"`mod {name};` has no backing file ({cand[0]} or "
+                    f"{cand[1]})"))
+            else:
+                declared_files.add(hit)
+    # orphan check: every src file (other than crate roots) must be declared
+    roots = {"lib.rs", "main.rs"}
+    for path, fi in ix.files.items():
+        if fi.kind != "src":
+            continue
+        base = os.path.basename(path)
+        if base in roots:
+            continue
+        if path not in declared_files:
+            out.append(Finding(
+                PASS_ID, path, 1, base,
+                f"orphan file: {path} is not declared by any `mod` — it is "
+                f"silently excluded from the build"))
+    return out
+
+
+def _module_exists(ix: CrateIndex, mods: list[str]) -> bool:
+    """Does the module path (e.g. ['merging', 'simd']) exist?"""
+    if not mods:
+        return True
+    joined = "::".join(mods)
+    if joined in ix.module_items:
+        return True
+    # a path may denote a type with assoc items rather than a module
+    leaf = mods[-1]
+    return (
+        leaf in ix.enums or leaf in ix.structs or leaf in ix.traits
+        or leaf in ix.mods
+    )
+
+
+def _name_in_module(ix: CrateIndex, module: str, name: str) -> bool:
+    if name in ix.module_items.get(module, set()):
+        return True
+    if name in ix.module_reexports.get(module, set()):
+        return True
+    if module in ix.module_globs:
+        # glob re-export: fall back to crate-global name existence
+        return _name_anywhere(ix, name)
+    return False
+
+
+def _name_anywhere(ix: CrateIndex, name: str) -> bool:
+    return (
+        name in ix.fns or name in ix.structs or name in ix.enums
+        or name in ix.traits or name in ix.consts or name in ix.types
+        or name in ix.macros or name in ix.mods or name in ix.variants
+    )
+
+
+def _use_resolution(ix: CrateIndex) -> list[Finding]:
+    out: list[Finding] = []
+    crate_name = "tomers"
+    for ud in ix.uses:
+        fi = ix.files.get(ud.file)
+        if fi is None or fi.kind == "vendor":
+            continue
+        segs = list(ud.path)
+        if not segs:
+            continue
+        root = segs[0]
+        if root in ("std", "core", "alloc", "proc_macro"):
+            continue
+        if root == crate_name:
+            segs = ["crate"] + segs[1:]
+            root = "crate"
+        if root in ("self", "super"):
+            # relative: resolve against the declaring module
+            base = fi.module.split("::") if fi.module else []
+            rest = segs[1:]
+            if root == "super" and base:
+                base = base[:-1]
+            segs = ["crate"] + base + rest
+            root = "crate"
+        if root != "crate":
+            # bare-root use (`use merging::…` in tests via the crate name,
+            # or a vendored crate like `anyhow`)
+            if root in ("anyhow", "xla"):
+                continue
+            if root in ix.mods or _name_anywhere(ix, root):
+                segs = ["crate"] + segs
+            else:
+                out.append(Finding(
+                    PASS_ID, ud.file, ud.line, root,
+                    f"use path root `{root}` is neither a crate module, a "
+                    f"vendored crate, nor std",
+                    "::".join(ud.path)))
+                continue
+        body = segs[1:]
+        if not body:
+            continue
+        leaf = body[-1]
+        mods = body[:-1]
+        if leaf == "*":
+            if not _module_exists(ix, mods):
+                out.append(Finding(
+                    PASS_ID, ud.file, ud.line, "::".join(mods),
+                    f"glob import of nonexistent module "
+                    f"`{'::'.join(mods)}`", "::".join(ud.path)))
+            continue
+        if not _module_exists(ix, mods):
+            out.append(Finding(
+                PASS_ID, ud.file, ud.line, "::".join(mods) or leaf,
+                f"use path `{'::'.join(ud.path)}` names a nonexistent "
+                f"module `{'::'.join(mods)}`", "::".join(ud.path)))
+            continue
+        module = "::".join(mods)
+        if module and not _name_in_module(ix, module, leaf):
+            # items re-exported deeper or assoc items of types — accept if
+            # the name exists anywhere (name-global bar, symbols-pass style)
+            if not _name_anywhere(ix, leaf):
+                out.append(Finding(
+                    PASS_ID, ud.file, ud.line, leaf,
+                    f"use path `{'::'.join(ud.path)}` — `{leaf}` is not an "
+                    f"item of `{module}` (or anywhere in the crate)",
+                    "::".join(ud.path)))
+        elif not module and not _name_anywhere(ix, leaf) and leaf not in ix.mods:
+            out.append(Finding(
+                PASS_ID, ud.file, ud.line, leaf,
+                f"use path `{'::'.join(ud.path)}` — `{leaf}` not found in "
+                f"the crate root", "::".join(ud.path)))
+    return out
+
+
+def _pjrt_discipline(ix: CrateIndex, pjrt_examples: set[str]) -> list[Finding]:
+    """References to pjrt-gated modules/items from default-build code."""
+    out: list[Finding] = []
+    if not ix.pjrt_modules and not ix.pjrt_items:
+        return out
+    pjrt_mod_leaves = {m.split("::")[-1] for m in ix.pjrt_modules}
+    for ud in ix.uses:
+        fi = ix.files.get(ud.file)
+        if fi is None or fi.kind == "vendor":
+            continue
+        if fi.kind == "example" and os.path.basename(ud.file) in pjrt_examples:
+            continue
+        gates = ix.gates_at(ud.file, 0) | ud.gates | fi.file_gates
+        if "pjrt" in gates:
+            continue
+        segs = [s for s in ud.path if s not in ("crate", "self", "super",
+                                                "tomers")]
+        # does the path traverse a pjrt-only module?
+        for k in range(1, len(segs) + 1):
+            prefix = "::".join(segs[:k])
+            if prefix in ix.pjrt_modules:
+                out.append(Finding(
+                    PASS_ID, ud.file, ud.line, prefix,
+                    f"default-build use of pjrt-gated module `{prefix}` "
+                    f"(declared #[cfg(feature = \"pjrt\")]) from an ungated "
+                    f"context", "::".join(ud.path)))
+                break
+        else:
+            leaf = segs[-1] if segs else ""
+            if leaf in ix.pjrt_items and leaf not in pjrt_mod_leaves \
+                    and not _defined_ungated_somewhere(ix, leaf):
+                out.append(Finding(
+                    PASS_ID, ud.file, ud.line, leaf,
+                    f"default-build use of pjrt-gated item `{leaf}` from an "
+                    f"ungated context", "::".join(ud.path)))
+    # expression-position references to pjrt-gated module roots
+    mod_re = re.compile(
+        r"\b(" + "|".join(re.escape(m.split("::")[-1])
+                          for m in ix.pjrt_modules) + r")::"
+    ) if ix.pjrt_modules else None
+    if mod_re is None:
+        return out
+    for path, fi in ix.files.items():
+        if fi.kind == "vendor":
+            continue
+        if fi.kind == "example" and os.path.basename(path) in pjrt_examples:
+            continue
+        if "pjrt" in fi.file_gates:
+            continue
+        for m in mod_re.finditer(fi.sf.code):
+            leaf = m.group(1)
+            full = next((pm for pm in ix.pjrt_modules
+                         if pm.split("::")[-1] == leaf), leaf)
+            gates = ix.gates_at(path, m.start())
+            if "pjrt" in gates:
+                continue
+            # `use` lines were already checked above; skip duplicates by
+            # requiring expression context (preceding char not part of a
+            # use statement) — cheap check: line does not start with `use`
+            line = fi.sf.line_of(m.start())
+            text = fi.sf.line_text(line).lstrip()
+            if text.startswith("use ") or text.startswith("pub use "):
+                continue
+            out.append(Finding(
+                PASS_ID, path, line, full,
+                f"default-build reference to pjrt-gated module `{full}` "
+                f"outside any #[cfg(feature = \"pjrt\")] scope",
+                text.strip()))
+    return out
+
+
+def _defined_ungated_somewhere(ix: CrateIndex, name: str) -> bool:
+    """An item name may be defined twice (pjrt and not); only flag names
+    that exist *exclusively* behind the gate."""
+    for fd in ix.fns.get(name, []):
+        if "pjrt" not in fd.gates:
+            return True
+    for sd in ix.structs.get(name, []):
+        if "pjrt" not in sd.gates:
+            return True
+    return False

@@ -1,0 +1,243 @@
+"""Curated std/core/alloc knowledge base for the symbol pass.
+
+The analyzer runs without a toolchain, so it cannot ask rustc what the
+standard library exports.  Instead it carries this curated set of the
+std surface the crate actually touches: method names (checked by name
+only — std methods are overloaded across dozens of types, so arity
+checking there would need real type inference), macros, prelude
+callables, and trusted path roots.
+
+Curation rule (DESIGN.md §14): adding a name here is a reviewed change,
+just like adding an allowlist entry — a typo'd method call that happens
+to collide with a real std name is the residual risk, and keeping this
+list tight (instead of "any ident is fine") is what keeps the pass
+meaningful.  Names are grouped by where they come from so a reviewer
+can spot-check against the std docs.
+"""
+
+# Path roots that are always trusted (resolution stops at the root).
+STD_ROOTS = {"std", "core", "alloc", "proc_macro"}
+
+# Macros from std/core (called as `name!`).
+STD_MACROS = {
+    "println", "print", "eprintln", "eprint", "write", "writeln", "format",
+    "format_args", "vec", "assert", "assert_eq", "assert_ne", "debug_assert",
+    "debug_assert_eq", "debug_assert_ne", "panic", "unreachable", "todo",
+    "unimplemented", "matches", "include_str", "include_bytes", "concat",
+    "stringify", "env", "option_env", "file", "line", "column", "cfg",
+    "compile_error", "dbg", "thread_local",
+}
+
+# Architecture feature-probe macros (std::arch).
+STD_MACROS |= {"is_x86_feature_detected", "is_aarch64_feature_detected"}
+
+# Prelude / ubiquitous callables: enum variant constructors and free or
+# associated fns callable without an explicit std path.
+PRELUDE_CALLABLES = {
+    "Some": 1, "Ok": 1, "Err": 1,
+    "Box": None, "Vec": None, "String": None, "Default": None, "drop": 1,
+}
+
+# std container / primitive type names usable as path qualifiers
+# (`Vec::with_capacity`, `u32::from_str_radix`).  When the qualifier is
+# one of these — and the crate does not define a type of the same name —
+# the assoc-fn call is trusted without arity checking (overload sets
+# across std types need inference).  Crate types always win the name.
+STD_TYPES = {
+    # containers & smart pointers
+    "Vec", "VecDeque", "String", "Box", "Rc", "Arc", "Cow", "Cell",
+    "RefCell", "HashMap", "HashSet", "BTreeMap", "BTreeSet", "BinaryHeap",
+    "Option", "Result",
+    # sync / time / thread
+    "Mutex", "RwLock", "Condvar", "Once", "OnceLock", "Barrier",
+    "AtomicBool", "AtomicUsize", "AtomicU32", "AtomicU64", "AtomicI64",
+    "Instant", "Duration", "SystemTime", "Thread", "JoinHandle",
+    # io / fs / net
+    "File", "OpenOptions", "Path", "PathBuf", "OsStr", "OsString",
+    "Cursor", "BufReader", "BufWriter", "TcpStream", "TcpListener",
+    "UdpSocket", "SocketAddr", "SocketAddrV4", "Ipv4Addr", "IpAddr",
+    "Command", "Stdio",
+    # channel error enums (variants used in match arms as path calls)
+    "TrySendError", "SendError", "TryRecvError", "RecvTimeoutError",
+    "RecvError",
+    # cmp / num / marker
+    "Ordering", "Reverse", "Wrapping", "PhantomData", "NonZeroUsize",
+    "NonZeroU32", "NonZeroU64", "RangeInclusive", "Range",
+    # conversion / iteration traits used as qualifiers
+    "Default", "Clone", "From", "Into", "TryFrom", "TryInto", "Iterator",
+    "IntoIterator", "FromIterator", "ToString", "ToOwned", "AsRef", "Ord",
+    "PartialOrd", "Hash", "Error", "Display", "Debug", "Write", "Read",
+    "Seek", "BufRead", "Drop", "Send", "Sync",
+    # primitives (assoc fns/consts: `u32::from_str_radix`, `f64::MAX`)
+    "u8", "u16", "u32", "u64", "u128", "usize",
+    "i8", "i16", "i32", "i64", "i128", "isize",
+    "f32", "f64", "bool", "char", "str",
+}
+
+# Free fns & assoc fns reached via imported std modules/types
+# (`use std::sync::mpsc;` then `mpsc::channel()`), checked by name only.
+STD_PATH_FNS = {
+    # mem / ptr / iter / cmp / fmt ...
+    "swap", "replace", "take", "transmute", "size_of", "size_of_val",
+    "min", "max", "min_by", "max_by", "abs", "sqrt",
+    "from", "try_from", "into", "try_into", "default", "new", "with_capacity",
+    "catch_unwind", "panic_any", "available_parallelism", "current",
+    "spawn", "sleep", "yield_now", "channel", "sync_channel",
+    "once", "repeat", "empty", "successors", "from_fn", "var", "var_os",
+    "args", "temp_dir", "create", "open", "read_to_string", "write",
+    "read", "remove_file", "create_dir_all", "metadata", "canonicalize",
+    "now", "elapsed", "duration_since", "from_secs", "from_secs_f64",
+    "from_millis", "from_micros", "from_nanos", "exit", "id", "hostname",
+    "copy_nonoverlapping", "null", "null_mut", "identity", "zeroed",
+    "from_str_radix", "resume_unwind", "read_dir",
+}
+
+# Method names on std types (name-only check).  Grouped by provenance.
+STD_METHODS = set()
+
+# Option / Result
+STD_METHODS |= {
+    "unwrap", "unwrap_or", "unwrap_or_else", "unwrap_or_default", "expect",
+    "expect_err", "unwrap_err", "ok", "err", "is_some", "is_none", "is_ok",
+    "is_err", "map", "map_err", "map_or", "map_or_else", "and_then", "or_else",
+    "ok_or", "ok_or_else", "filter", "take", "replace", "get_or_insert_with",
+    "as_ref", "as_mut", "as_deref", "as_deref_mut", "cloned", "copied",
+    "transpose", "flatten", "zip", "and", "or", "is_some_and", "is_none_or",
+    "is_ok_and", "inspect", "inspect_err",
+}
+
+# Iterator / IntoIterator
+STD_METHODS |= {
+    "iter", "iter_mut", "into_iter", "next", "next_back", "peekable", "peek",
+    "count", "last", "nth", "step_by", "chain", "rev", "enumerate", "skip",
+    "skip_while", "take_while", "scan", "flat_map", "fuse", "by_ref",
+    "collect", "partition", "fold", "try_fold", "reduce", "all", "any",
+    "find", "find_map", "position", "rposition", "max_by_key", "min_by_key",
+    "sum", "product", "cycle", "unzip", "windows", "chunks", "chunks_exact",
+    "chunks_mut", "chunks_exact_mut", "rchunks", "split_first", "split_last",
+    "array_chunks", "map_while", "dedup", "dedup_by_key", "filter_map",
+    "for_each", "partition_point", "copy_within", "extend_from_within",
+    "front", "back", "front_mut", "back_mut",
+}
+
+# slice / Vec / VecDeque / arrays
+STD_METHODS |= {
+    "len", "is_empty", "push", "pop", "insert", "remove", "clear", "truncate",
+    "resize", "resize_with", "extend", "extend_from_slice", "append", "drain",
+    "retain", "split_off", "split_at", "split_at_mut", "swap_remove",
+    "first", "first_mut", "last_mut", "get", "get_mut", "contains",
+    "starts_with", "ends_with", "fill", "fill_with", "sort", "sort_by",
+    "sort_by_key", "sort_unstable", "sort_unstable_by", "sort_unstable_by_key",
+    "select_nth_unstable_by", "select_nth_unstable", "binary_search",
+    "binary_search_by", "reverse", "concat", "join", "to_vec", "swap",
+    "rotate_left", "rotate_right", "copy_from_slice", "clone_from_slice",
+    "push_back", "push_front", "pop_back", "pop_front", "make_contiguous",
+    "capacity", "reserve", "shrink_to_fit", "as_slice", "as_mut_slice",
+    "as_ptr", "as_mut_ptr", "to_owned", "leak", "splice",
+}
+
+# HashMap / BTreeMap / sets
+STD_METHODS |= {
+    "keys", "values", "values_mut", "entry", "or_insert", "or_insert_with",
+    "or_default", "contains_key", "get_key_value", "remove_entry", "range",
+    "pop_first", "pop_last", "first_key_value", "last_key_value",
+    "and_modify", "difference", "intersection", "union", "symmetric_difference",
+    "into_mut", "get_or_insert", "key",
+}
+
+# String / str / char / fmt
+STD_METHODS |= {
+    "to_string", "push_str", "chars", "char_indices", "bytes", "as_bytes",
+    "as_str", "split", "splitn", "rsplit", "split_whitespace", "lines",
+    "trim", "trim_start", "trim_end", "trim_start_matches", "trim_end_matches",
+    "strip_prefix", "strip_suffix", "to_lowercase", "to_uppercase",
+    "to_ascii_lowercase", "to_ascii_uppercase", "eq_ignore_ascii_case",
+    "parse", "repeat", "replace", "replacen", "rfind",
+    "is_ascii_digit", "is_ascii_alphanumeric", "is_alphabetic", "is_numeric",
+    "is_whitespace", "to_digit", "fmt", "width", "precision", "pad",
+    "write_str", "write_fmt", "write_char", "escape_debug", "escape_default",
+}
+
+# numeric / float / int / cmp / ops
+STD_METHODS |= {
+    "min", "max", "clamp", "abs", "signum", "powi", "powf", "sqrt", "exp",
+    "ln", "log2", "log10", "sin", "cos", "tan", "sin_cos", "atan2", "hypot",
+    "floor", "ceil", "round", "trunc", "fract", "recip", "to_bits",
+    "from_bits", "is_nan", "is_finite", "is_infinite", "is_sign_negative",
+    "is_sign_positive", "total_cmp", "partial_cmp", "cmp", "eq", "ne", "lt",
+    "le", "gt", "ge", "max_by", "min_by", "checked_add", "checked_sub",
+    "checked_mul", "checked_div", "saturating_add", "saturating_sub",
+    "saturating_mul", "wrapping_add", "wrapping_sub", "wrapping_mul",
+    "overflowing_add", "overflowing_sub", "rem_euclid", "div_euclid",
+    "pow", "isqrt", "leading_zeros", "trailing_zeros", "count_ones",
+    "rotate_left", "rotate_right", "to_le_bytes", "to_be_bytes",
+    "from_le_bytes", "from_be_bytes", "to_ne_bytes", "then", "then_some",
+    "then_with", "reverse", "is_eq", "is_lt", "is_gt", "is_le", "is_ge",
+    "mul_add", "midpoint", "next_power_of_two", "ilog2", "cast", "exp2",
+    "unsigned_abs", "is_power_of_two",
+}
+
+# Clone / Hash / conversion traits
+STD_METHODS |= {
+    "clone", "clone_from", "hash", "into", "try_into", "as_any", "borrow",
+    "borrow_mut", "to_le", "to_be", "deref", "deref_mut",
+}
+
+# sync / thread / atomics / time
+STD_METHODS |= {
+    "lock", "try_lock", "read", "write", "try_read", "try_write", "wait",
+    "wait_timeout", "wait_while", "wait_timeout_while", "notify_one",
+    "notify_all", "load", "store", "fetch_add", "fetch_sub", "fetch_and",
+    "fetch_or", "fetch_xor", "compare_exchange", "compare_exchange_weak",
+    "fetch_update", "swap", "into_inner", "get_mut", "join", "is_finished",
+    "thread", "name", "send", "recv", "try_send", "try_recv", "recv_timeout",
+    "try_iter", "park", "unpark", "checked_duration_since", "as_secs",
+    "as_secs_f64", "as_millis", "as_micros", "as_nanos", "saturating_duration_since",
+    "checked_sub", "checked_add", "get_or_init", "get_or_try_init", "set",
+    "as_secs_f32", "subsec_nanos", "abs_diff", "elapsed", "saturating_duration",
+    "duration_since",
+}
+
+# io / net / fs / process
+STD_METHODS |= {
+    "read_exact", "read_to_end", "read_line", "write_all", "flush", "seek",
+    "bytes", "lines", "accept", "incoming", "connect", "local_addr",
+    "peer_addr", "set_nonblocking", "set_nodelay", "set_read_timeout",
+    "set_write_timeout", "shutdown", "try_clone", "take_error", "kind",
+    "raw_os_error", "path", "file_name", "file_stem", "extension", "exists",
+    "is_file", "is_dir", "to_path_buf", "display", "components",
+    "with_extension", "parent", "to_str", "to_string_lossy", "status",
+    "success", "stdout", "stderr", "stdin", "wait_with_output", "arg",
+    "current_dir", "spawn", "output", "metadata", "set_len", "sync_all",
+    "read_dir",
+}
+
+# Any / Box / Rc / Arc / Cow
+STD_METHODS |= {
+    "downcast", "downcast_ref", "downcast_mut", "is", "type_id",
+    "strong_count", "weak_count", "upgrade", "downgrade", "get_ref",
+    "as_any_mut", "into_owned", "into_boxed_slice", "into_vec", "into_string",
+    "make_mut", "ptr_eq",
+}
+
+# x86/aarch64 intrinsics are resolved via the `std::arch` trusted root,
+# but the NEON path imports them unqualified via `use std::arch::aarch64::*`
+# — the symbol pass treats `_mm*`/`v*q_*` prefixed idents specially
+# instead of listing every intrinsic here.
+INTRINSIC_PREFIXES = ("_mm", "_mm256", "_mm512", "v")
+
+
+def is_intrinsic(name: str) -> bool:
+    if name.startswith(("_mm", "_mm512")):
+        return True
+    # NEON intrinsics: vaddq_f64, vld1q_f32, vgetq_lane_f64, vcvt_f64_f32 …
+    return bool(
+        name.startswith("v")
+        and ("_" in name)
+        and name.split("_")[0][1:].rstrip("q").isalnum()
+        and any(
+            name.endswith(suf)
+            for suf in ("_f32", "_f64", "_s8", "_s16", "_s32", "_s64",
+                        "_u8", "_u16", "_u32", "_u64", "_p64")
+        )
+    )

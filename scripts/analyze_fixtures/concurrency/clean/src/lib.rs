@@ -1,0 +1,13 @@
+//! concurrency/clean: bounded sync_channel, join without unwrap.
+
+use std::sync::mpsc;
+use std::thread;
+
+pub fn run() -> u32 {
+    let (tx, rx) = mpsc::sync_channel::<u32>(8);
+    let h = thread::spawn(move || {
+        let _ = tx.send(1);
+    });
+    let _ = h.join();
+    rx.recv().unwrap_or(0)
+}

@@ -1,0 +1,13 @@
+//! concurrency/fire: unbounded channel + bare join().unwrap().
+
+use std::sync::mpsc;
+use std::thread;
+
+pub fn run() -> u32 {
+    let (tx, rx) = mpsc::channel::<u32>();
+    let h = thread::spawn(move || {
+        let _ = tx.send(1);
+    });
+    h.join().unwrap();
+    rx.recv().unwrap_or(0)
+}

@@ -1,0 +1,25 @@
+//! configs/clean: same parser, but unknown keys are rejected first.
+
+pub struct Json;
+
+impl Json {
+    pub fn get(&self, _key: &str) -> Option<f64> {
+        None
+    }
+}
+
+pub struct Config {
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+pub fn reject_unknown_keys(_v: &Json, _path: &str, _allowed: &[&str]) -> Result<(), String> {
+    Ok(())
+}
+
+pub fn parse(v: &Json) -> Result<Config, String> {
+    reject_unknown_keys(v, "cfg", &["alpha", "beta"])?;
+    let alpha = v.get("alpha").unwrap_or(1.0);
+    let beta = v.get("beta").unwrap_or(0.0);
+    Ok(Config { alpha, beta })
+}

@@ -1,0 +1,21 @@
+//! configs/fire: a parser reading two literal keys with no
+//! unknown-key rejection — a typo'd key would silently default.
+
+pub struct Json;
+
+impl Json {
+    pub fn get(&self, _key: &str) -> Option<f64> {
+        None
+    }
+}
+
+pub struct Config {
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+pub fn parse(v: &Json) -> Config {
+    let alpha = v.get("alpha").unwrap_or(1.0);
+    let beta = v.get("beta").unwrap_or(0.0);
+    Config { alpha, beta }
+}

@@ -1,0 +1,24 @@
+//! deprecation/clean: callers use the replacement; the shim is only
+//! exercised under #[allow(deprecated)] in tests.
+
+#[deprecated(note = "use new_api")]
+pub fn old_api(x: usize) -> usize {
+    new_api(x)
+}
+
+pub fn new_api(x: usize) -> usize {
+    x
+}
+
+pub fn caller(x: usize) -> usize {
+    new_api(x)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    #[allow(deprecated)]
+    fn shim_matches_replacement() {
+        assert_eq!(super::old_api(3), super::new_api(3));
+    }
+}

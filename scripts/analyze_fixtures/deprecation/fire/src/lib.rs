@@ -1,0 +1,14 @@
+//! deprecation/fire: a non-test caller of a #[deprecated] wrapper.
+
+#[deprecated(note = "use new_api")]
+pub fn old_api(x: usize) -> usize {
+    new_api(x)
+}
+
+pub fn new_api(x: usize) -> usize {
+    x
+}
+
+pub fn caller(x: usize) -> usize {
+    old_api(x)
+}

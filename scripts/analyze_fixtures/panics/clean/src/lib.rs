@@ -1,0 +1,19 @@
+//! panics/clean: total_cmp + handled Option; test-gated unwrap is
+//! exempt by contract.
+
+pub fn largest(xs: &[f64]) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    v.last().copied().unwrap_or(f64::NEG_INFINITY)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::largest;
+
+    #[test]
+    fn test_largest() {
+        let xs = vec![1.0, 3.0, 2.0];
+        assert_eq!(largest(&xs), xs.iter().copied().last().unwrap());
+    }
+}

@@ -1,0 +1,8 @@
+//! panics/fire: unwrap + the partial_cmp().unwrap() NaN hazard in
+//! non-test src.
+
+pub fn largest(xs: &[f64]) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.last().copied().unwrap()
+}

@@ -1,0 +1,10 @@
+//! symbols/clean: every call resolves with matching arity.
+
+pub fn helper(x: usize) -> usize {
+    x + 1
+}
+
+pub fn caller() -> usize {
+    let doubled: Vec<usize> = (0..4).map(|i| helper(i)).collect();
+    helper(1) + doubled.len()
+}

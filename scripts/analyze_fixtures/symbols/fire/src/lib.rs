@@ -1,0 +1,9 @@
+//! symbols/fire: one arity mismatch, one unresolved call.
+
+pub fn helper(x: usize) -> usize {
+    x + 1
+}
+
+pub fn caller() -> usize {
+    helper(1, 2) + missing_fn(3)
+}

@@ -1,0 +1,8 @@
+//! unsafe/clean: unsafe confined to merging/simd.rs, arch-gated and
+//! SAFETY-commented.
+
+pub mod merging;
+
+pub fn sum(a: &[f32]) -> f64 {
+    merging::simd::dispatch(a)
+}

@@ -1,0 +1,23 @@
+//! The one sanctioned unsafe surface: ISA kernels behind arch gates.
+
+pub fn dispatch(a: &[f32]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        // SAFETY: kern reads only in-bounds lanes of `a`; the arch gate
+        // guarantees the target supports the baseline ISA it uses.
+        return unsafe { kern(a) };
+    }
+    #[allow(unreachable_code)]
+    scalar(a)
+}
+
+fn scalar(a: &[f32]) -> f64 {
+    a.iter().map(|x| *x as f64).sum()
+}
+
+/// # Safety
+/// Caller must ensure the arch gate's ISA baseline is available.
+#[cfg(target_arch = "x86_64")]
+unsafe fn kern(a: &[f32]) -> f64 {
+    scalar(a)
+}

@@ -1,0 +1,9 @@
+//! wiring/clean: mod declaration matches its file, use path resolves.
+
+mod sub;
+
+pub use sub::answer;
+
+pub fn touch() -> usize {
+    answer()
+}

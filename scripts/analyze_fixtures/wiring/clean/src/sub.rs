@@ -1,0 +1,3 @@
+pub fn answer() -> usize {
+    42
+}

@@ -1,0 +1,7 @@
+//! wiring/fire: a `mod` with no backing file, plus an orphan file.
+
+mod nothere;
+
+pub fn touch() -> usize {
+    1
+}

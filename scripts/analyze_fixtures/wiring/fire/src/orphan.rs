@@ -1,0 +1,5 @@
+//! Never declared by any `mod` — silently excluded from the build.
+
+pub fn lonely() -> usize {
+    2
+}

@@ -1,0 +1,258 @@
+#!/usr/bin/env python3
+"""Golden-fixture tests for the tomers-analyze static analyzer.
+
+Per lint pass there is a minimal firing fixture and a clean twin under
+scripts/analyze_fixtures/<pass>/{fire,clean}/src — the test proves the
+pass fires on the trigger and stays silent on the twin, so a lint
+regression (pass stops firing, or starts flagging idiomatic code) is
+caught by verify.sh without cargo.
+
+Also covered: allowlist schema strictness (bad version, unknown keys,
+short justifications, stale entries), allowlist application, and the
+ANALYZE_report.json shape.
+
+Run: python3 scripts/test_analyze.py [-v]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+_SCRIPTS = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, _SCRIPTS)
+
+from analyze import PASS_IDS, AllowlistError, analyze_root  # noqa: E402
+from findings import load_allowlist  # noqa: E402
+
+_FIXTURES = os.path.join(_SCRIPTS, "analyze_fixtures")
+
+
+def _pass_findings(fixture: str, which: str, pass_id: str):
+    crate = os.path.join(_FIXTURES, fixture, which)
+    report = analyze_root(crate, allow_path=None, rel_prefix="rust")
+    return [f for f in report.findings if f.pass_id == pass_id]
+
+
+class FixtureTests(unittest.TestCase):
+    """Each pass fires on its trigger and stays silent on the twin."""
+
+    def _check(self, pass_id: str):
+        fire = _pass_findings(pass_id, "fire", pass_id)
+        self.assertTrue(
+            fire,
+            f"{pass_id}: fire fixture produced no {pass_id} findings",
+        )
+        clean = _pass_findings(pass_id, "clean", pass_id)
+        self.assertFalse(
+            clean,
+            f"{pass_id}: clean fixture still fires: "
+            + "; ".join(f.message for f in clean),
+        )
+
+    def test_symbols(self):
+        self._check("symbols")
+        msgs = " ".join(
+            f.message for f in _pass_findings("symbols", "fire", "symbols")
+        )
+        self.assertIn("arity mismatch", msgs)
+        self.assertIn("unresolved call", msgs)
+
+    def test_wiring(self):
+        self._check("wiring")
+        msgs = " ".join(
+            f.message for f in _pass_findings("wiring", "fire", "wiring")
+        )
+        self.assertIn("no backing file", msgs)
+        self.assertIn("orphan file", msgs)
+
+    def test_concurrency(self):
+        self._check("concurrency")
+        syms = {f.symbol for f in
+                _pass_findings("concurrency", "fire", "concurrency")}
+        self.assertIn("mpsc::channel", syms)
+        self.assertIn("join().unwrap", syms)
+
+    def test_panics(self):
+        self._check("panics")
+        syms = {f.symbol for f in _pass_findings("panics", "fire", "panics")}
+        self.assertIn("partial_cmp().unwrap", syms)
+        self.assertIn("unwrap", syms)
+
+    def test_configs(self):
+        self._check("configs")
+
+    def test_unsafe(self):
+        self._check("unsafe")
+
+    def test_deprecation(self):
+        self._check("deprecation")
+
+    def test_every_pass_has_fixtures(self):
+        for pass_id in PASS_IDS:
+            for which in ("fire", "clean"):
+                d = os.path.join(_FIXTURES, pass_id, which, "src")
+                self.assertTrue(
+                    os.path.isdir(d), f"missing fixture dir {d}"
+                )
+
+
+class AllowlistSchemaTests(unittest.TestCase):
+    """The allowlist only suppresses with a justified, live entry."""
+
+    def _load(self, doc, known=frozenset({"rust/src/lib.rs"})):
+        with tempfile.NamedTemporaryFile(
+            "w", suffix=".json", delete=False
+        ) as fh:
+            json.dump(doc, fh)
+            path = fh.name
+        try:
+            return load_allowlist(path, set(known))
+        finally:
+            os.unlink(path)
+
+    def _entry(self, **over):
+        e = {
+            "pass": "panics",
+            "file": "rust/src/lib.rs",
+            "pattern": "unwrap",
+            "justification": "a justification long enough to pass",
+        }
+        e.update(over)
+        return e
+
+    def test_valid_roundtrip(self):
+        allows = self._load({"version": 1, "entries": [self._entry()]})
+        self.assertEqual(len(allows), 1)
+        self.assertEqual(allows[0].pass_id, "panics")
+
+    def test_bad_version(self):
+        with self.assertRaises(AllowlistError):
+            self._load({"version": 2, "entries": []})
+
+    def test_unknown_entry_key(self):
+        with self.assertRaises(AllowlistError):
+            self._load({
+                "version": 1,
+                "entries": [self._entry(extra="nope")],
+            })
+
+    def test_missing_justification(self):
+        e = self._entry()
+        del e["justification"]
+        with self.assertRaises(AllowlistError):
+            self._load({"version": 1, "entries": [e]})
+
+    def test_short_justification(self):
+        with self.assertRaises(AllowlistError):
+            self._load({
+                "version": 1,
+                "entries": [self._entry(justification="because")],
+            })
+
+    def test_unknown_pass(self):
+        with self.assertRaises(AllowlistError):
+            self._load({
+                "version": 1,
+                "entries": [self._entry(**{"pass": "vibes"})],
+            })
+
+    def test_unknown_file(self):
+        with self.assertRaises(AllowlistError):
+            self._load({
+                "version": 1,
+                "entries": [self._entry(file="rust/src/ghost.rs")],
+            })
+
+
+class AllowlistApplicationTests(unittest.TestCase):
+    """Entries suppress matching findings; stale entries are flagged."""
+
+    def _analyze_fire(self, entries):
+        crate = os.path.join(_FIXTURES, "panics", "fire")
+        with tempfile.NamedTemporaryFile(
+            "w", suffix=".json", delete=False
+        ) as fh:
+            json.dump({"version": 1, "entries": entries}, fh)
+            path = fh.name
+        try:
+            return analyze_root(crate, allow_path=path, rel_prefix="rust")
+        finally:
+            os.unlink(path)
+
+    def test_matching_entry_suppresses(self):
+        # specific pattern first: entries match in order, and the broad
+        # "unwrap" substring would otherwise claim the partial_cmp line
+        # too, leaving the specific entry stale
+        report = self._analyze_fire([
+            {
+                "pass": "panics",
+                "file": "rust/src/lib.rs",
+                "pattern": "partial_cmp().unwrap",
+                "justification": "fixture: the NaN hazard is the trigger",
+            },
+            {
+                "pass": "panics",
+                "file": "rust/src/lib.rs",
+                "pattern": "unwrap",
+                "justification": "fixture: unwraps are the trigger here",
+            },
+        ])
+        self.assertFalse(report.errors)
+        panics_new = [
+            f for f in report.new_findings if f.pass_id == "panics"
+        ]
+        self.assertFalse(panics_new)
+        self.assertFalse(report.stale_allows)
+
+    def test_stale_entry_fails(self):
+        report = self._analyze_fire([
+            {
+                "pass": "panics",
+                "file": "rust/src/lib.rs",
+                "pattern": "this-matches-nothing-at-all",
+                "justification": "stale on purpose for the test",
+            },
+        ])
+        self.assertTrue(report.stale_allows)
+        self.assertFalse(report.ok)
+
+    def test_unallowed_finding_fails_report(self):
+        report = self._analyze_fire([])
+        self.assertFalse(report.ok)
+        self.assertTrue(report.new_findings)
+
+
+class ReportShapeTests(unittest.TestCase):
+    """ANALYZE_report.json carries per-pass counts and every finding."""
+
+    def test_report_json_shape(self):
+        crate = os.path.join(_FIXTURES, "panics", "fire")
+        report = analyze_root(crate, allow_path=None, rel_prefix="rust")
+        doc = report.to_json()
+        self.assertEqual(doc["version"], 1)
+        self.assertIn("ok", doc)
+        self.assertIn("files_scanned", doc)
+        self.assertEqual(set(doc["passes"]), set(PASS_IDS))
+        for row in doc["passes"].values():
+            self.assertEqual(
+                set(row), {"findings", "allowlisted", "new"}
+            )
+        for f in doc["findings"]:
+            self.assertLessEqual(
+                {"pass", "file", "line", "symbol", "message"}, set(f)
+            )
+
+    def test_summary_table_lists_all_passes(self):
+        crate = os.path.join(_FIXTURES, "symbols", "clean")
+        report = analyze_root(crate, allow_path=None, rel_prefix="rust")
+        table = report.summary_table()
+        for pass_id in PASS_IDS:
+            self.assertIn(pass_id, table)
+
+
+if __name__ == "__main__":
+    unittest.main()

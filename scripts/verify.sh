@@ -2,7 +2,14 @@
 # Tier-1 verification + lint gates + merging/serving perf smoke.
 #
 # Runs:
-#   0. python crosschecks (toolchain-independent, before anything cargo):
+#   0. static analysis (toolchain-independent, FIRST — needs only python3):
+#      scripts/analyze.py lints the whole crate source (symbols, wiring,
+#      concurrency, panics, configs, unsafe, deprecation) against the
+#      strict allowlist scripts/analyze_allow.json and writes
+#      ANALYZE_report.json; scripts/test_analyze.py runs the
+#      golden-fixture suite that pins each lint pass.
+#      Skip: TOMERS_SKIP_ANALYZE=1 (mirrors TOMERS_SKIP_LINT).
+#   0b. python crosschecks (toolchain-independent, before anything cargo):
 #      scripts/crosscheck_kernel.py pins the SIMD kernel semantics,
 #      scripts/crosscheck_net.py pins the net-layer goldens (splitmix64
 #      mixer, consistent-hash routing table, frame header layout, ledger
@@ -12,6 +19,14 @@
 #      independent Python reimplementations
 #   1. cargo fmt --check              (style gate; skip: TOMERS_SKIP_LINT=1)
 #   2. cargo clippy -- -D warnings    (lint gate; skip: TOMERS_SKIP_LINT=1)
+#   2b. cargo miri test (kernel + differential subsets) — UB gate over the
+#      unsafe SIMD surface and the incremental-vs-batch differentials;
+#      runs only when the miri component is installed, otherwise skips
+#      with a loud WARN (it is a nightly component, not baked into every
+#      toolchain).
+#   2c. extended clippy (leftover-debris lints, hard -D: dbg_macro,
+#      todo, unimplemented) — runs when cargo-clippy is present, same
+#      toolchain detection as 2b.
 #   3. cargo build --release          (offline, default features)
 #   4. cargo check --features pjrt    (the stubbed PJRT surface must keep compiling)
 #   5. cargo check --features pjrt --examples (the walkthrough examples under
@@ -63,12 +78,40 @@ MIN_STREAM_RATIO="${MIN_STREAM_RATIO:-5.0}"
 MIN_SIMD_SPEEDUP="${MIN_SIMD_SPEEDUP:-1.5}"
 OBS_MAX_OVERHEAD="${OBS_MAX_OVERHEAD:-2.0}"
 
-# Always-on toolchain-independent gates: the Python transliteration
-# crosschecks pin the SIMD kernel semantics and the net-layer goldens
-# (splitmix64 mixer, consistent-hash routing table, frame header layout,
-# ledger merge identity) against independent reimplementations — they run
-# before anything cargo-dependent so a missing Rust toolchain cannot mask
-# a semantic drift.
+# Always-on toolchain-independent gates, ordered cheapest-signal-first.
+#
+# Gate 0 — whole-crate static analysis. scripts/analyze.py re-derives the
+# crate's interface graph (call arity, struct literals, mod/file wiring)
+# and enforces the concurrency/config/unsafe/panic conventions of
+# DESIGN.md §14 against the strict allowlist scripts/analyze_allow.json.
+# It needs only the Python stdlib, so it runs — and can fail the build —
+# even on hosts with no Rust toolchain at all.
+if [[ "${TOMERS_SKIP_ANALYZE:-0}" != "1" ]]; then
+    if command -v python3 >/dev/null 2>&1; then
+        echo "== analyze: scripts/analyze.py (toolchain-free static analysis) =="
+        if ! python3 "$SCRIPTS_DIR/analyze.py" --json; then
+            echo "ERROR: static analysis found unallowlisted findings — fix them or" >&2
+            echo "add a justified entry to scripts/analyze_allow.json" >&2
+            echo "(or TOMERS_SKIP_ANALYZE=1 to bypass; report: ANALYZE_report.json)" >&2
+            exit 1
+        fi
+        echo "== analyze self-test: scripts/test_analyze.py (golden fixtures) =="
+        if ! python3 "$SCRIPTS_DIR/test_analyze.py" 2>&1 | tail -n 3; then
+            echo "ERROR: analyzer fixture suite failed — a lint pass regressed" >&2
+            exit 1
+        fi
+    else
+        echo "WARN: python3 unavailable — skipping the static-analysis gate" >&2
+    fi
+else
+    echo "(static-analysis gate skipped: TOMERS_SKIP_ANALYZE=1)"
+fi
+
+# Gate 0b — the Python transliteration crosschecks pin the SIMD kernel
+# semantics and the net-layer goldens (splitmix64 mixer, consistent-hash
+# routing table, frame header layout, ledger merge identity) against
+# independent reimplementations — they run before anything cargo-dependent
+# so a missing Rust toolchain cannot mask a semantic drift.
 if command -v python3 >/dev/null 2>&1; then
     echo "== crosscheck: scripts/crosscheck_kernel.py =="
     python3 "$SCRIPTS_DIR/crosscheck_kernel.py"
@@ -103,6 +146,44 @@ if [[ "${TOMERS_SKIP_LINT:-0}" != "1" ]]; then
     fi
 else
     echo "(lint gates skipped: TOMERS_SKIP_LINT=1)"
+fi
+
+# Gate 2b — miri UB gate over the two surfaces where it earns its keep:
+# the unsafe SIMD kernels (merging_dispatch exercises every ISA arm that
+# compiles on the host) and the scoped fork-join pool (runtime_pool's
+# raw-pointer task handoff). Miri is a nightly rustup component, so the
+# gate is toolchain-detected: present → hard gate, absent → loud WARN so
+# the skip never reads as a pass.
+if [[ "${TOMERS_SKIP_LINT:-0}" != "1" ]]; then
+    if cargo miri --version >/dev/null 2>&1; then
+        echo "== sanitize: cargo miri test (SIMD kernels + pool handoff) =="
+        # -Zmiri-disable-isolation: the pool tests read the host clock
+        if ! MIRIFLAGS="-Zmiri-disable-isolation" \
+            cargo miri test --offline --test merging_dispatch --test runtime_pool; then
+            echo "ERROR: miri found undefined behaviour in the unsafe surface" >&2
+            exit 1
+        fi
+    else
+        echo "=========================================================================="
+        echo "WARN: cargo miri unavailable (nightly component not installed) —"
+        echo "WARN: skipping the UB gate over merging/simd.rs and runtime/pool.rs."
+        echo "WARN: install with: rustup +nightly component add miri"
+        echo "=========================================================================="
+    fi
+
+    # Gate 2c — leftover-debris lints beyond -D warnings: these never
+    # belong in committed code, so they are hard denies, but they ride
+    # the same clippy binary detection as the base lint gate.
+    if cargo clippy --version >/dev/null 2>&1; then
+        echo "== lint: extended clippy (dbg_macro / todo / unimplemented) =="
+        if ! cargo clippy --offline --all-targets -- \
+            -D clippy::dbg_macro -D clippy::todo -D clippy::unimplemented; then
+            echo "ERROR: leftover debug/placeholder macros in the tree" >&2
+            exit 1
+        fi
+    else
+        echo "WARN: cargo-clippy unavailable — skipping the extended lint tier" >&2
+    fi
 fi
 
 echo "== tier-1: cargo build --release =="
